@@ -1,0 +1,59 @@
+//! Ablation A1 — sketch-family comparison (paper Sec. 3.4 discussion +
+//! future-work families): Gaussian vs Subsampling vs CountSketch vs SRHT
+//! on a dense and a sparse dataset. Reports per-iteration convergence AND
+//! per-iteration cost, exposing the trade-off the paper describes:
+//! Gaussian = more informative columns / O(mnd) cost, Subsampling =
+//! sparsity-preserving / O(md) cost.
+
+mod bench_util;
+
+use dsanls::algos::{run_dsanls, DsanlsOptions};
+use dsanls::coordinator;
+use dsanls::metrics::{write_series_csv, Series};
+use dsanls::sketch::SketchKind;
+
+fn main() {
+    bench_util::banner("Ablation A1", "sketch families on DSANLS");
+    let datasets: Vec<&str> = if bench_util::full() { vec!["FACE", "MNIST"] } else { vec!["FACE"] };
+    for dataset in datasets {
+        let mut cfg = bench_util::base_config();
+        cfg.dataset = dataset.into();
+        let m = coordinator::load_dataset(&cfg);
+        println!("\n--- {dataset} ({}×{}) ---", m.rows(), m.cols());
+        let mut series: Vec<Series> = Vec::new();
+        for sketch in [
+            SketchKind::Subsample,
+            SketchKind::Gaussian,
+            SketchKind::CountSketch,
+            SketchKind::Srht,
+        ] {
+            let run = run_dsanls(
+                &m,
+                &DsanlsOptions {
+                    nodes: cfg.nodes,
+                    rank: cfg.rank,
+                    iterations: cfg.iterations,
+                    sketch,
+                    d_u: cfg.d_u,
+                    d_v: cfg.d_v,
+                    seed: cfg.seed,
+                    eval_every: cfg.eval_every.max(1),
+                    mu: cfg.mu,
+                    comm: cfg.comm,
+                    ..Default::default()
+                },
+            );
+            println!(
+                "  {:<12} final err {:.4}  sim-sec/iter {:.5}",
+                sketch.name(),
+                run.final_error(),
+                run.sec_per_iter
+            );
+            series.push(Series::new(sketch.name(), run.trace));
+        }
+        let path = bench_util::results_dir()
+            .join(format!("ablation_sketch_{}.csv", dataset.to_lowercase()));
+        write_series_csv(&path, &series).unwrap();
+        println!("written to {path:?}");
+    }
+}

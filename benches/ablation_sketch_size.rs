@@ -1,0 +1,60 @@
+//! Ablation A2 — sketch size d sweep (paper footnote 1: "we can set
+//! d = 0.1n for medium-sized matrices … we should not choose an extremely
+//! small d"). Sweeps d/n ∈ {0.02, 0.05, 0.1, 0.25, 0.5, 1.0} and reports
+//! final error + per-iteration cost: too small d stalls convergence, too
+//! large d wastes the speedup.
+
+mod bench_util;
+
+use dsanls::algos::{run_dsanls, DsanlsOptions};
+use dsanls::coordinator;
+use dsanls::metrics::write_table_csv;
+use dsanls::sketch::SketchKind;
+
+fn main() {
+    bench_util::banner("Ablation A2", "sketch size d sweep");
+    let mut cfg = bench_util::base_config();
+    cfg.dataset = "FACE".into();
+    let m = coordinator::load_dataset(&cfg);
+    let n = m.cols();
+    println!("{}: {}×{}", cfg.dataset, m.rows(), n);
+    println!("{:<10} {:>8} {:>12} {:>14}", "d/n", "d", "final err", "sim-sec/iter");
+
+    let fractions = [0.02f64, 0.05, 0.1, 0.25, 0.5, 1.0];
+    let mut rows = Vec::new();
+    for frac in fractions {
+        let d = ((n as f64 * frac) as usize).max(2).min(n);
+        let run = run_dsanls(
+            &m,
+            &DsanlsOptions {
+                nodes: cfg.nodes,
+                rank: cfg.rank,
+                iterations: cfg.iterations,
+                sketch: SketchKind::Subsample,
+                d_u: d,
+                d_v: ((m.rows() as f64 * frac) as usize).max(2).min(m.rows()),
+                seed: cfg.seed,
+                eval_every: 0,
+                mu: cfg.mu,
+                comm: cfg.comm,
+                ..Default::default()
+            },
+        );
+        println!(
+            "{:<10.2} {:>8} {:>12.4} {:>14.5}",
+            frac,
+            d,
+            run.final_error(),
+            run.sec_per_iter
+        );
+        rows.push(vec![
+            format!("{frac}"),
+            d.to_string(),
+            format!("{:.5}", run.final_error()),
+            format!("{:.6}", run.sec_per_iter),
+        ]);
+    }
+    let path = bench_util::results_dir().join("ablation_sketch_size.csv");
+    write_table_csv(&path, &["d_over_n", "d", "final_err", "sec_per_iter"], &rows).unwrap();
+    println!("\nwritten to {path:?}");
+}

@@ -1,0 +1,141 @@
+#![allow(dead_code)] // each bench binary uses a different helper subset
+//! Shared helpers for the figure/table benches.
+//!
+//! Every bench honours two env vars:
+//! * `DSANLS_BENCH_SCALE` — dataset scale factor (default: a quick setting
+//!   that finishes the whole `cargo bench` suite in minutes);
+//! * `DSANLS_BENCH_FULL=1` — paper-sized sweep (slower, closer shapes).
+
+use std::path::PathBuf;
+
+use dsanls::config::ExperimentConfig;
+
+pub fn full() -> bool {
+    std::env::var("DSANLS_BENCH_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn scale() -> f64 {
+    std::env::var("DSANLS_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(if full() { 0.5 } else { 0.08 })
+}
+
+pub fn results_dir() -> PathBuf {
+    let p = PathBuf::from("results");
+    std::fs::create_dir_all(&p).ok();
+    p
+}
+
+/// Base config matching the paper's defaults (Sec. 5.1): 10 nodes, k=100 —
+/// scaled down for quick mode (k=16, 6 nodes) unless FULL.
+pub fn base_config() -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.scale = scale();
+    if full() {
+        cfg.nodes = 10;
+        cfg.rank = 100;
+        cfg.iterations = 100;
+        cfg.eval_every = 10;
+    } else {
+        cfg.nodes = 6;
+        cfg.rank = 16;
+        cfg.iterations = 40;
+        cfg.eval_every = 10;
+    }
+    cfg.t1 = if full() { 25 } else { 10 };
+    cfg.t2 = 4;
+    cfg.rounds = if full() { 25 } else { 10 };
+    cfg.local_iters = 4;
+    cfg
+}
+
+/// Iterations for pure per-iteration-time measurements (Fig. 3/8/9).
+pub fn timing_iters() -> usize {
+    if full() {
+        20
+    } else {
+        8
+    }
+}
+
+pub fn node_sweep() -> Vec<usize> {
+    if full() {
+        vec![2, 4, 8, 12, 16]
+    } else {
+        vec![2, 4, 8]
+    }
+}
+
+/// Shared sweep for Fig. 8 (skew 0) and Fig. 9 (skew 0.5): reciprocal
+/// per-iteration time of every secure protocol vs node count.
+pub fn secure_scalability_sweep(skew: f64, out_file: &str) {
+    use dsanls::config::Algorithm;
+    use dsanls::coordinator;
+    use dsanls::metrics::write_table_csv;
+    use dsanls::secure::SecureAlgo;
+
+    let datasets: Vec<&str> =
+        if full() { vec!["FACE", "MNIST", "BOATS"] } else { vec!["FACE", "MNIST"] };
+    let nodes = node_sweep();
+    let mut rows = Vec::new();
+    for dataset in datasets {
+        let mut cfg = base_config();
+        cfg.dataset = dataset.into();
+        cfg.skew = skew;
+        cfg.eval_every = 0;
+        // timing sweep: fewer, uniform iterations
+        cfg.t1 = (timing_iters() / 2).max(2);
+        cfg.t2 = 2;
+        cfg.rounds = (timing_iters() / 2).max(2);
+        cfg.local_iters = 2;
+        let m = coordinator::load_dataset(&cfg);
+        println!("\n--- {dataset} ({}×{}) skew={skew} ---", m.rows(), m.cols());
+        println!(
+            "{:<13} {}",
+            "protocol",
+            nodes.iter().map(|n| format!("N={n:<9}")).collect::<String>()
+        );
+        for algo in SecureAlgo::ALL {
+            print!("{:<13}", algo.name());
+            for &n in &nodes {
+                let mut c = cfg.clone();
+                c.algorithm = Algorithm::Secure(algo);
+                c.nodes = n;
+                let out = coordinator::run_on(&c, &m);
+                let recip = 1.0 / out.sec_per_iter;
+                print!("{recip:<10.1}");
+                rows.push(vec![
+                    dataset.to_string(),
+                    algo.name().to_string(),
+                    n.to_string(),
+                    format!("{skew}"),
+                    format!("{:.6}", out.sec_per_iter),
+                    format!("{:.3}", recip),
+                ]);
+            }
+            println!();
+        }
+    }
+    let path = results_dir().join(out_file);
+    write_table_csv(
+        &path,
+        &["dataset", "protocol", "nodes", "skew", "sec_per_iter", "recip"],
+        &rows,
+    )
+    .unwrap();
+    println!("\nwritten to {path:?}");
+}
+
+pub fn banner(name: &str, what: &str) {
+    println!("\n================================================================");
+    println!("{name} — {what}");
+    println!(
+        "scale={} nodes_default={} k={} ({} mode)",
+        scale(),
+        base_config().nodes,
+        base_config().rank,
+        if full() { "FULL" } else { "quick" }
+    );
+    println!("================================================================");
+}

@@ -1,0 +1,59 @@
+//! Fig. 2 — relative error over time for general distributed NMF:
+//! DSANLS/S and DSANLS/G vs MPI-FAUN {MU, HALS, ANLS/BPP} on all six
+//! datasets. Expected shape (paper): DSANLS/S best error-vs-time
+//! everywhere; MU slow with poor final error; ANLS/BPP hurt by its
+//! per-iteration cost.
+
+mod bench_util;
+
+use dsanls::config::Algorithm;
+use dsanls::coordinator;
+use dsanls::data::ALL_DATASETS;
+use dsanls::metrics::{print_series, write_series_csv, Series};
+use dsanls::sketch::SketchKind;
+use dsanls::solvers::SolverKind;
+
+fn main() {
+    bench_util::banner("Fig. 2", "rel-error over time, general distributed NMF");
+    let datasets: Vec<_> = if bench_util::full() {
+        ALL_DATASETS.to_vec()
+    } else {
+        // quick mode: one dense + one sparse dataset keeps the suite fast
+        vec![dsanls::data::Dataset::Face, dsanls::data::Dataset::Mnist]
+    };
+
+    for dataset in datasets {
+        let mut cfg = bench_util::base_config();
+        cfg.dataset = dataset.spec().name.into();
+        let m = coordinator::load_dataset(&cfg);
+        println!("\n--- {} ({}×{}, nnz={}) ---", cfg.dataset, m.rows(), m.cols(), m.nnz());
+
+        let mut series: Vec<Series> = Vec::new();
+        for (algo, sketch) in [
+            (Algorithm::Dsanls, Some(SketchKind::Subsample)),
+            (Algorithm::Dsanls, Some(SketchKind::Gaussian)),
+            (Algorithm::Baseline(SolverKind::Mu), None),
+            (Algorithm::Baseline(SolverKind::Hals), None),
+            (Algorithm::Baseline(SolverKind::AnlsBpp), None),
+        ] {
+            let mut c = cfg.clone();
+            c.algorithm = algo;
+            if let Some(s) = sketch {
+                c.sketch = s;
+            }
+            let out = coordinator::run_on(&c, &m);
+            println!(
+                "  {:<18} final err {:.4}  sim-sec/iter {:.4}",
+                out.label,
+                out.final_error(),
+                out.sec_per_iter
+            );
+            series.push(out.series());
+        }
+        print_series(&format!("Fig2 {}", cfg.dataset), &series);
+        let path = bench_util::results_dir()
+            .join(format!("fig2_{}.csv", cfg.dataset.to_lowercase()));
+        write_series_csv(&path, &series).unwrap();
+        println!("written to {path:?}");
+    }
+}

@@ -1,0 +1,64 @@
+//! Fig. 3 — reciprocal of per-iteration time vs cluster size (2–16 nodes)
+//! for general distributed NMF. Expected shape: near-linear scaling for
+//! every algorithm on the larger datasets; flat/degrading on FACE (the
+//! smallest — k > n/N makes k dominate, paper Sec. 5.2.2); DSANLS/S lowest
+//! per-iteration cost throughout, ANLS/BPP highest.
+
+mod bench_util;
+
+use dsanls::config::Algorithm;
+use dsanls::coordinator;
+use dsanls::metrics::write_table_csv;
+use dsanls::sketch::SketchKind;
+use dsanls::solvers::SolverKind;
+
+fn main() {
+    bench_util::banner("Fig. 3", "1/per-iteration-time vs node count");
+    let datasets: Vec<&str> =
+        if bench_util::full() { vec!["FACE", "BOATS", "MNIST", "RCV1"] } else { vec!["FACE", "MNIST"] };
+    let nodes = bench_util::node_sweep();
+    let mut rows = Vec::new();
+
+    for dataset in datasets {
+        let mut cfg = bench_util::base_config();
+        cfg.dataset = dataset.into();
+        cfg.iterations = bench_util::timing_iters();
+        cfg.eval_every = 0; // timing only
+        let m = coordinator::load_dataset(&cfg);
+        println!("\n--- {dataset} ({}×{}) ---", m.rows(), m.cols());
+        println!("{:<18} {}", "algorithm", nodes.iter().map(|n| format!("N={n:<8}")).collect::<String>());
+
+        for (label, algo, sketch) in [
+            ("DSANLS/S", Algorithm::Dsanls, Some(SketchKind::Subsample)),
+            ("DSANLS/G", Algorithm::Dsanls, Some(SketchKind::Gaussian)),
+            ("MU", Algorithm::Baseline(SolverKind::Mu), None),
+            ("HALS", Algorithm::Baseline(SolverKind::Hals), None),
+            ("ANLS/BPP", Algorithm::Baseline(SolverKind::AnlsBpp), None),
+        ] {
+            print!("{label:<18}");
+            for &n in &nodes {
+                let mut c = cfg.clone();
+                c.algorithm = algo;
+                c.nodes = n;
+                if let Some(s) = sketch {
+                    c.sketch = s;
+                }
+                let out = coordinator::run_on(&c, &m);
+                let recip = 1.0 / out.sec_per_iter;
+                print!("{recip:<9.1}");
+                rows.push(vec![
+                    dataset.to_string(),
+                    label.to_string(),
+                    n.to_string(),
+                    format!("{:.6}", out.sec_per_iter),
+                    format!("{:.3}", recip),
+                ]);
+            }
+            println!();
+        }
+    }
+    let path = bench_util::results_dir().join("fig3_scalability.csv");
+    write_table_csv(&path, &["dataset", "algorithm", "nodes", "sec_per_iter", "recip"], &rows)
+        .unwrap();
+    println!("\nwritten to {path:?}");
+}

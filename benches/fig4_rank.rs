@@ -1,0 +1,50 @@
+//! Fig. 4 — rel-error over time on RCV1, varying the factorisation rank
+//! k ∈ {20, 50, 200, 500} (k=100 is Fig. 2e). Expected shape: DSANLS
+//! outperforms the baselines at every k; error decreases with k but
+//! convergence takes longer.
+
+mod bench_util;
+
+use dsanls::config::Algorithm;
+use dsanls::coordinator;
+use dsanls::metrics::{write_series_csv, Series};
+use dsanls::sketch::SketchKind;
+use dsanls::solvers::SolverKind;
+
+fn main() {
+    bench_util::banner("Fig. 4", "varying k on RCV1");
+    let ks: Vec<usize> = if bench_util::full() { vec![20, 50, 200, 500] } else { vec![8, 24] };
+
+    let mut cfg = bench_util::base_config();
+    cfg.dataset = "RCV1".into();
+    let m = coordinator::load_dataset(&cfg);
+    println!("RCV1 (scaled): {}×{}, nnz={}", m.rows(), m.cols(), m.nnz());
+
+    for k in ks {
+        let mut series: Vec<Series> = Vec::new();
+        println!("\n--- k = {k} ---");
+        for (algo, sketch) in [
+            (Algorithm::Dsanls, Some(SketchKind::Subsample)),
+            (Algorithm::Baseline(SolverKind::Hals), None),
+            (Algorithm::Baseline(SolverKind::AnlsBpp), None),
+        ] {
+            let mut c = cfg.clone();
+            c.algorithm = algo;
+            c.rank = k;
+            if let Some(s) = sketch {
+                c.sketch = s;
+            }
+            let out = coordinator::run_on(&c, &m);
+            println!(
+                "  {:<18} final err {:.4}  sim-sec/iter {:.4}",
+                out.label,
+                out.final_error(),
+                out.sec_per_iter
+            );
+            series.push(out.series());
+        }
+        let path = bench_util::results_dir().join(format!("fig4_rcv1_k{k}.csv"));
+        write_series_csv(&path, &series).unwrap();
+        println!("written to {path:?}");
+    }
+}

@@ -1,0 +1,44 @@
+//! Fig. 6 — secure distributed NMF, uniform workload: rel-error over time
+//! for all six protocols on BOATS/FACE/MNIST/GISETTE. Expected shape:
+//! Syn-SSD-UV best overall (cheapest per-iteration), Syn-SD and Asyn-SD
+//! slowest to converge.
+
+mod bench_util;
+
+use dsanls::config::Algorithm;
+use dsanls::coordinator;
+use dsanls::metrics::{write_series_csv, Series};
+use dsanls::secure::SecureAlgo;
+
+fn main() {
+    bench_util::banner("Fig. 6", "secure NMF, uniform workload");
+    let datasets: Vec<&str> = if bench_util::full() {
+        vec!["BOATS", "FACE", "MNIST", "GISETTE"]
+    } else {
+        vec!["FACE", "MNIST"]
+    };
+    for dataset in datasets {
+        let mut cfg = bench_util::base_config();
+        cfg.dataset = dataset.into();
+        cfg.skew = 0.0;
+        let m = coordinator::load_dataset(&cfg);
+        println!("\n--- {dataset} ({}×{}) ---", m.rows(), m.cols());
+        let mut series: Vec<Series> = Vec::new();
+        for algo in SecureAlgo::ALL {
+            let mut c = cfg.clone();
+            c.algorithm = Algorithm::Secure(algo);
+            let out = coordinator::run_on(&c, &m);
+            println!(
+                "  {:<12} final err {:.4}  sim-sec/iter {:.5}",
+                out.label,
+                out.final_error(),
+                out.sec_per_iter
+            );
+            series.push(out.series());
+        }
+        let path = bench_util::results_dir()
+            .join(format!("fig6_{}.csv", dataset.to_lowercase()));
+        write_series_csv(&path, &series).unwrap();
+        println!("written to {path:?}");
+    }
+}

@@ -1,0 +1,57 @@
+//! Fig. 7 — secure distributed NMF, imbalanced workload (node 0 holds
+//! 50 % of the columns). Expected shape: asynchronous protocols win —
+//! Asyn-SSD-V best error-over-time on most datasets; Syn-SD basically
+//! inapplicable (synchronisation barrier stalls everyone behind node 0).
+
+mod bench_util;
+
+use dsanls::config::Algorithm;
+use dsanls::coordinator;
+use dsanls::metrics::{write_series_csv, Series};
+use dsanls::secure::SecureAlgo;
+
+fn main() {
+    bench_util::banner("Fig. 7", "secure NMF, imbalanced workload (50% on node 0)");
+    let datasets: Vec<&str> = if bench_util::full() {
+        vec!["BOATS", "FACE", "MNIST", "GISETTE"]
+    } else {
+        vec!["FACE", "MNIST"]
+    };
+    for dataset in datasets {
+        let mut cfg = bench_util::base_config();
+        cfg.dataset = dataset.into();
+        cfg.skew = 0.5;
+        let m = coordinator::load_dataset(&cfg);
+        println!("\n--- {dataset} ({}×{}) skew=0.5 ---", m.rows(), m.cols());
+        let mut series: Vec<Series> = Vec::new();
+        let mut sync_times = Vec::new();
+        let mut async_times = Vec::new();
+        for algo in SecureAlgo::ALL {
+            let mut c = cfg.clone();
+            c.algorithm = Algorithm::Secure(algo);
+            let out = coordinator::run_on(&c, &m);
+            println!(
+                "  {:<12} final err {:.4}  sim-sec/iter {:.5}",
+                out.label,
+                out.final_error(),
+                out.sec_per_iter
+            );
+            match algo {
+                SecureAlgo::AsynSd | SecureAlgo::AsynSsdV => async_times.push(out.sec_per_iter),
+                _ => sync_times.push(out.sec_per_iter),
+            }
+            series.push(out.series());
+        }
+        let sync_avg: f64 = sync_times.iter().sum::<f64>() / sync_times.len() as f64;
+        let async_avg: f64 = async_times.iter().sum::<f64>() / async_times.len() as f64;
+        println!(
+            "  async/sync per-iteration advantage: {:.2}× {}",
+            sync_avg / async_avg,
+            if async_avg < sync_avg { "(paper shape ✓)" } else { "(unexpected)" }
+        );
+        let path = bench_util::results_dir()
+            .join(format!("fig7_{}.csv", dataset.to_lowercase()));
+        write_series_csv(&path, &series).unwrap();
+        println!("written to {path:?}");
+    }
+}

@@ -1,0 +1,11 @@
+//! Fig. 8 — secure NMF: reciprocal per-iteration time vs cluster size,
+//! uniform workload. Expected shape: near-linear for all (except the tiny
+//! FACE); Syn-SSD-UV lowest per-iteration time and steepest slope; full-U
+//! synchronous averaging (Syn-SD) the most expensive.
+
+mod bench_util;
+
+fn main() {
+    bench_util::banner("Fig. 8", "secure NMF 1/iter-time vs nodes, uniform");
+    bench_util::secure_scalability_sweep(0.0, "fig8_secure_scalability.csv");
+}

@@ -1,0 +1,11 @@
+//! Fig. 9 — secure NMF: reciprocal per-iteration time vs cluster size,
+//! **imbalanced** workload (node 0 holds 50 % of columns). Expected shape:
+//! synchronous protocols flat-line (barrier pinned to node 0's compute);
+//! asynchronous protocols keep scaling with node count.
+
+mod bench_util;
+
+fn main() {
+    bench_util::banner("Fig. 9", "secure NMF 1/iter-time vs nodes, imbalanced (skew 0.5)");
+    bench_util::secure_scalability_sweep(0.5, "fig9_secure_imbalanced_scal.csv");
+}

@@ -1,0 +1,97 @@
+//! Microbench — the L3 hot-path primitives: blocked GEMM (NN/NT/TN),
+//! sparse SpMM, sketch application, and one proximal-CD sweep. Used by the
+//! §Perf pass (EXPERIMENTS.md) to find and verify hot-path optimisations;
+//! prints GFLOP/s against a naive-roofline estimate.
+
+mod bench_util;
+
+use std::time::Instant;
+
+use dsanls::linalg::{gemm_nn, gemm_nt, gemm_tn, Csr, Mat};
+use dsanls::rng::Pcg64;
+use dsanls::sketch::{SketchKind, SketchMatrix};
+use dsanls::solvers::{self, Normal};
+
+fn time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
+    // warmup
+    f();
+    let t = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t.elapsed().as_secs_f64() / reps as f64
+}
+
+fn main() {
+    bench_util::banner("microbench", "L3 hot-path primitives");
+    let mut rng = Pcg64::new(77, 0);
+    let (m, k, n) = if bench_util::full() { (2048, 128, 1024) } else { (768, 64, 512) };
+
+    // --- GEMM family ---
+    let a = Mat::rand_uniform(m, k, 1.0, &mut rng);
+    let b = Mat::rand_uniform(k, n, 1.0, &mut rng);
+    let flops = 2.0 * m as f64 * n as f64 * k as f64;
+
+    let mut c = Mat::zeros(m, n);
+    let t_nn = time(|| gemm_nn(&a, &b, &mut c), 5);
+    println!("gemm_nn  {m}x{k}x{n}: {:>8.2} ms  {:>6.2} GFLOP/s", t_nn * 1e3, flops / t_nn / 1e9);
+
+    let bt = b.transpose();
+    let t_nt = time(|| gemm_nt(&a, &bt, &mut c), 5);
+    println!("gemm_nt  {m}x{k}x{n}: {:>8.2} ms  {:>6.2} GFLOP/s", t_nt * 1e3, flops / t_nt / 1e9);
+
+    // gemm_tn: aᵀ·x with a (m×k), x (m×n) → (k×n); same flop count
+    let x = Mat::rand_uniform(m, n, 1.0, &mut rng);
+    let mut c2 = Mat::zeros(k, n);
+    let t_tn = time(|| gemm_tn(&a, &x, &mut c2), 5);
+    println!("gemm_tn  {k}x{m}x{n}: {:>8.2} ms  {:>6.2} GFLOP/s", t_tn * 1e3, flops / t_tn / 1e9);
+
+    // --- SpMM ---
+    let nnz = m * n / 50;
+    let triplets: Vec<(usize, usize, f32)> =
+        (0..nnz).map(|_| (rng.below(m), rng.below(n), rng.next_f32())).collect();
+    let sp = Csr::from_triplets(m, n, triplets);
+    let dense_k = Mat::rand_uniform(n, k, 1.0, &mut rng);
+    let t_spmm = time(
+        || {
+            let _ = sp.spmm(&dense_k);
+        },
+        5,
+    );
+    let spmm_flops = 2.0 * sp.nnz() as f64 * k as f64;
+    println!(
+        "spmm     nnz={} k={k}: {:>8.2} ms  {:>6.2} GFLOP/s",
+        sp.nnz(),
+        t_spmm * 1e3,
+        spmm_flops / t_spmm / 1e9
+    );
+
+    // --- sketch apply (both families) ---
+    let d = n / 10;
+    for kind in [SketchKind::Subsample, SketchKind::Gaussian] {
+        let mut srng = Pcg64::new(5, 5);
+        let s = SketchMatrix::generate(kind, n, d, &mut srng);
+        let t_s = time(
+            || {
+                let _ = s.mul_right_dense(&c);
+            },
+            3,
+        );
+        println!("sketch/{:<11} {m}x{n}→d={d}: {:>8.2} ms", kind.name(), t_s * 1e3);
+    }
+
+    // --- proximal CD sweep ---
+    let d_cd = 2 * k;
+    let a_cd = Mat::rand_uniform(m, d_cd, 1.0, &mut rng);
+    let b_cd = Mat::rand_uniform(k, d_cd, 1.0, &mut rng);
+    let (gram, cross) = solvers::normal_from(&a_cd, &b_cd);
+    let nrm = Normal::new(&gram, &cross);
+    let mut u = Mat::rand_uniform(m, k, 1.0, &mut rng);
+    let t_cd = time(|| solvers::cd::proximal_cd_update(&mut u, &nrm, 1.0), 5);
+    let cd_flops = 2.0 * m as f64 * k as f64 * k as f64;
+    println!(
+        "cd_sweep {m}x{k}: {:>8.2} ms  {:>6.2} GFLOP/s (k² sweep)",
+        t_cd * 1e3,
+        cd_flops / t_cd / 1e9
+    );
+}

@@ -1,0 +1,52 @@
+//! Table 1 — dataset statistics. Regenerates the paper's table for the
+//! scaled synthetic equivalents and records the achieved sparsity next to
+//! the paper's.
+
+mod bench_util;
+
+use dsanls::data::ALL_DATASETS;
+use dsanls::metrics::write_table_csv;
+
+fn main() {
+    bench_util::banner("Table 1", "dataset statistics (paper vs scaled synthetic)");
+    println!(
+        "{:<9} | {:>9} {:>7} {:>12} {:>9} | {:>9} {:>7} {:>9}",
+        "Dataset", "#Rows", "#Cols", "Non-zeros", "Sparsity", "paper-m", "paper-n", "paper-sp"
+    );
+    let mut rows = Vec::new();
+    for d in ALL_DATASETS {
+        let spec = d.spec();
+        let m = d.generate_scaled(42, bench_util::scale());
+        let sparsity = 1.0 - m.nnz() as f64 / (m.rows() as f64 * m.cols() as f64);
+        let sparsity = if spec.dense { 0.0 } else { sparsity };
+        println!(
+            "{:<9} | {:>9} {:>7} {:>12} {:>8.2}% | {:>9} {:>7} {:>8.2}%",
+            spec.name,
+            m.rows(),
+            m.cols(),
+            m.nnz(),
+            sparsity * 100.0,
+            spec.paper_rows,
+            spec.paper_cols,
+            spec.paper_sparsity * 100.0
+        );
+        rows.push(vec![
+            spec.name.to_string(),
+            m.rows().to_string(),
+            m.cols().to_string(),
+            m.nnz().to_string(),
+            format!("{:.4}", sparsity),
+            spec.paper_rows.to_string(),
+            spec.paper_cols.to_string(),
+            format!("{:.4}", spec.paper_sparsity),
+        ]);
+    }
+    let path = bench_util::results_dir().join("table1_datasets.csv");
+    write_table_csv(
+        &path,
+        &["dataset", "rows", "cols", "nnz", "sparsity", "paper_rows", "paper_cols", "paper_sparsity"],
+        &rows,
+    )
+    .unwrap();
+    println!("\nwritten to {path:?}");
+}

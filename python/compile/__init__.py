@@ -1,0 +1,5 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT export.
+
+Never imported at runtime - `make artifacts` runs `python -m compile.aot`
+once and the rust binary is self-contained afterwards.
+"""

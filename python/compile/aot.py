@@ -1,0 +1,83 @@
+"""AOT export: lower the L2 entry points to HLO **text** + manifest.json.
+
+Run once at build time (`make artifacts`):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+HLO text (not serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction
+ids; the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md and rust/src/runtime/mod.rs).
+"""
+
+import argparse
+import json
+import os
+
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# The artifact catalogue: every (entry-point, shape) pair the rust runtime
+# may dispatch to. Shapes are compile-time constants for PJRT, so we export
+# the quickstart/e2e/test shapes; the rust HybridBackend falls back to the
+# native solver for anything else.
+CATALOGUE = [
+    ("cd_update", {"rows": 128, "k": 16, "d": 32}),
+    ("cd_update", {"rows": 256, "k": 16, "d": 64}),
+    ("cd_update", {"rows": 512, "k": 32, "d": 128}),
+    ("pgd_update", {"rows": 128, "k": 16, "d": 32}),
+    ("sanls_u_step", {"rows": 128, "n": 256, "k": 16, "d": 32}),
+    ("nmf_loss", {"rows": 128, "n": 256, "k": 16}),
+]
+
+
+def entry_name(kind: str, shapes: dict) -> str:
+    """Canonical artifact name, e.g. ``cd_update_r128_k16_d32`` (must match
+    rust PjrtBackend::artifact_for)."""
+    parts = [kind]
+    for key in ("rows", "n", "k", "d"):
+        if key in shapes:
+            prefix = {"rows": "r", "n": "n", "k": "k", "d": "d"}[key]
+            parts.append(f"{prefix}{shapes[key]}")
+    return "_".join(parts[:1]) + "_" + "_".join(parts[1:])
+
+
+def to_hlo_text(jitted, example_args) -> str:
+    """jax lowered -> stablehlo -> XlaComputation -> HLO text."""
+    lowered = jitted.lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def export_all(out_dir: str) -> list[dict]:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for kind, shapes in CATALOGUE:
+        jitted, args = model.jit_entry(kind, shapes)
+        text = to_hlo_text(jitted, args)
+        name = entry_name(kind, shapes)
+        filename = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, filename), "w") as f:
+            f.write(text)
+        entries.append({"name": name, "file": filename, "dims": shapes})
+        print(f"  {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump({"entries": entries}, f, indent=1)
+    return entries
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    args = parser.parse_args()
+    print(f"AOT-lowering {len(CATALOGUE)} entry points to {args.out}")
+    entries = export_all(args.out)
+    print(f"wrote {len(entries)} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

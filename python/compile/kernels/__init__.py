@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (build-time only; verified against ref.py)."""
+
+from . import pgd, proximal_cd, ref, sketch  # noqa: F401

@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: one projected-gradient step (paper Sec. 3.5.1, Eq. 14).
+
+``X <- max(X - 2 eta (X @ G - C), 0)`` over a row tile. Same tiling as the
+proximal-CD kernel: rows parallel on the grid, G VMEM-resident, one
+(TILE, k) x (k, k) matmul on the MXU plus a VPU axpy/relu.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_ROWS = 128
+
+
+def _pgd_kernel(c_ref, g_ref, u_ref, eta_ref, o_ref):
+    c = c_ref[...]
+    g = g_ref[...]
+    u = u_ref[...]
+    eta = eta_ref[0, 0]
+    grad = u @ g - c
+    o_ref[...] = jnp.maximum(u - 2.0 * eta * grad, 0.0)
+
+
+@jax.jit
+def pgd(c, g, u, eta):
+    """Pallas projected-gradient step; shapes as in ``proximal_cd``."""
+    rows, k = u.shape
+    assert c.shape == (rows, k)
+    assert g.shape == (k, k)
+    eta_arr = jnp.asarray(eta, dtype=u.dtype).reshape(1, 1)
+
+    pad = (-rows) % TILE_ROWS
+    if pad:
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, pad), (0, 0)))
+    padded = rows + pad
+
+    out = pl.pallas_call(
+        functools.partial(_pgd_kernel),
+        out_shape=jax.ShapeDtypeStruct((padded, k), u.dtype),
+        grid=(padded // TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+            pl.BlockSpec((TILE_ROWS, k), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((TILE_ROWS, k), lambda i: (i, 0)),
+        interpret=True,
+    )(c, g, u, eta_arr)
+    return out[:rows]

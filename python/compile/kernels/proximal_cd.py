@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: proximal coordinate descent (paper Alg. 3).
+
+The compute hot-spot of DSANLS. Given the normal-equation operands
+``c = A @ B.T`` (rows x k) and ``g = B @ B.T`` (k x k), perform one
+Gauss-Seidel sweep of the mu-regularised NLS update, row-parallel.
+
+TPU mapping (DESIGN.md #Hardware-Adaptation):
+  * grid over row tiles: each program instance owns a ``(TILE_ROWS, k)``
+    slab of U and C streamed HBM->VMEM by the BlockSpec;
+  * the k x k gram and the scalar mu stay VMEM-resident for every tile
+    (index_map pins them to block (0, 0));
+  * the k-column sweep is sequential *by construction* (Gauss-Seidel), so
+    it unrolls as k rank-1 updates over the row tile - each one a VPU
+    max/multiply plus a (TILE_ROWS, k) x (k,) matvec on the MXU;
+  * rows are the parallel dimension - the same axis the paper parallelises
+    across cluster nodes.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; lowering through the interpreter emits plain HLO that both
+pytest and the rust PJRT runtime can run (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Rows per program instance. 128 matches the MXU/VPU lane width and keeps
+# the per-tile VMEM footprint at (2*TILE*k + k*k + 1) * 4 bytes - about
+# 132 KiB for k=128, comfortably inside the ~16 MiB VMEM budget.
+TILE_ROWS = 128
+
+
+def _cd_kernel(c_ref, g_ref, u_ref, mu_ref, o_ref, *, k: int):
+    """One proximal-CD sweep over a (TILE_ROWS, k) row tile."""
+    c = c_ref[...]
+    g = g_ref[...]
+    u0 = u_ref[...]
+    mu = mu_ref[0, 0]
+    x = u0
+    # Sequential Gauss-Seidel sweep over the k columns (static unroll: k is
+    # a compile-time constant, matching rust solvers::cd and ref.py).
+    for j in range(k):
+        g_col = g[:, j]
+        xg_j = x @ g_col                      # (TILE,) matvec on the MXU
+        t = mu * u0[:, j] + c[:, j] - (xg_j - x[:, j] * g_col[j])
+        denom = g_col[j] + mu
+        new_col = jnp.where(denom > 0.0, jnp.maximum(t / denom, 0.0), 0.0)
+        x = x.at[:, j].set(new_col)
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=())
+def proximal_cd(c, g, u, mu):
+    """Pallas proximal-CD sweep: ``c (rows,k)``, ``g (k,k)``, ``u (rows,k)``,
+    ``mu`` scalar -> updated ``u``. Rows are padded to a TILE_ROWS multiple
+    internally (padded rows solve a harmless all-zero problem)."""
+    rows, k = u.shape
+    assert c.shape == (rows, k), f"c shape {c.shape} != {(rows, k)}"
+    assert g.shape == (k, k), f"g shape {g.shape} != {(k, k)}"
+    mu_arr = jnp.asarray(mu, dtype=u.dtype).reshape(1, 1)
+
+    pad = (-rows) % TILE_ROWS
+    if pad:
+        c = jnp.pad(c, ((0, pad), (0, 0)))
+        u = jnp.pad(u, ((0, pad), (0, 0)))
+    padded = rows + pad
+
+    out = pl.pallas_call(
+        functools.partial(_cd_kernel, k=k),
+        out_shape=jax.ShapeDtypeStruct((padded, k), u.dtype),
+        grid=(padded // TILE_ROWS,),
+        in_specs=[
+            pl.BlockSpec((TILE_ROWS, k), lambda i: (i, 0)),   # C: streamed
+            pl.BlockSpec((k, k), lambda i: (0, 0)),           # G: resident
+            pl.BlockSpec((TILE_ROWS, k), lambda i: (i, 0)),   # U: streamed
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),           # mu: resident
+        ],
+        out_specs=pl.BlockSpec((TILE_ROWS, k), lambda i: (i, 0)),
+        interpret=True,
+    )(c, g, u, mu_arr)
+    return out[:rows]
+
+
+def vmem_bytes(k: int, dtype_bytes: int = 4) -> int:
+    """Estimated VMEM footprint per program instance (see module docs)."""
+    return dtype_bytes * (3 * TILE_ROWS * k + k * k + 1)

@@ -1,0 +1,55 @@
+"""L1 Pallas kernel: sketch application ``A = M_block @ S`` as a tiled
+matmul (the other compute hot-spot of DSANLS, Alg. 2 line 5).
+
+Classic blocked-matmul schedule expressed with BlockSpec, the TPU analogue
+of the threadblock tiling a CUDA version would use (DESIGN.md
+#Hardware-Adaptation): grid = (row tiles x sketch-col tiles), the
+contraction dimension n streamed through VMEM in TILE_N slabs with a
+float32 accumulator resident in the output block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_M = 128
+TILE_N = 256
+TILE_D = 128
+
+
+def _matmul_kernel(m_ref, s_ref, o_ref, *, n_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += m_ref[...] @ s_ref[...]
+
+
+def sketch_apply(m_block, s):
+    """``m_block (rows, n) @ s (n, d)`` via the tiled Pallas matmul.
+    Dimensions are zero-padded to tile multiples and sliced back."""
+    rows, n = m_block.shape
+    n2, d = s.shape
+    assert n == n2, f"contraction mismatch {n} vs {n2}"
+
+    pad_m = (-rows) % TILE_M
+    pad_n = (-n) % TILE_N
+    pad_d = (-d) % TILE_D
+    mp = jnp.pad(m_block, ((0, pad_m), (0, pad_n)))
+    sp = jnp.pad(s, ((0, pad_n), (0, pad_d)))
+    gm, gn, gd = (rows + pad_m) // TILE_M, (n + pad_n) // TILE_N, (d + pad_d) // TILE_D
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, n_steps=gn),
+        out_shape=jax.ShapeDtypeStruct((rows + pad_m, d + pad_d), m_block.dtype),
+        grid=(gm, gd, gn),
+        in_specs=[
+            pl.BlockSpec((TILE_M, TILE_N), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((TILE_N, TILE_D), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, TILE_D), lambda i, j, kk: (i, j)),
+        interpret=True,
+    )(mp, sp)
+    return out[:rows, :d]

@@ -1,0 +1,86 @@
+"""L2: the DSANLS update step as a JAX graph, calling the L1 kernels.
+
+These functions are the AOT entry points ``aot.py`` lowers to HLO text for
+the rust PJRT runtime. Python never runs at request time - the rust
+coordinator feeds the compiled artifacts the same (sketched) operands its
+native solver would consume.
+
+Entry points:
+  * ``cd_update``     - normal-equation build (XLA matmuls; they fuse to
+                        MXU ops) + the Pallas proximal-CD sweep.
+  * ``pgd_update``    - same with the projected-gradient kernel.
+  * ``sanls_u_step``  - the full fused per-node U-step of Alg. 2: sketch
+                        apply (Pallas tiled matmul), summand ``V^T S``,
+                        normal operands, CD sweep. One HLO module ==
+                        one PJRT dispatch per iteration from rust.
+  * ``nmf_loss``      - relative Frobenius error (monitoring).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import pgd as pgd_kernel
+from .kernels import proximal_cd as cd_kernel
+from .kernels import sketch as sketch_kernel
+
+
+def cd_update(a, b, u, mu):
+    """Proximal-CD factor update for ``min ||A - U B||^2 + mu||U - U0||^2``.
+
+    ``a (rows, d)``, ``b (k, d)``, ``u (rows, k)``, scalar ``mu``.
+    """
+    c = a @ b.T          # cross products  (rows x k)  - MXU matmul
+    g = b @ b.T          # gram            (k x k)
+    return cd_kernel.proximal_cd(c, g, u, mu)
+
+
+def pgd_update(a, b, u, eta):
+    """One projected-gradient step on the same operands."""
+    c = a @ b.T
+    g = b @ b.T
+    return pgd_kernel.pgd(c, g, u, eta)
+
+
+def sanls_u_step(m_block, v, s, u, mu):
+    """Fused per-node sketched U-step (paper Alg. 2 lines 4-8).
+
+    ``m_block (rows, n)`` - the node's row block of M;
+    ``v (n, k)``          - the full fixed factor (or the node's view);
+    ``s (n, d)``          - the shared sketch for this iteration;
+    ``u (rows, k)``       - current factor block; scalar ``mu``.
+    """
+    a = sketch_kernel.sketch_apply(m_block, s)   # M S    (Pallas tiled matmul)
+    b = (v.T @ s).astype(u.dtype)                # V^T S  (k x d)
+    return cd_update(a, b, u, mu)
+
+
+def nmf_loss(m, u, v):
+    """Relative error ||M - U V^T||_F / ||M||_F without materialising the
+    reconstruction: ||M||^2 - 2<MV, U> + <U^T U, V^T V>."""
+    m_sq = jnp.sum(m * m)
+    cross = jnp.sum((m @ v) * u)
+    rec = jnp.sum((u.T @ u) * (v.T @ v))
+    resid = jnp.maximum(m_sq - 2.0 * cross + rec, 0.0)
+    return jnp.sqrt(resid / m_sq)
+
+
+def jit_entry(name: str, shapes: dict):
+    """Build the jitted function + example args for an AOT entry point."""
+    f32 = jnp.float32
+    spec = lambda *dims: jax.ShapeDtypeStruct(dims, f32)  # noqa: E731
+    if name == "cd_update":
+        r, k, d = shapes["rows"], shapes["k"], shapes["d"]
+        return jax.jit(cd_update), (spec(r, d), spec(k, d), spec(r, k), spec())
+    if name == "pgd_update":
+        r, k, d = shapes["rows"], shapes["k"], shapes["d"]
+        return jax.jit(pgd_update), (spec(r, d), spec(k, d), spec(r, k), spec())
+    if name == "sanls_u_step":
+        r, n, k, d = shapes["rows"], shapes["n"], shapes["k"], shapes["d"]
+        return (
+            jax.jit(sanls_u_step),
+            (spec(r, n), spec(n, k), spec(n, d), spec(r, k), spec()),
+        )
+    if name == "nmf_loss":
+        r, n, k = shapes["rows"], shapes["n"], shapes["k"]
+        return jax.jit(nmf_loss), (spec(r, n), spec(r, k), spec(n, k))
+    raise KeyError(f"unknown entry point {name}")

@@ -1,0 +1,116 @@
+"""L1 kernel correctness: every Pallas kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (including non-tile-multiple rows, k=1 edges) and
+the regularisation strength; assert_allclose at float32 tolerance.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile.kernels import pgd, proximal_cd, ref, sketch
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.uniform(0.0, 1.0, size=shape), dtype=jnp.float32)
+
+
+def _instance(seed, rows, k, d):
+    rng = np.random.default_rng(seed)
+    a = _rand(rng, rows, d)
+    b = _rand(rng, k, d)
+    u = _rand(rng, rows, k)
+    c, g = ref.normal_ref(a, b)
+    return a, b, u, c, g
+
+
+shapes = st.tuples(
+    st.integers(min_value=1, max_value=300),   # rows (crosses TILE_ROWS=128)
+    st.integers(min_value=1, max_value=12),    # k
+    st.integers(min_value=1, max_value=40),    # d
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes=shapes, mu=st.floats(0.0, 50.0), seed=st.integers(0, 2**16))
+def test_proximal_cd_matches_ref(shapes, mu, seed):
+    rows, k, d = shapes
+    _, _, u, c, g = _instance(seed, rows, k, d)
+    got = proximal_cd.proximal_cd(c, g, u, mu)
+    want = ref.proximal_cd_ref(c, g, u, jnp.float32(mu))
+    assert got.shape == (rows, k)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+@settings(max_examples=25, deadline=None)
+@given(shapes=shapes, eta=st.floats(1e-4, 0.2), seed=st.integers(0, 2**16))
+def test_pgd_matches_ref(shapes, eta, seed):
+    rows, k, d = shapes
+    _, _, u, c, g = _instance(seed, rows, k, d)
+    got = pgd.pgd(c, g, u, eta)
+    want = ref.pgd_ref(c, g, u, jnp.float32(eta))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+    assert np.all(np.asarray(got) >= 0.0)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(1, 200),
+    n=st.integers(1, 300),
+    d=st.integers(1, 150),
+    seed=st.integers(0, 2**16),
+)
+def test_sketch_apply_matches_matmul(rows, n, d, seed):
+    rng = np.random.default_rng(seed)
+    m = _rand(rng, rows, n)
+    s = jnp.asarray(rng.normal(size=(n, d)), dtype=jnp.float32)
+    got = sketch.sketch_apply(m, s)
+    want = m @ s
+    assert got.shape == (rows, d)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=1e-4)
+
+
+def test_cd_kernel_large_mu_freezes():
+    _, _, u, c, g = _instance(7, 64, 4, 16)
+    got = proximal_cd.proximal_cd(c, g, u, 1e9)
+    assert_allclose(np.asarray(got), np.asarray(u), rtol=1e-4, atol=1e-5)
+
+
+def test_cd_kernel_mu_zero_is_exact_hals_sweep():
+    # mu=0: the sweep is exact cyclic CD; repeated application must reach a
+    # fixed point that solves the NLS problem on a consistent instance
+    rng = np.random.default_rng(11)
+    xstar = _rand(rng, 32, 3)
+    b = _rand(rng, 3, 24)
+    a = xstar @ b
+    c, g = ref.normal_ref(a, b)
+    x = _rand(rng, 32, 3)
+    for _ in range(200):
+        x = proximal_cd.proximal_cd(c, g, x, 0.0)
+    assert_allclose(np.asarray(x), np.asarray(xstar), rtol=5e-2, atol=5e-3)
+
+
+def test_cd_kernel_monotone_objective():
+    rows, k, d = 48, 5, 20
+    a, b, u, c, g = _instance(3, rows, k, d)
+    mu = 2.0
+
+    def obj(x):
+        r = a - x @ b
+        return float(jnp.sum(r * r) + mu * jnp.sum((x - u) ** 2))
+
+    x1 = proximal_cd.proximal_cd(c, g, u, mu)
+    assert obj(np.asarray(x1)) <= obj(np.asarray(u)) + 1e-5
+
+
+@pytest.mark.parametrize("rows", [1, 127, 128, 129, 256])
+def test_tile_boundary_rows(rows):
+    # rows around the TILE_ROWS boundary must all round-trip exactly
+    _, _, u, c, g = _instance(5, rows, 3, 8)
+    got = proximal_cd.proximal_cd(c, g, u, 1.0)
+    want = ref.proximal_cd_ref(c, g, u, jnp.float32(1.0))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)

@@ -1,0 +1,84 @@
+"""L2 model correctness: the fused steps vs composed references, shapes,
+and loss identity."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.uniform(0.0, 1.0, size=shape), dtype=jnp.float32)
+
+
+def test_cd_update_matches_composed_ref():
+    rng = np.random.default_rng(21)
+    a = _rand(rng, 96, 24)
+    b = _rand(rng, 5, 24)
+    u = _rand(rng, 96, 5)
+    got = model.cd_update(a, b, u, 3.0)
+    c, g = ref.normal_ref(a, b)
+    want = ref.proximal_cd_ref(c, g, u, jnp.float32(3.0))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+def test_sanls_u_step_matches_ref():
+    rng = np.random.default_rng(23)
+    m_block = _rand(rng, 64, 80)
+    v = _rand(rng, 80, 4)
+    s = jnp.asarray(rng.normal(size=(80, 16)) / 4.0, dtype=jnp.float32)
+    u = _rand(rng, 64, 4)
+    got = model.sanls_u_step(m_block, v, s, u, 2.0)
+    want = ref.sanls_u_step_ref(m_block, v, s, u, jnp.float32(2.0))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    rows=st.integers(2, 80),
+    n=st.integers(2, 60),
+    k=st.integers(1, 6),
+    seed=st.integers(0, 2**16),
+)
+def test_nmf_loss_matches_explicit(rows, n, k, seed):
+    rng = np.random.default_rng(seed)
+    m = _rand(rng, rows, n)
+    u = _rand(rng, rows, k)
+    v = _rand(rng, n, k)
+    got = float(model.nmf_loss(m, u, v))
+    want = float(ref.nmf_loss_ref(m, u, v))
+    assert abs(got - want) < 2e-3, f"{got} vs {want}"
+
+
+def test_sanls_step_reduces_objective():
+    # one fused sketched step must reduce the sketched+proximal objective
+    rng = np.random.default_rng(29)
+    xstar = _rand(rng, 48, 3)
+    vstar = _rand(rng, 40, 3)
+    m_block = xstar @ vstar.T
+    v = vstar
+    s = jnp.asarray(rng.normal(size=(40, 20)) / np.sqrt(20), dtype=jnp.float32)
+    u0 = _rand(rng, 48, 3)
+
+    def true_obj(u):
+        r = m_block - u @ v.T
+        return float(jnp.sum(r * r))
+
+    u1 = model.sanls_u_step(m_block, v, s, u0, 1.0)
+    assert true_obj(u1) < true_obj(u0), "sketched step failed to descend"
+
+
+def test_jit_entry_catalogue_shapes():
+    for kind, shapes in [
+        ("cd_update", {"rows": 128, "k": 16, "d": 32}),
+        ("pgd_update", {"rows": 128, "k": 16, "d": 32}),
+        ("sanls_u_step", {"rows": 128, "n": 256, "k": 16, "d": 32}),
+        ("nmf_loss", {"rows": 128, "n": 256, "k": 16}),
+    ]:
+        jitted, args = model.jit_entry(kind, shapes)
+        lowered = jitted.lower(*args)
+        assert lowered is not None

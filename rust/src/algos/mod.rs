@@ -1,0 +1,89 @@
+//! Distributed NMF algorithms (general, non-secure setting — paper Sec. 3).
+//!
+//! * [`dsanls`] — the paper's contribution: Distributed Sketched ANLS
+//!   (Alg. 2) with proximal-CD or PGD subproblem solvers.
+//! * [`dist_anls`] — the MPI-FAUN-style baselines (MU / HALS / ANLS-BPP):
+//!   full factor all-gather each iteration, exact NLS operands.
+//!
+//! Both run on the simulated cluster of [`crate::dist`]; results carry the
+//! assembled factors, the error-over-simulated-time trace and per-node
+//! communication statistics.
+
+pub mod dist_anls;
+pub mod dsanls;
+
+pub use dist_anls::{run_dist_anls, DistAnlsOptions};
+pub use dsanls::{run_dsanls, DsanlsOptions};
+
+use crate::dist::CommStats;
+use crate::linalg::Mat;
+
+/// One sample of the convergence trace.
+#[derive(Debug, Clone, Copy)]
+pub struct TracePoint {
+    pub iteration: usize,
+    /// Simulated cluster time (seconds) when the sample was taken.
+    pub sim_time: f64,
+    /// Relative error ‖M − UVᵀ‖/‖M‖.
+    pub rel_error: f64,
+}
+
+/// Result of a distributed factorisation run.
+#[derive(Debug, Clone)]
+pub struct DistRun {
+    pub u: Mat,
+    pub v: Mat,
+    pub trace: Vec<TracePoint>,
+    /// Per-node communication/compute statistics (rank-ordered).
+    pub stats: Vec<CommStats>,
+    /// Simulated seconds per iteration (total cluster time / iterations).
+    pub sec_per_iter: f64,
+}
+
+impl DistRun {
+    pub fn final_error(&self) -> f64 {
+        self.trace.last().map(|t| t.rel_error).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_bytes_sent(&self) -> usize {
+        self.stats.iter().map(|s| s.bytes_sent).sum()
+    }
+}
+
+/// Rebuild a full factor matrix from rank-ordered flattened blocks
+/// (public entry point for sibling modules and integration tests).
+pub fn assemble_blocks_pub(blocks: &[Vec<f32>], k: usize) -> Mat {
+    assemble_blocks(blocks, k)
+}
+
+/// Rebuild a full factor matrix from rank-ordered flattened blocks.
+pub(crate) fn assemble_blocks(blocks: &[Vec<f32>], k: usize) -> Mat {
+    let rows: usize = blocks.iter().map(|b| b.len() / k).sum();
+    let mut data = Vec::with_capacity(rows * k);
+    for b in blocks {
+        debug_assert_eq!(b.len() % k, 0);
+        data.extend_from_slice(b);
+    }
+    Mat::from_vec(rows, k, data)
+}
+
+/// Per-node return value from the cluster closure; the driver reduces these
+/// into a [`DistRun`].
+pub(crate) struct NodeOutput {
+    pub u_block: Mat,
+    pub v_block: Mat,
+    pub trace: Vec<TracePoint>, // non-empty only on rank 0
+    pub stats: CommStats,
+    pub final_clock: f64,
+}
+
+pub(crate) fn reduce_outputs(outputs: Vec<NodeOutput>, k: usize, iterations: usize) -> DistRun {
+    let u_blocks: Vec<Vec<f32>> = outputs.iter().map(|o| o.u_block.data().to_vec()).collect();
+    let v_blocks: Vec<Vec<f32>> = outputs.iter().map(|o| o.v_block.data().to_vec()).collect();
+    let u = assemble_blocks(&u_blocks, k);
+    let v = assemble_blocks(&v_blocks, k);
+    let trace = outputs[0].trace.clone();
+    let stats: Vec<CommStats> = outputs.iter().map(|o| o.stats).collect();
+    let max_clock = outputs.iter().map(|o| o.final_clock).fold(0.0, f64::max);
+    DistRun { u, v, trace, stats, sec_per_iter: max_clock / iterations.max(1) as f64 }
+}

@@ -1,0 +1,243 @@
+//! Configuration system: a TOML-lite file format, a typed experiment
+//! config with defaults, and `--key=value` CLI overrides.
+
+mod toml_lite;
+
+pub use toml_lite::TomlDoc;
+
+use crate::dist::CommModel;
+use crate::nmf::MuSchedule;
+use crate::secure::SecureAlgo;
+use crate::sketch::SketchKind;
+use crate::solvers::SolverKind;
+
+/// Which algorithm family an experiment runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Algorithm {
+    /// DSANLS (subsampling or gaussian per `sketch.kind`).
+    Dsanls,
+    /// MPI-FAUN baseline with the given solver.
+    Baseline(SolverKind),
+    /// One of the secure protocols.
+    Secure(SecureAlgo),
+}
+
+impl std::str::FromStr for Algorithm {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        let l = s.to_ascii_lowercase().replace('_', "-");
+        match l.as_str() {
+            "dsanls" | "dsanls-s" | "dsanls-g" => Ok(Algorithm::Dsanls),
+            "mu" | "mpi-faun-mu" => Ok(Algorithm::Baseline(SolverKind::Mu)),
+            "hals" | "mpi-faun-hals" => Ok(Algorithm::Baseline(SolverKind::Hals)),
+            "anls-bpp" | "bpp" | "abpp" | "mpi-faun-abpp" => {
+                Ok(Algorithm::Baseline(SolverKind::AnlsBpp))
+            }
+            other => other.parse::<SecureAlgo>().map(Algorithm::Secure),
+        }
+    }
+}
+
+impl Algorithm {
+    pub fn name(&self) -> String {
+        match self {
+            Algorithm::Dsanls => "DSANLS".into(),
+            Algorithm::Baseline(s) => format!("MPI-FAUN-{}", s.name().to_uppercase()),
+            Algorithm::Secure(a) => a.name().into(),
+        }
+    }
+}
+
+/// Fully-resolved experiment configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub algorithm: Algorithm,
+    pub dataset: String,
+    /// Dataset scale factor (1.0 = the repo's scaled-down Table-1 sizes).
+    pub scale: f64,
+    pub nodes: usize,
+    pub rank: usize,
+    pub iterations: usize,
+    pub seed: u64,
+    pub eval_every: usize,
+
+    pub sketch: SketchKind,
+    pub d_u: usize,
+    pub d_v: usize,
+
+    pub solver: SolverKind,
+    pub mu: MuSchedule,
+
+    /// Secure-protocol knobs.
+    pub t1: usize,
+    pub t2: usize,
+    /// Column-skew for the imbalanced-workload experiments (0 = uniform).
+    pub skew: f64,
+    pub rounds: usize,
+    pub local_iters: usize,
+
+    pub comm: CommModel,
+    pub output_dir: String,
+    /// Use the AOT/PJRT local-solver backend where shapes allow.
+    pub backend_pjrt: bool,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "experiment".into(),
+            algorithm: Algorithm::Dsanls,
+            dataset: "MNIST".into(),
+            scale: 0.1,
+            nodes: 10,
+            rank: 100,
+            iterations: 100,
+            seed: 42,
+            eval_every: 5,
+            sketch: SketchKind::Subsample,
+            d_u: 0,
+            d_v: 0,
+            solver: SolverKind::ProximalCd,
+            mu: MuSchedule::default(),
+            t1: 20,
+            t2: 5,
+            skew: 0.0,
+            rounds: 20,
+            local_iters: 5,
+            comm: CommModel::default(),
+            output_dir: "results".into(),
+            backend_pjrt: false,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Parse from TOML-lite text; unknown keys are an error (typo guard).
+    pub fn from_toml(text: &str) -> Result<Self, String> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = ExperimentConfig::default();
+        for (section, key, value) in doc.entries() {
+            cfg.apply(&format!("{section}.{key}"), value)?;
+        }
+        Ok(cfg)
+    }
+
+    pub fn from_file(path: &std::path::Path) -> Result<Self, String> {
+        let text = std::fs::read_to_string(path).map_err(|e| format!("{path:?}: {e}"))?;
+        Self::from_toml(&text)
+    }
+
+    /// Apply one dotted-key override (also used for CLI `--key=value`).
+    pub fn apply(&mut self, dotted: &str, value: &str) -> Result<(), String> {
+        let v = value.trim().trim_matches('"');
+        let parse_usize =
+            |v: &str| v.parse::<usize>().map_err(|e| format!("{dotted}: {e}"));
+        let parse_f64 = |v: &str| v.parse::<f64>().map_err(|e| format!("{dotted}: {e}"));
+        match dotted {
+            "experiment.name" => self.name = v.into(),
+            "experiment.algorithm" => self.algorithm = v.parse()?,
+            "experiment.dataset" => self.dataset = v.to_uppercase(),
+            "experiment.scale" => self.scale = parse_f64(v)?,
+            "experiment.nodes" => self.nodes = parse_usize(v)?,
+            "experiment.rank" => self.rank = parse_usize(v)?,
+            "experiment.iterations" => self.iterations = parse_usize(v)?,
+            "experiment.seed" => self.seed = parse_usize(v)? as u64,
+            "experiment.eval_every" => self.eval_every = parse_usize(v)?,
+            "experiment.backend" => {
+                self.backend_pjrt = match v {
+                    "native" => false,
+                    "pjrt" => true,
+                    other => return Err(format!("experiment.backend: {other}")),
+                }
+            }
+            "sketch.kind" => self.sketch = v.parse()?,
+            "sketch.d_u" => self.d_u = parse_usize(v)?,
+            "sketch.d_v" => self.d_v = parse_usize(v)?,
+            "solver.kind" => self.solver = v.parse()?,
+            "solver.alpha" => self.mu.alpha = parse_f64(v)? as f32,
+            "solver.beta" => self.mu.beta = parse_f64(v)? as f32,
+            "secure.t1" => self.t1 = parse_usize(v)?,
+            "secure.t2" => self.t2 = parse_usize(v)?,
+            "secure.skew" => self.skew = parse_f64(v)?,
+            "secure.rounds" => self.rounds = parse_usize(v)?,
+            "secure.local_iters" => self.local_iters = parse_usize(v)?,
+            "network.latency_us" => self.comm.latency = parse_f64(v)? * 1e-6,
+            "network.bandwidth_gbps" => self.comm.bandwidth = parse_f64(v)? * 125e6,
+            "output.dir" => self.output_dir = v.into(),
+            other => return Err(format!("unknown config key: {other}")),
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# Fig. 2 MNIST run
+[experiment]
+name = "fig2-mnist"
+algorithm = "dsanls"
+dataset = "mnist"
+nodes = 10
+rank = 100
+iterations = 50
+
+[sketch]
+kind = "gaussian"
+d_u = 80
+
+[solver]
+kind = "rcd"
+alpha = 0.1
+beta = 10
+
+[network]
+latency_us = 100
+bandwidth_gbps = 10
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let cfg = ExperimentConfig::from_toml(SAMPLE).unwrap();
+        assert_eq!(cfg.name, "fig2-mnist");
+        assert_eq!(cfg.dataset, "MNIST");
+        assert_eq!(cfg.nodes, 10);
+        assert_eq!(cfg.sketch, SketchKind::Gaussian);
+        assert_eq!(cfg.d_u, 80);
+        assert_eq!(cfg.mu.alpha, 0.1);
+        assert_eq!(cfg.mu.beta, 10.0);
+        assert!((cfg.comm.latency - 100e-6).abs() < 1e-12);
+        assert!((cfg.comm.bandwidth - 1.25e9).abs() < 1.0);
+    }
+
+    #[test]
+    fn rejects_unknown_key() {
+        let bad = "[experiment]\nfoo = 1\n";
+        assert!(ExperimentConfig::from_toml(bad).is_err());
+    }
+
+    #[test]
+    fn algorithm_parsing() {
+        assert!(matches!("dsanls".parse::<Algorithm>(), Ok(Algorithm::Dsanls)));
+        assert!(matches!(
+            "anls-bpp".parse::<Algorithm>(),
+            Ok(Algorithm::Baseline(SolverKind::AnlsBpp))
+        ));
+        assert!(matches!(
+            "syn-ssd-uv".parse::<Algorithm>(),
+            Ok(Algorithm::Secure(SecureAlgo::SynSsdUv))
+        ));
+        assert!("wat".parse::<Algorithm>().is_err());
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply("experiment.rank", "25").unwrap();
+        assert_eq!(cfg.rank, 25);
+        assert!(cfg.apply("experiment.rank", "x").is_err());
+    }
+}

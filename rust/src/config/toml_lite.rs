@@ -1,0 +1,94 @@
+//! A small TOML subset parser: `[section]` headers, `key = value` pairs,
+//! `#` comments. Values stay as raw strings; typing happens in the typed
+//! config layer. (No external TOML crate is vendored in this environment.)
+
+/// A parsed document: ordered `(section, key, value)` triples.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, String)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                if section.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                continue;
+            }
+            let (key, value) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = key.trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            if section.is_empty() {
+                return Err(format!("line {}: key outside any [section]", lineno + 1));
+            }
+            doc.entries.push((section.clone(), key.to_string(), value.trim().to_string()));
+        }
+        Ok(doc)
+    }
+
+    /// Ordered `(section, key, raw-value)` triples.
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &str)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v.as_str()))
+    }
+
+    /// Lookup `section.key`.
+    pub fn get(&self, section: &str, key: &str) -> Option<&str> {
+        self.entries
+            .iter()
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v.as_str())
+    }
+}
+
+/// Strip a `#` comment, respecting double-quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let doc = TomlDoc::parse(
+            "# top comment\n[a]\nx = 1 # trailing\ny = \"str # not comment\"\n[b]\nz = true\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("a", "x"), Some("1"));
+        assert_eq!(doc.get("a", "y"), Some("\"str # not comment\""));
+        assert_eq!(doc.get("b", "z"), Some("true"));
+        assert_eq!(doc.get("a", "z"), None);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("x = 1").is_err(), "key outside section");
+        assert!(TomlDoc::parse("[a\nx = 1").is_err(), "unterminated section");
+        assert!(TomlDoc::parse("[a]\nnope").is_err(), "missing =");
+    }
+}

@@ -1,0 +1,243 @@
+//! Experiment coordinator: config → dataset → cluster → algorithm → report.
+//!
+//! This is the launcher layer the CLI (`rust/src/main.rs`), the benches
+//! (`benches/*.rs`) and the examples build on. One entry point,
+//! [`run_experiment`], covers every algorithm in the paper; helpers expose
+//! the figure-specific sweeps.
+
+use crate::algos::{run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions, TracePoint};
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::data::partition::{imbalanced_partition, uniform_partition, Partition};
+use crate::data::Dataset;
+use crate::dist::CommStats;
+use crate::linalg::{Mat, Matrix};
+use crate::metrics::Series;
+use crate::nmf::rel_error;
+use crate::secure::{run_asyn, run_syn_sd, run_syn_ssd, AsynOptions, SecureAlgo, SynOptions};
+
+/// The uniform outcome of any experiment run.
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    pub label: String,
+    pub trace: Vec<TracePoint>,
+    pub stats: Vec<CommStats>,
+    pub sec_per_iter: f64,
+    pub u: Mat,
+    pub v: Mat,
+}
+
+impl Outcome {
+    pub fn final_error(&self) -> f64 {
+        self.trace.last().map(|p| p.rel_error).unwrap_or(f64::NAN)
+    }
+
+    pub fn series(&self) -> Series {
+        Series::new(self.label.clone(), self.trace.clone())
+    }
+
+    /// Recompute the true global error of the returned factors (sanity
+    /// check against the traced value).
+    pub fn check_error(&self, m: &Matrix) -> f64 {
+        rel_error(m, &self.u, &self.v)
+    }
+}
+
+/// Generate the dataset named in the config (scaled).
+pub fn load_dataset(cfg: &ExperimentConfig) -> Matrix {
+    Dataset::from_name(&cfg.dataset)
+        .unwrap_or_else(|| panic!("unknown dataset {}", cfg.dataset))
+        .generate_scaled(cfg.seed, cfg.scale)
+}
+
+/// Column partition for the secure protocols (uniform or skewed).
+pub fn secure_partition(cfg: &ExperimentConfig, cols: usize) -> Partition {
+    if cfg.skew > 0.0 {
+        imbalanced_partition(cols, cfg.nodes, cfg.skew)
+    } else {
+        uniform_partition(cols, cfg.nodes)
+    }
+}
+
+/// Run the experiment described by `cfg` on matrix `m` (pass the
+/// pre-generated matrix so sweeps reuse it).
+pub fn run_on(cfg: &ExperimentConfig, m: &Matrix) -> Outcome {
+    match cfg.algorithm {
+        Algorithm::Dsanls => {
+            let run = run_dsanls(
+                m,
+                &DsanlsOptions {
+                    nodes: cfg.nodes,
+                    rank: cfg.rank,
+                    iterations: cfg.iterations,
+                    solver: cfg.solver,
+                    sketch: cfg.sketch,
+                    d_u: cfg.d_u,
+                    d_v: cfg.d_v,
+                    seed: cfg.seed,
+                    eval_every: cfg.eval_every,
+                    mu: cfg.mu,
+                    comm: cfg.comm,
+                    box_bound: false,
+                },
+            );
+            Outcome {
+                label: format!("DSANLS/{}", initial(cfg.sketch.name())),
+                trace: run.trace,
+                stats: run.stats,
+                sec_per_iter: run.sec_per_iter,
+                u: run.u,
+                v: run.v,
+            }
+        }
+        Algorithm::Baseline(solver) => {
+            let run = run_dist_anls(
+                m,
+                &DistAnlsOptions {
+                    nodes: cfg.nodes,
+                    rank: cfg.rank,
+                    iterations: cfg.iterations,
+                    solver,
+                    seed: cfg.seed,
+                    eval_every: cfg.eval_every,
+                    comm: cfg.comm,
+                    inner_sweeps: 1,
+                },
+            );
+            Outcome {
+                label: format!("MPI-FAUN-{}", solver.name().to_uppercase()),
+                trace: run.trace,
+                stats: run.stats,
+                sec_per_iter: run.sec_per_iter,
+                u: run.u,
+                v: run.v,
+            }
+        }
+        Algorithm::Secure(algo) => {
+            let cols = secure_partition(cfg, m.cols());
+            let run = match algo {
+                SecureAlgo::SynSd => {
+                    run_syn_sd(m, &cols, &syn_options(cfg), None)
+                }
+                SecureAlgo::SynSsdU | SecureAlgo::SynSsdV | SecureAlgo::SynSsdUv => {
+                    run_syn_ssd(m, &cols, &syn_options(cfg), algo, None)
+                }
+                SecureAlgo::AsynSd | SecureAlgo::AsynSsdV => {
+                    run_asyn(m, &cols, &asyn_options(cfg), algo, None)
+                }
+            };
+            Outcome {
+                label: algo.name().into(),
+                trace: run.trace,
+                stats: run.stats,
+                sec_per_iter: run.sec_per_iter,
+                u: run.u,
+                v: run.v,
+            }
+        }
+    }
+}
+
+/// Convenience: load the dataset and run.
+pub fn run_experiment(cfg: &ExperimentConfig) -> Outcome {
+    let m = load_dataset(cfg);
+    run_on(cfg, &m)
+}
+
+fn initial(name: &str) -> String {
+    name.chars().next().unwrap_or('?').to_uppercase().to_string()
+}
+
+/// Map the generic config onto the synchronous secure options.
+pub fn syn_options(cfg: &ExperimentConfig) -> SynOptions {
+    SynOptions {
+        nodes: cfg.nodes,
+        rank: cfg.rank,
+        t1: cfg.t1,
+        t2: cfg.t2,
+        solver: cfg.solver,
+        mu: cfg.mu,
+        d1: cfg.d_u,
+        d2: cfg.d_v,
+        d3: cfg.d_u,
+        sketch: cfg.sketch,
+        seed: cfg.seed,
+        eval_every: cfg.eval_every,
+        comm: cfg.comm,
+    }
+}
+
+/// Map the generic config onto the asynchronous secure options.
+pub fn asyn_options(cfg: &ExperimentConfig) -> AsynOptions {
+    AsynOptions {
+        nodes: cfg.nodes,
+        rank: cfg.rank,
+        rounds: cfg.rounds,
+        local_iters: cfg.local_iters,
+        solver: cfg.solver,
+        mu: cfg.mu,
+        d1: cfg.d_u,
+        sketch: cfg.sketch,
+        omega0: 0.5,
+        tau: 10.0,
+        seed: cfg.seed,
+        comm: cfg.comm,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg(algorithm: &str) -> ExperimentConfig {
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply("experiment.algorithm", algorithm).unwrap();
+        cfg.apply("experiment.dataset", "face").unwrap();
+        cfg.apply("experiment.scale", "0.05").unwrap();
+        cfg.apply("experiment.nodes", "2").unwrap();
+        cfg.apply("experiment.rank", "4").unwrap();
+        cfg.apply("experiment.iterations", "10").unwrap();
+        cfg.apply("experiment.eval_every", "0").unwrap();
+        cfg.t1 = 4;
+        cfg.t2 = 2;
+        cfg.rounds = 4;
+        cfg.local_iters = 2;
+        cfg
+    }
+
+    #[test]
+    fn dispatches_every_algorithm() {
+        for algo in ["dsanls", "hals", "mu", "syn-sd", "syn-ssd-uv", "asyn-sd", "asyn-ssd-v"] {
+            let cfg = tiny_cfg(algo);
+            let out = run_experiment(&cfg);
+            assert!(!out.trace.is_empty(), "{algo}: empty trace");
+            assert!(out.final_error().is_finite(), "{algo}: bad error");
+            assert!(out.u.is_nonnegative(), "{algo}: negative factor");
+        }
+    }
+
+    #[test]
+    fn traced_error_matches_factors_for_sync() {
+        // for the deterministic sync algorithms, the traced final error must
+        // equal the error recomputed from the returned factors
+        let cfg = tiny_cfg("dsanls");
+        let m = load_dataset(&cfg);
+        let out = run_on(&cfg, &m);
+        let recomputed = out.check_error(&m);
+        assert!(
+            (out.final_error() - recomputed).abs() < 1e-4,
+            "traced {} vs recomputed {}",
+            out.final_error(),
+            recomputed
+        );
+    }
+
+    #[test]
+    fn skewed_partition_used_when_configured() {
+        let mut cfg = tiny_cfg("syn-sd");
+        cfg.skew = 0.5;
+        cfg.nodes = 4; // skew only shows with >2 nodes (node 0 takes 50 %)
+        let m = load_dataset(&cfg);
+        let p = secure_partition(&cfg, m.cols());
+        assert!(p.len(0) > p.len(1) * 2, "{} vs {}", p.len(0), p.len(1));
+    }
+}

@@ -1,0 +1,16 @@
+//! Datasets and partitioning.
+//!
+//! * [`partition`] — row/column index partitioning across nodes: uniform
+//!   (Sec. 3.1 "near the same ... load balancing") and the skewed layout of
+//!   Sec. 5.3.2 ("node 0 is assigned with 50 % of the columns").
+//! * [`synth`] — synthetic matrix generators (low-rank+noise dense,
+//!   power-law sparse) used as substitutes for the paper's real datasets.
+//! * [`datasets`] — the six named Table-1 workloads, scaled (see DESIGN.md
+//!   §2 for the substitution rationale).
+
+pub mod datasets;
+pub mod partition;
+pub mod synth;
+
+pub use datasets::{load, Dataset, DatasetSpec, ALL_DATASETS};
+pub use partition::{imbalanced_partition, uniform_partition, Partition};

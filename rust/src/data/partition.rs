@@ -1,0 +1,112 @@
+//! Index partitioning across cluster nodes.
+
+/// A partition of `0..total` into `n` contiguous, disjoint ranges
+/// (one per node, rank-ordered).
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub total: usize,
+    ranges: Vec<std::ops::Range<usize>>,
+}
+
+impl Partition {
+    pub fn nodes(&self) -> usize {
+        self.ranges.len()
+    }
+
+    /// The index range owned by `rank`.
+    pub fn range(&self, rank: usize) -> std::ops::Range<usize> {
+        self.ranges[rank].clone()
+    }
+
+    /// Size of the block owned by `rank`.
+    pub fn len(&self, rank: usize) -> usize {
+        self.ranges[rank].len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.total == 0
+    }
+
+    /// Offset of `rank`'s block in the global ordering.
+    pub fn offset(&self, rank: usize) -> usize {
+        self.ranges[rank].start
+    }
+
+    /// Which rank owns global index `i`.
+    pub fn owner(&self, i: usize) -> usize {
+        debug_assert!(i < self.total);
+        self.ranges.iter().position(|r| r.contains(&i)).expect("index outside partition")
+    }
+
+    /// Sanity: ranges are contiguous, disjoint and cover `0..total`.
+    pub fn validate(&self) -> bool {
+        let mut prev = 0;
+        for r in &self.ranges {
+            if r.start != prev {
+                return false;
+            }
+            prev = r.end;
+        }
+        prev == self.total
+    }
+}
+
+/// Uniform partition: `|I_r| ≈ total/N` (paper Sec. 3.1).
+pub fn uniform_partition(total: usize, nodes: usize) -> Partition {
+    Partition { total, ranges: crate::parallel::split_ranges(total, nodes) }
+}
+
+/// Imbalanced partition of Sec. 5.3.2: node 0 holds `skew` (e.g. 0.5 = 50 %)
+/// of the indices; the remainder is spread uniformly over nodes 1..N.
+pub fn imbalanced_partition(total: usize, nodes: usize, skew: f64) -> Partition {
+    assert!(nodes >= 1);
+    assert!((0.0..1.0).contains(&skew));
+    if nodes == 1 {
+        return uniform_partition(total, 1);
+    }
+    let first = ((total as f64) * skew).round() as usize;
+    let first = first.min(total);
+    let rest = crate::parallel::split_ranges(total - first, nodes - 1);
+    let mut ranges = Vec::with_capacity(nodes);
+    ranges.push(0..first);
+    for r in rest {
+        ranges.push(first + r.start..first + r.end);
+    }
+    Partition { total, ranges }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_covers_and_balances() {
+        for total in [10usize, 100, 101, 7] {
+            for n in [1usize, 2, 3, 7] {
+                let p = uniform_partition(total, n);
+                assert!(p.validate(), "{total}/{n}");
+                let max = (0..n).map(|r| p.len(r)).max().unwrap();
+                let min = (0..n).map(|r| p.len(r)).min().unwrap();
+                assert!(max - min <= 1, "imbalanced uniform partition");
+            }
+        }
+    }
+
+    #[test]
+    fn imbalanced_gives_node0_the_skew() {
+        let p = imbalanced_partition(1000, 10, 0.5);
+        assert!(p.validate());
+        assert_eq!(p.len(0), 500);
+        for r in 1..10 {
+            assert!((p.len(r) as i64 - 56).abs() <= 1, "len({r}) = {}", p.len(r));
+        }
+    }
+
+    #[test]
+    fn owner_lookup() {
+        let p = uniform_partition(100, 4);
+        assert_eq!(p.owner(0), 0);
+        assert_eq!(p.owner(99), 3);
+        assert_eq!(p.owner(p.offset(2)), 2);
+    }
+}

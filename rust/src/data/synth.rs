@@ -1,0 +1,215 @@
+//! Synthetic matrix generators — the data substitutes (DESIGN.md §2).
+//!
+//! Each generator matches the *structure* that makes the paper's datasets
+//! behave as they do under NMF: approximate nonnegative low-rank for the
+//! dense image/video matrices, heavy-tailed sparse co-occurrence for the
+//! text/graph matrices.
+
+use crate::linalg::{Csr, Mat, Matrix};
+use crate::rng::{Gaussian, Pcg64};
+
+/// Dense nonnegative low-rank + noise:
+/// `M = U₀·V₀ᵀ + σ·|noise|`, entries clipped at 0.
+///
+/// `true_rank` controls the planted structure (≈ phenotypes / video
+/// background components); `noise` the residual floor an NMF of rank
+/// ≥ true_rank can reach.
+pub fn low_rank_dense(
+    rows: usize,
+    cols: usize,
+    true_rank: usize,
+    noise: f32,
+    rng: &mut Pcg64,
+) -> Mat {
+    let u = Mat::rand_uniform(rows, true_rank, 1.0, rng);
+    let v = Mat::rand_uniform(cols, true_rank, 1.0, rng);
+    let mut m = u.matmul_nt(&v);
+    if noise > 0.0 {
+        let mut g = Gaussian::new(rng.clone());
+        for x in m.data_mut().iter_mut() {
+            *x += g.sample_f32(noise).abs();
+        }
+        // keep caller's rng moving
+        for _ in 0..rows * cols {
+            rng.next_u64();
+        }
+    }
+    m
+}
+
+/// Sparse power-law matrix (bag-of-words / term-document): column
+/// popularity follows Zipf with exponent `zipf`, row activity is uniform;
+/// values are 1 + Exp-like counts. Also plants `true_rank` soft topics so
+/// NMF has structure to find.
+pub fn power_law_sparse(
+    rows: usize,
+    cols: usize,
+    nnz_target: usize,
+    true_rank: usize,
+    zipf: f64,
+    rng: &mut Pcg64,
+) -> Csr {
+    // topic model: each row gets a topic, each topic a column distribution
+    // biased by Zipf rank; draws cluster within topics.
+    let mut weights: Vec<f64> = (0..cols).map(|c| 1.0 / ((c + 1) as f64).powf(zipf)).collect();
+    let wsum: f64 = weights.iter().sum();
+    for w in weights.iter_mut() {
+        *w /= wsum;
+    }
+    // cumulative for inverse-CDF sampling
+    let mut cdf = Vec::with_capacity(cols);
+    let mut acc = 0.0;
+    for &w in &weights {
+        acc += w;
+        cdf.push(acc);
+    }
+    let sample_col = |r: &mut Pcg64| -> usize {
+        let x = r.next_f64();
+        match cdf.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => i,
+            Err(i) => i.min(cols - 1),
+        }
+    };
+
+    let k = true_rank.max(1);
+    let row_topic: Vec<usize> = (0..rows).map(|_| rng.below(k)).collect();
+    let mut triplets = Vec::with_capacity(nnz_target);
+    for _ in 0..nnz_target {
+        let i = rng.below(rows);
+        // topic shift: rotate the sampled column by a topic-dependent offset
+        // so different topics emphasise different column bands
+        let base = sample_col(rng);
+        let j = (base + row_topic[i] * (cols / k.max(1))) % cols;
+        let v = 1.0 + (rng.next_f32() * 4.0).floor(); // count-like 1..=4
+        triplets.push((i, j, v));
+    }
+    Csr::from_triplets(rows, cols, triplets)
+}
+
+/// Symmetric power-law graph adjacency (DBLP-like co-authorship):
+/// preferential-attachment-flavoured edge endpoints, symmetrised.
+pub fn power_law_graph(nodes: usize, edges: usize, rng: &mut Pcg64) -> Csr {
+    let mut triplets = Vec::with_capacity(edges * 2);
+    for _ in 0..edges {
+        // endpoint ∝ (rank+1)^-0.8 via rejection-free inverse power draw
+        let a = power_index(nodes, 0.8, rng);
+        let b = power_index(nodes, 0.8, rng);
+        if a == b {
+            continue;
+        }
+        triplets.push((a, b, 1.0));
+        triplets.push((b, a, 1.0));
+    }
+    Csr::from_triplets(nodes, nodes, triplets)
+}
+
+fn power_index(n: usize, alpha: f64, rng: &mut Pcg64) -> usize {
+    // inverse-CDF of p(i) ∝ (i+1)^(−alpha) approximated by u^(1/(1−alpha))
+    let u = rng.next_f64().max(1e-12);
+    let x = u.powf(1.0 / (1.0 - alpha));
+    ((x * n as f64) as usize).min(n - 1)
+}
+
+/// MNIST-like: blocky nonnegative "digit strokes" with ~20 % density.
+/// Rows = images (mixtures of `true_rank` stroke templates), cols = pixels.
+pub fn blocky_sparse(
+    rows: usize,
+    cols: usize,
+    true_rank: usize,
+    density: f64,
+    rng: &mut Pcg64,
+) -> Csr {
+    // templates: each covers a contiguous band of pixels
+    let k = true_rank.max(1);
+    let band = (cols as f64 * density * 2.0).ceil() as usize;
+    let band = band.clamp(1, cols);
+    let mut triplets = Vec::new();
+    for i in 0..rows {
+        // each image mixes 1–3 templates
+        let n_tpl = 1 + rng.below(3);
+        for _ in 0..n_tpl {
+            let t = rng.below(k);
+            let start = (t * cols / k) % cols;
+            // within the band, keep ~half the pixels
+            for j in 0..band {
+                if rng.next_f32() < 0.5 {
+                    let col = (start + j) % cols;
+                    let v = 0.2 + rng.next_f32();
+                    triplets.push((i, col, v));
+                }
+            }
+        }
+    }
+    Csr::from_triplets(rows, cols, triplets)
+}
+
+/// Wrap a generator output in [`Matrix`], choosing dense/sparse storage by
+/// the achieved density.
+pub fn auto_storage(m: Csr) -> Matrix {
+    if m.density() > 0.5 {
+        Matrix::Dense(m.to_dense())
+    } else {
+        Matrix::Sparse(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn low_rank_is_nonnegative_and_low_rank() {
+        let mut rng = Pcg64::new(100, 0);
+        let m = low_rank_dense(30, 20, 3, 0.01, &mut rng);
+        assert!(m.is_nonnegative());
+        // rank-3 NMF should reach small error
+        let f = crate::nmf::Anls::new(crate::nmf::AnlsOptions {
+            rank: 3,
+            iterations: 60,
+            solver: crate::solvers::SolverKind::Hals,
+            inner_sweeps: 2,
+            ..Default::default()
+        })
+        .run(&Matrix::Dense(m));
+        assert!(f.final_error() < 0.12, "err = {}", f.final_error());
+    }
+
+    #[test]
+    fn power_law_sparse_hits_density() {
+        let mut rng = Pcg64::new(101, 0);
+        let m = power_law_sparse(500, 300, 6000, 5, 1.1, &mut rng);
+        assert_eq!(m.rows(), 500);
+        assert!(m.nnz() > 4000, "nnz = {}", m.nnz());
+        assert!(m.density() < 0.05);
+        assert!(m.values().iter().all(|&v| v >= 1.0));
+    }
+
+    #[test]
+    fn graph_is_symmetric() {
+        let mut rng = Pcg64::new(102, 0);
+        let g = power_law_graph(100, 400, &mut rng);
+        let d = g.to_dense();
+        for i in 0..100 {
+            for j in 0..100 {
+                assert_eq!(d.get(i, j), d.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_generation() {
+        let gen = || {
+            let mut rng = Pcg64::new(103, 0);
+            power_law_sparse(100, 80, 800, 4, 1.0, &mut rng)
+        };
+        assert_eq!(gen().values(), gen().values());
+    }
+
+    #[test]
+    fn blocky_has_reasonable_density() {
+        let mut rng = Pcg64::new(104, 0);
+        let m = blocky_sparse(200, 196, 8, 0.2, &mut rng);
+        let d = m.density();
+        assert!(d > 0.02 && d < 0.6, "density {d}");
+    }
+}

@@ -1,0 +1,47 @@
+//! # dsanls — Fast and Secure Distributed Nonnegative Matrix Factorization
+//!
+//! Reproduction of Qian et al., *"Fast and Secure Distributed Nonnegative
+//! Matrix Factorization"*, IEEE TKDE 2020.
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! * **L3 (this crate)** — the paper's coordination contribution: the
+//!   [`algos::dsanls`] distributed sketched-ANLS algorithm, the
+//!   MPI-FAUN-style baselines ([`algos::dist_mu`], [`algos::dist_hals`],
+//!   [`algos::dist_anls_bpp`]), and the four secure federated protocols in
+//!   [`secure`] (Syn-SD, Syn-SSD, Asyn-SD, Asyn-SSD), all running on the
+//!   in-process simulated cluster of [`dist`].
+//! * **L2 — JAX model** (`python/compile/model.py`) — the sketched update
+//!   step as a JAX graph, AOT-lowered to HLO text under `artifacts/`.
+//! * **L1 — Pallas kernels** (`python/compile/kernels/`) — proximal
+//!   coordinate descent, projected gradient and sketch-apply kernels,
+//!   verified against a pure-jnp oracle.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT C API
+//! (`xla` crate) so the compiled L1/L2 path can be exercised from the rust
+//! hot loop; the pure-rust [`solvers`] are the shape-generic default.
+//!
+//! Python is **never** on the request path: `make artifacts` runs once at
+//! build time, and the `dsanls` binary is self-contained afterwards.
+
+pub mod algos;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dist;
+pub mod linalg;
+pub mod metrics;
+pub mod nmf;
+pub mod parallel;
+pub mod rng;
+pub mod runtime;
+pub mod secure;
+pub mod sketch;
+pub mod solvers;
+pub mod testkit;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;
+
+/// Crate version string (mirrors `Cargo.toml`).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

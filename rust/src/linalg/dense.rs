@@ -1,0 +1,389 @@
+//! Row-major dense f32 matrix.
+
+use super::gemm;
+use crate::rng::{Gaussian, Pcg64};
+
+/// Row-major dense matrix of `f32`.
+///
+/// Row-major is the natural layout for the paper's algorithms: both factor
+/// matrices are partitioned and updated **by rows** (`U_{I_r:}`, `V_{J_r:}`),
+/// and the NLS subproblems are row-independent (Eq. 5).
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl std::fmt::Debug for Mat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Matrix from an owned row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        assert_eq!(data.len(), rows * cols, "buffer length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Matrix from row slices (tests / small literals).
+    pub fn from_rows(rows: &[&[f32]]) -> Self {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    /// Build from a function of (i, j).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m.data[i * cols + j] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Uniform[0, scale) random matrix (NMF factor initialisation).
+    pub fn rand_uniform(rows: usize, cols: usize, scale: f32, rng: &mut Pcg64) -> Self {
+        let mut m = Mat::zeros(rows, cols);
+        for x in m.data.iter_mut() {
+            *x = rng.next_f32() * scale;
+        }
+        m
+    }
+
+    /// N(0, sigma²) random matrix.
+    pub fn rand_gaussian(rows: usize, cols: usize, sigma: f32, rng: Pcg64) -> Self {
+        let mut g = Gaussian::new(rng);
+        let mut m = Mat::zeros(rows, cols);
+        g.fill(&mut m.data, sigma);
+        m
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j]
+    }
+
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        debug_assert!(i < self.rows && j < self.cols);
+        self.data[i * self.cols + j] = v;
+    }
+
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols;
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Copy of rows `r` as a new matrix.
+    pub fn row_block(&self, r: std::ops::Range<usize>) -> Mat {
+        assert!(r.end <= self.rows);
+        Mat {
+            rows: r.len(),
+            cols: self.cols,
+            data: self.data[r.start * self.cols..r.end * self.cols].to_vec(),
+        }
+    }
+
+    /// Copy of columns `c` as a new matrix.
+    pub fn col_block(&self, c: std::ops::Range<usize>) -> Mat {
+        assert!(c.end <= self.cols);
+        let mut out = Mat::zeros(self.rows, c.len());
+        for i in 0..self.rows {
+            let src = &self.data[i * self.cols + c.start..i * self.cols + c.end];
+            out.row_mut(i).copy_from_slice(src);
+        }
+        out
+    }
+
+    /// Gather the given columns into a new matrix (subsampling sketch apply).
+    pub fn gather_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let row = self.row(i);
+            let orow = out.row_mut(i);
+            for (p, &j) in idx.iter().enumerate() {
+                orow[p] = row[j];
+            }
+        }
+        out
+    }
+
+    /// Materialised transpose.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        // blocked transpose for cache friendliness
+        const B: usize = 32;
+        for ib in (0..self.rows).step_by(B) {
+            for jb in (0..self.cols).step_by(B) {
+                for i in ib..(ib + B).min(self.rows) {
+                    for j in jb..(jb + B).min(self.cols) {
+                        out.data[j * self.rows + i] = self.data[i * self.cols + j];
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// `self · other` (m×k · k×n).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        gemm::gemm_nn(self, other, &mut out);
+        out
+    }
+
+    /// `self · otherᵀ` (m×k · n×k ᵀ).
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_nt shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        gemm::gemm_nt(self, other, &mut out);
+        out
+    }
+
+    /// `selfᵀ · other` (k×m ᵀ · m×n).
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "matmul_tn shape mismatch");
+        let mut out = Mat::zeros(self.cols, other.cols);
+        gemm::gemm_tn(self, other, &mut out);
+        out
+    }
+
+    /// Gram matrix `selfᵀ · self` (k×k for an m×k factor).
+    pub fn gram(&self) -> Mat {
+        self.matmul_tn(self)
+    }
+
+    /// Squared Frobenius norm (f64 accumulation).
+    pub fn fro_sq(&self) -> f64 {
+        self.data.iter().map(|&v| (v as f64) * (v as f64)).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn fro(&self) -> f64 {
+        self.fro_sq().sqrt()
+    }
+
+    /// `self ← self + alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Mat) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, &b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self ← alpha * self`.
+    pub fn scale(&mut self, alpha: f32) {
+        for a in self.data.iter_mut() {
+            *a *= alpha;
+        }
+    }
+
+    /// Element-wise max with a scalar, in place (projection onto R₊).
+    pub fn clamp_min(&mut self, floor: f32) {
+        for a in self.data.iter_mut() {
+            if *a < floor {
+                *a = floor;
+            }
+        }
+    }
+
+    /// Element-wise min with a scalar, in place (the paper's Eq. 22 box
+    /// constraint that enforces Assumption 2).
+    pub fn clamp_max(&mut self, ceil: f32) {
+        for a in self.data.iter_mut() {
+            if *a > ceil {
+                *a = ceil;
+            }
+        }
+    }
+
+    /// Squared Frobenius distance to another matrix.
+    pub fn dist_sq(&self, other: &Mat) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        self.data
+            .iter()
+            .zip(other.data.iter())
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum()
+    }
+
+    /// True iff every entry is ≥ 0 (invariant of every NMF iterate).
+    pub fn is_nonnegative(&self) -> bool {
+        self.data.iter().all(|&v| v >= 0.0)
+    }
+
+    /// True iff any entry is NaN or infinite.
+    pub fn has_non_finite(&self) -> bool {
+        self.data.iter().any(|v| !v.is_finite())
+    }
+
+    /// Max absolute entry.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()))
+    }
+
+    /// Vertically stack matrices with equal column counts.
+    pub fn vstack(blocks: &[&Mat]) -> Mat {
+        assert!(!blocks.is_empty());
+        let cols = blocks[0].cols;
+        let rows: usize = blocks.iter().map(|b| b.rows).sum();
+        let mut data = Vec::with_capacity(rows * cols);
+        for b in blocks {
+            assert_eq!(b.cols, cols, "vstack column mismatch");
+            data.extend_from_slice(&b.data);
+        }
+        Mat { rows, cols, data }
+    }
+
+    /// Horizontally stack matrices with equal row counts.
+    pub fn hstack(blocks: &[&Mat]) -> Mat {
+        assert!(!blocks.is_empty());
+        let rows = blocks[0].rows;
+        let cols: usize = blocks.iter().map(|b| b.cols).sum();
+        let mut out = Mat::zeros(rows, cols);
+        for i in 0..rows {
+            let orow = out.row_mut(i);
+            let mut off = 0;
+            for b in blocks {
+                assert_eq!(b.rows, rows, "hstack row mismatch");
+                orow[off..off + b.cols].copy_from_slice(b.row(i));
+                off += b.cols;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn basic_ops() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(a.get(1, 0), 3.0);
+        assert_eq!(a.row(0), &[1.0, 2.0]);
+        let t = a.transpose();
+        assert_eq!(t.get(0, 1), 3.0);
+        assert!((a.fro_sq() - 30.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn matmul_small() {
+        let a = Mat::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        let b = Mat::from_rows(&[&[5.0, 6.0], &[7.0, 8.0]]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[19.0, 22.0, 43.0, 50.0]);
+        // NT and TN agree with explicit transposes
+        let nt = a.matmul_nt(&b);
+        assert_eq!(nt.data(), a.matmul(&b.transpose()).data());
+        let tn = a.matmul_tn(&b);
+        assert_eq!(tn.data(), a.transpose().matmul(&b).data());
+    }
+
+    #[test]
+    fn blocks_and_gather() {
+        let m = Mat::from_fn(6, 5, |i, j| (i * 5 + j) as f32);
+        let rb = m.row_block(2..4);
+        assert_eq!(rb.rows(), 2);
+        assert_eq!(rb.get(0, 0), 10.0);
+        let cb = m.col_block(1..3);
+        assert_eq!(cb.cols(), 2);
+        assert_eq!(cb.get(0, 0), 1.0);
+        let g = m.gather_cols(&[4, 0]);
+        assert_eq!(g.get(1, 0), 9.0);
+        assert_eq!(g.get(1, 1), 5.0);
+    }
+
+    #[test]
+    fn stack_roundtrip() {
+        let a = Mat::from_rows(&[&[1.0, 2.0]]);
+        let b = Mat::from_rows(&[&[3.0, 4.0]]);
+        let v = Mat::vstack(&[&a, &b]);
+        assert_eq!(v.rows(), 2);
+        assert_eq!(v.get(1, 1), 4.0);
+        let h = Mat::hstack(&[&a, &b]);
+        assert_eq!(h.cols(), 4);
+        assert_eq!(h.get(0, 2), 3.0);
+    }
+
+    #[test]
+    fn clamp_projection() {
+        let mut m = Mat::from_rows(&[&[-1.0, 0.5], &[2.0, -0.1]]);
+        m.clamp_min(0.0);
+        assert!(m.is_nonnegative());
+        assert_eq!(m.get(0, 0), 0.0);
+        assert_eq!(m.get(1, 0), 2.0);
+    }
+
+    #[test]
+    fn gram_is_symmetric() {
+        let mut rng = Pcg64::new(5, 0);
+        let a = Mat::rand_uniform(20, 7, 1.0, &mut rng);
+        let g = a.gram();
+        for i in 0..7 {
+            for j in 0..7 {
+                assert!((g.get(i, j) - g.get(j, i)).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,210 @@
+//! Cache-blocked, multi-threaded GEMM kernels (f32, row-major).
+//!
+//! Three variants cover every product in the NMF algorithms:
+//!
+//! * [`gemm_nn`]  — `C = A·B`        (e.g. `U · (VᵀS)` reconstruction)
+//! * [`gemm_nt`]  — `C = A·Bᵀ`       (e.g. `A_r Bᵀ`, `B Bᵀ` gram)
+//! * [`gemm_tn`]  — `C = Aᵀ·B`       (e.g. `V_{J_r}ᵀ S_{J_r}` sketch summand)
+//!
+//! Strategy: `nn`/`nt` parallelise over row panels of `C` (disjoint `&mut`
+//! chunks), with k-blocking so the active B panel stays in L1/L2; `tn`
+//! accumulates thread-local partials over row ranges of A (its output is
+//! small — k×d or k×k — so the final reduction is cheap).
+
+use super::Mat;
+use crate::parallel;
+
+/// Rows of C handled per parallel task.
+const ROW_CHUNK: usize = 64;
+/// k-dimension blocking factor.
+const KBLOCK: usize = 256;
+
+/// `out = a · b` where `a: m×k`, `b: k×n`, `out: m×n` (overwritten).
+pub fn gemm_nn(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), k);
+    assert_eq!((out.rows(), out.cols()), (m, n));
+    let a_data = a.data();
+    let b_data = b.data();
+    parallel::par_chunks_mut(out.data_mut(), ROW_CHUNK * n, |chunk_idx, c_chunk| {
+        c_chunk.fill(0.0);
+        let i0 = chunk_idx * ROW_CHUNK;
+        let rows_here = c_chunk.len() / n;
+        for kb in (0..k).step_by(KBLOCK) {
+            let kend = (kb + KBLOCK).min(k);
+            for li in 0..rows_here {
+                let i = i0 + li;
+                let a_row = &a_data[i * k..(i + 1) * k];
+                let c_row = &mut c_chunk[li * n..(li + 1) * n];
+                for kk in kb..kend {
+                    let aik = a_row[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let b_row = &b_data[kk * n..(kk + 1) * n];
+                    // i-k-j: unit-stride axpy over the C row.
+                    for (c, &bv) in c_row.iter_mut().zip(b_row.iter()) {
+                        *c += aik * bv;
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// `out = a · bᵀ` where `a: m×k`, `b: n×k`, `out: m×n` (overwritten).
+///
+/// §Perf: implemented as `transpose(b)` + [`gemm_nn`]. The dot-product
+/// formulation ran at ~4.7 GFLOP/s (strict-FP scalar reduction defeats
+/// auto-vectorisation); the i-k-j axpy kernel of `gemm_nn` runs at
+/// ~17 GFLOP/s, and in every hot call site (`normal_from`: `A·Bᵀ`, `B·Bᵀ`)
+/// the transposed operand is the small `k×d` factor, so the O(nk)
+/// transpose is noise. Measured 3.4× end-to-end on the microbench
+/// (EXPERIMENTS.md §Perf).
+pub fn gemm_nt(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.rows();
+    assert_eq!(b.cols(), k);
+    assert_eq!((out.rows(), out.cols()), (m, n));
+    if n <= 4 {
+        // tiny output width: dot products beat transpose+axpy
+        let a_data = a.data();
+        let b_data = b.data();
+        parallel::par_chunks_mut(out.data_mut(), ROW_CHUNK * n, |chunk_idx, c_chunk| {
+            let i0 = chunk_idx * ROW_CHUNK;
+            let rows_here = c_chunk.len() / n;
+            for li in 0..rows_here {
+                let i = i0 + li;
+                let a_row = &a_data[i * k..(i + 1) * k];
+                let c_row = &mut c_chunk[li * n..(li + 1) * n];
+                for (j, c) in c_row.iter_mut().enumerate() {
+                    *c = dot(a_row, &b_data[j * k..(j + 1) * k]);
+                }
+            }
+        });
+        return;
+    }
+    let bt = b.transpose(); // k×n
+    gemm_nn(a, &bt, out);
+}
+
+/// `out = aᵀ · b` where `a: m×k`, `b: m×n`, `out: k×n` (overwritten).
+pub fn gemm_tn(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (m, k) = (a.rows(), a.cols());
+    let n = b.cols();
+    assert_eq!(b.rows(), m);
+    assert_eq!((out.rows(), out.cols()), (k, n));
+    let a_data = a.data();
+    let b_data = b.data();
+    let nparts = parallel::num_threads().min(m.div_ceil(ROW_CHUNK)).max(1);
+    // Thread-local partial k×n accumulators over disjoint row ranges of A/B.
+    let partials = parallel::par_map(nparts, |p| {
+        let ranges = parallel::split_ranges(m, nparts);
+        let r = ranges[p].clone();
+        let mut part = vec![0.0f32; k * n];
+        for row in r {
+            let a_row = &a_data[row * k..(row + 1) * k];
+            let b_row = &b_data[row * n..(row + 1) * n];
+            for (i, &av) in a_row.iter().enumerate() {
+                if av == 0.0 {
+                    continue;
+                }
+                let c_row = &mut part[i * n..(i + 1) * n];
+                for (c, &bv) in c_row.iter_mut().zip(b_row.iter()) {
+                    *c += av * bv;
+                }
+            }
+        }
+        part
+    });
+    let out_data = out.data_mut();
+    out_data.fill(0.0);
+    for part in partials {
+        for (o, p) in out_data.iter_mut().zip(part.iter()) {
+            *o += p;
+        }
+    }
+}
+
+/// Unrolled dot product (the `nt` microkernel).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let chunks = a.len() / 8;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 8;
+        s0 += a[i] * b[i] + a[i + 4] * b[i + 4];
+        s1 += a[i + 1] * b[i + 1] + a[i + 5] * b[i + 5];
+        s2 += a[i + 2] * b[i + 2] + a[i + 6] * b[i + 6];
+        s3 += a[i + 3] * b[i + 3] + a[i + 7] * b[i + 7];
+    }
+    let mut tail = 0.0f32;
+    for i in chunks * 8..a.len() {
+        tail += a[i] * b[i];
+    }
+    s0 + s1 + s2 + s3 + tail
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn naive_nn(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0f64;
+                for kk in 0..a.cols() {
+                    s += (a.get(i, kk) as f64) * (b.get(kk, j) as f64);
+                }
+                c.set(i, j, s as f32);
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!((a.rows(), a.cols()), (b.rows(), b.cols()));
+        for (x, y) in a.data().iter().zip(b.data().iter()) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs().max(y.abs())), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gemm_matches_naive() {
+        let mut rng = Pcg64::new(17, 0);
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (64, 33, 65), (130, 17, 129)] {
+            let a = Mat::rand_uniform(m, k, 1.0, &mut rng);
+            let b = Mat::rand_uniform(k, n, 1.0, &mut rng);
+            let expect = naive_nn(&a, &b);
+
+            let mut c = Mat::zeros(m, n);
+            gemm_nn(&a, &b, &mut c);
+            assert_close(&c, &expect, 1e-4);
+
+            let bt = b.transpose();
+            let mut c2 = Mat::zeros(m, n);
+            gemm_nt(&a, &bt, &mut c2);
+            assert_close(&c2, &expect, 1e-4);
+
+            let at = a.transpose();
+            let mut c3 = Mat::zeros(m, n);
+            gemm_tn(&at, &b, &mut c3);
+            assert_close(&c3, &expect, 1e-4);
+        }
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let mut rng = Pcg64::new(23, 0);
+        for len in [0usize, 1, 7, 8, 9, 31, 100] {
+            let a: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+            let b: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+            let naive: f32 = a.iter().zip(b.iter()).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-4);
+        }
+    }
+}

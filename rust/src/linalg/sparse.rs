@@ -1,0 +1,386 @@
+//! CSR sparse matrix and the SpMM variants the NMF algorithms need.
+//!
+//! The paper evaluates on sparse text/graph matrices (RCV1 99.84 % sparse,
+//! DBLP 99.998 % sparse); the subsampling sketch "can preserve the sparsity
+//! of the original matrix" (Sec. 3.4), so all sketch/loss paths here operate
+//! on nonzeros only and never densify `M`.
+
+use super::{gemm, Mat};
+use crate::parallel;
+
+/// Compressed sparse row matrix of f32.
+#[derive(Clone, PartialEq)]
+pub struct Csr {
+    rows: usize,
+    cols: usize,
+    /// Row pointers, length `rows + 1`.
+    indptr: Vec<usize>,
+    /// Column indices per nonzero (sorted within each row).
+    indices: Vec<usize>,
+    /// Values per nonzero.
+    values: Vec<f32>,
+}
+
+impl std::fmt::Debug for Csr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Csr({}x{}, nnz={})", self.rows, self.cols, self.nnz())
+    }
+}
+
+impl Csr {
+    /// Build from COO triplets (row, col, value). Duplicates are summed.
+    pub fn from_triplets(rows: usize, cols: usize, mut t: Vec<(usize, usize, f32)>) -> Self {
+        t.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        let mut indptr = vec![0usize; rows + 1];
+        let mut indices = Vec::with_capacity(t.len());
+        let mut values: Vec<f32> = Vec::with_capacity(t.len());
+        let mut last: Option<(usize, usize)> = None;
+        for (r, c, v) in t {
+            assert!(r < rows && c < cols, "triplet out of bounds");
+            if last == Some((r, c)) {
+                *values.last_mut().unwrap() += v; // merge duplicates
+            } else {
+                indices.push(c);
+                values.push(v);
+                indptr[r + 1] += 1; // per-row count for now
+                last = Some((r, c));
+            }
+        }
+        for r in 1..=rows {
+            indptr[r] += indptr[r - 1]; // counts → cumulative offsets
+        }
+        Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Densify → CSR, dropping entries with |v| ≤ `tol`.
+    pub fn from_dense(m: &Mat, tol: f32) -> Self {
+        let mut indptr = vec![0usize; m.rows() + 1];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..m.rows() {
+            for (j, &v) in m.row(i).iter().enumerate() {
+                if v.abs() > tol {
+                    indices.push(j);
+                    values.push(v);
+                }
+            }
+            indptr[i + 1] = indices.len();
+        }
+        Csr { rows: m.rows(), cols: m.cols(), indptr, indices, values }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn values(&self) -> &[f32] {
+        &self.values
+    }
+
+    pub fn indptr(&self) -> &[usize] {
+        &self.indptr
+    }
+
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// Density in [0, 1].
+    pub fn density(&self) -> f64 {
+        self.nnz() as f64 / (self.rows as f64 * self.cols as f64)
+    }
+
+    /// Iterator over `(col, value)` of row `i`.
+    pub fn row_iter(&self, i: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let r = self.indptr[i]..self.indptr[i + 1];
+        self.indices[r.clone()].iter().copied().zip(self.values[r].iter().copied())
+    }
+
+    /// Row block as a new CSR.
+    pub fn row_block(&self, r: std::ops::Range<usize>) -> Csr {
+        assert!(r.end <= self.rows);
+        let lo = self.indptr[r.start];
+        let hi = self.indptr[r.end];
+        let indptr = self.indptr[r.start..=r.end].iter().map(|&p| p - lo).collect();
+        Csr {
+            rows: r.len(),
+            cols: self.cols,
+            indptr,
+            indices: self.indices[lo..hi].to_vec(),
+            values: self.values[lo..hi].to_vec(),
+        }
+    }
+
+    /// Column block as a new CSR.
+    pub fn col_block(&self, c: std::ops::Range<usize>) -> Csr {
+        assert!(c.end <= self.cols);
+        let mut indptr = vec![0usize; self.rows + 1];
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        for i in 0..self.rows {
+            for (j, v) in self.row_iter(i) {
+                if c.contains(&j) {
+                    indices.push(j - c.start);
+                    values.push(v);
+                }
+            }
+            indptr[i + 1] = indices.len();
+        }
+        Csr { rows: self.rows, cols: c.len(), indptr, indices, values }
+    }
+
+    /// Gather the given columns into a **dense** matrix (subsampling sketch
+    /// `M_{I_r:} Sᵗ`: output is |I_r|×d with d small, so dense is right).
+    pub fn gather_cols_dense(&self, idx: &[usize]) -> Mat {
+        // invert the index list: col → position(s). d ≪ n so a map over all
+        // columns is fine and keeps the nonzero scan O(nnz).
+        let mut pos = vec![usize::MAX; self.cols];
+        for (p, &j) in idx.iter().enumerate() {
+            debug_assert!(j < self.cols);
+            pos[j] = p;
+        }
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for i in 0..self.rows {
+            let orow = out.row_mut(i);
+            for (j, v) in self.row_iter(i) {
+                let p = pos[j];
+                if p != usize::MAX {
+                    orow[p] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Materialised transpose (CSC view as CSR).
+    pub fn transpose(&self) -> Csr {
+        let mut counts = vec![0usize; self.cols + 1];
+        for &j in &self.indices {
+            counts[j + 1] += 1;
+        }
+        for j in 1..=self.cols {
+            counts[j] += counts[j - 1];
+        }
+        let indptr = counts.clone();
+        let mut cursor = counts;
+        let mut indices = vec![0usize; self.nnz()];
+        let mut values = vec![0f32; self.nnz()];
+        for i in 0..self.rows {
+            for (j, v) in self.row_iter(i) {
+                let p = cursor[j];
+                indices[p] = i;
+                values[p] = v;
+                cursor[j] += 1;
+            }
+        }
+        Csr { rows: self.cols, cols: self.rows, indptr, indices, values }
+    }
+
+    /// Dense copy (tests only).
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for i in 0..self.rows {
+            let orow = out.row_mut(i);
+            for (j, v) in self.row_iter(i) {
+                orow[j] += v;
+            }
+        }
+        out
+    }
+
+    /// `out = self · dense` (m×n · n×k → m×k), parallel over row ranges.
+    pub fn spmm(&self, dense: &Mat) -> Mat {
+        assert_eq!(self.cols, dense.rows(), "spmm shape mismatch");
+        let k = dense.cols();
+        let mut out = Mat::zeros(self.rows, k);
+        let indptr = &self.indptr;
+        let indices = &self.indices;
+        let values = &self.values;
+        let d_data = dense.data();
+        parallel::par_chunks_mut(out.data_mut(), 64 * k, |chunk_idx, c_chunk| {
+            let i0 = chunk_idx * 64;
+            let rows_here = c_chunk.len() / k;
+            for li in 0..rows_here {
+                let i = i0 + li;
+                let c_row = &mut c_chunk[li * k..(li + 1) * k];
+                for p in indptr[i]..indptr[i + 1] {
+                    let (j, v) = (indices[p], values[p]);
+                    let d_row = &d_data[j * k..(j + 1) * k];
+                    for (c, &dv) in c_row.iter_mut().zip(d_row.iter()) {
+                        *c += v * dv;
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// `out = selfᵀ · dense` (n×m ᵀ·… wait: self m×n, dense m×k → n×k),
+    /// computed without materialising the transpose, via thread-local
+    /// accumulators over row ranges.
+    pub fn spmm_tn(&self, dense: &Mat) -> Mat {
+        assert_eq!(self.rows, dense.rows(), "spmm_tn shape mismatch");
+        let k = dense.cols();
+        let n = self.cols;
+        let nparts = parallel::num_threads().min(self.rows.div_ceil(256)).max(1);
+        let d_data = dense.data();
+        let partials = parallel::par_map(nparts, |p| {
+            let ranges = parallel::split_ranges(self.rows, nparts);
+            let mut part = vec![0.0f32; n * k];
+            for i in ranges[p].clone() {
+                let d_row = &d_data[i * k..(i + 1) * k];
+                for (j, v) in self.row_iter(i) {
+                    let c_row = &mut part[j * k..(j + 1) * k];
+                    for (c, &dv) in c_row.iter_mut().zip(d_row.iter()) {
+                        *c += v * dv;
+                    }
+                }
+            }
+            part
+        });
+        let mut out = Mat::zeros(n, k);
+        let out_data = out.data_mut();
+        for part in partials {
+            for (o, pv) in out_data.iter_mut().zip(part.iter()) {
+                *o += pv;
+            }
+        }
+        out
+    }
+
+    /// `⟨M, U·Vᵀ⟩` over the nonzeros of `M` only — the key primitive for the
+    /// sparse-efficient Frobenius loss:
+    /// `‖M−UVᵀ‖² = ‖M‖² − 2⟨M,UVᵀ⟩ + ⟨UᵀU, VᵀV⟩`.
+    pub fn dot_with_uv(&self, u: &Mat, v: &Mat) -> f64 {
+        assert_eq!(u.rows(), self.rows);
+        assert_eq!(v.rows(), self.cols);
+        assert_eq!(u.cols(), v.cols());
+        let k = u.cols();
+        let nparts = parallel::num_threads().min(self.rows.div_ceil(512)).max(1);
+        let sums = parallel::par_map(nparts, |p| {
+            let ranges = parallel::split_ranges(self.rows, nparts);
+            let mut s = 0.0f64;
+            for i in ranges[p].clone() {
+                let u_row = &u.data()[i * k..(i + 1) * k];
+                for (j, mv) in self.row_iter(i) {
+                    let v_row = &v.data()[j * k..(j + 1) * k];
+                    s += mv as f64 * gemm::dot(u_row, v_row) as f64;
+                }
+            }
+            s
+        });
+        sums.into_iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_sparse(rows: usize, cols: usize, nnz: usize, seed: u64) -> Csr {
+        let mut rng = Pcg64::new(seed as u128, 0);
+        let t: Vec<(usize, usize, f32)> = (0..nnz)
+            .map(|_| (rng.below(rows), rng.below(cols), rng.next_f32() + 0.1))
+            .collect();
+        Csr::from_triplets(rows, cols, t)
+    }
+
+    #[test]
+    fn triplets_roundtrip() {
+        let c = Csr::from_triplets(3, 4, vec![(0, 1, 2.0), (2, 3, 4.0), (0, 1, 1.0), (1, 0, 5.0)]);
+        let d = c.to_dense();
+        assert_eq!(d.get(0, 1), 3.0, "duplicates summed");
+        assert_eq!(d.get(2, 3), 4.0);
+        assert_eq!(d.get(1, 0), 5.0);
+        assert_eq!(c.nnz(), 3);
+    }
+
+    #[test]
+    fn dense_roundtrip() {
+        let m = Mat::from_rows(&[&[0.0, 1.0, 0.0], &[2.0, 0.0, 3.0]]);
+        let c = Csr::from_dense(&m, 0.0);
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.to_dense().data(), m.data());
+    }
+
+    #[test]
+    fn transpose_correct() {
+        let c = random_sparse(13, 29, 60, 3);
+        let t = c.transpose();
+        assert_eq!(t.rows(), 29);
+        let d = c.to_dense();
+        let td = t.to_dense();
+        for i in 0..13 {
+            for j in 0..29 {
+                assert_eq!(d.get(i, j), td.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn spmm_matches_dense() {
+        let mut rng = Pcg64::new(9, 0);
+        let c = random_sparse(40, 25, 120, 7);
+        let x = Mat::rand_uniform(25, 6, 1.0, &mut rng);
+        let got = c.spmm(&x);
+        let expect = c.to_dense().matmul(&x);
+        for (a, b) in got.data().iter().zip(expect.data().iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn spmm_tn_matches_dense() {
+        let mut rng = Pcg64::new(10, 0);
+        let c = random_sparse(40, 25, 120, 8);
+        let x = Mat::rand_uniform(40, 6, 1.0, &mut rng);
+        let got = c.spmm_tn(&x);
+        let expect = c.to_dense().transpose().matmul(&x);
+        for (a, b) in got.data().iter().zip(expect.data().iter()) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn gather_cols_matches_dense() {
+        let c = random_sparse(20, 30, 100, 11);
+        let idx = vec![3usize, 29, 0, 7];
+        let got = c.gather_cols_dense(&idx);
+        let expect = c.to_dense().gather_cols(&idx);
+        assert_eq!(got.data(), expect.data());
+    }
+
+    #[test]
+    fn blocks_match_dense() {
+        let c = random_sparse(20, 30, 100, 12);
+        let d = c.to_dense();
+        assert_eq!(c.row_block(5..12).to_dense().data(), d.row_block(5..12).data());
+        assert_eq!(c.col_block(10..25).to_dense().data(), d.col_block(10..25).data());
+    }
+
+    #[test]
+    fn dot_with_uv_matches_dense() {
+        let mut rng = Pcg64::new(13, 0);
+        let c = random_sparse(15, 12, 50, 13);
+        let u = Mat::rand_uniform(15, 4, 1.0, &mut rng);
+        let v = Mat::rand_uniform(12, 4, 1.0, &mut rng);
+        let uvt = u.matmul_nt(&v);
+        let mut expect = 0.0f64;
+        let d = c.to_dense();
+        for i in 0..15 {
+            for j in 0..12 {
+                expect += d.get(i, j) as f64 * uvt.get(i, j) as f64;
+            }
+        }
+        assert!((c.dot_with_uv(&u, &v) - expect).abs() < 1e-3);
+    }
+}

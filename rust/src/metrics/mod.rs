@@ -1,0 +1,128 @@
+//! Metrics output: minimal JSON emitter, CSV trace writer, and the bench
+//! report table printer (no serde available offline — hand-rolled).
+
+mod json;
+
+pub use json::JsonValue;
+
+use crate::algos::TracePoint;
+use crate::dist::CommStats;
+use std::io::Write;
+use std::path::Path;
+
+/// A named error-over-time series (one algorithm on one dataset).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub label: String,
+    pub points: Vec<TracePoint>,
+}
+
+impl Series {
+    pub fn new(label: impl Into<String>, points: Vec<TracePoint>) -> Self {
+        Series { label: label.into(), points }
+    }
+}
+
+/// Write one or more series as CSV: `label,iteration,sim_time,rel_error`.
+pub fn write_series_csv(path: &Path, series: &[Series]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "label,iteration,sim_time_s,rel_error")?;
+    for s in series {
+        for p in &s.points {
+            writeln!(f, "{},{},{:.6e},{:.6e}", s.label, p.iteration, p.sim_time, p.rel_error)?;
+        }
+    }
+    Ok(())
+}
+
+/// Write a generic CSV table.
+pub fn write_table_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut f = std::fs::File::create(path)?;
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Pretty-print series to stdout the way the paper's figures read:
+/// one block per series, error at a few sampled times.
+pub fn print_series(title: &str, series: &[Series]) {
+    println!("== {title} ==");
+    for s in series {
+        print!("  {:<16}", s.label);
+        let pts = &s.points;
+        let n = pts.len();
+        let picks: Vec<usize> = if n <= 6 {
+            (0..n).collect()
+        } else {
+            (0..6).map(|i| i * (n - 1) / 5).collect()
+        };
+        for &i in &picks {
+            print!(" t={:.2}s e={:.4}", pts[i].sim_time, pts[i].rel_error);
+        }
+        println!();
+    }
+}
+
+/// Aggregate per-node statistics into a printable summary row.
+pub fn stats_summary(stats: &[CommStats]) -> String {
+    let total_sent: usize = stats.iter().map(|s| s.bytes_sent).sum();
+    let max_stall = stats.iter().map(|s| s.stall_time).fold(0.0, f64::max);
+    let total_compute: f64 = stats.iter().map(|s| s.compute_time).sum();
+    format!(
+        "sent={:.2}MB stall_max={:.3}s compute_total={:.3}s",
+        total_sent as f64 / 1e6,
+        max_stall,
+        total_compute
+    )
+}
+
+/// Convert a trace to a JSON value (for `results/*.json` reports).
+pub fn trace_to_json(trace: &[TracePoint]) -> JsonValue {
+    JsonValue::Array(
+        trace
+            .iter()
+            .map(|p| {
+                JsonValue::Object(vec![
+                    ("iteration".into(), JsonValue::Number(p.iteration as f64)),
+                    ("sim_time".into(), JsonValue::Number(p.sim_time)),
+                    ("rel_error".into(), JsonValue::Number(p.rel_error)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("dsanls_test_metrics");
+        let path = dir.join("series.csv");
+        let s = Series::new(
+            "test",
+            vec![TracePoint { iteration: 0, sim_time: 0.0, rel_error: 1.0 }],
+        );
+        write_series_csv(&path, &[s]).unwrap();
+        let content = std::fs::read_to_string(&path).unwrap();
+        assert!(content.starts_with("label,iteration"));
+        assert!(content.contains("test,0"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn trace_json_shape() {
+        let t = vec![TracePoint { iteration: 1, sim_time: 0.5, rel_error: 0.25 }];
+        let j = trace_to_json(&t).to_string();
+        assert!(j.contains("\"rel_error\":0.25"), "{j}");
+    }
+}

@@ -1,0 +1,101 @@
+//! Relative-error evaluation `‖M − U·Vᵀ‖_F / ‖M‖_F` — the paper's error
+//! measure (Sec. 5.1), computed without ever materialising the m×n
+//! reconstruction:
+//!
+//! `‖M − UVᵀ‖² = ‖M‖² − 2·⟨M, UVᵀ⟩ + ⟨UᵀU, VᵀV⟩`
+//!
+//! * `⟨M, UVᵀ⟩` — dense: `⟨M·V, U⟩` (one m×k GEMM); sparse: a scan over
+//!   nonzeros only ([`crate::linalg::Csr::dot_with_uv`]).
+//! * `⟨UᵀU, VᵀV⟩` — two k×k grams and a k² dot.
+//!
+//! Cost: `O(nnz·k + (m+n)k²)` — the same trick MPI-FAUN uses, so error
+//! evaluation never dominates the benchmarks.
+
+use crate::linalg::{Mat, Matrix};
+
+/// `(‖M‖²_F, ‖M − UVᵀ‖²_F)` — the pieces of the relative error.
+pub fn rel_error_parts(m: &Matrix, u: &Mat, v: &Mat) -> (f64, f64) {
+    assert_eq!(u.rows(), m.rows(), "U rows != M rows");
+    assert_eq!(v.rows(), m.cols(), "V rows != M cols");
+    assert_eq!(u.cols(), v.cols(), "rank mismatch");
+    let m_sq = m.fro_sq();
+
+    // ⟨M, UVᵀ⟩
+    let cross = match m {
+        Matrix::Dense(md) => {
+            let mv = md.matmul(v); // m×k
+            dot_flat(mv.data(), u.data())
+        }
+        Matrix::Sparse(ms) => ms.dot_with_uv(u, v),
+    };
+
+    // ⟨UᵀU, VᵀV⟩
+    let gu = u.gram();
+    let gv = v.gram();
+    let rec_sq = dot_flat(gu.data(), gv.data());
+
+    let resid = m_sq - 2.0 * cross + rec_sq;
+    // Preserve NaN (diverged factors must surface as NaN, not silently
+    // clamp to 0 — f64::max would swallow it); only clamp real round-off.
+    let resid = if resid.is_finite() { resid.max(0.0) } else { f64::NAN };
+    (m_sq, resid)
+}
+
+/// Relative error `‖M − UVᵀ‖_F / ‖M‖_F`.
+pub fn rel_error(m: &Matrix, u: &Mat, v: &Mat) -> f64 {
+    let (m_sq, resid) = rel_error_parts(m, u, v);
+    if m_sq <= 0.0 {
+        return 0.0;
+    }
+    (resid / m_sq).sqrt()
+}
+
+fn dot_flat(a: &[f32], b: &[f32]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b.iter()).map(|(&x, &y)| x as f64 * y as f64).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Csr;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn matches_explicit_reconstruction_dense() {
+        let mut rng = Pcg64::new(31, 0);
+        let m = Mat::rand_uniform(12, 9, 1.0, &mut rng);
+        let u = Mat::rand_uniform(12, 4, 1.0, &mut rng);
+        let v = Mat::rand_uniform(9, 4, 1.0, &mut rng);
+        let explicit = (m.dist_sq(&u.matmul_nt(&v)) / m.fro_sq()).sqrt();
+        let fast = rel_error(&Matrix::Dense(m), &u, &v);
+        assert!((explicit - fast).abs() < 1e-4, "{explicit} vs {fast}");
+    }
+
+    #[test]
+    fn matches_explicit_reconstruction_sparse() {
+        let mut rng = Pcg64::new(32, 0);
+        let dense = Mat::from_fn(15, 11, |i, j| {
+            if (i * 11 + j) % 3 == 0 {
+                ((i + 2 * j) as f32).cos().abs()
+            } else {
+                0.0
+            }
+        });
+        let u = Mat::rand_uniform(15, 3, 1.0, &mut rng);
+        let v = Mat::rand_uniform(11, 3, 1.0, &mut rng);
+        let explicit = (dense.dist_sq(&u.matmul_nt(&v)) / dense.fro_sq()).sqrt();
+        let sparse = Matrix::Sparse(Csr::from_dense(&dense, 0.0));
+        let fast = rel_error(&sparse, &u, &v);
+        assert!((explicit - fast).abs() < 1e-4, "{explicit} vs {fast}");
+    }
+
+    #[test]
+    fn zero_when_exact() {
+        let mut rng = Pcg64::new(33, 0);
+        let u = Mat::rand_uniform(10, 3, 1.0, &mut rng);
+        let v = Mat::rand_uniform(8, 3, 1.0, &mut rng);
+        let m = Matrix::Dense(u.matmul_nt(&v));
+        assert!(rel_error(&m, &u, &v) < 1e-3);
+    }
+}

@@ -1,0 +1,49 @@
+//! Centralized NMF: the two-block coordinate descent framework (Alg. 1),
+//! its sketched variant SANLS (Sec. 3.2), loss evaluation and factor
+//! initialisation. The distributed algorithms in [`crate::algos`] and
+//! [`crate::secure`] reuse these pieces per node.
+
+mod anls;
+mod init;
+mod loss;
+
+pub use anls::{Anls, AnlsOptions, Sanls, SanlsOptions};
+pub use init::{init_factors, init_scale};
+pub use loss::{rel_error, rel_error_parts};
+
+use crate::linalg::Mat;
+
+/// An NMF factorisation result `M ≈ U·Vᵀ` with its convergence trace.
+#[derive(Debug, Clone)]
+pub struct Factorization {
+    pub u: Mat,
+    pub v: Mat,
+    /// (iteration, elapsed seconds, relative error) samples.
+    pub trace: Vec<(usize, f64, f64)>,
+}
+
+impl Factorization {
+    pub fn final_error(&self) -> f64 {
+        self.trace.last().map(|&(_, _, e)| e).unwrap_or(f64::NAN)
+    }
+}
+
+/// Proximal weight schedule `μ_t = α + β·t` (paper Sec. 5.1, citing [50]).
+#[derive(Debug, Clone, Copy)]
+pub struct MuSchedule {
+    pub alpha: f32,
+    pub beta: f32,
+}
+
+impl Default for MuSchedule {
+    fn default() -> Self {
+        // the paper grid-searches α, β ∈ {0.1, 1, 10}; this is the midpoint
+        MuSchedule { alpha: 1.0, beta: 1.0 }
+    }
+}
+
+impl MuSchedule {
+    pub fn mu(&self, t: usize) -> f32 {
+        self.alpha + self.beta * t as f32
+    }
+}

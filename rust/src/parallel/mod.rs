@@ -1,0 +1,200 @@
+//! Intra-node parallelism: a scoped fork-join helper over `std::thread`.
+//!
+//! The environment vendors neither `rayon` nor `tokio`, so the few places
+//! that want intra-node parallel loops (blocked GEMM row panels, SpMM row
+//! ranges) use [`par_chunks_mut`] / [`par_ranges`] built on
+//! `std::thread::scope`. Threads are spawned per call; for the matrix sizes
+//! in the benchmarks the spawn cost (~10µs) is far below the work per panel,
+//! and keeping it dependency-free beats a handwritten work-stealing pool.
+//!
+//! Cluster-level parallelism (one thread per simulated node) lives in
+//! [`crate::dist`], not here.
+
+thread_local! {
+    /// Per-thread override of the worker count. The simulated cluster sets
+    /// this inside each node thread so that N node threads × inner GEMM
+    /// threads never oversubscribe the machine (§Perf: the nested spawn
+    /// storm inflated per-node wallclock ~5× on 10-node runs).
+    static LOCAL_THREADS: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
+}
+
+/// Override the data-parallel worker count for the **current thread**
+/// (`None` restores the global default). Used by [`crate::dist::run_cluster`].
+pub fn set_local_threads(n: Option<usize>) {
+    LOCAL_THREADS.with(|c| c.set(n.map(|v| v.max(1))));
+}
+
+/// Number of worker threads to use for data-parallel loops.
+///
+/// Per-thread override first (see [`set_local_threads`]), then
+/// `DSANLS_THREADS`, then the machine's available parallelism capped at 8
+/// (beyond that the memory-bound kernels stop scaling).
+pub fn num_threads() -> usize {
+    if let Some(n) = LOCAL_THREADS.with(|c| c.get()) {
+        return n;
+    }
+    static N: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
+        if let Ok(s) = std::env::var("DSANLS_THREADS") {
+            if let Ok(n) = s.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(4)
+            .min(8)
+    });
+    *N
+}
+
+/// Run `f(chunk_index, chunk)` over disjoint mutable chunks of `data`,
+/// `chunk_len` elements each (last chunk may be short), on up to
+/// [`num_threads`] threads.
+pub fn par_chunks_mut<T: Send, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    assert!(chunk_len > 0);
+    let n_chunks = data.len().div_ceil(chunk_len.max(1));
+    if n_chunks <= 1 || num_threads() == 1 {
+        for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    let next = std::sync::atomic::AtomicUsize::new(0);
+    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
+    // Hand each worker an index into the chunk list via an atomic cursor.
+    let chunks = std::sync::Mutex::new(
+        chunks
+            .into_iter()
+            .map(Some)
+            .collect::<Vec<Option<(usize, &mut [T])>>>(),
+    );
+    let workers = num_threads().min(n_chunks);
+    std::thread::scope(|s| {
+        for _ in 0..workers {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                let item = {
+                    let mut guard = chunks.lock().unwrap();
+                    if i >= guard.len() {
+                        return;
+                    }
+                    guard[i].take()
+                };
+                if let Some((idx, chunk)) = item {
+                    f(idx, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Split `0..n` into `parts` near-equal contiguous ranges.
+pub fn split_ranges(n: usize, parts: usize) -> Vec<std::ops::Range<usize>> {
+    let parts = parts.max(1);
+    let base = n / parts;
+    let rem = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut start = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < rem);
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Run `f(range)` for each of `parts` near-equal subranges of `0..n` in
+/// parallel. `f` must only touch data it can reach through shared refs —
+/// use this for read-only sharding or interior-mutability-free reductions.
+pub fn par_ranges<F>(n: usize, parts: usize, f: F)
+where
+    F: Fn(std::ops::Range<usize>) + Sync,
+{
+    let ranges = split_ranges(n, parts.min(num_threads()).max(1));
+    if ranges.len() <= 1 {
+        for r in ranges {
+            f(r);
+        }
+        return;
+    }
+    std::thread::scope(|s| {
+        for r in ranges {
+            let f = &f;
+            s.spawn(move || f(r));
+        }
+    });
+}
+
+/// Parallel map over `0..parts`, collecting results in order.
+pub fn par_map<T: Send, F>(parts: usize, f: F) -> Vec<T>
+where
+    F: Fn(usize) -> T + Sync,
+{
+    if parts <= 1 {
+        return (0..parts).map(&f).collect();
+    }
+    let mut out: Vec<Option<T>> = (0..parts).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (i, slot) in out.iter_mut().enumerate() {
+            let f = &f;
+            s.spawn(move || *slot = Some(f(i)));
+        }
+    });
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_ranges_covers() {
+        for n in [0usize, 1, 7, 100, 101] {
+            for parts in [1usize, 2, 3, 8] {
+                let rs = split_ranges(n, parts);
+                assert_eq!(rs.len(), parts);
+                let total: usize = rs.iter().map(|r| r.len()).sum();
+                assert_eq!(total, n);
+                // contiguous and ordered
+                let mut prev = 0;
+                for r in rs {
+                    assert_eq!(r.start, prev);
+                    prev = r.end;
+                }
+                assert_eq!(prev, n);
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_touches_all() {
+        let mut v = vec![0u32; 1000];
+        par_chunks_mut(&mut v, 37, |i, chunk| {
+            for x in chunk.iter_mut() {
+                *x = i as u32 + 1;
+            }
+        });
+        assert!(v.iter().all(|&x| x > 0));
+        // chunk 0 occupies first 37 slots
+        assert!(v[..37].iter().all(|&x| x == 1));
+    }
+
+    #[test]
+    fn par_map_ordered() {
+        let out = par_map(16, |i| i * i);
+        assert_eq!(out, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn par_ranges_sums() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let total = AtomicUsize::new(0);
+        par_ranges(1000, 8, |r| {
+            total.fetch_add(r.len(), Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+}

@@ -1,0 +1,148 @@
+//! PCG64 (XSL-RR 128/64) — a small, fast, statistically strong PRNG.
+//!
+//! Hand-rolled because the environment vendors no `rand` crate; the paper's
+//! shared-seed trick (Sec. 3.3) only needs *determinism across nodes*, which
+//! PCG gives us with a 128-bit state and explicit stream selection.
+
+const MULTIPLIER: u128 = 0x2360_ED05_1FC6_5DA4_4385_DF64_9FCC_F645;
+
+/// PCG-XSL-RR 128/64 generator.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    /// Stream increment; must be odd.
+    inc: u128,
+}
+
+impl Pcg64 {
+    /// Create a generator from a 128-bit seed and stream id.
+    pub fn new(seed: u128, stream: u128) -> Self {
+        let inc = (stream << 1) | 1;
+        let mut rng = Pcg64 { state: 0, inc };
+        rng.state = rng.state.wrapping_mul(MULTIPLIER).wrapping_add(inc);
+        rng.state = rng.state.wrapping_add(seed);
+        rng.state = rng.state.wrapping_mul(MULTIPLIER).wrapping_add(inc);
+        rng
+    }
+
+    /// Next 64 uniformly random bits.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(MULTIPLIER).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Uniform f32 in [0, 1).
+    #[inline]
+    pub fn next_f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 / (1u32 << 24) as f32
+    }
+
+    /// Uniform integer in [0, bound) via Lemire's multiply-shift rejection.
+    #[inline]
+    pub fn below(&mut self, bound: usize) -> usize {
+        debug_assert!(bound > 0);
+        let bound = bound as u64;
+        loop {
+            let x = self.next_u64();
+            let m = (x as u128).wrapping_mul(bound as u128);
+            let lo = m as u64;
+            if lo >= bound || lo >= lo.wrapping_neg() % bound {
+                return (m >> 64) as usize;
+            }
+        }
+    }
+
+    /// Fisher–Yates sample of `k` distinct indices from [0, n) (order is
+    /// random). Used for subsampling sketch matrices (Sec. 3.4: "each column
+    /// ... uniformly sampled from {e₁..e_n} without replacement").
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} distinct values from {n}");
+        // Partial Fisher–Yates over an index map: O(k) memory via hashmap-free
+        // trick is overkill here (n is a matrix dimension); use a full vec.
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+
+    /// Random permutation of [0, n).
+    pub fn permutation(&mut self, n: usize) -> Vec<usize> {
+        self.sample_without_replacement(n, n)
+    }
+
+    /// Rademacher ±1 sample.
+    #[inline]
+    pub fn rademacher(&mut self) -> f32 {
+        if self.next_u64() & 1 == 0 {
+            1.0
+        } else {
+            -1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg64::new(123, 0);
+        let mut b = Pcg64::new(123, 0);
+        for _ in 0..64 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_independent() {
+        let mut a = Pcg64::new(123, 0);
+        let mut b = Pcg64::new(123, 1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert!(same < 2);
+    }
+
+    #[test]
+    fn below_uniformity() {
+        let mut r = Pcg64::new(7, 3);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[r.below(10)] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn sample_without_replacement_distinct() {
+        let mut r = Pcg64::new(9, 1);
+        let s = r.sample_without_replacement(100, 40);
+        assert_eq!(s.len(), 40);
+        let mut sorted = s.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), 40, "duplicates in sample");
+        assert!(sorted.iter().all(|&x| x < 100));
+    }
+
+    #[test]
+    fn permutation_is_permutation() {
+        let mut r = Pcg64::new(11, 2);
+        let mut p = r.permutation(50);
+        p.sort_unstable();
+        assert_eq!(p, (0..50).collect::<Vec<_>>());
+    }
+}

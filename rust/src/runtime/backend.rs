@@ -1,0 +1,165 @@
+//! Local-solver backend abstraction: the same proximal-CD update step,
+//! served either by the pure-rust solver (any shape) or by the AOT-compiled
+//! JAX/Pallas artifact through PJRT (fixed shapes).
+//!
+//! The hot loop asks the backend to solve
+//! `min_{U≥0} ‖A − U·B‖² + μ‖U − Uᵗ‖²` given the sketched operands
+//! `A (rows×d)`, `B (k×d)` — the per-node inner step of DSANLS (Alg. 2
+//! line 8). The PJRT backend proves the three layers compose: the update
+//! executed from rust is numerically the Pallas kernel's output.
+
+use anyhow::{bail, Result};
+
+use super::{ExecInput, PjrtRuntime};
+use crate::linalg::Mat;
+use crate::solvers::{self, Normal};
+
+/// A backend that can perform the proximal-CD factor update in place.
+///
+/// Not `Send`/`Sync`: the PJRT client wraps thread-local FFI handles, so
+/// each simulated node constructs its own backend inside its thread (PJRT
+/// compilation is cached per artifact by XLA, so this is cheap after the
+/// first node).
+pub trait LocalSolver {
+    /// Update `u` for `min ‖a − u·b‖² + μ‖u − uᵗ‖²` (one CD sweep).
+    fn cd_update(&self, u: &mut Mat, a: &Mat, b: &Mat, mu: f32) -> Result<()>;
+
+    /// Human-readable backend name.
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-rust backend (shape-generic, the default).
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NativeBackend;
+
+impl LocalSolver for NativeBackend {
+    fn cd_update(&self, u: &mut Mat, a: &Mat, b: &Mat, mu: f32) -> Result<()> {
+        let (gram, cross) = solvers::normal_from(a, b);
+        solvers::cd::proximal_cd_update(u, &Normal::new(&gram, &cross), mu);
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// PJRT backend: dispatches to the compiled `cd_update` artifact whose
+/// shape matches; errors for unsupported shapes (callers fall back to
+/// native — see [`HybridBackend`]).
+pub struct PjrtBackend {
+    runtime: PjrtRuntime,
+}
+
+impl PjrtBackend {
+    pub fn new(runtime: PjrtRuntime) -> Self {
+        PjrtBackend { runtime }
+    }
+
+    pub fn runtime(&self) -> &PjrtRuntime {
+        &self.runtime
+    }
+
+    /// The artifact name for a given shape, per the AOT manifest convention.
+    fn artifact_for(&self, rows: usize, k: usize, d: usize) -> Option<String> {
+        let name = format!("cd_update_r{rows}_k{k}_d{d}");
+        if self.runtime.spec(&name).is_some() {
+            Some(name)
+        } else {
+            None
+        }
+    }
+
+    /// True iff a compiled artifact exists for this shape.
+    pub fn supports(&self, rows: usize, k: usize, d: usize) -> bool {
+        self.artifact_for(rows, k, d).is_some()
+    }
+}
+
+impl LocalSolver for PjrtBackend {
+    fn cd_update(&self, u: &mut Mat, a: &Mat, b: &Mat, mu: f32) -> Result<()> {
+        let (rows, k) = (u.rows(), u.cols());
+        let d = a.cols();
+        let Some(name) = self.artifact_for(rows, k, d) else {
+            bail!("no compiled artifact for shape r{rows}_k{k}_d{d}");
+        };
+        let outs = self.runtime.execute(
+            &name,
+            &[ExecInput::Matrix(a), ExecInput::Matrix(b), ExecInput::Matrix(u), ExecInput::Scalar(mu)],
+        )?;
+        let out = outs.into_iter().next().ok_or_else(|| anyhow::anyhow!("empty output"))?;
+        if (out.rows(), out.cols()) != (rows, k) {
+            bail!("artifact returned {}x{}, expected {rows}x{k}", out.rows(), out.cols());
+        }
+        *u = out;
+        Ok(())
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// PJRT where a matching artifact exists, native otherwise.
+pub struct HybridBackend {
+    pjrt: Option<PjrtBackend>,
+    native: NativeBackend,
+}
+
+impl HybridBackend {
+    /// Try to load the PJRT runtime; degrade to native-only when artifacts
+    /// are absent (logged, not fatal — python is build-time only).
+    pub fn auto() -> Self {
+        let pjrt = PjrtRuntime::load(&PjrtRuntime::default_dir())
+            .map(PjrtBackend::new)
+            .map_err(|e| log::warn!("PJRT backend unavailable: {e}"))
+            .ok();
+        HybridBackend { pjrt, native: NativeBackend }
+    }
+
+    pub fn has_pjrt(&self) -> bool {
+        self.pjrt.is_some()
+    }
+}
+
+impl LocalSolver for HybridBackend {
+    fn cd_update(&self, u: &mut Mat, a: &Mat, b: &Mat, mu: f32) -> Result<()> {
+        if let Some(p) = &self.pjrt {
+            if p.supports(u.rows(), u.cols(), a.cols()) {
+                return p.cd_update(u, a, b, mu);
+            }
+        }
+        self.native.cd_update(u, a, b, mu)
+    }
+
+    fn name(&self) -> &'static str {
+        if self.pjrt.is_some() {
+            "hybrid(pjrt+native)"
+        } else {
+            "hybrid(native)"
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    #[test]
+    fn native_backend_matches_direct_solver() {
+        let mut rng = Pcg64::new(900, 0);
+        let a = Mat::rand_uniform(12, 8, 1.0, &mut rng);
+        let b = Mat::rand_uniform(4, 8, 1.0, &mut rng);
+        let u0 = Mat::rand_uniform(12, 4, 1.0, &mut rng);
+
+        let mut u1 = u0.clone();
+        NativeBackend.cd_update(&mut u1, &a, &b, 2.0).unwrap();
+
+        let mut u2 = u0;
+        let (gram, cross) = solvers::normal_from(&a, &b);
+        solvers::cd::proximal_cd_update(&mut u2, &Normal::new(&gram, &cross), 2.0);
+
+        assert_eq!(u1.data(), u2.data());
+    }
+}

@@ -1,0 +1,218 @@
+//! PJRT runtime: load the AOT-compiled L1/L2 artifacts and execute them
+//! from the rust hot path.
+//!
+//! Build-time python (`make artifacts`) lowers the JAX/Pallas update step to
+//! **HLO text** under `artifacts/` plus a `manifest.json` describing each
+//! entry point's shapes. This module compiles those artifacts once on a
+//! [`xla::PjRtClient`] (CPU) and exposes typed `execute` wrappers.
+//!
+//! HLO *text* is the interchange format — the image's xla_extension 0.5.1
+//! rejects jax≥0.5 serialized protos (64-bit instruction ids); the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The [`backend::LocalSolver`] trait lets the coordinator pick between the
+//! shape-generic pure-rust solver and the fixed-shape compiled artifact;
+//! integration tests assert the two agree to float tolerance.
+
+pub mod backend;
+
+pub use backend::{HybridBackend, LocalSolver, NativeBackend, PjrtBackend};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::linalg::Mat;
+use crate::metrics::JsonValue;
+
+/// One artifact entry from `manifest.json`.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    /// Named integer attributes (e.g. rows/k/d for the CD update).
+    pub dims: HashMap<String, usize>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub entries: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let json = JsonValue::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let entries_json = json
+            .get("entries")
+            .and_then(|v| if let JsonValue::Array(a) = v { Some(a) } else { None })
+            .ok_or_else(|| anyhow!("manifest missing entries[]"))?;
+        let mut entries = Vec::new();
+        for e in entries_json {
+            let name = e
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("entry missing name"))?
+                .to_string();
+            let file = e
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("entry missing file"))?
+                .to_string();
+            let mut dims = HashMap::new();
+            if let Some(JsonValue::Object(fields)) = e.get("dims") {
+                for (k, v) in fields {
+                    if let Some(n) = v.as_f64() {
+                        dims.insert(k.clone(), n as usize);
+                    }
+                }
+            }
+            entries.push(ArtifactSpec { name, file, dims });
+        }
+        Ok(Manifest { entries })
+    }
+}
+
+/// A compiled PJRT runtime holding every artifact executable.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    execs: HashMap<String, xla::PjRtLoadedExecutable>,
+    specs: HashMap<String, ArtifactSpec>,
+    dir: PathBuf,
+}
+
+impl std::fmt::Debug for PjrtRuntime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "PjrtRuntime({} artifacts from {:?})", self.execs.len(), self.dir)
+    }
+}
+
+impl PjrtRuntime {
+    /// Default artifact directory: `$DSANLS_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("DSANLS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+    }
+
+    /// Load and compile every artifact in `dir`.
+    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        let mut execs = HashMap::new();
+        let mut specs = HashMap::new();
+        for spec in manifest.entries {
+            let path = dir.join(&spec.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("HLO parse {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
+            execs.insert(spec.name.clone(), exe);
+            specs.insert(spec.name.clone(), spec);
+        }
+        if execs.is_empty() {
+            bail!("no artifacts in {dir:?}");
+        }
+        Ok(PjrtRuntime { client, execs, specs, dir: dir.to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Execute artifact `name` on matrix/scalar inputs; returns the output
+    /// matrices (tuple elements, row-major).
+    pub fn execute(&self, name: &str, inputs: &[ExecInput<'_>]) -> Result<Vec<Mat>> {
+        let exe = self
+            .execs
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}; have {:?}", self.names()))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for inp in inputs {
+            literals.push(inp.to_literal()?);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
+        // artifacts are lowered with return_tuple=True
+        let mut outs = Vec::new();
+        let tuple = result.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
+        for lit in tuple {
+            let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+            let dims = shape.dims();
+            let (rows, cols) = match dims.len() {
+                2 => (dims[0] as usize, dims[1] as usize),
+                1 => (1, dims[0] as usize),
+                0 => (1, 1),
+                d => bail!("unsupported output rank {d}"),
+            };
+            let values = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            outs.push(Mat::from_vec(rows, cols, values));
+        }
+        Ok(outs)
+    }
+}
+
+/// An input to [`PjrtRuntime::execute`].
+pub enum ExecInput<'a> {
+    Matrix(&'a Mat),
+    Scalar(f32),
+}
+
+impl ExecInput<'_> {
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            ExecInput::Matrix(m) => xla::Literal::vec1(m.data())
+                .reshape(&[m.rows() as i64, m.cols() as i64])
+                .map_err(|e| anyhow!("reshape: {e:?}")),
+            ExecInput::Scalar(s) => Ok(xla::Literal::from(*s)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full PJRT round-trip tests live in `rust/tests/pjrt_roundtrip.rs`
+    // (they need `make artifacts`). Here: manifest parsing only.
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("dsanls_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"entries":[{"name":"cd_update","file":"cd.hlo.txt","dims":{"rows":128,"k":16,"d":32}}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        assert_eq!(m.entries[0].name, "cd_update");
+        assert_eq!(m.entries[0].dims["rows"], 128);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_missing_is_error() {
+        let dir = std::env::temp_dir().join("dsanls_manifest_none");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::remove_file(dir.join("manifest.json")).ok();
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,371 @@
+//! Asynchronous secure protocols: Asyn-SD and Asyn-SSD-V (paper Alg. 6/7).
+//!
+//! Parameter-server architecture: the server owns the authoritative `U`;
+//! client r runs `T` local two-block iterations on `(M_{:J_r}, U_(r),
+//! V_{J_r:})`, pushes `U_(r)`, and receives the server's latest `U` — no
+//! synchronisation barrier anywhere, which is what rescues scalability
+//! under imbalanced workloads (Fig. 9).
+//!
+//! Server update (Alg. 6): `U ← (1−ωᵗ)·U + ωᵗ·U_(r)` with relaxation
+//! `ωᵗ = ω₀/(1 + t/τ) → 0`, so the server copy converges even though
+//! updates arrive in arbitrary order.
+//!
+//! Asyn-SSD-V sketches the client's V-subproblem (Alg. 7 line 7). `U` is
+//! **not** sketched: a sketched push would need the same `Sᵗ` at every
+//! client to make the server's mixture meaningful, and distributing that
+//! `Sᵗ` consistently is exactly the synchronisation the async setting
+//! forbids (paper Sec. 4.3).
+//!
+//! Timing: every client keeps a private **virtual clock** (measured local
+//! compute + modelled p2p wire time). Error traces merge the clients'
+//! locally-logged `(clock, residual²)` samples on the driver — party r only
+//! ever reveals a scalar residual, same as the synchronous protocols.
+
+use std::time::Instant;
+
+use super::{privacy::AuditLog, SecureAlgo, SecureRun};
+use crate::algos::TracePoint;
+use crate::data::partition::Partition;
+use crate::dist::{CommModel, CommStats, MailboxHub, Packet, TAG_SHUTDOWN};
+use crate::linalg::{Mat, Matrix};
+use crate::nmf::{init_factors, rel_error_parts, MuSchedule};
+use crate::rng::{Role, StreamRng};
+use crate::sketch::{SketchKind, SketchMatrix};
+use crate::solvers::{self, Normal, SolverKind};
+
+/// Options for the asynchronous protocols.
+#[derive(Debug, Clone)]
+pub struct AsynOptions {
+    pub nodes: usize,
+    pub rank: usize,
+    /// Outer rounds per client (each ends with a server exchange).
+    pub rounds: usize,
+    /// Local iterations per round (`T` in Alg. 7).
+    pub local_iters: usize,
+    pub solver: SolverKind,
+    pub mu: MuSchedule,
+    /// V-subproblem sketch size (0 = auto m/10; used by Asyn-SSD-V only).
+    pub d1: usize,
+    pub sketch: SketchKind,
+    /// Relaxation schedule `ωᵗ = omega0 / (1 + t/tau)`.
+    pub omega0: f64,
+    pub tau: f64,
+    pub seed: u64,
+    pub comm: CommModel,
+}
+
+impl Default for AsynOptions {
+    fn default() -> Self {
+        AsynOptions {
+            nodes: 4,
+            rank: 10,
+            rounds: 20,
+            local_iters: 5,
+            solver: SolverKind::ProximalCd,
+            mu: MuSchedule::default(),
+            d1: 0,
+            sketch: SketchKind::Subsample,
+            omega0: 0.5,
+            tau: 10.0,
+            seed: 42,
+            comm: CommModel::default(),
+        }
+    }
+}
+
+/// Run Asyn-SD (`variant = AsynSd`) or Asyn-SSD-V (`variant = AsynSsdV`).
+pub fn run_asyn(
+    m: &Matrix,
+    cols: &Partition,
+    opts: &AsynOptions,
+    variant: SecureAlgo,
+    audit: Option<&AuditLog>,
+) -> SecureRun {
+    assert!(matches!(variant, SecureAlgo::AsynSd | SecureAlgo::AsynSsdV));
+    assert_eq!(cols.nodes(), opts.nodes);
+    let k = opts.rank;
+    let m_rows = m.rows();
+    let m_fro_sq = m.fro_sq();
+    let sketch_v = variant == SecureAlgo::AsynSsdV;
+
+    let (hub, clients) = MailboxHub::new(opts.nodes);
+    let stream = StreamRng::new(opts.seed);
+
+    // shared-seed initial factors (server + all clients agree at t=0)
+    let (u_init, v_full) = {
+        let mut rng = stream.for_iteration(0, Role::Init);
+        init_factors(m, k, &mut rng)
+    };
+
+    // client results: (V block, per-client residual samples, stats, clock)
+    type ClientOut = (Mat, Vec<(f64, f64, usize)>, CommStats, f64);
+    let mut client_out: Vec<Option<ClientOut>> = (0..opts.nodes).map(|_| None).collect();
+    let mut server_u = u_init.clone();
+
+    std::thread::scope(|s| {
+        // ---------------- server (Alg. 6) ----------------
+        let u_server_init = u_init.clone();
+        let server_handle = s.spawn(move || {
+            let mut u = u_server_init;
+            let mut live = opts.nodes;
+            let mut t = 0usize;
+            while live > 0 {
+                let p: Packet = hub.inbox.recv().expect("server inbox closed");
+                if p.tag == TAG_SHUTDOWN {
+                    live -= 1;
+                    continue;
+                }
+                // relaxation: U ← (1−ω)U + ω·U_(r)
+                let omega = (opts.omega0 / (1.0 + t as f64 / opts.tau)) as f32;
+                for (dst, src) in u.data_mut().iter_mut().zip(p.payload.iter()) {
+                    *dst = (1.0 - omega) * *dst + omega * src;
+                }
+                t += 1;
+                // reply with the latest server copy
+                let reply = Packet {
+                    from: usize::MAX,
+                    sent_at: p.sent_at,
+                    payload: u.data().to_vec(),
+                    tag: p.tag,
+                };
+                let _ = hub.reply(p.from, reply);
+            }
+            u
+        });
+
+        // ---------------- clients (Alg. 7) ----------------
+        for ((rank, mailbox), slot) in clients.into_iter().enumerate().zip(client_out.iter_mut()) {
+            let my_cols = cols.range(rank);
+            let u0 = u_init.clone();
+            let v0 = v_full.row_block(my_cols.clone());
+            let stream = stream;
+            s.spawn(move || {
+                // same anti-oversubscription policy as dist::run_cluster
+                let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+                crate::parallel::set_local_threads(Some((cores / opts.nodes).max(1)));
+                let m_col = m.col_block(my_cols.clone());
+                let m_col_t = m_col.transpose();
+                let mut u_local = u0;
+                let mut v_block = v0;
+                let d1 = if opts.d1 > 0 {
+                    opts.d1.min(m_rows)
+                } else {
+                    ((m_rows / 10).max(2 * k)).min(m_rows)
+                };
+
+                let mut clock = 0.0f64;
+                let mut stats = CommStats::default();
+                let mut samples: Vec<(f64, f64, usize)> = Vec::new();
+                let mut iters_done = 0usize;
+
+                // initial local residual
+                let (_, r0) = rel_error_parts(&m_col, &u_local, &v_block);
+                samples.push((0.0, r0, 0));
+
+                for round in 0..opts.rounds {
+                    let tick = Instant::now();
+                    for li in 0..opts.local_iters {
+                        let it = round * opts.local_iters + li;
+                        // U_(r) update (never sketched in async)
+                        {
+                            let gram = v_block.gram();
+                            let cross = match &m_col {
+                                Matrix::Dense(md) => md.matmul(&v_block),
+                                Matrix::Sparse(ms) => ms.spmm(&v_block),
+                            };
+                            solvers::update_auto(
+                                opts.solver,
+                                &mut u_local,
+                                &Normal::new(&gram, &cross),
+                                &opts.mu,
+                                it,
+                            );
+                        }
+                        // V_{J_r:} update (sketched for Asyn-SSD-V)
+                        if sketch_v && d1 < m_rows {
+                            let mut rng = stream.for_node(rank, 0xC33E + it as u64);
+                            let sk = SketchMatrix::generate(opts.sketch, m_rows, d1, &mut rng);
+                            let a = sk.mul_right(&m_col_t);
+                            let b = sk.mul_rows_tn(&u_local, 0);
+                            let (gram, cross) = solvers::normal_from(&a, &b);
+                            solvers::update_auto(
+                                opts.solver,
+                                &mut v_block,
+                                &Normal::new(&gram, &cross),
+                                &opts.mu,
+                                it,
+                            );
+                        } else {
+                            let gram = u_local.gram();
+                            let cross = match &m_col_t {
+                                Matrix::Dense(md) => md.matmul(&u_local),
+                                Matrix::Sparse(ms) => ms.spmm(&u_local),
+                            };
+                            solvers::update_auto(
+                                opts.solver,
+                                &mut v_block,
+                                &Normal::new(&gram, &cross),
+                                &opts.mu,
+                                it,
+                            );
+                        }
+                        iters_done += 1;
+                    }
+                    let dt = tick.elapsed().as_secs_f64();
+                    clock += dt;
+                    stats.compute_time += dt;
+
+                    // push U_(r), receive latest server U (Alg. 7 lines 8–9)
+                    let payload = u_local.data().to_vec();
+                    if let Some(a) = audit {
+                        a.record(rank, "asyn/u-push", &payload);
+                    }
+                    let bytes = payload.len() * 4;
+                    mailbox.send(clock, round as u64, payload);
+                    let reply = mailbox.recv().expect("server hung up");
+                    debug_assert_eq!(reply.payload.len(), u_local.data().len());
+                    u_local.data_mut().copy_from_slice(&reply.payload);
+                    let wire = 2.0 * opts.comm.p2p_time(bytes);
+                    clock += wire;
+                    stats.comm_time += wire;
+                    stats.bytes_sent += bytes;
+                    stats.bytes_received += bytes;
+                    stats.messages += 2;
+
+                    // out-of-band residual sample (not timed)
+                    let (_, resid) = rel_error_parts(&m_col, &u_local, &v_block);
+                    samples.push((clock, resid, iters_done));
+                }
+                mailbox.send(clock, TAG_SHUTDOWN, Vec::new());
+                *slot = Some((v_block, samples, stats, clock));
+            });
+        }
+
+        server_u = server_handle.join().expect("server panicked");
+    });
+
+    // ---------------- merge client logs into a global trace ----------------
+    let outs: Vec<ClientOut> = client_out.into_iter().map(|o| o.unwrap()).collect();
+    let trace = merge_traces(&outs, m_fro_sq);
+    let v_blocks: Vec<Vec<f32>> = outs.iter().map(|o| o.0.data().to_vec()).collect();
+    let v = crate::algos::assemble_blocks_pub(&v_blocks, k);
+    let stats: Vec<CommStats> = outs.iter().map(|o| o.2).collect();
+    let max_clock = outs.iter().map(|o| o.3).fold(0.0, f64::max);
+    let total_iters: usize = outs.iter().map(|o| o.1.last().map(|s| s.2).unwrap_or(0)).sum();
+    SecureRun {
+        u: server_u,
+        v,
+        trace,
+        stats,
+        sec_per_iter: max_clock * opts.nodes as f64 / total_iters.max(1) as f64,
+    }
+}
+
+/// Merge per-client `(clock, residual², iters)` logs: at every event time,
+/// the global error is √(Σ_r latest-residual_r / ‖M‖²).
+fn merge_traces(outs: &[(Mat, Vec<(f64, f64, usize)>, CommStats, f64)], m_fro_sq: f64) -> Vec<TracePoint> {
+    let n = outs.len();
+    // event queue over all samples, time-ordered
+    let mut events: Vec<(f64, usize, f64, usize)> = Vec::new(); // (time, client, resid, iters)
+    for (r, o) in outs.iter().enumerate() {
+        for &(t, resid, iters) in &o.1 {
+            events.push((t, r, resid, iters));
+        }
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    let mut latest = vec![f64::NAN; n];
+    let mut iters = vec![0usize; n];
+    let mut trace = Vec::with_capacity(events.len());
+    for (t, r, resid, it) in events {
+        latest[r] = resid;
+        iters[r] = it;
+        if latest.iter().any(|v| v.is_nan()) {
+            continue; // wait until every client reported once
+        }
+        let err = (latest.iter().sum::<f64>() / m_fro_sq).max(0.0).sqrt();
+        trace.push(TracePoint {
+            iteration: iters.iter().sum(),
+            sim_time: t,
+            rel_error: err,
+        });
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::partition::{imbalanced_partition, uniform_partition};
+    use crate::rng::Pcg64;
+
+    fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed as u128, 0);
+        let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
+        let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
+        Matrix::Dense(u.matmul_nt(&v))
+    }
+
+    fn opts(nodes: usize) -> AsynOptions {
+        AsynOptions {
+            nodes,
+            rank: 3,
+            rounds: 15,
+            local_iters: 3,
+            d1: 20,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn asyn_sd_converges() {
+        let m = low_rank(60, 48, 3, 501);
+        let cols = uniform_partition(48, 3);
+        let run = run_asyn(&m, &cols, &opts(3), SecureAlgo::AsynSd, None);
+        let first = run.trace.first().unwrap().rel_error;
+        assert!(run.final_error() < 0.7 * first, "{} -> {}", first, run.final_error());
+        assert!(run.u.is_nonnegative());
+    }
+
+    #[test]
+    fn asyn_ssd_v_converges() {
+        let m = low_rank(60, 48, 3, 503);
+        let cols = uniform_partition(48, 3);
+        let run = run_asyn(&m, &cols, &opts(3), SecureAlgo::AsynSsdV, None);
+        let first = run.trace.first().unwrap().rel_error;
+        assert!(run.final_error() < 0.75 * first, "{} -> {}", first, run.final_error());
+    }
+
+    #[test]
+    fn trace_times_are_monotone() {
+        let m = low_rank(40, 30, 3, 505);
+        let cols = uniform_partition(30, 2);
+        let run = run_asyn(&m, &cols, &opts(2), SecureAlgo::AsynSd, None);
+        for w in run.trace.windows(2) {
+            assert!(w[1].sim_time >= w[0].sim_time);
+        }
+    }
+
+    #[test]
+    fn no_barrier_under_imbalance() {
+        // async clients never stall: each client's clock is its own
+        // compute + p2p time; the light clients complete far more rounds
+        // per unit virtual time than the heavy one.
+        let m = low_rank(60, 60, 3, 507);
+        let cols = imbalanced_partition(60, 3, 0.5);
+        let run = run_asyn(&m, &cols, &opts(3), SecureAlgo::AsynSsdV, None);
+        for s in &run.stats {
+            assert_eq!(s.stall_time, 0.0, "async must not stall");
+        }
+    }
+
+    #[test]
+    fn audit_records_pushes() {
+        let m = low_rank(30, 20, 3, 509);
+        let cols = uniform_partition(20, 2);
+        let audit = AuditLog::new();
+        let mut o = opts(2);
+        o.rounds = 3;
+        let _ = run_asyn(&m, &cols, &o, SecureAlgo::AsynSd, Some(&audit));
+        assert_eq!(audit.len(), 2 * 3, "one push per round per client");
+    }
+}

@@ -1,0 +1,110 @@
+//! Secure distributed NMF over federated data (paper Sec. 4).
+//!
+//! Setting: `M = [M₁ … M_N]` column-federated across N honest-but-curious
+//! parties; party r must only ever see `M_{:J_r}`, the shared factor `U`
+//! (public output) and its own `V_{J_r:}`. The protocols are
+//! (N−1)-private (Definition 1): any N−1 colluding parties learn nothing
+//! beyond their own outputs.
+//!
+//! Protocols (Sec. 4.2–4.3):
+//! * [`syn::run_syn_sd`]   — Alg. 4: local NMF + periodic full-`U`
+//!   all-reduce averaging every `T₂` inner iterations.
+//! * [`syn::run_syn_ssd`]  — Alg. 5: sketched exchange every inner
+//!   iteration (variants: sketch the U-consensus, the V-subproblem, or
+//!   both — Syn-SSD-U / -V / -UV).
+//! * [`asyn::run_asyn`]    — Alg. 6/7: parameter-server architecture with
+//!   relaxation weight `ωᵗ → 0`; Asyn-SD (unsketched) and Asyn-SSD-V
+//!   (sketched V-subproblem; U cannot be sketched asynchronously because a
+//!   shared `S₂ᵗ` would reintroduce the synchronisation barrier).
+//! * [`privacy`]           — the audit harness (outbound-payload check) and
+//!   the Theorem-2/3 sketch-inversion attack.
+//!
+//! Why DSANLS itself is *not* secure here (Sec. 4.1): it would all-reduce
+//! `M·Sᵗ`, and Theorem 3 shows `M` is recoverable by Gaussian elimination
+//! once enough `(Sᵗ, M·Sᵗ)` pairs accumulate — [`privacy::sketch_inversion`]
+//! implements exactly that attack, and the tests show it succeeding.
+
+pub mod asyn;
+pub mod privacy;
+pub mod syn;
+
+pub use asyn::{run_asyn, AsynOptions};
+pub use privacy::{sketch_inversion, AuditLog, AuditVerdict};
+pub use syn::{run_syn_sd, run_syn_ssd, SynOptions};
+
+use crate::algos::TracePoint;
+use crate::dist::CommStats;
+use crate::linalg::Mat;
+
+/// Which secure protocol variant (for reporting / config parsing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SecureAlgo {
+    SynSd,
+    SynSsdU,
+    SynSsdV,
+    SynSsdUv,
+    AsynSd,
+    AsynSsdV,
+}
+
+impl SecureAlgo {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SecureAlgo::SynSd => "Syn-SD",
+            SecureAlgo::SynSsdU => "Syn-SSD-U",
+            SecureAlgo::SynSsdV => "Syn-SSD-V",
+            SecureAlgo::SynSsdUv => "Syn-SSD-UV",
+            SecureAlgo::AsynSd => "Asyn-SD",
+            SecureAlgo::AsynSsdV => "Asyn-SSD-V",
+        }
+    }
+
+    pub const ALL: [SecureAlgo; 6] = [
+        SecureAlgo::SynSd,
+        SecureAlgo::SynSsdU,
+        SecureAlgo::SynSsdV,
+        SecureAlgo::SynSsdUv,
+        SecureAlgo::AsynSd,
+        SecureAlgo::AsynSsdV,
+    ];
+}
+
+impl std::str::FromStr for SecureAlgo {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().replace('_', "-").as_str() {
+            "syn-sd" => Ok(SecureAlgo::SynSd),
+            "syn-ssd-u" => Ok(SecureAlgo::SynSsdU),
+            "syn-ssd-v" => Ok(SecureAlgo::SynSsdV),
+            "syn-ssd-uv" => Ok(SecureAlgo::SynSsdUv),
+            "asyn-sd" => Ok(SecureAlgo::AsynSd),
+            "asyn-ssd-v" => Ok(SecureAlgo::AsynSsdV),
+            other => Err(format!("unknown secure algorithm: {other}")),
+        }
+    }
+}
+
+/// Result of a secure federated run. Unlike [`crate::algos::DistRun`] there
+/// is no single assembled `V` owner — each party keeps `V_{J_r:}` — but we
+/// assemble for inspection in tests (the *driver* is trusted).
+#[derive(Debug, Clone)]
+pub struct SecureRun {
+    /// Final shared factor (identical across parties for sync; server copy
+    /// for async).
+    pub u: Mat,
+    /// Party-assembled item factor (test/inspection only).
+    pub v: Mat,
+    pub trace: Vec<TracePoint>,
+    pub stats: Vec<CommStats>,
+    pub sec_per_iter: f64,
+}
+
+impl SecureRun {
+    pub fn final_error(&self) -> f64 {
+        self.trace.last().map(|t| t.rel_error).unwrap_or(f64::NAN)
+    }
+
+    pub fn total_bytes_sent(&self) -> usize {
+        self.stats.iter().map(|s| s.bytes_sent).sum()
+    }
+}

@@ -1,0 +1,310 @@
+//! Privacy tooling: the outbound-payload audit and the Theorem-2/3
+//! sketch-inversion attack.
+//!
+//! * [`AuditLog`] — protocols record every payload a party puts on the
+//!   wire; [`AuditLog::verdict`] then scans for leaked rows of the party's
+//!   private matrices (`M_{:J_r}`, `V_{J_r:}`). This operationalises
+//!   Definition 1's "learn nothing beyond their own outputs" for the
+//!   honest-but-curious model: colluders see exactly the logged payloads.
+//! * [`sketch_inversion`] — Theorem 3's constructive attack: given enough
+//!   `(Sᵗ, M·Sᵗ)` pairs, recover `M` row-wise by Gaussian elimination.
+//!   With fewer pairs than `n` columns the system is underdetermined
+//!   (Theorem 2) and the attack fails — both directions are tested.
+
+use std::sync::Mutex;
+
+use crate::linalg::Mat;
+use crate::sketch::SketchMatrix;
+
+/// One recorded outbound payload.
+#[derive(Debug, Clone)]
+pub struct AuditRecord {
+    pub from: usize,
+    /// Logical channel, e.g. `"syn-sd/u-full"` or `"asyn/u-push"`.
+    pub channel: &'static str,
+    pub payload: Vec<f32>,
+}
+
+/// Thread-safe log of everything the parties transmitted.
+#[derive(Debug, Default)]
+pub struct AuditLog {
+    records: Mutex<Vec<AuditRecord>>,
+}
+
+/// Result of the leak scan.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AuditVerdict {
+    /// No private row appeared in any other party's view.
+    Clean,
+    /// A private row of `owner` leaked on `channel`.
+    Leak { owner: usize, channel: &'static str },
+}
+
+impl AuditLog {
+    pub fn new() -> Self {
+        AuditLog::default()
+    }
+
+    pub fn record(&self, from: usize, channel: &'static str, payload: &[f32]) {
+        self.records
+            .lock()
+            .unwrap()
+            .push(AuditRecord { from, channel, payload: payload.to_vec() });
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn records(&self) -> Vec<AuditRecord> {
+        self.records.lock().unwrap().clone()
+    }
+
+    /// Total bytes transmitted (4 bytes per f32 payload element).
+    pub fn bytes(&self) -> usize {
+        self.records.lock().unwrap().iter().map(|r| r.payload.len() * 4).sum()
+    }
+
+    /// Scan every transmitted payload for contiguous occurrences of any of
+    /// `owner`'s secret rows. `secrets[i] = (owner, rows)` where each row is
+    /// a private vector (a row of `M_{:J_r}`ᵀ or `V_{J_r:}`).
+    ///
+    /// A row of length < 3 is skipped (single floats collide by chance).
+    pub fn verdict(&self, secrets: &[(usize, Vec<Vec<f32>>)]) -> AuditVerdict {
+        let records = self.records.lock().unwrap();
+        for (owner, rows) in secrets {
+            for row in rows {
+                if row.len() < 3 || row.iter().all(|&v| v == 0.0) {
+                    continue;
+                }
+                for rec in records.iter() {
+                    // a leak means *another* party could observe it; payloads
+                    // sent by the owner itself to the aggregate are still a
+                    // leak if they contain the raw row (all-reduce exposes
+                    // them pre-aggregation only to the transport, but we take
+                    // the conservative view and flag raw rows anywhere)
+                    if contains_subsequence(&rec.payload, row, 1e-6) {
+                        return AuditVerdict::Leak { owner: *owner, channel: rec.channel };
+                    }
+                }
+            }
+        }
+        AuditVerdict::Clean
+    }
+}
+
+/// True iff `needle` occurs as a contiguous subsequence of `haystack`
+/// (within `tol` per element).
+fn contains_subsequence(haystack: &[f32], needle: &[f32], tol: f32) -> bool {
+    if needle.is_empty() || haystack.len() < needle.len() {
+        return false;
+    }
+    'outer: for start in 0..=haystack.len() - needle.len() {
+        for (h, n) in haystack[start..].iter().zip(needle.iter()) {
+            if (h - n).abs() > tol {
+                continue 'outer;
+            }
+        }
+        return true;
+    }
+    false
+}
+
+/// Theorem-3 attack: recover `M` (m×n) from observed sketched products
+/// `obs[t] = M·Sᵗ` and the (public, shared-seed) sketches `Sᵗ`.
+///
+/// Builds the stacked system `M · [S⁰ S¹ …] = [obs⁰ obs¹ …]` and solves
+/// each row by Gaussian elimination with partial pivoting on the normal
+/// equations. Returns `None` when the stacked sketch has numerical rank
+/// < n — Theorem 2's regime, where `M` cannot be recovered.
+pub fn sketch_inversion(sketches: &[SketchMatrix], observations: &[Mat]) -> Option<Mat> {
+    assert_eq!(sketches.len(), observations.len());
+    if sketches.is_empty() {
+        return None;
+    }
+    let n = sketches[0].n();
+    let m_rows = observations[0].rows();
+    let total_d: usize = sketches.iter().map(|s| s.d()).sum();
+    if total_d < n {
+        return None; // underdetermined — Theorem 2
+    }
+
+    // stacked S (n × total_d) and stacked observations (m × total_d)
+    let mut s_stack = Mat::zeros(n, total_d);
+    let mut off = 0;
+    for s in sketches {
+        let sd = s.to_dense();
+        for i in 0..n {
+            let dst = &mut s_stack.row_mut(i)[off..off + s.d()];
+            dst.copy_from_slice(sd.row(i));
+        }
+        off += s.d();
+    }
+    let mut obs_stack = Mat::zeros(m_rows, total_d);
+    let mut off = 0;
+    for o in observations {
+        assert_eq!(o.rows(), m_rows);
+        for i in 0..m_rows {
+            let dst = &mut obs_stack.row_mut(i)[off..off + o.cols()];
+            dst.copy_from_slice(o.row(i));
+        }
+        off += o.cols();
+    }
+
+    // Normal equations: M · (S Sᵀ) = obs · Sᵀ; solve the n×n SPD-ish system
+    // per row with Gaussian elimination (partial pivoting).
+    let g = s_stack.matmul_nt(&s_stack); // n×n
+    let rhs = obs_stack.matmul_nt(&s_stack); // m×n
+    let mut out = Mat::zeros(m_rows, n);
+    let mut work = vec![0.0f64; n * (n + 1)];
+    for i in 0..m_rows {
+        if !gauss_solve(&g, rhs.row(i), out.row_mut(i), &mut work) {
+            return None; // singular — rank-deficient stacked sketch
+        }
+    }
+    Some(out)
+}
+
+/// Solve `xᵀ·G = b` i.e. `Gᵀx = bᵀ` (G symmetric here) by Gaussian
+/// elimination with partial pivoting, f64 internally. Returns false if the
+/// matrix is numerically singular.
+fn gauss_solve(g: &Mat, b: &[f32], x: &mut [f32], work: &mut [f64]) -> bool {
+    let n = b.len();
+    debug_assert_eq!(g.rows(), n);
+    let stride = n + 1;
+    // augmented matrix [G | b]
+    for r in 0..n {
+        for c in 0..n {
+            work[r * stride + c] = g.get(r, c) as f64;
+        }
+        work[r * stride + n] = b[r] as f64;
+    }
+    for col in 0..n {
+        // partial pivot
+        let mut piv = col;
+        let mut best = work[col * stride + col].abs();
+        for r in col + 1..n {
+            let v = work[r * stride + col].abs();
+            if v > best {
+                best = v;
+                piv = r;
+            }
+        }
+        if best < 1e-8 {
+            return false;
+        }
+        if piv != col {
+            for c in 0..stride {
+                work.swap(col * stride + c, piv * stride + c);
+            }
+        }
+        let d = work[col * stride + col];
+        for r in col + 1..n {
+            let f = work[r * stride + col] / d;
+            if f == 0.0 {
+                continue;
+            }
+            for c in col..stride {
+                work[r * stride + c] -= f * work[col * stride + c];
+            }
+        }
+    }
+    // back substitution
+    for col in (0..n).rev() {
+        let mut s = work[col * stride + n];
+        for c in col + 1..n {
+            s -= work[col * stride + c] * x[c] as f64;
+        }
+        x[col] = (s / work[col * stride + col]) as f32;
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+    use crate::sketch::SketchKind;
+
+    #[test]
+    fn subsequence_detection() {
+        assert!(contains_subsequence(&[1.0, 2.0, 3.0, 4.0], &[2.0, 3.0, 4.0], 1e-9));
+        assert!(!contains_subsequence(&[1.0, 2.0, 3.0], &[3.0, 2.0], 1e-9));
+        assert!(!contains_subsequence(&[1.0], &[1.0, 2.0], 1e-9));
+    }
+
+    #[test]
+    fn audit_flags_raw_row_leak() {
+        let log = AuditLog::new();
+        let secret_row = vec![0.5f32, 0.25, 0.75, 0.125];
+        // a payload that embeds the raw row
+        let mut payload = vec![9.0f32, 9.0];
+        payload.extend_from_slice(&secret_row);
+        log.record(1, "test/leaky", &payload);
+        let verdict = log.verdict(&[(1, vec![secret_row])]);
+        assert!(matches!(verdict, AuditVerdict::Leak { owner: 1, .. }), "{verdict:?}");
+    }
+
+    #[test]
+    fn audit_passes_aggregated_payload() {
+        let log = AuditLog::new();
+        let secret = vec![0.5f32, 0.25, 0.75, 0.125];
+        // aggregate = secret + other party's contribution ⇒ not a raw match
+        let other = [0.1f32, 0.9, 0.3, 0.7];
+        let agg: Vec<f32> = secret.iter().zip(other.iter()).map(|(a, b)| a + b).collect();
+        log.record(0, "test/agg", &agg);
+        assert_eq!(log.verdict(&[(0, vec![secret])]), AuditVerdict::Clean);
+    }
+
+    #[test]
+    fn theorem3_attack_succeeds_with_enough_sketches() {
+        // n=16 columns, d=8 per sketch ⇒ 2 sketches suffice (rank 16)
+        let mut data_rng = Pcg64::new(500, 0);
+        let m = Mat::rand_uniform(6, 16, 1.0, &mut data_rng);
+        let mut sketches = Vec::new();
+        let mut obs = Vec::new();
+        for t in 0..3 {
+            let mut rng = Pcg64::new(600 + t as u128, 1);
+            let s = SketchMatrix::generate(SketchKind::Gaussian, 16, 8, &mut rng);
+            obs.push(s.mul_right_dense(&m));
+            sketches.push(s);
+        }
+        let rec = sketch_inversion(&sketches, &obs).expect("attack must succeed");
+        assert!(rec.dist_sq(&m) < 1e-4, "reconstruction error {}", rec.dist_sq(&m));
+    }
+
+    #[test]
+    fn theorem2_attack_fails_with_one_sketch() {
+        let mut data_rng = Pcg64::new(501, 0);
+        let m = Mat::rand_uniform(6, 16, 1.0, &mut data_rng);
+        let mut rng = Pcg64::new(601, 1);
+        let s = SketchMatrix::generate(SketchKind::Gaussian, 16, 8, &mut rng);
+        let obs = vec![s.mul_right_dense(&m)];
+        assert!(sketch_inversion(&[s], &obs).is_none(), "d < n must be unrecoverable");
+    }
+
+    #[test]
+    fn subsample_sketches_also_invert() {
+        // subsampling sketches reveal raw columns — stacking enough of them
+        // covers all n columns w.h.p.
+        let mut data_rng = Pcg64::new(502, 0);
+        let m = Mat::rand_uniform(4, 12, 1.0, &mut data_rng);
+        let mut sketches = Vec::new();
+        let mut obs = Vec::new();
+        for t in 0..8 {
+            let mut rng = Pcg64::new(700 + t as u128, 1);
+            let s = SketchMatrix::generate(SketchKind::Subsample, 12, 6, &mut rng);
+            obs.push(s.mul_right_dense(&m));
+            sketches.push(s);
+        }
+        if let Some(rec) = sketch_inversion(&sketches, &obs) {
+            assert!(rec.dist_sq(&m) < 1e-3);
+        } else {
+            panic!("8×6 subsample draws over 12 columns should cover all w.h.p.");
+        }
+    }
+}

@@ -1,0 +1,461 @@
+//! Sketch operators (the paper's Sec. 3.4 plus the future-work extensions).
+//!
+//! A sketch is a random `n×d` matrix `S` with `E[S Sᵀ] = I` and bounded
+//! variance (Assumption 1), so the sketched NLS gradient is an unbiased
+//! estimator of the true gradient (Eq. 16). Four generators:
+//!
+//! * [`SketchKind::Gaussian`]   — i.i.d. N(0, 1/d) entries. O(m·n·d) apply;
+//!   densest information per column (faster per-iteration convergence).
+//! * [`SketchKind::Subsample`]  — `√(n/d) ·` d distinct canonical basis
+//!   columns. O(m·d) apply, sparsity-preserving (paper's default for RCV1 /
+//!   DBLP).
+//! * [`SketchKind::CountSketch`] — one ±1 per input row, hashed bucket
+//!   (Clarkson–Woodruff). O(nnz) apply.
+//! * [`SketchKind::Srht`]       — subsampled randomized Hadamard transform
+//!   `√(n/d) · D·H·P` (Ailon–Chazelle). O(m·n·log n) apply via FWHT.
+//!
+//! Every node regenerates the *same* `S` from the shared seed
+//! ([`crate::rng::StreamRng`]), so `S` itself is never communicated —
+//! the paper's key communication trick (Sec. 3.3).
+
+use crate::linalg::{gemm_tn, Csr, Mat};
+use crate::rng::Pcg64;
+
+/// Which random matrix family to use (paper Sec. 3.4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SketchKind {
+    Gaussian,
+    Subsample,
+    CountSketch,
+    Srht,
+}
+
+impl SketchKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SketchKind::Gaussian => "gaussian",
+            SketchKind::Subsample => "subsample",
+            SketchKind::CountSketch => "countsketch",
+            SketchKind::Srht => "srht",
+        }
+    }
+}
+
+impl std::str::FromStr for SketchKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "gaussian" | "g" => Ok(SketchKind::Gaussian),
+            "subsample" | "s" | "subsampling" => Ok(SketchKind::Subsample),
+            "countsketch" | "cs" => Ok(SketchKind::CountSketch),
+            "srht" => Ok(SketchKind::Srht),
+            other => Err(format!("unknown sketch kind: {other}")),
+        }
+    }
+}
+
+/// A realised sketch matrix `S ∈ R^{n×d}` for one iteration, stored in the
+/// cheapest implicit representation for its family.
+#[derive(Debug, Clone)]
+pub struct SketchMatrix {
+    n: usize,
+    d: usize,
+    repr: Repr,
+}
+
+#[derive(Debug, Clone)]
+enum Repr {
+    /// Fully materialised n×d (Gaussian).
+    Dense(Mat),
+    /// Column p of S is `scale · e_{idx[p]}`.
+    Subsample { idx: Vec<usize>, scale: f32 },
+    /// Row i of S is `sign[i] · e_{bucket[i]}ᵀ` (of length d).
+    CountSketch { bucket: Vec<usize>, sign: Vec<f32> },
+    /// `S = scale · D·H·P`: row i, col p is `scale · sign[i] · H[i, sel[p]]`
+    /// with `H` the 2^q Walsh–Hadamard matrix (n padded up to 2^q).
+    Srht { sign: Vec<f32>, sel: Vec<usize>, scale: f32, padded: usize },
+}
+
+impl SketchMatrix {
+    /// Generate `S ∈ R^{n×d}` of the given family from `rng`.
+    /// Deterministic in `rng`: identical across nodes sharing the seed.
+    pub fn generate(kind: SketchKind, n: usize, d: usize, rng: &mut Pcg64) -> Self {
+        assert!(d > 0 && d <= n, "sketch size d={d} must be in 1..={n}");
+        let repr = match kind {
+            SketchKind::Gaussian => {
+                let sigma = 1.0 / (d as f32).sqrt();
+                let mut m = Mat::zeros(n, d);
+                crate::rng::Gaussian::fill_from(rng, m.data_mut(), sigma);
+                Repr::Dense(m)
+            }
+            SketchKind::Subsample => {
+                let idx = rng.sample_without_replacement(n, d);
+                Repr::Subsample { idx, scale: (n as f32 / d as f32).sqrt() }
+            }
+            SketchKind::CountSketch => {
+                let bucket: Vec<usize> = (0..n).map(|_| rng.below(d)).collect();
+                let sign: Vec<f32> = (0..n).map(|_| rng.rademacher()).collect();
+                Repr::CountSketch { bucket, sign }
+            }
+            SketchKind::Srht => {
+                let padded = n.next_power_of_two();
+                let sign: Vec<f32> = (0..n).map(|_| rng.rademacher()).collect();
+                let sel = rng.sample_without_replacement(padded, d);
+                // E[SSᵀ]=I scaling for a row-sampled normalized Hadamard:
+                // H/√padded is orthonormal; sampling d of `padded` columns
+                // needs √(padded/d) on top.
+                let scale = (padded as f32).sqrt().recip() * (padded as f32 / d as f32).sqrt();
+                Repr::Srht { sign, sel, scale, padded }
+            }
+        };
+        SketchMatrix { n, d, repr }
+    }
+
+    pub fn kind(&self) -> SketchKind {
+        match self.repr {
+            Repr::Dense(_) => SketchKind::Gaussian,
+            Repr::Subsample { .. } => SketchKind::Subsample,
+            Repr::CountSketch { .. } => SketchKind::CountSketch,
+            Repr::Srht { .. } => SketchKind::Srht,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn d(&self) -> usize {
+        self.d
+    }
+
+    /// `A · S` for dense `A (m×n)` → `m×d`.
+    pub fn mul_right_dense(&self, a: &Mat) -> Mat {
+        assert_eq!(a.cols(), self.n, "A cols != sketch n");
+        match &self.repr {
+            Repr::Dense(s) => a.matmul(s),
+            Repr::Subsample { idx, scale } => {
+                let mut out = a.gather_cols(idx);
+                out.scale(*scale);
+                out
+            }
+            Repr::CountSketch { bucket, sign } => {
+                let mut out = Mat::zeros(a.rows(), self.d);
+                for i in 0..a.rows() {
+                    let arow = a.row(i);
+                    let orow = out.row_mut(i);
+                    for (j, &v) in arow.iter().enumerate() {
+                        orow[bucket[j]] += sign[j] * v;
+                    }
+                }
+                out
+            }
+            Repr::Srht { sign, sel, scale, padded } => {
+                let mut out = Mat::zeros(a.rows(), self.d);
+                let mut buf = vec![0.0f32; *padded];
+                for i in 0..a.rows() {
+                    buf.fill(0.0);
+                    for (j, &v) in a.row(i).iter().enumerate() {
+                        buf[j] = sign[j] * v;
+                    }
+                    fwht(&mut buf);
+                    let orow = out.row_mut(i);
+                    for (p, &s) in sel.iter().enumerate() {
+                        orow[p] = buf[s] * scale;
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// `A · S` for sparse `A (m×n)` → dense `m×d`.
+    pub fn mul_right_sparse(&self, a: &Csr) -> Mat {
+        assert_eq!(a.cols(), self.n, "A cols != sketch n");
+        match &self.repr {
+            Repr::Dense(s) => a.spmm(s),
+            Repr::Subsample { idx, scale } => {
+                let mut out = a.gather_cols_dense(idx);
+                out.scale(*scale);
+                out
+            }
+            Repr::CountSketch { bucket, sign } => {
+                let mut out = Mat::zeros(a.rows(), self.d);
+                for i in 0..a.rows() {
+                    let orow = out.row_mut(i);
+                    for (j, v) in a.row_iter(i) {
+                        orow[bucket[j]] += sign[j] * v;
+                    }
+                }
+                out
+            }
+            Repr::Srht { sign, sel, scale, .. } => {
+                // O(nnz · d): directly H[j, sel[p]] = (-1)^{popcount(j & sel[p])}
+                let mut out = Mat::zeros(a.rows(), self.d);
+                for i in 0..a.rows() {
+                    let orow = out.row_mut(i);
+                    for (j, v) in a.row_iter(i) {
+                        let sv = sign[j] * v * scale;
+                        for (p, &s) in sel.iter().enumerate() {
+                            let h = if ((j & s).count_ones() & 1) == 0 { 1.0 } else { -1.0 };
+                            orow[p] += sv * h;
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// `A · S` dispatching on the matrix kind.
+    pub fn mul_right(&self, a: &crate::linalg::Matrix) -> Mat {
+        match a {
+            crate::linalg::Matrix::Dense(m) => self.mul_right_dense(m),
+            crate::linalg::Matrix::Sparse(m) => self.mul_right_sparse(m),
+        }
+    }
+
+    /// `Vᵀ_block · S_block` where `v_block` holds rows
+    /// `row_offset .. row_offset + v_block.rows()` of the virtual `n×k`
+    /// matrix `V` — the per-node summand `B̄_r = (V_{J_r:})ᵀ S_{J_r:}` of
+    /// Eq. 11. Result is `k×d`.
+    pub fn mul_rows_tn(&self, v_block: &Mat, row_offset: usize) -> Mat {
+        let rows = v_block.rows();
+        let k = v_block.cols();
+        assert!(row_offset + rows <= self.n, "row block outside sketch");
+        match &self.repr {
+            Repr::Dense(s) => {
+                let s_block = s.row_block(row_offset..row_offset + rows);
+                let mut out = Mat::zeros(k, self.d);
+                gemm_tn(v_block, &s_block, &mut out);
+                out
+            }
+            Repr::Subsample { idx, scale } => {
+                let mut out = Mat::zeros(k, self.d);
+                for (p, &g) in idx.iter().enumerate() {
+                    if g >= row_offset && g < row_offset + rows {
+                        let vrow = v_block.row(g - row_offset);
+                        for l in 0..k {
+                            out.set(l, p, vrow[l] * scale);
+                        }
+                    }
+                }
+                out
+            }
+            Repr::CountSketch { bucket, sign } => {
+                let mut out = Mat::zeros(k, self.d);
+                for j in 0..rows {
+                    let g = row_offset + j;
+                    let (b, s) = (bucket[g], sign[g]);
+                    let vrow = v_block.row(j);
+                    for l in 0..k {
+                        let cur = out.get(l, b);
+                        out.set(l, b, cur + s * vrow[l]);
+                    }
+                }
+                out
+            }
+            Repr::Srht { sign, sel, scale, .. } => {
+                let mut out = Mat::zeros(k, self.d);
+                for j in 0..rows {
+                    let g = row_offset + j;
+                    let sv = sign[g] * scale;
+                    let vrow = v_block.row(j);
+                    for (p, &s) in sel.iter().enumerate() {
+                        let h = if ((g & s).count_ones() & 1) == 0 { sv } else { -sv };
+                        for l in 0..k {
+                            let cur = out.get(l, p);
+                            out.set(l, p, cur + h * vrow[l]);
+                        }
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Materialise `S` as a dense `n×d` matrix (tests + the Theorem-3
+    /// sketch-inversion attack in [`crate::secure::privacy`]).
+    pub fn to_dense(&self) -> Mat {
+        match &self.repr {
+            Repr::Dense(s) => s.clone(),
+            Repr::Subsample { idx, scale } => {
+                let mut m = Mat::zeros(self.n, self.d);
+                for (p, &i) in idx.iter().enumerate() {
+                    m.set(i, p, *scale);
+                }
+                m
+            }
+            Repr::CountSketch { bucket, sign } => {
+                let mut m = Mat::zeros(self.n, self.d);
+                for i in 0..self.n {
+                    m.set(i, bucket[i], sign[i]);
+                }
+                m
+            }
+            Repr::Srht { sign, sel, scale, .. } => {
+                let mut m = Mat::zeros(self.n, self.d);
+                for i in 0..self.n {
+                    for (p, &s) in sel.iter().enumerate() {
+                        let h = if ((i & s).count_ones() & 1) == 0 { 1.0 } else { -1.0 };
+                        m.set(i, p, sign[i] * h * scale);
+                    }
+                }
+                m
+            }
+        }
+    }
+
+    /// FLOP estimate for `A·S` with `A: m×n` (`nnz` stored values) — used by
+    /// the coordinator's cost model and the complexity tests.
+    pub fn apply_cost(&self, m: usize, nnz: usize) -> usize {
+        match &self.repr {
+            Repr::Dense(_) => m * self.n * self.d,
+            Repr::Subsample { .. } => nnz.min(m * self.d) + m * self.d,
+            Repr::CountSketch { .. } => nnz,
+            Repr::Srht { padded, .. } => m * padded * padded.trailing_zeros() as usize,
+        }
+    }
+}
+
+/// In-place fast Walsh–Hadamard transform (length must be a power of two).
+pub fn fwht(data: &mut [f32]) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "FWHT length must be a power of two");
+    let mut h = 1;
+    while h < n {
+        for chunk in data.chunks_mut(h * 2) {
+            let (a, b) = chunk.split_at_mut(h);
+            for (x, y) in a.iter_mut().zip(b.iter_mut()) {
+                let (u, v) = (*x, *y);
+                *x = u + v;
+                *y = u - v;
+            }
+        }
+        h *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::{Pcg64, Role, StreamRng};
+
+    fn all_kinds() -> [SketchKind; 4] {
+        [SketchKind::Gaussian, SketchKind::Subsample, SketchKind::CountSketch, SketchKind::Srht]
+    }
+
+    #[test]
+    fn deterministic_across_nodes() {
+        for kind in all_kinds() {
+            let mut r1 = StreamRng::new(99).for_iteration(3, Role::SketchU);
+            let mut r2 = StreamRng::new(99).for_iteration(3, Role::SketchU);
+            let s1 = SketchMatrix::generate(kind, 32, 8, &mut r1);
+            let s2 = SketchMatrix::generate(kind, 32, 8, &mut r2);
+            assert_eq!(s1.to_dense().data(), s2.to_dense().data(), "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn mul_right_dense_matches_materialised() {
+        let mut rng = Pcg64::new(5, 1);
+        let a = Mat::rand_uniform(10, 32, 1.0, &mut rng);
+        for kind in all_kinds() {
+            let mut r = Pcg64::new(7, 2);
+            let s = SketchMatrix::generate(kind, 32, 8, &mut r);
+            let got = s.mul_right_dense(&a);
+            let expect = a.matmul(&s.to_dense());
+            for (x, y) in got.data().iter().zip(expect.data().iter()) {
+                assert!((x - y).abs() < 1e-3, "{kind:?}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_right_sparse_matches_dense_path() {
+        let mut rng = Pcg64::new(6, 1);
+        let dense = Mat::from_fn(12, 32, |i, j| {
+            if (i * 31 + j * 7) % 5 == 0 {
+                ((i + j) as f32).sin().abs()
+            } else {
+                0.0
+            }
+        });
+        let _ = &mut rng;
+        let sparse = Csr::from_dense(&dense, 0.0);
+        for kind in all_kinds() {
+            let mut r = Pcg64::new(8, 3);
+            let s = SketchMatrix::generate(kind, 32, 8, &mut r);
+            let got = s.mul_right_sparse(&sparse);
+            let expect = s.mul_right_dense(&dense);
+            for (x, y) in got.data().iter().zip(expect.data().iter()) {
+                assert!((x - y).abs() < 1e-3, "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn mul_rows_tn_matches_block_product() {
+        // Σ_r (V_{J_r:})ᵀ S_{J_r:} must equal Vᵀ S  (Eq. 11)
+        let mut rng = Pcg64::new(9, 1);
+        let v = Mat::rand_uniform(32, 5, 1.0, &mut rng);
+        for kind in all_kinds() {
+            let mut r = Pcg64::new(11, 4);
+            let s = SketchMatrix::generate(kind, 32, 8, &mut r);
+            let expect = v.transpose().matmul(&s.to_dense());
+            // two blocks: rows 0..13 and 13..32
+            let b1 = s.mul_rows_tn(&v.row_block(0..13), 0);
+            let mut b2 = s.mul_rows_tn(&v.row_block(13..32), 13);
+            b2.axpy(1.0, &b1);
+            for (x, y) in b2.data().iter().zip(expect.data().iter()) {
+                assert!((x - y).abs() < 1e-3, "{kind:?}: {x} vs {y}");
+            }
+        }
+    }
+
+    #[test]
+    fn expectation_identity() {
+        // E[S Sᵀ] ≈ I (Assumption 1): average over many draws.
+        let n = 16;
+        let d = 8;
+        for kind in all_kinds() {
+            let trials = 600;
+            let mut acc = Mat::zeros(n, n);
+            for t in 0..trials {
+                let mut r = Pcg64::new(1000 + t as u128, kind as u128);
+                let s = SketchMatrix::generate(kind, n, d, &mut r).to_dense();
+                let sst = s.matmul_nt(&s);
+                acc.axpy(1.0 / trials as f32, &sst);
+            }
+            for i in 0..n {
+                for j in 0..n {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    let got = acc.get(i, j);
+                    assert!(
+                        (got - expect).abs() < 0.25,
+                        "{kind:?} E[SSᵀ][{i},{j}] = {got}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fwht_orthogonality() {
+        // FWHT applied twice = n * identity
+        let mut v = vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let orig = v.clone();
+        fwht(&mut v);
+        fwht(&mut v);
+        for (a, b) in v.iter().zip(orig.iter()) {
+            assert!((a / 8.0 - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn subsample_preserves_sparsity_cost() {
+        let mut r = Pcg64::new(3, 3);
+        let s = SketchMatrix::generate(SketchKind::Subsample, 1000, 10, &mut r);
+        // O(m·d) apply cost, far below gaussian's O(m·n·d)
+        assert!(s.apply_cost(100, 5000) < 100 * 1000 * 10 / 50);
+    }
+}

@@ -1,0 +1,136 @@
+//! Proximal coordinate descent — the paper's Alg. 3 and DSANLS's default
+//! subproblem solver.
+//!
+//! Solves one pass of
+//! `min_{X≥0} ‖A − X·B‖² + μ‖X − Xᵗ‖²`
+//! column-by-column (Gauss–Seidel over the k columns, closed form per
+//! column, Eq. 19):
+//!
+//! ```text
+//! X_{:j} ← max{ (μ·Xᵗ_{:j} + C_{:j} − Σ_{l≠j} G_{l j} X_{:l}) / (G_{jj} + μ), 0 }
+//! ```
+//!
+//! with `C = A·Bᵀ`, `G = B·Bᵀ`, columns `l < j` already updated and `l > j`
+//! still old — exactly the sweep order of Alg. 3. The μ-regulariser keeps
+//! the iterate anchored at `Xᵗ` so the solver does **not** converge to the
+//! (shifted) optimum of the sketched subproblem; `μ_t → ∞` drives overall
+//! convergence (Theorem 1).
+//!
+//! The problem is row-independent (Eq. 18), so the sweep runs row-wise:
+//! each row performs its own k-column Gauss–Seidel pass entirely in
+//! registers/L1 — this is also the access pattern of the L1 Pallas kernel
+//! (`python/compile/kernels/proximal_cd.py`), which parallelises rows on
+//! the grid and runs the same sequential k-loop per row.
+
+use super::Normal;
+use crate::linalg::Mat;
+use crate::parallel;
+
+/// One proximal-CD pass over all k columns, in place, parallel over rows.
+///
+/// `mu` is the proximal weight `μ_t` (the paper uses `μ_t = α + β·t`).
+/// `mu = 0` degrades to plain HALS.
+pub fn proximal_cd_update(x: &mut Mat, nrm: &Normal<'_>, mu: f32) {
+    let k = nrm.k();
+    assert_eq!(x.cols(), k);
+    assert_eq!(x.rows(), nrm.rows());
+    assert!(mu >= 0.0, "negative proximal weight");
+    let gram = nrm.gram;
+    let cross = nrm.cross;
+    let g = gram.data();
+    parallel::par_chunks_mut(x.data_mut(), 128 * k, |chunk_idx, rows_chunk| {
+        let i0 = chunk_idx * 128;
+        let n_rows = rows_chunk.len() / k;
+        for li in 0..n_rows {
+            let i = i0 + li;
+            let xrow = &mut rows_chunk[li * k..(li + 1) * k];
+            let crow = cross.row(i);
+            for j in 0..k {
+                // T = μ·x_old_j + c_j − Σ_{l≠j} G_{lj}·x_l   (x_l mixed old/new)
+                // §Perf: branch-free — full vectorisable dot, then add the
+                // j-term back (2.3 → ~5 GFLOP/s on the sweep microbench).
+                let gcol = &g[j * k..(j + 1) * k]; // row j of G == col j (sym)
+                let xj = xrow[j];
+                let full = crate::linalg::dot(xrow, gcol);
+                let t = mu * xj + crow[j] - (full - gcol[j] * xj);
+                let denom = gcol[j] + mu;
+                xrow[j] = if denom > 0.0 { (t / denom).max(0.0) } else { 0.0 };
+            }
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::testutil::*;
+    use crate::solvers::normal_from;
+
+    #[test]
+    fn single_column_closed_form() {
+        // k = 1: one CD pass IS the exact solution of the regularised problem:
+        // x = max((μ x⁰ + c) / (g + μ), 0)
+        let (_, b, a) = random_instance(5, 1, 9, 3);
+        let (gram, cross) = normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        let mut rng = crate::rng::Pcg64::new(1, 1);
+        let x0 = Mat::rand_uniform(5, 1, 1.0, &mut rng);
+        let mut x = x0.clone();
+        let mu = 0.7;
+        proximal_cd_update(&mut x, &nrm, mu);
+        for i in 0..5 {
+            let expect = ((mu * x0.get(i, 0) + cross.get(i, 0)) / (gram.get(0, 0) + mu)).max(0.0);
+            assert!((x.get(i, 0) - expect).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn mu_zero_recovers_exact_on_easy_instance() {
+        // With μ=0 and repeated sweeps, CD converges to the exact NLS
+        // solution; on a consistent instance (A = X*·B) that is X*.
+        let (xstar, b, a) = random_instance(8, 3, 30, 11);
+        let (gram, cross) = normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        let mut rng = crate::rng::Pcg64::new(2, 2);
+        let mut x = Mat::rand_uniform(8, 3, 1.0, &mut rng);
+        for _ in 0..200 {
+            proximal_cd_update(&mut x, &nrm, 0.0);
+        }
+        assert!(
+            x.dist_sq(&xstar) < 1e-5,
+            "CD did not reach the generator: dist² = {}",
+            x.dist_sq(&xstar)
+        );
+    }
+
+    #[test]
+    fn large_mu_freezes_iterate() {
+        // μ → ∞ must pin X at Xᵗ (proximal anchoring).
+        let (_, b, a) = random_instance(6, 4, 15, 5);
+        let (gram, cross) = normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        let mut rng = crate::rng::Pcg64::new(3, 3);
+        let x0 = Mat::rand_uniform(6, 4, 1.0, &mut rng);
+        let mut x = x0.clone();
+        proximal_cd_update(&mut x, &nrm, 1e9);
+        assert!(x.dist_sq(&x0) < 1e-6, "large μ moved the iterate");
+    }
+
+    #[test]
+    fn monotone_descent_of_regularised_objective() {
+        // One full sweep must not increase ‖A−XB‖² + μ‖X−X⁰‖² (exact
+        // coordinate minimisation of a convex function).
+        let (_, b, a) = random_instance(10, 5, 25, 17);
+        let (gram, cross) = normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        let mut rng = crate::rng::Pcg64::new(4, 4);
+        let x0 = Mat::rand_uniform(10, 5, 1.0, &mut rng);
+        let mu = 2.5;
+        let obj = |x: &Mat| residual(x, &b, &a) + mu as f64 * x.dist_sq(&x0);
+        let mut x = x0.clone();
+        let before = obj(&x);
+        proximal_cd_update(&mut x, &nrm, mu);
+        let after = obj(&x);
+        assert!(after <= before + 1e-9, "{before} -> {after}");
+    }
+}

@@ -1,0 +1,125 @@
+//! Small dense SPD solves (Cholesky) used by the exact NNLS/BPP baseline.
+
+use crate::linalg::Mat;
+
+pub use crate::linalg::dot;
+
+/// Cholesky factorisation `G = L·Lᵀ` of an SPD matrix (lower triangular L,
+/// row-major). Returns `None` if a pivot is non-positive (G singular /
+/// indefinite) — callers fall back to ridge damping.
+pub fn cholesky(g: &Mat) -> Option<Mat> {
+    let n = g.rows();
+    assert_eq!(g.cols(), n);
+    let mut l = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = g.get(i, j) as f64;
+            for p in 0..j {
+                s -= l.get(i, p) as f64 * l.get(j, p) as f64;
+            }
+            if i == j {
+                if s <= 1e-12 {
+                    return None;
+                }
+                l.set(i, i, s.sqrt() as f32);
+            } else {
+                l.set(i, j, (s / l.get(j, j) as f64) as f32);
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve `G x = b` given the Cholesky factor `L` (forward + backward subst).
+pub fn solve_chol(l: &Mat, b: &[f32], x: &mut [f32]) {
+    let n = l.rows();
+    debug_assert_eq!(b.len(), n);
+    debug_assert_eq!(x.len(), n);
+    // L y = b
+    for i in 0..n {
+        let mut s = b[i] as f64;
+        for p in 0..i {
+            s -= l.get(i, p) as f64 * x[p] as f64;
+        }
+        x[i] = (s / l.get(i, i) as f64) as f32;
+    }
+    // Lᵀ x = y
+    for i in (0..n).rev() {
+        let mut s = x[i] as f64;
+        for p in i + 1..n {
+            s -= l.get(p, i) as f64 * x[p] as f64;
+        }
+        x[i] = (s / l.get(i, i) as f64) as f32;
+    }
+}
+
+/// Solve `G x = b` for SPD `G`, with automatic ridge fallback when the
+/// factorisation fails numerically.
+pub fn solve_spd(g: &Mat, b: &[f32], x: &mut [f32]) {
+    if let Some(l) = cholesky(g) {
+        solve_chol(&l, b, x);
+        return;
+    }
+    // ridge: (G + δI) x = b, escalating δ until the factorisation succeeds
+    // (rank-deficient grams arise whenever k exceeds the data's true rank)
+    let n = g.rows();
+    let mut delta = 1e-6f32.max(1e-7 * g.max_abs());
+    for _ in 0..40 {
+        let mut damped = g.clone();
+        for i in 0..n {
+            let v = damped.get(i, i) + delta;
+            damped.set(i, i, v);
+        }
+        if let Some(l) = cholesky(&damped) {
+            solve_chol(&l, b, x);
+            return;
+        }
+        delta *= 10.0;
+    }
+    // pathological input (NaN/inf): fall back to zeros
+    x.fill(0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed as u128, 0);
+        let b = Mat::rand_uniform(n + 3, n, 1.0, &mut rng);
+        b.gram() // Bᵀ·B, SPD w.h.p.
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let g = random_spd(6, 51);
+        let l = cholesky(&g).expect("SPD must factor");
+        let llt = l.matmul_nt(&l);
+        for (a, b) in llt.data().iter().zip(g.data().iter()) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn solve_matches_direct() {
+        let g = random_spd(5, 53);
+        let b = [1.0f32, -2.0, 0.5, 3.0, -1.5];
+        let mut x = [0.0f32; 5];
+        solve_spd(&g, &b, &mut x);
+        // check G x ≈ b
+        for i in 0..5 {
+            let got: f32 = (0..5).map(|j| g.get(i, j) * x[j]).sum();
+            assert!((got - b[i]).abs() < 1e-2, "row {i}: {got} vs {}", b[i]);
+        }
+    }
+
+    #[test]
+    fn singular_falls_back_to_ridge() {
+        let g = Mat::zeros(3, 3); // singular
+        let b = [1.0f32, 1.0, 1.0];
+        let mut x = [0.0f32; 3];
+        solve_spd(&g, &b, &mut x); // must not panic
+        assert!(x.iter().all(|v| v.is_finite()));
+    }
+}

@@ -1,0 +1,50 @@
+//! HALS — hierarchical alternating least squares (exact cyclic coordinate
+//! descent), one of the MPI-FAUN baselines (Sec. 2.1.1 / Fig. 2 "HALS").
+//!
+//! Identical sweep to [`super::cd`] with `μ = 0`: each column update is the
+//! exact minimiser of the (unregularised) NLS objective in that coordinate
+//! block. On the *unsketched* subproblem this is the classic fast NMF
+//! solver; on a sketched subproblem it must NOT be used (it converges to
+//! the shifted optimum — the reason the paper adds the proximal term).
+
+use super::{cd, Normal};
+use crate::linalg::Mat;
+
+/// One HALS sweep in place.
+pub fn hals_update(x: &mut Mat, nrm: &Normal<'_>) {
+    cd::proximal_cd_update(x, nrm, 0.0);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::normal_from;
+    use crate::solvers::testutil::*;
+
+    #[test]
+    fn hals_is_cd_with_zero_mu() {
+        let (_, b, a) = random_instance(7, 3, 12, 31);
+        let (gram, cross) = normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        let mut rng = crate::rng::Pcg64::new(8, 8);
+        let x0 = Mat::rand_uniform(7, 3, 1.0, &mut rng);
+        let mut x1 = x0.clone();
+        let mut x2 = x0;
+        hals_update(&mut x1, &nrm);
+        cd::proximal_cd_update(&mut x2, &nrm, 0.0);
+        assert_eq!(x1.data(), x2.data());
+    }
+
+    #[test]
+    fn converges_to_exact_solution() {
+        let (xstar, b, a) = random_instance(9, 4, 35, 37);
+        let (gram, cross) = normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        let mut rng = crate::rng::Pcg64::new(9, 9);
+        let mut x = Mat::rand_uniform(9, 4, 1.0, &mut rng);
+        for _ in 0..300 {
+            hals_update(&mut x, &nrm);
+        }
+        assert!(x.dist_sq(&xstar) < 1e-5);
+    }
+}

