@@ -27,6 +27,23 @@ pub fn results_dir() -> PathBuf {
     p
 }
 
+/// Write a machine-readable bench report (e.g. `BENCH_gemm.json`).
+///
+/// `DSANLS_BENCH_JSON_DIR` overrides the destination directory (default:
+/// current directory, so `scripts/bench.sh` run from the repo root leaves
+/// the evidence file next to EXPERIMENTS.md).
+pub fn write_bench_json(file: &str, value: &dsanls::metrics::JsonValue) -> PathBuf {
+    let dir = std::env::var("DSANLS_BENCH_JSON_DIR").map(PathBuf::from).unwrap_or_default();
+    let path = if dir.as_os_str().is_empty() { PathBuf::from(file) } else { dir.join(file) };
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).ok();
+        }
+    }
+    std::fs::write(&path, value.to_string()).expect("writing bench json");
+    path
+}
+
 /// Base config matching the paper's defaults (Sec. 5.1): 10 nodes, k=100 —
 /// scaled down for quick mode (k=16, 6 nodes) unless FULL.
 pub fn base_config() -> ExperimentConfig {

@@ -1,16 +1,27 @@
-//! Microbench — the L3 hot-path primitives: blocked GEMM (NN/NT/TN),
-//! sparse SpMM, sketch application, and one proximal-CD sweep. Used by the
-//! §Perf pass (EXPERIMENTS.md) to find and verify hot-path optimisations;
-//! prints GFLOP/s against a naive-roofline estimate.
+//! Microbench — the L3 hot-path primitives: packed GEMM (NN/NT/TN) on both
+//! dispatch paths (AVX2 microkernel vs portable fallback), sparse SpMM,
+//! sketch application, and one proximal-CD sweep. Used by the §Perf pass
+//! (EXPERIMENTS.md) to find and verify hot-path optimisations; prints
+//! GFLOP/s and emits a machine-readable `BENCH_gemm.json` report.
+//!
+//! The acceptance shape for the packed-kernel rework is the 1024³
+//! `gemm_nn`: the dispatched path must beat the seed's ~17 GFLOP/s scalar
+//! i-k-j kernel by ≥ 2×. Env knobs: `DSANLS_THREADS`, `DSANLS_SIMD=portable`,
+//! `DSANLS_BENCH_FULL=1`, `DSANLS_BENCH_JSON_DIR`.
 
 mod bench_util;
 
 use std::time::Instant;
 
-use dsanls::linalg::{gemm_nn, gemm_nt, gemm_tn, Csr, Mat};
+use dsanls::linalg::{gemm_nn, gemm_nt, gemm_tn, set_force_portable, simd_path, Csr, Mat};
+use dsanls::metrics::JsonValue;
 use dsanls::rng::Pcg64;
 use dsanls::sketch::{SketchKind, SketchMatrix};
 use dsanls::solvers::{self, Normal};
+
+/// GFLOP/s the seed's scalar i-k-j axpy kernel reached on this bench
+/// (EXPERIMENTS.md §Perf, pre-rework baseline) — the ≥2× reference.
+const SEED_SCALAR_GFLOPS: f64 = 17.0;
 
 fn time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     // warmup
@@ -22,29 +33,112 @@ fn time<F: FnMut()>(mut f: F, reps: usize) -> f64 {
     t.elapsed().as_secs_f64() / reps as f64
 }
 
-fn main() {
-    bench_util::banner("microbench", "L3 hot-path primitives");
-    let mut rng = Pcg64::new(77, 0);
-    let (m, k, n) = if bench_util::full() { (2048, 128, 1024) } else { (768, 64, 512) };
+struct GemmRecord {
+    kernel: &'static str,
+    m: usize,
+    k: usize,
+    n: usize,
+    path: String,
+    ms: f64,
+    gflops: f64,
+}
 
-    // --- GEMM family ---
-    let a = Mat::rand_uniform(m, k, 1.0, &mut rng);
-    let b = Mat::rand_uniform(k, n, 1.0, &mut rng);
+impl GemmRecord {
+    fn to_json(&self) -> JsonValue {
+        JsonValue::Object(vec![
+            ("kernel".into(), JsonValue::String(self.kernel.into())),
+            ("m".into(), JsonValue::Number(self.m as f64)),
+            ("k".into(), JsonValue::Number(self.k as f64)),
+            ("n".into(), JsonValue::Number(self.n as f64)),
+            ("path".into(), JsonValue::String(self.path.clone())),
+            ("ms".into(), JsonValue::Number(self.ms * 1e3)),
+            ("gflops".into(), JsonValue::Number(self.gflops)),
+        ])
+    }
+}
+
+/// Bench all three GEMM variants on one shape with the current dispatch.
+fn bench_gemm_family(
+    m: usize,
+    k: usize,
+    n: usize,
+    reps: usize,
+    rng: &mut Pcg64,
+    records: &mut Vec<GemmRecord>,
+) {
+    let path = simd_path().to_string();
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
+    let a = Mat::rand_uniform(m, k, 1.0, rng);
+    let b = Mat::rand_uniform(k, n, 1.0, rng);
 
     let mut c = Mat::zeros(m, n);
-    let t_nn = time(|| gemm_nn(&a, &b, &mut c), 5);
-    println!("gemm_nn  {m}x{k}x{n}: {:>8.2} ms  {:>6.2} GFLOP/s", t_nn * 1e3, flops / t_nn / 1e9);
+    let t_nn = time(|| gemm_nn(&a, &b, &mut c), reps);
+    println!(
+        "gemm_nn  {m}x{k}x{n} [{path:>9}]: {:>8.2} ms  {:>6.2} GFLOP/s",
+        t_nn * 1e3,
+        flops / t_nn / 1e9
+    );
+    records.push(GemmRecord { kernel: "gemm_nn", m, k, n, path: path.clone(), ms: t_nn, gflops: flops / t_nn / 1e9 });
 
     let bt = b.transpose();
-    let t_nt = time(|| gemm_nt(&a, &bt, &mut c), 5);
-    println!("gemm_nt  {m}x{k}x{n}: {:>8.2} ms  {:>6.2} GFLOP/s", t_nt * 1e3, flops / t_nt / 1e9);
+    let t_nt = time(|| gemm_nt(&a, &bt, &mut c), reps);
+    println!(
+        "gemm_nt  {m}x{k}x{n} [{path:>9}]: {:>8.2} ms  {:>6.2} GFLOP/s",
+        t_nt * 1e3,
+        flops / t_nt / 1e9
+    );
+    records.push(GemmRecord { kernel: "gemm_nt", m, k, n, path: path.clone(), ms: t_nt, gflops: flops / t_nt / 1e9 });
 
     // gemm_tn: aᵀ·x with a (m×k), x (m×n) → (k×n); same flop count
-    let x = Mat::rand_uniform(m, n, 1.0, &mut rng);
+    let x = Mat::rand_uniform(m, n, 1.0, rng);
     let mut c2 = Mat::zeros(k, n);
-    let t_tn = time(|| gemm_tn(&a, &x, &mut c2), 5);
-    println!("gemm_tn  {k}x{m}x{n}: {:>8.2} ms  {:>6.2} GFLOP/s", t_tn * 1e3, flops / t_tn / 1e9);
+    let t_tn = time(|| gemm_tn(&a, &x, &mut c2), reps);
+    println!(
+        "gemm_tn  {k}x{m}x{n} [{path:>9}]: {:>8.2} ms  {:>6.2} GFLOP/s",
+        t_tn * 1e3,
+        flops / t_tn / 1e9
+    );
+    records.push(GemmRecord { kernel: "gemm_tn", m, k, n, path, ms: t_tn, gflops: flops / t_tn / 1e9 });
+}
+
+fn main() {
+    bench_util::banner("microbench", "L3 hot-path primitives (packed SIMD GEMM)");
+    let mut rng = Pcg64::new(77, 0);
+    let mut records: Vec<GemmRecord> = Vec::new();
+
+    // --- GEMM family: NMF-iteration shape + the 1024³ acceptance shape ---
+    let dispatch_path = simd_path().to_string(); // before the A/B toggling
+    let (m, k, n) = if bench_util::full() { (2048, 128, 1024) } else { (768, 64, 512) };
+    bench_gemm_family(m, k, n, 5, &mut rng, &mut records);
+    bench_gemm_family(1024, 1024, 1024, 3, &mut rng, &mut records);
+
+    // --- A/B: forced-portable fallback on the acceptance shape ---
+    set_force_portable(true);
+    bench_gemm_family(1024, 1024, 1024, 3, &mut rng, &mut records);
+    // restore the pre-A/B dispatch (preserves a DSANLS_SIMD=portable
+    // override instead of unconditionally re-enabling AVX2)
+    set_force_portable(dispatch_path == "portable");
+
+    let dispatched = records
+        .iter()
+        .find(|r| r.kernel == "gemm_nn" && r.m == 1024 && r.path == dispatch_path)
+        .or_else(|| records.iter().find(|r| r.kernel == "gemm_nn" && r.m == 1024));
+    let portable = records
+        .iter()
+        .rev()
+        .find(|r| r.kernel == "gemm_nn" && r.m == 1024 && r.path == "portable");
+    if let Some(d) = dispatched {
+        println!(
+            "\n1024³ gemm_nn: {} {:.2} GFLOP/s  ({:.2}× the seed scalar kernel's \
+             {SEED_SCALAR_GFLOPS} GFLOP/s{})",
+            d.path,
+            d.gflops,
+            d.gflops / SEED_SCALAR_GFLOPS,
+            portable
+                .map(|p| format!("; portable fallback {:.2} GFLOP/s", p.gflops))
+                .unwrap_or_default()
+        );
+    }
 
     // --- SpMM ---
     let nnz = m * n / 50;
@@ -67,13 +161,14 @@ fn main() {
     );
 
     // --- sketch apply (both families) ---
+    let big = Mat::rand_uniform(m, n, 1.0, &mut rng);
     let d = n / 10;
     for kind in [SketchKind::Subsample, SketchKind::Gaussian] {
         let mut srng = Pcg64::new(5, 5);
         let s = SketchMatrix::generate(kind, n, d, &mut srng);
         let t_s = time(
             || {
-                let _ = s.mul_right_dense(&c);
+                let _ = s.mul_right_dense(&big);
             },
             3,
         );
@@ -94,4 +189,26 @@ fn main() {
         t_cd * 1e3,
         cd_flops / t_cd / 1e9
     );
+
+    // --- machine-readable report ---
+    let json = JsonValue::Object(vec![
+        ("bench".into(), JsonValue::String("microbench_gemm".into())),
+        ("threads".into(), JsonValue::Number(dsanls::parallel::num_threads() as f64)),
+        ("simd".into(), JsonValue::String(dispatch_path.clone())),
+        ("full".into(), JsonValue::Bool(bench_util::full())),
+        ("seed_scalar_gflops_1024".into(), JsonValue::Number(SEED_SCALAR_GFLOPS)),
+        (
+            "speedup_vs_seed_1024".into(),
+            dispatched
+                .map(|r| JsonValue::Number(r.gflops / SEED_SCALAR_GFLOPS))
+                .unwrap_or(JsonValue::Null),
+        ),
+        ("estimated".into(), JsonValue::Bool(false)),
+        (
+            "results".into(),
+            JsonValue::Array(records.iter().map(|r| r.to_json()).collect()),
+        ),
+    ]);
+    let path = bench_util::write_bench_json("BENCH_gemm.json", &json);
+    println!("\nreport written to {path:?}");
 }

@@ -29,7 +29,7 @@ use dsanls::secure::SecureAlgo;
 use dsanls::sketch::SketchKind;
 use dsanls::solvers::SolverKind;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dsanls::Result<()> {
     let out_dir = Path::new("results/e2e");
 
     // ---- 1. workload -------------------------------------------------------

@@ -12,7 +12,7 @@ use dsanls::rng::Pcg64;
 use dsanls::runtime::{LocalSolver, NativeBackend, PjrtBackend, PjrtRuntime};
 use dsanls::sketch::SketchKind;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> dsanls::Result<()> {
     // --- 1. a rank-8 nonnegative matrix with noise -------------------------
     let mut rng = Pcg64::new(2024, 0);
     let m = {

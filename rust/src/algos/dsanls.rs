@@ -24,7 +24,7 @@ use crate::linalg::{Mat, Matrix};
 use crate::nmf::{init_factors, rel_error, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
-use crate::solvers::{self, Normal, SolverKind};
+use crate::solvers::{self, SolverKind, Workspace};
 
 /// Options for a DSANLS run.
 #[derive(Debug, Clone)]
@@ -126,6 +126,9 @@ fn node_main(
     let mut trace = Vec::new();
     record_error(ctx, m, &u_block, &v_block, opts.rank, 0, &mut trace);
 
+    // per-node normal-equation scratch, reused across iterations (zero
+    // allocations in the GEMM/solver hot path at steady state)
+    let mut ws = Workspace::new();
     for t in 0..opts.iterations {
         assert!(
             matches!(opts.solver, SolverKind::ProximalCd | SolverKind::Pgd),
@@ -144,8 +147,8 @@ fn node_main(
         ctx.all_reduce_sum(&mut buf); // B = Σ_r B̄_r  (k×d)
         let b = Mat::from_vec(opts.rank, d_u, buf);
         ctx.compute(|| {
-            let (gram, cross) = solvers::normal_from(&a_r, &b);
-            solvers::update_auto(opts.solver, &mut u_block, &Normal::new(&gram, &cross), &opts.mu, t);
+            let nrm = ws.normal_from(&a_r, &b);
+            solvers::update_auto(opts.solver, &mut u_block, &nrm, &opts.mu, t);
             if opts.box_bound {
                 u_block.clamp_max(ceiling);
             }
@@ -163,8 +166,8 @@ fn node_main(
         ctx.all_reduce_sum(&mut buf2);
         let b2 = Mat::from_vec(opts.rank, d_v, buf2);
         ctx.compute(|| {
-            let (gram2, cross2) = solvers::normal_from(&a2_r, &b2);
-            solvers::update_auto(opts.solver, &mut v_block, &Normal::new(&gram2, &cross2), &opts.mu, t);
+            let nrm = ws.normal_from(&a2_r, &b2);
+            solvers::update_auto(opts.solver, &mut v_block, &nrm, &opts.mu, t);
             if opts.box_bound {
                 v_block.clamp_max(ceiling);
             }

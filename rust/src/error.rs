@@ -1,0 +1,141 @@
+//! Minimal error handling (the environment vendors no `anyhow`).
+//!
+//! A string-backed [`Error`], a crate-wide [`Result`] alias, an
+//! anyhow-style [`Context`] extension trait for `Result`/`Option`, and the
+//! [`crate::bail!`] / [`crate::err!`] macros. Message chains are flattened
+//! into the string eagerly (`"context: cause"`), which is all the CLI and
+//! runtime loaders need.
+
+use std::fmt;
+
+/// A flattened error message.
+pub struct Error(String);
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error(m.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<String> for Error {
+    fn from(s: String) -> Self {
+        Error(s)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(s: &str) -> Self {
+        Error(s.to_string())
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error(e.to_string())
+    }
+}
+
+impl From<std::fmt::Error> for Error {
+    fn from(e: std::fmt::Error) -> Self {
+        Error(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Attach context to an error path (anyhow-style).
+pub trait Context<T> {
+    /// Wrap the error as `"{ctx}: {cause}"` (or use `ctx` alone for `None`).
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T>;
+
+    /// Like [`Context::context`] but lazily built.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.map_err(|e| Error(format!("{ctx}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, ctx: C) -> Result<T> {
+        self.ok_or_else(|| Error(ctx.to_string()))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error(f().to_string()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return an `Err` built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        let e = std::fs::read_to_string("/definitely/not/a/path/3141592653");
+        e.context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn context_chains_messages() {
+        let err = io_fail().unwrap_err();
+        assert!(err.to_string().starts_with("reading config: "), "{err}");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let err = v.context("missing field").unwrap_err();
+        assert_eq!(err.to_string(), "missing field");
+    }
+
+    #[test]
+    fn bail_and_err_macros() {
+        fn f(x: i32) -> Result<i32> {
+            if x < 0 {
+                bail!("negative input {x}");
+            }
+            Err(err!("always fails with {x}"))
+        }
+        assert_eq!(f(-1).unwrap_err().to_string(), "negative input -1");
+        assert_eq!(f(2).unwrap_err().to_string(), "always fails with 2");
+    }
+}

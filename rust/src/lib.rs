@@ -29,6 +29,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod dist;
+pub mod error;
 pub mod linalg;
 pub mod metrics;
 pub mod nmf;
@@ -41,7 +42,7 @@ pub mod solvers;
 pub mod testkit;
 
 /// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+pub type Result<T> = error::Result<T>;
 
 /// Crate version string (mirrors `Cargo.toml`).
 pub const VERSION: &str = env!("CARGO_PKG_VERSION");

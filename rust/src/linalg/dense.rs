@@ -106,6 +106,19 @@ impl Mat {
         self.data
     }
 
+    /// Reshape in place to `rows × cols`, reusing the existing buffer.
+    /// Grows (allocating) only when the element count increases — the
+    /// workspace-reuse primitive behind the zero-alloc iteration path.
+    /// Contents are unspecified afterwards; callers overwrite.
+    pub fn resize_to(&mut self, rows: usize, cols: usize) {
+        let need = rows * cols;
+        if self.data.len() != need {
+            self.data.resize(need, 0.0);
+        }
+        self.rows = rows;
+        self.cols = cols;
+    }
+
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f32 {
         debug_assert!(i < self.rows && j < self.cols);

@@ -1,4 +1,4 @@
-//! Cache-blocked, multi-threaded GEMM kernels (f32, row-major).
+//! Packed, register-blocked, explicit-SIMD GEMM kernels (f32, row-major).
 //!
 //! Three variants cover every product in the NMF algorithms:
 //!
@@ -6,18 +6,436 @@
 //! * [`gemm_nt`]  — `C = A·Bᵀ`       (e.g. `A_r Bᵀ`, `B Bᵀ` gram)
 //! * [`gemm_tn`]  — `C = Aᵀ·B`       (e.g. `V_{J_r}ᵀ S_{J_r}` sketch summand)
 //!
-//! Strategy: `nn`/`nt` parallelise over row panels of `C` (disjoint `&mut`
-//! chunks), with k-blocking so the active B panel stays in L1/L2; `tn`
-//! accumulates thread-local partials over row ranges of A (its output is
-//! small — k×d or k×k — so the final reduction is cheap).
+//! ## Strategy
+//!
+//! `nn`/`nt` run a BLIS-style packed kernel: operand blocks are copied into
+//! contiguous scratch — A into `MR`-row panels, B into `NR`-column panels —
+//! then an `MR×NR` register-tiled microkernel sweeps the k-block. The
+//! microkernel is explicit AVX2+FMA (`f32x8`, 6×16 tile, 12 accumulator
+//! registers) with a portable unrolled fallback, dispatched at runtime via
+//! `is_x86_feature_detected!` (override with `DSANLS_SIMD=portable` or
+//! [`set_force_portable`] for A/B tests). **`gemm_nt` transposes nothing**:
+//! the B-packing routine reads `Bᵀ` straight out of the row-major `B`, so
+//! the seed's `transpose(B)` + `gemm_nn` workaround (an O(nk) copy per
+//! call) is folded into packing.
+//!
+//! Parallelism: row panels of `C` (disjoint `&mut` chunks) on the
+//! persistent pool of [`crate::parallel`]. Packing scratch lives in
+//! thread-local buffers that the pool's long-lived workers reuse, so the
+//! kernels themselves perform **zero heap allocation** in steady state —
+//! measured single-threaded by `tests/alloc_hotpath.rs`. (Multithreaded
+//! calls additionally pay one `Arc`-based job handle per parallel region
+//! in [`crate::parallel`] — dispatch bookkeeping, not per-element
+//! traffic.)
+//!
+//! `tn` has a small `k×n` output (k and n are the factorisation rank /
+//! sketch size) but a long `m` reduction, so register tiling over the
+//! output cannot pay; it instead parallelises the reduction over row
+//! ranges with per-part partial accumulators and an explicit-SIMD
+//! [`saxpy`] inner loop. The multithreaded `tn` path allocates its
+//! (small, `k×n`) partials per call; single-threaded `tn` writes straight
+//! into `out` and allocates nothing.
+//!
+//! §Perf: seed scalar i-k-j kernel ≈ 17 GFLOP/s on 1024³ `gemm_nn`; the
+//! packed AVX2 path is ≥ 2× that (see EXPERIMENTS.md §Perf and
+//! `benches/microbench_gemm.rs`, which emits `BENCH_gemm.json`).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
 
 use super::Mat;
 use crate::parallel;
 
-/// Rows of C handled per parallel task.
+/// Microkernel tile rows (A panel height).
+const MR: usize = 6;
+/// Microkernel tile columns (B panel width) — two f32x8 vectors.
+const NR: usize = 16;
+/// k-dimension cache block (A/B panel depth); sized for L1/L2 residency.
+const KC: usize = 256;
+/// Row block per parallel task (multiple of `MR`).
+const MC: usize = 72;
+/// Column cache block (multiple of `NR`).
+const NC: usize = 512;
+/// Below this `m·n·k`, packing overhead dominates — use the naive loop.
+const SMALL_GEMM: usize = 32 * 32 * 32;
+/// Rows of C per parallel task in the `nt` dot fast path.
 const ROW_CHUNK: usize = 64;
-/// k-dimension blocking factor.
-const KBLOCK: usize = 256;
+
+// ---------------------------------------------------------------------------
+// SIMD dispatch
+// ---------------------------------------------------------------------------
+
+static FORCE_PORTABLE: AtomicBool = AtomicBool::new(false);
+
+fn init_simd_env() {
+    static ONCE: OnceLock<()> = OnceLock::new();
+    ONCE.get_or_init(|| {
+        if std::env::var("DSANLS_SIMD").map(|v| v == "portable").unwrap_or(false) {
+            FORCE_PORTABLE.store(true, Ordering::Relaxed);
+        }
+    });
+}
+
+/// True when the AVX2+FMA microkernel is compiled in, detected at runtime,
+/// and not overridden.
+fn use_avx2() -> bool {
+    init_simd_env();
+    if FORCE_PORTABLE.load(Ordering::Relaxed) {
+        return false;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        static DETECTED: OnceLock<bool> = OnceLock::new();
+        *DETECTED.get_or_init(|| {
+            std::arch::is_x86_feature_detected!("avx2")
+                && std::arch::is_x86_feature_detected!("fma")
+        })
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Force the portable (non-intrinsic) kernels, e.g. for dispatch-path
+/// equivalence tests and `DSANLS_SIMD=portable` A/B benchmarking.
+pub fn set_force_portable(on: bool) {
+    init_simd_env();
+    FORCE_PORTABLE.store(on, Ordering::Relaxed);
+}
+
+/// Which inner-kernel path the next GEMM call will take.
+pub fn simd_path() -> &'static str {
+    if use_avx2() {
+        "avx2-fma"
+    } else {
+        "portable"
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packing
+// ---------------------------------------------------------------------------
+
+/// How a packing routine reads its source matrix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Layout {
+    /// Element `(i, j)` is `src[i * ld + j]`.
+    RowMajor,
+    /// Element `(i, j)` is `src[j * ld + i]` — a transposed *view*, used to
+    /// fold `gemm_nt`'s `Bᵀ` into packing without materialising it.
+    Transposed,
+}
+
+#[inline(always)]
+fn elem(src: &[f32], ld: usize, layout: Layout, i: usize, j: usize) -> f32 {
+    match layout {
+        Layout::RowMajor => src[i * ld + j],
+        Layout::Transposed => src[j * ld + i],
+    }
+}
+
+/// Pack rows `i0..i0+mc` × cols `p0..p0+kc` of the A view into `MR`-row
+/// panels: `dst[panel*kc*MR + p*MR + r]`, zero-padded to a full `MR`.
+#[allow(clippy::too_many_arguments)]
+fn pack_a(
+    dst: &mut [f32],
+    a: &[f32],
+    lda: usize,
+    layout: Layout,
+    i0: usize,
+    mc: usize,
+    p0: usize,
+    kc: usize,
+) {
+    let mut off = 0;
+    let mut ir = 0;
+    while ir < mc {
+        let mr = MR.min(mc - ir);
+        for p in 0..kc {
+            let col = &mut dst[off + p * MR..off + (p + 1) * MR];
+            for (r, slot) in col.iter_mut().enumerate() {
+                *slot = if r < mr { elem(a, lda, layout, i0 + ir + r, p0 + p) } else { 0.0 };
+            }
+        }
+        off += kc * MR;
+        ir += MR;
+    }
+}
+
+/// Pack rows `p0..p0+kc` × cols `j0..j0+nc` of the B view into `NR`-column
+/// panels: `dst[panel*kc*NR + p*NR + j]`, zero-padded to a full `NR`.
+#[allow(clippy::too_many_arguments)]
+fn pack_b(
+    dst: &mut [f32],
+    b: &[f32],
+    ldb: usize,
+    layout: Layout,
+    p0: usize,
+    kc: usize,
+    j0: usize,
+    nc: usize,
+) {
+    let mut off = 0;
+    let mut jr = 0;
+    while jr < nc {
+        let nr = NR.min(nc - jr);
+        for p in 0..kc {
+            let row = &mut dst[off + p * NR..off + (p + 1) * NR];
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = if j < nr { elem(b, ldb, layout, p0 + p, j0 + jr + j) } else { 0.0 };
+            }
+        }
+        off += kc * NR;
+        jr += NR;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Microkernels: acc (MR×NR, zero-initialised by the caller) += A~ · B~
+// ---------------------------------------------------------------------------
+
+#[inline(always)]
+fn micro_kernel_portable(kc: usize, a: &[f32], b: &[f32], acc: &mut [f32; MR * NR]) {
+    for p in 0..kc {
+        let ap = &a[p * MR..(p + 1) * MR];
+        let bp = &b[p * NR..(p + 1) * NR];
+        for r in 0..MR {
+            let ar = ap[r];
+            let row = &mut acc[r * NR..(r + 1) * NR];
+            for (c, &bv) in row.iter_mut().zip(bp.iter()) {
+                *c += ar * bv;
+            }
+        }
+    }
+}
+
+/// 6×16 AVX2+FMA tile: 12 ymm accumulators, 2 B vectors, 1 broadcast.
+///
+/// # Safety
+/// Caller must have verified AVX2+FMA support (see [`use_avx2`]). `a` must
+/// hold `kc*MR` floats, `b` `kc*NR` floats.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn micro_kernel_avx2(kc: usize, a: &[f32], b: &[f32], acc: &mut [f32; MR * NR]) {
+    use std::arch::x86_64::*;
+    debug_assert!(a.len() >= kc * MR && b.len() >= kc * NR);
+    let mut c: [[__m256; 2]; MR] = [[_mm256_setzero_ps(); 2]; MR];
+    let ap = a.as_ptr();
+    let bp = b.as_ptr();
+    for p in 0..kc {
+        let b0 = _mm256_loadu_ps(bp.add(p * NR));
+        let b1 = _mm256_loadu_ps(bp.add(p * NR + 8));
+        for (r, cr) in c.iter_mut().enumerate() {
+            let ar = _mm256_set1_ps(*ap.add(p * MR + r));
+            cr[0] = _mm256_fmadd_ps(ar, b0, cr[0]);
+            cr[1] = _mm256_fmadd_ps(ar, b1, cr[1]);
+        }
+    }
+    for (r, cr) in c.iter().enumerate() {
+        _mm256_storeu_ps(acc.as_mut_ptr().add(r * NR), cr[0]);
+        _mm256_storeu_ps(acc.as_mut_ptr().add(r * NR + 8), cr[1]);
+    }
+}
+
+/// `y += alpha · x`, explicit AVX2+FMA with portable fallback. Shared by
+/// `gemm_tn`'s reduction and the sparse SpMM kernels
+/// ([`crate::linalg::Csr::spmm`] / `spmm_tn`).
+#[inline]
+pub fn saxpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    saxpy_dispatch(use_avx2(), alpha, x, y);
+}
+
+/// [`saxpy`] with the SIMD decision hoisted by the caller — `gemm_tn`
+/// resolves dispatch once per GEMM instead of once per nonzero element.
+#[inline]
+fn saxpy_dispatch(simd: bool, alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    #[cfg(target_arch = "x86_64")]
+    if simd && x.len() >= 16 {
+        // SAFETY: `simd` is only true after use_avx2() detection
+        unsafe { saxpy_avx2(alpha, x, y) };
+        return;
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    for (yv, &xv) in y.iter_mut().zip(x.iter()) {
+        *yv += alpha * xv;
+    }
+}
+
+/// # Safety
+/// Caller must have verified AVX2+FMA support.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn saxpy_avx2(alpha: f32, x: &[f32], y: &mut [f32]) {
+    use std::arch::x86_64::*;
+    let n = x.len();
+    let xp = x.as_ptr();
+    let yp = y.as_mut_ptr();
+    let av = _mm256_set1_ps(alpha);
+    let mut i = 0;
+    while i + 8 <= n {
+        let xv = _mm256_loadu_ps(xp.add(i));
+        let yv = _mm256_loadu_ps(yp.add(i));
+        _mm256_storeu_ps(yp.add(i), _mm256_fmadd_ps(av, xv, yv));
+        i += 8;
+    }
+    while i < n {
+        *yp.add(i) += alpha * *xp.add(i);
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Macro kernel + packed driver
+// ---------------------------------------------------------------------------
+
+/// One cache block: `C[0..mc, jc..jc+nc] += A~ · B~` over a `kc` depth.
+#[allow(clippy::too_many_arguments)]
+fn macro_kernel(
+    abuf: &[f32],
+    bbuf: &[f32],
+    kc: usize,
+    mc: usize,
+    nc: usize,
+    c: &mut [f32],
+    ldc: usize,
+    jc: usize,
+    simd: bool,
+) {
+    let mut ir = 0;
+    while ir < mc {
+        let mr = MR.min(mc - ir);
+        let a_panel = &abuf[(ir / MR) * kc * MR..][..kc * MR];
+        let mut jr = 0;
+        while jr < nc {
+            let nr = NR.min(nc - jr);
+            let b_panel = &bbuf[(jr / NR) * kc * NR..][..kc * NR];
+            let mut acc = [0.0f32; MR * NR];
+            #[cfg(target_arch = "x86_64")]
+            if simd {
+                // SAFETY: `simd` is only true after use_avx2() detection
+                unsafe { micro_kernel_avx2(kc, a_panel, b_panel, &mut acc) };
+            } else {
+                micro_kernel_portable(kc, a_panel, b_panel, &mut acc);
+            }
+            #[cfg(not(target_arch = "x86_64"))]
+            {
+                let _ = simd;
+                micro_kernel_portable(kc, a_panel, b_panel, &mut acc);
+            }
+            for r in 0..mr {
+                let crow = &mut c[(ir + r) * ldc + jc + jr..][..nr];
+                for (cv, &av) in crow.iter_mut().zip(acc[r * NR..r * NR + nr].iter()) {
+                    *cv += av;
+                }
+            }
+            jr += NR;
+        }
+        ir += MR;
+    }
+}
+
+thread_local! {
+    /// Per-worker packing scratch. Pool workers are persistent, so these
+    /// amortise to zero allocations in steady state.
+    static A_PACK: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+    static B_PACK: std::cell::RefCell<Vec<f32>> = const { std::cell::RefCell::new(Vec::new()) };
+}
+
+/// Packed driver: `C (m×n, overwritten) = Aview (m×k) · Bview (k×n)`.
+///
+/// BLIS loop order: for each `(jc, pc)` cache block the submitting thread
+/// packs B **once** into its thread-local scratch, then the `MC`-row
+/// chunks of C fan out across the pool, each worker packing its own A
+/// panel. (Packing B per row chunk instead would duplicate the B copy
+/// `m/MC` times per call.) A is re-packed per `jc` block; with
+/// `NC = 512` that is one extra A pass only for very wide `n`.
+#[allow(clippy::too_many_arguments)]
+fn gemm_packed(
+    m: usize,
+    n: usize,
+    k: usize,
+    a: &[f32],
+    lda: usize,
+    a_layout: Layout,
+    b: &[f32],
+    ldb: usize,
+    b_layout: Layout,
+    c: &mut [f32],
+) {
+    debug_assert_eq!(c.len(), m * n);
+    let simd = use_avx2();
+    B_PACK.with(|bpc| {
+        let mut bbuf = bpc.borrow_mut();
+        let b_need = KC * NC;
+        if bbuf.len() < b_need {
+            bbuf.resize(b_need, 0.0);
+        }
+        let mut jc = 0;
+        while jc < n {
+            let nc = NC.min(n - jc);
+            let mut pc = 0;
+            while pc < k {
+                let kc = KC.min(k - pc);
+                pack_b(&mut bbuf, b, ldb, b_layout, pc, kc, jc, nc);
+                let bref: &[f32] = &bbuf[..];
+                let zero_first = jc == 0 && pc == 0;
+                parallel::par_chunks_mut(c, MC * n, |chunk_idx, c_chunk| {
+                    let i0 = chunk_idx * MC;
+                    let mc = c_chunk.len() / n;
+                    if zero_first {
+                        c_chunk.fill(0.0);
+                    }
+                    A_PACK.with(|apc| {
+                        let mut abuf = apc.borrow_mut();
+                        let a_need = mc.div_ceil(MR) * MR * KC;
+                        if abuf.len() < a_need {
+                            abuf.resize(a_need, 0.0);
+                        }
+                        pack_a(&mut abuf, a, lda, a_layout, i0, mc, pc, kc);
+                        macro_kernel(&abuf, bref, kc, mc, nc, c_chunk, n, jc, simd);
+                    });
+                });
+                pc += KC;
+            }
+            jc += NC;
+        }
+    });
+}
+
+/// Serial naive kernel for tiny problems where packing cannot pay.
+#[allow(clippy::too_many_arguments)]
+fn gemm_naive(m: usize, n: usize, k: usize, a: &[f32], lda: usize, a_layout: Layout, b: &[f32], ldb: usize, b_layout: Layout, c: &mut [f32]) {
+    c.fill(0.0);
+    for i in 0..m {
+        let crow = &mut c[i * n..(i + 1) * n];
+        for p in 0..k {
+            let av = elem(a, lda, a_layout, i, p);
+            if av == 0.0 {
+                continue;
+            }
+            match b_layout {
+                Layout::RowMajor => {
+                    let brow = &b[p * ldb..p * ldb + n];
+                    for (cv, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *cv += av * bv;
+                    }
+                }
+                Layout::Transposed => {
+                    for (j, cv) in crow.iter_mut().enumerate() {
+                        *cv += av * b[j * ldb + p];
+                    }
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry points
+// ---------------------------------------------------------------------------
 
 /// `out = a · b` where `a: m×k`, `b: k×n`, `out: m×n` (overwritten).
 pub fn gemm_nn(a: &Mat, b: &Mat, out: &mut Mat) {
@@ -25,50 +443,41 @@ pub fn gemm_nn(a: &Mat, b: &Mat, out: &mut Mat) {
     let n = b.cols();
     assert_eq!(b.rows(), k);
     assert_eq!((out.rows(), out.cols()), (m, n));
-    let a_data = a.data();
-    let b_data = b.data();
-    parallel::par_chunks_mut(out.data_mut(), ROW_CHUNK * n, |chunk_idx, c_chunk| {
-        c_chunk.fill(0.0);
-        let i0 = chunk_idx * ROW_CHUNK;
-        let rows_here = c_chunk.len() / n;
-        for kb in (0..k).step_by(KBLOCK) {
-            let kend = (kb + KBLOCK).min(k);
-            for li in 0..rows_here {
-                let i = i0 + li;
-                let a_row = &a_data[i * k..(i + 1) * k];
-                let c_row = &mut c_chunk[li * n..(li + 1) * n];
-                for kk in kb..kend {
-                    let aik = a_row[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
-                    let b_row = &b_data[kk * n..(kk + 1) * n];
-                    // i-k-j: unit-stride axpy over the C row.
-                    for (c, &bv) in c_row.iter_mut().zip(b_row.iter()) {
-                        *c += aik * bv;
-                    }
-                }
-            }
-        }
-    });
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.data_mut().fill(0.0);
+        return;
+    }
+    if m * n * k <= SMALL_GEMM {
+        gemm_naive(m, n, k, a.data(), k, Layout::RowMajor, b.data(), n, Layout::RowMajor, out.data_mut());
+        return;
+    }
+    gemm_packed(m, n, k, a.data(), k, Layout::RowMajor, b.data(), n, Layout::RowMajor, out.data_mut());
 }
 
 /// `out = a · bᵀ` where `a: m×k`, `b: n×k`, `out: m×n` (overwritten).
 ///
-/// §Perf: implemented as `transpose(b)` + [`gemm_nn`]. The dot-product
-/// formulation ran at ~4.7 GFLOP/s (strict-FP scalar reduction defeats
-/// auto-vectorisation); the i-k-j axpy kernel of `gemm_nn` runs at
-/// ~17 GFLOP/s, and in every hot call site (`normal_from`: `A·Bᵀ`, `B·Bᵀ`)
-/// the transposed operand is the small `k×d` factor, so the O(nk)
-/// transpose is noise. Measured 3.4× end-to-end on the microbench
-/// (EXPERIMENTS.md §Perf).
+/// §Perf: the transposed operand is read directly by the packing routine
+/// (`Layout::Transposed`), so no `k×n` transpose is materialised — the
+/// seed's `transpose(b)` + `gemm_nn` detour is gone. For very narrow
+/// outputs (`n ≤ 8`, e.g. the `rows×k` cross-products against a small
+/// factor) a parallel dot-product path is faster than packing.
 pub fn gemm_nt(a: &Mat, b: &Mat, out: &mut Mat) {
     let (m, k) = (a.rows(), a.cols());
     let n = b.rows();
     assert_eq!(b.cols(), k);
     assert_eq!((out.rows(), out.cols()), (m, n));
-    if n <= 4 {
-        // tiny output width: dot products beat transpose+axpy
+    if m == 0 || n == 0 {
+        return;
+    }
+    if k == 0 {
+        out.data_mut().fill(0.0);
+        return;
+    }
+    if n <= 8 && m * n * k > SMALL_GEMM {
+        // narrow output: dot products over rows of a × rows of b
         let a_data = a.data();
         let b_data = b.data();
         parallel::par_chunks_mut(out.data_mut(), ROW_CHUNK * n, |chunk_idx, c_chunk| {
@@ -85,49 +494,78 @@ pub fn gemm_nt(a: &Mat, b: &Mat, out: &mut Mat) {
         });
         return;
     }
-    let bt = b.transpose(); // k×n
-    gemm_nn(a, &bt, out);
+    if m * n * k <= SMALL_GEMM {
+        gemm_naive(m, n, k, a.data(), k, Layout::RowMajor, b.data(), k, Layout::Transposed, out.data_mut());
+        return;
+    }
+    gemm_packed(m, n, k, a.data(), k, Layout::RowMajor, b.data(), k, Layout::Transposed, out.data_mut());
 }
 
 /// `out = aᵀ · b` where `a: m×k`, `b: m×n`, `out: k×n` (overwritten).
+///
+/// The output is small (`k`, `n` are rank/sketch sizes) but the reduction
+/// dimension `m` is long, so this parallelises over row ranges of `a`/`b`
+/// with thread-local `k×n` partials and a SIMD [`saxpy`] inner loop, then
+/// sums the partials in part order (deterministic).
 pub fn gemm_tn(a: &Mat, b: &Mat, out: &mut Mat) {
     let (m, k) = (a.rows(), a.cols());
     let n = b.cols();
     assert_eq!(b.rows(), m);
     assert_eq!((out.rows(), out.cols()), (k, n));
+    if k == 0 || n == 0 {
+        return;
+    }
+    let out_data = out.data_mut();
+    if m == 0 {
+        out_data.fill(0.0);
+        return;
+    }
     let a_data = a.data();
     let b_data = b.data();
-    let nparts = parallel::num_threads().min(m.div_ceil(ROW_CHUNK)).max(1);
-    // Thread-local partial k×n accumulators over disjoint row ranges of A/B.
+    let simd = use_avx2(); // resolve dispatch once, not per nonzero element
+    let nparts = parallel::num_threads().min(m.div_ceil(128)).max(1);
+    if nparts == 1 {
+        out_data.fill(0.0);
+        tn_accumulate(simd, a_data, b_data, k, n, 0..m, out_data);
+        return;
+    }
+    let ranges = parallel::split_ranges(m, nparts);
     let partials = parallel::par_map(nparts, |p| {
-        let ranges = parallel::split_ranges(m, nparts);
-        let r = ranges[p].clone();
         let mut part = vec![0.0f32; k * n];
-        for row in r {
-            let a_row = &a_data[row * k..(row + 1) * k];
-            let b_row = &b_data[row * n..(row + 1) * n];
-            for (i, &av) in a_row.iter().enumerate() {
-                if av == 0.0 {
-                    continue;
-                }
-                let c_row = &mut part[i * n..(i + 1) * n];
-                for (c, &bv) in c_row.iter_mut().zip(b_row.iter()) {
-                    *c += av * bv;
-                }
-            }
-        }
+        tn_accumulate(simd, a_data, b_data, k, n, ranges[p].clone(), &mut part);
         part
     });
-    let out_data = out.data_mut();
     out_data.fill(0.0);
     for part in partials {
-        for (o, p) in out_data.iter_mut().zip(part.iter()) {
-            *o += p;
+        saxpy_dispatch(simd, 1.0, &part, out_data);
+    }
+}
+
+/// `acc (k×n) += Aᵀ·B` over the given row range.
+#[allow(clippy::too_many_arguments)]
+fn tn_accumulate(
+    simd: bool,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    n: usize,
+    rows: std::ops::Range<usize>,
+    acc: &mut [f32],
+) {
+    for row in rows {
+        let a_row = &a[row * k..(row + 1) * k];
+        let b_row = &b[row * n..(row + 1) * n];
+        for (i, &av) in a_row.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            saxpy_dispatch(simd, av, b_row, &mut acc[i * n..(i + 1) * n]);
         }
     }
 }
 
-/// Unrolled dot product (the `nt` microkernel).
+/// Unrolled dot product (narrow-output microkernel, also used by the
+/// sparse loss and the CD solver sweep).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     debug_assert_eq!(a.len(), b.len());
@@ -173,27 +611,122 @@ mod tests {
         }
     }
 
+    /// All three variants against the f64 naive reference on one shape.
+    fn check_shape(m: usize, k: usize, n: usize, rng: &mut Pcg64) {
+        let a = Mat::rand_uniform(m, k, 1.0, rng);
+        let b = Mat::rand_uniform(k, n, 1.0, rng);
+        let expect = naive_nn(&a, &b);
+
+        let mut c = Mat::zeros(m, n);
+        gemm_nn(&a, &b, &mut c);
+        assert_close(&c, &expect, 1e-4);
+
+        let bt = b.transpose();
+        let mut c2 = Mat::zeros(m, n);
+        gemm_nt(&a, &bt, &mut c2);
+        assert_close(&c2, &expect, 1e-4);
+
+        let at = a.transpose();
+        let mut c3 = Mat::zeros(m, n);
+        gemm_tn(&at, &b, &mut c3);
+        assert_close(&c3, &expect, 1e-4);
+    }
+
     #[test]
     fn gemm_matches_naive() {
         let mut rng = Pcg64::new(17, 0);
         for &(m, k, n) in &[(1usize, 1usize, 1usize), (3, 5, 7), (64, 33, 65), (130, 17, 129)] {
-            let a = Mat::rand_uniform(m, k, 1.0, &mut rng);
-            let b = Mat::rand_uniform(k, n, 1.0, &mut rng);
-            let expect = naive_nn(&a, &b);
+            check_shape(m, k, n, &mut rng);
+        }
+    }
 
+    #[test]
+    fn gemm_edge_shapes_match_naive() {
+        // non-multiple-of-block dims around MR=6/NR=16/KC=256, single
+        // rows/cols, and tall-skinny m ≫ k
+        let mut rng = Pcg64::new(19, 1);
+        for &(m, k, n) in &[
+            (127usize, 63usize, 255usize), // odd everything, k spills no KC block
+            (6, 16, 16),                   // exactly one microtile
+            (7, 17, 17),                   // one microtile + 1 edge everywhere
+            (72, 256, 512),                // exactly one (MC, KC, NC) block
+            (73, 257, 33),                 // one block + 1
+            (5, 1, 5),                     // k = 1
+            (1, 128, 9),                   // single row
+            (97, 300, 1),                  // single col (k past one KC block)
+            (500, 3, 5),                   // tall-skinny m ≫ k
+            (600, 40, 2),                  // narrow-output nt fast path
+        ] {
+            check_shape(m, k, n, &mut rng);
+        }
+    }
+
+    #[test]
+    fn gemm_zero_sized_dims_are_guarded() {
+        let mut rng = Pcg64::new(23, 2);
+        // k = 0: product must be all zeros (and not panic)
+        let a = Mat::zeros(4, 0);
+        let b = Mat::zeros(0, 3);
+        let mut c = Mat::rand_uniform(4, 3, 1.0, &mut rng);
+        gemm_nn(&a, &b, &mut c);
+        assert!(c.data().iter().all(|&v| v == 0.0));
+        let mut c2 = Mat::rand_uniform(4, 0, 1.0, &mut rng);
+        let bt = Mat::zeros(0, 0);
+        gemm_nt(&a, &bt, &mut c2); // n = 0 and k = 0
+        // m = 0 rows
+        let a0 = Mat::zeros(0, 5);
+        let b5 = Mat::zeros(5, 3);
+        let mut c0 = Mat::zeros(0, 3);
+        gemm_nn(&a0, &b5, &mut c0);
+        // tn with zero reduction length
+        let mut g = Mat::rand_uniform(5, 3, 1.0, &mut rng);
+        gemm_tn(&a0, &Mat::zeros(0, 3), &mut g);
+        assert!(g.data().iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn simd_and_portable_paths_agree() {
+        // exercise both dispatch paths against the f64 reference; on
+        // machines without AVX2 both runs take the portable kernel and the
+        // test degenerates to a (still valid) regression check
+        let mut rng = Pcg64::new(29, 3);
+        let (m, k, n) = (151, 93, 70);
+        let a = Mat::rand_uniform(m, k, 1.0, &mut rng);
+        let b = Mat::rand_uniform(k, n, 1.0, &mut rng);
+        let bt = b.transpose();
+        let at = a.transpose();
+        let expect = naive_nn(&a, &b);
+
+        for force_portable in [true, false] {
+            set_force_portable(force_portable);
             let mut c = Mat::zeros(m, n);
             gemm_nn(&a, &b, &mut c);
             assert_close(&c, &expect, 1e-4);
-
-            let bt = b.transpose();
             let mut c2 = Mat::zeros(m, n);
             gemm_nt(&a, &bt, &mut c2);
             assert_close(&c2, &expect, 1e-4);
-
-            let at = a.transpose();
             let mut c3 = Mat::zeros(m, n);
             gemm_tn(&at, &b, &mut c3);
             assert_close(&c3, &expect, 1e-4);
+        }
+        set_force_portable(false);
+    }
+
+    #[test]
+    fn saxpy_matches_scalar() {
+        let mut rng = Pcg64::new(37, 4);
+        for len in [0usize, 1, 7, 8, 15, 16, 17, 100, 1000] {
+            let x: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+            let mut y: Vec<f32> = (0..len).map(|_| rng.next_f32()).collect();
+            let mut y_ref = y.clone();
+            let alpha = 0.37f32;
+            saxpy(alpha, &x, &mut y);
+            for (yv, &xv) in y_ref.iter_mut().zip(x.iter()) {
+                *yv += alpha * xv;
+            }
+            for (a, b) in y.iter().zip(y_ref.iter()) {
+                assert!((a - b).abs() < 1e-5);
+            }
         }
     }
 

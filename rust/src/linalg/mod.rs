@@ -1,8 +1,12 @@
 //! Dense and sparse linear algebra substrate (f32, row-major).
 //!
-//! Built from scratch (no BLAS available offline): a cache-blocked,
-//! multi-threaded GEMM ([`gemm`]), a row-major dense [`Mat`], and a CSR
-//! sparse matrix [`Csr`] with the SpMM variants the NMF algorithms need.
+//! Built from scratch (no BLAS available offline): a packed,
+//! register-blocked, explicit-SIMD GEMM ([`gemm`] — AVX2/FMA microkernel
+//! with a portable fallback, runtime-dispatched), a row-major dense
+//! [`Mat`], and a CSR sparse matrix [`Csr`] with the SpMM variants the NMF
+//! algorithms need. Parallel loops run on the persistent worker pool of
+//! [`crate::parallel`]; GEMM packing scratch is thread-local and reused
+//! across calls, so steady-state products allocate nothing.
 //!
 //! Everything is `f32`: it matches the AOT XLA artifacts, halves memory
 //! traffic versus f64 (NMF is memory-bound), and the paper's MKL baseline
@@ -13,7 +17,7 @@ mod gemm;
 mod sparse;
 
 pub use dense::Mat;
-pub use gemm::{dot, gemm_nn, gemm_nt, gemm_tn};
+pub use gemm::{dot, gemm_nn, gemm_nt, gemm_tn, saxpy, set_force_portable, simd_path};
 pub use sparse::Csr;
 
 /// Either a dense or a sparse input matrix `M`. The NMF algorithms are

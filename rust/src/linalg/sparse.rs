@@ -198,14 +198,26 @@ impl Csr {
 
     /// `out = self · dense` (m×n · n×k → m×k), parallel over row ranges.
     pub fn spmm(&self, dense: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, dense.cols());
+        self.spmm_into(dense, &mut out);
+        out
+    }
+
+    /// [`Csr::spmm`] into caller-owned scratch (resized in place) — the
+    /// zero-alloc path used by the iteration workspaces.
+    pub fn spmm_into(&self, dense: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, dense.rows(), "spmm shape mismatch");
         let k = dense.cols();
-        let mut out = Mat::zeros(self.rows, k);
+        out.resize_to(self.rows, k);
+        if k == 0 || self.rows == 0 {
+            return;
+        }
         let indptr = &self.indptr;
         let indices = &self.indices;
         let values = &self.values;
         let d_data = dense.data();
         parallel::par_chunks_mut(out.data_mut(), 64 * k, |chunk_idx, c_chunk| {
+            c_chunk.fill(0.0); // scratch may carry a previous iteration
             let i0 = chunk_idx * 64;
             let rows_here = c_chunk.len() / k;
             for li in 0..rows_here {
@@ -213,14 +225,10 @@ impl Csr {
                 let c_row = &mut c_chunk[li * k..(li + 1) * k];
                 for p in indptr[i]..indptr[i + 1] {
                     let (j, v) = (indices[p], values[p]);
-                    let d_row = &d_data[j * k..(j + 1) * k];
-                    for (c, &dv) in c_row.iter_mut().zip(d_row.iter()) {
-                        *c += v * dv;
-                    }
+                    gemm::saxpy(v, &d_data[j * k..(j + 1) * k], c_row);
                 }
             }
         });
-        out
     }
 
     /// `out = selfᵀ · dense` (n×m ᵀ·… wait: self m×n, dense m×k → n×k),
@@ -238,10 +246,7 @@ impl Csr {
             for i in ranges[p].clone() {
                 let d_row = &d_data[i * k..(i + 1) * k];
                 for (j, v) in self.row_iter(i) {
-                    let c_row = &mut part[j * k..(j + 1) * k];
-                    for (c, &dv) in c_row.iter_mut().zip(d_row.iter()) {
-                        *c += v * dv;
-                    }
+                    gemm::saxpy(v, d_row, &mut part[j * k..(j + 1) * k]);
                 }
             }
             part

@@ -14,6 +14,7 @@ pub enum JsonValue {
 
 impl JsonValue {
     /// Serialise compactly.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

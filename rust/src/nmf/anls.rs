@@ -9,7 +9,7 @@ use super::{init_factors, rel_error, Factorization, MuSchedule};
 use crate::linalg::{Mat, Matrix};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
-use crate::solvers::{self, Normal, SolverKind};
+use crate::solvers::{self, SolverKind, Workspace};
 
 /// Options for plain (unsketched) ANLS, Alg. 1.
 #[derive(Debug, Clone)]
@@ -59,12 +59,15 @@ impl Anls {
         let mut elapsed = 0.0f64;
         trace.push((0, 0.0, rel_error(m, &u, &v)));
 
+        // gram/cross scratch shared by both factor steps, reused every
+        // iteration — the steady-state loop allocates nothing here
+        let mut ws = Workspace::new();
         for t in 0..o.iterations {
             let tick = Instant::now();
             // U-step: gram = VᵀV, cross = M·V
-            update_unsketched(&mut u, m, &v, o.solver, t, o.inner_sweeps);
+            update_unsketched(&mut u, m, &v, o.solver, t, o.inner_sweeps, &mut ws);
             // V-step: gram = UᵀU, cross = Mᵀ·U
-            update_unsketched(&mut v, &mt, &u, o.solver, t, o.inner_sweeps);
+            update_unsketched(&mut v, &mt, &u, o.solver, t, o.inner_sweeps, &mut ws);
             elapsed += tick.elapsed().as_secs_f64();
 
             if o.eval_every > 0 && (t + 1) % o.eval_every == 0 {
@@ -80,7 +83,8 @@ impl Anls {
 
 /// One unsketched factor update: solves `min_{X≥0} ‖M − X·Fᵀ‖` where `F` is
 /// the fixed factor, using the requested solver. Shared by the centralized
-/// loop and the secure protocols' local steps.
+/// loop and the secure protocols' local steps. The caller supplies the
+/// [`Workspace`] holding the gram/cross scratch so repeated calls reuse it.
 pub fn update_unsketched(
     x: &mut Mat,
     m: &Matrix,
@@ -88,13 +92,9 @@ pub fn update_unsketched(
     solver: SolverKind,
     t: usize,
     sweeps: usize,
+    ws: &mut Workspace,
 ) {
-    let gram = fixed.gram();
-    let cross = match m {
-        Matrix::Dense(md) => md.matmul(fixed),
-        Matrix::Sparse(ms) => ms.spmm(fixed),
-    };
-    let nrm = Normal::new(&gram, &cross);
+    let nrm = ws.normal_unsketched(m, fixed);
     for _ in 0..sweeps.max(1) {
         solvers::update_auto(solver, x, &nrm, &MuSchedule::default(), t);
     }
@@ -166,6 +166,7 @@ impl Sanls {
         let mut elapsed = 0.0f64;
         trace.push((0, 0.0, rel_error(m, &u, &v)));
 
+        let mut ws = Workspace::new();
         for t in 0..o.iterations {
             let tick = Instant::now();
             assert!(
@@ -178,16 +179,16 @@ impl Sanls {
             let s = SketchMatrix::generate(o.sketch, n_cols, d_u, &mut s_rng);
             let a = s.mul_right(m); // M·S  (m×d)
             let b = s.mul_rows_tn(&v, 0); // Vᵀ·S (k×d)
-            let (gram, cross) = solvers::normal_from(&a, &b);
-            solvers::update_auto(o.solver, &mut u, &Normal::new(&gram, &cross), &o.mu, t);
+            let nrm = ws.normal_from(&a, &b);
+            solvers::update_auto(o.solver, &mut u, &nrm, &o.mu, t);
 
             // --- V-subproblem: min ‖(Mᵀ − V Uᵀ) S'ᵗ‖ (Eq. 7) ---
             let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
             let s2 = SketchMatrix::generate(o.sketch, n_rows, d_v, &mut s_rng);
             let a2 = s2.mul_right(&mt); // Mᵀ·S' (n×d')
             let b2 = s2.mul_rows_tn(&u, 0); // Uᵀ·S' (k×d')
-            let (gram2, cross2) = solvers::normal_from(&a2, &b2);
-            solvers::update_auto(o.solver, &mut v, &Normal::new(&gram2, &cross2), &o.mu, t);
+            let nrm2 = ws.normal_from(&a2, &b2);
+            solvers::update_auto(o.solver, &mut v, &nrm2, &o.mu, t);
 
             elapsed += tick.elapsed().as_secs_f64();
             if o.eval_every > 0 && (t + 1) % o.eval_every == 0 {

@@ -1,20 +1,36 @@
-//! Intra-node parallelism: a scoped fork-join helper over `std::thread`.
+//! Intra-node parallelism: a **persistent worker pool** with an atomic
+//! task cursor.
 //!
-//! The environment vendors neither `rayon` nor `tokio`, so the few places
-//! that want intra-node parallel loops (blocked GEMM row panels, SpMM row
-//! ranges) use [`par_chunks_mut`] / [`par_ranges`] built on
-//! `std::thread::scope`. Threads are spawned per call; for the matrix sizes
-//! in the benchmarks the spawn cost (~10µs) is far below the work per panel,
-//! and keeping it dependency-free beats a handwritten work-stealing pool.
+//! The environment vendors neither `rayon` nor `tokio`, so the parallel
+//! loops under the GEMM kernels, SpMM and the row-parallel NLS solvers are
+//! built on a hand-rolled pool:
+//!
+//! * Workers are spawned **once** (lazily, on the first parallel call) and
+//!   parked on a condvar between jobs. The seed implementation spawned
+//!   fresh OS threads on every `par_chunks_mut` call — ~10 µs per spawn ×
+//!   6 spawns per GEMM × 4 GEMMs per ANLS iteration was pure overhead, and
+//!   worse, it defeated thread-local pack-buffer reuse in the packed GEMM
+//!   (every spawn re-allocated ~1 MB of packing scratch).
+//! * A *job* is a closure plus an atomic cursor over `0..ntasks`; the
+//!   calling thread participates, so a job can never deadlock even when
+//!   every pool worker is busy (nested parallel calls from the simulated
+//!   cluster's node threads degrade gracefully to caller-inline execution).
+//! * [`set_local_threads`] still caps the per-call worker count for the
+//!   current thread: the simulated cluster sets it inside each node thread
+//!   so N node threads × inner GEMM workers never oversubscribe the
+//!   machine (§Perf: the nested spawn storm inflated per-node wallclock
+//!   ~5× on 10-node runs). The cap applies per job; the pool itself is
+//!   process-wide.
 //!
 //! Cluster-level parallelism (one thread per simulated node) lives in
 //! [`crate::dist`], not here.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Once, OnceLock};
+
 thread_local! {
     /// Per-thread override of the worker count. The simulated cluster sets
-    /// this inside each node thread so that N node threads × inner GEMM
-    /// threads never oversubscribe the machine (§Perf: the nested spawn
-    /// storm inflated per-node wallclock ~5× on 10-node runs).
+    /// this inside each node thread (see module docs).
     static LOCAL_THREADS: std::cell::Cell<Option<usize>> = const { std::cell::Cell::new(None) };
 }
 
@@ -24,28 +40,199 @@ pub fn set_local_threads(n: Option<usize>) {
     LOCAL_THREADS.with(|c| c.set(n.map(|v| v.max(1))));
 }
 
-/// Number of worker threads to use for data-parallel loops.
-///
-/// Per-thread override first (see [`set_local_threads`]), then
-/// `DSANLS_THREADS`, then the machine's available parallelism capped at 8
-/// (beyond that the memory-bound kernels stop scaling).
-pub fn num_threads() -> usize {
-    if let Some(n) = LOCAL_THREADS.with(|c| c.get()) {
-        return n;
-    }
-    static N: once_cell::sync::Lazy<usize> = once_cell::sync::Lazy::new(|| {
+/// Global worker-count default: `DSANLS_THREADS`, else available
+/// parallelism capped at 8 (beyond that the memory-bound kernels stop
+/// scaling).
+fn global_threads() -> usize {
+    static N: OnceLock<usize> = OnceLock::new();
+    *N.get_or_init(|| {
         if let Ok(s) = std::env::var("DSANLS_THREADS") {
             if let Ok(n) = s.parse::<usize>() {
                 return n.max(1);
             }
         }
-        std::thread::available_parallelism()
-            .map(|n| n.get())
-            .unwrap_or(4)
-            .min(8)
-    });
-    *N
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4).min(8)
+    })
 }
+
+/// Number of worker threads to use for data-parallel loops on this thread.
+/// Per-thread override first (see [`set_local_threads`]), then the global
+/// default.
+pub fn num_threads() -> usize {
+    if let Some(n) = LOCAL_THREADS.with(|c| c.get()) {
+        return n;
+    }
+    global_threads()
+}
+
+// ---------------------------------------------------------------------------
+// The pool
+// ---------------------------------------------------------------------------
+
+/// Lifetime-erased pointer to the job closure. The submitting thread blocks
+/// inside [`run_tasks`] until every task has finished, so the pointee is
+/// guaranteed alive whenever a worker dereferences it; dropping the raw
+/// pointer itself is a no-op.
+struct RawTask(*const (dyn Fn(usize) + Sync));
+
+unsafe impl Send for RawTask {}
+unsafe impl Sync for RawTask {}
+
+struct Job {
+    run: RawTask,
+    ntasks: usize,
+    /// Next task index to claim.
+    cursor: AtomicUsize,
+    /// Tasks not yet finished.
+    pending: AtomicUsize,
+    /// Threads currently attached to this job (the submitter counts as 1).
+    joined: AtomicUsize,
+    /// Maximum threads allowed on this job (honours the submitter's
+    /// [`num_threads`], i.e. the cluster's oversubscription cap).
+    max_workers: usize,
+    panicked: AtomicBool,
+    done: Mutex<bool>,
+    done_cv: Condvar,
+}
+
+struct PoolState {
+    jobs: Vec<Arc<Job>>,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    cv: Condvar,
+}
+
+static POOL: OnceLock<Pool> = OnceLock::new();
+static WORKERS_STARTED: Once = Once::new();
+
+/// Number of persistent pool workers (the calling thread is always an extra
+/// participant, so this is `global_threads() - 1`).
+fn pool_worker_count() -> usize {
+    global_threads().saturating_sub(1)
+}
+
+fn pool() -> &'static Pool {
+    let p = POOL.get_or_init(|| Pool {
+        state: Mutex::new(PoolState { jobs: Vec::new() }),
+        cv: Condvar::new(),
+    });
+    WORKERS_STARTED.call_once(|| {
+        for i in 0..pool_worker_count() {
+            std::thread::Builder::new()
+                .name(format!("dsanls-pool-{i}"))
+                .spawn(move || worker_loop(POOL.get().expect("pool initialised")))
+                .expect("failed to spawn pool worker");
+        }
+    });
+    p
+}
+
+fn worker_loop(pool: &'static Pool) {
+    loop {
+        let job: Arc<Job> = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                // prune exhausted jobs, pick one that still has tasks and a
+                // free worker slot
+                st.jobs.retain(|j| j.cursor.load(Ordering::Relaxed) < j.ntasks);
+                let picked = st.jobs.iter().find(|j| {
+                    j.cursor.load(Ordering::Relaxed) < j.ntasks
+                        && j.joined.load(Ordering::Relaxed) < j.max_workers
+                });
+                if let Some(j) = picked {
+                    j.joined.fetch_add(1, Ordering::Relaxed);
+                    break Arc::clone(j);
+                }
+                st = pool.cv.wait(st).unwrap();
+            }
+        };
+        execute_job(&job);
+    }
+}
+
+/// Claim and run tasks until the cursor is exhausted. Decrements `pending`
+/// per finished task and flags completion. Panics inside tasks are caught
+/// (the submitter re-raises) so a pool worker never dies.
+fn execute_job(job: &Job) {
+    loop {
+        let i = job.cursor.fetch_add(1, Ordering::Relaxed);
+        if i >= job.ntasks {
+            break;
+        }
+        let f = unsafe { &*job.run.0 };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)));
+        if result.is_err() {
+            job.panicked.store(true, Ordering::Relaxed);
+        }
+        if job.pending.fetch_sub(1, Ordering::AcqRel) == 1 {
+            let mut d = job.done.lock().unwrap();
+            *d = true;
+            job.done_cv.notify_all();
+        }
+    }
+}
+
+/// Run `f(0..ntasks)` across the pool plus the calling thread, returning
+/// when every task has completed. Worker count per job respects
+/// [`num_threads`] of the caller.
+fn run_tasks<F: Fn(usize) + Sync>(ntasks: usize, f: F) {
+    if ntasks == 0 {
+        return;
+    }
+    let workers = num_threads().min(ntasks);
+    if ntasks == 1 || workers <= 1 || pool_worker_count() == 0 {
+        for i in 0..ntasks {
+            f(i);
+        }
+        return;
+    }
+    let f_obj: &(dyn Fn(usize) + Sync) = &f;
+    // SAFETY: lifetime erasure only — this function does not return until
+    // `pending` hits zero, i.e. until no thread will call (or claim) the
+    // closure again, so the borrow outlives every dereference.
+    let raw = RawTask(unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(f_obj)
+            as *const _
+    });
+    let job = Arc::new(Job {
+        run: raw,
+        ntasks,
+        cursor: AtomicUsize::new(0),
+        pending: AtomicUsize::new(ntasks),
+        joined: AtomicUsize::new(1), // the submitter
+        max_workers: workers,
+        panicked: AtomicBool::new(false),
+        done: Mutex::new(false),
+        done_cv: Condvar::new(),
+    });
+    let pool = pool();
+    {
+        let mut st = pool.state.lock().unwrap();
+        st.jobs.push(job.clone());
+    }
+    pool.cv.notify_all();
+    // the submitter works too, so completion never depends on pool capacity
+    execute_job(&job);
+    {
+        let mut d = job.done.lock().unwrap();
+        while !*d {
+            d = job.done_cv.wait(d).unwrap();
+        }
+    }
+    {
+        let mut st = pool.state.lock().unwrap();
+        st.jobs.retain(|j| !Arc::ptr_eq(j, &job));
+    }
+    if job.panicked.load(Ordering::Relaxed) {
+        panic!("parallel task panicked");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public data-parallel helpers (same signatures as the seed)
+// ---------------------------------------------------------------------------
 
 /// Run `f(chunk_index, chunk)` over disjoint mutable chunks of `data`,
 /// `chunk_len` elements each (last chunk may be short), on up to
@@ -55,39 +242,23 @@ where
     F: Fn(usize, &mut [T]) + Sync,
 {
     assert!(chunk_len > 0);
-    let n_chunks = data.len().div_ceil(chunk_len.max(1));
+    let len = data.len();
+    let n_chunks = len.div_ceil(chunk_len);
     if n_chunks <= 1 || num_threads() == 1 {
         for (i, chunk) in data.chunks_mut(chunk_len).enumerate() {
             f(i, chunk);
         }
         return;
     }
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let chunks: Vec<(usize, &mut [T])> = data.chunks_mut(chunk_len).enumerate().collect();
-    // Hand each worker an index into the chunk list via an atomic cursor.
-    let chunks = std::sync::Mutex::new(
-        chunks
-            .into_iter()
-            .map(Some)
-            .collect::<Vec<Option<(usize, &mut [T])>>>(),
-    );
-    let workers = num_threads().min(n_chunks);
-    std::thread::scope(|s| {
-        for _ in 0..workers {
-            s.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                let item = {
-                    let mut guard = chunks.lock().unwrap();
-                    if i >= guard.len() {
-                        return;
-                    }
-                    guard[i].take()
-                };
-                if let Some((idx, chunk)) = item {
-                    f(idx, chunk);
-                }
-            });
-        }
+    let base = data.as_mut_ptr() as usize;
+    run_tasks(n_chunks, |i| {
+        let start = i * chunk_len;
+        let clen = chunk_len.min(len - start);
+        // SAFETY: chunks [start, start+clen) are disjoint across task
+        // indices and in-bounds by construction.
+        let chunk =
+            unsafe { std::slice::from_raw_parts_mut((base as *mut T).add(start), clen) };
+        f(i, chunk);
     });
 }
 
@@ -120,12 +291,7 @@ where
         }
         return;
     }
-    std::thread::scope(|s| {
-        for r in ranges {
-            let f = &f;
-            s.spawn(move || f(r));
-        }
-    });
+    run_tasks(ranges.len(), |i| f(ranges[i].clone()));
 }
 
 /// Parallel map over `0..parts`, collecting results in order.
@@ -133,17 +299,17 @@ pub fn par_map<T: Send, F>(parts: usize, f: F) -> Vec<T>
 where
     F: Fn(usize) -> T + Sync,
 {
-    if parts <= 1 {
+    if parts <= 1 || num_threads() == 1 {
         return (0..parts).map(&f).collect();
     }
     let mut out: Vec<Option<T>> = (0..parts).map(|_| None).collect();
-    std::thread::scope(|s| {
-        for (i, slot) in out.iter_mut().enumerate() {
-            let f = &f;
-            s.spawn(move || *slot = Some(f(i)));
-        }
+    let base = out.as_mut_ptr() as usize;
+    run_tasks(parts, |i| {
+        // SAFETY: each task writes exactly one distinct, pre-initialised slot.
+        let slot = unsafe { &mut *(base as *mut Option<T>).add(i) };
+        *slot = Some(f(i));
     });
-    out.into_iter().map(|x| x.unwrap()).collect()
+    out.into_iter().map(|x| x.expect("parallel map task skipped")).collect()
 }
 
 #[cfg(test)]
@@ -196,5 +362,75 @@ mod tests {
             total.fetch_add(r.len(), Ordering::Relaxed);
         });
         assert_eq!(total.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn pool_survives_many_jobs() {
+        // the persistent pool must drain thousands of small jobs without
+        // leaking or deadlocking (the seed spawned threads per call; the
+        // pool reuses them)
+        for round in 0..200 {
+            let out = par_map(8, |i| i + round);
+            assert_eq!(out.len(), 8);
+            let mut v = vec![0u8; 256];
+            par_chunks_mut(&mut v, 19, |_, c| c.fill(1));
+            assert!(v.iter().all(|&x| x == 1));
+        }
+    }
+
+    #[test]
+    fn nested_parallelism_completes() {
+        // a parallel task issuing its own parallel call must not deadlock:
+        // the inner submitter participates in its own job
+        let out = par_map(4, |i| {
+            let inner = par_map(4, |j| i * 10 + j);
+            inner.into_iter().sum::<usize>()
+        });
+        assert_eq!(out, vec![6, 46, 86, 126]);
+    }
+
+    #[test]
+    fn panicking_task_propagates_to_submitter() {
+        let caught = std::panic::catch_unwind(|| {
+            par_map(8, |i| {
+                if i == 5 {
+                    panic!("boom");
+                }
+                i
+            })
+        });
+        assert!(caught.is_err(), "panic inside a parallel task must propagate");
+        // and the pool must still be usable afterwards
+        let ok = par_map(4, |i| i);
+        assert_eq!(ok, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn local_thread_override_forces_inline() {
+        set_local_threads(Some(1));
+        let before = num_threads();
+        assert_eq!(before, 1);
+        let out = par_map(4, |i| i * 2);
+        assert_eq!(out, vec![0, 2, 4, 6]);
+        set_local_threads(None);
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        // simulate cluster node threads submitting jobs concurrently
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                s.spawn(move || {
+                    set_local_threads(Some(2));
+                    for round in 0..50 {
+                        let out = par_map(6, |i| t * 1000 + round * 10 + i);
+                        for (i, v) in out.iter().enumerate() {
+                            assert_eq!(*v, t * 1000 + round * 10 + i);
+                        }
+                    }
+                    set_local_threads(None);
+                });
+            }
+        });
     }
 }

@@ -8,9 +8,8 @@
 //! line 8). The PJRT backend proves the three layers compose: the update
 //! executed from rust is numerically the Pallas kernel's output.
 
-use anyhow::{bail, Result};
-
 use super::{ExecInput, PjrtRuntime};
+use crate::error::Result;
 use crate::linalg::Mat;
 use crate::solvers::{self, Normal};
 
@@ -81,15 +80,15 @@ impl LocalSolver for PjrtBackend {
         let (rows, k) = (u.rows(), u.cols());
         let d = a.cols();
         let Some(name) = self.artifact_for(rows, k, d) else {
-            bail!("no compiled artifact for shape r{rows}_k{k}_d{d}");
+            crate::bail!("no compiled artifact for shape r{rows}_k{k}_d{d}");
         };
         let outs = self.runtime.execute(
             &name,
             &[ExecInput::Matrix(a), ExecInput::Matrix(b), ExecInput::Matrix(u), ExecInput::Scalar(mu)],
         )?;
-        let out = outs.into_iter().next().ok_or_else(|| anyhow::anyhow!("empty output"))?;
+        let out = outs.into_iter().next().ok_or_else(|| crate::err!("empty output"))?;
         if (out.rows(), out.cols()) != (rows, k) {
-            bail!("artifact returned {}x{}, expected {rows}x{k}", out.rows(), out.cols());
+            crate::bail!("artifact returned {}x{}, expected {rows}x{k}", out.rows(), out.cols());
         }
         *u = out;
         Ok(())
@@ -108,11 +107,12 @@ pub struct HybridBackend {
 
 impl HybridBackend {
     /// Try to load the PJRT runtime; degrade to native-only when artifacts
-    /// are absent (logged, not fatal — python is build-time only).
+    /// are absent (reported on stderr, not fatal — python is build-time
+    /// only, and the offline build always takes this path).
     pub fn auto() -> Self {
         let pjrt = PjrtRuntime::load(&PjrtRuntime::default_dir())
             .map(PjrtBackend::new)
-            .map_err(|e| log::warn!("PJRT backend unavailable: {e}"))
+            .map_err(|e| eprintln!("PJRT backend unavailable: {e}"))
             .ok();
         HybridBackend { pjrt, native: NativeBackend }
     }

@@ -3,12 +3,17 @@
 //!
 //! Build-time python (`make artifacts`) lowers the JAX/Pallas update step to
 //! **HLO text** under `artifacts/` plus a `manifest.json` describing each
-//! entry point's shapes. This module compiles those artifacts once on a
-//! [`xla::PjRtClient`] (CPU) and exposes typed `execute` wrappers.
+//! entry point's shapes. With the `pjrt` cargo feature enabled (requires a
+//! vendored `xla` crate), this module compiles those artifacts once on a
+//! PJRT CPU client and exposes typed `execute` wrappers. The default
+//! (offline) build ships a stub whose [`PjrtRuntime::load`] returns an
+//! error, so every caller — the CLI `artifacts` command, the
+//! [`backend::HybridBackend`], the round-trip tests — degrades cleanly to
+//! the native rust solvers.
 //!
 //! HLO *text* is the interchange format — the image's xla_extension 0.5.1
 //! rejects jax≥0.5 serialized protos (64-bit instruction ids); the text
-//! parser reassigns ids (see /opt/xla-example/README.md).
+//! parser reassigns ids.
 //!
 //! The [`backend::LocalSolver`] trait lets the coordinator pick between the
 //! shape-generic pure-rust solver and the fixed-shape compiled artifact;
@@ -21,8 +26,7 @@ pub use backend::{HybridBackend, LocalSolver, NativeBackend, PjrtBackend};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, bail, Context, Result};
-
+use crate::error::{Context, Result};
 use crate::linalg::Mat;
 use crate::metrics::JsonValue;
 
@@ -46,22 +50,22 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
-        let json = JsonValue::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let json = JsonValue::parse(&text).map_err(|e| crate::err!("manifest parse: {e}"))?;
         let entries_json = json
             .get("entries")
             .and_then(|v| if let JsonValue::Array(a) = v { Some(a) } else { None })
-            .ok_or_else(|| anyhow!("manifest missing entries[]"))?;
+            .ok_or_else(|| crate::err!("manifest missing entries[]"))?;
         let mut entries = Vec::new();
         for e in entries_json {
             let name = e
                 .get("name")
                 .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow!("entry missing name"))?
+                .ok_or_else(|| crate::err!("entry missing name"))?
                 .to_string();
             let file = e
                 .get("file")
                 .and_then(|v| v.as_str())
-                .ok_or_else(|| anyhow!("entry missing file"))?
+                .ok_or_else(|| crate::err!("entry missing file"))?
                 .to_string();
             let mut dims = HashMap::new();
             if let Some(JsonValue::Object(fields)) = e.get("dims") {
@@ -77,119 +81,198 @@ impl Manifest {
     }
 }
 
-/// A compiled PJRT runtime holding every artifact executable.
-pub struct PjrtRuntime {
-    client: xla::PjRtClient,
-    execs: HashMap<String, xla::PjRtLoadedExecutable>,
-    specs: HashMap<String, ArtifactSpec>,
-    dir: PathBuf,
-}
-
-impl std::fmt::Debug for PjrtRuntime {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "PjrtRuntime({} artifacts from {:?})", self.execs.len(), self.dir)
-    }
-}
-
-impl PjrtRuntime {
-    /// Default artifact directory: `$DSANLS_ARTIFACTS` or `./artifacts`.
-    pub fn default_dir() -> PathBuf {
-        std::env::var("DSANLS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
-    }
-
-    /// Load and compile every artifact in `dir`.
-    pub fn load(dir: &Path) -> Result<PjrtRuntime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        let mut execs = HashMap::new();
-        let mut specs = HashMap::new();
-        for spec in manifest.entries {
-            let path = dir.join(&spec.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("HLO parse {path:?}: {e:?}"))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(|e| anyhow!("compile {}: {e:?}", spec.name))?;
-            execs.insert(spec.name.clone(), exe);
-            specs.insert(spec.name.clone(), spec);
-        }
-        if execs.is_empty() {
-            bail!("no artifacts in {dir:?}");
-        }
-        Ok(PjrtRuntime { client, execs, specs, dir: dir.to_path_buf() })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn names(&self) -> Vec<&str> {
-        self.specs.keys().map(|s| s.as_str()).collect()
-    }
-
-    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
-        self.specs.get(name)
-    }
-
-    /// Execute artifact `name` on matrix/scalar inputs; returns the output
-    /// matrices (tuple elements, row-major).
-    pub fn execute(&self, name: &str, inputs: &[ExecInput<'_>]) -> Result<Vec<Mat>> {
-        let exe = self
-            .execs
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}; have {:?}", self.names()))?;
-        let mut literals = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            literals.push(inp.to_literal()?);
-        }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {name}: {e:?}"))?[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("sync {name}: {e:?}"))?;
-        // artifacts are lowered with return_tuple=True
-        let mut outs = Vec::new();
-        let tuple = result.to_tuple().map_err(|e| anyhow!("tuple {name}: {e:?}"))?;
-        for lit in tuple {
-            let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
-            let dims = shape.dims();
-            let (rows, cols) = match dims.len() {
-                2 => (dims[0] as usize, dims[1] as usize),
-                1 => (1, dims[0] as usize),
-                0 => (1, 1),
-                d => bail!("unsupported output rank {d}"),
-            };
-            let values = lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))?;
-            outs.push(Mat::from_vec(rows, cols, values));
-        }
-        Ok(outs)
-    }
-}
-
 /// An input to [`PjrtRuntime::execute`].
 pub enum ExecInput<'a> {
     Matrix(&'a Mat),
     Scalar(f32),
 }
 
-impl ExecInput<'_> {
-    fn to_literal(&self) -> Result<xla::Literal> {
-        match self {
-            ExecInput::Matrix(m) => xla::Literal::vec1(m.data())
-                .reshape(&[m.rows() as i64, m.cols() as i64])
-                .map_err(|e| anyhow!("reshape: {e:?}")),
-            ExecInput::Scalar(s) => Ok(xla::Literal::from(*s)),
+/// Default artifact directory: `$DSANLS_ARTIFACTS` or `./artifacts`.
+fn artifact_dir() -> PathBuf {
+    std::env::var("DSANLS_ARTIFACTS").map(PathBuf::from).unwrap_or_else(|_| "artifacts".into())
+}
+
+// ---------------------------------------------------------------------------
+// Real implementation (requires the vendored `xla` crate)
+// ---------------------------------------------------------------------------
+
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    use super::*;
+
+    /// A compiled PJRT runtime holding every artifact executable.
+    pub struct PjrtRuntime {
+        client: xla::PjRtClient,
+        execs: HashMap<String, xla::PjRtLoadedExecutable>,
+        specs: HashMap<String, ArtifactSpec>,
+        dir: PathBuf,
+    }
+
+    impl std::fmt::Debug for PjrtRuntime {
+        fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+            write!(f, "PjrtRuntime({} artifacts from {:?})", self.execs.len(), self.dir)
+        }
+    }
+
+    impl PjrtRuntime {
+        /// Default artifact directory: `$DSANLS_ARTIFACTS` or `./artifacts`.
+        pub fn default_dir() -> PathBuf {
+            artifact_dir()
+        }
+
+        /// Load and compile every artifact in `dir`.
+        pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+            let manifest = Manifest::load(dir)?;
+            let client =
+                xla::PjRtClient::cpu().map_err(|e| crate::err!("PJRT cpu client: {e:?}"))?;
+            let mut execs = HashMap::new();
+            let mut specs = HashMap::new();
+            for spec in manifest.entries {
+                let path = dir.join(&spec.file);
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| crate::err!("non-utf8 path"))?,
+                )
+                .map_err(|e| crate::err!("HLO parse {path:?}: {e:?}"))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| crate::err!("compile {}: {e:?}", spec.name))?;
+                execs.insert(spec.name.clone(), exe);
+                specs.insert(spec.name.clone(), spec);
+            }
+            if execs.is_empty() {
+                crate::bail!("no artifacts in {dir:?}");
+            }
+            Ok(PjrtRuntime { client, execs, specs, dir: dir.to_path_buf() })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            self.specs.keys().map(|s| s.as_str()).collect()
+        }
+
+        pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+            self.specs.get(name)
+        }
+
+        /// Execute artifact `name` on matrix/scalar inputs; returns the
+        /// output matrices (tuple elements, row-major).
+        pub fn execute(&self, name: &str, inputs: &[ExecInput<'_>]) -> Result<Vec<Mat>> {
+            let exe = self
+                .execs
+                .get(name)
+                .ok_or_else(|| crate::err!("unknown artifact {name}; have {:?}", self.names()))?;
+            let mut literals = Vec::with_capacity(inputs.len());
+            for inp in inputs {
+                literals.push(inp.to_literal()?);
+            }
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| crate::err!("execute {name}: {e:?}"))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| crate::err!("sync {name}: {e:?}"))?;
+            // artifacts are lowered with return_tuple=True
+            let mut outs = Vec::new();
+            let tuple = result.to_tuple().map_err(|e| crate::err!("tuple {name}: {e:?}"))?;
+            for lit in tuple {
+                let shape = lit.array_shape().map_err(|e| crate::err!("shape: {e:?}"))?;
+                let dims = shape.dims();
+                let (rows, cols) = match dims.len() {
+                    2 => (dims[0] as usize, dims[1] as usize),
+                    1 => (1, dims[0] as usize),
+                    0 => (1, 1),
+                    d => crate::bail!("unsupported output rank {d}"),
+                };
+                let values = lit.to_vec::<f32>().map_err(|e| crate::err!("to_vec: {e:?}"))?;
+                outs.push(Mat::from_vec(rows, cols, values));
+            }
+            Ok(outs)
+        }
+    }
+
+    impl ExecInput<'_> {
+        pub(super) fn to_literal(&self) -> Result<xla::Literal> {
+            match self {
+                ExecInput::Matrix(m) => xla::Literal::vec1(m.data())
+                    .reshape(&[m.rows() as i64, m.cols() as i64])
+                    .map_err(|e| crate::err!("reshape: {e:?}")),
+                ExecInput::Scalar(s) => Ok(xla::Literal::from(*s)),
+            }
         }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::PjrtRuntime;
+
+// ---------------------------------------------------------------------------
+// Offline stub (default build: no `xla` crate in the image)
+// ---------------------------------------------------------------------------
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_impl {
+    use super::*;
+
+    /// Stub runtime: keeps the full API surface so callers compile, but
+    /// [`PjrtRuntime::load`] always fails and the hybrid backend falls back
+    /// to the native rust solvers.
+    #[derive(Debug)]
+    pub struct PjrtRuntime {
+        _private: (),
+    }
+
+    impl PjrtRuntime {
+        /// Default artifact directory: `$DSANLS_ARTIFACTS` or `./artifacts`.
+        pub fn default_dir() -> PathBuf {
+            artifact_dir()
+        }
+
+        /// Always fails in the offline build; enable the `pjrt` feature
+        /// (with a vendored `xla` crate) for the real runtime.
+        pub fn load(dir: &Path) -> Result<PjrtRuntime> {
+            // surface whether artifacts exist so the message is actionable
+            let manifest = Manifest::load(dir).map(|m| m.entries.len());
+            match manifest {
+                Ok(n) => crate::bail!(
+                    "built without the `pjrt` feature — {n} artifact(s) present in \
+                     {dir:?} but no XLA runtime is compiled in"
+                ),
+                Err(e) => crate::bail!("built without the `pjrt` feature (and {e})"),
+            }
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable".into()
+        }
+
+        pub fn names(&self) -> Vec<&str> {
+            Vec::new()
+        }
+
+        pub fn spec(&self, _name: &str) -> Option<&ArtifactSpec> {
+            None
+        }
+
+        /// Unreachable in practice ([`PjrtRuntime::load`] never succeeds).
+        pub fn execute(&self, name: &str, _inputs: &[ExecInput<'_>]) -> Result<Vec<Mat>> {
+            crate::bail!("pjrt feature disabled; cannot execute {name}")
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_impl::PjrtRuntime;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     // Full PJRT round-trip tests live in `rust/tests/pjrt_roundtrip.rs`
-    // (they need `make artifacts`). Here: manifest parsing only.
+    // (they need `make artifacts` and the `pjrt` feature). Here: manifest
+    // parsing only.
 
     #[test]
     fn manifest_parses() {
@@ -213,6 +296,16 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::remove_file(dir.join("manifest.json")).ok();
         assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_fails_with_actionable_message() {
+        let dir = std::env::temp_dir().join("dsanls_stub_load");
+        std::fs::create_dir_all(&dir).unwrap();
+        let e = PjrtRuntime::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("pjrt"), "{e}");
         std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -27,7 +27,7 @@ pub mod mu;
 pub mod nenmf;
 pub mod pgd;
 
-use crate::linalg::Mat;
+use crate::linalg::{gemm_nn, gemm_nt, gemm_tn, Mat, Matrix};
 
 /// Which subproblem solver an algorithm uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -99,10 +99,103 @@ impl<'a> Normal<'a> {
 
 /// Compute `gram = B·Bᵀ` and `cross = A·Bᵀ` from raw operands.
 /// `a: rows×d`, `b: k×d` (both in the *sketched* coordinate system).
+///
+/// Allocates fresh outputs; iteration loops should prefer
+/// [`Workspace::normal_from`], which reuses scratch across iterations.
 pub fn normal_from(a: &Mat, b: &Mat) -> (Mat, Mat) {
     let gram = b.matmul_nt(b);
     let cross = a.matmul_nt(b);
     (gram, cross)
+}
+
+/// Reusable per-iteration scratch for the normal-equation operands.
+///
+/// Every ANLS-style iteration needs a `k×k` gram and a `rows×k` cross
+/// matrix; allocating them fresh each iteration put two heap round-trips
+/// (plus page faults on first touch) inside the hot loop. A `Workspace`
+/// owns both buffers and regrows them only when shapes change, so
+/// steady-state iterations perform **zero** allocations in the
+/// GEMM → normal-equation → solver kernel path (asserted single-threaded
+/// by `tests/alloc_hotpath.rs`; multithreaded runs add only O(1)
+/// pool-dispatch bookkeeping per parallel region). One workspace per
+/// node/loop; it is not shareable across threads by design (each
+/// simulated node owns its own).
+#[derive(Debug)]
+pub struct Workspace {
+    gram: Mat,
+    cross: Mat,
+}
+
+impl Default for Workspace {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Workspace {
+    pub fn new() -> Self {
+        Workspace { gram: Mat::zeros(0, 0), cross: Mat::zeros(0, 0) }
+    }
+
+    /// Sketched operands: `gram = B·Bᵀ` (k×k), `cross = A·Bᵀ` (rows×k)
+    /// with `a: rows×d`, `b: k×d` — the [`normal_from`] equivalent that
+    /// writes into owned scratch.
+    pub fn normal_from(&mut self, a: &Mat, b: &Mat) -> Normal<'_> {
+        assert_eq!(a.cols(), b.cols(), "sketched operands disagree on d");
+        self.gram.resize_to(b.rows(), b.rows());
+        gemm_nt(b, b, &mut self.gram);
+        self.cross.resize_to(a.rows(), b.rows());
+        gemm_nt(a, b, &mut self.cross);
+        Normal::new(&self.gram, &self.cross)
+    }
+
+    /// Unsketched operands: `gram = FᵀF` (k×k), `cross = M·F` (rows×k)
+    /// for the exact subproblem `min_{X≥0} ‖M − X·Fᵀ‖`.
+    pub fn normal_unsketched(&mut self, m: &Matrix, fixed: &Mat) -> Normal<'_> {
+        let k = fixed.cols();
+        self.gram.resize_to(k, k);
+        gemm_tn(fixed, fixed, &mut self.gram);
+        match m {
+            Matrix::Dense(md) => {
+                assert_eq!(md.cols(), fixed.rows());
+                self.cross.resize_to(md.rows(), k);
+                gemm_nn(md, fixed, &mut self.cross);
+            }
+            Matrix::Sparse(ms) => ms.spmm_into(fixed, &mut self.cross),
+        }
+        Normal::new(&self.gram, &self.cross)
+    }
+
+    /// Buffer identities (gram ptr, cross ptr) — lets tests assert that
+    /// steady-state iterations reuse rather than reallocate.
+    pub fn scratch_ptrs(&self) -> (usize, usize) {
+        (self.gram.data().as_ptr() as usize, self.cross.data().as_ptr() as usize)
+    }
+}
+
+/// Per-row-sweep `x·G` scratch of length `k`: stack-backed for every
+/// realistic rank (`k ≤ 128`), heap only beyond — keeps the PGD/MU row
+/// sweeps allocation-free in steady state. Shared by [`pgd`] and [`mu`].
+pub(crate) struct RowScratch {
+    stack: [f32; 128],
+    heap: Vec<f32>,
+}
+
+impl RowScratch {
+    pub(crate) fn new(k: usize) -> Self {
+        RowScratch {
+            stack: [0.0; 128],
+            heap: if k > 128 { vec![0.0; k] } else { Vec::new() },
+        }
+    }
+
+    pub(crate) fn slice(&mut self, k: usize) -> &mut [f32] {
+        if k <= 128 {
+            &mut self.stack[..k]
+        } else {
+            &mut self.heap[..k]
+        }
+    }
 }
 
 /// Dispatch an in-place factor update for `min_{X≥0} ‖A − X·B‖²` given the
@@ -162,6 +255,40 @@ pub(crate) mod testutil {
 mod tests {
     use super::*;
     use testutil::*;
+
+    #[test]
+    fn workspace_matches_allocating_normal_from() {
+        let mut rng = crate::rng::Pcg64::new(71, 3);
+        let a = Mat::rand_uniform(20, 15, 1.0, &mut rng);
+        let b = Mat::rand_uniform(4, 15, 1.0, &mut rng);
+        let (gram, cross) = normal_from(&a, &b);
+        let mut ws = Workspace::new();
+        {
+            let nrm = ws.normal_from(&a, &b);
+            assert_eq!(nrm.gram.data(), gram.data());
+            assert_eq!(nrm.cross.data(), cross.data());
+        }
+        // steady state: same shapes ⇒ same buffers (no reallocation)
+        let ptrs = ws.scratch_ptrs();
+        for _ in 0..3 {
+            let _ = ws.normal_from(&a, &b);
+            assert_eq!(ws.scratch_ptrs(), ptrs, "workspace reallocated in steady state");
+        }
+        // unsketched path agrees with the direct formulas, dense and sparse
+        let m_dense = Mat::rand_uniform(12, 9, 1.0, &mut rng);
+        let fixed = Mat::rand_uniform(9, 4, 1.0, &mut rng);
+        let want_gram = fixed.gram();
+        let want_cross = m_dense.matmul(&fixed);
+        {
+            let nrm = ws.normal_unsketched(&Matrix::Dense(m_dense.clone()), &fixed);
+            assert_eq!(nrm.gram.data(), want_gram.data());
+            assert_eq!(nrm.cross.data(), want_cross.data());
+        }
+        let sparse = crate::linalg::Csr::from_dense(&m_dense, 0.5);
+        let want_sparse_cross = sparse.spmm(&fixed);
+        let nrm = ws.normal_unsketched(&Matrix::Sparse(sparse), &fixed);
+        assert_eq!(nrm.cross.data(), want_sparse_cross.data());
+    }
 
     #[test]
     fn all_solvers_decrease_residual() {

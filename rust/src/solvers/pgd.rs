@@ -23,7 +23,8 @@ pub fn pgd_update(x: &mut Mat, nrm: &Normal<'_>, eta: f32) {
     parallel::par_chunks_mut(x.data_mut(), 128 * k, |chunk_idx, rows_chunk| {
         let i0 = chunk_idx * 128;
         let n_rows = rows_chunk.len() / k;
-        let mut xg = vec![0.0f32; k];
+        let mut scratch = super::RowScratch::new(k);
+        let xg = scratch.slice(k);
         for li in 0..n_rows {
             let i = i0 + li;
             let xrow = &mut rows_chunk[li * k..(li + 1) * k];

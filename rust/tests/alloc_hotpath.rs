@@ -1,0 +1,103 @@
+//! Steady-state allocation audit for the iteration hot path.
+//!
+//! The perf contract of the packed-GEMM + workspace rework: once warmed up,
+//! the GEMM → normal-equation → solver sequence of an ANLS iteration
+//! performs **zero heap allocations** — gram/cross live in a reused
+//! [`dsanls::solvers::Workspace`], GEMM packing scratch is thread-local,
+//! and the row sweeps use stack buffers. A counting global allocator
+//! verifies the claim.
+//!
+//! The run is pinned to one thread (`set_local_threads(Some(1))`) so the
+//! measurement captures the kernels themselves rather than pool-dispatch
+//! bookkeeping; the single `#[test]` in this file keeps the harness from
+//! running anything else concurrently against the global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use dsanls::linalg::Mat;
+use dsanls::nmf::MuSchedule;
+use dsanls::rng::Pcg64;
+use dsanls::solvers::{self, SolverKind, Workspace};
+
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicUsize = AtomicUsize::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_iteration_allocates_nothing_in_gemm_solver_path() {
+    // single-threaded: measure the kernels, not pool dispatch
+    dsanls::parallel::set_local_threads(Some(1));
+
+    // DSANLS-iteration shapes: A_r (rows×d), B (k×d), factor block rows×k
+    let (rows, k, d) = (300usize, 16usize, 40usize);
+    let mut rng = Pcg64::new(0xA110C, 0);
+    let a = Mat::rand_uniform(rows, d, 1.0, &mut rng);
+    let b = Mat::rand_uniform(k, d, 1.0, &mut rng);
+    let mut u_cd = Mat::rand_uniform(rows, k, 1.0, &mut rng);
+    let mut u_pgd = Mat::rand_uniform(rows, k, 1.0, &mut rng);
+    let mu = MuSchedule::default();
+
+    let mut ws = Workspace::new();
+
+    // warm-up: sizes the workspace and the thread-local GEMM pack buffers
+    for t in 0..3 {
+        let nrm = ws.normal_from(&a, &b);
+        solvers::update_auto(SolverKind::ProximalCd, &mut u_cd, &nrm, &mu, t);
+        solvers::update_auto(SolverKind::Pgd, &mut u_pgd, &nrm, &mu, t);
+    }
+    let ptrs = ws.scratch_ptrs();
+
+    // measured steady state
+    ALLOC_EVENTS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for t in 3..13 {
+        let nrm = ws.normal_from(&a, &b);
+        solvers::update_auto(SolverKind::ProximalCd, &mut u_cd, &nrm, &mu, t);
+        solvers::update_auto(SolverKind::Pgd, &mut u_pgd, &nrm, &mu, t);
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let events = ALLOC_EVENTS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        events, 0,
+        "steady-state GEMM/normal-equation/solver path performed {events} heap allocations \
+         over 10 iterations (expected 0)"
+    );
+    // and the workspace must have kept its buffers, not reallocated them
+    assert_eq!(ws.scratch_ptrs(), ptrs, "workspace scratch was reallocated in steady state");
+
+    assert!(u_cd.is_nonnegative() && u_pgd.is_nonnegative());
+    dsanls::parallel::set_local_threads(None);
+}

@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Perf evidence runner: the GEMM microbench (emits BENCH_gemm.json in the
+# repo root) plus the Fig. 3 scalability sweep.
+#
+# Usage: scripts/bench.sh [--full]
+#   --full          paper-sized shapes (DSANLS_BENCH_FULL=1)
+# Env:  DSANLS_THREADS, DSANLS_SIMD=portable (A/B), DSANLS_BENCH_JSON_DIR
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [[ "${1:-}" == "--full" ]]; then
+  export DSANLS_BENCH_FULL=1
+fi
+
+echo "== microbench_gemm (writes BENCH_gemm.json) =="
+cargo bench --bench microbench_gemm
+
+echo
+echo "== fig3_scalability =="
+cargo bench --bench fig3_scalability
+
+echo
+echo "done. evidence: ./BENCH_gemm.json, per-figure CSVs under ./results/"
