@@ -14,11 +14,12 @@
 
 use super::{assemble_blocks, reduce_outputs, DistRun, NodeOutput};
 use crate::data::partition::uniform_partition;
-use crate::dist::{run_cluster, CommModel};
+use crate::dist::{run_cluster, CommModel, NodeCtx};
 use crate::linalg::{Mat, Matrix};
 use crate::nmf::init_factors;
 use crate::rng::{Role, StreamRng};
 use crate::solvers::{self, Normal, SolverKind};
+use crate::transport::Communicator;
 
 /// Options for an MPI-FAUN-style baseline run.
 #[derive(Debug, Clone)]
@@ -52,10 +53,21 @@ impl Default for DistAnlsOptions {
 
 /// Run a distributed unsketched baseline on the simulated cluster.
 pub fn run_dist_anls(m: &Matrix, opts: &DistAnlsOptions) -> DistRun {
+    let outputs = run_cluster(opts.nodes, opts.comm, |ctx| dist_anls_node(ctx, m, opts));
+    reduce_outputs(outputs, opts.rank, opts.iterations)
+}
+
+/// One baseline rank over any transport backend (TCP worker entry point).
+/// `opts.nodes` must match the communicator's cluster size.
+pub fn dist_anls_node<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    m: &Matrix,
+    opts: &DistAnlsOptions,
+) -> NodeOutput {
+    assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let row_part = uniform_partition(m.rows(), opts.nodes);
     let col_part = uniform_partition(m.cols(), opts.nodes);
-
-    let outputs = run_cluster(opts.nodes, opts.comm, |ctx| {
+    {
         let rank = ctx.rank;
         let stream = StreamRng::new(opts.seed);
         let my_rows = row_part.range(rank);
@@ -127,8 +139,7 @@ pub fn run_dist_anls(m: &Matrix, opts: &DistAnlsOptions) -> DistRun {
             stats: ctx.stats(),
             final_clock: ctx.clock(),
         }
-    });
-    reduce_outputs(outputs, opts.rank, opts.iterations)
+    }
 }
 
 #[cfg(test)]

@@ -25,6 +25,7 @@ use crate::nmf::{init_factors, rel_error, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
 use crate::solvers::{self, SolverKind, Workspace};
+use crate::transport::Communicator;
 
 /// Options for a DSANLS run.
 #[derive(Debug, Clone)]
@@ -81,19 +82,30 @@ impl DsanlsOptions {
 /// only ever *reads* its own row/column blocks (enforced by slicing them
 /// out before the iteration loop).
 pub fn run_dsanls(m: &Matrix, opts: &DsanlsOptions) -> DistRun {
+    let outputs = run_cluster(opts.nodes, opts.comm, |ctx| dsanls_node(ctx, m, opts));
+    reduce_outputs(outputs, opts.rank, opts.iterations)
+}
+
+/// One DSANLS rank over any transport backend — the entry point the TCP
+/// worker processes (and the backend-equivalence tests) call directly.
+/// Partitions are derived deterministically from `m` and the cluster size,
+/// so every rank agrees without further coordination; `opts.nodes` must
+/// match the communicator's cluster size.
+pub fn dsanls_node<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    m: &Matrix,
+    opts: &DsanlsOptions,
+) -> NodeOutput {
+    assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let (rows, cols) = (m.rows(), m.cols());
     let (d_u, d_v) = opts.resolve_d(cols, rows);
     let row_part = uniform_partition(rows, opts.nodes);
     let col_part = uniform_partition(cols, opts.nodes);
-
-    let outputs = run_cluster(opts.nodes, opts.comm, |ctx| {
-        node_main(ctx, m, opts, &row_part, &col_part, d_u, d_v)
-    });
-    reduce_outputs(outputs, opts.rank, opts.iterations)
+    node_main(ctx, m, opts, &row_part, &col_part, d_u, d_v)
 }
 
-fn node_main(
-    ctx: &mut NodeCtx<'_>,
+fn node_main<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
     m: &Matrix,
     opts: &DsanlsOptions,
     row_part: &Partition,
@@ -192,8 +204,8 @@ fn node_main(
 
 /// Out-of-band error evaluation: gather the factor blocks (untimed) and let
 /// rank 0 compute the global relative error against the full matrix.
-pub(crate) fn record_error(
-    ctx: &mut NodeCtx<'_>,
+pub(crate) fn record_error<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
     m: &Matrix,
     u_block: &Mat,
     v_block: &Mat,

@@ -5,9 +5,13 @@
 //! * [`dist_anls`] — the MPI-FAUN-style baselines (MU / HALS / ANLS-BPP):
 //!   full factor all-gather each iteration, exact NLS operands.
 //!
-//! Both run on the simulated cluster of [`crate::dist`]; results carry the
-//! assembled factors, the error-over-simulated-time trace and per-node
-//! communication statistics.
+//! Both are generic over the [`crate::transport::Communicator`] backend:
+//! the per-rank entry points ([`dsanls::dsanls_node`],
+//! [`dist_anls::dist_anls_node`]) run unchanged on the simulated cluster
+//! ([`crate::dist::run_cluster`]) or on real TCP workers, and the
+//! rank-ordered collectives make the two bit-identical. Results carry the
+//! assembled factors, the error-over-time trace and per-node communication
+//! statistics.
 
 pub mod dist_anls;
 pub mod dsanls;
@@ -67,17 +71,21 @@ pub(crate) fn assemble_blocks(blocks: &[Vec<f32>], k: usize) -> Mat {
     Mat::from_vec(rows, k, data)
 }
 
-/// Per-node return value from the cluster closure; the driver reduces these
-/// into a [`DistRun`].
-pub(crate) struct NodeOutput {
+/// Per-node return value from one cluster rank. Drivers — the in-process
+/// [`crate::dist::run_cluster`] / [`crate::dist::run_tcp_cluster`] scopes
+/// and the multi-process `dsanls launch` coordinator — collect one per rank
+/// and reduce them into a [`DistRun`] via [`reduce_outputs`].
+pub struct NodeOutput {
     pub u_block: Mat,
     pub v_block: Mat,
-    pub trace: Vec<TracePoint>, // non-empty only on rank 0
+    /// Non-empty only on rank 0.
+    pub trace: Vec<TracePoint>,
     pub stats: CommStats,
     pub final_clock: f64,
 }
 
-pub(crate) fn reduce_outputs(outputs: Vec<NodeOutput>, k: usize, iterations: usize) -> DistRun {
+/// Assemble rank-ordered [`NodeOutput`]s into a [`DistRun`].
+pub fn reduce_outputs(outputs: Vec<NodeOutput>, k: usize, iterations: usize) -> DistRun {
     let u_blocks: Vec<Vec<f32>> = outputs.iter().map(|o| o.u_block.data().to_vec()).collect();
     let v_blocks: Vec<Vec<f32>> = outputs.iter().map(|o| o.v_block.data().to_vec()).collect();
     let u = assemble_blocks(&u_blocks, k);

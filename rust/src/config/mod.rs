@@ -78,6 +78,9 @@ pub struct ExperimentConfig {
     pub local_iters: usize,
 
     pub comm: CommModel,
+    /// TCP transport bootstrap timeout in seconds (`dsanls launch`/`worker`;
+    /// data-plane receives allow 4× this).
+    pub net_timeout_s: f64,
     pub output_dir: String,
     /// Use the AOT/PJRT local-solver backend where shapes allow.
     pub backend_pjrt: bool,
@@ -106,6 +109,7 @@ impl Default for ExperimentConfig {
             rounds: 20,
             local_iters: 5,
             comm: CommModel::default(),
+            net_timeout_s: 30.0,
             output_dir: "results".into(),
             backend_pjrt: false,
         }
@@ -164,6 +168,7 @@ impl ExperimentConfig {
             "secure.local_iters" => self.local_iters = parse_usize(v)?,
             "network.latency_us" => self.comm.latency = parse_f64(v)? * 1e-6,
             "network.bandwidth_gbps" => self.comm.bandwidth = parse_f64(v)? * 125e6,
+            "network.timeout_s" => self.net_timeout_s = parse_f64(v)?,
             "output.dir" => self.output_dir = v.into(),
             other => return Err(format!("unknown config key: {other}")),
         }

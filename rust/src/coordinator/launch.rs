@@ -1,0 +1,675 @@
+//! Multi-process deployment: the `dsanls launch` coordinator and the
+//! `dsanls worker` rank entry point.
+//!
+//! `dsanls launch --nodes N [--config cfg.toml] [--key=value ...]` binds a
+//! [`Rendezvous`] listener, spawns `N` worker processes of the same binary
+//! (`N + 1` for the asynchronous protocols — the extra rank is the
+//! parameter server), performs the magic/version/rank handshake, and
+//! broadcasts the mesh roster. Each worker regenerates the dataset from
+//! the shared config (datasets are seed-derived, so no data shipping is
+//! needed), runs its rank of the configured algorithm over
+//! [`crate::transport::TcpComm`], and streams its result chunks back over
+//! the rendezvous connection. The coordinator assembles them into the same
+//! [`Outcome`] the simulated path produces.
+//!
+//! Because the collectives reduce in rank order on every backend, a seeded
+//! `launch` run produces factors **bit-identical** to the in-process
+//! simulated run of the same config — `--verify-sim` re-runs the simulator
+//! in the coordinator and asserts exactly that.
+//!
+//! Result chunks ride the same length-prefixed f32 frames as the data
+//! plane ([`crate::transport::wire`]): matrices carry `[rows, cols,
+//! data…]`, exact `u64`/`f64` statistics are bit-split across f32 lanes,
+//! and worker failures arrive as `Error` frames whose text the coordinator
+//! surfaces verbatim.
+
+use std::io::Write as _;
+use std::net::TcpStream;
+use std::process::{Child, Command, Stdio};
+use std::time::Duration;
+
+use crate::algos::{self, NodeOutput, TracePoint};
+use crate::config::{Algorithm, ExperimentConfig};
+use crate::coordinator::{self, Outcome};
+use crate::dist::{CommStats, NodeCtx};
+use crate::error::{Context, Result};
+use crate::linalg::Mat;
+use crate::metrics;
+use crate::nmf::init_factors;
+use crate::rng::Role;
+use crate::secure::{asyn, syn, SecureAlgo};
+use crate::transport::wire::{
+    self, decode_text, encode_text, push_f64_bits, push_u64_bits, take_f64_bits, take_u64_bits,
+    Frame, FrameKind,
+};
+use crate::transport::{Rendezvous, TcpComm, TcpOptions};
+
+/// Result-chunk codes (frame tag of `FrameKind::Result`).
+const RES_U: u64 = 1;
+const RES_V: u64 = 2;
+const RES_TRACE: u64 = 3;
+const RES_STATS: u64 = 4;
+const RES_SAMPLES: u64 = 5;
+const RES_DONE: u64 = 6;
+/// `‖M‖²_F` (f64 bits), shipped by the async server so the coordinator
+/// need not regenerate the dataset just to merge traces.
+const RES_FRO: u64 = 7;
+
+// ---------------------------------------------------------------------------
+// Payload codecs (matrices, traces, statistics)
+// ---------------------------------------------------------------------------
+
+fn mat_payload(m: &Mat) -> Vec<f32> {
+    assert!(m.rows() < (1 << 24) && m.cols() < (1 << 24), "dims exceed exact-f32 range");
+    let mut p = Vec::with_capacity(2 + m.data().len());
+    p.push(m.rows() as f32);
+    p.push(m.cols() as f32);
+    p.extend_from_slice(m.data());
+    p
+}
+
+fn mat_from_payload(p: &[f32]) -> Result<Mat> {
+    if p.len() < 2 {
+        crate::bail!("matrix chunk too short");
+    }
+    let rows = p[0] as usize;
+    let cols = p[1] as usize;
+    if p.len() != 2 + rows * cols {
+        crate::bail!("matrix chunk: {} values for {rows}x{cols}", p.len() - 2);
+    }
+    Ok(Mat::from_vec(rows, cols, p[2..].to_vec()))
+}
+
+fn trace_payload(trace: &[TracePoint]) -> Vec<f32> {
+    let mut p = Vec::with_capacity(trace.len() * 5);
+    for t in trace {
+        p.push(t.iteration as f32);
+        push_f64_bits(&mut p, t.sim_time);
+        push_f64_bits(&mut p, t.rel_error);
+    }
+    p
+}
+
+fn trace_from_payload(p: &[f32]) -> Result<Vec<TracePoint>> {
+    if p.len() % 5 != 0 {
+        crate::bail!("trace chunk length {} not a multiple of 5", p.len());
+    }
+    let mut out = Vec::with_capacity(p.len() / 5);
+    let mut pos = 0;
+    while pos < p.len() {
+        let iteration = p[pos] as usize;
+        pos += 1;
+        let sim_time = take_f64_bits(p, &mut pos)?;
+        let rel_error = take_f64_bits(p, &mut pos)?;
+        out.push(TracePoint { iteration, sim_time, rel_error });
+    }
+    Ok(out)
+}
+
+fn stats_payload(s: &CommStats, final_clock: f64) -> Vec<f32> {
+    let mut p = Vec::with_capacity(14);
+    push_u64_bits(&mut p, s.bytes_sent as u64);
+    push_u64_bits(&mut p, s.bytes_received as u64);
+    push_u64_bits(&mut p, s.messages as u64);
+    push_f64_bits(&mut p, s.compute_time);
+    push_f64_bits(&mut p, s.comm_time);
+    push_f64_bits(&mut p, s.stall_time);
+    push_f64_bits(&mut p, final_clock);
+    p
+}
+
+fn stats_from_payload(p: &[f32]) -> Result<(CommStats, f64)> {
+    let mut pos = 0;
+    let stats = CommStats {
+        bytes_sent: take_u64_bits(p, &mut pos)? as usize,
+        bytes_received: take_u64_bits(p, &mut pos)? as usize,
+        messages: take_u64_bits(p, &mut pos)? as usize,
+        compute_time: take_f64_bits(p, &mut pos)?,
+        comm_time: take_f64_bits(p, &mut pos)?,
+        stall_time: take_f64_bits(p, &mut pos)?,
+    };
+    let final_clock = take_f64_bits(p, &mut pos)?;
+    Ok((stats, final_clock))
+}
+
+fn samples_payload(samples: &[(f64, f64, usize)]) -> Vec<f32> {
+    let mut p = Vec::with_capacity(samples.len() * 6);
+    for &(clock, resid, iters) in samples {
+        push_f64_bits(&mut p, clock);
+        push_f64_bits(&mut p, resid);
+        push_u64_bits(&mut p, iters as u64);
+    }
+    p
+}
+
+fn samples_from_payload(p: &[f32]) -> Result<Vec<(f64, f64, usize)>> {
+    if p.len() % 6 != 0 {
+        crate::bail!("samples chunk length {} not a multiple of 6", p.len());
+    }
+    let mut out = Vec::with_capacity(p.len() / 6);
+    let mut pos = 0;
+    while pos < p.len() {
+        let clock = take_f64_bits(p, &mut pos)?;
+        let resid = take_f64_bits(p, &mut pos)?;
+        let iters = take_u64_bits(p, &mut pos)? as usize;
+        out.push((clock, resid, iters));
+    }
+    Ok(out)
+}
+
+fn send_chunk(stream: &mut TcpStream, tag: u64, payload: &[f32]) -> Result<()> {
+    wire::write_frame_parts(stream, FrameKind::Result, tag, 0.0, payload)
+        .context("reporting result to coordinator")
+}
+
+// ---------------------------------------------------------------------------
+// Worker side
+// ---------------------------------------------------------------------------
+
+/// How many TCP ranks a config needs: one per node, plus the parameter
+/// server for the asynchronous protocols.
+pub fn cluster_ranks(cfg: &ExperimentConfig) -> usize {
+    match cfg.algorithm {
+        Algorithm::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => cfg.nodes + 1,
+        _ => cfg.nodes,
+    }
+}
+
+/// `dsanls worker --rendezvous HOST:PORT --rank R [config args…]` — one
+/// rank of a `launch` cluster, normally spawned by the coordinator.
+/// Deployment is **single-host** today: the rendezvous and mesh listeners
+/// bind `127.0.0.1` and the roster carries ports only, so workers must
+/// run on the coordinator's machine (multi-host needs a host-carrying
+/// roster — see ROADMAP).
+pub fn worker_main(args: &[String]) -> Result<()> {
+    let mut rendezvous = None;
+    let mut rank = None;
+    let mut cfg_args: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--rendezvous" => {
+                rendezvous = Some(args.get(i + 1).context("--rendezvous needs HOST:PORT")?.clone());
+                i += 2;
+            }
+            "--rank" => {
+                let v = args.get(i + 1).context("--rank needs a number")?;
+                rank = Some(v.parse::<usize>().map_err(|e| crate::err!("--rank {v}: {e}"))?);
+                i += 2;
+            }
+            _ => {
+                cfg_args.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    let addr = rendezvous.context("worker needs --rendezvous HOST:PORT")?;
+    let rank = rank.context("worker needs --rank R")?;
+    let cfg = super::parse_cli_config(&cfg_args).map_err(crate::error::Error::msg)?;
+    let ranks = cluster_ranks(&cfg);
+
+    let topts = TcpOptions {
+        connect_timeout: Duration::from_secs_f64(cfg.net_timeout_s.max(1.0)),
+        io_timeout: Some(Duration::from_secs_f64((cfg.net_timeout_s * 4.0).max(1.0))),
+    };
+    let mut comm = TcpComm::connect(&addr, rank, ranks, &topts)
+        .with_context(|| format!("worker rank {rank} joining cluster at {addr}"))?;
+    let mut report = comm
+        .take_rendezvous()
+        .context("rendezvous channel already taken")?;
+
+    // run the rank; ship failures back as Error frames before exiting
+    match run_rank(&cfg, comm, rank, &mut report) {
+        Ok(()) => Ok(()),
+        Err(e) => {
+            let msg = format!("rank {rank}: {e}");
+            let _ = wire::write_frame(
+                &mut report,
+                &Frame::new(FrameKind::Error, rank as u64, 0.0, encode_text(&msg)),
+            );
+            Err(crate::error::Error::msg(msg))
+        }
+    }
+}
+
+/// Execute this rank's share of the configured algorithm and stream the
+/// results back over the rendezvous connection.
+fn run_rank(
+    cfg: &ExperimentConfig,
+    comm: TcpComm,
+    rank: usize,
+    report: &mut TcpStream,
+) -> Result<()> {
+    let m = coordinator::load_dataset(cfg);
+    // mirror the simulated cluster's per-node thread cap so the
+    // thread-count-sensitive reductions split identically (bit-identity)
+    crate::dist::apply_node_thread_policy(cfg.nodes);
+
+    // catch panics from the algorithm layer (collective failures panic) so
+    // they reach the coordinator as Error frames, not silent worker deaths
+    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+        run_rank_inner(cfg, comm, rank, &m, report)
+    }));
+    crate::parallel::set_local_threads(None);
+    match outcome {
+        Ok(res) => res,
+        Err(panic) => {
+            let msg = panic
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "worker panicked".into());
+            Err(crate::error::Error::msg(msg))
+        }
+    }
+}
+
+fn run_rank_inner(
+    cfg: &ExperimentConfig,
+    comm: TcpComm,
+    rank: usize,
+    m: &crate::linalg::Matrix,
+    report: &mut TcpStream,
+) -> Result<()> {
+    match cfg.algorithm {
+        Algorithm::Dsanls => {
+            let opts = coordinator::dsanls_options(cfg);
+            let mut ctx = NodeCtx::new(comm, cfg.comm);
+            let out = algos::dsanls::dsanls_node(&mut ctx, m, &opts);
+            send_node_output(report, &out)
+        }
+        Algorithm::Baseline(solver) => {
+            let opts = coordinator::dist_anls_options(cfg, solver);
+            let mut ctx = NodeCtx::new(comm, cfg.comm);
+            let out = algos::dist_anls::dist_anls_node(&mut ctx, m, &opts);
+            send_node_output(report, &out)
+        }
+        Algorithm::Secure(algo @ (SecureAlgo::SynSd
+        | SecureAlgo::SynSsdU
+        | SecureAlgo::SynSsdV
+        | SecureAlgo::SynSsdUv)) => {
+            let cols = coordinator::secure_partition(cfg, m.cols());
+            let opts = coordinator::syn_options(cfg);
+            let mut ctx = NodeCtx::new(comm, cfg.comm);
+            let out = syn::syn_node(&mut ctx, m, &cols, &opts, algo, None);
+            send_chunk(report, RES_U, &mat_payload(&out.u_local))?;
+            send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
+            send_chunk(report, RES_TRACE, &trace_payload(&out.trace))?;
+            send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
+            send_chunk(report, RES_DONE, &[])
+        }
+        Algorithm::Secure(variant @ (SecureAlgo::AsynSd | SecureAlgo::AsynSsdV)) => {
+            let cols = coordinator::secure_partition(cfg, m.cols());
+            let opts = coordinator::asyn_options(cfg);
+            let stream_rng = crate::rng::StreamRng::new(opts.seed);
+            let (u_init, v_full) = {
+                let mut rng = stream_rng.for_iteration(0, Role::Init);
+                init_factors(m, opts.rank, &mut rng)
+            };
+            if rank == asyn::server_rank(cfg.nodes) {
+                let fro_sq = m.fro_sq();
+                let u = asyn::server_loop(comm, &opts, u_init);
+                send_chunk(report, RES_U, &mat_payload(&u))?;
+                let mut fro = Vec::with_capacity(2);
+                push_f64_bits(&mut fro, fro_sq);
+                send_chunk(report, RES_FRO, &fro)?;
+                send_chunk(report, RES_DONE, &[])
+            } else {
+                let v0 = v_full.row_block(cols.range(rank));
+                let out =
+                    asyn::client_loop(comm, rank, m, &cols, &opts, variant, u_init, v0, None);
+                send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
+                send_chunk(report, RES_SAMPLES, &samples_payload(&out.samples))?;
+                send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
+                send_chunk(report, RES_DONE, &[])
+            }
+        }
+    }
+}
+
+fn send_node_output(stream: &mut TcpStream, out: &NodeOutput) -> Result<()> {
+    send_chunk(stream, RES_U, &mat_payload(&out.u_block))?;
+    send_chunk(stream, RES_V, &mat_payload(&out.v_block))?;
+    send_chunk(stream, RES_TRACE, &trace_payload(&out.trace))?;
+    send_chunk(stream, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
+    send_chunk(stream, RES_DONE, &[])
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side
+// ---------------------------------------------------------------------------
+
+#[derive(Default)]
+struct WorkerResult {
+    u: Option<Mat>,
+    v: Option<Mat>,
+    trace: Vec<TracePoint>,
+    stats: CommStats,
+    final_clock: f64,
+    samples: Vec<(f64, f64, usize)>,
+    fro_sq: Option<f64>,
+}
+
+fn read_worker_result(stream: &mut TcpStream, rank: usize) -> Result<WorkerResult> {
+    let mut res = WorkerResult::default();
+    loop {
+        let f = wire::read_frame(stream)
+            .with_context(|| format!("reading results from worker rank {rank}"))?;
+        match f.kind {
+            FrameKind::Result => match f.tag {
+                RES_U => res.u = Some(mat_from_payload(&f.payload)?),
+                RES_V => res.v = Some(mat_from_payload(&f.payload)?),
+                RES_TRACE => res.trace = trace_from_payload(&f.payload)?,
+                RES_STATS => {
+                    let (stats, clock) = stats_from_payload(&f.payload)?;
+                    res.stats = stats;
+                    res.final_clock = clock;
+                }
+                RES_SAMPLES => res.samples = samples_from_payload(&f.payload)?,
+                RES_FRO => {
+                    let mut pos = 0;
+                    res.fro_sq = Some(take_f64_bits(&f.payload, &mut pos)?);
+                }
+                RES_DONE => return Ok(res),
+                other => crate::bail!("unknown result chunk {other} from rank {rank}"),
+            },
+            FrameKind::Error => crate::bail!("worker failed: {}", decode_text(&f.payload)),
+            other => crate::bail!("unexpected {other:?} frame from worker rank {rank}"),
+        }
+    }
+}
+
+/// Options controlling a `launch` run (parsed from the CLI).
+pub struct LaunchOptions {
+    pub cfg: ExperimentConfig,
+    /// Rendezvous port (0 = ephemeral).
+    pub port: u16,
+    /// Re-run the simulated backend in-process and assert the factors are
+    /// bit-identical (deterministic algorithms only).
+    pub verify_sim: bool,
+    /// Arguments forwarded verbatim to the workers (config file + overrides).
+    pub forward: Vec<String>,
+}
+
+/// Parse `launch` CLI arguments.
+pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
+    let mut nodes_override = None;
+    let mut port = 0u16;
+    let mut verify_sim = false;
+    let mut forward: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--nodes" => {
+                let v = args.get(i + 1).context("--nodes needs a number")?;
+                nodes_override =
+                    Some(v.parse::<usize>().map_err(|e| crate::err!("--nodes {v}: {e}"))?);
+                i += 2;
+            }
+            "--port" => {
+                let v = args.get(i + 1).context("--port needs a number")?;
+                port = v.parse::<u16>().map_err(|e| crate::err!("--port {v}: {e}"))?;
+                i += 2;
+            }
+            "--verify-sim" => {
+                verify_sim = true;
+                i += 1;
+            }
+            "--config" => {
+                forward.push(args[i].clone());
+                forward.push(args.get(i + 1).context("--config needs a path")?.clone());
+                i += 2;
+            }
+            _ => {
+                forward.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    let mut cfg = super::parse_cli_config(&forward).map_err(crate::error::Error::msg)?;
+    if let Some(n) = nodes_override {
+        cfg.nodes = n;
+        forward.push(format!("--experiment.nodes={n}"));
+    }
+    if cfg.nodes == 0 {
+        crate::bail!("launch needs at least one node");
+    }
+    Ok(LaunchOptions { cfg, port, verify_sim, forward })
+}
+
+/// `dsanls launch` — spawn the worker processes, run the experiment over
+/// real TCP, assemble and report the outcome.
+pub fn launch_main(args: &[String]) -> Result<()> {
+    let opts = parse_launch_args(args)?;
+    let cfg = &opts.cfg;
+    let ranks = cluster_ranks(cfg);
+
+    let rdv = Rendezvous::bind(opts.port)?;
+    println!(
+        "launching {} over TCP: {} worker process(es){} on {}",
+        cfg.algorithm.name(),
+        cfg.nodes,
+        if ranks > cfg.nodes { " + 1 parameter server" } else { "" },
+        rdv.addr()
+    );
+
+    let exe = std::env::current_exe().context("locating own binary")?;
+    let mut children: Vec<Child> = Vec::with_capacity(ranks);
+    for rank in 0..ranks {
+        let mut cmd = Command::new(&exe);
+        cmd.arg("worker")
+            .arg("--rendezvous")
+            .arg(rdv.addr())
+            .arg("--rank")
+            .arg(rank.to_string())
+            .args(&opts.forward)
+            .stdin(Stdio::null());
+        let child = cmd
+            .spawn()
+            .with_context(|| format!("spawning worker rank {rank}"))?;
+        children.push(child);
+    }
+
+    let run = launch_collect(cfg, &rdv, ranks);
+    // reap the children regardless of how collection went
+    let collected_ok = run.is_ok();
+    let mut worker_failure = None;
+    for (rank, mut child) in children.into_iter().enumerate() {
+        if collected_ok {
+            let status = child.wait().context("waiting for worker")?;
+            if !status.success() && worker_failure.is_none() {
+                worker_failure = Some(format!("worker rank {rank} exited with {status}"));
+            }
+        } else {
+            let _ = child.kill();
+            let _ = child.wait();
+        }
+    }
+    let outcome = run?;
+    if let Some(fail) = worker_failure {
+        crate::bail!("{fail}");
+    }
+
+    println!(
+        "final rel-error {:.4}  sec/iter {:.5}  {}",
+        outcome.final_error(),
+        outcome.sec_per_iter,
+        metrics::stats_summary(&outcome.stats)
+    );
+    let path = std::path::Path::new(&cfg.output_dir).join(format!("{}-tcp.csv", cfg.name));
+    if let Err(e) = metrics::write_series_csv(&path, &[outcome.series()]) {
+        eprintln!("write {path:?}: {e}");
+    } else {
+        println!("trace written to {path:?}");
+    }
+
+    if opts.verify_sim {
+        verify_against_sim(cfg, &outcome)?;
+    }
+    Ok(())
+}
+
+/// Accept the workers, gather their results, and assemble the outcome.
+fn launch_collect(cfg: &ExperimentConfig, rdv: &Rendezvous, ranks: usize) -> Result<Outcome> {
+    let timeout = Duration::from_secs_f64((cfg.net_timeout_s * 4.0).max(5.0));
+    let mut conns = rdv.wait_workers(ranks, timeout)?;
+    let mut results: Vec<WorkerResult> = Vec::with_capacity(ranks);
+    for conn in conns.iter_mut() {
+        results.push(read_worker_result(&mut conn.stream, conn.rank)?);
+    }
+    assemble_outcome(cfg, results)
+}
+
+fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> Result<Outcome> {
+    let label = format!("{}/tcp", cfg.algorithm.name());
+    match cfg.algorithm {
+        Algorithm::Dsanls | Algorithm::Baseline(_) => {
+            let mut outputs = Vec::with_capacity(results.len());
+            for (rank, r) in results.into_iter().enumerate() {
+                outputs.push(NodeOutput {
+                    u_block: r.u.with_context(|| format!("rank {rank} sent no U block"))?,
+                    v_block: r.v.with_context(|| format!("rank {rank} sent no V block"))?,
+                    trace: r.trace,
+                    stats: r.stats,
+                    final_clock: r.final_clock,
+                });
+            }
+            let run = algos::reduce_outputs(outputs, cfg.rank, cfg.iterations);
+            Ok(Outcome {
+                label,
+                trace: run.trace,
+                stats: run.stats,
+                sec_per_iter: run.sec_per_iter,
+                u: run.u,
+                v: run.v,
+            })
+        }
+        Algorithm::Secure(SecureAlgo::SynSd
+        | SecureAlgo::SynSsdU
+        | SecureAlgo::SynSsdV
+        | SecureAlgo::SynSsdUv) => {
+            let mut outputs = Vec::with_capacity(results.len());
+            for (rank, r) in results.into_iter().enumerate() {
+                outputs.push(syn::SynNodeOutput {
+                    u_local: r.u.with_context(|| format!("rank {rank} sent no U"))?,
+                    v_block: r.v.with_context(|| format!("rank {rank} sent no V block"))?,
+                    trace: r.trace,
+                    stats: r.stats,
+                    final_clock: r.final_clock,
+                });
+            }
+            let run = syn::assemble_syn(outputs, cfg.rank, cfg.t1 * cfg.t2);
+            Ok(Outcome {
+                label,
+                trace: run.trace,
+                stats: run.stats,
+                sec_per_iter: run.sec_per_iter,
+                u: run.u,
+                v: run.v,
+            })
+        }
+        Algorithm::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => {
+            let server = results
+                .pop()
+                .context("async run returned no server result")?;
+            let server_u = server.u.context("server sent no U")?;
+            let m_fro_sq = server.fro_sq.context("server sent no ‖M‖² chunk")?;
+            let mut outs = Vec::with_capacity(results.len());
+            for (rank, r) in results.into_iter().enumerate() {
+                outs.push(asyn::AsynClientOutput {
+                    v_block: r.v.with_context(|| format!("client {rank} sent no V block"))?,
+                    samples: r.samples,
+                    stats: r.stats,
+                    final_clock: r.final_clock,
+                });
+            }
+            let run =
+                asyn::assemble_asyn(server_u, outs, &coordinator::asyn_options(cfg), m_fro_sq);
+            Ok(Outcome {
+                label,
+                trace: run.trace,
+                stats: run.stats,
+                sec_per_iter: run.sec_per_iter,
+                u: run.u,
+                v: run.v,
+            })
+        }
+    }
+}
+
+/// Re-run the configured experiment on the simulated backend and compare
+/// factors bit-for-bit (deterministic algorithms only).
+fn verify_against_sim(cfg: &ExperimentConfig, tcp: &Outcome) -> Result<()> {
+    if matches!(cfg.algorithm, Algorithm::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV)) {
+        println!("verify-sim: skipped (asynchronous protocols are order-dependent by design)");
+        return Ok(());
+    }
+    print!("verify-sim: running simulated backend… ");
+    std::io::stdout().flush().ok();
+    let m = coordinator::load_dataset(cfg);
+    let sim = coordinator::run_on(cfg, &m);
+    let identical = sim.u.data() == tcp.u.data() && sim.v.data() == tcp.v.data();
+    println!("factors bit-identical to simulated backend: {identical}");
+    if !identical {
+        crate::bail!(
+            "TCP factors diverge from simulator (sim err {:.6}, tcp err {:.6})",
+            sim.final_error(),
+            tcp.final_error()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_codecs_roundtrip() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 4 + j) as f32 * 0.5);
+        let back = mat_from_payload(&mat_payload(&m)).unwrap();
+        assert_eq!(back.data(), m.data());
+        assert_eq!((back.rows(), back.cols()), (3, 4));
+        assert!(mat_from_payload(&[3.0, 4.0, 1.0]).is_err(), "short matrix must error");
+
+        let trace = vec![
+            TracePoint { iteration: 0, sim_time: 0.0, rel_error: 1.0 },
+            TracePoint { iteration: 7, sim_time: 1.0 / 3.0, rel_error: 0.123456789 },
+        ];
+        let back = trace_from_payload(&trace_payload(&trace)).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[1].iteration, 7);
+        assert_eq!(back[1].sim_time, 1.0 / 3.0);
+        assert_eq!(back[1].rel_error, 0.123456789);
+
+        let stats = CommStats {
+            bytes_sent: usize::MAX / 2,
+            bytes_received: 12345,
+            messages: 999,
+            compute_time: 1.5,
+            comm_time: 2.5e-7,
+            stall_time: 0.0,
+        };
+        let (bs, clock) = stats_from_payload(&stats_payload(&stats, 42.042)).unwrap();
+        assert_eq!(bs, stats);
+        assert_eq!(clock, 42.042);
+
+        let samples = vec![(0.5, 123.456, 10usize), (1.5, 0.001, 20)];
+        let back = samples_from_payload(&samples_payload(&samples)).unwrap();
+        assert_eq!(back, samples);
+    }
+
+    #[test]
+    fn launch_args_parse() {
+        let args: Vec<String> = ["--nodes", "4", "--verify-sim", "--experiment.rank=3"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let o = parse_launch_args(&args).unwrap();
+        assert_eq!(o.cfg.nodes, 4);
+        assert!(o.verify_sim);
+        assert_eq!(o.cfg.rank, 3);
+        assert!(o.forward.iter().any(|a| a == "--experiment.nodes=4"));
+        assert!(!o.forward.iter().any(|a| a == "--verify-sim"));
+    }
+}

@@ -2,8 +2,13 @@
 //!
 //! This is the launcher layer the CLI (`rust/src/main.rs`), the benches
 //! (`benches/*.rs`) and the examples build on. One entry point,
-//! [`run_experiment`], covers every algorithm in the paper; helpers expose
-//! the figure-specific sweeps.
+//! [`run_experiment`], covers every algorithm in the paper on the
+//! simulated transport; [`launch`] runs the same experiments over real
+//! TCP worker processes (`dsanls launch` / `dsanls worker`).
+
+pub mod launch;
+
+use std::path::Path;
 
 use crate::algos::{run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions, TracePoint};
 use crate::config::{Algorithm, ExperimentConfig};
@@ -58,28 +63,67 @@ pub fn secure_partition(cfg: &ExperimentConfig, cols: usize) -> Partition {
     }
 }
 
+/// Parse `--config FILE` plus `--section.key=value` overrides (shared by
+/// the `run`/`compare`/`secure` subcommands, the workers and `launch`).
+pub fn parse_cli_config(args: &[String]) -> Result<ExperimentConfig, String> {
+    let mut cfg = ExperimentConfig::default();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if a == "--config" {
+            let path = args.get(i + 1).ok_or("--config needs a path")?;
+            cfg = ExperimentConfig::from_file(Path::new(path))?;
+            i += 2;
+        } else if let Some(rest) = a.strip_prefix("--") {
+            let (key, value) =
+                rest.split_once('=').ok_or(format!("expected --key=value: {a}"))?;
+            cfg.apply(key, value)?;
+            i += 1;
+        } else {
+            return Err(format!("unexpected argument: {a}"));
+        }
+    }
+    Ok(cfg)
+}
+
+/// Map the generic config onto DSANLS options.
+pub fn dsanls_options(cfg: &ExperimentConfig) -> DsanlsOptions {
+    DsanlsOptions {
+        nodes: cfg.nodes,
+        rank: cfg.rank,
+        iterations: cfg.iterations,
+        solver: cfg.solver,
+        sketch: cfg.sketch,
+        d_u: cfg.d_u,
+        d_v: cfg.d_v,
+        seed: cfg.seed,
+        eval_every: cfg.eval_every,
+        mu: cfg.mu,
+        comm: cfg.comm,
+        box_bound: false,
+    }
+}
+
+/// Map the generic config onto the MPI-FAUN baseline options.
+pub fn dist_anls_options(cfg: &ExperimentConfig, solver: crate::solvers::SolverKind) -> DistAnlsOptions {
+    DistAnlsOptions {
+        nodes: cfg.nodes,
+        rank: cfg.rank,
+        iterations: cfg.iterations,
+        solver,
+        seed: cfg.seed,
+        eval_every: cfg.eval_every,
+        comm: cfg.comm,
+        inner_sweeps: 1,
+    }
+}
+
 /// Run the experiment described by `cfg` on matrix `m` (pass the
 /// pre-generated matrix so sweeps reuse it).
 pub fn run_on(cfg: &ExperimentConfig, m: &Matrix) -> Outcome {
     match cfg.algorithm {
         Algorithm::Dsanls => {
-            let run = run_dsanls(
-                m,
-                &DsanlsOptions {
-                    nodes: cfg.nodes,
-                    rank: cfg.rank,
-                    iterations: cfg.iterations,
-                    solver: cfg.solver,
-                    sketch: cfg.sketch,
-                    d_u: cfg.d_u,
-                    d_v: cfg.d_v,
-                    seed: cfg.seed,
-                    eval_every: cfg.eval_every,
-                    mu: cfg.mu,
-                    comm: cfg.comm,
-                    box_bound: false,
-                },
-            );
+            let run = run_dsanls(m, &dsanls_options(cfg));
             Outcome {
                 label: format!("DSANLS/{}", initial(cfg.sketch.name())),
                 trace: run.trace,
@@ -90,19 +134,7 @@ pub fn run_on(cfg: &ExperimentConfig, m: &Matrix) -> Outcome {
             }
         }
         Algorithm::Baseline(solver) => {
-            let run = run_dist_anls(
-                m,
-                &DistAnlsOptions {
-                    nodes: cfg.nodes,
-                    rank: cfg.rank,
-                    iterations: cfg.iterations,
-                    solver,
-                    seed: cfg.seed,
-                    eval_every: cfg.eval_every,
-                    comm: cfg.comm,
-                    inner_sweeps: 1,
-                },
-            );
+            let run = run_dist_anls(m, &dist_anls_options(cfg, solver));
             Outcome {
                 label: format!("MPI-FAUN-{}", solver.name().to_uppercase()),
                 trace: run.trace,

@@ -1,40 +1,54 @@
-//! In-process simulated cluster: N node threads, deterministic collectives,
-//! and a modelled network clock.
+//! Cluster execution layer: the virtual-clock/statistics node context the
+//! distributed algorithms run in, generic over the transport backend.
 //!
-//! Every distributed algorithm in the crate ([`crate::algos`],
-//! [`crate::secure`]) runs on this substrate. Design contract:
+//! The communication substrate itself lives in [`crate::transport`]: a
+//! [`Communicator`] trait with an in-process simulated backend
+//! ([`crate::transport::SimComm`]) and a real multi-process TCP backend
+//! ([`crate::transport::TcpComm`]). This module supplies what the
+//! *algorithms* see on top of it:
 //!
-//! * **Determinism** — collectives combine contributions in *rank order*,
-//!   so a sum is bit-identical regardless of thread scheduling, and
-//!   node-count-invariance tests can compare traces across `N`.
-//! * **Simulated time** — each node carries a virtual clock: measured local
-//!   compute time (via [`NodeCtx::compute`]) plus modelled wire time from
-//!   [`CommModel`]. Synchronous collectives are barriers: everyone leaves at
-//!   `max(clock_r) + t_comm`, and the wait shows up as
-//!   [`CommStats::stall_time`] — that is how the imbalanced-workload
-//!   experiments (paper Fig. 7/9) observe stragglers without real sleeps.
+//! * [`NodeCtx`] — identity, a virtual clock, [`CommStats`] accounting and
+//!   the rank-ordered deterministic collectives (`all_reduce_sum`,
+//!   `all_gather`). The reduction is the **same code for every backend**,
+//!   summing contributions in rank order, so a seeded run produces
+//!   bit-identical factors whether the ranks are threads or TCP processes.
+//! * [`run_cluster`] — N simulated node threads (the default substrate for
+//!   tests and the figure sweeps), with the modelled-clock/stall semantics:
+//!   synchronous collectives are barriers, everyone leaves at
+//!   `max(clock_r) + t_comm`, and waiting shows up as
+//!   [`CommStats::stall_time`] — how the imbalanced-workload experiments
+//!   (paper Fig. 7/9) observe stragglers without real sleeps.
+//! * [`run_tcp_cluster`] — the same shape over real localhost TCP (one
+//!   thread per rank, each with its own [`crate::transport::TcpComm`]);
+//!   used by the backend-equivalence tests and benches. Real deployments
+//!   use one *process* per rank via `dsanls launch` / `dsanls worker`
+//!   ([`crate::coordinator::launch`]).
+//!
+//! Timing discipline follows the backend ([`Timing`]): the simulated
+//! backend charges analytic wire time from [`CommModel`] and measures
+//! stalls against the exchanged clock stamps; the TCP backend charges
+//! measured wall-clock around each blocking collective.
+//!
+//! Byte accounting (per node): under the modelled discipline an all-reduce
+//! charges the payload once (ring schedule, size independent of `N`) and an
+//! all-gather charges `own·(N−1)` sent — this is what makes the baselines'
+//! `O(nk)` gather visibly more expensive than DSANLS's `O(kd)` reduce in
+//! `tests/paper_claims.rs`. The measured discipline charges the actual
+//! full-mesh traffic (`payload·(N−1)`).
+//!
 //! * **Out-of-band evaluation** — [`NodeCtx::untimed`] suppresses both the
-//!   clock and the byte counters, so error traces can gather factors without
-//!   perturbing the measured communication volume (DSANLS's `O(kd)` claim is
-//!   asserted on these counters).
+//!   clock and the byte counters, so error traces can gather factors
+//!   without perturbing the measured communication volume (DSANLS's
+//!   `O(kd)` claim is asserted on these counters).
 //!
-//! Byte accounting (per node): an all-reduce charges the payload once (ring
-//! schedule, size independent of `N`); an all-gather charges `own·(N−1)`
-//! sent — this is what makes the baselines' `O(nk)` gather visibly more
-//! expensive than DSANLS's `O(kd)` reduce in `tests/paper_claims.rs`.
-//!
-//! The asynchronous protocols use [`MailboxHub`] (parameter-server mailbox
-//! channels) instead of the barrier collectives — no synchronisation, each
-//! client advances its private clock.
-//!
-//! Intra-node data parallelism is capped inside node threads via
-//! [`crate::parallel::set_local_threads`] so `N` nodes × GEMM workers never
-//! oversubscribe the machine.
+//! Transport failures are fatal to a node: a rank that lost a collective
+//!   peer cannot make progress, so the collective wrappers panic with the
+//!   underlying [`crate::error::Error`]; the cluster driver (thread scope
+//!   or worker process) surfaces it.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::mpsc;
-use std::sync::{Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
+
+use crate::transport::{Communicator, SimCluster, SimComm, TcpComm, Timing};
 
 /// Modelled interconnect: latency (seconds) + bandwidth (bytes/second).
 /// Default is a 10 Gbps / 100 µs datacenter link (the paper's cluster is
@@ -88,113 +102,61 @@ pub struct CommStats {
     pub messages: usize,
     /// Measured local compute seconds ([`NodeCtx::compute`]).
     pub compute_time: f64,
-    /// Modelled wire seconds.
+    /// Wire seconds (modelled or measured, per the backend).
     pub comm_time: f64,
-    /// Seconds spent waiting for stragglers at synchronous barriers.
+    /// Seconds spent waiting for stragglers at synchronous barriers
+    /// (modelled backend only; the measured backend folds waiting into
+    /// `comm_time`).
     pub stall_time: f64,
-}
-
-// ---------------------------------------------------------------------------
-// Deterministic rank-ordered exchange (the collective backbone)
-// ---------------------------------------------------------------------------
-
-struct ExchangeState {
-    deposited: usize,
-    collected: usize,
-    slots: Vec<Vec<f32>>,
-    max_clock: f64,
-}
-
-struct Shared {
-    n: usize,
-    lock: Mutex<ExchangeState>,
-    cv: Condvar,
-}
-
-impl Shared {
-    fn new(n: usize) -> Self {
-        Shared {
-            n,
-            lock: Mutex::new(ExchangeState {
-                deposited: 0,
-                collected: 0,
-                slots: (0..n).map(|_| Vec::new()).collect(),
-                max_clock: 0.0,
-            }),
-            cv: Condvar::new(),
-        }
-    }
-
-    /// Deposit `payload`, wait for all ranks, return every rank's payload in
-    /// rank order plus the maximum clock observed at the barrier.
-    ///
-    /// Double-phase barrier: a round is *depositing* until all `n` ranks
-    /// arrive, then *collecting* until all `n` have read; only then do the
-    /// slots reset, so a fast node re-entering for the next collective
-    /// blocks instead of clobbering the previous round.
-    fn exchange(&self, rank: usize, clock: f64, payload: Vec<f32>) -> (Vec<Vec<f32>>, f64) {
-        if self.n == 1 {
-            return (vec![payload], clock);
-        }
-        let mut g = self.lock.lock().unwrap();
-        // wait until the depositing phase of a fresh round is open
-        while !(g.deposited < self.n && g.collected == 0) {
-            g = self.cv.wait(g).unwrap();
-        }
-        g.slots[rank] = payload;
-        g.max_clock = if g.deposited == 0 { clock } else { g.max_clock.max(clock) };
-        g.deposited += 1;
-        if g.deposited == self.n {
-            self.cv.notify_all();
-        }
-        while g.deposited < self.n {
-            g = self.cv.wait(g).unwrap();
-        }
-        let out: Vec<Vec<f32>> = g.slots.clone();
-        let max_clock = g.max_clock;
-        g.collected += 1;
-        if g.collected == self.n {
-            g.deposited = 0;
-            g.collected = 0;
-            self.cv.notify_all();
-        }
-        (out, max_clock)
-    }
 }
 
 // ---------------------------------------------------------------------------
 // Node context
 // ---------------------------------------------------------------------------
 
-/// Handle each simulated node receives: identity, virtual clock, statistics
-/// and the synchronous collectives.
-pub struct NodeCtx<'a> {
+/// Handle each cluster node receives: identity, virtual clock, statistics
+/// and the synchronous collectives, over any [`Communicator`] backend.
+pub struct NodeCtx<C: Communicator> {
     /// This node's rank in `0..nodes`.
     pub rank: usize,
     nodes: usize,
-    comm: CommModel,
+    model: CommModel,
+    timing: Timing,
     clock: f64,
     stats: CommStats,
     suppress: bool,
-    shared: &'a Shared,
+    comm: C,
 }
 
-impl<'a> NodeCtx<'a> {
-    fn new(rank: usize, nodes: usize, comm: CommModel, shared: &'a Shared) -> Self {
+impl<C: Communicator> NodeCtx<C> {
+    /// Wrap a connected communicator with the clock/statistics context.
+    pub fn new(comm: C, model: CommModel) -> Self {
         NodeCtx {
-            rank,
-            nodes,
-            comm,
+            rank: comm.rank(),
+            nodes: comm.nodes(),
+            timing: comm.timing(),
+            model,
             clock: 0.0,
             stats: CommStats::default(),
             suppress: false,
-            shared,
+            comm,
         }
     }
 
     /// Number of nodes in the cluster.
     pub fn nodes(&self) -> usize {
         self.nodes
+    }
+
+    /// Direct access to the transport (tagged P2P for the asynchronous
+    /// protocols; collective users should stay on the wrappers below).
+    pub fn comm_mut(&mut self) -> &mut C {
+        &mut self.comm
+    }
+
+    /// Consume the context, returning the transport and final statistics.
+    pub fn into_parts(self) -> (C, CommStats, f64) {
+        (self.comm, self.stats, self.clock)
     }
 
     /// Run `f`, measuring its wall time into the virtual clock and
@@ -222,7 +184,7 @@ impl<'a> NodeCtx<'a> {
     /// Run `f` with the clock and the byte counters frozen — for
     /// out-of-band evaluation that must not disturb the measured run.
     /// Collectives inside still synchronise (all ranks must enter them).
-    pub fn untimed<T>(&mut self, f: impl FnOnce(&mut NodeCtx<'a>) -> T) -> T {
+    pub fn untimed<T>(&mut self, f: impl FnOnce(&mut Self) -> T) -> T {
         let was = self.suppress;
         self.suppress = true;
         let out = f(self);
@@ -231,27 +193,43 @@ impl<'a> NodeCtx<'a> {
     }
 
     /// In-place all-reduce: `buf ← Σ_r buf_r`, summed in rank order so the
-    /// result is bit-identical on every node and for every thread schedule.
-    /// All ranks must pass equal-length buffers.
+    /// result is bit-identical on every node, for every thread schedule
+    /// and for every backend. All ranks must pass equal-length buffers.
     pub fn all_reduce_sum(&mut self, buf: &mut [f32]) {
         let bytes = std::mem::size_of_val(buf);
-        let (slots, max_clock) = self.shared.exchange(self.rank, self.clock, buf.to_vec());
+        let tick = Instant::now();
+        let g = self
+            .comm
+            .exchange(self.clock, buf)
+            .unwrap_or_else(|e| panic!("all-reduce failed on rank {}: {e}", self.rank));
         buf.fill(0.0);
-        for slot in &slots {
+        for slot in &g.parts {
             debug_assert_eq!(slot.len(), buf.len(), "all_reduce_sum length mismatch");
             for (b, v) in buf.iter_mut().zip(slot.iter()) {
                 *b += v;
             }
         }
         if !self.suppress {
-            let stall = (max_clock - self.clock).max(0.0);
-            let t = self.comm.all_reduce_time(bytes, self.nodes);
-            self.stats.stall_time += stall;
-            self.stats.comm_time += t;
-            self.stats.bytes_sent += bytes;
-            self.stats.bytes_received += bytes;
             self.stats.messages += 1;
-            self.clock = max_clock + t;
+            match self.timing {
+                Timing::Modelled => {
+                    let stall = (g.max_clock - self.clock).max(0.0);
+                    let t = self.model.all_reduce_time(bytes, self.nodes);
+                    self.stats.stall_time += stall;
+                    self.stats.comm_time += t;
+                    self.stats.bytes_sent += bytes;
+                    self.stats.bytes_received += bytes;
+                    self.clock = g.max_clock + t;
+                }
+                Timing::Measured => {
+                    let dt = tick.elapsed().as_secs_f64();
+                    let peers = self.nodes.saturating_sub(1);
+                    self.stats.comm_time += dt;
+                    self.stats.bytes_sent += bytes * peers;
+                    self.stats.bytes_received += bytes * peers;
+                    self.clock += dt;
+                }
+            }
         }
     }
 
@@ -259,20 +237,34 @@ impl<'a> NodeCtx<'a> {
     /// returns all contributions in rank order.
     pub fn all_gather(&mut self, data: &[f32]) -> Vec<Vec<f32>> {
         let own = std::mem::size_of_val(data);
-        let (slots, max_clock) = self.shared.exchange(self.rank, self.clock, data.to_vec());
+        let tick = Instant::now();
+        let g = self
+            .comm
+            .exchange(self.clock, data)
+            .unwrap_or_else(|e| panic!("all-gather failed on rank {}: {e}", self.rank));
         if !self.suppress {
-            let total: usize = slots.iter().map(|s| s.len() * 4).sum();
+            let total: usize = g.parts.iter().map(|s| s.len() * 4).sum();
             let recv = total.saturating_sub(own);
-            let stall = (max_clock - self.clock).max(0.0);
-            let t = self.comm.all_gather_time(recv, self.nodes);
-            self.stats.stall_time += stall;
-            self.stats.comm_time += t;
-            self.stats.bytes_sent += own * self.nodes.saturating_sub(1);
+            let peers = self.nodes.saturating_sub(1);
+            self.stats.messages += peers;
+            self.stats.bytes_sent += own * peers;
             self.stats.bytes_received += recv;
-            self.stats.messages += self.nodes.saturating_sub(1);
-            self.clock = max_clock + t;
+            match self.timing {
+                Timing::Modelled => {
+                    let stall = (g.max_clock - self.clock).max(0.0);
+                    let t = self.model.all_gather_time(recv, self.nodes);
+                    self.stats.stall_time += stall;
+                    self.stats.comm_time += t;
+                    self.clock = g.max_clock + t;
+                }
+                Timing::Measured => {
+                    let dt = tick.elapsed().as_secs_f64();
+                    self.stats.comm_time += dt;
+                    self.clock += dt;
+                }
+            }
         }
-        slots
+        g.parts
     }
 
     /// Current virtual time in seconds.
@@ -286,33 +278,45 @@ impl<'a> NodeCtx<'a> {
     }
 }
 
-/// Run `f` once per node on its own thread and return the outputs in rank
-/// order. Panics in any node propagate. Each node thread caps its intra-node
-/// data parallelism at `cores / nodes` so the cluster simulation does not
-/// oversubscribe the machine (§Perf: the nested spawn storm inflated
-/// per-node wallclock ~5× on 10-node runs before this cap existed).
-pub fn run_cluster<T, F>(nodes: usize, comm: CommModel, f: F) -> Vec<T>
+// ---------------------------------------------------------------------------
+// Cluster drivers
+// ---------------------------------------------------------------------------
+
+/// Per-node intra-node parallelism cap: `N` node workers × GEMM threads
+/// must not oversubscribe the machine, and — just as important — the cap
+/// must be **identical across backends** so the thread-count-sensitive
+/// reductions (`gemm_tn` partials) split work the same way and stay
+/// bit-identical (§Perf: the nested spawn storm inflated per-node wallclock
+/// ~5× on 10-node runs before this cap existed).
+pub fn apply_node_thread_policy(nodes: usize) {
+    if nodes > 1 {
+        let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
+        crate::parallel::set_local_threads(Some((cores / nodes).max(1)));
+    }
+}
+
+/// Run `f` once per node on its own thread over the **simulated** backend
+/// and return the outputs in rank order. Panics in any node propagate.
+pub fn run_cluster<T, F>(nodes: usize, model: CommModel, f: F) -> Vec<T>
 where
     T: Send,
-    F: Fn(&mut NodeCtx<'_>) -> T + Sync,
+    F: Fn(&mut NodeCtx<SimComm>) -> T + Sync,
 {
     assert!(nodes > 0, "run_cluster needs at least one node");
-    let shared = Shared::new(nodes);
+    let cluster = SimCluster::new(nodes);
     if nodes == 1 {
         // single node: run inline with full intra-node parallelism
-        let mut ctx = NodeCtx::new(0, 1, comm, &shared);
+        let mut ctx = NodeCtx::new(SimComm::new(0, cluster), model);
         return vec![f(&mut ctx)];
     }
     let mut out: Vec<Option<T>> = (0..nodes).map(|_| None).collect();
     std::thread::scope(|s| {
         for (rank, slot) in out.iter_mut().enumerate() {
-            let shared = &shared;
+            let comm = SimComm::new(rank, cluster.clone());
             let f = &f;
             s.spawn(move || {
-                let cores =
-                    std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
-                crate::parallel::set_local_threads(Some((cores / nodes).max(1)));
-                let mut ctx = NodeCtx::new(rank, nodes, comm, shared);
+                apply_node_thread_policy(nodes);
+                let mut ctx = NodeCtx::new(comm, model);
                 *slot = Some(f(&mut ctx));
                 crate::parallel::set_local_threads(None);
             });
@@ -321,75 +325,43 @@ where
     out.into_iter().map(|o| o.expect("node produced no output")).collect()
 }
 
-// ---------------------------------------------------------------------------
-// Mailboxes (asynchronous parameter-server transport)
-// ---------------------------------------------------------------------------
-
-/// Tag marking a client's final message to the server.
-pub const TAG_SHUTDOWN: u64 = u64::MAX;
-
-/// One message on the parameter-server channel.
-pub struct Packet {
-    /// Sender rank (`usize::MAX` for server replies).
-    pub from: usize,
-    /// Sender's virtual clock when the packet left.
-    pub sent_at: f64,
-    pub payload: Vec<f32>,
-    pub tag: u64,
-}
-
-/// Server side of the mailbox transport: a shared inbox plus one reply
-/// channel per client.
-pub struct MailboxHub {
-    /// Messages from all clients, in arrival order.
-    pub inbox: mpsc::Receiver<Packet>,
-    replies: Vec<mpsc::Sender<Packet>>,
-    delivered: AtomicUsize,
-}
-
-/// Client side: send to the server, receive that server's replies.
-pub struct Mailbox {
-    rank: usize,
-    to_hub: mpsc::Sender<Packet>,
-    from_hub: mpsc::Receiver<Packet>,
-}
-
-impl MailboxHub {
-    /// Create a hub and one mailbox per client rank.
-    pub fn new(nodes: usize) -> (MailboxHub, Vec<Mailbox>) {
-        let (to_hub, inbox) = mpsc::channel();
-        let mut replies = Vec::with_capacity(nodes);
-        let mut clients = Vec::with_capacity(nodes);
-        for rank in 0..nodes {
-            let (reply_tx, reply_rx) = mpsc::channel();
-            replies.push(reply_tx);
-            clients.push(Mailbox { rank, to_hub: to_hub.clone(), from_hub: reply_rx });
+/// Run `f` once per rank over the **real TCP** backend (localhost mesh,
+/// rendezvous included), one thread per rank inside this process. Same
+/// shape as [`run_cluster`], so the backend-equivalence tests can run the
+/// identical node closure on both substrates. Multi-*process* deployment
+/// goes through `dsanls launch` instead ([`crate::coordinator::launch`]).
+pub fn run_tcp_cluster<T, F>(nodes: usize, model: CommModel, f: F) -> crate::error::Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(&mut NodeCtx<TcpComm>) -> T + Sync,
+{
+    use crate::transport::{Rendezvous, TcpOptions};
+    assert!(nodes > 0, "run_tcp_cluster needs at least one node");
+    let rdv = Rendezvous::bind(0)?;
+    let addr = rdv.addr();
+    let mut out: Vec<Option<crate::error::Result<T>>> = (0..nodes).map(|_| None).collect();
+    let rdv_result = std::thread::scope(|s| {
+        let coord = s.spawn(move || rdv.wait_workers(nodes, Duration::from_secs(30)));
+        for (rank, slot) in out.iter_mut().enumerate() {
+            let addr = addr.clone();
+            let f = &f;
+            s.spawn(move || {
+                let run = (|| {
+                    let comm = TcpComm::connect(&addr, rank, nodes, &TcpOptions::default())?;
+                    apply_node_thread_policy(nodes);
+                    let mut ctx = NodeCtx::new(comm, model);
+                    let value = f(&mut ctx);
+                    crate::parallel::set_local_threads(None);
+                    Ok(value)
+                })();
+                *slot = Some(run);
+            });
         }
-        (MailboxHub { inbox, replies, delivered: AtomicUsize::new(0) }, clients)
-    }
-
-    /// Reply to client `to`. Returns `Err` if the client already hung up.
-    pub fn reply(&self, to: usize, p: Packet) -> Result<(), mpsc::SendError<Packet>> {
-        self.delivered.fetch_add(1, Ordering::Relaxed);
-        self.replies[to].send(p)
-    }
-
-    /// Number of replies successfully handed to clients.
-    pub fn delivered(&self) -> usize {
-        self.delivered.load(Ordering::Relaxed)
-    }
-}
-
-impl Mailbox {
-    /// Send `payload` to the server, stamped with the local virtual clock.
-    pub fn send(&self, clock: f64, tag: u64, payload: Vec<f32>) {
-        let _ = self.to_hub.send(Packet { from: self.rank, sent_at: clock, payload, tag });
-    }
-
-    /// Block until the server replies.
-    pub fn recv(&self) -> Result<Packet, mpsc::RecvError> {
-        self.from_hub.recv()
-    }
+        // hold the coordinator-side connections until every rank finished
+        coord.join().expect("rendezvous thread panicked")
+    });
+    rdv_result?;
+    out.into_iter().map(|o| o.expect("rank produced no output")).collect()
 }
 
 #[cfg(test)]
@@ -495,35 +467,24 @@ mod tests {
         assert_eq!(free.all_gather_time(123456, 8), 0.0);
     }
 
+    /// The identical node body over both backends must yield identical
+    /// values (the generic function is monomorphised per transport).
+    fn collective_mix_node<C: crate::transport::Communicator>(ctx: &mut NodeCtx<C>) -> Vec<f32> {
+        let mut buf = vec![(ctx.rank + 1) as f32 * 0.125; 16];
+        ctx.all_reduce_sum(&mut buf);
+        let gathered = ctx.all_gather(&buf[..4]);
+        let mut out = buf;
+        for part in gathered {
+            out.extend_from_slice(&part);
+        }
+        out
+    }
+
     #[test]
-    fn mailbox_roundtrip() {
-        let (hub, clients) = MailboxHub::new(2);
-        std::thread::scope(|s| {
-            s.spawn(move || {
-                let mut live = 2;
-                while live > 0 {
-                    let p = hub.inbox.recv().unwrap();
-                    if p.tag == TAG_SHUTDOWN {
-                        live -= 1;
-                        continue;
-                    }
-                    let doubled: Vec<f32> = p.payload.iter().map(|v| v * 2.0).collect();
-                    hub.reply(
-                        p.from,
-                        Packet { from: usize::MAX, sent_at: p.sent_at, payload: doubled, tag: p.tag },
-                    )
-                    .unwrap();
-                }
-            });
-            for mb in clients {
-                s.spawn(move || {
-                    mb.send(0.5, 7, vec![1.0, 2.0]);
-                    let reply = mb.recv().unwrap();
-                    assert_eq!(reply.payload, vec![2.0, 4.0]);
-                    assert_eq!(reply.tag, 7);
-                    mb.send(1.0, TAG_SHUTDOWN, Vec::new());
-                });
-            }
-        });
+    fn tcp_cluster_collectives_match_sim() {
+        let sim = run_cluster(3, CommModel::default(), |ctx| collective_mix_node(ctx));
+        let tcp = run_tcp_cluster(3, CommModel::default(), |ctx| collective_mix_node(ctx))
+            .expect("tcp cluster failed");
+        assert_eq!(sim, tcp);
     }
 }

@@ -9,8 +9,10 @@
 //!   [`algos::dsanls`] distributed sketched-ANLS algorithm, the
 //!   MPI-FAUN-style baselines ([`algos::dist_mu`], [`algos::dist_hals`],
 //!   [`algos::dist_anls_bpp`]), and the four secure federated protocols in
-//!   [`secure`] (Syn-SD, Syn-SSD, Asyn-SD, Asyn-SSD), all running on the
-//!   in-process simulated cluster of [`dist`].
+//!   [`secure`] (Syn-SD, Syn-SSD, Asyn-SD, Asyn-SSD), all generic over the
+//!   pluggable [`transport`] layer — an in-process simulated cluster (the
+//!   [`dist`] clock/stall model) or real multi-process TCP workers
+//!   (`dsanls launch` / `dsanls worker`).
 //! * **L2 — JAX model** (`python/compile/model.py`) — the sketched update
 //!   step as a JAX graph, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 — Pallas kernels** (`python/compile/kernels/`) — proximal
@@ -40,6 +42,7 @@ pub mod secure;
 pub mod sketch;
 pub mod solvers;
 pub mod testkit;
+pub mod transport;
 
 /// Crate-wide result alias.
 pub type Result<T> = error::Result<T>;

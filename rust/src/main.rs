@@ -3,6 +3,14 @@
 //! Subcommands:
 //! * `run [--config FILE] [--key=value ...]` — run one experiment and
 //!   write the trace to `<output.dir>/<name>.csv`.
+//! * `launch --nodes N [--config FILE] [--verify-sim] ...` — run the same
+//!   experiment over **real TCP worker processes** on localhost (the
+//!   asynchronous protocols get an extra parameter-server process);
+//!   `--verify-sim` asserts the factors are bit-identical to the
+//!   simulated backend.
+//! * `worker --rendezvous HOST:PORT --rank R ...` — one rank of a
+//!   `launch` cluster (spawned automatically by `launch`; localhost-only
+//!   today — the mesh roster carries ports, not hosts).
 //! * `compare [--config FILE] [--key=value ...]` — run DSANLS against all
 //!   three MPI-FAUN baselines on the configured dataset (a Fig. 2 panel).
 //! * `secure [--config FILE] ...` — run all six secure protocols on the
@@ -26,6 +34,8 @@ fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let code = match args.first().map(|s| s.as_str()) {
         Some("run") => cmd_run(&args[1..]),
+        Some("launch") => cmd_result(coordinator::launch::launch_main(&args[1..])),
+        Some("worker") => cmd_result(coordinator::launch::worker_main(&args[1..])),
         Some("compare") => cmd_compare(&args[1..]),
         Some("secure") => cmd_secure(&args[1..]),
         Some("attack") => cmd_attack(),
@@ -47,13 +57,18 @@ fn main() {
 fn usage() {
     println!(
         "dsanls {} — Fast and Secure Distributed NMF (TKDE 2020 reproduction)\n\n\
-         USAGE: dsanls <run|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
+         USAGE: dsanls <run|launch|worker|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
+         launch:  dsanls launch --nodes N [--port P] [--verify-sim] [--config FILE] [--key=value ...]\n\
+                  runs the experiment over real TCP worker processes (localhost);\n\
+                  --verify-sim re-runs the simulator and asserts bit-identical factors\n\
+         worker:  dsanls worker --rendezvous HOST:PORT --rank R [--config FILE] [--key=value ...]\n\
+                  one launch rank (spawned by launch; localhost-only deployment today)\n\n\
          Config keys (TOML sections flattened as --section.key=value):\n\
            experiment: name algorithm dataset scale nodes rank iterations seed eval_every backend\n\
            sketch:     kind d_u d_v\n\
            solver:     kind alpha beta\n\
            secure:     t1 t2 skew rounds local_iters\n\
-           network:    latency_us bandwidth_gbps\n\
+           network:    latency_us bandwidth_gbps timeout_s\n\
            output:     dir",
         dsanls::VERSION
     );
@@ -61,23 +76,18 @@ fn usage() {
 
 /// Parse `--config FILE` plus `--section.key=value` overrides.
 fn parse_config(args: &[String]) -> Result<ExperimentConfig, String> {
-    let mut cfg = ExperimentConfig::default();
-    let mut i = 0;
-    while i < args.len() {
-        let a = &args[i];
-        if a == "--config" {
-            let path = args.get(i + 1).ok_or("--config needs a path")?;
-            cfg = ExperimentConfig::from_file(Path::new(path))?;
-            i += 2;
-        } else if let Some(rest) = a.strip_prefix("--") {
-            let (key, value) = rest.split_once('=').ok_or(format!("expected --key=value: {a}"))?;
-            cfg.apply(key, value)?;
-            i += 1;
-        } else {
-            return Err(format!("unexpected argument: {a}"));
+    coordinator::parse_cli_config(args)
+}
+
+/// Map a library `Result` onto a process exit code.
+fn cmd_result(r: dsanls::Result<()>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
         }
     }
-    Ok(cfg)
 }
 
 fn cmd_run(args: &[String]) -> i32 {

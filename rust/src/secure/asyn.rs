@@ -16,6 +16,14 @@
 //! `Sᵗ` consistently is exactly the synchronisation the async setting
 //! forbids (paper Sec. 4.3).
 //!
+//! **Transport**: the protocol runs on the tagged P2P surface of
+//! [`crate::transport::Communicator`] — a cluster of `N + 1` ranks where
+//! ranks `0..N` are the parties and rank `N` ([`server_rank`]) is the
+//! parameter server ([`server_loop`] / [`client_loop`]). The in-process
+//! driver [`run_asyn`] wires N+1 [`SimComm`] threads; the multi-process
+//! TCP path (`dsanls launch`) runs the same two loops over
+//! [`crate::transport::TcpComm`] workers.
+//!
 //! Timing: every client keeps a private **virtual clock** (measured local
 //! compute + modelled p2p wire time). Error traces merge the clients'
 //! locally-logged `(clock, residual²)` samples on the driver — party r only
@@ -26,12 +34,13 @@ use std::time::Instant;
 use super::{privacy::AuditLog, SecureAlgo, SecureRun};
 use crate::algos::TracePoint;
 use crate::data::partition::Partition;
-use crate::dist::{CommModel, CommStats, MailboxHub, Packet, TAG_SHUTDOWN};
+use crate::dist::{CommModel, CommStats};
 use crate::linalg::{Mat, Matrix};
 use crate::nmf::{init_factors, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
 use crate::solvers::{self, Normal, SolverKind};
+use crate::transport::{Communicator, SimCluster, SimComm, TAG_SHUTDOWN};
 
 /// Options for the asynchronous protocols.
 #[derive(Debug, Clone)]
@@ -73,7 +82,24 @@ impl Default for AsynOptions {
     }
 }
 
-/// Run Asyn-SD (`variant = AsynSd`) or Asyn-SSD-V (`variant = AsynSsdV`).
+/// The parameter server's rank in an async cluster of `parties` clients
+/// (the cluster has `parties + 1` ranks in total).
+pub fn server_rank(parties: usize) -> usize {
+    parties
+}
+
+/// Per-client output of one asynchronous party.
+pub struct AsynClientOutput {
+    /// The party-private item factor block `V_{J_r:}`.
+    pub v_block: Mat,
+    /// `(virtual clock, local residual², local iterations done)` samples.
+    pub samples: Vec<(f64, f64, usize)>,
+    pub stats: CommStats,
+    pub final_clock: f64,
+}
+
+/// Run Asyn-SD (`variant = AsynSd`) or Asyn-SSD-V (`variant = AsynSsdV`)
+/// on the in-process simulated transport.
 pub fn run_asyn(
     m: &Matrix,
     cols: &Partition,
@@ -83,175 +109,57 @@ pub fn run_asyn(
 ) -> SecureRun {
     assert!(matches!(variant, SecureAlgo::AsynSd | SecureAlgo::AsynSsdV));
     assert_eq!(cols.nodes(), opts.nodes);
-    let k = opts.rank;
-    let m_rows = m.rows();
     let m_fro_sq = m.fro_sq();
-    let sketch_v = variant == SecureAlgo::AsynSsdV;
-
-    let (hub, clients) = MailboxHub::new(opts.nodes);
     let stream = StreamRng::new(opts.seed);
 
     // shared-seed initial factors (server + all clients agree at t=0)
     let (u_init, v_full) = {
         let mut rng = stream.for_iteration(0, Role::Init);
-        init_factors(m, k, &mut rng)
+        init_factors(m, opts.rank, &mut rng)
     };
 
-    // client results: (V block, per-client residual samples, stats, clock)
-    type ClientOut = (Mat, Vec<(f64, f64, usize)>, CommStats, f64);
-    let mut client_out: Vec<Option<ClientOut>> = (0..opts.nodes).map(|_| None).collect();
+    let cluster = SimCluster::new(opts.nodes + 1);
+    let mut client_out: Vec<Option<AsynClientOutput>> = (0..opts.nodes).map(|_| None).collect();
     let mut server_u = u_init.clone();
 
     std::thread::scope(|s| {
-        // ---------------- server (Alg. 6) ----------------
-        let u_server_init = u_init.clone();
-        let server_handle = s.spawn(move || {
-            let mut u = u_server_init;
-            let mut live = opts.nodes;
-            let mut t = 0usize;
-            while live > 0 {
-                let p: Packet = hub.inbox.recv().expect("server inbox closed");
-                if p.tag == TAG_SHUTDOWN {
-                    live -= 1;
-                    continue;
-                }
-                // relaxation: U ← (1−ω)U + ω·U_(r)
-                let omega = (opts.omega0 / (1.0 + t as f64 / opts.tau)) as f32;
-                for (dst, src) in u.data_mut().iter_mut().zip(p.payload.iter()) {
-                    *dst = (1.0 - omega) * *dst + omega * src;
-                }
-                t += 1;
-                // reply with the latest server copy
-                let reply = Packet {
-                    from: usize::MAX,
-                    sent_at: p.sent_at,
-                    payload: u.data().to_vec(),
-                    tag: p.tag,
-                };
-                let _ = hub.reply(p.from, reply);
-            }
-            u
-        });
+        let server_comm = SimComm::new(server_rank(opts.nodes), cluster.clone());
+        let u0 = u_init.clone();
+        let server_handle = s.spawn(move || server_loop(server_comm, opts, u0));
 
-        // ---------------- clients (Alg. 7) ----------------
-        for ((rank, mailbox), slot) in clients.into_iter().enumerate().zip(client_out.iter_mut()) {
-            let my_cols = cols.range(rank);
+        for (party, slot) in client_out.iter_mut().enumerate() {
+            let comm = SimComm::new(party, cluster.clone());
             let u0 = u_init.clone();
-            let v0 = v_full.row_block(my_cols.clone());
-            let stream = stream;
+            let v0 = v_full.row_block(cols.range(party));
             s.spawn(move || {
-                // same anti-oversubscription policy as dist::run_cluster
-                let cores = std::thread::available_parallelism().map(|c| c.get()).unwrap_or(4);
-                crate::parallel::set_local_threads(Some((cores / opts.nodes).max(1)));
-                let m_col = m.col_block(my_cols.clone());
-                let m_col_t = m_col.transpose();
-                let mut u_local = u0;
-                let mut v_block = v0;
-                let d1 = if opts.d1 > 0 {
-                    opts.d1.min(m_rows)
-                } else {
-                    ((m_rows / 10).max(2 * k)).min(m_rows)
-                };
-
-                let mut clock = 0.0f64;
-                let mut stats = CommStats::default();
-                let mut samples: Vec<(f64, f64, usize)> = Vec::new();
-                let mut iters_done = 0usize;
-
-                // initial local residual
-                let (_, r0) = rel_error_parts(&m_col, &u_local, &v_block);
-                samples.push((0.0, r0, 0));
-
-                for round in 0..opts.rounds {
-                    let tick = Instant::now();
-                    for li in 0..opts.local_iters {
-                        let it = round * opts.local_iters + li;
-                        // U_(r) update (never sketched in async)
-                        {
-                            let gram = v_block.gram();
-                            let cross = match &m_col {
-                                Matrix::Dense(md) => md.matmul(&v_block),
-                                Matrix::Sparse(ms) => ms.spmm(&v_block),
-                            };
-                            solvers::update_auto(
-                                opts.solver,
-                                &mut u_local,
-                                &Normal::new(&gram, &cross),
-                                &opts.mu,
-                                it,
-                            );
-                        }
-                        // V_{J_r:} update (sketched for Asyn-SSD-V)
-                        if sketch_v && d1 < m_rows {
-                            let mut rng = stream.for_node(rank, 0xC33E + it as u64);
-                            let sk = SketchMatrix::generate(opts.sketch, m_rows, d1, &mut rng);
-                            let a = sk.mul_right(&m_col_t);
-                            let b = sk.mul_rows_tn(&u_local, 0);
-                            let (gram, cross) = solvers::normal_from(&a, &b);
-                            solvers::update_auto(
-                                opts.solver,
-                                &mut v_block,
-                                &Normal::new(&gram, &cross),
-                                &opts.mu,
-                                it,
-                            );
-                        } else {
-                            let gram = u_local.gram();
-                            let cross = match &m_col_t {
-                                Matrix::Dense(md) => md.matmul(&u_local),
-                                Matrix::Sparse(ms) => ms.spmm(&u_local),
-                            };
-                            solvers::update_auto(
-                                opts.solver,
-                                &mut v_block,
-                                &Normal::new(&gram, &cross),
-                                &opts.mu,
-                                it,
-                            );
-                        }
-                        iters_done += 1;
-                    }
-                    let dt = tick.elapsed().as_secs_f64();
-                    clock += dt;
-                    stats.compute_time += dt;
-
-                    // push U_(r), receive latest server U (Alg. 7 lines 8–9)
-                    let payload = u_local.data().to_vec();
-                    if let Some(a) = audit {
-                        a.record(rank, "asyn/u-push", &payload);
-                    }
-                    let bytes = payload.len() * 4;
-                    mailbox.send(clock, round as u64, payload);
-                    let reply = mailbox.recv().expect("server hung up");
-                    debug_assert_eq!(reply.payload.len(), u_local.data().len());
-                    u_local.data_mut().copy_from_slice(&reply.payload);
-                    let wire = 2.0 * opts.comm.p2p_time(bytes);
-                    clock += wire;
-                    stats.comm_time += wire;
-                    stats.bytes_sent += bytes;
-                    stats.bytes_received += bytes;
-                    stats.messages += 2;
-
-                    // out-of-band residual sample (not timed)
-                    let (_, resid) = rel_error_parts(&m_col, &u_local, &v_block);
-                    samples.push((clock, resid, iters_done));
-                }
-                mailbox.send(clock, TAG_SHUTDOWN, Vec::new());
-                *slot = Some((v_block, samples, stats, clock));
+                crate::dist::apply_node_thread_policy(opts.nodes);
+                *slot = Some(client_loop(comm, party, m, cols, opts, variant, u0, v0, audit));
+                crate::parallel::set_local_threads(None);
             });
         }
 
         server_u = server_handle.join().expect("server panicked");
     });
 
-    // ---------------- merge client logs into a global trace ----------------
-    let outs: Vec<ClientOut> = client_out.into_iter().map(|o| o.unwrap()).collect();
+    let outs: Vec<AsynClientOutput> = client_out.into_iter().map(|o| o.unwrap()).collect();
+    assemble_asyn(server_u, outs, opts, m_fro_sq)
+}
+
+/// Merge the server factor and per-client outputs into a [`SecureRun`]
+/// (shared by the in-process driver and the TCP launch coordinator).
+pub fn assemble_asyn(
+    server_u: Mat,
+    outs: Vec<AsynClientOutput>,
+    opts: &AsynOptions,
+    m_fro_sq: f64,
+) -> SecureRun {
     let trace = merge_traces(&outs, m_fro_sq);
-    let v_blocks: Vec<Vec<f32>> = outs.iter().map(|o| o.0.data().to_vec()).collect();
-    let v = crate::algos::assemble_blocks_pub(&v_blocks, k);
-    let stats: Vec<CommStats> = outs.iter().map(|o| o.2).collect();
-    let max_clock = outs.iter().map(|o| o.3).fold(0.0, f64::max);
-    let total_iters: usize = outs.iter().map(|o| o.1.last().map(|s| s.2).unwrap_or(0)).sum();
+    let v_blocks: Vec<Vec<f32>> = outs.iter().map(|o| o.v_block.data().to_vec()).collect();
+    let v = crate::algos::assemble_blocks_pub(&v_blocks, opts.rank);
+    let stats: Vec<CommStats> = outs.iter().map(|o| o.stats).collect();
+    let max_clock = outs.iter().map(|o| o.final_clock).fold(0.0, f64::max);
+    let total_iters: usize =
+        outs.iter().map(|o| o.samples.last().map(|s| s.2).unwrap_or(0)).sum();
     SecureRun {
         u: server_u,
         v,
@@ -261,14 +169,172 @@ pub fn run_asyn(
     }
 }
 
+/// The parameter server (Alg. 6), on rank [`server_rank`] of any transport.
+/// Serves relaxation-mixed `U` replies until every client sent
+/// [`TAG_SHUTDOWN`]; returns the final server factor.
+pub fn server_loop<C: Communicator>(mut comm: C, opts: &AsynOptions, u_init: Mat) -> Mat {
+    let parties = comm.nodes() - 1;
+    let mut u = u_init;
+    // per-client done flags so a client counts once, whether it left via
+    // TAG_SHUTDOWN or a dead link detected on reply
+    let mut done = vec![false; parties];
+    let mut live = parties;
+    let mut t = 0usize;
+    fn finish(done: &mut [bool], live: &mut usize, who: usize) {
+        if who < done.len() && !done[who] {
+            done[who] = true;
+            *live -= 1;
+        }
+    }
+    while live > 0 {
+        let p = comm.recv_any().unwrap_or_else(|e| panic!("server inbox closed: {e}"));
+        if p.tag == TAG_SHUTDOWN {
+            finish(&mut done, &mut live, p.from);
+            continue;
+        }
+        // relaxation: U ← (1−ω)U + ω·U_(r)
+        let omega = (opts.omega0 / (1.0 + t as f64 / opts.tau)) as f32;
+        for (dst, src) in u.data_mut().iter_mut().zip(p.payload.iter()) {
+            *dst = (1.0 - omega) * *dst + omega * src;
+        }
+        t += 1;
+        // reply with the latest server copy, echoing tag and clock stamp
+        if comm.send(p.from, p.tag, p.sent_at, u.data()).is_err() {
+            // client died between push and reply — retire it (at most once)
+            finish(&mut done, &mut live, p.from);
+        }
+    }
+    u
+}
+
+/// One asynchronous client (Alg. 7) on rank `party` of any transport.
+/// `u0`/`v0` are the shared-seed initial factors (the caller derives them
+/// so server and clients agree at t=0).
+#[allow(clippy::too_many_arguments)]
+pub fn client_loop<C: Communicator>(
+    mut comm: C,
+    party: usize,
+    m: &Matrix,
+    cols: &Partition,
+    opts: &AsynOptions,
+    variant: SecureAlgo,
+    u0: Mat,
+    v0: Mat,
+    audit: Option<&AuditLog>,
+) -> AsynClientOutput {
+    let server = server_rank(comm.nodes() - 1);
+    let sketch_v = variant == SecureAlgo::AsynSsdV;
+    let k = opts.rank;
+    let m_rows = m.rows();
+    let stream = StreamRng::new(opts.seed);
+    let my_cols = cols.range(party);
+    let m_col = m.col_block(my_cols.clone());
+    let m_col_t = m_col.transpose();
+    let mut u_local = u0;
+    let mut v_block = v0;
+    let d1 = if opts.d1 > 0 {
+        opts.d1.min(m_rows)
+    } else {
+        ((m_rows / 10).max(2 * k)).min(m_rows)
+    };
+
+    let mut clock = 0.0f64;
+    let mut stats = CommStats::default();
+    let mut samples: Vec<(f64, f64, usize)> = Vec::new();
+    let mut iters_done = 0usize;
+
+    // initial local residual
+    let (_, r0) = rel_error_parts(&m_col, &u_local, &v_block);
+    samples.push((0.0, r0, 0));
+
+    for round in 0..opts.rounds {
+        let tick = Instant::now();
+        for li in 0..opts.local_iters {
+            let it = round * opts.local_iters + li;
+            // U_(r) update (never sketched in async)
+            {
+                let gram = v_block.gram();
+                let cross = match &m_col {
+                    Matrix::Dense(md) => md.matmul(&v_block),
+                    Matrix::Sparse(ms) => ms.spmm(&v_block),
+                };
+                solvers::update_auto(
+                    opts.solver,
+                    &mut u_local,
+                    &Normal::new(&gram, &cross),
+                    &opts.mu,
+                    it,
+                );
+            }
+            // V_{J_r:} update (sketched for Asyn-SSD-V)
+            if sketch_v && d1 < m_rows {
+                let mut rng = stream.for_node(party, 0xC33E + it as u64);
+                let sk = SketchMatrix::generate(opts.sketch, m_rows, d1, &mut rng);
+                let a = sk.mul_right(&m_col_t);
+                let b = sk.mul_rows_tn(&u_local, 0);
+                let (gram, cross) = solvers::normal_from(&a, &b);
+                solvers::update_auto(
+                    opts.solver,
+                    &mut v_block,
+                    &Normal::new(&gram, &cross),
+                    &opts.mu,
+                    it,
+                );
+            } else {
+                let gram = u_local.gram();
+                let cross = match &m_col_t {
+                    Matrix::Dense(md) => md.matmul(&u_local),
+                    Matrix::Sparse(ms) => ms.spmm(&u_local),
+                };
+                solvers::update_auto(
+                    opts.solver,
+                    &mut v_block,
+                    &Normal::new(&gram, &cross),
+                    &opts.mu,
+                    it,
+                );
+            }
+            iters_done += 1;
+        }
+        let dt = tick.elapsed().as_secs_f64();
+        clock += dt;
+        stats.compute_time += dt;
+
+        // push U_(r), receive latest server U (Alg. 7 lines 8–9)
+        if let Some(a) = audit {
+            a.record(party, "asyn/u-push", u_local.data());
+        }
+        let bytes = u_local.data().len() * 4;
+        comm.send(server, round as u64, clock, u_local.data())
+            .unwrap_or_else(|e| panic!("client {party}: push failed: {e}"));
+        let reply = comm
+            .recv_from(server)
+            .unwrap_or_else(|e| panic!("client {party}: server hung up: {e}"));
+        debug_assert_eq!(reply.payload.len(), u_local.data().len());
+        u_local.data_mut().copy_from_slice(&reply.payload);
+        let wire = 2.0 * opts.comm.p2p_time(bytes);
+        clock += wire;
+        stats.comm_time += wire;
+        stats.bytes_sent += bytes;
+        stats.bytes_received += bytes;
+        stats.messages += 2;
+
+        // out-of-band residual sample (not timed)
+        let (_, resid) = rel_error_parts(&m_col, &u_local, &v_block);
+        samples.push((clock, resid, iters_done));
+    }
+    let _ = comm.send(server, TAG_SHUTDOWN, clock, &[]);
+    AsynClientOutput { v_block, samples, stats, final_clock: clock }
+}
+
 /// Merge per-client `(clock, residual², iters)` logs: at every event time,
 /// the global error is √(Σ_r latest-residual_r / ‖M‖²).
-fn merge_traces(outs: &[(Mat, Vec<(f64, f64, usize)>, CommStats, f64)], m_fro_sq: f64) -> Vec<TracePoint> {
+fn merge_traces(outs: &[AsynClientOutput], m_fro_sq: f64) -> Vec<TracePoint> {
     let n = outs.len();
     // event queue over all samples, time-ordered
     let mut events: Vec<(f64, usize, f64, usize)> = Vec::new(); // (time, client, resid, iters)
     for (r, o) in outs.iter().enumerate() {
-        for &(t, resid, iters) in &o.1 {
+        for &(t, resid, iters) in &o.samples {
             events.push((t, r, resid, iters));
         }
     }

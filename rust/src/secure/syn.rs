@@ -24,12 +24,13 @@ use std::time::Instant;
 use super::{privacy::AuditLog, SecureAlgo, SecureRun};
 use crate::algos::TracePoint;
 use crate::data::partition::Partition;
-use crate::dist::{run_cluster, CommModel, NodeCtx};
+use crate::dist::{run_cluster, CommModel, CommStats, NodeCtx};
 use crate::linalg::{Mat, Matrix};
 use crate::nmf::{init_factors, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
 use crate::solvers::{self, Normal, SolverKind};
+use crate::transport::Communicator;
 
 /// Options shared by the synchronous secure protocols.
 #[derive(Debug, Clone)]
@@ -107,6 +108,18 @@ pub fn run_syn_ssd(
     run_syn(m, cols, opts, variant, audit)
 }
 
+/// Per-party output of one synchronous secure rank.
+pub struct SynNodeOutput {
+    /// The party's local copy of the shared factor `U_(r)`.
+    pub u_local: Mat,
+    /// The party-private item factor block `V_{J_r:}`.
+    pub v_block: Mat,
+    /// Non-empty only on rank 0.
+    pub trace: Vec<TracePoint>,
+    pub stats: CommStats,
+    pub final_clock: f64,
+}
+
 fn run_syn(
     m: &Matrix,
     cols: &Partition,
@@ -114,13 +127,41 @@ fn run_syn(
     algo: SecureAlgo,
     audit: Option<&AuditLog>,
 ) -> SecureRun {
+    let total_iters = opts.t1 * opts.t2;
+    let outputs =
+        run_cluster(opts.nodes, opts.comm, |ctx| syn_node(ctx, m, cols, opts, algo, audit));
+    assemble_syn(outputs, opts.rank, total_iters)
+}
+
+/// Assemble per-party outputs into a [`SecureRun`] (the driver is trusted;
+/// parties never see each other's V).
+pub fn assemble_syn(outputs: Vec<SynNodeOutput>, k: usize, total_iters: usize) -> SecureRun {
+    let u = outputs[0].u_local.clone();
+    let v_blocks: Vec<Vec<f32>> = outputs.iter().map(|o| o.v_block.data().to_vec()).collect();
+    let v = crate::algos::assemble_blocks_pub(&v_blocks, k);
+    let trace = outputs[0].trace.clone();
+    let stats = outputs.iter().map(|o| o.stats).collect();
+    let max_clock = outputs.iter().map(|o| o.final_clock).fold(0.0, f64::max);
+    SecureRun { u, v, trace, stats, sec_per_iter: max_clock / total_iters.max(1) as f64 }
+}
+
+/// One synchronous secure party over any transport backend (TCP worker
+/// entry point). `opts.nodes` must match both the partition and the
+/// communicator's cluster size.
+pub fn syn_node<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    m: &Matrix,
+    cols: &Partition,
+    opts: &SynOptions,
+    algo: SecureAlgo,
+    audit: Option<&AuditLog>,
+) -> SynNodeOutput {
     assert_eq!(cols.nodes(), opts.nodes, "partition/node mismatch");
+    assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let m_rows = m.rows();
     let k = opts.rank;
-    let total_iters = opts.t1 * opts.t2;
     let m_fro_sq = m.fro_sq();
-
-    let outputs = run_cluster(opts.nodes, opts.comm, |ctx| {
+    {
         let rank = ctx.rank;
         let my_cols = cols.range(rank);
         let stream = StreamRng::new(opts.seed);
@@ -242,24 +283,21 @@ fn run_syn(
         }
         record_secure_error(ctx, &m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
 
-        (u_local, v_block, trace, ctx.stats(), ctx.clock())
-    });
-
-    // assemble (driver is trusted; parties never see each other's V)
-    let u = outputs[0].0.clone();
-    let v_blocks: Vec<Vec<f32>> = outputs.iter().map(|o| o.1.data().to_vec()).collect();
-    let v = crate::algos::assemble_blocks_pub(&v_blocks, k);
-    let trace = outputs[0].2.clone();
-    let stats = outputs.iter().map(|o| o.3).collect();
-    let max_clock = outputs.iter().map(|o| o.4).fold(0.0, f64::max);
-    SecureRun { u, v, trace, stats, sec_per_iter: max_clock / total_iters.max(1) as f64 }
+        SynNodeOutput {
+            u_local,
+            v_block,
+            trace: if rank == 0 { trace } else { Vec::new() },
+            stats: ctx.stats(),
+            final_clock: ctx.clock(),
+        }
+    }
 }
 
 /// Secure out-of-band error: each party contributes its local residual
 /// `‖M_{:J_r} − U_(r)·V_{J_r:}ᵀ‖²` (one scalar — reveals nothing about
 /// individual entries); rank 0 records √(Σ residuals / ‖M‖²).
-pub(crate) fn record_secure_error(
-    ctx: &mut NodeCtx<'_>,
+pub(crate) fn record_secure_error<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
     m_col: &Matrix,
     u_local: &Mat,
     v_block: &Mat,

@@ -1,0 +1,309 @@
+//! Pluggable cluster transports: the collective/P2P surface the distributed
+//! algorithms run on, with two interchangeable backends.
+//!
+//! The paper's algorithms need exactly four communication primitives:
+//!
+//! * a synchronous rank-ordered **exchange** (all-gather of one payload per
+//!   rank) from which all-reduce, all-gather and barrier are derived;
+//! * tagged **send**/**recv** point-to-point mailboxes (the asynchronous
+//!   parameter-server protocols, Alg. 6/7);
+//! * **rank** / **nodes** identity.
+//!
+//! [`Communicator`] captures that surface. Backends:
+//!
+//! * [`sim::SimComm`] — the in-process simulated cluster (N node threads,
+//!   in-memory mailboxes). Keeps the virtual clock / stall model of
+//!   [`crate::dist`]: payloads are stamped with the sender's virtual clock
+//!   so synchronous collectives can model barrier stalls.
+//! * [`tcp::TcpComm`] — real multi-process deployment over localhost (or
+//!   any reachable) TCP, `std::net` only: length-prefixed binary frames
+//!   ([`wire`]), a rendezvous/bootstrap handshake (coordinator listens,
+//!   workers connect with rank + magic/version), then a full peer mesh.
+//!
+//! **Determinism contract**: `exchange` returns every rank's payload in
+//! *rank order*, and the reductions built on top (e.g.
+//! [`crate::dist::NodeCtx::all_reduce_sum`]) sum those parts in rank order
+//! on every node. Because the summation code is identical for both
+//! backends, a seeded run produces **bit-identical factors over threads or
+//! over TCP processes** — asserted by `tests/dist_equivalence.rs` and the
+//! `dsanls launch --verify-sim` CLI path.
+//!
+//! Transport failures (peer death, handshake mismatch, timeout) surface as
+//! [`crate::error::Error`] from the `Communicator` methods. The algorithm
+//! layer ([`crate::dist::NodeCtx`]) treats them as fatal to the node: a
+//! rank that lost a collective peer cannot make progress, so it panics
+//! with the transport error and the process/driver reports the failure.
+
+pub mod sim;
+pub mod tcp;
+pub mod wire;
+
+pub use sim::{SimCluster, SimComm};
+pub use tcp::{Rendezvous, TcpComm, TcpOptions};
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+use crate::error::Result;
+
+/// Tag marking a client's final message to the parameter server in the
+/// asynchronous protocols.
+pub const TAG_SHUTDOWN: u64 = u64::MAX;
+
+/// A tagged point-to-point message.
+#[derive(Debug, Clone)]
+pub struct P2pMsg {
+    /// Sender rank.
+    pub from: usize,
+    /// Application tag ([`TAG_SHUTDOWN`] is reserved).
+    pub tag: u64,
+    /// Sender's virtual clock when the message left.
+    pub sent_at: f64,
+    pub payload: Vec<f32>,
+}
+
+/// Result of a synchronous exchange: every rank's payload in rank order
+/// plus the maximum virtual clock observed across the barrier.
+#[derive(Debug)]
+pub struct Gathered {
+    pub parts: Vec<Vec<f32>>,
+    pub max_clock: f64,
+}
+
+/// How the algorithm layer should account communication time on this
+/// backend.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Timing {
+    /// Wire time comes from the analytic [`crate::dist::CommModel`]
+    /// (simulated backend).
+    Modelled,
+    /// Wire time is measured wall-clock around the blocking call (real
+    /// TCP backend).
+    Measured,
+}
+
+/// The collective/P2P surface the distributed algorithms are generic over.
+///
+/// All synchronous ranks of a cluster must issue the same sequence of
+/// `exchange` calls (it is a barrier); P2P calls are unordered. Payload
+/// lengths may differ per rank (all-gather semantics); equal-length
+/// payloads give all-reduce semantics via the caller's rank-ordered sum.
+pub trait Communicator {
+    /// This rank's id in `0..nodes`.
+    fn rank(&self) -> usize;
+
+    /// Cluster size.
+    fn nodes(&self) -> usize;
+
+    /// Timing discipline for [`crate::dist::NodeCtx`] accounting.
+    fn timing(&self) -> Timing;
+
+    /// Synchronous barrier-exchange: deposit `payload` stamped with the
+    /// local virtual `clock`; block until every rank's round-`t` payload
+    /// arrived; return all payloads in rank order plus the max clock.
+    fn exchange(&mut self, clock: f64, payload: &[f32]) -> Result<Gathered>;
+
+    /// Send a tagged message to rank `to` (non-blocking hand-off).
+    fn send(&mut self, to: usize, tag: u64, clock: f64, payload: &[f32]) -> Result<()>;
+
+    /// Block until the next message *from rank `from`* arrives.
+    fn recv_from(&mut self, from: usize) -> Result<P2pMsg>;
+
+    /// Block until a message from *any* rank arrives.
+    fn recv_any(&mut self) -> Result<P2pMsg>;
+
+    /// Synchronisation barrier (an empty exchange). Returns the max clock.
+    fn barrier(&mut self, clock: f64) -> Result<f64> {
+        Ok(self.exchange(clock, &[])?.max_clock)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Inbox: per-peer FIFO queues shared by both backends
+// ---------------------------------------------------------------------------
+
+/// Frames a peer can deliver land in one of two queue families: collective
+/// frames (consumed strictly in rank order by `exchange`) and P2P frames
+/// (consumed by `recv_from`/`recv_any`). Keeping the families separate lets
+/// the asynchronous mailbox traffic interleave with synchronous collectives
+/// without corrupting either.
+pub(crate) struct Inbox {
+    state: Mutex<InboxState>,
+    cv: Condvar,
+}
+
+struct InboxState {
+    coll: Vec<VecDeque<P2pMsg>>,
+    p2p: Vec<VecDeque<P2pMsg>>,
+    closed: Vec<bool>,
+}
+
+impl Inbox {
+    /// An inbox for rank `me` of an `n`-rank cluster. The own slot starts
+    /// closed (no rank has a link to itself), so the
+    /// all-peers-disconnected check in [`Inbox::recv_p2p_any`] can actually
+    /// fire once every real peer is gone.
+    pub(crate) fn new(n: usize, me: usize) -> Inbox {
+        let mut closed = vec![false; n];
+        if me < n {
+            closed[me] = true;
+        }
+        Inbox {
+            state: Mutex::new(InboxState {
+                coll: (0..n).map(|_| VecDeque::new()).collect(),
+                p2p: (0..n).map(|_| VecDeque::new()).collect(),
+                closed,
+            }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub(crate) fn push_coll(&self, from: usize, msg: P2pMsg) {
+        let mut st = self.state.lock().unwrap();
+        st.coll[from].push_back(msg);
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn push_p2p(&self, from: usize, msg: P2pMsg) {
+        let mut st = self.state.lock().unwrap();
+        st.p2p[from].push_back(msg);
+        self.cv.notify_all();
+    }
+
+    /// Mark a peer as disconnected; pending receives from it fail once its
+    /// queues drain.
+    pub(crate) fn close(&self, from: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.closed[from] = true;
+        self.cv.notify_all();
+    }
+
+    /// Next collective frame from `from`, FIFO.
+    pub(crate) fn recv_coll(&self, from: usize, timeout: Option<Duration>) -> Result<P2pMsg> {
+        self.wait(timeout, |st| {
+            if let Some(m) = st.coll[from].pop_front() {
+                return Some(Ok(m));
+            }
+            if st.closed[from] {
+                return Some(Err(crate::err!("peer {from} disconnected mid-collective")));
+            }
+            None
+        })
+    }
+
+    /// Next P2P frame from `from`, FIFO.
+    pub(crate) fn recv_p2p_from(&self, from: usize, timeout: Option<Duration>) -> Result<P2pMsg> {
+        self.wait(timeout, |st| {
+            if let Some(m) = st.p2p[from].pop_front() {
+                return Some(Ok(m));
+            }
+            if st.closed[from] {
+                return Some(Err(crate::err!("peer {from} disconnected")));
+            }
+            None
+        })
+    }
+
+    /// Next P2P frame from any peer (lowest rank with pending traffic
+    /// first).
+    pub(crate) fn recv_p2p_any(&self, timeout: Option<Duration>) -> Result<P2pMsg> {
+        self.wait(timeout, |st| {
+            for q in st.p2p.iter_mut() {
+                if let Some(m) = q.pop_front() {
+                    return Some(Ok(m));
+                }
+            }
+            if st.closed.iter().all(|&c| c) {
+                return Some(Err(crate::err!("all peers disconnected")));
+            }
+            None
+        })
+    }
+
+    fn wait<F>(&self, timeout: Option<Duration>, mut try_take: F) -> Result<P2pMsg>
+    where
+        F: FnMut(&mut InboxState) -> Option<Result<P2pMsg>>,
+    {
+        let deadline = timeout.map(|t| std::time::Instant::now() + t);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(out) = try_take(&mut st) {
+                return out;
+            }
+            match deadline {
+                None => st = self.cv.wait(st).unwrap(),
+                Some(d) => {
+                    let now = std::time::Instant::now();
+                    if now >= d {
+                        return Err(crate::err!(
+                            "transport receive timed out after {:?}",
+                            timeout.unwrap()
+                        ));
+                    }
+                    let (guard, _) = self.cv.wait_timeout(st, d - now).unwrap();
+                    st = guard;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inbox_fifo_per_peer_and_any() {
+        let inbox = Inbox::new(3, 2);
+        for tag in 0..3u64 {
+            inbox.push_p2p(1, P2pMsg { from: 1, tag, sent_at: 0.0, payload: vec![tag as f32] });
+        }
+        inbox.push_p2p(0, P2pMsg { from: 0, tag: 9, sent_at: 0.0, payload: vec![] });
+        for tag in 0..3u64 {
+            let m = inbox.recv_p2p_from(1, None).unwrap();
+            assert_eq!(m.tag, tag, "FIFO order violated");
+        }
+        let any = inbox.recv_p2p_any(None).unwrap();
+        assert_eq!(any.from, 0);
+    }
+
+    #[test]
+    fn inbox_close_fails_pending_recv() {
+        let inbox = Inbox::new(2, 1);
+        inbox.close(0);
+        assert!(inbox.recv_p2p_from(0, None).is_err());
+        assert!(inbox.recv_coll(0, None).is_err());
+        // own slot (1) starts closed, peer 0 now closed → all disconnected
+        assert!(inbox.recv_p2p_any(None).is_err());
+    }
+
+    #[test]
+    fn inbox_queued_frames_survive_peer_close() {
+        // frames delivered before the link died must still be readable
+        let inbox = Inbox::new(2, 1);
+        inbox.push_p2p(0, P2pMsg { from: 0, tag: 3, sent_at: 0.0, payload: vec![1.0] });
+        inbox.close(0);
+        assert_eq!(inbox.recv_p2p_from(0, None).unwrap().tag, 3);
+        assert!(inbox.recv_p2p_from(0, None).is_err());
+    }
+
+    #[test]
+    fn inbox_timeout_errors() {
+        let inbox = Inbox::new(2, 1);
+        let err = inbox.recv_p2p_from(0, Some(Duration::from_millis(20))).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn inbox_cross_thread_wakeup() {
+        let inbox = std::sync::Arc::new(Inbox::new(2, 1));
+        let i2 = inbox.clone();
+        let h = std::thread::spawn(move || i2.recv_p2p_from(0, Some(Duration::from_secs(5))));
+        std::thread::sleep(Duration::from_millis(30));
+        inbox.push_p2p(0, P2pMsg { from: 0, tag: 7, sent_at: 1.5, payload: vec![2.0] });
+        let got = h.join().unwrap().unwrap();
+        assert_eq!(got.tag, 7);
+        assert_eq!(got.payload, vec![2.0]);
+    }
+}

@@ -1,0 +1,218 @@
+//! In-process simulated backend: rank-per-thread over shared-memory
+//! mailboxes.
+//!
+//! The collective `exchange` is a mesh: every rank deposits its payload
+//! (stamped with its virtual clock) into each peer's inbox and then blocks
+//! until it holds the matching round's payload from every peer. Per-peer
+//! FIFO queues make rounds self-synchronising — a fast rank's round-`t+1`
+//! deposit queues *behind* its round-`t` one, so rounds can never mix (the
+//! collective sequence number is additionally asserted). This is exactly
+//! the logic of the TCP backend minus the sockets, which is what makes the
+//! two backends bit-identical.
+//!
+//! The virtual-clock / stall accounting itself lives in
+//! [`crate::dist::NodeCtx`]; this layer only transports the clock stamps.
+
+use std::sync::Arc;
+
+use super::{Communicator, Gathered, Inbox, P2pMsg, Timing};
+use crate::error::Result;
+
+/// Shared state of one simulated cluster: an inbox per rank.
+pub struct SimCluster {
+    inboxes: Vec<Inbox>,
+}
+
+impl SimCluster {
+    /// A cluster of `n` ranks. Hand one [`SimComm`] per node thread via
+    /// [`SimComm::new`].
+    pub fn new(n: usize) -> Arc<SimCluster> {
+        assert!(n > 0, "cluster needs at least one rank");
+        Arc::new(SimCluster { inboxes: (0..n).map(|r| Inbox::new(n, r)).collect() })
+    }
+
+    /// Cluster size.
+    pub fn nodes(&self) -> usize {
+        self.inboxes.len()
+    }
+}
+
+/// One rank's endpoint on a [`SimCluster`].
+pub struct SimComm {
+    rank: usize,
+    cluster: Arc<SimCluster>,
+    /// Collective round counter (sanity check against protocol skew).
+    seq: u64,
+}
+
+impl SimComm {
+    pub fn new(rank: usize, cluster: Arc<SimCluster>) -> SimComm {
+        assert!(rank < cluster.nodes(), "rank {rank} outside cluster");
+        SimComm { rank, cluster, seq: 0 }
+    }
+}
+
+impl Communicator for SimComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn nodes(&self) -> usize {
+        self.cluster.nodes()
+    }
+
+    fn timing(&self) -> Timing {
+        Timing::Modelled
+    }
+
+    fn exchange(&mut self, clock: f64, payload: &[f32]) -> Result<Gathered> {
+        let n = self.nodes();
+        let seq = self.seq;
+        self.seq += 1;
+        if n == 1 {
+            return Ok(Gathered { parts: vec![payload.to_vec()], max_clock: clock });
+        }
+        for (r, inbox) in self.cluster.inboxes.iter().enumerate() {
+            if r != self.rank {
+                inbox.push_coll(
+                    self.rank,
+                    P2pMsg { from: self.rank, tag: seq, sent_at: clock, payload: payload.to_vec() },
+                );
+            }
+        }
+        let own = &self.cluster.inboxes[self.rank];
+        let mut parts: Vec<Vec<f32>> = Vec::with_capacity(n);
+        let mut max_clock = clock;
+        for r in 0..n {
+            if r == self.rank {
+                parts.push(payload.to_vec());
+            } else {
+                let msg = own.recv_coll(r, None)?;
+                if msg.tag != seq {
+                    crate::bail!(
+                        "collective sequence skew: rank {} sent round {}, expected {seq}",
+                        r,
+                        msg.tag
+                    );
+                }
+                max_clock = max_clock.max(msg.sent_at);
+                parts.push(msg.payload);
+            }
+        }
+        Ok(Gathered { parts, max_clock })
+    }
+
+    fn send(&mut self, to: usize, tag: u64, clock: f64, payload: &[f32]) -> Result<()> {
+        if to >= self.nodes() {
+            crate::bail!("send to rank {to} outside cluster of {}", self.nodes());
+        }
+        self.cluster.inboxes[to].push_p2p(
+            self.rank,
+            P2pMsg { from: self.rank, tag, sent_at: clock, payload: payload.to_vec() },
+        );
+        Ok(())
+    }
+
+    fn recv_from(&mut self, from: usize) -> Result<P2pMsg> {
+        self.cluster.inboxes[self.rank].recv_p2p_from(from, None)
+    }
+
+    fn recv_any(&mut self) -> Result<P2pMsg> {
+        self.cluster.inboxes[self.rank].recv_p2p_any(None)
+    }
+}
+
+impl Drop for SimComm {
+    /// Mark this rank disconnected in every peer's inbox. Frames already
+    /// queued are still consumed first (FIFO-before-closed), so a clean
+    /// exit is unaffected — but a rank that dies (panics) mid-protocol now
+    /// fails its peers' pending receives instead of deadlocking the
+    /// cluster (mirrors the TCP backend's reader-EOF behaviour).
+    fn drop(&mut self) {
+        for inbox in &self.cluster.inboxes {
+            inbox.close(self.rank);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn run_ranks<T: Send>(
+        n: usize,
+        f: impl Fn(SimComm) -> T + Sync,
+    ) -> Vec<T> {
+        let cluster = SimCluster::new(n);
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            for (rank, slot) in out.iter_mut().enumerate() {
+                let comm = SimComm::new(rank, cluster.clone());
+                let f = &f;
+                s.spawn(move || *slot = Some(f(comm)));
+            }
+        });
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    #[test]
+    fn exchange_rank_order_and_max_clock() {
+        for n in [1usize, 2, 5] {
+            let results = run_ranks(n, |mut c| {
+                let rank = c.rank();
+                let g = c.exchange(rank as f64, &[rank as f32; 3]).unwrap();
+                (g.parts, g.max_clock)
+            });
+            for (parts, max_clock) in results {
+                assert_eq!(parts.len(), n);
+                for (r, p) in parts.iter().enumerate() {
+                    assert!(p.iter().all(|&v| v == r as f32));
+                }
+                assert_eq!(max_clock, (n - 1) as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn rounds_never_mix() {
+        let results = run_ranks(3, |mut c| {
+            let mut sums = Vec::new();
+            for round in 0..50 {
+                let g = c.exchange(0.0, &[(round * 10 + c.rank()) as f32]).unwrap();
+                sums.push(g.parts.iter().map(|p| p[0]).sum::<f32>());
+            }
+            sums
+        });
+        for sums in results {
+            for (round, s) in sums.iter().enumerate() {
+                let expect: f32 = (0..3).map(|r| (round * 10 + r) as f32).sum();
+                assert_eq!(*s, expect, "round {round}");
+            }
+        }
+    }
+
+    #[test]
+    fn p2p_star_roundtrip() {
+        // ranks 1..n push to rank 0, which doubles and replies — the
+        // parameter-server shape of the asynchronous protocols
+        let results = run_ranks(3, |mut c| {
+            if c.rank() == 0 {
+                let mut served = 0;
+                while served < 2 {
+                    let m = c.recv_any().unwrap();
+                    let doubled: Vec<f32> = m.payload.iter().map(|v| v * 2.0).collect();
+                    c.send(m.from, m.tag, 0.0, &doubled).unwrap();
+                    served += 1;
+                }
+                Vec::new()
+            } else {
+                c.send(0, 7, 0.5, &[c.rank() as f32]).unwrap();
+                let reply = c.recv_from(0).unwrap();
+                assert_eq!(reply.tag, 7);
+                reply.payload
+            }
+        });
+        assert_eq!(results[1], vec![2.0]);
+        assert_eq!(results[2], vec![4.0]);
+    }
+}

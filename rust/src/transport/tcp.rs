@@ -1,0 +1,521 @@
+//! Real multi-process TCP backend (`std::net` only).
+//!
+//! ## Bootstrap (rendezvous)
+//!
+//! The coordinator binds a [`Rendezvous`] listener and spawns one worker
+//! process per rank. Each worker:
+//!
+//! 1. binds its own mesh listener on an ephemeral port,
+//! 2. dials the coordinator, sends the preamble (magic/version/rank) and a
+//!    `Hello` frame carrying its mesh port,
+//! 3. receives the `Roster` frame (every rank's mesh port),
+//! 4. forms the full peer mesh: rank `r` dials every rank `s > r` (the
+//!    dialed side learns the dialer's rank from the connection preamble)
+//!    and accepts connections from every rank `s < r`.
+//!
+//! The worker keeps the rendezvous connection open to stream results back
+//! to the coordinator when the run finishes.
+//!
+//! ## Data plane
+//!
+//! One reader thread per peer socket decodes frames ([`super::wire`]) into
+//! the shared [`Inbox`]; collective and P2P traffic travel in separate
+//! queue families so the asynchronous mailbox protocols can interleave
+//! with synchronous collectives. Because reader threads always drain their
+//! sockets, the naive everyone-writes-then-reads collective cannot
+//! deadlock on kernel buffers.
+//!
+//! The collective `exchange` is an all-gather over the mesh with a
+//! sequence-number check; the rank-ordered deterministic *reduction*
+//! happens in [`crate::dist::NodeCtx`], shared with the simulated backend,
+//! which is what makes results bit-identical across backends.
+//!
+//! Failure paths (handshake mismatch, peer death, receive timeout) all
+//! surface as [`crate::error::Error`]; a worker that loses a peer
+//! mid-collective aborts with a diagnostic rather than hanging.
+
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use super::wire::{self, Frame, FrameKind};
+use super::{Communicator, Gathered, Inbox, P2pMsg, Timing};
+use crate::error::{Context, Result};
+
+/// Timeouts for the TCP backend.
+#[derive(Debug, Clone, Copy)]
+pub struct TcpOptions {
+    /// Deadline for the whole bootstrap (rendezvous dial + mesh formation).
+    pub connect_timeout: Duration,
+    /// Maximum wait for a collective contribution or an expected P2P reply
+    /// (`None` = wait forever). [`Communicator::recv_any`] never times out:
+    /// an idle parameter server legitimately waits on its clients.
+    pub io_timeout: Option<Duration>,
+}
+
+impl Default for TcpOptions {
+    fn default() -> Self {
+        TcpOptions {
+            connect_timeout: Duration::from_secs(30),
+            io_timeout: Some(Duration::from_secs(120)),
+        }
+    }
+}
+
+/// One rank's endpoint on a real TCP cluster.
+pub struct TcpComm {
+    rank: usize,
+    nodes: usize,
+    /// Write half per peer (`None` at own index).
+    writers: Vec<Option<TcpStream>>,
+    inbox: Arc<Inbox>,
+    /// Collective round counter (skew detector).
+    seq: u64,
+    io_timeout: Option<Duration>,
+    /// Connection back to the coordinator (result reporting); taken by the
+    /// worker via [`TcpComm::take_rendezvous`].
+    rendezvous: Option<TcpStream>,
+}
+
+fn dial_retry(addr: &str, deadline: Instant) -> Result<TcpStream> {
+    loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    crate::bail!("connecting to {addr} timed out ({e})");
+                }
+                std::thread::sleep(Duration::from_millis(25));
+            }
+        }
+    }
+}
+
+fn reader_loop(mut sock: TcpStream, peer: usize, inbox: Arc<Inbox>) {
+    loop {
+        match wire::read_frame(&mut sock) {
+            Ok(f) => {
+                let msg =
+                    P2pMsg { from: peer, tag: f.tag, sent_at: f.clock, payload: f.payload };
+                match f.kind {
+                    FrameKind::Collective => inbox.push_coll(peer, msg),
+                    FrameKind::P2p => inbox.push_p2p(peer, msg),
+                    // anything else on a mesh link is a protocol violation
+                    _ => break,
+                }
+            }
+            // EOF (clean peer shutdown) and hard errors end the link alike;
+            // pending receives from this peer then fail with a diagnostic
+            Err(_) => break,
+        }
+    }
+    inbox.close(peer);
+}
+
+impl TcpComm {
+    /// Join the cluster: dial the coordinator at `rendezvous_addr`,
+    /// handshake as `rank` of `nodes`, and form the peer mesh.
+    pub fn connect(
+        rendezvous_addr: &str,
+        rank: usize,
+        nodes: usize,
+        opts: &TcpOptions,
+    ) -> Result<TcpComm> {
+        if rank >= nodes {
+            crate::bail!("rank {rank} outside cluster of {nodes}");
+        }
+        let deadline = Instant::now() + opts.connect_timeout;
+
+        // mesh listener first, so the advertised port is live before the
+        // roster ever mentions it
+        let listener = TcpListener::bind(("127.0.0.1", 0)).context("binding mesh listener")?;
+        let port = listener.local_addr().context("mesh listener addr")?.port();
+
+        let mut rdv = dial_retry(rendezvous_addr, deadline)
+            .with_context(|| format!("rank {rank} reaching coordinator"))?;
+        rdv.set_nodelay(true).ok();
+        // bound every bootstrap read by the connect deadline so a hung
+        // coordinator/peer turns into an error, not a stuck worker
+        rdv.set_read_timeout(Some(opts.connect_timeout)).ok();
+        wire::write_preamble(&mut rdv, rank as u16)?;
+        wire::write_frame(
+            &mut rdv,
+            &Frame::new(FrameKind::Hello, rank as u64, 0.0, vec![f32::from(port)]),
+        )
+        .context("sending hello")?;
+
+        let roster = wire::read_frame(&mut rdv).context("waiting for roster")?;
+        if roster.kind != FrameKind::Roster {
+            crate::bail!("expected roster, got {:?}", roster.kind);
+        }
+        if roster.payload.len() != nodes {
+            crate::bail!("roster lists {} ranks, expected {nodes}", roster.payload.len());
+        }
+        let ports: Vec<u16> = roster.payload.iter().map(|&p| p as u16).collect();
+
+        // mesh: dial every higher rank, accept from every lower rank
+        let mut sockets: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
+        for (peer, &peer_port) in ports.iter().enumerate().skip(rank + 1) {
+            let mut s = dial_retry(&format!("127.0.0.1:{peer_port}"), deadline)
+                .with_context(|| format!("rank {rank} dialing peer {peer}"))?;
+            s.set_nodelay(true).ok();
+            wire::write_preamble(&mut s, rank as u16)?;
+            sockets[peer] = Some(s);
+        }
+        listener.set_nonblocking(true).context("mesh listener nonblocking")?;
+        let mut accepted = 0;
+        while accepted < rank {
+            match listener.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false).context("peer socket blocking")?;
+                    s.set_nodelay(true).ok();
+                    s.set_read_timeout(Some(opts.connect_timeout)).ok();
+                    let peer = wire::read_preamble(&mut s)? as usize;
+                    s.set_read_timeout(None).ok(); // data plane blocks freely
+                    if peer >= nodes || peer == rank {
+                        crate::bail!("mesh hello from invalid rank {peer}");
+                    }
+                    if sockets[peer].is_some() {
+                        crate::bail!("duplicate mesh connection from rank {peer}");
+                    }
+                    sockets[peer] = Some(s);
+                    accepted += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        crate::bail!(
+                            "rank {rank} timed out waiting for mesh peers ({accepted}/{rank} connected)"
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(crate::err!("mesh accept failed: {e}")),
+            }
+        }
+
+        // data plane: one reader thread per peer (own slot starts closed —
+        // no self link — so all-peers-disconnected detection can fire)
+        let inbox = Arc::new(Inbox::new(nodes, rank));
+        let mut writers: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
+        for (peer, sock) in sockets.into_iter().enumerate() {
+            if let Some(sock) = sock {
+                let reader = sock.try_clone().context("cloning peer socket")?;
+                writers[peer] = Some(sock);
+                let inbox2 = inbox.clone();
+                std::thread::Builder::new()
+                    .name(format!("dsanls-net-r{rank}p{peer}"))
+                    .spawn(move || reader_loop(reader, peer, inbox2))
+                    .context("spawning reader thread")?;
+            }
+        }
+
+        Ok(TcpComm {
+            rank,
+            nodes,
+            writers,
+            inbox,
+            seq: 0,
+            io_timeout: opts.io_timeout,
+            rendezvous: Some(rdv),
+        })
+    }
+
+    /// Detach the connection back to the coordinator (worker result
+    /// reporting) so the mesh communicator can be consumed by the
+    /// algorithm layer independently. Returns `None` on a second call.
+    pub fn take_rendezvous(&mut self) -> Option<TcpStream> {
+        self.rendezvous.take()
+    }
+
+    fn writer(&mut self, peer: usize) -> Result<&mut TcpStream> {
+        if peer >= self.nodes || peer == self.rank {
+            crate::bail!("no link to rank {peer} (self = {}, nodes = {})", self.rank, self.nodes);
+        }
+        self.writers[peer]
+            .as_mut()
+            .ok_or_else(|| crate::err!("link to rank {peer} is down"))
+    }
+}
+
+impl Communicator for TcpComm {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn nodes(&self) -> usize {
+        self.nodes
+    }
+
+    fn timing(&self) -> Timing {
+        Timing::Measured
+    }
+
+    fn exchange(&mut self, clock: f64, payload: &[f32]) -> Result<Gathered> {
+        let seq = self.seq;
+        self.seq += 1;
+        for peer in 0..self.nodes {
+            if peer == self.rank {
+                continue;
+            }
+            let w = self.writer(peer)?;
+            wire::write_frame_parts(w, FrameKind::Collective, seq, clock, payload)
+                .with_context(|| format!("collective send to rank {peer}"))?;
+        }
+        let mut parts: Vec<Vec<f32>> = Vec::with_capacity(self.nodes);
+        let mut max_clock = clock;
+        for peer in 0..self.nodes {
+            if peer == self.rank {
+                parts.push(payload.to_vec());
+                continue;
+            }
+            let msg = self
+                .inbox
+                .recv_coll(peer, self.io_timeout)
+                .with_context(|| format!("collective round {seq}, rank {}", self.rank))?;
+            if msg.tag != seq {
+                crate::bail!(
+                    "collective sequence skew: rank {peer} is at round {}, local round {seq}",
+                    msg.tag
+                );
+            }
+            max_clock = max_clock.max(msg.sent_at);
+            parts.push(msg.payload);
+        }
+        Ok(Gathered { parts, max_clock })
+    }
+
+    fn send(&mut self, to: usize, tag: u64, clock: f64, payload: &[f32]) -> Result<()> {
+        let w = self.writer(to)?;
+        wire::write_frame_parts(w, FrameKind::P2p, tag, clock, payload)
+            .with_context(|| format!("p2p send to rank {to}"))
+    }
+
+    fn recv_from(&mut self, from: usize) -> Result<P2pMsg> {
+        self.inbox.recv_p2p_from(from, self.io_timeout)
+    }
+
+    fn recv_any(&mut self) -> Result<P2pMsg> {
+        // no timeout: an idle parameter server waits on its clients
+        self.inbox.recv_p2p_any(None)
+    }
+}
+
+impl Drop for TcpComm {
+    fn drop(&mut self) {
+        // half-close every mesh link so peers' reader threads observe EOF
+        // and release their pending receives promptly
+        for w in self.writers.iter().flatten() {
+            let _ = w.shutdown(Shutdown::Write);
+        }
+        if let Some(r) = &self.rendezvous {
+            let _ = r.shutdown(Shutdown::Write);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Coordinator side of the bootstrap
+// ---------------------------------------------------------------------------
+
+/// Coordinator's rendezvous point: accepts worker handshakes, assigns the
+/// roster, and hands back one result channel per rank.
+pub struct Rendezvous {
+    listener: TcpListener,
+    port: u16,
+}
+
+/// An accepted, handshaken worker connection.
+pub struct WorkerConn {
+    pub rank: usize,
+    pub stream: TcpStream,
+}
+
+impl Rendezvous {
+    /// Listen on `127.0.0.1:port` (`0` = ephemeral).
+    pub fn bind(port: u16) -> Result<Rendezvous> {
+        let listener =
+            TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding rendezvous port {port}"))?;
+        let port = listener.local_addr().context("rendezvous addr")?.port();
+        Ok(Rendezvous { listener, port })
+    }
+
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    pub fn addr(&self) -> String {
+        format!("127.0.0.1:{}", self.port)
+    }
+
+    /// Accept `nodes` workers (validating magic/version and rank
+    /// uniqueness), broadcast the roster, and return the connections in
+    /// rank order.
+    pub fn wait_workers(&self, nodes: usize, timeout: Duration) -> Result<Vec<WorkerConn>> {
+        self.listener.set_nonblocking(true).context("rendezvous nonblocking")?;
+        let deadline = Instant::now() + timeout;
+        let mut slots: Vec<Option<(TcpStream, u16)>> = (0..nodes).map(|_| None).collect();
+        let mut got = 0;
+        while got < nodes {
+            match self.listener.accept() {
+                Ok((mut s, addr)) => {
+                    s.set_nonblocking(false).context("worker socket blocking")?;
+                    s.set_nodelay(true).ok();
+                    s.set_read_timeout(Some(timeout)).ok();
+                    let rank = wire::read_preamble(&mut s)
+                        .with_context(|| format!("handshake from {addr}"))? as usize;
+                    let hello = wire::read_frame(&mut s).context("reading hello")?;
+                    s.set_read_timeout(None).ok();
+                    if hello.kind != FrameKind::Hello || hello.payload.len() != 1 {
+                        crate::bail!("malformed hello from rank {rank}");
+                    }
+                    if rank >= nodes {
+                        crate::bail!("worker announced rank {rank}, cluster size is {nodes}");
+                    }
+                    if slots[rank].is_some() {
+                        crate::bail!("two workers announced rank {rank}");
+                    }
+                    slots[rank] = Some((s, hello.payload[0] as u16));
+                    got += 1;
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        crate::bail!("rendezvous timed out: {got}/{nodes} workers connected");
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(crate::err!("rendezvous accept failed: {e}")),
+            }
+        }
+        let ports: Vec<f32> =
+            slots.iter().map(|c| f32::from(c.as_ref().unwrap().1)).collect();
+        let mut out = Vec::with_capacity(nodes);
+        for (rank, slot) in slots.into_iter().enumerate() {
+            let (mut s, _) = slot.unwrap();
+            wire::write_frame(&mut s, &Frame::new(FrameKind::Roster, nodes as u64, 0.0, ports.clone()))
+                .with_context(|| format!("sending roster to rank {rank}"))?;
+            out.push(WorkerConn { rank, stream: s });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Run `f` once per rank on its own thread over a real localhost TCP
+    /// mesh (rendezvous included).
+    fn tcp_ranks<T: Send>(n: usize, f: impl Fn(TcpComm) -> T + Sync) -> Vec<T> {
+        let rdv = Rendezvous::bind(0).unwrap();
+        let addr = rdv.addr();
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let coord = s.spawn(move || rdv.wait_workers(n, Duration::from_secs(10)).unwrap());
+            for (rank, slot) in out.iter_mut().enumerate() {
+                let addr = addr.clone();
+                let f = &f;
+                s.spawn(move || {
+                    let comm =
+                        TcpComm::connect(&addr, rank, n, &TcpOptions::default()).unwrap();
+                    *slot = Some(f(comm));
+                });
+            }
+            // keep coordinator-side result channels alive until ranks finish
+            let _conns = coord.join().unwrap();
+        });
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    #[test]
+    fn tcp_exchange_matches_rank_order() {
+        for n in [1usize, 2, 4] {
+            let results = tcp_ranks(n, |mut c| {
+                let mut rounds = Vec::new();
+                for round in 0..5 {
+                    let g = c
+                        .exchange(c.rank() as f64, &[(round * 10 + c.rank()) as f32; 2])
+                        .unwrap();
+                    assert_eq!(g.parts.len(), n);
+                    for (r, p) in g.parts.iter().enumerate() {
+                        assert!(p.iter().all(|&v| v == (round * 10 + r) as f32));
+                    }
+                    rounds.push(g.max_clock);
+                }
+                rounds
+            });
+            for clocks in results {
+                assert!(clocks.iter().all(|&c| c == (n - 1) as f64));
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_ragged_all_gather() {
+        let results = tcp_ranks(3, |mut c| {
+            let mine = vec![c.rank() as f32; c.rank() + 1];
+            c.exchange(0.0, &mine).unwrap().parts
+        });
+        for parts in results {
+            for (r, p) in parts.iter().enumerate() {
+                assert_eq!(p.len(), r + 1);
+                assert!(p.iter().all(|&v| v == r as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_p2p_parameter_server_shape() {
+        let results = tcp_ranks(3, |mut c| {
+            if c.rank() == 0 {
+                for _ in 0..2 {
+                    let m = c.recv_any().unwrap();
+                    let doubled: Vec<f32> = m.payload.iter().map(|v| v * 2.0).collect();
+                    c.send(m.from, m.tag, 0.0, &doubled).unwrap();
+                }
+                Vec::new()
+            } else {
+                c.send(0, c.rank() as u64, 0.25, &[c.rank() as f32, 10.0]).unwrap();
+                let reply = c.recv_from(0).unwrap();
+                assert_eq!(reply.tag, c.rank() as u64);
+                reply.payload
+            }
+        });
+        assert_eq!(results[1], vec![2.0, 20.0]);
+        assert_eq!(results[2], vec![4.0, 20.0]);
+    }
+
+    #[test]
+    fn rendezvous_rejects_rank_out_of_range() {
+        let rdv = Rendezvous::bind(0).unwrap();
+        let addr = rdv.addr();
+        std::thread::scope(|s| {
+            let coord = s.spawn(move || rdv.wait_workers(1, Duration::from_secs(5)));
+            s.spawn(move || {
+                let mut sock = TcpStream::connect(addr).unwrap();
+                wire::write_preamble(&mut sock, 7).unwrap(); // rank 7 of 1
+                wire::write_frame(
+                    &mut sock,
+                    &Frame::new(FrameKind::Hello, 7, 0.0, vec![1.0]),
+                )
+                .unwrap();
+            });
+            let err = coord.join().unwrap().unwrap_err();
+            assert!(err.to_string().contains("rank 7"), "{err}");
+        });
+    }
+
+    #[test]
+    fn connect_timeout_is_clean_error() {
+        // nothing listens on this port (bound then dropped)
+        let port = {
+            let l = TcpListener::bind(("127.0.0.1", 0)).unwrap();
+            l.local_addr().unwrap().port()
+        };
+        let opts = TcpOptions {
+            connect_timeout: Duration::from_millis(100),
+            io_timeout: Some(Duration::from_millis(100)),
+        };
+        let err = TcpComm::connect(&format!("127.0.0.1:{port}"), 0, 2, &opts).unwrap_err();
+        assert!(err.to_string().contains("timed out"), "{err}");
+    }
+}

@@ -1,0 +1,373 @@
+//! Wire format for the TCP backend: connection preamble + length-prefixed
+//! binary frames with a tiny zero-copy `f32` codec.
+//!
+//! Every connection starts with an 8-byte preamble
+//! `[MAGIC u32][VERSION u16][sender rank u16]` (little-endian) so stray or
+//! mismatched peers are rejected before any frame parsing. Frames then
+//! follow, each:
+//!
+//! ```text
+//! [len u32][kind u8][pad u8;3][tag u64][clock f64] [payload: len bytes]
+//! ```
+//!
+//! `len` is the payload byte length (must be a multiple of 4 and at most
+//! [`MAX_FRAME_BYTES`]); the payload is a raw little-endian `f32` slice. On
+//! little-endian targets (every platform we deploy on) encode/decode are
+//! **zero-copy**: the `Vec<f32>` buffer is viewed as bytes for `write_all`
+//! and filled in place by `read_exact` — no per-element conversion, no
+//! intermediate buffer. A per-element fallback keeps big-endian targets
+//! correct.
+//!
+//! All control data rides in the same frames: small integers (ports, node
+//! counts) are stored as exact `f32` values (< 2²⁴), and exact `u64`/`f64`
+//! statistics are bit-split across two `f32` lanes via
+//! [`push_f64_bits`]/[`take_f64_bits`]. One payload type keeps the codec —
+//! and its truncation/oversize error paths — singular.
+
+use std::io::{Read, Write};
+
+use crate::error::{Context, Result};
+
+/// Connection magic: `"DSAN"`.
+pub const MAGIC: u32 = 0x4453_414E;
+/// Wire protocol version; bumped on any frame-layout change.
+pub const VERSION: u16 = 1;
+/// Refuse frames above 1 GiB — a corrupt length prefix otherwise turns
+/// into an attempted huge allocation.
+pub const MAX_FRAME_BYTES: usize = 1 << 30;
+
+/// Frame header size on the wire.
+pub const HEADER_BYTES: usize = 4 + 4 + 8 + 8;
+
+/// What a frame carries.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum FrameKind {
+    /// A synchronous collective contribution (tag = round sequence).
+    Collective = 1,
+    /// A tagged point-to-point message.
+    P2p = 2,
+    /// Worker → coordinator bootstrap (payload = `[listen_port]`).
+    Hello = 3,
+    /// Coordinator → worker roster (payload = peer ports in rank order).
+    Roster = 4,
+    /// Worker → coordinator result chunk (tag = chunk code).
+    Result = 5,
+    /// Worker → coordinator failure report (payload = message chars).
+    Error = 6,
+}
+
+impl FrameKind {
+    pub fn from_u8(v: u8) -> Result<FrameKind> {
+        Ok(match v {
+            1 => FrameKind::Collective,
+            2 => FrameKind::P2p,
+            3 => FrameKind::Hello,
+            4 => FrameKind::Roster,
+            5 => FrameKind::Result,
+            6 => FrameKind::Error,
+            other => crate::bail!("unknown frame kind {other}"),
+        })
+    }
+}
+
+/// One decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Frame {
+    pub kind: FrameKind,
+    pub tag: u64,
+    pub clock: f64,
+    pub payload: Vec<f32>,
+}
+
+impl Frame {
+    pub fn new(kind: FrameKind, tag: u64, clock: f64, payload: Vec<f32>) -> Frame {
+        Frame { kind, tag, clock, payload }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f32 slice ⇄ bytes (the zero-copy core)
+// ---------------------------------------------------------------------------
+
+/// View an `f32` slice as little-endian wire bytes without copying.
+/// Only compiled on little-endian targets, where the in-memory layout *is*
+/// the wire layout.
+#[cfg(target_endian = "little")]
+fn f32s_as_bytes(v: &[f32]) -> &[u8] {
+    // SAFETY: f32 has no padding or invalid bit patterns as bytes; the
+    // length is exactly v.len()*4 and the lifetime is tied to `v`.
+    unsafe { std::slice::from_raw_parts(v.as_ptr().cast::<u8>(), std::mem::size_of_val(v)) }
+}
+
+/// View an `f32` buffer as a mutable byte buffer to `read_exact` into.
+#[cfg(target_endian = "little")]
+fn f32s_as_bytes_mut(v: &mut [f32]) -> &mut [u8] {
+    // SAFETY: any byte pattern is a valid f32 bit pattern (NaNs included),
+    // so filling via read_exact cannot create an invalid value.
+    unsafe {
+        std::slice::from_raw_parts_mut(v.as_mut_ptr().cast::<u8>(), std::mem::size_of_val(v))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Preamble
+// ---------------------------------------------------------------------------
+
+/// Write the connection preamble: magic, version, sender rank.
+pub fn write_preamble<W: Write>(w: &mut W, rank: u16) -> Result<()> {
+    let mut buf = [0u8; 8];
+    buf[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    buf[4..6].copy_from_slice(&VERSION.to_le_bytes());
+    buf[6..8].copy_from_slice(&rank.to_le_bytes());
+    w.write_all(&buf).context("writing preamble")?;
+    w.flush().context("flushing preamble")?;
+    Ok(())
+}
+
+/// Read and validate a connection preamble; returns the sender's rank.
+pub fn read_preamble<R: Read>(r: &mut R) -> Result<u16> {
+    let mut buf = [0u8; 8];
+    r.read_exact(&mut buf).context("reading preamble (truncated handshake)")?;
+    let magic = u32::from_le_bytes(buf[0..4].try_into().unwrap());
+    if magic != MAGIC {
+        crate::bail!("bad magic 0x{magic:08x} (expected 0x{MAGIC:08x}) — not a dsanls peer");
+    }
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    if version != VERSION {
+        crate::bail!("protocol version mismatch: peer {version}, local {VERSION}");
+    }
+    Ok(u16::from_le_bytes(buf[6..8].try_into().unwrap()))
+}
+
+// ---------------------------------------------------------------------------
+// Frames
+// ---------------------------------------------------------------------------
+
+/// Encode and write one frame. The payload bytes go straight from the f32
+/// slice to the socket on little-endian targets.
+pub fn write_frame<W: Write>(w: &mut W, frame: &Frame) -> Result<()> {
+    write_frame_parts(w, frame.kind, frame.tag, frame.clock, &frame.payload)
+}
+
+/// [`write_frame`] without requiring an owned [`Frame`] — the send path
+/// borrows the caller's buffer, so fanning one payload out to N peers
+/// performs zero payload copies.
+pub fn write_frame_parts<W: Write>(
+    w: &mut W,
+    kind: FrameKind,
+    tag: u64,
+    clock: f64,
+    payload: &[f32],
+) -> Result<()> {
+    let len = payload.len() * 4;
+    if len > MAX_FRAME_BYTES {
+        crate::bail!("refusing to send oversized frame ({len} bytes > {MAX_FRAME_BYTES})");
+    }
+    let mut header = [0u8; HEADER_BYTES];
+    header[0..4].copy_from_slice(&(len as u32).to_le_bytes());
+    header[4] = kind as u8;
+    header[8..16].copy_from_slice(&tag.to_le_bytes());
+    header[16..24].copy_from_slice(&clock.to_bits().to_le_bytes());
+    w.write_all(&header).context("writing frame header")?;
+    #[cfg(target_endian = "little")]
+    w.write_all(f32s_as_bytes(payload)).context("writing frame payload")?;
+    #[cfg(not(target_endian = "little"))]
+    for v in payload {
+        w.write_all(&v.to_le_bytes()).context("writing frame payload")?;
+    }
+    w.flush().context("flushing frame")?;
+    Ok(())
+}
+
+/// Read and decode one frame, enforcing the length sanity checks. A peer
+/// hanging up mid-frame surfaces as a truncation error.
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
+    let mut header = [0u8; HEADER_BYTES];
+    r.read_exact(&mut header).context("reading frame header (connection closed or truncated)")?;
+    let len = u32::from_le_bytes(header[0..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        crate::bail!("oversized frame: {len} bytes (max {MAX_FRAME_BYTES})");
+    }
+    if len % 4 != 0 {
+        crate::bail!("corrupt frame: payload length {len} is not a multiple of 4");
+    }
+    let kind = FrameKind::from_u8(header[4])?;
+    let tag = u64::from_le_bytes(header[8..16].try_into().unwrap());
+    let clock = f64::from_bits(u64::from_le_bytes(header[16..24].try_into().unwrap()));
+    let mut payload = vec![0f32; len / 4];
+    #[cfg(target_endian = "little")]
+    r.read_exact(f32s_as_bytes_mut(&mut payload))
+        .context("reading frame payload (truncated frame)")?;
+    #[cfg(not(target_endian = "little"))]
+    {
+        let mut buf = [0u8; 4];
+        for v in payload.iter_mut() {
+            r.read_exact(&mut buf).context("reading frame payload (truncated frame)")?;
+            *v = f32::from_le_bytes(buf);
+        }
+    }
+    Ok(Frame { kind, tag, clock, payload })
+}
+
+// ---------------------------------------------------------------------------
+// Exact scalar packing inside f32 payloads
+// ---------------------------------------------------------------------------
+
+/// Append an `f64` to an f32 payload *exactly* (bit-split across two f32
+/// lanes). Use for statistics/counters that must survive the wire intact.
+pub fn push_f64_bits(payload: &mut Vec<f32>, x: f64) {
+    let bits = x.to_bits();
+    payload.push(f32::from_bits((bits >> 32) as u32));
+    payload.push(f32::from_bits(bits as u32));
+}
+
+/// Inverse of [`push_f64_bits`]; advances `pos` by 2.
+pub fn take_f64_bits(payload: &[f32], pos: &mut usize) -> Result<f64> {
+    if *pos + 2 > payload.len() {
+        crate::bail!("payload underrun decoding f64 at {}", *pos);
+    }
+    let hi = payload[*pos].to_bits() as u64;
+    let lo = payload[*pos + 1].to_bits() as u64;
+    *pos += 2;
+    Ok(f64::from_bits((hi << 32) | lo))
+}
+
+/// Append a `u64` exactly (via the f64-bits channel).
+pub fn push_u64_bits(payload: &mut Vec<f32>, x: u64) {
+    payload.push(f32::from_bits((x >> 32) as u32));
+    payload.push(f32::from_bits(x as u32));
+}
+
+/// Inverse of [`push_u64_bits`].
+pub fn take_u64_bits(payload: &[f32], pos: &mut usize) -> Result<u64> {
+    if *pos + 2 > payload.len() {
+        crate::bail!("payload underrun decoding u64 at {}", *pos);
+    }
+    let hi = payload[*pos].to_bits() as u64;
+    let lo = payload[*pos + 1].to_bits() as u64;
+    *pos += 2;
+    Ok((hi << 32) | lo)
+}
+
+/// Encode an error message as a frame payload (one char per f32 lane —
+/// control path only, never hot).
+pub fn encode_text(msg: &str) -> Vec<f32> {
+    msg.chars().map(|c| c as u32 as f32).collect()
+}
+
+/// Inverse of [`encode_text`].
+pub fn decode_text(payload: &[f32]) -> String {
+    payload.iter().filter_map(|&v| char::from_u32(v as u32)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn roundtrip(frame: &Frame) -> Frame {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, frame).unwrap();
+        read_frame(&mut Cursor::new(buf)).unwrap()
+    }
+
+    #[test]
+    fn frame_roundtrip_various_payloads() {
+        for payload in [
+            Vec::new(),
+            vec![1.5f32],
+            vec![0.0, -0.0, f32::MIN_POSITIVE, 3.25e7, -1.0e-30],
+            (0..1000).map(|i| i as f32 * 0.5).collect::<Vec<_>>(),
+        ] {
+            let f = Frame::new(FrameKind::Collective, 0xDEAD_BEEF_CAFE, -2.5e-4, payload);
+            let back = roundtrip(&f);
+            assert_eq!(back.kind, f.kind);
+            assert_eq!(back.tag, f.tag);
+            assert_eq!(back.clock.to_bits(), f.clock.to_bits());
+            // bit-exact payload (NaN-safe comparison via bits)
+            assert_eq!(back.payload.len(), f.payload.len());
+            for (a, b) in back.payload.iter().zip(f.payload.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn truncated_header_and_payload_error() {
+        let f = Frame::new(FrameKind::P2p, 7, 1.0, vec![1.0, 2.0, 3.0]);
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &f).unwrap();
+        // chop the stream at every prefix length: all must fail cleanly,
+        // none may panic or return a partial frame
+        for cut in 0..buf.len() {
+            let err = read_frame(&mut Cursor::new(&buf[..cut]));
+            assert!(err.is_err(), "cut at {cut} did not error");
+        }
+        // the full buffer still parses
+        assert_eq!(roundtrip(&f).payload, f.payload);
+    }
+
+    #[test]
+    fn oversized_frame_rejected_without_allocation() {
+        let mut header = [0u8; HEADER_BYTES];
+        header[0..4].copy_from_slice(&(u32::MAX).to_le_bytes());
+        header[4] = FrameKind::P2p as u8;
+        let err = read_frame(&mut Cursor::new(header.to_vec())).unwrap_err();
+        assert!(err.to_string().contains("oversized"), "{err}");
+    }
+
+    #[test]
+    fn misaligned_length_rejected() {
+        let mut header = [0u8; HEADER_BYTES];
+        header[0..4].copy_from_slice(&6u32.to_le_bytes());
+        header[4] = FrameKind::P2p as u8;
+        let err = read_frame(&mut Cursor::new(header.to_vec())).unwrap_err();
+        assert!(err.to_string().contains("multiple of 4"), "{err}");
+    }
+
+    #[test]
+    fn unknown_kind_rejected() {
+        let mut header = [0u8; HEADER_BYTES];
+        header[4] = 99;
+        let err = read_frame(&mut Cursor::new(header.to_vec())).unwrap_err();
+        assert!(err.to_string().contains("unknown frame kind"), "{err}");
+    }
+
+    #[test]
+    fn preamble_roundtrip_and_rejection() {
+        let mut buf = Vec::new();
+        write_preamble(&mut buf, 11).unwrap();
+        assert_eq!(read_preamble(&mut Cursor::new(buf.clone())).unwrap(), 11);
+        // corrupt magic
+        let mut bad = buf.clone();
+        bad[0] ^= 0xFF;
+        assert!(read_preamble(&mut Cursor::new(bad)).is_err());
+        // wrong version
+        let mut badv = buf.clone();
+        badv[4] = badv[4].wrapping_add(1);
+        let err = read_preamble(&mut Cursor::new(badv)).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+        // truncated
+        assert!(read_preamble(&mut Cursor::new(&buf[..5])).is_err());
+    }
+
+    #[test]
+    fn exact_scalar_packing() {
+        let mut p = Vec::new();
+        push_f64_bits(&mut p, 1.0 / 3.0);
+        push_f64_bits(&mut p, f64::NAN);
+        push_u64_bits(&mut p, u64::MAX - 12345);
+        let mut pos = 0;
+        assert_eq!(take_f64_bits(&p, &mut pos).unwrap(), 1.0 / 3.0);
+        assert!(take_f64_bits(&p, &mut pos).unwrap().is_nan());
+        assert_eq!(take_u64_bits(&p, &mut pos).unwrap(), u64::MAX - 12345);
+        assert!(take_f64_bits(&p, &mut pos).is_err(), "underrun must error");
+    }
+
+    #[test]
+    fn text_roundtrip() {
+        let msg = "worker 3 failed: peer 1 disconnected — ‖M‖ unavailable";
+        assert_eq!(decode_text(&encode_text(msg)), msg);
+    }
+}

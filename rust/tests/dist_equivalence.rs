@@ -2,10 +2,14 @@
 //! be *algorithms*, not approximations of themselves — node count, data
 //! layout and communication order must not change the math.
 
-use dsanls::algos::{run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions};
+use dsanls::algos::{reduce_outputs, run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions};
+use dsanls::data::partition::uniform_partition;
+use dsanls::dist::run_tcp_cluster;
 use dsanls::linalg::{Mat, Matrix};
 use dsanls::nmf::{Sanls, SanlsOptions};
 use dsanls::rng::Pcg64;
+use dsanls::secure::syn::{assemble_syn, syn_node};
+use dsanls::secure::{run_syn_sd, SecureAlgo, SynOptions};
 use dsanls::sketch::SketchKind;
 use dsanls::solvers::SolverKind;
 
@@ -186,5 +190,64 @@ fn per_iteration_time_reported() {
     assert!(r2.sec_per_iter > 0.0);
     assert!(r2.sec_per_iter.is_finite());
     assert_eq!(r2.stats.len(), 2);
-    assert!(r2.stats.iter().all(|s| s.collectives > 0));
+    assert!(r2.stats.iter().all(|s| s.messages > 0));
+}
+
+/// The tentpole contract of the transport subsystem: DSANLS over real
+/// localhost TCP produces factors **bit-identical** to the simulated
+/// backend (same seed, same rank-ordered reductions, same per-node thread
+/// policy).
+#[test]
+fn dsanls_tcp_backend_bit_identical_to_sim() {
+    let m = low_rank(60, 48, 3, 1013);
+    let opts = DsanlsOptions {
+        nodes: 3,
+        rank: 3,
+        iterations: 8,
+        d_u: 12,
+        d_v: 14,
+        eval_every: 4,
+        ..Default::default()
+    };
+    let sim = run_dsanls(&m, &opts);
+    let outputs = run_tcp_cluster(opts.nodes, opts.comm, |ctx| {
+        dsanls::algos::dsanls::dsanls_node(ctx, &m, &opts)
+    })
+    .expect("tcp cluster failed");
+    let tcp = reduce_outputs(outputs, opts.rank, opts.iterations);
+    assert_eq!(sim.u.data(), tcp.u.data(), "U diverged across backends");
+    assert_eq!(sim.v.data(), tcp.v.data(), "V diverged across backends");
+    // traced errors are computed from the same factors → bit-identical too
+    assert_eq!(sim.trace.len(), tcp.trace.len());
+    for (a, b) in sim.trace.iter().zip(tcp.trace.iter()) {
+        assert_eq!(a.iteration, b.iteration);
+        assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits());
+    }
+}
+
+/// Same for a secure protocol: Syn-SD over TCP matches the simulator
+/// bit-for-bit (its consensus is a rank-ordered all-reduce).
+#[test]
+fn syn_sd_tcp_backend_bit_identical_to_sim() {
+    let m = low_rank(40, 30, 3, 1015);
+    let cols = uniform_partition(30, 3);
+    let opts = SynOptions {
+        nodes: 3,
+        rank: 3,
+        t1: 3,
+        t2: 2,
+        d1: 10,
+        d2: 5,
+        d3: 10,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let sim = run_syn_sd(&m, &cols, &opts, None);
+    let outputs = run_tcp_cluster(opts.nodes, opts.comm, |ctx| {
+        syn_node(ctx, &m, &cols, &opts, SecureAlgo::SynSd, None)
+    })
+    .expect("tcp cluster failed");
+    let tcp = assemble_syn(outputs, opts.rank, opts.t1 * opts.t2);
+    assert_eq!(sim.u.data(), tcp.u.data(), "U diverged across backends");
+    assert_eq!(sim.v.data(), tcp.v.data(), "V diverged across backends");
 }

@@ -1,0 +1,108 @@
+//! End-to-end CLI test for the multi-process TCP deployment: `dsanls
+//! launch` must spawn real worker OS processes over localhost, run the
+//! configured experiment, and produce factors bit-identical to the
+//! simulated backend (`--verify-sim` makes the binary itself assert that
+//! and exit nonzero on divergence).
+
+use std::path::PathBuf;
+use std::process::Command;
+
+fn exe() -> &'static str {
+    env!("CARGO_BIN_EXE_dsanls")
+}
+
+fn temp_out(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dsanls_launch_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn launch_four_nodes_dsanls_bit_identical_to_sim() {
+    let out_dir = temp_out("dsanls");
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let output = Command::new(exe())
+        .args([
+            "launch",
+            "--nodes",
+            "4",
+            "--verify-sim",
+            "--experiment.name=launchtest",
+            "--experiment.algorithm=dsanls",
+            "--experiment.dataset=face",
+            "--experiment.scale=0.05",
+            "--experiment.rank=4",
+            "--experiment.iterations=6",
+            "--experiment.eval_every=3",
+        ])
+        .arg(format!("--output.dir={}", out_dir.display()))
+        .output()
+        .expect("failed to spawn dsanls launch");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "launch failed ({})\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        output.status
+    );
+    assert!(
+        stdout.contains("bit-identical to simulated backend: true"),
+        "verify-sim did not confirm bit-identity\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    assert!(
+        out_dir.join("launchtest-tcp.csv").exists(),
+        "launch did not write the trace CSV"
+    );
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+#[test]
+fn launch_secure_syn_sd_end_to_end() {
+    let out_dir = temp_out("synsd");
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let output = Command::new(exe())
+        .args([
+            "launch",
+            "--nodes",
+            "3",
+            "--verify-sim",
+            "--experiment.name=launchsyn",
+            "--experiment.algorithm=syn-sd",
+            "--experiment.dataset=face",
+            "--experiment.scale=0.05",
+            "--experiment.rank=3",
+            "--secure.t1=2",
+            "--secure.t2=2",
+            "--experiment.eval_every=0",
+        ])
+        .arg(format!("--output.dir={}", out_dir.display()))
+        .output()
+        .expect("failed to spawn dsanls launch");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "secure launch failed ({})\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        output.status
+    );
+    assert!(stdout.contains("bit-identical to simulated backend: true"), "{stdout}");
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+#[test]
+fn worker_without_rendezvous_is_a_clean_error() {
+    let output = Command::new(exe())
+        .args(["worker", "--rank", "0"])
+        .output()
+        .expect("failed to spawn dsanls worker");
+    assert!(!output.status.success());
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(stderr.contains("--rendezvous"), "unhelpful error: {stderr}");
+}
+
+#[test]
+fn launch_rejects_zero_nodes() {
+    let output = Command::new(exe())
+        .args(["launch", "--nodes", "0"])
+        .output()
+        .expect("failed to spawn dsanls launch");
+    assert!(!output.status.success());
+}
