@@ -14,9 +14,10 @@
 
 use super::{assemble_blocks, reduce_outputs, DistRun, NodeOutput};
 use crate::data::partition::uniform_partition;
+use crate::data::shard::{NodeData, NodeInput};
 use crate::dist::{run_cluster, CommModel, NodeCtx};
 use crate::linalg::{Mat, Matrix};
-use crate::nmf::init_factors;
+use crate::nmf::init_factors_from;
 use crate::rng::{Role, StreamRng};
 use crate::solvers::{self, Normal, SolverKind};
 use crate::transport::Communicator;
@@ -57,34 +58,58 @@ pub fn run_dist_anls(m: &Matrix, opts: &DistAnlsOptions) -> DistRun {
     reduce_outputs(outputs, opts.rank, opts.iterations)
 }
 
-/// One baseline rank over any transport backend (TCP worker entry point).
-/// `opts.nodes` must match the communicator's cluster size.
+/// One baseline rank over any transport backend when the rank can see the
+/// full matrix (simulator / tests). `opts.nodes` must match the
+/// communicator's cluster size.
 pub fn dist_anls_node<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     m: &Matrix,
     opts: &DistAnlsOptions,
 ) -> NodeOutput {
+    node_main(ctx, NodeInput::Full(m), opts)
+}
+
+/// One baseline rank over a pre-sharded [`NodeData`] view (the `dsanls
+/// worker` entry point) — see [`crate::algos::dsanls::dsanls_node_sharded`]
+/// for the bit-identity contract.
+pub fn dist_anls_node_sharded<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    data: &NodeData,
+    opts: &DistAnlsOptions,
+) -> NodeOutput {
+    node_main(ctx, NodeInput::Shard(data), opts)
+}
+
+fn node_main<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    input: NodeInput<'_>,
+    opts: &DistAnlsOptions,
+) -> NodeOutput {
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
-    let row_part = uniform_partition(m.rows(), opts.nodes);
-    let col_part = uniform_partition(m.cols(), opts.nodes);
+    let (rows, cols) = input.dims();
+    let row_part = uniform_partition(rows, opts.nodes);
+    let col_part = uniform_partition(cols, opts.nodes);
     {
         let rank = ctx.rank;
         let stream = StreamRng::new(opts.seed);
         let my_rows = row_part.range(rank);
         let my_cols = col_part.range(rank);
-        let m_rows = m.row_block(my_rows.clone());
-        let m_cols_t = m.col_block(my_cols.clone()).transpose();
+        let m_rows = input.row_block(my_rows.clone());
+        let m_rows: &Matrix = &m_rows;
+        let m_cols_t = input.col_block_t(my_cols.clone());
 
         let (u_full, v_full) = {
             let mut rng = stream.for_iteration(0, Role::Init);
-            init_factors(m, opts.rank, &mut rng)
+            init_factors_from(input.fro_sq(), rows, cols, opts.rank, &mut rng)
         };
         let mut u_block = u_full.row_block(my_rows.clone());
         let mut v_block = v_full.row_block(my_cols.clone());
         drop((u_full, v_full));
 
         let mut trace = Vec::new();
-        super::dsanls::record_error(ctx, m, &u_block, &v_block, opts.rank, 0, &mut trace);
+        super::dsanls::record_error_any(
+            ctx, &input, m_rows, &u_block, &v_block, opts.rank, 0, &mut trace,
+        );
 
         for t in 0..opts.iterations {
             // ---- U-step: gram = VᵀV (all-reduce), V full (all-gather) ----
@@ -95,7 +120,7 @@ pub fn dist_anls_node<C: Communicator>(
             let v_blocks = ctx.all_gather(v_block.data()); // O(nk) gather
             let v_full = assemble_blocks(&v_blocks, opts.rank);
             ctx.compute(|| {
-                let cross = match &m_rows {
+                let cross = match m_rows {
                     Matrix::Dense(md) => md.matmul(&v_full),
                     Matrix::Sparse(ms) => ms.spmm(&v_full),
                 };
@@ -123,12 +148,14 @@ pub fn dist_anls_node<C: Communicator>(
             });
 
             if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
-                super::dsanls::record_error(ctx, m, &u_block, &v_block, opts.rank, t + 1, &mut trace);
+                super::dsanls::record_error_any(
+                    ctx, &input, m_rows, &u_block, &v_block, opts.rank, t + 1, &mut trace,
+                );
             }
         }
         if trace.last().map(|p| p.iteration) != Some(opts.iterations) {
-            super::dsanls::record_error(
-                ctx, m, &u_block, &v_block, opts.rank, opts.iterations, &mut trace,
+            super::dsanls::record_error_any(
+                ctx, &input, m_rows, &u_block, &v_block, opts.rank, opts.iterations, &mut trace,
             );
         }
 

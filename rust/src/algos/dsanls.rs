@@ -18,10 +18,11 @@
 //! property the integration tests assert (`tests/dist_equivalence.rs`).
 
 use super::{reduce_outputs, DistRun, NodeOutput, TracePoint};
-use crate::data::partition::{uniform_partition, Partition};
+use crate::data::partition::uniform_partition;
+use crate::data::shard::{NodeData, NodeInput};
 use crate::dist::{run_cluster, CommModel, NodeCtx};
 use crate::linalg::{Mat, Matrix};
-use crate::nmf::{init_factors, rel_error, MuSchedule};
+use crate::nmf::{init_factors_from, rel_error, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
 use crate::solvers::{self, SolverKind, Workspace};
@@ -86,57 +87,73 @@ pub fn run_dsanls(m: &Matrix, opts: &DsanlsOptions) -> DistRun {
     reduce_outputs(outputs, opts.rank, opts.iterations)
 }
 
-/// One DSANLS rank over any transport backend — the entry point the TCP
-/// worker processes (and the backend-equivalence tests) call directly.
-/// Partitions are derived deterministically from `m` and the cluster size,
-/// so every rank agrees without further coordination; `opts.nodes` must
-/// match the communicator's cluster size.
+/// One DSANLS rank over any transport backend — the entry point the
+/// backend-equivalence tests call directly when every rank can see the
+/// full matrix (each rank slices its own blocks). Partitions are derived
+/// deterministically from `m` and the cluster size, so every rank agrees
+/// without further coordination; `opts.nodes` must match the
+/// communicator's cluster size.
 pub fn dsanls_node<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     m: &Matrix,
     opts: &DsanlsOptions,
 ) -> NodeOutput {
-    assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
-    let (rows, cols) = (m.rows(), m.cols());
-    let (d_u, d_v) = opts.resolve_d(cols, rows);
-    let row_part = uniform_partition(rows, opts.nodes);
-    let col_part = uniform_partition(cols, opts.nodes);
-    node_main(ctx, m, opts, &row_part, &col_part, d_u, d_v)
+    node_main(ctx, NodeInput::Full(m), opts)
+}
+
+/// One DSANLS rank over a pre-sharded [`NodeData`] view — the `dsanls
+/// worker` entry point. The rank holds only its row/column blocks; the
+/// view's global `‖M‖²` must already be resolved
+/// ([`crate::data::shard::exact_fro_sq`] or a shard manifest), which makes
+/// the factor iterates **bit-identical** to the full-matrix path. Error
+/// traces are evaluated distributively (per-rank row-block residuals,
+/// summed), so they may differ from the full path in the last float digits
+/// — factors do not.
+pub fn dsanls_node_sharded<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    data: &NodeData,
+    opts: &DsanlsOptions,
+) -> NodeOutput {
+    node_main(ctx, NodeInput::Shard(data), opts)
 }
 
 fn node_main<C: Communicator>(
     ctx: &mut NodeCtx<C>,
-    m: &Matrix,
+    input: NodeInput<'_>,
     opts: &DsanlsOptions,
-    row_part: &Partition,
-    col_part: &Partition,
-    d_u: usize,
-    d_v: usize,
 ) -> NodeOutput {
+    assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let rank = ctx.rank;
+    let (rows, cols) = input.dims();
+    let (d_u, d_v) = opts.resolve_d(cols, rows);
+    let row_part = uniform_partition(rows, opts.nodes);
+    let col_part = uniform_partition(cols, opts.nodes);
     let stream = StreamRng::new(opts.seed);
     let my_rows = row_part.range(rank);
     let my_cols = col_part.range(rank);
+    let fro_sq = input.fro_sq();
 
     // --- data each node is allowed to touch (Fig. 1a partitioning) ---
-    let m_rows = m.row_block(my_rows.clone()); // M_{I_r:}
-    let m_cols_t = m.col_block(my_cols.clone()).transpose(); // (M_{:J_r})ᵀ
+    let m_rows = input.row_block(my_rows.clone()); // M_{I_r:}
+    let m_rows: &Matrix = &m_rows;
+    let m_cols_t = input.col_block_t(my_cols.clone()); // (M_{:J_r})ᵀ
 
     // shared-seed init: every node generates the same full factors and keeps
-    // its slice ⇒ iterates are independent of the node count
+    // its slice ⇒ iterates are independent of the node count. Factor-sized
+    // only — never the data matrix.
     let (u_full, v_full) = {
         let mut rng = stream.for_iteration(0, Role::Init);
-        init_factors(m, opts.rank, &mut rng)
+        init_factors_from(fro_sq, rows, cols, opts.rank, &mut rng)
     };
     let mut u_block = u_full.row_block(my_rows.clone());
     let mut v_block = v_full.row_block(my_cols.clone());
     drop((u_full, v_full));
 
     // Eq. 22 ceiling enforcing Assumption 2 (when requested)
-    let ceiling = (2.0 * m.fro_sq().sqrt()).sqrt() as f32;
+    let ceiling = (2.0 * fro_sq.sqrt()).sqrt() as f32;
 
     let mut trace = Vec::new();
-    record_error(ctx, m, &u_block, &v_block, opts.rank, 0, &mut trace);
+    record_error_any(ctx, &input, m_rows, &u_block, &v_block, opts.rank, 0, &mut trace);
 
     // per-node normal-equation scratch, reused across iterations (zero
     // allocations in the GEMM/solver hot path at steady state)
@@ -150,8 +167,8 @@ fn node_main<C: Communicator>(
         // ---------- U-subproblem (Alg. 2 lines 4–8) ----------
         let (a_r, b_sum) = ctx.compute(|| {
             let mut s_rng = stream.for_iteration(t as u64, Role::SketchU);
-            let s = SketchMatrix::generate(opts.sketch, m.cols(), d_u, &mut s_rng);
-            let a_r = s.mul_right(&m_rows); // M_{I_r:}·Sᵗ, local
+            let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
+            let a_r = s.mul_right(m_rows); // M_{I_r:}·Sᵗ, local
             let b_bar = s.mul_rows_tn(&v_block, col_part.offset(rank)); // (V_{J_r:})ᵀS_{J_r:}
             (a_r, b_bar)
         });
@@ -169,7 +186,7 @@ fn node_main<C: Communicator>(
         // ---------- V-subproblem (Alg. 2 lines 10–14) ----------
         let (a2_r, b2_sum) = ctx.compute(|| {
             let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
-            let s2 = SketchMatrix::generate(opts.sketch, m.rows(), d_v, &mut s_rng);
+            let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
             let a2 = s2.mul_right(&m_cols_t); // (M_{:J_r})ᵀ·S'ᵗ
             let b2_bar = s2.mul_rows_tn(&u_block, row_part.offset(rank)); // (U_{I_r:})ᵀS'_{I_r:}
             (a2, b2_bar)
@@ -186,11 +203,20 @@ fn node_main<C: Communicator>(
         });
 
         if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
-            record_error(ctx, m, &u_block, &v_block, opts.rank, t + 1, &mut trace);
+            record_error_any(ctx, &input, m_rows, &u_block, &v_block, opts.rank, t + 1, &mut trace);
         }
     }
     if trace.last().map(|p| p.iteration) != Some(opts.iterations) {
-        record_error(ctx, m, &u_block, &v_block, opts.rank, opts.iterations, &mut trace);
+        record_error_any(
+            ctx,
+            &input,
+            m_rows,
+            &u_block,
+            &v_block,
+            opts.rank,
+            opts.iterations,
+            &mut trace,
+        );
     }
 
     NodeOutput {
@@ -199,6 +225,36 @@ fn node_main<C: Communicator>(
         trace: if rank == 0 { trace } else { Vec::new() },
         stats: ctx.stats(),
         final_clock: ctx.clock(),
+    }
+}
+
+/// Out-of-band error evaluation, dispatching on what the rank can see:
+/// the full matrix (legacy exact evaluation on rank 0) or only its blocks
+/// (distributed row-block residuals). Same signature shape for both so the
+/// iteration loop stays single-path.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn record_error_any<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    input: &NodeInput<'_>,
+    m_rows: &Matrix,
+    u_block: &Mat,
+    v_block: &Mat,
+    k: usize,
+    iteration: usize,
+    trace: &mut Vec<TracePoint>,
+) {
+    match input {
+        NodeInput::Full(m) => record_error(ctx, m, u_block, v_block, k, iteration, trace),
+        NodeInput::Shard(d) => record_error_sharded(
+            ctx,
+            m_rows,
+            u_block,
+            v_block,
+            d.fro_sq(),
+            k,
+            iteration,
+            trace,
+        ),
     }
 }
 
@@ -228,6 +284,34 @@ pub(crate) fn record_error<C: Communicator>(
     // Every rank records the sample (non-zero ranks with NaN error) so that
     // trace-based control flow stays identical across ranks — collectives
     // must be entered by everyone or nobody.
+    trace.push(TracePoint { iteration, sim_time, rel_error: err });
+}
+
+/// Sharded out-of-band error: every rank gathers the full `V` factor
+/// (factor-sized), evaluates `‖M_{I_r:} − U_{I_r:}Vᵀ‖²` on its resident
+/// row block, and the squared residuals are summed with a scalar
+/// all-reduce — no rank ever needs the full matrix. Every rank learns the
+/// real error (the full path reports NaN off rank 0).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn record_error_sharded<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    m_rows: &Matrix,
+    u_block: &Mat,
+    v_block: &Mat,
+    fro_sq: f64,
+    k: usize,
+    iteration: usize,
+    trace: &mut Vec<TracePoint>,
+) {
+    let sim_time = ctx.clock();
+    let err = ctx.untimed(|ctx| {
+        let v_blocks = ctx.all_gather(v_block.data());
+        let v = super::assemble_blocks(&v_blocks, k);
+        let (_, resid) = rel_error_parts(m_rows, u_block, &v);
+        let mut buf = [(resid / fro_sq) as f32];
+        ctx.all_reduce_sum(&mut buf);
+        (buf[0].max(0.0) as f64).sqrt()
+    });
     trace.push(TracePoint { iteration, sim_time, rel_error: err });
 }
 
@@ -357,6 +441,41 @@ mod tests {
             bounded.final_error(),
             free.final_error()
         );
+    }
+
+    #[test]
+    fn sharded_ranks_bit_identical_to_full() {
+        // each rank holding only its blocks (plus the chain-reduced exact
+        // ‖M‖²) must produce byte-identical factors to ranks that slice
+        // the full matrix
+        let m = low_rank(66, 45, 3, 209);
+        let opts = DsanlsOptions {
+            nodes: 3,
+            rank: 3,
+            iterations: 12,
+            d_u: 16,
+            d_v: 16,
+            eval_every: 4,
+            ..Default::default()
+        };
+        let full = run_dsanls(&m, &opts);
+        let outputs = run_cluster(opts.nodes, opts.comm, |ctx| {
+            let rr = uniform_partition(m.rows(), opts.nodes).range(ctx.rank);
+            let cr = uniform_partition(m.cols(), opts.nodes).range(ctx.rank);
+            // build the rank view by slicing (same bytes as shard-local
+            // generation, asserted separately in data::shard)
+            let mut data = NodeData::from_full(&m, rr, cr);
+            data.fro_sq = None; // force the chain reduction path
+            let fro =
+                crate::data::shard::exact_fro_sq(ctx.comm_mut(), opts.nodes, data.m_rows.as_ref())
+                    .unwrap();
+            assert_eq!(fro.to_bits(), m.fro_sq().to_bits(), "chain ‖M‖² must be exact");
+            data.fro_sq = Some(fro);
+            dsanls_node_sharded(ctx, &data, &opts)
+        });
+        let sharded = reduce_outputs(outputs, opts.rank, opts.iterations);
+        assert_eq!(full.u.data(), sharded.u.data(), "U factors diverged");
+        assert_eq!(full.v.data(), sharded.v.data(), "V factors diverged");
     }
 
     #[test]

@@ -4,18 +4,24 @@
 //! `dsanls launch --nodes N [--config cfg.toml] [--key=value ...]` binds a
 //! [`Rendezvous`] listener, spawns `N` worker processes of the same binary
 //! (`N + 1` for the asynchronous protocols — the extra rank is the
-//! parameter server), performs the magic/version/rank handshake, and
-//! broadcasts the mesh roster. Each worker regenerates the dataset from
-//! the shared config (datasets are seed-derived, so no data shipping is
-//! needed), runs its rank of the configured algorithm over
-//! [`crate::transport::TcpComm`], and streams its result chunks back over
-//! the rendezvous connection. The coordinator assembles them into the same
-//! [`Outcome`] the simulated path produces.
+//! parameter server) — or, with `--hosts FILE`, waits for externally
+//! started workers on other machines — performs the magic/version/rank
+//! handshake, and broadcasts the mesh address book. Each worker builds
+//! **only its rank's blocks** of the dataset ([`crate::data::shard`]):
+//! shard-local windowed synthesis by default (seed-derived, no data
+//! shipping), or pre-sliced block files via `--shards DIR`. The full
+//! matrix is never materialised on a worker. Each rank then runs the
+//! configured algorithm over [`crate::transport::TcpComm`] and streams its
+//! result chunks back over the rendezvous connection. The coordinator
+//! assembles them into the same [`Outcome`] the simulated path produces,
+//! including per-rank load/residency statistics.
 //!
-//! Because the collectives reduce in rank order on every backend, a seeded
-//! `launch` run produces factors **bit-identical** to the in-process
-//! simulated run of the same config — `--verify-sim` re-runs the simulator
-//! in the coordinator and asserts exactly that.
+//! Because the collectives reduce in rank order on every backend — and
+//! because sharded ranks obtain the **exact** global `‖M‖²` (manifest, or
+//! the ordered chain reduction [`crate::data::shard::exact_fro_sq`]) — a
+//! seeded `launch` run produces factors **bit-identical** to the
+//! in-process simulated run of the same config; `--verify-sim` re-runs
+//! the simulator in the coordinator and asserts exactly that.
 //!
 //! Result chunks ride the same length-prefixed f32 frames as the data
 //! plane ([`crate::transport::wire`]): matrices carry `[rows, cols,
@@ -25,17 +31,21 @@
 
 use std::io::Write as _;
 use std::net::TcpStream;
+use std::path::{Path, PathBuf};
 use std::process::{Child, Command, Stdio};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::algos::{self, NodeOutput, TracePoint};
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::coordinator::{self, Outcome};
+use crate::data::partition::uniform_partition;
+use crate::data::shard::{self, LoadSource, LoadStats, NodeData};
+use crate::data::Dataset;
 use crate::dist::{CommStats, NodeCtx};
 use crate::error::{Context, Result};
 use crate::linalg::Mat;
 use crate::metrics;
-use crate::nmf::init_factors;
+use crate::nmf::init_factors_from;
 use crate::rng::Role;
 use crate::secure::{asyn, syn, SecureAlgo};
 use crate::transport::wire::{
@@ -54,6 +64,8 @@ const RES_DONE: u64 = 6;
 /// `‖M‖²_F` (f64 bits), shipped by the async server so the coordinator
 /// need not regenerate the dataset just to merge traces.
 const RES_FRO: u64 = 7;
+/// Per-rank data-plane statistics ([`LoadStats`]).
+const RES_LOAD: u64 = 8;
 
 // ---------------------------------------------------------------------------
 // Payload codecs (matrices, traces, statistics)
@@ -157,6 +169,31 @@ fn samples_from_payload(p: &[f32]) -> Result<Vec<(f64, f64, usize)>> {
     Ok(out)
 }
 
+fn load_payload(l: &LoadStats) -> Vec<f32> {
+    let mut p = Vec::with_capacity(14);
+    push_u64_bits(&mut p, l.rank as u64);
+    push_u64_bits(&mut p, l.block_rows as u64);
+    push_u64_bits(&mut p, l.block_cols as u64);
+    push_u64_bits(&mut p, l.nnz as u64);
+    push_u64_bits(&mut p, l.bytes as u64);
+    push_f64_bits(&mut p, l.load_secs);
+    push_u64_bits(&mut p, l.source.code());
+    p
+}
+
+fn load_from_payload(p: &[f32]) -> Result<LoadStats> {
+    let mut pos = 0;
+    Ok(LoadStats {
+        rank: take_u64_bits(p, &mut pos)? as usize,
+        block_rows: take_u64_bits(p, &mut pos)? as usize,
+        block_cols: take_u64_bits(p, &mut pos)? as usize,
+        nnz: take_u64_bits(p, &mut pos)? as usize,
+        bytes: take_u64_bits(p, &mut pos)? as usize,
+        load_secs: take_f64_bits(p, &mut pos)?,
+        source: LoadSource::from_code(take_u64_bits(p, &mut pos)?)?,
+    })
+}
+
 fn send_chunk(stream: &mut TcpStream, tag: u64, payload: &[f32]) -> Result<()> {
     wire::write_frame_parts(stream, FrameKind::Result, tag, 0.0, payload)
         .context("reporting result to coordinator")
@@ -175,15 +212,20 @@ pub fn cluster_ranks(cfg: &ExperimentConfig) -> usize {
     }
 }
 
-/// `dsanls worker --rendezvous HOST:PORT --rank R [config args…]` — one
-/// rank of a `launch` cluster, normally spawned by the coordinator.
-/// Deployment is **single-host** today: the rendezvous and mesh listeners
-/// bind `127.0.0.1` and the roster carries ports only, so workers must
-/// run on the coordinator's machine (multi-host needs a host-carrying
-/// roster — see ROADMAP).
+/// `dsanls worker --rendezvous HOST:PORT --rank R [--bind IP[:PORT]]
+/// [--advertise HOST[:PORT]] [--shards DIR] [config args…]` — one rank of
+/// a `launch` cluster. Spawned automatically by `launch` on single-host
+/// runs; started by the operator (one per host) for multi-host runs, with
+/// `--bind` pointing at an interface the peers can reach (see
+/// DEPLOYMENT.md). The worker builds **only its rank's blocks** of the
+/// dataset — shard-local synthesis by default, block files with
+/// `--shards` — never the full matrix.
 pub fn worker_main(args: &[String]) -> Result<()> {
     let mut rendezvous = None;
     let mut rank = None;
+    let mut shards: Option<PathBuf> = None;
+    let mut bind: Option<String> = None;
+    let mut advertise: Option<String> = None;
     let mut cfg_args: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -195,6 +237,19 @@ pub fn worker_main(args: &[String]) -> Result<()> {
             "--rank" => {
                 let v = args.get(i + 1).context("--rank needs a number")?;
                 rank = Some(v.parse::<usize>().map_err(|e| crate::err!("--rank {v}: {e}"))?);
+                i += 2;
+            }
+            "--shards" => {
+                shards = Some(PathBuf::from(args.get(i + 1).context("--shards needs a DIR")?));
+                i += 2;
+            }
+            "--bind" => {
+                bind = Some(args.get(i + 1).context("--bind needs IP[:PORT]")?.clone());
+                i += 2;
+            }
+            "--advertise" => {
+                advertise =
+                    Some(args.get(i + 1).context("--advertise needs HOST[:PORT]")?.clone());
                 i += 2;
             }
             _ => {
@@ -211,6 +266,8 @@ pub fn worker_main(args: &[String]) -> Result<()> {
     let topts = TcpOptions {
         connect_timeout: Duration::from_secs_f64(cfg.net_timeout_s.max(1.0)),
         io_timeout: Some(Duration::from_secs_f64((cfg.net_timeout_s * 4.0).max(1.0))),
+        bind,
+        advertise,
     };
     let mut comm = TcpComm::connect(&addr, rank, ranks, &topts)
         .with_context(|| format!("worker rank {rank} joining cluster at {addr}"))?;
@@ -219,7 +276,7 @@ pub fn worker_main(args: &[String]) -> Result<()> {
         .context("rendezvous channel already taken")?;
 
     // run the rank; ship failures back as Error frames before exiting
-    match run_rank(&cfg, comm, rank, &mut report) {
+    match run_rank(&cfg, comm, rank, &mut report, shards.as_deref()) {
         Ok(()) => Ok(()),
         Err(e) => {
             let msg = format!("rank {rank}: {e}");
@@ -232,15 +289,165 @@ pub fn worker_main(args: &[String]) -> Result<()> {
     }
 }
 
+/// Which blocks this rank's algorithm keeps resident.
+fn worker_block_needs(cfg: &ExperimentConfig, rank: usize) -> (bool, bool) {
+    match cfg.algorithm {
+        // DSANLS and the baselines iterate on both the row and col block
+        Algorithm::Dsanls | Algorithm::Baseline(_) => (true, true),
+        // synchronous secure parties hold only their column block
+        Algorithm::Secure(SecureAlgo::SynSd
+        | SecureAlgo::SynSsdU
+        | SecureAlgo::SynSsdV
+        | SecureAlgo::SynSsdUv) => (false, true),
+        // async: clients hold a column block; the parameter server (rank
+        // N) holds no data at all
+        Algorithm::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => {
+            (false, rank < cfg.nodes)
+        }
+    }
+}
+
+/// Build this rank's [`NodeData`] — shard files when `--shards` was given,
+/// shard-local synthesis otherwise. Never materialises the full matrix.
+fn build_node_data(
+    cfg: &ExperimentConfig,
+    rank: usize,
+    shards: Option<&Path>,
+) -> Result<(NodeData, LoadSource)> {
+    let (need_rows, need_cols) = worker_block_needs(cfg, rank);
+    let secure = matches!(cfg.algorithm, Algorithm::Secure(_));
+    if let Some(dir) = shards {
+        if secure && cfg.skew > 0.0 {
+            crate::bail!(
+                "--shards directories are uniform-partitioned; skewed secure runs \
+                 (secure.skew > 0) must use shard-local synthesis (drop --shards)"
+            );
+        }
+        if rank >= cfg.nodes {
+            // async parameter server: global metadata only
+            let manifest = shard::read_manifest(dir)?;
+            validate_manifest(cfg, &manifest)?;
+            let data = NodeData {
+                rows: manifest.rows,
+                cols: manifest.cols,
+                row_range: 0..0,
+                col_range: 0..0,
+                m_rows: None,
+                m_cols: None,
+                fro_sq: Some(manifest.fro_sq),
+            };
+            return Ok((data, LoadSource::FileShard));
+        }
+        let (data, manifest) = NodeData::load(dir, rank, need_rows, need_cols)?;
+        validate_manifest(cfg, &manifest)?;
+        return Ok((data, LoadSource::FileShard));
+    }
+
+    // shard-local synthesis: every data rank generates its row block (the
+    // ordered ‖M‖² chain needs it even when the algorithm won't — it is
+    // dropped right after), plus the column block its algorithm iterates on
+    let dataset = Dataset::from_name(&cfg.dataset)
+        .with_context(|| format!("unknown dataset {}", cfg.dataset))?;
+    let (rows, cols) = dataset.scaled_shape(cfg.scale);
+    let row_range = (rank < cfg.nodes).then(|| uniform_partition(rows, cfg.nodes).range(rank));
+    let col_range = if need_cols {
+        Some(if secure {
+            coordinator::secure_partition(cfg, cols).range(rank)
+        } else {
+            uniform_partition(cols, cfg.nodes).range(rank)
+        })
+    } else {
+        None
+    };
+    let data = NodeData::generate(dataset, cfg.seed, cfg.scale, row_range, col_range);
+    Ok((data, LoadSource::SynthShard))
+}
+
+/// One tiny barrier every rank always enters, carrying its data-plane
+/// mode: ranks that disagree (some started with `--shards`, some without)
+/// would otherwise run different startup collectives — the synth-mode
+/// ‖M‖² chain would pair with a file-mode rank's first algorithm
+/// collective and decode garbage. Disagreement becomes a clear error.
+fn check_data_plane_agreement(comm: &mut TcpComm, source: LoadSource) -> Result<()> {
+    use crate::transport::Communicator as _;
+    let mine = source.code() as f32;
+    let g = comm.exchange(0.0, &[mine]).context("data-plane mode handshake")?;
+    for (peer, part) in g.parts.iter().enumerate() {
+        if part.as_slice() != [mine] {
+            let peer_mode = part
+                .first()
+                .and_then(|&c| LoadSource::from_code(c as u64).ok())
+                .map_or("unknown", |s| s.label());
+            crate::bail!(
+                "data-plane mode mismatch: rank {peer} loads via {peer_mode}, this rank via \
+                 {} — start every worker with the same --shards setting",
+                source.label()
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Reject shard directories that do not match the experiment config (a
+/// mismatch would otherwise surface as a confusing `--verify-sim` failure
+/// or a hung collective).
+fn validate_manifest(cfg: &ExperimentConfig, m: &shard::ShardManifest) -> Result<()> {
+    if m.nodes != cfg.nodes {
+        crate::bail!(
+            "shard directory was built for {} nodes, this run uses {} — re-run `dsanls shard`",
+            m.nodes,
+            cfg.nodes
+        );
+    }
+    if !m.dataset.eq_ignore_ascii_case(&cfg.dataset) || m.seed != cfg.seed || m.scale != cfg.scale
+    {
+        crate::bail!(
+            "shard directory holds {} (seed {}, scale {}), config wants {} (seed {}, scale {})",
+            m.dataset,
+            m.seed,
+            m.scale,
+            cfg.dataset,
+            cfg.seed,
+            cfg.scale
+        );
+    }
+    Ok(())
+}
+
 /// Execute this rank's share of the configured algorithm and stream the
 /// results back over the rendezvous connection.
 fn run_rank(
     cfg: &ExperimentConfig,
-    comm: TcpComm,
+    mut comm: TcpComm,
     rank: usize,
     report: &mut TcpStream,
+    shards: Option<&Path>,
 ) -> Result<()> {
-    let m = coordinator::load_dataset(cfg);
+    // ---- shard-aware data plane: this rank's blocks, nothing more ----
+    let tick = Instant::now();
+    let (mut data, source) = build_node_data(cfg, rank, shards)?;
+    // measure pure build/load time before any collective: the barriers
+    // below wait on peers, which would smear every rank's number up to
+    // the slowest (EXPERIMENTS.md §sharded-vs-full compares load_secs)
+    let load_secs = tick.elapsed().as_secs_f64();
+    // every rank enters this barrier unconditionally, so a --shards
+    // mismatch across hosts surfaces as an actionable error here instead
+    // of desynchronising the collective stream (file-mode ranks skip the
+    // ‖M‖² chain that synth-mode ranks run)
+    check_data_plane_agreement(&mut comm, source)?;
+    if data.fro_sq.is_none() {
+        // synth mode: resolve the exact global ‖M‖² with the ordered chain
+        // (bit-identical to the full-matrix value — the init-scale seed)
+        let fro = shard::exact_fro_sq(&mut comm, cfg.nodes, data.m_rows.as_ref())
+            .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
+        data.fro_sq = Some(fro);
+    }
+    let (need_rows, _) = worker_block_needs(cfg, rank);
+    if !need_rows {
+        data.drop_rows(); // the chain was its only consumer
+    }
+    let load = data.load_stats(rank, load_secs, source);
+
     // mirror the simulated cluster's per-node thread cap so the
     // thread-count-sensitive reductions split identically (bit-identity)
     crate::dist::apply_node_thread_policy(cfg.nodes);
@@ -248,7 +455,7 @@ fn run_rank(
     // catch panics from the algorithm layer (collective failures panic) so
     // they reach the coordinator as Error frames, not silent worker deaths
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_rank_inner(cfg, comm, rank, &m, report)
+        run_rank_inner(cfg, comm, rank, &data, &load, report)
     }));
     crate::parallel::set_local_threads(None);
     match outcome {
@@ -268,30 +475,32 @@ fn run_rank_inner(
     cfg: &ExperimentConfig,
     comm: TcpComm,
     rank: usize,
-    m: &crate::linalg::Matrix,
+    data: &NodeData,
+    load: &LoadStats,
     report: &mut TcpStream,
 ) -> Result<()> {
+    send_chunk(report, RES_LOAD, &load_payload(load))?;
     match cfg.algorithm {
         Algorithm::Dsanls => {
             let opts = coordinator::dsanls_options(cfg);
             let mut ctx = NodeCtx::new(comm, cfg.comm);
-            let out = algos::dsanls::dsanls_node(&mut ctx, m, &opts);
+            let out = algos::dsanls::dsanls_node_sharded(&mut ctx, data, &opts);
             send_node_output(report, &out)
         }
         Algorithm::Baseline(solver) => {
             let opts = coordinator::dist_anls_options(cfg, solver);
             let mut ctx = NodeCtx::new(comm, cfg.comm);
-            let out = algos::dist_anls::dist_anls_node(&mut ctx, m, &opts);
+            let out = algos::dist_anls::dist_anls_node_sharded(&mut ctx, data, &opts);
             send_node_output(report, &out)
         }
         Algorithm::Secure(algo @ (SecureAlgo::SynSd
         | SecureAlgo::SynSsdU
         | SecureAlgo::SynSsdV
         | SecureAlgo::SynSsdUv)) => {
-            let cols = coordinator::secure_partition(cfg, m.cols());
+            let cols = coordinator::secure_partition(cfg, data.cols);
             let opts = coordinator::syn_options(cfg);
             let mut ctx = NodeCtx::new(comm, cfg.comm);
-            let out = syn::syn_node(&mut ctx, m, &cols, &opts, algo, None);
+            let out = syn::syn_node_sharded(&mut ctx, data, &cols, &opts, algo, None);
             send_chunk(report, RES_U, &mat_payload(&out.u_local))?;
             send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
             send_chunk(report, RES_TRACE, &trace_payload(&out.trace))?;
@@ -299,15 +508,15 @@ fn run_rank_inner(
             send_chunk(report, RES_DONE, &[])
         }
         Algorithm::Secure(variant @ (SecureAlgo::AsynSd | SecureAlgo::AsynSsdV)) => {
-            let cols = coordinator::secure_partition(cfg, m.cols());
+            let cols = coordinator::secure_partition(cfg, data.cols);
             let opts = coordinator::asyn_options(cfg);
             let stream_rng = crate::rng::StreamRng::new(opts.seed);
+            let fro_sq = data.fro_sq();
             let (u_init, v_full) = {
                 let mut rng = stream_rng.for_iteration(0, Role::Init);
-                init_factors(m, opts.rank, &mut rng)
+                init_factors_from(fro_sq, data.rows, data.cols, opts.rank, &mut rng)
             };
             if rank == asyn::server_rank(cfg.nodes) {
-                let fro_sq = m.fro_sq();
                 let u = asyn::server_loop(comm, &opts, u_init);
                 send_chunk(report, RES_U, &mat_payload(&u))?;
                 let mut fro = Vec::with_capacity(2);
@@ -316,8 +525,17 @@ fn run_rank_inner(
                 send_chunk(report, RES_DONE, &[])
             } else {
                 let v0 = v_full.row_block(cols.range(rank));
-                let out =
-                    asyn::client_loop(comm, rank, m, &cols, &opts, variant, u_init, v0, None);
+                let out = asyn::client_node(
+                    comm,
+                    rank,
+                    data.require_cols(),
+                    data.rows,
+                    &opts,
+                    variant,
+                    u_init,
+                    v0,
+                    None,
+                );
                 send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
                 send_chunk(report, RES_SAMPLES, &samples_payload(&out.samples))?;
                 send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
@@ -348,6 +566,7 @@ struct WorkerResult {
     final_clock: f64,
     samples: Vec<(f64, f64, usize)>,
     fro_sq: Option<f64>,
+    load: Option<LoadStats>,
 }
 
 fn read_worker_result(stream: &mut TcpStream, rank: usize) -> Result<WorkerResult> {
@@ -370,6 +589,7 @@ fn read_worker_result(stream: &mut TcpStream, rank: usize) -> Result<WorkerResul
                     let mut pos = 0;
                     res.fro_sq = Some(take_f64_bits(&f.payload, &mut pos)?);
                 }
+                RES_LOAD => res.load = Some(load_from_payload(&f.payload)?),
                 RES_DONE => return Ok(res),
                 other => crate::bail!("unknown result chunk {other} from rank {rank}"),
             },
@@ -381,12 +601,22 @@ fn read_worker_result(stream: &mut TcpStream, rank: usize) -> Result<WorkerResul
 
 /// Options controlling a `launch` run (parsed from the CLI).
 pub struct LaunchOptions {
+    /// The resolved experiment configuration.
     pub cfg: ExperimentConfig,
     /// Rendezvous port (0 = ephemeral).
     pub port: u16,
+    /// Rendezvous bind host (default `127.0.0.1`; use a reachable
+    /// interface or `0.0.0.0` for multi-host runs).
+    pub bind_host: String,
     /// Re-run the simulated backend in-process and assert the factors are
     /// bit-identical (deterministic algorithms only).
     pub verify_sim: bool,
+    /// Expected worker hosts (one per rank, from `--hosts FILE`). When
+    /// set, `launch` does not spawn local workers — it waits for the
+    /// operator-started ones and prints the command each host should run.
+    pub hosts: Option<Vec<String>>,
+    /// Shard directory forwarded to the workers (`--shards DIR`).
+    pub shards: Option<String>,
     /// Arguments forwarded verbatim to the workers (config file + overrides).
     pub forward: Vec<String>,
 }
@@ -395,7 +625,10 @@ pub struct LaunchOptions {
 pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
     let mut nodes_override = None;
     let mut port = 0u16;
+    let mut bind_host = "127.0.0.1".to_string();
     let mut verify_sim = false;
+    let mut hosts: Option<Vec<String>> = None;
+    let mut shards: Option<String> = None;
     let mut forward: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -409,6 +642,30 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
             "--port" => {
                 let v = args.get(i + 1).context("--port needs a number")?;
                 port = v.parse::<u16>().map_err(|e| crate::err!("--port {v}: {e}"))?;
+                i += 2;
+            }
+            "--bind" => {
+                bind_host = args.get(i + 1).context("--bind needs a HOST")?.clone();
+                i += 2;
+            }
+            "--hosts" => {
+                let path = args.get(i + 1).context("--hosts needs a FILE")?;
+                let text = std::fs::read_to_string(path)
+                    .with_context(|| format!("reading hosts file {path}"))?;
+                let list: Vec<String> = text
+                    .lines()
+                    .map(str::trim)
+                    .filter(|l| !l.is_empty() && !l.starts_with('#'))
+                    .map(str::to_string)
+                    .collect();
+                if list.is_empty() {
+                    crate::bail!("hosts file {path} lists no hosts");
+                }
+                hosts = Some(list);
+                i += 2;
+            }
+            "--shards" => {
+                shards = Some(args.get(i + 1).context("--shards needs a DIR")?.clone());
                 i += 2;
             }
             "--verify-sim" => {
@@ -426,25 +683,50 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
             }
         }
     }
+    // `forward` holds pure config args at this point; parse, then append
+    // the worker-only flags so spawned/printed worker commands carry them
     let mut cfg = super::parse_cli_config(&forward).map_err(crate::error::Error::msg)?;
     if let Some(n) = nodes_override {
         cfg.nodes = n;
         forward.push(format!("--experiment.nodes={n}"));
     }
+    if let Some(dir) = &shards {
+        forward.push("--shards".into());
+        forward.push(dir.clone());
+    }
     if cfg.nodes == 0 {
         crate::bail!("launch needs at least one node");
     }
-    Ok(LaunchOptions { cfg, port, verify_sim, forward })
+    if let Some(h) = &hosts {
+        let expect = cluster_ranks(&cfg);
+        if h.len() != expect {
+            crate::bail!(
+                "hosts file lists {} hosts but this run needs {expect} ranks \
+                 (one per node{})",
+                h.len(),
+                if expect > cfg.nodes { " plus the parameter server" } else { "" }
+            );
+        }
+    }
+    Ok(LaunchOptions { cfg, port, bind_host, verify_sim, hosts, shards, forward })
 }
 
-/// `dsanls launch` — spawn the worker processes, run the experiment over
-/// real TCP, assemble and report the outcome.
+
+/// `dsanls launch` — spawn (or, with `--hosts`, wait for) the worker
+/// processes, run the experiment over real TCP, assemble and report the
+/// outcome.
 pub fn launch_main(args: &[String]) -> Result<()> {
     let opts = parse_launch_args(args)?;
     let cfg = &opts.cfg;
     let ranks = cluster_ranks(cfg);
 
-    let rdv = Rendezvous::bind(opts.port)?;
+    if let Some(dir) = &opts.shards {
+        // fail fast on a mismatched shard set, before anything connects
+        let manifest = shard::read_manifest(Path::new(dir))?;
+        validate_manifest(cfg, &manifest)?;
+    }
+
+    let rdv = Rendezvous::bind_on(&opts.bind_host, opts.port)?;
     println!(
         "launching {} over TCP: {} worker process(es){} on {}",
         cfg.algorithm.name(),
@@ -453,21 +735,45 @@ pub fn launch_main(args: &[String]) -> Result<()> {
         rdv.addr()
     );
 
-    let exe = std::env::current_exe().context("locating own binary")?;
     let mut children: Vec<Child> = Vec::with_capacity(ranks);
-    for rank in 0..ranks {
-        let mut cmd = Command::new(&exe);
-        cmd.arg("worker")
-            .arg("--rendezvous")
-            .arg(rdv.addr())
-            .arg("--rank")
-            .arg(rank.to_string())
-            .args(&opts.forward)
-            .stdin(Stdio::null());
-        let child = cmd
-            .spawn()
-            .with_context(|| format!("spawning worker rank {rank}"))?;
-        children.push(child);
+    if let Some(hosts) = &opts.hosts {
+        // multi-host: the operator starts one worker per host; print the
+        // exact command each host should run (see DEPLOYMENT.md). A
+        // wildcard-bound rendezvous is not dialable, so print a
+        // placeholder the operator must substitute with a reachable IP.
+        let dial = if opts.bind_host == "0.0.0.0" || opts.bind_host == "::" {
+            format!("<COORDINATOR_HOST>:{}", rdv.port())
+        } else {
+            rdv.addr()
+        };
+        println!("waiting for {ranks} externally started worker(s):");
+        let fwd: String = opts
+            .forward
+            .iter()
+            .map(|a| shell_quote(a))
+            .collect::<Vec<_>>()
+            .join(" ");
+        for (rank, host) in hosts.iter().enumerate() {
+            println!(
+                "  host {host}: dsanls worker --rendezvous {dial} --rank {rank} --bind {host} {fwd}"
+            );
+        }
+    } else {
+        let exe = std::env::current_exe().context("locating own binary")?;
+        for rank in 0..ranks {
+            let mut cmd = Command::new(&exe);
+            cmd.arg("worker")
+                .arg("--rendezvous")
+                .arg(rdv.addr())
+                .arg("--rank")
+                .arg(rank.to_string())
+                .args(&opts.forward)
+                .stdin(Stdio::null());
+            let child = cmd
+                .spawn()
+                .with_context(|| format!("spawning worker rank {rank}"))?;
+            children.push(child);
+        }
     }
 
     let run = launch_collect(cfg, &rdv, ranks);
@@ -490,6 +796,18 @@ pub fn launch_main(args: &[String]) -> Result<()> {
         crate::bail!("{fail}");
     }
 
+    for l in &outcome.loads {
+        println!(
+            "rank {}: {} rows × {} cols resident ({} values, {:.1} MiB) loaded in {:.3}s [{}]",
+            l.rank,
+            l.block_rows,
+            l.block_cols,
+            l.nnz,
+            l.bytes as f64 / (1024.0 * 1024.0),
+            l.load_secs,
+            l.source.label()
+        );
+    }
     println!(
         "final rel-error {:.4}  sec/iter {:.5}  {}",
         outcome.final_error(),
@@ -509,6 +827,18 @@ pub fn launch_main(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Minimal POSIX-shell quoting for the printed copy-pasteable worker
+/// commands (plain tokens pass through; anything else is single-quoted).
+fn shell_quote(s: &str) -> String {
+    let plain = !s.is_empty()
+        && s.chars().all(|c| c.is_ascii_alphanumeric() || "-_=./:,@+".contains(c));
+    if plain {
+        s.to_string()
+    } else {
+        format!("'{}'", s.replace('\'', "'\\''"))
+    }
+}
+
 /// Accept the workers, gather their results, and assemble the outcome.
 fn launch_collect(cfg: &ExperimentConfig, rdv: &Rendezvous, ranks: usize) -> Result<Outcome> {
     let timeout = Duration::from_secs_f64((cfg.net_timeout_s * 4.0).max(5.0));
@@ -522,6 +852,7 @@ fn launch_collect(cfg: &ExperimentConfig, rdv: &Rendezvous, ranks: usize) -> Res
 
 fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> Result<Outcome> {
     let label = format!("{}/tcp", cfg.algorithm.name());
+    let loads: Vec<LoadStats> = results.iter().filter_map(|r| r.load).collect();
     match cfg.algorithm {
         Algorithm::Dsanls | Algorithm::Baseline(_) => {
             let mut outputs = Vec::with_capacity(results.len());
@@ -542,6 +873,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 sec_per_iter: run.sec_per_iter,
                 u: run.u,
                 v: run.v,
+                loads,
             })
         }
         Algorithm::Secure(SecureAlgo::SynSd
@@ -566,6 +898,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 sec_per_iter: run.sec_per_iter,
                 u: run.u,
                 v: run.v,
+                loads,
             })
         }
         Algorithm::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => {
@@ -592,6 +925,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 sec_per_iter: run.sec_per_iter,
                 u: run.u,
                 v: run.v,
+                loads,
             })
         }
     }

@@ -4,15 +4,45 @@
 //! (`benches/*.rs`) and the examples build on. One entry point,
 //! [`run_experiment`], covers every algorithm in the paper on the
 //! simulated transport; [`launch`] runs the same experiments over real
-//! TCP worker processes (`dsanls launch` / `dsanls worker`).
+//! TCP worker processes (`dsanls launch` / `dsanls worker`), and
+//! [`shard_cli`] pre-slices datasets into on-disk shard directories
+//! (`dsanls shard`) for multi-host deployments.
+//!
+//! ## Launch lifecycle (multi-process path)
+//!
+//! 1. **shard (optional, offline)** — `dsanls shard` materialises the
+//!    dataset once, writes per-rank block files + a manifest carrying the
+//!    exact global `‖M‖²` ([`crate::data::shard`]); the operator copies
+//!    each rank its blocks.
+//! 2. **bind** — `dsanls launch` binds the rendezvous listener
+//!    ([`crate::transport::Rendezvous`]) and either spawns local workers
+//!    or (with `--hosts`) waits for externally started ones.
+//! 3. **bootstrap** — each worker handshakes (magic/version/rank), sends
+//!    its advertised mesh address, receives the address book, and forms
+//!    the full TCP peer mesh ([`crate::transport::tcp`]).
+//! 4. **load** — each worker builds its rank-local [`crate::data::NodeData`]
+//!    (shard files, or windowed shard-local synthesis) — the full matrix
+//!    is never materialised on a worker — and, when no manifest supplied
+//!    it, resolves the exact global norm with the ordered chain reduction.
+//! 5. **run** — the rank executes its algorithm over
+//!    [`crate::transport::TcpComm`]; rank-ordered reductions keep factors
+//!    bit-identical to the in-process simulator.
+//! 6. **collect** — result chunks stream back over the rendezvous
+//!    connections; the coordinator assembles the same [`Outcome`] the
+//!    simulated path produces (now including per-rank [`LoadStats`]),
+//!    and `--verify-sim` asserts factor bit-identity.
+
+#![warn(missing_docs)]
 
 pub mod launch;
+pub mod shard_cli;
 
 use std::path::Path;
 
 use crate::algos::{run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions, TracePoint};
 use crate::config::{Algorithm, ExperimentConfig};
 use crate::data::partition::{imbalanced_partition, uniform_partition, Partition};
+use crate::data::shard::LoadStats;
 use crate::data::Dataset;
 use crate::dist::CommStats;
 use crate::linalg::{Mat, Matrix};
@@ -23,19 +53,31 @@ use crate::secure::{run_asyn, run_syn_sd, run_syn_ssd, AsynOptions, SecureAlgo, 
 /// The uniform outcome of any experiment run.
 #[derive(Debug, Clone)]
 pub struct Outcome {
+    /// Human-readable run label (algorithm / backend).
     pub label: String,
+    /// Error-over-time samples.
     pub trace: Vec<TracePoint>,
+    /// Per-rank communication/compute statistics.
     pub stats: Vec<CommStats>,
+    /// Seconds per iteration (simulated clock or TCP wall time).
     pub sec_per_iter: f64,
+    /// Assembled row factor `U`.
     pub u: Mat,
+    /// Assembled column factor `V`.
     pub v: Mat,
+    /// Per-rank data-plane statistics (what each rank loaded, resident
+    /// bytes, load time). Empty on the in-process simulated path, where
+    /// ranks share one materialised matrix.
+    pub loads: Vec<LoadStats>,
 }
 
 impl Outcome {
+    /// Last traced relative error (NaN on an empty trace).
     pub fn final_error(&self) -> f64 {
         self.trace.last().map(|p| p.rel_error).unwrap_or(f64::NAN)
     }
 
+    /// The trace as a labelled CSV/plot series.
     pub fn series(&self) -> Series {
         Series::new(self.label.clone(), self.trace.clone())
     }
@@ -131,6 +173,7 @@ pub fn run_on(cfg: &ExperimentConfig, m: &Matrix) -> Outcome {
                 sec_per_iter: run.sec_per_iter,
                 u: run.u,
                 v: run.v,
+                loads: Vec::new(),
             }
         }
         Algorithm::Baseline(solver) => {
@@ -142,6 +185,7 @@ pub fn run_on(cfg: &ExperimentConfig, m: &Matrix) -> Outcome {
                 sec_per_iter: run.sec_per_iter,
                 u: run.u,
                 v: run.v,
+                loads: Vec::new(),
             }
         }
         Algorithm::Secure(algo) => {
@@ -164,6 +208,7 @@ pub fn run_on(cfg: &ExperimentConfig, m: &Matrix) -> Outcome {
                 sec_per_iter: run.sec_per_iter,
                 u: run.u,
                 v: run.v,
+                loads: Vec::new(),
             }
         }
     }

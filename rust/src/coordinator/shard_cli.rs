@@ -1,0 +1,151 @@
+//! `dsanls shard` — pre-slice a dataset into an on-disk shard directory.
+//!
+//! ```text
+//! dsanls shard --out DIR [--nodes N] [--config FILE] [--key=value ...]
+//! ```
+//!
+//! Materialises the configured dataset **once** (shard preparation is the
+//! single place the full matrix may exist), slices it into per-rank
+//! row-axis and column-axis block files, and writes a manifest carrying
+//! the exact global `‖M‖²_F` ([`crate::data::shard`] documents the binary
+//! format). The operator then copies each rank its two `rank-<r>.*.blk`
+//! files plus `manifest.bin`, and starts workers with `--shards DIR` —
+//! every rank reads only its blocks, so the deployable matrix size is
+//! bounded by the *cluster's* memory, not one machine's.
+//!
+//! The manifest records dataset/seed/scale/nodes; workers and `launch`
+//! refuse a directory that does not match their config (preventing
+//! confusing bit-identity failures from stale shards).
+
+use std::path::PathBuf;
+
+use crate::coordinator;
+use crate::data::shard::{self, ShardManifest};
+use crate::error::{Context, Result};
+use crate::linalg::Matrix;
+
+/// Options for one `dsanls shard` invocation.
+pub struct ShardCliOptions {
+    /// The resolved experiment configuration (dataset/seed/scale/nodes).
+    pub cfg: crate::config::ExperimentConfig,
+    /// Output directory for the manifest + block files.
+    pub out: PathBuf,
+}
+
+/// Parse `shard` CLI arguments.
+pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
+    let mut out: Option<PathBuf> = None;
+    let mut nodes_override = None;
+    let mut cfg_args: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--out" => {
+                out = Some(PathBuf::from(args.get(i + 1).context("--out needs a DIR")?));
+                i += 2;
+            }
+            "--nodes" => {
+                let v = args.get(i + 1).context("--nodes needs a number")?;
+                nodes_override =
+                    Some(v.parse::<usize>().map_err(|e| crate::err!("--nodes {v}: {e}"))?);
+                i += 2;
+            }
+            _ => {
+                cfg_args.push(args[i].clone());
+                i += 1;
+            }
+        }
+    }
+    let mut cfg = coordinator::parse_cli_config(&cfg_args).map_err(crate::error::Error::msg)?;
+    if let Some(n) = nodes_override {
+        cfg.nodes = n;
+    }
+    if cfg.nodes == 0 {
+        crate::bail!("shard needs at least one node");
+    }
+    let out = out.context("shard needs --out DIR")?;
+    Ok(ShardCliOptions { cfg, out })
+}
+
+/// `dsanls shard` entry point: generate, slice, write, report.
+pub fn shard_main(args: &[String]) -> Result<()> {
+    let opts = parse_shard_args(args)?;
+    let cfg = &opts.cfg;
+    println!(
+        "sharding {} (seed {}, scale {}) for {} node(s) into {}",
+        cfg.dataset,
+        cfg.seed,
+        cfg.scale,
+        cfg.nodes,
+        opts.out.display()
+    );
+    let m = coordinator::load_dataset(cfg);
+    let manifest = ShardManifest {
+        nodes: cfg.nodes,
+        rows: m.rows(),
+        cols: m.cols(),
+        fro_sq: m.fro_sq(),
+        seed: cfg.seed,
+        scale: cfg.scale,
+        dense: matches!(m, Matrix::Dense(_)),
+        dataset: cfg.dataset.clone(),
+    };
+    let bytes = shard::write_shard_dir(&opts.out, &m, &manifest)?;
+    println!(
+        "wrote {}x{} ({} stored values) as {} block file(s), {:.1} MiB total",
+        m.rows(),
+        m.cols(),
+        m.nnz(),
+        2 * cfg.nodes,
+        bytes as f64 / (1024.0 * 1024.0)
+    );
+    println!(
+        "next: copy manifest.bin + rank-<r>.*.blk to each host, start workers with \
+         `dsanls worker ... --shards {}` (see DEPLOYMENT.md)",
+        opts.out.display()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_args_parse() {
+        let args: Vec<String> = ["--out", "/tmp/s", "--nodes", "3", "--experiment.rank=4"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let o = parse_shard_args(&args).unwrap();
+        assert_eq!(o.cfg.nodes, 3);
+        assert_eq!(o.cfg.rank, 4);
+        assert_eq!(o.out, PathBuf::from("/tmp/s"));
+        assert!(parse_shard_args(&["--nodes".into(), "2".into()]).is_err(), "--out required");
+    }
+
+    #[test]
+    fn shard_main_writes_loadable_dir() {
+        let dir = std::env::temp_dir()
+            .join(format!("dsanls_shardcli_{}", std::process::id()));
+        let args: Vec<String> = [
+            "--out",
+            dir.to_str().unwrap(),
+            "--nodes",
+            "2",
+            "--experiment.dataset=face",
+            "--experiment.scale=0.05",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        shard_main(&args).unwrap();
+        let manifest = shard::read_manifest(&dir).unwrap();
+        assert_eq!(manifest.nodes, 2);
+        assert_eq!(manifest.dataset, "FACE");
+        let (data, _) = crate::data::shard::NodeData::load(&dir, 1, true, true).unwrap();
+        assert_eq!(data.rows, manifest.rows);
+        assert!(data.m_rows.is_some() && data.m_cols.is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -129,48 +129,98 @@ impl Dataset {
         self.generate_scaled(seed, 1.0)
     }
 
-    /// Generate at `scale` ∈ (0, 1] of the scaled size (tests use 0.05-ish;
-    /// row/col counts floor at 64).
-    pub fn generate_scaled(&self, seed: u64, scale: f64) -> Matrix {
+    /// Raw scaled row/column counts (before the DBLP squaring) — internal
+    /// inputs to the generators; [`Dataset::scaled_shape`] gives the shape
+    /// of the produced matrix.
+    fn scaled_dims(&self, scale: f64) -> (usize, usize) {
         let spec = self.spec();
         let rows = ((spec.rows as f64 * scale) as usize).max(64);
         let cols = ((spec.cols as f64 * scale.sqrt()) as usize).max(64).min(spec.cols);
+        (rows, cols)
+    }
+
+    /// Shape of the matrix `generate_scaled(seed, scale)` produces, without
+    /// generating it — what the shard planner partitions over.
+    pub fn scaled_shape(&self, scale: f64) -> (usize, usize) {
+        let (rows, cols) = self.scaled_dims(scale);
+        match self {
+            // the graph is square over max(rows, cols) nodes
+            Dataset::Dblp => {
+                let n = rows.max(cols);
+                (n, n)
+            }
+            _ => (rows, cols),
+        }
+    }
+
+    /// Generate at `scale` ∈ (0, 1] of the scaled size (tests use 0.05-ish;
+    /// row/col counts floor at 64).
+    pub fn generate_scaled(&self, seed: u64, scale: f64) -> Matrix {
+        let (rows, cols) = self.scaled_shape(scale);
+        self.generate_window(seed, scale, 0..rows, 0..cols)
+    }
+
+    /// Shard-local generation: materialise only the `rows × cols` window of
+    /// the scaled matrix, **bit-identical** to slicing the full
+    /// `generate_scaled(seed, scale)` output (the windowed generators
+    /// replay the full random stream — see [`synth`]). Peak memory is the
+    /// window plus factor-sized scratch.
+    pub fn generate_window(
+        &self,
+        seed: u64,
+        scale: f64,
+        rows: std::ops::Range<usize>,
+        cols: std::ops::Range<usize>,
+    ) -> Matrix {
+        let spec = self.spec();
+        let (g_rows, g_cols) = self.scaled_dims(scale);
+        let w = synth::GenWindow { rows, cols };
         let mut rng: Pcg64 = StreamRng::new(seed).for_iteration(*self as u64, Role::Data);
         match self {
-            Dataset::Boats => {
-                Matrix::Dense(synth::low_rank_dense(rows, cols, spec.true_rank, 0.05, &mut rng))
-            }
-            Dataset::Face => {
-                Matrix::Dense(synth::low_rank_dense(rows, cols, spec.true_rank, 0.08, &mut rng))
-            }
-            Dataset::Mnist => Matrix::Sparse(synth::blocky_sparse(
-                rows,
-                cols,
+            Dataset::Boats => Matrix::Dense(synth::low_rank_dense_window(
+                g_rows,
+                g_cols,
                 spec.true_rank,
-                1.0 - spec.paper_sparsity,
+                0.05,
+                &w,
                 &mut rng,
             )),
-            Dataset::Gisette => Matrix::Sparse(synth::blocky_sparse(
-                rows,
-                cols,
+            Dataset::Face => Matrix::Dense(synth::low_rank_dense_window(
+                g_rows,
+                g_cols,
+                spec.true_rank,
+                0.08,
+                &w,
+                &mut rng,
+            )),
+            Dataset::Mnist | Dataset::Gisette => Matrix::Sparse(synth::blocky_sparse_window(
+                g_rows,
+                g_cols,
                 spec.true_rank,
                 1.0 - spec.paper_sparsity,
+                &w,
                 &mut rng,
             )),
             Dataset::Rcv1 => {
-                let nnz = ((rows * cols) as f64 * (1.0 - spec.paper_sparsity) * 4.0) as usize;
-                Matrix::Sparse(synth::power_law_sparse(
-                    rows,
-                    cols,
-                    nnz.max(10 * rows),
+                let nnz = ((g_rows * g_cols) as f64 * (1.0 - spec.paper_sparsity) * 4.0) as usize;
+                Matrix::Sparse(synth::power_law_sparse_window(
+                    g_rows,
+                    g_cols,
+                    nnz.max(10 * g_rows),
                     spec.true_rank,
                     1.05,
+                    &w,
                     &mut rng,
                 ))
             }
             Dataset::Dblp => {
-                let edges = (rows as f64 * 7.6) as usize; // matches paper's avg degree
-                Matrix::Sparse(synth::power_law_graph(rows.max(cols), edges, &mut rng))
+                let edges = (g_rows as f64 * 7.6) as usize; // matches paper's avg degree
+                Matrix::Sparse(synth::power_law_graph_window(
+                    g_rows.max(g_cols),
+                    edges,
+                    &w,
+                    &mut rng,
+                ))
             }
         }
     }
@@ -226,5 +276,30 @@ mod tests {
         let b = Dataset::Mnist.generate_scaled(5, 0.02);
         assert_eq!(a.fro_sq(), b.fro_sq());
         assert_eq!(a.nnz(), b.nnz());
+    }
+
+    #[test]
+    fn scaled_shape_matches_generated() {
+        for d in ALL_DATASETS {
+            let (rows, cols) = d.scaled_shape(0.02);
+            let m = d.generate_scaled(7, 0.02);
+            assert_eq!((m.rows(), m.cols()), (rows, cols), "{:?}", d);
+        }
+    }
+
+    #[test]
+    fn window_generation_is_a_bitwise_slice() {
+        for d in ALL_DATASETS {
+            let (rows, cols) = d.scaled_shape(0.02);
+            let full = d.generate_scaled(11, 0.02);
+            let (r, c) = (rows / 3..rows / 3 + rows / 4, cols / 5..cols / 5 + cols / 3);
+            let block = d.generate_window(11, 0.02, r.clone(), c.clone());
+            let slice = full.row_block(r).col_block(c);
+            assert!(
+                crate::data::shard::matrix_bits_eq(&slice, &block),
+                "{:?}: window != slice",
+                d
+            );
+        }
     }
 }

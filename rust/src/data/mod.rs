@@ -7,10 +7,16 @@
 //!   power-law sparse) used as substitutes for the paper's real datasets.
 //! * [`datasets`] — the six named Table-1 workloads, scaled (see DESIGN.md
 //!   §2 for the substitution rationale).
+//! * [`shard`] — the shard-aware data plane: rank-local block views
+//!   ([`shard::NodeData`]), bit-identical shard-local synthesis, the
+//!   on-disk `dsanls shard` format, and the exact distributed `‖M‖²`
+//!   reduction.
 
 pub mod datasets;
 pub mod partition;
+pub mod shard;
 pub mod synth;
 
 pub use datasets::{load, Dataset, DatasetSpec, ALL_DATASETS};
 pub use partition::{imbalanced_partition, uniform_partition, Partition};
+pub use shard::{Axis, LoadSource, LoadStats, NodeData, NodeInput, ShardManifest, ShardSpec};

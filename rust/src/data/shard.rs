@@ -1,0 +1,936 @@
+//! Shard-aware data plane: rank-local blocks of the input matrix.
+//!
+//! The paper's premise (Sec. 3.1, Fig. 1a) is that node `r` of an `N`-node
+//! cluster holds only its row block `M_{I_r:}` and/or column block
+//! `M_{:J_r}` of the input. Until this module existed, our real worker
+//! processes (`dsanls worker`) regenerated the *full* matrix from the seed
+//! and sliced it locally — wasting memory and CPU at every rank and
+//! capping the input size at one worker's RAM. The shard data plane fixes
+//! that end to end:
+//!
+//! * **[`NodeData`]** — what one rank actually holds: global shape, the
+//!   owned index ranges, the resident blocks, and (once resolved) the
+//!   exact global `‖M‖²_F` that seeds factor initialisation.
+//! * **Shard-local synthesis** — [`NodeData::generate`] materialises only
+//!   the rank's blocks via the windowed generators
+//!   ([`crate::data::synth`]), bit-identical to slicing the full matrix
+//!   (the generators replay the full random stream and keep the in-window
+//!   draws).
+//! * **On-disk shards** — `dsanls shard` pre-slices a dataset into a
+//!   directory of per-rank block files plus a [`ShardManifest`]
+//!   ([`write_shard_dir`] / [`NodeData::load`]), so multi-host deployments
+//!   copy each rank only its blocks. The manifest records the exact global
+//!   norm, so file-fed ranks skip the startup reduction entirely.
+//! * **[`exact_fro_sq`]** — an ordered chain reduction that reproduces the
+//!   full-matrix `‖M‖²_F` **bit-for-bit** from row blocks: `fro_sq`
+//!   accumulates sequentially in storage order, and row blocks concatenate
+//!   to exactly that order, so threading the running accumulator through
+//!   the ranks (rank 0 → 1 → … → N−1) performs the identical sequence of
+//!   f64 additions. This is what keeps sharded workers' factors
+//!   bit-identical to the full-matrix simulator (`--verify-sim`).
+//!
+//! Residency contract: a rank building [`NodeData`] never allocates a
+//! full-matrix-sized buffer — asserted by `tests/shard_residency.rs` with
+//! a peak-tracking allocator.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use crate::data::datasets::Dataset;
+use crate::data::partition::uniform_partition;
+use crate::error::{Context, Result};
+use crate::linalg::{Csr, Mat, Matrix};
+use crate::transport::wire::{push_f64_bits, take_f64_bits};
+use crate::transport::Communicator;
+
+/// Which axis of `M` a shard block spans.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Axis {
+    /// A row block `M_{I_r:}` (all columns).
+    Row,
+    /// A column block `M_{:J_r}` (all rows).
+    Col,
+}
+
+impl Axis {
+    /// Stable on-disk / on-wire code.
+    pub fn code(self) -> u8 {
+        match self {
+            Axis::Row => 0,
+            Axis::Col => 1,
+        }
+    }
+
+    /// Inverse of [`Axis::code`].
+    pub fn from_code(c: u8) -> Result<Axis> {
+        match c {
+            0 => Ok(Axis::Row),
+            1 => Ok(Axis::Col),
+            other => crate::bail!("unknown shard axis code {other}"),
+        }
+    }
+
+    /// File-name fragment (`rows` / `cols`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Axis::Row => "rows",
+            Axis::Col => "cols",
+        }
+    }
+}
+
+/// Identifies one rank's block along one axis of a partitioned matrix.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardSpec {
+    /// Owning rank.
+    pub rank: usize,
+    /// Cluster data ranks (the async parameter server holds no data).
+    pub nodes: usize,
+    /// Partitioned axis.
+    pub axis: Axis,
+    /// Owned global index range along that axis.
+    pub range: Range<usize>,
+}
+
+impl ShardSpec {
+    /// The uniform-partition shard of `rank` along `axis` for a matrix
+    /// with `total` rows/columns on that axis.
+    pub fn uniform(axis: Axis, rank: usize, nodes: usize, total: usize) -> ShardSpec {
+        ShardSpec { rank, nodes, axis, range: uniform_partition(total, nodes).range(rank) }
+    }
+}
+
+/// Where a rank's resident data came from (surfaced per rank in
+/// [`crate::coordinator::Outcome::loads`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LoadSource {
+    /// Full matrix materialised then sliced (simulator / legacy path).
+    FullMatrix,
+    /// Blocks synthesised shard-locally from the seed (windowed
+    /// generators).
+    SynthShard,
+    /// Blocks read from a `dsanls shard` directory.
+    FileShard,
+}
+
+impl LoadSource {
+    /// Stable wire code.
+    pub fn code(self) -> u64 {
+        match self {
+            LoadSource::FullMatrix => 0,
+            LoadSource::SynthShard => 1,
+            LoadSource::FileShard => 2,
+        }
+    }
+
+    /// Inverse of [`LoadSource::code`].
+    pub fn from_code(c: u64) -> Result<LoadSource> {
+        match c {
+            0 => Ok(LoadSource::FullMatrix),
+            1 => Ok(LoadSource::SynthShard),
+            2 => Ok(LoadSource::FileShard),
+            other => crate::bail!("unknown load source code {other}"),
+        }
+    }
+
+    /// Human-readable label for run summaries.
+    pub fn label(self) -> &'static str {
+        match self {
+            LoadSource::FullMatrix => "full matrix",
+            LoadSource::SynthShard => "synthetic shard",
+            LoadSource::FileShard => "file shard",
+        }
+    }
+}
+
+/// Per-rank data-plane statistics: what was loaded, how big it is resident,
+/// and how long loading took.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LoadStats {
+    /// Reporting rank.
+    pub rank: usize,
+    /// Rows of the resident row block (0 if none held).
+    pub block_rows: usize,
+    /// Columns of the resident column block (0 if none held).
+    pub block_cols: usize,
+    /// Explicitly stored values across resident blocks.
+    pub nnz: usize,
+    /// Approximate resident bytes across blocks.
+    pub bytes: usize,
+    /// Wall seconds spent building/loading the blocks.
+    pub load_secs: f64,
+    /// Provenance of the blocks.
+    pub source: LoadSource,
+}
+
+/// Approximate resident bytes of a matrix (values + sparse index arrays).
+pub fn matrix_resident_bytes(m: &Matrix) -> usize {
+    match m {
+        Matrix::Dense(d) => d.data().len() * 4,
+        Matrix::Sparse(s) => s.nnz() * (4 + 8) + (s.rows() + 1) * 8,
+    }
+}
+
+/// Bitwise matrix equality (dense: dims + data bits; sparse: full CSR
+/// structure) — the assertion primitive of the shard bit-identity tests.
+pub fn matrix_bits_eq(a: &Matrix, b: &Matrix) -> bool {
+    match (a, b) {
+        (Matrix::Dense(x), Matrix::Sparse(y)) => &y.to_dense() == x,
+        (Matrix::Sparse(x), Matrix::Dense(y)) => &x.to_dense() == y,
+        (Matrix::Dense(x), Matrix::Dense(y)) => x == y,
+        (Matrix::Sparse(x), Matrix::Sparse(y)) => x == y,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// NodeData: what one rank holds
+// ---------------------------------------------------------------------------
+
+/// One rank's view of the partitioned input matrix.
+///
+/// Constructed three ways — [`NodeData::from_full`] (slice a materialised
+/// matrix; simulator and tests), [`NodeData::generate`] (shard-local
+/// synthesis), [`NodeData::load`] (shard directory) — and consumed by the
+/// `*_node_sharded` entry points in [`crate::algos`] / [`crate::secure`].
+#[derive(Debug, Clone)]
+pub struct NodeData {
+    /// Global matrix rows.
+    pub rows: usize,
+    /// Global matrix columns.
+    pub cols: usize,
+    /// Global row indices of `m_rows` (empty range if no row block).
+    pub row_range: Range<usize>,
+    /// Global column indices of `m_cols` (empty range if no column block).
+    pub col_range: Range<usize>,
+    /// Resident row block `M_{I_r:}` (`|I_r| × cols`).
+    pub m_rows: Option<Matrix>,
+    /// Resident column block `M_{:J_r}` (`rows × |J_r|`).
+    pub m_cols: Option<Matrix>,
+    /// Exact global `‖M‖²_F`, once known (manifest or [`exact_fro_sq`]).
+    pub fro_sq: Option<f64>,
+}
+
+impl NodeData {
+    /// Slice a rank's view out of a materialised matrix (the legacy /
+    /// simulator path; also the oracle the bit-identity tests compare
+    /// against).
+    pub fn from_full(m: &Matrix, row_range: Range<usize>, col_range: Range<usize>) -> NodeData {
+        NodeData {
+            rows: m.rows(),
+            cols: m.cols(),
+            m_rows: Some(m.row_block(row_range.clone())),
+            m_cols: Some(m.col_block(col_range.clone())),
+            row_range,
+            col_range,
+            fro_sq: Some(m.fro_sq()),
+        }
+    }
+
+    /// Synthesise a rank's blocks shard-locally (no full-matrix buffer is
+    /// ever allocated). Pass `None` for a block the rank does not need.
+    /// `fro_sq` starts unresolved — run [`exact_fro_sq`] before algorithms
+    /// that initialise factors.
+    pub fn generate(
+        dataset: Dataset,
+        seed: u64,
+        scale: f64,
+        row_range: Option<Range<usize>>,
+        col_range: Option<Range<usize>>,
+    ) -> NodeData {
+        let (rows, cols) = dataset.scaled_shape(scale);
+        let m_rows = row_range
+            .clone()
+            .map(|r| dataset.generate_window(seed, scale, r, 0..cols));
+        let m_cols = col_range
+            .clone()
+            .map(|c| dataset.generate_window(seed, scale, 0..rows, c));
+        NodeData {
+            rows,
+            cols,
+            row_range: row_range.unwrap_or(0..0),
+            col_range: col_range.unwrap_or(0..0),
+            m_rows,
+            m_cols,
+            fro_sq: None,
+        }
+    }
+
+    /// Load a rank's blocks from a `dsanls shard` directory. Returns the
+    /// manifest alongside so callers can validate it against their config.
+    pub fn load(
+        dir: &Path,
+        rank: usize,
+        need_rows: bool,
+        need_cols: bool,
+    ) -> Result<(NodeData, ShardManifest)> {
+        let manifest = read_manifest(dir)?;
+        if rank >= manifest.nodes {
+            crate::bail!("rank {rank} outside shard set of {} nodes", manifest.nodes);
+        }
+        let mut data = NodeData {
+            rows: manifest.rows,
+            cols: manifest.cols,
+            row_range: 0..0,
+            col_range: 0..0,
+            m_rows: None,
+            m_cols: None,
+            fro_sq: Some(manifest.fro_sq),
+        };
+        if need_rows {
+            let (spec, block) = read_block(dir, rank, Axis::Row)?;
+            validate_block(&manifest, &spec, &block, Axis::Row)?;
+            data.row_range = spec.range;
+            data.m_rows = Some(block);
+        }
+        if need_cols {
+            let (spec, block) = read_block(dir, rank, Axis::Col)?;
+            validate_block(&manifest, &spec, &block, Axis::Col)?;
+            data.col_range = spec.range;
+            data.m_cols = Some(block);
+        }
+        Ok((data, manifest))
+    }
+
+    /// The resident row block, or a diagnostic panic if this rank holds
+    /// none (entry points state their block requirements).
+    pub fn require_rows(&self) -> &Matrix {
+        self.m_rows.as_ref().expect("this algorithm requires the rank's row block")
+    }
+
+    /// The resident column block (see [`NodeData::require_rows`]).
+    pub fn require_cols(&self) -> &Matrix {
+        self.m_cols.as_ref().expect("this algorithm requires the rank's column block")
+    }
+
+    /// The resolved exact global `‖M‖²_F`; panics if unresolved (callers
+    /// must run [`exact_fro_sq`] or load a manifest first).
+    pub fn fro_sq(&self) -> f64 {
+        self.fro_sq.expect("global ‖M‖² unresolved — run exact_fro_sq first")
+    }
+
+    /// Drop the row block (e.g. after the startup norm reduction when the
+    /// algorithm only consumes the column block).
+    pub fn drop_rows(&mut self) {
+        self.m_rows = None;
+        self.row_range = 0..0;
+    }
+
+    /// Approximate resident bytes across the held blocks.
+    pub fn resident_bytes(&self) -> usize {
+        self.m_rows.as_ref().map_or(0, matrix_resident_bytes)
+            + self.m_cols.as_ref().map_or(0, matrix_resident_bytes)
+    }
+
+    /// Explicitly stored values across the held blocks.
+    pub fn nnz(&self) -> usize {
+        self.m_rows.as_ref().map_or(0, Matrix::nnz) + self.m_cols.as_ref().map_or(0, Matrix::nnz)
+    }
+
+    /// Summarise into per-rank [`LoadStats`].
+    pub fn load_stats(&self, rank: usize, load_secs: f64, source: LoadSource) -> LoadStats {
+        LoadStats {
+            rank,
+            block_rows: self.m_rows.as_ref().map_or(0, Matrix::rows),
+            block_cols: self.m_cols.as_ref().map_or(0, Matrix::cols),
+            nnz: self.nnz(),
+            bytes: self.resident_bytes(),
+            load_secs,
+            source,
+        }
+    }
+}
+
+/// The input a per-rank algorithm entry point runs on: either the full
+/// matrix (simulator, tests — every rank slices its own blocks) or a
+/// pre-sharded [`NodeData`] view (real workers).
+pub enum NodeInput<'a> {
+    /// The rank can see the whole matrix and slices its blocks itself.
+    Full(&'a Matrix),
+    /// The rank holds only its blocks.
+    Shard(&'a NodeData),
+}
+
+impl NodeInput<'_> {
+    /// Global `(rows, cols)`.
+    pub fn dims(&self) -> (usize, usize) {
+        match self {
+            NodeInput::Full(m) => (m.rows(), m.cols()),
+            NodeInput::Shard(d) => (d.rows, d.cols),
+        }
+    }
+
+    /// Exact global `‖M‖²_F`.
+    pub fn fro_sq(&self) -> f64 {
+        match self {
+            NodeInput::Full(m) => m.fro_sq(),
+            NodeInput::Shard(d) => d.fro_sq(),
+        }
+    }
+
+    /// The rank's row block `M_{I_r:}` for the given partition range:
+    /// sliced out of the full matrix, or borrowed from the shard view
+    /// (whose range must match the rank's partition — the shard contract).
+    pub fn row_block(&self, expect: Range<usize>) -> std::borrow::Cow<'_, Matrix> {
+        match self {
+            NodeInput::Full(m) => std::borrow::Cow::Owned(m.row_block(expect)),
+            NodeInput::Shard(d) => {
+                assert_eq!(d.row_range, expect, "shard row range != rank's partition");
+                std::borrow::Cow::Borrowed(d.require_rows())
+            }
+        }
+    }
+
+    /// The rank's transposed column block `(M_{:J_r})ᵀ` for the given
+    /// partition range (always owned — the transpose materialises).
+    pub fn col_block_t(&self, expect: Range<usize>) -> Matrix {
+        match self {
+            NodeInput::Full(m) => m.col_block(expect).transpose(),
+            NodeInput::Shard(d) => {
+                assert_eq!(d.col_range, expect, "shard col range != rank's partition");
+                d.require_cols().transpose()
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Exact global norm from row blocks (ordered chain reduction)
+// ---------------------------------------------------------------------------
+
+/// Continue the sequential `‖·‖²_F` accumulation from `acc` over `m`'s
+/// stored values in storage order — the resumable form of
+/// [`Matrix::fro_sq`] (which is `fro_sq_resume(m, 0.0)`).
+fn fro_sq_resume(m: &Matrix, acc: f64) -> f64 {
+    match m {
+        Matrix::Dense(d) => d.data().iter().fold(acc, |a, &v| a + (v as f64) * (v as f64)),
+        Matrix::Sparse(s) => s.values().iter().fold(acc, |a, &v| a + (v as f64) * (v as f64)),
+    }
+}
+
+/// Compute the **exact** global `‖M‖²_F` from distributed row blocks.
+///
+/// Ranks `0..contributors` each hold the row block of a rank-ordered row
+/// partition (`my_rows = Some(block)`); any further ranks (e.g. the async
+/// parameter server) participate with `None`. Round `r` of the chain:
+/// rank `r` folds its block's values into the running accumulator —
+/// *starting from the value rank `r−1` produced* — and broadcasts the new
+/// accumulator to everyone via the collective exchange.
+///
+/// Because dense data and CSR values are stored row-major, the
+/// concatenation of rank-ordered row blocks **is** the full matrix's
+/// storage order, and resuming a sequential fold is associative-free: the
+/// result is bit-identical to `m.fro_sq()` on the materialised matrix.
+/// Cost: `contributors` tiny barriers at startup, once per run.
+pub fn exact_fro_sq<C: Communicator>(
+    comm: &mut C,
+    contributors: usize,
+    my_rows: Option<&Matrix>,
+) -> Result<f64> {
+    assert!(contributors >= 1, "exact_fro_sq needs at least one contributor");
+    assert!(contributors <= comm.nodes(), "more contributors than ranks");
+    let mut acc = 0.0f64;
+    for r in 0..contributors {
+        let payload = if comm.rank() == r {
+            let block = my_rows
+                .with_context(|| format!("rank {r} contributes to ‖M‖² but holds no row block"))?;
+            let mut p = Vec::with_capacity(2);
+            push_f64_bits(&mut p, fro_sq_resume(block, acc));
+            p
+        } else {
+            Vec::new()
+        };
+        let gathered = comm
+            .exchange(0.0, &payload)
+            .with_context(|| format!("‖M‖² chain round {r}"))?;
+        let mut pos = 0;
+        acc = take_f64_bits(&gathered.parts[r], &mut pos)
+            .with_context(|| format!("rank {r} sent a malformed ‖M‖² accumulator"))?;
+    }
+    Ok(acc)
+}
+
+// ---------------------------------------------------------------------------
+// On-disk shard format
+// ---------------------------------------------------------------------------
+
+/// Shard directory metadata (`manifest.bin`): what was sharded, for how
+/// many ranks, and the exact global norm.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardManifest {
+    /// Data ranks the directory was sharded for.
+    pub nodes: usize,
+    /// Global matrix rows.
+    pub rows: usize,
+    /// Global matrix columns.
+    pub cols: usize,
+    /// Exact global `‖M‖²_F` of the sharded matrix.
+    pub fro_sq: f64,
+    /// Generator seed the matrix came from.
+    pub seed: u64,
+    /// Generator scale.
+    pub scale: f64,
+    /// Dense (`true`) or CSR (`false`) storage.
+    pub dense: bool,
+    /// Dataset name (upper-case, e.g. `FACE`).
+    pub dataset: String,
+}
+
+/// On-disk format version; bump on any layout change (readers reject
+/// mismatches with a "regenerate your shards" diagnostic).
+pub const SHARD_FORMAT_VERSION: u32 = 1;
+
+const MANIFEST_MAGIC: &[u8; 8] = b"DSSHMAN1";
+const BLOCK_MAGIC: &[u8; 8] = b"DSSHBLK1";
+
+/// Path of the manifest inside a shard directory.
+pub fn manifest_path(dir: &Path) -> PathBuf {
+    dir.join("manifest.bin")
+}
+
+/// Path of one rank's block file along `axis`.
+pub fn block_path(dir: &Path, rank: usize, axis: Axis) -> PathBuf {
+    dir.join(format!("rank-{rank}.{}.blk", axis.name()))
+}
+
+fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("writing shard u64")
+}
+
+fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("writing shard u32")
+}
+
+fn write_f64<W: Write>(w: &mut W, v: f64) -> Result<()> {
+    w.write_all(&v.to_bits().to_le_bytes()).context("writing shard f64")
+}
+
+fn write_f32s<W: Write>(w: &mut W, vs: &[f32]) -> Result<()> {
+    for &v in vs {
+        w.write_all(&v.to_le_bytes()).context("writing shard f32 payload")?;
+    }
+    Ok(())
+}
+
+fn write_u64s<W: Write>(w: &mut W, vs: &[usize]) -> Result<()> {
+    for &v in vs {
+        write_u64(w, v as u64)?;
+    }
+    Ok(())
+}
+
+fn read_exact_ctx<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf)
+        .with_context(|| format!("truncated shard file (reading {what})"))
+}
+
+fn read_u64<R: Read>(r: &mut R, what: &str) -> Result<u64> {
+    let mut b = [0u8; 8];
+    read_exact_ctx(r, &mut b, what)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R, what: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    read_exact_ctx(r, &mut b, what)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_f64<R: Read>(r: &mut R, what: &str) -> Result<f64> {
+    Ok(f64::from_bits(read_u64(r, what)?))
+}
+
+/// Bulk payload reads: one `read_exact` per array (then an in-place
+/// byte→value pass), not one syscall-sized call per element — block files
+/// exist for RCV1-scale inputs where tens of millions of values are
+/// normal.
+fn read_f32s<R: Read>(r: &mut R, n: usize, what: &str) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    read_exact_ctx(r, &mut bytes, what)?;
+    let mut out = Vec::with_capacity(n);
+    for c in bytes.chunks_exact(4) {
+        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(out)
+}
+
+fn read_u64s<R: Read>(r: &mut R, n: usize, what: &str) -> Result<Vec<usize>> {
+    let mut bytes = vec![0u8; n * 8];
+    read_exact_ctx(r, &mut bytes, what)?;
+    let mut out = Vec::with_capacity(n);
+    for c in bytes.chunks_exact(8) {
+        out.push(u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as usize);
+    }
+    Ok(out)
+}
+
+fn check_magic<R: Read>(r: &mut R, expect: &[u8; 8], what: &str) -> Result<()> {
+    let mut got = [0u8; 8];
+    read_exact_ctx(r, &mut got, "magic")?;
+    if &got != expect {
+        crate::bail!("{what}: bad magic {got:02x?} — not a dsanls shard file");
+    }
+    let version = read_u32(r, "format version")?;
+    if version != SHARD_FORMAT_VERSION {
+        crate::bail!(
+            "{what}: shard format version {version}, this binary reads \
+             {SHARD_FORMAT_VERSION} — regenerate with `dsanls shard`"
+        );
+    }
+    Ok(())
+}
+
+/// Write a complete shard directory: `manifest.bin` plus one row-axis and
+/// one column-axis block file per rank, sliced from the materialised `m`.
+/// (Shard preparation is the one place the full matrix may exist; workers
+/// then touch only their blocks.) Returns the total bytes written.
+pub fn write_shard_dir(dir: &Path, m: &Matrix, manifest: &ShardManifest) -> Result<u64> {
+    assert_eq!((manifest.rows, manifest.cols), (m.rows(), m.cols()), "manifest/matrix shape");
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating shard directory {}", dir.display()))?;
+    let mut total = write_manifest(dir, manifest)?;
+    for rank in 0..manifest.nodes {
+        for axis in [Axis::Row, Axis::Col] {
+            let extent = match axis {
+                Axis::Row => m.rows(),
+                Axis::Col => m.cols(),
+            };
+            let spec = ShardSpec::uniform(axis, rank, manifest.nodes, extent);
+            let block = match axis {
+                Axis::Row => m.row_block(spec.range.clone()),
+                Axis::Col => m.col_block(spec.range.clone()),
+            };
+            total += write_block(dir, &spec, &block)?;
+        }
+    }
+    Ok(total)
+}
+
+fn write_manifest(dir: &Path, manifest: &ShardManifest) -> Result<u64> {
+    let path = manifest_path(dir);
+    let file = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(MANIFEST_MAGIC).context("writing manifest magic")?;
+    write_u32(&mut w, SHARD_FORMAT_VERSION)?;
+    write_u64(&mut w, manifest.nodes as u64)?;
+    write_u64(&mut w, manifest.rows as u64)?;
+    write_u64(&mut w, manifest.cols as u64)?;
+    write_f64(&mut w, manifest.fro_sq)?;
+    write_u64(&mut w, manifest.seed)?;
+    write_f64(&mut w, manifest.scale)?;
+    w.write_all(&[manifest.dense as u8]).context("writing manifest storage kind")?;
+    let name = manifest.dataset.as_bytes();
+    write_u32(&mut w, name.len() as u32)?;
+    w.write_all(name).context("writing manifest dataset name")?;
+    w.flush().context("flushing manifest")?;
+    Ok(std::fs::metadata(&path).map(|md| md.len()).unwrap_or(0))
+}
+
+/// Read and validate a shard directory's manifest.
+pub fn read_manifest(dir: &Path) -> Result<ShardManifest> {
+    let path = manifest_path(dir);
+    let file = std::fs::File::open(&path)
+        .with_context(|| format!("opening shard manifest {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    check_magic(&mut r, MANIFEST_MAGIC, "manifest")?;
+    let nodes = read_u64(&mut r, "nodes")? as usize;
+    let rows = read_u64(&mut r, "rows")? as usize;
+    let cols = read_u64(&mut r, "cols")? as usize;
+    let fro_sq = read_f64(&mut r, "fro_sq")?;
+    let seed = read_u64(&mut r, "seed")?;
+    let scale = read_f64(&mut r, "scale")?;
+    let mut dense = [0u8; 1];
+    read_exact_ctx(&mut r, &mut dense, "storage kind")?;
+    let name_len = read_u32(&mut r, "dataset name length")? as usize;
+    if name_len > 256 {
+        crate::bail!("manifest dataset name length {name_len} is implausible (corrupt file?)");
+    }
+    let mut name = vec![0u8; name_len];
+    read_exact_ctx(&mut r, &mut name, "dataset name")?;
+    let dataset = String::from_utf8(name).map_err(|_| crate::err!("manifest name not UTF-8"))?;
+    if nodes == 0 || rows == 0 || cols == 0 {
+        crate::bail!("manifest with zero nodes/rows/cols (corrupt file?)");
+    }
+    Ok(ShardManifest { nodes, rows, cols, fro_sq, seed, scale, dense: dense[0] != 0, dataset })
+}
+
+fn write_block(dir: &Path, spec: &ShardSpec, block: &Matrix) -> Result<u64> {
+    let path = block_path(dir, spec.rank, spec.axis);
+    let file = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(BLOCK_MAGIC).context("writing block magic")?;
+    write_u32(&mut w, SHARD_FORMAT_VERSION)?;
+    w.write_all(&[spec.axis.code()]).context("writing block axis")?;
+    write_u64(&mut w, spec.rank as u64)?;
+    write_u64(&mut w, spec.nodes as u64)?;
+    write_u64(&mut w, spec.range.start as u64)?;
+    write_u64(&mut w, spec.range.end as u64)?;
+    match block {
+        Matrix::Dense(d) => {
+            w.write_all(&[0u8]).context("writing block kind")?;
+            write_u64(&mut w, d.rows() as u64)?;
+            write_u64(&mut w, d.cols() as u64)?;
+            write_f32s(&mut w, d.data())?;
+        }
+        Matrix::Sparse(s) => {
+            w.write_all(&[1u8]).context("writing block kind")?;
+            write_u64(&mut w, s.rows() as u64)?;
+            write_u64(&mut w, s.cols() as u64)?;
+            write_u64(&mut w, s.nnz() as u64)?;
+            write_u64s(&mut w, s.indptr())?;
+            write_u64s(&mut w, s.indices())?;
+            write_f32s(&mut w, s.values())?;
+        }
+    }
+    w.flush().context("flushing block file")?;
+    Ok(std::fs::metadata(&path).map(|md| md.len()).unwrap_or(0))
+}
+
+/// Read one rank's block along `axis` from a shard directory, validating
+/// magic, format version, and that the file is the requested shard.
+pub fn read_block(dir: &Path, rank: usize, axis: Axis) -> Result<(ShardSpec, Matrix)> {
+    let path = block_path(dir, rank, axis);
+    let file = std::fs::File::open(&path)
+        .with_context(|| format!("opening shard block {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    check_magic(&mut r, BLOCK_MAGIC, "block")?;
+    let mut axis_b = [0u8; 1];
+    read_exact_ctx(&mut r, &mut axis_b, "axis")?;
+    let file_axis = Axis::from_code(axis_b[0])?;
+    let file_rank = read_u64(&mut r, "rank")? as usize;
+    let nodes = read_u64(&mut r, "nodes")? as usize;
+    let start = read_u64(&mut r, "range start")? as usize;
+    let end = read_u64(&mut r, "range end")? as usize;
+    if file_axis != axis || file_rank != rank {
+        crate::bail!(
+            "block file {} says rank {file_rank}/{:?}, expected rank {rank}/{axis:?}",
+            path.display(),
+            file_axis
+        );
+    }
+    if end < start {
+        crate::bail!("block range {start}..{end} is inverted (corrupt file?)");
+    }
+    let mut kind = [0u8; 1];
+    read_exact_ctx(&mut r, &mut kind, "storage kind")?;
+    let rows = read_u64(&mut r, "block rows")? as usize;
+    let cols = read_u64(&mut r, "block cols")? as usize;
+    // a corrupt length field must error, not attempt a huge allocation
+    let sane = |n: usize, what: &str| -> Result<usize> {
+        const MAX_ELEMS: usize = 1 << 31; // 8 GiB of f32s — beyond any shard we write
+        if n > MAX_ELEMS {
+            crate::bail!("block claims {n} {what} (corrupt length field?)");
+        }
+        Ok(n)
+    };
+    let matrix = match kind[0] {
+        0 => {
+            let n = sane(rows.saturating_mul(cols), "dense values")?;
+            let data = read_f32s(&mut r, n, "dense payload")?;
+            Matrix::Dense(Mat::from_vec(rows, cols, data))
+        }
+        1 => {
+            let nnz = sane(read_u64(&mut r, "nnz")? as usize, "nonzeros")?;
+            let indptr = read_u64s(&mut r, sane(rows, "rows")? + 1, "indptr")?;
+            let indices = read_u64s(&mut r, nnz, "indices")?;
+            let values = read_f32s(&mut r, nnz, "values")?;
+            Matrix::Sparse(Csr::from_raw_parts(rows, cols, indptr, indices, values)?)
+        }
+        other => crate::bail!("unknown block storage kind {other}"),
+    };
+    let spec = ShardSpec { rank, nodes, axis, range: start..end };
+    Ok((spec, matrix))
+}
+
+fn validate_block(
+    manifest: &ShardManifest,
+    spec: &ShardSpec,
+    block: &Matrix,
+    axis: Axis,
+) -> Result<()> {
+    if spec.nodes != manifest.nodes {
+        crate::bail!("block sharded for {} nodes, manifest says {}", spec.nodes, manifest.nodes);
+    }
+    let (expect_rows, expect_cols) = match axis {
+        Axis::Row => (spec.range.len(), manifest.cols),
+        Axis::Col => (manifest.rows, spec.range.len()),
+    };
+    if (block.rows(), block.cols()) != (expect_rows, expect_cols) {
+        crate::bail!(
+            "block shape {}x{} does not match its header ({expect_rows}x{expect_cols})",
+            block.rows(),
+            block.cols()
+        );
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::{run_cluster, CommModel};
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dsanls_shard_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn manifest_for(m: &Matrix, nodes: usize, dataset: &str) -> ShardManifest {
+        ShardManifest {
+            nodes,
+            rows: m.rows(),
+            cols: m.cols(),
+            fro_sq: m.fro_sq(),
+            seed: 7,
+            scale: 0.02,
+            dense: matches!(m, Matrix::Dense(_)),
+            dataset: dataset.into(),
+        }
+    }
+
+    #[test]
+    fn synth_shards_equal_full_slices_for_all_datasets() {
+        for d in crate::data::ALL_DATASETS {
+            let full = d.generate_scaled(7, 0.02);
+            for nodes in [1usize, 2, 3] {
+                for rank in 0..nodes {
+                    let rr = ShardSpec::uniform(Axis::Row, rank, nodes, full.rows()).range;
+                    let cr = ShardSpec::uniform(Axis::Col, rank, nodes, full.cols()).range;
+                    let shard =
+                        NodeData::generate(d, 7, 0.02, Some(rr.clone()), Some(cr.clone()));
+                    let oracle = NodeData::from_full(&full, rr, cr);
+                    assert!(
+                        matrix_bits_eq(oracle.require_rows(), shard.require_rows()),
+                        "{:?} rank {rank}/{nodes}: row block mismatch",
+                        d
+                    );
+                    assert!(
+                        matrix_bits_eq(oracle.require_cols(), shard.require_cols()),
+                        "{:?} rank {rank}/{nodes}: col block mismatch",
+                        d
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_fro_sq_is_bit_exact() {
+        for d in [crate::data::Dataset::Face, crate::data::Dataset::Mnist] {
+            let full = d.generate_scaled(9, 0.02);
+            let expect = full.fro_sq();
+            for nodes in [1usize, 2, 4] {
+                let got = run_cluster(nodes, CommModel::default(), |ctx| {
+                    let rr =
+                        ShardSpec::uniform(Axis::Row, ctx.rank, nodes, full.rows()).range;
+                    let block = full.row_block(rr);
+                    exact_fro_sq(ctx.comm_mut(), nodes, Some(&block)).unwrap()
+                });
+                for (rank, g) in got.iter().enumerate() {
+                    assert_eq!(
+                        g.to_bits(),
+                        expect.to_bits(),
+                        "{:?} nodes={nodes} rank={rank}: {g} vs {expect}",
+                        d
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_dir_roundtrip_dense_and_sparse() {
+        for d in [crate::data::Dataset::Face, crate::data::Dataset::Mnist] {
+            let full = d.generate_scaled(7, 0.02);
+            let dir = tmpdir(&format!("rt_{:?}", d));
+            let manifest = manifest_for(&full, 3, "X");
+            write_shard_dir(&dir, &full, &manifest).unwrap();
+            let back = read_manifest(&dir).unwrap();
+            assert_eq!(back, manifest);
+            for rank in 0..3 {
+                let (data, _) = NodeData::load(&dir, rank, true, true).unwrap();
+                let rr = ShardSpec::uniform(Axis::Row, rank, 3, full.rows()).range;
+                let cr = ShardSpec::uniform(Axis::Col, rank, 3, full.cols()).range;
+                let oracle = NodeData::from_full(&full, rr.clone(), cr.clone());
+                assert_eq!(data.row_range, rr);
+                assert_eq!(data.col_range, cr);
+                assert!(matrix_bits_eq(oracle.require_rows(), data.require_rows()));
+                assert!(matrix_bits_eq(oracle.require_cols(), data.require_cols()));
+                assert_eq!(data.fro_sq().to_bits(), full.fro_sq().to_bits());
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn truncated_and_corrupt_files_error_cleanly() {
+        let full = crate::data::Dataset::Face.generate_scaled(7, 0.02);
+        let dir = tmpdir("trunc");
+        write_shard_dir(&dir, &full, &manifest_for(&full, 2, "FACE")).unwrap();
+
+        // truncate the manifest at several prefixes: all must error, never panic
+        let bytes = std::fs::read(manifest_path(&dir)).unwrap();
+        for cut in [0usize, 4, 8, 11, 20, bytes.len() - 1] {
+            std::fs::write(manifest_path(&dir), &bytes[..cut]).unwrap();
+            assert!(read_manifest(&dir).is_err(), "manifest cut at {cut} did not error");
+        }
+        std::fs::write(manifest_path(&dir), &bytes).unwrap();
+
+        // truncated block header and payload
+        let bpath = block_path(&dir, 0, Axis::Row);
+        let bbytes = std::fs::read(&bpath).unwrap();
+        for cut in [0usize, 7, 12, 13, 40, bbytes.len() - 1] {
+            std::fs::write(&bpath, &bbytes[..cut]).unwrap();
+            assert!(read_block(&dir, 0, Axis::Row).is_err(), "block cut at {cut}");
+        }
+
+        // wrong format version
+        let mut vbytes = bbytes.clone();
+        vbytes[8] = vbytes[8].wrapping_add(1);
+        std::fs::write(&bpath, &vbytes).unwrap();
+        let err = read_block(&dir, 0, Axis::Row).unwrap_err();
+        assert!(err.to_string().contains("version"), "{err}");
+
+        // bad magic
+        let mut mbytes = bbytes.clone();
+        mbytes[0] ^= 0xFF;
+        std::fs::write(&bpath, &mbytes).unwrap();
+        assert!(read_block(&dir, 0, Axis::Row).is_err());
+
+        // missing rank file
+        std::fs::write(&bpath, &bbytes).unwrap();
+        assert!(read_block(&dir, 5, Axis::Row).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shard_spec_partitions_cover() {
+        for total in [10usize, 101] {
+            for nodes in [1usize, 3, 7] {
+                let mut covered = 0;
+                for rank in 0..nodes {
+                    let s = ShardSpec::uniform(Axis::Row, rank, nodes, total);
+                    assert_eq!(s.range.start, covered, "ranges must be rank-ordered");
+                    covered = s.range.end;
+                }
+                assert_eq!(covered, total);
+            }
+        }
+    }
+
+    #[test]
+    fn codes_roundtrip() {
+        for a in [Axis::Row, Axis::Col] {
+            assert_eq!(Axis::from_code(a.code()).unwrap(), a);
+        }
+        assert!(Axis::from_code(9).is_err());
+        for s in [LoadSource::FullMatrix, LoadSource::SynthShard, LoadSource::FileShard] {
+            assert_eq!(LoadSource::from_code(s.code()).unwrap(), s);
+        }
+        assert!(LoadSource::from_code(9).is_err());
+    }
+}

@@ -4,9 +4,90 @@
 //! behave as they do under NMF: approximate nonnegative low-rank for the
 //! dense image/video matrices, heavy-tailed sparse co-occurrence for the
 //! text/graph matrices.
+//!
+//! ## Windowed (shard-local) generation
+//!
+//! Every generator has a `*_window` variant that materialises only the
+//! entries inside a [`GenWindow`] (a row range × column range) while
+//! **replaying the exact random stream of the full-matrix generation**.
+//! This is the shard data plane's core trick: rank `r` of a cluster calls
+//! the windowed generator for its block and obtains buffers that are
+//! **bit-identical** to slicing the full matrix — without ever holding the
+//! full matrix (peak memory is the block, CPU replays the full draw
+//! stream, which is cheap relative to the factorization itself). The
+//! unwindowed entry points are thin wrappers over the full window, so
+//! there is exactly one generation code path to keep in sync.
+
+use std::ops::Range;
 
 use crate::linalg::{Csr, Mat, Matrix};
 use crate::rng::{Gaussian, Pcg64};
+
+/// A row-range × column-range window of a (virtual) full matrix, selecting
+/// which entries a windowed generator materialises.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GenWindow {
+    /// Global row indices to keep.
+    pub rows: Range<usize>,
+    /// Global column indices to keep.
+    pub cols: Range<usize>,
+}
+
+impl GenWindow {
+    /// The whole matrix (windowed generation degenerates to full).
+    pub fn full(rows: usize, cols: usize) -> GenWindow {
+        GenWindow { rows: 0..rows, cols: 0..cols }
+    }
+
+    /// Window height × width.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows.len(), self.cols.len())
+    }
+
+    fn contains(&self, i: usize, j: usize) -> bool {
+        self.rows.contains(&i) && self.cols.contains(&j)
+    }
+
+    fn validate(&self, rows: usize, cols: usize) {
+        assert!(self.rows.end <= rows, "window rows {:?} exceed {rows}", self.rows);
+        assert!(self.cols.end <= cols, "window cols {:?} exceed {cols}", self.cols);
+    }
+
+    /// Expected share of `total` uniformly-spread draws landing in the
+    /// window of a `rows × cols` matrix (triplet-vector capacity hint;
+    /// the full window returns `total` exactly).
+    fn expected_hits(&self, rows: usize, cols: usize, total: usize) -> usize {
+        let cells = (rows * cols).max(1);
+        let frac = (self.rows.len() * self.cols.len()) as f64 / cells as f64;
+        (total as f64 * frac).ceil() as usize
+    }
+}
+
+/// Draw a `total×k` Uniform[0, scale) matrix with the exact draw order of
+/// [`Mat::rand_uniform`], but store only the rows in `keep`.
+fn rand_uniform_row_window(
+    total: usize,
+    k: usize,
+    scale: f32,
+    keep: &Range<usize>,
+    rng: &mut Pcg64,
+) -> Mat {
+    let mut out = Mat::zeros(keep.len(), k);
+    let data = out.data_mut();
+    for i in 0..total {
+        if keep.contains(&i) {
+            let base = (i - keep.start) * k;
+            for x in data[base..base + k].iter_mut() {
+                *x = rng.next_f32() * scale;
+            }
+        } else {
+            for _ in 0..k {
+                rng.next_f32();
+            }
+        }
+    }
+    out
+}
 
 /// Dense nonnegative low-rank + noise:
 /// `M = U₀·V₀ᵀ + σ·|noise|`, entries clipped at 0.
@@ -21,13 +102,42 @@ pub fn low_rank_dense(
     noise: f32,
     rng: &mut Pcg64,
 ) -> Mat {
-    let u = Mat::rand_uniform(rows, true_rank, 1.0, rng);
-    let v = Mat::rand_uniform(cols, true_rank, 1.0, rng);
+    low_rank_dense_window(rows, cols, true_rank, noise, &GenWindow::full(rows, cols), rng)
+}
+
+/// Windowed [`low_rank_dense`]: the returned block equals
+/// `low_rank_dense(..).row_block(w.rows).col_block(w.cols)` bit-for-bit.
+///
+/// The planted factors are factor-sized (`|window|×k` and full `k`-wide
+/// strips), the product is computed directly at block shape, and the noise
+/// stream is replayed entry-by-entry in global row-major order — identical
+/// Box–Muller draws, only the in-window samples are added.
+pub fn low_rank_dense_window(
+    rows: usize,
+    cols: usize,
+    true_rank: usize,
+    noise: f32,
+    w: &GenWindow,
+    rng: &mut Pcg64,
+) -> Mat {
+    w.validate(rows, cols);
+    let u = rand_uniform_row_window(rows, true_rank, 1.0, &w.rows, rng);
+    let v = rand_uniform_row_window(cols, true_rank, 1.0, &w.cols, rng);
+    // Per-element GEMM accumulation runs over k in order regardless of the
+    // output position, so the block product is bitwise the full-product
+    // slice (asserted by data::shard tests).
     let mut m = u.matmul_nt(&v);
     if noise > 0.0 {
         let mut g = Gaussian::new(rng.clone());
-        for x in m.data_mut().iter_mut() {
-            *x += g.sample_f32(noise).abs();
+        let (_, wcols) = w.shape();
+        let data = m.data_mut();
+        for i in 0..rows {
+            for j in 0..cols {
+                let s = g.sample_f32(noise);
+                if w.contains(i, j) {
+                    data[(i - w.rows.start) * wcols + (j - w.cols.start)] += s.abs();
+                }
+            }
         }
         // keep caller's rng moving
         for _ in 0..rows * cols {
@@ -49,6 +159,24 @@ pub fn power_law_sparse(
     zipf: f64,
     rng: &mut Pcg64,
 ) -> Csr {
+    let w = GenWindow::full(rows, cols);
+    power_law_sparse_window(rows, cols, nnz_target, true_rank, zipf, &w, rng)
+}
+
+/// Windowed [`power_law_sparse`]: replays all `nnz_target` triplet draws
+/// and keeps (rebased) only those landing inside the window. Auxiliary
+/// state is one `f64` per column and one topic id per row — never the
+/// matrix itself.
+pub fn power_law_sparse_window(
+    rows: usize,
+    cols: usize,
+    nnz_target: usize,
+    true_rank: usize,
+    zipf: f64,
+    w: &GenWindow,
+    rng: &mut Pcg64,
+) -> Csr {
+    w.validate(rows, cols);
     // topic model: each row gets a topic, each topic a column distribution
     // biased by Zipf rank; draws cluster within topics.
     let mut weights: Vec<f64> = (0..cols).map(|c| 1.0 / ((c + 1) as f64).powf(zipf)).collect();
@@ -73,7 +201,7 @@ pub fn power_law_sparse(
 
     let k = true_rank.max(1);
     let row_topic: Vec<usize> = (0..rows).map(|_| rng.below(k)).collect();
-    let mut triplets = Vec::with_capacity(nnz_target);
+    let mut triplets = Vec::with_capacity(w.expected_hits(rows, cols, nnz_target));
     for _ in 0..nnz_target {
         let i = rng.below(rows);
         // topic shift: rotate the sampled column by a topic-dependent offset
@@ -81,15 +209,30 @@ pub fn power_law_sparse(
         let base = sample_col(rng);
         let j = (base + row_topic[i] * (cols / k.max(1))) % cols;
         let v = 1.0 + (rng.next_f32() * 4.0).floor(); // count-like 1..=4
-        triplets.push((i, j, v));
+        if w.contains(i, j) {
+            triplets.push((i - w.rows.start, j - w.cols.start, v));
+        }
     }
-    Csr::from_triplets(rows, cols, triplets)
+    let (wrows, wcols) = w.shape();
+    Csr::from_triplets(wrows, wcols, triplets)
 }
 
 /// Symmetric power-law graph adjacency (DBLP-like co-authorship):
 /// preferential-attachment-flavoured edge endpoints, symmetrised.
 pub fn power_law_graph(nodes: usize, edges: usize, rng: &mut Pcg64) -> Csr {
-    let mut triplets = Vec::with_capacity(edges * 2);
+    power_law_graph_window(nodes, edges, &GenWindow::full(nodes, nodes), rng)
+}
+
+/// Windowed [`power_law_graph`]: replays every edge draw; each of the two
+/// symmetric triplets is kept independently iff it lands in the window.
+pub fn power_law_graph_window(
+    nodes: usize,
+    edges: usize,
+    w: &GenWindow,
+    rng: &mut Pcg64,
+) -> Csr {
+    w.validate(nodes, nodes);
+    let mut triplets = Vec::with_capacity(w.expected_hits(nodes, nodes, edges * 2));
     for _ in 0..edges {
         // endpoint ∝ (rank+1)^-0.8 via rejection-free inverse power draw
         let a = power_index(nodes, 0.8, rng);
@@ -97,10 +240,15 @@ pub fn power_law_graph(nodes: usize, edges: usize, rng: &mut Pcg64) -> Csr {
         if a == b {
             continue;
         }
-        triplets.push((a, b, 1.0));
-        triplets.push((b, a, 1.0));
+        if w.contains(a, b) {
+            triplets.push((a - w.rows.start, b - w.cols.start, 1.0));
+        }
+        if w.contains(b, a) {
+            triplets.push((b - w.rows.start, a - w.cols.start, 1.0));
+        }
     }
-    Csr::from_triplets(nodes, nodes, triplets)
+    let (wrows, wcols) = w.shape();
+    Csr::from_triplets(wrows, wcols, triplets)
 }
 
 fn power_index(n: usize, alpha: f64, rng: &mut Pcg64) -> usize {
@@ -119,6 +267,21 @@ pub fn blocky_sparse(
     density: f64,
     rng: &mut Pcg64,
 ) -> Csr {
+    blocky_sparse_window(rows, cols, true_rank, density, &GenWindow::full(rows, cols), rng)
+}
+
+/// Windowed [`blocky_sparse`]: out-of-window rows still consume their
+/// (data-dependent) share of the random stream, they just don't emit
+/// triplets.
+pub fn blocky_sparse_window(
+    rows: usize,
+    cols: usize,
+    true_rank: usize,
+    density: f64,
+    w: &GenWindow,
+    rng: &mut Pcg64,
+) -> Csr {
+    w.validate(rows, cols);
     // templates: each covers a contiguous band of pixels
     let k = true_rank.max(1);
     let band = (cols as f64 * density * 2.0).ceil() as usize;
@@ -135,12 +298,15 @@ pub fn blocky_sparse(
                 if rng.next_f32() < 0.5 {
                     let col = (start + j) % cols;
                     let v = 0.2 + rng.next_f32();
-                    triplets.push((i, col, v));
+                    if w.contains(i, col) {
+                        triplets.push((i - w.rows.start, col - w.cols.start, v));
+                    }
                 }
             }
         }
     }
-    Csr::from_triplets(rows, cols, triplets)
+    let (wrows, wcols) = w.shape();
+    Csr::from_triplets(wrows, wcols, triplets)
 }
 
 /// Wrap a generator output in [`Matrix`], choosing dense/sparse storage by
@@ -211,5 +377,63 @@ mod tests {
         let m = blocky_sparse(200, 196, 8, 0.2, &mut rng);
         let d = m.density();
         assert!(d > 0.02 && d < 0.6, "density {d}");
+    }
+
+    #[test]
+    fn windowed_generation_equals_full_slice() {
+        // every generator, a strict interior window on both axes
+        let w = GenWindow { rows: 13..41, cols: 7..29 };
+
+        let full = {
+            let mut rng = Pcg64::new(900, 0);
+            low_rank_dense(60, 40, 4, 0.02, &mut rng)
+        };
+        let block = {
+            let mut rng = Pcg64::new(900, 0);
+            low_rank_dense_window(60, 40, 4, 0.02, &w, &mut rng)
+        };
+        assert_eq!(full.row_block(w.rows.clone()).col_block(w.cols.clone()), block);
+
+        let full = {
+            let mut rng = Pcg64::new(901, 0);
+            power_law_sparse(60, 40, 900, 4, 1.0, &mut rng)
+        };
+        let block = {
+            let mut rng = Pcg64::new(901, 0);
+            power_law_sparse_window(60, 40, 900, 4, 1.0, &w, &mut rng)
+        };
+        assert_eq!(full.row_block(w.rows.clone()).col_block(w.cols.clone()), block);
+
+        let full = {
+            let mut rng = Pcg64::new(902, 0);
+            power_law_graph(60, 400, &mut rng)
+        };
+        let block = {
+            let mut rng = Pcg64::new(902, 0);
+            power_law_graph_window(60, 400, &w, &mut rng)
+        };
+        assert_eq!(full.row_block(w.rows.clone()).col_block(w.cols.clone()), block);
+
+        let full = {
+            let mut rng = Pcg64::new(903, 0);
+            blocky_sparse(60, 40, 5, 0.2, &mut rng)
+        };
+        let block = {
+            let mut rng = Pcg64::new(903, 0);
+            blocky_sparse_window(60, 40, 5, 0.2, &w, &mut rng)
+        };
+        assert_eq!(full.row_block(w.rows.clone()).col_block(w.cols.clone()), block);
+    }
+
+    #[test]
+    fn window_advances_caller_rng_like_full() {
+        // after generation, the caller's rng must be in the same state no
+        // matter which window was drawn (shared-seed contract)
+        let w = GenWindow { rows: 0..10, cols: 0..40 };
+        let mut a = Pcg64::new(910, 0);
+        let mut b = Pcg64::new(910, 0);
+        let _ = low_rank_dense(60, 40, 4, 0.05, &mut a);
+        let _ = low_rank_dense_window(60, 40, 4, 0.05, &w, &mut b);
+        assert_eq!(a.next_u64(), b.next_u64());
     }
 }

@@ -28,9 +28,12 @@ impl std::fmt::Debug for Csr {
 }
 
 impl Csr {
-    /// Build from COO triplets (row, col, value). Duplicates are summed.
+    /// Build from COO triplets (row, col, value). Duplicates are summed in
+    /// insertion order (stable sort), so building from any filtered subset
+    /// of a triplet stream merges cells exactly like the full build — the
+    /// property the windowed shard generators rely on for bit-identity.
     pub fn from_triplets(rows: usize, cols: usize, mut t: Vec<(usize, usize, f32)>) -> Self {
-        t.sort_unstable_by_key(|&(r, c, _)| (r, c));
+        t.sort_by_key(|&(r, c, _)| (r, c));
         let mut indptr = vec![0usize; rows + 1];
         let mut indices = Vec::with_capacity(t.len());
         let mut values: Vec<f32> = Vec::with_capacity(t.len());
@@ -50,6 +53,36 @@ impl Csr {
             indptr[r] += indptr[r - 1]; // counts → cumulative offsets
         }
         Csr { rows, cols, indptr, indices, values }
+    }
+
+    /// Rebuild from raw CSR parts (shard-file deserialisation). Validates
+    /// the structural invariants so a corrupt block file surfaces as an
+    /// error instead of undefined downstream behaviour.
+    pub fn from_raw_parts(
+        rows: usize,
+        cols: usize,
+        indptr: Vec<usize>,
+        indices: Vec<usize>,
+        values: Vec<f32>,
+    ) -> crate::error::Result<Self> {
+        if indptr.len() != rows + 1 || indptr.first() != Some(&0) {
+            crate::bail!("csr indptr length {} for {rows} rows", indptr.len());
+        }
+        if indptr.windows(2).any(|w| w[1] < w[0]) {
+            crate::bail!("csr indptr is not monotone");
+        }
+        if *indptr.last().unwrap() != values.len() || indices.len() != values.len() {
+            crate::bail!(
+                "csr nnz mismatch: indptr says {}, {} indices, {} values",
+                indptr.last().unwrap(),
+                indices.len(),
+                values.len()
+            );
+        }
+        if indices.iter().any(|&j| j >= cols) {
+            crate::bail!("csr column index out of bounds (cols = {cols})");
+        }
+        Ok(Csr { rows, cols, indptr, indices, values })
     }
 
     /// Densify → CSR, dropping entries with |v| ≤ `tol`.

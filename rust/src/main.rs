@@ -3,14 +3,19 @@
 //! Subcommands:
 //! * `run [--config FILE] [--key=value ...]` — run one experiment and
 //!   write the trace to `<output.dir>/<name>.csv`.
-//! * `launch --nodes N [--config FILE] [--verify-sim] ...` — run the same
-//!   experiment over **real TCP worker processes** on localhost (the
-//!   asynchronous protocols get an extra parameter-server process);
-//!   `--verify-sim` asserts the factors are bit-identical to the
-//!   simulated backend.
-//! * `worker --rendezvous HOST:PORT --rank R ...` — one rank of a
-//!   `launch` cluster (spawned automatically by `launch`; localhost-only
-//!   today — the mesh roster carries ports, not hosts).
+//! * `launch --nodes N [--config FILE] [--verify-sim] [--bind HOST]
+//!   [--hosts FILE] [--shards DIR] ...` — run the same experiment over
+//!   **real TCP worker processes** (spawned locally, or started by the
+//!   operator across hosts with `--hosts`); the asynchronous protocols
+//!   get an extra parameter-server process. `--verify-sim` asserts the
+//!   factors are bit-identical to the simulated backend.
+//! * `worker --rendezvous HOST:PORT --rank R [--bind IP[:PORT]]
+//!   [--shards DIR] ...` — one rank of a `launch` cluster. Builds only
+//!   its own row/column blocks of the dataset (shard-local synthesis, or
+//!   pre-sliced files via `--shards`) — never the full matrix.
+//! * `shard --out DIR [--nodes N] ...` — pre-slice the configured dataset
+//!   into per-rank block files + manifest for multi-host deployment
+//!   (see DEPLOYMENT.md).
 //! * `compare [--config FILE] [--key=value ...]` — run DSANLS against all
 //!   three MPI-FAUN baselines on the configured dataset (a Fig. 2 panel).
 //! * `secure [--config FILE] ...` — run all six secure protocols on the
@@ -36,6 +41,7 @@ fn main() {
         Some("run") => cmd_run(&args[1..]),
         Some("launch") => cmd_result(coordinator::launch::launch_main(&args[1..])),
         Some("worker") => cmd_result(coordinator::launch::worker_main(&args[1..])),
+        Some("shard") => cmd_result(coordinator::shard_cli::shard_main(&args[1..])),
         Some("compare") => cmd_compare(&args[1..]),
         Some("secure") => cmd_secure(&args[1..]),
         Some("attack") => cmd_attack(),
@@ -57,12 +63,17 @@ fn main() {
 fn usage() {
     println!(
         "dsanls {} — Fast and Secure Distributed NMF (TKDE 2020 reproduction)\n\n\
-         USAGE: dsanls <run|launch|worker|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
-         launch:  dsanls launch --nodes N [--port P] [--verify-sim] [--config FILE] [--key=value ...]\n\
-                  runs the experiment over real TCP worker processes (localhost);\n\
+         USAGE: dsanls <run|launch|worker|shard|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
+         launch:  dsanls launch --nodes N [--port P] [--bind HOST] [--hosts FILE] [--shards DIR]\n\
+                  [--verify-sim] [--config FILE] [--key=value ...]\n\
+                  runs the experiment over real TCP worker processes (spawned locally, or\n\
+                  started per host by the operator with --hosts — see DEPLOYMENT.md);\n\
                   --verify-sim re-runs the simulator and asserts bit-identical factors\n\
-         worker:  dsanls worker --rendezvous HOST:PORT --rank R [--config FILE] [--key=value ...]\n\
-                  one launch rank (spawned by launch; localhost-only deployment today)\n\n\
+         worker:  dsanls worker --rendezvous HOST:PORT --rank R [--bind IP[:PORT]]\n\
+                  [--advertise HOST[:PORT]] [--shards DIR] [--config FILE] [--key=value ...]\n\
+                  one launch rank; holds only its row/column blocks of the input\n\
+         shard:   dsanls shard --out DIR [--nodes N] [--config FILE] [--key=value ...]\n\
+                  pre-slice the dataset into per-rank block files for multi-host runs\n\n\
          Config keys (TOML sections flattened as --section.key=value):\n\
            experiment: name algorithm dataset scale nodes rank iterations seed eval_every backend\n\
            sketch:     kind d_u d_v\n\

@@ -11,10 +11,19 @@ use crate::rng::Pcg64;
 
 /// The scale `s` used for Uniform[0, s) init.
 pub fn init_scale(m: &Matrix, k: usize) -> f32 {
-    let total: f64 = m.fro_sq();
+    init_scale_from(m.fro_sq(), m.rows(), m.cols(), k)
+}
+
+/// [`init_scale`] from global metadata only — what a sharded rank uses: it
+/// holds a block of `M`, not `M`, but knows the exact global `‖M‖²_F`
+/// (shard-file header or the ordered chain reduction in
+/// [`crate::data::shard::exact_fro_sq`]). Feeding the exact norm keeps the
+/// scale — and therefore every factor bit — identical to the full-matrix
+/// path.
+pub fn init_scale_from(fro_sq: f64, rows: usize, cols: usize, k: usize) -> f32 {
     // mean |entry| estimate via RMS (exact mean would need a full pass for
     // dense and is ~RMS for the nonnegative data we target)
-    let rms = (total / (m.rows() as f64 * m.cols() as f64)).sqrt();
+    let rms = (fro_sq / (rows as f64 * cols as f64)).sqrt();
     // for sparse matrices the "typical" entry is the RMS over all cells
     // (zeros included) — that is what UVᵀ must reproduce on average
     2.0 * ((rms.max(1e-12) / k as f64).sqrt() as f32)
@@ -24,9 +33,21 @@ pub fn init_scale(m: &Matrix, k: usize) -> f32 {
 /// calling this with the same rng state gets identical factors — required
 /// by the distributed algorithms so that replicated state starts in sync.
 pub fn init_factors(m: &Matrix, k: usize, rng: &mut Pcg64) -> (Mat, Mat) {
-    let s = init_scale(m, k);
-    let u = Mat::rand_uniform(m.rows(), k, s, rng);
-    let v = Mat::rand_uniform(m.cols(), k, s, rng);
+    init_factors_from(m.fro_sq(), m.rows(), m.cols(), k, rng)
+}
+
+/// [`init_factors`] from global metadata (shape + exact `‖M‖²_F`) — the
+/// sharded-rank entry point. Identical draws, identical factors.
+pub fn init_factors_from(
+    fro_sq: f64,
+    rows: usize,
+    cols: usize,
+    k: usize,
+    rng: &mut Pcg64,
+) -> (Mat, Mat) {
+    let s = init_scale_from(fro_sq, rows, cols, k);
+    let u = Mat::rand_uniform(rows, k, s, rng);
+    let v = Mat::rand_uniform(cols, k, s, rng);
     (u, v)
 }
 

@@ -8,7 +8,7 @@ mod init;
 mod loss;
 
 pub use anls::{Anls, AnlsOptions, Sanls, SanlsOptions};
-pub use init::{init_factors, init_scale};
+pub use init::{init_factors, init_factors_from, init_scale, init_scale_from};
 pub use loss::{rel_error, rel_error_parts};
 
 use crate::linalg::Mat;

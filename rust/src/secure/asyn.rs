@@ -207,12 +207,13 @@ pub fn server_loop<C: Communicator>(mut comm: C, opts: &AsynOptions, u_init: Mat
     u
 }
 
-/// One asynchronous client (Alg. 7) on rank `party` of any transport.
-/// `u0`/`v0` are the shared-seed initial factors (the caller derives them
-/// so server and clients agree at t=0).
+/// One asynchronous client (Alg. 7) on rank `party` of any transport,
+/// when the client can see the full matrix (simulator / tests — it slices
+/// its own column block). `u0`/`v0` are the shared-seed initial factors
+/// (the caller derives them so server and clients agree at t=0).
 #[allow(clippy::too_many_arguments)]
 pub fn client_loop<C: Communicator>(
-    mut comm: C,
+    comm: C,
     party: usize,
     m: &Matrix,
     cols: &Partition,
@@ -222,13 +223,30 @@ pub fn client_loop<C: Communicator>(
     v0: Mat,
     audit: Option<&AuditLog>,
 ) -> AsynClientOutput {
+    let m_col = m.col_block(cols.range(party));
+    client_node(comm, party, &m_col, m.rows(), opts, variant, u0, v0, audit)
+}
+
+/// [`client_loop`] over the client's resident column block only (the
+/// sharded `dsanls worker` entry point): the protocol touches `M_{:J_r}`
+/// and the global row count, nothing else of `M`.
+#[allow(clippy::too_many_arguments)]
+pub fn client_node<C: Communicator>(
+    mut comm: C,
+    party: usize,
+    m_col: &Matrix,
+    m_rows: usize,
+    opts: &AsynOptions,
+    variant: SecureAlgo,
+    u0: Mat,
+    v0: Mat,
+    audit: Option<&AuditLog>,
+) -> AsynClientOutput {
     let server = server_rank(comm.nodes() - 1);
     let sketch_v = variant == SecureAlgo::AsynSsdV;
     let k = opts.rank;
-    let m_rows = m.rows();
+    assert_eq!(m_col.rows(), m_rows, "column block must span all rows");
     let stream = StreamRng::new(opts.seed);
-    let my_cols = cols.range(party);
-    let m_col = m.col_block(my_cols.clone());
     let m_col_t = m_col.transpose();
     let mut u_local = u0;
     let mut v_block = v0;
@@ -244,7 +262,7 @@ pub fn client_loop<C: Communicator>(
     let mut iters_done = 0usize;
 
     // initial local residual
-    let (_, r0) = rel_error_parts(&m_col, &u_local, &v_block);
+    let (_, r0) = rel_error_parts(m_col, &u_local, &v_block);
     samples.push((0.0, r0, 0));
 
     for round in 0..opts.rounds {
@@ -254,7 +272,7 @@ pub fn client_loop<C: Communicator>(
             // U_(r) update (never sketched in async)
             {
                 let gram = v_block.gram();
-                let cross = match &m_col {
+                let cross = match m_col {
                     Matrix::Dense(md) => md.matmul(&v_block),
                     Matrix::Sparse(ms) => ms.spmm(&v_block),
                 };
@@ -320,7 +338,7 @@ pub fn client_loop<C: Communicator>(
         stats.messages += 2;
 
         // out-of-band residual sample (not timed)
-        let (_, resid) = rel_error_parts(&m_col, &u_local, &v_block);
+        let (_, resid) = rel_error_parts(m_col, &u_local, &v_block);
         samples.push((clock, resid, iters_done));
     }
     let _ = comm.send(server, TAG_SHUTDOWN, clock, &[]);

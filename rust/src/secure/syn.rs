@@ -24,9 +24,10 @@ use std::time::Instant;
 use super::{privacy::AuditLog, SecureAlgo, SecureRun};
 use crate::algos::TracePoint;
 use crate::data::partition::Partition;
+use crate::data::shard::NodeData;
 use crate::dist::{run_cluster, CommModel, CommStats, NodeCtx};
 use crate::linalg::{Mat, Matrix};
-use crate::nmf::{init_factors, rel_error_parts, MuSchedule};
+use crate::nmf::{init_factors_from, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
 use crate::solvers::{self, Normal, SolverKind};
@@ -145,8 +146,9 @@ pub fn assemble_syn(outputs: Vec<SynNodeOutput>, k: usize, total_iters: usize) -
     SecureRun { u, v, trace, stats, sec_per_iter: max_clock / total_iters.max(1) as f64 }
 }
 
-/// One synchronous secure party over any transport backend (TCP worker
-/// entry point). `opts.nodes` must match both the partition and the
+/// One synchronous secure party over any transport backend, when the
+/// party can see the full matrix (simulator / tests — it slices its own
+/// column block). `opts.nodes` must match both the partition and the
 /// communicator's cluster size.
 pub fn syn_node<C: Communicator>(
     ctx: &mut NodeCtx<C>,
@@ -156,25 +158,70 @@ pub fn syn_node<C: Communicator>(
     algo: SecureAlgo,
     audit: Option<&AuditLog>,
 ) -> SynNodeOutput {
+    let m_col = m.col_block(cols.range(ctx.rank)); // M_{:J_r}, m×|J_r|
+    syn_node_on_block(ctx, &m_col, m.rows(), m.cols(), m.fro_sq(), cols, opts, algo, audit)
+}
+
+/// One synchronous secure party over a pre-sharded [`NodeData`] view (the
+/// `dsanls worker` entry point): the party holds only `M_{:J_r}` plus the
+/// global shape and exact `‖M‖²` — which is all the protocol touches, so
+/// the run is bit-identical to the full-matrix path.
+pub fn syn_node_sharded<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    data: &NodeData,
+    cols: &Partition,
+    opts: &SynOptions,
+    algo: SecureAlgo,
+    audit: Option<&AuditLog>,
+) -> SynNodeOutput {
+    assert_eq!(
+        data.col_range,
+        cols.range(ctx.rank),
+        "shard col range != this party's partition"
+    );
+    syn_node_on_block(
+        ctx,
+        data.require_cols(),
+        data.rows,
+        data.cols,
+        data.fro_sq(),
+        cols,
+        opts,
+        algo,
+        audit,
+    )
+}
+
+/// Protocol body over the party's resident column block.
+#[allow(clippy::too_many_arguments)]
+fn syn_node_on_block<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    m_col: &Matrix,
+    m_rows: usize,
+    m_cols: usize,
+    m_fro_sq: f64,
+    cols: &Partition,
+    opts: &SynOptions,
+    algo: SecureAlgo,
+    audit: Option<&AuditLog>,
+) -> SynNodeOutput {
     assert_eq!(cols.nodes(), opts.nodes, "partition/node mismatch");
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
-    let m_rows = m.rows();
     let k = opts.rank;
-    let m_fro_sq = m.fro_sq();
     {
         let rank = ctx.rank;
         let my_cols = cols.range(rank);
         let stream = StreamRng::new(opts.seed);
 
         // party-private data
-        let m_col = m.col_block(my_cols.clone()); // M_{:J_r}, m×|J_r|
+        assert_eq!((m_col.rows(), m_col.cols()), (m_rows, my_cols.len()), "column block shape");
         let m_col_t = m_col.transpose(); // |J_r|×m
         let jr = my_cols.len();
 
         // shared-seed init: identical U_(r) on every party at t=0; private V
         let (u_init, v_full) = {
             let mut rng = stream.for_iteration(0, Role::Init);
-            init_factors(m, k, &mut rng)
+            init_factors_from(m_fro_sq, m_rows, m_cols, k, &mut rng)
         };
         let mut u_local = u_init;
         let mut v_block = v_full.row_block(my_cols.clone());
@@ -189,7 +236,7 @@ pub fn syn_node<C: Communicator>(
         let ssd = algo != SecureAlgo::SynSd;
 
         let mut trace = Vec::new();
-        record_secure_error(ctx, &m_col, &u_local, &v_block, m_fro_sq, 0, &mut trace);
+        record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, 0, &mut trace);
 
         let mut iter = 0usize;
         for _t1 in 0..opts.t1 {
@@ -203,13 +250,13 @@ pub fn syn_node<C: Communicator>(
                             .for_node(rank, 0xA11C + iter as u64)
                             .clone();
                         let s = SketchMatrix::generate(opts.sketch, jr, d2, &mut rng);
-                        let a = s.mul_right(&m_col); // m×d₂
+                        let a = s.mul_right(m_col); // m×d₂
                         let b = s.mul_rows_tn(&v_block, 0); // k×d₂
                         let (gram, cross) = solvers::normal_from(&a, &b);
                         solvers::update_auto(opts.solver, &mut u_local, &Normal::new(&gram, &cross), &opts.mu, iter);
                     } else {
                         let gram = v_block.gram();
-                        let cross = match &m_col {
+                        let cross = match m_col {
                             Matrix::Dense(md) => md.matmul(&v_block),
                             Matrix::Sparse(ms) => ms.spmm(&v_block),
                         };
@@ -261,7 +308,7 @@ pub fn syn_node<C: Communicator>(
                 }
 
                 if opts.eval_every > 0 && iter % opts.eval_every == 0 {
-                    record_secure_error(ctx, &m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
+                    record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
                 }
             }
 
@@ -277,11 +324,11 @@ pub fn syn_node<C: Communicator>(
                     *dst = src * inv_n;
                 }
                 if opts.eval_every > 0 {
-                    record_secure_error(ctx, &m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
+                    record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
                 }
             }
         }
-        record_secure_error(ctx, &m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
+        record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
 
         SynNodeOutput {
             u_local,

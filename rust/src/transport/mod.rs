@@ -34,6 +34,8 @@
 //! rank that lost a collective peer cannot make progress, so it panics
 //! with the transport error and the process/driver reports the failure.
 
+#![warn(missing_docs)]
+
 pub mod sim;
 pub mod tcp;
 pub mod wire;
@@ -60,6 +62,7 @@ pub struct P2pMsg {
     pub tag: u64,
     /// Sender's virtual clock when the message left.
     pub sent_at: f64,
+    /// Message body (the crate's single wire payload type).
     pub payload: Vec<f32>,
 }
 
@@ -67,7 +70,9 @@ pub struct P2pMsg {
 /// plus the maximum virtual clock observed across the barrier.
 #[derive(Debug)]
 pub struct Gathered {
+    /// One payload per rank, in rank order.
     pub parts: Vec<Vec<f32>>,
+    /// Maximum sender virtual clock observed across the barrier.
     pub max_clock: f64,
 }
 

@@ -46,6 +46,7 @@ pub struct SimComm {
 }
 
 impl SimComm {
+    /// Endpoint for `rank` of `cluster`.
     pub fn new(rank: usize, cluster: Arc<SimCluster>) -> SimComm {
         assert!(rank < cluster.nodes(), "rank {rank} outside cluster");
         SimComm { rank, cluster, seq: 0 }

@@ -2,16 +2,21 @@
 //!
 //! ## Bootstrap (rendezvous)
 //!
-//! The coordinator binds a [`Rendezvous`] listener and spawns one worker
-//! process per rank. Each worker:
+//! The coordinator binds a [`Rendezvous`] listener (loopback by default,
+//! any interface via [`Rendezvous::bind_on`]) and spawns — or, multi-host,
+//! waits for — one worker process per rank. Each worker:
 //!
-//! 1. binds its own mesh listener on an ephemeral port,
+//! 1. binds its own mesh listener ([`TcpOptions::bind`]; loopback +
+//!    ephemeral port by default),
 //! 2. dials the coordinator, sends the preamble (magic/version/rank) and a
-//!    `Hello` frame carrying its mesh port,
-//! 3. receives the `Roster` frame (every rank's mesh port),
-//! 4. forms the full peer mesh: rank `r` dials every rank `s > r` (the
-//!    dialed side learns the dialer's rank from the connection preamble)
-//!    and accepts connections from every rank `s < r`.
+//!    `Hello` frame carrying its advertised mesh `host:port`
+//!    ([`TcpOptions::advertise`] overrides, e.g. behind NAT),
+//! 3. receives the `Roster` frame — the **address book**: every rank's
+//!    mesh address in rank order,
+//! 4. forms the full peer mesh: rank `r` dials every rank `s > r` at its
+//!    book address (the dialed side learns the dialer's rank from the
+//!    connection preamble) and accepts connections from every rank
+//!    `s < r`.
 //!
 //! The worker keeps the rendezvous connection open to stream results back
 //! to the coordinator when the run finishes.
@@ -38,12 +43,12 @@ use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::wire::{self, Frame, FrameKind};
+use super::wire::{self, decode_text, encode_text, Frame, FrameKind};
 use super::{Communicator, Gathered, Inbox, P2pMsg, Timing};
 use crate::error::{Context, Result};
 
-/// Timeouts for the TCP backend.
-#[derive(Debug, Clone, Copy)]
+/// Timeouts and addressing for the TCP backend.
+#[derive(Debug, Clone)]
 pub struct TcpOptions {
     /// Deadline for the whole bootstrap (rendezvous dial + mesh formation).
     pub connect_timeout: Duration,
@@ -51,6 +56,15 @@ pub struct TcpOptions {
     /// (`None` = wait forever). [`Communicator::recv_any`] never times out:
     /// an idle parameter server legitimately waits on its clients.
     pub io_timeout: Option<Duration>,
+    /// Mesh-listener bind address, `IP` or `IP:PORT` (default
+    /// `127.0.0.1:0`). For multi-host clusters, bind an interface the
+    /// peers can reach (the worker CLI's `--bind`).
+    pub bind: Option<String>,
+    /// Address advertised to peers in the roster, `HOST` or `HOST:PORT`
+    /// (default: the bind IP plus the actual listener port). Required when
+    /// binding a wildcard address (`0.0.0.0` / `::`), or when peers reach
+    /// this host through NAT/port-forwarding.
+    pub advertise: Option<String>,
 }
 
 impl Default for TcpOptions {
@@ -58,8 +72,63 @@ impl Default for TcpOptions {
         TcpOptions {
             connect_timeout: Duration::from_secs(30),
             io_timeout: Some(Duration::from_secs(120)),
+            bind: None,
+            advertise: None,
         }
     }
+}
+
+/// Split `IP[:PORT]` into `(ip, port)`, defaulting the port to 0
+/// (ephemeral). Unbracketed IPv6 literals are treated as a bare host
+/// (bracket them — `[::1]:4000` — to pin a port). A malformed port is an
+/// error, not a silent fallback: an operator pinning a firewall-opened
+/// port must not end up on an ephemeral one.
+fn split_bind(spec: &str) -> Result<(String, u16)> {
+    let parse_port = |p: &str| {
+        p.parse::<u16>()
+            .map_err(|e| crate::err!("invalid port {p:?} in bind/advertise spec {spec:?}: {e}"))
+    };
+    if let Some(rest) = spec.strip_prefix('[') {
+        // [v6]:port or [v6]
+        if let Some((ip, port)) = rest.split_once("]:") {
+            return Ok((ip.to_string(), parse_port(port)?));
+        }
+        return Ok((rest.trim_end_matches(']').to_string(), 0));
+    }
+    if spec.matches(':').count() > 1 {
+        // unbracketed IPv6 literal: all of it is the host
+        return Ok((spec.to_string(), 0));
+    }
+    match spec.rsplit_once(':') {
+        Some((ip, port)) if !ip.is_empty() => Ok((ip.to_string(), parse_port(port)?)),
+        _ => Ok((spec.to_string(), 0)),
+    }
+}
+
+/// Render a `(host, port)` pair as a dialable address (bracketing IPv6
+/// literals).
+fn join_addr(host: &str, port: u16) -> String {
+    if host.contains(':') && !host.starts_with('[') {
+        format!("[{host}]:{port}")
+    } else {
+        format!("{host}:{port}")
+    }
+}
+
+/// Resolve the address this rank advertises in the address book.
+fn advertised_addr(opts: &TcpOptions, bind_ip: &str, port: u16) -> Result<String> {
+    if let Some(a) = &opts.advertise {
+        let (host, advert_port) = split_bind(a)?;
+        let advert_port = if advert_port == 0 { port } else { advert_port };
+        return Ok(join_addr(&host, advert_port));
+    }
+    if bind_ip == "0.0.0.0" || bind_ip == "::" {
+        crate::bail!(
+            "binding the wildcard address {bind_ip} requires an explicit \
+             --advertise HOST[:PORT] so peers know where to dial"
+        );
+    }
+    Ok(join_addr(bind_ip, port))
 }
 
 /// One rank's endpoint on a real TCP cluster.
@@ -126,10 +195,14 @@ impl TcpComm {
         }
         let deadline = Instant::now() + opts.connect_timeout;
 
-        // mesh listener first, so the advertised port is live before the
-        // roster ever mentions it
-        let listener = TcpListener::bind(("127.0.0.1", 0)).context("binding mesh listener")?;
+        // mesh listener first, so the advertised address is live before the
+        // address book ever mentions it
+        let (bind_ip, bind_port) =
+            split_bind(opts.bind.as_deref().unwrap_or("127.0.0.1:0"))?;
+        let listener = TcpListener::bind((bind_ip.as_str(), bind_port))
+            .with_context(|| format!("binding mesh listener on {bind_ip}:{bind_port}"))?;
         let port = listener.local_addr().context("mesh listener addr")?.port();
+        let advert = advertised_addr(opts, &bind_ip, port)?;
 
         let mut rdv = dial_retry(rendezvous_addr, deadline)
             .with_context(|| format!("rank {rank} reaching coordinator"))?;
@@ -140,24 +213,25 @@ impl TcpComm {
         wire::write_preamble(&mut rdv, rank as u16)?;
         wire::write_frame(
             &mut rdv,
-            &Frame::new(FrameKind::Hello, rank as u64, 0.0, vec![f32::from(port)]),
+            &Frame::new(FrameKind::Hello, rank as u64, 0.0, encode_text(&advert)),
         )
         .context("sending hello")?;
 
-        let roster = wire::read_frame(&mut rdv).context("waiting for roster")?;
+        let roster = wire::read_frame(&mut rdv).context("waiting for address book")?;
         if roster.kind != FrameKind::Roster {
-            crate::bail!("expected roster, got {:?}", roster.kind);
+            crate::bail!("expected the address-book roster, got {:?}", roster.kind);
         }
-        if roster.payload.len() != nodes {
-            crate::bail!("roster lists {} ranks, expected {nodes}", roster.payload.len());
+        let book: Vec<String> =
+            decode_text(&roster.payload).split(',').map(str::to_string).collect();
+        if book.len() != nodes {
+            crate::bail!("address book lists {} ranks, expected {nodes}", book.len());
         }
-        let ports: Vec<u16> = roster.payload.iter().map(|&p| p as u16).collect();
 
         // mesh: dial every higher rank, accept from every lower rank
         let mut sockets: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
-        for (peer, &peer_port) in ports.iter().enumerate().skip(rank + 1) {
-            let mut s = dial_retry(&format!("127.0.0.1:{peer_port}"), deadline)
-                .with_context(|| format!("rank {rank} dialing peer {peer}"))?;
+        for (peer, peer_addr) in book.iter().enumerate().skip(rank + 1) {
+            let mut s = dial_retry(peer_addr, deadline)
+                .with_context(|| format!("rank {rank} dialing peer {peer} at {peer_addr}"))?;
             s.set_nodelay(true).ok();
             wire::write_preamble(&mut s, rank as u16)?;
             sockets[peer] = Some(s);
@@ -318,42 +392,57 @@ impl Drop for TcpComm {
 // ---------------------------------------------------------------------------
 
 /// Coordinator's rendezvous point: accepts worker handshakes, assigns the
-/// roster, and hands back one result channel per rank.
+/// address-book roster, and hands back one result channel per rank.
 pub struct Rendezvous {
     listener: TcpListener,
+    host: String,
     port: u16,
 }
 
 /// An accepted, handshaken worker connection.
 pub struct WorkerConn {
+    /// The worker's announced rank.
     pub rank: usize,
+    /// The rendezvous connection (used for result streaming).
     pub stream: TcpStream,
+    /// The mesh address the worker advertised.
+    pub mesh_addr: String,
 }
 
 impl Rendezvous {
-    /// Listen on `127.0.0.1:port` (`0` = ephemeral).
+    /// Listen on `127.0.0.1:port` (`0` = ephemeral) — single-host runs.
     pub fn bind(port: u16) -> Result<Rendezvous> {
-        let listener =
-            TcpListener::bind(("127.0.0.1", port)).with_context(|| format!("binding rendezvous port {port}"))?;
-        let port = listener.local_addr().context("rendezvous addr")?.port();
-        Ok(Rendezvous { listener, port })
+        Rendezvous::bind_on("127.0.0.1", port)
     }
 
+    /// Listen on `host:port` (`0` = ephemeral). Bind a reachable interface
+    /// (or `0.0.0.0`) for multi-host clusters; workers dial this address
+    /// via `--rendezvous`.
+    pub fn bind_on(host: &str, port: u16) -> Result<Rendezvous> {
+        let listener = TcpListener::bind((host, port))
+            .with_context(|| format!("binding rendezvous {host}:{port}"))?;
+        let port = listener.local_addr().context("rendezvous addr")?.port();
+        Ok(Rendezvous { listener, host: host.to_string(), port })
+    }
+
+    /// The bound rendezvous port.
     pub fn port(&self) -> u16 {
         self.port
     }
 
+    /// The bound `host:port` (note: when bound to `0.0.0.0`, workers must
+    /// dial a concrete reachable host, not this string).
     pub fn addr(&self) -> String {
-        format!("127.0.0.1:{}", self.port)
+        format!("{}:{}", self.host, self.port)
     }
 
-    /// Accept `nodes` workers (validating magic/version and rank
-    /// uniqueness), broadcast the roster, and return the connections in
-    /// rank order.
+    /// Accept `nodes` workers (validating magic/version, rank uniqueness
+    /// and the announced mesh address), broadcast the address-book roster,
+    /// and return the connections in rank order.
     pub fn wait_workers(&self, nodes: usize, timeout: Duration) -> Result<Vec<WorkerConn>> {
         self.listener.set_nonblocking(true).context("rendezvous nonblocking")?;
         let deadline = Instant::now() + timeout;
-        let mut slots: Vec<Option<(TcpStream, u16)>> = (0..nodes).map(|_| None).collect();
+        let mut slots: Vec<Option<(TcpStream, String)>> = (0..nodes).map(|_| None).collect();
         let mut got = 0;
         while got < nodes {
             match self.listener.accept() {
@@ -363,18 +452,22 @@ impl Rendezvous {
                     s.set_read_timeout(Some(timeout)).ok();
                     let rank = wire::read_preamble(&mut s)
                         .with_context(|| format!("handshake from {addr}"))? as usize;
-                    let hello = wire::read_frame(&mut s).context("reading hello")?;
-                    s.set_read_timeout(None).ok();
-                    if hello.kind != FrameKind::Hello || hello.payload.len() != 1 {
-                        crate::bail!("malformed hello from rank {rank}");
-                    }
                     if rank >= nodes {
                         crate::bail!("worker announced rank {rank}, cluster size is {nodes}");
                     }
                     if slots[rank].is_some() {
-                        crate::bail!("two workers announced rank {rank}");
+                        crate::bail!(
+                            "two workers announced rank {rank} (rank collision — check the \
+                             --rank each worker was started with)"
+                        );
                     }
-                    slots[rank] = Some((s, hello.payload[0] as u16));
+                    let hello = wire::read_frame(&mut s).context("reading hello")?;
+                    s.set_read_timeout(None).ok();
+                    let mesh_addr = decode_text(&hello.payload);
+                    if hello.kind != FrameKind::Hello || !mesh_addr.contains(':') {
+                        crate::bail!("malformed hello from rank {rank}");
+                    }
+                    slots[rank] = Some((s, mesh_addr));
                     got += 1;
                 }
                 Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -386,14 +479,18 @@ impl Rendezvous {
                 Err(e) => return Err(crate::err!("rendezvous accept failed: {e}")),
             }
         }
-        let ports: Vec<f32> =
-            slots.iter().map(|c| f32::from(c.as_ref().unwrap().1)).collect();
+        let book: Vec<String> =
+            slots.iter().map(|c| c.as_ref().unwrap().1.clone()).collect();
+        let payload = encode_text(&book.join(","));
         let mut out = Vec::with_capacity(nodes);
         for (rank, slot) in slots.into_iter().enumerate() {
-            let (mut s, _) = slot.unwrap();
-            wire::write_frame(&mut s, &Frame::new(FrameKind::Roster, nodes as u64, 0.0, ports.clone()))
-                .with_context(|| format!("sending roster to rank {rank}"))?;
-            out.push(WorkerConn { rank, stream: s });
+            let (mut s, mesh_addr) = slot.unwrap();
+            wire::write_frame(
+                &mut s,
+                &Frame::new(FrameKind::Roster, nodes as u64, 0.0, payload.clone()),
+            )
+            .with_context(|| format!("sending address book to rank {rank}"))?;
+            out.push(WorkerConn { rank, stream: s, mesh_addr });
         }
         Ok(out)
     }
@@ -493,11 +590,12 @@ mod tests {
             s.spawn(move || {
                 let mut sock = TcpStream::connect(addr).unwrap();
                 wire::write_preamble(&mut sock, 7).unwrap(); // rank 7 of 1
-                wire::write_frame(
+                // the coordinator rejects on the preamble rank, so it may
+                // close before (or while) the hello lands — don't unwrap
+                let _ = wire::write_frame(
                     &mut sock,
-                    &Frame::new(FrameKind::Hello, 7, 0.0, vec![1.0]),
-                )
-                .unwrap();
+                    &Frame::new(FrameKind::Hello, 7, 0.0, encode_text("127.0.0.1:9")),
+                );
             });
             let err = coord.join().unwrap().unwrap_err();
             assert!(err.to_string().contains("rank 7"), "{err}");
@@ -514,8 +612,69 @@ mod tests {
         let opts = TcpOptions {
             connect_timeout: Duration::from_millis(100),
             io_timeout: Some(Duration::from_millis(100)),
+            ..TcpOptions::default()
         };
         let err = TcpComm::connect(&format!("127.0.0.1:{port}"), 0, 2, &opts).unwrap_err();
         assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn bind_spec_parsing() {
+        assert_eq!(split_bind("127.0.0.1").unwrap(), ("127.0.0.1".into(), 0));
+        assert_eq!(split_bind("10.1.2.3:4100").unwrap(), ("10.1.2.3".into(), 4100));
+        assert_eq!(split_bind("0.0.0.0:0").unwrap(), ("0.0.0.0".into(), 0));
+        assert_eq!(split_bind("[::1]:9").unwrap(), ("::1".into(), 9));
+        // unbracketed IPv6 is a bare host, not host:port
+        assert_eq!(split_bind("fe80::8").unwrap(), ("fe80::8".into(), 0));
+        // malformed / out-of-range ports must error, not silently go ephemeral
+        assert!(split_bind("10.0.0.1:47O10").is_err());
+        assert!(split_bind("10.0.0.1:70000").is_err());
+    }
+
+    #[test]
+    fn wildcard_bind_requires_advertise() {
+        let opts = TcpOptions { bind: Some("0.0.0.0".into()), ..TcpOptions::default() };
+        let err = advertised_addr(&opts, "0.0.0.0", 1234).unwrap_err();
+        assert!(err.to_string().contains("--advertise"), "{err}");
+        let opts = TcpOptions {
+            bind: Some("0.0.0.0".into()),
+            advertise: Some("worker-3.cluster".into()),
+            ..TcpOptions::default()
+        };
+        assert_eq!(advertised_addr(&opts, "0.0.0.0", 1234).unwrap(), "worker-3.cluster:1234");
+        assert_eq!(advertised_addr(&TcpOptions::default(), "10.0.0.8", 7).unwrap(), "10.0.0.8:7");
+        // a bare IPv6 advertise host still gets the listener port, bracketed
+        let opts = TcpOptions {
+            bind: Some("::".into()),
+            advertise: Some("fe80::8".into()),
+            ..TcpOptions::default()
+        };
+        assert_eq!(advertised_addr(&opts, "::", 4100).unwrap(), "[fe80::8]:4100");
+    }
+
+    #[test]
+    fn explicit_bind_forms_mesh() {
+        // --bind with an explicit loopback IP must bootstrap exactly like
+        // the default ephemeral path (the address book carries host:port)
+        let rdv = Rendezvous::bind_on("127.0.0.1", 0).unwrap();
+        let addr = rdv.addr();
+        let n = 2;
+        std::thread::scope(|s| {
+            let coord = s.spawn(move || rdv.wait_workers(n, Duration::from_secs(10)).unwrap());
+            for rank in 0..n {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let opts =
+                        TcpOptions { bind: Some("127.0.0.1".into()), ..TcpOptions::default() };
+                    let mut c = TcpComm::connect(&addr, rank, n, &opts).unwrap();
+                    let g = c.exchange(0.0, &[rank as f32]).unwrap();
+                    assert_eq!(g.parts, vec![vec![0.0f32], vec![1.0f32]]);
+                });
+            }
+            let conns = coord.join().unwrap();
+            for c in &conns {
+                assert!(c.mesh_addr.starts_with("127.0.0.1:"), "{}", c.mesh_addr);
+            }
+        });
     }
 }

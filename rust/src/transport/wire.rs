@@ -30,8 +30,16 @@ use crate::error::{Context, Result};
 
 /// Connection magic: `"DSAN"`.
 pub const MAGIC: u32 = 0x4453_414E;
-/// Wire protocol version; bumped on any frame-layout change.
-pub const VERSION: u16 = 1;
+/// Wire protocol version; bumped on any frame-layout change. A mismatch is
+/// rejected at the preamble, before any frame parsing — mixing binary
+/// versions across hosts surfaces as a clean "version mismatch" error
+/// (see DEPLOYMENT.md troubleshooting).
+///
+/// * v1 — initial frame set; `Hello`/`Roster` carried mesh **ports** only
+///   (localhost-only deployment).
+/// * v2 — `Hello`/`Roster` carry full `host:port` mesh addresses (the
+///   address book), enabling multi-host clusters via `--bind`.
+pub const VERSION: u16 = 2;
 /// Refuse frames above 1 GiB — a corrupt length prefix otherwise turns
 /// into an attempted huge allocation.
 pub const MAX_FRAME_BYTES: usize = 1 << 30;
@@ -47,9 +55,11 @@ pub enum FrameKind {
     Collective = 1,
     /// A tagged point-to-point message.
     P2p = 2,
-    /// Worker → coordinator bootstrap (payload = `[listen_port]`).
+    /// Worker → coordinator bootstrap (payload = the worker's advertised
+    /// mesh `host:port`, text-encoded via [`encode_text`]).
     Hello = 3,
-    /// Coordinator → worker roster (payload = peer ports in rank order).
+    /// Coordinator → worker address book (payload = comma-joined mesh
+    /// addresses in rank order, text-encoded via [`encode_text`]).
     Roster = 4,
     /// Worker → coordinator result chunk (tag = chunk code).
     Result = 5,
@@ -58,6 +68,7 @@ pub enum FrameKind {
 }
 
 impl FrameKind {
+    /// Decode the on-wire kind byte.
     pub fn from_u8(v: u8) -> Result<FrameKind> {
         Ok(match v {
             1 => FrameKind::Collective,
@@ -74,13 +85,18 @@ impl FrameKind {
 /// One decoded frame.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
+    /// What the frame carries.
     pub kind: FrameKind,
+    /// Kind-specific tag (collective round, P2P tag, result chunk code).
     pub tag: u64,
+    /// Sender's virtual clock at send time.
     pub clock: f64,
+    /// Raw f32 payload.
     pub payload: Vec<f32>,
 }
 
 impl Frame {
+    /// Assemble a frame from its parts.
     pub fn new(kind: FrameKind, tag: u64, clock: f64, payload: Vec<f32>) -> Frame {
         Frame { kind, tag, clock, payload }
     }

@@ -4,11 +4,12 @@
 
 use dsanls::algos::{reduce_outputs, run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions};
 use dsanls::data::partition::uniform_partition;
+use dsanls::data::shard::{exact_fro_sq, NodeData};
 use dsanls::dist::run_tcp_cluster;
 use dsanls::linalg::{Mat, Matrix};
 use dsanls::nmf::{Sanls, SanlsOptions};
 use dsanls::rng::Pcg64;
-use dsanls::secure::syn::{assemble_syn, syn_node};
+use dsanls::secure::syn::{assemble_syn, syn_node, syn_node_sharded};
 use dsanls::secure::{run_syn_sd, SecureAlgo, SynOptions};
 use dsanls::sketch::SketchKind;
 use dsanls::solvers::SolverKind;
@@ -250,4 +251,70 @@ fn syn_sd_tcp_backend_bit_identical_to_sim() {
     let tcp = assemble_syn(outputs, opts.rank, opts.t1 * opts.t2);
     assert_eq!(sim.u.data(), tcp.u.data(), "U diverged across backends");
     assert_eq!(sim.v.data(), tcp.v.data(), "V diverged across backends");
+}
+
+/// The shard data plane's contract, end to end over real TCP: ranks that
+/// hold **only their blocks** (plus the chain-reduced exact ‖M‖²) must
+/// produce factors bit-identical to the full-matrix simulator.
+#[test]
+fn dsanls_sharded_tcp_bit_identical_to_full_sim() {
+    let m = low_rank(72, 54, 3, 1017);
+    let opts = DsanlsOptions {
+        nodes: 3,
+        rank: 3,
+        iterations: 8,
+        d_u: 12,
+        d_v: 14,
+        eval_every: 4,
+        ..Default::default()
+    };
+    let sim = run_dsanls(&m, &opts);
+    let outputs = run_tcp_cluster(opts.nodes, opts.comm, |ctx| {
+        let rr = uniform_partition(m.rows(), opts.nodes).range(ctx.rank);
+        let cr = uniform_partition(m.cols(), opts.nodes).range(ctx.rank);
+        let mut data = NodeData::from_full(&m, rr, cr);
+        data.fro_sq = None; // what a real worker does: resolve via the chain
+        let fro = exact_fro_sq(ctx.comm_mut(), opts.nodes, data.m_rows.as_ref()).unwrap();
+        data.fro_sq = Some(fro);
+        dsanls::algos::dsanls::dsanls_node_sharded(ctx, &data, &opts)
+    })
+    .expect("tcp cluster failed");
+    let tcp = reduce_outputs(outputs, opts.rank, opts.iterations);
+    assert_eq!(sim.u.data(), tcp.u.data(), "sharded U diverged from full sim");
+    assert_eq!(sim.v.data(), tcp.v.data(), "sharded V diverged from full sim");
+}
+
+/// Sharded Syn-SD parties (column block + global metadata only) match the
+/// full-matrix simulator bit-for-bit.
+#[test]
+fn syn_sd_sharded_matches_full_sim() {
+    let m = low_rank(40, 30, 3, 1019);
+    let cols = uniform_partition(30, 3);
+    let opts = SynOptions {
+        nodes: 3,
+        rank: 3,
+        t1: 3,
+        t2: 2,
+        d1: 10,
+        d2: 5,
+        d3: 10,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let sim = run_syn_sd(&m, &cols, &opts, None);
+    let outputs = run_tcp_cluster(opts.nodes, opts.comm, |ctx| {
+        // a secure party's shard: its column block; the row block exists
+        // only to feed the ‖M‖² chain, then is dropped (worker behaviour)
+        let rr = uniform_partition(m.rows(), opts.nodes).range(ctx.rank);
+        let mut data = NodeData::from_full(&m, rr, cols.range(ctx.rank));
+        data.fro_sq = None;
+        let fro = exact_fro_sq(ctx.comm_mut(), opts.nodes, data.m_rows.as_ref()).unwrap();
+        data.fro_sq = Some(fro);
+        data.drop_rows();
+        syn_node_sharded(ctx, &data, &cols, &opts, SecureAlgo::SynSd, None)
+    })
+    .expect("tcp cluster failed");
+    let tcp = assemble_syn(outputs, opts.rank, opts.t1 * opts.t2);
+    assert_eq!(sim.u.data(), tcp.u.data(), "sharded U diverged from full sim");
+    assert_eq!(sim.v.data(), tcp.v.data(), "sharded V diverged from full sim");
 }

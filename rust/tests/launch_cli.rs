@@ -87,6 +87,95 @@ fn launch_secure_syn_sd_end_to_end() {
     std::fs::remove_dir_all(&out_dir).ok();
 }
 
+/// The full multi-host data path on one machine: `dsanls shard` writes the
+/// block files, `dsanls launch --shards` runs workers that load only their
+/// blocks, and `--verify-sim` asserts the factors are bit-identical to the
+/// full-matrix simulator.
+#[test]
+fn shard_then_launch_over_files_bit_identical_to_sim() {
+    let out_dir = temp_out("shardlaunch");
+    let shard_dir = out_dir.join("shards");
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let cfg: Vec<String> = [
+        "--experiment.name=shardtest",
+        "--experiment.algorithm=dsanls",
+        "--experiment.dataset=face",
+        "--experiment.scale=0.05",
+        "--experiment.rank=4",
+        "--experiment.iterations=6",
+        "--experiment.eval_every=3",
+    ]
+    .iter()
+    .map(|s| s.to_string())
+    .collect();
+
+    let output = Command::new(exe())
+        .args(["shard", "--out", shard_dir.to_str().unwrap(), "--nodes", "3"])
+        .args(&cfg)
+        .output()
+        .expect("failed to spawn dsanls shard");
+    assert!(
+        output.status.success(),
+        "shard failed: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    assert!(shard_dir.join("manifest.bin").exists());
+    assert!(shard_dir.join("rank-2.cols.blk").exists());
+
+    let output = Command::new(exe())
+        .args([
+            "launch",
+            "--nodes",
+            "3",
+            "--verify-sim",
+            "--shards",
+            shard_dir.to_str().unwrap(),
+        ])
+        .args(&cfg)
+        .arg(format!("--output.dir={}", out_dir.display()))
+        .output()
+        .expect("failed to spawn dsanls launch");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "sharded launch failed ({})\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        output.status
+    );
+    assert!(
+        stdout.contains("bit-identical to simulated backend: true"),
+        "verify-sim did not confirm bit-identity over shard files\nstdout:\n{stdout}"
+    );
+    assert!(stdout.contains("file shard"), "load stats should report file shards\n{stdout}");
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+/// A shard directory built for a different cluster size must be rejected
+/// with an actionable error, not a hang or a bit-identity failure.
+#[test]
+fn launch_rejects_mismatched_shard_dir() {
+    let out_dir = temp_out("shardmismatch");
+    let shard_dir = out_dir.join("shards");
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let cfg = ["--experiment.dataset=face", "--experiment.scale=0.05"];
+    let output = Command::new(exe())
+        .args(["shard", "--out", shard_dir.to_str().unwrap(), "--nodes", "2"])
+        .args(cfg)
+        .output()
+        .expect("failed to spawn dsanls shard");
+    assert!(output.status.success());
+
+    let output = Command::new(exe())
+        .args(["launch", "--nodes", "3", "--shards", shard_dir.to_str().unwrap()])
+        .args(cfg)
+        .output()
+        .expect("failed to spawn dsanls launch");
+    assert!(!output.status.success());
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(stderr.contains("dsanls shard"), "unhelpful error: {stderr}");
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
 #[test]
 fn worker_without_rendezvous_is_a_clean_error() {
     let output = Command::new(exe())

@@ -1,0 +1,143 @@
+//! Residency audit for the shard data plane: a worker building its rank's
+//! [`dsanls::data::NodeData`] must never hold a full-matrix-sized buffer.
+//!
+//! Two assertions back the claim:
+//!
+//! 1. **Dimension checks** — every resident block is exactly the rank's
+//!    partition slice (`rows/N × cols` and `rows × cols/N`), for every
+//!    dataset.
+//! 2. **Peak live heap** — a peak-tracking global allocator measures the
+//!    high-water mark of live bytes during shard-local generation and
+//!    compares it against full-matrix generation of the same dataset: at
+//!    `N = 8` the shard build must peak well under half of the full
+//!    build's peak (the blocks themselves are 2/8 of the matrix; the
+//!    remainder is factor-sized scratch).
+//!
+//! Single test in this file: the global counter must not see concurrent
+//! unrelated allocations.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicIsize, Ordering};
+
+use dsanls::data::partition::uniform_partition;
+use dsanls::data::shard::NodeData;
+use dsanls::data::{Dataset, ALL_DATASETS};
+
+struct PeakAlloc;
+
+static LIVE: AtomicIsize = AtomicIsize::new(0);
+static PEAK: AtomicIsize = AtomicIsize::new(0);
+static TRACKING: AtomicBool = AtomicBool::new(false);
+
+fn on_alloc(size: usize) {
+    if TRACKING.load(Ordering::Relaxed) {
+        let live = LIVE.fetch_add(size as isize, Ordering::Relaxed) + size as isize;
+        PEAK.fetch_max(live, Ordering::Relaxed);
+    }
+}
+
+fn on_dealloc(size: usize) {
+    if TRACKING.load(Ordering::Relaxed) {
+        LIVE.fetch_sub(size as isize, Ordering::Relaxed);
+    }
+}
+
+unsafe impl GlobalAlloc for PeakAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        on_alloc(layout.size());
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        on_alloc(layout.size());
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        on_dealloc(layout.size());
+        on_alloc(new_size);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        on_dealloc(layout.size());
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: PeakAlloc = PeakAlloc;
+
+/// Run `f` and return the peak live heap bytes it reached (relative to
+/// entry — frees of pre-existing buffers can drive LIVE negative, which
+/// only makes the measurement conservative).
+fn measure_peak<T>(f: impl FnOnce() -> T) -> (T, usize) {
+    LIVE.store(0, Ordering::SeqCst);
+    PEAK.store(0, Ordering::SeqCst);
+    TRACKING.store(true, Ordering::SeqCst);
+    let out = f();
+    TRACKING.store(false, Ordering::SeqCst);
+    let peak = PEAK.load(Ordering::SeqCst).max(0) as usize;
+    (out, peak)
+}
+
+#[test]
+fn shard_generation_peaks_at_block_size_not_matrix_size() {
+    // single-threaded so GEMM scratch is one thread's, and warmed up below
+    dsanls::parallel::set_local_threads(Some(1));
+    let nodes = 8usize;
+
+    // -- dimension checks across every dataset (cheap, tiny scale) --
+    for d in ALL_DATASETS {
+        let (rows, cols) = d.scaled_shape(0.02);
+        for rank in [0usize, nodes - 1] {
+            let rr = uniform_partition(rows, nodes).range(rank);
+            let cr = uniform_partition(cols, nodes).range(rank);
+            let data = NodeData::generate(d, 7, 0.02, Some(rr.clone()), Some(cr.clone()));
+            let rb = data.require_rows();
+            let cb = data.require_cols();
+            assert_eq!((rb.rows(), rb.cols()), (rr.len(), cols), "{:?} row block dims", d);
+            assert_eq!((cb.rows(), cb.cols()), (rows, cr.len()), "{:?} col block dims", d);
+            assert!(
+                data.resident_bytes() < rows * cols * 4 / 2,
+                "{:?}: resident {} bytes vs full {}",
+                d,
+                data.resident_bytes(),
+                rows * cols * 4
+            );
+        }
+    }
+
+    // -- peak-heap comparison on the dense FACE dataset at full scale --
+    let dataset = Dataset::Face;
+    let (rows, cols) = dataset.scaled_shape(1.0);
+    let rr = uniform_partition(rows, nodes).range(0);
+    let cr = uniform_partition(cols, nodes).range(0);
+    let (rr_len, cr_len) = (rr.len(), cr.len());
+
+    // warm up thread-local GEMM packing scratch so it doesn't count
+    let _ = NodeData::generate(dataset, 7, 0.05, Some(0..64), Some(0..64));
+
+    let (full, full_peak) = measure_peak(|| dataset.generate_scaled(7, 1.0));
+    let full_bytes = full.rows() * full.cols() * 4;
+    drop(full);
+
+    let (shard, shard_peak) =
+        measure_peak(|| NodeData::generate(dataset, 7, 1.0, Some(rr), Some(cr)));
+
+    // the rank holds one row block + one col block ≈ 2/N of the matrix
+    // (ceil-partitioned), far below the full matrix
+    let block_bytes = 4 * (rr_len * cols + rows * cr_len);
+    assert_eq!(shard.resident_bytes(), block_bytes, "resident bytes must be exactly the blocks");
+    assert!(
+        block_bytes < full_bytes / 2,
+        "blocks ({block_bytes} bytes) should be far below the {full_bytes} byte matrix"
+    );
+    assert!(
+        shard_peak < full_peak / 2,
+        "shard-local generation peaked at {shard_peak} bytes — not meaningfully below the \
+         full-matrix build's {full_peak} bytes (blocks are 2/{nodes} of the matrix)"
+    );
+
+    dsanls::parallel::set_local_threads(None);
+}

@@ -10,6 +10,9 @@ cargo fmt --check
 echo "== cargo clippy -D warnings =="
 cargo clippy --all-targets -- -D warnings
 
+echo "== cargo doc (rustdoc must build; transport/ and coordinator/ warn on missing docs) =="
+cargo doc --no-deps --quiet
+
 echo "== tier-1: cargo build --release && cargo test -q =="
 cargo build --release
 cargo test -q
