@@ -7,10 +7,12 @@
 
 mod bench_util;
 
-use dsanls::algos::{run_dsanls, DsanlsOptions};
+use dsanls::algos::DsanlsOptions;
 use dsanls::coordinator;
 use dsanls::metrics::{write_series_csv, Series};
 use dsanls::sketch::SketchKind;
+
+use bench_util::run_dsanls;
 
 fn main() {
     bench_util::banner("Ablation A1", "sketch families on DSANLS");

@@ -6,10 +6,12 @@
 
 mod bench_util;
 
-use dsanls::algos::{run_dsanls, DsanlsOptions};
+use dsanls::algos::DsanlsOptions;
 use dsanls::coordinator;
 use dsanls::metrics::write_table_csv;
 use dsanls::sketch::SketchKind;
+
+use bench_util::run_dsanls;
 
 fn main() {
     bench_util::banner("Ablation A2", "sketch size d sweep");

@@ -8,7 +8,20 @@
 
 use std::path::PathBuf;
 
+use dsanls::algos::DsanlsOptions;
 use dsanls::config::ExperimentConfig;
+use dsanls::linalg::Matrix;
+use dsanls::nmf::job::{Algo, DataSource, Job, Outcome};
+
+/// Run DSANLS on `m` through the unified `Job` builder (the shape every
+/// DSANLS bench shares).
+pub fn run_dsanls(m: &Matrix, opts: &DsanlsOptions) -> Outcome {
+    Job::builder()
+        .algorithm(Algo::Dsanls(opts.clone()))
+        .data(DataSource::Full(m))
+        .run()
+        .expect("dsanls job failed")
+}
 
 pub fn full() -> bool {
     std::env::var("DSANLS_BENCH_FULL").map(|v| v == "1").unwrap_or(false)

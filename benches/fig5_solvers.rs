@@ -5,11 +5,13 @@
 
 mod bench_util;
 
-use dsanls::algos::{run_dsanls, DsanlsOptions};
+use dsanls::algos::DsanlsOptions;
 use dsanls::coordinator;
 use dsanls::metrics::{write_series_csv, Series};
 use dsanls::sketch::SketchKind;
 use dsanls::solvers::SolverKind;
+
+use bench_util::run_dsanls;
 
 fn main() {
     bench_util::banner("Fig. 5", "RCD vs PGD subproblem solvers (per iteration)");

@@ -6,8 +6,9 @@
 //! make artifacts && cargo run --release --example quickstart
 //! ```
 
-use dsanls::algos::{run_dsanls, DsanlsOptions};
+use dsanls::algos::{DsanlsOptions, ProgressEvent};
 use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::job::{Algo, Backend, DataSource, Job};
 use dsanls::rng::Pcg64;
 use dsanls::runtime::{LocalSolver, NativeBackend, PjrtBackend, PjrtRuntime};
 use dsanls::sketch::SketchKind;
@@ -22,27 +23,41 @@ fn main() -> dsanls::Result<()> {
     };
     println!("input: {}x{} dense, ‖M‖={:.1}", m.rows(), m.cols(), m.fro_sq().sqrt());
 
-    // --- 2. DSANLS on a 4-node simulated cluster ---------------------------
-    let opts = DsanlsOptions {
-        nodes: 4,
-        rank: 8,
-        iterations: 150,
-        sketch: SketchKind::Subsample,
-        d_u: 60, // sketch size d ≪ n=400
-        d_v: 80,
-        eval_every: 25,
-        ..Default::default()
+    // --- 2. DSANLS on a 4-node simulated cluster, via the Job builder ------
+    // The observer streams every traced sample live (no waiting for the
+    // post-hoc series); swap `.transport(Backend::Tcp { port: 0 })` in to
+    // run the identical job over real localhost sockets instead.
+    let nodes = 4;
+    let observer = |e: &ProgressEvent| {
+        println!(
+            "  iter {:>4}  t={:.3}s  err={:.4}  ({:.1} KB sent so far on rank 0)",
+            e.iteration,
+            e.sim_time,
+            e.rel_error,
+            e.stats.bytes_sent as f64 / 1e3
+        );
     };
-    let run = run_dsanls(&m, &opts);
-    println!("\nDSANLS/S convergence (relative error over simulated time):");
-    for p in &run.trace {
-        println!("  iter {:>4}  t={:.3}s  err={:.4}", p.iteration, p.sim_time, p.rel_error);
-    }
+    println!("\nDSANLS/S convergence (streamed while the job runs):");
+    let run = Job::builder()
+        .algorithm(Algo::Dsanls(DsanlsOptions {
+            nodes,
+            rank: 8,
+            iterations: 150,
+            sketch: SketchKind::Subsample,
+            d_u: 60, // sketch size d ≪ n=400
+            d_v: 80,
+            eval_every: 25,
+            ..Default::default()
+        }))
+        .data(DataSource::Full(&m))
+        .transport(Backend::Sim)
+        .observer(&observer)
+        .run()?;
     println!(
         "final error {:.4}; {:.1} KB total communication ({} nodes)",
         run.final_error(),
         run.total_bytes_sent() as f64 / 1e3,
-        opts.nodes
+        nodes
     );
     assert!(run.final_error() < 0.1, "quickstart did not converge");
 

@@ -12,9 +12,10 @@
 
 use dsanls::data::partition::uniform_partition;
 use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::job::{Algo, DataSource, Job};
 use dsanls::nmf::{rel_error, Anls, AnlsOptions};
 use dsanls::rng::Pcg64;
-use dsanls::secure::{run_syn_ssd, AuditLog, AuditVerdict, SecureAlgo, SynOptions};
+use dsanls::secure::{AuditLog, AuditVerdict, SecureAlgo, SynOptions};
 use dsanls::solvers::SolverKind;
 
 fn main() {
@@ -44,7 +45,13 @@ fn main() {
         eval_every: 0,
         ..Default::default()
     };
-    let run = run_syn_ssd(&m, &cols, &opts, SecureAlgo::SynSsdUv, Some(&audit));
+    let run = Job::builder()
+        .algorithm(Algo::Syn(opts, SecureAlgo::SynSsdUv))
+        .data(DataSource::Full(&m))
+        .secure_partition(cols)
+        .audit(&audit)
+        .run()
+        .expect("secure job failed");
     println!("Syn-SSD-UV joint error: {:.4}", run.final_error());
 
     // --- baseline: each hospital factorises alone --------------------------

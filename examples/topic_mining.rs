@@ -7,9 +7,10 @@
 //! cargo run --release --example topic_mining
 //! ```
 
-use dsanls::algos::{run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions};
+use dsanls::algos::{DistAnlsOptions, DsanlsOptions};
 use dsanls::data::synth;
 use dsanls::linalg::Matrix;
+use dsanls::nmf::job::{Algo, DataSource, Job};
 use dsanls::rng::Pcg64;
 use dsanls::sketch::SketchKind;
 use dsanls::solvers::SolverKind;
@@ -32,9 +33,8 @@ fn main() {
     let d = 150; // = n/10, the paper's default sketch size
 
     // --- DSANLS/S ----------------------------------------------------------
-    let ds = run_dsanls(
-        &m,
-        &DsanlsOptions {
+    let ds = Job::builder()
+        .algorithm(Algo::Dsanls(DsanlsOptions {
             nodes: 5,
             rank: k,
             iterations: 100,
@@ -43,22 +43,25 @@ fn main() {
             d_v: 200,
             eval_every: 20,
             ..Default::default()
-        },
-    );
+        }))
+        .data(DataSource::Full(&m))
+        .run()
+        .expect("DSANLS job failed");
     println!("\nDSANLS/S   : err {:.4}, {:.4} sim-sec/iter", ds.final_error(), ds.sec_per_iter);
 
     // --- distributed HALS baseline (MPI-FAUN style) -------------------------
-    let hals = run_dist_anls(
-        &m,
-        &DistAnlsOptions {
+    let hals = Job::builder()
+        .algorithm(Algo::DistAnls(DistAnlsOptions {
             nodes: 5,
             rank: k,
             iterations: 100,
             solver: SolverKind::Hals,
             eval_every: 20,
             ..Default::default()
-        },
-    );
+        }))
+        .data(DataSource::Full(&m))
+        .run()
+        .expect("HALS job failed");
     println!("dist-HALS  : err {:.4}, {:.4} sim-sec/iter", hals.final_error(), hals.sec_per_iter);
     println!(
         "per-iteration speedup {:.1}× (paper predicts ~n/d = {:.1}× ceiling on compute)",

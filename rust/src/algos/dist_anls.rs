@@ -12,10 +12,10 @@
 //! `O(k·d·(m/N + k))` (paper Sec. 3.6.1) — together these produce the
 //! `n/d ≫ 1` speedup the paper claims and Fig. 3 measures.
 
-use super::{assemble_blocks, reduce_outputs, DistRun, NodeOutput};
+use super::{assemble_blocks, DistRun, NodeOutput, ObserverFn, Trace};
 use crate::data::partition::uniform_partition;
-use crate::data::shard::{NodeData, NodeInput};
-use crate::dist::{run_cluster, CommModel, NodeCtx};
+use crate::data::shard::NodeInput;
+use crate::dist::{CommModel, NodeCtx};
 use crate::linalg::{Mat, Matrix};
 use crate::nmf::init_factors_from;
 use crate::rng::{Role, StreamRng};
@@ -53,37 +53,29 @@ impl Default for DistAnlsOptions {
 }
 
 /// Run a distributed unsketched baseline on the simulated cluster.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `nmf::job::Job::builder().algorithm(Algo::DistAnls(opts))` instead"
+)]
 pub fn run_dist_anls(m: &Matrix, opts: &DistAnlsOptions) -> DistRun {
-    let outputs = run_cluster(opts.nodes, opts.comm, |ctx| dist_anls_node(ctx, m, opts));
-    reduce_outputs(outputs, opts.rank, opts.iterations)
+    let out = crate::nmf::job::Job::builder()
+        .algorithm(crate::nmf::job::Algo::DistAnls(opts.clone()))
+        .data(crate::nmf::job::DataSource::Full(m))
+        .run()
+        .unwrap_or_else(|e| panic!("baseline job failed: {e}"));
+    out.into_dist_run()
 }
 
-/// One baseline rank over any transport backend when the rank can see the
-/// full matrix (simulator / tests). `opts.nodes` must match the
-/// communicator's cluster size.
-pub fn dist_anls_node<C: Communicator>(
-    ctx: &mut NodeCtx<C>,
-    m: &Matrix,
-    opts: &DistAnlsOptions,
-) -> NodeOutput {
-    node_main(ctx, NodeInput::Full(m), opts)
-}
-
-/// One baseline rank over a pre-sharded [`NodeData`] view (the `dsanls
-/// worker` entry point) — see [`crate::algos::dsanls::dsanls_node_sharded`]
-/// for the bit-identity contract.
-pub fn dist_anls_node_sharded<C: Communicator>(
-    ctx: &mut NodeCtx<C>,
-    data: &NodeData,
-    opts: &DistAnlsOptions,
-) -> NodeOutput {
-    node_main(ctx, NodeInput::Shard(data), opts)
-}
-
-fn node_main<C: Communicator>(
+/// One baseline rank over any transport backend — the single per-rank
+/// node runner, on a resolved [`NodeInput`] (full matrix, or shard-resident
+/// blocks with the exact global `‖M‖²` — see
+/// [`crate::algos::dsanls::dsanls_rank`] for the bit-identity contract).
+/// `opts.nodes` must match the communicator's cluster size.
+pub fn dist_anls_rank<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     input: NodeInput<'_>,
     opts: &DistAnlsOptions,
+    observer: Option<&ObserverFn>,
 ) -> NodeOutput {
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let (rows, cols) = input.dims();
@@ -106,7 +98,7 @@ fn node_main<C: Communicator>(
         let mut v_block = v_full.row_block(my_cols.clone());
         drop((u_full, v_full));
 
-        let mut trace = Vec::new();
+        let mut trace = Trace::new(if rank == 0 { observer } else { None });
         super::dsanls::record_error_any(
             ctx, &input, m_rows, &u_block, &v_block, opts.rank, 0, &mut trace,
         );
@@ -153,7 +145,7 @@ fn node_main<C: Communicator>(
                 );
             }
         }
-        if trace.last().map(|p| p.iteration) != Some(opts.iterations) {
+        if trace.last_iteration() != Some(opts.iterations) {
             super::dsanls::record_error_any(
                 ctx, &input, m_rows, &u_block, &v_block, opts.rank, opts.iterations, &mut trace,
             );
@@ -162,7 +154,7 @@ fn node_main<C: Communicator>(
         NodeOutput {
             u_block,
             v_block,
-            trace: if rank == 0 { trace } else { Vec::new() },
+            trace: if rank == 0 { trace.into_points() } else { Vec::new() },
             stats: ctx.stats(),
             final_clock: ctx.clock(),
         }
@@ -171,6 +163,8 @@ fn node_main<C: Communicator>(
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the deprecated shims stay covered until removal
+
     use super::*;
     use crate::rng::Pcg64;
 

@@ -17,10 +17,10 @@
 //! rank order, the iterates are **bit-identical for any node count** — a
 //! property the integration tests assert (`tests/dist_equivalence.rs`).
 
-use super::{reduce_outputs, DistRun, NodeOutput, TracePoint};
+use super::{DistRun, NodeOutput, ObserverFn, Trace, TracePoint};
 use crate::data::partition::uniform_partition;
-use crate::data::shard::{NodeData, NodeInput};
-use crate::dist::{run_cluster, CommModel, NodeCtx};
+use crate::data::shard::NodeInput;
+use crate::dist::{CommModel, NodeCtx};
 use crate::linalg::{Mat, Matrix};
 use crate::nmf::{init_factors_from, rel_error, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
@@ -82,45 +82,40 @@ impl DsanlsOptions {
 /// Run DSANLS on the simulated cluster. `m` is the full input; each node
 /// only ever *reads* its own row/column blocks (enforced by slicing them
 /// out before the iteration loop).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `nmf::job::Job::builder().algorithm(Algo::Dsanls(opts))` instead"
+)]
 pub fn run_dsanls(m: &Matrix, opts: &DsanlsOptions) -> DistRun {
-    let outputs = run_cluster(opts.nodes, opts.comm, |ctx| dsanls_node(ctx, m, opts));
-    reduce_outputs(outputs, opts.rank, opts.iterations)
+    let out = crate::nmf::job::Job::builder()
+        .algorithm(crate::nmf::job::Algo::Dsanls(opts.clone()))
+        .data(crate::nmf::job::DataSource::Full(m))
+        .run()
+        .unwrap_or_else(|e| panic!("DSANLS job failed: {e}"));
+    out.into_dist_run()
 }
 
-/// One DSANLS rank over any transport backend — the entry point the
-/// backend-equivalence tests call directly when every rank can see the
-/// full matrix (each rank slices its own blocks). Partitions are derived
-/// deterministically from `m` and the cluster size, so every rank agrees
-/// without further coordination; `opts.nodes` must match the
-/// communicator's cluster size.
-pub fn dsanls_node<C: Communicator>(
-    ctx: &mut NodeCtx<C>,
-    m: &Matrix,
-    opts: &DsanlsOptions,
-) -> NodeOutput {
-    node_main(ctx, NodeInput::Full(m), opts)
-}
-
-/// One DSANLS rank over a pre-sharded [`NodeData`] view — the `dsanls
-/// worker` entry point. The rank holds only its row/column blocks; the
-/// view's global `‖M‖²` must already be resolved
-/// ([`crate::data::shard::exact_fro_sq`] or a shard manifest), which makes
-/// the factor iterates **bit-identical** to the full-matrix path. Error
-/// traces are evaluated distributively (per-rank row-block residuals,
-/// summed), so they may differ from the full path in the last float digits
-/// — factors do not.
-pub fn dsanls_node_sharded<C: Communicator>(
-    ctx: &mut NodeCtx<C>,
-    data: &NodeData,
-    opts: &DsanlsOptions,
-) -> NodeOutput {
-    node_main(ctx, NodeInput::Shard(data), opts)
-}
-
-fn node_main<C: Communicator>(
+/// One DSANLS rank over any transport backend — the single per-rank
+/// **node runner** every driver (simulated cluster, in-process TCP, the
+/// multi-process `dsanls worker`) funnels through. The rank's view of the
+/// input is a resolved [`NodeInput`]: the full matrix (it slices its own
+/// blocks) or a shard-resident [`crate::data::shard::NodeData`] whose
+/// global `‖M‖²` is already resolved
+/// ([`crate::data::shard::exact_fro_sq`] or a shard manifest) — which
+/// makes the factor iterates **bit-identical** across the two views.
+/// Sharded error traces are evaluated distributively (per-rank row-block
+/// residuals, summed), so they may differ from the full path in the last
+/// float digits — factors do not.
+///
+/// Partitions are derived deterministically from the global shape and the
+/// cluster size, so every rank agrees without further coordination;
+/// `opts.nodes` must match the communicator's cluster size. `observer`
+/// (rank 0 only) streams each traced sample as it is recorded.
+pub fn dsanls_rank<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     input: NodeInput<'_>,
     opts: &DsanlsOptions,
+    observer: Option<&ObserverFn>,
 ) -> NodeOutput {
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let rank = ctx.rank;
@@ -152,7 +147,7 @@ fn node_main<C: Communicator>(
     // Eq. 22 ceiling enforcing Assumption 2 (when requested)
     let ceiling = (2.0 * fro_sq.sqrt()).sqrt() as f32;
 
-    let mut trace = Vec::new();
+    let mut trace = Trace::new(if rank == 0 { observer } else { None });
     record_error_any(ctx, &input, m_rows, &u_block, &v_block, opts.rank, 0, &mut trace);
 
     // per-node normal-equation scratch, reused across iterations (zero
@@ -206,7 +201,7 @@ fn node_main<C: Communicator>(
             record_error_any(ctx, &input, m_rows, &u_block, &v_block, opts.rank, t + 1, &mut trace);
         }
     }
-    if trace.last().map(|p| p.iteration) != Some(opts.iterations) {
+    if trace.last_iteration() != Some(opts.iterations) {
         record_error_any(
             ctx,
             &input,
@@ -222,7 +217,7 @@ fn node_main<C: Communicator>(
     NodeOutput {
         u_block,
         v_block,
-        trace: if rank == 0 { trace } else { Vec::new() },
+        trace: if rank == 0 { trace.into_points() } else { Vec::new() },
         stats: ctx.stats(),
         final_clock: ctx.clock(),
     }
@@ -241,7 +236,7 @@ pub(crate) fn record_error_any<C: Communicator>(
     v_block: &Mat,
     k: usize,
     iteration: usize,
-    trace: &mut Vec<TracePoint>,
+    trace: &mut Trace<'_>,
 ) {
     match input {
         NodeInput::Full(m) => record_error(ctx, m, u_block, v_block, k, iteration, trace),
@@ -267,7 +262,7 @@ pub(crate) fn record_error<C: Communicator>(
     v_block: &Mat,
     k: usize,
     iteration: usize,
-    trace: &mut Vec<TracePoint>,
+    trace: &mut Trace<'_>,
 ) {
     let sim_time = ctx.clock();
     let err = ctx.untimed(|ctx| {
@@ -284,7 +279,7 @@ pub(crate) fn record_error<C: Communicator>(
     // Every rank records the sample (non-zero ranks with NaN error) so that
     // trace-based control flow stays identical across ranks — collectives
     // must be entered by everyone or nobody.
-    trace.push(TracePoint { iteration, sim_time, rel_error: err });
+    trace.record(TracePoint { iteration, sim_time, rel_error: err }, ctx.stats());
 }
 
 /// Sharded out-of-band error: every rank gathers the full `V` factor
@@ -301,7 +296,7 @@ pub(crate) fn record_error_sharded<C: Communicator>(
     fro_sq: f64,
     k: usize,
     iteration: usize,
-    trace: &mut Vec<TracePoint>,
+    trace: &mut Trace<'_>,
 ) {
     let sim_time = ctx.clock();
     let err = ctx.untimed(|ctx| {
@@ -312,12 +307,15 @@ pub(crate) fn record_error_sharded<C: Communicator>(
         ctx.all_reduce_sum(&mut buf);
         (buf[0].max(0.0) as f64).sqrt()
     });
-    trace.push(TracePoint { iteration, sim_time, rel_error: err });
+    trace.record(TracePoint { iteration, sim_time, rel_error: err }, ctx.stats());
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the deprecated shims stay covered until removal
+
     use super::*;
+    use crate::dist::run_cluster;
     use crate::rng::Pcg64;
 
     fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
@@ -464,16 +462,16 @@ mod tests {
             let cr = uniform_partition(m.cols(), opts.nodes).range(ctx.rank);
             // build the rank view by slicing (same bytes as shard-local
             // generation, asserted separately in data::shard)
-            let mut data = NodeData::from_full(&m, rr, cr);
+            let mut data = crate::data::shard::NodeData::from_full(&m, rr, cr);
             data.fro_sq = None; // force the chain reduction path
             let fro =
                 crate::data::shard::exact_fro_sq(ctx.comm_mut(), opts.nodes, data.m_rows.as_ref())
                     .unwrap();
             assert_eq!(fro.to_bits(), m.fro_sq().to_bits(), "chain ‖M‖² must be exact");
             data.fro_sq = Some(fro);
-            dsanls_node_sharded(ctx, &data, &opts)
+            dsanls_rank(ctx, NodeInput::Shard(&data), &opts, None)
         });
-        let sharded = reduce_outputs(outputs, opts.rank, opts.iterations);
+        let sharded = super::super::reduce_outputs(outputs, opts.rank, opts.iterations);
         assert_eq!(full.u.data(), sharded.u.data(), "U factors diverged");
         assert_eq!(full.v.data(), sharded.v.data(), "V factors diverged");
     }

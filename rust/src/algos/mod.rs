@@ -6,18 +6,22 @@
 //!   full factor all-gather each iteration, exact NLS operands.
 //!
 //! Both are generic over the [`crate::transport::Communicator`] backend:
-//! the per-rank entry points ([`dsanls::dsanls_node`],
-//! [`dist_anls::dist_anls_node`]) run unchanged on the simulated cluster
-//! ([`crate::dist::run_cluster`]) or on real TCP workers, and the
-//! rank-ordered collectives make the two bit-identical. Results carry the
-//! assembled factors, the error-over-time trace and per-node communication
-//! statistics.
+//! the per-rank node runners ([`dsanls::dsanls_rank`],
+//! [`dist_anls::dist_anls_rank`]) take a resolved
+//! [`crate::data::shard::NodeInput`] (full matrix or shard-resident
+//! blocks) and run unchanged on the simulated cluster
+//! ([`crate::dist::run_cluster`]) or on real TCP workers; the rank-ordered
+//! collectives make all of them bit-identical. Results carry the assembled
+//! factors, the error-over-time trace and per-node communication
+//! statistics. The ergonomic front door is [`crate::nmf::job::Job`].
 
 pub mod dist_anls;
 pub mod dsanls;
 
-pub use dist_anls::{run_dist_anls, DistAnlsOptions};
-pub use dsanls::{run_dsanls, DsanlsOptions};
+pub use dist_anls::DistAnlsOptions;
+pub use dsanls::DsanlsOptions;
+#[allow(deprecated)]
+pub use {dist_anls::run_dist_anls, dsanls::run_dsanls};
 
 use crate::dist::CommStats;
 use crate::linalg::Mat;
@@ -30,6 +34,71 @@ pub struct TracePoint {
     pub sim_time: f64,
     /// Relative error ‖M − UVᵀ‖/‖M‖.
     pub rel_error: f64,
+}
+
+/// One streamed progress sample, delivered to a job observer the moment
+/// rank 0 records it (no waiting for the run to finish): the traced error
+/// sample plus a snapshot of rank 0's communication statistics at that
+/// instant.
+#[derive(Debug, Clone, Copy)]
+pub struct ProgressEvent {
+    /// Outer iteration the sample was taken at.
+    pub iteration: usize,
+    /// Virtual cluster seconds at the sample (simulated clock or TCP wall).
+    pub sim_time: f64,
+    /// Relative error ‖M − UVᵀ‖/‖M‖.
+    pub rel_error: f64,
+    /// Cumulative communication/compute statistics at the sample: rank 0's
+    /// own counters for the synchronous protocols (streamed live), or the
+    /// clients' **summed** counters for the asynchronous protocols (whose
+    /// merged trace is replayed at assembly).
+    pub stats: CommStats,
+}
+
+/// Streaming progress callback: invoked on rank 0's thread at every traced
+/// sample. Must be `Sync` — the simulated backend runs ranks on scoped
+/// threads. Register one with
+/// [`crate::nmf::job::JobBuilder::observer`].
+pub type ObserverFn = dyn Fn(&ProgressEvent) + Sync;
+
+/// The convergence trace a rank accumulates, with an optional streaming
+/// observer attached (rank 0 only). Every rank records the same samples so
+/// collective control flow stays identical across ranks; only the points
+/// survive into [`NodeOutput::trace`].
+pub struct Trace<'a> {
+    points: Vec<TracePoint>,
+    observer: Option<&'a ObserverFn>,
+}
+
+impl<'a> Trace<'a> {
+    /// A trace that streams each sample to `observer` (pass `None` on
+    /// non-zero ranks).
+    pub fn new(observer: Option<&'a ObserverFn>) -> Trace<'a> {
+        Trace { points: Vec::new(), observer }
+    }
+
+    /// Record one sample, streaming it to the observer first.
+    pub fn record(&mut self, point: TracePoint, stats: CommStats) {
+        if let Some(obs) = self.observer {
+            obs(&ProgressEvent {
+                iteration: point.iteration,
+                sim_time: point.sim_time,
+                rel_error: point.rel_error,
+                stats,
+            });
+        }
+        self.points.push(point);
+    }
+
+    /// Iteration of the most recent sample, if any.
+    pub fn last_iteration(&self) -> Option<usize> {
+        self.points.last().map(|p| p.iteration)
+    }
+
+    /// Consume into the recorded points.
+    pub fn into_points(self) -> Vec<TracePoint> {
+        self.points
+    }
 }
 
 /// Result of a distributed factorisation run.

@@ -36,17 +36,16 @@ use std::process::{Child, Command, Stdio};
 use std::time::{Duration, Instant};
 
 use crate::algos::{self, NodeOutput, TracePoint};
-use crate::config::{Algorithm, ExperimentConfig};
+use crate::config::{Algorithm as AlgoFamily, ExperimentConfig};
 use crate::coordinator::{self, Outcome};
 use crate::data::partition::uniform_partition;
-use crate::data::shard::{self, LoadSource, LoadStats, NodeData};
+use crate::data::shard::{self, LoadSource, LoadStats, NodeData, NodeInput};
 use crate::data::Dataset;
-use crate::dist::{CommStats, NodeCtx};
+use crate::dist::CommStats;
 use crate::error::{Context, Result};
 use crate::linalg::Mat;
 use crate::metrics;
-use crate::nmf::init_factors_from;
-use crate::rng::Role;
+use crate::nmf::job::{Algo, Algorithm as _, RankEnv, RankOutput};
 use crate::secure::{asyn, syn, SecureAlgo};
 use crate::transport::wire::{
     self, decode_text, encode_text, push_f64_bits, push_u64_bits, take_f64_bits, take_u64_bits,
@@ -206,10 +205,7 @@ fn send_chunk(stream: &mut TcpStream, tag: u64, payload: &[f32]) -> Result<()> {
 /// How many TCP ranks a config needs: one per node, plus the parameter
 /// server for the asynchronous protocols.
 pub fn cluster_ranks(cfg: &ExperimentConfig) -> usize {
-    match cfg.algorithm {
-        Algorithm::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => cfg.nodes + 1,
-        _ => cfg.nodes,
-    }
+    Algo::from_config(cfg).cluster_ranks()
 }
 
 /// `dsanls worker --rendezvous HOST:PORT --rank R [--bind IP[:PORT]]
@@ -289,24 +285,6 @@ pub fn worker_main(args: &[String]) -> Result<()> {
     }
 }
 
-/// Which blocks this rank's algorithm keeps resident.
-fn worker_block_needs(cfg: &ExperimentConfig, rank: usize) -> (bool, bool) {
-    match cfg.algorithm {
-        // DSANLS and the baselines iterate on both the row and col block
-        Algorithm::Dsanls | Algorithm::Baseline(_) => (true, true),
-        // synchronous secure parties hold only their column block
-        Algorithm::Secure(SecureAlgo::SynSd
-        | SecureAlgo::SynSsdU
-        | SecureAlgo::SynSsdV
-        | SecureAlgo::SynSsdUv) => (false, true),
-        // async: clients hold a column block; the parameter server (rank
-        // N) holds no data at all
-        Algorithm::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => {
-            (false, rank < cfg.nodes)
-        }
-    }
-}
-
 /// Build this rank's [`NodeData`] — shard files when `--shards` was given,
 /// shard-local synthesis otherwise. Never materialises the full matrix.
 fn build_node_data(
@@ -314,8 +292,9 @@ fn build_node_data(
     rank: usize,
     shards: Option<&Path>,
 ) -> Result<(NodeData, LoadSource)> {
-    let (need_rows, need_cols) = worker_block_needs(cfg, rank);
-    let secure = matches!(cfg.algorithm, Algorithm::Secure(_));
+    let algo = Algo::from_config(cfg);
+    let (need_rows, need_cols) = algo.block_needs(rank);
+    let secure = matches!(cfg.algorithm, AlgoFamily::Secure(_));
     if let Some(dir) = shards {
         if secure && cfg.skew > 0.0 {
             crate::bail!(
@@ -327,15 +306,7 @@ fn build_node_data(
             // async parameter server: global metadata only
             let manifest = shard::read_manifest(dir)?;
             validate_manifest(cfg, &manifest)?;
-            let data = NodeData {
-                rows: manifest.rows,
-                cols: manifest.cols,
-                row_range: 0..0,
-                col_range: 0..0,
-                m_rows: None,
-                m_cols: None,
-                fro_sq: Some(manifest.fro_sq),
-            };
+            let data = NodeData::metadata(manifest.rows, manifest.cols, Some(manifest.fro_sq));
             return Ok((data, LoadSource::FileShard));
         }
         let (data, manifest) = NodeData::load(dir, rank, need_rows, need_cols)?;
@@ -345,7 +316,8 @@ fn build_node_data(
 
     // shard-local synthesis: every data rank generates its row block (the
     // ordered ‖M‖² chain needs it even when the algorithm won't — it is
-    // dropped right after), plus the column block its algorithm iterates on
+    // dropped right after), plus the column block its algorithm iterates
+    // on; both blocks come from ONE pass over the generator stream
     let dataset = Dataset::from_name(&cfg.dataset)
         .with_context(|| format!("unknown dataset {}", cfg.dataset))?;
     let (rows, cols) = dataset.scaled_shape(cfg.scale);
@@ -399,6 +371,11 @@ fn validate_manifest(cfg: &ExperimentConfig, m: &shard::ShardManifest) -> Result
             cfg.nodes
         );
     }
+    if shard::is_file_dataset(&m.dataset) {
+        // file-ingested shards (`dsanls shard --input`) are authoritative:
+        // there is no generator config to cross-check against
+        return Ok(());
+    }
     if !m.dataset.eq_ignore_ascii_case(&cfg.dataset) || m.seed != cfg.seed || m.scale != cfg.scale
     {
         crate::bail!(
@@ -442,7 +419,7 @@ fn run_rank(
             .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
         data.fro_sq = Some(fro);
     }
-    let (need_rows, _) = worker_block_needs(cfg, rank);
+    let (need_rows, _) = Algo::from_config(cfg).block_needs(rank);
     if !need_rows {
         data.drop_rows(); // the chain was its only consumer
     }
@@ -480,67 +457,38 @@ fn run_rank_inner(
     report: &mut TcpStream,
 ) -> Result<()> {
     send_chunk(report, RES_LOAD, &load_payload(load))?;
-    match cfg.algorithm {
-        Algorithm::Dsanls => {
-            let opts = coordinator::dsanls_options(cfg);
-            let mut ctx = NodeCtx::new(comm, cfg.comm);
-            let out = algos::dsanls::dsanls_node_sharded(&mut ctx, data, &opts);
-            send_node_output(report, &out)
-        }
-        Algorithm::Baseline(solver) => {
-            let opts = coordinator::dist_anls_options(cfg, solver);
-            let mut ctx = NodeCtx::new(comm, cfg.comm);
-            let out = algos::dist_anls::dist_anls_node_sharded(&mut ctx, data, &opts);
-            send_node_output(report, &out)
-        }
-        Algorithm::Secure(algo @ (SecureAlgo::SynSd
-        | SecureAlgo::SynSsdU
-        | SecureAlgo::SynSsdV
-        | SecureAlgo::SynSsdUv)) => {
-            let cols = coordinator::secure_partition(cfg, data.cols);
-            let opts = coordinator::syn_options(cfg);
-            let mut ctx = NodeCtx::new(comm, cfg.comm);
-            let out = syn::syn_node_sharded(&mut ctx, data, &cols, &opts, algo, None);
+    // one generic node runner covers every algorithm family — the worker
+    // only matches on the *output* kind to pick its wire encoding
+    let algo = Algo::from_config(cfg);
+    let cols = coordinator::secure_partition(cfg, data.cols);
+    let env = RankEnv {
+        rank,
+        input: NodeInput::Shard(data),
+        cols: &cols,
+        observer: None,
+        audit: None,
+    };
+    match algo.run_rank(comm, env)? {
+        RankOutput::Node(out) => send_node_output(report, &out),
+        RankOutput::Syn(out) => {
             send_chunk(report, RES_U, &mat_payload(&out.u_local))?;
             send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
             send_chunk(report, RES_TRACE, &trace_payload(&out.trace))?;
             send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
             send_chunk(report, RES_DONE, &[])
         }
-        Algorithm::Secure(variant @ (SecureAlgo::AsynSd | SecureAlgo::AsynSsdV)) => {
-            let cols = coordinator::secure_partition(cfg, data.cols);
-            let opts = coordinator::asyn_options(cfg);
-            let stream_rng = crate::rng::StreamRng::new(opts.seed);
-            let fro_sq = data.fro_sq();
-            let (u_init, v_full) = {
-                let mut rng = stream_rng.for_iteration(0, Role::Init);
-                init_factors_from(fro_sq, data.rows, data.cols, opts.rank, &mut rng)
-            };
-            if rank == asyn::server_rank(cfg.nodes) {
-                let u = asyn::server_loop(comm, &opts, u_init);
-                send_chunk(report, RES_U, &mat_payload(&u))?;
-                let mut fro = Vec::with_capacity(2);
-                push_f64_bits(&mut fro, fro_sq);
-                send_chunk(report, RES_FRO, &fro)?;
-                send_chunk(report, RES_DONE, &[])
-            } else {
-                let v0 = v_full.row_block(cols.range(rank));
-                let out = asyn::client_node(
-                    comm,
-                    rank,
-                    data.require_cols(),
-                    data.rows,
-                    &opts,
-                    variant,
-                    u_init,
-                    v0,
-                    None,
-                );
-                send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
-                send_chunk(report, RES_SAMPLES, &samples_payload(&out.samples))?;
-                send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
-                send_chunk(report, RES_DONE, &[])
-            }
+        RankOutput::AsynServer { u, fro_sq } => {
+            send_chunk(report, RES_U, &mat_payload(&u))?;
+            let mut fro = Vec::with_capacity(2);
+            push_f64_bits(&mut fro, fro_sq);
+            send_chunk(report, RES_FRO, &fro)?;
+            send_chunk(report, RES_DONE, &[])
+        }
+        RankOutput::AsynClient(out) => {
+            send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
+            send_chunk(report, RES_SAMPLES, &samples_payload(&out.samples))?;
+            send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
+            send_chunk(report, RES_DONE, &[])
         }
     }
 }
@@ -724,6 +672,13 @@ pub fn launch_main(args: &[String]) -> Result<()> {
         // fail fast on a mismatched shard set, before anything connects
         let manifest = shard::read_manifest(Path::new(dir))?;
         validate_manifest(cfg, &manifest)?;
+        if opts.verify_sim && shard::is_file_dataset(&manifest.dataset) {
+            crate::bail!(
+                "--verify-sim needs a generator-backed dataset; {} shards came from an \
+                 external file the simulator cannot regenerate",
+                manifest.dataset
+            );
+        }
     }
 
     let rdv = Rendezvous::bind_on(&opts.bind_host, opts.port)?;
@@ -854,7 +809,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
     let label = format!("{}/tcp", cfg.algorithm.name());
     let loads: Vec<LoadStats> = results.iter().filter_map(|r| r.load).collect();
     match cfg.algorithm {
-        Algorithm::Dsanls | Algorithm::Baseline(_) => {
+        AlgoFamily::Dsanls | AlgoFamily::Baseline(_) => {
             let mut outputs = Vec::with_capacity(results.len());
             for (rank, r) in results.into_iter().enumerate() {
                 outputs.push(NodeOutput {
@@ -876,7 +831,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 loads,
             })
         }
-        Algorithm::Secure(SecureAlgo::SynSd
+        AlgoFamily::Secure(SecureAlgo::SynSd
         | SecureAlgo::SynSsdU
         | SecureAlgo::SynSsdV
         | SecureAlgo::SynSsdUv) => {
@@ -901,7 +856,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 loads,
             })
         }
-        Algorithm::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => {
+        AlgoFamily::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => {
             let server = results
                 .pop()
                 .context("async run returned no server result")?;
@@ -934,7 +889,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
 /// Re-run the configured experiment on the simulated backend and compare
 /// factors bit-for-bit (deterministic algorithms only).
 fn verify_against_sim(cfg: &ExperimentConfig, tcp: &Outcome) -> Result<()> {
-    if matches!(cfg.algorithm, Algorithm::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV)) {
+    if matches!(cfg.algorithm, AlgoFamily::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV)) {
         println!("verify-sim: skipped (asynchronous protocols are order-dependent by design)");
         return Ok(());
     }

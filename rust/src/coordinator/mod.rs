@@ -39,55 +39,19 @@ pub mod shard_cli;
 
 use std::path::Path;
 
-use crate::algos::{run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions, TracePoint};
-use crate::config::{Algorithm, ExperimentConfig};
+use crate::config::ExperimentConfig;
 use crate::data::partition::{imbalanced_partition, uniform_partition, Partition};
-use crate::data::shard::LoadStats;
 use crate::data::Dataset;
-use crate::dist::CommStats;
-use crate::linalg::{Mat, Matrix};
-use crate::metrics::Series;
-use crate::nmf::rel_error;
-use crate::secure::{run_asyn, run_syn_sd, run_syn_ssd, AsynOptions, SecureAlgo, SynOptions};
+use crate::linalg::Matrix;
+use crate::nmf::job::{DataSource, Job};
 
-/// The uniform outcome of any experiment run.
-#[derive(Debug, Clone)]
-pub struct Outcome {
-    /// Human-readable run label (algorithm / backend).
-    pub label: String,
-    /// Error-over-time samples.
-    pub trace: Vec<TracePoint>,
-    /// Per-rank communication/compute statistics.
-    pub stats: Vec<CommStats>,
-    /// Seconds per iteration (simulated clock or TCP wall time).
-    pub sec_per_iter: f64,
-    /// Assembled row factor `U`.
-    pub u: Mat,
-    /// Assembled column factor `V`.
-    pub v: Mat,
-    /// Per-rank data-plane statistics (what each rank loaded, resident
-    /// bytes, load time). Empty on the in-process simulated path, where
-    /// ranks share one materialised matrix.
-    pub loads: Vec<LoadStats>,
-}
+/// The uniform outcome of any experiment run (defined in
+/// [`crate::nmf::job`]; re-exported here for the launcher layer).
+pub use crate::nmf::job::Outcome;
 
-impl Outcome {
-    /// Last traced relative error (NaN on an empty trace).
-    pub fn final_error(&self) -> f64 {
-        self.trace.last().map(|p| p.rel_error).unwrap_or(f64::NAN)
-    }
-
-    /// The trace as a labelled CSV/plot series.
-    pub fn series(&self) -> Series {
-        Series::new(self.label.clone(), self.trace.clone())
-    }
-
-    /// Recompute the true global error of the returned factors (sanity
-    /// check against the traced value).
-    pub fn check_error(&self, m: &Matrix) -> f64 {
-        rel_error(m, &self.u, &self.v)
-    }
-}
+/// Config→options mapping (defined in [`crate::nmf::job`]; re-exported for
+/// the launcher layer and the benches).
+pub use crate::nmf::job::{asyn_options, dist_anls_options, dsanls_options, syn_options};
 
 /// Generate the dataset named in the config (scaled).
 pub fn load_dataset(cfg: &ExperimentConfig) -> Matrix {
@@ -128,137 +92,22 @@ pub fn parse_cli_config(args: &[String]) -> Result<ExperimentConfig, String> {
     Ok(cfg)
 }
 
-/// Map the generic config onto DSANLS options.
-pub fn dsanls_options(cfg: &ExperimentConfig) -> DsanlsOptions {
-    DsanlsOptions {
-        nodes: cfg.nodes,
-        rank: cfg.rank,
-        iterations: cfg.iterations,
-        solver: cfg.solver,
-        sketch: cfg.sketch,
-        d_u: cfg.d_u,
-        d_v: cfg.d_v,
-        seed: cfg.seed,
-        eval_every: cfg.eval_every,
-        mu: cfg.mu,
-        comm: cfg.comm,
-        box_bound: false,
-    }
-}
-
-/// Map the generic config onto the MPI-FAUN baseline options.
-pub fn dist_anls_options(cfg: &ExperimentConfig, solver: crate::solvers::SolverKind) -> DistAnlsOptions {
-    DistAnlsOptions {
-        nodes: cfg.nodes,
-        rank: cfg.rank,
-        iterations: cfg.iterations,
-        solver,
-        seed: cfg.seed,
-        eval_every: cfg.eval_every,
-        comm: cfg.comm,
-        inner_sweeps: 1,
-    }
-}
-
 /// Run the experiment described by `cfg` on matrix `m` (pass the
-/// pre-generated matrix so sweeps reuse it).
+/// pre-generated matrix so sweeps reuse it). One builder invocation covers
+/// every algorithm family — adding a method means a new
+/// [`crate::nmf::job::Algo`] variant, not a new dispatch arm here.
 pub fn run_on(cfg: &ExperimentConfig, m: &Matrix) -> Outcome {
-    match cfg.algorithm {
-        Algorithm::Dsanls => {
-            let run = run_dsanls(m, &dsanls_options(cfg));
-            Outcome {
-                label: format!("DSANLS/{}", initial(cfg.sketch.name())),
-                trace: run.trace,
-                stats: run.stats,
-                sec_per_iter: run.sec_per_iter,
-                u: run.u,
-                v: run.v,
-                loads: Vec::new(),
-            }
-        }
-        Algorithm::Baseline(solver) => {
-            let run = run_dist_anls(m, &dist_anls_options(cfg, solver));
-            Outcome {
-                label: format!("MPI-FAUN-{}", solver.name().to_uppercase()),
-                trace: run.trace,
-                stats: run.stats,
-                sec_per_iter: run.sec_per_iter,
-                u: run.u,
-                v: run.v,
-                loads: Vec::new(),
-            }
-        }
-        Algorithm::Secure(algo) => {
-            let cols = secure_partition(cfg, m.cols());
-            let run = match algo {
-                SecureAlgo::SynSd => {
-                    run_syn_sd(m, &cols, &syn_options(cfg), None)
-                }
-                SecureAlgo::SynSsdU | SecureAlgo::SynSsdV | SecureAlgo::SynSsdUv => {
-                    run_syn_ssd(m, &cols, &syn_options(cfg), algo, None)
-                }
-                SecureAlgo::AsynSd | SecureAlgo::AsynSsdV => {
-                    run_asyn(m, &cols, &asyn_options(cfg), algo, None)
-                }
-            };
-            Outcome {
-                label: algo.name().into(),
-                trace: run.trace,
-                stats: run.stats,
-                sec_per_iter: run.sec_per_iter,
-                u: run.u,
-                v: run.v,
-                loads: Vec::new(),
-            }
-        }
-    }
+    Job::builder()
+        .from_config(cfg, m.cols())
+        .data(DataSource::Full(m))
+        .run()
+        .unwrap_or_else(|e| panic!("experiment {} failed: {e}", cfg.name))
 }
 
 /// Convenience: load the dataset and run.
 pub fn run_experiment(cfg: &ExperimentConfig) -> Outcome {
     let m = load_dataset(cfg);
     run_on(cfg, &m)
-}
-
-fn initial(name: &str) -> String {
-    name.chars().next().unwrap_or('?').to_uppercase().to_string()
-}
-
-/// Map the generic config onto the synchronous secure options.
-pub fn syn_options(cfg: &ExperimentConfig) -> SynOptions {
-    SynOptions {
-        nodes: cfg.nodes,
-        rank: cfg.rank,
-        t1: cfg.t1,
-        t2: cfg.t2,
-        solver: cfg.solver,
-        mu: cfg.mu,
-        d1: cfg.d_u,
-        d2: cfg.d_v,
-        d3: cfg.d_u,
-        sketch: cfg.sketch,
-        seed: cfg.seed,
-        eval_every: cfg.eval_every,
-        comm: cfg.comm,
-    }
-}
-
-/// Map the generic config onto the asynchronous secure options.
-pub fn asyn_options(cfg: &ExperimentConfig) -> AsynOptions {
-    AsynOptions {
-        nodes: cfg.nodes,
-        rank: cfg.rank,
-        rounds: cfg.rounds,
-        local_iters: cfg.local_iters,
-        solver: cfg.solver,
-        mu: cfg.mu,
-        d1: cfg.d_u,
-        sketch: cfg.sketch,
-        omega0: 0.5,
-        tau: 10.0,
-        seed: cfg.seed,
-        comm: cfg.comm,
-    }
 }
 
 #[cfg(test)]

@@ -1,7 +1,7 @@
 //! `dsanls shard` — pre-slice a dataset into an on-disk shard directory.
 //!
 //! ```text
-//! dsanls shard --out DIR [--nodes N] [--config FILE] [--key=value ...]
+//! dsanls shard --out DIR [--nodes N] [--input FILE] [--config FILE] [--key=value ...]
 //! ```
 //!
 //! Materialises the configured dataset **once** (shard preparation is the
@@ -13,13 +13,22 @@
 //! every rank reads only its blocks, so the deployable matrix size is
 //! bounded by the *cluster's* memory, not one machine's.
 //!
-//! The manifest records dataset/seed/scale/nodes; workers and `launch`
-//! refuse a directory that does not match their config (preventing
-//! confusing bit-identity failures from stale shards).
+//! With `--input FILE` the matrix comes from an external COO text /
+//! MatrixMarket-style file ([`crate::data::ingest`]) instead of the
+//! synthetic generators — the path for factorising *real* data. Such
+//! manifests record a `FILE:<stem>` dataset name; workers accept them with
+//! any dataset config (the shards are authoritative), but `--verify-sim`
+//! is unavailable (the simulator cannot regenerate an external file).
+//!
+//! For generator-backed shards the manifest records dataset/seed/scale/
+//! nodes; workers and `launch` refuse a directory that does not match
+//! their config (preventing confusing bit-identity failures from stale
+//! shards).
 
 use std::path::PathBuf;
 
 use crate::coordinator;
+use crate::data::ingest;
 use crate::data::shard::{self, ShardManifest};
 use crate::error::{Context, Result};
 use crate::linalg::Matrix;
@@ -30,11 +39,14 @@ pub struct ShardCliOptions {
     pub cfg: crate::config::ExperimentConfig,
     /// Output directory for the manifest + block files.
     pub out: PathBuf,
+    /// External matrix file to shard instead of the configured generator.
+    pub input: Option<PathBuf>,
 }
 
 /// Parse `shard` CLI arguments.
 pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
     let mut out: Option<PathBuf> = None;
+    let mut input: Option<PathBuf> = None;
     let mut nodes_override = None;
     let mut cfg_args: Vec<String> = Vec::new();
     let mut i = 0;
@@ -42,6 +54,10 @@ pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
         match args[i].as_str() {
             "--out" => {
                 out = Some(PathBuf::from(args.get(i + 1).context("--out needs a DIR")?));
+                i += 2;
+            }
+            "--input" => {
+                input = Some(PathBuf::from(args.get(i + 1).context("--input needs a FILE")?));
                 i += 2;
             }
             "--nodes" => {
@@ -64,22 +80,35 @@ pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
         crate::bail!("shard needs at least one node");
     }
     let out = out.context("shard needs --out DIR")?;
-    Ok(ShardCliOptions { cfg, out })
+    Ok(ShardCliOptions { cfg, out, input })
 }
 
-/// `dsanls shard` entry point: generate, slice, write, report.
+/// `dsanls shard` entry point: generate (or ingest), slice, write, report.
 pub fn shard_main(args: &[String]) -> Result<()> {
     let opts = parse_shard_args(args)?;
     let cfg = &opts.cfg;
-    println!(
-        "sharding {} (seed {}, scale {}) for {} node(s) into {}",
-        cfg.dataset,
-        cfg.seed,
-        cfg.scale,
-        cfg.nodes,
-        opts.out.display()
-    );
-    let m = coordinator::load_dataset(cfg);
+    let (m, dataset_name) = match &opts.input {
+        Some(path) => {
+            println!(
+                "sharding matrix file {} for {} node(s) into {}",
+                path.display(),
+                cfg.nodes,
+                opts.out.display()
+            );
+            (ingest::load_matrix(path)?, shard::file_dataset_name(path))
+        }
+        None => {
+            println!(
+                "sharding {} (seed {}, scale {}) for {} node(s) into {}",
+                cfg.dataset,
+                cfg.seed,
+                cfg.scale,
+                cfg.nodes,
+                opts.out.display()
+            );
+            (coordinator::load_dataset(cfg), cfg.dataset.clone())
+        }
+    };
     let manifest = ShardManifest {
         nodes: cfg.nodes,
         rows: m.rows(),
@@ -88,7 +117,7 @@ pub fn shard_main(args: &[String]) -> Result<()> {
         seed: cfg.seed,
         scale: cfg.scale,
         dense: matches!(m, Matrix::Dense(_)),
-        dataset: cfg.dataset.clone(),
+        dataset: dataset_name,
     };
     let bytes = shard::write_shard_dir(&opts.out, &m, &manifest)?;
     println!(
@@ -122,6 +151,56 @@ mod tests {
         assert_eq!(o.cfg.rank, 4);
         assert_eq!(o.out, PathBuf::from("/tmp/s"));
         assert!(parse_shard_args(&["--nodes".into(), "2".into()]).is_err(), "--out required");
+    }
+
+    #[test]
+    fn shard_from_input_file_writes_loadable_dir() {
+        let base = std::env::temp_dir()
+            .join(format!("dsanls_shardinput_{}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        let coo = base.join("tiny.coo");
+        // 4x3, 5 entries — plenty for a 2-node shard set
+        std::fs::write(&coo, "4 3 5\n0 0 1.0\n1 1 2.0\n2 2 3.0\n3 0 4.0\n3 2 0.5\n").unwrap();
+        let dir = base.join("shards");
+        let args: Vec<String> = [
+            "--out",
+            dir.to_str().unwrap(),
+            "--input",
+            coo.to_str().unwrap(),
+            "--nodes",
+            "2",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        shard_main(&args).unwrap();
+        let manifest = shard::read_manifest(&dir).unwrap();
+        assert_eq!(manifest.nodes, 2);
+        assert_eq!(manifest.dataset, "FILE:tiny");
+        assert!(shard::is_file_dataset(&manifest.dataset));
+        assert_eq!((manifest.rows, manifest.cols), (4, 3));
+        let (data, _) = crate::data::shard::NodeData::load(&dir, 0, true, true).unwrap();
+        assert_eq!(data.fro_sq().to_bits(), manifest.fro_sq.to_bits());
+        assert!(data.nnz() > 0);
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    #[test]
+    fn shard_from_malformed_input_errors() {
+        let base = std::env::temp_dir()
+            .join(format!("dsanls_shardbad_{}", std::process::id()));
+        std::fs::create_dir_all(&base).unwrap();
+        let coo = base.join("bad.coo");
+        std::fs::write(&coo, "4 3 5\n0 0 1.0\n9 9 2.0\n").unwrap(); // oob + truncated
+        let dir = base.join("shards");
+        let args: Vec<String> =
+            ["--out", dir.to_str().unwrap(), "--input", coo.to_str().unwrap(), "--nodes", "2"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let err = shard_main(&args).unwrap_err();
+        assert!(err.to_string().contains("line"), "error should name the line: {err}");
+        std::fs::remove_dir_all(&base).ok();
     }
 
     #[test]

@@ -172,55 +172,70 @@ impl Dataset {
         rows: std::ops::Range<usize>,
         cols: std::ops::Range<usize>,
     ) -> Matrix {
+        let w = synth::GenWindow { rows, cols };
+        self.generate_windows(seed, scale, std::slice::from_ref(&w))
+            .pop()
+            .expect("one window in, one block out")
+    }
+
+    /// Multi-window shard-local generation: fill **every** window in a
+    /// single replay of the generator stream (a DSANLS rank holds both its
+    /// row and its column block — one pass instead of one replay per block
+    /// halves shard-local generation CPU). Each returned block is
+    /// bit-identical to a dedicated [`Dataset::generate_window`] call.
+    pub fn generate_windows(
+        &self,
+        seed: u64,
+        scale: f64,
+        windows: &[synth::GenWindow],
+    ) -> Vec<Matrix> {
         let spec = self.spec();
         let (g_rows, g_cols) = self.scaled_dims(scale);
-        let w = synth::GenWindow { rows, cols };
         let mut rng: Pcg64 = StreamRng::new(seed).for_iteration(*self as u64, Role::Data);
         match self {
-            Dataset::Boats => Matrix::Dense(synth::low_rank_dense_window(
+            Dataset::Boats | Dataset::Face => synth::low_rank_dense_windows(
                 g_rows,
                 g_cols,
                 spec.true_rank,
-                0.05,
-                &w,
+                if matches!(self, Dataset::Boats) { 0.05 } else { 0.08 },
+                windows,
                 &mut rng,
-            )),
-            Dataset::Face => Matrix::Dense(synth::low_rank_dense_window(
-                g_rows,
-                g_cols,
-                spec.true_rank,
-                0.08,
-                &w,
-                &mut rng,
-            )),
-            Dataset::Mnist | Dataset::Gisette => Matrix::Sparse(synth::blocky_sparse_window(
+            )
+            .into_iter()
+            .map(Matrix::Dense)
+            .collect(),
+            Dataset::Mnist | Dataset::Gisette => synth::blocky_sparse_windows(
                 g_rows,
                 g_cols,
                 spec.true_rank,
                 1.0 - spec.paper_sparsity,
-                &w,
+                windows,
                 &mut rng,
-            )),
+            )
+            .into_iter()
+            .map(Matrix::Sparse)
+            .collect(),
             Dataset::Rcv1 => {
                 let nnz = ((g_rows * g_cols) as f64 * (1.0 - spec.paper_sparsity) * 4.0) as usize;
-                Matrix::Sparse(synth::power_law_sparse_window(
+                synth::power_law_sparse_windows(
                     g_rows,
                     g_cols,
                     nnz.max(10 * g_rows),
                     spec.true_rank,
                     1.05,
-                    &w,
+                    windows,
                     &mut rng,
-                ))
+                )
+                .into_iter()
+                .map(Matrix::Sparse)
+                .collect()
             }
             Dataset::Dblp => {
                 let edges = (g_rows as f64 * 7.6) as usize; // matches paper's avg degree
-                Matrix::Sparse(synth::power_law_graph_window(
-                    g_rows.max(g_cols),
-                    edges,
-                    &w,
-                    &mut rng,
-                ))
+                synth::power_law_graph_windows(g_rows.max(g_cols), edges, windows, &mut rng)
+                    .into_iter()
+                    .map(Matrix::Sparse)
+                    .collect()
             }
         }
     }
@@ -284,6 +299,32 @@ mod tests {
             let (rows, cols) = d.scaled_shape(0.02);
             let m = d.generate_scaled(7, 0.02);
             assert_eq!((m.rows(), m.cols()), (rows, cols), "{:?}", d);
+        }
+    }
+
+    #[test]
+    fn dual_window_single_pass_matches_two_pass() {
+        // what a DSANLS rank does: row block + column block from ONE
+        // generator replay, bit-identical to two dedicated replays
+        for d in ALL_DATASETS {
+            let (rows, cols) = d.scaled_shape(0.02);
+            let rr = rows / 4..rows / 2;
+            let cc = cols / 3..cols / 2 + 1;
+            let ws = [
+                synth::GenWindow { rows: rr.clone(), cols: 0..cols },
+                synth::GenWindow { rows: 0..rows, cols: cc.clone() },
+            ];
+            let both = d.generate_windows(13, 0.02, &ws);
+            let row_blk = d.generate_window(13, 0.02, rr, 0..cols);
+            let col_blk = d.generate_window(13, 0.02, 0..rows, cc);
+            assert!(
+                crate::data::shard::matrix_bits_eq(&both[0], &row_blk),
+                "{d:?}: one-pass row block != two-pass"
+            );
+            assert!(
+                crate::data::shard::matrix_bits_eq(&both[1], &col_blk),
+                "{d:?}: one-pass col block != two-pass"
+            );
         }
     }
 

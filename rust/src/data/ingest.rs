@@ -1,0 +1,244 @@
+//! External matrix ingestion: a simple COO text / MatrixMarket-style
+//! reader, so `dsanls shard --input FILE` can pre-slice a *real* matrix
+//! instead of the synthetic Table-1 generators.
+//!
+//! ## Accepted format
+//!
+//! * An optional `%%MatrixMarket matrix coordinate <field> general` banner
+//!   on the first line. With the banner, entry indices are **1-based**
+//!   (the MatrixMarket convention) and `<field>` may be `real`, `integer`
+//!   or `pattern` (pattern entries carry no value and are read as `1.0`).
+//!   Only `general` symmetry is supported.
+//! * Comment lines starting with `%` or `#` (anywhere), blank lines
+//!   ignored.
+//! * The first non-comment line is the header: `rows cols nnz`.
+//! * Then exactly `nnz` entry lines: `row col value` (`row col` for
+//!   pattern files). Without a banner, indices are **0-based**.
+//!
+//! Values must be finite and nonnegative (NMF input); duplicates are
+//! summed ([`crate::linalg::Csr::from_triplets`]). Every malformed input —
+//! truncated file, missing header, out-of-range index, negative or
+//! unparsable value — is a typed [`crate::error::Error`] naming the
+//! offending line, never a panic.
+
+use std::path::Path;
+
+use crate::data::synth::auto_storage;
+use crate::error::{Context, Result};
+use crate::linalg::{Csr, Matrix};
+
+/// Load a COO text / `.mtx`-style matrix file (see the module docs for the
+/// format). Storage (dense vs CSR) is chosen by the achieved density, like
+/// the synthetic generators.
+pub fn load_matrix(path: &Path) -> Result<Matrix> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading matrix file {}", path.display()))?;
+    parse_coo(&text).with_context(|| format!("parsing matrix file {}", path.display()))
+}
+
+/// Parse COO text (the testable core of [`load_matrix`]).
+pub fn parse_coo(text: &str) -> Result<Matrix> {
+    let mut lines = text.lines().enumerate();
+
+    // --- optional MatrixMarket banner on the very first line ---
+    let mut one_based = false;
+    let mut pattern = false;
+    let mut header: Option<(usize, &str)> = None;
+    for (no, raw) in lines.by_ref() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(banner) = line.strip_prefix("%%") {
+            let b = banner.to_ascii_lowercase();
+            if !b.starts_with("matrixmarket") {
+                crate::bail!("line {}: unknown %% banner {line:?}", no + 1);
+            }
+            if !b.contains("matrix") || !b.contains("coordinate") {
+                crate::bail!(
+                    "line {}: only `matrix coordinate` MatrixMarket files are supported",
+                    no + 1
+                );
+            }
+            if !b.contains("general") {
+                crate::bail!(
+                    "line {}: only `general` symmetry is supported (got {line:?})",
+                    no + 1
+                );
+            }
+            one_based = true;
+            pattern = b.contains("pattern");
+            continue;
+        }
+        if line.starts_with('%') || line.starts_with('#') {
+            continue;
+        }
+        header = Some((no, line));
+        break;
+    }
+    let (hline, htext) = header.context("no header line (`rows cols nnz`) before end of file")?;
+    let hf: Vec<&str> = htext.split_whitespace().collect();
+    if hf.len() != 3 {
+        crate::bail!("line {}: header must be `rows cols nnz`, got {htext:?}", hline + 1);
+    }
+    let parse_dim = |s: &str, what: &str| -> Result<usize> {
+        s.parse::<usize>()
+            .map_err(|e| crate::err!("line {}: bad {what} {s:?}: {e}", hline + 1))
+    };
+    let rows = parse_dim(hf[0], "row count")?;
+    let cols = parse_dim(hf[1], "column count")?;
+    let nnz = parse_dim(hf[2], "entry count")?;
+    if rows == 0 || cols == 0 {
+        crate::bail!("line {}: empty matrix ({rows}x{cols})", hline + 1);
+    }
+
+    // --- entries ---
+    let base = usize::from(one_based);
+    let mut triplets: Vec<(usize, usize, f32)> = Vec::with_capacity(nnz);
+    for (no, raw) in lines {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('%') || line.starts_with('#') {
+            continue;
+        }
+        if triplets.len() == nnz {
+            crate::bail!("line {}: more than the {nnz} entries the header declared", no + 1);
+        }
+        let f: Vec<&str> = line.split_whitespace().collect();
+        let value = match (f.len(), pattern) {
+            (2, true) => 1.0f32,
+            (3, false) => {
+                let v = f[2]
+                    .parse::<f32>()
+                    .map_err(|e| crate::err!("line {}: bad value {:?}: {e}", no + 1, f[2]))?;
+                if !v.is_finite() {
+                    crate::bail!("line {}: non-finite value {v}", no + 1);
+                }
+                if v < 0.0 {
+                    crate::bail!("line {}: negative value {v} (NMF input must be ≥ 0)", no + 1);
+                }
+                v
+            }
+            _ => crate::bail!(
+                "line {}: expected `row col{}` ({} fields), got {line:?}",
+                no + 1,
+                if pattern { "" } else { " value" },
+                if pattern { 2 } else { 3 }
+            ),
+        };
+        let idx = |s: &str, extent: usize, what: &str| -> Result<usize> {
+            let i = s
+                .parse::<usize>()
+                .map_err(|e| crate::err!("line {}: bad {what} index {s:?}: {e}", no + 1))?;
+            let i = i
+                .checked_sub(base)
+                .with_context(|| format!("line {}: {what} index 0 in a 1-based file", no + 1))?;
+            if i >= extent {
+                crate::bail!(
+                    "line {}: {what} index {i} outside 0..{extent} (after {}-based adjustment)",
+                    no + 1,
+                    base
+                );
+            }
+            Ok(i)
+        };
+        let r = idx(f[0], rows, "row")?;
+        let c = idx(f[1], cols, "column")?;
+        triplets.push((r, c, value));
+    }
+    if triplets.len() != nnz {
+        crate::bail!(
+            "file ends after {} entries but the header declared {nnz} (truncated file?)",
+            triplets.len()
+        );
+    }
+    Ok(auto_storage(Csr::from_triplets(rows, cols, triplets)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plain_coo_roundtrip() {
+        let m = parse_coo("# sparse 3x4\n3 4 3\n0 0 1.5\n2 3 2.0\n1 1 0.25\n").unwrap();
+        assert_eq!((m.rows(), m.cols()), (3, 4));
+        assert_eq!(m.nnz(), 3);
+        match &m {
+            Matrix::Sparse(s) => {
+                let d = s.to_dense();
+                assert_eq!(d.get(0, 0), 1.5);
+                assert_eq!(d.get(2, 3), 2.0);
+                assert_eq!(d.get(1, 1), 0.25);
+            }
+            Matrix::Dense(_) => panic!("3 of 12 entries must stay sparse"),
+        }
+    }
+
+    #[test]
+    fn matrix_market_one_based_and_pattern() {
+        let real = "%%MatrixMarket matrix coordinate real general\n% comment\n2 2 2\n1 1 3.0\n2 2 4.0\n";
+        let m = parse_coo(real).unwrap();
+        assert_eq!(m.nnz(), 2);
+        let d = match &m {
+            Matrix::Dense(d) => d.clone(),
+            Matrix::Sparse(s) => s.to_dense(),
+        };
+        assert_eq!((d.get(0, 0), d.get(1, 1)), (3.0, 4.0));
+
+        let pat = "%%MatrixMarket matrix coordinate pattern general\n2 3 2\n1 3\n2 1\n";
+        let m = parse_coo(pat).unwrap();
+        assert_eq!(m.nnz(), 2);
+    }
+
+    #[test]
+    fn duplicates_are_summed() {
+        let m = parse_coo("2 2 2\n0 1 1.0\n0 1 2.5\n").unwrap();
+        assert_eq!(m.nnz(), 1, "duplicates must merge");
+        if let Matrix::Sparse(s) = &m {
+            assert_eq!(s.values(), &[3.5]);
+        }
+    }
+
+    #[test]
+    fn dense_storage_for_dense_files() {
+        let mut text = String::from("2 2 4\n");
+        for r in 0..2 {
+            for c in 0..2 {
+                text.push_str(&format!("{r} {c} 1.0\n"));
+            }
+        }
+        assert!(matches!(parse_coo(&text).unwrap(), Matrix::Dense(_)));
+    }
+
+    #[test]
+    fn malformed_inputs_error_cleanly() {
+        for (tag, text) in [
+            ("empty", ""),
+            ("comment only", "# nothing\n% here\n"),
+            ("short header", "3 4\n"),
+            ("bad header token", "3 x 2\n0 0 1\n0 1 1\n"),
+            ("zero dims", "0 4 0\n"),
+            ("bad value", "2 2 1\n0 0 abc\n"),
+            ("negative value", "2 2 1\n0 0 -1.0\n"),
+            ("non-finite value", "2 2 1\n0 0 inf\n"),
+            ("row out of range", "2 2 1\n2 0 1.0\n"),
+            ("col out of range", "2 2 1\n0 5 1.0\n"),
+            ("truncated entries", "2 2 3\n0 0 1.0\n"),
+            ("extra entries", "2 2 1\n0 0 1.0\n1 1 1.0\n"),
+            ("two fields no pattern", "2 2 1\n0 0\n"),
+            ("symmetric banner", "%%MatrixMarket matrix coordinate real symmetric\n2 2 1\n1 1 1\n"),
+            ("array banner", "%%MatrixMarket matrix array real general\n2 2 1\n1 1 1\n"),
+            ("unknown banner", "%%NotMatrixMarket\n2 2 1\n0 0 1\n"),
+            ("one-based zero index", "%%MatrixMarket matrix coordinate real general\n2 2 1\n0 1 1\n"),
+        ] {
+            let r = parse_coo(text);
+            assert!(r.is_err(), "{tag}: malformed input must error");
+        }
+    }
+
+    #[test]
+    fn load_matrix_io_error_has_context() {
+        let err = load_matrix(Path::new("/definitely/not/here.mtx")).unwrap_err();
+        assert!(err.to_string().contains("matrix file"), "{err}");
+    }
+}

@@ -11,8 +11,11 @@
 //!   ([`shard::NodeData`]), bit-identical shard-local synthesis, the
 //!   on-disk `dsanls shard` format, and the exact distributed `‖M‖²`
 //!   reduction.
+//! * [`ingest`] — external matrix ingestion (COO text / MatrixMarket-style
+//!   files) for `dsanls shard --input FILE`.
 
 pub mod datasets;
+pub mod ingest;
 pub mod partition;
 pub mod shard;
 pub mod synth;

@@ -191,8 +191,9 @@ pub fn matrix_bits_eq(a: &Matrix, b: &Matrix) -> bool {
 ///
 /// Constructed three ways — [`NodeData::from_full`] (slice a materialised
 /// matrix; simulator and tests), [`NodeData::generate`] (shard-local
-/// synthesis), [`NodeData::load`] (shard directory) — and consumed by the
-/// `*_node_sharded` entry points in [`crate::algos`] / [`crate::secure`].
+/// synthesis), [`NodeData::load`] (shard directory) — and consumed, via
+/// [`NodeInput::Shard`], by the per-rank node runners in [`crate::algos`]
+/// / [`crate::secure`].
 #[derive(Debug, Clone)]
 pub struct NodeData {
     /// Global matrix rows.
@@ -229,8 +230,12 @@ impl NodeData {
 
     /// Synthesise a rank's blocks shard-locally (no full-matrix buffer is
     /// ever allocated). Pass `None` for a block the rank does not need.
-    /// `fro_sq` starts unresolved — run [`exact_fro_sq`] before algorithms
-    /// that initialise factors.
+    /// When both blocks are requested they are filled in a **single pass**
+    /// over the generator stream ([`Dataset::generate_windows`]) — one
+    /// replay instead of one per block, halving shard-local generation CPU
+    /// — and stay bit-identical to slicing the full matrix. `fro_sq`
+    /// starts unresolved — run [`exact_fro_sq`] before algorithms that
+    /// initialise factors.
     pub fn generate(
         dataset: Dataset,
         seed: u64,
@@ -239,12 +244,22 @@ impl NodeData {
         col_range: Option<Range<usize>>,
     ) -> NodeData {
         let (rows, cols) = dataset.scaled_shape(scale);
-        let m_rows = row_range
-            .clone()
-            .map(|r| dataset.generate_window(seed, scale, r, 0..cols));
-        let m_cols = col_range
-            .clone()
-            .map(|c| dataset.generate_window(seed, scale, 0..rows, c));
+        let mut windows = Vec::with_capacity(2);
+        if let Some(r) = &row_range {
+            windows.push(crate::data::synth::GenWindow { rows: r.clone(), cols: 0..cols });
+        }
+        if let Some(c) = &col_range {
+            windows.push(crate::data::synth::GenWindow { rows: 0..rows, cols: c.clone() });
+        }
+        let mut blocks = if windows.is_empty() {
+            Vec::new()
+        } else {
+            dataset.generate_windows(seed, scale, &windows)
+        };
+        // generate_windows returns blocks in window order: row first (when
+        // requested), then column — pop back-to-front
+        let m_cols = col_range.as_ref().map(|_| blocks.pop().expect("column block generated"));
+        let m_rows = row_range.as_ref().map(|_| blocks.pop().expect("row block generated"));
         NodeData {
             rows,
             cols,
@@ -253,6 +268,21 @@ impl NodeData {
             m_rows,
             m_cols,
             fro_sq: None,
+        }
+    }
+
+    /// A metadata-only view: global shape plus the exact global `‖M‖²`, no
+    /// resident blocks — what the asynchronous parameter server (which
+    /// holds no data) runs on.
+    pub fn metadata(rows: usize, cols: usize, fro_sq: Option<f64>) -> NodeData {
+        NodeData {
+            rows,
+            cols,
+            row_range: 0..0,
+            col_range: 0..0,
+            m_rows: None,
+            m_cols: None,
+            fro_sq,
         }
     }
 
@@ -343,7 +373,11 @@ impl NodeData {
 
 /// The input a per-rank algorithm entry point runs on: either the full
 /// matrix (simulator, tests — every rank slices its own blocks) or a
-/// pre-sharded [`NodeData`] view (real workers).
+/// pre-sharded [`NodeData`] view (real workers). This is the single
+/// resolved view the per-algorithm node runners
+/// ([`crate::algos::dsanls::dsanls_rank`], [`crate::secure::syn::syn_rank`],
+/// …) take — there are no separate full/sharded entry points.
+#[derive(Clone, Copy)]
 pub enum NodeInput<'a> {
     /// The rank can see the whole matrix and slices its blocks itself.
     Full(&'a Matrix),
@@ -377,6 +411,19 @@ impl NodeInput<'_> {
             NodeInput::Shard(d) => {
                 assert_eq!(d.row_range, expect, "shard row range != rank's partition");
                 std::borrow::Cow::Borrowed(d.require_rows())
+            }
+        }
+    }
+
+    /// The rank's column block `M_{:J_r}` for the given partition range:
+    /// sliced out of the full matrix, or borrowed from the shard view
+    /// (whose range must match the rank's partition — the shard contract).
+    pub fn col_block(&self, expect: Range<usize>) -> std::borrow::Cow<'_, Matrix> {
+        match self {
+            NodeInput::Full(m) => std::borrow::Cow::Owned(m.col_block(expect)),
+            NodeInput::Shard(d) => {
+                assert_eq!(d.col_range, expect, "shard col range != rank's partition");
+                std::borrow::Cow::Borrowed(d.require_cols())
             }
         }
     }
@@ -474,6 +521,22 @@ pub struct ShardManifest {
     pub dense: bool,
     /// Dataset name (upper-case, e.g. `FACE`).
     pub dataset: String,
+}
+
+/// Manifest dataset-name prefix marking shards sliced from an external
+/// matrix file (`dsanls shard --input`) rather than a synthetic generator.
+pub const FILE_DATASET_PREFIX: &str = "FILE:";
+
+/// The manifest dataset name for shards of the external file at `path`.
+pub fn file_dataset_name(path: &Path) -> String {
+    let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("matrix");
+    format!("{FILE_DATASET_PREFIX}{stem}")
+}
+
+/// Whether a manifest dataset name marks file-ingested (non-regenerable)
+/// shards.
+pub fn is_file_dataset(name: &str) -> bool {
+    name.starts_with(FILE_DATASET_PREFIX)
 }
 
 /// On-disk format version; bump on any layout change (readers reject

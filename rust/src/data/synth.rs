@@ -17,6 +17,14 @@
 //! stream, which is cheap relative to the factorization itself). The
 //! unwindowed entry points are thin wrappers over the full window, so
 //! there is exactly one generation code path to keep in sync.
+//!
+//! Each generator's `*_windows` form fills **several** windows in a single
+//! replay — a DSANLS rank needs both its row block and its column block,
+//! and replaying the stream once per block would cost 2× full-generation
+//! CPU per rank ([`crate::data::shard::NodeData::generate`] uses the
+//! single-pass form). Per-window outputs are bit-identical to dedicated
+//! single-window replays (asserted by
+//! `multi_window_single_pass_matches_two_pass`).
 
 use std::ops::Range;
 
@@ -64,21 +72,28 @@ impl GenWindow {
 }
 
 /// Draw a `total×k` Uniform[0, scale) matrix with the exact draw order of
-/// [`Mat::rand_uniform`], but store only the rows in `keep`.
-fn rand_uniform_row_window(
+/// [`Mat::rand_uniform`], storing each kept row into **every** window whose
+/// range contains it — one pass over the stream no matter how many windows
+/// are filled. Each returned matrix is bit-identical to what a dedicated
+/// single-window replay would produce (every row's values are drawn exactly
+/// once, in global order, kept or not).
+fn rand_uniform_row_windows(
     total: usize,
     k: usize,
     scale: f32,
-    keep: &Range<usize>,
+    keeps: &[Range<usize>],
     rng: &mut Pcg64,
-) -> Mat {
-    let mut out = Mat::zeros(keep.len(), k);
-    let data = out.data_mut();
+) -> Vec<Mat> {
+    let mut outs: Vec<Mat> = keeps.iter().map(|keep| Mat::zeros(keep.len(), k)).collect();
     for i in 0..total {
-        if keep.contains(&i) {
-            let base = (i - keep.start) * k;
-            for x in data[base..base + k].iter_mut() {
-                *x = rng.next_f32() * scale;
+        if keeps.iter().any(|keep| keep.contains(&i)) {
+            for l in 0..k {
+                let v = rng.next_f32() * scale;
+                for (out, keep) in outs.iter_mut().zip(keeps.iter()) {
+                    if keep.contains(&i) {
+                        out.data_mut()[(i - keep.start) * k + l] = v;
+                    }
+                }
             }
         } else {
             for _ in 0..k {
@@ -86,7 +101,7 @@ fn rand_uniform_row_window(
             }
         }
     }
-    out
+    outs
 }
 
 /// Dense nonnegative low-rank + noise:
@@ -107,11 +122,6 @@ pub fn low_rank_dense(
 
 /// Windowed [`low_rank_dense`]: the returned block equals
 /// `low_rank_dense(..).row_block(w.rows).col_block(w.cols)` bit-for-bit.
-///
-/// The planted factors are factor-sized (`|window|×k` and full `k`-wide
-/// strips), the product is computed directly at block shape, and the noise
-/// stream is replayed entry-by-entry in global row-major order — identical
-/// Box–Muller draws, only the in-window samples are added.
 pub fn low_rank_dense_window(
     rows: usize,
     cols: usize,
@@ -120,22 +130,50 @@ pub fn low_rank_dense_window(
     w: &GenWindow,
     rng: &mut Pcg64,
 ) -> Mat {
-    w.validate(rows, cols);
-    let u = rand_uniform_row_window(rows, true_rank, 1.0, &w.rows, rng);
-    let v = rand_uniform_row_window(cols, true_rank, 1.0, &w.cols, rng);
+    low_rank_dense_windows(rows, cols, true_rank, noise, std::slice::from_ref(w), rng)
+        .pop()
+        .expect("one window in, one block out")
+}
+
+/// Multi-window [`low_rank_dense`]: fill every window in **one** replay of
+/// the generator stream (a DSANLS rank needs both its row and its column
+/// block — two independent replays would cost 2× full-generation CPU).
+/// Each returned block is bit-identical to a dedicated single-window call.
+///
+/// The planted factors are factor-sized (`|window|×k` and full `k`-wide
+/// strips), each window's product is computed directly at block shape, and
+/// the noise stream is replayed entry-by-entry in global row-major order —
+/// identical Box–Muller draws, with each in-window sample added to every
+/// window containing it.
+pub fn low_rank_dense_windows(
+    rows: usize,
+    cols: usize,
+    true_rank: usize,
+    noise: f32,
+    ws: &[GenWindow],
+    rng: &mut Pcg64,
+) -> Vec<Mat> {
+    for w in ws {
+        w.validate(rows, cols);
+    }
+    let row_keeps: Vec<Range<usize>> = ws.iter().map(|w| w.rows.clone()).collect();
+    let col_keeps: Vec<Range<usize>> = ws.iter().map(|w| w.cols.clone()).collect();
+    let us = rand_uniform_row_windows(rows, true_rank, 1.0, &row_keeps, rng);
+    let vs = rand_uniform_row_windows(cols, true_rank, 1.0, &col_keeps, rng);
     // Per-element GEMM accumulation runs over k in order regardless of the
-    // output position, so the block product is bitwise the full-product
+    // output position, so each block product is bitwise the full-product
     // slice (asserted by data::shard tests).
-    let mut m = u.matmul_nt(&v);
+    let mut ms: Vec<Mat> = us.iter().zip(vs.iter()).map(|(u, v)| u.matmul_nt(v)).collect();
     if noise > 0.0 {
         let mut g = Gaussian::new(rng.clone());
-        let (_, wcols) = w.shape();
-        let data = m.data_mut();
         for i in 0..rows {
             for j in 0..cols {
                 let s = g.sample_f32(noise);
-                if w.contains(i, j) {
-                    data[(i - w.rows.start) * wcols + (j - w.cols.start)] += s.abs();
+                for (m, w) in ms.iter_mut().zip(ws.iter()) {
+                    if w.contains(i, j) {
+                        let wcols = w.cols.len();
+                        m.data_mut()[(i - w.rows.start) * wcols + (j - w.cols.start)] += s.abs();
+                    }
                 }
             }
         }
@@ -144,7 +182,7 @@ pub fn low_rank_dense_window(
             rng.next_u64();
         }
     }
-    m
+    ms
 }
 
 /// Sparse power-law matrix (bag-of-words / term-document): column
@@ -176,7 +214,25 @@ pub fn power_law_sparse_window(
     w: &GenWindow,
     rng: &mut Pcg64,
 ) -> Csr {
-    w.validate(rows, cols);
+    power_law_sparse_windows(rows, cols, nnz_target, true_rank, zipf, std::slice::from_ref(w), rng)
+        .pop()
+        .expect("one window in, one block out")
+}
+
+/// Multi-window [`power_law_sparse`]: one replay of the triplet stream
+/// fills every window (see [`low_rank_dense_windows`]).
+pub fn power_law_sparse_windows(
+    rows: usize,
+    cols: usize,
+    nnz_target: usize,
+    true_rank: usize,
+    zipf: f64,
+    ws: &[GenWindow],
+    rng: &mut Pcg64,
+) -> Vec<Csr> {
+    for w in ws {
+        w.validate(rows, cols);
+    }
     // topic model: each row gets a topic, each topic a column distribution
     // biased by Zipf rank; draws cluster within topics.
     let mut weights: Vec<f64> = (0..cols).map(|c| 1.0 / ((c + 1) as f64).powf(zipf)).collect();
@@ -201,7 +257,10 @@ pub fn power_law_sparse_window(
 
     let k = true_rank.max(1);
     let row_topic: Vec<usize> = (0..rows).map(|_| rng.below(k)).collect();
-    let mut triplets = Vec::with_capacity(w.expected_hits(rows, cols, nnz_target));
+    let mut triplets: Vec<Vec<(usize, usize, f32)>> = ws
+        .iter()
+        .map(|w| Vec::with_capacity(w.expected_hits(rows, cols, nnz_target)))
+        .collect();
     for _ in 0..nnz_target {
         let i = rng.below(rows);
         // topic shift: rotate the sampled column by a topic-dependent offset
@@ -209,12 +268,24 @@ pub fn power_law_sparse_window(
         let base = sample_col(rng);
         let j = (base + row_topic[i] * (cols / k.max(1))) % cols;
         let v = 1.0 + (rng.next_f32() * 4.0).floor(); // count-like 1..=4
-        if w.contains(i, j) {
-            triplets.push((i - w.rows.start, j - w.cols.start, v));
+        for (t, w) in triplets.iter_mut().zip(ws.iter()) {
+            if w.contains(i, j) {
+                t.push((i - w.rows.start, j - w.cols.start, v));
+            }
         }
     }
-    let (wrows, wcols) = w.shape();
-    Csr::from_triplets(wrows, wcols, triplets)
+    finish_sparse_windows(ws, triplets)
+}
+
+/// Assemble each window's rebased triplets into its CSR block.
+fn finish_sparse_windows(ws: &[GenWindow], triplets: Vec<Vec<(usize, usize, f32)>>) -> Vec<Csr> {
+    ws.iter()
+        .zip(triplets)
+        .map(|(w, t)| {
+            let (wrows, wcols) = w.shape();
+            Csr::from_triplets(wrows, wcols, t)
+        })
+        .collect()
 }
 
 /// Symmetric power-law graph adjacency (DBLP-like co-authorship):
@@ -231,8 +302,26 @@ pub fn power_law_graph_window(
     w: &GenWindow,
     rng: &mut Pcg64,
 ) -> Csr {
-    w.validate(nodes, nodes);
-    let mut triplets = Vec::with_capacity(w.expected_hits(nodes, nodes, edges * 2));
+    power_law_graph_windows(nodes, edges, std::slice::from_ref(w), rng)
+        .pop()
+        .expect("one window in, one block out")
+}
+
+/// Multi-window [`power_law_graph`]: one replay of the edge stream fills
+/// every window (see [`low_rank_dense_windows`]).
+pub fn power_law_graph_windows(
+    nodes: usize,
+    edges: usize,
+    ws: &[GenWindow],
+    rng: &mut Pcg64,
+) -> Vec<Csr> {
+    for w in ws {
+        w.validate(nodes, nodes);
+    }
+    let mut triplets: Vec<Vec<(usize, usize, f32)>> = ws
+        .iter()
+        .map(|w| Vec::with_capacity(w.expected_hits(nodes, nodes, edges * 2)))
+        .collect();
     for _ in 0..edges {
         // endpoint ∝ (rank+1)^-0.8 via rejection-free inverse power draw
         let a = power_index(nodes, 0.8, rng);
@@ -240,15 +329,16 @@ pub fn power_law_graph_window(
         if a == b {
             continue;
         }
-        if w.contains(a, b) {
-            triplets.push((a - w.rows.start, b - w.cols.start, 1.0));
-        }
-        if w.contains(b, a) {
-            triplets.push((b - w.rows.start, a - w.cols.start, 1.0));
+        for (t, w) in triplets.iter_mut().zip(ws.iter()) {
+            if w.contains(a, b) {
+                t.push((a - w.rows.start, b - w.cols.start, 1.0));
+            }
+            if w.contains(b, a) {
+                t.push((b - w.rows.start, a - w.cols.start, 1.0));
+            }
         }
     }
-    let (wrows, wcols) = w.shape();
-    Csr::from_triplets(wrows, wcols, triplets)
+    finish_sparse_windows(ws, triplets)
 }
 
 fn power_index(n: usize, alpha: f64, rng: &mut Pcg64) -> usize {
@@ -281,12 +371,29 @@ pub fn blocky_sparse_window(
     w: &GenWindow,
     rng: &mut Pcg64,
 ) -> Csr {
-    w.validate(rows, cols);
+    blocky_sparse_windows(rows, cols, true_rank, density, std::slice::from_ref(w), rng)
+        .pop()
+        .expect("one window in, one block out")
+}
+
+/// Multi-window [`blocky_sparse`]: one replay of the stroke stream fills
+/// every window (see [`low_rank_dense_windows`]).
+pub fn blocky_sparse_windows(
+    rows: usize,
+    cols: usize,
+    true_rank: usize,
+    density: f64,
+    ws: &[GenWindow],
+    rng: &mut Pcg64,
+) -> Vec<Csr> {
+    for w in ws {
+        w.validate(rows, cols);
+    }
     // templates: each covers a contiguous band of pixels
     let k = true_rank.max(1);
     let band = (cols as f64 * density * 2.0).ceil() as usize;
     let band = band.clamp(1, cols);
-    let mut triplets = Vec::new();
+    let mut triplets: Vec<Vec<(usize, usize, f32)>> = ws.iter().map(|_| Vec::new()).collect();
     for i in 0..rows {
         // each image mixes 1–3 templates
         let n_tpl = 1 + rng.below(3);
@@ -298,15 +405,16 @@ pub fn blocky_sparse_window(
                 if rng.next_f32() < 0.5 {
                     let col = (start + j) % cols;
                     let v = 0.2 + rng.next_f32();
-                    if w.contains(i, col) {
-                        triplets.push((i - w.rows.start, col - w.cols.start, v));
+                    for (tr, w) in triplets.iter_mut().zip(ws.iter()) {
+                        if w.contains(i, col) {
+                            tr.push((i - w.rows.start, col - w.cols.start, v));
+                        }
                     }
                 }
             }
         }
     }
-    let (wrows, wcols) = w.shape();
-    Csr::from_triplets(wrows, wcols, triplets)
+    finish_sparse_windows(ws, triplets)
 }
 
 /// Wrap a generator output in [`Matrix`], choosing dense/sparse storage by
@@ -423,6 +531,56 @@ mod tests {
             blocky_sparse_window(60, 40, 5, 0.2, &w, &mut rng)
         };
         assert_eq!(full.row_block(w.rows.clone()).col_block(w.cols.clone()), block);
+    }
+
+    #[test]
+    fn multi_window_single_pass_matches_two_pass() {
+        // the single-pass dual-window fill must be bit-identical to two
+        // independent replays (one per window) — the shard data plane's
+        // row-block + column-block shape
+        let w1 = GenWindow { rows: 10..30, cols: 0..40 }; // row-block style
+        let w2 = GenWindow { rows: 0..60, cols: 12..25 }; // col-block style
+        let ws = [w1.clone(), w2.clone()];
+
+        let both = {
+            let mut rng = Pcg64::new(920, 0);
+            low_rank_dense_windows(60, 40, 4, 0.03, &ws, &mut rng)
+        };
+        let mut rng = Pcg64::new(920, 0);
+        assert_eq!(both[0], low_rank_dense_window(60, 40, 4, 0.03, &w1, &mut rng));
+        let mut rng = Pcg64::new(920, 0);
+        assert_eq!(both[1], low_rank_dense_window(60, 40, 4, 0.03, &w2, &mut rng));
+
+        let both = {
+            let mut rng = Pcg64::new(921, 0);
+            power_law_sparse_windows(60, 40, 900, 4, 1.0, &ws, &mut rng)
+        };
+        let mut rng = Pcg64::new(921, 0);
+        assert_eq!(both[0], power_law_sparse_window(60, 40, 900, 4, 1.0, &w1, &mut rng));
+        let mut rng = Pcg64::new(921, 0);
+        assert_eq!(both[1], power_law_sparse_window(60, 40, 900, 4, 1.0, &w2, &mut rng));
+
+        let sq = [
+            GenWindow { rows: 10..30, cols: 0..60 },
+            GenWindow { rows: 0..60, cols: 12..25 },
+        ];
+        let both = {
+            let mut rng = Pcg64::new(922, 0);
+            power_law_graph_windows(60, 400, &sq, &mut rng)
+        };
+        let mut rng = Pcg64::new(922, 0);
+        assert_eq!(both[0], power_law_graph_window(60, 400, &sq[0], &mut rng));
+        let mut rng = Pcg64::new(922, 0);
+        assert_eq!(both[1], power_law_graph_window(60, 400, &sq[1], &mut rng));
+
+        let both = {
+            let mut rng = Pcg64::new(923, 0);
+            blocky_sparse_windows(60, 40, 5, 0.2, &ws, &mut rng)
+        };
+        let mut rng = Pcg64::new(923, 0);
+        assert_eq!(both[0], blocky_sparse_window(60, 40, 5, 0.2, &w1, &mut rng));
+        let mut rng = Pcg64::new(923, 0);
+        assert_eq!(both[1], blocky_sparse_window(60, 40, 5, 0.2, &w2, &mut rng));
     }
 
     #[test]

@@ -297,6 +297,11 @@ pub fn apply_node_thread_policy(nodes: usize) {
 
 /// Run `f` once per node on its own thread over the **simulated** backend
 /// and return the outputs in rank order. Panics in any node propagate.
+///
+/// KEEP IN SYNC: `crate::nmf::job::drive_sim` mirrors this driver's
+/// single-rank inline path and per-thread cap policy — the sim/TCP and
+/// builder/legacy bit-identity contracts depend on the two staying
+/// behaviourally identical (same for [`run_tcp_cluster`] vs `drive_tcp`).
 pub fn run_cluster<T, F>(nodes: usize, model: CommModel, f: F) -> Vec<T>
 where
     T: Send,

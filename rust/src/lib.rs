@@ -12,7 +12,9 @@
 //!   [`secure`] (Syn-SD, Syn-SSD, Asyn-SD, Asyn-SSD), all generic over the
 //!   pluggable [`transport`] layer — an in-process simulated cluster (the
 //!   [`dist`] clock/stall model) or real multi-process TCP workers
-//!   (`dsanls launch` / `dsanls worker`).
+//!   (`dsanls launch` / `dsanls worker`). The single front door is the
+//!   [`nmf::job::Job`] builder: one composition of algorithm × transport ×
+//!   data source, with streaming progress observers.
 //! * **L2 — JAX model** (`python/compile/model.py`) — the sketched update
 //!   step as a JAX graph, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 — Pallas kernels** (`python/compile/kernels/`) — proximal

@@ -13,8 +13,9 @@
 //!   [--shards DIR] ...` — one rank of a `launch` cluster. Builds only
 //!   its own row/column blocks of the dataset (shard-local synthesis, or
 //!   pre-sliced files via `--shards`) — never the full matrix.
-//! * `shard --out DIR [--nodes N] ...` — pre-slice the configured dataset
-//!   into per-rank block files + manifest for multi-host deployment
+//! * `shard --out DIR [--nodes N] [--input FILE] ...` — pre-slice the
+//!   configured dataset (or an external COO/`.mtx` matrix file) into
+//!   per-rank block files + manifest for multi-host deployment
 //!   (see DEPLOYMENT.md).
 //! * `compare [--config FILE] [--key=value ...]` — run DSANLS against all
 //!   three MPI-FAUN baselines on the configured dataset (a Fig. 2 panel).
@@ -72,8 +73,9 @@ fn usage() {
          worker:  dsanls worker --rendezvous HOST:PORT --rank R [--bind IP[:PORT]]\n\
                   [--advertise HOST[:PORT]] [--shards DIR] [--config FILE] [--key=value ...]\n\
                   one launch rank; holds only its row/column blocks of the input\n\
-         shard:   dsanls shard --out DIR [--nodes N] [--config FILE] [--key=value ...]\n\
-                  pre-slice the dataset into per-rank block files for multi-host runs\n\n\
+         shard:   dsanls shard --out DIR [--nodes N] [--input FILE] [--config FILE] [--key=value ...]\n\
+                  pre-slice the dataset — or an external COO/.mtx matrix file (--input)\n\
+                  — into per-rank block files for multi-host runs\n\n\
          Config keys (TOML sections flattened as --section.key=value):\n\
            experiment: name algorithm dataset scale nodes rank iterations seed eval_every backend\n\
            sketch:     kind d_u d_v\n\

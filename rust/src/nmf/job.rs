@@ -1,0 +1,1146 @@
+//! The unified `Job` API: **one builder for every algorithm × transport ×
+//! data source**.
+//!
+//! The paper contributes a *family* of interchangeable distributed NMF
+//! methods — DSANLS, the MPI-FAUN baselines, Syn-SD/SSD and Asyn-SD/SSD —
+//! and this module is their single front door. A [`Job`] composes three
+//! orthogonal axes:
+//!
+//! * **[`Algo`]** — which of the six methods runs, with its per-algorithm
+//!   parameters (the existing `*Options` structs);
+//! * **[`DataSource`]** — where each rank's data comes from: a
+//!   caller-materialised matrix ([`DataSource::Full`]), shard-local
+//!   windowed synthesis ([`DataSource::SyntheticWindow`] — no rank ever
+//!   holds the full matrix), or a pre-sliced `dsanls shard` directory
+//!   ([`DataSource::ShardDir`]);
+//! * **[`Backend`]** — which transport the cluster runs on: the in-process
+//!   simulated mesh with the modelled clock ([`Backend::Sim`]) or real
+//!   localhost TCP sockets, one thread per rank ([`Backend::Tcp`]).
+//!   (Multi-*process* and multi-host deployment keeps its dedicated
+//!   `dsanls launch` / `dsanls worker` CLI, which drives the same
+//!   [`Algorithm::run_rank`] node runners.)
+//!
+//! Because every per-rank node runner takes a resolved
+//! [`NodeInput`] and every collective reduces in rank order, a seeded job
+//! produces **bit-identical factors** across backends and data sources —
+//! the property `tests/dist_equivalence.rs` and `dsanls launch
+//! --verify-sim` assert.
+//!
+//! Progress can be **streamed** while the job runs: a
+//! [`JobBuilder::observer`] callback receives every traced sample
+//! ([`ProgressEvent`] — iteration, virtual clock, relative error,
+//! communication statistics) the moment rank 0 records it, instead of
+//! waiting for the post-hoc [`Outcome`] series. (The asynchronous
+//! protocols log per-client samples with private clocks; their merged
+//! trace is replayed to the observer at assembly, carrying the clients'
+//! summed statistics.)
+//!
+//! ```
+//! use dsanls::algos::DsanlsOptions;
+//! use dsanls::linalg::{Mat, Matrix};
+//! use dsanls::nmf::job::{Algo, Backend, DataSource, Job};
+//! use dsanls::rng::Pcg64;
+//!
+//! let mut rng = Pcg64::new(7, 0);
+//! let u = Mat::rand_uniform(40, 3, 1.0, &mut rng);
+//! let v = Mat::rand_uniform(30, 3, 1.0, &mut rng);
+//! let m = Matrix::Dense(u.matmul_nt(&v));
+//!
+//! let out = Job::builder()
+//!     .algorithm(Algo::Dsanls(DsanlsOptions {
+//!         nodes: 2,
+//!         rank: 3,
+//!         iterations: 4,
+//!         d_u: 8,
+//!         d_v: 8,
+//!         eval_every: 2,
+//!         ..Default::default()
+//!     }))
+//!     .data(DataSource::Full(&m))
+//!     .transport(Backend::Sim)
+//!     .run()
+//!     .unwrap();
+//! assert!(out.final_error().is_finite());
+//! assert_eq!(out.u.rows(), 40);
+//! ```
+//!
+//! Misuse — a missing algorithm or data source, a shard directory built
+//! for a different cluster size, an asynchronous run with fewer than two
+//! parties — returns a typed [`crate::error::Error`] from
+//! [`JobBuilder::build`] / [`Job::run`]; it never panics.
+
+use std::path::PathBuf;
+use std::time::{Duration, Instant};
+
+use crate::algos::{
+    self, DistAnlsOptions, DsanlsOptions, NodeOutput, ObserverFn, ProgressEvent, TracePoint,
+};
+use crate::config::{Algorithm as ConfigAlgorithm, ExperimentConfig};
+use crate::data::partition::{uniform_partition, Partition};
+use crate::data::shard::{self, LoadSource, LoadStats, NodeData, NodeInput};
+use crate::data::Dataset;
+use crate::dist::{CommModel, CommStats, NodeCtx};
+use crate::error::{Context, Result};
+use crate::linalg::{Mat, Matrix};
+use crate::metrics::Series;
+use crate::nmf::{init_factors_from, rel_error};
+use crate::rng::{Role, StreamRng};
+use crate::secure::asyn::{self, AsynClientOutput, AsynOptions};
+use crate::secure::syn::{self, SynNodeOutput, SynOptions};
+use crate::secure::{AuditLog, SecureAlgo};
+use crate::solvers::SolverKind;
+use crate::transport::{Communicator, Rendezvous, SimCluster, SimComm, TcpComm, TcpOptions};
+
+// ---------------------------------------------------------------------------
+// Outcome
+// ---------------------------------------------------------------------------
+
+/// The uniform outcome of any job (and of the legacy
+/// [`crate::coordinator::run_experiment`] path, which is built on it).
+#[derive(Debug, Clone)]
+pub struct Outcome {
+    /// Human-readable run label (algorithm / backend).
+    pub label: String,
+    /// Error-over-time samples.
+    pub trace: Vec<TracePoint>,
+    /// Per-rank communication/compute statistics.
+    pub stats: Vec<CommStats>,
+    /// Seconds per iteration (simulated clock or TCP wall time).
+    pub sec_per_iter: f64,
+    /// Assembled row factor `U`.
+    pub u: Mat,
+    /// Assembled column factor `V`.
+    pub v: Mat,
+    /// Per-rank data-plane statistics (what each rank loaded, resident
+    /// bytes, load time). Empty when every rank reads a shared
+    /// caller-materialised matrix ([`DataSource::Full`]).
+    pub loads: Vec<LoadStats>,
+}
+
+impl Outcome {
+    /// Last traced relative error (NaN on an empty trace).
+    pub fn final_error(&self) -> f64 {
+        self.trace.last().map(|p| p.rel_error).unwrap_or(f64::NAN)
+    }
+
+    /// Total bytes sent across all ranks.
+    pub fn total_bytes_sent(&self) -> usize {
+        self.stats.iter().map(|s| s.bytes_sent).sum()
+    }
+
+    /// The trace as a labelled CSV/plot series.
+    pub fn series(&self) -> Series {
+        Series::new(self.label.clone(), self.trace.clone())
+    }
+
+    /// Recompute the true global error of the returned factors (sanity
+    /// check against the traced value).
+    pub fn check_error(&self, m: &Matrix) -> f64 {
+        rel_error(m, &self.u, &self.v)
+    }
+
+    /// View as the legacy [`crate::algos::DistRun`] (deprecated-shim
+    /// compatibility).
+    pub fn into_dist_run(self) -> crate::algos::DistRun {
+        crate::algos::DistRun {
+            u: self.u,
+            v: self.v,
+            trace: self.trace,
+            stats: self.stats,
+            sec_per_iter: self.sec_per_iter,
+        }
+    }
+
+    /// View as the legacy [`crate::secure::SecureRun`] (deprecated-shim
+    /// compatibility).
+    pub fn into_secure_run(self) -> crate::secure::SecureRun {
+        crate::secure::SecureRun {
+            u: self.u,
+            v: self.v,
+            trace: self.trace,
+            stats: self.stats,
+            sec_per_iter: self.sec_per_iter,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The three axes: Algo × DataSource × Backend
+// ---------------------------------------------------------------------------
+
+/// Which of the paper's six methods a job runs, with its per-algorithm
+/// parameters. A new scenario is a new variant here — not a new family of
+/// free functions.
+#[derive(Debug, Clone)]
+pub enum Algo {
+    /// DSANLS (Alg. 2) — the paper's contribution.
+    Dsanls(DsanlsOptions),
+    /// MPI-FAUN-style unsketched baseline (MU / HALS / ANLS-BPP per
+    /// `opts.solver`).
+    DistAnls(DistAnlsOptions),
+    /// Synchronous secure protocol: Syn-SD (Alg. 4) or a Syn-SSD variant
+    /// (Alg. 5) per the [`SecureAlgo`] tag.
+    Syn(SynOptions, SecureAlgo),
+    /// Asynchronous secure protocol: Asyn-SD or Asyn-SSD-V (Alg. 6/7) per
+    /// the [`SecureAlgo`] tag. Runs on `nodes + 1` ranks — the extra rank
+    /// is the parameter server.
+    Asyn(AsynOptions, SecureAlgo),
+}
+
+impl Algo {
+    /// Map a CLI/TOML [`ExperimentConfig`] onto the algorithm axis — the
+    /// single config→options mapping every driver (CLI `run`, `launch`
+    /// workers, benches) shares.
+    pub fn from_config(cfg: &ExperimentConfig) -> Algo {
+        match cfg.algorithm {
+            ConfigAlgorithm::Dsanls => Algo::Dsanls(dsanls_options(cfg)),
+            ConfigAlgorithm::Baseline(solver) => Algo::DistAnls(dist_anls_options(cfg, solver)),
+            ConfigAlgorithm::Secure(
+                algo @ (SecureAlgo::SynSd
+                | SecureAlgo::SynSsdU
+                | SecureAlgo::SynSsdV
+                | SecureAlgo::SynSsdUv),
+            ) => Algo::Syn(syn_options(cfg), algo),
+            ConfigAlgorithm::Secure(algo) => Algo::Asyn(asyn_options(cfg), algo),
+        }
+    }
+}
+
+/// Where each rank's share of the input comes from.
+#[derive(Debug, Clone)]
+pub enum DataSource<'a> {
+    /// A caller-materialised matrix every rank can see (each slices its own
+    /// blocks) — the simulator/tests path, zero data-plane overhead.
+    Full(&'a Matrix),
+    /// Shard-local windowed synthesis: each rank generates **only its
+    /// blocks** of the named dataset in a single generator pass
+    /// ([`crate::data::shard::NodeData::generate`]) and the cluster
+    /// resolves the exact global `‖M‖²` with the ordered chain reduction —
+    /// bit-identical to [`DataSource::Full`] of the same dataset.
+    SyntheticWindow {
+        /// Which Table-1 workload to synthesise.
+        dataset: Dataset,
+        /// Generator seed.
+        seed: u64,
+        /// Dataset scale factor.
+        scale: f64,
+    },
+    /// A `dsanls shard` directory: each rank reads only its block files;
+    /// the manifest carries the exact global norm. The directory's rank
+    /// count must match the algorithm's `nodes`.
+    ShardDir(PathBuf),
+}
+
+/// Which transport the cluster runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// In-process simulated mesh: N rank threads, modelled clock/stall
+    /// accounting ([`CommModel`]).
+    Sim,
+    /// Real localhost TCP sockets, one thread per rank in this process
+    /// (rendezvous + full peer mesh), measured wall-clock timing.
+    Tcp {
+        /// Rendezvous port (0 = ephemeral).
+        port: u16,
+    },
+}
+
+// ---------------------------------------------------------------------------
+// The Algorithm trait: one generic node runner per method
+// ---------------------------------------------------------------------------
+
+/// Everything a rank needs besides its communicator: its resolved data
+/// view, the secure column partition, and the optional streaming
+/// observer/audit hooks.
+pub struct RankEnv<'a> {
+    /// This rank's id in `0..cluster_ranks()`.
+    pub rank: usize,
+    /// The rank's resolved view of the input.
+    pub input: NodeInput<'a>,
+    /// Column partition for the secure protocols (uniform by default).
+    pub cols: &'a Partition,
+    /// Streaming progress callback (rank 0 only; `None` elsewhere).
+    pub observer: Option<&'a ObserverFn>,
+    /// Outbound-payload audit log (secure protocols).
+    pub audit: Option<&'a AuditLog>,
+}
+
+/// What one rank returns — the union of the per-algorithm node outputs.
+pub enum RankOutput {
+    /// A DSANLS / baseline rank ([`NodeOutput`]).
+    Node(NodeOutput),
+    /// A synchronous secure party.
+    Syn(SynNodeOutput),
+    /// An asynchronous client.
+    AsynClient(AsynClientOutput),
+    /// The asynchronous parameter server: final `U` plus the exact global
+    /// `‖M‖²` (the trace merge needs it).
+    AsynServer {
+        /// Final server factor.
+        u: Mat,
+        /// Exact global `‖M‖²_F`.
+        fro_sq: f64,
+    },
+}
+
+impl RankOutput {
+    fn into_node(self, rank: usize) -> Result<NodeOutput> {
+        match self {
+            RankOutput::Node(o) => Ok(o),
+            _ => Err(crate::err!("rank {rank} returned an unexpected output kind")),
+        }
+    }
+
+    fn into_syn(self, rank: usize) -> Result<SynNodeOutput> {
+        match self {
+            RankOutput::Syn(o) => Ok(o),
+            _ => Err(crate::err!("rank {rank} returned an unexpected output kind")),
+        }
+    }
+
+    fn into_asyn_client(self, rank: usize) -> Result<AsynClientOutput> {
+        match self {
+            RankOutput::AsynClient(o) => Ok(o),
+            _ => Err(crate::err!("rank {rank} returned an unexpected output kind")),
+        }
+    }
+}
+
+/// The per-algorithm surface the [`Job`] drivers (and the multi-process
+/// `dsanls worker`) run against: validation, cluster shape, per-rank data
+/// needs, the generic **node runner**, and the final reduction. Implemented
+/// by [`Algo`]; a future method plugs in by extending the enum (or
+/// providing its own implementation) — the drivers never change.
+pub trait Algorithm {
+    /// Human-readable run label (e.g. `DSANLS/S`, `Syn-SD`).
+    fn label(&self) -> String;
+
+    /// Data parties `N`.
+    fn nodes(&self) -> usize;
+
+    /// Total cluster ranks (`N`, plus the parameter server for the
+    /// asynchronous protocols).
+    fn cluster_ranks(&self) -> usize {
+        self.nodes()
+    }
+
+    /// The modelled interconnect for the simulated backend.
+    fn comm_model(&self) -> CommModel;
+
+    /// Which blocks (`(row, col)`) `rank` keeps resident.
+    fn block_needs(&self, rank: usize) -> (bool, bool);
+
+    /// Parameter sanity — every violation is a typed error, not a panic.
+    fn validate(&self) -> Result<()>;
+
+    /// Run one rank over any transport. Consumes the communicator (the
+    /// asynchronous protocols own theirs); synchronous methods wrap it in a
+    /// [`NodeCtx`] internally.
+    fn run_rank<C: Communicator>(&self, comm: C, env: RankEnv<'_>) -> Result<RankOutput>;
+
+    /// Assemble rank-ordered outputs into the final [`Outcome`].
+    fn reduce(
+        &self,
+        outputs: Vec<RankOutput>,
+        label: String,
+        loads: Vec<LoadStats>,
+        observer: Option<&ObserverFn>,
+    ) -> Result<Outcome>;
+}
+
+fn initial(name: &str) -> String {
+    name.chars().next().unwrap_or('?').to_uppercase().to_string()
+}
+
+impl Algorithm for Algo {
+    fn label(&self) -> String {
+        match self {
+            Algo::Dsanls(o) => format!("DSANLS/{}", initial(o.sketch.name())),
+            Algo::DistAnls(o) => format!("MPI-FAUN-{}", o.solver.name().to_uppercase()),
+            Algo::Syn(_, v) | Algo::Asyn(_, v) => v.name().into(),
+        }
+    }
+
+    fn nodes(&self) -> usize {
+        match self {
+            Algo::Dsanls(o) => o.nodes,
+            Algo::DistAnls(o) => o.nodes,
+            Algo::Syn(o, _) => o.nodes,
+            Algo::Asyn(o, _) => o.nodes,
+        }
+    }
+
+    fn cluster_ranks(&self) -> usize {
+        self.nodes() + usize::from(matches!(self, Algo::Asyn(..)))
+    }
+
+    fn comm_model(&self) -> CommModel {
+        match self {
+            Algo::Dsanls(o) => o.comm,
+            Algo::DistAnls(o) => o.comm,
+            Algo::Syn(o, _) => o.comm,
+            Algo::Asyn(o, _) => o.comm,
+        }
+    }
+
+    fn block_needs(&self, rank: usize) -> (bool, bool) {
+        match self {
+            // DSANLS and the baselines iterate on both the row and col block
+            Algo::Dsanls(_) | Algo::DistAnls(_) => (true, true),
+            // synchronous secure parties hold only their column block
+            Algo::Syn(..) => (false, true),
+            // async: clients hold a column block; the parameter server (rank
+            // N) holds no data at all
+            Algo::Asyn(o, _) => (false, rank < o.nodes),
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.nodes() == 0 {
+            crate::bail!("a job needs at least one node");
+        }
+        match self {
+            Algo::Dsanls(o) => {
+                if !matches!(o.solver, SolverKind::ProximalCd | SolverKind::Pgd) {
+                    crate::bail!(
+                        "DSANLS requires a Theorem-1 solver (rcd or pgd), got {}",
+                        o.solver.name()
+                    );
+                }
+            }
+            Algo::DistAnls(_) => {}
+            Algo::Syn(_, v) => {
+                if !matches!(
+                    v,
+                    SecureAlgo::SynSd
+                        | SecureAlgo::SynSsdU
+                        | SecureAlgo::SynSsdV
+                        | SecureAlgo::SynSsdUv
+                ) {
+                    crate::bail!("Algo::Syn takes a synchronous variant, got {}", v.name());
+                }
+            }
+            Algo::Asyn(o, v) => {
+                if !matches!(v, SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) {
+                    crate::bail!("Algo::Asyn takes an asynchronous variant, got {}", v.name());
+                }
+                if o.nodes < 2 {
+                    crate::bail!(
+                        "the asynchronous protocols need at least 2 parties, got {}",
+                        o.nodes
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn run_rank<C: Communicator>(&self, comm: C, env: RankEnv<'_>) -> Result<RankOutput> {
+        match self {
+            Algo::Dsanls(o) => {
+                let mut ctx = NodeCtx::new(comm, o.comm);
+                Ok(RankOutput::Node(algos::dsanls::dsanls_rank(
+                    &mut ctx,
+                    env.input,
+                    o,
+                    env.observer,
+                )))
+            }
+            Algo::DistAnls(o) => {
+                let mut ctx = NodeCtx::new(comm, o.comm);
+                Ok(RankOutput::Node(algos::dist_anls::dist_anls_rank(
+                    &mut ctx,
+                    env.input,
+                    o,
+                    env.observer,
+                )))
+            }
+            Algo::Syn(o, v) => {
+                let mut ctx = NodeCtx::new(comm, o.comm);
+                Ok(RankOutput::Syn(syn::syn_rank(
+                    &mut ctx,
+                    env.input,
+                    env.cols,
+                    o,
+                    *v,
+                    env.audit,
+                    env.observer,
+                )))
+            }
+            Algo::Asyn(o, v) => {
+                // shared-seed init from global metadata only: server and
+                // every client derive identical factors at t=0
+                let (rows, cols) = env.input.dims();
+                let fro_sq = env.input.fro_sq();
+                let stream = StreamRng::new(o.seed);
+                let (u0, v_full) = {
+                    let mut rng = stream.for_iteration(0, Role::Init);
+                    init_factors_from(fro_sq, rows, cols, o.rank, &mut rng)
+                };
+                if env.rank == asyn::server_rank(o.nodes) {
+                    Ok(RankOutput::AsynServer { u: asyn::server_loop(comm, o, u0), fro_sq })
+                } else {
+                    let v0 = v_full.row_block(env.cols.range(env.rank));
+                    Ok(RankOutput::AsynClient(asyn::client_rank(
+                        comm, env.rank, env.input, env.cols, o, *v, u0, v0, env.audit,
+                    )))
+                }
+            }
+        }
+    }
+
+    fn reduce(
+        &self,
+        outputs: Vec<RankOutput>,
+        label: String,
+        loads: Vec<LoadStats>,
+        observer: Option<&ObserverFn>,
+    ) -> Result<Outcome> {
+        match self {
+            Algo::Dsanls(_) | Algo::DistAnls(_) => {
+                let (k, iters) = match self {
+                    Algo::Dsanls(o) => (o.rank, o.iterations),
+                    Algo::DistAnls(o) => (o.rank, o.iterations),
+                    _ => unreachable!(),
+                };
+                let outs = outputs
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, o)| o.into_node(r))
+                    .collect::<Result<Vec<_>>>()?;
+                let run = algos::reduce_outputs(outs, k, iters);
+                Ok(Outcome {
+                    label,
+                    trace: run.trace,
+                    stats: run.stats,
+                    sec_per_iter: run.sec_per_iter,
+                    u: run.u,
+                    v: run.v,
+                    loads,
+                })
+            }
+            Algo::Syn(o, _) => {
+                let outs = outputs
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, out)| out.into_syn(r))
+                    .collect::<Result<Vec<_>>>()?;
+                let run = syn::assemble_syn(outs, o.rank, o.t1 * o.t2);
+                Ok(Outcome {
+                    label,
+                    trace: run.trace,
+                    stats: run.stats,
+                    sec_per_iter: run.sec_per_iter,
+                    u: run.u,
+                    v: run.v,
+                    loads,
+                })
+            }
+            Algo::Asyn(o, _) => {
+                let mut outputs = outputs;
+                let server = outputs.pop().context("async run returned no server output")?;
+                let (u, fro_sq) = match server {
+                    RankOutput::AsynServer { u, fro_sq } => (u, fro_sq),
+                    _ => crate::bail!("last async rank was not the parameter server"),
+                };
+                let clients = outputs
+                    .into_iter()
+                    .enumerate()
+                    .map(|(r, out)| out.into_asyn_client(r))
+                    .collect::<Result<Vec<_>>>()?;
+                let run = asyn::assemble_asyn(u, clients, o, fro_sq);
+                if let Some(obs) = observer {
+                    // async samples carry private client clocks; the global
+                    // error only exists after the merge, so the stream is
+                    // replayed here with the clients' summed statistics
+                    let agg = sum_stats(&run.stats);
+                    for p in &run.trace {
+                        obs(&ProgressEvent {
+                            iteration: p.iteration,
+                            sim_time: p.sim_time,
+                            rel_error: p.rel_error,
+                            stats: agg,
+                        });
+                    }
+                }
+                Ok(Outcome {
+                    label,
+                    trace: run.trace,
+                    stats: run.stats,
+                    sec_per_iter: run.sec_per_iter,
+                    u: run.u,
+                    v: run.v,
+                    loads,
+                })
+            }
+        }
+    }
+}
+
+fn sum_stats(stats: &[CommStats]) -> CommStats {
+    let mut t = CommStats::default();
+    for s in stats {
+        t.bytes_sent += s.bytes_sent;
+        t.bytes_received += s.bytes_received;
+        t.messages += s.messages;
+        t.compute_time += s.compute_time;
+        t.comm_time += s.comm_time;
+        t.stall_time += s.stall_time;
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Config → options mapping (shared by run_on, launch workers and benches)
+// ---------------------------------------------------------------------------
+
+/// Map the generic config onto DSANLS options.
+pub fn dsanls_options(cfg: &ExperimentConfig) -> DsanlsOptions {
+    DsanlsOptions {
+        nodes: cfg.nodes,
+        rank: cfg.rank,
+        iterations: cfg.iterations,
+        solver: cfg.solver,
+        sketch: cfg.sketch,
+        d_u: cfg.d_u,
+        d_v: cfg.d_v,
+        seed: cfg.seed,
+        eval_every: cfg.eval_every,
+        mu: cfg.mu,
+        comm: cfg.comm,
+        box_bound: false,
+    }
+}
+
+/// Map the generic config onto the MPI-FAUN baseline options.
+pub fn dist_anls_options(cfg: &ExperimentConfig, solver: SolverKind) -> DistAnlsOptions {
+    DistAnlsOptions {
+        nodes: cfg.nodes,
+        rank: cfg.rank,
+        iterations: cfg.iterations,
+        solver,
+        seed: cfg.seed,
+        eval_every: cfg.eval_every,
+        comm: cfg.comm,
+        inner_sweeps: 1,
+    }
+}
+
+/// Map the generic config onto the synchronous secure options.
+pub fn syn_options(cfg: &ExperimentConfig) -> SynOptions {
+    SynOptions {
+        nodes: cfg.nodes,
+        rank: cfg.rank,
+        t1: cfg.t1,
+        t2: cfg.t2,
+        solver: cfg.solver,
+        mu: cfg.mu,
+        d1: cfg.d_u,
+        d2: cfg.d_v,
+        d3: cfg.d_u,
+        sketch: cfg.sketch,
+        seed: cfg.seed,
+        eval_every: cfg.eval_every,
+        comm: cfg.comm,
+    }
+}
+
+/// Map the generic config onto the asynchronous secure options.
+pub fn asyn_options(cfg: &ExperimentConfig) -> AsynOptions {
+    AsynOptions {
+        nodes: cfg.nodes,
+        rank: cfg.rank,
+        rounds: cfg.rounds,
+        local_iters: cfg.local_iters,
+        solver: cfg.solver,
+        mu: cfg.mu,
+        d1: cfg.d_u,
+        sketch: cfg.sketch,
+        omega0: 0.5,
+        tau: 10.0,
+        seed: cfg.seed,
+        comm: cfg.comm,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Job + builder
+// ---------------------------------------------------------------------------
+
+/// A fully-specified experiment: algorithm × data source × transport, plus
+/// the optional knobs (thread cap, secure partition, observer, audit).
+/// Build one with [`Job::builder`].
+pub struct Job<'a> {
+    algo: Algo,
+    data: DataSource<'a>,
+    backend: Backend,
+    threads: Option<usize>,
+    partition: Option<Partition>,
+    observer: Option<&'a ObserverFn>,
+    audit: Option<&'a AuditLog>,
+}
+
+/// Builder for [`Job`] — `algorithm` and `data` are required, everything
+/// else has sensible defaults ([`Backend::Sim`], derived thread cap,
+/// uniform partition, no observer/audit).
+pub struct JobBuilder<'a> {
+    algo: Option<Algo>,
+    data: Option<DataSource<'a>>,
+    backend: Backend,
+    threads: Option<usize>,
+    partition: Option<Partition>,
+    observer: Option<&'a ObserverFn>,
+    audit: Option<&'a AuditLog>,
+}
+
+impl<'a> Job<'a> {
+    /// Start composing a job.
+    pub fn builder() -> JobBuilder<'a> {
+        JobBuilder {
+            algo: None,
+            data: None,
+            backend: Backend::Sim,
+            threads: None,
+            partition: None,
+            observer: None,
+            audit: None,
+        }
+    }
+
+    /// Run the job and assemble the [`Outcome`].
+    pub fn run(&self) -> Result<Outcome> {
+        self.algo.validate()?;
+        let nodes = self.algo.nodes();
+        if self.threads == Some(0) {
+            crate::bail!("threads(0) is not a valid per-rank cap");
+        }
+
+        // resolve the global shape (and fail fast on a mismatched shard dir)
+        let (rows, cols) = match &self.data {
+            DataSource::Full(m) => (m.rows(), m.cols()),
+            DataSource::SyntheticWindow { dataset, scale, .. } => dataset.scaled_shape(*scale),
+            DataSource::ShardDir(dir) => {
+                let man = shard::read_manifest(dir)?;
+                if man.nodes != nodes {
+                    crate::bail!(
+                        "shard directory {} was built for {} nodes, this job runs {nodes} — \
+                         re-run `dsanls shard`",
+                        dir.display(),
+                        man.nodes
+                    );
+                }
+                (man.rows, man.cols)
+            }
+        };
+
+        // resolve + validate the secure column partition
+        let cols_part = match (&self.partition, &self.algo) {
+            (Some(p), Algo::Syn(..) | Algo::Asyn(..)) => {
+                if p.nodes() != nodes {
+                    crate::bail!(
+                        "secure partition covers {} parties but the job runs {nodes}",
+                        p.nodes()
+                    );
+                }
+                if p.total != cols {
+                    crate::bail!(
+                        "secure partition spans {} columns but the data has {cols}",
+                        p.total
+                    );
+                }
+                if matches!(self.data, DataSource::ShardDir(_)) {
+                    let u = uniform_partition(cols, nodes);
+                    if (0..nodes).any(|r| p.range(r) != u.range(r)) {
+                        crate::bail!(
+                            "shard directories are uniform-partitioned; skewed secure runs \
+                             must use DataSource::SyntheticWindow or DataSource::Full"
+                        );
+                    }
+                }
+                p.clone()
+            }
+            (Some(_), _) => {
+                crate::bail!("secure_partition only applies to the secure protocols")
+            }
+            (None, _) => uniform_partition(cols, nodes),
+        };
+
+        let label = match self.backend {
+            Backend::Sim => self.algo.label(),
+            Backend::Tcp { .. } => format!("{}/tcp", self.algo.label()),
+        };
+        let res = Resolved { job: self, rows, cols, cols_part };
+        let results = match self.backend {
+            Backend::Sim => drive_sim(&res)?,
+            Backend::Tcp { port } => drive_tcp(&res, port)?,
+        };
+        let mut outputs = Vec::with_capacity(results.len());
+        let mut loads = Vec::new();
+        for r in results {
+            outputs.push(r.out);
+            loads.extend(r.load);
+        }
+        self.algo.reduce(outputs, label, loads, self.observer)
+    }
+}
+
+impl<'a> JobBuilder<'a> {
+    /// Which algorithm to run (required).
+    pub fn algorithm(mut self, algo: Algo) -> Self {
+        self.algo = Some(algo);
+        self
+    }
+
+    /// Algorithm + partition skew straight from a CLI/TOML config.
+    pub fn from_config(self, cfg: &ExperimentConfig, data_cols: usize) -> Self {
+        let algo = Algo::from_config(cfg);
+        let b = match &algo {
+            Algo::Syn(..) | Algo::Asyn(..) => {
+                self.secure_partition(crate::coordinator::secure_partition(cfg, data_cols))
+            }
+            _ => self,
+        };
+        b.algorithm(algo)
+    }
+
+    /// Where each rank's data comes from (required).
+    pub fn data(mut self, data: DataSource<'a>) -> Self {
+        self.data = Some(data);
+        self
+    }
+
+    /// Which transport backend runs the cluster (default [`Backend::Sim`]).
+    pub fn transport(mut self, backend: Backend) -> Self {
+        self.backend = backend;
+        self
+    }
+
+    /// Override the per-rank intra-node thread cap (default: machine cores
+    /// divided evenly across ranks — the cap that keeps sim and TCP
+    /// bit-identical; any override is applied identically on both
+    /// backends).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = Some(threads);
+        self
+    }
+
+    /// Column partition for the secure protocols (default uniform; pass
+    /// [`crate::data::partition::imbalanced_partition`] for the skewed
+    /// Fig. 7/9 workloads).
+    pub fn secure_partition(mut self, p: Partition) -> Self {
+        self.partition = Some(p);
+        self
+    }
+
+    /// Stream every traced sample to `f` as rank 0 records it.
+    pub fn observer(mut self, f: &'a ObserverFn) -> Self {
+        self.observer = Some(f);
+        self
+    }
+
+    /// Record every outbound secure-protocol payload into `log` (the
+    /// Definition-1 audit harness).
+    pub fn audit(mut self, log: &'a AuditLog) -> Self {
+        self.audit = Some(log);
+        self
+    }
+
+    /// Validate the required axes and produce the [`Job`].
+    pub fn build(self) -> Result<Job<'a>> {
+        let algo = self
+            .algo
+            .context("job needs an algorithm — call .algorithm(Algo::...)")?;
+        let data = self
+            .data
+            .context("job needs a data source — call .data(DataSource::...)")?;
+        Ok(Job {
+            algo,
+            data,
+            backend: self.backend,
+            threads: self.threads,
+            partition: self.partition,
+            observer: self.observer,
+            audit: self.audit,
+        })
+    }
+
+    /// [`JobBuilder::build`] + [`Job::run`] in one call.
+    pub fn run(self) -> Result<Outcome> {
+        self.build()?.run()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Drivers: resolve per-rank data, run every rank, collect
+// ---------------------------------------------------------------------------
+
+struct Resolved<'j, 'a> {
+    job: &'j Job<'a>,
+    rows: usize,
+    cols: usize,
+    cols_part: Partition,
+}
+
+/// One rank's result plus its data-plane statistics (when the rank loaded
+/// or synthesised resident blocks).
+struct RankResult {
+    out: RankOutput,
+    load: Option<LoadStats>,
+}
+
+enum RankData<'a> {
+    Full(&'a Matrix),
+    Owned(Box<NodeData>),
+}
+
+impl RankData<'_> {
+    fn input(&self) -> NodeInput<'_> {
+        match self {
+            RankData::Full(m) => NodeInput::Full(m),
+            RankData::Owned(d) => NodeInput::Shard(d.as_ref()),
+        }
+    }
+}
+
+/// Apply the per-rank intra-node thread cap: the explicit override, or the
+/// derived cores/N policy that keeps backends bit-identical.
+fn apply_thread_cap(threads: Option<usize>, data_nodes: usize) {
+    match threads {
+        Some(t) => crate::parallel::set_local_threads(Some(t.max(1))),
+        None => crate::dist::apply_node_thread_policy(data_nodes),
+    }
+}
+
+/// Build this rank's data view and run its share of the algorithm.
+fn rank_main<C: Communicator>(
+    res: &Resolved<'_, '_>,
+    mut comm: C,
+    rank: usize,
+) -> Result<RankResult> {
+    let job = res.job;
+    let algo = &job.algo;
+    let nodes = algo.nodes();
+    let (need_rows, need_cols) = algo.block_needs(rank);
+
+    // ---- resolve the rank's data view (blocks only, never the matrix) ----
+    let tick = Instant::now();
+    let (mut holder, source) = match &job.data {
+        DataSource::Full(m) => (RankData::Full(m), None),
+        DataSource::SyntheticWindow { dataset, seed, scale } => {
+            // every data rank generates its row block (the ordered ‖M‖²
+            // chain needs it even when the algorithm won't — it is dropped
+            // right after), plus the column block its algorithm iterates on
+            let row_range = (rank < nodes).then(|| uniform_partition(res.rows, nodes).range(rank));
+            let col_range = need_cols.then(|| match algo {
+                Algo::Syn(..) | Algo::Asyn(..) => res.cols_part.range(rank),
+                _ => uniform_partition(res.cols, nodes).range(rank),
+            });
+            let data = NodeData::generate(*dataset, *seed, *scale, row_range, col_range);
+            (RankData::Owned(Box::new(data)), Some(LoadSource::SynthShard))
+        }
+        DataSource::ShardDir(dir) => {
+            if rank >= nodes {
+                // async parameter server: global metadata only
+                let man = shard::read_manifest(dir)?;
+                let data = NodeData::metadata(man.rows, man.cols, Some(man.fro_sq));
+                (RankData::Owned(Box::new(data)), Some(LoadSource::FileShard))
+            } else {
+                let (data, _manifest) = NodeData::load(dir, rank, need_rows, need_cols)?;
+                (RankData::Owned(Box::new(data)), Some(LoadSource::FileShard))
+            }
+        }
+    };
+    let load_secs = tick.elapsed().as_secs_f64();
+
+    let load = if let RankData::Owned(data) = &mut holder {
+        if data.fro_sq.is_none() {
+            // synth mode: resolve the exact global ‖M‖² with the ordered
+            // chain (bit-identical to the full-matrix value)
+            let fro = shard::exact_fro_sq(&mut comm, nodes, data.m_rows.as_ref())
+                .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
+            data.fro_sq = Some(fro);
+        }
+        if !need_rows {
+            data.drop_rows(); // the chain was its only consumer
+        }
+        source.map(|src| data.load_stats(rank, load_secs, src))
+    } else {
+        None
+    };
+
+    // ---- run the rank ----
+    let env = RankEnv {
+        rank,
+        input: holder.input(),
+        cols: &res.cols_part,
+        observer: if rank == 0 { job.observer } else { None },
+        audit: job.audit,
+    };
+    let out = algo.run_rank(comm, env)?;
+    Ok(RankResult { out, load })
+}
+
+/// Run every rank on the in-process **simulated** mesh (thread per rank,
+/// modelled clock). Mirrors [`crate::dist::run_cluster`] exactly — same
+/// single-rank inline path, same thread-cap policy — so builder runs stay
+/// bit-identical to the legacy free functions.
+fn drive_sim(res: &Resolved<'_, '_>) -> Result<Vec<RankResult>> {
+    let ranks = res.job.algo.cluster_ranks();
+    let nodes = res.job.algo.nodes();
+    let cluster = SimCluster::new(ranks);
+    if ranks == 1 {
+        // single rank: run inline with full intra-node parallelism
+        if let Some(t) = res.job.threads {
+            crate::parallel::set_local_threads(Some(t.max(1)));
+        }
+        let out = rank_main(res, SimComm::new(0, cluster), 0);
+        crate::parallel::set_local_threads(None);
+        return Ok(vec![out?]);
+    }
+    let mut slots: Vec<Option<Result<RankResult>>> = (0..ranks).map(|_| None).collect();
+    std::thread::scope(|s| {
+        for (rank, slot) in slots.iter_mut().enumerate() {
+            let comm = SimComm::new(rank, cluster.clone());
+            s.spawn(move || {
+                apply_thread_cap(res.job.threads, nodes);
+                *slot = Some(rank_main(res, comm, rank));
+                crate::parallel::set_local_threads(None);
+            });
+        }
+    });
+    slots.into_iter().map(|o| o.expect("rank produced no output")).collect()
+}
+
+/// Run every rank over **real localhost TCP** (rendezvous + full peer
+/// mesh), one thread per rank inside this process.
+fn drive_tcp(res: &Resolved<'_, '_>, port: u16) -> Result<Vec<RankResult>> {
+    let ranks = res.job.algo.cluster_ranks();
+    let nodes = res.job.algo.nodes();
+    let rdv = Rendezvous::bind(port)?;
+    let addr = rdv.addr();
+    let mut slots: Vec<Option<Result<RankResult>>> = (0..ranks).map(|_| None).collect();
+    let rdv_result = std::thread::scope(|s| {
+        let coord = s.spawn(move || rdv.wait_workers(ranks, Duration::from_secs(30)));
+        for (rank, slot) in slots.iter_mut().enumerate() {
+            let addr = addr.clone();
+            s.spawn(move || {
+                let run = (|| {
+                    let comm = TcpComm::connect(&addr, rank, ranks, &TcpOptions::default())?;
+                    apply_thread_cap(res.job.threads, nodes);
+                    let value = rank_main(res, comm, rank);
+                    crate::parallel::set_local_threads(None);
+                    value
+                })();
+                *slot = Some(run);
+            });
+        }
+        // hold the coordinator-side connections until every rank finished
+        coord.join().expect("rendezvous thread panicked")
+    });
+    rdv_result?;
+    slots.into_iter().map(|o| o.expect("rank produced no output")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
+        let mut rng = Pcg64::new(seed as u128, 0);
+        let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
+        let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
+        Matrix::Dense(u.matmul_nt(&v))
+    }
+
+    #[test]
+    fn labels_match_the_legacy_scheme() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(Algo::Dsanls(dsanls_options(&cfg)).label(), "DSANLS/S");
+        assert_eq!(
+            Algo::DistAnls(dist_anls_options(&cfg, SolverKind::Hals)).label(),
+            "MPI-FAUN-HALS"
+        );
+        assert_eq!(Algo::Syn(syn_options(&cfg), SecureAlgo::SynSd).label(), "Syn-SD");
+        assert_eq!(Algo::Asyn(asyn_options(&cfg), SecureAlgo::AsynSsdV).label(), "Asyn-SSD-V");
+    }
+
+    #[test]
+    fn cluster_shape_and_needs() {
+        let cfg = ExperimentConfig::default();
+        let dsanls = Algo::Dsanls(dsanls_options(&cfg));
+        assert_eq!(dsanls.cluster_ranks(), dsanls.nodes());
+        assert_eq!(dsanls.block_needs(0), (true, true));
+        let asyn = Algo::Asyn(asyn_options(&cfg), SecureAlgo::AsynSd);
+        assert_eq!(asyn.cluster_ranks(), asyn.nodes() + 1);
+        assert_eq!(asyn.block_needs(asyn.nodes()), (false, false), "server holds no data");
+        let syn = Algo::Syn(syn_options(&cfg), SecureAlgo::SynSsdUv);
+        assert_eq!(syn.block_needs(0), (false, true));
+    }
+
+    #[test]
+    fn builder_requires_algorithm_and_data() {
+        let err = Job::builder().build().unwrap_err();
+        assert!(err.to_string().contains("algorithm"), "{err}");
+        let m = low_rank(10, 8, 2, 1);
+        let err = Job::builder().data(DataSource::Full(&m)).build().unwrap_err();
+        assert!(err.to_string().contains("algorithm"), "{err}");
+        let cfg = ExperimentConfig::default();
+        let err = Job::builder().algorithm(Algo::Dsanls(dsanls_options(&cfg))).build().unwrap_err();
+        assert!(err.to_string().contains("data source"), "{err}");
+    }
+
+    #[test]
+    fn variant_mismatches_are_typed_errors() {
+        let cfg = ExperimentConfig::default();
+        assert!(Algo::Syn(syn_options(&cfg), SecureAlgo::AsynSd).validate().is_err());
+        assert!(Algo::Asyn(asyn_options(&cfg), SecureAlgo::SynSd).validate().is_err());
+        let mut o = asyn_options(&cfg);
+        o.nodes = 1;
+        let err = Algo::Asyn(o, SecureAlgo::AsynSd).validate().unwrap_err();
+        assert!(err.to_string().contains("2 parties"), "{err}");
+        let mut d = dsanls_options(&cfg);
+        d.solver = SolverKind::Hals;
+        assert!(Algo::Dsanls(d).validate().is_err(), "non-Theorem-1 solver must be rejected");
+    }
+
+    #[test]
+    fn partition_misuse_is_a_typed_error() {
+        let m = low_rank(20, 16, 2, 3);
+        let mut opts = dsanls_options(&ExperimentConfig::default());
+        opts.nodes = 2;
+        opts.iterations = 1;
+        let err = Job::builder()
+            .algorithm(Algo::Dsanls(opts))
+            .data(DataSource::Full(&m))
+            .secure_partition(uniform_partition(16, 2))
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("secure"), "{err}");
+
+        let mut syn = syn_options(&ExperimentConfig::default());
+        syn.nodes = 2;
+        let err = Job::builder()
+            .algorithm(Algo::Syn(syn, SecureAlgo::SynSd))
+            .data(DataSource::Full(&m))
+            .secure_partition(uniform_partition(16, 3)) // 3 parties, 2 nodes
+            .run()
+            .unwrap_err();
+        assert!(err.to_string().contains("parties"), "{err}");
+    }
+
+    #[test]
+    fn from_config_maps_every_family() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(matches!(Algo::from_config(&cfg), Algo::Dsanls(_)));
+        cfg.apply("experiment.algorithm", "hals").unwrap();
+        assert!(matches!(
+            Algo::from_config(&cfg),
+            Algo::DistAnls(DistAnlsOptions { solver: SolverKind::Hals, .. })
+        ));
+        cfg.apply("experiment.algorithm", "syn-ssd-uv").unwrap();
+        assert!(matches!(Algo::from_config(&cfg), Algo::Syn(_, SecureAlgo::SynSsdUv)));
+        cfg.apply("experiment.algorithm", "asyn-sd").unwrap();
+        assert!(matches!(Algo::from_config(&cfg), Algo::Asyn(_, SecureAlgo::AsynSd)));
+    }
+}

@@ -2,13 +2,18 @@
 //! its sketched variant SANLS (Sec. 3.2), loss evaluation and factor
 //! initialisation. The distributed algorithms in [`crate::algos`] and
 //! [`crate::secure`] reuse these pieces per node.
+//!
+//! The [`job`] submodule is the crate's unified front door: one [`Job`]
+//! builder composing every algorithm × transport × data source.
 
 mod anls;
 mod init;
+pub mod job;
 mod loss;
 
 pub use anls::{Anls, AnlsOptions, Sanls, SanlsOptions};
 pub use init::{init_factors, init_factors_from, init_scale, init_scale_from};
+pub use job::{Algo, Algorithm, Backend, DataSource, Job, JobBuilder, Outcome};
 pub use loss::{rel_error, rel_error_parts};
 
 use crate::linalg::Mat;

@@ -19,10 +19,10 @@
 //! **Transport**: the protocol runs on the tagged P2P surface of
 //! [`crate::transport::Communicator`] — a cluster of `N + 1` ranks where
 //! ranks `0..N` are the parties and rank `N` ([`server_rank`]) is the
-//! parameter server ([`server_loop`] / [`client_loop`]). The in-process
-//! driver [`run_asyn`] wires N+1 [`SimComm`] threads; the multi-process
-//! TCP path (`dsanls launch`) runs the same two loops over
-//! [`crate::transport::TcpComm`] workers.
+//! parameter server ([`server_loop`] / [`client_rank`]). The
+//! [`crate::nmf::job::Job`] drivers wire N+1 ranks over the simulated or
+//! in-process TCP backend; the multi-process TCP path (`dsanls launch`)
+//! runs the same two loops over [`crate::transport::TcpComm`] workers.
 //!
 //! Timing: every client keeps a private **virtual clock** (measured local
 //! compute + modelled p2p wire time). Error traces merge the clients'
@@ -34,13 +34,14 @@ use std::time::Instant;
 use super::{privacy::AuditLog, SecureAlgo, SecureRun};
 use crate::algos::TracePoint;
 use crate::data::partition::Partition;
+use crate::data::shard::NodeInput;
 use crate::dist::{CommModel, CommStats};
 use crate::linalg::{Mat, Matrix};
-use crate::nmf::{init_factors, rel_error_parts, MuSchedule};
-use crate::rng::{Role, StreamRng};
+use crate::nmf::{rel_error_parts, MuSchedule};
+use crate::rng::StreamRng;
 use crate::sketch::{SketchKind, SketchMatrix};
 use crate::solvers::{self, Normal, SolverKind};
-use crate::transport::{Communicator, SimCluster, SimComm, TAG_SHUTDOWN};
+use crate::transport::{Communicator, TAG_SHUTDOWN};
 
 /// Options for the asynchronous protocols.
 #[derive(Debug, Clone)]
@@ -100,6 +101,10 @@ pub struct AsynClientOutput {
 
 /// Run Asyn-SD (`variant = AsynSd`) or Asyn-SSD-V (`variant = AsynSsdV`)
 /// on the in-process simulated transport.
+#[deprecated(
+    since = "0.2.0",
+    note = "use `nmf::job::Job::builder().algorithm(Algo::Asyn(opts, variant))` instead"
+)]
 pub fn run_asyn(
     m: &Matrix,
     cols: &Partition,
@@ -108,41 +113,14 @@ pub fn run_asyn(
     audit: Option<&AuditLog>,
 ) -> SecureRun {
     assert!(matches!(variant, SecureAlgo::AsynSd | SecureAlgo::AsynSsdV));
-    assert_eq!(cols.nodes(), opts.nodes);
-    let m_fro_sq = m.fro_sq();
-    let stream = StreamRng::new(opts.seed);
-
-    // shared-seed initial factors (server + all clients agree at t=0)
-    let (u_init, v_full) = {
-        let mut rng = stream.for_iteration(0, Role::Init);
-        init_factors(m, opts.rank, &mut rng)
-    };
-
-    let cluster = SimCluster::new(opts.nodes + 1);
-    let mut client_out: Vec<Option<AsynClientOutput>> = (0..opts.nodes).map(|_| None).collect();
-    let mut server_u = u_init.clone();
-
-    std::thread::scope(|s| {
-        let server_comm = SimComm::new(server_rank(opts.nodes), cluster.clone());
-        let u0 = u_init.clone();
-        let server_handle = s.spawn(move || server_loop(server_comm, opts, u0));
-
-        for (party, slot) in client_out.iter_mut().enumerate() {
-            let comm = SimComm::new(party, cluster.clone());
-            let u0 = u_init.clone();
-            let v0 = v_full.row_block(cols.range(party));
-            s.spawn(move || {
-                crate::dist::apply_node_thread_policy(opts.nodes);
-                *slot = Some(client_loop(comm, party, m, cols, opts, variant, u0, v0, audit));
-                crate::parallel::set_local_threads(None);
-            });
-        }
-
-        server_u = server_handle.join().expect("server panicked");
-    });
-
-    let outs: Vec<AsynClientOutput> = client_out.into_iter().map(|o| o.unwrap()).collect();
-    assemble_asyn(server_u, outs, opts, m_fro_sq)
+    let mut b = crate::nmf::job::Job::builder()
+        .algorithm(crate::nmf::job::Algo::Asyn(opts.clone(), variant))
+        .data(crate::nmf::job::DataSource::Full(m))
+        .secure_partition(cols.clone());
+    if let Some(a) = audit {
+        b = b.audit(a);
+    }
+    b.run().unwrap_or_else(|e| panic!("{} job failed: {e}", variant.name())).into_secure_run()
 }
 
 /// Merge the server factor and per-client outputs into a [`SecureRun`]
@@ -207,15 +185,17 @@ pub fn server_loop<C: Communicator>(mut comm: C, opts: &AsynOptions, u_init: Mat
     u
 }
 
-/// One asynchronous client (Alg. 7) on rank `party` of any transport,
-/// when the client can see the full matrix (simulator / tests — it slices
-/// its own column block). `u0`/`v0` are the shared-seed initial factors
-/// (the caller derives them so server and clients agree at t=0).
+/// One asynchronous client (Alg. 7) on rank `party` of any transport —
+/// the single per-rank node runner, on a resolved [`NodeInput`] (full
+/// matrix, or a shard view holding only `M_{:J_r}` plus the global row
+/// count — the protocol touches nothing else of `M`). `u0`/`v0` are the
+/// shared-seed initial factors (the caller derives them so server and
+/// clients agree at t=0).
 #[allow(clippy::too_many_arguments)]
-pub fn client_loop<C: Communicator>(
+pub fn client_rank<C: Communicator>(
     comm: C,
     party: usize,
-    m: &Matrix,
+    input: NodeInput<'_>,
     cols: &Partition,
     opts: &AsynOptions,
     variant: SecureAlgo,
@@ -223,15 +203,14 @@ pub fn client_loop<C: Communicator>(
     v0: Mat,
     audit: Option<&AuditLog>,
 ) -> AsynClientOutput {
-    let m_col = m.col_block(cols.range(party));
-    client_node(comm, party, &m_col, m.rows(), opts, variant, u0, v0, audit)
+    let (m_rows, _) = input.dims();
+    let m_col = input.col_block(cols.range(party));
+    client_body(comm, party, &m_col, m_rows, opts, variant, u0, v0, audit)
 }
 
-/// [`client_loop`] over the client's resident column block only (the
-/// sharded `dsanls worker` entry point): the protocol touches `M_{:J_r}`
-/// and the global row count, nothing else of `M`.
+/// Protocol body over the client's resident column block.
 #[allow(clippy::too_many_arguments)]
-pub fn client_node<C: Communicator>(
+fn client_body<C: Communicator>(
     mut comm: C,
     party: usize,
     m_col: &Matrix,
@@ -378,6 +357,8 @@ fn merge_traces(outs: &[AsynClientOutput], m_fro_sq: f64) -> Vec<TracePoint> {
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the deprecated shims stay covered until removal
+
     use super::*;
     use crate::data::partition::{imbalanced_partition, uniform_partition};
     use crate::rng::Pcg64;

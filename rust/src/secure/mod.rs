@@ -28,9 +28,11 @@ pub mod asyn;
 pub mod privacy;
 pub mod syn;
 
-pub use asyn::{run_asyn, AsynOptions};
+pub use asyn::AsynOptions;
 pub use privacy::{sketch_inversion, AuditLog, AuditVerdict};
-pub use syn::{run_syn_sd, run_syn_ssd, SynOptions};
+pub use syn::SynOptions;
+#[allow(deprecated)]
+pub use {asyn::run_asyn, syn::run_syn_sd, syn::run_syn_ssd};
 
 use crate::algos::TracePoint;
 use crate::dist::CommStats;

@@ -22,10 +22,10 @@
 use std::time::Instant;
 
 use super::{privacy::AuditLog, SecureAlgo, SecureRun};
-use crate::algos::TracePoint;
+use crate::algos::{ObserverFn, Trace, TracePoint};
 use crate::data::partition::Partition;
-use crate::data::shard::NodeData;
-use crate::dist::{run_cluster, CommModel, CommStats, NodeCtx};
+use crate::data::shard::NodeInput;
+use crate::dist::{CommModel, CommStats, NodeCtx};
 use crate::linalg::{Mat, Matrix};
 use crate::nmf::{init_factors_from, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
@@ -85,16 +85,24 @@ fn auto_d(dim: usize, explicit: usize, k: usize) -> usize {
 }
 
 /// Syn-SD (Alg. 4).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `nmf::job::Job::builder().algorithm(Algo::Syn(opts, SecureAlgo::SynSd))` instead"
+)]
 pub fn run_syn_sd(
     m: &Matrix,
     cols: &Partition,
     opts: &SynOptions,
     audit: Option<&AuditLog>,
 ) -> SecureRun {
-    run_syn(m, cols, opts, SecureAlgo::SynSd, audit)
+    run_syn_via_job(m, cols, opts, SecureAlgo::SynSd, audit)
 }
 
 /// Syn-SSD (Alg. 5) in the requested variant (`SynSsdU`/`SynSsdV`/`SynSsdUv`).
+#[deprecated(
+    since = "0.2.0",
+    note = "use `nmf::job::Job::builder().algorithm(Algo::Syn(opts, variant))` instead"
+)]
 pub fn run_syn_ssd(
     m: &Matrix,
     cols: &Partition,
@@ -106,7 +114,25 @@ pub fn run_syn_ssd(
         matches!(variant, SecureAlgo::SynSsdU | SecureAlgo::SynSsdV | SecureAlgo::SynSsdUv),
         "run_syn_ssd takes an SSD variant"
     );
-    run_syn(m, cols, opts, variant, audit)
+    run_syn_via_job(m, cols, opts, variant, audit)
+}
+
+/// Shared body of the deprecated sync-secure shims: one builder invocation.
+fn run_syn_via_job(
+    m: &Matrix,
+    cols: &Partition,
+    opts: &SynOptions,
+    algo: SecureAlgo,
+    audit: Option<&AuditLog>,
+) -> SecureRun {
+    let mut b = crate::nmf::job::Job::builder()
+        .algorithm(crate::nmf::job::Algo::Syn(opts.clone(), algo))
+        .data(crate::nmf::job::DataSource::Full(m))
+        .secure_partition(cols.clone());
+    if let Some(a) = audit {
+        b = b.audit(a);
+    }
+    b.run().unwrap_or_else(|e| panic!("{} job failed: {e}", algo.name())).into_secure_run()
 }
 
 /// Per-party output of one synchronous secure rank.
@@ -121,19 +147,6 @@ pub struct SynNodeOutput {
     pub final_clock: f64,
 }
 
-fn run_syn(
-    m: &Matrix,
-    cols: &Partition,
-    opts: &SynOptions,
-    algo: SecureAlgo,
-    audit: Option<&AuditLog>,
-) -> SecureRun {
-    let total_iters = opts.t1 * opts.t2;
-    let outputs =
-        run_cluster(opts.nodes, opts.comm, |ctx| syn_node(ctx, m, cols, opts, algo, audit));
-    assemble_syn(outputs, opts.rank, total_iters)
-}
-
 /// Assemble per-party outputs into a [`SecureRun`] (the driver is trusted;
 /// parties never see each other's V).
 pub fn assemble_syn(outputs: Vec<SynNodeOutput>, k: usize, total_iters: usize) -> SecureRun {
@@ -146,50 +159,26 @@ pub fn assemble_syn(outputs: Vec<SynNodeOutput>, k: usize, total_iters: usize) -
     SecureRun { u, v, trace, stats, sec_per_iter: max_clock / total_iters.max(1) as f64 }
 }
 
-/// One synchronous secure party over any transport backend, when the
-/// party can see the full matrix (simulator / tests — it slices its own
-/// column block). `opts.nodes` must match both the partition and the
-/// communicator's cluster size.
-pub fn syn_node<C: Communicator>(
+/// One synchronous secure party over any transport backend — the single
+/// per-rank node runner, on a resolved [`NodeInput`]: the full matrix (the
+/// party slices its own column block) or a shard-resident view holding
+/// only `M_{:J_r}` plus the global shape and exact `‖M‖²` — which is all
+/// the protocol touches, so the two views are bit-identical. `opts.nodes`
+/// must match both the partition and the communicator's cluster size;
+/// `observer` (rank 0 only) streams each traced sample.
+pub fn syn_rank<C: Communicator>(
     ctx: &mut NodeCtx<C>,
-    m: &Matrix,
+    input: NodeInput<'_>,
     cols: &Partition,
     opts: &SynOptions,
     algo: SecureAlgo,
     audit: Option<&AuditLog>,
+    observer: Option<&ObserverFn>,
 ) -> SynNodeOutput {
-    let m_col = m.col_block(cols.range(ctx.rank)); // M_{:J_r}, m×|J_r|
-    syn_node_on_block(ctx, &m_col, m.rows(), m.cols(), m.fro_sq(), cols, opts, algo, audit)
-}
-
-/// One synchronous secure party over a pre-sharded [`NodeData`] view (the
-/// `dsanls worker` entry point): the party holds only `M_{:J_r}` plus the
-/// global shape and exact `‖M‖²` — which is all the protocol touches, so
-/// the run is bit-identical to the full-matrix path.
-pub fn syn_node_sharded<C: Communicator>(
-    ctx: &mut NodeCtx<C>,
-    data: &NodeData,
-    cols: &Partition,
-    opts: &SynOptions,
-    algo: SecureAlgo,
-    audit: Option<&AuditLog>,
-) -> SynNodeOutput {
-    assert_eq!(
-        data.col_range,
-        cols.range(ctx.rank),
-        "shard col range != this party's partition"
-    );
-    syn_node_on_block(
-        ctx,
-        data.require_cols(),
-        data.rows,
-        data.cols,
-        data.fro_sq(),
-        cols,
-        opts,
-        algo,
-        audit,
-    )
+    let (m_rows, m_cols) = input.dims();
+    let fro_sq = input.fro_sq();
+    let m_col = input.col_block(cols.range(ctx.rank)); // M_{:J_r}, m×|J_r|
+    syn_node_on_block(ctx, &m_col, m_rows, m_cols, fro_sq, cols, opts, algo, audit, observer)
 }
 
 /// Protocol body over the party's resident column block.
@@ -204,6 +193,7 @@ fn syn_node_on_block<C: Communicator>(
     opts: &SynOptions,
     algo: SecureAlgo,
     audit: Option<&AuditLog>,
+    observer: Option<&ObserverFn>,
 ) -> SynNodeOutput {
     assert_eq!(cols.nodes(), opts.nodes, "partition/node mismatch");
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
@@ -235,7 +225,7 @@ fn syn_node_on_block<C: Communicator>(
         let sketch_v = matches!(algo, SecureAlgo::SynSsdV | SecureAlgo::SynSsdUv);
         let ssd = algo != SecureAlgo::SynSd;
 
-        let mut trace = Vec::new();
+        let mut trace = Trace::new(if rank == 0 { observer } else { None });
         record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, 0, &mut trace);
 
         let mut iter = 0usize;
@@ -333,7 +323,7 @@ fn syn_node_on_block<C: Communicator>(
         SynNodeOutput {
             u_local,
             v_block,
-            trace: if rank == 0 { trace } else { Vec::new() },
+            trace: if rank == 0 { trace.into_points() } else { Vec::new() },
             stats: ctx.stats(),
             final_clock: ctx.clock(),
         }
@@ -350,7 +340,7 @@ pub(crate) fn record_secure_error<C: Communicator>(
     v_block: &Mat,
     m_fro_sq: f64,
     iteration: usize,
-    trace: &mut Vec<TracePoint>,
+    trace: &mut Trace<'_>,
 ) {
     let sim_time = ctx.clock();
     let err = ctx.untimed(|ctx| {
@@ -361,11 +351,13 @@ pub(crate) fn record_secure_error<C: Communicator>(
         ctx.all_reduce_sum(&mut buf);
         (buf[0].max(0.0) as f64).sqrt()
     });
-    trace.push(TracePoint { iteration, sim_time, rel_error: err });
+    trace.record(TracePoint { iteration, sim_time, rel_error: err }, ctx.stats());
 }
 
 #[cfg(test)]
 mod tests {
+    #![allow(deprecated)] // the deprecated shims stay covered until removal
+
     use super::*;
     use crate::data::partition::{imbalanced_partition, uniform_partition};
     use crate::rng::Pcg64;

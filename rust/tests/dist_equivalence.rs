@@ -1,16 +1,19 @@
 //! Distributed-correctness integration tests: the cluster algorithms must
 //! be *algorithms*, not approximations of themselves — node count, data
-//! layout and communication order must not change the math.
+//! layout and communication order must not change the math. Everything
+//! runs through the unified `nmf::job::Job` builder (or the per-rank node
+//! runners it drives).
 
-use dsanls::algos::{reduce_outputs, run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions};
+use dsanls::algos::{reduce_outputs, DistAnlsOptions, DsanlsOptions};
 use dsanls::data::partition::uniform_partition;
-use dsanls::data::shard::{exact_fro_sq, NodeData};
+use dsanls::data::shard::{exact_fro_sq, NodeData, NodeInput};
 use dsanls::dist::run_tcp_cluster;
 use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::job::{Algo, Backend, DataSource, Job, Outcome};
 use dsanls::nmf::{Sanls, SanlsOptions};
 use dsanls::rng::Pcg64;
-use dsanls::secure::syn::{assemble_syn, syn_node, syn_node_sharded};
-use dsanls::secure::{run_syn_sd, SecureAlgo, SynOptions};
+use dsanls::secure::syn::{assemble_syn, syn_rank};
+use dsanls::secure::{SecureAlgo, SynOptions};
 use dsanls::sketch::SketchKind;
 use dsanls::solvers::SolverKind;
 
@@ -19,6 +22,31 @@ fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
     let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
     let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
     Matrix::Dense(u.matmul_nt(&v))
+}
+
+fn run_dsanls(m: &Matrix, opts: &DsanlsOptions) -> Outcome {
+    Job::builder()
+        .algorithm(Algo::Dsanls(opts.clone()))
+        .data(DataSource::Full(m))
+        .run()
+        .expect("dsanls job failed")
+}
+
+fn run_dist_anls(m: &Matrix, opts: &DistAnlsOptions) -> Outcome {
+    Job::builder()
+        .algorithm(Algo::DistAnls(opts.clone()))
+        .data(DataSource::Full(m))
+        .run()
+        .expect("baseline job failed")
+}
+
+fn run_syn_sd(m: &Matrix, cols: &dsanls::data::Partition, opts: &SynOptions) -> Outcome {
+    Job::builder()
+        .algorithm(Algo::Syn(opts.clone(), SecureAlgo::SynSd))
+        .data(DataSource::Full(m))
+        .secure_partition(cols.clone())
+        .run()
+        .expect("syn-sd job failed")
 }
 
 /// DSANLS iterates are identical for ANY node count (shared-seed sketches +
@@ -197,7 +225,8 @@ fn per_iteration_time_reported() {
 /// The tentpole contract of the transport subsystem: DSANLS over real
 /// localhost TCP produces factors **bit-identical** to the simulated
 /// backend (same seed, same rank-ordered reductions, same per-node thread
-/// policy).
+/// policy) — both through the same `Job` builder, only the `transport`
+/// axis changes.
 #[test]
 fn dsanls_tcp_backend_bit_identical_to_sim() {
     let m = low_rank(60, 48, 3, 1013);
@@ -211,11 +240,12 @@ fn dsanls_tcp_backend_bit_identical_to_sim() {
         ..Default::default()
     };
     let sim = run_dsanls(&m, &opts);
-    let outputs = run_tcp_cluster(opts.nodes, opts.comm, |ctx| {
-        dsanls::algos::dsanls::dsanls_node(ctx, &m, &opts)
-    })
-    .expect("tcp cluster failed");
-    let tcp = reduce_outputs(outputs, opts.rank, opts.iterations);
+    let tcp = Job::builder()
+        .algorithm(Algo::Dsanls(opts.clone()))
+        .data(DataSource::Full(&m))
+        .transport(Backend::Tcp { port: 0 })
+        .run()
+        .expect("tcp job failed");
     assert_eq!(sim.u.data(), tcp.u.data(), "U diverged across backends");
     assert_eq!(sim.v.data(), tcp.v.data(), "V diverged across backends");
     // traced errors are computed from the same factors → bit-identical too
@@ -243,19 +273,22 @@ fn syn_sd_tcp_backend_bit_identical_to_sim() {
         eval_every: 0,
         ..Default::default()
     };
-    let sim = run_syn_sd(&m, &cols, &opts, None);
-    let outputs = run_tcp_cluster(opts.nodes, opts.comm, |ctx| {
-        syn_node(ctx, &m, &cols, &opts, SecureAlgo::SynSd, None)
-    })
-    .expect("tcp cluster failed");
-    let tcp = assemble_syn(outputs, opts.rank, opts.t1 * opts.t2);
+    let sim = run_syn_sd(&m, &cols, &opts);
+    let tcp = Job::builder()
+        .algorithm(Algo::Syn(opts.clone(), SecureAlgo::SynSd))
+        .data(DataSource::Full(&m))
+        .secure_partition(cols.clone())
+        .transport(Backend::Tcp { port: 0 })
+        .run()
+        .expect("tcp job failed");
     assert_eq!(sim.u.data(), tcp.u.data(), "U diverged across backends");
     assert_eq!(sim.v.data(), tcp.v.data(), "V diverged across backends");
 }
 
 /// The shard data plane's contract, end to end over real TCP: ranks that
 /// hold **only their blocks** (plus the chain-reduced exact ‖M‖²) must
-/// produce factors bit-identical to the full-matrix simulator.
+/// produce factors bit-identical to the full-matrix simulator. Drives the
+/// unified `dsanls_rank` node runner directly on shard-resident input.
 #[test]
 fn dsanls_sharded_tcp_bit_identical_to_full_sim() {
     let m = low_rank(72, 54, 3, 1017);
@@ -276,7 +309,7 @@ fn dsanls_sharded_tcp_bit_identical_to_full_sim() {
         data.fro_sq = None; // what a real worker does: resolve via the chain
         let fro = exact_fro_sq(ctx.comm_mut(), opts.nodes, data.m_rows.as_ref()).unwrap();
         data.fro_sq = Some(fro);
-        dsanls::algos::dsanls::dsanls_node_sharded(ctx, &data, &opts)
+        dsanls::algos::dsanls::dsanls_rank(ctx, NodeInput::Shard(&data), &opts, None)
     })
     .expect("tcp cluster failed");
     let tcp = reduce_outputs(outputs, opts.rank, opts.iterations);
@@ -285,7 +318,8 @@ fn dsanls_sharded_tcp_bit_identical_to_full_sim() {
 }
 
 /// Sharded Syn-SD parties (column block + global metadata only) match the
-/// full-matrix simulator bit-for-bit.
+/// full-matrix simulator bit-for-bit — through the same `syn_rank` node
+/// runner both ways.
 #[test]
 fn syn_sd_sharded_matches_full_sim() {
     let m = low_rank(40, 30, 3, 1019);
@@ -301,7 +335,7 @@ fn syn_sd_sharded_matches_full_sim() {
         eval_every: 0,
         ..Default::default()
     };
-    let sim = run_syn_sd(&m, &cols, &opts, None);
+    let sim = run_syn_sd(&m, &cols, &opts);
     let outputs = run_tcp_cluster(opts.nodes, opts.comm, |ctx| {
         // a secure party's shard: its column block; the row block exists
         // only to feed the ‖M‖² chain, then is dropped (worker behaviour)
@@ -311,7 +345,7 @@ fn syn_sd_sharded_matches_full_sim() {
         let fro = exact_fro_sq(ctx.comm_mut(), opts.nodes, data.m_rows.as_ref()).unwrap();
         data.fro_sq = Some(fro);
         data.drop_rows();
-        syn_node_sharded(ctx, &data, &cols, &opts, SecureAlgo::SynSd, None)
+        syn_rank(ctx, NodeInput::Shard(&data), &cols, &opts, SecureAlgo::SynSd, None, None)
     })
     .expect("tcp cluster failed");
     let tcp = assemble_syn(outputs, opts.rank, opts.t1 * opts.t2);

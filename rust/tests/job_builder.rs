@@ -1,0 +1,293 @@
+//! Integration tests for the unified `nmf::job::Job` builder: all six
+//! paper methods through one API on both transport backends, every data
+//! source, streaming observers, and typed errors on misuse.
+
+use std::sync::Mutex;
+
+use dsanls::algos::{DistAnlsOptions, DsanlsOptions, ProgressEvent};
+use dsanls::data::shard::{write_shard_dir, ShardManifest};
+use dsanls::data::Dataset;
+use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::job::{Algo, Backend, DataSource, Job, Outcome};
+use dsanls::rng::Pcg64;
+use dsanls::secure::{AsynOptions, SecureAlgo, SynOptions};
+
+fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed as u128, 0);
+    let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
+    let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
+    Matrix::Dense(u.matmul_nt(&v))
+}
+
+/// The six paper methods, tiny configurations (nodes = 2 everywhere).
+fn all_six() -> Vec<Algo> {
+    let dsanls = DsanlsOptions {
+        nodes: 2,
+        rank: 3,
+        iterations: 4,
+        d_u: 8,
+        d_v: 8,
+        eval_every: 2,
+        ..Default::default()
+    };
+    let hals = DistAnlsOptions {
+        nodes: 2,
+        rank: 3,
+        iterations: 4,
+        eval_every: 2,
+        ..Default::default()
+    };
+    let syn = SynOptions {
+        nodes: 2,
+        rank: 3,
+        t1: 2,
+        t2: 2,
+        d1: 8,
+        d2: 4,
+        d3: 8,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let asyn = AsynOptions {
+        nodes: 2,
+        rank: 3,
+        rounds: 3,
+        local_iters: 2,
+        d1: 8,
+        ..Default::default()
+    };
+    vec![
+        Algo::Dsanls(dsanls),
+        Algo::DistAnls(hals),
+        Algo::Syn(syn.clone(), SecureAlgo::SynSd),
+        Algo::Syn(syn, SecureAlgo::SynSsdUv),
+        Algo::Asyn(asyn.clone(), SecureAlgo::AsynSd),
+        Algo::Asyn(asyn, SecureAlgo::AsynSsdV),
+    ]
+}
+
+fn check_outcome(out: &Outcome, what: &str) {
+    assert!(!out.trace.is_empty(), "{what}: empty trace");
+    assert!(out.final_error().is_finite(), "{what}: bad error");
+    assert!(out.u.is_nonnegative(), "{what}: negative factor");
+    assert!(out.v.is_nonnegative(), "{what}: negative factor");
+}
+
+/// Acceptance contract: every method runs through `Job::builder()` on BOTH
+/// `Backend::Sim` and `Backend::Tcp`.
+#[test]
+fn all_six_methods_on_both_backends() {
+    let m = low_rank(48, 36, 3, 7001);
+    for algo in all_six() {
+        for backend in [Backend::Sim, Backend::Tcp { port: 0 }] {
+            let label = format!("{algo:?} on {backend:?}");
+            let out = Job::builder()
+                .algorithm(algo.clone())
+                .data(DataSource::Full(&m))
+                .transport(backend)
+                .run()
+                .unwrap_or_else(|e| panic!("{label}: {e}"));
+            check_outcome(&out, &label);
+            if matches!(backend, Backend::Tcp { .. }) {
+                assert!(out.label.ends_with("/tcp"), "{label}: label {}", out.label);
+            }
+        }
+    }
+}
+
+/// Every method also runs on shard-local synthetic data — no rank ever
+/// materialises the full matrix — and reports per-rank load statistics.
+#[test]
+fn all_six_methods_on_synthetic_windows() {
+    for algo in all_six() {
+        let out = Job::builder()
+            .algorithm(algo.clone())
+            .data(DataSource::SyntheticWindow { dataset: Dataset::Face, seed: 9, scale: 0.03 })
+            .run()
+            .unwrap_or_else(|e| panic!("{algo:?} on synth shards: {e}"));
+        check_outcome(&out, &format!("{algo:?} on synth shards"));
+        assert!(!out.loads.is_empty(), "{algo:?}: synth shards must report load stats");
+    }
+}
+
+/// Synthetic-window jobs are bit-identical to full-matrix jobs of the same
+/// dataset (windowed generation + exact ‖M‖² chain).
+#[test]
+fn synthetic_window_bit_identical_to_full() {
+    let m = Dataset::Face.generate_scaled(9, 0.03);
+    let opts = DsanlsOptions {
+        nodes: 3,
+        rank: 3,
+        iterations: 5,
+        d_u: 8,
+        d_v: 8,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let full = Job::builder()
+        .algorithm(Algo::Dsanls(opts.clone()))
+        .data(DataSource::Full(&m))
+        .run()
+        .unwrap();
+    let shard = Job::builder()
+        .algorithm(Algo::Dsanls(opts))
+        .data(DataSource::SyntheticWindow { dataset: Dataset::Face, seed: 9, scale: 0.03 })
+        .run()
+        .unwrap();
+    assert_eq!(full.u.data(), shard.u.data(), "U diverged across data sources");
+    assert_eq!(full.v.data(), shard.v.data(), "V diverged across data sources");
+}
+
+/// A `dsanls shard` directory drives the same job; factors stay
+/// bit-identical to the full-matrix run.
+#[test]
+fn shard_dir_source_bit_identical_to_full() {
+    let m = Dataset::Face.generate_scaled(11, 0.03);
+    let dir = std::env::temp_dir().join(format!("dsanls_jobshard_{}", std::process::id()));
+    let manifest = ShardManifest {
+        nodes: 2,
+        rows: m.rows(),
+        cols: m.cols(),
+        fro_sq: m.fro_sq(),
+        seed: 11,
+        scale: 0.03,
+        dense: matches!(m, Matrix::Dense(_)),
+        dataset: "FACE".into(),
+    };
+    write_shard_dir(&dir, &m, &manifest).unwrap();
+    let opts = DsanlsOptions {
+        nodes: 2,
+        rank: 3,
+        iterations: 5,
+        d_u: 8,
+        d_v: 8,
+        eval_every: 0,
+        ..Default::default()
+    };
+    let full = Job::builder()
+        .algorithm(Algo::Dsanls(opts.clone()))
+        .data(DataSource::Full(&m))
+        .run()
+        .unwrap();
+    let shard = Job::builder()
+        .algorithm(Algo::Dsanls(opts.clone()))
+        .data(DataSource::ShardDir(dir.clone()))
+        .run()
+        .unwrap();
+    assert_eq!(full.u.data(), shard.u.data(), "U diverged across data sources");
+    assert_eq!(full.v.data(), shard.v.data(), "V diverged across data sources");
+    assert_eq!(shard.loads.len(), 2, "file shards must report per-rank loads");
+
+    // rank-count mismatch: typed error, not a panic or a hang
+    let mut three = opts;
+    three.nodes = 3;
+    let err = Job::builder()
+        .algorithm(Algo::Dsanls(three))
+        .data(DataSource::ShardDir(dir.clone()))
+        .run()
+        .unwrap_err();
+    assert!(
+        err.to_string().contains("2 nodes") && err.to_string().contains("3"),
+        "unhelpful shard-mismatch error: {err}"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// The streaming observer sees every traced sample as it is recorded, in
+/// order, with monotonically growing communication counters.
+#[test]
+fn observer_streams_progress() {
+    let m = low_rank(40, 30, 3, 7003);
+    let events: Mutex<Vec<ProgressEvent>> = Mutex::new(Vec::new());
+    let obs = |e: &ProgressEvent| events.lock().unwrap().push(*e);
+    let out = Job::builder()
+        .algorithm(Algo::Dsanls(DsanlsOptions {
+            nodes: 2,
+            rank: 3,
+            iterations: 6,
+            d_u: 8,
+            d_v: 8,
+            eval_every: 2,
+            ..Default::default()
+        }))
+        .data(DataSource::Full(&m))
+        .observer(&obs)
+        .run()
+        .unwrap();
+    let events = events.into_inner().unwrap();
+    assert_eq!(events.len(), out.trace.len(), "one event per traced sample");
+    for (e, p) in events.iter().zip(out.trace.iter()) {
+        assert_eq!(e.iteration, p.iteration);
+        assert_eq!(e.rel_error.to_bits(), p.rel_error.to_bits());
+    }
+    for w in events.windows(2) {
+        assert!(w[1].iteration > w[0].iteration, "events must stream in order");
+        assert!(
+            w[1].stats.bytes_sent >= w[0].stats.bytes_sent,
+            "comm counters must be cumulative"
+        );
+    }
+    assert!(events.last().unwrap().stats.messages > 0);
+}
+
+/// The asynchronous protocols replay their merged trace to the observer at
+/// assembly (per-client clocks only merge then).
+#[test]
+fn observer_sees_asyn_trace() {
+    let m = low_rank(40, 30, 3, 7005);
+    let count = Mutex::new(0usize);
+    let obs = |_e: &ProgressEvent| *count.lock().unwrap() += 1;
+    let out = Job::builder()
+        .algorithm(Algo::Asyn(
+            AsynOptions {
+                nodes: 2,
+                rank: 3,
+                rounds: 3,
+                local_iters: 2,
+                d1: 8,
+                ..Default::default()
+            },
+            SecureAlgo::AsynSd,
+        ))
+        .data(DataSource::Full(&m))
+        .observer(&obs)
+        .run()
+        .unwrap();
+    assert_eq!(*count.lock().unwrap(), out.trace.len());
+}
+
+/// Builder misuse returns typed errors, never panics.
+#[test]
+fn misuse_is_a_typed_error() {
+    let m = low_rank(20, 16, 2, 7007);
+
+    // missing algorithm
+    let err = Job::builder().data(DataSource::Full(&m)).run().unwrap_err();
+    assert!(err.to_string().contains("algorithm"), "{err}");
+
+    // missing data
+    let err = Job::builder()
+        .algorithm(Algo::Dsanls(DsanlsOptions::default()))
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("data source"), "{err}");
+
+    // async with <2 parties
+    let err = Job::builder()
+        .algorithm(Algo::Asyn(
+            AsynOptions { nodes: 1, ..Default::default() },
+            SecureAlgo::AsynSd,
+        ))
+        .data(DataSource::Full(&m))
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("2 parties"), "{err}");
+
+    // missing shard directory: error, not panic
+    let err = Job::builder()
+        .algorithm(Algo::Dsanls(DsanlsOptions { nodes: 2, ..Default::default() }))
+        .data(DataSource::ShardDir("/definitely/not/a/shard/dir".into()))
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("manifest"), "{err}");
+}

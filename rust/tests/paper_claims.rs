@@ -2,9 +2,10 @@
 //! the *shapes* of the evaluation section (who wins, what scales with what)
 //! rather than absolute numbers — see DESIGN.md §5.
 
-use dsanls::algos::{run_dist_anls, run_dsanls, DistAnlsOptions, DsanlsOptions};
+use dsanls::algos::{DistAnlsOptions, DsanlsOptions};
 use dsanls::dist::CommModel;
 use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::job::{Algo, DataSource, Job, Outcome};
 use dsanls::rng::Pcg64;
 use dsanls::sketch::{SketchKind, SketchMatrix};
 use dsanls::solvers::SolverKind;
@@ -14,6 +15,22 @@ fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
     let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
     let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
     Matrix::Dense(u.matmul_nt(&v))
+}
+
+fn run_dsanls(m: &Matrix, opts: &DsanlsOptions) -> Outcome {
+    Job::builder()
+        .algorithm(Algo::Dsanls(opts.clone()))
+        .data(DataSource::Full(m))
+        .run()
+        .expect("dsanls job failed")
+}
+
+fn run_dist_anls(m: &Matrix, opts: &DistAnlsOptions) -> Outcome {
+    Job::builder()
+        .algorithm(Algo::DistAnls(opts.clone()))
+        .data(DataSource::Full(m))
+        .run()
+        .expect("baseline job failed")
 }
 
 /// Sec. 3.3: DSANLS communication is O(kd) per iteration vs the baselines'

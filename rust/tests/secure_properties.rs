@@ -1,12 +1,12 @@
 //! Security/privacy integration tests: Definition-1 audits for every
 //! protocol, and the Theorem-2/3 boundary.
 
-use dsanls::data::partition::{imbalanced_partition, uniform_partition};
+use dsanls::data::partition::{imbalanced_partition, uniform_partition, Partition};
 use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::job::{Algo, DataSource, Job, Outcome};
 use dsanls::rng::Pcg64;
 use dsanls::secure::{
-    run_asyn, run_syn_sd, run_syn_ssd, sketch_inversion, AsynOptions, AuditLog, AuditVerdict,
-    SecureAlgo, SynOptions,
+    sketch_inversion, AsynOptions, AuditLog, AuditVerdict, SecureAlgo, SynOptions,
 };
 use dsanls::sketch::{SketchKind, SketchMatrix};
 
@@ -15,6 +15,46 @@ fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
     let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
     let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
     Matrix::Dense(u.matmul_nt(&v))
+}
+
+fn run_secure(
+    m: &Matrix,
+    cols: &Partition,
+    algo: Algo,
+    audit: Option<&AuditLog>,
+) -> Outcome {
+    let mut b = Job::builder()
+        .algorithm(algo)
+        .data(DataSource::Full(m))
+        .secure_partition(cols.clone());
+    if let Some(a) = audit {
+        b = b.audit(a);
+    }
+    b.run().expect("secure job failed")
+}
+
+fn run_syn_sd(m: &Matrix, cols: &Partition, opts: &SynOptions, audit: Option<&AuditLog>) -> Outcome {
+    run_secure(m, cols, Algo::Syn(opts.clone(), SecureAlgo::SynSd), audit)
+}
+
+fn run_syn_ssd(
+    m: &Matrix,
+    cols: &Partition,
+    opts: &SynOptions,
+    variant: SecureAlgo,
+    audit: Option<&AuditLog>,
+) -> Outcome {
+    run_secure(m, cols, Algo::Syn(opts.clone(), variant), audit)
+}
+
+fn run_asyn(
+    m: &Matrix,
+    cols: &Partition,
+    opts: &AsynOptions,
+    variant: SecureAlgo,
+    audit: Option<&AuditLog>,
+) -> Outcome {
+    run_secure(m, cols, Algo::Asyn(opts.clone(), variant), audit)
 }
 
 fn mat_rows(m: &Mat) -> Vec<Vec<f32>> {

@@ -7,7 +7,12 @@ cd "$(dirname "$0")/.."
 echo "== cargo fmt --check =="
 cargo fmt --check
 
-echo "== cargo clippy -D warnings =="
+echo "== cargo clippy -D warnings (lib first — gates the nmf::job builder API) =="
+# the nmf::job module (unified Job builder) is the public front door; keep
+# the library clippy-clean on its own before the heavier all-targets pass
+cargo clippy --lib -- -D warnings
+
+echo "== cargo clippy -D warnings (all targets) =="
 cargo clippy --all-targets -- -D warnings
 
 echo "== cargo doc (rustdoc must build; transport/ and coordinator/ warn on missing docs) =="
