@@ -12,15 +12,30 @@
 //! `O(k·d·(m/N + k))` (paper Sec. 3.6.1) — together these produce the
 //! `n/d ≫ 1` speedup the paper claims and Fig. 3 measures.
 
-use super::{assemble_blocks, DistRun, NodeOutput, ObserverFn, Trace};
+use super::{assemble_blocks, NodeOutput, ObserverFn, Trace};
 use crate::data::partition::uniform_partition;
 use crate::data::shard::NodeInput;
 use crate::dist::{CommModel, NodeCtx};
 use crate::linalg::{Mat, Matrix};
+use crate::nmf::control::{checkpoint_sync, CheckpointMeta, RunControl, StopReason};
 use crate::nmf::init_factors_from;
 use crate::rng::{Role, StreamRng};
 use crate::solvers::{self, Normal, SolverKind};
 use crate::transport::Communicator;
+
+/// Stable checkpoint algorithm tag for the MPI-FAUN baselines.
+pub const CKPT_TAG: &str = "dist-anls";
+
+/// Fingerprint of every result-affecting baseline option (see
+/// [`crate::algos::dsanls::ckpt_params`] for the rationale and what is
+/// deliberately excluded).
+pub fn ckpt_params(opts: &DistAnlsOptions) -> u64 {
+    use crate::nmf::control::{fingerprint_str, params_fingerprint};
+    params_fingerprint(&[
+        fingerprint_str(opts.solver.name()),
+        opts.inner_sweeps as u64,
+    ])
+}
 
 /// Options for an MPI-FAUN-style baseline run.
 #[derive(Debug, Clone)]
@@ -52,30 +67,19 @@ impl Default for DistAnlsOptions {
     }
 }
 
-/// Run a distributed unsketched baseline on the simulated cluster.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `nmf::job::Job::builder().algorithm(Algo::DistAnls(opts))` instead"
-)]
-pub fn run_dist_anls(m: &Matrix, opts: &DistAnlsOptions) -> DistRun {
-    let out = crate::nmf::job::Job::builder()
-        .algorithm(crate::nmf::job::Algo::DistAnls(opts.clone()))
-        .data(crate::nmf::job::DataSource::Full(m))
-        .run()
-        .unwrap_or_else(|e| panic!("baseline job failed: {e}"));
-    out.into_dist_run()
-}
-
 /// One baseline rank over any transport backend — the single per-rank
 /// node runner, on a resolved [`NodeInput`] (full matrix, or shard-resident
 /// blocks with the exact global `‖M‖²` — see
 /// [`crate::algos::dsanls::dsanls_rank`] for the bit-identity contract).
-/// `opts.nodes` must match the communicator's cluster size.
+/// `opts.nodes` must match the communicator's cluster size. `ctl` is the
+/// run's control plane (per-iteration collective stop poll, checkpoint
+/// cadence, resume cursor — the same contract as `dsanls_rank`).
 pub fn dist_anls_rank<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     input: NodeInput<'_>,
     opts: &DistAnlsOptions,
     observer: Option<&ObserverFn>,
+    ctl: &RunControl,
 ) -> NodeOutput {
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let (rows, cols) = input.dims();
@@ -90,20 +94,38 @@ pub fn dist_anls_rank<C: Communicator>(
         let m_rows: &Matrix = &m_rows;
         let m_cols_t = input.col_block_t(my_cols.clone());
 
-        let (u_full, v_full) = {
-            let mut rng = stream.for_iteration(0, Role::Init);
-            init_factors_from(input.fro_sq(), rows, cols, opts.rank, &mut rng)
+        let start = ctl.start_iteration();
+        let (mut u_block, mut v_block) = match ctl.resume.as_deref() {
+            Some(rs) => (rs.u.row_block(my_rows.clone()), rs.v.row_block(my_cols.clone())),
+            None => {
+                let (u_full, v_full) = {
+                    let mut rng = stream.for_iteration(0, Role::Init);
+                    init_factors_from(input.fro_sq(), rows, cols, opts.rank, &mut rng)
+                };
+                (u_full.row_block(my_rows.clone()), v_full.row_block(my_cols.clone()))
+            }
         };
-        let mut u_block = u_full.row_block(my_rows.clone());
-        let mut v_block = v_full.row_block(my_cols.clone());
-        drop((u_full, v_full));
 
+        let ckpt_meta = CheckpointMeta {
+            algo: CKPT_TAG.into(),
+            seed: opts.seed,
+            k: opts.rank,
+            rows,
+            cols,
+            params: ckpt_params(opts),
+        };
         let mut trace = Trace::new(if rank == 0 { observer } else { None });
         super::dsanls::record_error_any(
-            ctx, &input, m_rows, &u_block, &v_block, opts.rank, 0, &mut trace,
+            ctx, &input, m_rows, &u_block, &v_block, opts.rank, start, &mut trace,
         );
 
-        for t in 0..opts.iterations {
+        let mut stop = StopReason::Completed;
+        let mut completed = start;
+        for t in start..opts.iterations {
+            if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
+                stop = reason;
+                break;
+            }
             // ---- U-step: gram = VᵀV (all-reduce), V full (all-gather) ----
             let mut gram_buf =
                 ctx.compute(|| v_block.gram().into_vec());
@@ -139,15 +161,26 @@ pub fn dist_anls_rank<C: Communicator>(
                 }
             });
 
+            completed = t + 1;
             if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
                 super::dsanls::record_error_any(
                     ctx, &input, m_rows, &u_block, &v_block, opts.rank, t + 1, &mut trace,
                 );
             }
+            if ctl.should_checkpoint(t + 1) {
+                checkpoint_sync(
+                    ctx,
+                    ctl.checkpoint.as_ref().expect("cadence implies config"),
+                    &ckpt_meta,
+                    t + 1,
+                    &u_block,
+                    &v_block,
+                );
+            }
         }
-        if trace.last_iteration() != Some(opts.iterations) {
+        if trace.last_iteration() != Some(completed) {
             super::dsanls::record_error_any(
-                ctx, &input, m_rows, &u_block, &v_block, opts.rank, opts.iterations, &mut trace,
+                ctx, &input, m_rows, &u_block, &v_block, opts.rank, completed, &mut trace,
             );
         }
 
@@ -157,15 +190,15 @@ pub fn dist_anls_rank<C: Communicator>(
             trace: if rank == 0 { trace.into_points() } else { Vec::new() },
             stats: ctx.stats(),
             final_clock: ctx.clock(),
+            stop,
         }
     }
 }
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the deprecated shims stay covered until removal
-
     use super::*;
+    use crate::nmf::job::{Algo, DataSource, Job};
     use crate::rng::Pcg64;
 
     fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
@@ -173,6 +206,16 @@ mod tests {
         let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
         let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
         Matrix::Dense(u.matmul_nt(&v))
+    }
+
+    /// Builder-backed shorthand (the deprecated free function is gone).
+    fn run_dist_anls(m: &Matrix, opts: &DistAnlsOptions) -> crate::algos::DistRun {
+        Job::builder()
+            .algorithm(Algo::DistAnls(opts.clone()))
+            .data(DataSource::Full(m))
+            .run()
+            .unwrap_or_else(|e| panic!("baseline job failed: {e}"))
+            .into_dist_run()
     }
 
     #[test]

@@ -17,16 +17,39 @@
 //! rank order, the iterates are **bit-identical for any node count** — a
 //! property the integration tests assert (`tests/dist_equivalence.rs`).
 
-use super::{DistRun, NodeOutput, ObserverFn, Trace, TracePoint};
+use super::{NodeOutput, ObserverFn, Trace, TracePoint};
 use crate::data::partition::uniform_partition;
 use crate::data::shard::NodeInput;
 use crate::dist::{CommModel, NodeCtx};
 use crate::linalg::{Mat, Matrix};
+use crate::nmf::control::{checkpoint_sync, CheckpointMeta, RunControl, StopReason};
 use crate::nmf::{init_factors_from, rel_error, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
 use crate::solvers::{self, SolverKind, Workspace};
 use crate::transport::Communicator;
+
+/// Stable checkpoint algorithm tag for DSANLS runs.
+pub const CKPT_TAG: &str = "dsanls";
+
+/// Fingerprint of every result-affecting DSANLS option — what checkpoint
+/// resume validates beyond seed/rank/shape (a changed solver or sketch
+/// size would replay a *different* trajectory tail). `nodes`, `eval_every`
+/// and the comm model are deliberately excluded: node count does not
+/// change the iterates (the invariance the paper's design guarantees) and
+/// the others never touch the factor math.
+pub fn ckpt_params(opts: &DsanlsOptions) -> u64 {
+    use crate::nmf::control::{fingerprint_str, params_fingerprint};
+    params_fingerprint(&[
+        fingerprint_str(opts.solver.name()),
+        fingerprint_str(opts.sketch.name()),
+        opts.d_u as u64,
+        opts.d_v as u64,
+        opts.mu.alpha.to_bits() as u64,
+        opts.mu.beta.to_bits() as u64,
+        opts.box_bound as u64,
+    ])
+}
 
 /// Options for a DSANLS run.
 #[derive(Debug, Clone)]
@@ -79,22 +102,6 @@ impl DsanlsOptions {
     }
 }
 
-/// Run DSANLS on the simulated cluster. `m` is the full input; each node
-/// only ever *reads* its own row/column blocks (enforced by slicing them
-/// out before the iteration loop).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `nmf::job::Job::builder().algorithm(Algo::Dsanls(opts))` instead"
-)]
-pub fn run_dsanls(m: &Matrix, opts: &DsanlsOptions) -> DistRun {
-    let out = crate::nmf::job::Job::builder()
-        .algorithm(crate::nmf::job::Algo::Dsanls(opts.clone()))
-        .data(crate::nmf::job::DataSource::Full(m))
-        .run()
-        .unwrap_or_else(|e| panic!("DSANLS job failed: {e}"));
-    out.into_dist_run()
-}
-
 /// One DSANLS rank over any transport backend — the single per-rank
 /// **node runner** every driver (simulated cluster, in-process TCP, the
 /// multi-process `dsanls worker`) funnels through. The rank's view of the
@@ -111,11 +118,20 @@ pub fn run_dsanls(m: &Matrix, opts: &DsanlsOptions) -> DistRun {
 /// cluster size, so every rank agrees without further coordination;
 /// `opts.nodes` must match the communicator's cluster size. `observer`
 /// (rank 0 only) streams each traced sample as it is recorded.
+///
+/// `ctl` is the run's control plane: the loop polls the collective stop
+/// decision once per iteration (cancel / deadline / target error),
+/// snapshots rank-0-assembled factors on the checkpoint cadence, and —
+/// when resuming — re-enters the loop at the checkpoint's iteration with
+/// the restored factor slices, which replays the exact tail of an
+/// uninterrupted run (the RNG streams are derived from `(seed,
+/// iteration)`, so the iteration counter is the whole RNG cursor).
 pub fn dsanls_rank<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     input: NodeInput<'_>,
     opts: &DsanlsOptions,
     observer: Option<&ObserverFn>,
+    ctl: &RunControl,
 ) -> NodeOutput {
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let rank = ctx.rank;
@@ -133,31 +149,51 @@ pub fn dsanls_rank<C: Communicator>(
     let m_rows: &Matrix = &m_rows;
     let m_cols_t = input.col_block_t(my_cols.clone()); // (M_{:J_r})ᵀ
 
-    // shared-seed init: every node generates the same full factors and keeps
-    // its slice ⇒ iterates are independent of the node count. Factor-sized
-    // only — never the data matrix.
-    let (u_full, v_full) = {
-        let mut rng = stream.for_iteration(0, Role::Init);
-        init_factors_from(fro_sq, rows, cols, opts.rank, &mut rng)
+    // shared-seed init (or checkpoint restore): every node derives the same
+    // full factors and keeps its slice ⇒ iterates are independent of the
+    // node count. Factor-sized only — never the data matrix.
+    let start = ctl.start_iteration();
+    let (mut u_block, mut v_block) = match ctl.resume.as_deref() {
+        Some(rs) => (rs.u.row_block(my_rows.clone()), rs.v.row_block(my_cols.clone())),
+        None => {
+            let (u_full, v_full) = {
+                let mut rng = stream.for_iteration(0, Role::Init);
+                init_factors_from(fro_sq, rows, cols, opts.rank, &mut rng)
+            };
+            (u_full.row_block(my_rows.clone()), v_full.row_block(my_cols.clone()))
+        }
     };
-    let mut u_block = u_full.row_block(my_rows.clone());
-    let mut v_block = v_full.row_block(my_cols.clone());
-    drop((u_full, v_full));
 
     // Eq. 22 ceiling enforcing Assumption 2 (when requested)
     let ceiling = (2.0 * fro_sq.sqrt()).sqrt() as f32;
 
+    let ckpt_meta = CheckpointMeta {
+        algo: CKPT_TAG.into(),
+        seed: opts.seed,
+        k: opts.rank,
+        rows,
+        cols,
+        params: ckpt_params(opts),
+    };
     let mut trace = Trace::new(if rank == 0 { observer } else { None });
-    record_error_any(ctx, &input, m_rows, &u_block, &v_block, opts.rank, 0, &mut trace);
+    record_error_any(ctx, &input, m_rows, &u_block, &v_block, opts.rank, start, &mut trace);
 
     // per-node normal-equation scratch, reused across iterations (zero
     // allocations in the GEMM/solver hot path at steady state)
     let mut ws = Workspace::new();
-    for t in 0..opts.iterations {
+    let mut stop = StopReason::Completed;
+    let mut completed = start;
+    for t in start..opts.iterations {
         assert!(
             matches!(opts.solver, SolverKind::ProximalCd | SolverKind::Pgd),
             "DSANLS requires a Theorem-1 solver (rcd or pgd)"
         );
+
+        // collective stop decision — every rank leaves at the same iteration
+        if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
+            stop = reason;
+            break;
+        }
 
         // ---------- U-subproblem (Alg. 2 lines 4–8) ----------
         let (a_r, b_sum) = ctx.compute(|| {
@@ -197,20 +233,24 @@ pub fn dsanls_rank<C: Communicator>(
             }
         });
 
+        completed = t + 1;
         if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
             record_error_any(ctx, &input, m_rows, &u_block, &v_block, opts.rank, t + 1, &mut trace);
         }
+        if ctl.should_checkpoint(t + 1) {
+            checkpoint_sync(
+                ctx,
+                ctl.checkpoint.as_ref().expect("cadence implies config"),
+                &ckpt_meta,
+                t + 1,
+                &u_block,
+                &v_block,
+            );
+        }
     }
-    if trace.last_iteration() != Some(opts.iterations) {
+    if trace.last_iteration() != Some(completed) {
         record_error_any(
-            ctx,
-            &input,
-            m_rows,
-            &u_block,
-            &v_block,
-            opts.rank,
-            opts.iterations,
-            &mut trace,
+            ctx, &input, m_rows, &u_block, &v_block, opts.rank, completed, &mut trace,
         );
     }
 
@@ -220,6 +260,7 @@ pub fn dsanls_rank<C: Communicator>(
         trace: if rank == 0 { trace.into_points() } else { Vec::new() },
         stats: ctx.stats(),
         final_clock: ctx.clock(),
+        stop,
     }
 }
 
@@ -312,10 +353,9 @@ pub(crate) fn record_error_sharded<C: Communicator>(
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the deprecated shims stay covered until removal
-
     use super::*;
     use crate::dist::run_cluster;
+    use crate::nmf::job::{Algo, DataSource, Job};
     use crate::rng::Pcg64;
 
     fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
@@ -323,6 +363,17 @@ mod tests {
         let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
         let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
         Matrix::Dense(u.matmul_nt(&v))
+    }
+
+    /// The builder is the only front door now; this is the module-local
+    /// shorthand the old deprecated shim used to provide.
+    fn run_dsanls(m: &Matrix, opts: &DsanlsOptions) -> crate::algos::DistRun {
+        Job::builder()
+            .algorithm(Algo::Dsanls(opts.clone()))
+            .data(DataSource::Full(m))
+            .run()
+            .unwrap_or_else(|e| panic!("DSANLS job failed: {e}"))
+            .into_dist_run()
     }
 
     #[test]
@@ -469,7 +520,7 @@ mod tests {
                     .unwrap();
             assert_eq!(fro.to_bits(), m.fro_sq().to_bits(), "chain ‖M‖² must be exact");
             data.fro_sq = Some(fro);
-            dsanls_rank(ctx, NodeInput::Shard(&data), &opts, None)
+            dsanls_rank(ctx, NodeInput::Shard(&data), &opts, None, &RunControl::unsupervised())
         });
         let sharded = super::super::reduce_outputs(outputs, opts.rank, opts.iterations);
         assert_eq!(full.u.data(), sharded.u.data(), "U factors diverged");

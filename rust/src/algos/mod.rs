@@ -20,11 +20,10 @@ pub mod dsanls;
 
 pub use dist_anls::DistAnlsOptions;
 pub use dsanls::DsanlsOptions;
-#[allow(deprecated)]
-pub use {dist_anls::run_dist_anls, dsanls::run_dsanls};
 
 use crate::dist::CommStats;
 use crate::linalg::Mat;
+use crate::nmf::control::StopReason;
 
 /// One sample of the convergence trace.
 #[derive(Debug, Clone, Copy)]
@@ -95,6 +94,13 @@ impl<'a> Trace<'a> {
         self.points.last().map(|p| p.iteration)
     }
 
+    /// Relative error of the most recent sample (NaN if none — also NaN on
+    /// non-zero ranks of the full-matrix path, which record NaN samples).
+    /// This is what the control plane's target-error stop polls.
+    pub fn last_error(&self) -> f64 {
+        self.points.last().map_or(f64::NAN, |p| p.rel_error)
+    }
+
     /// Consume into the recorded points.
     pub fn into_points(self) -> Vec<TracePoint> {
         self.points
@@ -151,6 +157,21 @@ pub struct NodeOutput {
     pub trace: Vec<TracePoint>,
     pub stats: CommStats,
     pub final_clock: f64,
+    /// Why this rank's loop ended (collectively agreed, so identical on
+    /// every rank of a synchronous run).
+    pub stop: StopReason,
+}
+
+/// Completed-iteration span of a rank-0 trace (last minus first sample
+/// iteration) — the correct `sec_per_iter` divisor when a stop policy
+/// ended the run before its budget, or when a resumed run's clock covers
+/// only the tail. Falls back to `budget` when the trace has no span
+/// (empty, or a single sample from a run stopped before any iteration).
+pub fn trace_span(trace: &[TracePoint], budget: usize) -> usize {
+    match (trace.first(), trace.last()) {
+        (Some(f), Some(l)) if l.iteration > f.iteration => l.iteration - f.iteration,
+        _ => budget,
+    }
 }
 
 /// Assemble rank-ordered [`NodeOutput`]s into a [`DistRun`].

@@ -38,13 +38,14 @@ use std::time::{Duration, Instant};
 use crate::algos::{self, NodeOutput, TracePoint};
 use crate::config::{Algorithm as AlgoFamily, ExperimentConfig};
 use crate::coordinator::{self, Outcome};
-use crate::data::partition::uniform_partition;
+use crate::data::partition::{uniform_partition, Partition};
 use crate::data::shard::{self, LoadSource, LoadStats, NodeData, NodeInput};
 use crate::data::Dataset;
 use crate::dist::CommStats;
 use crate::error::{Context, Result};
 use crate::linalg::Mat;
 use crate::metrics;
+use crate::nmf::control::{CheckpointCfg, ControlToken, RunControl, StopPolicy, StopReason};
 use crate::nmf::job::{Algo, Algorithm as _, RankEnv, RankOutput};
 use crate::secure::{asyn, syn, SecureAlgo};
 use crate::transport::wire::{
@@ -117,8 +118,8 @@ fn trace_from_payload(p: &[f32]) -> Result<Vec<TracePoint>> {
     Ok(out)
 }
 
-fn stats_payload(s: &CommStats, final_clock: f64) -> Vec<f32> {
-    let mut p = Vec::with_capacity(14);
+fn stats_payload(s: &CommStats, final_clock: f64, stop: StopReason) -> Vec<f32> {
+    let mut p = Vec::with_capacity(16);
     push_u64_bits(&mut p, s.bytes_sent as u64);
     push_u64_bits(&mut p, s.bytes_received as u64);
     push_u64_bits(&mut p, s.messages as u64);
@@ -126,10 +127,11 @@ fn stats_payload(s: &CommStats, final_clock: f64) -> Vec<f32> {
     push_f64_bits(&mut p, s.comm_time);
     push_f64_bits(&mut p, s.stall_time);
     push_f64_bits(&mut p, final_clock);
+    push_u64_bits(&mut p, stop.code());
     p
 }
 
-fn stats_from_payload(p: &[f32]) -> Result<(CommStats, f64)> {
+fn stats_from_payload(p: &[f32]) -> Result<(CommStats, f64, StopReason)> {
     let mut pos = 0;
     let stats = CommStats {
         bytes_sent: take_u64_bits(p, &mut pos)? as usize,
@@ -140,7 +142,8 @@ fn stats_from_payload(p: &[f32]) -> Result<(CommStats, f64)> {
         stall_time: take_f64_bits(p, &mut pos)?,
     };
     let final_clock = take_f64_bits(p, &mut pos)?;
-    Ok((stats, final_clock))
+    let stop = StopReason::from_code(take_u64_bits(p, &mut pos)?)?;
+    Ok((stats, final_clock, stop))
 }
 
 fn samples_payload(samples: &[(f64, f64, usize)]) -> Vec<f32> {
@@ -222,6 +225,7 @@ pub fn worker_main(args: &[String]) -> Result<()> {
     let mut shards: Option<PathBuf> = None;
     let mut bind: Option<String> = None;
     let mut advertise: Option<String> = None;
+    let mut wctl = WorkerControlArgs::default();
     let mut cfg_args: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -248,6 +252,11 @@ pub fn worker_main(args: &[String]) -> Result<()> {
                     Some(args.get(i + 1).context("--advertise needs HOST[:PORT]")?.clone());
                 i += 2;
             }
+            flag if WorkerControlArgs::takes(flag) => {
+                let v = args.get(i + 1).with_context(|| format!("{flag} needs a value"))?;
+                wctl.apply(flag, v)?;
+                i += 2;
+            }
             _ => {
                 cfg_args.push(args[i].clone());
                 i += 1;
@@ -272,7 +281,7 @@ pub fn worker_main(args: &[String]) -> Result<()> {
         .context("rendezvous channel already taken")?;
 
     // run the rank; ship failures back as Error frames before exiting
-    match run_rank(&cfg, comm, rank, &mut report, shards.as_deref()) {
+    match run_rank(&cfg, comm, rank, &mut report, shards.as_deref(), &wctl) {
         Ok(()) => Ok(()),
         Err(e) => {
             let msg = format!("rank {rank}: {e}");
@@ -285,33 +294,135 @@ pub fn worker_main(args: &[String]) -> Result<()> {
     }
 }
 
+/// Control-plane flags a worker accepts (forwarded verbatim by `launch`):
+/// stop policy, checkpoint/resume, and the fault-injection pair used by
+/// the retry tests and operator drills.
+#[derive(Debug, Default, Clone)]
+struct WorkerControlArgs {
+    checkpoint: Option<PathBuf>,
+    checkpoint_every: Option<usize>,
+    resume: Option<PathBuf>,
+    max_seconds: Option<f64>,
+    target_error: Option<f64>,
+    fault_rank: Option<usize>,
+    fault_iteration: Option<usize>,
+}
+
+/// Default checkpoint cadence when `--checkpoint` is given without
+/// `--checkpoint-every`.
+pub const DEFAULT_CHECKPOINT_EVERY: usize = 10;
+
+impl WorkerControlArgs {
+    fn takes(flag: &str) -> bool {
+        matches!(
+            flag,
+            "--checkpoint"
+                | "--checkpoint-every"
+                | "--resume"
+                | "--max-seconds"
+                | "--target-error"
+                | "--fault-rank"
+                | "--fault-iteration"
+        )
+    }
+
+    fn apply(&mut self, flag: &str, v: &str) -> Result<()> {
+        let us = |v: &str| v.parse::<usize>().map_err(|e| crate::err!("{flag} {v}: {e}"));
+        let fl = |v: &str| v.parse::<f64>().map_err(|e| crate::err!("{flag} {v}: {e}"));
+        match flag {
+            "--checkpoint" => self.checkpoint = Some(PathBuf::from(v)),
+            "--checkpoint-every" => {
+                let n = us(v)?;
+                if n == 0 {
+                    crate::bail!("--checkpoint-every needs a cadence ≥ 1 iteration");
+                }
+                self.checkpoint_every = Some(n);
+            }
+            "--resume" => self.resume = Some(PathBuf::from(v)),
+            "--max-seconds" => self.max_seconds = Some(fl(v)?),
+            "--target-error" => self.target_error = Some(fl(v)?),
+            "--fault-rank" => self.fault_rank = Some(us(v)?),
+            "--fault-iteration" => self.fault_iteration = Some(us(v)?),
+            other => crate::bail!("unknown worker control flag {other}"),
+        }
+        Ok(())
+    }
+
+    /// Resolve into a [`RunControl`] for `rank` running `cfg` over data of
+    /// the given global shape. The resume checkpoint is read and validated
+    /// here (every worker reads the shared file and slices its blocks),
+    /// through the same [`Algo::ckpt_identity`] / `load_resume` path the
+    /// in-process job uses.
+    fn resolve(
+        &self,
+        cfg: &ExperimentConfig,
+        rank: usize,
+        rows: usize,
+        cols: usize,
+    ) -> Result<RunControl> {
+        let mut resume = None;
+        if self.checkpoint.is_some() || self.resume.is_some() {
+            let (tag, seed, k, iterations, params) = Algo::from_config(cfg).ckpt_identity()?;
+            if let Some(p) = &self.checkpoint {
+                crate::nmf::control::validate_checkpoint_path(p)?;
+            }
+            if let Some(path) = &self.resume {
+                resume = Some(crate::nmf::control::load_resume(
+                    path, tag, seed, k, rows, cols, params, iterations,
+                )?);
+            }
+        }
+        let stop = StopPolicy {
+            max_seconds: self.max_seconds,
+            target_error: self.target_error,
+        };
+        Ok(RunControl {
+            token: ControlToken::new(),
+            deadline: RunControl::deadline_from(&stop),
+            stop,
+            checkpoint: self.checkpoint.as_ref().map(|p| CheckpointCfg {
+                every: self.checkpoint_every.unwrap_or(DEFAULT_CHECKPOINT_EVERY).max(1),
+                path: p.clone(),
+            }),
+            resume,
+            fault_at: (self.fault_rank == Some(rank))
+                .then_some(self.fault_iteration)
+                .flatten(),
+            // a worker's token is created here and reachable by nothing —
+            // with no stop policy the per-iteration poll skips its
+            // collective (every rank derives the same answer from the same
+            // forwarded flags, so all skip alike)
+            cancellable: false,
+        })
+    }
+}
+
 /// Build this rank's [`NodeData`] — shard files when `--shards` was given,
 /// shard-local synthesis otherwise. Never materialises the full matrix.
 fn build_node_data(
     cfg: &ExperimentConfig,
     rank: usize,
     shards: Option<&Path>,
-) -> Result<(NodeData, LoadSource)> {
+) -> Result<(NodeData, LoadSource, Option<Partition>)> {
     let algo = Algo::from_config(cfg);
     let (need_rows, need_cols) = algo.block_needs(rank);
     let secure = matches!(cfg.algorithm, AlgoFamily::Secure(_));
     if let Some(dir) = shards {
-        if secure && cfg.skew > 0.0 {
-            crate::bail!(
-                "--shards directories are uniform-partitioned; skewed secure runs \
-                 (secure.skew > 0) must use shard-local synthesis (drop --shards)"
-            );
-        }
         if rank >= cfg.nodes {
             // async parameter server: global metadata only
             let manifest = shard::read_manifest(dir)?;
             validate_manifest(cfg, &manifest)?;
+            check_shard_skew(cfg, &manifest, dir, secure)?;
             let data = NodeData::metadata(manifest.rows, manifest.cols, Some(manifest.fro_sq));
-            return Ok((data, LoadSource::FileShard));
+            let cols = manifest.col_partition();
+            return Ok((data, LoadSource::FileShard, Some(cols)));
         }
         let (data, manifest) = NodeData::load(dir, rank, need_rows, need_cols)?;
         validate_manifest(cfg, &manifest)?;
-        return Ok((data, LoadSource::FileShard));
+        manifest.require_uniform_for(dir, secure)?;
+        check_shard_skew(cfg, &manifest, dir, secure)?;
+        let cols = manifest.col_partition();
+        return Ok((data, LoadSource::FileShard, Some(cols)));
     }
 
     // shard-local synthesis: every data rank generates its row block (the
@@ -332,7 +443,29 @@ fn build_node_data(
         None
     };
     let data = NodeData::generate(dataset, cfg.seed, cfg.scale, row_range, col_range);
-    Ok((data, LoadSource::SynthShard))
+    Ok((data, LoadSource::SynthShard, None))
+}
+
+/// A `secure.skew > 0` config promises a skewed column layout, but a
+/// shard directory carries its *own* partition (which the run will use);
+/// a **uniform** directory would silently ignore the requested skew, so
+/// that combination is a typed error pointing at `--balance nnz`.
+/// Balanced directories are exactly the skewed-secure deployment path.
+fn check_shard_skew(
+    cfg: &ExperimentConfig,
+    manifest: &shard::ShardManifest,
+    dir: &Path,
+    secure: bool,
+) -> Result<()> {
+    if secure && cfg.skew > 0.0 && !manifest.is_balanced() {
+        crate::bail!(
+            "secure.skew > 0 but shard directory {} is uniform-partitioned (the run uses \
+             the directory's partition) — re-shard with `dsanls shard --balance nnz`, or \
+             drop --shards for shard-local synthesis",
+            dir.display()
+        );
+    }
+    Ok(())
 }
 
 /// One tiny barrier every rank always enters, carrying its data-plane
@@ -399,10 +532,11 @@ fn run_rank(
     rank: usize,
     report: &mut TcpStream,
     shards: Option<&Path>,
+    wctl: &WorkerControlArgs,
 ) -> Result<()> {
     // ---- shard-aware data plane: this rank's blocks, nothing more ----
     let tick = Instant::now();
-    let (mut data, source) = build_node_data(cfg, rank, shards)?;
+    let (mut data, source, shard_cols) = build_node_data(cfg, rank, shards)?;
     // measure pure build/load time before any collective: the barriers
     // below wait on peers, which would smear every rank's number up to
     // the slowest (EXPERIMENTS.md §sharded-vs-full compares load_secs)
@@ -425,6 +559,12 @@ fn run_rank(
     }
     let load = data.load_stats(rank, load_secs, source);
 
+    // resolve the control plane now that the global shape is known (the
+    // resume checkpoint validates against it); every worker derives the
+    // identical stop policy from the identical forwarded flags, which is
+    // what keeps the per-iteration collective stop poll agreed
+    let ctl = wctl.resolve(cfg, rank, data.rows, data.cols)?;
+
     // mirror the simulated cluster's per-node thread cap so the
     // thread-count-sensitive reductions split identically (bit-identity)
     crate::dist::apply_node_thread_policy(cfg.nodes);
@@ -432,7 +572,7 @@ fn run_rank(
     // catch panics from the algorithm layer (collective failures panic) so
     // they reach the coordinator as Error frames, not silent worker deaths
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_rank_inner(cfg, comm, rank, &data, &load, report)
+        run_rank_inner(cfg, comm, rank, &data, &load, report, &ctl, shard_cols)
     }));
     crate::parallel::set_local_threads(None);
     match outcome {
@@ -448,6 +588,7 @@ fn run_rank(
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn run_rank_inner(
     cfg: &ExperimentConfig,
     comm: TcpComm,
@@ -455,18 +596,23 @@ fn run_rank_inner(
     data: &NodeData,
     load: &LoadStats,
     report: &mut TcpStream,
+    ctl: &RunControl,
+    shard_cols: Option<Partition>,
 ) -> Result<()> {
     send_chunk(report, RES_LOAD, &load_payload(load))?;
     // one generic node runner covers every algorithm family — the worker
     // only matches on the *output* kind to pick its wire encoding
     let algo = Algo::from_config(cfg);
-    let cols = coordinator::secure_partition(cfg, data.cols);
+    // shard directories carry their column partition (possibly
+    // nnz-balanced); otherwise derive it from the config
+    let cols = shard_cols.unwrap_or_else(|| coordinator::secure_partition(cfg, data.cols));
     let env = RankEnv {
         rank,
         input: NodeInput::Shard(data),
         cols: &cols,
         observer: None,
         audit: None,
+        ctl,
     };
     match algo.run_rank(comm, env)? {
         RankOutput::Node(out) => send_node_output(report, &out),
@@ -474,7 +620,7 @@ fn run_rank_inner(
             send_chunk(report, RES_U, &mat_payload(&out.u_local))?;
             send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
             send_chunk(report, RES_TRACE, &trace_payload(&out.trace))?;
-            send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
+            send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock, out.stop))?;
             send_chunk(report, RES_DONE, &[])
         }
         RankOutput::AsynServer { u, fro_sq } => {
@@ -487,7 +633,7 @@ fn run_rank_inner(
         RankOutput::AsynClient(out) => {
             send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
             send_chunk(report, RES_SAMPLES, &samples_payload(&out.samples))?;
-            send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
+            send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock, out.stop))?;
             send_chunk(report, RES_DONE, &[])
         }
     }
@@ -497,7 +643,7 @@ fn send_node_output(stream: &mut TcpStream, out: &NodeOutput) -> Result<()> {
     send_chunk(stream, RES_U, &mat_payload(&out.u_block))?;
     send_chunk(stream, RES_V, &mat_payload(&out.v_block))?;
     send_chunk(stream, RES_TRACE, &trace_payload(&out.trace))?;
-    send_chunk(stream, RES_STATS, &stats_payload(&out.stats, out.final_clock))?;
+    send_chunk(stream, RES_STATS, &stats_payload(&out.stats, out.final_clock, out.stop))?;
     send_chunk(stream, RES_DONE, &[])
 }
 
@@ -505,7 +651,6 @@ fn send_node_output(stream: &mut TcpStream, out: &NodeOutput) -> Result<()> {
 // Coordinator side
 // ---------------------------------------------------------------------------
 
-#[derive(Default)]
 struct WorkerResult {
     u: Option<Mat>,
     v: Option<Mat>,
@@ -515,6 +660,23 @@ struct WorkerResult {
     samples: Vec<(f64, f64, usize)>,
     fro_sq: Option<f64>,
     load: Option<LoadStats>,
+    stop: StopReason,
+}
+
+impl Default for WorkerResult {
+    fn default() -> Self {
+        WorkerResult {
+            u: None,
+            v: None,
+            trace: Vec::new(),
+            stats: CommStats::default(),
+            final_clock: 0.0,
+            samples: Vec::new(),
+            fro_sq: None,
+            load: None,
+            stop: StopReason::Completed,
+        }
+    }
 }
 
 fn read_worker_result(stream: &mut TcpStream, rank: usize) -> Result<WorkerResult> {
@@ -528,9 +690,10 @@ fn read_worker_result(stream: &mut TcpStream, rank: usize) -> Result<WorkerResul
                 RES_V => res.v = Some(mat_from_payload(&f.payload)?),
                 RES_TRACE => res.trace = trace_from_payload(&f.payload)?,
                 RES_STATS => {
-                    let (stats, clock) = stats_from_payload(&f.payload)?;
+                    let (stats, clock, stop) = stats_from_payload(&f.payload)?;
                     res.stats = stats;
                     res.final_clock = clock;
+                    res.stop = stop;
                 }
                 RES_SAMPLES => res.samples = samples_from_payload(&f.payload)?,
                 RES_FRO => {
@@ -565,6 +728,22 @@ pub struct LaunchOptions {
     pub hosts: Option<Vec<String>>,
     /// Shard directory forwarded to the workers (`--shards DIR`).
     pub shards: Option<String>,
+    /// Checkpoint file forwarded to the workers (`--checkpoint PATH`) —
+    /// also the file rank-failure retries resume from.
+    pub checkpoint: Option<PathBuf>,
+    /// Resume file forwarded to the workers on the first attempt
+    /// (`--resume PATH`).
+    pub resume: Option<PathBuf>,
+    /// Rank-failure retry budget (`--retries N`, default 0): on a worker
+    /// failure the whole cluster restarts from the latest checkpoint.
+    pub retries: usize,
+    /// Job-level wall-clock budget (`--max-seconds S`). Anchored once at
+    /// launch start and forwarded to each attempt's workers as the
+    /// *remaining* budget, so retries cannot multiply it.
+    pub max_seconds: Option<f64>,
+    /// Fault injection forwarded to the workers on the FIRST attempt only
+    /// (`--fault-rank R --fault-iteration T` — tests and operator drills).
+    pub fault: Option<(usize, usize)>,
     /// Arguments forwarded verbatim to the workers (config file + overrides).
     pub forward: Vec<String>,
 }
@@ -577,10 +756,69 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
     let mut verify_sim = false;
     let mut hosts: Option<Vec<String>> = None;
     let mut shards: Option<String> = None;
+    let mut checkpoint: Option<PathBuf> = None;
+    let mut checkpoint_every: Option<String> = None;
+    let mut resume: Option<PathBuf> = None;
+    let mut retries = 0usize;
+    let mut max_seconds: Option<f64> = None;
+    let mut fault_rank: Option<usize> = None;
+    let mut fault_iteration: Option<usize> = None;
+    let mut stop_forward: Vec<String> = Vec::new();
     let mut forward: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--max-seconds" => {
+                let v = args.get(i + 1).context("--max-seconds needs a value")?;
+                max_seconds =
+                    Some(v.parse::<f64>().map_err(|e| crate::err!("--max-seconds {v}: {e}"))?);
+                i += 2;
+            }
+            "--target-error" => {
+                let v = args.get(i + 1).context("--target-error needs a value")?;
+                v.parse::<f64>().map_err(|e| crate::err!("--target-error {v}: {e}"))?;
+                stop_forward.push("--target-error".into());
+                stop_forward.push(v.clone());
+                i += 2;
+            }
+            "--checkpoint" => {
+                checkpoint = Some(PathBuf::from(
+                    args.get(i + 1).context("--checkpoint needs a PATH")?,
+                ));
+                i += 2;
+            }
+            "--checkpoint-every" => {
+                let v = args.get(i + 1).context("--checkpoint-every needs a number")?;
+                let n =
+                    v.parse::<usize>().map_err(|e| crate::err!("--checkpoint-every {v}: {e}"))?;
+                if n == 0 {
+                    crate::bail!("--checkpoint-every needs a cadence ≥ 1 iteration");
+                }
+                checkpoint_every = Some(v.clone());
+                i += 2;
+            }
+            "--resume" => {
+                resume = Some(PathBuf::from(args.get(i + 1).context("--resume needs a PATH")?));
+                i += 2;
+            }
+            "--retries" => {
+                let v = args.get(i + 1).context("--retries needs a number")?;
+                retries = v.parse::<usize>().map_err(|e| crate::err!("--retries {v}: {e}"))?;
+                i += 2;
+            }
+            "--fault-rank" => {
+                let v = args.get(i + 1).context("--fault-rank needs a rank")?;
+                fault_rank =
+                    Some(v.parse::<usize>().map_err(|e| crate::err!("--fault-rank {v}: {e}"))?);
+                i += 2;
+            }
+            "--fault-iteration" => {
+                let v = args.get(i + 1).context("--fault-iteration needs a number")?;
+                fault_iteration = Some(
+                    v.parse::<usize>().map_err(|e| crate::err!("--fault-iteration {v}: {e}"))?,
+                );
+                i += 2;
+            }
             "--nodes" => {
                 let v = args.get(i + 1).context("--nodes needs a number")?;
                 nodes_override =
@@ -642,8 +880,31 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
         forward.push("--shards".into());
         forward.push(dir.clone());
     }
+    forward.extend(stop_forward);
+    if let Some(p) = &checkpoint {
+        forward.push("--checkpoint".into());
+        forward.push(p.display().to_string());
+    }
+    if let Some(v) = &checkpoint_every {
+        if checkpoint.is_none() {
+            crate::bail!("--checkpoint-every needs --checkpoint PATH");
+        }
+        forward.push("--checkpoint-every".into());
+        forward.push(v.clone());
+    }
+    let fault = match (fault_rank, fault_iteration) {
+        (Some(r), Some(t)) => Some((r, t)),
+        (None, None) => None,
+        _ => crate::bail!("--fault-rank and --fault-iteration must be given together"),
+    };
     if cfg.nodes == 0 {
         crate::bail!("launch needs at least one node");
+    }
+    if retries > 0 && hosts.is_some() {
+        crate::bail!(
+            "--retries needs locally spawned workers; with --hosts the operator restarts \
+             them (use --resume with the checkpoint file instead)"
+        );
     }
     if let Some(h) = &hosts {
         let expect = cluster_ranks(&cfg);
@@ -656,18 +917,36 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
             );
         }
     }
-    Ok(LaunchOptions { cfg, port, bind_host, verify_sim, hosts, shards, forward })
+    Ok(LaunchOptions {
+        cfg,
+        port,
+        bind_host,
+        verify_sim,
+        hosts,
+        shards,
+        checkpoint,
+        resume,
+        retries,
+        max_seconds,
+        fault,
+        forward,
+    })
 }
 
 
 /// `dsanls launch` — spawn (or, with `--hosts`, wait for) the worker
 /// processes, run the experiment over real TCP, assemble and report the
-/// outcome.
+/// outcome. With `--retries N`, a worker failure restarts the whole
+/// cluster from the latest `--checkpoint` file (a dead rank collapses the
+/// synchronous mesh, so the clean recovery unit is the attempt): bounded
+/// attempts, surfaced in [`Outcome::retries`].
 pub fn launch_main(args: &[String]) -> Result<()> {
     let opts = parse_launch_args(args)?;
     let cfg = &opts.cfg;
-    let ranks = cluster_ranks(cfg);
 
+    // the workers take their column partition from the shard manifest, so
+    // --verify-sim must hand the SAME partition to the simulated re-run
+    let mut shard_cols: Option<Partition> = None;
     if let Some(dir) = &opts.shards {
         // fail fast on a mismatched shard set, before anything connects
         let manifest = shard::read_manifest(Path::new(dir))?;
@@ -679,9 +958,121 @@ pub fn launch_main(args: &[String]) -> Result<()> {
                 manifest.dataset
             );
         }
+        shard_cols = Some(manifest.col_partition());
     }
 
+    // one rendezvous listener for every attempt: re-binding a pinned
+    // --port between retries can hit TIME_WAIT (EADDRINUSE) and burn the
+    // retry budget on bind failures instead of resuming
     let rdv = Rendezvous::bind_on(&opts.bind_host, opts.port)?;
+    // the wall-clock budget is a property of the JOB: anchor it once, so
+    // retried attempts receive only the remaining budget
+    let started = Instant::now();
+    let mut attempt = 0usize;
+    let mut outcome = loop {
+        match launch_attempt(&opts, &rdv, attempt, started) {
+            Ok(out) => break out,
+            Err(e) if attempt < opts.retries => {
+                attempt += 1;
+                let from = match resume_path_for(&opts, attempt) {
+                    Some(p) => format!("checkpoint {}", p.display()),
+                    None => "scratch (no checkpoint yet)".into(),
+                };
+                eprintln!(
+                    "worker failure: {e}\nretrying (attempt {attempt}/{}) from {from}",
+                    opts.retries
+                );
+            }
+            Err(e) => return Err(e),
+        }
+    };
+    outcome.retries = attempt;
+
+    for l in &outcome.loads {
+        println!(
+            "rank {}: {} rows × {} cols resident ({} values, {:.1} MiB) loaded in {:.3}s [{}]",
+            l.rank,
+            l.block_rows,
+            l.block_cols,
+            l.nnz,
+            l.bytes as f64 / (1024.0 * 1024.0),
+            l.load_secs,
+            l.source.label()
+        );
+    }
+    println!(
+        "final rel-error {:.4}  sec/iter {:.5}  stop: {}  retries: {}  {}",
+        outcome.final_error(),
+        outcome.sec_per_iter,
+        outcome.stop_reason.label(),
+        outcome.retries,
+        metrics::stats_summary(&outcome.stats)
+    );
+    let path = std::path::Path::new(&cfg.output_dir).join(format!("{}-tcp.csv", cfg.name));
+    if let Err(e) = metrics::write_series_csv(&path, &[outcome.series()]) {
+        eprintln!("write {path:?}: {e}");
+    } else {
+        println!("trace written to {path:?}");
+    }
+
+    if opts.verify_sim {
+        if outcome.stop_reason != StopReason::Completed {
+            println!(
+                "verify-sim: skipped (run stopped early: {})",
+                outcome.stop_reason.label()
+            );
+        } else {
+            verify_against_sim(cfg, &outcome, shard_cols)?;
+        }
+    }
+    Ok(())
+}
+
+/// The file the given attempt resumes from: the checkpoint once it
+/// exists (later attempts), else the operator's `--resume`, else nothing.
+fn resume_path_for(opts: &LaunchOptions, attempt: usize) -> Option<PathBuf> {
+    if attempt > 0 {
+        if let Some(p) = &opts.checkpoint {
+            if p.exists() {
+                return Some(p.clone());
+            }
+        }
+    }
+    opts.resume.clone()
+}
+
+/// One launch attempt on the shared rendezvous listener: spawn (or wait
+/// for) workers, collect and assemble. Fault-injection flags are
+/// forwarded on the first attempt only — the injected death must not
+/// recur on the retry — and `--max-seconds` forwards the budget
+/// *remaining* since `started`, not the full amount again.
+fn launch_attempt(
+    opts: &LaunchOptions,
+    rdv: &Rendezvous,
+    attempt: usize,
+    started: Instant,
+) -> Result<Outcome> {
+    let cfg = &opts.cfg;
+    let ranks = cluster_ranks(cfg);
+    let mut forward = opts.forward.clone();
+    if let Some(p) = resume_path_for(opts, attempt) {
+        forward.push("--resume".into());
+        forward.push(p.display().to_string());
+    }
+    if let Some(budget) = opts.max_seconds {
+        let remaining = (budget - started.elapsed().as_secs_f64()).max(0.0);
+        forward.push("--max-seconds".into());
+        forward.push(format!("{remaining}"));
+    }
+    if attempt == 0 {
+        if let Some((r, t)) = opts.fault {
+            forward.push("--fault-rank".into());
+            forward.push(r.to_string());
+            forward.push("--fault-iteration".into());
+            forward.push(t.to_string());
+        }
+    }
+
     println!(
         "launching {} over TCP: {} worker process(es){} on {}",
         cfg.algorithm.name(),
@@ -702,12 +1093,7 @@ pub fn launch_main(args: &[String]) -> Result<()> {
             rdv.addr()
         };
         println!("waiting for {ranks} externally started worker(s):");
-        let fwd: String = opts
-            .forward
-            .iter()
-            .map(|a| shell_quote(a))
-            .collect::<Vec<_>>()
-            .join(" ");
+        let fwd: String = forward.iter().map(|a| shell_quote(a)).collect::<Vec<_>>().join(" ");
         for (rank, host) in hosts.iter().enumerate() {
             println!(
                 "  host {host}: dsanls worker --rendezvous {dial} --rank {rank} --bind {host} {fwd}"
@@ -722,7 +1108,7 @@ pub fn launch_main(args: &[String]) -> Result<()> {
                 .arg(rdv.addr())
                 .arg("--rank")
                 .arg(rank.to_string())
-                .args(&opts.forward)
+                .args(&forward)
                 .stdin(Stdio::null());
             let child = cmd
                 .spawn()
@@ -731,7 +1117,7 @@ pub fn launch_main(args: &[String]) -> Result<()> {
         }
     }
 
-    let run = launch_collect(cfg, &rdv, ranks);
+    let run = launch_collect(cfg, rdv, ranks);
     // reap the children regardless of how collection went
     let collected_ok = run.is_ok();
     let mut worker_failure = None;
@@ -750,36 +1136,7 @@ pub fn launch_main(args: &[String]) -> Result<()> {
     if let Some(fail) = worker_failure {
         crate::bail!("{fail}");
     }
-
-    for l in &outcome.loads {
-        println!(
-            "rank {}: {} rows × {} cols resident ({} values, {:.1} MiB) loaded in {:.3}s [{}]",
-            l.rank,
-            l.block_rows,
-            l.block_cols,
-            l.nnz,
-            l.bytes as f64 / (1024.0 * 1024.0),
-            l.load_secs,
-            l.source.label()
-        );
-    }
-    println!(
-        "final rel-error {:.4}  sec/iter {:.5}  {}",
-        outcome.final_error(),
-        outcome.sec_per_iter,
-        metrics::stats_summary(&outcome.stats)
-    );
-    let path = std::path::Path::new(&cfg.output_dir).join(format!("{}-tcp.csv", cfg.name));
-    if let Err(e) = metrics::write_series_csv(&path, &[outcome.series()]) {
-        eprintln!("write {path:?}: {e}");
-    } else {
-        println!("trace written to {path:?}");
-    }
-
-    if opts.verify_sim {
-        verify_against_sim(cfg, &outcome)?;
-    }
-    Ok(())
+    Ok(outcome)
 }
 
 /// Minimal POSIX-shell quoting for the printed copy-pasteable worker
@@ -808,6 +1165,8 @@ fn launch_collect(cfg: &ExperimentConfig, rdv: &Rendezvous, ranks: usize) -> Res
 fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> Result<Outcome> {
     let label = format!("{}/tcp", cfg.algorithm.name());
     let loads: Vec<LoadStats> = results.iter().filter_map(|r| r.load).collect();
+    let stop_reason =
+        results.iter().map(|r| r.stop).fold(StopReason::Completed, StopReason::merge);
     match cfg.algorithm {
         AlgoFamily::Dsanls | AlgoFamily::Baseline(_) => {
             let mut outputs = Vec::with_capacity(results.len());
@@ -818,9 +1177,11 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                     trace: r.trace,
                     stats: r.stats,
                     final_clock: r.final_clock,
+                    stop: r.stop,
                 });
             }
-            let run = algos::reduce_outputs(outputs, cfg.rank, cfg.iterations);
+            let span = algos::trace_span(&outputs[0].trace, cfg.iterations);
+            let run = algos::reduce_outputs(outputs, cfg.rank, span);
             Ok(Outcome {
                 label,
                 trace: run.trace,
@@ -829,6 +1190,8 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 u: run.u,
                 v: run.v,
                 loads,
+                stop_reason,
+                retries: 0,
             })
         }
         AlgoFamily::Secure(SecureAlgo::SynSd
@@ -843,9 +1206,11 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                     trace: r.trace,
                     stats: r.stats,
                     final_clock: r.final_clock,
+                    stop: r.stop,
                 });
             }
-            let run = syn::assemble_syn(outputs, cfg.rank, cfg.t1 * cfg.t2);
+            let span = algos::trace_span(&outputs[0].trace, cfg.t1 * cfg.t2);
+            let run = syn::assemble_syn(outputs, cfg.rank, span);
             Ok(Outcome {
                 label,
                 trace: run.trace,
@@ -854,6 +1219,8 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 u: run.u,
                 v: run.v,
                 loads,
+                stop_reason,
+                retries: 0,
             })
         }
         AlgoFamily::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => {
@@ -869,6 +1236,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                     samples: r.samples,
                     stats: r.stats,
                     final_clock: r.final_clock,
+                    stop: r.stop,
                 });
             }
             let run =
@@ -881,14 +1249,23 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 u: run.u,
                 v: run.v,
                 loads,
+                stop_reason,
+                retries: 0,
             })
         }
     }
 }
 
 /// Re-run the configured experiment on the simulated backend and compare
-/// factors bit-for-bit (deterministic algorithms only).
-fn verify_against_sim(cfg: &ExperimentConfig, tcp: &Outcome) -> Result<()> {
+/// factors bit-for-bit (deterministic algorithms only). `shard_cols` is
+/// the column partition a `--shards` run actually used (from the
+/// manifest — possibly nnz-balanced): the simulated re-run must use the
+/// identical partition or the comparison would spuriously diverge.
+fn verify_against_sim(
+    cfg: &ExperimentConfig,
+    tcp: &Outcome,
+    shard_cols: Option<Partition>,
+) -> Result<()> {
     if matches!(cfg.algorithm, AlgoFamily::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV)) {
         println!("verify-sim: skipped (asynchronous protocols are order-dependent by design)");
         return Ok(());
@@ -896,7 +1273,17 @@ fn verify_against_sim(cfg: &ExperimentConfig, tcp: &Outcome) -> Result<()> {
     print!("verify-sim: running simulated backend… ");
     std::io::stdout().flush().ok();
     let m = coordinator::load_dataset(cfg);
-    let sim = coordinator::run_on(cfg, &m);
+    let sim = {
+        use crate::nmf::job::{DataSource, Job};
+        let mut b = Job::builder()
+            .from_config(cfg, m.cols())
+            .data(DataSource::Full(&m));
+        if let (Some(p), AlgoFamily::Secure(_)) = (&shard_cols, &cfg.algorithm) {
+            b = b.secure_partition(p.clone());
+        }
+        b.run()
+            .unwrap_or_else(|e| panic!("verify-sim run failed: {e}"))
+    };
     let identical = sim.u.data() == tcp.u.data() && sim.v.data() == tcp.v.data();
     println!("factors bit-identical to simulated backend: {identical}");
     if !identical {
@@ -939,9 +1326,12 @@ mod tests {
             comm_time: 2.5e-7,
             stall_time: 0.0,
         };
-        let (bs, clock) = stats_from_payload(&stats_payload(&stats, 42.042)).unwrap();
+        let (bs, clock, stop) =
+            stats_from_payload(&stats_payload(&stats, 42.042, StopReason::TargetReached))
+                .unwrap();
         assert_eq!(bs, stats);
         assert_eq!(clock, 42.042);
+        assert_eq!(stop, StopReason::TargetReached);
 
         let samples = vec![(0.5, 123.456, 10usize), (1.5, 0.001, 20)];
         let back = samples_from_payload(&samples_payload(&samples)).unwrap();
@@ -960,5 +1350,84 @@ mod tests {
         assert_eq!(o.cfg.rank, 3);
         assert!(o.forward.iter().any(|a| a == "--experiment.nodes=4"));
         assert!(!o.forward.iter().any(|a| a == "--verify-sim"));
+        assert_eq!(o.retries, 0);
+        assert!(o.checkpoint.is_none() && o.resume.is_none() && o.fault.is_none());
+    }
+
+    #[test]
+    fn launch_control_args_parse_and_forward() {
+        let args: Vec<String> = [
+            "--nodes",
+            "2",
+            "--retries",
+            "3",
+            "--checkpoint",
+            "/tmp/run.ckpt",
+            "--checkpoint-every",
+            "5",
+            "--max-seconds",
+            "12.5",
+            "--target-error",
+            "0.08",
+            "--fault-rank",
+            "1",
+            "--fault-iteration",
+            "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        let o = parse_launch_args(&args).unwrap();
+        assert_eq!(o.retries, 3);
+        assert_eq!(o.checkpoint.as_deref(), Some(Path::new("/tmp/run.ckpt")));
+        assert_eq!(o.fault, Some((1, 4)));
+        assert_eq!(o.max_seconds, Some(12.5));
+        // convergence + checkpoint flags forward to the workers…
+        for flag in ["--target-error", "--checkpoint", "--checkpoint-every"] {
+            assert!(o.forward.iter().any(|a| a == flag), "{flag} must forward");
+        }
+        // …but resume, fault injection and the (remaining) wall-clock
+        // budget are per-attempt decisions appended in launch_attempt
+        assert!(!o
+            .forward
+            .iter()
+            .any(|a| a == "--resume" || a == "--fault-rank" || a == "--max-seconds"));
+
+        // fault flags must come as a pair
+        let args: Vec<String> =
+            ["--fault-rank", "1"].iter().map(|s| s.to_string()).collect();
+        assert!(parse_launch_args(&args).is_err());
+        // --checkpoint-every without --checkpoint is a user error
+        let args: Vec<String> =
+            ["--checkpoint-every", "5"].iter().map(|s| s.to_string()).collect();
+        assert!(parse_launch_args(&args).is_err());
+    }
+
+    #[test]
+    fn worker_control_args_resolve() {
+        let mut w = WorkerControlArgs::default();
+        w.apply("--max-seconds", "30").unwrap();
+        w.apply("--target-error", "0.1").unwrap();
+        w.apply("--checkpoint", "/tmp/x.ckpt").unwrap();
+        w.apply("--fault-rank", "1").unwrap();
+        w.apply("--fault-iteration", "7").unwrap();
+        let cfg = ExperimentConfig::default();
+        let ctl = w.resolve(&cfg, 1, 100, 80).unwrap();
+        assert_eq!(ctl.stop.max_seconds, Some(30.0));
+        assert_eq!(ctl.stop.target_error, Some(0.1));
+        assert_eq!(ctl.fault_at, Some(7), "fault fires on the matching rank");
+        assert_eq!(
+            ctl.checkpoint.as_ref().unwrap().every,
+            DEFAULT_CHECKPOINT_EVERY,
+            "cadence defaults when only --checkpoint is given"
+        );
+        let ctl = w.resolve(&cfg, 0, 100, 80).unwrap();
+        assert_eq!(ctl.fault_at, None, "other ranks must not fault");
+
+        // secure + checkpoint is rejected with a typed error
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply("experiment.algorithm", "syn-sd").unwrap();
+        let err = w.resolve(&cfg, 0, 100, 80).unwrap_err();
+        assert!(err.to_string().contains("secure"), "{err}");
     }
 }

@@ -1,24 +1,35 @@
 //! `dsanls shard` — pre-slice a dataset into an on-disk shard directory.
 //!
 //! ```text
-//! dsanls shard --out DIR [--nodes N] [--input FILE] [--config FILE] [--key=value ...]
+//! dsanls shard --out DIR [--nodes N] [--input FILE] [--balance nnz]
+//!              [--config FILE] [--key=value ...]
 //! ```
 //!
-//! Materialises the configured dataset **once** (shard preparation is the
-//! single place the full matrix may exist), slices it into per-rank
-//! row-axis and column-axis block files, and writes a manifest carrying
-//! the exact global `‖M‖²_F` ([`crate::data::shard`] documents the binary
-//! format). The operator then copies each rank its two `rank-<r>.*.blk`
-//! files plus `manifest.bin`, and starts workers with `--shards DIR` —
-//! every rank reads only its blocks, so the deployable matrix size is
-//! bounded by the *cluster's* memory, not one machine's.
+//! For generator-backed datasets the matrix is materialised **once**
+//! (shard preparation is the only place the full matrix may exist) and
+//! sliced into per-rank row-axis and column-axis block files plus a
+//! manifest carrying the exact global `‖M‖²_F` and both partitions
+//! ([`crate::data::shard`] documents the binary format). The operator
+//! then copies each rank its two `rank-<r>.*.blk` files plus
+//! `manifest.bin`, and starts workers with `--shards DIR` — every rank
+//! reads only its blocks, so the deployable matrix size is bounded by the
+//! *cluster's* memory, not one machine's.
 //!
 //! With `--input FILE` the matrix comes from an external COO text /
-//! MatrixMarket-style file ([`crate::data::ingest`]) instead of the
-//! synthetic generators — the path for factorising *real* data. Such
-//! manifests record a `FILE:<stem>` dataset name; workers accept them with
-//! any dataset config (the shards are authoritative), but `--verify-sim`
-//! is unavailable (the simulator cannot regenerate an external file).
+//! MatrixMarket-style file, streamed through the **chunked single-pass**
+//! bucketing sharder ([`crate::data::ingest::shard_stream`]) — the full
+//! matrix is *never* materialised, even here. Such manifests record a
+//! `FILE:<stem>` dataset name; workers accept them with any dataset
+//! config (the shards are authoritative), but `--verify-sim` is
+//! unavailable (the simulator cannot regenerate an external file).
+//!
+//! `--balance nnz` cuts the **column axis** by cumulative stored-value
+//! counts instead of equal column counts — the skew-aware layout for the
+//! secure protocols, whose parties hold column blocks (a heavy party
+//! stalls every synchronous consensus; see the imbalanced-workload
+//! experiments). The manifest records the cuts; secure jobs pick them up
+//! automatically, and the non-secure algorithms (which assume uniform
+//! partitions) refuse balanced directories with a typed error.
 //!
 //! For generator-backed shards the manifest records dataset/seed/scale/
 //! nodes; workers and `launch` refuse a directory that does not match
@@ -28,8 +39,9 @@
 use std::path::PathBuf;
 
 use crate::coordinator;
-use crate::data::ingest;
-use crate::data::shard::{self, ShardManifest};
+use crate::data::ingest::{self, ShardBalance};
+use crate::data::partition::{uniform_partition, weight_balanced_partition};
+use crate::data::shard::{self, col_nnz_counts, ShardManifest};
 use crate::error::{Context, Result};
 use crate::linalg::Matrix;
 
@@ -41,6 +53,8 @@ pub struct ShardCliOptions {
     pub out: PathBuf,
     /// External matrix file to shard instead of the configured generator.
     pub input: Option<PathBuf>,
+    /// Column-axis balance policy (`--balance nnz|uniform`).
+    pub balance: ShardBalance,
 }
 
 /// Parse `shard` CLI arguments.
@@ -48,6 +62,7 @@ pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
     let mut out: Option<PathBuf> = None;
     let mut input: Option<PathBuf> = None;
     let mut nodes_override = None;
+    let mut balance = ShardBalance::Uniform;
     let mut cfg_args: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
@@ -66,6 +81,15 @@ pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
                     Some(v.parse::<usize>().map_err(|e| crate::err!("--nodes {v}: {e}"))?);
                 i += 2;
             }
+            "--balance" => {
+                let v = args.get(i + 1).context("--balance needs nnz|uniform")?;
+                balance = match v.as_str() {
+                    "nnz" => ShardBalance::Nnz,
+                    "uniform" => ShardBalance::Uniform,
+                    other => crate::bail!("--balance takes nnz or uniform, got {other}"),
+                };
+                i += 2;
+            }
             _ => {
                 cfg_args.push(args[i].clone());
                 i += 1;
@@ -80,54 +104,69 @@ pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
         crate::bail!("shard needs at least one node");
     }
     let out = out.context("shard needs --out DIR")?;
-    Ok(ShardCliOptions { cfg, out, input })
+    Ok(ShardCliOptions { cfg, out, input, balance })
 }
 
-/// `dsanls shard` entry point: generate (or ingest), slice, write, report.
+/// `dsanls shard` entry point: generate (or stream-ingest), slice, write,
+/// report.
 pub fn shard_main(args: &[String]) -> Result<()> {
     let opts = parse_shard_args(args)?;
     let cfg = &opts.cfg;
-    let (m, dataset_name) = match &opts.input {
+    let (manifest, bytes) = match &opts.input {
         Some(path) => {
+            // chunked single-pass bucketing: the full matrix is never built
             println!(
-                "sharding matrix file {} for {} node(s) into {}",
+                "sharding matrix file {} for {} node(s) into {} (streaming{})",
                 path.display(),
                 cfg.nodes,
-                opts.out.display()
+                opts.out.display(),
+                if opts.balance == ShardBalance::Nnz { ", nnz-balanced columns" } else { "" }
             );
-            (ingest::load_matrix(path)?, shard::file_dataset_name(path))
+            ingest::shard_stream(path, &opts.out, cfg.nodes, opts.balance, cfg.seed, cfg.scale)?
         }
         None => {
             println!(
-                "sharding {} (seed {}, scale {}) for {} node(s) into {}",
+                "sharding {} (seed {}, scale {}) for {} node(s) into {}{}",
                 cfg.dataset,
                 cfg.seed,
                 cfg.scale,
                 cfg.nodes,
-                opts.out.display()
+                opts.out.display(),
+                if opts.balance == ShardBalance::Nnz { " (nnz-balanced columns)" } else { "" }
             );
-            (coordinator::load_dataset(cfg), cfg.dataset.clone())
+            let m = coordinator::load_dataset(cfg);
+            let col_part = match opts.balance {
+                ShardBalance::Uniform => uniform_partition(m.cols(), cfg.nodes),
+                ShardBalance::Nnz => {
+                    weight_balanced_partition(&col_nnz_counts(&m), cfg.nodes)
+                }
+            };
+            let manifest = ShardManifest {
+                nodes: cfg.nodes,
+                rows: m.rows(),
+                cols: m.cols(),
+                fro_sq: m.fro_sq(),
+                seed: cfg.seed,
+                scale: cfg.scale,
+                dense: matches!(m, Matrix::Dense(_)),
+                dataset: cfg.dataset.clone(),
+                row_bounds: uniform_partition(m.rows(), cfg.nodes).bounds(),
+                col_bounds: col_part.bounds(),
+            };
+            let bytes = shard::write_shard_dir(&opts.out, &m, &manifest)?;
+            (manifest, bytes)
         }
     };
-    let manifest = ShardManifest {
-        nodes: cfg.nodes,
-        rows: m.rows(),
-        cols: m.cols(),
-        fro_sq: m.fro_sq(),
-        seed: cfg.seed,
-        scale: cfg.scale,
-        dense: matches!(m, Matrix::Dense(_)),
-        dataset: dataset_name,
-    };
-    let bytes = shard::write_shard_dir(&opts.out, &m, &manifest)?;
     println!(
-        "wrote {}x{} ({} stored values) as {} block file(s), {:.1} MiB total",
-        m.rows(),
-        m.cols(),
-        m.nnz(),
+        "wrote {}x{} as {} block file(s), {:.1} MiB total",
+        manifest.rows,
+        manifest.cols,
         2 * cfg.nodes,
         bytes as f64 / (1024.0 * 1024.0)
     );
+    if manifest.is_balanced() {
+        println!("column cuts (nnz-balanced): {:?}", manifest.col_bounds);
+    }
     println!(
         "next: copy manifest.bin + rank-<r>.*.blk to each host, start workers with \
          `dsanls worker ... --shards {}` (see DEPLOYMENT.md)",
@@ -150,7 +189,19 @@ mod tests {
         assert_eq!(o.cfg.nodes, 3);
         assert_eq!(o.cfg.rank, 4);
         assert_eq!(o.out, PathBuf::from("/tmp/s"));
+        assert_eq!(o.balance, ShardBalance::Uniform);
         assert!(parse_shard_args(&["--nodes".into(), "2".into()]).is_err(), "--out required");
+
+        let args: Vec<String> = ["--out", "/tmp/s", "--balance", "nnz"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert_eq!(parse_shard_args(&args).unwrap().balance, ShardBalance::Nnz);
+        let args: Vec<String> = ["--out", "/tmp/s", "--balance", "zipf"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        assert!(parse_shard_args(&args).is_err(), "unknown balance policy must error");
     }
 
     #[test]

@@ -20,31 +20,61 @@
 //! truncated file, missing header, out-of-range index, negative or
 //! unparsable value — is a typed [`crate::error::Error`] naming the
 //! offending line, never a panic.
+//!
+//! ## Streaming shard ingestion
+//!
+//! [`shard_stream`] is the production path behind `dsanls shard --input`:
+//! it reads the file **line by line in a single pass**, bucketing each
+//! COO entry straight into its owning rank's row-block and column-block
+//! triplet buckets — the full matrix structure is **never materialised**
+//! (the old path built the complete `Matrix` first, which made the shard
+//! CLI the memory ceiling for real inputs). Peak residency is the raw
+//! triplets (each entry appears in one row bucket and one col bucket)
+//! plus a single block under construction. The output is **bit-identical**
+//! to materialise-then-[`crate::data::shard::write_shard_dir`]: blocks
+//! sort/merge per bucket exactly as a global CSR build would, the exact
+//! `‖M‖²_F` is chained across row blocks in storage order
+//! (associativity-free, like [`crate::data::shard::exact_fro_sq`]), and
+//! the dense/sparse storage decision uses the same achieved-density rule
+//! as [`crate::data::synth::auto_storage`] — asserted byte-for-byte by
+//! the module tests.
 
+use std::io::BufRead;
 use std::path::Path;
 
+use crate::data::partition::{uniform_partition, weight_balanced_partition, Partition};
+use crate::data::shard::{self, file_dataset_name, Axis, ShardManifest, ShardSpec};
 use crate::data::synth::auto_storage;
 use crate::error::{Context, Result};
 use crate::linalg::{Csr, Matrix};
 
-/// Load a COO text / `.mtx`-style matrix file (see the module docs for the
-/// format). Storage (dense vs CSR) is chosen by the achieved density, like
-/// the synthetic generators.
-pub fn load_matrix(path: &Path) -> Result<Matrix> {
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading matrix file {}", path.display()))?;
-    parse_coo(&text).with_context(|| format!("parsing matrix file {}", path.display()))
+/// Parsed `rows cols nnz` header (plus the banner's index convention).
+#[derive(Debug, Clone, Copy)]
+struct CooHeader {
+    rows: usize,
+    cols: usize,
+    nnz: usize,
 }
 
-/// Parse COO text (the testable core of [`load_matrix`]).
-pub fn parse_coo(text: &str) -> Result<Matrix> {
-    let mut lines = text.lines().enumerate();
+/// Stream a COO text / `.mtx`-style file from `r`: `on_header` fires once
+/// when the `rows cols nnz` header is parsed (so the caller can size its
+/// buckets), then `sink` fires once per entry **in file order** — the
+/// single-pass core both [`parse_coo`] (materialise) and [`shard_stream`]
+/// (bucket per shard) are built on. Errors carry the 1-based line number
+/// of the offence.
+fn parse_stream<R: BufRead>(
+    r: R,
+    on_header: &mut dyn FnMut(CooHeader),
+    sink: &mut dyn FnMut(usize, usize, f32) -> Result<()>,
+) -> Result<CooHeader> {
+    let mut lines = r.lines().enumerate();
 
     // --- optional MatrixMarket banner on the very first line ---
     let mut one_based = false;
     let mut pattern = false;
-    let mut header: Option<(usize, &str)> = None;
+    let mut header: Option<(usize, String)> = None;
     for (no, raw) in lines.by_ref() {
+        let raw = raw.with_context(|| format!("line {}: read failed", no + 1))?;
         let line = raw.trim();
         if line.is_empty() {
             continue;
@@ -73,7 +103,7 @@ pub fn parse_coo(text: &str) -> Result<Matrix> {
         if line.starts_with('%') || line.starts_with('#') {
             continue;
         }
-        header = Some((no, line));
+        header = Some((no, line.to_string()));
         break;
     }
     let (hline, htext) = header.context("no header line (`rows cols nnz`) before end of file")?;
@@ -91,16 +121,18 @@ pub fn parse_coo(text: &str) -> Result<Matrix> {
     if rows == 0 || cols == 0 {
         crate::bail!("line {}: empty matrix ({rows}x{cols})", hline + 1);
     }
+    on_header(CooHeader { rows, cols, nnz });
 
     // --- entries ---
     let base = usize::from(one_based);
-    let mut triplets: Vec<(usize, usize, f32)> = Vec::with_capacity(nnz);
+    let mut seen = 0usize;
     for (no, raw) in lines {
+        let raw = raw.with_context(|| format!("line {}: read failed", no + 1))?;
         let line = raw.trim();
         if line.is_empty() || line.starts_with('%') || line.starts_with('#') {
             continue;
         }
-        if triplets.len() == nnz {
+        if seen == nnz {
             crate::bail!("line {}: more than the {nnz} entries the header declared", no + 1);
         }
         let f: Vec<&str> = line.split_whitespace().collect();
@@ -143,20 +175,203 @@ pub fn parse_coo(text: &str) -> Result<Matrix> {
         };
         let r = idx(f[0], rows, "row")?;
         let c = idx(f[1], cols, "column")?;
-        triplets.push((r, c, value));
+        sink(r, c, value)?;
+        seen += 1;
     }
-    if triplets.len() != nnz {
+    if seen != nnz {
         crate::bail!(
-            "file ends after {} entries but the header declared {nnz} (truncated file?)",
-            triplets.len()
+            "file ends after {seen} entries but the header declared {nnz} (truncated file?)"
         );
     }
-    Ok(auto_storage(Csr::from_triplets(rows, cols, triplets)))
+    Ok(CooHeader { rows, cols, nnz })
+}
+
+/// Load a COO text / `.mtx`-style matrix file (see the module docs for the
+/// format) into a materialised [`Matrix`]. Storage (dense vs CSR) is
+/// chosen by the achieved density, like the synthetic generators. For
+/// sharding large files prefer [`shard_stream`], which never builds the
+/// full matrix.
+pub fn load_matrix(path: &Path) -> Result<Matrix> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("reading matrix file {}", path.display()))?;
+    parse_reader(std::io::BufReader::new(file))
+        .with_context(|| format!("parsing matrix file {}", path.display()))
+}
+
+/// Parse COO text (the testable core of [`load_matrix`]).
+pub fn parse_coo(text: &str) -> Result<Matrix> {
+    parse_reader(std::io::Cursor::new(text))
+}
+
+fn parse_reader<R: BufRead>(r: R) -> Result<Matrix> {
+    let mut triplets: Vec<(usize, usize, f32)> = Vec::new();
+    let header = parse_stream(
+        r,
+        &mut |h| triplets.reserve(h.nnz),
+        &mut |i, j, v| {
+            triplets.push((i, j, v));
+            Ok(())
+        },
+    )?;
+    Ok(auto_storage(Csr::from_triplets(header.rows, header.cols, triplets)))
+}
+
+/// How `dsanls shard` cuts the column axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ShardBalance {
+    /// Equal column *counts* per rank (the default).
+    #[default]
+    Uniform,
+    /// Equal stored-value counts per rank
+    /// ([`weight_balanced_partition`] over per-column nnz) — the
+    /// skew-aware layout for the secure protocols.
+    Nnz,
+}
+
+/// Pre-slice an external COO/`.mtx` file into a shard directory in a
+/// **chunked single pass** (see the module docs): stream entries into
+/// per-rank row/column buckets, build and write one block at a time, and
+/// record the chained exact `‖M‖²_F` plus both partitions in the
+/// manifest. Row cuts are always uniform (the chain reduction and the
+/// non-secure algorithms assume them); `balance` controls the column
+/// cuts. Returns the manifest and total bytes written.
+pub fn shard_stream(
+    path: &Path,
+    out: &Path,
+    nodes: usize,
+    balance: ShardBalance,
+    seed: u64,
+    scale: f64,
+) -> Result<(ShardManifest, u64)> {
+    assert!(nodes >= 1, "shard_stream needs at least one rank");
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("reading matrix file {}", path.display()))?;
+    let reader = std::io::BufReader::new(file);
+
+    // ---- the single pass: bucket every entry by its row-block owner ----
+    // (column blocks are re-bucketed from the already-merged row blocks
+    // below, so the file is read exactly once; entries keep file order
+    // inside a bucket, which is what makes duplicate-merge order — and
+    // therefore the float sums — identical to a global CSR build)
+    let owner = |bounds: &[usize], i: usize| -> usize {
+        // bounds are sorted cut points [0, b1, …, total]
+        bounds.partition_point(|&b| b <= i).saturating_sub(1).min(bounds.len() - 2)
+    };
+    // shared by the header hook (which sizes it) and the entry sink (which
+    // fills it) — a RefCell because parse_stream takes the two callbacks
+    // as independent mutable borrows
+    struct StreamState {
+        row_bounds: Vec<usize>,
+        row_buckets: Vec<Vec<(usize, usize, f32)>>,
+    }
+    let state = std::cell::RefCell::new(StreamState {
+        row_bounds: Vec::new(),
+        row_buckets: Vec::new(),
+    });
+    let header = parse_stream(
+        reader,
+        &mut |h| {
+            let mut s = state.borrow_mut();
+            s.row_bounds = uniform_partition(h.rows, nodes).bounds();
+            s.row_buckets = (0..nodes).map(|_| Vec::new()).collect();
+        },
+        &mut |i, j, v| {
+            let mut s = state.borrow_mut();
+            let r = owner(&s.row_bounds, i);
+            let base = s.row_bounds[r];
+            s.row_buckets[r].push((i - base, j, v));
+            Ok(())
+        },
+    )
+    .with_context(|| format!("parsing matrix file {}", path.display()))?;
+    let StreamState { row_bounds, row_buckets } = state.into_inner();
+    let (rows, cols) = (header.rows, header.cols);
+    let row_part = Partition::from_bounds(&row_bounds).expect("uniform bounds are well-formed");
+
+    // ---- build row blocks rank by rank: merged nnz + chained exact ‖M‖² ----
+    let row_ranges: Vec<std::ops::Range<usize>> = (0..nodes).map(|r| row_part.range(r)).collect();
+    let mut row_csrs: Vec<Csr> = Vec::with_capacity(nodes);
+    let mut merged_nnz = 0usize;
+    let mut fro_acc = 0.0f64;
+    for (r, bucket) in row_buckets.into_iter().enumerate() {
+        let csr = Csr::from_triplets(row_ranges[r].len(), cols, bucket);
+        merged_nnz += csr.nnz();
+        // rank-ordered row blocks concatenate to the full storage order,
+        // so resuming the sequential fold reproduces Matrix::fro_sq bit-
+        // for-bit (the same argument as shard::exact_fro_sq)
+        fro_acc = csr.values().iter().fold(fro_acc, |a, &v| a + (v as f64) * (v as f64));
+        row_csrs.push(csr);
+    }
+    let dense = merged_nnz as f64 / (rows as f64 * cols as f64) > 0.5;
+
+    // ---- column partition: uniform, or nnz-balanced from the counts ----
+    // weights come from the MERGED row blocks (duplicates collapse before
+    // they are weighed), matching the generator path's col_nnz_counts
+    let col_part = match balance {
+        ShardBalance::Uniform => uniform_partition(cols, nodes),
+        ShardBalance::Nnz => {
+            let mut col_counts = vec![0usize; cols];
+            for csr in &row_csrs {
+                for &j in csr.indices() {
+                    col_counts[j] += 1;
+                }
+            }
+            weight_balanced_partition(&col_counts, nodes)
+        }
+    };
+
+    // ---- write: manifest, then one block at a time ----
+    let manifest = ShardManifest {
+        nodes,
+        rows,
+        cols,
+        fro_sq: fro_acc,
+        seed,
+        scale,
+        dense,
+        dataset: file_dataset_name(path),
+        row_bounds: row_part.bounds(),
+        col_bounds: col_part.bounds(),
+    };
+    std::fs::create_dir_all(out)
+        .with_context(|| format!("creating shard directory {}", out.display()))?;
+    let mut total = shard::write_manifest(out, &manifest)?;
+    // per rank: scatter this row block's (already-merged, sorted) entries
+    // into the column buckets, write the row block, and DROP it before
+    // touching the next — the data is never resident three times (row
+    // CSRs + full col buckets + block) at once
+    let col_bounds = col_part.bounds();
+    let mut col_buckets: Vec<Vec<(usize, usize, f32)>> = (0..nodes).map(|_| Vec::new()).collect();
+    for (r, csr) in row_csrs.into_iter().enumerate() {
+        let base = row_ranges[r].start;
+        for i in 0..csr.rows() {
+            for (j, v) in csr.row_iter(i) {
+                let owner_rank = owner(&col_bounds, j);
+                col_buckets[owner_rank].push((base + i, j - col_bounds[owner_rank], v));
+            }
+        }
+        let spec =
+            ShardSpec { rank: r, nodes, axis: Axis::Row, range: row_ranges[r].clone() };
+        let block =
+            if dense { Matrix::Dense(csr.to_dense()) } else { Matrix::Sparse(csr) };
+        total += shard::write_block(out, &spec, &block)?;
+    }
+    for (r, bucket) in col_buckets.into_iter().enumerate() {
+        let range = col_part.range(r);
+        let csr = Csr::from_triplets(rows, range.len(), bucket);
+        let spec = ShardSpec { rank: r, nodes, axis: Axis::Col, range };
+        let block =
+            if dense { Matrix::Dense(csr.to_dense()) } else { Matrix::Sparse(csr) };
+        total += shard::write_block(out, &spec, &block)?;
+    }
+    Ok((manifest, total))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data::shard::{block_path, matrix_bits_eq, read_manifest, write_shard_dir, NodeData};
+    use std::path::PathBuf;
 
     #[test]
     fn plain_coo_roundtrip() {
@@ -240,5 +455,142 @@ mod tests {
     fn load_matrix_io_error_has_context() {
         let err = load_matrix(Path::new("/definitely/not/here.mtx")).unwrap_err();
         assert!(err.to_string().contains("matrix file"), "{err}");
+    }
+
+    // -----------------------------------------------------------------
+    // streaming shard ingestion
+    // -----------------------------------------------------------------
+
+    fn tmpbase(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("dsanls_ingest_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    /// A sparse file with duplicates and skewed columns, exercising both
+    /// the merge order and the balance path.
+    fn skewed_coo_text(rows: usize, cols: usize) -> String {
+        let mut text = String::new();
+        let mut entries = Vec::new();
+        for i in 0..rows {
+            // column 0 and 1 are heavy; a few spread entries; one duplicate
+            entries.push((i, 0, 1.0 + i as f32 * 0.25));
+            entries.push((i, 1, 0.5 + i as f32 * 0.125));
+            entries.push((i, (i * 7) % cols, 2.0 + i as f32 * 0.0625));
+            if i % 5 == 0 {
+                entries.push((i, 0, 0.375)); // duplicate of a heavy cell
+            }
+        }
+        text.push_str(&format!("{rows} {cols} {}\n", entries.len()));
+        for (r, c, v) in entries {
+            text.push_str(&format!("{r} {c} {v}\n"));
+        }
+        text
+    }
+
+    /// The single-pass streamed shard directory must be **byte-identical**
+    /// to the legacy materialise-then-slice path (same manifest, same
+    /// block files), duplicates and all.
+    #[test]
+    fn shard_stream_bit_identical_to_materialised_path() {
+        let base = tmpbase("bitident");
+        let coo = base.join("skewed.coo");
+        std::fs::write(&coo, skewed_coo_text(23, 17)).unwrap();
+        for nodes in [1usize, 3] {
+            // legacy path: full matrix, then write_shard_dir
+            let m = load_matrix(&coo).unwrap();
+            let old_dir = base.join(format!("old{nodes}"));
+            let manifest = ShardManifest::uniform(
+                nodes,
+                m.rows(),
+                m.cols(),
+                m.fro_sq(),
+                7,
+                1.5,
+                matches!(m, Matrix::Dense(_)),
+                file_dataset_name(&coo),
+            );
+            write_shard_dir(&old_dir, &m, &manifest).unwrap();
+
+            // streaming path
+            let new_dir = base.join(format!("new{nodes}"));
+            let (streamed, _) =
+                shard_stream(&coo, &new_dir, nodes, ShardBalance::Uniform, 7, 1.5).unwrap();
+            assert_eq!(streamed, manifest, "manifests diverged");
+            assert_eq!(
+                std::fs::read(crate::data::shard::manifest_path(&old_dir)).unwrap(),
+                std::fs::read(crate::data::shard::manifest_path(&new_dir)).unwrap(),
+                "manifest bytes diverged"
+            );
+            for rank in 0..nodes {
+                for axis in [Axis::Row, Axis::Col] {
+                    let a = std::fs::read(block_path(&old_dir, rank, axis)).unwrap();
+                    let b = std::fs::read(block_path(&new_dir, rank, axis)).unwrap();
+                    assert_eq!(a, b, "rank {rank} {axis:?} block bytes diverged ({nodes} nodes)");
+                }
+            }
+        }
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// A dense-majority file must stream to dense blocks identical to the
+    /// legacy path (the achieved-density rule is shared).
+    #[test]
+    fn shard_stream_matches_dense_storage_decision() {
+        let base = tmpbase("dense");
+        let coo = base.join("dense.coo");
+        let mut text = String::from("4 4 14\n");
+        for i in 0..4 {
+            for j in 0..4 {
+                if (i, j) != (3, 3) && (i, j) != (0, 3) {
+                    text.push_str(&format!("{i} {j} {}.5\n", i + j));
+                }
+            }
+        }
+        std::fs::write(&coo, text).unwrap();
+        let m = load_matrix(&coo).unwrap();
+        assert!(matches!(m, Matrix::Dense(_)), "14/16 entries should go dense");
+        let dir = base.join("shards");
+        let (manifest, _) = shard_stream(&coo, &dir, 2, ShardBalance::Uniform, 0, 1.0).unwrap();
+        assert!(manifest.dense);
+        let (data, _) = NodeData::load(&dir, 0, true, true).unwrap();
+        assert!(matrix_bits_eq(
+            &m.row_block(manifest.row_partition().range(0)),
+            data.require_rows()
+        ));
+        assert_eq!(data.fro_sq().to_bits(), m.fro_sq().to_bits(), "chained ‖M‖² must be exact");
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// `--balance nnz` ingestion: the manifest records skew-aware column
+    /// cuts and per-rank resident nnz evens out on a skewed file.
+    #[test]
+    fn shard_stream_balances_column_nnz() {
+        let base = tmpbase("balance");
+        let coo = base.join("skewed.coo");
+        std::fs::write(&coo, skewed_coo_text(60, 30)).unwrap();
+        let dir = base.join("shards");
+        let (manifest, _) = shard_stream(&coo, &dir, 3, ShardBalance::Nnz, 0, 1.0).unwrap();
+        assert!(manifest.is_balanced(), "nnz balance should move the cuts on this input");
+        let back = read_manifest(&dir).unwrap();
+        assert_eq!(back.col_bounds, manifest.col_bounds);
+        let nnz: Vec<usize> = (0..3)
+            .map(|r| NodeData::load(&dir, r, false, true).unwrap().0.nnz())
+            .collect();
+        let (lo, hi) = (*nnz.iter().min().unwrap(), *nnz.iter().max().unwrap());
+        assert!((hi as f64) < 2.0 * lo.max(1) as f64, "balanced col nnz spread too wide: {nnz:?}");
+        std::fs::remove_dir_all(&base).ok();
+    }
+
+    /// Streaming ingestion keeps the line-numbered typed errors.
+    #[test]
+    fn shard_stream_reports_offending_line() {
+        let base = tmpbase("err");
+        let coo = base.join("bad.coo");
+        std::fs::write(&coo, "4 3 5\n0 0 1.0\n9 9 2.0\n").unwrap();
+        let err = shard_stream(&coo, &base.join("s"), 2, ShardBalance::Uniform, 0, 1.0)
+            .unwrap_err();
+        assert!(err.to_string().contains("line 3"), "error should name the line: {err}");
+        std::fs::remove_dir_all(&base).ok();
     }
 }

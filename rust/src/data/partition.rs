@@ -2,13 +2,38 @@
 
 /// A partition of `0..total` into `n` contiguous, disjoint ranges
 /// (one per node, rank-ordered).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Partition {
     pub total: usize,
     ranges: Vec<std::ops::Range<usize>>,
 }
 
 impl Partition {
+    /// Rebuild a partition from its `n + 1` cut points
+    /// (`[0, b₁, …, total]`) — the form shard manifests persist.
+    /// Malformed bounds (non-monotone, not starting at 0) are a typed
+    /// error: they come from files.
+    pub fn from_bounds(bounds: &[usize]) -> crate::error::Result<Partition> {
+        if bounds.len() < 2 || bounds[0] != 0 {
+            crate::bail!("partition bounds must start at 0 and list n+1 cut points");
+        }
+        let mut ranges = Vec::with_capacity(bounds.len() - 1);
+        for w in bounds.windows(2) {
+            if w[1] < w[0] {
+                crate::bail!("partition bounds are not monotone: {} then {}", w[0], w[1]);
+            }
+            ranges.push(w[0]..w[1]);
+        }
+        Ok(Partition { total: *bounds.last().unwrap(), ranges })
+    }
+
+    /// The `n + 1` cut points (`[0, b₁, …, total]`) of this partition.
+    pub fn bounds(&self) -> Vec<usize> {
+        let mut b = Vec::with_capacity(self.ranges.len() + 1);
+        b.push(0);
+        b.extend(self.ranges.iter().map(|r| r.end));
+        b
+    }
     pub fn nodes(&self) -> usize {
         self.ranges.len()
     }
@@ -75,6 +100,38 @@ pub fn imbalanced_partition(total: usize, nodes: usize, skew: f64) -> Partition 
     Partition { total, ranges }
 }
 
+/// Weight-balanced partition: cut `0..weights.len()` into `nodes`
+/// contiguous ranges so each holds ≈ `Σweights / nodes` of the total
+/// weight (greedy cumulative cuts). With per-column nnz counts as the
+/// weights this is `dsanls shard --balance nnz`: on a skewed matrix every
+/// secure party ends up holding a comparable number of stored values, so
+/// the synchronous protocols stop stalling on the heavy party (the
+/// ROADMAP's "skew-aware shard files" item). Ranks are never starved: a
+/// cut leaves at least one index per remaining rank while indices last.
+pub fn weight_balanced_partition(weights: &[usize], nodes: usize) -> Partition {
+    assert!(nodes >= 1);
+    let n = weights.len();
+    let total: u128 = weights.iter().map(|&w| w as u128).sum();
+    let mut ranges = Vec::with_capacity(nodes);
+    let mut cum: u128 = 0;
+    let mut idx = 0usize;
+    for r in 0..nodes {
+        let start = idx;
+        if r + 1 == nodes {
+            idx = n;
+        } else {
+            let target = total * (r as u128 + 1) / nodes as u128;
+            let reserve = nodes - 1 - r; // leave ≥1 index per remaining rank
+            while idx < n.saturating_sub(reserve) && (cum < target || idx == start) {
+                cum += weights[idx] as u128;
+                idx += 1;
+            }
+        }
+        ranges.push(start..idx);
+    }
+    Partition { total: n, ranges }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,6 +157,46 @@ mod tests {
         for r in 1..10 {
             assert!((p.len(r) as i64 - 56).abs() <= 1, "len({r}) = {}", p.len(r));
         }
+    }
+
+    #[test]
+    fn bounds_roundtrip() {
+        for p in [uniform_partition(101, 4), imbalanced_partition(60, 3, 0.5)] {
+            let back = Partition::from_bounds(&p.bounds()).unwrap();
+            assert_eq!(back, p);
+            assert!(back.validate());
+        }
+        assert!(Partition::from_bounds(&[]).is_err());
+        assert!(Partition::from_bounds(&[1, 5]).is_err(), "must start at 0");
+        assert!(Partition::from_bounds(&[0, 7, 3]).is_err(), "must be monotone");
+    }
+
+    #[test]
+    fn weight_balanced_splits_skewed_weights() {
+        // one heavy prefix: uniform-by-count would give rank 0 ~all weight
+        let mut w = vec![100usize; 10];
+        w.extend(std::iter::repeat(1).take(90));
+        let p = weight_balanced_partition(&w, 4);
+        assert!(p.validate());
+        let weight_of = |r: usize| p.range(r).map(|i| w[i]).sum::<usize>();
+        let total: usize = w.iter().sum();
+        for r in 0..4 {
+            let share = weight_of(r) as f64 / total as f64;
+            assert!(
+                (0.10..=0.45).contains(&share),
+                "rank {r} holds {share:.2} of the weight: {:?}",
+                (0..4).map(weight_of).collect::<Vec<_>>()
+            );
+        }
+        // uniform weights degrade to ≈uniform cuts
+        let p = weight_balanced_partition(&[1; 100], 4);
+        for r in 0..4 {
+            assert_eq!(p.len(r), 25);
+        }
+        // more ranks than indices: every index still covered, in order
+        let p = weight_balanced_partition(&[5, 5], 4);
+        assert!(p.validate());
+        assert_eq!(p.total, 2);
     }
 
     #[test]

@@ -38,7 +38,7 @@ use std::ops::Range;
 use std::path::{Path, PathBuf};
 
 use crate::data::datasets::Dataset;
-use crate::data::partition::uniform_partition;
+use crate::data::partition::{uniform_partition, Partition};
 use crate::error::{Context, Result};
 use crate::linalg::{Csr, Mat, Matrix};
 use crate::transport::wire::{push_f64_bits, take_f64_bits};
@@ -310,12 +310,28 @@ impl NodeData {
         if need_rows {
             let (spec, block) = read_block(dir, rank, Axis::Row)?;
             validate_block(&manifest, &spec, &block, Axis::Row)?;
+            if spec.range != manifest.row_partition().range(rank) {
+                crate::bail!(
+                    "rank {rank} row block spans {:?} but the manifest partitions it at {:?} \
+                     (mixed shard sets?)",
+                    spec.range,
+                    manifest.row_partition().range(rank)
+                );
+            }
             data.row_range = spec.range;
             data.m_rows = Some(block);
         }
         if need_cols {
             let (spec, block) = read_block(dir, rank, Axis::Col)?;
             validate_block(&manifest, &spec, &block, Axis::Col)?;
+            if spec.range != manifest.col_partition().range(rank) {
+                crate::bail!(
+                    "rank {rank} col block spans {:?} but the manifest partitions it at {:?} \
+                     (mixed shard sets?)",
+                    spec.range,
+                    manifest.col_partition().range(rank)
+                );
+            }
             data.col_range = spec.range;
             data.m_cols = Some(block);
         }
@@ -448,7 +464,7 @@ impl NodeInput<'_> {
 /// Continue the sequential `‖·‖²_F` accumulation from `acc` over `m`'s
 /// stored values in storage order — the resumable form of
 /// [`Matrix::fro_sq`] (which is `fro_sq_resume(m, 0.0)`).
-fn fro_sq_resume(m: &Matrix, acc: f64) -> f64 {
+pub(crate) fn fro_sq_resume(m: &Matrix, acc: f64) -> f64 {
     match m {
         Matrix::Dense(d) => d.data().iter().fold(acc, |a, &v| a + (v as f64) * (v as f64)),
         Matrix::Sparse(s) => s.values().iter().fold(acc, |a, &v| a + (v as f64) * (v as f64)),
@@ -502,7 +518,9 @@ pub fn exact_fro_sq<C: Communicator>(
 // ---------------------------------------------------------------------------
 
 /// Shard directory metadata (`manifest.bin`): what was sharded, for how
-/// many ranks, and the exact global norm.
+/// many ranks, the exact global norm, and the partition cut points each
+/// axis was sliced at (uniform by default; nnz-balanced with `dsanls
+/// shard --balance nnz`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ShardManifest {
     /// Data ranks the directory was sharded for.
@@ -521,6 +539,87 @@ pub struct ShardManifest {
     pub dense: bool,
     /// Dataset name (upper-case, e.g. `FACE`).
     pub dataset: String,
+    /// Row-axis cut points (`nodes + 1` values, `[0, …, rows]`).
+    pub row_bounds: Vec<usize>,
+    /// Column-axis cut points (`nodes + 1` values, `[0, …, cols]`).
+    pub col_bounds: Vec<usize>,
+}
+
+impl ShardManifest {
+    /// A manifest for uniform partitions along both axes (the default).
+    #[allow(clippy::too_many_arguments)]
+    pub fn uniform(
+        nodes: usize,
+        rows: usize,
+        cols: usize,
+        fro_sq: f64,
+        seed: u64,
+        scale: f64,
+        dense: bool,
+        dataset: String,
+    ) -> ShardManifest {
+        ShardManifest {
+            nodes,
+            rows,
+            cols,
+            fro_sq,
+            seed,
+            scale,
+            dense,
+            dataset,
+            row_bounds: uniform_partition(rows, nodes).bounds(),
+            col_bounds: uniform_partition(cols, nodes).bounds(),
+        }
+    }
+
+    /// The row partition the directory was sliced with.
+    pub fn row_partition(&self) -> Partition {
+        Partition::from_bounds(&self.row_bounds).expect("manifest bounds validated on read")
+    }
+
+    /// The column partition the directory was sliced with.
+    pub fn col_partition(&self) -> Partition {
+        Partition::from_bounds(&self.col_bounds).expect("manifest bounds validated on read")
+    }
+
+    /// Is either axis partitioned non-uniformly (`--balance nnz`)?
+    pub fn is_balanced(&self) -> bool {
+        self.row_bounds != uniform_partition(self.rows, self.nodes).bounds()
+            || self.col_bounds != uniform_partition(self.cols, self.nodes).bounds()
+    }
+
+    /// The single shared gate for balanced directories: the non-secure
+    /// algorithms assume uniform partitions, so they must refuse an
+    /// nnz-balanced shard set — with the same typed error whether the run
+    /// comes through the in-process [`crate::nmf::job::Job`] or a
+    /// `dsanls worker` (one predicate, one message).
+    pub fn require_uniform_for(&self, dir: &Path, secure: bool) -> Result<()> {
+        if self.is_balanced() && !secure {
+            crate::bail!(
+                "shard directory {} carries nnz-balanced partitions, which only the \
+                 secure protocols consume — re-shard without `--balance nnz`",
+                dir.display()
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Per-column stored-value counts — the weights `dsanls shard --balance
+/// nnz` feeds [`crate::data::partition::weight_balanced_partition`]. A
+/// dense matrix stores every entry, so its columns weigh equally (balance
+/// degrades to uniform, as it should).
+pub fn col_nnz_counts(m: &Matrix) -> Vec<usize> {
+    match m {
+        Matrix::Dense(d) => vec![d.rows(); d.cols()],
+        Matrix::Sparse(s) => {
+            let mut counts = vec![0usize; s.cols()];
+            for &c in s.indices() {
+                counts[c] += 1;
+            }
+            counts
+        }
+    }
 }
 
 /// Manifest dataset-name prefix marking shards sliced from an external
@@ -540,8 +639,10 @@ pub fn is_file_dataset(name: &str) -> bool {
 }
 
 /// On-disk format version; bump on any layout change (readers reject
-/// mismatches with a "regenerate your shards" diagnostic).
-pub const SHARD_FORMAT_VERSION: u32 = 1;
+/// mismatches with a "regenerate your shards" diagnostic). Version 2
+/// added the per-axis partition cut points to the manifest (`--balance
+/// nnz` shard sets).
+pub const SHARD_FORMAT_VERSION: u32 = 2;
 
 const MANIFEST_MAGIC: &[u8; 8] = b"DSSHMAN1";
 const BLOCK_MAGIC: &[u8; 8] = b"DSSHBLK1";
@@ -644,21 +745,25 @@ fn check_magic<R: Read>(r: &mut R, expect: &[u8; 8], what: &str) -> Result<()> {
 }
 
 /// Write a complete shard directory: `manifest.bin` plus one row-axis and
-/// one column-axis block file per rank, sliced from the materialised `m`.
-/// (Shard preparation is the one place the full matrix may exist; workers
-/// then touch only their blocks.) Returns the total bytes written.
+/// one column-axis block file per rank, sliced from the materialised `m`
+/// along the partitions the manifest records (uniform by default,
+/// nnz-balanced for `--balance nnz`). (Shard preparation is the one place
+/// the full matrix may exist; workers then touch only their blocks.)
+/// Returns the total bytes written.
 pub fn write_shard_dir(dir: &Path, m: &Matrix, manifest: &ShardManifest) -> Result<u64> {
     assert_eq!((manifest.rows, manifest.cols), (m.rows(), m.cols()), "manifest/matrix shape");
     std::fs::create_dir_all(dir)
         .with_context(|| format!("creating shard directory {}", dir.display()))?;
     let mut total = write_manifest(dir, manifest)?;
+    let row_part = manifest.row_partition();
+    let col_part = manifest.col_partition();
     for rank in 0..manifest.nodes {
         for axis in [Axis::Row, Axis::Col] {
-            let extent = match axis {
-                Axis::Row => m.rows(),
-                Axis::Col => m.cols(),
+            let range = match axis {
+                Axis::Row => row_part.range(rank),
+                Axis::Col => col_part.range(rank),
             };
-            let spec = ShardSpec::uniform(axis, rank, manifest.nodes, extent);
+            let spec = ShardSpec { rank, nodes: manifest.nodes, axis, range };
             let block = match axis {
                 Axis::Row => m.row_block(spec.range.clone()),
                 Axis::Col => m.col_block(spec.range.clone()),
@@ -669,7 +774,7 @@ pub fn write_shard_dir(dir: &Path, m: &Matrix, manifest: &ShardManifest) -> Resu
     Ok(total)
 }
 
-fn write_manifest(dir: &Path, manifest: &ShardManifest) -> Result<u64> {
+pub(crate) fn write_manifest(dir: &Path, manifest: &ShardManifest) -> Result<u64> {
     let path = manifest_path(dir);
     let file = std::fs::File::create(&path)
         .with_context(|| format!("creating {}", path.display()))?;
@@ -686,6 +791,10 @@ fn write_manifest(dir: &Path, manifest: &ShardManifest) -> Result<u64> {
     let name = manifest.dataset.as_bytes();
     write_u32(&mut w, name.len() as u32)?;
     w.write_all(name).context("writing manifest dataset name")?;
+    debug_assert_eq!(manifest.row_bounds.len(), manifest.nodes + 1, "row bounds shape");
+    debug_assert_eq!(manifest.col_bounds.len(), manifest.nodes + 1, "col bounds shape");
+    write_u64s(&mut w, &manifest.row_bounds)?;
+    write_u64s(&mut w, &manifest.col_bounds)?;
     w.flush().context("flushing manifest")?;
     Ok(std::fs::metadata(&path).map(|md| md.len()).unwrap_or(0))
 }
@@ -715,10 +824,33 @@ pub fn read_manifest(dir: &Path) -> Result<ShardManifest> {
     if nodes == 0 || rows == 0 || cols == 0 {
         crate::bail!("manifest with zero nodes/rows/cols (corrupt file?)");
     }
-    Ok(ShardManifest { nodes, rows, cols, fro_sq, seed, scale, dense: dense[0] != 0, dataset })
+    if nodes > 1 << 20 {
+        crate::bail!("manifest claims {nodes} nodes (corrupt file?)");
+    }
+    let row_bounds = read_u64s(&mut r, nodes + 1, "row partition bounds")?;
+    let col_bounds = read_u64s(&mut r, nodes + 1, "col partition bounds")?;
+    for (bounds, extent, what) in [(&row_bounds, rows, "row"), (&col_bounds, cols, "col")] {
+        let p = Partition::from_bounds(bounds)
+            .with_context(|| format!("manifest {what} partition bounds"))?;
+        if p.total != extent || !p.validate() {
+            crate::bail!("manifest {what} partition does not cover 0..{extent} (corrupt file?)");
+        }
+    }
+    Ok(ShardManifest {
+        nodes,
+        rows,
+        cols,
+        fro_sq,
+        seed,
+        scale,
+        dense: dense[0] != 0,
+        dataset,
+        row_bounds,
+        col_bounds,
+    })
 }
 
-fn write_block(dir: &Path, spec: &ShardSpec, block: &Matrix) -> Result<u64> {
+pub(crate) fn write_block(dir: &Path, spec: &ShardSpec, block: &Matrix) -> Result<u64> {
     let path = block_path(dir, spec.rank, spec.axis);
     let file = std::fs::File::create(&path)
         .with_context(|| format!("creating {}", path.display()))?;
@@ -843,16 +975,16 @@ mod tests {
     }
 
     fn manifest_for(m: &Matrix, nodes: usize, dataset: &str) -> ShardManifest {
-        ShardManifest {
+        ShardManifest::uniform(
             nodes,
-            rows: m.rows(),
-            cols: m.cols(),
-            fro_sq: m.fro_sq(),
-            seed: 7,
-            scale: 0.02,
-            dense: matches!(m, Matrix::Dense(_)),
-            dataset: dataset.into(),
-        }
+            m.rows(),
+            m.cols(),
+            m.fro_sq(),
+            7,
+            0.02,
+            matches!(m, Matrix::Dense(_)),
+            dataset.into(),
+        )
     }
 
     #[test]
@@ -968,6 +1100,48 @@ mod tests {
         std::fs::write(&bpath, &bbytes).unwrap();
         assert!(read_block(&dir, 5, Axis::Row).is_err());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn balanced_shard_dir_roundtrips_partitions_and_balances_nnz() {
+        use crate::data::partition::weight_balanced_partition;
+        let mut rng = crate::rng::Pcg64::new(91, 0);
+        // power-law column weights (Zipf): the first columns hold most nnz
+        let sp = crate::data::synth::power_law_sparse(80, 120, 4000, 4, 1.0, &mut rng);
+        let m = Matrix::Sparse(sp);
+        let nodes = 3;
+        let balanced = weight_balanced_partition(&col_nnz_counts(&m), nodes);
+        let mut manifest = manifest_for(&m, nodes, "SKEWED");
+        manifest.col_bounds = balanced.bounds();
+        assert!(manifest.is_balanced());
+        let dir = tmpdir("balanced");
+        write_shard_dir(&dir, &m, &manifest).unwrap();
+        let back = read_manifest(&dir).unwrap();
+        assert_eq!(back.col_bounds, balanced.bounds());
+        assert_eq!(back.col_partition(), balanced);
+
+        // the LoadStats contract: per-party resident nnz is now comparable,
+        // whereas uniform column cuts leave a >2x spread on this input
+        let nnz_of = |dir: &Path, rank| {
+            let (data, _) = NodeData::load(dir, rank, false, true).unwrap();
+            data.load_stats(rank, 0.0, LoadSource::FileShard).nnz
+        };
+        let bal: Vec<usize> = (0..nodes).map(|r| nnz_of(&dir, r)).collect();
+        let (bmin, bmax) = (*bal.iter().min().unwrap(), *bal.iter().max().unwrap());
+        assert!(
+            (bmax as f64) < 1.6 * bmin as f64,
+            "balanced shards must spread nnz evenly: {bal:?}"
+        );
+        let udir = tmpdir("uniform_skew");
+        write_shard_dir(&udir, &m, &manifest_for(&m, nodes, "SKEWED")).unwrap();
+        let uni: Vec<usize> = (0..nodes).map(|r| nnz_of(&udir, r)).collect();
+        let (umin, umax) = (*uni.iter().min().unwrap(), *uni.iter().max().unwrap());
+        assert!(
+            umax as f64 > 2.0 * umin.max(1) as f64,
+            "the skewed input should be imbalanced under uniform cuts: {uni:?}"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+        std::fs::remove_dir_all(&udir).ok();
     }
 
     #[test]

@@ -45,6 +45,16 @@
 //!   peer cannot make progress, so the collective wrappers panic with the
 //!   underlying [`crate::error::Error`]; the cluster driver (thread scope
 //!   or worker process) surfaces it.
+//!
+//! **Control plane**: supervised runs ([`crate::nmf::control`]) add one
+//! untimed three-float all-reduce per iteration — the collective stop
+//! poll ([`crate::nmf::control::RunControl::poll_sync`]) that lets every
+//! rank leave the loop at the same iteration on cancellation, deadline or
+//! convergence. Because it runs under [`NodeCtx::untimed`] it disturbs
+//! neither the modelled clock nor the byte counters the paper's
+//! communication-volume claims are asserted on. A *killed* job
+//! additionally interrupts the transport inboxes so blocked reads fail
+//! fast instead of waiting out an I/O timeout.
 
 use std::time::{Duration, Instant};
 

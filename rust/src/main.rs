@@ -66,16 +66,24 @@ fn usage() {
         "dsanls {} — Fast and Secure Distributed NMF (TKDE 2020 reproduction)\n\n\
          USAGE: dsanls <run|launch|worker|shard|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
          launch:  dsanls launch --nodes N [--port P] [--bind HOST] [--hosts FILE] [--shards DIR]\n\
-                  [--verify-sim] [--config FILE] [--key=value ...]\n\
+                  [--max-seconds S] [--target-error E] [--checkpoint PATH [--checkpoint-every K]]\n\
+                  [--resume PATH] [--retries N] [--verify-sim] [--config FILE] [--key=value ...]\n\
                   runs the experiment over real TCP worker processes (spawned locally, or\n\
                   started per host by the operator with --hosts — see DEPLOYMENT.md);\n\
+                  stop policies end the run early (deadline / convergence), --checkpoint\n\
+                  snapshots factors so --resume (or a --retries restart after a rank\n\
+                  failure) continues to bit-identical results;\n\
                   --verify-sim re-runs the simulator and asserts bit-identical factors\n\
          worker:  dsanls worker --rendezvous HOST:PORT --rank R [--bind IP[:PORT]]\n\
-                  [--advertise HOST[:PORT]] [--shards DIR] [--config FILE] [--key=value ...]\n\
+                  [--advertise HOST[:PORT]] [--shards DIR] [control flags as for launch]\n\
+                  [--config FILE] [--key=value ...]\n\
                   one launch rank; holds only its row/column blocks of the input\n\
-         shard:   dsanls shard --out DIR [--nodes N] [--input FILE] [--config FILE] [--key=value ...]\n\
-                  pre-slice the dataset — or an external COO/.mtx matrix file (--input)\n\
-                  — into per-rank block files for multi-host runs\n\n\
+         shard:   dsanls shard --out DIR [--nodes N] [--input FILE] [--balance nnz]\n\
+                  [--config FILE] [--key=value ...]\n\
+                  pre-slice the dataset — or an external COO/.mtx matrix file (--input,\n\
+                  streamed; the full matrix is never materialised) — into per-rank block\n\
+                  files for multi-host runs; --balance nnz cuts columns by stored-value\n\
+                  count for the secure protocols on skewed data\n\n\
          Config keys (TOML sections flattened as --section.key=value):\n\
            experiment: name algorithm dataset scale nodes rank iterations seed eval_every backend\n\
            sketch:     kind d_u d_v\n\

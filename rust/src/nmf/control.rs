@@ -1,0 +1,885 @@
+//! Supervised execution control plane: cooperative cancellation,
+//! convergence-based stopping, checkpoint/resume, and the shared token a
+//! [`crate::nmf::job::JobHandle`] uses to steer a running cluster.
+//!
+//! The paper's experiment harness runs a *fixed* iteration count and
+//! assumes every rank survives. A production service needs the opposite
+//! defaults: a job should stop **when it has converged** (target relative
+//! error), **when its time budget is spent** (wall-clock deadline), or
+//! **when the operator says so** (cancellation) — and an interrupted job
+//! should resume from its last checkpoint to **bit-identical** factors.
+//! This module supplies those four pieces; the [`crate::nmf::job::Job`]
+//! builder wires them into every algorithm runner.
+//!
+//! ## The collective stop decision
+//!
+//! Distributed cancellation has one hard constraint: every rank of a
+//! synchronous cluster must leave the iteration loop at the **same**
+//! iteration, or the survivors hang in a collective the leavers never
+//! enter. [`RunControl::poll_sync`] therefore makes stopping itself a
+//! collective: once per iteration every rank contributes its local view
+//! (`cancelled? deadline passed? target reached?`) to a three-float
+//! all-reduce, and all ranks apply the identical agreed decision. The
+//! poll runs *untimed* ([`crate::dist::NodeCtx::untimed`]), so it
+//! perturbs neither the modelled clock nor the byte counters the paper's
+//! communication claims are asserted on.
+//!
+//! The asynchronous protocols have no collectives; their clients poll
+//! [`RunControl::poll_local`] between rounds, and the parameter server
+//! aggregates the clients' residual fractions to broadcast a
+//! target-error stop flag in its replies (see [`crate::secure::asyn`]).
+//!
+//! ## Checkpoint format
+//!
+//! A checkpoint is the rank-0-assembled factor pair plus the run cursor:
+//! because every random stream in the system is *derived* from
+//! `(seed, iteration, role)` ([`crate::rng::StreamRng`]), the iteration
+//! counter **is** the RNG cursor — restoring `(U, V, t)` and re-entering
+//! the loop at `t` replays the exact tail of an uninterrupted run, so
+//! resumed factors are bit-identical (asserted on both backends by
+//! `tests/control_plane.rs`). Files are written atomically (tmp +
+//! rename), versioned, and framed by magic headers/footers; a truncated
+//! or corrupt file is a typed [`crate::error::Error`], never a panic.
+//!
+//! Checkpointing covers DSANLS and the MPI-FAUN baselines. The secure
+//! protocols intentionally refuse it: their per-party state (`V_{J_r:}`,
+//! mid-consensus `U_(r)` copies) must never leave the party, and a
+//! central snapshot would do exactly that.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::dist::NodeCtx;
+use crate::error::{Context, Result};
+use crate::linalg::Mat;
+use crate::transport::Communicator;
+
+// ---------------------------------------------------------------------------
+// StopReason / StopPolicy
+// ---------------------------------------------------------------------------
+
+/// Why a run ended — surfaced in [`crate::nmf::job::Outcome::stop_reason`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// The run executed its full iteration budget.
+    Completed,
+    /// [`ControlToken::cancel`] (or [`crate::nmf::job::JobHandle::cancel`])
+    /// was observed at an iteration boundary.
+    Cancelled,
+    /// The [`StopPolicy::max_seconds`] wall-clock budget ran out.
+    DeadlineExceeded,
+    /// The traced relative error reached [`StopPolicy::target_error`].
+    TargetReached,
+}
+
+impl StopReason {
+    /// Stable wire/on-disk code.
+    pub fn code(self) -> u64 {
+        match self {
+            StopReason::Completed => 0,
+            StopReason::Cancelled => 1,
+            StopReason::DeadlineExceeded => 2,
+            StopReason::TargetReached => 3,
+        }
+    }
+
+    /// Inverse of [`StopReason::code`].
+    pub fn from_code(c: u64) -> Result<StopReason> {
+        match c {
+            0 => Ok(StopReason::Completed),
+            1 => Ok(StopReason::Cancelled),
+            2 => Ok(StopReason::DeadlineExceeded),
+            3 => Ok(StopReason::TargetReached),
+            other => crate::bail!("unknown stop-reason code {other}"),
+        }
+    }
+
+    /// Human-readable label for run summaries.
+    pub fn label(self) -> &'static str {
+        match self {
+            StopReason::Completed => "completed",
+            StopReason::Cancelled => "cancelled",
+            StopReason::DeadlineExceeded => "deadline exceeded",
+            StopReason::TargetReached => "target error reached",
+        }
+    }
+
+    fn priority(self) -> u8 {
+        match self {
+            StopReason::Completed => 0,
+            StopReason::TargetReached => 1,
+            StopReason::DeadlineExceeded => 2,
+            StopReason::Cancelled => 3,
+        }
+    }
+
+    /// Merge two ranks' reasons into the run-level one (most decisive
+    /// wins: cancellation over deadline over convergence over completion —
+    /// the same priority [`RunControl::poll_sync`] applies).
+    pub fn merge(self, other: StopReason) -> StopReason {
+        if self.priority() >= other.priority() {
+            self
+        } else {
+            other
+        }
+    }
+}
+
+/// Early-stopping policy: any combination of a wall-clock budget and a
+/// convergence target, on top of the algorithm's iteration budget (which
+/// stays in the per-algorithm `*Options`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StopPolicy {
+    /// Wall-clock budget in seconds, measured from job start.
+    pub max_seconds: Option<f64>,
+    /// Stop once the traced relative error falls to (or below) this value.
+    /// Only *traced* samples count — pair it with a non-zero `eval_every`.
+    pub target_error: Option<f64>,
+}
+
+impl StopPolicy {
+    /// A policy with no early stopping (run the full iteration budget).
+    pub fn new() -> StopPolicy {
+        StopPolicy::default()
+    }
+
+    /// Set the wall-clock budget.
+    pub fn max_seconds(mut self, secs: f64) -> StopPolicy {
+        self.max_seconds = Some(secs);
+        self
+    }
+
+    /// Set the convergence target.
+    pub fn target_error(mut self, err: f64) -> StopPolicy {
+        self.target_error = Some(err);
+        self
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ControlToken
+// ---------------------------------------------------------------------------
+
+/// Shared cancellation token. Cloneable across threads via `Arc`; checked
+/// cooperatively once per iteration by every algorithm runner.
+///
+/// Two grades of stopping:
+/// * [`ControlToken::cancel`] — cooperative. Every rank observes the flag
+///   at its next iteration boundary and the cluster agrees collectively,
+///   so the job ends cleanly with [`StopReason::Cancelled`] and the
+///   factors computed so far — bounded by **one iteration** of latency.
+/// * [`ControlToken::kill`] — abortive. Also interrupts every registered
+///   transport inbox, so ranks blocked in a TCP/simulated `read` unblock
+///   immediately with an error instead of waiting out an iteration (or an
+///   I/O timeout). The job aborts; partial results are lost.
+#[derive(Default)]
+pub struct ControlToken {
+    cancelled: AtomicBool,
+    killed: AtomicBool,
+    /// Transport interrupters registered by the job drivers (one per
+    /// backend inbox); invoked by [`ControlToken::kill`].
+    #[allow(clippy::type_complexity)]
+    interrupters: Mutex<Vec<Box<dyn Fn() + Send + Sync>>>,
+}
+
+impl std::fmt::Debug for ControlToken {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ControlToken")
+            .field("cancelled", &self.is_cancelled())
+            .field("killed", &self.is_killed())
+            .finish()
+    }
+}
+
+impl ControlToken {
+    /// A fresh, uncancelled token.
+    pub fn new() -> Arc<ControlToken> {
+        Arc::new(ControlToken::default())
+    }
+
+    /// Request cooperative cancellation (observed within one iteration).
+    pub fn cancel(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+    }
+
+    /// Has [`ControlToken::cancel`] (or `kill`) been called?
+    pub fn is_cancelled(&self) -> bool {
+        self.cancelled.load(Ordering::SeqCst)
+    }
+
+    /// Abort: cancel *and* interrupt every registered transport inbox so
+    /// blocked readers unblock immediately. The run ends with an error.
+    ///
+    /// The killed flag is set and the interrupter list drained under one
+    /// lock, so an interrupter registered concurrently either observes
+    /// the flag (and fires in `register_interrupter`) or lands in the
+    /// list drained here — never neither.
+    pub fn kill(&self) {
+        self.cancelled.store(true, Ordering::SeqCst);
+        let fired = {
+            let mut g = self.interrupters.lock().unwrap();
+            self.killed.store(true, Ordering::SeqCst);
+            std::mem::take(&mut *g)
+        };
+        for f in fired {
+            f();
+        }
+    }
+
+    /// Has [`ControlToken::kill`] been called?
+    pub fn is_killed(&self) -> bool {
+        self.killed.load(Ordering::SeqCst)
+    }
+
+    /// Register a transport interrupter (called by the job drivers when
+    /// they stand up a backend). If the token was already killed the
+    /// interrupter fires immediately (the killed check happens under the
+    /// list lock — see [`ControlToken::kill`]).
+    pub fn register_interrupter(&self, f: Box<dyn Fn() + Send + Sync>) {
+        let mut g = self.interrupters.lock().unwrap();
+        if self.is_killed() {
+            drop(g);
+            f();
+            return;
+        }
+        g.push(f);
+    }
+
+    /// Drop every registered interrupter. The job drivers call this once a
+    /// run finishes so a long-lived token (or [`crate::nmf::job::JobHandle`])
+    /// does not keep the completed run's transport inboxes alive.
+    pub fn clear_interrupters(&self) {
+        self.interrupters.lock().unwrap().clear();
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint / resume configuration
+// ---------------------------------------------------------------------------
+
+/// Where and how often a run snapshots its factors.
+#[derive(Debug, Clone)]
+pub struct CheckpointCfg {
+    /// Snapshot every `every` iterations (≥ 1).
+    pub every: usize,
+    /// Checkpoint file path (written atomically; overwritten in place).
+    pub path: PathBuf,
+}
+
+/// A loaded checkpoint, resolved once by the job and shared read-only by
+/// every rank (each slices its own blocks out of the assembled factors).
+#[derive(Debug, Clone)]
+pub struct ResumeState {
+    /// Iteration the snapshot was taken at (the loop re-enters here).
+    pub iteration: usize,
+    /// Assembled row factor at `iteration`.
+    pub u: Mat,
+    /// Assembled column factor at `iteration`.
+    pub v: Mat,
+}
+
+/// Identity of the run a checkpoint belongs to — everything that must
+/// match for a resume to be bit-identical.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CheckpointMeta {
+    /// Stable algorithm-family tag (`dsanls` / `dist-anls`).
+    pub algo: String,
+    /// Shared RNG seed (every stream derives from it).
+    pub seed: u64,
+    /// Factorisation rank `k`.
+    pub k: usize,
+    /// Global matrix rows.
+    pub rows: usize,
+    /// Global matrix columns.
+    pub cols: usize,
+    /// Fingerprint of every further result-affecting option (solver,
+    /// sketch kind and sizes, μ schedule, …) — see [`params_fingerprint`].
+    /// Seed/k/shape alone do not pin the trajectory: resuming with, say,
+    /// a different `d_u` would replay a *different* tail and silently
+    /// break the bit-identity guarantee.
+    pub params: u64,
+}
+
+/// Order-sensitive FNV-1a fold over a run's result-affecting option words
+/// — the checkpoint fingerprint. Each algorithm packs its options into
+/// `u64` words (f32 knobs via `to_bits`, names via [`fingerprint_str`])
+/// and folds them here; a resume is only accepted when the fingerprints
+/// match.
+pub fn params_fingerprint(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01B3);
+        }
+    }
+    h
+}
+
+/// FNV-1a of a name (solver / sketch kind) into one fingerprint word.
+pub fn fingerprint_str(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// A checkpoint file read back from disk.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    /// Run identity recorded at write time.
+    pub meta: CheckpointMeta,
+    /// The resumable state.
+    pub state: ResumeState,
+}
+
+// ---------------------------------------------------------------------------
+// RunControl: what the runners see
+// ---------------------------------------------------------------------------
+
+/// The resolved control plane one run executes under: the shared token,
+/// the stop policy (with its deadline already anchored to job start),
+/// checkpointing, and the optional resume state. One instance is shared
+/// by reference across every rank of the run, which is what makes the
+/// per-iteration stop poll agree by construction.
+#[derive(Debug)]
+pub struct RunControl {
+    /// Cooperative cancellation flag.
+    pub token: Arc<ControlToken>,
+    /// Early-stopping policy.
+    pub stop: StopPolicy,
+    /// `Instant` the wall-clock budget expires at (anchored at job start).
+    pub deadline: Option<Instant>,
+    /// Periodic snapshotting (DSANLS / baselines only).
+    pub checkpoint: Option<CheckpointCfg>,
+    /// Loaded resume state (validated against the job before the run).
+    pub resume: Option<Arc<ResumeState>>,
+    /// Fault injection for tests and operator drills: the rank this
+    /// control belongs to exits the process when its loop reaches this
+    /// iteration (`dsanls worker --fault-iteration`). Never set by the
+    /// library itself.
+    pub fault_at: Option<usize>,
+    /// Can anything ever flip this run's token? `true` for in-process jobs
+    /// (the caller holds [`crate::nmf::job::Job::control_token`] or a
+    /// `JobHandle`); `false` for `dsanls worker` ranks, whose token is
+    /// created locally and unreachable. When this is `false` *and* no stop
+    /// policy is set, [`RunControl::poll_sync`] skips its collective
+    /// entirely — the poll is untimed for the modelled clock, but on the
+    /// TCP backend it would still be a real network round trip per
+    /// iteration bought for nothing.
+    pub cancellable: bool,
+}
+
+impl RunControl {
+    /// A control plane with nothing to do — the default for legacy
+    /// blocking runs and helper tests.
+    pub fn unsupervised() -> RunControl {
+        RunControl {
+            token: ControlToken::new(),
+            stop: StopPolicy::default(),
+            deadline: None,
+            checkpoint: None,
+            resume: None,
+            fault_at: None,
+            cancellable: false,
+        }
+    }
+
+    /// Could this run ever stop early? When not — unreachable token, no
+    /// deadline, no target — the per-iteration polls reduce to the fault
+    /// hook and skip their collective/flag work.
+    fn active(&self) -> bool {
+        self.cancellable || self.deadline.is_some() || self.stop.target_error.is_some()
+    }
+
+    /// Anchor a policy's wall-clock budget at "now". Non-finite or absurd
+    /// budgets are clamped to ~100 years (effectively "no deadline") —
+    /// `Duration::from_secs_f64` panics on them, and misuse must stay a
+    /// non-event, not a panic.
+    pub fn deadline_from(stop: &StopPolicy) -> Option<Instant> {
+        const FOREVER: f64 = 3.15e9; // ~100 years
+        stop.max_seconds.map(|s| {
+            let s = if s.is_finite() { s.clamp(0.0, FOREVER) } else { FOREVER };
+            Instant::now() + Duration::from_secs_f64(s)
+        })
+    }
+
+    /// The iteration the run's loop starts at (0, or the resume cursor).
+    pub fn start_iteration(&self) -> usize {
+        self.resume.as_ref().map_or(0, |r| r.iteration)
+    }
+
+    /// Should the run snapshot after completing iteration `done`?
+    pub fn should_checkpoint(&self, done: usize) -> bool {
+        match &self.checkpoint {
+            Some(c) => c.every > 0 && done % c.every == 0,
+            None => false,
+        }
+    }
+
+    fn local_flags(&self, last_err: f64) -> [f32; 3] {
+        let cancelled = self.token.is_cancelled();
+        let late = self.deadline.is_some_and(|d| Instant::now() >= d);
+        let converged = self
+            .stop
+            .target_error
+            .is_some_and(|t| last_err.is_finite() && last_err <= t);
+        let f = |b: bool| if b { 1.0f32 } else { 0.0 };
+        [f(cancelled), f(late), f(converged)]
+    }
+
+    /// The per-iteration **collective** stop poll for the synchronous
+    /// algorithms: all ranks contribute their local flags to an untimed
+    /// three-float all-reduce and apply the identical agreed decision, so
+    /// no rank ever leaves a collective loop alone. `last_err` is the most
+    /// recently traced relative error (NaN when this rank has none — on
+    /// the full-matrix path only rank 0 traces real values, and its flag
+    /// alone decides). Priority: cancellation > deadline > convergence.
+    pub fn poll_sync<C: Communicator>(
+        &self,
+        ctx: &mut NodeCtx<C>,
+        iteration: usize,
+        last_err: f64,
+    ) -> Option<StopReason> {
+        self.maybe_fault(iteration);
+        if !self.active() {
+            // nothing could ever stop this run early — skip the collective
+            // (all ranks share this RunControl/config, so all skip alike)
+            return None;
+        }
+        let mut flags = self.local_flags(last_err);
+        ctx.untimed(|ctx| ctx.all_reduce_sum(&mut flags));
+        if flags[0] > 0.0 {
+            Some(StopReason::Cancelled)
+        } else if flags[1] > 0.0 {
+            Some(StopReason::DeadlineExceeded)
+        } else if flags[2] > 0.0 {
+            Some(StopReason::TargetReached)
+        } else {
+            None
+        }
+    }
+
+    /// The communication-free stop poll for asynchronous clients (each
+    /// client stops independently; there is no collective to desync).
+    /// Convergence is decided by the parameter server, not here.
+    pub fn poll_local(&self, iteration: usize) -> Option<StopReason> {
+        self.maybe_fault(iteration);
+        if !self.active() {
+            return None;
+        }
+        let f = self.local_flags(f64::NAN);
+        if f[0] > 0.0 {
+            Some(StopReason::Cancelled)
+        } else if f[1] > 0.0 {
+            Some(StopReason::DeadlineExceeded)
+        } else {
+            None
+        }
+    }
+
+    fn maybe_fault(&self, iteration: usize) {
+        if self.fault_at == Some(iteration) {
+            eprintln!("fault injection: dying at iteration {iteration} (--fault-iteration)");
+            std::process::exit(101);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint file I/O
+// ---------------------------------------------------------------------------
+
+/// On-disk checkpoint format version; readers reject mismatches with a
+/// "re-checkpoint" diagnostic.
+pub const CHECKPOINT_FORMAT_VERSION: u32 = 1;
+
+const CKPT_MAGIC: &[u8; 8] = b"DSCKPT01";
+const CKPT_FOOTER: &[u8; 8] = b"DSCKEND1";
+
+fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("writing checkpoint u64")
+}
+
+fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
+    w.write_all(&v.to_le_bytes()).context("writing checkpoint u32")
+}
+
+fn read_exact_ctx<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
+    r.read_exact(buf)
+        .with_context(|| format!("truncated checkpoint (reading {what})"))
+}
+
+fn read_u64<R: Read>(r: &mut R, what: &str) -> Result<u64> {
+    let mut b = [0u8; 8];
+    read_exact_ctx(r, &mut b, what)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_u32<R: Read>(r: &mut R, what: &str) -> Result<u32> {
+    let mut b = [0u8; 4];
+    read_exact_ctx(r, &mut b, what)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn write_mat<W: Write>(w: &mut W, m: &Mat) -> Result<()> {
+    write_u64(w, m.rows() as u64)?;
+    write_u64(w, m.cols() as u64)?;
+    for &v in m.data() {
+        w.write_all(&v.to_le_bytes()).context("writing checkpoint factor data")?;
+    }
+    Ok(())
+}
+
+fn read_mat<R: Read>(r: &mut R, what: &str) -> Result<Mat> {
+    let rows = read_u64(r, "factor rows")? as usize;
+    let cols = read_u64(r, "factor cols")? as usize;
+    let n = rows
+        .checked_mul(cols)
+        .filter(|&n| n <= (1usize << 31))
+        .with_context(|| format!("checkpoint {what} claims an implausible {rows}x{cols} shape"))?;
+    let mut bytes = vec![0u8; n * 4];
+    read_exact_ctx(r, &mut bytes, what)?;
+    let mut data = Vec::with_capacity(n);
+    for c in bytes.chunks_exact(4) {
+        data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+    }
+    Ok(Mat::from_vec(rows, cols, data))
+}
+
+/// Write a checkpoint **atomically**: the state is serialised to
+/// `<path>.tmp` and renamed into place, so a crash mid-write can never
+/// leave a half-written file where the resume path will look.
+pub fn write_checkpoint(
+    path: &Path,
+    meta: &CheckpointMeta,
+    iteration: usize,
+    u: &Mat,
+    v: &Mat,
+) -> Result<()> {
+    // append (never replace) the suffix: `run.1` and `run.2` must not
+    // collide on one tmp file when two jobs checkpoint into one directory
+    let mut tmp_name = path
+        .file_name()
+        .map(|n| n.to_os_string())
+        .unwrap_or_else(|| std::ffi::OsString::from("checkpoint"));
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    {
+        let file = std::fs::File::create(&tmp)
+            .with_context(|| format!("creating checkpoint {}", tmp.display()))?;
+        let mut w = BufWriter::new(file);
+        w.write_all(CKPT_MAGIC).context("writing checkpoint magic")?;
+        write_u32(&mut w, CHECKPOINT_FORMAT_VERSION)?;
+        let tag = meta.algo.as_bytes();
+        write_u32(&mut w, tag.len() as u32)?;
+        w.write_all(tag).context("writing checkpoint algo tag")?;
+        write_u64(&mut w, meta.seed)?;
+        write_u64(&mut w, meta.k as u64)?;
+        write_u64(&mut w, meta.rows as u64)?;
+        write_u64(&mut w, meta.cols as u64)?;
+        write_u64(&mut w, meta.params)?;
+        write_u64(&mut w, iteration as u64)?;
+        write_mat(&mut w, u)?;
+        write_mat(&mut w, v)?;
+        w.write_all(CKPT_FOOTER).context("writing checkpoint footer")?;
+        w.flush().context("flushing checkpoint")?;
+    }
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming checkpoint into place at {}", path.display()))
+}
+
+/// Read a checkpoint back, validating magic, version, shapes and the
+/// end-of-file footer (which catches truncation after the factor data).
+pub fn read_checkpoint(path: &Path) -> Result<Checkpoint> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening checkpoint {}", path.display()))?;
+    let mut r = BufReader::new(file);
+    let mut magic = [0u8; 8];
+    read_exact_ctx(&mut r, &mut magic, "magic")?;
+    if &magic != CKPT_MAGIC {
+        crate::bail!(
+            "{}: bad magic {magic:02x?} — not a dsanls checkpoint",
+            path.display()
+        );
+    }
+    let version = read_u32(&mut r, "format version")?;
+    if version != CHECKPOINT_FORMAT_VERSION {
+        crate::bail!(
+            "{}: checkpoint format version {version}, this binary reads \
+             {CHECKPOINT_FORMAT_VERSION} — re-checkpoint with this binary",
+            path.display()
+        );
+    }
+    let tag_len = read_u32(&mut r, "algo tag length")? as usize;
+    if tag_len > 64 {
+        crate::bail!("checkpoint algo tag length {tag_len} is implausible (corrupt file?)");
+    }
+    let mut tag = vec![0u8; tag_len];
+    read_exact_ctx(&mut r, &mut tag, "algo tag")?;
+    let algo = String::from_utf8(tag).map_err(|_| crate::err!("checkpoint algo tag not UTF-8"))?;
+    let seed = read_u64(&mut r, "seed")?;
+    let k = read_u64(&mut r, "rank")? as usize;
+    let rows = read_u64(&mut r, "rows")? as usize;
+    let cols = read_u64(&mut r, "cols")? as usize;
+    let params = read_u64(&mut r, "params fingerprint")?;
+    let iteration = read_u64(&mut r, "iteration")? as usize;
+    let u = read_mat(&mut r, "U factor")?;
+    let v = read_mat(&mut r, "V factor")?;
+    let mut footer = [0u8; 8];
+    read_exact_ctx(&mut r, &mut footer, "footer")?;
+    if &footer != CKPT_FOOTER {
+        crate::bail!("{}: checkpoint footer missing (truncated file?)", path.display());
+    }
+    if (u.rows(), u.cols()) != (rows, k) || (v.rows(), v.cols()) != (cols, k) {
+        crate::bail!(
+            "checkpoint factors {}x{} / {}x{} do not match the recorded {rows}x{cols} rank-{k} run",
+            u.rows(),
+            u.cols(),
+            v.rows(),
+            v.cols()
+        );
+    }
+    Ok(Checkpoint {
+        meta: CheckpointMeta { algo, seed, k, rows, cols, params },
+        state: ResumeState { iteration, u, v },
+    })
+}
+
+impl Checkpoint {
+    /// Validate this checkpoint against the run that wants to resume from
+    /// it. Every mismatch is a typed error naming both sides: resuming a
+    /// different algorithm, seed or shape would silently produce garbage
+    /// factors otherwise.
+    pub fn validate(
+        &self,
+        algo: &str,
+        seed: u64,
+        k: usize,
+        rows: usize,
+        cols: usize,
+        params: u64,
+        iterations: usize,
+    ) -> Result<()> {
+        if self.meta.algo != algo {
+            crate::bail!(
+                "checkpoint was written by {} but this job runs {algo}",
+                self.meta.algo
+            );
+        }
+        if self.meta.seed != seed {
+            crate::bail!(
+                "checkpoint seed {} does not match the job seed {seed} — resumed factors \
+                 would not be bit-identical",
+                self.meta.seed
+            );
+        }
+        if (self.meta.k, self.meta.rows, self.meta.cols) != (k, rows, cols) {
+            crate::bail!(
+                "checkpoint is a {}x{} rank-{} run, this job is {rows}x{cols} rank-{k}",
+                self.meta.rows,
+                self.meta.cols,
+                self.meta.k
+            );
+        }
+        if self.meta.params != params {
+            crate::bail!(
+                "checkpoint was written with different algorithm options (solver / sketch \
+                 sizes / μ schedule) — resumed factors would not be bit-identical; resume \
+                 with the original options"
+            );
+        }
+        if self.state.iteration >= iterations {
+            crate::bail!(
+                "checkpoint is at iteration {} but the job runs only {iterations} — nothing \
+                 left to resume",
+                self.state.iteration
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Read + validate a resume checkpoint against a run identity in one step
+/// — the single resolution path shared by the in-process
+/// [`crate::nmf::job::Job`] and the `dsanls worker` CLI.
+#[allow(clippy::too_many_arguments)]
+pub fn load_resume(
+    path: &Path,
+    tag: &str,
+    seed: u64,
+    k: usize,
+    rows: usize,
+    cols: usize,
+    params: u64,
+    iterations: usize,
+) -> Result<Arc<ResumeState>> {
+    let ck = read_checkpoint(path)?;
+    ck.validate(tag, seed, k, rows, cols, params, iterations)?;
+    Ok(Arc::new(ck.state))
+}
+
+/// Fail fast on an unwritable checkpoint destination: the parent
+/// directory must exist *before* the run starts — a mid-run checkpoint
+/// write failure is fatal to the run and loses the compute so far, so a
+/// typo'd path must not survive job validation.
+pub fn validate_checkpoint_path(path: &Path) -> Result<()> {
+    let parent = match path.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p,
+        _ => Path::new("."),
+    };
+    if !parent.is_dir() {
+        crate::bail!(
+            "checkpoint directory {} does not exist — create it before the run (a mid-run \
+             checkpoint write failure is fatal)",
+            parent.display()
+        );
+    }
+    Ok(())
+}
+
+/// Collective checkpoint: every rank contributes its factor blocks with
+/// untimed all-gathers (so the snapshot does not disturb the measured
+/// run), rank 0 assembles and writes the file. All ranks must call this
+/// at the same iteration — guaranteed because [`RunControl`] is shared.
+/// A write failure is fatal to the run (panics like a transport failure):
+/// an operator who asked for checkpoints must not silently lose them.
+pub fn checkpoint_sync<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    cfg: &CheckpointCfg,
+    meta: &CheckpointMeta,
+    iteration: usize,
+    u_block: &Mat,
+    v_block: &Mat,
+) {
+    let k = meta.k;
+    let assembled = ctx.untimed(|ctx| {
+        let u_blocks = ctx.all_gather(u_block.data());
+        let v_blocks = ctx.all_gather(v_block.data());
+        (ctx.rank == 0).then(|| {
+            (
+                crate::algos::assemble_blocks_pub(&u_blocks, k),
+                crate::algos::assemble_blocks_pub(&v_blocks, k),
+            )
+        })
+    });
+    if let Some((u, v)) = assembled {
+        write_checkpoint(&cfg.path, meta, iteration, &u, &v)
+            .unwrap_or_else(|e| panic!("checkpoint at iteration {iteration} failed: {e}"));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta() -> CheckpointMeta {
+        CheckpointMeta { algo: "dsanls".into(), seed: 42, k: 3, rows: 8, cols: 6, params: 0xF1 }
+    }
+
+    fn tmpfile(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("dsanls_ckpt_{tag}_{}.ckpt", std::process::id()))
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_is_bit_exact() {
+        let path = tmpfile("rt");
+        let u = Mat::from_fn(8, 3, |i, j| (i * 3 + j) as f32 * 0.25 + 0.125);
+        let v = Mat::from_fn(6, 3, |i, j| (i * 3 + j) as f32 * -0.5);
+        write_checkpoint(&path, &meta(), 7, &u, &v).unwrap();
+        let back = read_checkpoint(&path).unwrap();
+        assert_eq!(back.meta, meta());
+        assert_eq!(back.state.iteration, 7);
+        assert_eq!(back.state.u.data(), u.data());
+        assert_eq!(back.state.v.data(), v.data());
+        back.validate("dsanls", 42, 3, 8, 6, 0xF1, 10).unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corrupt_and_truncated_checkpoints_are_typed_errors() {
+        let path = tmpfile("bad");
+        let u = Mat::from_fn(8, 3, |_, _| 1.0);
+        let v = Mat::from_fn(6, 3, |_, _| 2.0);
+        write_checkpoint(&path, &meta(), 3, &u, &v).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+
+        // truncation at several prefixes (header, mid-factor, missing footer)
+        for cut in [0usize, 5, 11, 30, 60, bytes.len() - 4] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            assert!(read_checkpoint(&path).is_err(), "cut at {cut} did not error");
+        }
+
+        // bad magic
+        let mut b = bytes.clone();
+        b[0] ^= 0xFF;
+        std::fs::write(&path, &b).unwrap();
+        assert!(read_checkpoint(&path).unwrap_err().to_string().contains("magic"));
+
+        // wrong version
+        let mut b = bytes.clone();
+        b[8] = b[8].wrapping_add(1);
+        std::fs::write(&path, &b).unwrap();
+        assert!(read_checkpoint(&path).unwrap_err().to_string().contains("version"));
+
+        // validation mismatches
+        std::fs::write(&path, &bytes).unwrap();
+        let ck = read_checkpoint(&path).unwrap();
+        assert!(ck.validate("dist-anls", 42, 3, 8, 6, 0xF1, 10).is_err(), "algo mismatch");
+        assert!(ck.validate("dsanls", 43, 3, 8, 6, 0xF1, 10).is_err(), "seed mismatch");
+        assert!(ck.validate("dsanls", 42, 4, 8, 6, 0xF1, 10).is_err(), "rank mismatch");
+        assert!(ck.validate("dsanls", 42, 3, 8, 6, 0xF2, 10).is_err(), "options mismatch");
+        assert!(ck.validate("dsanls", 42, 3, 8, 6, 0xF1, 3).is_err(), "nothing to resume");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn stop_reason_merge_prefers_decisive() {
+        use StopReason::*;
+        assert_eq!(Completed.merge(Cancelled), Cancelled);
+        assert_eq!(TargetReached.merge(Completed), TargetReached);
+        assert_eq!(DeadlineExceeded.merge(Cancelled), Cancelled);
+        assert_eq!(Cancelled.merge(TargetReached), Cancelled);
+        assert_eq!(Completed.merge(Completed), Completed);
+        for r in [Completed, Cancelled, DeadlineExceeded, TargetReached] {
+            assert_eq!(StopReason::from_code(r.code()).unwrap(), r);
+        }
+        assert!(StopReason::from_code(9).is_err());
+    }
+
+    #[test]
+    fn token_flags_and_policy() {
+        let t = ControlToken::new();
+        assert!(!t.is_cancelled());
+        t.cancel();
+        assert!(t.is_cancelled() && !t.is_killed());
+        let ctl = RunControl {
+            token: t,
+            stop: StopPolicy::new().target_error(0.5),
+            deadline: None,
+            checkpoint: None,
+            resume: None,
+            fault_at: None,
+            cancellable: true,
+        };
+        let f = ctl.local_flags(0.4);
+        assert_eq!(f, [1.0, 0.0, 1.0]);
+        let f = ctl.local_flags(f64::NAN);
+        assert_eq!(f[2], 0.0, "NaN error must not trigger the target");
+        assert_eq!(ctl.poll_local(0), Some(StopReason::Cancelled));
+    }
+
+    #[test]
+    fn checkpoint_cadence() {
+        let mut ctl = RunControl::unsupervised();
+        assert!(!ctl.should_checkpoint(4));
+        ctl.checkpoint = Some(CheckpointCfg { every: 4, path: "x".into() });
+        assert!(ctl.should_checkpoint(4) && ctl.should_checkpoint(8));
+        assert!(!ctl.should_checkpoint(3));
+    }
+}

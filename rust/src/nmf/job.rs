@@ -64,12 +64,28 @@
 //! assert_eq!(out.u.rows(), 40);
 //! ```
 //!
+//! ## Supervised lifecycle
+//!
+//! A job can also run **supervised**: [`Job::spawn`] starts it on a
+//! background thread and returns a [`JobHandle`] with `cancel()` (clean,
+//! within one iteration), `kill()` (abortive, unblocks stuck transport
+//! reads), `wait()`/`try_wait()`, and `drain_progress()`. The builder's
+//! control knobs — [`JobBuilder::stop`] (wall-clock deadline and/or
+//! target relative error), [`JobBuilder::checkpoint_every`] and
+//! [`JobBuilder::resume_from`] — apply to blocking and spawned runs
+//! alike; a checkpointed job that is interrupted and resumed produces
+//! factors **bit-identical** to the same job run uninterrupted (the
+//! iteration counter is the full RNG cursor — see
+//! [`crate::nmf::control`]).
+//!
 //! Misuse — a missing algorithm or data source, a shard directory built
 //! for a different cluster size, an asynchronous run with fewer than two
-//! parties — returns a typed [`crate::error::Error`] from
-//! [`JobBuilder::build`] / [`Job::run`]; it never panics.
+//! parties, checkpointing a secure protocol — returns a typed
+//! [`crate::error::Error`] from [`JobBuilder::build`] / [`Job::run`]; it
+//! never panics.
 
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::algos::{
@@ -83,6 +99,7 @@ use crate::dist::{CommModel, CommStats, NodeCtx};
 use crate::error::{Context, Result};
 use crate::linalg::{Mat, Matrix};
 use crate::metrics::Series;
+use crate::nmf::control::{CheckpointCfg, ControlToken, RunControl, StopPolicy, StopReason};
 use crate::nmf::{init_factors_from, rel_error};
 use crate::rng::{Role, StreamRng};
 use crate::secure::asyn::{self, AsynClientOutput, AsynOptions};
@@ -115,6 +132,12 @@ pub struct Outcome {
     /// bytes, load time). Empty when every rank reads a shared
     /// caller-materialised matrix ([`DataSource::Full`]).
     pub loads: Vec<LoadStats>,
+    /// Why the run ended: full iteration budget, cooperative cancellation,
+    /// wall-clock deadline, or convergence to the target error.
+    pub stop_reason: StopReason,
+    /// Rank-failure retries consumed before this outcome (only the
+    /// multi-process `dsanls launch` path retries; in-process jobs are 0).
+    pub retries: usize,
 }
 
 impl Outcome {
@@ -139,8 +162,8 @@ impl Outcome {
         rel_error(m, &self.u, &self.v)
     }
 
-    /// View as the legacy [`crate::algos::DistRun`] (deprecated-shim
-    /// compatibility).
+    /// View as the legacy [`crate::algos::DistRun`] (compatibility for
+    /// code that still consumes the old result shape).
     pub fn into_dist_run(self) -> crate::algos::DistRun {
         crate::algos::DistRun {
             u: self.u,
@@ -151,8 +174,8 @@ impl Outcome {
         }
     }
 
-    /// View as the legacy [`crate::secure::SecureRun`] (deprecated-shim
-    /// compatibility).
+    /// View as the legacy [`crate::secure::SecureRun`] (compatibility for
+    /// code that still consumes the old result shape).
     pub fn into_secure_run(self) -> crate::secure::SecureRun {
         crate::secure::SecureRun {
             u: self.u,
@@ -202,6 +225,35 @@ impl Algo {
                 | SecureAlgo::SynSsdUv),
             ) => Algo::Syn(syn_options(cfg), algo),
             ConfigAlgorithm::Secure(algo) => Algo::Asyn(asyn_options(cfg), algo),
+        }
+    }
+
+    /// Checkpoint identity of this algorithm — `(tag, seed, k, iterations,
+    /// params fingerprint)`, everything a resume must match. The single
+    /// source both the in-process job and the `dsanls worker` CLI resolve
+    /// checkpoints through; a typed error for the secure family, which
+    /// refuses checkpointing (party-private state stays on the parties).
+    pub fn ckpt_identity(&self) -> Result<(&'static str, u64, usize, usize, u64)> {
+        match self {
+            Algo::Dsanls(o) => Ok((
+                algos::dsanls::CKPT_TAG,
+                o.seed,
+                o.rank,
+                o.iterations,
+                algos::dsanls::ckpt_params(o),
+            )),
+            Algo::DistAnls(o) => Ok((
+                algos::dist_anls::CKPT_TAG,
+                o.seed,
+                o.rank,
+                o.iterations,
+                algos::dist_anls::ckpt_params(o),
+            )),
+            _ => crate::bail!(
+                "checkpoint/resume supports DSANLS and the MPI-FAUN baselines only — the \
+                 secure protocols keep party-private state on the parties, and a central \
+                 snapshot would leak exactly that"
+            ),
         }
     }
 }
@@ -263,6 +315,9 @@ pub struct RankEnv<'a> {
     pub observer: Option<&'a ObserverFn>,
     /// Outbound-payload audit log (secure protocols).
     pub audit: Option<&'a AuditLog>,
+    /// The run's control plane (stop policy, cancellation token,
+    /// checkpoint/resume) — shared by every rank of the run.
+    pub ctl: &'a RunControl,
 }
 
 /// What one rank returns — the union of the per-algorithm node outputs.
@@ -284,6 +339,17 @@ pub enum RankOutput {
 }
 
 impl RankOutput {
+    /// The stop reason this rank's loop ended with (the parameter server
+    /// has none of its own — it serves until its clients leave).
+    pub fn stop(&self) -> StopReason {
+        match self {
+            RankOutput::Node(o) => o.stop,
+            RankOutput::Syn(o) => o.stop,
+            RankOutput::AsynClient(o) => o.stop,
+            RankOutput::AsynServer { .. } => StopReason::Completed,
+        }
+    }
+
     fn into_node(self, rank: usize) -> Result<NodeOutput> {
         match self {
             RankOutput::Node(o) => Ok(o),
@@ -444,6 +510,7 @@ impl Algorithm for Algo {
                     env.input,
                     o,
                     env.observer,
+                    env.ctl,
                 )))
             }
             Algo::DistAnls(o) => {
@@ -453,6 +520,7 @@ impl Algorithm for Algo {
                     env.input,
                     o,
                     env.observer,
+                    env.ctl,
                 )))
             }
             Algo::Syn(o, v) => {
@@ -465,6 +533,7 @@ impl Algorithm for Algo {
                     *v,
                     env.audit,
                     env.observer,
+                    env.ctl,
                 )))
             }
             Algo::Asyn(o, v) => {
@@ -478,11 +547,14 @@ impl Algorithm for Algo {
                     init_factors_from(fro_sq, rows, cols, o.rank, &mut rng)
                 };
                 if env.rank == asyn::server_rank(o.nodes) {
-                    Ok(RankOutput::AsynServer { u: asyn::server_loop(comm, o, u0), fro_sq })
+                    Ok(RankOutput::AsynServer {
+                        u: asyn::server_loop(comm, o, u0, env.ctl),
+                        fro_sq,
+                    })
                 } else {
                     let v0 = v_full.row_block(env.cols.range(env.rank));
                     Ok(RankOutput::AsynClient(asyn::client_rank(
-                        comm, env.rank, env.input, env.cols, o, *v, u0, v0, env.audit,
+                        comm, env.rank, env.input, env.cols, o, *v, u0, v0, env.audit, env.ctl,
                     )))
                 }
             }
@@ -496,6 +568,13 @@ impl Algorithm for Algo {
         loads: Vec<LoadStats>,
         observer: Option<&ObserverFn>,
     ) -> Result<Outcome> {
+        // run-level stop reason: the collectively agreed one for the
+        // synchronous families (identical on every rank), the most decisive
+        // across clients for the asynchronous ones
+        let stop_reason = outputs
+            .iter()
+            .map(RankOutput::stop)
+            .fold(StopReason::Completed, StopReason::merge);
         match self {
             Algo::Dsanls(_) | Algo::DistAnls(_) => {
                 let (k, iters) = match self {
@@ -508,7 +587,10 @@ impl Algorithm for Algo {
                     .enumerate()
                     .map(|(r, o)| o.into_node(r))
                     .collect::<Result<Vec<_>>>()?;
-                let run = algos::reduce_outputs(outs, k, iters);
+                // sec_per_iter divides by the iterations the clock actually
+                // covers (early stop / resume), not the configured budget
+                let span = algos::trace_span(&outs[0].trace, iters);
+                let run = algos::reduce_outputs(outs, k, span);
                 Ok(Outcome {
                     label,
                     trace: run.trace,
@@ -517,6 +599,8 @@ impl Algorithm for Algo {
                     u: run.u,
                     v: run.v,
                     loads,
+                    stop_reason,
+                    retries: 0,
                 })
             }
             Algo::Syn(o, _) => {
@@ -525,7 +609,8 @@ impl Algorithm for Algo {
                     .enumerate()
                     .map(|(r, out)| out.into_syn(r))
                     .collect::<Result<Vec<_>>>()?;
-                let run = syn::assemble_syn(outs, o.rank, o.t1 * o.t2);
+                let span = algos::trace_span(&outs[0].trace, o.t1 * o.t2);
+                let run = syn::assemble_syn(outs, o.rank, span);
                 Ok(Outcome {
                     label,
                     trace: run.trace,
@@ -534,6 +619,8 @@ impl Algorithm for Algo {
                     u: run.u,
                     v: run.v,
                     loads,
+                    stop_reason,
+                    retries: 0,
                 })
             }
             Algo::Asyn(o, _) => {
@@ -571,6 +658,8 @@ impl Algorithm for Algo {
                     u: run.u,
                     v: run.v,
                     loads,
+                    stop_reason,
+                    retries: 0,
                 })
             }
         }
@@ -668,8 +757,10 @@ pub fn asyn_options(cfg: &ExperimentConfig) -> AsynOptions {
 // ---------------------------------------------------------------------------
 
 /// A fully-specified experiment: algorithm × data source × transport, plus
-/// the optional knobs (thread cap, secure partition, observer, audit).
-/// Build one with [`Job::builder`].
+/// the optional knobs (thread cap, secure partition, observer, audit) and
+/// the supervision plane (stop policy, checkpoint/resume, control token).
+/// Build one with [`Job::builder`]; run it blocking with [`Job::run`] or
+/// supervised in the background with [`Job::spawn`].
 pub struct Job<'a> {
     algo: Algo,
     data: DataSource<'a>,
@@ -678,11 +769,15 @@ pub struct Job<'a> {
     partition: Option<Partition>,
     observer: Option<&'a ObserverFn>,
     audit: Option<&'a AuditLog>,
+    stop: StopPolicy,
+    checkpoint: Option<CheckpointCfg>,
+    resume: Option<PathBuf>,
+    token: Arc<ControlToken>,
 }
 
 /// Builder for [`Job`] — `algorithm` and `data` are required, everything
 /// else has sensible defaults ([`Backend::Sim`], derived thread cap,
-/// uniform partition, no observer/audit).
+/// uniform partition, no observer/audit, no early stopping).
 pub struct JobBuilder<'a> {
     algo: Option<Algo>,
     data: Option<DataSource<'a>>,
@@ -691,6 +786,9 @@ pub struct JobBuilder<'a> {
     partition: Option<Partition>,
     observer: Option<&'a ObserverFn>,
     audit: Option<&'a AuditLog>,
+    stop: StopPolicy,
+    checkpoint: Option<CheckpointCfg>,
+    resume: Option<PathBuf>,
 }
 
 impl<'a> Job<'a> {
@@ -704,10 +802,62 @@ impl<'a> Job<'a> {
             partition: None,
             observer: None,
             audit: None,
+            stop: StopPolicy::default(),
+            checkpoint: None,
+            resume: None,
         }
     }
 
-    /// Run the job and assemble the [`Outcome`].
+    /// The job's control token — cancel it from another thread while
+    /// [`Job::run`] blocks ([`Job::spawn`] hands the same token back on
+    /// its [`JobHandle`]). Clone it **before** calling `run()`: a run that
+    /// starts with no outstanding token clones knows nothing can cancel it
+    /// and skips the per-iteration cancellation poll.
+    pub fn control_token(&self) -> Arc<ControlToken> {
+        self.token.clone()
+    }
+
+    /// Resolve the run's control plane: anchor the deadline, validate the
+    /// checkpoint cadence, load + validate the resume checkpoint.
+    fn resolve_control(&self, rows: usize, cols: usize) -> Result<RunControl> {
+        let mut resume = None;
+        if self.checkpoint.is_some() || self.resume.is_some() {
+            let (tag, seed, k, iterations, params) = self.algo.ckpt_identity()?;
+            if let Some(c) = &self.checkpoint {
+                if c.every == 0 {
+                    crate::bail!("checkpoint_every needs a cadence ≥ 1 iteration");
+                }
+                crate::nmf::control::validate_checkpoint_path(&c.path)?;
+            }
+            if let Some(path) = &self.resume {
+                resume = Some(crate::nmf::control::load_resume(
+                    path, tag, seed, k, rows, cols, params, iterations,
+                )?);
+            }
+        }
+        Ok(RunControl {
+            // cancellation is only possible if the token escaped this Job
+            // (via control_token() or a JobHandle clone). A plain
+            // JobBuilder::run() holds the only reference, so the
+            // per-iteration stop poll can skip its collective — on the TCP
+            // backend that is a real round trip per iteration. Grab the
+            // token BEFORE calling run(): the decision is made here, once.
+            cancellable: Arc::strong_count(&self.token) > 1,
+            token: self.token.clone(),
+            stop: self.stop,
+            deadline: RunControl::deadline_from(&self.stop),
+            checkpoint: self.checkpoint.clone(),
+            resume,
+            fault_at: None,
+        })
+    }
+
+    /// Run the job **blocking** and assemble the [`Outcome`]. Semantically
+    /// `spawn()` + `wait()` — implemented in place so borrowed data
+    /// sources ([`DataSource::Full`]) and borrowed observers need no
+    /// clone. The control plane is fully honoured: another thread holding
+    /// [`Job::control_token`] can cancel, and stop policies, checkpoints
+    /// and resume behave identically to a spawned job.
     pub fn run(&self) -> Result<Outcome> {
         self.algo.validate()?;
         let nodes = self.algo.nodes();
@@ -715,10 +865,14 @@ impl<'a> Job<'a> {
             crate::bail!("threads(0) is not a valid per-rank cap");
         }
 
-        // resolve the global shape (and fail fast on a mismatched shard dir)
-        let (rows, cols) = match &self.data {
-            DataSource::Full(m) => (m.rows(), m.cols()),
-            DataSource::SyntheticWindow { dataset, scale, .. } => dataset.scaled_shape(*scale),
+        // resolve the global shape (and fail fast on a mismatched shard
+        // dir); shard manifests carry their own column partition
+        let (rows, cols, shard_cols) = match &self.data {
+            DataSource::Full(m) => (m.rows(), m.cols(), None),
+            DataSource::SyntheticWindow { dataset, scale, .. } => {
+                let (r, c) = dataset.scaled_shape(*scale);
+                (r, c, None)
+            }
             DataSource::ShardDir(dir) => {
                 let man = shard::read_manifest(dir)?;
                 if man.nodes != nodes {
@@ -729,7 +883,11 @@ impl<'a> Job<'a> {
                         man.nodes
                     );
                 }
-                (man.rows, man.cols)
+                man.require_uniform_for(
+                    dir,
+                    matches!(self.algo, Algo::Syn(..) | Algo::Asyn(..)),
+                )?;
+                (man.rows, man.cols, Some(man.col_partition()))
             }
         };
 
@@ -748,12 +906,12 @@ impl<'a> Job<'a> {
                         p.total
                     );
                 }
-                if matches!(self.data, DataSource::ShardDir(_)) {
-                    let u = uniform_partition(cols, nodes);
-                    if (0..nodes).any(|r| p.range(r) != u.range(r)) {
+                if let Some(sp) = &shard_cols {
+                    if p != sp {
                         crate::bail!(
-                            "shard directories are uniform-partitioned; skewed secure runs \
-                             must use DataSource::SyntheticWindow or DataSource::Full"
+                            "secure partition does not match the shard directory's own \
+                             column partition — shard directories carry theirs in the \
+                             manifest; drop .secure_partition(..)"
                         );
                     }
                 }
@@ -762,17 +920,39 @@ impl<'a> Job<'a> {
             (Some(_), _) => {
                 crate::bail!("secure_partition only applies to the secure protocols")
             }
-            (None, _) => uniform_partition(cols, nodes),
+            (None, _) => shard_cols.unwrap_or_else(|| uniform_partition(cols, nodes)),
         };
 
+        let ctl = self.resolve_control(rows, cols)?;
         let label = match self.backend {
             Backend::Sim => self.algo.label(),
             Backend::Tcp { .. } => format!("{}/tcp", self.algo.label()),
         };
-        let res = Resolved { job: self, rows, cols, cols_part };
-        let results = match self.backend {
-            Backend::Sim => drive_sim(&res)?,
-            Backend::Tcp { port } => drive_tcp(&res, port)?,
+        // drop-guard: whether the drivers return, error or PANIC (a killed
+        // job panics out of its collectives), the transport interrupters
+        // must come off the token so a long-lived token (or JobHandle)
+        // does not pin this run's inbox buffers
+        struct ClearInterrupters<'t>(&'t ControlToken);
+        impl Drop for ClearInterrupters<'_> {
+            fn drop(&mut self) {
+                self.0.clear_interrupters();
+            }
+        }
+        let _clear = ClearInterrupters(&self.token);
+
+        let res = Resolved { job: self, rows, cols, cols_part, ctl: &ctl };
+        // a rank panic — most importantly the one ControlToken::kill()
+        // provokes by interrupting blocked reads — must surface as the
+        // documented typed error, not unwind into the caller's thread
+        let driven = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || match self.backend {
+                Backend::Sim => drive_sim(&res),
+                Backend::Tcp { port } => drive_tcp(&res, port),
+            },
+        ));
+        let results = match driven {
+            Ok(r) => r?,
+            Err(panic) => return Err(panic_to_error(panic, &self.token)),
         };
         let mut outputs = Vec::with_capacity(results.len());
         let mut loads = Vec::new();
@@ -781,6 +961,193 @@ impl<'a> Job<'a> {
             loads.extend(r.load);
         }
         self.algo.reduce(outputs, label, loads, self.observer)
+    }
+
+    /// Start the job on a **background thread** and return a supervising
+    /// [`JobHandle`] offering cancellation, `wait`/`try_wait`, and live
+    /// progress draining.
+    ///
+    /// Ownership: a spawned job must own everything it touches, so a
+    /// [`DataSource::Full`] matrix is **cloned** once here (synthetic
+    /// windows and shard directories are already owned descriptions).
+    /// Borrowed hooks cannot cross the thread boundary: progress streams
+    /// through [`JobHandle::drain_progress`] instead of a builder
+    /// observer, and the audit harness requires the blocking [`Job::run`].
+    pub fn spawn(self) -> Result<JobHandle> {
+        self.algo.validate()?; // fail fast, before a thread exists
+        if self.observer.is_some() {
+            crate::bail!(
+                "spawned jobs stream progress through JobHandle::drain_progress() — drop \
+                 .observer(..) (it borrows from the caller) or use the blocking run()"
+            );
+        }
+        if self.audit.is_some() {
+            crate::bail!(
+                "the audit harness borrows from the caller; use the blocking run() for \
+                 audited jobs"
+            );
+        }
+        let token = self.token.clone();
+        let events: Arc<Mutex<Vec<ProgressEvent>>> = Arc::new(Mutex::new(Vec::new()));
+        let data = OwnedData::from_source(&self.data);
+        let Job { algo, backend, threads, partition, stop, checkpoint, resume, .. } = self;
+        let ev = events.clone();
+        let tok = token.clone();
+        let thread = std::thread::Builder::new()
+            .name("dsanls-job".into())
+            .spawn(move || -> Result<Outcome> {
+                let obs = move |e: &ProgressEvent| ev.lock().unwrap().push(*e);
+                let job = Job {
+                    algo,
+                    data: data.as_source(),
+                    backend,
+                    threads,
+                    partition,
+                    observer: Some(&obs),
+                    audit: None,
+                    stop,
+                    checkpoint,
+                    resume,
+                    token: tok,
+                };
+                // a panic outside the drivers (run() already contains rank
+                // panics) must reach wait() as a typed error, not a dead
+                // thread
+                match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| job.run())) {
+                    Ok(out) => out,
+                    Err(panic) => Err(panic_to_error(panic, &job.token)),
+                }
+            })
+            .context("spawning the job thread")?;
+        Ok(JobHandle { token, events, thread: Some(thread) })
+    }
+}
+
+/// Map a caught rank panic onto the typed error a supervised run reports
+/// — shared by the blocking ([`Job::run`]) and spawned ([`Job::spawn`])
+/// paths, so `kill()` panics get the same "job killed" framing on both.
+fn panic_to_error(
+    panic: Box<dyn std::any::Any + Send>,
+    token: &ControlToken,
+) -> crate::error::Error {
+    let msg = panic
+        .downcast_ref::<String>()
+        .cloned()
+        .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .unwrap_or_else(|| "job panicked".into());
+    if token.is_killed() {
+        crate::error::Error::msg(format!("job killed: {msg}"))
+    } else {
+        crate::error::Error::msg(msg)
+    }
+}
+
+/// Owned mirror of [`DataSource`] — what a spawned job carries across the
+/// thread boundary.
+enum OwnedData {
+    Full(Matrix),
+    Synthetic { dataset: Dataset, seed: u64, scale: f64 },
+    ShardDir(PathBuf),
+}
+
+impl OwnedData {
+    fn from_source(d: &DataSource<'_>) -> OwnedData {
+        match d {
+            DataSource::Full(m) => OwnedData::Full((*m).clone()),
+            DataSource::SyntheticWindow { dataset, seed, scale } => {
+                OwnedData::Synthetic { dataset: *dataset, seed: *seed, scale: *scale }
+            }
+            DataSource::ShardDir(p) => OwnedData::ShardDir(p.clone()),
+        }
+    }
+
+    fn as_source(&self) -> DataSource<'_> {
+        match self {
+            OwnedData::Full(m) => DataSource::Full(m),
+            OwnedData::Synthetic { dataset, seed, scale } => {
+                DataSource::SyntheticWindow { dataset: *dataset, seed: *seed, scale: *scale }
+            }
+            OwnedData::ShardDir(p) => DataSource::ShardDir(p.clone()),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// JobHandle: the supervising side of a spawned job
+// ---------------------------------------------------------------------------
+
+/// Handle to a job running on a background thread ([`Job::spawn`]).
+///
+/// * [`JobHandle::cancel`] — cooperative: every rank observes the shared
+///   [`ControlToken`] at its next iteration boundary and the cluster
+///   agrees collectively, so the job returns within **one iteration**
+///   with [`StopReason::Cancelled`] and the factors computed so far.
+/// * [`JobHandle::kill`] — abortive: interrupts blocked transport reads
+///   (TCP and simulated); the job returns an error promptly and partial
+///   results are lost.
+/// * [`JobHandle::drain_progress`] — every traced sample recorded since
+///   the last drain, without blocking the run.
+pub struct JobHandle {
+    token: Arc<ControlToken>,
+    events: Arc<Mutex<Vec<ProgressEvent>>>,
+    thread: Option<std::thread::JoinHandle<Result<Outcome>>>,
+}
+
+impl JobHandle {
+    /// Request cooperative cancellation (bounded by one iteration).
+    pub fn cancel(&self) {
+        self.token.cancel();
+    }
+
+    /// Abort: cancel *and* interrupt blocked transport reads. The job
+    /// returns an error; use [`JobHandle::cancel`] for a clean outcome.
+    pub fn kill(&self) {
+        self.token.kill();
+    }
+
+    /// The shared control token (e.g. to hand to a signal handler).
+    pub fn token(&self) -> Arc<ControlToken> {
+        self.token.clone()
+    }
+
+    /// Has the job finished (successfully or not)?
+    pub fn is_finished(&self) -> bool {
+        self.thread.as_ref().map_or(true, |t| t.is_finished())
+    }
+
+    /// Drain every progress event recorded since the last drain (the
+    /// spawned job's replacement for a builder observer).
+    pub fn drain_progress(&self) -> Vec<ProgressEvent> {
+        std::mem::take(&mut *self.events.lock().unwrap())
+    }
+
+    fn join(&mut self) -> Result<Outcome> {
+        let thread = self
+            .thread
+            .take()
+            .context("the job was already waited on")?;
+        match thread.join() {
+            Ok(res) => res,
+            Err(_) => Err(crate::err!("job thread panicked")),
+        }
+    }
+
+    /// Block until the job finishes and return its [`Outcome`].
+    pub fn wait(mut self) -> Result<Outcome> {
+        self.join()
+    }
+
+    /// Non-blocking check: `Ok(Some(outcome))` once the job finished,
+    /// `Ok(None)` while it is still running. After it returns an outcome
+    /// (or error) the handle is spent.
+    pub fn try_wait(&mut self) -> Result<Option<Outcome>> {
+        if self.thread.is_none() {
+            crate::bail!("the job was already waited on");
+        }
+        if !self.is_finished() {
+            return Ok(None);
+        }
+        self.join().map(Some)
     }
 }
 
@@ -845,6 +1212,42 @@ impl<'a> JobBuilder<'a> {
         self
     }
 
+    /// Early-stopping policy (wall-clock budget and/or convergence
+    /// target) on top of the algorithm's iteration budget.
+    pub fn stop(mut self, policy: StopPolicy) -> Self {
+        self.stop = policy;
+        self
+    }
+
+    /// Convenience: stop once this many wall-clock seconds elapsed.
+    pub fn max_seconds(mut self, secs: f64) -> Self {
+        self.stop.max_seconds = Some(secs);
+        self
+    }
+
+    /// Convenience: stop once the traced relative error reaches `err`
+    /// (pair with a non-zero `eval_every` — only traced samples count).
+    pub fn target_error(mut self, err: f64) -> Self {
+        self.stop.target_error = Some(err);
+        self
+    }
+
+    /// Snapshot rank-0-assembled factors to `path` every `every`
+    /// iterations (atomic write; DSANLS and the baselines only). An
+    /// interrupted job resumes from the file with
+    /// [`JobBuilder::resume_from`] to bit-identical factors.
+    pub fn checkpoint_every(mut self, every: usize, path: impl Into<PathBuf>) -> Self {
+        self.checkpoint = Some(CheckpointCfg { every, path: path.into() });
+        self
+    }
+
+    /// Resume from a checkpoint written by [`JobBuilder::checkpoint_every`]
+    /// (validated against this job's algorithm, seed, rank and shape).
+    pub fn resume_from(mut self, path: impl Into<PathBuf>) -> Self {
+        self.resume = Some(path.into());
+        self
+    }
+
     /// Validate the required axes and produce the [`Job`].
     pub fn build(self) -> Result<Job<'a>> {
         let algo = self
@@ -861,12 +1264,21 @@ impl<'a> JobBuilder<'a> {
             partition: self.partition,
             observer: self.observer,
             audit: self.audit,
+            stop: self.stop,
+            checkpoint: self.checkpoint,
+            resume: self.resume,
+            token: ControlToken::new(),
         })
     }
 
     /// [`JobBuilder::build`] + [`Job::run`] in one call.
     pub fn run(self) -> Result<Outcome> {
         self.build()?.run()
+    }
+
+    /// [`JobBuilder::build`] + [`Job::spawn`] in one call.
+    pub fn spawn(self) -> Result<JobHandle> {
+        self.build()?.spawn()
     }
 }
 
@@ -879,6 +1291,9 @@ struct Resolved<'j, 'a> {
     rows: usize,
     cols: usize,
     cols_part: Partition,
+    /// The run's resolved control plane, shared by reference across every
+    /// rank (which is what makes the per-iteration stop poll agree).
+    ctl: &'j RunControl,
 }
 
 /// One rank's result plus its data-plane statistics (when the rank loaded
@@ -975,6 +1390,7 @@ fn rank_main<C: Communicator>(
         cols: &res.cols_part,
         observer: if rank == 0 { job.observer } else { None },
         audit: job.audit,
+        ctl: res.ctl,
     };
     let out = algo.run_rank(comm, env)?;
     Ok(RankResult { out, load })
@@ -988,6 +1404,11 @@ fn drive_sim(res: &Resolved<'_, '_>) -> Result<Vec<RankResult>> {
     let ranks = res.job.algo.cluster_ranks();
     let nodes = res.job.algo.nodes();
     let cluster = SimCluster::new(ranks);
+    {
+        // hard-cancel (kill) support: unblock readers waiting on the mesh
+        let c = cluster.clone();
+        res.ctl.token.register_interrupter(Box::new(move || c.interrupt_all()));
+    }
     if ranks == 1 {
         // single rank: run inline with full intra-node parallelism
         if let Some(t) = res.job.threads {
@@ -1026,6 +1447,8 @@ fn drive_tcp(res: &Resolved<'_, '_>, port: u16) -> Result<Vec<RankResult>> {
             s.spawn(move || {
                 let run = (|| {
                     let comm = TcpComm::connect(&addr, rank, ranks, &TcpOptions::default())?;
+                    // hard-cancel (kill) support: unblock this rank's reads
+                    res.ctl.token.register_interrupter(Box::new(comm.interrupter()));
                     apply_thread_cap(res.job.threads, nodes);
                     let value = rank_main(res, comm, rank);
                     crate::parallel::set_local_threads(None);

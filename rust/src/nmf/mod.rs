@@ -7,13 +7,15 @@
 //! builder composing every algorithm × transport × data source.
 
 mod anls;
+pub mod control;
 mod init;
 pub mod job;
 mod loss;
 
 pub use anls::{Anls, AnlsOptions, Sanls, SanlsOptions};
+pub use control::{ControlToken, StopPolicy, StopReason};
 pub use init::{init_factors, init_factors_from, init_scale, init_scale_from};
-pub use job::{Algo, Algorithm, Backend, DataSource, Job, JobBuilder, Outcome};
+pub use job::{Algo, Algorithm, Backend, DataSource, Job, JobBuilder, JobHandle, Outcome};
 pub use loss::{rel_error, rel_error_parts};
 
 use crate::linalg::Mat;

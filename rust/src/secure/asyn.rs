@@ -37,6 +37,7 @@ use crate::data::partition::Partition;
 use crate::data::shard::NodeInput;
 use crate::dist::{CommModel, CommStats};
 use crate::linalg::{Mat, Matrix};
+use crate::nmf::control::{RunControl, StopReason};
 use crate::nmf::{rel_error_parts, MuSchedule};
 use crate::rng::StreamRng;
 use crate::sketch::{SketchKind, SketchMatrix};
@@ -97,30 +98,9 @@ pub struct AsynClientOutput {
     pub samples: Vec<(f64, f64, usize)>,
     pub stats: CommStats,
     pub final_clock: f64,
-}
-
-/// Run Asyn-SD (`variant = AsynSd`) or Asyn-SSD-V (`variant = AsynSsdV`)
-/// on the in-process simulated transport.
-#[deprecated(
-    since = "0.2.0",
-    note = "use `nmf::job::Job::builder().algorithm(Algo::Asyn(opts, variant))` instead"
-)]
-pub fn run_asyn(
-    m: &Matrix,
-    cols: &Partition,
-    opts: &AsynOptions,
-    variant: SecureAlgo,
-    audit: Option<&AuditLog>,
-) -> SecureRun {
-    assert!(matches!(variant, SecureAlgo::AsynSd | SecureAlgo::AsynSsdV));
-    let mut b = crate::nmf::job::Job::builder()
-        .algorithm(crate::nmf::job::Algo::Asyn(opts.clone(), variant))
-        .data(crate::nmf::job::DataSource::Full(m))
-        .secure_partition(cols.clone());
-    if let Some(a) = audit {
-        b = b.audit(a);
-    }
-    b.run().unwrap_or_else(|e| panic!("{} job failed: {e}", variant.name())).into_secure_run()
+    /// Why this client's round loop ended (clients stop independently —
+    /// the run-level reason is the merge across clients).
+    pub stop: StopReason,
 }
 
 /// Merge the server factor and per-client outputs into a [`SecureRun`]
@@ -150,20 +130,43 @@ pub fn assemble_asyn(
 /// The parameter server (Alg. 6), on rank [`server_rank`] of any transport.
 /// Serves relaxation-mixed `U` replies until every client sent
 /// [`TAG_SHUTDOWN`]; returns the final server factor.
-pub fn server_loop<C: Communicator>(mut comm: C, opts: &AsynOptions, u_init: Mat) -> Mat {
+///
+/// **Convergence aggregation (control plane)**: each client push carries
+/// one trailing scalar — the client's latest `residual²/‖M‖²` fraction.
+/// The asynchronous protocols have no collective in which the parties
+/// could agree on a global error, but every fraction flows through the
+/// server, so the server is the one place the global relative error
+/// `√(Σ_r fraction_r)` exists *during* the run. When the run's
+/// [`StopPolicy`](crate::nmf::control::StopPolicy) sets a target error
+/// (or the token is cancelled), the server raises the stop flag it
+/// appends to every reply, and clients finish their current round and
+/// shut down. Only scalar residuals travel — the same disclosure the
+/// synchronous protocols already make for their error traces.
+pub fn server_loop<C: Communicator>(
+    mut comm: C,
+    opts: &AsynOptions,
+    u_init: Mat,
+    ctl: &RunControl,
+) -> Mat {
     let parties = comm.nodes() - 1;
     let mut u = u_init;
+    let u_len = u.data().len();
     // per-client done flags so a client counts once, whether it left via
     // TAG_SHUTDOWN or a dead link detected on reply
     let mut done = vec![false; parties];
     let mut live = parties;
     let mut t = 0usize;
+    // latest residual fraction per client (NaN until first report)
+    let mut latest = vec![f64::NAN; parties];
     fn finish(done: &mut [bool], live: &mut usize, who: usize) {
         if who < done.len() && !done[who] {
             done[who] = true;
             *live -= 1;
         }
     }
+    // reply buffer reused across rounds: `U` prefix overwritten in place,
+    // stop flag in the last lane (no per-reply factor-sized allocation)
+    let mut reply = vec![0.0f32; u_len + 1];
     while live > 0 {
         let p = comm.recv_any().unwrap_or_else(|e| panic!("server inbox closed: {e}"));
         if p.tag == TAG_SHUTDOWN {
@@ -172,12 +175,25 @@ pub fn server_loop<C: Communicator>(mut comm: C, opts: &AsynOptions, u_init: Mat
         }
         // relaxation: U ← (1−ω)U + ω·U_(r)
         let omega = (opts.omega0 / (1.0 + t as f64 / opts.tau)) as f32;
-        for (dst, src) in u.data_mut().iter_mut().zip(p.payload.iter()) {
+        for (dst, src) in u.data_mut().iter_mut().zip(p.payload.iter().take(u_len)) {
             *dst = (1.0 - omega) * *dst + omega * src;
         }
+        if p.from < parties {
+            if let Some(&frac) = p.payload.get(u_len) {
+                latest[p.from] = frac as f64;
+            }
+        }
         t += 1;
-        // reply with the latest server copy, echoing tag and clock stamp
-        if comm.send(p.from, p.tag, p.sent_at, u.data()).is_err() {
+        // global error estimate from the clients' scalar fractions
+        let converged = ctl.stop.target_error.is_some_and(|target| {
+            latest.iter().all(|f| f.is_finite())
+                && latest.iter().sum::<f64>().max(0.0).sqrt() <= target
+        });
+        let stop_flag = if converged || ctl.token.is_cancelled() { 1.0f32 } else { 0.0 };
+        // reply with the latest server copy + stop flag, echoing tag/clock
+        reply[..u_len].copy_from_slice(u.data());
+        reply[u_len] = stop_flag;
+        if comm.send(p.from, p.tag, p.sent_at, &reply).is_err() {
             // client died between push and reply — retire it (at most once)
             finish(&mut done, &mut live, p.from);
         }
@@ -202,10 +218,12 @@ pub fn client_rank<C: Communicator>(
     u0: Mat,
     v0: Mat,
     audit: Option<&AuditLog>,
+    ctl: &RunControl,
 ) -> AsynClientOutput {
     let (m_rows, _) = input.dims();
+    let fro_sq = input.fro_sq();
     let m_col = input.col_block(cols.range(party));
-    client_body(comm, party, &m_col, m_rows, opts, variant, u0, v0, audit)
+    client_body(comm, party, &m_col, m_rows, fro_sq, opts, variant, u0, v0, audit, ctl)
 }
 
 /// Protocol body over the client's resident column block.
@@ -215,11 +233,13 @@ fn client_body<C: Communicator>(
     party: usize,
     m_col: &Matrix,
     m_rows: usize,
+    m_fro_sq: f64,
     opts: &AsynOptions,
     variant: SecureAlgo,
     u0: Mat,
     v0: Mat,
     audit: Option<&AuditLog>,
+    ctl: &RunControl,
 ) -> AsynClientOutput {
     let server = server_rank(comm.nodes() - 1);
     let sketch_v = variant == SecureAlgo::AsynSsdV;
@@ -239,12 +259,20 @@ fn client_body<C: Communicator>(
     let mut stats = CommStats::default();
     let mut samples: Vec<(f64, f64, usize)> = Vec::new();
     let mut iters_done = 0usize;
+    let mut stop = StopReason::Completed;
+    let mut push = vec![0.0f32; u_local.data().len() + 1];
 
     // initial local residual
     let (_, r0) = rel_error_parts(m_col, &u_local, &v_block);
     samples.push((0.0, r0, 0));
 
     for round in 0..opts.rounds {
+        // communication-free stop poll: asynchronous clients stop
+        // independently (there is no collective to desync), between rounds
+        if let Some(reason) = ctl.poll_local(round) {
+            stop = reason;
+            break;
+        }
         let tick = Instant::now();
         for li in 0..opts.local_iters {
             let it = round * opts.local_iters + li;
@@ -297,18 +325,25 @@ fn client_body<C: Communicator>(
         clock += dt;
         stats.compute_time += dt;
 
-        // push U_(r), receive latest server U (Alg. 7 lines 8–9)
+        // push U_(r) + the latest residual fraction (the server's
+        // convergence aggregate), receive latest server U (Alg. 7 l. 8–9);
+        // the push buffer is reused across rounds (prefix overwritten)
+        let u_len = u_local.data().len();
+        let frac = samples.last().map_or(f64::NAN, |s| s.1 / m_fro_sq);
+        push[..u_len].copy_from_slice(u_local.data());
+        push[u_len] = frac as f32;
         if let Some(a) = audit {
-            a.record(party, "asyn/u-push", u_local.data());
+            a.record(party, "asyn/u-push", &push);
         }
-        let bytes = u_local.data().len() * 4;
-        comm.send(server, round as u64, clock, u_local.data())
+        let bytes = push.len() * 4;
+        comm.send(server, round as u64, clock, &push)
             .unwrap_or_else(|e| panic!("client {party}: push failed: {e}"));
         let reply = comm
             .recv_from(server)
             .unwrap_or_else(|e| panic!("client {party}: server hung up: {e}"));
-        debug_assert_eq!(reply.payload.len(), u_local.data().len());
-        u_local.data_mut().copy_from_slice(&reply.payload);
+        debug_assert_eq!(reply.payload.len(), u_len + 1);
+        u_local.data_mut().copy_from_slice(&reply.payload[..u_len]);
+        let server_stop = reply.payload.get(u_len).is_some_and(|&f| f > 0.5);
         let wire = 2.0 * opts.comm.p2p_time(bytes);
         clock += wire;
         stats.comm_time += wire;
@@ -319,9 +354,20 @@ fn client_body<C: Communicator>(
         // out-of-band residual sample (not timed)
         let (_, resid) = rel_error_parts(m_col, &u_local, &v_block);
         samples.push((clock, resid, iters_done));
+
+        if server_stop {
+            // the server saw the global error cross the target (or the
+            // token cancelled); finish this round and leave
+            stop = if ctl.token.is_cancelled() {
+                StopReason::Cancelled
+            } else {
+                StopReason::TargetReached
+            };
+            break;
+        }
     }
     let _ = comm.send(server, TAG_SHUTDOWN, clock, &[]);
-    AsynClientOutput { v_block, samples, stats, final_clock: clock }
+    AsynClientOutput { v_block, samples, stats, final_clock: clock, stop }
 }
 
 /// Merge per-client `(clock, residual², iters)` logs: at every event time,
@@ -357,8 +403,6 @@ fn merge_traces(outs: &[AsynClientOutput], m_fro_sq: f64) -> Vec<TracePoint> {
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the deprecated shims stay covered until removal
-
     use super::*;
     use crate::data::partition::{imbalanced_partition, uniform_partition};
     use crate::rng::Pcg64;
@@ -368,6 +412,26 @@ mod tests {
         let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
         let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
         Matrix::Dense(u.matmul_nt(&v))
+    }
+
+    /// Builder-backed shorthand (the deprecated free function is gone).
+    fn run_asyn(
+        m: &Matrix,
+        cols: &Partition,
+        opts: &AsynOptions,
+        variant: SecureAlgo,
+        audit: Option<&AuditLog>,
+    ) -> SecureRun {
+        let mut b = crate::nmf::job::Job::builder()
+            .algorithm(crate::nmf::job::Algo::Asyn(opts.clone(), variant))
+            .data(crate::nmf::job::DataSource::Full(m))
+            .secure_partition(cols.clone());
+        if let Some(a) = audit {
+            b = b.audit(a);
+        }
+        b.run()
+            .unwrap_or_else(|e| panic!("{} job failed: {e}", variant.name()))
+            .into_secure_run()
     }
 
     fn opts(nodes: usize) -> AsynOptions {

@@ -6,16 +6,18 @@
 //! (N−1)-private (Definition 1): any N−1 colluding parties learn nothing
 //! beyond their own outputs.
 //!
-//! Protocols (Sec. 4.2–4.3):
-//! * [`syn::run_syn_sd`]   — Alg. 4: local NMF + periodic full-`U`
-//!   all-reduce averaging every `T₂` inner iterations.
-//! * [`syn::run_syn_ssd`]  — Alg. 5: sketched exchange every inner
-//!   iteration (variants: sketch the U-consensus, the V-subproblem, or
-//!   both — Syn-SSD-U / -V / -UV).
-//! * [`asyn::run_asyn`]    — Alg. 6/7: parameter-server architecture with
-//!   relaxation weight `ωᵗ → 0`; Asyn-SD (unsketched) and Asyn-SSD-V
-//!   (sketched V-subproblem; U cannot be sketched asynchronously because a
-//!   shared `S₂ᵗ` would reintroduce the synchronisation barrier).
+//! Protocols (Sec. 4.2–4.3), all driven through the
+//! [`crate::nmf::job::Job`] builder (`Algo::Syn` / `Algo::Asyn`):
+//! * [`syn::syn_rank`] with [`SecureAlgo::SynSd`] — Alg. 4: local NMF +
+//!   periodic full-`U` all-reduce averaging every `T₂` inner iterations.
+//! * [`syn::syn_rank`] with an SSD variant — Alg. 5: sketched exchange
+//!   every inner iteration (variants: sketch the U-consensus, the
+//!   V-subproblem, or both — Syn-SSD-U / -V / -UV).
+//! * [`asyn::server_loop`] / [`asyn::client_rank`] — Alg. 6/7:
+//!   parameter-server architecture with relaxation weight `ωᵗ → 0`;
+//!   Asyn-SD (unsketched) and Asyn-SSD-V (sketched V-subproblem; U cannot
+//!   be sketched asynchronously because a shared `S₂ᵗ` would reintroduce
+//!   the synchronisation barrier).
 //! * [`privacy`]           — the audit harness (outbound-payload check) and
 //!   the Theorem-2/3 sketch-inversion attack.
 //!
@@ -31,8 +33,6 @@ pub mod syn;
 pub use asyn::AsynOptions;
 pub use privacy::{sketch_inversion, AuditLog, AuditVerdict};
 pub use syn::SynOptions;
-#[allow(deprecated)]
-pub use {asyn::run_asyn, syn::run_syn_sd, syn::run_syn_ssd};
 
 use crate::algos::TracePoint;
 use crate::dist::CommStats;

@@ -27,6 +27,7 @@ use crate::data::partition::Partition;
 use crate::data::shard::NodeInput;
 use crate::dist::{CommModel, CommStats, NodeCtx};
 use crate::linalg::{Mat, Matrix};
+use crate::nmf::control::{RunControl, StopReason};
 use crate::nmf::{init_factors_from, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
@@ -84,57 +85,6 @@ fn auto_d(dim: usize, explicit: usize, k: usize) -> usize {
     }
 }
 
-/// Syn-SD (Alg. 4).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `nmf::job::Job::builder().algorithm(Algo::Syn(opts, SecureAlgo::SynSd))` instead"
-)]
-pub fn run_syn_sd(
-    m: &Matrix,
-    cols: &Partition,
-    opts: &SynOptions,
-    audit: Option<&AuditLog>,
-) -> SecureRun {
-    run_syn_via_job(m, cols, opts, SecureAlgo::SynSd, audit)
-}
-
-/// Syn-SSD (Alg. 5) in the requested variant (`SynSsdU`/`SynSsdV`/`SynSsdUv`).
-#[deprecated(
-    since = "0.2.0",
-    note = "use `nmf::job::Job::builder().algorithm(Algo::Syn(opts, variant))` instead"
-)]
-pub fn run_syn_ssd(
-    m: &Matrix,
-    cols: &Partition,
-    opts: &SynOptions,
-    variant: SecureAlgo,
-    audit: Option<&AuditLog>,
-) -> SecureRun {
-    assert!(
-        matches!(variant, SecureAlgo::SynSsdU | SecureAlgo::SynSsdV | SecureAlgo::SynSsdUv),
-        "run_syn_ssd takes an SSD variant"
-    );
-    run_syn_via_job(m, cols, opts, variant, audit)
-}
-
-/// Shared body of the deprecated sync-secure shims: one builder invocation.
-fn run_syn_via_job(
-    m: &Matrix,
-    cols: &Partition,
-    opts: &SynOptions,
-    algo: SecureAlgo,
-    audit: Option<&AuditLog>,
-) -> SecureRun {
-    let mut b = crate::nmf::job::Job::builder()
-        .algorithm(crate::nmf::job::Algo::Syn(opts.clone(), algo))
-        .data(crate::nmf::job::DataSource::Full(m))
-        .secure_partition(cols.clone());
-    if let Some(a) = audit {
-        b = b.audit(a);
-    }
-    b.run().unwrap_or_else(|e| panic!("{} job failed: {e}", algo.name())).into_secure_run()
-}
-
 /// Per-party output of one synchronous secure rank.
 pub struct SynNodeOutput {
     /// The party's local copy of the shared factor `U_(r)`.
@@ -145,6 +95,8 @@ pub struct SynNodeOutput {
     pub trace: Vec<TracePoint>,
     pub stats: CommStats,
     pub final_clock: f64,
+    /// Why this party's loop ended (collectively agreed across parties).
+    pub stop: StopReason,
 }
 
 /// Assemble per-party outputs into a [`SecureRun`] (the driver is trusted;
@@ -174,11 +126,12 @@ pub fn syn_rank<C: Communicator>(
     algo: SecureAlgo,
     audit: Option<&AuditLog>,
     observer: Option<&ObserverFn>,
+    ctl: &RunControl,
 ) -> SynNodeOutput {
     let (m_rows, m_cols) = input.dims();
     let fro_sq = input.fro_sq();
     let m_col = input.col_block(cols.range(ctx.rank)); // M_{:J_r}, m×|J_r|
-    syn_node_on_block(ctx, &m_col, m_rows, m_cols, fro_sq, cols, opts, algo, audit, observer)
+    syn_node_on_block(ctx, &m_col, m_rows, m_cols, fro_sq, cols, opts, algo, audit, observer, ctl)
 }
 
 /// Protocol body over the party's resident column block.
@@ -194,6 +147,7 @@ fn syn_node_on_block<C: Communicator>(
     algo: SecureAlgo,
     audit: Option<&AuditLog>,
     observer: Option<&ObserverFn>,
+    ctl: &RunControl,
 ) -> SynNodeOutput {
     assert_eq!(cols.nodes(), opts.nodes, "partition/node mismatch");
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
@@ -229,8 +183,15 @@ fn syn_node_on_block<C: Communicator>(
         record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, 0, &mut trace);
 
         let mut iter = 0usize;
-        for _t1 in 0..opts.t1 {
+        let mut stop = StopReason::Completed;
+        'outer: for _t1 in 0..opts.t1 {
             for _t2 in 0..opts.t2 {
+                // collective stop decision — every party leaves together
+                if let Some(reason) = ctl.poll_sync(ctx, iter, trace.last_error()) {
+                    stop = reason;
+                    break 'outer;
+                }
+
                 // ---- U_(r) update: min ‖M_{:J_r} − U·V_{J_r:}ᵀ‖ ----
                 ctx.compute(|| {
                     if sketch_u && d2 < jr {
@@ -326,6 +287,7 @@ fn syn_node_on_block<C: Communicator>(
             trace: if rank == 0 { trace.into_points() } else { Vec::new() },
             stats: ctx.stats(),
             final_clock: ctx.clock(),
+            stop,
         }
     }
 }
@@ -356,8 +318,6 @@ pub(crate) fn record_secure_error<C: Communicator>(
 
 #[cfg(test)]
 mod tests {
-    #![allow(deprecated)] // the deprecated shims stay covered until removal
-
     use super::*;
     use crate::data::partition::{imbalanced_partition, uniform_partition};
     use crate::rng::Pcg64;
@@ -367,6 +327,45 @@ mod tests {
         let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
         let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
         Matrix::Dense(u.matmul_nt(&v))
+    }
+
+    /// Builder-backed shorthands (the deprecated free functions are gone).
+    fn run_syn(
+        m: &Matrix,
+        cols: &Partition,
+        opts: &SynOptions,
+        algo: SecureAlgo,
+        audit: Option<&AuditLog>,
+    ) -> SecureRun {
+        let mut b = crate::nmf::job::Job::builder()
+            .algorithm(crate::nmf::job::Algo::Syn(opts.clone(), algo))
+            .data(crate::nmf::job::DataSource::Full(m))
+            .secure_partition(cols.clone());
+        if let Some(a) = audit {
+            b = b.audit(a);
+        }
+        b.run()
+            .unwrap_or_else(|e| panic!("{} job failed: {e}", algo.name()))
+            .into_secure_run()
+    }
+
+    fn run_syn_sd(
+        m: &Matrix,
+        cols: &Partition,
+        opts: &SynOptions,
+        audit: Option<&AuditLog>,
+    ) -> SecureRun {
+        run_syn(m, cols, opts, SecureAlgo::SynSd, audit)
+    }
+
+    fn run_syn_ssd(
+        m: &Matrix,
+        cols: &Partition,
+        opts: &SynOptions,
+        variant: SecureAlgo,
+        audit: Option<&AuditLog>,
+    ) -> SecureRun {
+        run_syn(m, cols, opts, variant, audit)
     }
 
     fn opts(nodes: usize) -> SynOptions {

@@ -142,6 +142,10 @@ struct InboxState {
     coll: Vec<VecDeque<P2pMsg>>,
     p2p: Vec<VecDeque<P2pMsg>>,
     closed: Vec<bool>,
+    /// Set by [`Inbox::interrupt`]: every pending and future receive fails
+    /// immediately (the hard-cancel path of the job control plane — a
+    /// blocked reader must unblock rather than hang in `read`).
+    interrupted: bool,
 }
 
 impl Inbox {
@@ -159,9 +163,23 @@ impl Inbox {
                 coll: (0..n).map(|_| VecDeque::new()).collect(),
                 p2p: (0..n).map(|_| VecDeque::new()).collect(),
                 closed,
+                interrupted: false,
             }),
             cv: Condvar::new(),
         }
+    }
+
+    /// Interrupt every blocked and future receive on this inbox: they fail
+    /// immediately with a "interrupted by job control" error instead of
+    /// blocking (or waiting out an I/O timeout). Used by
+    /// [`crate::nmf::control::ControlToken::kill`] — a reader thread
+    /// blocked in a TCP `read` stays blocked, but the *algorithm* side
+    /// waiting on the inbox unblocks at once, which is what lets a killed
+    /// job abort promptly.
+    pub(crate) fn interrupt(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.interrupted = true;
+        self.cv.notify_all();
     }
 
     pub(crate) fn push_coll(&self, from: usize, msg: P2pMsg) {
@@ -233,6 +251,9 @@ impl Inbox {
         let deadline = timeout.map(|t| std::time::Instant::now() + t);
         let mut st = self.state.lock().unwrap();
         loop {
+            if st.interrupted {
+                return Err(crate::err!("transport receive interrupted by job control"));
+            }
             if let Some(out) = try_take(&mut st) {
                 return out;
             }
@@ -298,6 +319,22 @@ mod tests {
         let inbox = Inbox::new(2, 1);
         let err = inbox.recv_p2p_from(0, Some(Duration::from_millis(20))).unwrap_err();
         assert!(err.to_string().contains("timed out"), "{err}");
+    }
+
+    #[test]
+    fn inbox_interrupt_unblocks_pending_and_future_waits() {
+        let inbox = std::sync::Arc::new(Inbox::new(2, 1));
+        let i2 = inbox.clone();
+        // a receive blocked with NO timeout must unblock on interrupt
+        let h = std::thread::spawn(move || i2.recv_p2p_from(0, None));
+        std::thread::sleep(Duration::from_millis(30));
+        inbox.interrupt();
+        let err = h.join().unwrap().unwrap_err();
+        assert!(err.to_string().contains("interrupted"), "{err}");
+        // future receives fail immediately, even with frames queued
+        inbox.push_p2p(0, P2pMsg { from: 0, tag: 1, sent_at: 0.0, payload: vec![] });
+        assert!(inbox.recv_p2p_from(0, None).is_err());
+        assert!(inbox.recv_coll(0, None).is_err());
     }
 
     #[test]

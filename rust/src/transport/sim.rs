@@ -35,6 +35,16 @@ impl SimCluster {
     pub fn nodes(&self) -> usize {
         self.inboxes.len()
     }
+
+    /// Interrupt every rank's inbox: all blocked and future receives fail
+    /// immediately. The hard-cancel path of
+    /// [`crate::nmf::control::ControlToken::kill`] — cooperative
+    /// cancellation never needs this.
+    pub fn interrupt_all(&self) {
+        for inbox in &self.inboxes {
+            inbox.interrupt();
+        }
+    }
 }
 
 /// One rank's endpoint on a [`SimCluster`].

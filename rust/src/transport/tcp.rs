@@ -301,6 +301,15 @@ impl TcpComm {
         self.rendezvous.take()
     }
 
+    /// A closure that interrupts this endpoint's inbox (all blocked and
+    /// future receives fail immediately) — registered with a job's
+    /// [`crate::nmf::control::ControlToken`] so `kill()` unblocks a rank
+    /// that would otherwise hang in a TCP read.
+    pub fn interrupter(&self) -> impl Fn() + Send + Sync + 'static {
+        let inbox = self.inbox.clone();
+        move || inbox.interrupt()
+    }
+
     fn writer(&mut self, peer: usize) -> Result<&mut TcpStream> {
         if peer >= self.nodes || peer == self.rank {
             crate::bail!("no link to rank {peer} (self = {}, nodes = {})", self.rank, self.nodes);

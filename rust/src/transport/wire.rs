@@ -39,7 +39,11 @@ pub const MAGIC: u32 = 0x4453_414E;
 ///   (localhost-only deployment).
 /// * v2 — `Hello`/`Roster` carry full `host:port` mesh addresses (the
 ///   address book), enabling multi-host clusters via `--bind`.
-pub const VERSION: u16 = 2;
+/// * v3 — control plane: the `Result`-stats chunk carries a trailing
+///   stop-reason `u64`, and the asynchronous protocols' push/reply frames
+///   carry one trailing control `f32` (residual fraction / stop flag).
+///   Mixed-version clusters must fail the handshake, not mis-decode.
+pub const VERSION: u16 = 3;
 /// Refuse frames above 1 GiB — a corrupt length prefix otherwise turns
 /// into an attempted huge allocation.
 pub const MAX_FRAME_BYTES: usize = 1 << 30;

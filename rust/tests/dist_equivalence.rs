@@ -9,6 +9,7 @@ use dsanls::data::partition::uniform_partition;
 use dsanls::data::shard::{exact_fro_sq, NodeData, NodeInput};
 use dsanls::dist::run_tcp_cluster;
 use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::control::RunControl;
 use dsanls::nmf::job::{Algo, Backend, DataSource, Job, Outcome};
 use dsanls::nmf::{Sanls, SanlsOptions};
 use dsanls::rng::Pcg64;
@@ -309,7 +310,13 @@ fn dsanls_sharded_tcp_bit_identical_to_full_sim() {
         data.fro_sq = None; // what a real worker does: resolve via the chain
         let fro = exact_fro_sq(ctx.comm_mut(), opts.nodes, data.m_rows.as_ref()).unwrap();
         data.fro_sq = Some(fro);
-        dsanls::algos::dsanls::dsanls_rank(ctx, NodeInput::Shard(&data), &opts, None)
+        dsanls::algos::dsanls::dsanls_rank(
+            ctx,
+            NodeInput::Shard(&data),
+            &opts,
+            None,
+            &RunControl::unsupervised(),
+        )
     })
     .expect("tcp cluster failed");
     let tcp = reduce_outputs(outputs, opts.rank, opts.iterations);
@@ -345,7 +352,16 @@ fn syn_sd_sharded_matches_full_sim() {
         let fro = exact_fro_sq(ctx.comm_mut(), opts.nodes, data.m_rows.as_ref()).unwrap();
         data.fro_sq = Some(fro);
         data.drop_rows();
-        syn_rank(ctx, NodeInput::Shard(&data), &cols, &opts, SecureAlgo::SynSd, None, None)
+        syn_rank(
+            ctx,
+            NodeInput::Shard(&data),
+            &cols,
+            &opts,
+            SecureAlgo::SynSd,
+            None,
+            None,
+            &RunControl::unsupervised(),
+        )
     })
     .expect("tcp cluster failed");
     let tcp = assemble_syn(outputs, opts.rank, opts.t1 * opts.t2);

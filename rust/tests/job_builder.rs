@@ -144,16 +144,16 @@ fn synthetic_window_bit_identical_to_full() {
 fn shard_dir_source_bit_identical_to_full() {
     let m = Dataset::Face.generate_scaled(11, 0.03);
     let dir = std::env::temp_dir().join(format!("dsanls_jobshard_{}", std::process::id()));
-    let manifest = ShardManifest {
-        nodes: 2,
-        rows: m.rows(),
-        cols: m.cols(),
-        fro_sq: m.fro_sq(),
-        seed: 11,
-        scale: 0.03,
-        dense: matches!(m, Matrix::Dense(_)),
-        dataset: "FACE".into(),
-    };
+    let manifest = ShardManifest::uniform(
+        2,
+        m.rows(),
+        m.cols(),
+        m.fro_sq(),
+        11,
+        0.03,
+        matches!(m, Matrix::Dense(_)),
+        "FACE".into(),
+    );
     write_shard_dir(&dir, &m, &manifest).unwrap();
     let opts = DsanlsOptions {
         nodes: 2,

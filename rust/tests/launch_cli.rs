@@ -176,6 +176,94 @@ fn launch_rejects_mismatched_shard_dir() {
     std::fs::remove_dir_all(&out_dir).ok();
 }
 
+/// Rank-failure retry, end to end over real worker processes: rank 1 is
+/// fault-injected to die mid-run; `launch --retries 1 --checkpoint` must
+/// restart the cluster from the checkpoint and still produce factors
+/// bit-identical to the uninterrupted simulator (`--verify-sim`).
+#[test]
+fn launch_retries_rank_failure_from_checkpoint() {
+    let out_dir = temp_out("retry");
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let ckpt = out_dir.join("run.ckpt");
+    let output = Command::new(exe())
+        .args([
+            "launch",
+            "--nodes",
+            "3",
+            "--verify-sim",
+            "--retries",
+            "1",
+            "--checkpoint",
+            ckpt.to_str().unwrap(),
+            "--checkpoint-every",
+            "2",
+            "--fault-rank",
+            "1",
+            "--fault-iteration",
+            "5",
+            "--experiment.name=retrytest",
+            "--experiment.algorithm=dsanls",
+            "--experiment.dataset=face",
+            "--experiment.scale=0.05",
+            "--experiment.rank=4",
+            "--experiment.iterations=8",
+            "--experiment.eval_every=4",
+        ])
+        .arg(format!("--output.dir={}", out_dir.display()))
+        .output()
+        .expect("failed to spawn dsanls launch");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "retry launch failed ({})\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        output.status
+    );
+    assert!(
+        stderr.contains("retrying (attempt 1/1)"),
+        "retry was not attempted\nstderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("retries: 1"),
+        "retry count must surface in the outcome\nstdout:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("bit-identical to simulated backend: true"),
+        "resumed factors diverged from the uninterrupted simulator\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+/// Retry exhaustion is a clean failure naming the dead worker, not a hang.
+#[test]
+fn launch_retry_exhaustion_fails_cleanly() {
+    let out_dir = temp_out("retryfail");
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let output = Command::new(exe())
+        .args([
+            "launch",
+            "--nodes",
+            "2",
+            "--retries",
+            "0",
+            "--fault-rank",
+            "0",
+            "--fault-iteration",
+            "2",
+            "--experiment.algorithm=dsanls",
+            "--experiment.dataset=face",
+            "--experiment.scale=0.05",
+            "--experiment.rank=3",
+            "--experiment.iterations=6",
+            "--experiment.eval_every=0",
+        ])
+        .arg(format!("--output.dir={}", out_dir.display()))
+        .output()
+        .expect("failed to spawn dsanls launch");
+    assert!(!output.status.success(), "exhausted retries must fail the launch");
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
 #[test]
 fn worker_without_rendezvous_is_a_clean_error() {
     let output = Command::new(exe())
