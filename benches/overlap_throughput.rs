@@ -1,0 +1,136 @@
+//! Iteration-throughput bench for the comm/compute-overlap + quantized-wire
+//! rework: DSANLS through the `Job` builder across the
+//! `overlap ∈ {off, on}` × `wire ∈ {f32, bf16, fp16}` grid. Reports the
+//! simulated seconds/iteration (the network-model clock the paper's
+//! figures use — where overlap hides wire time behind the prefetched
+//! GEMMs), host wall-clock per iteration, actual bytes sent (quantized
+//! lanes shrink these ~2×), and the final relative error (bit-identical
+//! for overlap, mildly lossy for the 16-bit wires). Emits a
+//! machine-readable `BENCH_overlap.json` report.
+//!
+//! Env knobs: `DSANLS_THREADS`, `DSANLS_BENCH_FULL=1`,
+//! `DSANLS_BENCH_JSON_DIR`.
+
+mod bench_util;
+
+use std::time::Instant;
+
+use dsanls::algos::DsanlsOptions;
+use dsanls::linalg::{Mat, Matrix};
+use dsanls::metrics::JsonValue;
+use dsanls::nmf::job::{Algo, DataSource, Job, Wire};
+use dsanls::rng::Pcg64;
+
+struct Cell {
+    overlap: bool,
+    wire: Wire,
+    sim_sec_per_iter: f64,
+    wall_sec_per_iter: f64,
+    bytes_sent: usize,
+    final_error: f64,
+}
+
+impl Cell {
+    fn to_json(&self) -> JsonValue {
+        JsonValue::Object(vec![
+            ("overlap".into(), JsonValue::Bool(self.overlap)),
+            ("wire".into(), JsonValue::String(self.wire.to_string())),
+            ("sim_sec_per_iter".into(), JsonValue::Number(self.sim_sec_per_iter)),
+            ("wall_ms_per_iter".into(), JsonValue::Number(self.wall_sec_per_iter * 1e3)),
+            ("bytes_sent".into(), JsonValue::Number(self.bytes_sent as f64)),
+            ("final_error".into(), JsonValue::Number(self.final_error)),
+        ])
+    }
+}
+
+fn main() {
+    bench_util::banner(
+        "overlap_throughput",
+        "comm-overlap + quantized-wire DSANLS iteration throughput",
+    );
+    let (rows, cols, k) =
+        if bench_util::full() { (2400usize, 1800usize, 64usize) } else { (720, 540, 16) };
+    let nodes = if bench_util::full() { 10 } else { 6 };
+    let iterations = bench_util::timing_iters() * 2;
+    let (d_u, d_v) = (3 * k, 4 * k);
+
+    let mut rng = Pcg64::new(0x0E51A9, 0);
+    let u0 = Mat::rand_uniform(rows, k, 1.0, &mut rng);
+    let v0 = Mat::rand_uniform(cols, k, 1.0, &mut rng);
+    let m = Matrix::Dense(u0.matmul_nt(&v0));
+
+    let opts = DsanlsOptions {
+        nodes,
+        rank: k,
+        iterations,
+        d_u,
+        d_v,
+        eval_every: 0,
+        ..Default::default()
+    };
+
+    let mut cells: Vec<Cell> = Vec::new();
+    println!(
+        "{:<8} {:<5} {:>14} {:>12} {:>10} {:>10}",
+        "overlap", "wire", "sim ms/iter", "wall ms/it", "MB sent", "rel_err"
+    );
+    for overlap in [false, true] {
+        for wire in [Wire::F32, Wire::Bf16, Wire::Fp16] {
+            let t = Instant::now();
+            let out = Job::builder()
+                .algorithm(Algo::Dsanls(opts.clone()))
+                .data(DataSource::Full(&m))
+                .overlap_comm(overlap)
+                .wire_precision(wire)
+                .run()
+                .expect("bench job failed");
+            let wall = t.elapsed().as_secs_f64() / iterations as f64;
+            let cell = Cell {
+                overlap,
+                wire,
+                sim_sec_per_iter: out.sec_per_iter,
+                wall_sec_per_iter: wall,
+                bytes_sent: out.total_bytes_sent(),
+                final_error: out.final_error(),
+            };
+            println!(
+                "{:<8} {:<5} {:>14.3} {:>12.2} {:>10.2} {:>10.5}",
+                cell.overlap,
+                cell.wire.to_string(),
+                cell.sim_sec_per_iter * 1e3,
+                cell.wall_sec_per_iter * 1e3,
+                cell.bytes_sent as f64 / 1e6,
+                cell.final_error
+            );
+            cells.push(cell);
+        }
+    }
+
+    let find = |overlap: bool, wire: Wire| {
+        cells.iter().find(|c| c.overlap == overlap && c.wire == wire).unwrap()
+    };
+    let blocking = find(false, Wire::F32);
+    let overlapped = find(true, Wire::F32);
+    let quantized = find(true, Wire::Bf16);
+    let overlap_speedup = blocking.sim_sec_per_iter / overlapped.sim_sec_per_iter;
+    let bytes_ratio = blocking.bytes_sent as f64 / quantized.bytes_sent as f64;
+    println!(
+        "\noverlap hides wire time: {overlap_speedup:.3}× simulated-clock speedup at f32; \
+         bf16 wire sends {bytes_ratio:.2}× fewer bytes"
+    );
+
+    let json = JsonValue::Object(vec![
+        ("bench".into(), JsonValue::String("overlap_throughput".into())),
+        ("threads".into(), JsonValue::Number(dsanls::parallel::num_threads() as f64)),
+        ("nodes".into(), JsonValue::Number(nodes as f64)),
+        ("rank".into(), JsonValue::Number(k as f64)),
+        ("iterations".into(), JsonValue::Number(iterations as f64)),
+        ("full".into(), JsonValue::Bool(bench_util::full())),
+        ("overlap_speedup_sim".into(), JsonValue::Number(overlap_speedup)),
+        ("bf16_bytes_ratio".into(), JsonValue::Number(bytes_ratio)),
+        ("estimated".into(), JsonValue::Bool(false)),
+        ("results".into(), JsonValue::Array(cells.iter().map(|c| c.to_json()).collect())),
+    ]);
+    let path = bench_util::write_bench_json("BENCH_overlap.json", &json);
+    println!("report written to {path:?}");
+}

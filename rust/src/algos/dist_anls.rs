@@ -21,6 +21,7 @@ use crate::nmf::control::{checkpoint_sync, CheckpointMeta, RunControl, StopReaso
 use crate::nmf::init_factors_from;
 use crate::rng::{Role, StreamRng};
 use crate::solvers::{self, Normal, SolverKind};
+use crate::transport::wire::Precision;
 use crate::transport::Communicator;
 
 /// Stable checkpoint algorithm tag for the MPI-FAUN baselines.
@@ -31,10 +32,13 @@ pub const CKPT_TAG: &str = "dist-anls";
 /// deliberately excluded).
 pub fn ckpt_params(opts: &DistAnlsOptions) -> u64 {
     use crate::nmf::control::{fingerprint_str, params_fingerprint};
-    params_fingerprint(&[
-        fingerprint_str(opts.solver.name()),
-        opts.inner_sweeps as u64,
-    ])
+    let mut fields = vec![fingerprint_str(opts.solver.name()), opts.inner_sweeps as u64];
+    // appended only when non-default so pre-existing checkpoints keep their
+    // fingerprint; `overlap` is excluded (bit-identical reordering)
+    if opts.precision != Precision::F32 {
+        fields.push(fingerprint_str(opts.precision.name()));
+    }
+    params_fingerprint(&fields)
 }
 
 /// Options for an MPI-FAUN-style baseline run.
@@ -50,6 +54,14 @@ pub struct DistAnlsOptions {
     pub comm: CommModel,
     /// Inner sweeps per outer iteration for HALS (MPI-FAUN uses 1).
     pub inner_sweeps: usize,
+    /// Post the k×k gram reduce and the `O(nk)` factor gather together so
+    /// their wire times overlap (bit-identical — collectives stay
+    /// rank-ordered, only the schedule changes).
+    pub overlap: bool,
+    /// Wire precision for the gathered factor blocks ([`Precision::F32`] =
+    /// exact). The k×k gram reduce always travels at f32 — it is tiny and
+    /// feeds the normal-equation solve directly.
+    pub precision: Precision,
 }
 
 impl Default for DistAnlsOptions {
@@ -63,6 +75,8 @@ impl Default for DistAnlsOptions {
             eval_every: 5,
             comm: CommModel::default(),
             inner_sweeps: 1,
+            overlap: false,
+            precision: Precision::F32,
         }
     }
 }
@@ -85,113 +99,128 @@ pub fn dist_anls_rank<C: Communicator>(
     let (rows, cols) = input.dims();
     let row_part = uniform_partition(rows, opts.nodes);
     let col_part = uniform_partition(cols, opts.nodes);
-    {
-        let rank = ctx.rank;
-        let stream = StreamRng::new(opts.seed);
-        let my_rows = row_part.range(rank);
-        let my_cols = col_part.range(rank);
-        let m_rows = input.row_block(my_rows.clone());
-        let m_rows: &Matrix = &m_rows;
-        let m_cols_t = input.col_block_t(my_cols.clone());
+    let rank = ctx.rank;
+    let stream = StreamRng::new(opts.seed);
+    let my_rows = row_part.range(rank);
+    let my_cols = col_part.range(rank);
+    let m_rows = input.row_block(my_rows.clone());
+    let m_rows: &Matrix = &m_rows;
+    let m_cols_t = input.col_block_t(my_cols.clone());
 
-        let start = ctl.start_iteration();
-        let (mut u_block, mut v_block) = match ctl.resume.as_deref() {
-            Some(rs) => (rs.u.row_block(my_rows.clone()), rs.v.row_block(my_cols.clone())),
-            None => {
-                let (u_full, v_full) = {
-                    let mut rng = stream.for_iteration(0, Role::Init);
-                    init_factors_from(input.fro_sq(), rows, cols, opts.rank, &mut rng)
-                };
-                (u_full.row_block(my_rows.clone()), v_full.row_block(my_cols.clone()))
-            }
-        };
-
-        let ckpt_meta = CheckpointMeta {
-            algo: CKPT_TAG.into(),
-            seed: opts.seed,
-            k: opts.rank,
-            rows,
-            cols,
-            params: ckpt_params(opts),
-        };
-        let mut trace = Trace::new(if rank == 0 { observer } else { None });
-        super::dsanls::record_error_any(
-            ctx, &input, m_rows, &u_block, &v_block, opts.rank, start, &mut trace,
-        );
-
-        let mut stop = StopReason::Completed;
-        let mut completed = start;
-        for t in start..opts.iterations {
-            if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
-                stop = reason;
-                break;
-            }
-            // ---- U-step: gram = VᵀV (all-reduce), V full (all-gather) ----
-            let mut gram_buf =
-                ctx.compute(|| v_block.gram().into_vec());
-            ctx.all_reduce_sum(&mut gram_buf);
-            let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
-            let v_blocks = ctx.all_gather(v_block.data()); // O(nk) gather
-            let v_full = assemble_blocks(&v_blocks, opts.rank);
-            ctx.compute(|| {
-                let cross = match m_rows {
-                    Matrix::Dense(md) => md.matmul(&v_full),
-                    Matrix::Sparse(ms) => ms.spmm(&v_full),
-                };
-                let nrm = Normal::new(&gram, &cross);
-                for _ in 0..opts.inner_sweeps.max(1) {
-                    solvers::update(opts.solver, &mut u_block, &nrm, 0.0);
-                }
-            });
-
-            // ---- V-step: symmetric with U ----
-            let mut gram_buf = ctx.compute(|| u_block.gram().into_vec());
-            ctx.all_reduce_sum(&mut gram_buf);
-            let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
-            let u_blocks = ctx.all_gather(u_block.data()); // O(mk) gather
-            let u_full = assemble_blocks(&u_blocks, opts.rank);
-            ctx.compute(|| {
-                let cross = match &m_cols_t {
-                    Matrix::Dense(md) => md.matmul(&u_full),
-                    Matrix::Sparse(ms) => ms.spmm(&u_full),
-                };
-                let nrm = Normal::new(&gram, &cross);
-                for _ in 0..opts.inner_sweeps.max(1) {
-                    solvers::update(opts.solver, &mut v_block, &nrm, 0.0);
-                }
-            });
-
-            completed = t + 1;
-            if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
-                super::dsanls::record_error_any(
-                    ctx, &input, m_rows, &u_block, &v_block, opts.rank, t + 1, &mut trace,
-                );
-            }
-            if ctl.should_checkpoint(t + 1) {
-                checkpoint_sync(
-                    ctx,
-                    ctl.checkpoint.as_ref().expect("cadence implies config"),
-                    &ckpt_meta,
-                    t + 1,
-                    &u_block,
-                    &v_block,
-                );
-            }
+    let start = ctl.start_iteration();
+    let (mut u_block, mut v_block) = match ctl.resume.as_deref() {
+        Some(rs) => (rs.u.row_block(my_rows.clone()), rs.v.row_block(my_cols.clone())),
+        None => {
+            let (u_full, v_full) = {
+                let mut rng = stream.for_iteration(0, Role::Init);
+                init_factors_from(input.fro_sq(), rows, cols, opts.rank, &mut rng)
+            };
+            (u_full.row_block(my_rows.clone()), v_full.row_block(my_cols.clone()))
         }
-        if trace.last_iteration() != Some(completed) {
+    };
+
+    let ckpt_meta = CheckpointMeta {
+        algo: CKPT_TAG.into(),
+        seed: opts.seed,
+        k: opts.rank,
+        rows,
+        cols,
+        params: ckpt_params(opts),
+    };
+    let mut trace = Trace::new(if rank == 0 { observer } else { None });
+    super::dsanls::record_error_any(
+        ctx, &input, m_rows, &u_block, &v_block, opts.rank, start, &mut trace,
+    );
+
+    let mut stop = StopReason::Completed;
+    let mut completed = start;
+    for t in start..opts.iterations {
+        if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
+            stop = reason;
+            break;
+        }
+        // ---- U-step: gram = VᵀV (all-reduce), V full (all-gather) ----
+        // Both collectives depend only on the V of the previous step, so
+        // under `overlap` they are posted back to back and waited in post
+        // order — the O(nk) gather's wire time hides behind the gram's
+        // round trip instead of queueing after it.
+        let mut gram_buf = ctx.compute(|| v_block.gram().into_vec());
+        let v_blocks = if opts.overlap {
+            let p_gram = ctx.all_reduce_start(&gram_buf, Precision::F32);
+            let p_gather = ctx.all_gather_start(v_block.data(), opts.precision);
+            ctx.all_reduce_finish(p_gram, &mut gram_buf);
+            ctx.all_gather_finish(p_gather)
+        } else {
+            ctx.all_reduce_sum(&mut gram_buf);
+            ctx.all_gather_q(v_block.data(), opts.precision) // O(nk) gather
+        };
+        let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
+        let v_full = assemble_blocks(&v_blocks, opts.rank);
+        ctx.compute(|| {
+            let cross = match m_rows {
+                Matrix::Dense(md) => md.matmul(&v_full),
+                Matrix::Sparse(ms) => ms.spmm(&v_full),
+            };
+            let nrm = Normal::new(&gram, &cross);
+            for _ in 0..opts.inner_sweeps.max(1) {
+                solvers::update(opts.solver, &mut u_block, &nrm, 0.0);
+            }
+        });
+
+        // ---- V-step: symmetric with U ----
+        let mut gram_buf = ctx.compute(|| u_block.gram().into_vec());
+        let u_blocks = if opts.overlap {
+            let p_gram = ctx.all_reduce_start(&gram_buf, Precision::F32);
+            let p_gather = ctx.all_gather_start(u_block.data(), opts.precision);
+            ctx.all_reduce_finish(p_gram, &mut gram_buf);
+            ctx.all_gather_finish(p_gather)
+        } else {
+            ctx.all_reduce_sum(&mut gram_buf);
+            ctx.all_gather_q(u_block.data(), opts.precision) // O(mk) gather
+        };
+        let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
+        let u_full = assemble_blocks(&u_blocks, opts.rank);
+        ctx.compute(|| {
+            let cross = match &m_cols_t {
+                Matrix::Dense(md) => md.matmul(&u_full),
+                Matrix::Sparse(ms) => ms.spmm(&u_full),
+            };
+            let nrm = Normal::new(&gram, &cross);
+            for _ in 0..opts.inner_sweeps.max(1) {
+                solvers::update(opts.solver, &mut v_block, &nrm, 0.0);
+            }
+        });
+
+        completed = t + 1;
+        if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
             super::dsanls::record_error_any(
-                ctx, &input, m_rows, &u_block, &v_block, opts.rank, completed, &mut trace,
+                ctx, &input, m_rows, &u_block, &v_block, opts.rank, t + 1, &mut trace,
             );
         }
-
-        NodeOutput {
-            u_block,
-            v_block,
-            trace: if rank == 0 { trace.into_points() } else { Vec::new() },
-            stats: ctx.stats(),
-            final_clock: ctx.clock(),
-            stop,
+        if ctl.should_checkpoint(t + 1) {
+            checkpoint_sync(
+                ctx,
+                ctl.checkpoint.as_ref().expect("cadence implies config"),
+                &ckpt_meta,
+                t + 1,
+                &u_block,
+                &v_block,
+            );
         }
+    }
+    if trace.last_iteration() != Some(completed) {
+        super::dsanls::record_error_any(
+            ctx, &input, m_rows, &u_block, &v_block, opts.rank, completed, &mut trace,
+        );
+    }
+
+    NodeOutput {
+        u_block,
+        v_block,
+        trace: if rank == 0 { trace.into_points() } else { Vec::new() },
+        stats: ctx.stats(),
+        final_clock: ctx.clock(),
+        stop,
     }
 }
 
@@ -281,6 +310,46 @@ mod tests {
             small.total_bytes_sent(),
             large.total_bytes_sent()
         );
+    }
+
+    #[test]
+    fn overlap_is_bit_identical_and_quantized_gather_converges() {
+        let m = low_rank(50, 40, 3, 309);
+        let mk = |overlap, precision| {
+            run_dist_anls(
+                &m,
+                &DistAnlsOptions {
+                    nodes: 2,
+                    rank: 3,
+                    iterations: 25,
+                    solver: SolverKind::Hals,
+                    eval_every: 0,
+                    overlap,
+                    precision,
+                    ..Default::default()
+                },
+            )
+        };
+        let blocking = mk(false, Precision::F32);
+        let pipelined = mk(true, Precision::F32);
+        assert_eq!(blocking.u.data(), pipelined.u.data(), "U diverged under overlap");
+        assert_eq!(blocking.v.data(), pipelined.v.data(), "V diverged under overlap");
+
+        // quantized gather: fewer bytes, comparable convergence, lossy
+        let quant = mk(false, Precision::Bf16);
+        assert!(
+            quant.total_bytes_sent() < blocking.total_bytes_sent(),
+            "bf16 gather must shrink traffic: {} vs {}",
+            quant.total_bytes_sent(),
+            blocking.total_bytes_sent()
+        );
+        assert!(
+            quant.final_error() < blocking.final_error() * 1.5 + 0.02,
+            "quantized {} vs exact {}",
+            quant.final_error(),
+            blocking.final_error()
+        );
+        assert_ne!(quant.u.data(), blocking.u.data(), "bf16 should perturb the iterates");
     }
 
     #[test]

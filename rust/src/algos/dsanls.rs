@@ -27,6 +27,7 @@ use crate::nmf::{init_factors_from, rel_error, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
 use crate::solvers::{self, SolverKind, Workspace};
+use crate::transport::wire::Precision;
 use crate::transport::Communicator;
 
 /// Stable checkpoint algorithm tag for DSANLS runs.
@@ -40,7 +41,7 @@ pub const CKPT_TAG: &str = "dsanls";
 /// the others never touch the factor math.
 pub fn ckpt_params(opts: &DsanlsOptions) -> u64 {
     use crate::nmf::control::{fingerprint_str, params_fingerprint};
-    params_fingerprint(&[
+    let mut fields = vec![
         fingerprint_str(opts.solver.name()),
         fingerprint_str(opts.sketch.name()),
         opts.d_u as u64,
@@ -48,7 +49,14 @@ pub fn ckpt_params(opts: &DsanlsOptions) -> u64 {
         opts.mu.alpha.to_bits() as u64,
         opts.mu.beta.to_bits() as u64,
         opts.box_bound as u64,
-    ])
+    ];
+    // `overlap` is excluded (bit-identical reordering); a non-default wire
+    // precision changes the iterates, so it joins the fingerprint — appended
+    // conditionally to keep every pre-existing checkpoint resumable.
+    if opts.precision != Precision::F32 {
+        fields.push(fingerprint_str(opts.precision.name()));
+    }
+    params_fingerprint(&fields)
 }
 
 /// Options for a DSANLS run.
@@ -72,6 +80,14 @@ pub struct DsanlsOptions {
     /// update — the explicit way to guarantee Assumption 2 (bounded
     /// iterates); Lemma 1 shows it does not exclude the global optimum.
     pub box_bound: bool,
+    /// Overlap each `k×d` reduction with the next factor-independent
+    /// sketched GEMM (double-buffered pipeline). Changes only the schedule,
+    /// never the iterates — factors stay bit-identical to the blocking path.
+    pub overlap: bool,
+    /// Wire precision for the collective factor payloads
+    /// ([`Precision::F32`] = exact). Reduced precision shrinks bytes ~2× and
+    /// perturbs the iterates within the format's relative-error bound.
+    pub precision: Precision,
 }
 
 impl Default for DsanlsOptions {
@@ -89,6 +105,8 @@ impl Default for DsanlsOptions {
             mu: MuSchedule::default(),
             comm: CommModel::default(),
             box_bound: false,
+            overlap: false,
+            precision: Precision::F32,
         }
     }
 }
@@ -183,6 +201,23 @@ pub fn dsanls_rank<C: Communicator>(
     let mut ws = Workspace::new();
     let mut stop = StopReason::Completed;
     let mut completed = start;
+
+    // Warm prefetch for the overlapped pipeline: `A_r = M_{I_r:}·Sᵗ` is
+    // factor-independent (data × shared-seed sketch), so iteration `start`'s
+    // copy is computed up front and every later one rides behind the
+    // previous iteration's V-reduction.
+    let mut prefetch: Option<SketchMatrix> = None;
+    if opts.overlap && start < opts.iterations {
+        prefetch = Some(ctx.compute(|| {
+            let mut s_rng = stream.for_iteration(start as u64, Role::SketchU);
+            let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
+            let mut a = ws.take_pipe(0);
+            s.mul_right_into(m_rows, &mut a);
+            ws.restore_pipe(0, a);
+            s
+        }));
+    }
+
     for t in start..opts.iterations {
         assert!(
             matches!(opts.solver, SolverKind::ProximalCd | SolverKind::Pgd),
@@ -190,48 +225,114 @@ pub fn dsanls_rank<C: Communicator>(
         );
 
         // collective stop decision — every rank leaves at the same iteration
+        // (no pending exchange is ever in flight here: both reductions of an
+        // iteration are finished before its trace/checkpoint collectives)
         if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
             stop = reason;
             break;
         }
 
-        // ---------- U-subproblem (Alg. 2 lines 4–8) ----------
-        let (a_r, b_sum) = ctx.compute(|| {
-            let mut s_rng = stream.for_iteration(t as u64, Role::SketchU);
-            let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
-            let a_r = s.mul_right(m_rows); // M_{I_r:}·Sᵗ, local
-            let b_bar = s.mul_rows_tn(&v_block, col_part.offset(rank)); // (V_{J_r:})ᵀS_{J_r:}
-            (a_r, b_bar)
-        });
-        let buf_owned = b_sum; let mut buf = buf_owned.into_vec();
-        ctx.all_reduce_sum(&mut buf); // B = Σ_r B̄_r  (k×d)
-        let b = Mat::from_vec(opts.rank, d_u, buf);
-        ctx.compute(|| {
-            let nrm = ws.normal_from(&a_r, &b);
-            solvers::update_auto(opts.solver, &mut u_block, &nrm, &opts.mu, t);
-            if opts.box_bound {
-                u_block.clamp_max(ceiling);
-            }
-        });
+        if !opts.overlap {
+            // ---------- U-subproblem (Alg. 2 lines 4–8) ----------
+            let (a_r, b_sum) = ctx.compute(|| {
+                let mut s_rng = stream.for_iteration(t as u64, Role::SketchU);
+                let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
+                let a_r = s.mul_right(m_rows); // M_{I_r:}·Sᵗ, local
+                let b_bar = s.mul_rows_tn(&v_block, col_part.offset(rank)); // (V_{J_r:})ᵀS_{J_r:}
+                (a_r, b_bar)
+            });
+            let buf_owned = b_sum;
+            let mut buf = buf_owned.into_vec();
+            ctx.all_reduce_sum_q(&mut buf, opts.precision); // B = Σ_r B̄_r  (k×d)
+            let b = Mat::from_vec(opts.rank, d_u, buf);
+            ctx.compute(|| {
+                let nrm = ws.normal_from(&a_r, &b);
+                solvers::update_auto(opts.solver, &mut u_block, &nrm, &opts.mu, t);
+                if opts.box_bound {
+                    u_block.clamp_max(ceiling);
+                }
+            });
 
-        // ---------- V-subproblem (Alg. 2 lines 10–14) ----------
-        let (a2_r, b2_sum) = ctx.compute(|| {
-            let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
-            let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
-            let a2 = s2.mul_right(&m_cols_t); // (M_{:J_r})ᵀ·S'ᵗ
-            let b2_bar = s2.mul_rows_tn(&u_block, row_part.offset(rank)); // (U_{I_r:})ᵀS'_{I_r:}
-            (a2, b2_bar)
-        });
-        let buf2_owned = b2_sum; let mut buf2 = buf2_owned.into_vec();
-        ctx.all_reduce_sum(&mut buf2);
-        let b2 = Mat::from_vec(opts.rank, d_v, buf2);
-        ctx.compute(|| {
-            let nrm = ws.normal_from(&a2_r, &b2);
-            solvers::update_auto(opts.solver, &mut v_block, &nrm, &opts.mu, t);
-            if opts.box_bound {
-                v_block.clamp_max(ceiling);
+            // ---------- V-subproblem (Alg. 2 lines 10–14) ----------
+            let (a2_r, b2_sum) = ctx.compute(|| {
+                let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
+                let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
+                let a2 = s2.mul_right(&m_cols_t); // (M_{:J_r})ᵀ·S'ᵗ
+                let b2_bar = s2.mul_rows_tn(&u_block, row_part.offset(rank)); // (U_{I_r:})ᵀS'_{I_r:}
+                (a2, b2_bar)
+            });
+            let buf2_owned = b2_sum;
+            let mut buf2 = buf2_owned.into_vec();
+            ctx.all_reduce_sum_q(&mut buf2, opts.precision);
+            let b2 = Mat::from_vec(opts.rank, d_v, buf2);
+            ctx.compute(|| {
+                let nrm = ws.normal_from(&a2_r, &b2);
+                solvers::update_auto(opts.solver, &mut v_block, &nrm, &opts.mu, t);
+                if opts.box_bound {
+                    v_block.clamp_max(ceiling);
+                }
+            });
+        } else {
+            // ---------- overlapped double-buffered pipeline ----------
+            // Identical arithmetic to the blocking path, reordered so each
+            // reduction's wire time hides behind the next factor-independent
+            // sketched GEMM. Pipe slot 0 holds A_r, slot 1 holds A'_r; the
+            // summand buffer carries B̄_r out and B back. take/restore moves
+            // buffers out of the workspace without touching the allocator
+            // (an empty `Mat` owns no storage), so `ws.normal_from` can
+            // borrow the workspace mutably while the operands stay alive.
+
+            // --- U-subproblem: A_r was prefetched; post B̄_r, then compute
+            //     the V-side A'_r = (M_{:J_r})ᵀ·S'ᵗ behind the reduction ---
+            let s_u = prefetch.take().expect("warm prefetch precedes the loop");
+            let mut summand = ws.take_summand();
+            ctx.compute(|| s_u.mul_rows_tn_into(&v_block, col_part.offset(rank), &mut summand));
+            let pending = ctx.all_reduce_start(summand.data(), opts.precision);
+            let s_v = ctx.compute(|| {
+                let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
+                let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
+                let mut a2 = ws.take_pipe(1);
+                s2.mul_right_into(&m_cols_t, &mut a2);
+                ws.restore_pipe(1, a2);
+                s2
+            });
+            ctx.all_reduce_finish(pending, summand.data_mut()); // B = Σ_r B̄_r
+            let a_r = ws.take_pipe(0);
+            ctx.compute(|| {
+                let nrm = ws.normal_from(&a_r, &summand);
+                solvers::update_auto(opts.solver, &mut u_block, &nrm, &opts.mu, t);
+                if opts.box_bound {
+                    u_block.clamp_max(ceiling);
+                }
+            });
+            ws.restore_pipe(0, a_r);
+
+            // --- V-subproblem: post B̄'_r (needs the U just updated), then
+            //     prefetch iteration t+1's A_r behind the reduction ---
+            ctx.compute(|| s_v.mul_rows_tn_into(&u_block, row_part.offset(rank), &mut summand));
+            let pending2 = ctx.all_reduce_start(summand.data(), opts.precision);
+            if t + 1 < opts.iterations {
+                prefetch = Some(ctx.compute(|| {
+                    let mut s_rng = stream.for_iteration((t + 1) as u64, Role::SketchU);
+                    let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
+                    let mut a = ws.take_pipe(0);
+                    s.mul_right_into(m_rows, &mut a);
+                    ws.restore_pipe(0, a);
+                    s
+                }));
             }
-        });
+            ctx.all_reduce_finish(pending2, summand.data_mut());
+            let a2_r = ws.take_pipe(1);
+            ctx.compute(|| {
+                let nrm = ws.normal_from(&a2_r, &summand);
+                solvers::update_auto(opts.solver, &mut v_block, &nrm, &opts.mu, t);
+                if opts.box_bound {
+                    v_block.clamp_max(ceiling);
+                }
+            });
+            ws.restore_pipe(1, a2_r);
+            ws.restore_summand(summand);
+        }
 
         completed = t + 1;
         if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
@@ -525,6 +626,107 @@ mod tests {
         let sharded = super::super::reduce_outputs(outputs, opts.rank, opts.iterations);
         assert_eq!(full.u.data(), sharded.u.data(), "U factors diverged");
         assert_eq!(full.v.data(), sharded.v.data(), "V factors diverged");
+    }
+
+    #[test]
+    fn overlap_is_bit_identical_to_blocking() {
+        // the pipeline only reorders factor-independent work, so factors and
+        // traced errors must match the blocking schedule exactly
+        let m = low_rank(60, 48, 3, 211);
+        let mk = |overlap| {
+            run_dsanls(
+                &m,
+                &DsanlsOptions {
+                    nodes: 3,
+                    rank: 3,
+                    iterations: 15,
+                    d_u: 16,
+                    d_v: 16,
+                    eval_every: 5,
+                    overlap,
+                    ..Default::default()
+                },
+            )
+        };
+        let blocking = mk(false);
+        let pipelined = mk(true);
+        assert_eq!(blocking.u.data(), pipelined.u.data(), "U diverged under overlap");
+        assert_eq!(blocking.v.data(), pipelined.v.data(), "V diverged under overlap");
+        for (a, b) in blocking.trace.iter().zip(pipelined.trace.iter()) {
+            assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits(), "iter {}", a.iteration);
+        }
+    }
+
+    #[test]
+    fn overlap_works_on_every_sketch_kind() {
+        // the _into pipeline covers all four families; spot-check factors
+        // against the blocking path for each
+        let m = low_rank(40, 36, 3, 213);
+        for kind in
+            [SketchKind::Gaussian, SketchKind::Subsample, SketchKind::CountSketch, SketchKind::Srht]
+        {
+            let mk = |overlap| {
+                run_dsanls(
+                    &m,
+                    &DsanlsOptions {
+                        nodes: 2,
+                        rank: 3,
+                        iterations: 6,
+                        sketch: kind,
+                        d_u: 12,
+                        d_v: 12,
+                        eval_every: 0,
+                        overlap,
+                        ..Default::default()
+                    },
+                )
+            };
+            let blocking = mk(false);
+            let pipelined = mk(true);
+            assert_eq!(blocking.u.data(), pipelined.u.data(), "{kind:?} U diverged");
+            assert_eq!(blocking.v.data(), pipelined.v.data(), "{kind:?} V diverged");
+        }
+    }
+
+    #[test]
+    fn quantized_wire_halves_bytes_and_still_converges() {
+        let m = low_rank(80, 60, 3, 215);
+        let mk = |precision| {
+            run_dsanls(
+                &m,
+                &DsanlsOptions {
+                    nodes: 3,
+                    rank: 3,
+                    iterations: 80,
+                    d_u: 24,
+                    d_v: 24,
+                    eval_every: 0,
+                    precision,
+                    ..Default::default()
+                },
+            )
+        };
+        let exact = mk(Precision::F32);
+        for precision in [Precision::Bf16, Precision::Fp16] {
+            let quant = mk(precision);
+            let ratio = exact.total_bytes_sent() as f64 / quant.total_bytes_sent() as f64;
+            assert!(
+                (1.9..=2.1).contains(&ratio),
+                "{precision:?}: byte ratio {ratio} (exact {} vs quant {})",
+                exact.total_bytes_sent(),
+                quant.total_bytes_sent()
+            );
+            // convergence equivalence: tolerance, not bit-equality — the
+            // wire perturbation is within the format's relative error
+            assert!(
+                quant.final_error() < exact.final_error() * 1.5 + 0.02,
+                "{precision:?}: {} vs exact {}",
+                quant.final_error(),
+                exact.final_error()
+            );
+            // and it genuinely perturbs the trajectory (lossy, not a no-op)
+            assert_ne!(quant.u.data(), exact.u.data(), "{precision:?} should be lossy");
+        }
     }
 
     #[test]

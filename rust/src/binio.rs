@@ -1,0 +1,150 @@
+//! Shared little-endian binary-IO helpers for the crate's on-disk formats.
+//!
+//! Checkpoints (`nmf::control`) and shard directories (`data::shard`) use
+//! the same primitive encodings — LE scalars, bulk `f32`/`u64` payloads
+//! decoded with one `read_exact` per array — but must keep their historical
+//! error wording ("truncated checkpoint …" vs "truncated shard file …").
+//! [`BinFormat`] carries the two nouns so one implementation serves both
+//! formats without changing a single diagnostic string.
+
+use std::io::{Read, Write};
+
+use crate::error::{Context, Result};
+
+/// Error-message framing for one on-disk format family.
+///
+/// `noun` names the format in write contexts ("writing {noun} u64");
+/// `truncated` names it in short-read contexts ("truncated {truncated}
+/// (reading {what})").
+#[derive(Clone, Copy)]
+pub struct BinFormat {
+    /// Noun used in write-error contexts.
+    pub noun: &'static str,
+    /// Noun used in truncation (short-read) contexts.
+    pub truncated: &'static str,
+}
+
+/// Framing for checkpoint files ("truncated checkpoint (reading …)").
+pub const CHECKPOINT: BinFormat = BinFormat { noun: "checkpoint", truncated: "checkpoint" };
+
+/// Framing for shard manifests/blocks ("truncated shard file (reading …)").
+pub const SHARD: BinFormat = BinFormat { noun: "shard", truncated: "shard file" };
+
+impl BinFormat {
+    /// Write one `u64`, little-endian.
+    pub fn write_u64<W: Write>(self, w: &mut W, v: u64) -> Result<()> {
+        w.write_all(&v.to_le_bytes()).with_context(|| format!("writing {} u64", self.noun))
+    }
+
+    /// Write one `u32`, little-endian.
+    pub fn write_u32<W: Write>(self, w: &mut W, v: u32) -> Result<()> {
+        w.write_all(&v.to_le_bytes()).with_context(|| format!("writing {} u32", self.noun))
+    }
+
+    /// Write one `f64` as its LE bit pattern.
+    pub fn write_f64<W: Write>(self, w: &mut W, v: f64) -> Result<()> {
+        w.write_all(&v.to_bits().to_le_bytes())
+            .with_context(|| format!("writing {} f64", self.noun))
+    }
+
+    /// Write a slice of `f32`s, little-endian, element by element.
+    pub fn write_f32s<W: Write>(self, w: &mut W, vs: &[f32]) -> Result<()> {
+        for &v in vs {
+            w.write_all(&v.to_le_bytes())
+                .with_context(|| format!("writing {} f32 payload", self.noun))?;
+        }
+        Ok(())
+    }
+
+    /// Write a slice of `usize`s as LE `u64`s.
+    pub fn write_u64s<W: Write>(self, w: &mut W, vs: &[usize]) -> Result<()> {
+        for &v in vs {
+            self.write_u64(w, v as u64)?;
+        }
+        Ok(())
+    }
+
+    /// `read_exact` with a "truncated … (reading {what})" diagnostic.
+    pub fn read_exact<R: Read>(self, r: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
+        r.read_exact(buf)
+            .with_context(|| format!("truncated {} (reading {what})", self.truncated))
+    }
+
+    /// Read one LE `u64`.
+    pub fn read_u64<R: Read>(self, r: &mut R, what: &str) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.read_exact(r, &mut b, what)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    /// Read one LE `u32`.
+    pub fn read_u32<R: Read>(self, r: &mut R, what: &str) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.read_exact(r, &mut b, what)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    /// Read one `f64` from its LE bit pattern.
+    pub fn read_f64<R: Read>(self, r: &mut R, what: &str) -> Result<f64> {
+        Ok(f64::from_bits(self.read_u64(r, what)?))
+    }
+
+    /// Bulk `f32` payload read: one `read_exact` for the whole array (then
+    /// an in-place byte→value pass), not one syscall-sized call per
+    /// element — block files exist for RCV1-scale inputs where tens of
+    /// millions of values are normal.
+    pub fn read_f32s<R: Read>(self, r: &mut R, n: usize, what: &str) -> Result<Vec<f32>> {
+        let mut bytes = vec![0u8; n * 4];
+        self.read_exact(r, &mut bytes, what)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(4) {
+            out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+        }
+        Ok(out)
+    }
+
+    /// Bulk `usize` payload read (stored as LE `u64`s); same one-syscall
+    /// discipline as [`BinFormat::read_f32s`].
+    pub fn read_u64s<R: Read>(self, r: &mut R, n: usize, what: &str) -> Result<Vec<usize>> {
+        let mut bytes = vec![0u8; n * 8];
+        self.read_exact(r, &mut bytes, what)?;
+        let mut out = Vec::with_capacity(n);
+        for c in bytes.chunks_exact(8) {
+            out.push(u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as usize);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn scalar_and_bulk_roundtrip() {
+        let mut buf = Vec::new();
+        CHECKPOINT.write_u64(&mut buf, 0xDEAD_BEEF_0042).unwrap();
+        CHECKPOINT.write_u32(&mut buf, 7).unwrap();
+        SHARD.write_f64(&mut buf, -0.5).unwrap();
+        SHARD.write_f32s(&mut buf, &[1.5, -2.25, 0.0]).unwrap();
+        SHARD.write_u64s(&mut buf, &[3, 0, usize::MAX >> 1]).unwrap();
+
+        let mut r = Cursor::new(buf);
+        assert_eq!(CHECKPOINT.read_u64(&mut r, "a").unwrap(), 0xDEAD_BEEF_0042);
+        assert_eq!(CHECKPOINT.read_u32(&mut r, "b").unwrap(), 7);
+        assert_eq!(SHARD.read_f64(&mut r, "c").unwrap(), -0.5);
+        assert_eq!(SHARD.read_f32s(&mut r, 3, "d").unwrap(), vec![1.5, -2.25, 0.0]);
+        assert_eq!(SHARD.read_u64s(&mut r, 3, "e").unwrap(), vec![3, 0, usize::MAX >> 1]);
+    }
+
+    #[test]
+    fn truncation_messages_name_the_format() {
+        let mut r = Cursor::new(vec![0u8; 3]);
+        let err = CHECKPOINT.read_u64(&mut r, "seed").unwrap_err().to_string();
+        assert!(err.contains("truncated checkpoint (reading seed)"), "{err}");
+        let mut r = Cursor::new(vec![0u8; 3]);
+        let err = SHARD.read_u32(&mut r, "format version").unwrap_err().to_string();
+        assert!(err.contains("truncated shard file (reading format version)"), "{err}");
+    }
+}

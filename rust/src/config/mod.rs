@@ -10,6 +10,7 @@ use crate::nmf::MuSchedule;
 use crate::secure::SecureAlgo;
 use crate::sketch::SketchKind;
 use crate::solvers::SolverKind;
+use crate::transport::wire::Precision;
 
 /// Which algorithm family an experiment runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,6 +79,12 @@ pub struct ExperimentConfig {
     pub local_iters: usize,
 
     pub comm: CommModel,
+    /// Overlap collective wire time with the next factor-independent GEMM
+    /// (`network.overlap`; bit-identical, off by default).
+    pub overlap_comm: bool,
+    /// Wire precision for collective factor payloads (`network.precision`:
+    /// `f32` | `fp16` | `bf16`).
+    pub wire_precision: Precision,
     /// TCP transport bootstrap timeout in seconds (`dsanls launch`/`worker`;
     /// data-plane receives allow 4× this).
     pub net_timeout_s: f64,
@@ -109,6 +116,8 @@ impl Default for ExperimentConfig {
             rounds: 20,
             local_iters: 5,
             comm: CommModel::default(),
+            overlap_comm: false,
+            wire_precision: Precision::F32,
             net_timeout_s: 30.0,
             output_dir: "results".into(),
             backend_pjrt: false,
@@ -168,6 +177,14 @@ impl ExperimentConfig {
             "secure.local_iters" => self.local_iters = parse_usize(v)?,
             "network.latency_us" => self.comm.latency = parse_f64(v)? * 1e-6,
             "network.bandwidth_gbps" => self.comm.bandwidth = parse_f64(v)? * 125e6,
+            "network.overlap" => {
+                self.overlap_comm = v
+                    .parse::<bool>()
+                    .map_err(|_| format!("network.overlap: expected true/false, got {v}"))?
+            }
+            "network.precision" => {
+                self.wire_precision = v.parse::<Precision>().map_err(|e| e.to_string())?
+            }
             "network.timeout_s" => self.net_timeout_s = parse_f64(v)?,
             "output.dir" => self.output_dir = v.into(),
             other => return Err(format!("unknown config key: {other}")),
@@ -244,5 +261,18 @@ bandwidth_gbps = 10
         cfg.apply("experiment.rank", "25").unwrap();
         assert_eq!(cfg.rank, 25);
         assert!(cfg.apply("experiment.rank", "x").is_err());
+    }
+
+    #[test]
+    fn network_overlap_and_precision_keys() {
+        let mut cfg = ExperimentConfig::default();
+        assert!(!cfg.overlap_comm);
+        assert_eq!(cfg.wire_precision, Precision::F32);
+        cfg.apply("network.overlap", "true").unwrap();
+        cfg.apply("network.precision", "bf16").unwrap();
+        assert!(cfg.overlap_comm);
+        assert_eq!(cfg.wire_precision, Precision::Bf16);
+        assert!(cfg.apply("network.overlap", "maybe").is_err());
+        assert!(cfg.apply("network.precision", "int8").is_err());
     }
 }

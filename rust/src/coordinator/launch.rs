@@ -50,7 +50,7 @@ use crate::nmf::job::{Algo, Algorithm as _, RankEnv, RankOutput};
 use crate::secure::{asyn, syn, SecureAlgo};
 use crate::transport::wire::{
     self, decode_text, encode_text, push_f64_bits, push_u64_bits, take_f64_bits, take_u64_bits,
-    Frame, FrameKind,
+    Frame, FrameKind, Precision,
 };
 use crate::transport::{Rendezvous, TcpComm, TcpOptions};
 
@@ -763,6 +763,8 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
     let mut max_seconds: Option<f64> = None;
     let mut fault_rank: Option<usize> = None;
     let mut fault_iteration: Option<usize> = None;
+    let mut overlap = false;
+    let mut wire_precision: Option<Precision> = None;
     let mut stop_forward: Vec<String> = Vec::new();
     let mut forward: Vec<String> = Vec::new();
     let mut i = 0;
@@ -858,6 +860,15 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
                 verify_sim = true;
                 i += 1;
             }
+            "--overlap" => {
+                overlap = true;
+                i += 1;
+            }
+            "--wire-precision" => {
+                let v = args.get(i + 1).context("--wire-precision needs f32|fp16|bf16")?;
+                wire_precision = Some(v.parse()?);
+                i += 2;
+            }
             "--config" => {
                 forward.push(args[i].clone());
                 forward.push(args.get(i + 1).context("--config needs a path")?.clone());
@@ -875,6 +886,14 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
     if let Some(n) = nodes_override {
         cfg.nodes = n;
         forward.push(format!("--experiment.nodes={n}"));
+    }
+    if overlap {
+        cfg.overlap_comm = true;
+        forward.push("--network.overlap=true".into());
+    }
+    if let Some(p) = wire_precision {
+        cfg.wire_precision = p;
+        forward.push(format!("--network.precision={p}"));
     }
     if let Some(dir) = &shards {
         forward.push("--shards".into());
@@ -1352,6 +1371,25 @@ mod tests {
         assert!(!o.forward.iter().any(|a| a == "--verify-sim"));
         assert_eq!(o.retries, 0);
         assert!(o.checkpoint.is_none() && o.resume.is_none() && o.fault.is_none());
+    }
+
+    #[test]
+    fn launch_overlap_and_precision_flags_parse_and_forward() {
+        let args: Vec<String> = ["--nodes", "2", "--overlap", "--wire-precision", "bf16"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let o = parse_launch_args(&args).unwrap();
+        assert!(o.cfg.overlap_comm);
+        assert_eq!(o.cfg.wire_precision, Precision::Bf16);
+        // the sugar flags forward as config overrides so workers inherit them
+        assert!(o.forward.iter().any(|a| a == "--network.overlap=true"));
+        assert!(o.forward.iter().any(|a| a == "--network.precision=bf16"));
+        assert!(!o.forward.iter().any(|a| a == "--overlap" || a == "--wire-precision"));
+
+        let args: Vec<String> =
+            ["--wire-precision", "int8"].iter().map(|s| s.to_string()).collect();
+        assert!(parse_launch_args(&args).is_err());
     }
 
     #[test]

@@ -657,75 +657,53 @@ pub fn block_path(dir: &Path, rank: usize, axis: Axis) -> PathBuf {
     dir.join(format!("rank-{rank}.{}.blk", axis.name()))
 }
 
+/// Scalar/bulk encodings come from the shared [`crate::binio`] module
+/// (bulk reads are one `read_exact` per array — block files exist for
+/// RCV1-scale inputs); `IO` pins the "shard file" error wording.
+const IO: crate::binio::BinFormat = crate::binio::SHARD;
+
 fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
-    w.write_all(&v.to_le_bytes()).context("writing shard u64")
+    IO.write_u64(w, v)
 }
 
 fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
-    w.write_all(&v.to_le_bytes()).context("writing shard u32")
+    IO.write_u32(w, v)
 }
 
 fn write_f64<W: Write>(w: &mut W, v: f64) -> Result<()> {
-    w.write_all(&v.to_bits().to_le_bytes()).context("writing shard f64")
+    IO.write_f64(w, v)
 }
 
 fn write_f32s<W: Write>(w: &mut W, vs: &[f32]) -> Result<()> {
-    for &v in vs {
-        w.write_all(&v.to_le_bytes()).context("writing shard f32 payload")?;
-    }
-    Ok(())
+    IO.write_f32s(w, vs)
 }
 
 fn write_u64s<W: Write>(w: &mut W, vs: &[usize]) -> Result<()> {
-    for &v in vs {
-        write_u64(w, v as u64)?;
-    }
-    Ok(())
+    IO.write_u64s(w, vs)
 }
 
 fn read_exact_ctx<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
-    r.read_exact(buf)
-        .with_context(|| format!("truncated shard file (reading {what})"))
+    IO.read_exact(r, buf, what)
 }
 
 fn read_u64<R: Read>(r: &mut R, what: &str) -> Result<u64> {
-    let mut b = [0u8; 8];
-    read_exact_ctx(r, &mut b, what)?;
-    Ok(u64::from_le_bytes(b))
+    IO.read_u64(r, what)
 }
 
 fn read_u32<R: Read>(r: &mut R, what: &str) -> Result<u32> {
-    let mut b = [0u8; 4];
-    read_exact_ctx(r, &mut b, what)?;
-    Ok(u32::from_le_bytes(b))
+    IO.read_u32(r, what)
 }
 
 fn read_f64<R: Read>(r: &mut R, what: &str) -> Result<f64> {
-    Ok(f64::from_bits(read_u64(r, what)?))
+    IO.read_f64(r, what)
 }
 
-/// Bulk payload reads: one `read_exact` per array (then an in-place
-/// byte→value pass), not one syscall-sized call per element — block files
-/// exist for RCV1-scale inputs where tens of millions of values are
-/// normal.
 fn read_f32s<R: Read>(r: &mut R, n: usize, what: &str) -> Result<Vec<f32>> {
-    let mut bytes = vec![0u8; n * 4];
-    read_exact_ctx(r, &mut bytes, what)?;
-    let mut out = Vec::with_capacity(n);
-    for c in bytes.chunks_exact(4) {
-        out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-    }
-    Ok(out)
+    IO.read_f32s(r, n, what)
 }
 
 fn read_u64s<R: Read>(r: &mut R, n: usize, what: &str) -> Result<Vec<usize>> {
-    let mut bytes = vec![0u8; n * 8];
-    read_exact_ctx(r, &mut bytes, what)?;
-    let mut out = Vec::with_capacity(n);
-    for c in bytes.chunks_exact(8) {
-        out.push(u64::from_le_bytes([c[0], c[1], c[2], c[3], c[4], c[5], c[6], c[7]]) as usize);
-    }
-    Ok(out)
+    IO.read_u64s(r, n, what)
 }
 
 fn check_magic<R: Read>(r: &mut R, expect: &[u8; 8], what: &str) -> Result<()> {

@@ -58,7 +58,8 @@
 
 use std::time::{Duration, Instant};
 
-use crate::transport::{Communicator, SimCluster, SimComm, TcpComm, Timing};
+use crate::transport::wire::Precision;
+use crate::transport::{Communicator, PendingExchange, SimCluster, SimComm, TcpComm, Timing};
 
 /// Modelled interconnect: latency (seconds) + bandwidth (bytes/second).
 /// Default is a 10 Gbps / 100 µs datacenter link (the paper's cluster is
@@ -277,6 +278,146 @@ impl<C: Communicator> NodeCtx<C> {
         g.parts
     }
 
+    /// [`NodeCtx::all_reduce_sum`] with the payload quantized to
+    /// `precision` on the wire. `Precision::F32` delegates to the exact
+    /// path (bit-identical, byte-identical); the 2-byte precisions charge
+    /// the quantized byte volume and sum the round-tripped contributions —
+    /// still in rank order, so the result stays bit-identical across
+    /// backends at every precision.
+    pub fn all_reduce_sum_q(&mut self, buf: &mut [f32], precision: Precision) {
+        if precision == Precision::F32 {
+            return self.all_reduce_sum(buf);
+        }
+        let pending = self.all_reduce_start(buf, precision);
+        self.all_reduce_finish(pending, buf);
+    }
+
+    /// Post a non-blocking all-reduce of `buf` (quantized to `precision`
+    /// on the wire) and return the in-flight handle. The caller runs
+    /// local compute, then calls [`NodeCtx::all_reduce_finish`] — pendings
+    /// must finish in start order, all before the next blocking
+    /// collective.
+    ///
+    /// With no compute between start and finish the accounting degenerates
+    /// to exactly the blocking [`NodeCtx::all_reduce_sum`] numbers; with
+    /// compute in between, wire time that the compute covered is charged
+    /// to neither `comm_time` nor `stall_time` — that is the overlap win
+    /// the modelled clock measures.
+    pub fn all_reduce_start(&mut self, buf: &[f32], precision: Precision) -> PendingReduce {
+        let wire_bytes = buf.len() * precision.bytes_per_element();
+        let pending = self
+            .comm
+            .exchange_start_q(self.clock, buf, precision)
+            .unwrap_or_else(|e| panic!("all-reduce start failed on rank {}: {e}", self.rank));
+        PendingReduce { pending, wire_bytes, start_clock: self.clock, len: buf.len() }
+    }
+
+    /// Wait for a posted all-reduce and fold the result into `buf`
+    /// (`buf ← Σ_r buf_r`, rank-ordered). `buf` must be the same length
+    /// that was posted (its current contents are overwritten).
+    pub fn all_reduce_finish(&mut self, pending: PendingReduce, buf: &mut [f32]) {
+        let PendingReduce { pending, wire_bytes, start_clock, len } = pending;
+        debug_assert_eq!(len, buf.len(), "all_reduce_finish length mismatch");
+        let tick = Instant::now(); // Measured: time only the blocked wait
+        let g = pending
+            .wait()
+            .unwrap_or_else(|e| panic!("all-reduce failed on rank {}: {e}", self.rank));
+        buf.fill(0.0);
+        for slot in &g.parts {
+            debug_assert_eq!(slot.len(), buf.len(), "all_reduce_sum length mismatch");
+            for (b, v) in buf.iter_mut().zip(slot.iter()) {
+                *b += v;
+            }
+        }
+        if !self.suppress {
+            self.stats.messages += 1;
+            match self.timing {
+                Timing::Modelled => {
+                    let t = self.model.all_reduce_time(wire_bytes, self.nodes);
+                    // the reduction lands once the last contributor posted
+                    // and the wire round completed
+                    let arrival = g.max_clock.max(start_clock) + t;
+                    let wait = (arrival - self.clock).max(0.0);
+                    // of the wait, up to t is wire time; the rest is
+                    // straggler stall (identical split to the blocking
+                    // path when nothing overlapped)
+                    let wire = wait.min(t);
+                    self.stats.comm_time += wire;
+                    self.stats.stall_time += wait - wire;
+                    self.stats.bytes_sent += wire_bytes;
+                    self.stats.bytes_received += wire_bytes;
+                    self.clock = self.clock.max(arrival);
+                }
+                Timing::Measured => {
+                    let dt = tick.elapsed().as_secs_f64();
+                    let peers = self.nodes.saturating_sub(1);
+                    self.stats.comm_time += dt;
+                    self.stats.bytes_sent += wire_bytes * peers;
+                    self.stats.bytes_received += wire_bytes * peers;
+                    self.clock += dt;
+                }
+            }
+        }
+    }
+
+    /// [`NodeCtx::all_gather`] with contributions quantized to `precision`
+    /// on the wire (`Precision::F32` is byte- and bit-identical to the
+    /// exact path).
+    pub fn all_gather_q(&mut self, data: &[f32], precision: Precision) -> Vec<Vec<f32>> {
+        if precision == Precision::F32 {
+            return self.all_gather(data);
+        }
+        let pending = self.all_gather_start(data, precision);
+        self.all_gather_finish(pending)
+    }
+
+    /// Post a non-blocking all-gather (see [`NodeCtx::all_reduce_start`]
+    /// for the overlap/ordering contract).
+    pub fn all_gather_start(&mut self, data: &[f32], precision: Precision) -> PendingGather {
+        let own_wire = data.len() * precision.bytes_per_element();
+        let pending = self
+            .comm
+            .exchange_start_q(self.clock, data, precision)
+            .unwrap_or_else(|e| panic!("all-gather start failed on rank {}: {e}", self.rank));
+        PendingGather { pending, own_wire, start_clock: self.clock, precision }
+    }
+
+    /// Wait for a posted all-gather; returns all contributions in rank
+    /// order.
+    pub fn all_gather_finish(&mut self, pending: PendingGather) -> Vec<Vec<f32>> {
+        let PendingGather { pending, own_wire, start_clock, precision } = pending;
+        let tick = Instant::now();
+        let g = pending
+            .wait()
+            .unwrap_or_else(|e| panic!("all-gather failed on rank {}: {e}", self.rank));
+        if !self.suppress {
+            let elem = precision.bytes_per_element();
+            let total: usize = g.parts.iter().map(|s| s.len() * elem).sum();
+            let recv = total.saturating_sub(own_wire);
+            let peers = self.nodes.saturating_sub(1);
+            self.stats.messages += peers;
+            self.stats.bytes_sent += own_wire * peers;
+            self.stats.bytes_received += recv;
+            match self.timing {
+                Timing::Modelled => {
+                    let t = self.model.all_gather_time(recv, self.nodes);
+                    let arrival = g.max_clock.max(start_clock) + t;
+                    let wait = (arrival - self.clock).max(0.0);
+                    let wire = wait.min(t);
+                    self.stats.comm_time += wire;
+                    self.stats.stall_time += wait - wire;
+                    self.clock = self.clock.max(arrival);
+                }
+                Timing::Measured => {
+                    let dt = tick.elapsed().as_secs_f64();
+                    self.stats.comm_time += dt;
+                    self.clock += dt;
+                }
+            }
+        }
+        g.parts
+    }
+
     /// Current virtual time in seconds.
     pub fn clock(&self) -> f64 {
         self.clock
@@ -286,6 +427,26 @@ impl<C: Communicator> NodeCtx<C> {
     pub fn stats(&self) -> CommStats {
         self.stats
     }
+}
+
+/// An in-flight [`NodeCtx::all_reduce_start`]: the sends are posted, the
+/// clock/byte accounting is deferred to [`NodeCtx::all_reduce_finish`].
+pub struct PendingReduce {
+    pending: PendingExchange,
+    /// Bytes this rank's contribution occupies on the wire (already
+    /// precision-scaled).
+    wire_bytes: usize,
+    /// Virtual clock when the reduction was posted.
+    start_clock: f64,
+    len: usize,
+}
+
+/// An in-flight [`NodeCtx::all_gather_start`].
+pub struct PendingGather {
+    pending: PendingExchange,
+    own_wire: usize,
+    start_clock: f64,
+    precision: Precision,
 }
 
 // ---------------------------------------------------------------------------
@@ -501,5 +662,104 @@ mod tests {
         let tcp = run_tcp_cluster(3, CommModel::default(), |ctx| collective_mix_node(ctx))
             .expect("tcp cluster failed");
         assert_eq!(sim, tcp);
+    }
+
+    #[test]
+    fn overlapped_reduce_matches_blocking_result_and_degenerate_accounting() {
+        // same payloads through both paths; with zero compute between
+        // start and finish, clock/stall/bytes must match blocking exactly
+        let blocking = run_cluster(3, CommModel::default(), |ctx| {
+            if ctx.rank == 0 {
+                ctx.advance(1.0);
+            }
+            let mut buf = vec![(ctx.rank + 1) as f32 * 0.25; 32];
+            ctx.all_reduce_sum(&mut buf);
+            (buf, ctx.clock(), ctx.stats())
+        });
+        let overlapped = run_cluster(3, CommModel::default(), |ctx| {
+            if ctx.rank == 0 {
+                ctx.advance(1.0);
+            }
+            let mut buf = vec![(ctx.rank + 1) as f32 * 0.25; 32];
+            let p = ctx.all_reduce_start(&buf, Precision::F32);
+            ctx.all_reduce_finish(p, &mut buf);
+            (buf, ctx.clock(), ctx.stats())
+        });
+        for ((b_buf, b_clock, b_stats), (o_buf, o_clock, o_stats)) in
+            blocking.iter().zip(overlapped.iter())
+        {
+            assert_eq!(b_buf, o_buf);
+            assert!((b_clock - o_clock).abs() < 1e-12, "{b_clock} vs {o_clock}");
+            assert_eq!(b_stats.bytes_sent, o_stats.bytes_sent);
+            assert_eq!(b_stats.messages, o_stats.messages);
+            assert!((b_stats.comm_time - o_stats.comm_time).abs() < 1e-12);
+            assert!((b_stats.stall_time - o_stats.stall_time).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn overlap_hides_wire_time_behind_compute() {
+        // wire takes 2·(latency) = 2s for a tiny payload; 5s of compute
+        // posted between start and finish must fully hide it
+        let model = CommModel { latency: 1.0, bandwidth: f64::INFINITY };
+        let results = run_cluster(2, model, |ctx| {
+            let mut buf = vec![1.0f32; 4];
+            let p = ctx.all_reduce_start(&buf, Precision::F32);
+            ctx.advance(5.0); // overlapped local compute
+            ctx.all_reduce_finish(p, &mut buf);
+            (ctx.clock(), ctx.stats())
+        });
+        for (clock, stats) in &results {
+            // arrival = max_clock(0) + 2 < clock(5): nothing to wait for
+            assert!((clock - 5.0).abs() < 1e-9, "clock {clock}");
+            assert_eq!(stats.comm_time, 0.0, "wire time should be hidden");
+            assert_eq!(stats.stall_time, 0.0);
+            // bytes are still charged — overlap hides time, not traffic
+            assert_eq!(stats.bytes_sent, 16);
+        }
+    }
+
+    #[test]
+    fn quantized_reduce_halves_bytes_and_stays_deterministic() {
+        let exact = run_cluster(3, CommModel::default(), |ctx| {
+            let mut buf = vec![0.1f32 + ctx.rank as f32; 64];
+            ctx.all_reduce_sum_q(&mut buf, Precision::F32);
+            (buf, ctx.stats().bytes_sent)
+        });
+        let quant = run_cluster(3, CommModel::default(), |ctx| {
+            let mut buf = vec![0.1f32 + ctx.rank as f32; 64];
+            ctx.all_reduce_sum_q(&mut buf, Precision::Bf16);
+            (buf, ctx.stats().bytes_sent)
+        });
+        // all ranks agree bit-for-bit within each precision
+        for r in 1..3 {
+            assert_eq!(exact[0].0, exact[r].0);
+            assert_eq!(quant[0].0, quant[r].0);
+        }
+        // bf16 charges exactly half the exact bytes
+        assert_eq!(exact[0].1, 64 * 4);
+        assert_eq!(quant[0].1, 64 * 2);
+        // and the quantized sum is close but not identical
+        let rel = (quant[0].0[0] - exact[0].0[0]).abs() / exact[0].0[0].abs();
+        assert!(rel < 1.0 / 128.0, "bf16 sum off by {rel}");
+        assert_ne!(exact[0].0, quant[0].0);
+    }
+
+    #[test]
+    fn quantized_gather_accounts_quantized_bytes() {
+        let results = run_cluster(2, CommModel::default(), |ctx| {
+            let mine = vec![0.5f32 + ctx.rank as f32; 10];
+            let parts = ctx.all_gather_q(&mine, Precision::Fp16);
+            (parts, ctx.stats())
+        });
+        for (parts, stats) in &results {
+            assert_eq!(parts.len(), 2);
+            for (r, p) in parts.iter().enumerate() {
+                let expect = Precision::Fp16.round_trip(0.5 + r as f32);
+                assert!(p.iter().all(|&v| v.to_bits() == expect.to_bits()));
+            }
+            assert_eq!(stats.bytes_sent, 10 * 2); // 10 elems × 2 bytes × 1 peer
+            assert_eq!(stats.bytes_received, 10 * 2);
+        }
     }
 }

@@ -29,6 +29,7 @@
 //! build time, and the `dsanls` binary is self-contained afterwards.
 
 pub mod algos;
+pub mod binio;
 pub mod config;
 pub mod coordinator;
 pub mod data;

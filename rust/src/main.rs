@@ -67,7 +67,8 @@ fn usage() {
          USAGE: dsanls <run|launch|worker|shard|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
          launch:  dsanls launch --nodes N [--port P] [--bind HOST] [--hosts FILE] [--shards DIR]\n\
                   [--max-seconds S] [--target-error E] [--checkpoint PATH [--checkpoint-every K]]\n\
-                  [--resume PATH] [--retries N] [--verify-sim] [--config FILE] [--key=value ...]\n\
+                  [--resume PATH] [--retries N] [--verify-sim] [--overlap]\n\
+                  [--wire-precision f32|fp16|bf16] [--config FILE] [--key=value ...]\n\
                   runs the experiment over real TCP worker processes (spawned locally, or\n\
                   started per host by the operator with --hosts — see DEPLOYMENT.md);\n\
                   stop policies end the run early (deadline / convergence), --checkpoint\n\
@@ -89,7 +90,7 @@ fn usage() {
            sketch:     kind d_u d_v\n\
            solver:     kind alpha beta\n\
            secure:     t1 t2 skew rounds local_iters\n\
-           network:    latency_us bandwidth_gbps timeout_s\n\
+           network:    latency_us bandwidth_gbps timeout_s overlap precision\n\
            output:     dir",
         dsanls::VERSION
     );

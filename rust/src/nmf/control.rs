@@ -502,29 +502,28 @@ pub const CHECKPOINT_FORMAT_VERSION: u32 = 1;
 const CKPT_MAGIC: &[u8; 8] = b"DSCKPT01";
 const CKPT_FOOTER: &[u8; 8] = b"DSCKEND1";
 
+/// Scalar/bulk encodings come from the shared [`crate::binio`] module;
+/// `IO` pins the "checkpoint" error wording.
+const IO: crate::binio::BinFormat = crate::binio::CHECKPOINT;
+
 fn write_u64<W: Write>(w: &mut W, v: u64) -> Result<()> {
-    w.write_all(&v.to_le_bytes()).context("writing checkpoint u64")
+    IO.write_u64(w, v)
 }
 
 fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
-    w.write_all(&v.to_le_bytes()).context("writing checkpoint u32")
+    IO.write_u32(w, v)
 }
 
 fn read_exact_ctx<R: Read>(r: &mut R, buf: &mut [u8], what: &str) -> Result<()> {
-    r.read_exact(buf)
-        .with_context(|| format!("truncated checkpoint (reading {what})"))
+    IO.read_exact(r, buf, what)
 }
 
 fn read_u64<R: Read>(r: &mut R, what: &str) -> Result<u64> {
-    let mut b = [0u8; 8];
-    read_exact_ctx(r, &mut b, what)?;
-    Ok(u64::from_le_bytes(b))
+    IO.read_u64(r, what)
 }
 
 fn read_u32<R: Read>(r: &mut R, what: &str) -> Result<u32> {
-    let mut b = [0u8; 4];
-    read_exact_ctx(r, &mut b, what)?;
-    Ok(u32::from_le_bytes(b))
+    IO.read_u32(r, what)
 }
 
 fn write_mat<W: Write>(w: &mut W, m: &Mat) -> Result<()> {
@@ -543,12 +542,7 @@ fn read_mat<R: Read>(r: &mut R, what: &str) -> Result<Mat> {
         .checked_mul(cols)
         .filter(|&n| n <= (1usize << 31))
         .with_context(|| format!("checkpoint {what} claims an implausible {rows}x{cols} shape"))?;
-    let mut bytes = vec![0u8; n * 4];
-    read_exact_ctx(r, &mut bytes, what)?;
-    let mut data = Vec::with_capacity(n);
-    for c in bytes.chunks_exact(4) {
-        data.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
-    }
+    let data = IO.read_f32s(r, n, what)?;
     Ok(Mat::from_vec(rows, cols, data))
 }
 

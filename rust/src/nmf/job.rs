@@ -108,6 +108,10 @@ use crate::secure::{AuditLog, SecureAlgo};
 use crate::solvers::SolverKind;
 use crate::transport::{Communicator, Rendezvous, SimCluster, SimComm, TcpComm, TcpOptions};
 
+/// Wire precision for collective factor payloads, re-exported for the
+/// builder surface: `.wire_precision(Wire::Bf16)`.
+pub use crate::transport::wire::Precision as Wire;
+
 // ---------------------------------------------------------------------------
 // Outcome
 // ---------------------------------------------------------------------------
@@ -698,6 +702,8 @@ pub fn dsanls_options(cfg: &ExperimentConfig) -> DsanlsOptions {
         mu: cfg.mu,
         comm: cfg.comm,
         box_bound: false,
+        overlap: cfg.overlap_comm,
+        precision: cfg.wire_precision,
     }
 }
 
@@ -712,6 +718,8 @@ pub fn dist_anls_options(cfg: &ExperimentConfig, solver: SolverKind) -> DistAnls
         eval_every: cfg.eval_every,
         comm: cfg.comm,
         inner_sweeps: 1,
+        overlap: cfg.overlap_comm,
+        precision: cfg.wire_precision,
     }
 }
 
@@ -731,6 +739,8 @@ pub fn syn_options(cfg: &ExperimentConfig) -> SynOptions {
         seed: cfg.seed,
         eval_every: cfg.eval_every,
         comm: cfg.comm,
+        overlap: cfg.overlap_comm,
+        precision: cfg.wire_precision,
     }
 }
 
@@ -789,6 +799,10 @@ pub struct JobBuilder<'a> {
     stop: StopPolicy,
     checkpoint: Option<CheckpointCfg>,
     resume: Option<PathBuf>,
+    /// `Some` overrides the algorithm options' `overlap` flag at build time.
+    overlap: Option<bool>,
+    /// `Some` overrides the algorithm options' wire precision at build time.
+    precision: Option<Wire>,
 }
 
 impl<'a> Job<'a> {
@@ -805,6 +819,8 @@ impl<'a> Job<'a> {
             stop: StopPolicy::default(),
             checkpoint: None,
             resume: None,
+            overlap: None,
+            precision: None,
         }
     }
 
@@ -1248,14 +1264,54 @@ impl<'a> JobBuilder<'a> {
         self
     }
 
+    /// Overlap each collective's wire time with the next factor-independent
+    /// computation (double-buffered pipeline). Off by default; bit-identical
+    /// to the blocking schedule. Not supported by the asynchronous protocol
+    /// (whose sends are already fire-and-forget) — [`JobBuilder::build`]
+    /// returns a typed error there.
+    pub fn overlap_comm(mut self, on: bool) -> Self {
+        self.overlap = Some(on);
+        self
+    }
+
+    /// Ship collective factor payloads at a reduced wire precision
+    /// ([`Wire::Fp16`] / [`Wire::Bf16`] — ~2× fewer bytes, iterates
+    /// perturbed within the format's relative error; [`Wire::F32`] is the
+    /// exact default). Control/stats lanes always stay f32. Not supported
+    /// by the asynchronous protocol.
+    pub fn wire_precision(mut self, precision: Wire) -> Self {
+        self.precision = Some(precision);
+        self
+    }
+
     /// Validate the required axes and produce the [`Job`].
     pub fn build(self) -> Result<Job<'a>> {
-        let algo = self
+        let mut algo = self
             .algo
             .context("job needs an algorithm — call .algorithm(Algo::...)")?;
         let data = self
             .data
             .context("job needs a data source — call .data(DataSource::...)")?;
+        if self.overlap.is_some() || self.precision.is_some() {
+            match &mut algo {
+                Algo::Dsanls(o) => {
+                    o.overlap = self.overlap.unwrap_or(o.overlap);
+                    o.precision = self.precision.unwrap_or(o.precision);
+                }
+                Algo::DistAnls(o) => {
+                    o.overlap = self.overlap.unwrap_or(o.overlap);
+                    o.precision = self.precision.unwrap_or(o.precision);
+                }
+                Algo::Syn(o, _) => {
+                    o.overlap = self.overlap.unwrap_or(o.overlap);
+                    o.precision = self.precision.unwrap_or(o.precision);
+                }
+                Algo::Asyn(..) => crate::bail!(
+                    "overlap_comm/wire_precision are not supported by the asynchronous \
+                     protocols — their parameter-server sends are already fire-and-forget"
+                ),
+            }
+        }
         Ok(Job {
             algo,
             data,
@@ -1550,6 +1606,49 @@ mod tests {
             .run()
             .unwrap_err();
         assert!(err.to_string().contains("parties"), "{err}");
+    }
+
+    #[test]
+    fn builder_flags_apply_overlap_and_precision() {
+        let cfg = ExperimentConfig::default();
+        let m = low_rank(10, 8, 2, 5);
+        let job = Job::builder()
+            .algorithm(Algo::Dsanls(dsanls_options(&cfg)))
+            .data(DataSource::Full(&m))
+            .overlap_comm(true)
+            .wire_precision(Wire::Bf16)
+            .build()
+            .unwrap();
+        match &job.algo {
+            Algo::Dsanls(o) => {
+                assert!(o.overlap);
+                assert_eq!(o.precision, Wire::Bf16);
+            }
+            other => panic!("unexpected algo {other:?}"),
+        }
+
+        // the asynchronous protocols reject both flags with a typed error
+        let err = Job::builder()
+            .algorithm(Algo::Asyn(asyn_options(&cfg), SecureAlgo::AsynSd))
+            .data(DataSource::Full(&m))
+            .overlap_comm(true)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("not supported"), "{err}");
+
+        // config keys flow through the mappers
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply("network.overlap", "true").unwrap();
+        cfg.apply("network.precision", "fp16").unwrap();
+        let o = dsanls_options(&cfg);
+        assert!(o.overlap);
+        assert_eq!(o.precision, Wire::Fp16);
+        let o = dist_anls_options(&cfg, SolverKind::Hals);
+        assert!(o.overlap);
+        assert_eq!(o.precision, Wire::Fp16);
+        let o = syn_options(&cfg);
+        assert!(o.overlap);
+        assert_eq!(o.precision, Wire::Fp16);
     }
 
     #[test]

@@ -32,6 +32,7 @@ use crate::nmf::{init_factors_from, rel_error_parts, MuSchedule};
 use crate::rng::{Role, StreamRng};
 use crate::sketch::{SketchKind, SketchMatrix};
 use crate::solvers::{self, Normal, SolverKind};
+use crate::transport::wire::Precision;
 use crate::transport::Communicator;
 
 /// Options shared by the synchronous secure protocols.
@@ -55,6 +56,13 @@ pub struct SynOptions {
     pub seed: u64,
     pub eval_every: usize,
     pub comm: CommModel,
+    /// Overlap the sketched consensus reduction with the factor-independent
+    /// half of the next U update (`A = M_{:J_r}·S`). Bit-identical — only
+    /// the schedule changes. Applies to the Syn-SSD variants.
+    pub overlap: bool,
+    /// Wire precision for the consensus `U` payloads ([`Precision::F32`] =
+    /// exact). The scalar error-poll lane always travels at f32.
+    pub precision: Precision,
 }
 
 impl Default for SynOptions {
@@ -73,6 +81,8 @@ impl Default for SynOptions {
             seed: 42,
             eval_every: 1,
             comm: CommModel::default(),
+            overlap: false,
+            precision: Precision::F32,
         }
     }
 }
@@ -184,24 +194,36 @@ fn syn_node_on_block<C: Communicator>(
 
         let mut iter = 0usize;
         let mut stop = StopReason::Completed;
+        // factor-independent half of the next sketched U update, computed
+        // behind the consensus reduction when `opts.overlap` is set
+        let mut prefetch: Option<(SketchMatrix, Mat)> = None;
         'outer: for _t1 in 0..opts.t1 {
             for _t2 in 0..opts.t2 {
                 // collective stop decision — every party leaves together
+                // (never reached with a pending exchange in flight: each
+                // consensus reduction finishes within its own iteration)
                 if let Some(reason) = ctl.poll_sync(ctx, iter, trace.last_error()) {
                     stop = reason;
                     break 'outer;
                 }
 
                 // ---- U_(r) update: min ‖M_{:J_r} − U·V_{J_r:}ᵀ‖ ----
+                let pre = prefetch.take();
                 ctx.compute(|| {
                     if sketch_u && d2 < jr {
                         // per-party sketch over the private column dim; no
-                        // cross-party constraint (purely local problem)
-                        let mut rng = stream
-                            .for_node(rank, 0xA11C + iter as u64)
-                            .clone();
-                        let s = SketchMatrix::generate(opts.sketch, jr, d2, &mut rng);
-                        let a = s.mul_right(m_col); // m×d₂
+                        // cross-party constraint (purely local problem).
+                        // `S` and `A = M_{:J_r}·S` may have been prefetched
+                        // behind the previous consensus reduction — the
+                        // arithmetic is identical either way.
+                        let (s, a) = pre.unwrap_or_else(|| {
+                            let mut rng = stream
+                                .for_node(rank, 0xA11C + iter as u64)
+                                .clone();
+                            let s = SketchMatrix::generate(opts.sketch, jr, d2, &mut rng);
+                            let a = s.mul_right(m_col); // m×d₂
+                            (s, a)
+                        });
                         let b = s.mul_rows_tn(&v_block, 0); // k×d₂
                         let (gram, cross) = solvers::normal_from(&a, &b);
                         solvers::update_auto(opts.solver, &mut u_local, &Normal::new(&gram, &cross), &opts.mu, iter);
@@ -248,7 +270,26 @@ fn syn_node_on_block<C: Communicator>(
                     if let Some(a) = audit {
                         a.record(rank, "syn-ssd/u-rows", &payload);
                     }
-                    ctx.all_reduce_sum(&mut payload);
+                    if opts.overlap {
+                        // post the reduction, then compute the next U
+                        // update's factor-independent sketch product while
+                        // it is in flight (rng keyed by `iter`, which is
+                        // already the next update's counter)
+                        let pending = ctx.all_reduce_start(&payload, opts.precision);
+                        if sketch_u && d2 < jr {
+                            prefetch = Some(ctx.compute(|| {
+                                let mut rng =
+                                    stream.for_node(rank, 0xA11C + iter as u64).clone();
+                                let s =
+                                    SketchMatrix::generate(opts.sketch, jr, d2, &mut rng);
+                                let a = s.mul_right(m_col);
+                                (s, a)
+                            }));
+                        }
+                        ctx.all_reduce_finish(pending, &mut payload);
+                    } else {
+                        ctx.all_reduce_sum_q(&mut payload, opts.precision);
+                    }
                     let inv_n = 1.0 / opts.nodes as f32;
                     for (p, &i) in rows.iter().enumerate() {
                         let row = u_local.row_mut(i);
@@ -269,7 +310,7 @@ fn syn_node_on_block<C: Communicator>(
                 if let Some(a) = audit {
                     a.record(rank, "syn-sd/u-full", &payload);
                 }
-                ctx.all_reduce_sum(&mut payload);
+                ctx.all_reduce_sum_q(&mut payload, opts.precision);
                 let inv_n = 1.0 / opts.nodes as f32;
                 for (dst, src) in u_local.data_mut().iter_mut().zip(payload.iter()) {
                     *dst = src * inv_n;
@@ -425,6 +466,36 @@ mod tests {
             "SSD {} bytes vs SD {}",
             ssd.total_bytes_sent(),
             sd.total_bytes_sent()
+        );
+    }
+
+    #[test]
+    fn overlap_is_bit_identical_and_quantized_consensus_converges() {
+        let m = low_rank(60, 48, 3, 411);
+        let cols = uniform_partition(48, 3);
+        let base_opts = opts(3);
+        let base = run_syn_ssd(&m, &cols, &base_opts, SecureAlgo::SynSsdUv, None);
+
+        let mut o = base_opts.clone();
+        o.overlap = true;
+        let over = run_syn_ssd(&m, &cols, &o, SecureAlgo::SynSsdUv, None);
+        assert_eq!(base.u.data(), over.u.data(), "U diverged under overlap");
+        assert_eq!(base.v.data(), over.v.data(), "V diverged under overlap");
+
+        let mut o = base_opts.clone();
+        o.precision = Precision::Fp16;
+        let quant = run_syn_ssd(&m, &cols, &o, SecureAlgo::SynSsdUv, None);
+        assert!(
+            quant.total_bytes_sent() < base.total_bytes_sent(),
+            "fp16 consensus must shrink traffic: {} vs {}",
+            quant.total_bytes_sent(),
+            base.total_bytes_sent()
+        );
+        assert!(
+            quant.final_error() < base.final_error() * 1.5 + 0.02,
+            "quantized {} vs exact {}",
+            quant.final_error(),
+            base.final_error()
         );
     }
 

@@ -18,7 +18,7 @@
 //! ([`crate::rng::StreamRng`]), so `S` itself is never communicated —
 //! the paper's key communication trick (Sec. 3.3).
 
-use crate::linalg::{gemm_tn, Csr, Mat};
+use crate::linalg::{gemm_nn, gemm_tn, Csr, Mat};
 use crate::rng::Pcg64;
 
 /// Which random matrix family to use (paper Sec. 3.4).
@@ -130,16 +130,34 @@ impl SketchMatrix {
 
     /// `A · S` for dense `A (m×n)` → `m×d`.
     pub fn mul_right_dense(&self, a: &Mat) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.mul_right_dense_into(a, &mut out);
+        out
+    }
+
+    /// [`Self::mul_right_dense`] into a caller-owned buffer, resized to
+    /// `m×d`. The Subsample path touches no allocator at all; Gaussian and
+    /// CountSketch write straight into `out` (the parallel GEMM may use
+    /// internal thread-local partials); Srht keeps its `padded`-length FWHT
+    /// scratch per call. Results are bitwise identical to the allocating
+    /// version for every family.
+    pub fn mul_right_dense_into(&self, a: &Mat, out: &mut Mat) {
         assert_eq!(a.cols(), self.n, "A cols != sketch n");
+        out.resize_to(a.rows(), self.d);
         match &self.repr {
-            Repr::Dense(s) => a.matmul(s),
+            Repr::Dense(s) => gemm_nn(a, s, out),
             Repr::Subsample { idx, scale } => {
-                let mut out = a.gather_cols(idx);
-                out.scale(*scale);
-                out
+                let scale = *scale;
+                for i in 0..a.rows() {
+                    let arow = a.row(i);
+                    let orow = out.row_mut(i);
+                    for (p, &j) in idx.iter().enumerate() {
+                        orow[p] = arow[j] * scale;
+                    }
+                }
             }
             Repr::CountSketch { bucket, sign } => {
-                let mut out = Mat::zeros(a.rows(), self.d);
+                out.data_mut().fill(0.0);
                 for i in 0..a.rows() {
                     let arow = a.row(i);
                     let orow = out.row_mut(i);
@@ -147,10 +165,8 @@ impl SketchMatrix {
                         orow[bucket[j]] += sign[j] * v;
                     }
                 }
-                out
             }
             Repr::Srht { sign, sel, scale, padded } => {
-                let mut out = Mat::zeros(a.rows(), self.d);
                 let mut buf = vec![0.0f32; *padded];
                 for i in 0..a.rows() {
                     buf.fill(0.0);
@@ -163,34 +179,56 @@ impl SketchMatrix {
                         orow[p] = buf[s] * scale;
                     }
                 }
-                out
             }
         }
     }
 
     /// `A · S` for sparse `A (m×n)` → dense `m×d`.
     pub fn mul_right_sparse(&self, a: &Csr) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.mul_right_sparse_into(a, &mut out);
+        out
+    }
+
+    /// [`Self::mul_right_sparse`] into a caller-owned buffer, resized to
+    /// `m×d`. Subsample keeps a `cols`-length position map per call (the
+    /// inverse of the column-index list — same trade as
+    /// [`Csr::gather_cols_dense`]); the other families write straight into
+    /// `out`.
+    pub fn mul_right_sparse_into(&self, a: &Csr, out: &mut Mat) {
         assert_eq!(a.cols(), self.n, "A cols != sketch n");
+        out.resize_to(a.rows(), self.d);
         match &self.repr {
-            Repr::Dense(s) => a.spmm(s),
+            Repr::Dense(s) => a.spmm_into(s, out),
             Repr::Subsample { idx, scale } => {
-                let mut out = a.gather_cols_dense(idx);
-                out.scale(*scale);
-                out
+                let scale = *scale;
+                let mut pos = vec![usize::MAX; self.n];
+                for (p, &j) in idx.iter().enumerate() {
+                    pos[j] = p;
+                }
+                out.data_mut().fill(0.0);
+                for i in 0..a.rows() {
+                    let orow = out.row_mut(i);
+                    for (j, v) in a.row_iter(i) {
+                        let p = pos[j];
+                        if p != usize::MAX {
+                            orow[p] = v * scale;
+                        }
+                    }
+                }
             }
             Repr::CountSketch { bucket, sign } => {
-                let mut out = Mat::zeros(a.rows(), self.d);
+                out.data_mut().fill(0.0);
                 for i in 0..a.rows() {
                     let orow = out.row_mut(i);
                     for (j, v) in a.row_iter(i) {
                         orow[bucket[j]] += sign[j] * v;
                     }
                 }
-                out
             }
             Repr::Srht { sign, sel, scale, .. } => {
                 // O(nnz · d): directly H[j, sel[p]] = (-1)^{popcount(j & sel[p])}
-                let mut out = Mat::zeros(a.rows(), self.d);
+                out.data_mut().fill(0.0);
                 for i in 0..a.rows() {
                     let orow = out.row_mut(i);
                     for (j, v) in a.row_iter(i) {
@@ -201,7 +239,6 @@ impl SketchMatrix {
                         }
                     }
                 }
-                out
             }
         }
     }
@@ -214,23 +251,40 @@ impl SketchMatrix {
         }
     }
 
+    /// [`Self::mul_right`] into a caller-owned buffer — the zero-steady-state
+    /// entry point of the overlapped pipeline ([`crate::algos::dsanls`]).
+    pub fn mul_right_into(&self, a: &crate::linalg::Matrix, out: &mut Mat) {
+        match a {
+            crate::linalg::Matrix::Dense(m) => self.mul_right_dense_into(m, out),
+            crate::linalg::Matrix::Sparse(m) => self.mul_right_sparse_into(m, out),
+        }
+    }
+
     /// `Vᵀ_block · S_block` where `v_block` holds rows
     /// `row_offset .. row_offset + v_block.rows()` of the virtual `n×k`
     /// matrix `V` — the per-node summand `B̄_r = (V_{J_r:})ᵀ S_{J_r:}` of
     /// Eq. 11. Result is `k×d`.
     pub fn mul_rows_tn(&self, v_block: &Mat, row_offset: usize) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        self.mul_rows_tn_into(v_block, row_offset, &mut out);
+        out
+    }
+
+    /// [`Self::mul_rows_tn`] into a caller-owned buffer, resized to `k×d`.
+    /// Subsample / CountSketch / Srht touch no allocator; the Gaussian path
+    /// still materialises the `rows×d` sketch row block for the GEMM.
+    pub fn mul_rows_tn_into(&self, v_block: &Mat, row_offset: usize, out: &mut Mat) {
         let rows = v_block.rows();
         let k = v_block.cols();
         assert!(row_offset + rows <= self.n, "row block outside sketch");
+        out.resize_to(k, self.d);
+        out.data_mut().fill(0.0);
         match &self.repr {
             Repr::Dense(s) => {
                 let s_block = s.row_block(row_offset..row_offset + rows);
-                let mut out = Mat::zeros(k, self.d);
-                gemm_tn(v_block, &s_block, &mut out);
-                out
+                gemm_tn(v_block, &s_block, out);
             }
             Repr::Subsample { idx, scale } => {
-                let mut out = Mat::zeros(k, self.d);
                 for (p, &g) in idx.iter().enumerate() {
                     if g >= row_offset && g < row_offset + rows {
                         let vrow = v_block.row(g - row_offset);
@@ -239,10 +293,8 @@ impl SketchMatrix {
                         }
                     }
                 }
-                out
             }
             Repr::CountSketch { bucket, sign } => {
-                let mut out = Mat::zeros(k, self.d);
                 for j in 0..rows {
                     let g = row_offset + j;
                     let (b, s) = (bucket[g], sign[g]);
@@ -252,10 +304,8 @@ impl SketchMatrix {
                         out.set(l, b, cur + s * vrow[l]);
                     }
                 }
-                out
             }
             Repr::Srht { sign, sel, scale, .. } => {
-                let mut out = Mat::zeros(k, self.d);
                 for j in 0..rows {
                     let g = row_offset + j;
                     let sv = sign[g] * scale;
@@ -268,7 +318,6 @@ impl SketchMatrix {
                         }
                     }
                 }
-                out
             }
         }
     }
@@ -448,6 +497,31 @@ mod tests {
         fwht(&mut v);
         for (a, b) in v.iter().zip(orig.iter()) {
             assert!((a / 8.0 - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn into_variants_match_allocating_paths_bitwise() {
+        // the overlapped pipeline reuses buffers across iterations, so the
+        // _into paths must reproduce the allocating paths bit-for-bit even
+        // when `out` starts with stale shape and contents
+        let mut rng = Pcg64::new(5, 9);
+        let a = Mat::rand_uniform(10, 32, 1.0, &mut rng);
+        let sparse = Csr::from_dense(
+            &Mat::from_fn(10, 32, |i, j| if (i * 13 + j * 5) % 3 == 0 { a.get(i, j) } else { 0.0 }),
+            0.0,
+        );
+        let v = Mat::rand_uniform(19, 5, 1.0, &mut rng);
+        for kind in all_kinds() {
+            let mut r = Pcg64::new(21, 6);
+            let s = SketchMatrix::generate(kind, 32, 8, &mut r);
+            let mut out = Mat::from_vec(1, 3, vec![7.0, 8.0, 9.0]); // stale
+            s.mul_right_dense_into(&a, &mut out);
+            assert_eq!(out.data(), s.mul_right_dense(&a).data(), "{kind:?} dense");
+            s.mul_right_sparse_into(&sparse, &mut out);
+            assert_eq!(out.data(), s.mul_right_sparse(&sparse).data(), "{kind:?} sparse");
+            s.mul_rows_tn_into(&v, 13, &mut out);
+            assert_eq!(out.data(), s.mul_rows_tn(&v, 13).data(), "{kind:?} rows_tn");
         }
     }
 

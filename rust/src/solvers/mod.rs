@@ -124,6 +124,13 @@ pub fn normal_from(a: &Mat, b: &Mat) -> (Mat, Mat) {
 pub struct Workspace {
     gram: Mat,
     cross: Mat,
+    /// Ping-pong pair for the overlapped pipeline: while one slot's
+    /// sketched operand feeds the current normal equations, the next
+    /// iteration's operand is prefetched into the other slot.
+    pipe: [Mat; 2],
+    /// Reduction payload scratch for the overlapped pipeline (the `k×d`
+    /// summand posted to the non-blocking all-reduce).
+    summand: Mat,
 }
 
 impl Default for Workspace {
@@ -134,7 +141,39 @@ impl Default for Workspace {
 
 impl Workspace {
     pub fn new() -> Self {
-        Workspace { gram: Mat::zeros(0, 0), cross: Mat::zeros(0, 0) }
+        Workspace {
+            gram: Mat::zeros(0, 0),
+            cross: Mat::zeros(0, 0),
+            pipe: [Mat::zeros(0, 0), Mat::zeros(0, 0)],
+            summand: Mat::zeros(0, 0),
+        }
+    }
+
+    /// Move pipeline buffer `slot` out of the workspace, leaving an empty
+    /// matrix behind (`Mat::zeros(0, 0)` holds no heap storage, so the
+    /// swap allocates nothing). The dance exists for the borrow checker:
+    /// the taken buffer is borrowed immutably as a [`Workspace::normal_from`]
+    /// operand while the workspace itself is borrowed mutably. Pair every
+    /// take with a [`Workspace::restore_pipe`] so the buffer's capacity
+    /// survives into the next iteration.
+    pub fn take_pipe(&mut self, slot: usize) -> Mat {
+        std::mem::replace(&mut self.pipe[slot], Mat::zeros(0, 0))
+    }
+
+    /// Return a buffer taken by [`Workspace::take_pipe`].
+    pub fn restore_pipe(&mut self, slot: usize, m: Mat) {
+        self.pipe[slot] = m;
+    }
+
+    /// Move the reduction-summand scratch out (same discipline as
+    /// [`Workspace::take_pipe`]).
+    pub fn take_summand(&mut self) -> Mat {
+        std::mem::replace(&mut self.summand, Mat::zeros(0, 0))
+    }
+
+    /// Return the buffer taken by [`Workspace::take_summand`].
+    pub fn restore_summand(&mut self, m: Mat) {
+        self.summand = m;
     }
 
     /// Sketched operands: `gram = B·Bᵀ` (k×k), `cross = A·Bᵀ` (rows×k)
@@ -170,6 +209,18 @@ impl Workspace {
     /// steady-state iterations reuse rather than reallocate.
     pub fn scratch_ptrs(&self) -> (usize, usize) {
         (self.gram.data().as_ptr() as usize, self.cross.data().as_ptr() as usize)
+    }
+
+    /// Buffer identities of the pipeline scratch (pipe 0, pipe 1,
+    /// summand) — the overlapped-iteration analogue of
+    /// [`Workspace::scratch_ptrs`]. Only meaningful while the buffers are
+    /// resident (not taken).
+    pub fn pipeline_ptrs(&self) -> (usize, usize, usize) {
+        (
+            self.pipe[0].data().as_ptr() as usize,
+            self.pipe[1].data().as_ptr() as usize,
+            self.summand.data().as_ptr() as usize,
+        )
     }
 }
 

@@ -44,10 +44,10 @@ pub use sim::{SimCluster, SimComm};
 pub use tcp::{Rendezvous, TcpComm, TcpOptions};
 
 use std::collections::VecDeque;
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::Duration;
 
-use crate::error::Result;
+use crate::error::{Context, Result};
 
 /// Tag marking a client's final message to the parameter server in the
 /// asynchronous protocols.
@@ -88,6 +88,140 @@ pub enum Timing {
     Measured,
 }
 
+/// An in-flight non-blocking collective started by
+/// [`Communicator::exchange_start`].
+///
+/// The sends are already posted when this value exists; only the receives
+/// are deferred. [`PendingExchange::wait`] blocks on stragglers and
+/// returns the same rank-ordered [`Gathered`] the blocking `exchange`
+/// would have — including the same sequence-skew and disconnect
+/// diagnostics, so the two paths are interchangeable failure-wise.
+///
+/// **Ordering discipline**: collective frames are consumed from per-peer
+/// FIFO queues, so pending exchanges must be waited in the order they
+/// were started, and every pending exchange must be waited before the
+/// next blocking `exchange` call.
+pub struct PendingExchange {
+    seq: u64,
+    clock: f64,
+    own: Vec<f32>,
+    rank: usize,
+    nodes: usize,
+    source: PendingSource,
+}
+
+enum PendingSource {
+    /// Completed at start time (single-rank clusters, or a backend without
+    /// a true non-blocking path falling back to the blocking exchange).
+    Ready(Gathered),
+    /// Receives drain from this simulated cluster's own inbox.
+    Sim(Arc<sim::SimCluster>),
+    /// Receives drain from the TCP reader threads' shared inbox.
+    Tcp {
+        /// This rank's frame inbox (fed by the reader threads).
+        inbox: Arc<Inbox>,
+        /// Per-receive I/O timeout (mirrors the blocking exchange).
+        timeout: Option<Duration>,
+    },
+}
+
+impl PendingExchange {
+    /// A pending exchange that already holds its result.
+    pub(crate) fn ready(g: Gathered) -> PendingExchange {
+        let nodes = g.parts.len();
+        PendingExchange {
+            seq: 0,
+            clock: g.max_clock,
+            own: Vec::new(),
+            rank: 0,
+            nodes,
+            source: PendingSource::Ready(g),
+        }
+    }
+
+    /// A pending exchange whose receives drain from a simulated cluster.
+    pub(crate) fn sim(
+        seq: u64,
+        clock: f64,
+        own: Vec<f32>,
+        rank: usize,
+        nodes: usize,
+        cluster: Arc<sim::SimCluster>,
+    ) -> PendingExchange {
+        PendingExchange { seq, clock, own, rank, nodes, source: PendingSource::Sim(cluster) }
+    }
+
+    /// A pending exchange whose receives drain from a TCP inbox.
+    pub(crate) fn tcp(
+        seq: u64,
+        clock: f64,
+        own: Vec<f32>,
+        rank: usize,
+        nodes: usize,
+        inbox: Arc<Inbox>,
+        timeout: Option<Duration>,
+    ) -> PendingExchange {
+        PendingExchange { seq, clock, own, rank, nodes, source: PendingSource::Tcp { inbox, timeout } }
+    }
+
+    /// Block until every rank's round-`seq` payload has arrived; return all
+    /// payloads in rank order plus the max clock (exactly the blocking
+    /// [`Communicator::exchange`] contract).
+    pub fn wait(self) -> Result<Gathered> {
+        let PendingExchange { seq, clock, own, rank, nodes, source } = self;
+        match source {
+            PendingSource::Ready(g) => Ok(g),
+            PendingSource::Sim(cluster) => {
+                let inbox = cluster.inbox_of(rank);
+                let mut own = Some(own);
+                let mut parts: Vec<Vec<f32>> = Vec::with_capacity(nodes);
+                let mut max_clock = clock;
+                for r in 0..nodes {
+                    if r == rank {
+                        parts.push(own.take().unwrap());
+                    } else {
+                        let msg = inbox.recv_coll(r, None)?;
+                        if msg.tag != seq {
+                            crate::bail!(
+                                "collective sequence skew: rank {} sent round {}, expected {seq}",
+                                r,
+                                msg.tag
+                            );
+                        }
+                        max_clock = max_clock.max(msg.sent_at);
+                        parts.push(msg.payload);
+                    }
+                }
+                Ok(Gathered { parts, max_clock })
+            }
+            PendingSource::Tcp { inbox, timeout } => {
+                let mut own = Some(own);
+                let mut parts: Vec<Vec<f32>> = Vec::with_capacity(nodes);
+                let mut max_clock = clock;
+                for peer in 0..nodes {
+                    if peer == rank {
+                        parts.push(own.take().unwrap());
+                    } else {
+                        let msg = inbox
+                            .recv_coll(peer, timeout)
+                            .with_context(|| format!("collective round {seq}, rank {rank}"))?;
+                        if msg.tag != seq {
+                            crate::bail!(
+                                "collective sequence skew: rank {peer} is at round {}, \
+                                 local round {seq}",
+                                msg.tag
+                            );
+                        }
+                        max_clock = max_clock.max(msg.sent_at);
+                        parts.push(msg.payload);
+                    }
+                }
+                Ok(Gathered { parts, max_clock })
+            }
+        }
+    }
+}
+
 /// The collective/P2P surface the distributed algorithms are generic over.
 ///
 /// All synchronous ranks of a cluster must issue the same sequence of
@@ -108,6 +242,40 @@ pub trait Communicator {
     /// local virtual `clock`; block until every rank's round-`t` payload
     /// arrived; return all payloads in rank order plus the max clock.
     fn exchange(&mut self, clock: f64, payload: &[f32]) -> Result<Gathered>;
+
+    /// Non-blocking variant of [`Communicator::exchange`]: post the sends
+    /// immediately and return a [`PendingExchange`] whose `wait()` blocks
+    /// only on stragglers. The caller may run local compute between start
+    /// and wait, but must wait pendings in start order and drain them all
+    /// before the next blocking `exchange` (see [`PendingExchange`]).
+    ///
+    /// The default implementation completes the exchange eagerly (correct,
+    /// just without overlap); both bundled backends override it.
+    fn exchange_start(&mut self, clock: f64, payload: &[f32]) -> Result<PendingExchange> {
+        Ok(PendingExchange::ready(self.exchange(clock, payload)?))
+    }
+
+    /// [`Communicator::exchange_start`] with the payload quantized to
+    /// `precision` on the wire. Quantization is **sender-side, applied to
+    /// the local contribution too**: every rank observes rank *r*'s part
+    /// through the same `f32 → half → f32` round-trip, so backends that
+    /// never serialise (the simulated cluster) stay bit-identical to ones
+    /// that ship real 2-byte frames (TCP, which overrides this).
+    ///
+    /// `Precision::F32` is exactly [`Communicator::exchange_start`].
+    fn exchange_start_q(
+        &mut self,
+        clock: f64,
+        payload: &[f32],
+        precision: wire::Precision,
+    ) -> Result<PendingExchange> {
+        if precision == wire::Precision::F32 {
+            return self.exchange_start(clock, payload);
+        }
+        let mut q = payload.to_vec();
+        precision.round_trip_slice(&mut q);
+        self.exchange_start(clock, &q)
+    }
 
     /// Send a tagged message to rank `to` (non-blocking hand-off).
     fn send(&mut self, to: usize, tag: u64, clock: f64, payload: &[f32]) -> Result<()>;

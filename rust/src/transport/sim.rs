@@ -15,7 +15,7 @@
 
 use std::sync::Arc;
 
-use super::{Communicator, Gathered, Inbox, P2pMsg, Timing};
+use super::{Communicator, Gathered, Inbox, P2pMsg, PendingExchange, Timing};
 use crate::error::Result;
 
 /// Shared state of one simulated cluster: an inbox per rank.
@@ -34,6 +34,12 @@ impl SimCluster {
     /// Cluster size.
     pub fn nodes(&self) -> usize {
         self.inboxes.len()
+    }
+
+    /// Rank `r`'s inbox (for [`PendingExchange`] to drain deferred
+    /// collective receives).
+    pub(crate) fn inbox_of(&self, r: usize) -> &Inbox {
+        &self.inboxes[r]
     }
 
     /// Interrupt every rank's inbox: all blocked and future receives fail
@@ -111,6 +117,29 @@ impl Communicator for SimComm {
             }
         }
         Ok(Gathered { parts, max_clock })
+    }
+
+    fn exchange_start(&mut self, clock: f64, payload: &[f32]) -> Result<PendingExchange> {
+        let n = self.nodes();
+        let seq = self.seq;
+        self.seq += 1;
+        if n == 1 {
+            return Ok(PendingExchange::ready(Gathered {
+                parts: vec![payload.to_vec()],
+                max_clock: clock,
+            }));
+        }
+        // deposits happen now — a peer already waiting on this round
+        // unblocks without us reaching our own wait()
+        for (r, inbox) in self.cluster.inboxes.iter().enumerate() {
+            if r != self.rank {
+                inbox.push_coll(
+                    self.rank,
+                    P2pMsg { from: self.rank, tag: seq, sent_at: clock, payload: payload.to_vec() },
+                );
+            }
+        }
+        Ok(PendingExchange::sim(seq, clock, payload.to_vec(), self.rank, n, self.cluster.clone()))
     }
 
     fn send(&mut self, to: usize, tag: u64, clock: f64, payload: &[f32]) -> Result<()> {
@@ -199,6 +228,61 @@ mod tests {
                 let expect: f32 = (0..3).map(|r| (round * 10 + r) as f32).sum();
                 assert_eq!(*s, expect, "round {round}");
             }
+        }
+    }
+
+    #[test]
+    fn exchange_start_matches_blocking_exchange() {
+        for n in [1usize, 2, 4] {
+            let results = run_ranks(n, |mut c| {
+                let rank = c.rank();
+                // round 0 posted non-blocking, round 1 blocking after the
+                // wait — both must see rank-ordered parts and agree on seq
+                let pending = c.exchange_start(rank as f64, &[rank as f32; 2]).unwrap();
+                let g0 = pending.wait().unwrap();
+                let g1 = c.exchange(0.0, &[(rank * 10) as f32]).unwrap();
+                (g0, g1)
+            });
+            for (g0, g1) in results {
+                assert_eq!(g0.parts.len(), n);
+                for (r, p) in g0.parts.iter().enumerate() {
+                    assert!(p.iter().all(|&v| v == r as f32));
+                }
+                assert_eq!(g0.max_clock, (n - 1) as f64);
+                for (r, p) in g1.parts.iter().enumerate() {
+                    assert_eq!(p[0], (r * 10) as f32);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_exchange_round_trips_every_contribution() {
+        use crate::transport::wire::Precision;
+        let results = run_ranks(3, |mut c| {
+            let v = 0.1f32 + c.rank() as f32; // 0.1, 1.1, 2.1 — inexact in bf16
+            c.exchange_start_q(0.0, &[v], Precision::Bf16).unwrap().wait().unwrap()
+        });
+        for g in results {
+            for (r, p) in g.parts.iter().enumerate() {
+                let expect = Precision::Bf16.round_trip(0.1f32 + r as f32);
+                assert_eq!(p[0].to_bits(), expect.to_bits(), "rank {r} part not round-tripped");
+                assert_ne!(p[0].to_bits(), (0.1f32 + r as f32).to_bits(), "bf16 should be lossy");
+            }
+        }
+    }
+
+    #[test]
+    fn two_pendings_in_flight_resolve_in_post_order() {
+        let results = run_ranks(2, |mut c| {
+            let p0 = c.exchange_start(0.0, &[c.rank() as f32]).unwrap();
+            let p1 = c.exchange_start(0.0, &[(c.rank() + 10) as f32]).unwrap();
+            let g0 = p0.wait().unwrap();
+            let g1 = p1.wait().unwrap();
+            (g0.parts[0][0], g0.parts[1][0], g1.parts[0][0], g1.parts[1][0])
+        });
+        for (a, b, c, d) in results {
+            assert_eq!((a, b, c, d), (0.0, 1.0, 10.0, 11.0));
         }
     }
 

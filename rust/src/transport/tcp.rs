@@ -43,8 +43,8 @@ use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use super::wire::{self, decode_text, encode_text, Frame, FrameKind};
-use super::{Communicator, Gathered, Inbox, P2pMsg, Timing};
+use super::wire::{self, decode_text, encode_text, Frame, FrameKind, Precision};
+use super::{Communicator, Gathered, Inbox, P2pMsg, PendingExchange, Timing};
 use crate::error::{Context, Result};
 
 /// Timeouts and addressing for the TCP backend.
@@ -167,7 +167,11 @@ fn reader_loop(mut sock: TcpStream, peer: usize, inbox: Arc<Inbox>) {
                 let msg =
                     P2pMsg { from: peer, tag: f.tag, sent_at: f.clock, payload: f.payload };
                 match f.kind {
-                    FrameKind::Collective => inbox.push_coll(peer, msg),
+                    // quantized collective payloads are already decoded
+                    // back to f32 by `wire::read_frame`
+                    FrameKind::Collective
+                    | FrameKind::CollectiveF16
+                    | FrameKind::CollectiveBf16 => inbox.push_coll(peer, msg),
                     FrameKind::P2p => inbox.push_p2p(peer, msg),
                     // anything else on a mesh link is a protocol violation
                     _ => break,
@@ -365,6 +369,66 @@ impl Communicator for TcpComm {
             parts.push(msg.payload);
         }
         Ok(Gathered { parts, max_clock })
+    }
+
+    fn exchange_start(&mut self, clock: f64, payload: &[f32]) -> Result<PendingExchange> {
+        let seq = self.seq;
+        self.seq += 1;
+        // sends go out now; the per-peer reader threads accumulate the
+        // replies so wait() only blocks on stragglers
+        for peer in 0..self.nodes {
+            if peer == self.rank {
+                continue;
+            }
+            let w = self.writer(peer)?;
+            wire::write_frame_parts(w, FrameKind::Collective, seq, clock, payload)
+                .with_context(|| format!("collective send to rank {peer}"))?;
+        }
+        Ok(PendingExchange::tcp(
+            seq,
+            clock,
+            payload.to_vec(),
+            self.rank,
+            self.nodes,
+            self.inbox.clone(),
+            self.io_timeout,
+        ))
+    }
+
+    fn exchange_start_q(
+        &mut self,
+        clock: f64,
+        payload: &[f32],
+        precision: Precision,
+    ) -> Result<PendingExchange> {
+        if precision == Precision::F32 {
+            return self.exchange_start(clock, payload);
+        }
+        let seq = self.seq;
+        self.seq += 1;
+        // encode once, fan the same wire bytes out to every peer
+        let bytes = wire::quantize_payload(precision, payload);
+        for peer in 0..self.nodes {
+            if peer == self.rank {
+                continue;
+            }
+            let w = self.writer(peer)?;
+            wire::write_quantized_frame(w, precision, seq, clock, &bytes)
+                .with_context(|| format!("collective send to rank {peer}"))?;
+        }
+        // the local contribution must pass through the same codec the
+        // peers decode with, or ranks would disagree on rank r's part
+        let mut own = payload.to_vec();
+        precision.round_trip_slice(&mut own);
+        Ok(PendingExchange::tcp(
+            seq,
+            clock,
+            own,
+            self.rank,
+            self.nodes,
+            self.inbox.clone(),
+            self.io_timeout,
+        ))
     }
 
     fn send(&mut self, to: usize, tag: u64, clock: f64, payload: &[f32]) -> Result<()> {
@@ -565,6 +629,34 @@ mod tests {
             for (r, p) in parts.iter().enumerate() {
                 assert_eq!(p.len(), r + 1);
                 assert!(p.iter().all(|&v| v == r as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn tcp_exchange_start_and_quantized_match_sim_semantics() {
+        let results = tcp_ranks(3, |mut c| {
+            let rank = c.rank();
+            // non-blocking round 0 with round 1 posted before waiting 0
+            let p0 = c.exchange_start(0.0, &[rank as f32]).unwrap();
+            let p1 = c.exchange_start(0.0, &[(rank + 10) as f32]).unwrap();
+            let g0 = p0.wait().unwrap();
+            let g1 = p1.wait().unwrap();
+            // quantized round: real 2-byte frames on the wire, and the own
+            // contribution goes through the same codec as the peers'
+            let v = 0.1f32 + rank as f32;
+            let gq = c.exchange_start_q(0.0, &[v], Precision::Bf16).unwrap().wait().unwrap();
+            // a blocking exchange still lines up afterwards
+            let g2 = c.exchange(0.0, &[rank as f32 * 2.0]).unwrap();
+            (g0, g1, gq, g2)
+        });
+        for (g0, g1, gq, g2) in results {
+            for r in 0..3 {
+                assert_eq!(g0.parts[r][0], r as f32);
+                assert_eq!(g1.parts[r][0], (r + 10) as f32);
+                let expect = Precision::Bf16.round_trip(0.1f32 + r as f32);
+                assert_eq!(gq.parts[r][0].to_bits(), expect.to_bits(), "rank {r}");
+                assert_eq!(g2.parts[r][0], r as f32 * 2.0);
             }
         }
     }

@@ -43,7 +43,12 @@ pub const MAGIC: u32 = 0x4453_414E;
 ///   stop-reason `u64`, and the asynchronous protocols' push/reply frames
 ///   carry one trailing control `f32` (residual fraction / stop flag).
 ///   Mixed-version clusters must fail the handshake, not mis-decode.
-pub const VERSION: u16 = 3;
+/// * v4 — quantized collective frames: [`FrameKind::CollectiveF16`] and
+///   [`FrameKind::CollectiveBf16`] carry 2-byte-per-element factor
+///   payloads (`--wire-precision fp16|bf16`). A v3 peer would mis-parse
+///   the half-width payload length, so the handshake must reject the mix
+///   even when the flag is off.
+pub const VERSION: u16 = 4;
 /// Refuse frames above 1 GiB — a corrupt length prefix otherwise turns
 /// into an attempted huge allocation.
 pub const MAX_FRAME_BYTES: usize = 1 << 30;
@@ -69,6 +74,12 @@ pub enum FrameKind {
     Result = 5,
     /// Worker → coordinator failure report (payload = message chars).
     Error = 6,
+    /// A collective contribution quantized to IEEE 754 binary16 on the
+    /// wire (2 bytes/element); decoded back to `f32` at the reader.
+    CollectiveF16 = 7,
+    /// A collective contribution quantized to bfloat16 on the wire
+    /// (2 bytes/element); decoded back to `f32` at the reader.
+    CollectiveBf16 = 8,
 }
 
 impl FrameKind {
@@ -81,8 +92,19 @@ impl FrameKind {
             4 => FrameKind::Roster,
             5 => FrameKind::Result,
             6 => FrameKind::Error,
+            7 => FrameKind::CollectiveF16,
+            8 => FrameKind::CollectiveBf16,
             other => crate::bail!("unknown frame kind {other}"),
         })
+    }
+
+    /// On-wire bytes per payload element for this kind (the quantized
+    /// collective kinds halve the element width).
+    pub fn element_bytes(self) -> usize {
+        match self {
+            FrameKind::CollectiveF16 | FrameKind::CollectiveBf16 => 2,
+            _ => 4,
+        }
     }
 }
 
@@ -128,6 +150,232 @@ fn f32s_as_bytes_mut(v: &mut [f32]) -> &mut [u8] {
     unsafe {
         std::slice::from_raw_parts_mut(v.as_mut_ptr().cast::<u8>(), std::mem::size_of_val(v))
     }
+}
+
+// ---------------------------------------------------------------------------
+// Reduced-precision factor codec (fp16 / bf16)
+// ---------------------------------------------------------------------------
+
+/// Wire precision for factor-exchange payloads (`--wire-precision`).
+///
+/// Control/stats lanes always stay `f32`; only the collective factor
+/// payloads are quantized. Quantization is applied **sender-side to the
+/// sender's own contribution as well** (every rank observes rank *r*'s
+/// payload through the same round-trip), which keeps the Sim and TCP
+/// backends bit-identical to each other at every precision even though
+/// only TCP ships real 2-byte frames.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Precision {
+    /// Exact `f32` payloads (the default; existing wire format).
+    #[default]
+    F32,
+    /// IEEE 754 binary16: 10 mantissa bits, ~3 decimal digits, max ≈ 65504.
+    Fp16,
+    /// bfloat16: `f32`'s full exponent range, 7 mantissa bits.
+    Bf16,
+}
+
+impl Precision {
+    /// Canonical flag spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Fp16 => "fp16",
+            Precision::Bf16 => "bf16",
+        }
+    }
+
+    /// On-wire bytes per payload element.
+    pub fn bytes_per_element(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::Fp16 | Precision::Bf16 => 2,
+        }
+    }
+
+    /// Collective frame kind carrying this precision.
+    pub fn collective_kind(self) -> FrameKind {
+        match self {
+            Precision::F32 => FrameKind::Collective,
+            Precision::Fp16 => FrameKind::CollectiveF16,
+            Precision::Bf16 => FrameKind::CollectiveBf16,
+        }
+    }
+
+    /// Quantize one value to this precision and decode it back — exactly
+    /// what a receiver on the other end of the wire would observe.
+    /// Idempotent: `round_trip(round_trip(x)) == round_trip(x)` bit-for-bit,
+    /// which is what lets SimComm skip the 2-byte encoding entirely.
+    pub fn round_trip(self, x: f32) -> f32 {
+        match self {
+            Precision::F32 => x,
+            Precision::Fp16 => f16_bits_to_f32(f32_to_f16_bits(x)),
+            Precision::Bf16 => bf16_bits_to_f32(f32_to_bf16_bits(x)),
+        }
+    }
+
+    /// [`Precision::round_trip`] over a whole buffer, in place.
+    pub fn round_trip_slice(self, xs: &mut [f32]) {
+        if self == Precision::F32 {
+            return;
+        }
+        for x in xs.iter_mut() {
+            *x = self.round_trip(*x);
+        }
+    }
+}
+
+impl std::str::FromStr for Precision {
+    type Err = crate::error::Error;
+
+    fn from_str(s: &str) -> Result<Precision> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "f32" | "fp32" | "exact" => Precision::F32,
+            "fp16" | "f16" | "half" => Precision::Fp16,
+            "bf16" | "bfloat16" => Precision::Bf16,
+            other => crate::bail!("unknown wire precision '{other}' (expected f32, fp16 or bf16)"),
+        })
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Drop the low `shift` bits of `x`, rounding to nearest with ties to
+/// even — the IEEE default rounding every narrowing conversion here uses.
+fn rne_shift(x: u32, shift: u32) -> u32 {
+    let truncated = x >> shift;
+    let rem = x & ((1u32 << shift) - 1);
+    let half = 1u32 << (shift - 1);
+    if rem > half || (rem == half && truncated & 1 == 1) {
+        truncated + 1
+    } else {
+        truncated
+    }
+}
+
+/// Narrow an `f32` to IEEE 754 binary16 bits (round-to-nearest-even;
+/// overflow → ±Inf, NaN payload collapsed to a quiet NaN, gradual
+/// underflow through the binary16 subnormal range).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let abs = bits & 0x7FFF_FFFF;
+    if abs >= 0x7F80_0000 {
+        // Inf / NaN: keep the class, collapse NaN payloads to quiet
+        return if abs > 0x7F80_0000 { sign | 0x7E00 } else { sign | 0x7C00 };
+    }
+    let exp = (abs >> 23) as i32; // biased f32 exponent, 0 for subnormal/zero
+    let half_exp = exp - 127 + 15;
+    if half_exp >= 31 {
+        return sign | 0x7C00; // overflow → Inf
+    }
+    if half_exp <= 0 {
+        // binary16 subnormal (or zero): shift the full significand —
+        // with its implicit leading 1 restored — past the 13-bit narrowing
+        if half_exp < -10 {
+            return sign; // too small even for subnormals → signed zero
+        }
+        let man = (abs & 0x7F_FFFF) | 0x80_0000;
+        let shift = (13 + 1 - half_exp) as u32;
+        // a round-up that carries out of the subnormal range lands on the
+        // smallest normal (0x0400) — the `+` arithmetic is exactly right
+        return sign | rne_shift(man, shift) as u16;
+    }
+    let man = rne_shift(abs & 0x7F_FFFF, 13);
+    // mantissa round-up may carry into the exponent (and from the top
+    // exponent into Inf); plain addition handles both
+    let out = ((half_exp as u32) << 10) + man;
+    if out >= 0x7C00 {
+        return sign | 0x7C00;
+    }
+    sign | out as u16
+}
+
+/// Widen IEEE 754 binary16 bits to `f32` (exact — every binary16 value is
+/// representable in `f32`).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13) // Inf / NaN
+    } else if exp == 0 {
+        if man == 0 {
+            sign // signed zero
+        } else {
+            // subnormal: normalise by locating the top set mantissa bit
+            let msb = 31 - man.leading_zeros(); // 0..=9
+            let exp32 = msb + 103; // (msb - 10) - 15 + 1 + 127
+            let man32 = (man << (23 - msb)) & 0x7F_FFFF;
+            sign | (exp32 << 23) | man32
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13) // 112 = 127 - 15
+    };
+    f32::from_bits(bits)
+}
+
+/// Narrow an `f32` to bfloat16 bits (round-to-nearest-even). bf16 keeps
+/// `f32`'s exponent, so there is no overflow/underflow special-casing —
+/// only NaN needs care (a payload that rounds to zero must not become Inf).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // force a quiet-NaN bit
+    }
+    // finite values cannot carry into the sign bit; a carry out of the top
+    // exponent value correctly produces Inf
+    rne_shift(bits, 16) as u16
+}
+
+/// Widen bfloat16 bits to `f32` (exact: bf16 is a truncated f32).
+pub fn bf16_bits_to_f32(h: u16) -> f32 {
+    f32::from_bits((h as u32) << 16)
+}
+
+/// Encode an `f32` payload into `precision`-width little-endian wire
+/// bytes. `F32` is rejected — callers take the zero-copy
+/// [`write_frame_parts`] path for exact payloads.
+pub fn quantize_payload(precision: Precision, payload: &[f32]) -> Vec<u8> {
+    assert!(precision != Precision::F32, "quantize_payload is for the 2-byte precisions");
+    let mut out = Vec::with_capacity(payload.len() * 2);
+    for &v in payload {
+        let h = match precision {
+            Precision::Fp16 => f32_to_f16_bits(v),
+            Precision::Bf16 => f32_to_bf16_bits(v),
+            Precision::F32 => unreachable!(),
+        };
+        out.extend_from_slice(&h.to_le_bytes());
+    }
+    out
+}
+
+/// Write one quantized collective frame from pre-encoded wire bytes (see
+/// [`quantize_payload`] — encode once, fan out to N peers).
+pub fn write_quantized_frame<W: Write>(
+    w: &mut W,
+    precision: Precision,
+    tag: u64,
+    clock: f64,
+    bytes: &[u8],
+) -> Result<()> {
+    let len = bytes.len();
+    if len > MAX_FRAME_BYTES {
+        crate::bail!("refusing to send oversized frame ({len} bytes > {MAX_FRAME_BYTES})");
+    }
+    let mut header = [0u8; HEADER_BYTES];
+    header[0..4].copy_from_slice(&(len as u32).to_le_bytes());
+    header[4] = precision.collective_kind() as u8;
+    header[8..16].copy_from_slice(&tag.to_le_bytes());
+    header[16..24].copy_from_slice(&clock.to_bits().to_le_bytes());
+    w.write_all(&header).context("writing frame header")?;
+    w.write_all(bytes).context("writing frame payload")?;
+    w.flush().context("flushing frame")?;
+    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -201,7 +449,10 @@ pub fn write_frame_parts<W: Write>(
 }
 
 /// Read and decode one frame, enforcing the length sanity checks. A peer
-/// hanging up mid-frame surfaces as a truncation error.
+/// hanging up mid-frame surfaces as a truncation error. Quantized
+/// collective frames are decoded back to `f32` here, so everything
+/// downstream of the codec (inboxes, reductions) stays a single payload
+/// type.
 pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     let mut header = [0u8; HEADER_BYTES];
     r.read_exact(&mut header).context("reading frame header (connection closed or truncated)")?;
@@ -209,12 +460,26 @@ pub fn read_frame<R: Read>(r: &mut R) -> Result<Frame> {
     if len > MAX_FRAME_BYTES {
         crate::bail!("oversized frame: {len} bytes (max {MAX_FRAME_BYTES})");
     }
-    if len % 4 != 0 {
-        crate::bail!("corrupt frame: payload length {len} is not a multiple of 4");
-    }
     let kind = FrameKind::from_u8(header[4])?;
+    let elem = kind.element_bytes();
+    if len % elem != 0 {
+        crate::bail!("corrupt frame: payload length {len} is not a multiple of {elem}");
+    }
     let tag = u64::from_le_bytes(header[8..16].try_into().unwrap());
     let clock = f64::from_bits(u64::from_le_bytes(header[16..24].try_into().unwrap()));
+    if elem == 2 {
+        let mut bytes = vec![0u8; len];
+        r.read_exact(&mut bytes).context("reading frame payload (truncated frame)")?;
+        let mut payload = Vec::with_capacity(len / 2);
+        for c in bytes.chunks_exact(2) {
+            let h = u16::from_le_bytes([c[0], c[1]]);
+            payload.push(match kind {
+                FrameKind::CollectiveF16 => f16_bits_to_f32(h),
+                _ => bf16_bits_to_f32(h),
+            });
+        }
+        return Ok(Frame { kind, tag, clock, payload });
+    }
     let mut payload = vec![0f32; len / 4];
     #[cfg(target_endian = "little")]
     r.read_exact(f32s_as_bytes_mut(&mut payload))
@@ -389,5 +654,144 @@ mod tests {
     fn text_roundtrip() {
         let msg = "worker 3 failed: peer 1 disconnected — ‖M‖ unavailable";
         assert_eq!(decode_text(&encode_text(msg)), msg);
+    }
+
+    // -- quantized codec ----------------------------------------------------
+
+    #[test]
+    fn f16_exact_values_survive() {
+        // values exactly representable in binary16 must round-trip bit-for-bit
+        for v in [0.0f32, -0.0, 1.0, -1.0, 0.5, 2.0, 65504.0, -65504.0, 6.103_515_6e-5] {
+            let back = Precision::Fp16.round_trip(v);
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} -> {back}");
+        }
+        for v in [1.0f32, -2.5, 128.0, 3.0e38, 1.17549435e-38] {
+            let back = Precision::Bf16.round_trip(v);
+            assert_eq!(back.to_bits(), v.to_bits(), "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn quantization_relative_error_bounds() {
+        // fp16: 11-bit significand → rel err ≤ 2^-11; bf16: 8 bits → ≤ 2^-8
+        // (bounds hold in fp16's normal range, so the sweep stays within it)
+        let mut x = 1.000_123f32;
+        for _ in 0..200 {
+            let v16 = Precision::Fp16.round_trip(x);
+            assert!(((v16 - x) / x).abs() <= 1.0 / 2048.0, "fp16 {x} -> {v16}");
+            let vb = Precision::Bf16.round_trip(x);
+            assert!(((vb - x) / x).abs() <= 1.0 / 256.0, "bf16 {x} -> {vb}");
+            x *= -1.37; // sweep magnitudes and signs
+            if !(1e-3..1e3).contains(&x.abs()) {
+                x = 1.0 / x; // reflect back toward 1 before leaving fp16 range
+            }
+        }
+    }
+
+    #[test]
+    fn quantization_special_values() {
+        for p in [Precision::Fp16, Precision::Bf16] {
+            assert!(p.round_trip(f32::NAN).is_nan(), "{p} NaN");
+            assert_eq!(p.round_trip(f32::INFINITY), f32::INFINITY, "{p} +Inf");
+            assert_eq!(p.round_trip(f32::NEG_INFINITY), f32::NEG_INFINITY, "{p} -Inf");
+            assert_eq!(p.round_trip(0.0).to_bits(), 0.0f32.to_bits(), "{p} +0");
+            assert_eq!(p.round_trip(-0.0).to_bits(), (-0.0f32).to_bits(), "{p} -0");
+        }
+        // fp16 overflow saturates to Inf; bf16 keeps f32's range
+        assert_eq!(Precision::Fp16.round_trip(1.0e6), f32::INFINITY);
+        assert_eq!(Precision::Fp16.round_trip(-1.0e6), f32::NEG_INFINITY);
+        assert!(Precision::Bf16.round_trip(1.0e6).is_finite());
+        // fp16 gradual underflow: smallest subnormal ≈ 5.96e-8 survives,
+        // values below half of it flush to (signed) zero
+        let tiny = f16_bits_to_f32(1);
+        assert_eq!(Precision::Fp16.round_trip(tiny), tiny);
+        assert_eq!(Precision::Fp16.round_trip(tiny / 4.0), 0.0);
+        assert_eq!(Precision::Fp16.round_trip(-tiny / 4.0).to_bits(), (-0.0f32).to_bits());
+        // f32 subnormals are below bf16's smallest normal step but must not panic
+        let sub = f32::from_bits(1);
+        assert!(Precision::Bf16.round_trip(sub).abs() <= f32::MIN_POSITIVE);
+    }
+
+    #[test]
+    fn f16_exhaustive_widen_narrow_identity() {
+        // narrowing is the exact inverse of widening for every finite f16
+        for h in 0u16..=u16::MAX {
+            let f = f16_bits_to_f32(h);
+            if f.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(f)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(f), h, "h={h:#06x} f={f}");
+            }
+        }
+        for h in 0u16..=u16::MAX {
+            let f = bf16_bits_to_f32(h);
+            if f.is_nan() {
+                assert!(bf16_bits_to_f32(f32_to_bf16_bits(f)).is_nan());
+            } else {
+                assert_eq!(f32_to_bf16_bits(f), h, "h={h:#06x} f={f}");
+            }
+        }
+    }
+
+    #[test]
+    fn round_trip_is_idempotent() {
+        let mut x = 0.739_f32;
+        for _ in 0..100 {
+            for p in [Precision::Fp16, Precision::Bf16] {
+                let once = p.round_trip(x);
+                assert_eq!(p.round_trip(once).to_bits(), once.to_bits(), "{p} {x}");
+            }
+            x *= -2.31;
+        }
+    }
+
+    #[test]
+    fn quantized_frame_roundtrip() {
+        let payload = vec![0.5f32, -1.25, 1.0e-3, 42.0, 0.0];
+        for p in [Precision::Fp16, Precision::Bf16] {
+            let bytes = quantize_payload(p, &payload);
+            assert_eq!(bytes.len(), payload.len() * 2);
+            let mut buf = Vec::new();
+            write_quantized_frame(&mut buf, p, 9, 1.5, &bytes).unwrap();
+            let back = read_frame(&mut Cursor::new(buf)).unwrap();
+            assert_eq!(back.kind, p.collective_kind());
+            assert_eq!(back.tag, 9);
+            assert_eq!(back.clock, 1.5);
+            let expect: Vec<f32> = payload.iter().map(|&v| p.round_trip(v)).collect();
+            for (a, b) in back.payload.iter().zip(expect.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_frame_misaligned_and_truncated() {
+        // odd byte length is corrupt for 2-byte-element kinds
+        let mut header = [0u8; HEADER_BYTES];
+        header[0..4].copy_from_slice(&5u32.to_le_bytes());
+        header[4] = FrameKind::CollectiveF16 as u8;
+        let err = read_frame(&mut Cursor::new(header.to_vec())).unwrap_err();
+        assert!(err.to_string().contains("multiple of 2"), "{err}");
+        // but length 6 (not a multiple of 4) is fine for a quantized frame
+        let bytes = quantize_payload(Precision::Bf16, &[1.0, 2.0, 3.0]);
+        let mut buf = Vec::new();
+        write_quantized_frame(&mut buf, Precision::Bf16, 0, 0.0, &bytes).unwrap();
+        assert_eq!(read_frame(&mut Cursor::new(buf.clone())).unwrap().payload.len(), 3);
+        // every truncation point still errors cleanly
+        for cut in 0..buf.len() {
+            assert!(read_frame(&mut Cursor::new(&buf[..cut])).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn mixed_version_handshake_rejected() {
+        // a v3 peer (pre-quantization) must be refused at the preamble —
+        // it would mis-parse the half-width payload lengths of v4 frames
+        let mut pre = Vec::new();
+        write_preamble(&mut pre, 2).unwrap();
+        pre[4..6].copy_from_slice(&3u16.to_le_bytes());
+        let err = read_preamble(&mut Cursor::new(pre)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("version mismatch") && msg.contains("peer 3"), "{msg}");
     }
 }

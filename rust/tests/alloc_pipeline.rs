@@ -1,0 +1,121 @@
+//! Steady-state allocation audit for the overlapped (double-buffered)
+//! DSANLS pipeline.
+//!
+//! The perf contract of the comm/compute-overlap rework: once warmed up,
+//! one pipelined iteration — summand build via
+//! [`SketchMatrix::mul_rows_tn_into`], prefetched `A_r = M_r · Sᵀ` via
+//! [`SketchMatrix::mul_right_dense_into`], the take/restore ping-pong on
+//! [`Workspace::take_pipe`] / [`Workspace::take_summand`], and the
+//! normal-equation + solver step — performs **zero heap allocations**. The
+//! Subsample sketch (the paper's default, `dsanls-s`) is the audited
+//! family; sketch *regeneration* (a d-length index draw per iteration) is
+//! outside the pipeline buffers and outside this audit. A counting global
+//! allocator verifies the claim.
+//!
+//! Single-threaded (`set_local_threads(Some(1))`) so the measurement
+//! captures the kernels rather than pool-dispatch bookkeeping; the single
+//! `#[test]` keeps the harness from running anything else against the
+//! global counter.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use dsanls::linalg::Mat;
+use dsanls::nmf::MuSchedule;
+use dsanls::rng::Pcg64;
+use dsanls::sketch::{SketchKind, SketchMatrix};
+use dsanls::solvers::{self, SolverKind, Workspace};
+
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicUsize = AtomicUsize::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn pipelined_iteration_steady_state_allocates_nothing() {
+    dsanls::parallel::set_local_threads(Some(1));
+
+    // one rank's U-step shapes: M_r (rows×cols), V_block (cols×k), d-wide sketch
+    let (rows, cols, k, d) = (240usize, 180usize, 12usize, 32usize);
+    let mut rng = Pcg64::new(0xF1FE11, 0);
+    let m_block = Mat::rand_uniform(rows, cols, 1.0, &mut rng);
+    let v_block = Mat::rand_uniform(cols, k, 1.0, &mut rng);
+    let mut u = Mat::rand_uniform(rows, k, 1.0, &mut rng);
+    let mu = MuSchedule::default();
+    let s_u = SketchMatrix::generate(SketchKind::Subsample, cols, d, &mut rng);
+
+    let mut ws = Workspace::new();
+
+    // one pipelined iteration body, as dsanls runs it with overlap on:
+    // build the reduce summand, compute the prefetched A_r into a pipe
+    // slot (in the real loop this happens behind the in-flight reduce),
+    // then solve and hand every buffer back to the workspace
+    let iteration = |ws: &mut Workspace, u: &mut Mat, t: usize| {
+        let mut summand = ws.take_summand();
+        s_u.mul_rows_tn_into(&v_block, 0, &mut summand);
+        let mut a_r = ws.take_pipe(0);
+        s_u.mul_right_dense_into(&m_block, &mut a_r);
+        {
+            let nrm = ws.normal_from(&a_r, &summand);
+            solvers::update_auto(SolverKind::ProximalCd, u, &nrm, &mu, t);
+        }
+        ws.restore_pipe(0, a_r);
+        ws.restore_summand(summand);
+    };
+
+    // warm-up: sizes the pipe/summand buffers and the workspace scratch
+    for t in 0..3 {
+        iteration(&mut ws, &mut u, t);
+    }
+    let ptrs = ws.pipeline_ptrs();
+
+    // measured steady state
+    ALLOC_EVENTS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    for t in 3..13 {
+        iteration(&mut ws, &mut u, t);
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let events = ALLOC_EVENTS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        events, 0,
+        "steady-state pipelined iteration performed {events} heap allocations \
+         over 10 iterations (expected 0)"
+    );
+    // the ping-pong buffers must have been reused, not reallocated
+    assert_eq!(ws.pipeline_ptrs(), ptrs, "pipeline buffers were reallocated in steady state");
+
+    assert!(u.is_nonnegative());
+    dsanls::parallel::set_local_threads(None);
+}

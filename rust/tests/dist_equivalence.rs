@@ -10,7 +10,7 @@ use dsanls::data::shard::{exact_fro_sq, NodeData, NodeInput};
 use dsanls::dist::run_tcp_cluster;
 use dsanls::linalg::{Mat, Matrix};
 use dsanls::nmf::control::RunControl;
-use dsanls::nmf::job::{Algo, Backend, DataSource, Job, Outcome};
+use dsanls::nmf::job::{Algo, Backend, DataSource, Job, Outcome, Wire};
 use dsanls::nmf::{Sanls, SanlsOptions};
 use dsanls::rng::Pcg64;
 use dsanls::secure::syn::{assemble_syn, syn_rank};
@@ -255,6 +255,53 @@ fn dsanls_tcp_backend_bit_identical_to_sim() {
         assert_eq!(a.iteration, b.iteration);
         assert_eq!(a.rel_error.to_bits(), b.rel_error.to_bits());
     }
+}
+
+/// The new comm flags honour the same cross-backend contract. With
+/// `overlap_comm` the pipeline prefetches factor-independent GEMMs behind
+/// the in-flight reduce but never reorders the math — Sim and TCP both
+/// stay bit-identical to the blocking exact run. With a quantized wire
+/// (bf16) every rank round-trips its own contribution through the same
+/// codec the peers decode, so the (lossy) factors still agree
+/// bit-for-bit between the simulated and real-TCP backends.
+#[test]
+fn overlap_and_quantized_wire_match_across_backends() {
+    let m = low_rank(60, 48, 3, 1021);
+    let base = DsanlsOptions {
+        nodes: 3,
+        rank: 3,
+        iterations: 8,
+        d_u: 12,
+        d_v: 14,
+        eval_every: 4,
+        ..Default::default()
+    };
+    let run = |overlap: bool, wire: Wire, tcp: bool| {
+        let mut b = Job::builder()
+            .algorithm(Algo::Dsanls(base.clone()))
+            .data(DataSource::Full(&m))
+            .overlap_comm(overlap)
+            .wire_precision(wire);
+        if tcp {
+            b = b.transport(Backend::Tcp { port: 0 });
+        }
+        b.run().expect("job failed")
+    };
+
+    // overlap alone changes nothing: both backends match the exact run
+    let exact = run_dsanls(&m, &base);
+    let sim_ov = run(true, Wire::F32, false);
+    let tcp_ov = run(true, Wire::F32, true);
+    assert_eq!(exact.u.data(), sim_ov.u.data(), "overlap changed the sim iterates");
+    assert_eq!(sim_ov.u.data(), tcp_ov.u.data(), "overlapped U diverged across backends");
+    assert_eq!(sim_ov.v.data(), tcp_ov.v.data(), "overlapped V diverged across backends");
+
+    // quantized wire: lossy vs exact, but identical across backends
+    let sim_q = run(true, Wire::Bf16, false);
+    let tcp_q = run(true, Wire::Bf16, true);
+    assert_ne!(exact.u.data(), sim_q.u.data(), "bf16 wire must actually quantize");
+    assert_eq!(sim_q.u.data(), tcp_q.u.data(), "quantized U diverged across backends");
+    assert_eq!(sim_q.v.data(), tcp_q.v.data(), "quantized V diverged across backends");
 }
 
 /// Same for a secure protocol: Syn-SD over TCP matches the simulator

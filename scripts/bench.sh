@@ -1,6 +1,7 @@
 #!/usr/bin/env bash
 # Perf evidence runner: the GEMM microbench (emits BENCH_gemm.json in the
-# repo root) plus the Fig. 3 scalability sweep.
+# repo root), the comm-overlap/quantized-wire throughput grid (emits
+# BENCH_overlap.json), plus the Fig. 3 scalability sweep.
 #
 # Usage: scripts/bench.sh [--full]
 #   --full          paper-sized shapes (DSANLS_BENCH_FULL=1)
@@ -16,8 +17,12 @@ echo "== microbench_gemm (writes BENCH_gemm.json) =="
 cargo bench --bench microbench_gemm
 
 echo
+echo "== overlap_throughput (writes BENCH_overlap.json) =="
+cargo bench --bench overlap_throughput
+
+echo
 echo "== fig3_scalability =="
 cargo bench --bench fig3_scalability
 
 echo
-echo "done. evidence: ./BENCH_gemm.json, per-figure CSVs under ./results/"
+echo "done. evidence: ./BENCH_gemm.json, ./BENCH_overlap.json, per-figure CSVs under ./results/"
