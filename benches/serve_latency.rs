@@ -1,0 +1,161 @@
+//! Serving-plane latency/throughput bench: an in-process `dsanls serve`
+//! server answering a sequential client over real TCP loopback. Sweeps
+//! the (rank k × users-per-query) grid and reports per-query p50/p99
+//! latency plus scored-rows/s for top-k queries, and the fold-in solve
+//! throughput (cache-miss solves/s and cache-hit lookups/s) — the numbers
+//! behind the serve section of EXPERIMENTS.md. Emits a machine-readable
+//! `BENCH_serve.json` report.
+//!
+//! Env knobs: `DSANLS_THREADS`, `DSANLS_BENCH_FULL=1`,
+//! `DSANLS_BENCH_JSON_DIR`.
+
+mod bench_util;
+
+use std::time::Instant;
+
+use dsanls::linalg::Mat;
+use dsanls::metrics::JsonValue;
+use dsanls::nmf::control::{Checkpoint, CheckpointMeta, ResumeState};
+use dsanls::rng::Pcg64;
+use dsanls::serve::{serve, FactorModel, ServeClient, ServeOptions};
+
+struct Cell {
+    k: usize,
+    batch: usize,
+    p50_ms: f64,
+    p99_ms: f64,
+    rows_per_s: f64,
+}
+
+impl Cell {
+    fn to_json(&self) -> JsonValue {
+        JsonValue::Object(vec![
+            ("k".into(), JsonValue::Number(self.k as f64)),
+            ("batch".into(), JsonValue::Number(self.batch as f64)),
+            ("p50_ms".into(), JsonValue::Number(self.p50_ms)),
+            ("p99_ms".into(), JsonValue::Number(self.p99_ms)),
+            ("rows_per_s".into(), JsonValue::Number(self.rows_per_s)),
+        ])
+    }
+}
+
+fn model(users: usize, items: usize, k: usize) -> FactorModel {
+    let mut rng = Pcg64::new(0x5E4E, k as u128);
+    let u = Mat::rand_uniform(users, k, 1.0, &mut rng);
+    let v = Mat::rand_uniform(items, k, 1.0, &mut rng);
+    FactorModel::from_checkpoint(Checkpoint {
+        meta: CheckpointMeta { algo: "dsanls".into(), seed: 1, k, rows: users, cols: items, params: 0 },
+        state: ResumeState { iteration: 1, u, v },
+    })
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+fn main() {
+    bench_util::banner("serve_latency", "serving-plane query latency and fold-in throughput");
+    let full = bench_util::full();
+    let (users, items) = if full { (20_000usize, 8_000usize) } else { (4_000, 2_000) };
+    let ks: Vec<usize> = if full { vec![32, 64, 128] } else { vec![16, 64] };
+    let batches: Vec<usize> = vec![1, 8, 32];
+    let queries = if full { 400usize } else { 120 };
+    let top = 10;
+
+    let mut cells: Vec<Cell> = Vec::new();
+    println!(
+        "{:<6} {:<6} {:>10} {:>10} {:>12}",
+        "k", "batch", "p50 ms", "p99 ms", "rows/s"
+    );
+    for &k in &ks {
+        let m = model(users, items, k);
+        // batch_wait_us=0: a sequential client measures the no-coalescing
+        // floor — each query is its own GEMM
+        let opts = ServeOptions { batch_wait_us: 0, ..ServeOptions::default() };
+        let mut handle = serve("127.0.0.1:0", m, opts).expect("bind serve");
+        let mut client = ServeClient::connect(&handle.addr().to_string()).expect("connect");
+
+        for &batch in &batches {
+            let ids: Vec<u64> = (0..batch as u64).collect();
+            // warm-up sizes the batcher scratch for this shape
+            for _ in 0..5 {
+                client.top_k(&ids, top).expect("warmup query");
+            }
+            let mut lat = Vec::with_capacity(queries);
+            let t0 = Instant::now();
+            for q in 0..queries {
+                let ids: Vec<u64> =
+                    (0..batch as u64).map(|i| (q as u64 * 7 + i * 13) % users as u64).collect();
+                let t = Instant::now();
+                client.top_k(&ids, top).expect("bench query");
+                lat.push(t.elapsed().as_secs_f64());
+            }
+            let total = t0.elapsed().as_secs_f64();
+            lat.sort_by(|a, b| a.total_cmp(b));
+            let cell = Cell {
+                k,
+                batch,
+                p50_ms: percentile(&lat, 0.50) * 1e3,
+                p99_ms: percentile(&lat, 0.99) * 1e3,
+                rows_per_s: (queries * batch) as f64 / total,
+            };
+            println!(
+                "{:<6} {:<6} {:>10.3} {:>10.3} {:>12.0}",
+                cell.k, cell.batch, cell.p50_ms, cell.p99_ms, cell.rows_per_s
+            );
+            cells.push(cell);
+        }
+        handle.shutdown();
+    }
+
+    // fold-in throughput at the middle rank: all-miss solves (distinct
+    // rows) vs all-hit lookups (one row repeated)
+    let k = ks[ks.len() / 2];
+    let m = model(users, items, k);
+    let opts = ServeOptions { batch_wait_us: 0, ..ServeOptions::default() };
+    let mut handle = serve("127.0.0.1:0", m, opts).expect("bind serve");
+    let mut client = ServeClient::connect(&handle.addr().to_string()).expect("connect");
+    let solves = if full { 600usize } else { 200 };
+    let row = |s: usize| -> Vec<(u64, f32)> {
+        (0..16).map(|i| (((s * 31 + i * 17) % items) as u64, 1.0 + i as f32 * 0.1)).collect()
+    };
+    for s in 0..5 {
+        client.fold_in(&row(s + solves), 0).expect("warmup fold");
+    }
+    let t0 = Instant::now();
+    for s in 0..solves {
+        client.fold_in(&row(s), 0).expect("fold miss");
+    }
+    let miss_per_s = solves as f64 / t0.elapsed().as_secs_f64();
+    let hot = row(0);
+    let t0 = Instant::now();
+    for _ in 0..solves {
+        client.fold_in(&hot, 0).expect("fold hit");
+    }
+    let hit_per_s = solves as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "\nfold-in at k={k}: {miss_per_s:.0} solves/s (cache miss), \
+         {hit_per_s:.0} lookups/s (cache hit)"
+    );
+    handle.shutdown();
+
+    let json = JsonValue::Object(vec![
+        ("bench".into(), JsonValue::String("serve_latency".into())),
+        ("threads".into(), JsonValue::Number(dsanls::parallel::num_threads() as f64)),
+        ("users".into(), JsonValue::Number(users as f64)),
+        ("items".into(), JsonValue::Number(items as f64)),
+        ("queries_per_cell".into(), JsonValue::Number(queries as f64)),
+        ("top_k".into(), JsonValue::Number(top as f64)),
+        ("full".into(), JsonValue::Bool(full)),
+        ("fold_in_k".into(), JsonValue::Number(k as f64)),
+        ("fold_in_miss_per_s".into(), JsonValue::Number(miss_per_s)),
+        ("fold_in_hit_per_s".into(), JsonValue::Number(hit_per_s)),
+        ("estimated".into(), JsonValue::Bool(false)),
+        ("results".into(), JsonValue::Array(cells.iter().map(|c| c.to_json()).collect())),
+    ]);
+    let path = bench_util::write_bench_json("BENCH_serve.json", &json);
+    println!("report written to {path:?}");
+}

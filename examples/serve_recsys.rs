@@ -1,0 +1,90 @@
+//! End-to-end recommender flow on the serving plane: **train** a small
+//! DSANLS factorisation with checkpointing, **load** the checkpoint into
+//! a [`FactorModel`], **serve** it over TCP, and run the three query
+//! families a recommender needs — batched top-k for known users, full
+//! reconstruction rows, and fold-in for a brand-new user who was not in
+//! the training matrix.
+//!
+//! ```bash
+//! cargo run --release --example serve_recsys
+//! ```
+
+use dsanls::algos::DsanlsOptions;
+use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::job::{Algo, DataSource, Job};
+use dsanls::rng::Pcg64;
+use dsanls::serve::{serve, FactorModel, ServeClient, ServeOptions};
+
+fn main() -> dsanls::Result<()> {
+    // --- 1. train on a synthetic low-rank ratings matrix -------------------
+    let (users, items, k) = (200usize, 150usize, 8usize);
+    let mut rng = Pcg64::new(0x5EC5, 0);
+    let m = {
+        let u0 = Mat::rand_uniform(users, k, 1.0, &mut rng);
+        let v0 = Mat::rand_uniform(items, k, 1.0, &mut rng);
+        Matrix::Dense(u0.matmul_nt(&v0))
+    };
+    let ckpt = std::env::temp_dir().join(format!("serve_recsys_{}.ckpt", std::process::id()));
+    let opts = DsanlsOptions {
+        nodes: 4,
+        rank: k,
+        iterations: 60,
+        d_u: 50,
+        d_v: 40,
+        eval_every: 20,
+        ..Default::default()
+    };
+    let out = Job::builder()
+        .algorithm(Algo::Dsanls(opts))
+        .data(DataSource::Full(&m))
+        .checkpoint_every(30, &ckpt)
+        .run()?;
+    println!("trained: rel-error {:.4}, checkpoint at {}", out.final_error(), ckpt.display());
+
+    // --- 2. load the checkpoint into a serving model ------------------------
+    let model = FactorModel::load(&ckpt)?;
+    println!(
+        "loaded {} users × {} items (k={}, iteration {})",
+        model.users(),
+        model.items(),
+        model.k(),
+        model.iteration()
+    );
+
+    // --- 3. serve it and query over real TCP --------------------------------
+    let mut handle = serve("127.0.0.1:0", model, ServeOptions::default())?;
+    println!("serving on {}", handle.addr());
+    let mut client = ServeClient::connect(&handle.addr().to_string())?;
+
+    // batched top-k: one GEMM on the server answers all three users
+    for (user, recs) in [7u64, 42, 123].iter().zip(client.top_k(&[7, 42, 123], 5)?) {
+        let pretty: Vec<String> =
+            recs.iter().map(|&(i, s)| format!("{i} ({s:.2})")).collect();
+        println!("user {user}: {}", pretty.join(", "));
+    }
+
+    // reconstruction: the full predicted-rating row for one user
+    let row = client.reconstruct(&[7])?;
+    println!(
+        "user 7 predicted ratings: {} items, mean {:.3}",
+        row.cols(),
+        row.data().iter().sum::<f32>() / row.cols() as f32
+    );
+
+    // fold-in: a user the model has never seen, embedded from four ratings
+    // (served from the LRU cache on repeat queries)
+    let ratings: Vec<(u64, f32)> = vec![(3, 5.0), (17, 4.0), (60, 1.0), (149, 3.5)];
+    let (embedding, recs) = client.fold_in(&ratings, 5)?;
+    println!(
+        "new user embedding ({} dims, all ≥ 0: {}):",
+        embedding.len(),
+        embedding.iter().all(|&v| v >= 0.0)
+    );
+    let pretty: Vec<String> = recs.iter().map(|&(i, s)| format!("{i} ({s:.2})")).collect();
+    println!("new user recommendations: {}", pretty.join(", "));
+
+    println!("\nserver stats: {}", client.stats()?);
+    handle.shutdown();
+    std::fs::remove_file(&ckpt).ok();
+    Ok(())
+}

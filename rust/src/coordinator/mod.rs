@@ -6,7 +6,9 @@
 //! simulated transport; [`launch`] runs the same experiments over real
 //! TCP worker processes (`dsanls launch` / `dsanls worker`), and
 //! [`shard_cli`] pre-slices datasets into on-disk shard directories
-//! (`dsanls shard`) for multi-host deployments.
+//! (`dsanls shard`) for multi-host deployments. After training,
+//! [`serve_cli`] puts the checkpointed factors behind a TCP inference
+//! server (`dsanls serve` / `dsanls query` — see [`crate::serve`]).
 //!
 //! ## Launch lifecycle (multi-process path)
 //!
@@ -35,6 +37,7 @@
 #![warn(missing_docs)]
 
 pub mod launch;
+pub mod serve_cli;
 pub mod shard_cli;
 
 use std::path::Path;

@@ -1,0 +1,199 @@
+//! `dsanls serve` / `dsanls query` — the serving-plane CLI surface.
+//!
+//! `serve` loads a [`FactorModel`] from a training checkpoint and fronts
+//! it with the [`crate::serve::server`] batcher on a TCP address; `query`
+//! is the matching smoke-test client (top-k, reconstruction, fold-in and
+//! stats against a running server). DEPLOYMENT.md walks through the pair
+//! end-to-end and `scripts/deploy_localhost.sh` executes the walkthrough
+//! in CI.
+
+use std::path::PathBuf;
+
+use crate::error::Result;
+use crate::serve::{serve, FactorModel, ServeClient, ServeOptions};
+use crate::solvers::SolverKind;
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn has_flag(args: &[String], flag: &str) -> bool {
+    args.iter().any(|a| a == flag)
+}
+
+fn parse_num<T: std::str::FromStr>(args: &[String], flag: &str) -> Result<Option<T>> {
+    match flag_value(args, flag) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| crate::err!("{flag} expects a number, got {v:?}")),
+    }
+}
+
+/// Entry point for `dsanls serve --checkpoint FILE --bind ADDR [...]`.
+pub fn serve_main(args: &[String]) -> Result<()> {
+    let ckpt = PathBuf::from(
+        flag_value(args, "--checkpoint")
+            .ok_or_else(|| crate::err!("serve needs --checkpoint FILE (a training checkpoint)"))?,
+    );
+    let bind = flag_value(args, "--bind").unwrap_or("127.0.0.1:7878");
+
+    let mut opts = ServeOptions::default();
+    if let Some(n) = parse_num::<usize>(args, "--batch-max")? {
+        opts.batch_max = n.max(1);
+    }
+    if let Some(us) = parse_num::<u64>(args, "--batch-wait-us")? {
+        opts.batch_wait_us = us;
+    }
+    if let Some(n) = parse_num::<usize>(args, "--cache")? {
+        opts.cache_cap = n;
+    }
+    if let Some(n) = parse_num::<usize>(args, "--sweeps")? {
+        opts.sweeps = n.max(1);
+    }
+    if let Some(t) = parse_num::<usize>(args, "--threads")? {
+        opts.threads = Some(t.max(1));
+    }
+    if let Some(s) = flag_value(args, "--solver") {
+        opts.solver = s.parse::<SolverKind>().map_err(crate::error::Error::msg)?;
+    }
+
+    let model = FactorModel::load(&ckpt)?;
+    model.check_identity(
+        flag_value(args, "--expect-algo"),
+        parse_num::<u64>(args, "--expect-params")?,
+    )?;
+    println!(
+        "loaded {} checkpoint {} (iteration {}): {} users × {} items, k={}",
+        model.meta().algo,
+        ckpt.display(),
+        model.iteration(),
+        model.users(),
+        model.items(),
+        model.k()
+    );
+
+    let handle = serve(bind, model, opts)?;
+    // the line the deploy walkthrough (and any operator script) waits for
+    println!("serving on {}", handle.addr());
+    // serve until killed (SIGINT/SIGTERM); the threads own all the work
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn parse_users(args: &[String]) -> Result<Vec<u64>> {
+    let list = flag_value(args, "--users")
+        .ok_or_else(|| crate::err!("query needs --users ID[,ID...] (or --fold-in / --stats)"))?;
+    list.split(',')
+        .map(|s| {
+            s.trim()
+                .parse::<u64>()
+                .map_err(|_| crate::err!("--users expects comma-separated ids, got {s:?}"))
+        })
+        .collect()
+}
+
+fn parse_fold_row(spec: &str) -> Result<Vec<(u64, f32)>> {
+    spec.split(',')
+        .map(|pair| {
+            let (item, val) = pair
+                .split_once(':')
+                .ok_or_else(|| crate::err!("--fold-in expects ITEM:RATING pairs, got {pair:?}"))?;
+            let item = item
+                .trim()
+                .parse::<u64>()
+                .map_err(|_| crate::err!("bad fold-in item id {item:?}"))?;
+            let val = val
+                .trim()
+                .parse::<f32>()
+                .map_err(|_| crate::err!("bad fold-in rating {val:?}"))?;
+            Ok((item, val))
+        })
+        .collect()
+}
+
+fn fmt_top(row: &[(u64, f32)]) -> String {
+    row.iter().map(|&(i, s)| format!("{i}:{s:.4}")).collect::<Vec<_>>().join(" ")
+}
+
+/// Entry point for `dsanls query --addr HOST:PORT <mode flags>`.
+pub fn query_main(args: &[String]) -> Result<()> {
+    let addr = flag_value(args, "--addr").unwrap_or("127.0.0.1:7878");
+    let mut client = ServeClient::connect(addr)?;
+
+    if has_flag(args, "--stats") {
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+
+    if let Some(spec) = flag_value(args, "--fold-in") {
+        let row = parse_fold_row(spec)?;
+        let n = parse_num::<usize>(args, "--top-k")?.unwrap_or(0);
+        let (w, top) = client.fold_in(&row, n)?;
+        println!(
+            "fold-in w: {}",
+            w.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(" ")
+        );
+        if !top.is_empty() {
+            println!("fold-in top: {}", fmt_top(&top));
+        }
+        return Ok(());
+    }
+
+    let users = parse_users(args)?;
+    if has_flag(args, "--reconstruct") {
+        let scores = client.reconstruct(&users)?;
+        for (r, &id) in users.iter().enumerate() {
+            let row = scores.row(r);
+            // argmax: the id a --top-k query of the same user must lead with
+            let (argmax, max) = row
+                .iter()
+                .enumerate()
+                .fold((0usize, f32::NEG_INFINITY), |best, (i, &v)| {
+                    if v > best.1 {
+                        (i, v)
+                    } else {
+                        best
+                    }
+                });
+            let mean = row.iter().sum::<f32>() / row.len().max(1) as f32;
+            println!(
+                "user {id}: cols={} argmax={argmax} max={max:.4} mean={mean:.4}",
+                row.len()
+            );
+        }
+        return Ok(());
+    }
+
+    let n = parse_num::<usize>(args, "--top-k")?.unwrap_or(10);
+    let rows = client.top_k(&users, n)?;
+    for (row, &id) in rows.iter().zip(&users) {
+        println!("user {id}: {}", fmt_top(row));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn arg_parsers() {
+        let args = s(&["--users", "1, 2,3"]);
+        assert_eq!(parse_users(&args).unwrap(), vec![1, 2, 3]);
+        assert!(parse_users(&s(&["--users", "1,x"])).is_err());
+        assert_eq!(
+            parse_fold_row("3:1.5, 7:2").unwrap(),
+            vec![(3, 1.5), (7, 2.0)]
+        );
+        assert!(parse_fold_row("3=1.5").is_err());
+        assert_eq!(parse_num::<usize>(&s(&["--top-k", "5"]), "--top-k").unwrap(), Some(5));
+        assert!(parse_num::<usize>(&s(&["--top-k", "five"]), "--top-k").is_err());
+    }
+}

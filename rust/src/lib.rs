@@ -14,7 +14,11 @@
 //!   [`dist`] clock/stall model) or real multi-process TCP workers
 //!   (`dsanls launch` / `dsanls worker`). The single front door is the
 //!   [`nmf::job::Job`] builder: one composition of algorithm × transport ×
-//!   data source, with streaming progress observers.
+//!   data source, with streaming progress observers. Trained factors get
+//!   a production consumer in the [`serve`] subsystem (`dsanls serve` /
+//!   `dsanls query`): checkpoint-loaded [`serve::FactorModel`]s answering
+//!   batched top-k / reconstruction / fold-in queries over the same wire
+//!   framing.
 //! * **L2 — JAX model** (`python/compile/model.py`) — the sketched update
 //!   step as a JAX graph, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 — Pallas kernels** (`python/compile/kernels/`) — proximal
@@ -42,6 +46,7 @@ pub mod parallel;
 pub mod rng;
 pub mod runtime;
 pub mod secure;
+pub mod serve;
 pub mod sketch;
 pub mod solvers;
 pub mod testkit;

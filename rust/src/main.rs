@@ -17,6 +17,12 @@
 //!   configured dataset (or an external COO/`.mtx` matrix file) into
 //!   per-rank block files + manifest for multi-host deployment
 //!   (see DEPLOYMENT.md).
+//! * `serve --checkpoint FILE [--bind ADDR] ...` — load trained factors
+//!   from a checkpoint and answer batched top-k / reconstruction /
+//!   fold-in queries over TCP (see DEPLOYMENT.md §Serving).
+//! * `query --addr ADDR <--users IDS [--top-k N|--reconstruct] |
+//!   --fold-in ITEM:RATING,... | --stats>` — smoke-test client for a
+//!   running `serve` instance.
 //! * `compare [--config FILE] [--key=value ...]` — run DSANLS against all
 //!   three MPI-FAUN baselines on the configured dataset (a Fig. 2 panel).
 //! * `secure [--config FILE] ...` — run all six secure protocols on the
@@ -43,6 +49,8 @@ fn main() {
         Some("launch") => cmd_result(coordinator::launch::launch_main(&args[1..])),
         Some("worker") => cmd_result(coordinator::launch::worker_main(&args[1..])),
         Some("shard") => cmd_result(coordinator::shard_cli::shard_main(&args[1..])),
+        Some("serve") => cmd_result(coordinator::serve_cli::serve_main(&args[1..])),
+        Some("query") => cmd_result(coordinator::serve_cli::query_main(&args[1..])),
         Some("compare") => cmd_compare(&args[1..]),
         Some("secure") => cmd_secure(&args[1..]),
         Some("attack") => cmd_attack(),
@@ -64,7 +72,7 @@ fn main() {
 fn usage() {
     println!(
         "dsanls {} — Fast and Secure Distributed NMF (TKDE 2020 reproduction)\n\n\
-         USAGE: dsanls <run|launch|worker|shard|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
+         USAGE: dsanls <run|launch|worker|shard|serve|query|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
          launch:  dsanls launch --nodes N [--port P] [--bind HOST] [--hosts FILE] [--shards DIR]\n\
                   [--max-seconds S] [--target-error E] [--checkpoint PATH [--checkpoint-every K]]\n\
                   [--resume PATH] [--retries N] [--verify-sim] [--overlap]\n\
@@ -84,7 +92,17 @@ fn usage() {
                   pre-slice the dataset — or an external COO/.mtx matrix file (--input,\n\
                   streamed; the full matrix is never materialised) — into per-rank block\n\
                   files for multi-host runs; --balance nnz cuts columns by stored-value\n\
-                  count for the secure protocols on skewed data\n\n\
+                  count for the secure protocols on skewed data\n\
+         serve:   dsanls serve --checkpoint FILE [--bind HOST:PORT] [--batch-max N]\n\
+                  [--batch-wait-us U] [--cache N] [--solver hals|cd|pgd] [--sweeps N]\n\
+                  [--threads T] [--expect-algo NAME] [--expect-params HASH]\n\
+                  load trained factors from a checkpoint and answer batched top-k /\n\
+                  reconstruction / fold-in queries over TCP (see DEPLOYMENT.md)\n\
+         query:   dsanls query [--addr HOST:PORT] --users ID[,ID...] [--top-k N]\n\
+                  dsanls query [--addr HOST:PORT] --users ID[,ID...] --reconstruct\n\
+                  dsanls query [--addr HOST:PORT] --fold-in ITEM:RATING[,...] [--top-k N]\n\
+                  dsanls query [--addr HOST:PORT] --stats\n\
+                  smoke-test client for a running serve instance\n\n\
          Config keys (TOML sections flattened as --section.key=value):\n\
            experiment: name algorithm dataset scale nodes rank iterations seed eval_every backend\n\
            sketch:     kind d_u d_v\n\

@@ -12,7 +12,7 @@ mod init;
 pub mod job;
 mod loss;
 
-pub use anls::{Anls, AnlsOptions, Sanls, SanlsOptions};
+pub use anls::{update_unsketched, Anls, AnlsOptions, Sanls, SanlsOptions};
 pub use control::{ControlToken, StopPolicy, StopReason};
 pub use init::{init_factors, init_factors_from, init_scale, init_scale_from};
 pub use job::{Algo, Algorithm, Backend, DataSource, Job, JobBuilder, JobHandle, Outcome};

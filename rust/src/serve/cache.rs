@@ -1,0 +1,203 @@
+//! Hot/cold LRU cache for fold-in embeddings.
+//!
+//! Fold-in traffic is heavy-tailed: the same anonymous rating rows (hot
+//! landing-page sessions, retried requests) recur far more often than a
+//! uniform draw, so the server keeps the most recent embeddings and
+//! evicts least-recently-used ones. Keys are the **exact** canonical row
+//! — `(item, rating.to_bits())` pairs sorted by item — not a hash, so a
+//! hit can never return another row's embedding. Hand-rolled on
+//! `HashMap` + an index-linked list (no external crates), O(1) per
+//! operation.
+
+use std::collections::HashMap;
+
+/// Canonical cache key for a sparse rating row: sorted by item id, rating
+/// bits preserved exactly (`f32` is not `Hash`; its bit pattern is).
+pub type RowKey = Vec<(u64, u32)>;
+
+/// Build the canonical [`RowKey`] for a query row.
+pub fn row_key(entries: &[(u64, f32)]) -> RowKey {
+    let mut key: RowKey = entries.iter().map(|&(i, v)| (i, v.to_bits())).collect();
+    key.sort_unstable();
+    key
+}
+
+const NIL: usize = usize::MAX;
+
+#[derive(Debug)]
+struct Slot {
+    key: RowKey,
+    value: Vec<f32>,
+    prev: usize,
+    next: usize,
+}
+
+/// LRU cache from canonical rating rows to fold-in embeddings.
+#[derive(Debug)]
+pub struct FoldCache {
+    cap: usize,
+    map: HashMap<RowKey, usize>,
+    slots: Vec<Slot>,
+    /// Most-recently-used slot (NIL when empty).
+    head: usize,
+    /// Least-recently-used slot (NIL when empty).
+    tail: usize,
+    hits: u64,
+    misses: u64,
+}
+
+impl FoldCache {
+    /// A cache holding at most `cap` embeddings (`cap = 0` disables it:
+    /// every lookup misses and inserts are dropped).
+    pub fn new(cap: usize) -> FoldCache {
+        FoldCache {
+            cap,
+            map: HashMap::with_capacity(cap.min(1 << 20)),
+            slots: Vec::with_capacity(cap.min(1 << 20)),
+            head: NIL,
+            tail: NIL,
+            hits: 0,
+            misses: 0,
+        }
+    }
+
+    /// Entries currently cached.
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    /// Is the cache empty?
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    /// Configured capacity.
+    pub fn cap(&self) -> usize {
+        self.cap
+    }
+
+    /// Lookups answered from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits
+    }
+
+    /// Lookups that fell through to a solve so far.
+    pub fn misses(&self) -> u64 {
+        self.misses
+    }
+
+    fn unlink(&mut self, idx: usize) {
+        let (prev, next) = (self.slots[idx].prev, self.slots[idx].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else {
+            self.tail = prev;
+        }
+    }
+
+    fn push_front(&mut self, idx: usize) {
+        self.slots[idx].prev = NIL;
+        self.slots[idx].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+
+    /// Look a row up, promoting it to most-recently-used on a hit.
+    pub fn get(&mut self, key: &RowKey) -> Option<&[f32]> {
+        match self.map.get(key).copied() {
+            Some(idx) => {
+                self.hits += 1;
+                if self.head != idx {
+                    self.unlink(idx);
+                    self.push_front(idx);
+                }
+                Some(&self.slots[idx].value)
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert (or refresh) an embedding, evicting the least-recently-used
+    /// entry when full.
+    pub fn insert(&mut self, key: RowKey, value: Vec<f32>) {
+        if self.cap == 0 {
+            return;
+        }
+        if let Some(&idx) = self.map.get(&key) {
+            self.slots[idx].value = value;
+            if self.head != idx {
+                self.unlink(idx);
+                self.push_front(idx);
+            }
+            return;
+        }
+        let idx = if self.map.len() >= self.cap {
+            // recycle the LRU slot in place (no allocation churn)
+            let idx = self.tail;
+            self.unlink(idx);
+            let old = std::mem::replace(&mut self.slots[idx].key, key.clone());
+            self.map.remove(&old);
+            self.slots[idx].value = value;
+            idx
+        } else {
+            self.slots.push(Slot { key: key.clone(), value, prev: NIL, next: NIL });
+            self.slots.len() - 1
+        };
+        self.map.insert(key, idx);
+        self.push_front(idx);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn evicts_least_recently_used() {
+        let mut c = FoldCache::new(2);
+        let (ka, kb, kc) =
+            (row_key(&[(1, 1.0)]), row_key(&[(2, 1.0)]), row_key(&[(3, 1.0)]));
+        c.insert(ka.clone(), vec![1.0]);
+        c.insert(kb.clone(), vec![2.0]);
+        assert_eq!(c.get(&ka), Some(&[1.0f32][..])); // promotes A over B
+        c.insert(kc.clone(), vec![3.0]); // evicts B
+        assert_eq!(c.get(&kb), None);
+        assert_eq!(c.get(&ka), Some(&[1.0f32][..]));
+        assert_eq!(c.get(&kc), Some(&[3.0f32][..]));
+        assert_eq!(c.len(), 2);
+        assert_eq!((c.hits(), c.misses()), (3, 1));
+    }
+
+    #[test]
+    fn key_is_order_insensitive_but_value_exact() {
+        // same row in a different order must hit …
+        assert_eq!(row_key(&[(5, 1.5), (2, 0.5)]), row_key(&[(2, 0.5), (5, 1.5)]));
+        // … but a different rating (even by one ulp) must miss
+        assert_ne!(row_key(&[(2, 0.5)]), row_key(&[(2, 0.5000001)]));
+        let mut c = FoldCache::new(4);
+        c.insert(row_key(&[(5, 1.5), (2, 0.5)]), vec![9.0]);
+        assert_eq!(c.get(&row_key(&[(2, 0.5), (5, 1.5)])), Some(&[9.0f32][..]));
+    }
+
+    #[test]
+    fn zero_capacity_disables() {
+        let mut c = FoldCache::new(0);
+        let k = row_key(&[(1, 1.0)]);
+        c.insert(k.clone(), vec![1.0]);
+        assert_eq!(c.get(&k), None);
+        assert!(c.is_empty());
+    }
+}

@@ -1,0 +1,94 @@
+//! Blocking client for the serving plane — the counterpart `dsanls
+//! query`, the end-to-end tests and `benches/serve_latency.rs` speak
+//! through.
+
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+
+use crate::error::{Context, Result};
+use crate::linalg::Mat;
+use crate::serve::protocol::{self, Query, Reply};
+use crate::transport::wire;
+
+/// One connection to a `dsanls serve` server.
+#[derive(Debug)]
+pub struct ServeClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_tag: u64,
+}
+
+impl ServeClient {
+    /// Connect and handshake (magic/version preamble both ways — a
+    /// mixed-version binary pair fails here, not mid-query).
+    pub fn connect(addr: &str) -> Result<ServeClient> {
+        let stream = TcpStream::connect(addr)
+            .with_context(|| format!("connecting to serve endpoint {addr}"))?;
+        let _ = stream.set_nodelay(true);
+        let reader =
+            BufReader::new(stream.try_clone().context("cloning serve connection")?);
+        let mut writer = BufWriter::new(stream);
+        wire::write_preamble(&mut writer, 0)?;
+        let mut client = ServeClient { reader, writer, next_tag: 1 };
+        wire::read_preamble(&mut client.reader)
+            .context("serve handshake (is the endpoint a dsanls serve server?)")?;
+        Ok(client)
+    }
+
+    /// Send one query and block for its reply. [`Reply::Error`] from the
+    /// server is surfaced as a typed error here, so the convenience
+    /// wrappers below only ever see successful payloads.
+    pub fn query(&mut self, q: &Query) -> Result<Reply> {
+        let tag = self.next_tag;
+        self.next_tag += 1;
+        let payload = protocol::encode_query(q);
+        wire::write_frame_parts(&mut self.writer, protocol::REQUEST, tag, 0.0, &payload)?;
+        loop {
+            let frame = wire::read_frame(&mut self.reader)?;
+            if frame.kind != wire::FrameKind::Response || frame.tag != tag {
+                continue; // a pipelined sibling's reply; not ours
+            }
+            return match protocol::decode_reply(&frame.payload)? {
+                Reply::Error(msg) => Err(crate::err!("serve error: {msg}")),
+                reply => Ok(reply),
+            };
+        }
+    }
+
+    /// Top-`n` items for each user id.
+    pub fn top_k(&mut self, users: &[u64], n: usize) -> Result<Vec<Vec<(u64, f32)>>> {
+        match self.query(&Query::TopK { users: users.to_vec(), n })? {
+            Reply::TopK(rows) => Ok(rows),
+            other => Err(crate::err!("unexpected reply {other:?} to a top-k query")),
+        }
+    }
+
+    /// Full reconstruction rows `uᵢ·Vᵀ` for each user id.
+    pub fn reconstruct(&mut self, users: &[u64]) -> Result<Mat> {
+        match self.query(&Query::Reconstruct { users: users.to_vec() })? {
+            Reply::Scores { rows, cols, data } => Ok(Mat::from_vec(rows, cols, data)),
+            other => Err(crate::err!("unexpected reply {other:?} to a reconstruct query")),
+        }
+    }
+
+    /// Fold a new user in from a sparse `(item, rating)` row; returns the
+    /// embedding and (when `n > 0`) its top-`n` items.
+    pub fn fold_in(
+        &mut self,
+        entries: &[(u64, f32)],
+        n: usize,
+    ) -> Result<(Vec<f32>, Vec<(u64, f32)>)> {
+        match self.query(&Query::FoldIn { entries: entries.to_vec(), n })? {
+            Reply::FoldIn { w, top } => Ok((w, top)),
+            other => Err(crate::err!("unexpected reply {other:?} to a fold-in query")),
+        }
+    }
+
+    /// Server metrics snapshot (JSON text).
+    pub fn stats(&mut self) -> Result<String> {
+        match self.query(&Query::Stats)? {
+            Reply::Stats(text) => Ok(text),
+            other => Err(crate::err!("unexpected reply {other:?} to a stats query")),
+        }
+    }
+}

@@ -1,0 +1,44 @@
+//! Serving plane: factor-model inference for trained NMF factors.
+//!
+//! Training ends at [`crate::nmf::job::Outcome`] factors; this subsystem is
+//! their production consumer. A [`FactorModel`] loads the versioned
+//! checkpoint format written by [`crate::nmf::control`] and answers three
+//! query families:
+//!
+//! * **top-k recommendation** — score a batch of known users against every
+//!   item (`W·Vᵀ` through the packed SIMD GEMM) and return the best `n`
+//!   item ids per user;
+//! * **reconstruction** — the full score row `uᵢ·Vᵀ` for a batch of users
+//!   (matrix-completion reads);
+//! * **fold-in** — embed a *new* user from a sparse rating row by solving a
+//!   single NNLS row against the fixed item factor `V` (sklearn's
+//!   `non_negative_factorization(update_H=False)` shape), reusing the
+//!   [`crate::solvers`] machinery with a zero-allocation steady state.
+//!
+//! The [`server`] module fronts a model with a request/response server on
+//! the [`crate::transport::wire`] length-prefixed framing (frame kinds
+//! [`crate::transport::wire::FrameKind::Request`] /
+//! [`crate::transport::wire::FrameKind::Response`], wire v5): a concurrent
+//! batcher coalesces in-flight score queries into one GEMM, fold-in
+//! results go through an LRU hot/cold cache, and per-query
+//! latency/throughput counters surface as [`crate::metrics::JsonValue`]
+//! reports. [`client::ServeClient`] is the matching client used by
+//! `dsanls query`, the end-to-end tests and `benches/serve_latency.rs`.
+//!
+//! CLI surface: `dsanls serve --checkpoint <file> --bind <addr>` and
+//! `dsanls query --addr <host:port>`
+//! ([`crate::coordinator::serve_cli`]; walkthrough in DEPLOYMENT.md).
+
+#![warn(missing_docs)]
+
+pub mod cache;
+pub mod client;
+pub mod model;
+pub mod protocol;
+pub mod server;
+
+pub use cache::FoldCache;
+pub use client::ServeClient;
+pub use model::{top_n, FactorModel, FoldIn, FOLD_IN_INIT};
+pub use protocol::{Query, Reply};
+pub use server::{serve, ServeOptions, ServerHandle};

@@ -1,0 +1,353 @@
+//! [`FactorModel`]: checkpoint-loaded factors and the query kernels.
+//!
+//! The model holds the trained factors `U` (users×k) and `V` (items×k)
+//! plus the precomputed fold-in gram `VᵀV` (k×k). Scoring is one GEMM:
+//! gather the queried user rows into a `batch×k` block `W`, then
+//! `scores = W·Vᵀ` through [`crate::linalg::gemm_nt`] — which is why the
+//! server batches concurrent queries before touching the kernels.
+//! Fold-in solves `min_{w≥0} ‖a − w·Vᵀ‖²` for one sparse row `a` with the
+//! same [`crate::solvers`] update the training loop uses, against the
+//! cached gram, with zero steady-state allocations ([`FoldIn`]).
+
+use std::path::Path;
+
+use crate::error::{Context, Result};
+use crate::linalg::{gemm_nt, gemm_tn, saxpy, Mat};
+use crate::nmf::control::{read_checkpoint, Checkpoint, CheckpointMeta};
+use crate::nmf::MuSchedule;
+use crate::solvers::{self, Normal, SolverKind};
+
+/// Every fold-in iterate starts from this constant vector (`w⁰ = 1`), so
+/// a fold-in and its fixed-`V` reference solve are comparable bit-for-bit
+/// when seeded with the same row.
+pub const FOLD_IN_INIT: f32 = 1.0;
+
+/// Trained factors loaded from a [`crate::nmf::control`] checkpoint,
+/// ready to answer reconstruction / top-k / fold-in queries.
+#[derive(Debug, Clone)]
+pub struct FactorModel {
+    meta: CheckpointMeta,
+    iteration: usize,
+    /// Row (user) factor, `users×k`.
+    u: Mat,
+    /// Column (item) factor, `items×k` — the `H` every query runs against.
+    v: Mat,
+    /// `VᵀV` (k×k), precomputed once at load: the gram every fold-in
+    /// solve shares, byte-identical to what
+    /// [`crate::solvers::Workspace::normal_unsketched`] would recompute.
+    gram: Mat,
+}
+
+impl FactorModel {
+    /// Load a model from a checkpoint file. Corrupt, truncated or
+    /// version-mismatched files surface as the typed errors of
+    /// [`read_checkpoint`] (bad magic, format version, missing footer,
+    /// implausible shapes), with the serving context attached.
+    pub fn load(path: &Path) -> Result<FactorModel> {
+        let ck = read_checkpoint(path)
+            .with_context(|| format!("loading factor model from {}", path.display()))?;
+        Ok(FactorModel::from_checkpoint(ck))
+    }
+
+    /// Build a model from an already-read (or synthetic) checkpoint.
+    pub fn from_checkpoint(ck: Checkpoint) -> FactorModel {
+        let mut gram = Mat::zeros(ck.meta.k, ck.meta.k);
+        gemm_tn(&ck.state.v, &ck.state.v, &mut gram);
+        FactorModel {
+            meta: ck.meta,
+            iteration: ck.state.iteration,
+            u: ck.state.u,
+            v: ck.state.v,
+            gram,
+        }
+    }
+
+    /// Assert the loaded checkpoint belongs to the run the operator
+    /// expects (`dsanls serve --expect-algo/--expect-params`). Serving a
+    /// checkpoint trained with different options is silent garbage, so a
+    /// mismatch is a typed error naming both sides.
+    pub fn check_identity(
+        &self,
+        expect_algo: Option<&str>,
+        expect_params: Option<u64>,
+    ) -> Result<()> {
+        if let Some(algo) = expect_algo {
+            if self.meta.algo != algo {
+                crate::bail!(
+                    "checkpoint was written by algorithm {} but the server expects {algo}",
+                    self.meta.algo
+                );
+            }
+        }
+        if let Some(params) = expect_params {
+            if self.meta.params != params {
+                crate::bail!(
+                    "checkpoint params fingerprint {:#018x} does not match the expected \
+                     {params:#018x} — the factors were trained with different options",
+                    self.meta.params
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Run identity recorded at training time.
+    pub fn meta(&self) -> &CheckpointMeta {
+        &self.meta
+    }
+
+    /// Training iteration the factors were snapshotted at.
+    pub fn iteration(&self) -> usize {
+        self.iteration
+    }
+
+    /// Factorisation rank.
+    pub fn k(&self) -> usize {
+        self.meta.k
+    }
+
+    /// Known users (rows of `U`).
+    pub fn users(&self) -> usize {
+        self.u.rows()
+    }
+
+    /// Items (rows of `V`).
+    pub fn items(&self) -> usize {
+        self.v.rows()
+    }
+
+    /// The user factor `U` (users×k).
+    pub fn u(&self) -> &Mat {
+        &self.u
+    }
+
+    /// The item factor `V` (items×k).
+    pub fn v(&self) -> &Mat {
+        &self.v
+    }
+
+    /// The precomputed fold-in gram `VᵀV` (k×k).
+    pub fn gram(&self) -> &Mat {
+        &self.gram
+    }
+
+    /// Gather the factor rows of `users` into `w` (`len×k`), validating
+    /// every id. Unknown ids are a typed error (they would otherwise index
+    /// another user's factors).
+    pub fn gather_users(&self, users: &[u64], w: &mut Mat) -> Result<()> {
+        let k = self.k();
+        w.resize_to(users.len(), k);
+        for (slot, &id) in users.iter().enumerate() {
+            if id >= self.u.rows() as u64 {
+                crate::bail!(
+                    "unknown user id {id} (model has {} users; fold-in embeds new ones)",
+                    self.u.rows()
+                );
+            }
+            w.row_mut(slot).copy_from_slice(self.u.row(id as usize));
+        }
+        Ok(())
+    }
+
+    /// Score a batch of known users against every item:
+    /// `scores = W·Vᵀ` (`len×items`). `w` and `scores` are caller scratch
+    /// (the server reuses them across batches).
+    pub fn scores_into(&self, users: &[u64], w: &mut Mat, scores: &mut Mat) -> Result<()> {
+        self.gather_users(users, w)?;
+        self.scores_for_w(w, scores);
+        Ok(())
+    }
+
+    /// Score arbitrary embedding rows (`w: n×k`, e.g. fold-in results)
+    /// against every item: `scores = w·Vᵀ`.
+    pub fn scores_for_w(&self, w: &Mat, scores: &mut Mat) {
+        assert_eq!(w.cols(), self.k(), "embedding width != model rank");
+        scores.resize_to(w.rows(), self.v.rows());
+        gemm_nt(w, &self.v, scores);
+    }
+}
+
+/// Select the `n` largest entries of `scores` into `out` as
+/// `(item, score)`, best first. Ties break towards the lower item id and
+/// NaNs are skipped, so the selection is deterministic. `O(items·n)` with
+/// `n` small — no allocation beyond `out`'s capacity.
+pub fn top_n(scores: &[f32], n: usize, out: &mut Vec<(usize, f32)>) {
+    out.clear();
+    if n == 0 {
+        return;
+    }
+    for (i, &s) in scores.iter().enumerate() {
+        if s.is_nan() {
+            continue;
+        }
+        if out.len() == n {
+            if s <= out[n - 1].1 {
+                continue;
+            }
+            out.pop();
+        }
+        let pos = out.partition_point(|&(_, v)| v >= s);
+        out.insert(pos, (i, s));
+    }
+}
+
+/// Reusable fold-in workspace: solves one sparse row against the fixed
+/// item factor with **zero steady-state allocations** — the sorted-entry
+/// buffer, the `1×k` cross row and the `1×k` iterate are all owned here
+/// and regrown only when shapes change (asserted by
+/// `tests/serve_alloc.rs`). One instance per serving thread, exactly like
+/// [`crate::solvers::Workspace`] in the training loop.
+#[derive(Debug, Default)]
+pub struct FoldIn {
+    entries: Vec<(usize, f32)>,
+    cross: Mat,
+    x: Mat,
+}
+
+impl FoldIn {
+    /// An empty workspace (buffers size themselves on first use).
+    pub fn new() -> FoldIn {
+        FoldIn { entries: Vec::new(), cross: Mat::zeros(0, 0), x: Mat::zeros(0, 0) }
+    }
+
+    /// Embed a new user from a sparse rating row: solve
+    /// `min_{w≥0} ‖a − w·Vᵀ‖²` with `sweeps` passes of `solver` at
+    /// schedule step `t`, starting from [`FOLD_IN_INIT`]. Returns the
+    /// `k`-length embedding, borrowed from this workspace.
+    ///
+    /// The cross row accumulates `Σ aⱼ·V[j,:]` in ascending item order —
+    /// the same per-row accumulation [`crate::linalg::Csr::spmm_into`]
+    /// performs — and the gram is the model's cached `VᵀV`, so for a
+    /// duplicate-free row the result is **bit-identical** to the
+    /// unsketched reference solve
+    /// ([`crate::nmf::update_unsketched`] on a `1×items` sparse matrix
+    /// with `V` fixed). Duplicate item ids are merged additively.
+    pub fn solve(
+        &mut self,
+        model: &FactorModel,
+        row: &[(usize, f32)],
+        solver: SolverKind,
+        sweeps: usize,
+        t: usize,
+    ) -> Result<&[f32]> {
+        let k = model.k();
+        let items = model.items();
+        self.entries.clear();
+        self.entries.extend_from_slice(row);
+        for &(j, _) in &self.entries {
+            if j >= items {
+                crate::bail!("fold-in item id {j} out of range (model has {items} items)");
+            }
+        }
+        // canonicalise like Csr::from_triplets: sorted by item, duplicates
+        // summed (unstable sort allocates nothing, unlike the stable one)
+        self.entries.sort_unstable_by_key(|&(j, _)| j);
+        let mut keep = 0usize;
+        for i in 1..self.entries.len() {
+            if self.entries[i].0 == self.entries[keep].0 {
+                self.entries[keep].1 += self.entries[i].1;
+            } else {
+                keep += 1;
+                self.entries[keep] = self.entries[i];
+            }
+        }
+        self.entries.truncate(if self.entries.is_empty() { 0 } else { keep + 1 });
+
+        self.cross.resize_to(1, k);
+        let crow = self.cross.row_mut(0);
+        crow.fill(0.0);
+        for &(j, val) in &self.entries {
+            saxpy(val, model.v.row(j), crow);
+        }
+
+        self.x.resize_to(1, k);
+        self.x.data_mut().fill(FOLD_IN_INIT);
+        let nrm = Normal::new(&model.gram, &self.cross);
+        for _ in 0..sweeps.max(1) {
+            solvers::update_auto(solver, &mut self.x, &nrm, &MuSchedule::default(), t);
+        }
+        Ok(self.x.row(0))
+    }
+
+    /// Buffer identities (cross ptr, iterate ptr) — lets the allocation
+    /// audit assert steady-state reuse, mirroring
+    /// [`crate::solvers::Workspace::scratch_ptrs`].
+    pub fn scratch_ptrs(&self) -> (usize, usize) {
+        (self.cross.data().as_ptr() as usize, self.x.data().as_ptr() as usize)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nmf::control::ResumeState;
+    use crate::rng::Pcg64;
+
+    fn toy_model(users: usize, items: usize, k: usize, seed: u128) -> FactorModel {
+        let mut rng = Pcg64::new(seed, 0);
+        let u = Mat::rand_uniform(users, k, 1.0, &mut rng);
+        let v = Mat::rand_uniform(items, k, 1.0, &mut rng);
+        FactorModel::from_checkpoint(Checkpoint {
+            meta: CheckpointMeta {
+                algo: "dsanls".into(),
+                seed: 1,
+                k,
+                rows: users,
+                cols: items,
+                params: 42,
+            },
+            state: ResumeState { iteration: 5, u, v },
+        })
+    }
+
+    #[test]
+    fn top_n_selects_and_orders() {
+        let scores = [0.1f32, 0.9, 0.3, 0.9, 0.05, 0.7];
+        let mut out = Vec::new();
+        top_n(&scores, 3, &mut out);
+        assert_eq!(out, vec![(1, 0.9), (3, 0.9), (5, 0.7)]);
+        top_n(&scores, 0, &mut out);
+        assert!(out.is_empty());
+        top_n(&scores, 10, &mut out);
+        assert_eq!(out.len(), scores.len());
+        assert!(out.windows(2).all(|w| w[0].1 >= w[1].1));
+    }
+
+    #[test]
+    fn scores_match_per_row_dot_products() {
+        let m = toy_model(8, 12, 4, 0xF00D);
+        let (mut w, mut scores) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        m.scores_into(&[3, 0], &mut w, &mut scores).unwrap();
+        assert_eq!((scores.rows(), scores.cols()), (2, 12));
+        let want = crate::linalg::dot(m.u().row(3), m.v().row(7));
+        assert_eq!(scores.get(0, 7), want);
+    }
+
+    #[test]
+    fn unknown_user_and_item_are_typed_errors() {
+        let m = toy_model(8, 12, 4, 0xF00D);
+        let (mut w, mut scores) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        let err = m.scores_into(&[99], &mut w, &mut scores).unwrap_err().to_string();
+        assert!(err.contains("unknown user id 99"), "{err}");
+        let mut fold = FoldIn::new();
+        let err = fold
+            .solve(&m, &[(12, 1.0)], SolverKind::ProximalCd, 2, 0)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn fold_in_merges_duplicates_and_reuses_buffers() {
+        let m = toy_model(4, 10, 3, 7);
+        let mut fold = FoldIn::new();
+        let merged =
+            fold.solve(&m, &[(2, 0.5), (2, 0.5), (7, 1.0)], SolverKind::ProximalCd, 3, 0).unwrap();
+        let merged = merged.to_vec();
+        let direct = fold.solve(&m, &[(2, 1.0), (7, 1.0)], SolverKind::ProximalCd, 3, 0).unwrap();
+        assert_eq!(merged, direct);
+        let ptrs = fold.scratch_ptrs();
+        let _ = fold.solve(&m, &[(2, 1.0), (7, 1.0)], SolverKind::ProximalCd, 3, 0).unwrap();
+        assert_eq!(fold.scratch_ptrs(), ptrs, "fold-in scratch reallocated in steady state");
+    }
+}

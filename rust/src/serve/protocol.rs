@@ -1,0 +1,316 @@
+//! Serving-plane payload codec for [`FrameKind::Request`] /
+//! [`FrameKind::Response`] frames (wire v5).
+//!
+//! Queries and replies ride the existing length-prefixed f32 framing of
+//! [`crate::transport::wire`]: lane 0 carries the op code, exact integers
+//! (ids, counts) are bit-split across two f32 lanes via
+//! [`wire::push_u64_bits`] — an id cast to f32 would silently corrupt
+//! above 2²⁴ — and scores travel as native f32 lanes. The frame `tag` is
+//! the client's request id; the server echoes it on the reply, which is
+//! what lets one connection pipeline queries.
+//!
+//! Reply lane 0 is `0.0` for a server-side error (rest of the payload is
+//! the message, [`wire::encode_text`]-encoded); otherwise it echoes the
+//! request op code.
+
+use crate::error::Result;
+use crate::transport::wire::{self, FrameKind};
+
+/// Op code for a top-k recommendation query.
+pub const OP_TOP_K: f32 = 1.0;
+/// Op code for a full-row reconstruction query.
+pub const OP_RECONSTRUCT: f32 = 2.0;
+/// Op code for a fold-in query.
+pub const OP_FOLD_IN: f32 = 3.0;
+/// Op code for a server-statistics query.
+pub const OP_STATS: f32 = 4.0;
+/// Reply status lane for a failed query.
+pub const STATUS_ERROR: f32 = 0.0;
+
+/// One serving-plane query.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Query {
+    /// Best `n` items for each of `users` (known user ids).
+    TopK {
+        /// Queried user ids.
+        users: Vec<u64>,
+        /// Items to return per user.
+        n: usize,
+    },
+    /// Full score rows `uᵢ·Vᵀ` for each of `users`.
+    Reconstruct {
+        /// Queried user ids.
+        users: Vec<u64>,
+    },
+    /// Embed a new user from a sparse `(item, rating)` row; when `n > 0`
+    /// the reply also carries the top-`n` items for the embedding.
+    FoldIn {
+        /// Sparse rating row.
+        entries: Vec<(u64, f32)>,
+        /// Items to recommend for the folded-in user (0 = embedding only).
+        n: usize,
+    },
+    /// Server metrics snapshot (JSON text reply).
+    Stats,
+}
+
+/// One serving-plane reply.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Reply {
+    /// Per-user `(item, score)` lists, best first (answers [`Query::TopK`]).
+    TopK(Vec<Vec<(u64, f32)>>),
+    /// Dense score rows, row-major (answers [`Query::Reconstruct`]).
+    Scores {
+        /// Number of score rows.
+        rows: usize,
+        /// Items per row.
+        cols: usize,
+        /// Row-major scores (`rows·cols` lanes).
+        data: Vec<f32>,
+    },
+    /// Fold-in embedding plus optional recommendations
+    /// (answers [`Query::FoldIn`]).
+    FoldIn {
+        /// The `k`-length nonnegative embedding.
+        w: Vec<f32>,
+        /// Top items for the embedding (empty when `n = 0` was asked).
+        top: Vec<(u64, f32)>,
+    },
+    /// Metrics snapshot as JSON text (answers [`Query::Stats`]).
+    Stats(String),
+    /// The query failed server-side; the message names the cause.
+    Error(String),
+}
+
+fn take_len(payload: &[f32], pos: &mut usize, what: &str) -> Result<usize> {
+    let n = wire::take_u64_bits(payload, pos)?;
+    // a corrupt length would otherwise turn into a huge allocation
+    if n > wire::MAX_FRAME_BYTES as u64 {
+        crate::bail!("implausible {what} count {n} in serving frame");
+    }
+    Ok(n as usize)
+}
+
+fn take_f32(payload: &[f32], pos: &mut usize) -> Result<f32> {
+    let v = *payload
+        .get(*pos)
+        .ok_or_else(|| crate::err!("payload underrun decoding f32 at {}", *pos))?;
+    *pos += 1;
+    Ok(v)
+}
+
+/// Encode a query into a [`FrameKind::Request`] payload.
+pub fn encode_query(q: &Query) -> Vec<f32> {
+    let mut p = Vec::new();
+    match q {
+        Query::TopK { users, n } => {
+            p.push(OP_TOP_K);
+            wire::push_u64_bits(&mut p, *n as u64);
+            wire::push_u64_bits(&mut p, users.len() as u64);
+            for &id in users {
+                wire::push_u64_bits(&mut p, id);
+            }
+        }
+        Query::Reconstruct { users } => {
+            p.push(OP_RECONSTRUCT);
+            wire::push_u64_bits(&mut p, users.len() as u64);
+            for &id in users {
+                wire::push_u64_bits(&mut p, id);
+            }
+        }
+        Query::FoldIn { entries, n } => {
+            p.push(OP_FOLD_IN);
+            wire::push_u64_bits(&mut p, *n as u64);
+            wire::push_u64_bits(&mut p, entries.len() as u64);
+            for &(item, val) in entries {
+                wire::push_u64_bits(&mut p, item);
+                p.push(val);
+            }
+        }
+        Query::Stats => p.push(OP_STATS),
+    }
+    p
+}
+
+/// Decode a [`FrameKind::Request`] payload.
+pub fn decode_query(payload: &[f32]) -> Result<Query> {
+    let mut pos = 0usize;
+    let op = take_f32(payload, &mut pos)?;
+    if op == OP_TOP_K {
+        let n = take_len(payload, &mut pos, "top-k")?;
+        let count = take_len(payload, &mut pos, "user")?;
+        let mut users = Vec::with_capacity(count);
+        for _ in 0..count {
+            users.push(wire::take_u64_bits(payload, &mut pos)?);
+        }
+        Ok(Query::TopK { users, n })
+    } else if op == OP_RECONSTRUCT {
+        let count = take_len(payload, &mut pos, "user")?;
+        let mut users = Vec::with_capacity(count);
+        for _ in 0..count {
+            users.push(wire::take_u64_bits(payload, &mut pos)?);
+        }
+        Ok(Query::Reconstruct { users })
+    } else if op == OP_FOLD_IN {
+        let n = take_len(payload, &mut pos, "top-k")?;
+        let nnz = take_len(payload, &mut pos, "entry")?;
+        let mut entries = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let item = wire::take_u64_bits(payload, &mut pos)?;
+            let val = take_f32(payload, &mut pos)?;
+            entries.push((item, val));
+        }
+        Ok(Query::FoldIn { entries, n })
+    } else if op == OP_STATS {
+        Ok(Query::Stats)
+    } else {
+        crate::bail!("unknown serving op code {op}")
+    }
+}
+
+/// Encode a reply into a [`FrameKind::Response`] payload.
+pub fn encode_reply(r: &Reply) -> Vec<f32> {
+    let mut p = Vec::new();
+    match r {
+        Reply::TopK(rows) => {
+            p.push(OP_TOP_K);
+            wire::push_u64_bits(&mut p, rows.len() as u64);
+            for row in rows {
+                wire::push_u64_bits(&mut p, row.len() as u64);
+                for &(item, score) in row {
+                    wire::push_u64_bits(&mut p, item);
+                    p.push(score);
+                }
+            }
+        }
+        Reply::Scores { rows, cols, data } => {
+            p.push(OP_RECONSTRUCT);
+            wire::push_u64_bits(&mut p, *rows as u64);
+            wire::push_u64_bits(&mut p, *cols as u64);
+            p.extend_from_slice(data);
+        }
+        Reply::FoldIn { w, top } => {
+            p.push(OP_FOLD_IN);
+            wire::push_u64_bits(&mut p, w.len() as u64);
+            p.extend_from_slice(w);
+            wire::push_u64_bits(&mut p, top.len() as u64);
+            for &(item, score) in top {
+                wire::push_u64_bits(&mut p, item);
+                p.push(score);
+            }
+        }
+        Reply::Stats(text) => {
+            p.push(OP_STATS);
+            p.extend(wire::encode_text(text));
+        }
+        Reply::Error(msg) => {
+            p.push(STATUS_ERROR);
+            p.extend(wire::encode_text(msg));
+        }
+    }
+    p
+}
+
+/// Decode a [`FrameKind::Response`] payload.
+pub fn decode_reply(payload: &[f32]) -> Result<Reply> {
+    let mut pos = 0usize;
+    let op = take_f32(payload, &mut pos)?;
+    if op == STATUS_ERROR {
+        return Ok(Reply::Error(wire::decode_text(&payload[pos..])));
+    }
+    if op == OP_TOP_K {
+        let nrows = take_len(payload, &mut pos, "reply row")?;
+        let mut rows = Vec::with_capacity(nrows);
+        for _ in 0..nrows {
+            let len = take_len(payload, &mut pos, "reply item")?;
+            let mut row = Vec::with_capacity(len);
+            for _ in 0..len {
+                let item = wire::take_u64_bits(payload, &mut pos)?;
+                let score = take_f32(payload, &mut pos)?;
+                row.push((item, score));
+            }
+            rows.push(row);
+        }
+        Ok(Reply::TopK(rows))
+    } else if op == OP_RECONSTRUCT {
+        let rows = take_len(payload, &mut pos, "score row")?;
+        let cols = take_len(payload, &mut pos, "score col")?;
+        let n = rows
+            .checked_mul(cols)
+            .filter(|&n| pos + n <= payload.len())
+            .ok_or_else(|| crate::err!("score reply shorter than its {rows}x{cols} header"))?;
+        Ok(Reply::Scores { rows, cols, data: payload[pos..pos + n].to_vec() })
+    } else if op == OP_FOLD_IN {
+        let k = take_len(payload, &mut pos, "embedding lane")?;
+        if pos + k > payload.len() {
+            crate::bail!("fold-in reply shorter than its k={k} header");
+        }
+        let w = payload[pos..pos + k].to_vec();
+        pos += k;
+        let len = take_len(payload, &mut pos, "reply item")?;
+        let mut top = Vec::with_capacity(len);
+        for _ in 0..len {
+            let item = wire::take_u64_bits(payload, &mut pos)?;
+            let score = take_f32(payload, &mut pos)?;
+            top.push((item, score));
+        }
+        Ok(Reply::FoldIn { w, top })
+    } else if op == OP_STATS {
+        Ok(Reply::Stats(wire::decode_text(&payload[pos..])))
+    } else {
+        crate::bail!("unknown serving reply op {op}")
+    }
+}
+
+/// The frame kind a query travels as (always [`FrameKind::Request`] —
+/// named here so call sites read as protocol, not transport).
+pub const REQUEST: FrameKind = FrameKind::Request;
+/// The frame kind a reply travels as.
+pub const RESPONSE: FrameKind = FrameKind::Response;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn query_roundtrip() {
+        // ids beyond 2^24 must survive exactly (f32-cast would corrupt)
+        let big = (1u64 << 40) + 12345;
+        for q in [
+            Query::TopK { users: vec![0, big, 7], n: 10 },
+            Query::Reconstruct { users: vec![big] },
+            Query::FoldIn { entries: vec![(3, 0.5), (big, -1.25)], n: 5 },
+            Query::Stats,
+        ] {
+            assert_eq!(decode_query(&encode_query(&q)).unwrap(), q);
+        }
+    }
+
+    #[test]
+    fn reply_roundtrip() {
+        let big = (1u64 << 33) + 9;
+        for r in [
+            Reply::TopK(vec![vec![(big, 0.75), (2, 0.5)], vec![]]),
+            Reply::Scores { rows: 2, cols: 3, data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] },
+            Reply::FoldIn { w: vec![0.1, 0.2], top: vec![(1, 0.9)] },
+            Reply::Stats("{\"queries\":3}".into()),
+            Reply::Error("unknown user id 9".into()),
+        ] {
+            assert_eq!(decode_reply(&encode_reply(&r)).unwrap(), r);
+        }
+    }
+
+    #[test]
+    fn corrupt_payloads_are_typed_errors() {
+        assert!(decode_query(&[]).is_err());
+        assert!(decode_query(&[99.0]).is_err());
+        // truncated user list
+        let mut p = encode_query(&Query::TopK { users: vec![1, 2, 3], n: 4 });
+        p.truncate(p.len() - 1);
+        assert!(decode_query(&p).is_err());
+        // score reply shorter than its shape header
+        let mut p = encode_reply(&Reply::Scores { rows: 2, cols: 2, data: vec![0.0; 4] });
+        p.truncate(p.len() - 2);
+        assert!(decode_reply(&p).is_err());
+    }
+}

@@ -1,0 +1,539 @@
+//! The `dsanls serve` request/response server.
+//!
+//! Topology: one acceptor thread, one reader thread per client
+//! connection, and a single **batcher** thread that owns the compute. The
+//! readers decode [`Query`] frames and push them onto a shared queue; the
+//! batcher drains up to [`ServeOptions::batch_max`] pending queries at a
+//! time (lingering [`ServeOptions::batch_wait_us`] to let concurrent
+//! clients coalesce), gathers every queried user row into **one**
+//! `W·Vᵀ` GEMM, and answers each query from its slice of the shared
+//! score block. Fold-ins consult the LRU [`FoldCache`] before solving;
+//! misses reuse one [`FoldIn`] workspace so the steady state allocates
+//! nothing in the solver path. Replies go back over the writer half of
+//! each client's connection, tagged with the request id, so one
+//! connection can pipeline queries.
+//!
+//! Every reply is timed from enqueue to write; the counters surface as a
+//! [`crate::metrics::JsonValue`] snapshot via [`ServerHandle::metrics_json`]
+//! and the `Stats` query (what `dsanls query --stats` prints).
+
+use std::collections::VecDeque;
+use std::io::BufWriter;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::ops::Range;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Context, Result};
+use crate::linalg::Mat;
+use crate::metrics::JsonValue;
+use crate::serve::cache::{row_key, FoldCache};
+use crate::serve::model::{top_n, FactorModel, FoldIn};
+use crate::serve::protocol::{self, Query, Reply};
+use crate::solvers::SolverKind;
+use crate::transport::wire;
+
+/// Tuning knobs for [`serve`].
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    /// Most queries coalesced into one batch (≥ 1).
+    pub batch_max: usize,
+    /// How long the batcher lingers for more in-flight queries before
+    /// running a partial batch (0 = never wait; lowest latency, least
+    /// coalescing).
+    pub batch_wait_us: u64,
+    /// Fold-in LRU cache capacity (entries; 0 disables caching).
+    pub cache_cap: usize,
+    /// Subproblem solver for fold-in rows. Defaults to HALS — an exact
+    /// cyclic-CD solve is the right call for a one-shot embedding (the
+    /// proximal anchor that stabilises *training* iterations would bias a
+    /// single serve-time solve toward its initialiser).
+    pub solver: SolverKind,
+    /// Solver sweeps per fold-in.
+    pub sweeps: usize,
+    /// Pool width for the batcher's GEMMs (None = crate default).
+    pub threads: Option<usize>,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            batch_max: 64,
+            batch_wait_us: 200,
+            cache_cap: 4096,
+            solver: SolverKind::Hals,
+            sweeps: 5,
+            threads: None,
+        }
+    }
+}
+
+/// Latency samples kept for the percentile snapshot.
+const LATENCY_WINDOW: usize = 4096;
+
+/// Lock a mutex, recovering the guard if a peer thread panicked while
+/// holding it (a poisoned serving queue must degrade, not cascade).
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Per-query latency/throughput counters (lock-free on the count path, a
+/// small ring of samples for percentiles).
+#[derive(Debug)]
+pub struct ServeMetrics {
+    queries: AtomicU64,
+    errors: AtomicU64,
+    batches: AtomicU64,
+    rows_scored: AtomicU64,
+    fold_solves: AtomicU64,
+    latency: Mutex<LatencyRing>,
+    started: Instant,
+}
+
+#[derive(Debug)]
+struct LatencyRing {
+    ring: Vec<f64>,
+    next: usize,
+    total: f64,
+    count: u64,
+}
+
+impl ServeMetrics {
+    fn new() -> ServeMetrics {
+        ServeMetrics {
+            queries: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            rows_scored: AtomicU64::new(0),
+            fold_solves: AtomicU64::new(0),
+            latency: Mutex::new(LatencyRing {
+                ring: Vec::with_capacity(LATENCY_WINDOW),
+                next: 0,
+                total: 0.0,
+                count: 0,
+            }),
+            started: Instant::now(),
+        }
+    }
+
+    /// Queries answered so far (including error replies).
+    pub fn queries(&self) -> u64 {
+        self.queries.load(Ordering::Relaxed)
+    }
+
+    fn record_latency(&self, secs: f64) {
+        let mut l = lock(&self.latency);
+        if l.ring.len() < LATENCY_WINDOW {
+            l.ring.push(secs);
+        } else {
+            let slot = l.next;
+            l.ring[slot] = secs;
+        }
+        l.next = (l.next + 1) % LATENCY_WINDOW;
+        l.total += secs;
+        l.count += 1;
+    }
+
+    /// Snapshot the counters as a JSON object; `cache` contributes the
+    /// hot/cold hit counters.
+    pub fn json(&self, cache: &FoldCache) -> JsonValue {
+        let (p50, p99, mean) = {
+            let l = lock(&self.latency);
+            let mut sorted = l.ring.clone();
+            sorted.sort_by(|a, b| a.total_cmp(b));
+            let pct = |q: f64| {
+                if sorted.is_empty() {
+                    0.0
+                } else {
+                    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+                }
+            };
+            (pct(0.50), pct(0.99), if l.count == 0 { 0.0 } else { l.total / l.count as f64 })
+        };
+        let uptime = self.started.elapsed().as_secs_f64();
+        let queries = self.queries.load(Ordering::Relaxed);
+        JsonValue::Object(vec![
+            ("queries".into(), JsonValue::Number(queries as f64)),
+            ("errors".into(), JsonValue::Number(self.errors.load(Ordering::Relaxed) as f64)),
+            ("batches".into(), JsonValue::Number(self.batches.load(Ordering::Relaxed) as f64)),
+            (
+                "rows_scored".into(),
+                JsonValue::Number(self.rows_scored.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "fold_in_solves".into(),
+                JsonValue::Number(self.fold_solves.load(Ordering::Relaxed) as f64),
+            ),
+            ("cache_hits".into(), JsonValue::Number(cache.hits() as f64)),
+            ("cache_misses".into(), JsonValue::Number(cache.misses() as f64)),
+            ("cache_len".into(), JsonValue::Number(cache.len() as f64)),
+            ("cache_cap".into(), JsonValue::Number(cache.cap() as f64)),
+            ("latency_p50_ms".into(), JsonValue::Number(p50 * 1e3)),
+            ("latency_p99_ms".into(), JsonValue::Number(p99 * 1e3)),
+            ("latency_mean_ms".into(), JsonValue::Number(mean * 1e3)),
+            ("uptime_s".into(), JsonValue::Number(uptime)),
+            (
+                "queries_per_s".into(),
+                JsonValue::Number(if uptime > 0.0 { queries as f64 / uptime } else { 0.0 }),
+            ),
+        ])
+    }
+}
+
+/// Writer half of one client connection (replies are frame-atomic under
+/// the lock, so the batcher and a reader's decode-error reply can share
+/// it).
+type Out = Arc<Mutex<BufWriter<TcpStream>>>;
+
+struct Pending {
+    query: Query,
+    tag: u64,
+    out: Out,
+    enq: Instant,
+}
+
+struct Shared {
+    model: FactorModel,
+    opts: ServeOptions,
+    queue: Mutex<VecDeque<Pending>>,
+    cv: Condvar,
+    stop: AtomicBool,
+    metrics: ServeMetrics,
+    cache: Mutex<FoldCache>,
+}
+
+impl Shared {
+    fn metrics_json(&self) -> JsonValue {
+        let cache = lock(&self.cache);
+        self.metrics.json(&cache)
+    }
+}
+
+fn send_reply(out: &Out, tag: u64, reply: &Reply) {
+    let payload = protocol::encode_reply(reply);
+    let mut w = lock(out);
+    // a vanished client is the client's problem, not the server's
+    let _ = wire::write_frame_parts(&mut *w, protocol::RESPONSE, tag, 0.0, &payload);
+}
+
+fn finish(shared: &Shared, p: &Pending, reply: &Reply) {
+    if matches!(reply, Reply::Error(_)) {
+        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    }
+    send_reply(&p.out, p.tag, reply);
+    shared.metrics.record_latency(p.enq.elapsed().as_secs_f64());
+}
+
+/// Batcher-owned scratch: every buffer here is reused across batches.
+#[derive(Default)]
+struct Scratch {
+    users: Vec<u64>,
+    w: Mat,
+    scores: Mat,
+    fold: FoldIn,
+    fold_row: Vec<(usize, f32)>,
+    fw: Mat,
+    fscores: Mat,
+    topk: Vec<(usize, f32)>,
+}
+
+fn fold_in_reply(shared: &Shared, s: &mut Scratch, entries: &[(u64, f32)], n: usize) -> Reply {
+    let items = shared.model.items() as u64;
+    if let Some(&(bad, _)) = entries.iter().find(|&&(i, _)| i >= items) {
+        return Reply::Error(format!(
+            "fold-in item id {bad} out of range (model has {items} items)"
+        ));
+    }
+    let key = row_key(entries);
+    let cached = lock(&shared.cache).get(&key).map(<[f32]>::to_vec);
+    let w = match cached {
+        Some(w) => w,
+        None => {
+            s.fold_row.clear();
+            s.fold_row.extend(entries.iter().map(|&(i, v)| (i as usize, v)));
+            match s.fold.solve(
+                &shared.model,
+                &s.fold_row,
+                shared.opts.solver,
+                shared.opts.sweeps,
+                0,
+            ) {
+                Ok(w) => {
+                    let w = w.to_vec();
+                    shared.metrics.fold_solves.fetch_add(1, Ordering::Relaxed);
+                    lock(&shared.cache).insert(key, w.clone());
+                    w
+                }
+                Err(e) => return Reply::Error(e.to_string()),
+            }
+        }
+    };
+    let top = if n > 0 {
+        s.fw.resize_to(1, w.len());
+        s.fw.data_mut().copy_from_slice(&w);
+        shared.model.scores_for_w(&s.fw, &mut s.fscores);
+        top_n(s.fscores.row(0), n, &mut s.topk);
+        s.topk.iter().map(|&(i, v)| (i as u64, v)).collect()
+    } else {
+        Vec::new()
+    };
+    Reply::FoldIn { w, top }
+}
+
+fn process_batch(shared: &Shared, s: &mut Scratch, batch: Vec<Pending>) {
+    shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
+    shared.metrics.queries.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+    // phase 1 — coalesce every score query in the batch into ONE GEMM:
+    // each query's users become a row range of the shared score block
+    s.users.clear();
+    let mut jobs: Vec<(usize, Range<usize>, Option<usize>)> = Vec::new();
+    let mut failed: Vec<Option<String>> = Vec::new();
+    failed.resize_with(batch.len(), || None);
+    for (bi, p) in batch.iter().enumerate() {
+        let (users, kind) = match &p.query {
+            Query::TopK { users, n } => (users, Some(*n)),
+            Query::Reconstruct { users } => (users, None),
+            _ => continue,
+        };
+        if let Some(&bad) = users.iter().find(|&&id| id >= shared.model.users() as u64) {
+            failed[bi] = Some(format!(
+                "unknown user id {bad} (model has {} users; fold-in embeds new ones)",
+                shared.model.users()
+            ));
+            continue;
+        }
+        let start = s.users.len();
+        s.users.extend_from_slice(users);
+        jobs.push((bi, start..s.users.len(), kind));
+    }
+    if !s.users.is_empty() {
+        // ids were validated above, so the gather cannot fail
+        shared
+            .model
+            .scores_into(&s.users, &mut s.w, &mut s.scores)
+            .expect("validated user batch failed to score");
+        shared.metrics.rows_scored.fetch_add(s.users.len() as u64, Ordering::Relaxed);
+    }
+    for (bi, range, kind) in jobs {
+        let reply = match kind {
+            Some(n) => {
+                let mut rows = Vec::with_capacity(range.len());
+                for r in range {
+                    top_n(s.scores.row(r), n, &mut s.topk);
+                    rows.push(s.topk.iter().map(|&(i, v)| (i as u64, v)).collect());
+                }
+                Reply::TopK(rows)
+            }
+            None => {
+                let mut data = Vec::with_capacity(range.len() * shared.model.items());
+                for r in range.clone() {
+                    data.extend_from_slice(s.scores.row(r));
+                }
+                Reply::Scores { rows: range.len(), cols: shared.model.items(), data }
+            }
+        };
+        finish(shared, &batch[bi], &reply);
+    }
+
+    // phase 2 — fold-ins (through the cache), stats, and the failures
+    for (bi, p) in batch.iter().enumerate() {
+        if let Some(msg) = failed[bi].take() {
+            finish(shared, p, &Reply::Error(msg));
+            continue;
+        }
+        match &p.query {
+            Query::FoldIn { entries, n } => {
+                let reply = fold_in_reply(shared, s, entries, *n);
+                finish(shared, p, &reply);
+            }
+            Query::Stats => finish(shared, p, &Reply::Stats(shared.metrics_json().to_string())),
+            _ => {} // score queries were answered in phase 1
+        }
+    }
+}
+
+fn batcher_loop(shared: Arc<Shared>) {
+    if let Some(t) = shared.opts.threads {
+        crate::parallel::set_local_threads(Some(t));
+    }
+    let mut scratch = Scratch::default();
+    loop {
+        let batch: Vec<Pending> = {
+            let mut q = lock(&shared.queue);
+            while q.is_empty() && !shared.stop.load(Ordering::SeqCst) {
+                q = shared.cv.wait(q).unwrap_or_else(|p| p.into_inner());
+            }
+            if q.is_empty() {
+                return; // stopped and drained
+            }
+            let cap = shared.opts.batch_max.max(1);
+            if q.len() < cap
+                && shared.opts.batch_wait_us > 0
+                && !shared.stop.load(Ordering::SeqCst)
+            {
+                // linger briefly so concurrent clients coalesce into one GEMM
+                let wait = Duration::from_micros(shared.opts.batch_wait_us);
+                q = shared
+                    .cv
+                    .wait_timeout(q, wait)
+                    .unwrap_or_else(|p| p.into_inner())
+                    .0;
+            }
+            let take = q.len().min(cap);
+            q.drain(..take).collect()
+        };
+        process_batch(&shared, &mut scratch, batch);
+    }
+}
+
+fn connection_loop(shared: Arc<Shared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let mut reader = match stream.try_clone() {
+        Ok(s) => std::io::BufReader::new(s),
+        Err(_) => return,
+    };
+    // version gate: a peer speaking another wire version is refused here,
+    // before any Request frame is parsed
+    if wire::read_preamble(&mut reader).is_err() {
+        return;
+    }
+    let out: Out = Arc::new(Mutex::new(BufWriter::new(stream)));
+    if wire::write_preamble(&mut *lock(&out), 0).is_err() {
+        return;
+    }
+    loop {
+        let frame = match wire::read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => return, // client hung up (or sent garbage)
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        if frame.kind != wire::FrameKind::Request {
+            send_reply(
+                &out,
+                frame.tag,
+                &Reply::Error(format!(
+                    "unexpected {:?} frame on a serving connection",
+                    frame.kind
+                )),
+            );
+            continue;
+        }
+        match protocol::decode_query(&frame.payload) {
+            Ok(query) => {
+                lock(&shared.queue).push_back(Pending {
+                    query,
+                    tag: frame.tag,
+                    out: out.clone(),
+                    enq: Instant::now(),
+                });
+                shared.cv.notify_all();
+            }
+            Err(e) => {
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                send_reply(&out, frame.tag, &Reply::Error(e.to_string()));
+            }
+        }
+    }
+}
+
+/// A running server. Dropping the handle shuts the server down.
+#[derive(Debug)]
+pub struct ServerHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    accept: Option<JoinHandle<()>>,
+    batcher: Option<JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for Shared {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Shared(model {}x{} k={})", self.model.users(), self.model.items(), self.model.k())
+    }
+}
+
+impl ServerHandle {
+    /// The address the server actually bound (port resolved for `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the per-query latency/throughput counters.
+    pub fn metrics_json(&self) -> JsonValue {
+        self.shared.metrics_json()
+    }
+
+    /// Stop accepting, drain the queue, and join the worker threads.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        self.shared.cv.notify_all();
+        // poke the acceptor out of its blocking accept()
+        let poke = if self.addr.ip().is_unspecified() {
+            SocketAddr::from(([127, 0, 0, 1], self.addr.port()))
+        } else {
+            self.addr
+        };
+        let _ = TcpStream::connect_timeout(&poke, Duration::from_millis(250));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        if let Some(h) = self.batcher.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Bind `addr` (e.g. `"127.0.0.1:7878"`, port 0 for an ephemeral one) and
+/// serve `model` until the returned handle is shut down or dropped.
+pub fn serve(addr: &str, model: FactorModel, opts: ServeOptions) -> Result<ServerHandle> {
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding serve listener on {addr}"))?;
+    let bound = listener.local_addr().context("resolving serve listener address")?;
+    let cache_cap = opts.cache_cap;
+    let shared = Arc::new(Shared {
+        model,
+        opts,
+        queue: Mutex::new(VecDeque::new()),
+        cv: Condvar::new(),
+        stop: AtomicBool::new(false),
+        metrics: ServeMetrics::new(),
+        cache: Mutex::new(FoldCache::new(cache_cap)),
+    });
+
+    let accept_shared = shared.clone();
+    let accept = std::thread::Builder::new()
+        .name("dsanls-serve-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if accept_shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    let conn_shared = accept_shared.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("dsanls-serve-conn".into())
+                        .spawn(move || connection_loop(conn_shared, stream));
+                }
+            }
+        })
+        .context("spawning serve accept thread")?;
+
+    let batch_shared = shared.clone();
+    let batcher = std::thread::Builder::new()
+        .name("dsanls-serve-batch".into())
+        .spawn(move || batcher_loop(batch_shared))
+        .context("spawning serve batcher thread")?;
+
+    Ok(ServerHandle { addr: bound, shared, accept: Some(accept), batcher: Some(batcher) })
+}

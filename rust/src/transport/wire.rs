@@ -48,7 +48,11 @@ pub const MAGIC: u32 = 0x4453_414E;
 ///   payloads (`--wire-precision fp16|bf16`). A v3 peer would mis-parse
 ///   the half-width payload length, so the handshake must reject the mix
 ///   even when the flag is off.
-pub const VERSION: u16 = 4;
+/// * v5 — serving plane: [`FrameKind::Request`] / [`FrameKind::Response`]
+///   query frames for `dsanls serve` (`crate::serve`). A v4 peer rejects
+///   kinds 9/10 as unknown mid-stream; the handshake refuses the mix up
+///   front instead.
+pub const VERSION: u16 = 5;
 /// Refuse frames above 1 GiB — a corrupt length prefix otherwise turns
 /// into an attempted huge allocation.
 pub const MAX_FRAME_BYTES: usize = 1 << 30;
@@ -80,6 +84,11 @@ pub enum FrameKind {
     /// A collective contribution quantized to bfloat16 on the wire
     /// (2 bytes/element); decoded back to `f32` at the reader.
     CollectiveBf16 = 8,
+    /// Client → server serving-plane query (tag = client request id; see
+    /// [`crate::serve::protocol`] for the payload encoding).
+    Request = 9,
+    /// Server → client serving-plane reply (tag echoes the request id).
+    Response = 10,
 }
 
 impl FrameKind {
@@ -94,6 +103,8 @@ impl FrameKind {
             6 => FrameKind::Error,
             7 => FrameKind::CollectiveF16,
             8 => FrameKind::CollectiveBf16,
+            9 => FrameKind::Request,
+            10 => FrameKind::Response,
             other => crate::bail!("unknown frame kind {other}"),
         })
     }
@@ -780,6 +791,20 @@ mod tests {
         // every truncation point still errors cleanly
         for cut in 0..buf.len() {
             assert!(read_frame(&mut Cursor::new(&buf[..cut])).is_err(), "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn serving_frame_kinds_roundtrip() {
+        // v5 query frames are plain 4-byte-element frames: the payload
+        // codec, tag echo and length checks all apply unchanged
+        for kind in [FrameKind::Request, FrameKind::Response] {
+            assert_eq!(kind.element_bytes(), 4);
+            let f = Frame::new(kind, 0xC0FFEE, 0.0, vec![1.0, -2.5, 3.0]);
+            let back = roundtrip(&f);
+            assert_eq!(back.kind, kind);
+            assert_eq!(back.tag, 0xC0FFEE);
+            assert_eq!(back.payload, f.payload);
         }
     }
 

@@ -1,0 +1,116 @@
+//! Steady-state allocation audit for the serving-plane fold-in path.
+//!
+//! The perf contract of [`dsanls::serve::FoldIn`]: once warmed up, a
+//! fold-in solve — canonicalise the sparse row, accumulate the cross row,
+//! run the solver sweeps against the model's cached gram — performs
+//! **zero heap allocations**. The entry buffer, cross row and iterate are
+//! owned by the workspace and only regrown on shape changes, mirroring
+//! the training loop's `Workspace` contract (`tests/alloc_hotpath.rs`).
+//!
+//! Same harness rules as that file: a counting global allocator, one
+//! `#[test]` per binary, and the run pinned to one thread so the
+//! measurement captures the kernels rather than pool dispatch.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+use dsanls::linalg::Mat;
+use dsanls::nmf::control::{Checkpoint, CheckpointMeta, ResumeState};
+use dsanls::rng::Pcg64;
+use dsanls::serve::{FactorModel, FoldIn};
+use dsanls::solvers::SolverKind;
+
+struct CountingAlloc;
+
+static ALLOC_EVENTS: AtomicUsize = AtomicUsize::new(0);
+static COUNTING: AtomicBool = AtomicBool::new(false);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if COUNTING.load(Ordering::Relaxed) {
+            ALLOC_EVENTS.fetch_add(1, Ordering::Relaxed);
+        }
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+#[test]
+fn steady_state_fold_in_allocates_nothing() {
+    // single-threaded: measure the solve, not pool dispatch
+    dsanls::parallel::set_local_threads(Some(1));
+
+    let (items, k) = (120usize, 8usize);
+    let mut rng = Pcg64::new(0xF01D, 0);
+    let u = Mat::rand_uniform(4, k, 1.0, &mut rng);
+    let v = Mat::rand_uniform(items, k, 1.0, &mut rng);
+    let model = FactorModel::from_checkpoint(Checkpoint {
+        meta: CheckpointMeta {
+            algo: "dsanls".into(),
+            seed: 1,
+            k,
+            rows: 4,
+            cols: items,
+            params: 0,
+        },
+        state: ResumeState { iteration: 1, u, v },
+    });
+
+    // rows of a fixed sparsity, rotated so the steady state sees fresh
+    // data (same shape, different values) every solve
+    let row = |t: usize| -> Vec<(usize, f32)> {
+        (0..12).map(|i| ((i * 10 + t) % items, 0.5 + i as f32 * 0.25)).collect()
+    };
+
+    let mut fold = FoldIn::new();
+    let mut rows: Vec<Vec<(usize, f32)>> = (0..13).map(row).collect();
+    for r in &mut rows {
+        r.sort_unstable_by_key(|&(j, _)| j); // duplicate-free by construction
+    }
+
+    // warm-up: sizes the entry buffer, the cross row and the iterate
+    for r in rows.iter().take(3) {
+        fold.solve(&model, r, SolverKind::Hals, 4, 0).unwrap();
+    }
+    let ptrs = fold.scratch_ptrs();
+
+    // measured steady state
+    ALLOC_EVENTS.store(0, Ordering::SeqCst);
+    COUNTING.store(true, Ordering::SeqCst);
+    let mut checksum = 0.0f32;
+    for r in rows.iter().skip(3) {
+        let w = fold.solve(&model, r, SolverKind::Hals, 4, 0).unwrap();
+        checksum += w[0];
+    }
+    COUNTING.store(false, Ordering::SeqCst);
+    let events = ALLOC_EVENTS.load(Ordering::SeqCst);
+
+    assert_eq!(
+        events, 0,
+        "steady-state fold-in path performed {events} heap allocations over 10 solves \
+         (expected 0)"
+    );
+    assert_eq!(fold.scratch_ptrs(), ptrs, "fold-in scratch was reallocated in steady state");
+    assert!(checksum.is_finite() && checksum >= 0.0);
+    dsanls::parallel::set_local_threads(None);
+}

@@ -1,0 +1,257 @@
+//! Serving-plane integration tests: checkpoint loading error paths,
+//! fold-in bit-identity against the training-loop reference solve, and
+//! the full TCP query path (`serve()` ↔ [`ServeClient`]) — batched top-k,
+//! reconstruction, fold-in with its LRU cache, stats, and typed error
+//! replies, including under concurrent clients.
+
+use std::path::PathBuf;
+
+use dsanls::linalg::{Csr, Mat, Matrix};
+use dsanls::nmf::control::{
+    read_checkpoint, write_checkpoint, Checkpoint, CheckpointMeta, ResumeState,
+};
+use dsanls::nmf::update_unsketched;
+use dsanls::rng::Pcg64;
+use dsanls::serve::{serve, FactorModel, FoldIn, ServeClient, ServeOptions, FOLD_IN_INIT};
+use dsanls::solvers::{SolverKind, Workspace};
+use dsanls::testkit::Runner;
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dsanls_serve_{tag}_{}.ckpt", std::process::id()))
+}
+
+fn meta(users: usize, items: usize, k: usize) -> CheckpointMeta {
+    CheckpointMeta {
+        algo: "dsanls".into(),
+        seed: 7,
+        k,
+        rows: users,
+        cols: items,
+        params: 0xFEED,
+    }
+}
+
+fn toy_checkpoint(users: usize, items: usize, k: usize, seed: u128) -> Checkpoint {
+    let mut rng = Pcg64::new(seed, 0);
+    let u = Mat::rand_uniform(users, k, 1.0, &mut rng);
+    let v = Mat::rand_uniform(items, k, 1.0, &mut rng);
+    Checkpoint { meta: meta(users, items, k), state: ResumeState { iteration: 9, u, v } }
+}
+
+fn toy_model(users: usize, items: usize, k: usize, seed: u128) -> FactorModel {
+    FactorModel::from_checkpoint(toy_checkpoint(users, items, k, seed))
+}
+
+// ---------------------------------------------------------------------------
+// Checkpoint → model error paths
+// ---------------------------------------------------------------------------
+
+#[test]
+fn model_load_surfaces_checkpoint_corruption_as_typed_errors() {
+    let path = tmpfile("corrupt");
+    let ck = toy_checkpoint(6, 9, 3, 0xC0DE);
+    write_checkpoint(&path, &ck.meta, ck.state.iteration, &ck.state.u, &ck.state.v).unwrap();
+    let bytes = std::fs::read(&path).unwrap();
+
+    // every strict prefix must fail (header, factor data, missing footer)
+    Runner::new("serve_truncated_checkpoint", 32).run(|g| {
+        let cut = g.usize_in(0, bytes.len() - 1);
+        std::fs::write(&path, &bytes[..cut]).unwrap();
+        let err = FactorModel::load(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("loading factor model from"),
+            "cut at {cut}: serving context missing from {err:?}"
+        );
+    });
+
+    // bad magic
+    let mut b = bytes.clone();
+    b[0] ^= 0xFF;
+    std::fs::write(&path, &b).unwrap();
+    let err = FactorModel::load(&path).unwrap_err().to_string();
+    assert!(err.contains("magic"), "{err}");
+
+    // format-version mismatch (version u32 sits right after the 8-byte magic)
+    let mut b = bytes.clone();
+    b[8] = b[8].wrapping_add(1);
+    std::fs::write(&path, &b).unwrap();
+    let err = FactorModel::load(&path).unwrap_err().to_string();
+    assert!(err.contains("version"), "{err}");
+
+    // intact file loads, and the identity gate catches mismatched runs
+    std::fs::write(&path, &bytes).unwrap();
+    let model = FactorModel::load(&path).unwrap();
+    assert_eq!((model.users(), model.items(), model.k()), (6, 9, 3));
+    model.check_identity(Some("dsanls"), Some(0xFEED)).unwrap();
+    let err = model.check_identity(Some("dist-anls"), None).unwrap_err().to_string();
+    assert!(err.contains("dsanls") && err.contains("dist-anls"), "{err}");
+    let err = model.check_identity(None, Some(0xBAD)).unwrap_err().to_string();
+    assert!(err.contains("fingerprint"), "{err}");
+    std::fs::remove_file(&path).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Fold-in bit-identity vs the training-loop reference
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fold_in_is_bit_identical_to_fixed_v_reference_solve() {
+    // reference: one update_unsketched step on a 1×items sparse row with V
+    // fixed — exactly what the training loop would do for a single new row
+    dsanls::parallel::set_local_threads(Some(1));
+    Runner::new("serve_fold_in_bit_identity", 24).run(|g| {
+        let items = g.usize_in(5, 40);
+        let k = g.usize_in(2, 8);
+        let nnz = g.usize_in(1, items);
+        let sweeps = g.usize_in(1, 4);
+        let t = g.usize_in(0, 3);
+        let solver = *g.choose(&[SolverKind::Hals, SolverKind::ProximalCd, SolverKind::Pgd]);
+        let model = toy_model(4, items, k, g.seed() as u128);
+
+        // duplicate-free sparse row (distinct item ids)
+        let mut row: Vec<(usize, f32)> = Vec::new();
+        for i in 0..nnz {
+            let j = (i * items) / nnz; // distinct, ascending
+            row.push((j, g.f32_in(0.1, 3.0)));
+        }
+
+        let mut fold = FoldIn::new();
+        let w = fold.solve(&model, &row, solver, sweeps, t).unwrap().to_vec();
+
+        let triplets: Vec<(usize, usize, f32)> =
+            row.iter().map(|&(j, v)| (0, j, v)).collect();
+        let m = Matrix::Sparse(Csr::from_triplets(1, items, triplets));
+        let mut x_ref = Mat::zeros(1, k);
+        x_ref.data_mut().fill(FOLD_IN_INIT);
+        let mut ws = Workspace::new();
+        update_unsketched(&mut x_ref, &m, model.v(), solver, t, sweeps, &mut ws);
+
+        assert_eq!(
+            w,
+            x_ref.data().to_vec(),
+            "fold-in diverged from the fixed-V reference (items={items} k={k} nnz={nnz} \
+             sweeps={sweeps} t={t} solver={solver:?})"
+        );
+    });
+    dsanls::parallel::set_local_threads(None);
+}
+
+// ---------------------------------------------------------------------------
+// TCP end-to-end
+// ---------------------------------------------------------------------------
+
+fn local_top_k(model: &FactorModel, user: u64, n: usize) -> Vec<(u64, f32)> {
+    let (mut w, mut scores) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+    model.scores_into(&[user], &mut w, &mut scores).unwrap();
+    let mut out = Vec::new();
+    dsanls::serve::top_n(scores.row(0), n, &mut out);
+    out.into_iter().map(|(i, s)| (i as u64, s)).collect()
+}
+
+#[test]
+fn serve_answers_queries_over_tcp_from_a_real_checkpoint() {
+    let path = tmpfile("e2e");
+    let ck = toy_checkpoint(10, 16, 4, 0xE2E);
+    write_checkpoint(&path, &ck.meta, ck.state.iteration, &ck.state.u, &ck.state.v).unwrap();
+    let model = FactorModel::load(&path).unwrap();
+    let reference = model.clone();
+    let opts = ServeOptions { batch_wait_us: 0, ..ServeOptions::default() };
+    let solver = opts.solver;
+    let sweeps = opts.sweeps;
+    let mut handle = serve("127.0.0.1:0", model, opts).unwrap();
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+
+    // top-k matches the locally computed selection exactly
+    let rows = client.top_k(&[3, 0, 7], 5).unwrap();
+    assert_eq!(rows.len(), 3);
+    for (row, &user) in rows.iter().zip(&[3u64, 0, 7]) {
+        assert_eq!(row, &local_top_k(&reference, user, 5), "user {user}");
+    }
+
+    // reconstruction is the exact score rows
+    let scores = client.reconstruct(&[2, 5]).unwrap();
+    assert_eq!((scores.rows(), scores.cols()), (2, 16));
+    let (mut w, mut want) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+    reference.scores_into(&[2, 5], &mut w, &mut want).unwrap();
+    assert_eq!(scores.data(), want.data());
+
+    // fold-in matches a local solve with the server's options bit-for-bit,
+    // and its top list is consistent with the returned embedding
+    let entries: Vec<(u64, f32)> = vec![(1, 2.0), (8, 0.5), (15, 1.25)];
+    let (emb, top) = client.fold_in(&entries, 4).unwrap();
+    let local_row: Vec<(usize, f32)> =
+        entries.iter().map(|&(i, v)| (i as usize, v)).collect();
+    let mut fold = FoldIn::new();
+    let local = fold.solve(&reference, &local_row, solver, sweeps, 0).unwrap();
+    assert_eq!(emb, local.to_vec());
+    assert_eq!(top.len(), 4);
+    let mut fw = Mat::zeros(1, emb.len());
+    fw.data_mut().copy_from_slice(&emb);
+    let mut fscores = Mat::zeros(0, 0);
+    reference.scores_for_w(&fw, &mut fscores);
+    let mut expect_top = Vec::new();
+    dsanls::serve::top_n(fscores.row(0), 4, &mut expect_top);
+    let expect_top: Vec<(u64, f32)> =
+        expect_top.into_iter().map(|(i, s)| (i as u64, s)).collect();
+    assert_eq!(top, expect_top);
+
+    // the identical row again: served from the LRU cache, same embedding
+    let (emb2, _) = client.fold_in(&entries, 0).unwrap();
+    assert_eq!(emb2, emb);
+    // order-insensitive key: a permuted row hits the same cache entry
+    let shuffled: Vec<(u64, f32)> = vec![(15, 1.25), (1, 2.0), (8, 0.5)];
+    let (emb3, _) = client.fold_in(&shuffled, 0).unwrap();
+    assert_eq!(emb3, emb);
+
+    // typed errors surface through the client
+    let err = client.top_k(&[999], 3).unwrap_err().to_string();
+    assert!(err.contains("unknown user id 999"), "{err}");
+    let err = client.fold_in(&[(99, 1.0)], 0).unwrap_err().to_string();
+    assert!(err.contains("out of range"), "{err}");
+
+    // stats reflect the traffic (one solve, two cache hits, the errors)
+    let stats = client.stats().unwrap();
+    let json = dsanls::metrics::JsonValue::parse(&stats).unwrap();
+    let num = |k: &str| json.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    assert_eq!(num("fold_in_solves"), 1.0, "{stats}");
+    assert_eq!(num("cache_hits"), 2.0, "{stats}");
+    assert_eq!(num("errors"), 2.0, "{stats}");
+    assert!(num("queries") >= 8.0, "{stats}");
+    assert!(num("latency_p50_ms") >= 0.0, "{stats}");
+
+    handle.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn concurrent_clients_coalesce_and_get_their_own_answers() {
+    let reference = toy_model(24, 12, 3, 0xBA7C);
+    let opts = ServeOptions { batch_wait_us: 2_000, ..ServeOptions::default() };
+    let mut handle = serve("127.0.0.1:0", reference.clone(), opts).unwrap();
+    let addr = handle.addr().to_string();
+
+    let mut threads = Vec::new();
+    for c in 0..6u64 {
+        let addr = addr.clone();
+        let reference = reference.clone();
+        threads.push(std::thread::spawn(move || {
+            let mut client = ServeClient::connect(&addr).unwrap();
+            for round in 0..5u64 {
+                let user = (c * 4 + round) % 24;
+                let got = client.top_k(&[user], 3).unwrap();
+                assert_eq!(got[0], local_top_k(&reference, user, 3), "client {c} user {user}");
+            }
+        }));
+    }
+    for t in threads {
+        t.join().unwrap();
+    }
+
+    let json = handle.metrics_json();
+    let num = |k: &str| json.get(k).and_then(|v| v.as_f64()).unwrap_or(f64::NAN);
+    assert_eq!(num("queries"), 30.0);
+    assert_eq!(num("errors"), 0.0);
+    assert_eq!(num("rows_scored"), 30.0);
+    assert!(num("batches") >= 1.0);
+    handle.shutdown();
+}

@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # Perf evidence runner: the GEMM microbench (emits BENCH_gemm.json in the
 # repo root), the comm-overlap/quantized-wire throughput grid (emits
-# BENCH_overlap.json), plus the Fig. 3 scalability sweep.
+# BENCH_overlap.json), the serving-plane latency grid (emits
+# BENCH_serve.json), plus the Fig. 3 scalability sweep.
 #
 # Usage: scripts/bench.sh [--full]
 #   --full          paper-sized shapes (DSANLS_BENCH_FULL=1)
@@ -21,8 +22,12 @@ echo "== overlap_throughput (writes BENCH_overlap.json) =="
 cargo bench --bench overlap_throughput
 
 echo
+echo "== serve_latency (writes BENCH_serve.json) =="
+cargo bench --bench serve_latency
+
+echo
 echo "== fig3_scalability =="
 cargo bench --bench fig3_scalability
 
 echo
-echo "done. evidence: ./BENCH_gemm.json, ./BENCH_overlap.json, per-figure CSVs under ./results/"
+echo "done. evidence: ./BENCH_gemm.json, ./BENCH_overlap.json, ./BENCH_serve.json, per-figure CSVs under ./results/"

@@ -66,3 +66,41 @@ grep -q "retrying (attempt 1/1)" "$WORK/retry.err"
 grep -q "retries: 1" "$WORK/retry.log"
 grep -q "bit-identical to simulated backend: true" "$WORK/retry.log"
 echo "kill/retry walkthrough OK (rank died mid-run, resumed from checkpoint, bit-identical)"
+
+echo "== step 6: serve the trained factors and query them =="
+# Step 5 left the run's checkpoint at $WORK/run.ckpt — the serving plane
+# consumes it directly (DEPLOYMENT.md §Serving trained factors).
+SERVE_PORT=$((PORT + 1))
+"$BIN" serve --checkpoint "$WORK/run.ckpt" --bind "127.0.0.1:$SERVE_PORT" \
+  --expect-algo dsanls > "$WORK/serve.log" 2>&1 &
+SERVE_PID=$!
+for _ in $(seq 1 100); do
+  grep -q "serving on" "$WORK/serve.log" 2>/dev/null && break
+  sleep 0.1
+done
+grep -q "serving on" "$WORK/serve.log" || { cat "$WORK/serve.log"; exit 1; }
+
+# the reconstruction row's argmax must lead the same user's top-k list
+"$BIN" query --addr "127.0.0.1:$SERVE_PORT" --users 0 --reconstruct \
+  | tee "$WORK/reconstruct.log"
+ARGMAX="$(sed -n 's/.*argmax=\([0-9]*\).*/\1/p' "$WORK/reconstruct.log")"
+test -n "$ARGMAX"
+"$BIN" query --addr "127.0.0.1:$SERVE_PORT" --users 0 --top-k 3 | tee "$WORK/topk.log"
+grep -q "user 0: $ARGMAX:" "$WORK/topk.log"
+
+# deterministic serving: the identical query answers identically
+"$BIN" query --addr "127.0.0.1:$SERVE_PORT" --users 0 --top-k 3 > "$WORK/topk2.log"
+cmp "$WORK/topk.log" "$WORK/topk2.log"
+
+# fold-in embeds a new user: a rank-length, printed embedding comes back
+"$BIN" query --addr "127.0.0.1:$SERVE_PORT" --fold-in "0:2.0,3:1.0" --top-k 3 \
+  | tee "$WORK/fold.log"
+test "$(sed -n 's/^fold-in w: //p' "$WORK/fold.log" | wc -w)" -eq 4
+grep -q "fold-in top:" "$WORK/fold.log"
+
+# the metrics snapshot reflects the traffic
+"$BIN" query --addr "127.0.0.1:$SERVE_PORT" --stats | grep -q '"queries":'
+
+kill "$SERVE_PID" 2>/dev/null
+wait "$SERVE_PID" 2>/dev/null || true
+echo "serving walkthrough OK (top-k leads with the reconstruction argmax, fold-in embeds, stats live)"
