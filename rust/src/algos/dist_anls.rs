@@ -15,6 +15,7 @@
 use super::{assemble_blocks, NodeOutput, ObserverFn, Trace};
 use crate::data::partition::uniform_partition;
 use crate::data::shard::NodeInput;
+use crate::dist::elastic::{run_step, Elastic};
 use crate::dist::{CommModel, NodeCtx};
 use crate::linalg::{Mat, Matrix};
 use crate::nmf::control::{checkpoint_sync, CheckpointMeta, RunControl, StopReason};
@@ -87,13 +88,16 @@ impl Default for DistAnlsOptions {
 /// [`crate::algos::dsanls::dsanls_rank`] for the bit-identity contract).
 /// `opts.nodes` must match the communicator's cluster size. `ctl` is the
 /// run's control plane (per-iteration collective stop poll, checkpoint
-/// cadence, resume cursor — the same contract as `dsanls_rank`).
+/// cadence, resume cursor — the same contract as `dsanls_rank`). `joining`
+/// marks a replacement rank entering mid-run via the epoch-join handshake
+/// (see `dsanls_rank` — the elastic contract is identical).
 pub fn dist_anls_rank<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     input: NodeInput<'_>,
     opts: &DistAnlsOptions,
     observer: Option<&ObserverFn>,
     ctl: &RunControl,
+    joining: bool,
 ) -> NodeOutput {
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let (rows, cols) = input.dims();
@@ -106,16 +110,23 @@ pub fn dist_anls_rank<C: Communicator>(
     let m_rows = input.row_block(my_rows.clone());
     let m_rows: &Matrix = &m_rows;
     let m_cols_t = input.col_block_t(my_cols.clone());
+    let mut fro_sq = input.fro_sq();
 
     let start = ctl.start_iteration();
-    let (mut u_block, mut v_block) = match ctl.resume.as_deref() {
-        Some(rs) => (rs.u.row_block(my_rows.clone()), rs.v.row_block(my_cols.clone())),
-        None => {
-            let (u_full, v_full) = {
-                let mut rng = stream.for_iteration(0, Role::Init);
-                init_factors_from(input.fro_sq(), rows, cols, opts.rank, &mut rng)
-            };
-            (u_full.row_block(my_rows.clone()), v_full.row_block(my_cols.clone()))
+    let (mut u_block, mut v_block) = if joining {
+        // replacement rank: real state (and the real ‖M‖²) arrive through
+        // the recovery exchange before the first iteration runs
+        (Mat::zeros(my_rows.len(), opts.rank), Mat::zeros(my_cols.len(), opts.rank))
+    } else {
+        match ctl.resume.as_deref() {
+            Some(rs) => (rs.u.row_block(my_rows.clone()), rs.v.row_block(my_cols.clone())),
+            None => {
+                let (u_full, v_full) = {
+                    let mut rng = stream.for_iteration(0, Role::Init);
+                    init_factors_from(fro_sq, rows, cols, opts.rank, &mut rng)
+                };
+                (u_full.row_block(my_rows.clone()), v_full.row_block(my_cols.clone()))
+            }
         }
     };
 
@@ -128,89 +139,138 @@ pub fn dist_anls_rank<C: Communicator>(
         params: ckpt_params(opts),
     };
     let mut trace = Trace::new(if rank == 0 { observer } else { None });
-    super::dsanls::record_error_any(
-        ctx, &input, m_rows, &u_block, &v_block, opts.rank, start, &mut trace,
-    );
+    // sample cursor tracked outside the diverging traces — see `dsanls_rank`
+    let mut sampled_at = (!joining).then_some(start);
+    if !joining {
+        super::dsanls::record_error_any(
+            ctx, &input, m_rows, &u_block, &v_block, fro_sq, opts.rank, start, &mut trace,
+        );
+    }
 
     let mut stop = StopReason::Completed;
     let mut completed = start;
-    for t in start..opts.iterations {
-        if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
-            stop = reason;
-            break;
+    let mut elastic = ctl.elastic.map(|e| (Elastic::new(), e.min_ranks));
+    let elastic_on = elastic.is_some();
+    let mut first_join = joining;
+    let mut pending_recovery = joining;
+    let mut t = start;
+    while t < opts.iterations {
+        // elastic recovery: rebuild membership, adopt the committed boundary
+        if pending_recovery {
+            let (el, min_ranks) = elastic.as_mut().expect("recovery implies elastic");
+            let rec = el
+                .recover(ctx, *min_ranks, first_join)
+                .unwrap_or_else(|e| panic!("rank {rank} elastic recovery: {e}"));
+            first_join = false;
+            pending_recovery = false;
+            t = rec.iteration;
+            fro_sq = rec.fro_sq.0;
+            let u_len = my_rows.len() * opts.rank;
+            u_block = Mat::from_vec(my_rows.len(), opts.rank, rec.state[..u_len].to_vec());
+            v_block = Mat::from_vec(my_cols.len(), opts.rank, rec.state[u_len..].to_vec());
+            trace.truncate_after(t);
+            completed = t;
+            sampled_at = None;
+            continue;
         }
-        // ---- U-step: gram = VᵀV (all-reduce), V full (all-gather) ----
-        // Both collectives depend only on the V of the previous step, so
-        // under `overlap` they are posted back to back and waited in post
-        // order — the O(nk) gather's wire time hides behind the gram's
-        // round trip instead of queueing after it.
-        let mut gram_buf = ctx.compute(|| v_block.gram().into_vec());
-        let v_blocks = if opts.overlap {
-            let p_gram = ctx.all_reduce_start(&gram_buf, Precision::F32);
-            let p_gather = ctx.all_gather_start(v_block.data(), opts.precision);
-            ctx.all_reduce_finish(p_gram, &mut gram_buf);
-            ctx.all_gather_finish(p_gather)
-        } else {
-            ctx.all_reduce_sum(&mut gram_buf);
-            ctx.all_gather_q(v_block.data(), opts.precision) // O(nk) gather
-        };
-        let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
-        let v_full = assemble_blocks(&v_blocks, opts.rank);
-        ctx.compute(|| {
-            let cross = match m_rows {
-                Matrix::Dense(md) => md.matmul(&v_full),
-                Matrix::Sparse(ms) => ms.spmm(&v_full),
-            };
-            let nrm = Normal::new(&gram, &cross);
-            for _ in 0..opts.inner_sweeps.max(1) {
-                solvers::update(opts.solver, &mut u_block, &nrm, 0.0);
-            }
-        });
 
-        // ---- V-step: symmetric with U ----
-        let mut gram_buf = ctx.compute(|| u_block.gram().into_vec());
-        let u_blocks = if opts.overlap {
-            let p_gram = ctx.all_reduce_start(&gram_buf, Precision::F32);
-            let p_gather = ctx.all_gather_start(u_block.data(), opts.precision);
-            ctx.all_reduce_finish(p_gram, &mut gram_buf);
-            ctx.all_gather_finish(p_gather)
-        } else {
-            ctx.all_reduce_sum(&mut gram_buf);
-            ctx.all_gather_q(u_block.data(), opts.precision) // O(mk) gather
-        };
-        let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
-        let u_full = assemble_blocks(&u_blocks, opts.rank);
-        ctx.compute(|| {
-            let cross = match &m_cols_t {
-                Matrix::Dense(md) => md.matmul(&u_full),
-                Matrix::Sparse(ms) => ms.spmm(&u_full),
-            };
-            let nrm = Normal::new(&gram, &cross);
-            for _ in 0..opts.inner_sweeps.max(1) {
-                solvers::update(opts.solver, &mut v_block, &nrm, 0.0);
+        let body = || -> Option<StopReason> {
+            if let Some((el, _)) = elastic.as_mut() {
+                let mut state =
+                    Vec::with_capacity(u_block.data().len() + v_block.data().len());
+                state.extend_from_slice(u_block.data());
+                state.extend_from_slice(v_block.data());
+                el.commit(ctx, t, (fro_sq, 0.0), &state);
             }
-        });
+            // chaos harness: a scripted kill for (rank, t) unwinds here
+            ctx.comm_mut().fault_check(t);
 
-        completed = t + 1;
-        if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
-            super::dsanls::record_error_any(
-                ctx, &input, m_rows, &u_block, &v_block, opts.rank, t + 1, &mut trace,
-            );
-        }
-        if ctl.should_checkpoint(t + 1) {
-            checkpoint_sync(
-                ctx,
-                ctl.checkpoint.as_ref().expect("cadence implies config"),
-                &ckpt_meta,
-                t + 1,
-                &u_block,
-                &v_block,
-            );
+            if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
+                return Some(reason);
+            }
+            // ---- U-step: gram = VᵀV (all-reduce), V full (all-gather) ----
+            // Both collectives depend only on the V of the previous step, so
+            // under `overlap` they are posted back to back and waited in post
+            // order — the O(nk) gather's wire time hides behind the gram's
+            // round trip instead of queueing after it.
+            let mut gram_buf = ctx.compute(|| v_block.gram().into_vec());
+            let v_blocks = if opts.overlap {
+                let p_gram = ctx.all_reduce_start(&gram_buf, Precision::F32);
+                let p_gather = ctx.all_gather_start(v_block.data(), opts.precision);
+                ctx.all_reduce_finish(p_gram, &mut gram_buf);
+                ctx.all_gather_finish(p_gather)
+            } else {
+                ctx.all_reduce_sum(&mut gram_buf);
+                ctx.all_gather_q(v_block.data(), opts.precision) // O(nk) gather
+            };
+            let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
+            let v_full = assemble_blocks(&v_blocks, opts.rank);
+            ctx.compute(|| {
+                let cross = match m_rows {
+                    Matrix::Dense(md) => md.matmul(&v_full),
+                    Matrix::Sparse(ms) => ms.spmm(&v_full),
+                };
+                let nrm = Normal::new(&gram, &cross);
+                for _ in 0..opts.inner_sweeps.max(1) {
+                    solvers::update(opts.solver, &mut u_block, &nrm, 0.0);
+                }
+            });
+
+            // ---- V-step: symmetric with U ----
+            let mut gram_buf = ctx.compute(|| u_block.gram().into_vec());
+            let u_blocks = if opts.overlap {
+                let p_gram = ctx.all_reduce_start(&gram_buf, Precision::F32);
+                let p_gather = ctx.all_gather_start(u_block.data(), opts.precision);
+                ctx.all_reduce_finish(p_gram, &mut gram_buf);
+                ctx.all_gather_finish(p_gather)
+            } else {
+                ctx.all_reduce_sum(&mut gram_buf);
+                ctx.all_gather_q(u_block.data(), opts.precision) // O(mk) gather
+            };
+            let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
+            let u_full = assemble_blocks(&u_blocks, opts.rank);
+            ctx.compute(|| {
+                let cross = match &m_cols_t {
+                    Matrix::Dense(md) => md.matmul(&u_full),
+                    Matrix::Sparse(ms) => ms.spmm(&u_full),
+                };
+                let nrm = Normal::new(&gram, &cross);
+                for _ in 0..opts.inner_sweeps.max(1) {
+                    solvers::update(opts.solver, &mut v_block, &nrm, 0.0);
+                }
+            });
+
+            completed = t + 1;
+            if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
+                super::dsanls::record_error_any(
+                    ctx, &input, m_rows, &u_block, &v_block, fro_sq, opts.rank, t + 1, &mut trace,
+                );
+                sampled_at = Some(t + 1);
+            }
+            if ctl.should_checkpoint(t + 1) {
+                checkpoint_sync(
+                    ctx,
+                    ctl.checkpoint.as_ref().expect("cadence implies config"),
+                    &ckpt_meta,
+                    t + 1,
+                    &u_block,
+                    &v_block,
+                );
+            }
+            None
+        };
+        match if elastic_on { run_step(body) } else { Ok(body()) } {
+            Ok(Some(reason)) => {
+                stop = reason;
+                break;
+            }
+            Ok(None) => t += 1,
+            Err(_lost) => pending_recovery = true,
         }
     }
-    if trace.last_iteration() != Some(completed) {
+    if sampled_at != Some(completed) {
         super::dsanls::record_error_any(
-            ctx, &input, m_rows, &u_block, &v_block, opts.rank, completed, &mut trace,
+            ctx, &input, m_rows, &u_block, &v_block, fro_sq, opts.rank, completed, &mut trace,
         );
     }
 
@@ -221,6 +281,7 @@ pub fn dist_anls_rank<C: Communicator>(
         stats: ctx.stats(),
         final_clock: ctx.clock(),
         stop,
+        epochs: elastic.as_ref().map_or(1, |(el, _)| el.rebuilds + 1),
     }
 }
 

@@ -20,6 +20,7 @@
 use super::{NodeOutput, ObserverFn, Trace, TracePoint};
 use crate::data::partition::uniform_partition;
 use crate::data::shard::NodeInput;
+use crate::dist::elastic::{run_step, Elastic};
 use crate::dist::{CommModel, NodeCtx};
 use crate::linalg::{Mat, Matrix};
 use crate::nmf::control::{checkpoint_sync, CheckpointMeta, RunControl, StopReason};
@@ -144,12 +145,23 @@ impl DsanlsOptions {
 /// the restored factor slices, which replays the exact tail of an
 /// uninterrupted run (the RNG streams are derived from `(seed,
 /// iteration)`, so the iteration counter is the whole RNG cursor).
+///
+/// Under `ctl.elastic`, every iteration starts with an untimed boundary
+/// commit and runs guarded: a peer loss rolls every rank back to the last
+/// committed boundary, the mesh is rebuilt around a replacement
+/// ([`crate::dist::elastic`]), and the loop replays from there —
+/// bit-identical factors, because the iteration counter is the RNG cursor.
+/// `joining = true` marks a replacement rank entering mid-run via the
+/// epoch-join handshake: it skips init and every pre-loop collective, and
+/// its first act is the recovery exchange that hands it the dead
+/// incarnation's committed state.
 pub fn dsanls_rank<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     input: NodeInput<'_>,
     opts: &DsanlsOptions,
     observer: Option<&ObserverFn>,
     ctl: &RunControl,
+    joining: bool,
 ) -> NodeOutput {
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let rank = ctx.rank;
@@ -160,7 +172,7 @@ pub fn dsanls_rank<C: Communicator>(
     let stream = StreamRng::new(opts.seed);
     let my_rows = row_part.range(rank);
     let my_cols = col_part.range(rank);
-    let fro_sq = input.fro_sq();
+    let mut fro_sq = input.fro_sq();
 
     // --- data each node is allowed to touch (Fig. 1a partitioning) ---
     let m_rows = input.row_block(my_rows.clone()); // M_{I_r:}
@@ -171,19 +183,26 @@ pub fn dsanls_rank<C: Communicator>(
     // full factors and keeps its slice ⇒ iterates are independent of the
     // node count. Factor-sized only — never the data matrix.
     let start = ctl.start_iteration();
-    let (mut u_block, mut v_block) = match ctl.resume.as_deref() {
-        Some(rs) => (rs.u.row_block(my_rows.clone()), rs.v.row_block(my_cols.clone())),
-        None => {
-            let (u_full, v_full) = {
-                let mut rng = stream.for_iteration(0, Role::Init);
-                init_factors_from(fro_sq, rows, cols, opts.rank, &mut rng)
-            };
-            (u_full.row_block(my_rows.clone()), v_full.row_block(my_cols.clone()))
+    let (mut u_block, mut v_block) = if joining {
+        // replacement rank: placeholder shapes only — the real state (and
+        // the real ‖M‖², carried in the recovery header) arrive through the
+        // recovery exchange before the first iteration runs
+        (Mat::zeros(my_rows.len(), opts.rank), Mat::zeros(my_cols.len(), opts.rank))
+    } else {
+        match ctl.resume.as_deref() {
+            Some(rs) => (rs.u.row_block(my_rows.clone()), rs.v.row_block(my_cols.clone())),
+            None => {
+                let (u_full, v_full) = {
+                    let mut rng = stream.for_iteration(0, Role::Init);
+                    init_factors_from(fro_sq, rows, cols, opts.rank, &mut rng)
+                };
+                (u_full.row_block(my_rows.clone()), v_full.row_block(my_cols.clone()))
+            }
         }
     };
 
     // Eq. 22 ceiling enforcing Assumption 2 (when requested)
-    let ceiling = (2.0 * fro_sq.sqrt()).sqrt() as f32;
+    let mut ceiling = (2.0 * fro_sq.sqrt()).sqrt() as f32;
 
     let ckpt_meta = CheckpointMeta {
         algo: CKPT_TAG.into(),
@@ -194,7 +213,16 @@ pub fn dsanls_rank<C: Communicator>(
         params: ckpt_params(opts),
     };
     let mut trace = Trace::new(if rank == 0 { observer } else { None });
-    record_error_any(ctx, &input, m_rows, &u_block, &v_block, opts.rank, start, &mut trace);
+    // Iteration of the most recent sample, tracked *outside* the trace: the
+    // final out-of-band record below must be a collectively agreed decision,
+    // and after an elastic recovery the traces themselves diverge (survivors
+    // keep pre-fault samples, a joiner starts empty).
+    let mut sampled_at = (!joining).then_some(start);
+    if !joining {
+        record_error_any(
+            ctx, &input, m_rows, &u_block, &v_block, fro_sq, opts.rank, start, &mut trace,
+        );
+    }
 
     // per-node normal-equation scratch, reused across iterations (zero
     // allocations in the GEMM/solver hot path at steady state)
@@ -218,140 +246,201 @@ pub fn dsanls_rank<C: Communicator>(
         }));
     }
 
-    for t in start..opts.iterations {
+    // elastic membership: iteration-boundary replication + guarded steps
+    let mut elastic = ctl.elastic.map(|e| (Elastic::new(), e.min_ranks));
+    let elastic_on = elastic.is_some();
+    let mut first_join = joining;
+    let mut pending_recovery = joining;
+    let mut t = start;
+    while t < opts.iterations {
         assert!(
             matches!(opts.solver, SolverKind::ProximalCd | SolverKind::Pgd),
             "DSANLS requires a Theorem-1 solver (rcd or pgd)"
         );
 
-        // collective stop decision — every rank leaves at the same iteration
-        // (no pending exchange is ever in flight here: both reductions of an
-        // iteration are finished before its trace/checkpoint collectives)
-        if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
-            stop = reason;
-            break;
+        // elastic recovery: a peer was lost mid-iteration (or this rank just
+        // joined) — rebuild membership, adopt the committed boundary
+        // wholesale, and replay from there
+        if pending_recovery {
+            let (el, min_ranks) = elastic.as_mut().expect("recovery implies elastic");
+            let rec = el
+                .recover(ctx, *min_ranks, first_join)
+                .unwrap_or_else(|e| panic!("rank {rank} elastic recovery: {e}"));
+            first_join = false;
+            pending_recovery = false;
+            t = rec.iteration;
+            fro_sq = rec.fro_sq.0;
+            ceiling = (2.0 * fro_sq.sqrt()).sqrt() as f32;
+            let u_len = my_rows.len() * opts.rank;
+            u_block = Mat::from_vec(my_rows.len(), opts.rank, rec.state[..u_len].to_vec());
+            v_block = Mat::from_vec(my_cols.len(), opts.rank, rec.state[u_len..].to_vec());
+            trace.truncate_after(t);
+            completed = t;
+            // every rank — survivor or joiner — resets the sample cursor so
+            // the final record decision stays identical across the cluster
+            sampled_at = None;
+            continue;
         }
 
-        if !opts.overlap {
-            // ---------- U-subproblem (Alg. 2 lines 4–8) ----------
-            let (a_r, b_sum) = ctx.compute(|| {
-                let mut s_rng = stream.for_iteration(t as u64, Role::SketchU);
-                let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
-                let a_r = s.mul_right(m_rows); // M_{I_r:}·Sᵗ, local
-                let b_bar = s.mul_rows_tn(&v_block, col_part.offset(rank)); // (V_{J_r:})ᵀS_{J_r:}
-                (a_r, b_bar)
-            });
-            let buf_owned = b_sum;
-            let mut buf = buf_owned.into_vec();
-            ctx.all_reduce_sum_q(&mut buf, opts.precision); // B = Σ_r B̄_r  (k×d)
-            let b = Mat::from_vec(opts.rank, d_u, buf);
-            ctx.compute(|| {
-                let nrm = ws.normal_from(&a_r, &b);
-                solvers::update_auto(opts.solver, &mut u_block, &nrm, &opts.mu, t);
-                if opts.box_bound {
-                    u_block.clamp_max(ceiling);
-                }
-            });
-
-            // ---------- V-subproblem (Alg. 2 lines 10–14) ----------
-            let (a2_r, b2_sum) = ctx.compute(|| {
-                let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
-                let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
-                let a2 = s2.mul_right(&m_cols_t); // (M_{:J_r})ᵀ·S'ᵗ
-                let b2_bar = s2.mul_rows_tn(&u_block, row_part.offset(rank)); // (U_{I_r:})ᵀS'_{I_r:}
-                (a2, b2_bar)
-            });
-            let buf2_owned = b2_sum;
-            let mut buf2 = buf2_owned.into_vec();
-            ctx.all_reduce_sum_q(&mut buf2, opts.precision);
-            let b2 = Mat::from_vec(opts.rank, d_v, buf2);
-            ctx.compute(|| {
-                let nrm = ws.normal_from(&a2_r, &b2);
-                solvers::update_auto(opts.solver, &mut v_block, &nrm, &opts.mu, t);
-                if opts.box_bound {
-                    v_block.clamp_max(ceiling);
-                }
-            });
-        } else {
-            // ---------- overlapped double-buffered pipeline ----------
-            // Identical arithmetic to the blocking path, reordered so each
-            // reduction's wire time hides behind the next factor-independent
-            // sketched GEMM. Pipe slot 0 holds A_r, slot 1 holds A'_r; the
-            // summand buffer carries B̄_r out and B back. take/restore moves
-            // buffers out of the workspace without touching the allocator
-            // (an empty `Mat` owns no storage), so `ws.normal_from` can
-            // borrow the workspace mutably while the operands stay alive.
-
-            // --- U-subproblem: A_r was prefetched; post B̄_r, then compute
-            //     the V-side A'_r = (M_{:J_r})ᵀ·S'ᵗ behind the reduction ---
-            let s_u = prefetch.take().expect("warm prefetch precedes the loop");
-            let mut summand = ws.take_summand();
-            ctx.compute(|| s_u.mul_rows_tn_into(&v_block, col_part.offset(rank), &mut summand));
-            let pending = ctx.all_reduce_start(summand.data(), opts.precision);
-            let s_v = ctx.compute(|| {
-                let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
-                let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
-                let mut a2 = ws.take_pipe(1);
-                s2.mul_right_into(&m_cols_t, &mut a2);
-                ws.restore_pipe(1, a2);
-                s2
-            });
-            ctx.all_reduce_finish(pending, summand.data_mut()); // B = Σ_r B̄_r
-            let a_r = ws.take_pipe(0);
-            ctx.compute(|| {
-                let nrm = ws.normal_from(&a_r, &summand);
-                solvers::update_auto(opts.solver, &mut u_block, &nrm, &opts.mu, t);
-                if opts.box_bound {
-                    u_block.clamp_max(ceiling);
-                }
-            });
-            ws.restore_pipe(0, a_r);
-
-            // --- V-subproblem: post B̄'_r (needs the U just updated), then
-            //     prefetch iteration t+1's A_r behind the reduction ---
-            ctx.compute(|| s_v.mul_rows_tn_into(&u_block, row_part.offset(rank), &mut summand));
-            let pending2 = ctx.all_reduce_start(summand.data(), opts.precision);
-            if t + 1 < opts.iterations {
-                prefetch = Some(ctx.compute(|| {
-                    let mut s_rng = stream.for_iteration((t + 1) as u64, Role::SketchU);
-                    let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
-                    let mut a = ws.take_pipe(0);
-                    s.mul_right_into(m_rows, &mut a);
-                    ws.restore_pipe(0, a);
-                    s
-                }));
+        // One guarded iteration: boundary commit, scripted-fault check, stop
+        // poll, both subproblems, trace and checkpoint. Under elastic a
+        // `PeerLostSignal` unwinding from any collective in here is caught
+        // and turned into a boundary recovery; otherwise the step runs bare
+        // and panics propagate exactly as before.
+        let body = || -> Option<StopReason> {
+            if let Some((el, _)) = elastic.as_mut() {
+                // commit this rank's factors as they stand at the start of
+                // iteration `t` — the state recovery rolls back to
+                let mut state =
+                    Vec::with_capacity(u_block.data().len() + v_block.data().len());
+                state.extend_from_slice(u_block.data());
+                state.extend_from_slice(v_block.data());
+                el.commit(ctx, t, (fro_sq, 0.0), &state);
             }
-            ctx.all_reduce_finish(pending2, summand.data_mut());
-            let a2_r = ws.take_pipe(1);
-            ctx.compute(|| {
-                let nrm = ws.normal_from(&a2_r, &summand);
-                solvers::update_auto(opts.solver, &mut v_block, &nrm, &opts.mu, t);
-                if opts.box_bound {
-                    v_block.clamp_max(ceiling);
-                }
-            });
-            ws.restore_pipe(1, a2_r);
-            ws.restore_summand(summand);
-        }
+            // chaos harness: a scripted kill for (rank, t) unwinds here
+            ctx.comm_mut().fault_check(t);
 
-        completed = t + 1;
-        if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
-            record_error_any(ctx, &input, m_rows, &u_block, &v_block, opts.rank, t + 1, &mut trace);
-        }
-        if ctl.should_checkpoint(t + 1) {
-            checkpoint_sync(
-                ctx,
-                ctl.checkpoint.as_ref().expect("cadence implies config"),
-                &ckpt_meta,
-                t + 1,
-                &u_block,
-                &v_block,
-            );
+            // collective stop decision — every rank leaves at the same
+            // iteration (no pending exchange is ever in flight here: both
+            // reductions of an iteration are finished before its
+            // trace/checkpoint collectives)
+            if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
+                return Some(reason);
+            }
+
+            if !opts.overlap {
+                // ---------- U-subproblem (Alg. 2 lines 4–8) ----------
+                let (a_r, b_sum) = ctx.compute(|| {
+                    let mut s_rng = stream.for_iteration(t as u64, Role::SketchU);
+                    let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
+                    let a_r = s.mul_right(m_rows); // M_{I_r:}·Sᵗ, local
+                    let b_bar = s.mul_rows_tn(&v_block, col_part.offset(rank)); // (V_{J_r:})ᵀS_{J_r:}
+                    (a_r, b_bar)
+                });
+                let buf_owned = b_sum;
+                let mut buf = buf_owned.into_vec();
+                ctx.all_reduce_sum_q(&mut buf, opts.precision); // B = Σ_r B̄_r  (k×d)
+                let b = Mat::from_vec(opts.rank, d_u, buf);
+                ctx.compute(|| {
+                    let nrm = ws.normal_from(&a_r, &b);
+                    solvers::update_auto(opts.solver, &mut u_block, &nrm, &opts.mu, t);
+                    if opts.box_bound {
+                        u_block.clamp_max(ceiling);
+                    }
+                });
+
+                // ---------- V-subproblem (Alg. 2 lines 10–14) ----------
+                let (a2_r, b2_sum) = ctx.compute(|| {
+                    let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
+                    let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
+                    let a2 = s2.mul_right(&m_cols_t); // (M_{:J_r})ᵀ·S'ᵗ
+                    let b2_bar = s2.mul_rows_tn(&u_block, row_part.offset(rank)); // (U_{I_r:})ᵀS'_{I_r:}
+                    (a2, b2_bar)
+                });
+                let buf2_owned = b2_sum;
+                let mut buf2 = buf2_owned.into_vec();
+                ctx.all_reduce_sum_q(&mut buf2, opts.precision);
+                let b2 = Mat::from_vec(opts.rank, d_v, buf2);
+                ctx.compute(|| {
+                    let nrm = ws.normal_from(&a2_r, &b2);
+                    solvers::update_auto(opts.solver, &mut v_block, &nrm, &opts.mu, t);
+                    if opts.box_bound {
+                        v_block.clamp_max(ceiling);
+                    }
+                });
+            } else {
+                // ---------- overlapped double-buffered pipeline ----------
+                // Identical arithmetic to the blocking path, reordered so each
+                // reduction's wire time hides behind the next factor-independent
+                // sketched GEMM. Pipe slot 0 holds A_r, slot 1 holds A'_r; the
+                // summand buffer carries B̄_r out and B back. take/restore moves
+                // buffers out of the workspace without touching the allocator
+                // (an empty `Mat` owns no storage), so `ws.normal_from` can
+                // borrow the workspace mutably while the operands stay alive.
+
+                // --- U-subproblem: A_r was prefetched; post B̄_r, then compute
+                //     the V-side A'_r = (M_{:J_r})ᵀ·S'ᵗ behind the reduction ---
+                let s_u = prefetch.take().expect("warm prefetch precedes the loop");
+                let mut summand = ws.take_summand();
+                ctx.compute(|| s_u.mul_rows_tn_into(&v_block, col_part.offset(rank), &mut summand));
+                let pending = ctx.all_reduce_start(summand.data(), opts.precision);
+                let s_v = ctx.compute(|| {
+                    let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
+                    let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
+                    let mut a2 = ws.take_pipe(1);
+                    s2.mul_right_into(&m_cols_t, &mut a2);
+                    ws.restore_pipe(1, a2);
+                    s2
+                });
+                ctx.all_reduce_finish(pending, summand.data_mut()); // B = Σ_r B̄_r
+                let a_r = ws.take_pipe(0);
+                ctx.compute(|| {
+                    let nrm = ws.normal_from(&a_r, &summand);
+                    solvers::update_auto(opts.solver, &mut u_block, &nrm, &opts.mu, t);
+                    if opts.box_bound {
+                        u_block.clamp_max(ceiling);
+                    }
+                });
+                ws.restore_pipe(0, a_r);
+
+                // --- V-subproblem: post B̄'_r (needs the U just updated), then
+                //     prefetch iteration t+1's A_r behind the reduction ---
+                ctx.compute(|| s_v.mul_rows_tn_into(&u_block, row_part.offset(rank), &mut summand));
+                let pending2 = ctx.all_reduce_start(summand.data(), opts.precision);
+                if t + 1 < opts.iterations {
+                    prefetch = Some(ctx.compute(|| {
+                        let mut s_rng = stream.for_iteration((t + 1) as u64, Role::SketchU);
+                        let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
+                        let mut a = ws.take_pipe(0);
+                        s.mul_right_into(m_rows, &mut a);
+                        ws.restore_pipe(0, a);
+                        s
+                    }));
+                }
+                ctx.all_reduce_finish(pending2, summand.data_mut());
+                let a2_r = ws.take_pipe(1);
+                ctx.compute(|| {
+                    let nrm = ws.normal_from(&a2_r, &summand);
+                    solvers::update_auto(opts.solver, &mut v_block, &nrm, &opts.mu, t);
+                    if opts.box_bound {
+                        v_block.clamp_max(ceiling);
+                    }
+                });
+                ws.restore_pipe(1, a2_r);
+                ws.restore_summand(summand);
+            }
+
+            completed = t + 1;
+            if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
+                record_error_any(
+                    ctx, &input, m_rows, &u_block, &v_block, fro_sq, opts.rank, t + 1, &mut trace,
+                );
+                sampled_at = Some(t + 1);
+            }
+            if ctl.should_checkpoint(t + 1) {
+                checkpoint_sync(
+                    ctx,
+                    ctl.checkpoint.as_ref().expect("cadence implies config"),
+                    &ckpt_meta,
+                    t + 1,
+                    &u_block,
+                    &v_block,
+                );
+            }
+            None
+        };
+        match if elastic_on { run_step(body) } else { Ok(body()) } {
+            Ok(Some(reason)) => {
+                stop = reason;
+                break;
+            }
+            Ok(None) => t += 1,
+            Err(_lost) => pending_recovery = true,
         }
     }
-    if trace.last_iteration() != Some(completed) {
+    if sampled_at != Some(completed) {
         record_error_any(
-            ctx, &input, m_rows, &u_block, &v_block, opts.rank, completed, &mut trace,
+            ctx, &input, m_rows, &u_block, &v_block, fro_sq, opts.rank, completed, &mut trace,
         );
     }
 
@@ -362,13 +451,17 @@ pub fn dsanls_rank<C: Communicator>(
         stats: ctx.stats(),
         final_clock: ctx.clock(),
         stop,
+        epochs: elastic.as_ref().map_or(1, |(el, _)| el.rebuilds + 1),
     }
 }
 
 /// Out-of-band error evaluation, dispatching on what the rank can see:
 /// the full matrix (legacy exact evaluation on rank 0) or only its blocks
 /// (distributed row-block residuals). Same signature shape for both so the
-/// iteration loop stays single-path.
+/// iteration loop stays single-path. `fro_sq` is the caller's live global
+/// `‖M‖²` — passed explicitly (not read off the shard) because an elastic
+/// joiner's shard carries NaN until the recovery header supplies the real
+/// value.
 #[allow(clippy::too_many_arguments)]
 pub(crate) fn record_error_any<C: Communicator>(
     ctx: &mut NodeCtx<C>,
@@ -376,22 +469,16 @@ pub(crate) fn record_error_any<C: Communicator>(
     m_rows: &Matrix,
     u_block: &Mat,
     v_block: &Mat,
+    fro_sq: f64,
     k: usize,
     iteration: usize,
     trace: &mut Trace<'_>,
 ) {
     match input {
         NodeInput::Full(m) => record_error(ctx, m, u_block, v_block, k, iteration, trace),
-        NodeInput::Shard(d) => record_error_sharded(
-            ctx,
-            m_rows,
-            u_block,
-            v_block,
-            d.fro_sq(),
-            k,
-            iteration,
-            trace,
-        ),
+        NodeInput::Shard(_) => {
+            record_error_sharded(ctx, m_rows, u_block, v_block, fro_sq, k, iteration, trace)
+        }
     }
 }
 
@@ -621,7 +708,14 @@ mod tests {
                     .unwrap();
             assert_eq!(fro.to_bits(), m.fro_sq().to_bits(), "chain ‖M‖² must be exact");
             data.fro_sq = Some(fro);
-            dsanls_rank(ctx, NodeInput::Shard(&data), &opts, None, &RunControl::unsupervised())
+            dsanls_rank(
+                ctx,
+                NodeInput::Shard(&data),
+                &opts,
+                None,
+                &RunControl::unsupervised(),
+                false,
+            )
         });
         let sharded = super::super::reduce_outputs(outputs, opts.rank, opts.iterations);
         assert_eq!(full.u.data(), sharded.u.data(), "U factors diverged");

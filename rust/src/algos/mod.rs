@@ -105,6 +105,13 @@ impl<'a> Trace<'a> {
     pub fn into_points(self) -> Vec<TracePoint> {
         self.points
     }
+
+    /// Drop every sample recorded at an iteration **after** `iteration`.
+    /// Elastic recovery rolls a rank back to its last committed boundary;
+    /// samples from the replayed tail would otherwise appear twice.
+    pub fn truncate_after(&mut self, iteration: usize) {
+        self.points.retain(|p| p.iteration <= iteration);
+    }
 }
 
 /// Result of a distributed factorisation run.
@@ -160,6 +167,9 @@ pub struct NodeOutput {
     /// Why this rank's loop ended (collectively agreed, so identical on
     /// every rank of a synchronous run).
     pub stop: StopReason,
+    /// Membership epoch count this rank finished at (1 = the founding
+    /// membership; >1 means the mesh was rebuilt around a re-joined rank).
+    pub epochs: usize,
 }
 
 /// Completed-iteration span of a rank-0 trace (last minus first sample

@@ -45,14 +45,16 @@ use crate::dist::CommStats;
 use crate::error::{Context, Result};
 use crate::linalg::Mat;
 use crate::metrics;
-use crate::nmf::control::{CheckpointCfg, ControlToken, RunControl, StopPolicy, StopReason};
+use crate::nmf::control::{
+    CheckpointCfg, ControlToken, ElasticCtl, RunControl, StopPolicy, StopReason,
+};
 use crate::nmf::job::{Algo, Algorithm as _, RankEnv, RankOutput};
 use crate::secure::{asyn, syn, SecureAlgo};
 use crate::transport::wire::{
     self, decode_text, encode_text, push_f64_bits, push_u64_bits, take_f64_bits, take_u64_bits,
     Frame, FrameKind, Precision,
 };
-use crate::transport::{Rendezvous, TcpComm, TcpOptions};
+use crate::transport::{Rendezvous, TcpComm, TcpOptions, WorkerConn};
 
 /// Result-chunk codes (frame tag of `FrameKind::Result`).
 const RES_U: u64 = 1;
@@ -118,8 +120,8 @@ fn trace_from_payload(p: &[f32]) -> Result<Vec<TracePoint>> {
     Ok(out)
 }
 
-fn stats_payload(s: &CommStats, final_clock: f64, stop: StopReason) -> Vec<f32> {
-    let mut p = Vec::with_capacity(16);
+fn stats_payload(s: &CommStats, final_clock: f64, stop: StopReason, epochs: usize) -> Vec<f32> {
+    let mut p = Vec::with_capacity(18);
     push_u64_bits(&mut p, s.bytes_sent as u64);
     push_u64_bits(&mut p, s.bytes_received as u64);
     push_u64_bits(&mut p, s.messages as u64);
@@ -128,10 +130,11 @@ fn stats_payload(s: &CommStats, final_clock: f64, stop: StopReason) -> Vec<f32> 
     push_f64_bits(&mut p, s.stall_time);
     push_f64_bits(&mut p, final_clock);
     push_u64_bits(&mut p, stop.code());
+    push_u64_bits(&mut p, epochs as u64);
     p
 }
 
-fn stats_from_payload(p: &[f32]) -> Result<(CommStats, f64, StopReason)> {
+fn stats_from_payload(p: &[f32]) -> Result<(CommStats, f64, StopReason, usize)> {
     let mut pos = 0;
     let stats = CommStats {
         bytes_sent: take_u64_bits(p, &mut pos)? as usize,
@@ -143,7 +146,8 @@ fn stats_from_payload(p: &[f32]) -> Result<(CommStats, f64, StopReason)> {
     };
     let final_clock = take_f64_bits(p, &mut pos)?;
     let stop = StopReason::from_code(take_u64_bits(p, &mut pos)?)?;
-    Ok((stats, final_clock, stop))
+    let epochs = (take_u64_bits(p, &mut pos)? as usize).max(1);
+    Ok((stats, final_clock, stop, epochs))
 }
 
 fn samples_payload(samples: &[(f64, f64, usize)]) -> Vec<f32> {
@@ -225,11 +229,20 @@ pub fn worker_main(args: &[String]) -> Result<()> {
     let mut shards: Option<PathBuf> = None;
     let mut bind: Option<String> = None;
     let mut advertise: Option<String> = None;
+    let mut join = false;
     let mut wctl = WorkerControlArgs::default();
     let mut cfg_args: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--elastic" => {
+                wctl.elastic = true;
+                i += 1;
+            }
+            "--join" => {
+                join = true;
+                i += 1;
+            }
             "--rendezvous" => {
                 rendezvous = Some(args.get(i + 1).context("--rendezvous needs HOST:PORT")?.clone());
                 i += 2;
@@ -265,6 +278,9 @@ pub fn worker_main(args: &[String]) -> Result<()> {
     }
     let addr = rendezvous.context("worker needs --rendezvous HOST:PORT")?;
     let rank = rank.context("worker needs --rank R")?;
+    if join && !wctl.elastic {
+        crate::bail!("--join re-enters an elastic cluster; it needs --elastic too");
+    }
     let cfg = super::parse_cli_config(&cfg_args).map_err(crate::error::Error::msg)?;
     let ranks = cluster_ranks(&cfg);
 
@@ -273,15 +289,23 @@ pub fn worker_main(args: &[String]) -> Result<()> {
         io_timeout: Some(Duration::from_secs_f64((cfg.net_timeout_s * 4.0).max(1.0))),
         bind,
         advertise,
+        elastic: wctl.elastic,
     };
-    let mut comm = TcpComm::connect(&addr, rank, ranks, &topts)
-        .with_context(|| format!("worker rank {rank} joining cluster at {addr}"))?;
+    // a replacement re-enters via the epoch-join handshake (the survivors
+    // are parked in the mesh rebuild); a founding worker bootstraps as ever
+    let mut comm = if join {
+        TcpComm::connect_join(&addr, rank, ranks, &topts, None)
+            .with_context(|| format!("replacement rank {rank} re-joining cluster at {addr}"))?
+    } else {
+        TcpComm::connect(&addr, rank, ranks, &topts)
+            .with_context(|| format!("worker rank {rank} joining cluster at {addr}"))?
+    };
     let mut report = comm
         .take_rendezvous()
         .context("rendezvous channel already taken")?;
 
     // run the rank; ship failures back as Error frames before exiting
-    match run_rank(&cfg, comm, rank, &mut report, shards.as_deref(), &wctl) {
+    match run_rank(&cfg, comm, rank, &mut report, shards.as_deref(), &wctl, join) {
         Ok(()) => Ok(()),
         Err(e) => {
             let msg = format!("rank {rank}: {e}");
@@ -295,8 +319,8 @@ pub fn worker_main(args: &[String]) -> Result<()> {
 }
 
 /// Control-plane flags a worker accepts (forwarded verbatim by `launch`):
-/// stop policy, checkpoint/resume, and the fault-injection pair used by
-/// the retry tests and operator drills.
+/// stop policy, checkpoint/resume, elastic membership, and the
+/// fault-injection pair used by the retry tests and operator drills.
 #[derive(Debug, Default, Clone)]
 struct WorkerControlArgs {
     checkpoint: Option<PathBuf>,
@@ -306,6 +330,9 @@ struct WorkerControlArgs {
     target_error: Option<f64>,
     fault_rank: Option<usize>,
     fault_iteration: Option<usize>,
+    /// `--elastic`: keep the mesh listener open, replicate boundary state,
+    /// and recover from peer loss by membership rebuild instead of dying.
+    elastic: bool,
 }
 
 /// Default checkpoint cadence when `--checkpoint` is given without
@@ -393,6 +420,10 @@ impl WorkerControlArgs {
             // collective (every rank derives the same answer from the same
             // forwarded flags, so all skip alike)
             cancellable: false,
+            // min_ranks 1: over TCP the rebuild waits for a replacement of
+            // every dead rank anyway (full-width membership), so the floor
+            // only guards the degenerate everyone-else-died case
+            elastic: self.elastic.then_some(ElasticCtl { min_ranks: 1 }),
         })
     }
 }
@@ -526,6 +557,7 @@ fn validate_manifest(cfg: &ExperimentConfig, m: &shard::ShardManifest) -> Result
 
 /// Execute this rank's share of the configured algorithm and stream the
 /// results back over the rendezvous connection.
+#[allow(clippy::too_many_arguments)]
 fn run_rank(
     cfg: &ExperimentConfig,
     mut comm: TcpComm,
@@ -533,6 +565,7 @@ fn run_rank(
     report: &mut TcpStream,
     shards: Option<&Path>,
     wctl: &WorkerControlArgs,
+    joining: bool,
 ) -> Result<()> {
     // ---- shard-aware data plane: this rank's blocks, nothing more ----
     let tick = Instant::now();
@@ -541,17 +574,27 @@ fn run_rank(
     // below wait on peers, which would smear every rank's number up to
     // the slowest (EXPERIMENTS.md §sharded-vs-full compares load_secs)
     let load_secs = tick.elapsed().as_secs_f64();
-    // every rank enters this barrier unconditionally, so a --shards
-    // mismatch across hosts surfaces as an actionable error here instead
-    // of desynchronising the collective stream (file-mode ranks skip the
-    // ‖M‖² chain that synth-mode ranks run)
-    check_data_plane_agreement(&mut comm, source)?;
-    if data.fro_sq.is_none() {
-        // synth mode: resolve the exact global ‖M‖² with the ordered chain
-        // (bit-identical to the full-matrix value — the init-scale seed)
-        let fro = shard::exact_fro_sq(&mut comm, cfg.nodes, data.m_rows.as_ref())
-            .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
-        data.fro_sq = Some(fro);
+    if joining {
+        // the survivors are parked in the mesh-level epoch rebuild, not
+        // the startup collectives — a replacement must skip the data-plane
+        // barrier and the ‖M‖² chain; the recovery exchange delivers the
+        // authoritative Frobenius norm with the adopted state
+        if data.fro_sq.is_none() {
+            data.fro_sq = Some(f64::NAN);
+        }
+    } else {
+        // every rank enters this barrier unconditionally, so a --shards
+        // mismatch across hosts surfaces as an actionable error here
+        // instead of desynchronising the collective stream (file-mode
+        // ranks skip the ‖M‖² chain that synth-mode ranks run)
+        check_data_plane_agreement(&mut comm, source)?;
+        if data.fro_sq.is_none() {
+            // synth mode: resolve the exact global ‖M‖² with the ordered
+            // chain (bit-identical to the full-matrix value)
+            let fro = shard::exact_fro_sq(&mut comm, cfg.nodes, data.m_rows.as_ref())
+                .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
+            data.fro_sq = Some(fro);
+        }
     }
     let (need_rows, _) = Algo::from_config(cfg).block_needs(rank);
     if !need_rows {
@@ -572,7 +615,7 @@ fn run_rank(
     // catch panics from the algorithm layer (collective failures panic) so
     // they reach the coordinator as Error frames, not silent worker deaths
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_rank_inner(cfg, comm, rank, &data, &load, report, &ctl, shard_cols)
+        run_rank_inner(cfg, comm, rank, &data, &load, report, &ctl, shard_cols, joining)
     }));
     crate::parallel::set_local_threads(None);
     match outcome {
@@ -582,6 +625,13 @@ fn run_rank(
                 .downcast_ref::<String>()
                 .cloned()
                 .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+                .or_else(|| {
+                    // an unrecovered (or non-elastic) peer loss carries a
+                    // typed payload — surface its detail, not "panicked"
+                    panic
+                        .downcast_ref::<crate::transport::PeerLostSignal>()
+                        .map(|s| s.detail.clone())
+                })
                 .unwrap_or_else(|| "worker panicked".into());
             Err(crate::error::Error::msg(msg))
         }
@@ -598,6 +648,7 @@ fn run_rank_inner(
     report: &mut TcpStream,
     ctl: &RunControl,
     shard_cols: Option<Partition>,
+    joining: bool,
 ) -> Result<()> {
     send_chunk(report, RES_LOAD, &load_payload(load))?;
     // one generic node runner covers every algorithm family — the worker
@@ -613,6 +664,7 @@ fn run_rank_inner(
         observer: None,
         audit: None,
         ctl,
+        joining,
     };
     match algo.run_rank(comm, env)? {
         RankOutput::Node(out) => send_node_output(report, &out),
@@ -620,7 +672,11 @@ fn run_rank_inner(
             send_chunk(report, RES_U, &mat_payload(&out.u_local))?;
             send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
             send_chunk(report, RES_TRACE, &trace_payload(&out.trace))?;
-            send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock, out.stop))?;
+            send_chunk(
+                report,
+                RES_STATS,
+                &stats_payload(&out.stats, out.final_clock, out.stop, out.epochs),
+            )?;
             send_chunk(report, RES_DONE, &[])
         }
         RankOutput::AsynServer { u, fro_sq } => {
@@ -633,7 +689,11 @@ fn run_rank_inner(
         RankOutput::AsynClient(out) => {
             send_chunk(report, RES_V, &mat_payload(&out.v_block))?;
             send_chunk(report, RES_SAMPLES, &samples_payload(&out.samples))?;
-            send_chunk(report, RES_STATS, &stats_payload(&out.stats, out.final_clock, out.stop))?;
+            send_chunk(
+                report,
+                RES_STATS,
+                &stats_payload(&out.stats, out.final_clock, out.stop, 1),
+            )?;
             send_chunk(report, RES_DONE, &[])
         }
     }
@@ -643,7 +703,11 @@ fn send_node_output(stream: &mut TcpStream, out: &NodeOutput) -> Result<()> {
     send_chunk(stream, RES_U, &mat_payload(&out.u_block))?;
     send_chunk(stream, RES_V, &mat_payload(&out.v_block))?;
     send_chunk(stream, RES_TRACE, &trace_payload(&out.trace))?;
-    send_chunk(stream, RES_STATS, &stats_payload(&out.stats, out.final_clock, out.stop))?;
+    send_chunk(
+        stream,
+        RES_STATS,
+        &stats_payload(&out.stats, out.final_clock, out.stop, out.epochs),
+    )?;
     send_chunk(stream, RES_DONE, &[])
 }
 
@@ -661,6 +725,7 @@ struct WorkerResult {
     fro_sq: Option<f64>,
     load: Option<LoadStats>,
     stop: StopReason,
+    epochs: usize,
 }
 
 impl Default for WorkerResult {
@@ -675,6 +740,7 @@ impl Default for WorkerResult {
             fro_sq: None,
             load: None,
             stop: StopReason::Completed,
+            epochs: 1,
         }
     }
 }
@@ -690,10 +756,11 @@ fn read_worker_result(stream: &mut TcpStream, rank: usize) -> Result<WorkerResul
                 RES_V => res.v = Some(mat_from_payload(&f.payload)?),
                 RES_TRACE => res.trace = trace_from_payload(&f.payload)?,
                 RES_STATS => {
-                    let (stats, clock, stop) = stats_from_payload(&f.payload)?;
+                    let (stats, clock, stop, epochs) = stats_from_payload(&f.payload)?;
                     res.stats = stats;
                     res.final_clock = clock;
                     res.stop = stop;
+                    res.epochs = epochs;
                 }
                 RES_SAMPLES => res.samples = samples_from_payload(&f.payload)?,
                 RES_FRO => {
@@ -744,6 +811,16 @@ pub struct LaunchOptions {
     /// Fault injection forwarded to the workers on the FIRST attempt only
     /// (`--fault-rank R --fault-iteration T` — tests and operator drills).
     pub fault: Option<(usize, usize)>,
+    /// Elastic membership (`--elastic`): a dead worker does not restart
+    /// the cluster — the survivors quiesce at the iteration boundary, the
+    /// coordinator respawns the rank as `worker --join`, and the epoch
+    /// handshake folds it back in. Orthogonal to `--retries`, which
+    /// restarts the whole attempt.
+    pub elastic: bool,
+    /// Replacement-spawn budget for one elastic attempt (`--max-joins N`,
+    /// default 3). Distinct from the retry budget: joins never restart
+    /// survivors, so a joined run reports `retries: 0`.
+    pub max_joins: usize,
     /// Arguments forwarded verbatim to the workers (config file + overrides).
     pub forward: Vec<String>,
 }
@@ -763,6 +840,8 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
     let mut max_seconds: Option<f64> = None;
     let mut fault_rank: Option<usize> = None;
     let mut fault_iteration: Option<usize> = None;
+    let mut elastic = false;
+    let mut max_joins: Option<usize> = None;
     let mut overlap = false;
     let mut wire_precision: Option<Precision> = None;
     let mut stop_forward: Vec<String> = Vec::new();
@@ -860,6 +939,16 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
                 verify_sim = true;
                 i += 1;
             }
+            "--elastic" => {
+                elastic = true;
+                i += 1;
+            }
+            "--max-joins" => {
+                let v = args.get(i + 1).context("--max-joins needs a number")?;
+                max_joins =
+                    Some(v.parse::<usize>().map_err(|e| crate::err!("--max-joins {v}: {e}"))?);
+                i += 2;
+            }
             "--overlap" => {
                 overlap = true;
                 i += 1;
@@ -911,6 +1000,12 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
         forward.push("--checkpoint-every".into());
         forward.push(v.clone());
     }
+    if elastic {
+        // workers inherit the elastic control plane through the same
+        // forwarded-flag path as the stop policy, so every rank (and any
+        // later replacement) derives the identical RunControl
+        forward.push("--elastic".into());
+    }
     let fault = match (fault_rank, fault_iteration) {
         (Some(r), Some(t)) => Some((r, t)),
         (None, None) => None,
@@ -924,6 +1019,30 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
             "--retries needs locally spawned workers; with --hosts the operator restarts \
              them (use --resume with the checkpoint file instead)"
         );
+    }
+    if max_joins.is_some() && !elastic {
+        crate::bail!("--max-joins is the elastic replacement budget; it needs --elastic");
+    }
+    if elastic {
+        if hosts.is_some() {
+            crate::bail!(
+                "--elastic respawns replacements locally; with --hosts the operator \
+                 starts them (`dsanls worker --join --rank R …` on the failed host)"
+            );
+        }
+        if matches!(cfg.algorithm, AlgoFamily::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV))
+        {
+            crate::bail!(
+                "--elastic covers the synchronous meshes; the asynchronous server \
+                 already tolerates client churn without it"
+            );
+        }
+        if cfg.overlap_comm {
+            crate::bail!(
+                "--elastic cannot roll back an in-flight overlapped exchange — drop \
+                 --overlap (or network.overlap) to run elastic"
+            );
+        }
     }
     if let Some(h) = &hosts {
         let expect = cluster_ranks(&cfg);
@@ -948,6 +1067,8 @@ pub fn parse_launch_args(args: &[String]) -> Result<LaunchOptions> {
         retries,
         max_seconds,
         fault,
+        elastic,
+        max_joins: max_joins.unwrap_or(3),
         forward,
     })
 }
@@ -1020,11 +1141,12 @@ pub fn launch_main(args: &[String]) -> Result<()> {
         );
     }
     println!(
-        "final rel-error {:.4}  sec/iter {:.5}  stop: {}  retries: {}  {}",
+        "final rel-error {:.4}  sec/iter {:.5}  stop: {}  retries: {}  epochs: {}  {}",
         outcome.final_error(),
         outcome.sec_per_iter,
         outcome.stop_reason.label(),
         outcome.retries,
+        outcome.epochs,
         metrics::stats_summary(&outcome.stats)
     );
     let path = std::path::Path::new(&cfg.output_dir).join(format!("{}-tcp.csv", cfg.name));
@@ -1083,6 +1205,10 @@ fn launch_attempt(
         forward.push("--max-seconds".into());
         forward.push(format!("{remaining}"));
     }
+    // replacements spawned mid-attempt must NOT inherit the injected fault
+    // (the drill would kill every incarnation of the rank in turn) —
+    // snapshot the forward list before the fault flags go on
+    let join_forward = forward.clone();
     if attempt == 0 {
         if let Some((r, t)) = opts.fault {
             forward.push("--fault-rank".into());
@@ -1136,7 +1262,11 @@ fn launch_attempt(
         }
     }
 
-    let run = launch_collect(cfg, rdv, ranks);
+    let run = if opts.elastic && opts.hosts.is_none() {
+        launch_collect_elastic(cfg, rdv, ranks, opts, &join_forward, &mut children)
+    } else {
+        launch_collect(cfg, rdv, ranks)
+    };
     // reap the children regardless of how collection went
     let collected_ok = run.is_ok();
     let mut worker_failure = None;
@@ -1181,11 +1311,156 @@ fn launch_collect(cfg: &ExperimentConfig, rdv: &Rendezvous, ranks: usize) -> Res
     assemble_outcome(cfg, results)
 }
 
+/// Stream one worker's result chunks on a dedicated thread, delivering the
+/// outcome (or the channel failure) through `tx`. Elastic collection needs
+/// this concurrency: while survivors are still streaming, the coordinator
+/// must simultaneously serve the re-join rendezvous and respawn children —
+/// a sequential `read_worker_result` loop would deadlock the epoch.
+fn spawn_result_reader(
+    mut conn: WorkerConn,
+    tx: std::sync::mpsc::Sender<(usize, Result<WorkerResult>)>,
+) {
+    let rank = conn.rank;
+    let _ = std::thread::Builder::new()
+        .name(format!("dsanls-collect-r{rank}"))
+        .spawn(move || {
+            let res = read_worker_result(&mut conn.stream, rank);
+            let _ = tx.send((rank, res));
+        });
+}
+
+/// Elastic collection: results stream concurrently (one reader thread per
+/// rendezvous connection) while the coordinator admits re-joining
+/// replacements on the shared listener and respawns a `worker --join
+/// --rank R` child for each dead one, up to `opts.max_joins` per attempt.
+/// A rank's death therefore never restarts the survivors — the attempt
+/// fails only when the join budget is exhausted (or the replacement also
+/// cannot finish), which is what the `--retries` path then picks up.
+///
+/// `join_forward` is the forwarded argument list WITHOUT the
+/// fault-injection flags: an injected drill must kill only the first
+/// incarnation of the rank, never its replacement.
+fn launch_collect_elastic(
+    cfg: &ExperimentConfig,
+    rdv: &Rendezvous,
+    ranks: usize,
+    opts: &LaunchOptions,
+    join_forward: &[String],
+    children: &mut [Child],
+) -> Result<Outcome> {
+    use std::sync::mpsc;
+    let timeout = Duration::from_secs_f64((cfg.net_timeout_s * 4.0).max(5.0));
+    let conns = rdv.wait_workers(ranks, timeout)?;
+    // the coordinator keeps the live address book: accept_join patches the
+    // dead rank's slot with the replacement's fresh mesh address and ships
+    // the updated roster back in the join handshake
+    let mut book: Vec<String> = conns.iter().map(|c| c.mesh_addr.clone()).collect();
+
+    let (tx, rx) = mpsc::channel::<(usize, Result<WorkerResult>)>();
+    for conn in conns {
+        spawn_result_reader(conn, tx.clone());
+    }
+
+    let exe = std::env::current_exe().context("locating own binary")?;
+    let mut results: Vec<Option<WorkerResult>> = (0..ranks).map(|_| None).collect();
+    // a dead worker's result channel fails mid-stream; the error is held
+    // per rank and only surfaces if no replacement delivers in its place
+    let mut chan_err: Vec<Option<crate::error::Error>> = (0..ranks).map(|_| None).collect();
+    let mut reaped = vec![false; children.len()];
+    let mut joins_left = opts.max_joins;
+    loop {
+        while let Ok((rank, res)) = rx.try_recv() {
+            match res {
+                Ok(r) => {
+                    results[rank] = Some(r);
+                    chan_err[rank] = None;
+                }
+                Err(e) => chan_err[rank] = Some(e),
+            }
+        }
+        if results.iter().all(|r| r.is_some()) {
+            break;
+        }
+        if reaped.iter().all(|&r| r) {
+            // every child has exited (all cleanly — a failed exit either
+            // respawned below or bailed): missing results are stragglers
+            // still buffered on their sockets, or coordinator-side read
+            // failures that nothing can repair any more
+            match rx.recv_timeout(timeout) {
+                Ok((rank, Ok(r))) => results[rank] = Some(r),
+                Ok((_, Err(e))) => return Err(e),
+                Err(_) => {
+                    let e = chan_err.iter_mut().find_map(Option::take).unwrap_or_else(|| {
+                        crate::err!("workers exited before delivering all results")
+                    });
+                    return Err(e);
+                }
+            }
+            continue;
+        }
+        // serve the re-join rendezvous: a replacement dials in with a Join
+        // hello, gets the patched roster, and streams its results over
+        // this new connection (the dead original's channel is abandoned)
+        if let Some(conn) = rdv.accept_join(&mut book, Duration::from_millis(20))? {
+            spawn_result_reader(conn, tx.clone());
+        }
+        // reap dead children and respawn replacements within the budget
+        for rank in 0..children.len() {
+            if reaped[rank] || results[rank].is_some() {
+                continue;
+            }
+            let Some(status) = children[rank]
+                .try_wait()
+                .with_context(|| format!("polling worker rank {rank}"))?
+            else {
+                continue;
+            };
+            reaped[rank] = true;
+            if status.success() {
+                continue; // clean exit — its result chunks are in flight
+            }
+            if joins_left == 0 {
+                let why = chan_err[rank]
+                    .take()
+                    .map_or(String::new(), |e| format!(": {e}"));
+                crate::bail!(
+                    "worker rank {rank} died ({status}) with the join budget exhausted \
+                     (--max-joins {}){why}",
+                    opts.max_joins
+                );
+            }
+            joins_left -= 1;
+            eprintln!(
+                "worker rank {rank} died ({status}); spawning replacement \
+                 ({joins_left} join(s) left in the budget)"
+            );
+            let mut cmd = Command::new(&exe);
+            cmd.arg("worker")
+                .arg("--join")
+                .arg("--rendezvous")
+                .arg(rdv.addr())
+                .arg("--rank")
+                .arg(rank.to_string())
+                .args(join_forward)
+                .stdin(Stdio::null());
+            children[rank] = cmd
+                .spawn()
+                .with_context(|| format!("spawning replacement for rank {rank}"))?;
+            reaped[rank] = false;
+        }
+    }
+    let results: Vec<WorkerResult> = results.into_iter().flatten().collect();
+    assemble_outcome(cfg, results)
+}
+
 fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> Result<Outcome> {
     let label = format!("{}/tcp", cfg.algorithm.name());
     let loads: Vec<LoadStats> = results.iter().filter_map(|r| r.load).collect();
     let stop_reason =
         results.iter().map(|r| r.stop).fold(StopReason::Completed, StopReason::merge);
+    // survivors and the joiner agree on the rebuild count; the max guards
+    // against a rank whose stats predate the last epoch
+    let epochs = results.iter().map(|r| r.epochs).max().unwrap_or(1).max(1);
     match cfg.algorithm {
         AlgoFamily::Dsanls | AlgoFamily::Baseline(_) => {
             let mut outputs = Vec::with_capacity(results.len());
@@ -1197,6 +1472,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                     stats: r.stats,
                     final_clock: r.final_clock,
                     stop: r.stop,
+                    epochs: r.epochs,
                 });
             }
             let span = algos::trace_span(&outputs[0].trace, cfg.iterations);
@@ -1211,6 +1487,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 loads,
                 stop_reason,
                 retries: 0,
+                epochs,
             })
         }
         AlgoFamily::Secure(SecureAlgo::SynSd
@@ -1226,6 +1503,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                     stats: r.stats,
                     final_clock: r.final_clock,
                     stop: r.stop,
+                    epochs: r.epochs,
                 });
             }
             let span = algos::trace_span(&outputs[0].trace, cfg.t1 * cfg.t2);
@@ -1240,6 +1518,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 loads,
                 stop_reason,
                 retries: 0,
+                epochs,
             })
         }
         AlgoFamily::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV) => {
@@ -1270,6 +1549,7 @@ fn assemble_outcome(cfg: &ExperimentConfig, mut results: Vec<WorkerResult>) -> R
                 loads,
                 stop_reason,
                 retries: 0,
+                epochs,
             })
         }
     }
@@ -1345,12 +1625,17 @@ mod tests {
             comm_time: 2.5e-7,
             stall_time: 0.0,
         };
-        let (bs, clock, stop) =
-            stats_from_payload(&stats_payload(&stats, 42.042, StopReason::TargetReached))
+        let (bs, clock, stop, epochs) =
+            stats_from_payload(&stats_payload(&stats, 42.042, StopReason::TargetReached, 3))
                 .unwrap();
         assert_eq!(bs, stats);
         assert_eq!(clock, 42.042);
         assert_eq!(stop, StopReason::TargetReached);
+        assert_eq!(epochs, 3);
+        // a zero on the wire clamps to the founding epoch
+        let (_, _, _, epochs) =
+            stats_from_payload(&stats_payload(&stats, 0.0, StopReason::Completed, 0)).unwrap();
+        assert_eq!(epochs, 1);
 
         let samples = vec![(0.5, 123.456, 10usize), (1.5, 0.001, 20)];
         let back = samples_from_payload(&samples_payload(&samples)).unwrap();
@@ -1371,6 +1656,43 @@ mod tests {
         assert!(!o.forward.iter().any(|a| a == "--verify-sim"));
         assert_eq!(o.retries, 0);
         assert!(o.checkpoint.is_none() && o.resume.is_none() && o.fault.is_none());
+        assert!(!o.elastic, "elastic is opt-in");
+        assert_eq!(o.max_joins, 3, "default replacement budget");
+    }
+
+    #[test]
+    fn launch_elastic_flags_parse_and_validate() {
+        let args: Vec<String> = ["--nodes", "2", "--elastic", "--max-joins", "5"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let o = parse_launch_args(&args).unwrap();
+        assert!(o.elastic);
+        assert_eq!(o.max_joins, 5);
+        // the elastic control plane forwards to every worker (and thus to
+        // any later replacement) as a plain worker flag
+        assert!(o.forward.iter().any(|a| a == "--elastic"));
+        assert!(!o.forward.iter().any(|a| a == "--max-joins"));
+
+        // the budget flag alone is a user error
+        let args: Vec<String> = ["--max-joins", "2"].iter().map(|s| s.to_string()).collect();
+        let err = parse_launch_args(&args).unwrap_err();
+        assert!(err.to_string().contains("--elastic"), "{err}");
+
+        // elastic × overlapped exchanges cannot be rolled back at a boundary
+        let args: Vec<String> =
+            ["--nodes", "2", "--elastic", "--overlap"].iter().map(|s| s.to_string()).collect();
+        let err = parse_launch_args(&args).unwrap_err();
+        assert!(err.to_string().contains("overlap"), "{err}");
+
+        // elastic × async: the server already tolerates churn
+        let args: Vec<String> =
+            ["--nodes", "2", "--elastic", "--experiment.algorithm=asyn-sd"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let err = parse_launch_args(&args).unwrap_err();
+        assert!(err.to_string().contains("asynchronous"), "{err}");
     }
 
     #[test]
@@ -1461,6 +1783,11 @@ mod tests {
         );
         let ctl = w.resolve(&cfg, 0, 100, 80).unwrap();
         assert_eq!(ctl.fault_at, None, "other ranks must not fault");
+        assert_eq!(ctl.elastic, None, "elastic is opt-in");
+        let mut we = WorkerControlArgs::default();
+        we.elastic = true;
+        let ctl = we.resolve(&cfg, 0, 100, 80).unwrap();
+        assert_eq!(ctl.elastic, Some(ElasticCtl { min_ranks: 1 }));
 
         // secure + checkpoint is rejected with a typed error
         let mut cfg = ExperimentConfig::default();

@@ -1,0 +1,348 @@
+//! Iteration-boundary state replication and epoch recovery for elastic
+//! runs.
+//!
+//! The protocol the algorithm runners ([`crate::algos`],
+//! [`crate::secure::syn`]) drive:
+//!
+//! 1. **Boundary commit.** At the start of every iteration `t` each rank
+//!    contributes its serialized factor state to an *untimed* all-gather
+//!    ([`Elastic::commit`]); every rank then holds the full cluster state
+//!    for iteration `t`. Untimed means the replication traffic perturbs
+//!    neither the modelled clock nor the byte counters the paper's
+//!    communication-volume claims are asserted on.
+//! 2. **Fault.** A peer dies mid-iteration; the survivor's next collective
+//!    unwinds with a [`PeerLostSignal`] payload, which the runner catches
+//!    via [`run_step`] and holds until the iteration boundary.
+//! 3. **Recovery.** Survivors call [`Elastic::recover`]: the transport
+//!    rebuilds membership ([`Communicator::rebuild`] parks until a
+//!    replacement joins), then *all* ranks — survivors and the joiner —
+//!    run a two-phase exchange that elects a donor (the lowest rank
+//!    holding a commit) and adopts the donor's committed state wholesale.
+//!    Everyone, survivor or joiner, restarts from the committed iteration:
+//!    a uniform rollback of at most one iteration.
+//!
+//! Because the per-iteration RNG streams are keyed by iteration number
+//! ([`crate::nmf::seed::StreamRng::for_iteration`]), replaying from the
+//! committed iteration reproduces the uninterrupted run bit-for-bit in
+//! the factors. The virtual clock, statistics and error trace of the
+//! replayed stretch do diverge (the fault cost real rounds); the chaos
+//! tests therefore assert factor identity, not trace identity.
+
+use crate::error::Result;
+use crate::transport::wire::{push_f64_bits, push_u64_bits, take_f64_bits, take_u64_bits};
+use crate::transport::{Communicator, PeerLostSignal};
+
+use super::NodeCtx;
+
+/// A recovered position: where to restart the iteration loop.
+#[derive(Debug, Clone)]
+pub struct Recovery {
+    /// Iteration to re-enter the loop at (the committed boundary).
+    pub iteration: usize,
+    /// The exact-norm pair `(fro_sq_u_side, fro_sq_v_side)` — runner
+    /// specific scalars committed alongside the factors (runners that only
+    /// need one slot leave the other 0).
+    pub fro_sq: (f64, f64),
+    /// This rank's serialized factor state at the committed boundary.
+    pub state: Vec<f32>,
+}
+
+/// Per-rank elastic state: the latest committed boundary plus the epoch
+/// counter reported in [`crate::nmf::job::Outcome::epochs`].
+#[derive(Debug, Default)]
+pub struct Elastic {
+    /// Membership epochs this rank has participated in *beyond* the first
+    /// (0 for an undisturbed run; callers report `epochs + 1`).
+    pub rebuilds: usize,
+    /// `(iteration, fro_sq pair, per-rank state blobs in rank order)`.
+    committed: Option<(usize, (f64, f64), Vec<Vec<f32>>)>,
+}
+
+impl Elastic {
+    /// Fresh elastic state with nothing committed yet.
+    pub fn new() -> Self {
+        Elastic::default()
+    }
+
+    /// Replicate the boundary state for iteration `t`: every rank
+    /// contributes its own serialized factors, every rank stores the full
+    /// set. Runs untimed — replication must not disturb the measured run.
+    pub fn commit<C: Communicator>(
+        &mut self,
+        ctx: &mut NodeCtx<C>,
+        t: usize,
+        fro_sq: (f64, f64),
+        own_state: &[f32],
+    ) {
+        let parts = ctx.untimed(|ctx| ctx.all_gather(own_state));
+        self.committed = Some((t, fro_sq, parts));
+    }
+
+    /// Iteration the latest commit belongs to, if any.
+    pub fn committed_iteration(&self) -> Option<usize> {
+        self.committed.as_ref().map(|(t, _, _)| *t)
+    }
+
+    /// Rebuild membership after a peer loss and adopt the donor's
+    /// committed state. `joining` is true on a replacement rank that
+    /// entered via the epoch-join handshake (its transport is already at
+    /// the new epoch, so it skips the rebuild call and brings no commit).
+    ///
+    /// All ranks of the new membership must call this together.
+    pub fn recover<C: Communicator>(
+        &mut self,
+        ctx: &mut NodeCtx<C>,
+        min_ranks: usize,
+        joining: bool,
+    ) -> Result<Recovery> {
+        if !joining {
+            ctx.comm_mut().rebuild(min_ranks)?;
+        }
+        self.rebuilds += 1;
+
+        // phase 1: tiny header gather — who holds a commit, and for which
+        // iteration. The donor is the lowest-ranked holder; commits at the
+        // same boundary are identical by construction, so any holder works,
+        // but electing deterministically keeps the protocol auditable.
+        let mut header = Vec::with_capacity(7);
+        match &self.committed {
+            Some((t, fro, _)) => {
+                header.push(1.0f32);
+                push_u64_bits(&mut header, *t as u64);
+                push_f64_bits(&mut header, fro.0);
+                push_f64_bits(&mut header, fro.1);
+            }
+            None => {
+                header.push(0.0f32);
+                push_u64_bits(&mut header, 0);
+                push_f64_bits(&mut header, 0.0);
+                push_f64_bits(&mut header, 0.0);
+            }
+        }
+        let headers = ctx.untimed(|ctx| ctx.all_gather(&header));
+        let donor = headers
+            .iter()
+            .position(|h| h.first().copied() == Some(1.0))
+            .ok_or_else(|| {
+                crate::err!("no surviving rank holds a committed state to recover from")
+            })?;
+        let mut pos = 1;
+        let iteration = take_u64_bits(&headers[donor], &mut pos)? as usize;
+        let fro_sq =
+            (take_f64_bits(&headers[donor], &mut pos)?, take_f64_bits(&headers[donor], &mut pos)?);
+
+        // phase 2: the donor ships the full committed blob set; everyone
+        // else contributes an empty slice. Also untimed.
+        let own_payload = if ctx.rank == donor {
+            let (_, _, parts) = self.committed.as_ref().expect("donor holds a commit");
+            encode_parts(parts)
+        } else {
+            Vec::new()
+        };
+        let shipped = ctx.untimed(|ctx| ctx.all_gather(&own_payload));
+        let parts = decode_parts(&shipped[donor])?;
+        if parts.len() != ctx.nodes() {
+            crate::bail!(
+                "recovered commit carries {} rank blobs, cluster has {}",
+                parts.len(),
+                ctx.nodes()
+            );
+        }
+        let state = parts[ctx.rank].clone();
+        // everyone now holds the same commit — including the joiner, which
+        // can donate if another rank dies before the next boundary
+        self.committed = Some((iteration, fro_sq, parts));
+        Ok(Recovery { iteration, fro_sq, state })
+    }
+}
+
+/// Serialize rank-ordered blobs with length prefixes.
+fn encode_parts(parts: &[Vec<f32>]) -> Vec<f32> {
+    let mut out = Vec::with_capacity(2 + parts.iter().map(|p| p.len() + 2).sum::<usize>());
+    push_u64_bits(&mut out, parts.len() as u64);
+    for p in parts {
+        push_u64_bits(&mut out, p.len() as u64);
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Inverse of [`encode_parts`].
+fn decode_parts(payload: &[f32]) -> Result<Vec<Vec<f32>>> {
+    let mut pos = 0;
+    let n = take_u64_bits(payload, &mut pos)? as usize;
+    let mut parts = Vec::with_capacity(n);
+    for _ in 0..n {
+        let len = take_u64_bits(payload, &mut pos)? as usize;
+        if pos + len > payload.len() {
+            crate::bail!("payload underrun decoding committed blob ({len} elems at {pos})");
+        }
+        parts.push(payload[pos..pos + len].to_vec());
+        pos += len;
+    }
+    Ok(parts)
+}
+
+/// Run one guarded step of an elastic iteration: a [`PeerLostSignal`]
+/// unwinding out of `f` is caught and returned as `Err` so the runner can
+/// recover at the boundary; every other panic — including the chaos
+/// harness's [`crate::transport::FaultKillSignal`], which must kill the
+/// rank for real — resumes unwinding.
+pub fn run_step<T>(f: impl FnOnce() -> T) -> std::result::Result<T, PeerLostSignal> {
+    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(f)) {
+        Ok(v) => Ok(v),
+        Err(payload) => match payload.downcast::<PeerLostSignal>() {
+            Ok(signal) => Err(*signal),
+            Err(other) => std::panic::resume_unwind(other),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::CommModel;
+    use crate::transport::{FaultPlan, SimCluster, SimComm};
+
+    #[test]
+    fn parts_codec_round_trips() {
+        let parts = vec![vec![1.0f32, 2.0, 3.0], vec![], vec![4.5f32]];
+        let enc = encode_parts(&parts);
+        assert_eq!(decode_parts(&enc).unwrap(), parts);
+        // truncation is a typed error, not a panic
+        assert!(decode_parts(&enc[..enc.len() - 1]).is_err());
+    }
+
+    #[test]
+    fn run_step_catches_only_peer_loss() {
+        let ok: std::result::Result<u32, _> = run_step(|| 7);
+        assert_eq!(ok.unwrap(), 7);
+        let err = run_step(|| -> u32 {
+            std::panic::panic_any(PeerLostSignal {
+                peer: Some(2),
+                detail: "peer 2 disconnected".into(),
+            })
+        })
+        .unwrap_err();
+        assert_eq!(err.peer, Some(2));
+        // a plain panic must keep unwinding
+        let plain = std::panic::catch_unwind(|| run_step(|| -> u32 { panic!("hard fault") }));
+        assert!(plain.is_err());
+    }
+
+    #[test]
+    fn recover_without_any_commit_is_a_typed_error() {
+        // 2 ranks, rank 1 dies before any boundary commit happened
+        let cluster = SimCluster::new(2);
+        cluster.set_fault_plan(FaultPlan::new().kill(1, 0));
+        cluster.set_rejoin_timeout(std::time::Duration::from_secs(10));
+        let mut out_err = String::new();
+        std::thread::scope(|s| {
+            let c0 = cluster.clone();
+            let survivor = s.spawn(move || {
+                let comm = SimComm::new(0, c0);
+                let mut ctx = NodeCtx::new(comm, CommModel::default());
+                let mut el = Elastic::new();
+                // rank 1 dies on its first fault_check; our first gather
+                // unwinds with the typed signal
+                let step = run_step(|| {
+                    ctx.all_gather(&[0.0f32]);
+                });
+                assert!(step.is_err(), "peer loss did not surface");
+                // no commit was ever made: recovery must fail cleanly once
+                // the replacement shows up
+                el.recover(&mut ctx, 1, false).unwrap_err().to_string()
+            });
+            let c1 = cluster.clone();
+            s.spawn(move || {
+                // rank 1: die immediately, then re-join and run the same
+                // (failing) recovery protocol
+                let died = std::panic::catch_unwind(|| {
+                    let comm = SimComm::new(1, c1.clone());
+                    let mut ctx = NodeCtx::new(comm, CommModel::default());
+                    ctx.comm_mut().fault_check(0);
+                });
+                assert!(died.is_err());
+                let comm = SimComm::join(&c1, 1).unwrap();
+                let mut ctx = NodeCtx::new(comm, CommModel::default());
+                let mut el = Elastic::new();
+                let err = el.recover(&mut ctx, 1, true).unwrap_err();
+                assert!(err.to_string().contains("no surviving rank"), "{err}");
+            });
+            out_err = survivor.join().unwrap();
+        });
+        assert!(out_err.contains("no surviving rank holds a committed state"), "{out_err}");
+    }
+
+    #[test]
+    fn commit_then_recover_adopts_the_donor_state() {
+        let cluster = SimCluster::new(3);
+        cluster.set_fault_plan(FaultPlan::new().kill(2, 1));
+        cluster.set_rejoin_timeout(std::time::Duration::from_secs(10));
+        let mut recovered: Vec<Option<Recovery>> = vec![None, None, None];
+        std::thread::scope(|s| {
+            let mut slots = recovered.iter_mut();
+            for rank in 0..3usize {
+                let slot = slots.next().unwrap();
+                let cl = cluster.clone();
+                s.spawn(move || {
+                    let run = |joining: bool, cl: &std::sync::Arc<SimCluster>| {
+                        let comm = if joining {
+                            SimComm::join(cl, rank).unwrap()
+                        } else {
+                            SimComm::new(rank, cl.clone())
+                        };
+                        let mut ctx = NodeCtx::new(comm, CommModel::default());
+                        let mut el = Elastic::new();
+                        if !joining {
+                            // boundary 0: everyone commits rank-flavoured state
+                            ctx.comm_mut().fault_check(0);
+                            el.commit(
+                                &mut ctx,
+                                0,
+                                (10.0, 20.0),
+                                &[rank as f32 * 100.0, rank as f32 * 100.0 + 1.0],
+                            );
+                            // boundary 1: the fault plan kills rank 2 here
+                            let step = run_step(|| {
+                                ctx.comm_mut().fault_check(1);
+                                ctx.all_gather(&[rank as f32]);
+                            });
+                            assert!(step.is_err(), "rank {rank}: expected peer loss");
+                        }
+                        el.recover(&mut ctx, 2, joining).unwrap()
+                    };
+                    let first = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        run(false, &cl)
+                    }));
+                    let rec = match first {
+                        Ok(rec) => rec,
+                        Err(payload) => {
+                            // only the chaos kill may unwind; re-join and
+                            // recover as the replacement incarnation
+                            if payload.downcast_ref::<crate::transport::FaultKillSignal>().is_none()
+                            {
+                                std::panic::resume_unwind(payload);
+                            }
+                            assert_eq!(rank, 2);
+                            run(true, &cl)
+                        }
+                    };
+                    *slot = Some(rec);
+                });
+            }
+        });
+        for (rank, rec) in recovered.iter().enumerate() {
+            let rec = rec.as_ref().expect("rank produced no recovery");
+            assert_eq!(rec.iteration, 0, "rank {rank}");
+            assert_eq!(rec.fro_sq, (10.0, 20.0), "rank {rank}");
+            // the joiner (rank 2) gets the *dead incarnation's* committed
+            // state — that is the whole point of replication
+            assert_eq!(
+                rec.state,
+                vec![rank as f32 * 100.0, rank as f32 * 100.0 + 1.0],
+                "rank {rank}"
+            );
+        }
+    }
+}

@@ -41,10 +41,14 @@
 //!   without perturbing the measured communication volume (DSANLS's
 //!   `O(kd)` claim is asserted on these counters).
 //!
-//! Transport failures are fatal to a node: a rank that lost a collective
-//!   peer cannot make progress, so the collective wrappers panic with the
-//!   underlying [`crate::error::Error`]; the cluster driver (thread scope
-//!   or worker process) surfaces it.
+//! Transport failures are fatal to the *iteration*, not necessarily the
+//!   node: a rank that lost a collective peer cannot finish the round, so
+//!   the collective wrappers panic — but a peer-loss failure panics with
+//!   the typed [`crate::transport::PeerLostSignal`] payload, which the
+//!   elastic runners ([`elastic`]) catch at the next iteration boundary to
+//!   rebuild membership and resume. Every other failure panics with the
+//!   plain message and the cluster driver (thread scope or worker process)
+//!   surfaces it.
 //!
 //! **Control plane**: supervised runs ([`crate::nmf::control`]) add one
 //! untimed three-float all-reduce per iteration — the collective stop
@@ -59,7 +63,22 @@
 use std::time::{Duration, Instant};
 
 use crate::transport::wire::Precision;
-use crate::transport::{Communicator, PendingExchange, SimCluster, SimComm, TcpComm, Timing};
+use crate::transport::{
+    Communicator, PeerLostSignal, PendingExchange, SimCluster, SimComm, TcpComm, Timing,
+};
+
+pub mod elastic;
+
+/// Abort a collective with the failure typed for the elastic runners:
+/// peer-loss errors unwind as a [`PeerLostSignal`] payload (recoverable at
+/// an iteration boundary), everything else as a plain message panic.
+fn collective_panic(rank: usize, op: &str, e: crate::error::Error) -> ! {
+    let detail = format!("{op} failed on rank {rank}: {e}");
+    if let Some(peer) = e.lost_peer() {
+        std::panic::panic_any(PeerLostSignal { peer, detail });
+    }
+    panic!("{detail}");
+}
 
 /// Modelled interconnect: latency (seconds) + bandwidth (bytes/second).
 /// Default is a 10 Gbps / 100 µs datacenter link (the paper's cluster is
@@ -198,9 +217,14 @@ impl<C: Communicator> NodeCtx<C> {
     pub fn untimed<T>(&mut self, f: impl FnOnce(&mut Self) -> T) -> T {
         let was = self.suppress;
         self.suppress = true;
-        let out = f(self);
+        // restore on unwind too: an elastic runner catches peer-loss panics
+        // thrown from inside untimed sections and keeps using this context
+        let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(self)));
         self.suppress = was;
-        out
+        match out {
+            Ok(v) => v,
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
     }
 
     /// In-place all-reduce: `buf ← Σ_r buf_r`, summed in rank order so the
@@ -212,7 +236,7 @@ impl<C: Communicator> NodeCtx<C> {
         let g = self
             .comm
             .exchange(self.clock, buf)
-            .unwrap_or_else(|e| panic!("all-reduce failed on rank {}: {e}", self.rank));
+            .unwrap_or_else(|e| collective_panic(self.rank, "all-reduce", e));
         buf.fill(0.0);
         for slot in &g.parts {
             debug_assert_eq!(slot.len(), buf.len(), "all_reduce_sum length mismatch");
@@ -252,7 +276,7 @@ impl<C: Communicator> NodeCtx<C> {
         let g = self
             .comm
             .exchange(self.clock, data)
-            .unwrap_or_else(|e| panic!("all-gather failed on rank {}: {e}", self.rank));
+            .unwrap_or_else(|e| collective_panic(self.rank, "all-gather", e));
         if !self.suppress {
             let total: usize = g.parts.iter().map(|s| s.len() * 4).sum();
             let recv = total.saturating_sub(own);
@@ -308,7 +332,7 @@ impl<C: Communicator> NodeCtx<C> {
         let pending = self
             .comm
             .exchange_start_q(self.clock, buf, precision)
-            .unwrap_or_else(|e| panic!("all-reduce start failed on rank {}: {e}", self.rank));
+            .unwrap_or_else(|e| collective_panic(self.rank, "all-reduce start", e));
         PendingReduce { pending, wire_bytes, start_clock: self.clock, len: buf.len() }
     }
 
@@ -321,7 +345,7 @@ impl<C: Communicator> NodeCtx<C> {
         let tick = Instant::now(); // Measured: time only the blocked wait
         let g = pending
             .wait()
-            .unwrap_or_else(|e| panic!("all-reduce failed on rank {}: {e}", self.rank));
+            .unwrap_or_else(|e| collective_panic(self.rank, "all-reduce", e));
         buf.fill(0.0);
         for slot in &g.parts {
             debug_assert_eq!(slot.len(), buf.len(), "all_reduce_sum length mismatch");
@@ -378,7 +402,7 @@ impl<C: Communicator> NodeCtx<C> {
         let pending = self
             .comm
             .exchange_start_q(self.clock, data, precision)
-            .unwrap_or_else(|e| panic!("all-gather start failed on rank {}: {e}", self.rank));
+            .unwrap_or_else(|e| collective_panic(self.rank, "all-gather start", e));
         PendingGather { pending, own_wire, start_clock: self.clock, precision }
     }
 
@@ -389,7 +413,7 @@ impl<C: Communicator> NodeCtx<C> {
         let tick = Instant::now();
         let g = pending
             .wait()
-            .unwrap_or_else(|e| panic!("all-gather failed on rank {}: {e}", self.rank));
+            .unwrap_or_else(|e| collective_panic(self.rank, "all-gather", e));
         if !self.suppress {
             let elem = precision.bytes_per_element();
             let total: usize = g.parts.iter().map(|s| s.len() * elem).sum();

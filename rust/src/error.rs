@@ -16,6 +16,40 @@ impl Error {
     pub fn msg(m: impl Into<String>) -> Self {
         Error(m.into())
     }
+
+    /// Build a typed peer-loss error: `peer` vanished from the collective.
+    ///
+    /// The in-string marker survives [`Context`] chaining (context is only
+    /// ever *prepended*), so layers far from the transport can still ask
+    /// [`Error::lost_peer`] whether a failure is a recoverable membership
+    /// event rather than a plain fault.
+    pub fn peer_lost(peer: usize, detail: impl fmt::Display) -> Self {
+        Error(format!("{detail} [peer-lost:{peer}]"))
+    }
+
+    /// Like [`Error::peer_lost`], but for "every peer is gone".
+    pub fn peer_lost_all(detail: impl fmt::Display) -> Self {
+        Error(format!("{detail} [peer-lost:*]"))
+    }
+
+    /// Whether this error carries a peer-loss marker (any flavour).
+    pub fn is_peer_lost(&self) -> bool {
+        self.0.contains("[peer-lost:")
+    }
+
+    /// Decode the peer-loss marker, if present.
+    ///
+    /// Returns `None` for ordinary errors, `Some(Some(r))` when rank `r`
+    /// was lost, and `Some(None)` when every peer disconnected at once.
+    pub fn lost_peer(&self) -> Option<Option<usize>> {
+        let start = self.0.find("[peer-lost:")? + "[peer-lost:".len();
+        let rest = &self.0[start..];
+        let end = rest.find(']')?;
+        match &rest[..end] {
+            "*" => Some(None),
+            digits => digits.parse::<usize>().ok().map(Some),
+        }
+    }
 }
 
 impl fmt::Display for Error {
@@ -125,6 +159,22 @@ mod tests {
         let v: Option<u32> = None;
         let err = v.context("missing field").unwrap_err();
         assert_eq!(err.to_string(), "missing field");
+    }
+
+    #[test]
+    fn peer_lost_marker_survives_context() {
+        let base: Result<()> = Err(Error::peer_lost(3, "peer 3 disconnected"));
+        let chained = base.context("all-reduce failed on rank 0").unwrap_err();
+        assert!(chained.is_peer_lost(), "{chained}");
+        assert_eq!(chained.lost_peer(), Some(Some(3)));
+
+        let all: Result<()> = Err(Error::peer_lost_all("all peers disconnected"));
+        let all = all.context("recv").unwrap_err();
+        assert_eq!(all.lost_peer(), Some(None));
+
+        let plain = Error::msg("timed out");
+        assert!(!plain.is_peer_lost());
+        assert_eq!(plain.lost_peer(), None);
     }
 
     #[test]

@@ -75,18 +75,23 @@ fn usage() {
          USAGE: dsanls <run|launch|worker|shard|serve|query|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
          launch:  dsanls launch --nodes N [--port P] [--bind HOST] [--hosts FILE] [--shards DIR]\n\
                   [--max-seconds S] [--target-error E] [--checkpoint PATH [--checkpoint-every K]]\n\
-                  [--resume PATH] [--retries N] [--verify-sim] [--overlap]\n\
-                  [--wire-precision f32|fp16|bf16] [--config FILE] [--key=value ...]\n\
+                  [--resume PATH] [--retries N] [--elastic [--max-joins N]] [--verify-sim]\n\
+                  [--overlap] [--wire-precision f32|fp16|bf16] [--config FILE] [--key=value ...]\n\
                   runs the experiment over real TCP worker processes (spawned locally, or\n\
                   started per host by the operator with --hosts — see DEPLOYMENT.md);\n\
                   stop policies end the run early (deadline / convergence), --checkpoint\n\
                   snapshots factors so --resume (or a --retries restart after a rank\n\
                   failure) continues to bit-identical results;\n\
+                  --elastic keeps the survivors alive when a rank dies: the coordinator\n\
+                  respawns it as `worker --join`, the mesh rebuilds a membership epoch,\n\
+                  and the run resumes from the replicated boundary state (retries: 0);\n\
                   --verify-sim re-runs the simulator and asserts bit-identical factors\n\
          worker:  dsanls worker --rendezvous HOST:PORT --rank R [--bind IP[:PORT]]\n\
-                  [--advertise HOST[:PORT]] [--shards DIR] [control flags as for launch]\n\
-                  [--config FILE] [--key=value ...]\n\
-                  one launch rank; holds only its row/column blocks of the input\n\
+                  [--advertise HOST[:PORT]] [--shards DIR] [--elastic] [--join]\n\
+                  [control flags as for launch] [--config FILE] [--key=value ...]\n\
+                  one launch rank; holds only its row/column blocks of the input;\n\
+                  --join re-enters a running --elastic cluster as the replacement\n\
+                  for a dead rank (operator-driven on multi-host fleets)\n\
          shard:   dsanls shard --out DIR [--nodes N] [--input FILE] [--balance nnz]\n\
                   [--config FILE] [--key=value ...]\n\
                   pre-slice the dataset — or an external COO/.mtx matrix file (--input,\n\

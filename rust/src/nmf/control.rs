@@ -373,6 +373,18 @@ pub struct RunControl {
     /// TCP backend it would still be a real network round trip per
     /// iteration bought for nothing.
     pub cancellable: bool,
+    /// Elastic membership: when set, the runners replicate their boundary
+    /// state each iteration and recover from peer loss by rebuilding the
+    /// epoch ([`crate::dist::elastic`]) instead of dying.
+    pub elastic: Option<ElasticCtl>,
+}
+
+/// Elastic-membership knobs a run executes under.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ElasticCtl {
+    /// Smallest surviving-cluster size worth rebuilding for; below it a
+    /// peer loss is fatal (the work distribution would be meaningless).
+    pub min_ranks: usize,
 }
 
 impl RunControl {
@@ -387,6 +399,7 @@ impl RunControl {
             resume: None,
             fault_at: None,
             cancellable: false,
+            elastic: None,
         }
     }
 
@@ -860,6 +873,7 @@ mod tests {
             resume: None,
             fault_at: None,
             cancellable: true,
+            elastic: None,
         };
         let f = ctl.local_flags(0.4);
         assert_eq!(f, [1.0, 0.0, 1.0]);

@@ -99,14 +99,19 @@ use crate::dist::{CommModel, CommStats, NodeCtx};
 use crate::error::{Context, Result};
 use crate::linalg::{Mat, Matrix};
 use crate::metrics::Series;
-use crate::nmf::control::{CheckpointCfg, ControlToken, RunControl, StopPolicy, StopReason};
+use crate::nmf::control::{
+    CheckpointCfg, ControlToken, ElasticCtl, RunControl, StopPolicy, StopReason,
+};
 use crate::nmf::{init_factors_from, rel_error};
 use crate::rng::{Role, StreamRng};
 use crate::secure::asyn::{self, AsynClientOutput, AsynOptions};
 use crate::secure::syn::{self, SynNodeOutput, SynOptions};
 use crate::secure::{AuditLog, SecureAlgo};
 use crate::solvers::SolverKind;
-use crate::transport::{Communicator, Rendezvous, SimCluster, SimComm, TcpComm, TcpOptions};
+use crate::transport::{
+    Communicator, FaultKillSignal, FaultPlan, Rendezvous, SimCluster, SimComm, TcpComm,
+    TcpOptions,
+};
 
 /// Wire precision for collective factor payloads, re-exported for the
 /// builder surface: `.wire_precision(Wire::Bf16)`.
@@ -142,6 +147,9 @@ pub struct Outcome {
     /// Rank-failure retries consumed before this outcome (only the
     /// multi-process `dsanls launch` path retries; in-process jobs are 0).
     pub retries: usize,
+    /// Membership epochs the cluster went through (1 for an undisturbed
+    /// run; each elastic re-join adds one — see [`JobBuilder::elastic`]).
+    pub epochs: usize,
 }
 
 impl Outcome {
@@ -322,6 +330,10 @@ pub struct RankEnv<'a> {
     /// The run's control plane (stop policy, cancellation token,
     /// checkpoint/resume) — shared by every rank of the run.
     pub ctl: &'a RunControl,
+    /// This rank is a replacement that entered via the elastic epoch-join
+    /// handshake: it skips init and recovers its state from the cluster's
+    /// committed boundary instead ([`crate::dist::elastic`]).
+    pub joining: bool,
 }
 
 /// What one rank returns — the union of the per-algorithm node outputs.
@@ -351,6 +363,16 @@ impl RankOutput {
             RankOutput::Syn(o) => o.stop,
             RankOutput::AsynClient(o) => o.stop,
             RankOutput::AsynServer { .. } => StopReason::Completed,
+        }
+    }
+
+    /// Membership epochs this rank participated in (the asynchronous
+    /// family never rebuilds, so it is always 1 there).
+    fn epochs(&self) -> usize {
+        match self {
+            RankOutput::Node(o) => o.epochs,
+            RankOutput::Syn(o) => o.epochs,
+            RankOutput::AsynClient(_) | RankOutput::AsynServer { .. } => 1,
         }
     }
 
@@ -515,6 +537,7 @@ impl Algorithm for Algo {
                     o,
                     env.observer,
                     env.ctl,
+                    env.joining,
                 )))
             }
             Algo::DistAnls(o) => {
@@ -525,6 +548,7 @@ impl Algorithm for Algo {
                     o,
                     env.observer,
                     env.ctl,
+                    env.joining,
                 )))
             }
             Algo::Syn(o, v) => {
@@ -538,6 +562,7 @@ impl Algorithm for Algo {
                     env.audit,
                     env.observer,
                     env.ctl,
+                    env.joining,
                 )))
             }
             Algo::Asyn(o, v) => {
@@ -579,6 +604,10 @@ impl Algorithm for Algo {
             .iter()
             .map(RankOutput::stop)
             .fold(StopReason::Completed, StopReason::merge);
+        // every rank of an elastic run agrees on the epoch count by
+        // construction (they rebuilt together); max() also covers a joiner
+        // that entered mid-epoch
+        let epochs = outputs.iter().map(RankOutput::epochs).max().unwrap_or(1).max(1);
         match self {
             Algo::Dsanls(_) | Algo::DistAnls(_) => {
                 let (k, iters) = match self {
@@ -605,6 +634,7 @@ impl Algorithm for Algo {
                     loads,
                     stop_reason,
                     retries: 0,
+                    epochs,
                 })
             }
             Algo::Syn(o, _) => {
@@ -625,6 +655,7 @@ impl Algorithm for Algo {
                     loads,
                     stop_reason,
                     retries: 0,
+                    epochs,
                 })
             }
             Algo::Asyn(o, _) => {
@@ -664,6 +695,7 @@ impl Algorithm for Algo {
                     loads,
                     stop_reason,
                     retries: 0,
+                    epochs,
                 })
             }
         }
@@ -783,6 +815,8 @@ pub struct Job<'a> {
     checkpoint: Option<CheckpointCfg>,
     resume: Option<PathBuf>,
     token: Arc<ControlToken>,
+    elastic: Option<ElasticCtl>,
+    fault_plan: Option<FaultPlan>,
 }
 
 /// Builder for [`Job`] — `algorithm` and `data` are required, everything
@@ -803,6 +837,9 @@ pub struct JobBuilder<'a> {
     overlap: Option<bool>,
     /// `Some` overrides the algorithm options' wire precision at build time.
     precision: Option<Wire>,
+    elastic: bool,
+    min_ranks: Option<usize>,
+    fault_plan: Option<FaultPlan>,
 }
 
 impl<'a> Job<'a> {
@@ -821,6 +858,9 @@ impl<'a> Job<'a> {
             resume: None,
             overlap: None,
             precision: None,
+            elastic: false,
+            min_ranks: None,
+            fault_plan: None,
         }
     }
 
@@ -865,6 +905,7 @@ impl<'a> Job<'a> {
             checkpoint: self.checkpoint.clone(),
             resume,
             fault_at: None,
+            elastic: self.elastic,
         })
     }
 
@@ -1006,7 +1047,18 @@ impl<'a> Job<'a> {
         let token = self.token.clone();
         let events: Arc<Mutex<Vec<ProgressEvent>>> = Arc::new(Mutex::new(Vec::new()));
         let data = OwnedData::from_source(&self.data);
-        let Job { algo, backend, threads, partition, stop, checkpoint, resume, .. } = self;
+        let Job {
+            algo,
+            backend,
+            threads,
+            partition,
+            stop,
+            checkpoint,
+            resume,
+            elastic,
+            fault_plan,
+            ..
+        } = self;
         let ev = events.clone();
         let tok = token.clone();
         let thread = std::thread::Builder::new()
@@ -1025,6 +1077,8 @@ impl<'a> Job<'a> {
                     checkpoint,
                     resume,
                     token: tok,
+                    elastic,
+                    fault_plan,
                 };
                 // a panic outside the drivers (run() already contains rank
                 // panics) must reach wait() as a typed error, not a dead
@@ -1050,6 +1104,18 @@ fn panic_to_error(
         .downcast_ref::<String>()
         .cloned()
         .or_else(|| panic.downcast_ref::<&str>().map(|s| s.to_string()))
+        .or_else(|| {
+            // a peer loss that was not (or could not be) recovered
+            panic
+                .downcast_ref::<crate::transport::PeerLostSignal>()
+                .map(|s| s.detail.clone())
+        })
+        .or_else(|| {
+            // a scripted kill on a non-elastic job is plain death
+            panic.downcast_ref::<FaultKillSignal>().map(|s| {
+                format!("rank {} killed by the fault plan at iteration {}", s.rank, s.iteration)
+            })
+        })
         .unwrap_or_else(|| "job panicked".into());
     if token.is_killed() {
         crate::error::Error::msg(format!("job killed: {msg}"))
@@ -1284,6 +1350,34 @@ impl<'a> JobBuilder<'a> {
         self
     }
 
+    /// Survive rank death: replicate the boundary state each iteration and,
+    /// when a rank dies, rebuild membership at the next boundary — a
+    /// replacement rank re-joins the collective and everyone resumes from
+    /// the last committed iteration, bit-identical to an uninterrupted run
+    /// ([`crate::dist::elastic`]). Supported by the synchronous families on
+    /// the simulated backend (multi-process TCP elasticity runs via
+    /// `dsanls launch --elastic`); the asynchronous parameter server
+    /// tolerates client churn natively instead.
+    pub fn elastic(mut self, on: bool) -> Self {
+        self.elastic = on;
+        self
+    }
+
+    /// Smallest surviving cluster worth rebuilding for (default 1). A peer
+    /// loss that leaves fewer survivors is fatal.
+    pub fn min_ranks(mut self, n: usize) -> Self {
+        self.min_ranks = Some(n);
+        self
+    }
+
+    /// Chaos injection for the membership tests: kill the scripted ranks
+    /// at the scripted iterations ([`FaultPlan`]). Requires
+    /// [`JobBuilder::elastic`] and the simulated backend.
+    pub fn fault_plan(mut self, plan: FaultPlan) -> Self {
+        self.fault_plan = Some(plan);
+        self
+    }
+
     /// Validate the required axes and produce the [`Job`].
     pub fn build(self) -> Result<Job<'a>> {
         let mut algo = self
@@ -1312,6 +1406,57 @@ impl<'a> JobBuilder<'a> {
                 ),
             }
         }
+        let elastic = if self.elastic {
+            match &algo {
+                Algo::Asyn(..) => crate::bail!(
+                    "elastic membership applies to the synchronous families — the \
+                     asynchronous parameter server already tolerates client churn"
+                ),
+                Algo::Dsanls(o) if o.overlap => crate::bail!(
+                    "elastic membership and overlap_comm are mutually exclusive: an \
+                     in-flight overlapped collective cannot be replayed across an epoch"
+                ),
+                Algo::DistAnls(o) if o.overlap => crate::bail!(
+                    "elastic membership and overlap_comm are mutually exclusive: an \
+                     in-flight overlapped collective cannot be replayed across an epoch"
+                ),
+                Algo::Syn(o, _) if o.overlap => crate::bail!(
+                    "elastic membership and overlap_comm are mutually exclusive: an \
+                     in-flight overlapped collective cannot be replayed across an epoch"
+                ),
+                _ => {}
+            }
+            if matches!(self.backend, Backend::Tcp { .. }) {
+                crate::bail!(
+                    "in-process TCP elasticity is not supported — elastic TCP fleets are \
+                     one process per rank, via `dsanls launch --elastic`"
+                );
+            }
+            let min_ranks = self.min_ranks.unwrap_or(1);
+            if min_ranks == 0 || min_ranks > algo.nodes() {
+                crate::bail!(
+                    "min_ranks must be in 1..={} (the cluster size), got {min_ranks}",
+                    algo.nodes()
+                );
+            }
+            Some(ElasticCtl { min_ranks })
+        } else {
+            if self.min_ranks.is_some() {
+                crate::bail!("min_ranks needs .elastic(true)");
+            }
+            None
+        };
+        if self.fault_plan.is_some() {
+            if elastic.is_none() {
+                crate::bail!(
+                    "fault_plan without .elastic(true) would just kill the job — enable \
+                     elastic membership (the chaos harness tests recovery, not death)"
+                );
+            }
+            if self.backend != Backend::Sim {
+                crate::bail!("fault_plan drives the simulated backend only");
+            }
+        }
         Ok(Job {
             algo,
             data,
@@ -1324,6 +1469,8 @@ impl<'a> JobBuilder<'a> {
             checkpoint: self.checkpoint,
             resume: self.resume,
             token: ControlToken::new(),
+            elastic,
+            fault_plan: self.fault_plan,
         })
     }
 
@@ -1387,6 +1534,7 @@ fn rank_main<C: Communicator>(
     res: &Resolved<'_, '_>,
     mut comm: C,
     rank: usize,
+    joining: bool,
 ) -> Result<RankResult> {
     let job = res.job;
     let algo = &job.algo;
@@ -1425,11 +1573,18 @@ fn rank_main<C: Communicator>(
 
     let load = if let RankData::Owned(data) = &mut holder {
         if data.fro_sq.is_none() {
-            // synth mode: resolve the exact global ‖M‖² with the ordered
-            // chain (bit-identical to the full-matrix value)
-            let fro = shard::exact_fro_sq(&mut comm, nodes, data.m_rows.as_ref())
-                .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
-            data.fro_sq = Some(fro);
+            if joining {
+                // the survivors are mid-run and will not re-enter the
+                // bootstrap chain; the real value arrives with the
+                // recovered commit ([`crate::dist::elastic`])
+                data.fro_sq = Some(f64::NAN);
+            } else {
+                // synth mode: resolve the exact global ‖M‖² with the
+                // ordered chain (bit-identical to the full-matrix value)
+                let fro = shard::exact_fro_sq(&mut comm, nodes, data.m_rows.as_ref())
+                    .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
+                data.fro_sq = Some(fro);
+            }
         }
         if !need_rows {
             data.drop_rows(); // the chain was its only consumer
@@ -1447,6 +1602,7 @@ fn rank_main<C: Communicator>(
         observer: if rank == 0 { job.observer } else { None },
         audit: job.audit,
         ctl: res.ctl,
+        joining,
     };
     let out = algo.run_rank(comm, env)?;
     Ok(RankResult { out, load })
@@ -1460,6 +1616,9 @@ fn drive_sim(res: &Resolved<'_, '_>) -> Result<Vec<RankResult>> {
     let ranks = res.job.algo.cluster_ranks();
     let nodes = res.job.algo.nodes();
     let cluster = SimCluster::new(ranks);
+    if let Some(plan) = &res.job.fault_plan {
+        cluster.set_fault_plan(plan.clone());
+    }
     {
         // hard-cancel (kill) support: unblock readers waiting on the mesh
         let c = cluster.clone();
@@ -1470,17 +1629,46 @@ fn drive_sim(res: &Resolved<'_, '_>) -> Result<Vec<RankResult>> {
         if let Some(t) = res.job.threads {
             crate::parallel::set_local_threads(Some(t.max(1)));
         }
-        let out = rank_main(res, SimComm::new(0, cluster), 0);
+        let out = rank_main(res, SimComm::new(0, cluster), 0, false);
         crate::parallel::set_local_threads(None);
         return Ok(vec![out?]);
     }
+    let elastic = res.job.elastic.is_some();
     let mut slots: Vec<Option<Result<RankResult>>> = (0..ranks).map(|_| None).collect();
     std::thread::scope(|s| {
         for (rank, slot) in slots.iter_mut().enumerate() {
-            let comm = SimComm::new(rank, cluster.clone());
+            let cluster = cluster.clone();
             s.spawn(move || {
                 apply_thread_cap(res.job.threads, nodes);
-                *slot = Some(rank_main(res, comm, rank));
+                // First incarnation attaches directly. After a scripted kill
+                // (FaultKillSignal) the same thread stands in for the
+                // *replacement* process: it re-joins the mesh and re-runs
+                // `rank_main` with `joining = true`, exactly like a freshly
+                // spawned `worker --join` would over TCP.
+                let mut comm = Some(SimComm::new(rank, cluster.clone()));
+                let mut joining = false;
+                let value = loop {
+                    let attached = match comm.take() {
+                        Some(c) => c,
+                        None => match SimComm::join(&cluster, rank) {
+                            Ok(c) => c,
+                            Err(e) => break Err(e),
+                        },
+                    };
+                    match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                        rank_main(res, attached, rank, joining)
+                    })) {
+                        Ok(v) => break v,
+                        Err(payload) => {
+                            if elastic && payload.downcast_ref::<FaultKillSignal>().is_some() {
+                                joining = true;
+                                continue;
+                            }
+                            std::panic::resume_unwind(payload);
+                        }
+                    }
+                };
+                *slot = Some(value);
                 crate::parallel::set_local_threads(None);
             });
         }
@@ -1506,7 +1694,7 @@ fn drive_tcp(res: &Resolved<'_, '_>, port: u16) -> Result<Vec<RankResult>> {
                     // hard-cancel (kill) support: unblock this rank's reads
                     res.ctl.token.register_interrupter(Box::new(comm.interrupter()));
                     apply_thread_cap(res.job.threads, nodes);
-                    let value = rank_main(res, comm, rank);
+                    let value = rank_main(res, comm, rank, false);
                     crate::parallel::set_local_threads(None);
                     value
                 })();

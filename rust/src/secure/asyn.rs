@@ -168,7 +168,20 @@ pub fn server_loop<C: Communicator>(
     // stop flag in the last lane (no per-reply factor-sized allocation)
     let mut reply = vec![0.0f32; u_len + 1];
     while live > 0 {
-        let p = comm.recv_any().unwrap_or_else(|e| panic!("server inbox closed: {e}"));
+        let p = match comm.recv_any() {
+            Ok(p) => p,
+            // client churn is survivable: a dead link to one client retires
+            // that client; losing the whole mesh ends the loop with the
+            // best server copy so far. Anything else is still fatal.
+            Err(e) => match e.lost_peer() {
+                Some(Some(peer)) => {
+                    finish(&mut done, &mut live, peer);
+                    continue;
+                }
+                Some(None) => break,
+                None => panic!("server inbox closed: {e}"),
+            },
+        };
         if p.tag == TAG_SHUTDOWN {
             finish(&mut done, &mut live, p.from);
             continue;

@@ -25,6 +25,7 @@ use super::{privacy::AuditLog, SecureAlgo, SecureRun};
 use crate::algos::{ObserverFn, Trace, TracePoint};
 use crate::data::partition::Partition;
 use crate::data::shard::NodeInput;
+use crate::dist::elastic::{run_step, Elastic};
 use crate::dist::{CommModel, CommStats, NodeCtx};
 use crate::linalg::{Mat, Matrix};
 use crate::nmf::control::{RunControl, StopReason};
@@ -107,6 +108,9 @@ pub struct SynNodeOutput {
     pub final_clock: f64,
     /// Why this party's loop ended (collectively agreed across parties).
     pub stop: StopReason,
+    /// Membership epoch count this party finished at (1 = the founding
+    /// membership; >1 means the mesh was rebuilt around a re-joined party).
+    pub epochs: usize,
 }
 
 /// Assemble per-party outputs into a [`SecureRun`] (the driver is trusted;
@@ -128,6 +132,7 @@ pub fn assemble_syn(outputs: Vec<SynNodeOutput>, k: usize, total_iters: usize) -
 /// the protocol touches, so the two views are bit-identical. `opts.nodes`
 /// must match both the partition and the communicator's cluster size;
 /// `observer` (rank 0 only) streams each traced sample.
+#[allow(clippy::too_many_arguments)]
 pub fn syn_rank<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     input: NodeInput<'_>,
@@ -137,11 +142,14 @@ pub fn syn_rank<C: Communicator>(
     audit: Option<&AuditLog>,
     observer: Option<&ObserverFn>,
     ctl: &RunControl,
+    joining: bool,
 ) -> SynNodeOutput {
     let (m_rows, m_cols) = input.dims();
     let fro_sq = input.fro_sq();
     let m_col = input.col_block(cols.range(ctx.rank)); // M_{:J_r}, m×|J_r|
-    syn_node_on_block(ctx, &m_col, m_rows, m_cols, fro_sq, cols, opts, algo, audit, observer, ctl)
+    syn_node_on_block(
+        ctx, &m_col, m_rows, m_cols, fro_sq, cols, opts, algo, audit, observer, ctl, joining,
+    )
 }
 
 /// Protocol body over the party's resident column block.
@@ -151,13 +159,14 @@ fn syn_node_on_block<C: Communicator>(
     m_col: &Matrix,
     m_rows: usize,
     m_cols: usize,
-    m_fro_sq: f64,
+    mut m_fro_sq: f64,
     cols: &Partition,
     opts: &SynOptions,
     algo: SecureAlgo,
     audit: Option<&AuditLog>,
     observer: Option<&ObserverFn>,
     ctl: &RunControl,
+    joining: bool,
 ) -> SynNodeOutput {
     assert_eq!(cols.nodes(), opts.nodes, "partition/node mismatch");
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
@@ -172,14 +181,19 @@ fn syn_node_on_block<C: Communicator>(
         let m_col_t = m_col.transpose(); // |J_r|×m
         let jr = my_cols.len();
 
-        // shared-seed init: identical U_(r) on every party at t=0; private V
-        let (u_init, v_full) = {
-            let mut rng = stream.for_iteration(0, Role::Init);
-            init_factors_from(m_fro_sq, m_rows, m_cols, k, &mut rng)
+        // shared-seed init: identical U_(r) on every party at t=0; private V.
+        // A replacement party skips init — its state (and the real ‖M‖²)
+        // arrive through the recovery exchange before the first iteration.
+        let (mut u_local, mut v_block) = if joining {
+            (Mat::zeros(m_rows, k), Mat::zeros(jr, k))
+        } else {
+            let (u_init, v_full) = {
+                let mut rng = stream.for_iteration(0, Role::Init);
+                init_factors_from(m_fro_sq, m_rows, m_cols, k, &mut rng)
+            };
+            let v_block = v_full.row_block(my_cols.clone());
+            (u_init, v_block)
         };
-        let mut u_local = u_init;
-        let mut v_block = v_full.row_block(my_cols.clone());
-        drop(v_full);
 
         let d1 = auto_d(m_rows, opts.d1, k); // V-subproblem sketch over m
         let d2 = auto_d(jr, opts.d2, k).min(jr); // U-subproblem sketch over |J_r|
@@ -190,21 +204,63 @@ fn syn_node_on_block<C: Communicator>(
         let ssd = algo != SecureAlgo::SynSd;
 
         let mut trace = Trace::new(if rank == 0 { observer } else { None });
-        record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, 0, &mut trace);
+        if !joining {
+            record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, 0, &mut trace);
+        }
 
-        let mut iter = 0usize;
+        let total = opts.t1 * opts.t2;
         let mut stop = StopReason::Completed;
         // factor-independent half of the next sketched U update, computed
         // behind the consensus reduction when `opts.overlap` is set
         let mut prefetch: Option<(SketchMatrix, Mat)> = None;
-        'outer: for _t1 in 0..opts.t1 {
-            for _t2 in 0..opts.t2 {
+        // The loop is flat over the T₁·T₂ inner iterations (a Syn-SD block
+        // ends where the running counter hits a multiple of T₂ — identical
+        // schedule to the nested form, but elastic recovery can re-enter at
+        // any inner boundary).
+        let mut elastic = ctl.elastic.map(|e| (Elastic::new(), e.min_ranks));
+        let elastic_on = elastic.is_some();
+        let mut first_join = joining;
+        let mut pending_recovery = joining;
+        let mut it = 0usize;
+        while it < total {
+            // elastic recovery: rebuild membership, adopt the committed
+            // boundary wholesale (see `crate::dist::elastic`)
+            if pending_recovery {
+                let (el, min_ranks) = elastic.as_mut().expect("recovery implies elastic");
+                let rec = el
+                    .recover(ctx, *min_ranks, first_join)
+                    .unwrap_or_else(|e| panic!("rank {rank} elastic recovery: {e}"));
+                first_join = false;
+                pending_recovery = false;
+                it = rec.iteration;
+                m_fro_sq = rec.fro_sq.0;
+                let u_len = m_rows * k;
+                u_local = Mat::from_vec(m_rows, k, rec.state[..u_len].to_vec());
+                v_block = Mat::from_vec(jr, k, rec.state[u_len..].to_vec());
+                trace.truncate_after(it);
+                prefetch = None;
+                continue;
+            }
+
+            let body = || -> Option<StopReason> {
+                if let Some((el, _)) = elastic.as_mut() {
+                    // commit this party's state at the start of inner
+                    // iteration `it` — U_(r) and the private V block
+                    let mut state =
+                        Vec::with_capacity(u_local.data().len() + v_block.data().len());
+                    state.extend_from_slice(u_local.data());
+                    state.extend_from_slice(v_block.data());
+                    el.commit(ctx, it, (m_fro_sq, 0.0), &state);
+                }
+                // chaos harness: a scripted kill for (rank, it) unwinds here
+                ctx.comm_mut().fault_check(it);
+
+                let mut iter = it;
                 // collective stop decision — every party leaves together
                 // (never reached with a pending exchange in flight: each
                 // consensus reduction finishes within its own iteration)
                 if let Some(reason) = ctl.poll_sync(ctx, iter, trace.last_error()) {
-                    stop = reason;
-                    break 'outer;
+                    return Some(reason);
                 }
 
                 // ---- U_(r) update: min ‖M_{:J_r} − U·V_{J_r:}ᵀ‖ ----
@@ -302,25 +358,36 @@ fn syn_node_on_block<C: Communicator>(
                 if opts.eval_every > 0 && iter % opts.eval_every == 0 {
                     record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
                 }
-            }
 
-            // ---- Syn-SD: full U averaging every T₂ (Alg. 4 line 7) ----
-            if !ssd {
-                let mut payload = u_local.data().to_vec();
-                if let Some(a) = audit {
-                    a.record(rank, "syn-sd/u-full", &payload);
+                // ---- Syn-SD: full U averaging every T₂ (Alg. 4 line 7) ----
+                if !ssd && iter % opts.t2 == 0 {
+                    let mut payload = u_local.data().to_vec();
+                    if let Some(a) = audit {
+                        a.record(rank, "syn-sd/u-full", &payload);
+                    }
+                    ctx.all_reduce_sum_q(&mut payload, opts.precision);
+                    let inv_n = 1.0 / opts.nodes as f32;
+                    for (dst, src) in u_local.data_mut().iter_mut().zip(payload.iter()) {
+                        *dst = src * inv_n;
+                    }
+                    if opts.eval_every > 0 {
+                        record_secure_error(
+                            ctx, m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace,
+                        );
+                    }
                 }
-                ctx.all_reduce_sum_q(&mut payload, opts.precision);
-                let inv_n = 1.0 / opts.nodes as f32;
-                for (dst, src) in u_local.data_mut().iter_mut().zip(payload.iter()) {
-                    *dst = src * inv_n;
+                None
+            };
+            match if elastic_on { run_step(body) } else { Ok(body()) } {
+                Ok(Some(reason)) => {
+                    stop = reason;
+                    break;
                 }
-                if opts.eval_every > 0 {
-                    record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
-                }
+                Ok(None) => it += 1,
+                Err(_lost) => pending_recovery = true,
             }
         }
-        record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, iter, &mut trace);
+        record_secure_error(ctx, m_col, &u_local, &v_block, m_fro_sq, it, &mut trace);
 
         SynNodeOutput {
             u_local,
@@ -329,6 +396,7 @@ fn syn_node_on_block<C: Communicator>(
             stats: ctx.stats(),
             final_clock: ctx.clock(),
             stop,
+            epochs: elastic.as_ref().map_or(1, |(el, _)| el.rebuilds + 1),
         }
     }
 }

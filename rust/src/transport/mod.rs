@@ -29,10 +29,22 @@
 //! `dsanls launch --verify-sim` CLI path.
 //!
 //! Transport failures (peer death, handshake mismatch, timeout) surface as
-//! [`crate::error::Error`] from the `Communicator` methods. The algorithm
-//! layer ([`crate::dist::NodeCtx`]) treats them as fatal to the node: a
-//! rank that lost a collective peer cannot make progress, so it panics
-//! with the transport error and the process/driver reports the failure.
+//! [`crate::error::Error`] from the `Communicator` methods. A rank that
+//! lost a collective peer cannot make progress on its own, so
+//! [`crate::dist::NodeCtx`] unwinds with a typed [`PeerLostSignal`]. On a
+//! fixed-membership run that is fatal and the driver reports the failure;
+//! on an **elastic** run the iteration loop catches the signal, calls
+//! [`Communicator::rebuild`] to form the next [`Membership`] epoch with a
+//! replacement rank, and resumes from the last replicated commit — the
+//! survivors never restart.
+//!
+//! **Membership epochs**: every collective frame's tag is an
+//! [`epoch_tag`] — epoch in the top 16 bits, round sequence below. Frames
+//! from a lower epoch are stale leftovers of a round that a rank death
+//! aborted and are skipped on receive; a higher epoch (or a sequence
+//! mismatch within the epoch) is a protocol error. Non-elastic runs live
+//! their whole life in epoch 0, where the tag equals the plain sequence
+//! number and the wire format is unchanged.
 
 #![warn(missing_docs)]
 
@@ -40,8 +52,8 @@ pub mod sim;
 pub mod tcp;
 pub mod wire;
 
-pub use sim::{SimCluster, SimComm};
-pub use tcp::{Rendezvous, TcpComm, TcpOptions};
+pub use sim::{FaultPlan, SimCluster, SimComm};
+pub use tcp::{Rendezvous, TcpComm, TcpOptions, WorkerConn};
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
@@ -52,6 +64,62 @@ use crate::error::{Context, Result};
 /// Tag marking a client's final message to the parameter server in the
 /// asynchronous protocols.
 pub const TAG_SHUTDOWN: u64 = u64::MAX;
+
+/// Bits of a collective tag holding the round sequence; the membership
+/// epoch lives above them.
+pub const EPOCH_SHIFT: u32 = 48;
+
+/// Pack a membership epoch and a round sequence into one collective tag.
+/// Epoch 0 tags are numerically identical to the plain pre-epoch sequence
+/// numbers, so fixed-membership runs are wire-compatible by construction.
+pub fn epoch_tag(epoch: u64, seq: u64) -> u64 {
+    debug_assert!(epoch < (1 << 16), "membership epoch overflow");
+    (epoch << EPOCH_SHIFT) | (seq & ((1u64 << EPOCH_SHIFT) - 1))
+}
+
+/// Split a collective tag into `(epoch, seq)`.
+pub fn split_epoch_tag(tag: u64) -> (u64, u64) {
+    (tag >> EPOCH_SHIFT, tag & ((1u64 << EPOCH_SHIFT) - 1))
+}
+
+/// The cluster's membership view: which ranks participate in collectives,
+/// and which epoch of membership this is. The epoch bumps every time the
+/// member set is rebuilt (a dead rank replaced by a re-joined worker).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Membership {
+    /// Monotonic epoch counter; 0 for the founding membership.
+    pub epoch: u64,
+    /// Participating ranks, ascending.
+    pub ranks: Vec<usize>,
+}
+
+/// Typed panic payload unwound through a rank's iteration loop when a
+/// collective peer vanished. Elastic loops catch it (via
+/// `std::panic::catch_unwind`) and rebuild membership; fixed-membership
+/// runs let it propagate to the driver, where
+/// [`crate::nmf::job`]'s panic handling turns it back into an error.
+#[derive(Debug, Clone)]
+pub struct PeerLostSignal {
+    /// The lost rank, when a single peer died; `None` when every peer
+    /// disconnected at once.
+    pub peer: Option<usize>,
+    /// Human-readable failure description (carries the original transport
+    /// error, marker included).
+    pub detail: String,
+}
+
+/// Typed panic payload raised by a scripted [`sim::FaultPlan`] kill: the
+/// rank abandons its iteration mid-run exactly as a crashed process would,
+/// and its dropped [`sim::SimComm`] closes the peer links. The in-process
+/// driver catches this signal and re-joins the rank as a replacement
+/// worker.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultKillSignal {
+    /// The killed rank.
+    pub rank: usize,
+    /// The iteration boundary the kill fired at.
+    pub iteration: usize,
+}
 
 /// A tagged point-to-point message.
 #[derive(Debug, Clone)]
@@ -102,6 +170,7 @@ pub enum Timing {
 /// were started, and every pending exchange must be waited before the
 /// next blocking `exchange` call.
 pub struct PendingExchange {
+    epoch: u64,
     seq: u64,
     clock: f64,
     own: Vec<f32>,
@@ -130,6 +199,7 @@ impl PendingExchange {
     pub(crate) fn ready(g: Gathered) -> PendingExchange {
         let nodes = g.parts.len();
         PendingExchange {
+            epoch: 0,
             seq: 0,
             clock: g.max_clock,
             own: Vec::new(),
@@ -141,6 +211,7 @@ impl PendingExchange {
 
     /// A pending exchange whose receives drain from a simulated cluster.
     pub(crate) fn sim(
+        epoch: u64,
         seq: u64,
         clock: f64,
         own: Vec<f32>,
@@ -148,11 +219,12 @@ impl PendingExchange {
         nodes: usize,
         cluster: Arc<sim::SimCluster>,
     ) -> PendingExchange {
-        PendingExchange { seq, clock, own, rank, nodes, source: PendingSource::Sim(cluster) }
+        PendingExchange { epoch, seq, clock, own, rank, nodes, source: PendingSource::Sim(cluster) }
     }
 
     /// A pending exchange whose receives drain from a TCP inbox.
     pub(crate) fn tcp(
+        epoch: u64,
         seq: u64,
         clock: f64,
         own: Vec<f32>,
@@ -161,14 +233,22 @@ impl PendingExchange {
         inbox: Arc<Inbox>,
         timeout: Option<Duration>,
     ) -> PendingExchange {
-        PendingExchange { seq, clock, own, rank, nodes, source: PendingSource::Tcp { inbox, timeout } }
+        PendingExchange {
+            epoch,
+            seq,
+            clock,
+            own,
+            rank,
+            nodes,
+            source: PendingSource::Tcp { inbox, timeout },
+        }
     }
 
     /// Block until every rank's round-`seq` payload has arrived; return all
     /// payloads in rank order plus the max clock (exactly the blocking
     /// [`Communicator::exchange`] contract).
     pub fn wait(self) -> Result<Gathered> {
-        let PendingExchange { seq, clock, own, rank, nodes, source } = self;
+        let PendingExchange { epoch, seq, clock, own, rank, nodes, source } = self;
         match source {
             PendingSource::Ready(g) => Ok(g),
             PendingSource::Sim(cluster) => {
@@ -180,14 +260,7 @@ impl PendingExchange {
                     if r == rank {
                         parts.push(own.take().unwrap());
                     } else {
-                        let msg = inbox.recv_coll(r, None)?;
-                        if msg.tag != seq {
-                            crate::bail!(
-                                "collective sequence skew: rank {} sent round {}, expected {seq}",
-                                r,
-                                msg.tag
-                            );
-                        }
+                        let msg = recv_collective(inbox, r, epoch, seq, None)?;
                         max_clock = max_clock.max(msg.sent_at);
                         parts.push(msg.payload);
                     }
@@ -202,16 +275,8 @@ impl PendingExchange {
                     if peer == rank {
                         parts.push(own.take().unwrap());
                     } else {
-                        let msg = inbox
-                            .recv_coll(peer, timeout)
+                        let msg = recv_collective(&inbox, peer, epoch, seq, timeout)
                             .with_context(|| format!("collective round {seq}, rank {rank}"))?;
-                        if msg.tag != seq {
-                            crate::bail!(
-                                "collective sequence skew: rank {peer} is at round {}, \
-                                 local round {seq}",
-                                msg.tag
-                            );
-                        }
                         max_clock = max_clock.max(msg.sent_at);
                         parts.push(msg.payload);
                     }
@@ -219,6 +284,38 @@ impl PendingExchange {
                 Ok(Gathered { parts, max_clock })
             }
         }
+    }
+}
+
+/// Drain the next collective frame from `from` that belongs to the local
+/// `(epoch, seq)` round. Stale frames from an older epoch — leftovers of a
+/// round that a rank death aborted before everyone consumed it — are
+/// silently skipped; a frame from a *newer* epoch or a different round of
+/// the same epoch is a protocol error (some rank ran ahead).
+pub(crate) fn recv_collective(
+    inbox: &Inbox,
+    from: usize,
+    epoch: u64,
+    seq: u64,
+    timeout: Option<Duration>,
+) -> Result<P2pMsg> {
+    loop {
+        let msg = inbox.recv_coll(from, timeout)?;
+        let (e, s) = split_epoch_tag(msg.tag);
+        if e < epoch {
+            continue; // stale: aborted round from before the last rebuild
+        }
+        if e > epoch {
+            crate::bail!(
+                "membership epoch skew: rank {from} is at epoch {e}, local epoch {epoch}"
+            );
+        }
+        if s != seq {
+            crate::bail!(
+                "collective sequence skew: rank {from} is at round {s}, local round {seq}"
+            );
+        }
+        return Ok(msg);
     }
 }
 
@@ -290,6 +387,35 @@ pub trait Communicator {
     fn barrier(&mut self, clock: f64) -> Result<f64> {
         Ok(self.exchange(clock, &[])?.max_clock)
     }
+
+    /// The current membership view. Fixed-membership backends report
+    /// epoch 0 with every rank present.
+    fn membership(&self) -> Membership {
+        Membership { epoch: self.epoch(), ranks: (0..self.nodes()).collect() }
+    }
+
+    /// The current membership epoch (0 until the first rebuild).
+    fn epoch(&self) -> u64 {
+        0
+    }
+
+    /// Survivor side of an elastic membership change: block until every
+    /// dead rank has been replaced by a re-joined worker, then bump the
+    /// epoch and reset the collective sequence. Errors (typed, bounded by
+    /// the backend's re-join timeout) if fewer than `min_ranks` ranks
+    /// survive or no replacement arrives in time.
+    ///
+    /// Backends without elastic support refuse outright.
+    fn rebuild(&mut self, _min_ranks: usize) -> Result<Membership> {
+        crate::bail!("this transport does not support membership epochs")
+    }
+
+    /// Scripted fault hook, polled by elastic iteration loops at every
+    /// iteration boundary. The simulated backend consults its
+    /// [`sim::FaultPlan`] here and unwinds with a [`FaultKillSignal`] when
+    /// this rank is scheduled to die at `iteration`; other backends do
+    /// nothing (real processes die by exiting).
+    fn fault_check(&mut self, _iteration: usize) {}
 }
 
 // ---------------------------------------------------------------------------
@@ -302,6 +428,7 @@ pub trait Communicator {
 /// the asynchronous mailbox traffic interleave with synchronous collectives
 /// without corrupting either.
 pub(crate) struct Inbox {
+    me: usize,
     state: Mutex<InboxState>,
     cv: Condvar,
 }
@@ -327,6 +454,7 @@ impl Inbox {
             closed[me] = true;
         }
         Inbox {
+            me,
             state: Mutex::new(InboxState {
                 coll: (0..n).map(|_| VecDeque::new()).collect(),
                 p2p: (0..n).map(|_| VecDeque::new()).collect(),
@@ -370,6 +498,28 @@ impl Inbox {
         self.cv.notify_all();
     }
 
+    /// Re-admit a peer after an elastic re-join: clear its disconnected
+    /// flag and drop any stale frames the dead incarnation left behind.
+    pub(crate) fn reopen(&self, from: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.closed[from] = false;
+        st.coll[from].clear();
+        st.p2p[from].clear();
+        self.cv.notify_all();
+    }
+
+    /// Ranks currently marked disconnected (own slot excluded — it is
+    /// always closed by construction).
+    pub(crate) fn closed_peers(&self) -> Vec<usize> {
+        let st = self.state.lock().unwrap();
+        st.closed
+            .iter()
+            .enumerate()
+            .filter(|&(r, &c)| c && r != self.me)
+            .map(|(r, _)| r)
+            .collect()
+    }
+
     /// Next collective frame from `from`, FIFO.
     pub(crate) fn recv_coll(&self, from: usize, timeout: Option<Duration>) -> Result<P2pMsg> {
         self.wait(timeout, |st| {
@@ -377,7 +527,10 @@ impl Inbox {
                 return Some(Ok(m));
             }
             if st.closed[from] {
-                return Some(Err(crate::err!("peer {from} disconnected mid-collective")));
+                return Some(Err(crate::error::Error::peer_lost(
+                    from,
+                    format_args!("peer {from} disconnected mid-collective"),
+                )));
             }
             None
         })
@@ -390,7 +543,10 @@ impl Inbox {
                 return Some(Ok(m));
             }
             if st.closed[from] {
-                return Some(Err(crate::err!("peer {from} disconnected")));
+                return Some(Err(crate::error::Error::peer_lost(
+                    from,
+                    format_args!("peer {from} disconnected"),
+                )));
             }
             None
         })
@@ -406,7 +562,7 @@ impl Inbox {
                 }
             }
             if st.closed.iter().all(|&c| c) {
-                return Some(Err(crate::err!("all peers disconnected")));
+                return Some(Err(crate::error::Error::peer_lost_all("all peers disconnected")));
             }
             None
         })
@@ -503,6 +659,61 @@ mod tests {
         inbox.push_p2p(0, P2pMsg { from: 0, tag: 1, sent_at: 0.0, payload: vec![] });
         assert!(inbox.recv_p2p_from(0, None).is_err());
         assert!(inbox.recv_coll(0, None).is_err());
+    }
+
+    #[test]
+    fn epoch_tag_round_trips_and_epoch_zero_is_plain_seq() {
+        assert_eq!(epoch_tag(0, 41), 41);
+        let tag = epoch_tag(3, 12345);
+        assert_eq!(split_epoch_tag(tag), (3, 12345));
+        assert_ne!(tag, 12345);
+    }
+
+    #[test]
+    fn inbox_disconnect_errors_carry_peer_lost_markers() {
+        let inbox = Inbox::new(2, 1);
+        inbox.close(0);
+        let err = inbox.recv_coll(0, None).unwrap_err();
+        assert!(err.to_string().contains("peer 0 disconnected"), "{err}");
+        assert_eq!(err.lost_peer(), Some(Some(0)));
+        let err = inbox.recv_p2p_any(None).unwrap_err();
+        assert_eq!(err.lost_peer(), Some(None));
+    }
+
+    #[test]
+    fn inbox_reopen_readmits_peer_and_drops_stale_frames() {
+        let inbox = Inbox::new(3, 2);
+        inbox.push_coll(0, P2pMsg { from: 0, tag: 7, sent_at: 0.0, payload: vec![1.0] });
+        inbox.close(0);
+        assert_eq!(inbox.closed_peers(), vec![0]);
+        inbox.reopen(0);
+        assert!(inbox.closed_peers().is_empty());
+        // the stale pre-death frame is gone; a fresh one is readable
+        inbox.push_coll(0, P2pMsg { from: 0, tag: 9, sent_at: 0.0, payload: vec![2.0] });
+        assert_eq!(inbox.recv_coll(0, None).unwrap().tag, 9);
+    }
+
+    #[test]
+    fn recv_collective_skips_stale_epochs_and_rejects_skew() {
+        let inbox = Inbox::new(2, 1);
+        // a leftover frame from epoch 0 round 5, then the real epoch 1 round 0
+        inbox.push_coll(0, P2pMsg { from: 0, tag: epoch_tag(0, 5), sent_at: 0.0, payload: vec![] });
+        inbox.push_coll(
+            0,
+            P2pMsg { from: 0, tag: epoch_tag(1, 0), sent_at: 0.0, payload: vec![3.0] },
+        );
+        let got = recv_collective(&inbox, 0, 1, 0, None).unwrap();
+        assert_eq!(got.payload, vec![3.0]);
+
+        // a frame from a *future* epoch is a protocol error
+        inbox.push_coll(0, P2pMsg { from: 0, tag: epoch_tag(2, 0), sent_at: 0.0, payload: vec![] });
+        let err = recv_collective(&inbox, 0, 1, 1, None).unwrap_err();
+        assert!(err.to_string().contains("epoch skew"), "{err}");
+
+        // same epoch, wrong round: sequence skew
+        inbox.push_coll(0, P2pMsg { from: 0, tag: epoch_tag(1, 4), sent_at: 0.0, payload: vec![] });
+        let err = recv_collective(&inbox, 0, 1, 1, None).unwrap_err();
+        assert!(err.to_string().contains("sequence skew"), "{err}");
     }
 
     #[test]

@@ -13,14 +13,73 @@
 //! The virtual-clock / stall accounting itself lives in
 //! [`crate::dist::NodeCtx`]; this layer only transports the clock stamps.
 
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
 
-use super::{Communicator, Gathered, Inbox, P2pMsg, PendingExchange, Timing};
+use super::{
+    epoch_tag, recv_collective, Communicator, FaultKillSignal, Gathered, Inbox, Membership,
+    P2pMsg, PendingExchange, Timing,
+};
 use crate::error::Result;
 
-/// Shared state of one simulated cluster: an inbox per rank.
+/// A scripted fault schedule for the simulated cluster: "kill rank `r` at
+/// iteration boundary `k`". Each entry fires exactly once (consumed on
+/// fire), so a re-joined rank replaying the same iteration is not killed
+/// again — which is what makes every chaos scenario deterministic and
+/// seed-reproducible.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    kills: Vec<(usize, usize)>,
+}
+
+impl FaultPlan {
+    /// An empty plan (no scripted faults).
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Schedule rank `rank` to die at iteration boundary `iteration`.
+    pub fn kill(mut self, rank: usize, iteration: usize) -> FaultPlan {
+        self.kills.push((rank, iteration));
+        self
+    }
+
+    /// Whether the plan schedules anything at all.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+    }
+}
+
+/// Lifecycle of one rank slot in an elastic simulated cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum RankStatus {
+    /// Running (or never started — the founding state).
+    Alive,
+    /// Died mid-run (its [`SimComm`] was dropped while unwinding); the
+    /// slot is eligible for [`SimComm::join`].
+    Dead,
+    /// Completed its run normally; the slot cannot be re-joined.
+    Finished,
+    /// A replacement claimed the slot and is waiting for the survivors'
+    /// rebuild to admit it.
+    Joining,
+}
+
+struct EpochState {
+    epoch: u64,
+    status: Vec<RankStatus>,
+    /// Which Alive ranks are parked in [`Communicator::rebuild`].
+    waiting: Vec<bool>,
+}
+
+/// Shared state of one simulated cluster: an inbox per rank, plus the
+/// elastic-membership epoch machinery and the scripted fault plan.
 pub struct SimCluster {
     inboxes: Vec<Inbox>,
+    epochs: Mutex<EpochState>,
+    epoch_cv: Condvar,
+    faults: Mutex<Vec<(usize, usize)>>,
+    rejoin_timeout: Mutex<Duration>,
 }
 
 impl SimCluster {
@@ -28,12 +87,38 @@ impl SimCluster {
     /// [`SimComm::new`].
     pub fn new(n: usize) -> Arc<SimCluster> {
         assert!(n > 0, "cluster needs at least one rank");
-        Arc::new(SimCluster { inboxes: (0..n).map(|r| Inbox::new(n, r)).collect() })
+        Arc::new(SimCluster {
+            inboxes: (0..n).map(|r| Inbox::new(n, r)).collect(),
+            epochs: Mutex::new(EpochState {
+                epoch: 0,
+                status: vec![RankStatus::Alive; n],
+                waiting: vec![false; n],
+            }),
+            epoch_cv: Condvar::new(),
+            faults: Mutex::new(Vec::new()),
+            rejoin_timeout: Mutex::new(Duration::from_secs(30)),
+        })
     }
 
     /// Cluster size.
     pub fn nodes(&self) -> usize {
         self.inboxes.len()
+    }
+
+    /// Install a scripted fault plan (replaces any previous one).
+    pub fn set_fault_plan(&self, plan: FaultPlan) {
+        *self.faults.lock().unwrap() = plan.kills;
+    }
+
+    /// Bound how long a survivor's rebuild (and a joiner's admission wait)
+    /// may block before failing with a typed timeout. Default 30s.
+    pub fn set_rejoin_timeout(&self, t: Duration) {
+        *self.rejoin_timeout.lock().unwrap() = t;
+    }
+
+    fn rejoin_deadline(&self) -> (Instant, Duration) {
+        let t = *self.rejoin_timeout.lock().unwrap();
+        (Instant::now() + t, t)
     }
 
     /// Rank `r`'s inbox (for [`PendingExchange`] to drain deferred
@@ -50,6 +135,7 @@ impl SimCluster {
         for inbox in &self.inboxes {
             inbox.interrupt();
         }
+        self.epoch_cv.notify_all();
     }
 }
 
@@ -59,13 +145,59 @@ pub struct SimComm {
     cluster: Arc<SimCluster>,
     /// Collective round counter (sanity check against protocol skew).
     seq: u64,
+    /// Membership epoch this endpoint currently speaks.
+    epoch: u64,
 }
 
 impl SimComm {
     /// Endpoint for `rank` of `cluster`.
     pub fn new(rank: usize, cluster: Arc<SimCluster>) -> SimComm {
         assert!(rank < cluster.nodes(), "rank {rank} outside cluster");
-        SimComm { rank, cluster, seq: 0 }
+        SimComm { rank, cluster, seq: 0, epoch: 0 }
+    }
+
+    /// Claim a dead rank's slot as a replacement worker and block until
+    /// the survivors' [`Communicator::rebuild`] admits it into the next
+    /// membership epoch. Typed errors — never a hang — for a slot that is
+    /// still alive (double-join), already finished, or already being
+    /// re-joined, and for an admission that outwaits the cluster's
+    /// re-join timeout.
+    pub fn join(cluster: &Arc<SimCluster>, rank: usize) -> Result<SimComm> {
+        if rank >= cluster.nodes() {
+            crate::bail!("cannot join as rank {rank}: cluster has {} ranks", cluster.nodes());
+        }
+        let (deadline, budget) = cluster.rejoin_deadline();
+        let mut st = cluster.epochs.lock().unwrap();
+        match st.status[rank] {
+            RankStatus::Dead => st.status[rank] = RankStatus::Joining,
+            RankStatus::Alive => {
+                crate::bail!("rank {rank} is still alive — double-join refused")
+            }
+            RankStatus::Joining => {
+                crate::bail!("rank {rank} is already re-joining — double-join refused")
+            }
+            RankStatus::Finished => {
+                crate::bail!("rank {rank} already finished its run — nothing to re-join")
+            }
+        }
+        cluster.epoch_cv.notify_all();
+        loop {
+            if st.status[rank] == RankStatus::Alive {
+                let epoch = st.epoch;
+                drop(st);
+                return Ok(SimComm { rank, cluster: cluster.clone(), seq: 0, epoch });
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                st.status[rank] = RankStatus::Dead; // release the claim
+                crate::bail!(
+                    "re-join of rank {rank} timed out after {budget:?} \
+                     waiting for survivors to rebuild"
+                );
+            }
+            let (guard, _) = cluster.epoch_cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
     }
 }
 
@@ -85,6 +217,7 @@ impl Communicator for SimComm {
     fn exchange(&mut self, clock: f64, payload: &[f32]) -> Result<Gathered> {
         let n = self.nodes();
         let seq = self.seq;
+        let tag = epoch_tag(self.epoch, seq);
         self.seq += 1;
         if n == 1 {
             return Ok(Gathered { parts: vec![payload.to_vec()], max_clock: clock });
@@ -93,7 +226,7 @@ impl Communicator for SimComm {
             if r != self.rank {
                 inbox.push_coll(
                     self.rank,
-                    P2pMsg { from: self.rank, tag: seq, sent_at: clock, payload: payload.to_vec() },
+                    P2pMsg { from: self.rank, tag, sent_at: clock, payload: payload.to_vec() },
                 );
             }
         }
@@ -104,14 +237,7 @@ impl Communicator for SimComm {
             if r == self.rank {
                 parts.push(payload.to_vec());
             } else {
-                let msg = own.recv_coll(r, None)?;
-                if msg.tag != seq {
-                    crate::bail!(
-                        "collective sequence skew: rank {} sent round {}, expected {seq}",
-                        r,
-                        msg.tag
-                    );
-                }
+                let msg = recv_collective(own, r, self.epoch, seq, None)?;
                 max_clock = max_clock.max(msg.sent_at);
                 parts.push(msg.payload);
             }
@@ -122,6 +248,7 @@ impl Communicator for SimComm {
     fn exchange_start(&mut self, clock: f64, payload: &[f32]) -> Result<PendingExchange> {
         let n = self.nodes();
         let seq = self.seq;
+        let tag = epoch_tag(self.epoch, seq);
         self.seq += 1;
         if n == 1 {
             return Ok(PendingExchange::ready(Gathered {
@@ -135,11 +262,19 @@ impl Communicator for SimComm {
             if r != self.rank {
                 inbox.push_coll(
                     self.rank,
-                    P2pMsg { from: self.rank, tag: seq, sent_at: clock, payload: payload.to_vec() },
+                    P2pMsg { from: self.rank, tag, sent_at: clock, payload: payload.to_vec() },
                 );
             }
         }
-        Ok(PendingExchange::sim(seq, clock, payload.to_vec(), self.rank, n, self.cluster.clone()))
+        Ok(PendingExchange::sim(
+            self.epoch,
+            seq,
+            clock,
+            payload.to_vec(),
+            self.rank,
+            n,
+            self.cluster.clone(),
+        ))
     }
 
     fn send(&mut self, to: usize, tag: u64, clock: f64, payload: &[f32]) -> Result<()> {
@@ -160,6 +295,127 @@ impl Communicator for SimComm {
     fn recv_any(&mut self) -> Result<P2pMsg> {
         self.cluster.inboxes[self.rank].recv_p2p_any(None)
     }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn membership(&self) -> Membership {
+        let st = self.cluster.epochs.lock().unwrap();
+        let ranks = st
+            .status
+            .iter()
+            .enumerate()
+            .filter(|&(_, &s)| s != RankStatus::Dead)
+            .map(|(r, _)| r)
+            .collect();
+        Membership { epoch: self.epoch, ranks }
+    }
+
+    fn fault_check(&mut self, iteration: usize) {
+        let fire = {
+            let mut faults = self.cluster.faults.lock().unwrap();
+            match faults.iter().position(|&(r, it)| r == self.rank && it == iteration) {
+                Some(i) => {
+                    faults.remove(i);
+                    true
+                }
+                None => false,
+            }
+        };
+        if fire {
+            std::panic::panic_any(FaultKillSignal { rank: self.rank, iteration });
+        }
+    }
+
+    /// Survivor side of an elastic membership change: park until every
+    /// dead rank's slot has a [`SimComm::join`] claimant and every
+    /// surviving rank has parked here too, then (exactly one arbitrary
+    /// survivor performs the transition) bump the epoch, admit the
+    /// joiners, reset their inboxes, and resume everyone at round 0 of the
+    /// new epoch.
+    fn rebuild(&mut self, min_ranks: usize) -> Result<Membership> {
+        let entry_epoch = self.epoch;
+        let (deadline, budget) = self.cluster.rejoin_deadline();
+        let mut st = self.cluster.epochs.lock().unwrap();
+        st.waiting[self.rank] = true;
+        self.cluster.epoch_cv.notify_all();
+        loop {
+            // Someone already completed the transition while we slept.
+            if st.epoch > entry_epoch {
+                st.waiting[self.rank] = false;
+                self.epoch = st.epoch;
+                self.seq = 0;
+                break;
+            }
+            let alive =
+                st.status.iter().filter(|&&s| s == RankStatus::Alive).count();
+            if alive < min_ranks {
+                st.waiting[self.rank] = false;
+                crate::bail!(
+                    "cluster fell to {alive} surviving rank(s), below min_ranks {min_ranks}"
+                );
+            }
+            if let Some(r) = st.status.iter().position(|&s| s == RankStatus::Finished) {
+                st.waiting[self.rank] = false;
+                crate::bail!(
+                    "rank {r} already finished its run — membership cannot be rebuilt mid-exit"
+                );
+            }
+            let no_dead = st.status.iter().all(|&s| s != RankStatus::Dead);
+            let all_parked = st
+                .status
+                .iter()
+                .enumerate()
+                .all(|(r, &s)| s != RankStatus::Alive || st.waiting[r]);
+            if no_dead && all_parked {
+                // This survivor performs the transition for everyone.
+                st.epoch += 1;
+                for r in 0..st.status.len() {
+                    if st.status[r] == RankStatus::Joining {
+                        st.status[r] = RankStatus::Alive;
+                        // fresh mailbox for the joiner, and re-admit it
+                        // everywhere else
+                        for (i, inbox) in self.cluster.inboxes.iter().enumerate() {
+                            if i == r {
+                                for peer in 0..self.cluster.nodes() {
+                                    if peer != r {
+                                        inbox.reopen(peer);
+                                    }
+                                }
+                            } else {
+                                inbox.reopen(r);
+                            }
+                        }
+                    }
+                    st.waiting[r] = false;
+                }
+                self.epoch = st.epoch;
+                self.seq = 0;
+                self.cluster.epoch_cv.notify_all();
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                st.waiting[self.rank] = false;
+                let dead: Vec<usize> = st
+                    .status
+                    .iter()
+                    .enumerate()
+                    .filter(|&(_, &s)| s == RankStatus::Dead)
+                    .map(|(r, _)| r)
+                    .collect();
+                crate::bail!(
+                    "membership rebuild timed out after {budget:?}: \
+                     no replacement joined for rank(s) {dead:?}"
+                );
+            }
+            let (guard, _) = self.cluster.epoch_cv.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+        drop(st);
+        Ok(self.membership())
+    }
 }
 
 impl Drop for SimComm {
@@ -167,11 +423,31 @@ impl Drop for SimComm {
     /// queued are still consumed first (FIFO-before-closed), so a clean
     /// exit is unaffected — but a rank that dies (panics) mid-protocol now
     /// fails its peers' pending receives instead of deadlocking the
-    /// cluster (mirrors the TCP backend's reader-EOF behaviour).
+    /// cluster (mirrors the TCP backend's reader-EOF behaviour). The
+    /// epoch ledger records *how* the endpoint went away: unwinding means
+    /// the rank died and its slot is eligible for [`SimComm::join`]; a
+    /// normal drop means it finished.
     fn drop(&mut self) {
+        // Status flip and inbox closes are one atomic event under the
+        // epoch lock: a replacement can only claim the slot (status Dead)
+        // after every peer link is closed, and the rebuild transition's
+        // reopens also run under this lock — so a straggling close can
+        // never clobber a freshly re-admitted slot.
+        let mut st = self.cluster.epochs.lock().unwrap();
+        // Only a live incarnation may retire the slot — a failed joiner's
+        // endpoint never got admitted.
+        if st.status[self.rank] == RankStatus::Alive {
+            st.status[self.rank] = if std::thread::panicking() {
+                RankStatus::Dead
+            } else {
+                RankStatus::Finished
+            };
+        }
         for inbox in &self.cluster.inboxes {
             inbox.close(self.rank);
         }
+        drop(st);
+        self.cluster.epoch_cv.notify_all();
     }
 }
 
@@ -284,6 +560,131 @@ mod tests {
         for (a, b, c, d) in results {
             assert_eq!((a, b, c, d), (0.0, 1.0, 10.0, 11.0));
         }
+    }
+
+    /// Kill a live endpoint the way a scripted fault does: unwind with a
+    /// [`FaultKillSignal`] while the comm is in scope, so its `Drop` runs
+    /// with `thread::panicking() == true` and the slot is marked Dead.
+    fn die_holding(comm: SimComm) {
+        let _ = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _hold = comm;
+            std::panic::panic_any(FaultKillSignal { rank: 0, iteration: 0 });
+        }));
+    }
+
+    #[test]
+    fn dead_rank_rejoins_at_next_epoch_and_stale_frames_are_skipped() {
+        let cluster = SimCluster::new(2);
+        let c0 = cluster.clone();
+        let c1 = cluster.clone();
+        let survivor = std::thread::spawn(move || {
+            let mut comm = SimComm::new(0, c0);
+            let g = comm.exchange(0.0, &[10.0]).unwrap();
+            assert_eq!(g.parts[1], vec![11.0]);
+            // rank 1 dies before answering round 1 → typed peer loss
+            let err = loop {
+                match comm.exchange(0.0, &[20.0]) {
+                    Err(e) => break e,
+                    Ok(_) => panic!("round 1 should fail once rank 1 dies"),
+                }
+            };
+            assert_eq!(err.lost_peer(), Some(Some(1)));
+            let m = comm.rebuild(1).unwrap();
+            assert_eq!(m.epoch, 1);
+            assert_eq!(m.ranks, vec![0, 1]);
+            // round 0 of epoch 1 — the joiner's payload comes through even
+            // though our stale round-1 deposit from epoch 0 is still queued
+            let g = comm.exchange(0.0, &[30.0]).unwrap();
+            assert_eq!(g.parts[1], vec![31.0]);
+            assert_eq!(comm.epoch(), 1);
+        });
+        let dying = std::thread::spawn(move || {
+            let mut comm = SimComm::new(1, c1.clone());
+            let g = comm.exchange(0.0, &[11.0]).unwrap();
+            assert_eq!(g.parts[0], vec![10.0]);
+            die_holding(comm);
+            // ... and come back as the replacement
+            let mut comm = SimComm::join(&c1, 1).unwrap();
+            assert_eq!(comm.epoch(), 1);
+            let g = comm.exchange(0.0, &[31.0]).unwrap();
+            assert_eq!(g.parts[0], vec![30.0]);
+        });
+        survivor.join().unwrap();
+        dying.join().unwrap();
+    }
+
+    #[test]
+    fn join_of_live_rank_is_a_typed_error() {
+        let cluster = SimCluster::new(2);
+        let _keep = SimComm::new(0, cluster.clone());
+        let err = SimComm::join(&cluster, 0).unwrap_err();
+        assert!(err.to_string().contains("double-join"), "{err}");
+    }
+
+    #[test]
+    fn join_of_finished_rank_is_a_typed_error() {
+        let cluster = SimCluster::new(1);
+        drop(SimComm::new(0, cluster.clone())); // clean exit → Finished
+        let err = SimComm::join(&cluster, 0).unwrap_err();
+        assert!(err.to_string().contains("already finished"), "{err}");
+    }
+
+    #[test]
+    fn double_join_of_claimed_slot_is_refused() {
+        let cluster = SimCluster::new(2);
+        cluster.set_rejoin_timeout(Duration::from_secs(5));
+        die_holding(SimComm::new(1, cluster.clone()));
+        let c1 = cluster.clone();
+        let (hold_tx, hold_rx) = std::sync::mpsc::channel::<()>();
+        let first = std::thread::spawn(move || {
+            let mut comm = SimComm::join(&c1, 1).unwrap();
+            comm.exchange(0.0, &[1.0]).unwrap();
+            hold_rx.recv().unwrap(); // keep the slot alive until checked
+        });
+        let mut comm = SimComm::new(0, cluster.clone());
+        comm.rebuild(1).unwrap();
+        comm.exchange(0.0, &[0.0]).unwrap();
+        // the admitted replacement owns the slot — a second join is refused
+        let err = SimComm::join(&cluster, 1).unwrap_err();
+        assert!(err.to_string().contains("double-join"), "{err}");
+        hold_tx.send(()).unwrap();
+        first.join().unwrap();
+    }
+
+    #[test]
+    fn rebuild_without_replacement_times_out_with_typed_error() {
+        let cluster = SimCluster::new(2);
+        cluster.set_rejoin_timeout(Duration::from_millis(60));
+        die_holding(SimComm::new(1, cluster.clone()));
+        let mut comm = SimComm::new(0, cluster.clone());
+        let err = comm.rebuild(1).unwrap_err();
+        assert!(err.to_string().contains("rebuild timed out"), "{err}");
+        assert_eq!(comm.epoch(), 0, "epoch must not advance on a failed rebuild");
+    }
+
+    #[test]
+    fn rebuild_below_min_ranks_is_a_typed_error() {
+        let cluster = SimCluster::new(3);
+        die_holding(SimComm::new(1, cluster.clone()));
+        die_holding(SimComm::new(2, cluster.clone()));
+        let mut comm = SimComm::new(0, cluster.clone());
+        let err = comm.rebuild(2).unwrap_err();
+        assert!(err.to_string().contains("below min_ranks"), "{err}");
+    }
+
+    #[test]
+    fn fault_plan_entries_fire_exactly_once() {
+        let cluster = SimCluster::new(1);
+        cluster.set_fault_plan(FaultPlan::new().kill(0, 3));
+        let mut comm = SimComm::new(0, cluster.clone());
+        comm.fault_check(2); // not scheduled — no-op
+        let unwound = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            comm.fault_check(3)
+        }));
+        let sig = unwound.unwrap_err().downcast::<FaultKillSignal>().unwrap();
+        assert_eq!((sig.rank, sig.iteration), (0, 3));
+        // consumed: the replayed boundary does not re-kill
+        comm.fault_check(3);
     }
 
     #[test]

@@ -37,14 +37,28 @@
 //!
 //! Failure paths (handshake mismatch, peer death, receive timeout) all
 //! surface as [`crate::error::Error`]; a worker that loses a peer
-//! mid-collective aborts with a diagnostic rather than hanging.
+//! mid-collective fails with a typed peer-lost diagnostic rather than
+//! hanging.
+//!
+//! ## Elastic membership
+//!
+//! With [`TcpOptions::elastic`] the mesh listener stays open after
+//! bootstrap. When a peer dies, survivors call [`Communicator::rebuild`]:
+//! each parks on its listener and admits a replacement worker that dials
+//! back in via [`TcpComm::connect_join`] (a `Join` frame answered by an
+//! `EpochAck` carrying the new epoch). Collective frames are tagged
+//! `epoch << 48 | seq`, so stragglers from the aborted round of the old
+//! epoch are skipped on receive instead of corrupting the new one.
 
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use super::wire::{self, decode_text, encode_text, Frame, FrameKind, Precision};
-use super::{Communicator, Gathered, Inbox, P2pMsg, PendingExchange, Timing};
+use super::{
+    epoch_tag, recv_collective, Communicator, Gathered, Inbox, Membership, P2pMsg,
+    PendingExchange, Timing,
+};
 use crate::error::{Context, Result};
 
 /// Timeouts and addressing for the TCP backend.
@@ -65,6 +79,10 @@ pub struct TcpOptions {
     /// binding a wildcard address (`0.0.0.0` / `::`), or when peers reach
     /// this host through NAT/port-forwarding.
     pub advertise: Option<String>,
+    /// Keep the mesh listener open after bootstrap so this endpoint can
+    /// accept elastic re-joins ([`Communicator::rebuild`]); off by default
+    /// — fixed-membership runs close it once the mesh is formed.
+    pub elastic: bool,
 }
 
 impl Default for TcpOptions {
@@ -74,6 +92,7 @@ impl Default for TcpOptions {
             io_timeout: Some(Duration::from_secs(120)),
             bind: None,
             advertise: None,
+            elastic: false,
         }
     }
 }
@@ -140,7 +159,15 @@ pub struct TcpComm {
     inbox: Arc<Inbox>,
     /// Collective round counter (skew detector).
     seq: u64,
+    /// Membership epoch this endpoint currently speaks (0 at bootstrap).
+    epoch: u64,
     io_timeout: Option<Duration>,
+    /// Handshake deadline budget (joiner-side reads, survivor re-join
+    /// dial acceptance).
+    connect_timeout: Duration,
+    /// Mesh listener retained in elastic mode so survivors can accept
+    /// re-joining replacements; `None` on fixed-membership endpoints.
+    listener: Option<TcpListener>,
     /// Connection back to the coordinator (result reporting); taken by the
     /// worker via [`TcpComm::take_rendezvous`].
     rendezvous: Option<TcpStream>,
@@ -293,7 +320,133 @@ impl TcpComm {
             writers,
             inbox,
             seq: 0,
+            epoch: 0,
             io_timeout: opts.io_timeout,
+            connect_timeout: opts.connect_timeout,
+            listener: opts.elastic.then_some(listener),
+            rendezvous: Some(rdv),
+        })
+    }
+
+    /// Re-join a running elastic cluster as a replacement for a dead rank:
+    /// dial the coordinator with a `Join` hello, receive the (updated)
+    /// address-book roster, then dial every survivor's mesh listener and
+    /// collect their `EpochAck`s. The survivors are parked in
+    /// [`Communicator::rebuild`] when this succeeds, and everyone resumes
+    /// at round 0 of the acknowledged epoch.
+    ///
+    /// `claim` pins the epoch this worker believes is forming (`None` =
+    /// accept whatever the survivors are at); a mismatched claim is
+    /// refused by the survivors with a typed error.
+    pub fn connect_join(
+        rendezvous_addr: &str,
+        rank: usize,
+        nodes: usize,
+        opts: &TcpOptions,
+        claim: Option<u64>,
+    ) -> Result<TcpComm> {
+        if rank >= nodes {
+            crate::bail!("rank {rank} outside cluster of {nodes}");
+        }
+        let deadline = Instant::now() + opts.connect_timeout;
+        let claim_tag = claim.unwrap_or(u64::MAX);
+
+        let (bind_ip, bind_port) =
+            split_bind(opts.bind.as_deref().unwrap_or("127.0.0.1:0"))?;
+        let listener = TcpListener::bind((bind_ip.as_str(), bind_port))
+            .with_context(|| format!("binding mesh listener on {bind_ip}:{bind_port}"))?;
+        let port = listener.local_addr().context("mesh listener addr")?.port();
+        let advert = advertised_addr(opts, &bind_ip, port)?;
+
+        let mut rdv = dial_retry(rendezvous_addr, deadline)
+            .with_context(|| format!("re-joining rank {rank} reaching coordinator"))?;
+        rdv.set_nodelay(true).ok();
+        rdv.set_read_timeout(Some(opts.connect_timeout)).ok();
+        wire::write_preamble(&mut rdv, rank as u16)?;
+        wire::write_frame(
+            &mut rdv,
+            &Frame::new(FrameKind::Join, claim_tag, 0.0, encode_text(&advert)),
+        )
+        .context("sending join hello")?;
+
+        let roster = wire::read_frame(&mut rdv).context("waiting for re-join address book")?;
+        if roster.kind == FrameKind::Error {
+            crate::bail!("coordinator refused the join: {}", decode_text(&roster.payload));
+        }
+        if roster.kind != FrameKind::Roster {
+            crate::bail!("expected the address-book roster, got {:?}", roster.kind);
+        }
+        let book: Vec<String> =
+            decode_text(&roster.payload).split(',').map(str::to_string).collect();
+        if book.len() != nodes {
+            crate::bail!("address book lists {} ranks, expected {nodes}", book.len());
+        }
+
+        // dial every survivor; each answers with an EpochAck (or a typed
+        // refusal in an Error frame)
+        let mut sockets: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
+        let mut acked_epoch: Option<u64> = None;
+        for (peer, peer_addr) in book.iter().enumerate() {
+            if peer == rank {
+                continue;
+            }
+            let mut s = dial_retry(peer_addr, deadline).with_context(|| {
+                format!("re-joining rank {rank} dialing survivor {peer} at {peer_addr}")
+            })?;
+            s.set_nodelay(true).ok();
+            s.set_read_timeout(Some(opts.connect_timeout)).ok();
+            wire::write_preamble(&mut s, rank as u16)?;
+            wire::write_frame(&mut s, &Frame::new(FrameKind::Join, claim_tag, 0.0, Vec::new()))
+                .with_context(|| format!("sending join request to survivor {peer}"))?;
+            let ack = wire::read_frame(&mut s)
+                .with_context(|| format!("waiting for epoch ack from survivor {peer}"))?;
+            match ack.kind {
+                FrameKind::EpochAck => {}
+                FrameKind::Error => crate::bail!(
+                    "survivor {peer} refused the join: {}",
+                    decode_text(&ack.payload)
+                ),
+                other => crate::bail!("expected an epoch ack from survivor {peer}, got {other:?}"),
+            }
+            if let Some(e) = acked_epoch {
+                if e != ack.tag {
+                    crate::bail!(
+                        "survivors disagree on the forming epoch ({e} vs {} from rank {peer})",
+                        ack.tag
+                    );
+                }
+            }
+            acked_epoch = Some(ack.tag);
+            s.set_read_timeout(None).ok();
+            sockets[peer] = Some(s);
+        }
+        let epoch = acked_epoch
+            .ok_or_else(|| crate::err!("re-join of a single-rank cluster has no survivors"))?;
+
+        let inbox = Arc::new(Inbox::new(nodes, rank));
+        let mut writers: Vec<Option<TcpStream>> = (0..nodes).map(|_| None).collect();
+        for (peer, sock) in sockets.into_iter().enumerate() {
+            if let Some(sock) = sock {
+                let reader = sock.try_clone().context("cloning peer socket")?;
+                writers[peer] = Some(sock);
+                let inbox2 = inbox.clone();
+                std::thread::Builder::new()
+                    .name(format!("dsanls-net-r{rank}p{peer}"))
+                    .spawn(move || reader_loop(reader, peer, inbox2))
+                    .context("spawning reader thread")?;
+            }
+        }
+
+        Ok(TcpComm {
+            rank,
+            nodes,
+            writers,
+            inbox,
+            seq: 0,
+            epoch,
+            io_timeout: opts.io_timeout,
+            connect_timeout: opts.connect_timeout,
+            listener: Some(listener), // a joiner is always elastic
             rendezvous: Some(rdv),
         })
     }
@@ -324,6 +477,41 @@ impl TcpComm {
     }
 }
 
+/// Survivor-side admission check for a re-join request. `claimed` is the
+/// epoch the joiner believes is forming (`u64::MAX` = wildcard, accept
+/// whatever the survivors decide).
+fn validate_join(
+    peer: usize,
+    claimed: u64,
+    next_epoch: u64,
+    nodes: usize,
+    dead: &[usize],
+    joined: &[usize],
+) -> Result<()> {
+    if peer >= nodes {
+        crate::bail!("join from unknown rank {peer}, cluster size is {nodes}");
+    }
+    if joined.contains(&peer) {
+        crate::bail!("rank {peer} already re-joined this epoch — double-join refused");
+    }
+    if !dead.contains(&peer) {
+        crate::bail!("rank {peer} is still connected — double-join refused");
+    }
+    if claimed != u64::MAX && claimed != next_epoch {
+        if claimed < next_epoch {
+            crate::bail!(
+                "stale-epoch join: rank {peer} claims epoch {claimed}, cluster is \
+                 forming epoch {next_epoch}"
+            );
+        }
+        crate::bail!(
+            "future-epoch join: rank {peer} claims epoch {claimed}, cluster is \
+             forming epoch {next_epoch}"
+        );
+    }
+    Ok(())
+}
+
 impl Communicator for TcpComm {
     fn rank(&self) -> usize {
         self.rank
@@ -340,13 +528,17 @@ impl Communicator for TcpComm {
     fn exchange(&mut self, clock: f64, payload: &[f32]) -> Result<Gathered> {
         let seq = self.seq;
         self.seq += 1;
+        let tag = epoch_tag(self.epoch, seq);
         for peer in 0..self.nodes {
             if peer == self.rank {
                 continue;
             }
             let w = self.writer(peer)?;
-            wire::write_frame_parts(w, FrameKind::Collective, seq, clock, payload)
-                .with_context(|| format!("collective send to rank {peer}"))?;
+            // a failed write to a dead peer is a membership event, same as
+            // a failed read — the write side often notices first
+            wire::write_frame_parts(w, FrameKind::Collective, tag, clock, payload).map_err(
+                |e| crate::error::Error::peer_lost(peer, format_args!("collective send to rank {peer}: {e}")),
+            )?;
         }
         let mut parts: Vec<Vec<f32>> = Vec::with_capacity(self.nodes);
         let mut max_clock = clock;
@@ -355,16 +547,8 @@ impl Communicator for TcpComm {
                 parts.push(payload.to_vec());
                 continue;
             }
-            let msg = self
-                .inbox
-                .recv_coll(peer, self.io_timeout)
+            let msg = recv_collective(&self.inbox, peer, self.epoch, seq, self.io_timeout)
                 .with_context(|| format!("collective round {seq}, rank {}", self.rank))?;
-            if msg.tag != seq {
-                crate::bail!(
-                    "collective sequence skew: rank {peer} is at round {}, local round {seq}",
-                    msg.tag
-                );
-            }
             max_clock = max_clock.max(msg.sent_at);
             parts.push(msg.payload);
         }
@@ -374,6 +558,7 @@ impl Communicator for TcpComm {
     fn exchange_start(&mut self, clock: f64, payload: &[f32]) -> Result<PendingExchange> {
         let seq = self.seq;
         self.seq += 1;
+        let tag = epoch_tag(self.epoch, seq);
         // sends go out now; the per-peer reader threads accumulate the
         // replies so wait() only blocks on stragglers
         for peer in 0..self.nodes {
@@ -381,10 +566,12 @@ impl Communicator for TcpComm {
                 continue;
             }
             let w = self.writer(peer)?;
-            wire::write_frame_parts(w, FrameKind::Collective, seq, clock, payload)
-                .with_context(|| format!("collective send to rank {peer}"))?;
+            wire::write_frame_parts(w, FrameKind::Collective, tag, clock, payload).map_err(
+                |e| crate::error::Error::peer_lost(peer, format_args!("collective send to rank {peer}: {e}")),
+            )?;
         }
         Ok(PendingExchange::tcp(
+            self.epoch,
             seq,
             clock,
             payload.to_vec(),
@@ -406,6 +593,7 @@ impl Communicator for TcpComm {
         }
         let seq = self.seq;
         self.seq += 1;
+        let tag = epoch_tag(self.epoch, seq);
         // encode once, fan the same wire bytes out to every peer
         let bytes = wire::quantize_payload(precision, payload);
         for peer in 0..self.nodes {
@@ -413,14 +601,16 @@ impl Communicator for TcpComm {
                 continue;
             }
             let w = self.writer(peer)?;
-            wire::write_quantized_frame(w, precision, seq, clock, &bytes)
-                .with_context(|| format!("collective send to rank {peer}"))?;
+            wire::write_quantized_frame(w, precision, tag, clock, &bytes).map_err(
+                |e| crate::error::Error::peer_lost(peer, format_args!("collective send to rank {peer}: {e}")),
+            )?;
         }
         // the local contribution must pass through the same codec the
         // peers decode with, or ranks would disagree on rank r's part
         let mut own = payload.to_vec();
         precision.round_trip_slice(&mut own);
         Ok(PendingExchange::tcp(
+            self.epoch,
             seq,
             clock,
             own,
@@ -429,6 +619,108 @@ impl Communicator for TcpComm {
             self.inbox.clone(),
             self.io_timeout,
         ))
+    }
+
+    fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    fn membership(&self) -> Membership {
+        let mut ranks: Vec<usize> = (0..self.nodes).collect();
+        let closed = self.inbox.closed_peers();
+        ranks.retain(|r| *r == self.rank || !closed.contains(r));
+        Membership { epoch: self.epoch, ranks }
+    }
+
+    fn rebuild(&mut self, min_ranks: usize) -> Result<Membership> {
+        let dead = self.inbox.closed_peers();
+        let alive = self.nodes - dead.len();
+        if alive < min_ranks {
+            crate::bail!(
+                "cluster fell to {alive} surviving rank(s), below min_ranks {min_ranks}"
+            );
+        }
+        let listener = self.listener.as_ref().ok_or_else(|| {
+            crate::err!("elastic membership is not enabled on this endpoint")
+        })?;
+        listener.set_nonblocking(true).context("mesh listener nonblocking")?;
+        let next_epoch = self.epoch + 1;
+        let budget = self.io_timeout.unwrap_or(self.connect_timeout);
+        let deadline = Instant::now() + budget;
+        let mut joined: Vec<usize> = Vec::new();
+        let mut pending: Vec<(usize, TcpStream)> = Vec::new();
+        // survivors park here accepting the replacement's re-dial; the
+        // joiner's connections queue in the listener backlog until we reach
+        // this loop, so no cross-rank coordination is needed
+        while joined.len() < dead.len() {
+            match listener.accept() {
+                Ok((mut s, _)) => {
+                    if s.set_nonblocking(false).is_err() {
+                        continue;
+                    }
+                    s.set_nodelay(true).ok();
+                    s.set_read_timeout(Some(self.connect_timeout)).ok();
+                    // a version-mismatched joiner is refused right here
+                    let peer = match wire::read_preamble(&mut s) {
+                        Ok(p) => p as usize,
+                        Err(_) => continue,
+                    };
+                    let frame = match wire::read_frame(&mut s) {
+                        Ok(f) if f.kind == FrameKind::Join => f,
+                        _ => continue,
+                    };
+                    match validate_join(peer, frame.tag, next_epoch, self.nodes, &dead, &joined)
+                    {
+                        Ok(()) => {
+                            let ack =
+                                Frame::new(FrameKind::EpochAck, next_epoch, 0.0, Vec::new());
+                            if wire::write_frame(&mut s, &ack).is_err() {
+                                continue;
+                            }
+                            s.set_read_timeout(None).ok();
+                            joined.push(peer);
+                            pending.push((peer, s));
+                        }
+                        Err(e) => {
+                            let refusal = Frame::new(
+                                FrameKind::Error,
+                                0,
+                                0.0,
+                                encode_text(&e.to_string()),
+                            );
+                            let _ = wire::write_frame(&mut s, &refusal);
+                        }
+                    }
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        crate::bail!(
+                            "membership rebuild timed out after {budget:?}: {}/{} \
+                             replacement(s) joined for dead rank(s) {dead:?}",
+                            joined.len(),
+                            dead.len()
+                        );
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(crate::err!("rebuild accept failed: {e}")),
+            }
+        }
+        for (peer, sock) in pending {
+            // reopen the inbox slot *before* the reader thread starts so the
+            // replacement's first frames land in a live queue
+            self.inbox.reopen(peer);
+            let reader = sock.try_clone().context("cloning replacement socket")?;
+            self.writers[peer] = Some(sock);
+            let inbox2 = self.inbox.clone();
+            std::thread::Builder::new()
+                .name(format!("dsanls-net-r{rank}p{peer}", rank = self.rank))
+                .spawn(move || reader_loop(reader, peer, inbox2))
+                .context("spawning replacement reader thread")?;
+        }
+        self.epoch = next_epoch;
+        self.seq = 0;
+        Ok(self.membership())
     }
 
     fn send(&mut self, to: usize, tag: u64, clock: f64, payload: &[f32]) -> Result<()> {
@@ -528,15 +820,29 @@ impl Rendezvous {
                     if rank >= nodes {
                         crate::bail!("worker announced rank {rank}, cluster size is {nodes}");
                     }
+                    let hello = wire::read_frame(&mut s).context("reading hello")?;
+                    s.set_read_timeout(None).ok();
+                    let mesh_addr = decode_text(&hello.payload);
+                    if hello.kind == FrameKind::Join {
+                        // a straggling joiner from an aborted elastic attempt
+                        // must not poison this rendezvous (the listener is
+                        // bound once and reused across launch retries) —
+                        // refuse it and keep waiting for real workers
+                        let refusal = Frame::new(
+                            FrameKind::Error,
+                            0,
+                            0.0,
+                            encode_text("no elastic join in flight"),
+                        );
+                        let _ = wire::write_frame(&mut s, &refusal);
+                        continue;
+                    }
                     if slots[rank].is_some() {
                         crate::bail!(
                             "two workers announced rank {rank} (rank collision — check the \
                              --rank each worker was started with)"
                         );
                     }
-                    let hello = wire::read_frame(&mut s).context("reading hello")?;
-                    s.set_read_timeout(None).ok();
-                    let mesh_addr = decode_text(&hello.payload);
                     if hello.kind != FrameKind::Hello || !mesh_addr.contains(':') {
                         crate::bail!("malformed hello from rank {rank}");
                     }
@@ -566,6 +872,72 @@ impl Rendezvous {
             out.push(WorkerConn { rank, stream: s, mesh_addr });
         }
         Ok(out)
+    }
+
+    /// Accept one elastic re-join handshake, if any arrives within `wait`:
+    /// a replacement worker dials with a `Join` frame carrying its fresh
+    /// mesh address, the coordinator patches the address book and replies
+    /// with the updated roster. Returns `Ok(None)` when nothing dialed in
+    /// (poll again), `Ok(Some(conn))` for an admitted joiner.
+    ///
+    /// Malformed or out-of-range joins are refused with an `Error` frame
+    /// and do not fail the coordinator.
+    pub fn accept_join(
+        &self,
+        book: &mut [String],
+        wait: Duration,
+    ) -> Result<Option<WorkerConn>> {
+        self.listener.set_nonblocking(true).context("rendezvous nonblocking")?;
+        let deadline = Instant::now() + wait;
+        loop {
+            match self.listener.accept() {
+                Ok((mut s, _)) => {
+                    s.set_nonblocking(false).context("joiner socket blocking")?;
+                    s.set_nodelay(true).ok();
+                    s.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                    // a version-mismatched joiner fails the preamble read;
+                    // a half-open dial fails the frame read — drop both
+                    let rank = match wire::read_preamble(&mut s) {
+                        Ok(r) => r as usize,
+                        Err(_) => continue,
+                    };
+                    let frame = match wire::read_frame(&mut s) {
+                        Ok(f) => f,
+                        Err(_) => continue,
+                    };
+                    let mesh_addr = decode_text(&frame.payload);
+                    if frame.kind != FrameKind::Join
+                        || !mesh_addr.contains(':')
+                        || rank >= book.len()
+                    {
+                        let refusal = Frame::new(
+                            FrameKind::Error,
+                            0,
+                            0.0,
+                            encode_text(&format!("malformed join from rank {rank}")),
+                        );
+                        let _ = wire::write_frame(&mut s, &refusal);
+                        continue;
+                    }
+                    book[rank] = mesh_addr.clone();
+                    let payload = encode_text(&book.join(","));
+                    wire::write_frame(
+                        &mut s,
+                        &Frame::new(FrameKind::Roster, book.len() as u64, 0.0, payload),
+                    )
+                    .with_context(|| format!("sending re-join address book to rank {rank}"))?;
+                    s.set_read_timeout(None).ok();
+                    return Ok(Some(WorkerConn { rank, stream: s, mesh_addr }));
+                }
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    if Instant::now() >= deadline {
+                        return Ok(None);
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                Err(e) => return Err(crate::err!("re-join accept failed: {e}")),
+            }
+        }
     }
 }
 
@@ -751,6 +1123,161 @@ mod tests {
             ..TcpOptions::default()
         };
         assert_eq!(advertised_addr(&opts, "::", 4100).unwrap(), "[fe80::8]:4100");
+    }
+
+    #[test]
+    fn validate_join_admission_rules() {
+        let dead = [1usize];
+        let joined: [usize; 0] = [];
+        // wildcard claim on a dead slot: admitted
+        assert!(validate_join(1, u64::MAX, 3, 2, &dead, &joined).is_ok());
+        // exact claim of the forming epoch: admitted
+        assert!(validate_join(1, 3, 3, 2, &dead, &joined).is_ok());
+        // stale epoch claim: typed refusal
+        let err = validate_join(1, 2, 3, 2, &dead, &joined).unwrap_err();
+        assert!(err.to_string().contains("stale-epoch join"), "{err}");
+        // future epoch claim: typed refusal
+        let err = validate_join(1, 9, 3, 2, &dead, &joined).unwrap_err();
+        assert!(err.to_string().contains("future-epoch join"), "{err}");
+        // live rank: double-join refused
+        let err = validate_join(0, u64::MAX, 3, 2, &dead, &joined).unwrap_err();
+        assert!(err.to_string().contains("double-join refused"), "{err}");
+        // second join of an already-admitted slot: double-join refused
+        let err = validate_join(1, u64::MAX, 3, 2, &dead, &[1]).unwrap_err();
+        assert!(err.to_string().contains("double-join refused"), "{err}");
+        // unknown rank
+        let err = validate_join(5, u64::MAX, 3, 2, &dead, &joined).unwrap_err();
+        assert!(err.to_string().contains("unknown rank"), "{err}");
+    }
+
+    #[test]
+    fn tcp_dead_rank_rejoins_at_next_epoch() {
+        let rdv = Rendezvous::bind(0).unwrap();
+        let addr = rdv.addr();
+        let opts = TcpOptions {
+            elastic: true,
+            io_timeout: Some(Duration::from_secs(10)),
+            ..TcpOptions::default()
+        };
+        std::thread::scope(|s| {
+            // coordinator: bootstrap both ranks, then serve the re-join
+            let rdv_opts = &rdv;
+            let coord = s.spawn(move || {
+                let conns = rdv_opts.wait_workers(2, Duration::from_secs(10)).unwrap();
+                let mut book: Vec<String> =
+                    conns.iter().map(|c| c.mesh_addr.clone()).collect();
+                let deadline = Instant::now() + Duration::from_secs(10);
+                let joined = loop {
+                    if let Some(j) =
+                        rdv_opts.accept_join(&mut book, Duration::from_millis(50)).unwrap()
+                    {
+                        break j;
+                    }
+                    assert!(Instant::now() < deadline, "no re-join arrived");
+                };
+                assert_eq!(joined.rank, 1);
+                (conns, joined)
+            });
+
+            // rank 0: survive the death, rebuild, exchange at the new epoch
+            let addr0 = addr.clone();
+            let opts0 = opts.clone();
+            let survivor = s.spawn(move || {
+                let mut c = TcpComm::connect(&addr0, 0, 2, &opts0).unwrap();
+                let g = c.exchange(0.0, &[100.0]).unwrap();
+                assert_eq!(g.parts, vec![vec![100.0f32], vec![101.0f32]]);
+                // keep exchanging until rank 1's death surfaces (its round-0
+                // frame may still be queued when the link drops)
+                let err = loop {
+                    match c.exchange(0.0, &[0.0]) {
+                        Ok(_) => continue,
+                        Err(e) => break e,
+                    }
+                };
+                assert_eq!(err.lost_peer(), Some(Some(1)), "{err}");
+                let m = c.rebuild(1).unwrap();
+                assert_eq!(m.epoch, 1);
+                assert_eq!(m.ranks, vec![0, 1]);
+                assert_eq!(c.epoch(), 1);
+                let g = c.exchange(0.0, &[200.0]).unwrap();
+                assert_eq!(g.parts, vec![vec![200.0f32], vec![201.0f32]]);
+            });
+
+            // rank 1: exchange once, die (drop = socket close), re-join
+            let addr1 = addr.clone();
+            let opts1 = opts.clone();
+            s.spawn(move || {
+                {
+                    let mut c = TcpComm::connect(&addr1, 1, 2, &opts1).unwrap();
+                    let g = c.exchange(0.0, &[101.0]).unwrap();
+                    assert_eq!(g.parts, vec![vec![100.0f32], vec![101.0f32]]);
+                } // death
+                let mut c = TcpComm::connect_join(&addr1, 1, 2, &opts1, None).unwrap();
+                assert_eq!(c.epoch(), 1);
+                let g = c.exchange(0.0, &[201.0]).unwrap();
+                assert_eq!(g.parts, vec![vec![200.0f32], vec![201.0f32]]);
+            });
+
+            survivor.join().unwrap();
+            let _conns = coord.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn rendezvous_tolerates_stale_join_hello() {
+        let rdv = Rendezvous::bind(0).unwrap();
+        let addr = rdv.addr();
+        std::thread::scope(|s| {
+            let coord = s.spawn(move || rdv.wait_workers(1, Duration::from_secs(10)).unwrap());
+            // a straggling joiner from some aborted elastic attempt dials in
+            // first; it must be refused without failing the rendezvous
+            let stale = {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let mut sock = TcpStream::connect(addr).unwrap();
+                    sock.set_read_timeout(Some(Duration::from_secs(10))).ok();
+                    wire::write_preamble(&mut sock, 0).unwrap();
+                    wire::write_frame(
+                        &mut sock,
+                        &Frame::new(FrameKind::Join, u64::MAX, 0.0, encode_text("127.0.0.1:9")),
+                    )
+                    .unwrap();
+                    let reply = wire::read_frame(&mut sock).unwrap();
+                    assert_eq!(reply.kind, FrameKind::Error);
+                    assert!(
+                        decode_text(&reply.payload).contains("no elastic join in flight"),
+                        "{}",
+                        decode_text(&reply.payload)
+                    );
+                })
+            };
+            stale.join().unwrap();
+            // the real worker still bootstraps fine afterwards
+            s.spawn(move || {
+                let c = TcpComm::connect(&addr, 0, 1, &TcpOptions::default()).unwrap();
+                drop(c);
+            });
+            let conns = coord.join().unwrap();
+            assert_eq!(conns.len(), 1);
+        });
+    }
+
+    #[test]
+    fn rebuild_without_listener_is_a_typed_error() {
+        // fixed-membership endpoints refuse rebuild outright
+        let results = tcp_ranks(2, |mut c| {
+            if c.rank() == 0 {
+                let err = c.rebuild(1).unwrap_err();
+                assert!(
+                    err.to_string().contains("elastic membership is not enabled"),
+                    "{err}"
+                );
+            }
+            c.exchange(0.0, &[c.rank() as f32]).unwrap().parts
+        });
+        for parts in results {
+            assert_eq!(parts, vec![vec![0.0f32], vec![1.0f32]]);
+        }
     }
 
     #[test]

@@ -52,7 +52,13 @@ pub const MAGIC: u32 = 0x4453_414E;
 ///   query frames for `dsanls serve` (`crate::serve`). A v4 peer rejects
 ///   kinds 9/10 as unknown mid-stream; the handshake refuses the mix up
 ///   front instead.
-pub const VERSION: u16 = 5;
+/// * v6 — membership epochs: [`FrameKind::Join`] / [`FrameKind::EpochAck`]
+///   carry the elastic re-join handshake (`dsanls worker --join`), and
+///   collective tags are epoch-qualified (epoch in the top 16 bits — the
+///   tag of every pre-v6 collective decodes as epoch 0, but a v5 peer
+///   would treat an epoch-1 tag as a garbled round number, so the
+///   handshake refuses the mix).
+pub const VERSION: u16 = 6;
 /// Refuse frames above 1 GiB — a corrupt length prefix otherwise turns
 /// into an attempted huge allocation.
 pub const MAX_FRAME_BYTES: usize = 1 << 30;
@@ -89,6 +95,13 @@ pub enum FrameKind {
     Request = 9,
     /// Server → client serving-plane reply (tag echoes the request id).
     Response = 10,
+    /// Elastic re-join request (joiner → coordinator / joiner → survivor;
+    /// tag = the epoch the joiner believes is forming, `u64::MAX` = "any";
+    /// payload = the joiner's advertised mesh address, text-encoded).
+    Join = 11,
+    /// Survivor → joiner admission (tag = the new membership epoch). A
+    /// rejected join gets a [`FrameKind::Error`] frame instead.
+    EpochAck = 12,
 }
 
 impl FrameKind {
@@ -105,6 +118,8 @@ impl FrameKind {
             8 => FrameKind::CollectiveBf16,
             9 => FrameKind::Request,
             10 => FrameKind::Response,
+            11 => FrameKind::Join,
+            12 => FrameKind::EpochAck,
             other => crate::bail!("unknown frame kind {other}"),
         })
     }

@@ -363,6 +363,7 @@ fn dsanls_sharded_tcp_bit_identical_to_full_sim() {
             &opts,
             None,
             &RunControl::unsupervised(),
+            false,
         )
     })
     .expect("tcp cluster failed");
@@ -408,6 +409,7 @@ fn syn_sd_sharded_matches_full_sim() {
             None,
             None,
             &RunControl::unsupervised(),
+            false,
         )
     })
     .expect("tcp cluster failed");

@@ -264,6 +264,105 @@ fn launch_retry_exhaustion_fails_cleanly() {
     std::fs::remove_dir_all(&out_dir).ok();
 }
 
+/// Elastic recovery, end to end over real worker processes: rank 1 is
+/// fault-injected to die mid-run; `launch --elastic` must spawn a
+/// replacement (`worker --join`), rebuild the membership epoch WITHOUT
+/// restarting the survivors, and still produce factors bit-identical to
+/// the uninterrupted simulator. The outcome proves the path taken:
+/// `retries: 0` (nobody restarted) and `epochs: 2` (one rebuild).
+#[test]
+fn launch_elastic_replaces_dead_worker_without_restart() {
+    let out_dir = temp_out("elastic");
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let output = Command::new(exe())
+        .args([
+            "launch",
+            "--nodes",
+            "3",
+            "--verify-sim",
+            "--elastic",
+            "--fault-rank",
+            "1",
+            "--fault-iteration",
+            "3",
+            "--experiment.name=elastictest",
+            "--experiment.algorithm=dsanls",
+            "--experiment.dataset=face",
+            "--experiment.scale=0.05",
+            "--experiment.rank=4",
+            "--experiment.iterations=6",
+            "--experiment.eval_every=3",
+        ])
+        .arg(format!("--output.dir={}", out_dir.display()))
+        .output()
+        .expect("failed to spawn dsanls launch");
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        output.status.success(),
+        "elastic launch failed ({})\nstdout:\n{stdout}\nstderr:\n{stderr}",
+        output.status
+    );
+    assert!(
+        stderr.contains("spawning replacement"),
+        "no replacement was spawned\nstderr:\n{stderr}"
+    );
+    assert!(
+        !stderr.contains("retrying"),
+        "elastic recovery must not fall back to a cluster restart\nstderr:\n{stderr}"
+    );
+    assert!(
+        stdout.contains("retries: 0"),
+        "elastic recovery must report zero restarts\nstdout:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("epochs: 2"),
+        "exactly one membership rebuild expected\nstdout:\n{stdout}"
+    );
+    assert!(
+        stdout.contains("bit-identical to simulated backend: true"),
+        "recovered factors diverged from the uninterrupted simulator\nstdout:\n{stdout}\nstderr:\n{stderr}"
+    );
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
+/// `--max-joins 0` with a scripted death: the budget is exhausted
+/// immediately and the launch fails cleanly, naming the budget.
+#[test]
+fn launch_elastic_join_budget_exhaustion_fails_cleanly() {
+    let out_dir = temp_out("elasticbudget");
+    std::fs::create_dir_all(&out_dir).unwrap();
+    let output = Command::new(exe())
+        .args([
+            "launch",
+            "--nodes",
+            "2",
+            "--elastic",
+            "--max-joins",
+            "0",
+            "--fault-rank",
+            "0",
+            "--fault-iteration",
+            "2",
+            "--experiment.algorithm=dsanls",
+            "--experiment.dataset=face",
+            "--experiment.scale=0.05",
+            "--experiment.rank=3",
+            "--experiment.iterations=6",
+            "--experiment.eval_every=0",
+        ])
+        .arg(format!("--output.dir={}", out_dir.display()))
+        .output()
+        .expect("failed to spawn dsanls launch");
+    assert!(!output.status.success(), "an exhausted join budget must fail the launch");
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(
+        stderr.contains("join budget exhausted"),
+        "unhelpful error: {stderr}"
+    );
+    std::fs::remove_dir_all(&out_dir).ok();
+}
+
 #[test]
 fn worker_without_rendezvous_is_a_clean_error() {
     let output = Command::new(exe())

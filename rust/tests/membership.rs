@@ -1,0 +1,289 @@
+//! Deterministic chaos harness for elastic membership epochs.
+//!
+//! The contract under test: when a rank dies mid-run on an elastic job, the
+//! survivors quiesce at the next iteration boundary, a replacement re-joins
+//! the collective via the epoch handshake, the boundary state is replayed,
+//! and the finished run is **bit-identical** to a run that was never
+//! interrupted — with `Outcome::retries == 0` (nobody restarted) and
+//! `Outcome::epochs` counting the membership rebuilds.
+//!
+//! Every kill is scripted through `FaultPlan`, so each case is a pure
+//! function of (algorithm, victim rank, kill iteration) and replays
+//! identically under `--test-threads` pinning in CI.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use dsanls::algos::{DistAnlsOptions, DsanlsOptions};
+use dsanls::linalg::{Mat, Matrix};
+use dsanls::nmf::job::{Algo, Backend, DataSource, Job, Outcome};
+use dsanls::rng::Pcg64;
+use dsanls::secure::{AsynOptions, SecureAlgo, SynOptions};
+use dsanls::transport::{FaultPlan, SimCluster, SimComm};
+
+fn low_rank(m: usize, n: usize, k: usize, seed: u64) -> Matrix {
+    let mut rng = Pcg64::new(seed as u128, 0);
+    let u = Mat::rand_uniform(m, k, 1.0, &mut rng);
+    let v = Mat::rand_uniform(n, k, 1.0, &mut rng);
+    Matrix::Dense(u.matmul_nt(&v))
+}
+
+const NODES: usize = 3;
+
+/// The three synchronous families (elastic membership is a synchronous
+/// protocol; the asynchronous parameter server is rejected at build).
+fn sync_algos() -> Vec<(&'static str, Algo)> {
+    let dsanls = DsanlsOptions {
+        nodes: NODES,
+        rank: 3,
+        iterations: 4,
+        d_u: 8,
+        d_v: 8,
+        eval_every: 2,
+        ..Default::default()
+    };
+    let hals = DistAnlsOptions {
+        nodes: NODES,
+        rank: 3,
+        iterations: 4,
+        eval_every: 2,
+        ..Default::default()
+    };
+    let syn = SynOptions {
+        nodes: NODES,
+        rank: 3,
+        t1: 2,
+        t2: 2,
+        d1: 8,
+        d2: 4,
+        d3: 8,
+        eval_every: 0,
+        ..Default::default()
+    };
+    vec![
+        ("dsanls", Algo::Dsanls(dsanls)),
+        ("dist-anls", Algo::DistAnls(hals)),
+        ("syn-sd", Algo::Syn(syn, SecureAlgo::SynSd)),
+    ]
+}
+
+fn baseline(algo: &Algo, m: &Matrix) -> Outcome {
+    Job::builder()
+        .algorithm(algo.clone())
+        .data(DataSource::Full(m))
+        .run()
+        .unwrap_or_else(|e| panic!("baseline {algo:?}: {e}"))
+}
+
+fn chaos(algo: &Algo, m: &Matrix, plan: FaultPlan, label: &str) -> Outcome {
+    Job::builder()
+        .algorithm(algo.clone())
+        .data(DataSource::Full(m))
+        .elastic(true)
+        .fault_plan(plan)
+        .run()
+        .unwrap_or_else(|e| panic!("{label}: {e}"))
+}
+
+/// Factors and the traced error sequence must match bit for bit. The
+/// modelled clock is NOT compared: the rolled-back iteration is computed
+/// twice (once by the victim, once replayed after recovery), so the
+/// recovered run legitimately reports more simulated time.
+fn assert_bit_identical(out: &Outcome, base: &Outcome, label: &str) {
+    assert_eq!(out.u.data(), base.u.data(), "{label}: U diverged from the uninterrupted run");
+    assert_eq!(out.v.data(), base.v.data(), "{label}: V diverged from the uninterrupted run");
+    let errs = |o: &Outcome| -> Vec<(usize, u64)> {
+        o.trace.iter().map(|p| (p.iteration, p.rel_error.to_bits())).collect()
+    };
+    assert_eq!(errs(out), errs(base), "{label}: error trace diverged");
+}
+
+/// The full chaos matrix: every synchronous family × every victim rank ×
+/// kill iterations {1, 3}. Each re-joined run must be bit-identical to the
+/// uninterrupted baseline, with exactly one membership rebuild and zero
+/// cluster restarts.
+#[test]
+fn chaos_kill_each_rank_rejoined_run_bit_identical() {
+    let m = low_rank(48, 36, 3, 4242);
+    for (name, algo) in sync_algos() {
+        let base = baseline(&algo, &m);
+        assert_eq!(base.epochs, 1, "{name}: uninterrupted run grew epochs");
+        for victim in 0..NODES {
+            for kill_at in [1usize, 3] {
+                let label = format!("{name}: kill rank {victim} at iteration {kill_at}");
+                let out = chaos(&algo, &m, FaultPlan::new().kill(victim, kill_at), &label);
+                assert_eq!(out.epochs, 2, "{label}: expected exactly one rebuild");
+                assert_eq!(out.retries, 0, "{label}: recovery must not restart the job");
+                assert_bit_identical(&out, &base, &label);
+            }
+        }
+    }
+}
+
+/// Two scripted deaths in one run: the second victim dies after the first
+/// replacement has been admitted. Two rebuilds, still bit-identical.
+#[test]
+fn chaos_two_kills_two_rebuilds() {
+    let m = low_rank(48, 36, 3, 4242);
+    let (name, algo) = sync_algos().remove(0);
+    let base = baseline(&algo, &m);
+    let label = format!("{name}: kill rank 0 at 1, then rank 2 at 3");
+    let plan = FaultPlan::new().kill(0, 1).kill(2, 3);
+    let out = chaos(&algo, &m, plan, &label);
+    assert_eq!(out.epochs, 3, "{label}: expected two rebuilds");
+    assert_eq!(out.retries, 0, "{label}");
+    assert_bit_identical(&out, &base, &label);
+}
+
+/// With elastic membership on but no faults scripted, the boundary-state
+/// replication must be bit-transparent: identical factors, single epoch.
+#[test]
+fn elastic_without_faults_is_transparent() {
+    let m = low_rank(48, 36, 3, 4242);
+    for (name, algo) in sync_algos() {
+        let base = baseline(&algo, &m);
+        let out = Job::builder()
+            .algorithm(algo.clone())
+            .data(DataSource::Full(&m))
+            .elastic(true)
+            .run()
+            .unwrap_or_else(|e| panic!("{name} elastic, no faults: {e}"));
+        assert_eq!(out.epochs, 1, "{name}: no fault, no rebuild");
+        assert_bit_identical(&out, &base, &format!("{name}: elastic no-fault"));
+    }
+}
+
+/// Sim-vs-TCP mirror: a chaos-recovered run on the simulated backend must
+/// agree bit for bit with an uninterrupted run over real TCP sockets — the
+/// recovery path lands on exactly the state the wire protocol computes.
+#[test]
+fn chaos_recovered_sim_matches_uninterrupted_tcp() {
+    let m = low_rank(48, 36, 3, 4242);
+    let (name, algo) = sync_algos().remove(0);
+    let tcp = Job::builder()
+        .algorithm(algo.clone())
+        .data(DataSource::Full(&m))
+        .transport(Backend::Tcp { port: 0 })
+        .run()
+        .unwrap_or_else(|e| panic!("{name} tcp baseline: {e}"));
+    let label = format!("{name}: chaos sim vs clean tcp");
+    let out = chaos(&algo, &m, FaultPlan::new().kill(1, 2), &label);
+    assert_eq!(out.epochs, 2, "{label}");
+    assert_eq!(out.u.data(), tcp.u.data(), "{label}: U diverged");
+    assert_eq!(out.v.data(), tcp.v.data(), "{label}: V diverged");
+}
+
+/// Epoch-handshake misuse surfaces as typed errors, promptly — no case may
+/// hang the caller. (The wire-level twins — stale epoch numbers and mixed
+/// wire versions at the TCP join handshake — are covered by the transport
+/// unit tests; this exercises the public `SimComm::join` surface.)
+#[test]
+fn join_misuse_is_typed_and_prompt() {
+    let started = Instant::now();
+
+    // Joining a slot whose incumbent is alive is a double-join.
+    let cluster = SimCluster::new(2);
+    let err = SimComm::join(&cluster, 0).unwrap_err();
+    assert!(err.to_string().contains("double-join"), "alive slot: {err}");
+
+    // Out-of-range ranks cannot claim a slot at all.
+    let err = SimComm::join(&cluster, 7).unwrap_err();
+    assert!(err.to_string().contains("cannot join as rank 7"), "{err}");
+
+    // A rank that finished cleanly cannot be re-joined.
+    let finished = SimCluster::new(2);
+    drop(SimComm::new(0, Arc::clone(&finished)));
+    let err = SimComm::join(&finished, 0).unwrap_err();
+    assert!(err.to_string().contains("nothing to re-join"), "{err}");
+
+    // A dead slot with no surviving rank ever rebuilding: the join times
+    // out with a typed error instead of blocking forever, and releases
+    // its claim so a later join may retry.
+    let orphan = SimCluster::new(2);
+    let _ = catch_unwind(AssertUnwindSafe(|| {
+        let _dying = SimComm::new(1, Arc::clone(&orphan));
+        panic!("scripted death");
+    }));
+    orphan.set_rejoin_timeout(Duration::from_millis(50));
+    let err = SimComm::join(&orphan, 1).unwrap_err();
+    assert!(err.to_string().contains("timed out"), "{err}");
+
+    // The timeout released the claim: a concurrent pair now races for the
+    // slot — the loser sees a typed double-join, not a deadlock.
+    orphan.set_rejoin_timeout(Duration::from_millis(400));
+    let c2 = Arc::clone(&orphan);
+    let racer = std::thread::spawn(move || SimComm::join(&c2, 1).map(|_| ()));
+    std::thread::sleep(Duration::from_millis(100));
+    let err = SimComm::join(&orphan, 1).unwrap_err();
+    assert!(err.to_string().contains("double-join"), "racing joiner: {err}");
+    // The first joiner still times out cleanly (no survivors to admit it).
+    let first = racer.join().expect("joiner thread panicked").unwrap_err();
+    assert!(first.to_string().contains("timed out"), "{first}");
+
+    assert!(
+        started.elapsed() < Duration::from_secs(10),
+        "join misuse must fail fast, took {:?}",
+        started.elapsed()
+    );
+}
+
+/// Elastic misuse is rejected when the job is built, with errors that name
+/// the conflicting knob.
+#[test]
+fn builder_rejects_elastic_misuse() {
+    let m = low_rank(48, 36, 3, 4242);
+    let sync = sync_algos().remove(0).1;
+
+    // A fault plan without elastic membership would just kill the job.
+    let err = Job::builder()
+        .algorithm(sync.clone())
+        .data(DataSource::Full(&m))
+        .fault_plan(FaultPlan::new().kill(0, 1))
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains(".elastic(true)"), "{err}");
+
+    // min_ranks is an elastic-only knob…
+    let err = Job::builder()
+        .algorithm(sync.clone())
+        .data(DataSource::Full(&m))
+        .min_ranks(2)
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("min_ranks"), "{err}");
+
+    // …and must fit the cluster.
+    let err = Job::builder()
+        .algorithm(sync.clone())
+        .data(DataSource::Full(&m))
+        .elastic(true)
+        .min_ranks(9)
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("1..="), "{err}");
+
+    // In-process TCP elasticity is a launch-CLI feature, not a Job one.
+    let err = Job::builder()
+        .algorithm(sync)
+        .data(DataSource::Full(&m))
+        .transport(Backend::Tcp { port: 0 })
+        .elastic(true)
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("launch --elastic"), "{err}");
+
+    // The asynchronous parameter server has no iteration boundary to
+    // quiesce at.
+    let asyn = Algo::Asyn(
+        AsynOptions { nodes: 2, rank: 3, rounds: 3, local_iters: 2, d1: 8, ..Default::default() },
+        SecureAlgo::AsynSd,
+    );
+    let err = Job::builder()
+        .algorithm(asyn)
+        .data(DataSource::Full(&m))
+        .elastic(true)
+        .run()
+        .unwrap_err();
+    assert!(err.to_string().contains("synchronous"), "{err}");
+}

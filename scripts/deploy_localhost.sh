@@ -104,3 +104,22 @@ grep -q "fold-in top:" "$WORK/fold.log"
 kill "$SERVE_PID" 2>/dev/null
 wait "$SERVE_PID" 2>/dev/null || true
 echo "serving walkthrough OK (top-k leads with the reconstruction argmax, fold-in embeds, stats live)"
+
+echo "== step 7: elastic fleet — replace the dead worker, no restart =="
+# Same scripted death as step 5, but with --elastic the coordinator spawns
+# a replacement (worker --join) that re-enters the collective at the next
+# membership epoch; the survivors never restart (retries stays 0, epochs
+# goes to 2) and the factors are still bit-identical to an uninterrupted
+# simulator run (DEPLOYMENT.md §Elastic fleets).
+"$BIN" launch --nodes 2 --elastic \
+  --fault-rank 1 --fault-iteration 3 \
+  --shards "$WORK/shards" --verify-sim "${CFG[@]}" \
+  > "$WORK/elastic.log" 2>"$WORK/elastic.err" \
+  || { cat "$WORK/elastic.log" "$WORK/elastic.err"; exit 1; }
+
+grep -q "spawning replacement" "$WORK/elastic.err"
+! grep -q "retrying" "$WORK/elastic.err"
+grep -q "retries: 0" "$WORK/elastic.log"
+grep -q "epochs: 2" "$WORK/elastic.log"
+grep -q "bit-identical to simulated backend: true" "$WORK/elastic.log"
+echo "elastic walkthrough OK (rank died mid-run, replacement re-joined, survivors never restarted, bit-identical)"
