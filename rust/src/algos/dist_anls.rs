@@ -107,10 +107,17 @@ pub fn dist_anls_rank<C: Communicator>(
     let stream = StreamRng::new(opts.seed);
     let my_rows = row_part.range(rank);
     let my_cols = col_part.range(rank);
-    let m_rows = input.row_block(my_rows.clone());
-    let m_rows: &Matrix = &m_rows;
-    let m_cols_t = input.col_block_t(my_cols.clone());
+    let compressed = input.compressed();
+    let m_rows_buf = compressed.is_none().then(|| input.row_block(my_rows.clone()));
+    let m_rows: Option<&Matrix> = m_rows_buf.as_deref();
+    let m_cols_t = compressed.is_none().then(|| input.col_block_t(my_cols.clone()));
     let mut fro_sq = input.fro_sq();
+    let mut ws = solvers::Workspace::new();
+    if let Some(cb) = compressed {
+        assert_eq!(cb.row_range, my_rows, "compressed row range != rank's partition");
+        assert_eq!(cb.col_range, my_cols, "compressed col range != rank's partition");
+        assert!(!opts.overlap, "overlap × compressed input is rejected at build time");
+    }
 
     let start = ctl.start_iteration();
     let (mut u_block, mut v_block) = if joining {
@@ -188,6 +195,48 @@ pub fn dist_anls_rank<C: Communicator>(
             if let Some(reason) = ctl.poll_sync(ctx, t, trace.last_error()) {
                 return Some(reason);
             }
+            if let Some(cb) = compressed {
+                // ---- compressed U-step ----
+                // The O(nk) all-gather of V disappears: the summand
+                // `B̄_r = (V_{J_r:})ᵀS_{c,J_r:}` all-reduces to `B = VᵀS_c`
+                // (k×d_c), and the normal equations come from the resident
+                // view — gram = BBᵀ ≈ VᵀV, cross = u_view·Bᵀ ≈ M_{I_r:}V.
+                let mut summand = ws.take_summand();
+                ctx.compute(|| {
+                    cb.s_c().mul_rows_tn_into(&v_block, col_part.offset(rank), &mut summand)
+                });
+                ctx.all_reduce_sum_q(summand.data_mut(), opts.precision);
+                ctx.compute(|| {
+                    let nrm = ws.normal_from(cb.u_view(), &summand);
+                    for _ in 0..opts.inner_sweeps.max(1) {
+                        solvers::update(opts.solver, &mut u_block, &nrm, 0.0);
+                    }
+                });
+
+                // ---- compressed V-step (mirrored on S_r) ----
+                ctx.compute(|| {
+                    cb.s_r().mul_rows_tn_into(&u_block, row_part.offset(rank), &mut summand)
+                });
+                ctx.all_reduce_sum_q(summand.data_mut(), opts.precision);
+                ctx.compute(|| {
+                    let nrm = ws.normal_from(cb.v_view(), &summand);
+                    for _ in 0..opts.inner_sweeps.max(1) {
+                        solvers::update(opts.solver, &mut v_block, &nrm, 0.0);
+                    }
+                });
+                ws.restore_summand(summand);
+
+                completed = t + 1;
+                if opts.eval_every > 0 && (t + 1) % opts.eval_every == 0 {
+                    super::dsanls::record_error_any(
+                        ctx, &input, m_rows, &u_block, &v_block, fro_sq, opts.rank, t + 1,
+                        &mut trace,
+                    );
+                    sampled_at = Some(t + 1);
+                }
+                return None;
+            }
+
             // ---- U-step: gram = VᵀV (all-reduce), V full (all-gather) ----
             // Both collectives depend only on the V of the previous step, so
             // under `overlap` they are posted back to back and waited in post
@@ -206,7 +255,7 @@ pub fn dist_anls_rank<C: Communicator>(
             let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
             let v_full = assemble_blocks(&v_blocks, opts.rank);
             ctx.compute(|| {
-                let cross = match m_rows {
+                let cross = match m_rows.expect("raw input resolves a row block") {
                     Matrix::Dense(md) => md.matmul(&v_full),
                     Matrix::Sparse(ms) => ms.spmm(&v_full),
                 };
@@ -230,7 +279,7 @@ pub fn dist_anls_rank<C: Communicator>(
             let gram = Mat::from_vec(opts.rank, opts.rank, gram_buf);
             let u_full = assemble_blocks(&u_blocks, opts.rank);
             ctx.compute(|| {
-                let cross = match &m_cols_t {
+                let cross = match m_cols_t.as_ref().expect("raw input resolves a col block") {
                     Matrix::Dense(md) => md.matmul(&u_full),
                     Matrix::Sparse(ms) => ms.spmm(&u_full),
                 };

@@ -166,7 +166,13 @@ pub fn dsanls_rank<C: Communicator>(
     assert_eq!(opts.nodes, ctx.nodes(), "opts.nodes must match the cluster size");
     let rank = ctx.rank;
     let (rows, cols) = input.dims();
-    let (d_u, d_v) = opts.resolve_d(cols, rows);
+    let compressed = input.compressed();
+    // compressed input fixed the sketch widths at shard time (the resident
+    // views *are* the sketched data); raw input resolves them from options
+    let (d_u, d_v) = match compressed {
+        Some(cb) => (cb.d_c(), cb.d_r()),
+        None => opts.resolve_d(cols, rows),
+    };
     let row_part = uniform_partition(rows, opts.nodes);
     let col_part = uniform_partition(cols, opts.nodes);
     let stream = StreamRng::new(opts.seed);
@@ -174,10 +180,17 @@ pub fn dsanls_rank<C: Communicator>(
     let my_cols = col_part.range(rank);
     let mut fro_sq = input.fro_sq();
 
-    // --- data each node is allowed to touch (Fig. 1a partitioning) ---
-    let m_rows = input.row_block(my_rows.clone()); // M_{I_r:}
-    let m_rows: &Matrix = &m_rows;
-    let m_cols_t = input.col_block_t(my_cols.clone()); // (M_{:J_r})ᵀ
+    // --- data each node is allowed to touch (Fig. 1a partitioning);
+    //     compressed input substitutes its fixed sketched views and the raw
+    //     blocks are never materialised ---
+    let m_rows_buf = compressed.is_none().then(|| input.row_block(my_rows.clone())); // M_{I_r:}
+    let m_rows: Option<&Matrix> = m_rows_buf.as_deref();
+    let m_cols_t = compressed.is_none().then(|| input.col_block_t(my_cols.clone())); // (M_{:J_r})ᵀ
+    if let Some(cb) = compressed {
+        assert_eq!(cb.row_range, my_rows, "compressed row range != rank's partition");
+        assert_eq!(cb.col_range, my_cols, "compressed col range != rank's partition");
+        assert!(!opts.overlap, "overlap × compressed input is rejected at build time");
+    }
 
     // shared-seed init (or checkpoint restore): every node derives the same
     // full factors and keeps its slice ⇒ iterates are independent of the
@@ -240,7 +253,7 @@ pub fn dsanls_rank<C: Communicator>(
             let mut s_rng = stream.for_iteration(start as u64, Role::SketchU);
             let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
             let mut a = ws.take_pipe(0);
-            s.mul_right_into(m_rows, &mut a);
+            s.mul_right_into(m_rows.expect("overlap requires raw input"), &mut a);
             ws.restore_pipe(0, a);
             s
         }));
@@ -308,12 +321,46 @@ pub fn dsanls_rank<C: Communicator>(
                 return Some(reason);
             }
 
-            if !opts.overlap {
+            if let Some(cb) = compressed {
+                // ---------- compressed U-subproblem ----------
+                // The fixed view `u_view = M_{I_r:}·S_c` replaces the
+                // per-iteration `A_r`; the summand `B̄_r = (V_{J_r:})ᵀS_{c,J_r:}`
+                // reduces to `B = VᵀS_c` over the same k×d all-reduce as the
+                // raw path. Zero per-iteration allocation: the summand lives
+                // in the workspace and the view is resident.
+                let mut summand = ws.take_summand();
+                ctx.compute(|| {
+                    cb.s_c().mul_rows_tn_into(&v_block, col_part.offset(rank), &mut summand)
+                });
+                ctx.all_reduce_sum_q(summand.data_mut(), opts.precision);
+                ctx.compute(|| {
+                    let nrm = ws.normal_from(cb.u_view(), &summand);
+                    solvers::update_auto(opts.solver, &mut u_block, &nrm, &opts.mu, t);
+                    if opts.box_bound {
+                        u_block.clamp_max(ceiling);
+                    }
+                });
+
+                // ---------- compressed V-subproblem (mirrored on S_r) ----------
+                ctx.compute(|| {
+                    cb.s_r().mul_rows_tn_into(&u_block, row_part.offset(rank), &mut summand)
+                });
+                ctx.all_reduce_sum_q(summand.data_mut(), opts.precision);
+                ctx.compute(|| {
+                    let nrm = ws.normal_from(cb.v_view(), &summand);
+                    solvers::update_auto(opts.solver, &mut v_block, &nrm, &opts.mu, t);
+                    if opts.box_bound {
+                        v_block.clamp_max(ceiling);
+                    }
+                });
+                ws.restore_summand(summand);
+            } else if !opts.overlap {
                 // ---------- U-subproblem (Alg. 2 lines 4–8) ----------
                 let (a_r, b_sum) = ctx.compute(|| {
                     let mut s_rng = stream.for_iteration(t as u64, Role::SketchU);
                     let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
-                    let a_r = s.mul_right(m_rows); // M_{I_r:}·Sᵗ, local
+                    // M_{I_r:}·Sᵗ, local
+                    let a_r = s.mul_right(m_rows.expect("raw input resolves a row block"));
                     let b_bar = s.mul_rows_tn(&v_block, col_part.offset(rank)); // (V_{J_r:})ᵀS_{J_r:}
                     (a_r, b_bar)
                 });
@@ -333,7 +380,8 @@ pub fn dsanls_rank<C: Communicator>(
                 let (a2_r, b2_sum) = ctx.compute(|| {
                     let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
                     let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
-                    let a2 = s2.mul_right(&m_cols_t); // (M_{:J_r})ᵀ·S'ᵗ
+                    // (M_{:J_r})ᵀ·S'ᵗ
+                    let a2 = s2.mul_right(m_cols_t.as_ref().expect("raw input resolves a col block"));
                     let b2_bar = s2.mul_rows_tn(&u_block, row_part.offset(rank)); // (U_{I_r:})ᵀS'_{I_r:}
                     (a2, b2_bar)
                 });
@@ -368,7 +416,7 @@ pub fn dsanls_rank<C: Communicator>(
                     let mut s_rng = stream.for_iteration(t as u64, Role::SketchV);
                     let s2 = SketchMatrix::generate(opts.sketch, rows, d_v, &mut s_rng);
                     let mut a2 = ws.take_pipe(1);
-                    s2.mul_right_into(&m_cols_t, &mut a2);
+                    s2.mul_right_into(m_cols_t.as_ref().expect("overlap requires raw input"), &mut a2);
                     ws.restore_pipe(1, a2);
                     s2
                 });
@@ -392,7 +440,7 @@ pub fn dsanls_rank<C: Communicator>(
                         let mut s_rng = stream.for_iteration((t + 1) as u64, Role::SketchU);
                         let s = SketchMatrix::generate(opts.sketch, cols, d_u, &mut s_rng);
                         let mut a = ws.take_pipe(0);
-                        s.mul_right_into(m_rows, &mut a);
+                        s.mul_right_into(m_rows.expect("overlap requires raw input"), &mut a);
                         ws.restore_pipe(0, a);
                         s
                     }));
@@ -466,7 +514,7 @@ pub fn dsanls_rank<C: Communicator>(
 pub(crate) fn record_error_any<C: Communicator>(
     ctx: &mut NodeCtx<C>,
     input: &NodeInput<'_>,
-    m_rows: &Matrix,
+    m_rows: Option<&Matrix>,
     u_block: &Mat,
     v_block: &Mat,
     fro_sq: f64,
@@ -477,7 +525,11 @@ pub(crate) fn record_error_any<C: Communicator>(
     match input {
         NodeInput::Full(m) => record_error(ctx, m, u_block, v_block, k, iteration, trace),
         NodeInput::Shard(_) => {
+            let m_rows = m_rows.expect("sharded input resolves a row block");
             record_error_sharded(ctx, m_rows, u_block, v_block, fro_sq, k, iteration, trace)
+        }
+        NodeInput::Compressed(cb) => {
+            record_error_compressed(ctx, cb, u_block, v_block, k, iteration, trace)
         }
     }
 }
@@ -533,6 +585,39 @@ pub(crate) fn record_error_sharded<C: Communicator>(
         let v = super::assemble_blocks(&v_blocks, k);
         let (_, resid) = rel_error_parts(m_rows, u_block, &v);
         let mut buf = [(resid / fro_sq) as f32];
+        ctx.all_reduce_sum(&mut buf);
+        (buf[0].max(0.0) as f64).sqrt()
+    });
+    trace.record(TracePoint { iteration, sim_time, rel_error: err }, ctx.stats());
+}
+
+/// Compressed out-of-band error: the raw matrix never exists on any rank,
+/// so the trace reports a *sketched residual proxy*
+/// `‖M·S_c − U·(VᵀS_c)ᵀ‖_F / ‖M·S_c‖_F`, computed entirely from the
+/// resident `u_view = M_{I_r:}·S_c` and the gathered `V`. By the
+/// Johnson–Lindenstrauss property of the fixed column sketch this tracks
+/// the true relative error up to the sketch distortion (see EXPERIMENTS.md
+/// "Compressed recovery"). The denominator `‖M·S_c‖²` is the manifest's
+/// `sketched_fro_sq` constant, folded in via `NodeInput::fro_sq()` at load.
+pub(crate) fn record_error_compressed<C: Communicator>(
+    ctx: &mut NodeCtx<C>,
+    cb: &crate::data::CompressedBlock,
+    u_block: &Mat,
+    v_block: &Mat,
+    k: usize,
+    iteration: usize,
+    trace: &mut Trace<'_>,
+) {
+    let sim_time = ctx.clock();
+    let err = ctx.untimed(|ctx| {
+        let v_blocks = ctx.all_gather(v_block.data());
+        let v = super::assemble_blocks(&v_blocks, k);
+        // w = (VᵀS_c)ᵀ = S_cᵀV, shaped d_c×k so `rel_error_parts` sees the
+        // sketched row block `u_view` (|I_r|×d_c) against U_{I_r:}·wᵀ.
+        let w = cb.s_c().mul_rows_tn(&v, 0).transpose();
+        let view = Matrix::Dense(cb.u_view().clone());
+        let (_, resid) = rel_error_parts(&view, u_block, &w);
+        let mut buf = [(resid / cb.sketched_fro_sq) as f32];
         ctx.all_reduce_sum(&mut buf);
         (buf[0].max(0.0) as f64).sqrt()
     });

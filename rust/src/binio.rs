@@ -30,6 +30,11 @@ pub const CHECKPOINT: BinFormat = BinFormat { noun: "checkpoint", truncated: "ch
 /// Framing for shard manifests/blocks ("truncated shard file (reading …)").
 pub const SHARD: BinFormat = BinFormat { noun: "shard", truncated: "shard file" };
 
+/// Framing for compressed shard manifests/blocks (`data::compress`,
+/// `dsanls shard --compress`): "truncated compressed shard file (reading …)".
+pub const COMPRESSED: BinFormat =
+    BinFormat { noun: "compressed shard", truncated: "compressed shard file" };
+
 impl BinFormat {
     /// Write one `u64`, little-endian.
     pub fn write_u64<W: Write>(self, w: &mut W, v: u64) -> Result<()> {

@@ -38,6 +38,7 @@ use std::time::{Duration, Instant};
 use crate::algos::{self, NodeOutput, TracePoint};
 use crate::config::{Algorithm as AlgoFamily, ExperimentConfig};
 use crate::coordinator::{self, Outcome};
+use crate::data::compress;
 use crate::data::partition::{uniform_partition, Partition};
 use crate::data::shard::{self, LoadSource, LoadStats, NodeData, NodeInput};
 use crate::data::Dataset;
@@ -428,17 +429,48 @@ impl WorkerControlArgs {
     }
 }
 
-/// Build this rank's [`NodeData`] — shard files when `--shards` was given,
+/// What a rank holds after the data plane resolved: raw blocks, or the two
+/// fixed sketched views of a compressed shard directory.
+enum RankBlocks {
+    Raw(NodeData),
+    Compressed(Box<crate::data::CompressedBlock>),
+}
+
+/// Build this rank's blocks — shard files when `--shards` was given
+/// (raw or compressed, autodetected from the manifest version),
 /// shard-local synthesis otherwise. Never materialises the full matrix.
 fn build_node_data(
     cfg: &ExperimentConfig,
     rank: usize,
     shards: Option<&Path>,
-) -> Result<(NodeData, LoadSource, Option<Partition>)> {
+) -> Result<(RankBlocks, LoadSource, Option<Partition>)> {
     let algo = Algo::from_config(cfg);
     let (need_rows, need_cols) = algo.block_needs(rank);
     let secure = matches!(cfg.algorithm, AlgoFamily::Secure(_));
     if let Some(dir) = shards {
+        if compress::manifest_version(dir)? == compress::COMPRESSED_FORMAT_VERSION {
+            if secure {
+                crate::bail!(
+                    "compressed shard directory {}: the secure protocols need the raw \
+                     column partition — re-run `dsanls shard` without --compress",
+                    dir.display()
+                );
+            }
+            if cfg.overlap_comm {
+                crate::bail!(
+                    "network.overlap_comm needs the raw blocks to prefetch against — \
+                     compressed shards hold only the fixed sketched views; drop the flag"
+                );
+            }
+            let (block, man) = crate::data::CompressedBlock::load(dir, rank)?;
+            validate_manifest(cfg, &man.base)?;
+            let cols = man.base.col_partition();
+            return Ok((
+                RankBlocks::Compressed(Box::new(block)),
+                LoadSource::CompressedShard,
+                Some(cols),
+            ));
+        }
         if rank >= cfg.nodes {
             // async parameter server: global metadata only
             let manifest = shard::read_manifest(dir)?;
@@ -446,14 +478,14 @@ fn build_node_data(
             check_shard_skew(cfg, &manifest, dir, secure)?;
             let data = NodeData::metadata(manifest.rows, manifest.cols, Some(manifest.fro_sq));
             let cols = manifest.col_partition();
-            return Ok((data, LoadSource::FileShard, Some(cols)));
+            return Ok((RankBlocks::Raw(data), LoadSource::FileShard, Some(cols)));
         }
         let (data, manifest) = NodeData::load(dir, rank, need_rows, need_cols)?;
         validate_manifest(cfg, &manifest)?;
         manifest.require_uniform_for(dir, secure)?;
         check_shard_skew(cfg, &manifest, dir, secure)?;
         let cols = manifest.col_partition();
-        return Ok((data, LoadSource::FileShard, Some(cols)));
+        return Ok((RankBlocks::Raw(data), LoadSource::FileShard, Some(cols)));
     }
 
     // shard-local synthesis: every data rank generates its row block (the
@@ -474,7 +506,7 @@ fn build_node_data(
         None
     };
     let data = NodeData::generate(dataset, cfg.seed, cfg.scale, row_range, col_range);
-    Ok((data, LoadSource::SynthShard, None))
+    Ok((RankBlocks::Raw(data), LoadSource::SynthShard, None))
 }
 
 /// A `secure.skew > 0` config promises a skewed column layout, but a
@@ -569,44 +601,86 @@ fn run_rank(
 ) -> Result<()> {
     // ---- shard-aware data plane: this rank's blocks, nothing more ----
     let tick = Instant::now();
-    let (mut data, source, shard_cols) = build_node_data(cfg, rank, shards)?;
+    let (mut blocks, source, shard_cols) = build_node_data(cfg, rank, shards)?;
     // measure pure build/load time before any collective: the barriers
     // below wait on peers, which would smear every rank's number up to
     // the slowest (EXPERIMENTS.md §sharded-vs-full compares load_secs)
     let load_secs = tick.elapsed().as_secs_f64();
+    if let RankBlocks::Compressed(_) = &blocks {
+        // the typed surface area matches the Job builder's: the modes that
+        // need raw blocks (or a re-servable copy of them) are rejected
+        // up front rather than failing mid-collective
+        if joining || wctl.elastic {
+            crate::bail!(
+                "elastic membership is not supported on compressed shards yet — a \
+                 joiner would need the dead rank's sketched views re-served; use \
+                 `launch --retries` for whole-attempt restarts instead"
+            );
+        }
+        if wctl.checkpoint.is_some() || wctl.resume.is_some() {
+            crate::bail!(
+                "checkpoint/resume is not supported on compressed input — the \
+                 checkpoint fingerprint cannot attest which sketched views produced \
+                 the factors; run to completion and save the output instead"
+            );
+        }
+    }
     if joining {
         // the survivors are parked in the mesh-level epoch rebuild, not
         // the startup collectives — a replacement must skip the data-plane
         // barrier and the ‖M‖² chain; the recovery exchange delivers the
         // authoritative Frobenius norm with the adopted state
-        if data.fro_sq.is_none() {
-            data.fro_sq = Some(f64::NAN);
+        if let RankBlocks::Raw(data) = &mut blocks {
+            if data.fro_sq.is_none() {
+                data.fro_sq = Some(f64::NAN);
+            }
         }
     } else {
         // every rank enters this barrier unconditionally, so a --shards
-        // mismatch across hosts surfaces as an actionable error here
-        // instead of desynchronising the collective stream (file-mode
-        // ranks skip the ‖M‖² chain that synth-mode ranks run)
+        // mismatch across hosts (raw vs compressed vs synthesis) surfaces
+        // as an actionable error here instead of desynchronising the
+        // collective stream (file-mode ranks skip the ‖M‖² chain that
+        // synth-mode ranks run)
         check_data_plane_agreement(&mut comm, source)?;
-        if data.fro_sq.is_none() {
-            // synth mode: resolve the exact global ‖M‖² with the ordered
-            // chain (bit-identical to the full-matrix value)
-            let fro = shard::exact_fro_sq(&mut comm, cfg.nodes, data.m_rows.as_ref())
-                .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
-            data.fro_sq = Some(fro);
+        if let RankBlocks::Raw(data) = &mut blocks {
+            if data.fro_sq.is_none() {
+                // synth mode: resolve the exact global ‖M‖² with the ordered
+                // chain (bit-identical to the full-matrix value)
+                let fro = shard::exact_fro_sq(&mut comm, cfg.nodes, data.m_rows.as_ref())
+                    .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
+                data.fro_sq = Some(fro);
+            }
         }
     }
     let (need_rows, _) = Algo::from_config(cfg).block_needs(rank);
-    if !need_rows {
-        data.drop_rows(); // the chain was its only consumer
-    }
-    let load = data.load_stats(rank, load_secs, source);
+    let (load, rows, cols) = match &mut blocks {
+        RankBlocks::Raw(data) => {
+            if !need_rows {
+                data.drop_rows(); // the chain was its only consumer
+            }
+            (data.load_stats(rank, load_secs, source), data.rows, data.cols)
+        }
+        RankBlocks::Compressed(cb) => (
+            LoadStats {
+                rank,
+                block_rows: cb.row_range.len(),
+                block_cols: cb.col_range.len(),
+                // the views are dense: every held value is explicit
+                nnz: cb.u_view().data().len() + cb.v_view().data().len(),
+                bytes: cb.resident_bytes(),
+                load_secs,
+                source,
+            },
+            cb.rows,
+            cb.cols,
+        ),
+    };
 
     // resolve the control plane now that the global shape is known (the
     // resume checkpoint validates against it); every worker derives the
     // identical stop policy from the identical forwarded flags, which is
     // what keeps the per-iteration collective stop poll agreed
-    let ctl = wctl.resolve(cfg, rank, data.rows, data.cols)?;
+    let ctl = wctl.resolve(cfg, rank, rows, cols)?;
 
     // mirror the simulated cluster's per-node thread cap so the
     // thread-count-sensitive reductions split identically (bit-identity)
@@ -615,7 +689,7 @@ fn run_rank(
     // catch panics from the algorithm layer (collective failures panic) so
     // they reach the coordinator as Error frames, not silent worker deaths
     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-        run_rank_inner(cfg, comm, rank, &data, &load, report, &ctl, shard_cols, joining)
+        run_rank_inner(cfg, comm, rank, &blocks, &load, report, &ctl, shard_cols, joining)
     }));
     crate::parallel::set_local_threads(None);
     match outcome {
@@ -643,7 +717,7 @@ fn run_rank_inner(
     cfg: &ExperimentConfig,
     comm: TcpComm,
     rank: usize,
-    data: &NodeData,
+    blocks: &RankBlocks,
     load: &LoadStats,
     report: &mut TcpStream,
     ctl: &RunControl,
@@ -654,12 +728,16 @@ fn run_rank_inner(
     // one generic node runner covers every algorithm family — the worker
     // only matches on the *output* kind to pick its wire encoding
     let algo = Algo::from_config(cfg);
+    let input = match blocks {
+        RankBlocks::Raw(data) => NodeInput::Shard(data),
+        RankBlocks::Compressed(cb) => NodeInput::Compressed(cb.as_ref()),
+    };
     // shard directories carry their column partition (possibly
     // nnz-balanced); otherwise derive it from the config
-    let cols = shard_cols.unwrap_or_else(|| coordinator::secure_partition(cfg, data.cols));
+    let cols = shard_cols.unwrap_or_else(|| coordinator::secure_partition(cfg, input.dims().1));
     let env = RankEnv {
         rank,
-        input: NodeInput::Shard(data),
+        input,
         cols: &cols,
         observer: None,
         audit: None,
@@ -1087,18 +1165,54 @@ pub fn launch_main(args: &[String]) -> Result<()> {
     // the workers take their column partition from the shard manifest, so
     // --verify-sim must hand the SAME partition to the simulated re-run
     let mut shard_cols: Option<Partition> = None;
+    let mut compressed_dir: Option<PathBuf> = None;
     if let Some(dir) = &opts.shards {
+        let dir = Path::new(dir);
         // fail fast on a mismatched shard set, before anything connects
-        let manifest = shard::read_manifest(Path::new(dir))?;
-        validate_manifest(cfg, &manifest)?;
-        if opts.verify_sim && shard::is_file_dataset(&manifest.dataset) {
-            crate::bail!(
-                "--verify-sim needs a generator-backed dataset; {} shards came from an \
-                 external file the simulator cannot regenerate",
-                manifest.dataset
-            );
+        if compress::manifest_version(dir)? == compress::COMPRESSED_FORMAT_VERSION {
+            let man = compress::read_compressed_manifest(dir)?;
+            validate_manifest(cfg, &man.base)?;
+            if matches!(cfg.algorithm, AlgoFamily::Secure(_)) {
+                crate::bail!(
+                    "compressed shards are supported by DSANLS and the MPI-FAUN \
+                     baselines only — re-run `dsanls shard` without --compress for \
+                     the secure protocols"
+                );
+            }
+            if opts.elastic {
+                crate::bail!(
+                    "--elastic is not supported on compressed shards yet — a joiner \
+                     would need the dead rank's sketched views re-served; use \
+                     --retries for whole-attempt restarts instead"
+                );
+            }
+            if opts.checkpoint.is_some() || opts.resume.is_some() {
+                crate::bail!(
+                    "--checkpoint/--resume are not supported on compressed input — \
+                     the checkpoint fingerprint cannot attest which sketched views \
+                     produced the factors"
+                );
+            }
+            if cfg.overlap_comm {
+                crate::bail!(
+                    "network.overlap_comm needs the raw blocks to prefetch against — \
+                     drop the flag to run on compressed shards"
+                );
+            }
+            shard_cols = Some(man.base.col_partition());
+            compressed_dir = Some(dir.to_path_buf());
+        } else {
+            let manifest = shard::read_manifest(dir)?;
+            validate_manifest(cfg, &manifest)?;
+            if opts.verify_sim && shard::is_file_dataset(&manifest.dataset) {
+                crate::bail!(
+                    "--verify-sim needs a generator-backed dataset; {} shards came from an \
+                     external file the simulator cannot regenerate",
+                    manifest.dataset
+                );
+            }
+            shard_cols = Some(manifest.col_partition());
         }
-        shard_cols = Some(manifest.col_partition());
     }
 
     // one rendezvous listener for every attempt: re-binding a pinned
@@ -1163,7 +1277,7 @@ pub fn launch_main(args: &[String]) -> Result<()> {
                 outcome.stop_reason.label()
             );
         } else {
-            verify_against_sim(cfg, &outcome, shard_cols)?;
+            verify_against_sim(cfg, &outcome, shard_cols, compressed_dir.as_deref())?;
         }
     }
     Ok(())
@@ -1564,6 +1678,7 @@ fn verify_against_sim(
     cfg: &ExperimentConfig,
     tcp: &Outcome,
     shard_cols: Option<Partition>,
+    compressed: Option<&Path>,
 ) -> Result<()> {
     if matches!(cfg.algorithm, AlgoFamily::Secure(SecureAlgo::AsynSd | SecureAlgo::AsynSsdV)) {
         println!("verify-sim: skipped (asynchronous protocols are order-dependent by design)");
@@ -1571,17 +1686,28 @@ fn verify_against_sim(
     }
     print!("verify-sim: running simulated backend… ");
     std::io::stdout().flush().ok();
-    let m = coordinator::load_dataset(cfg);
     let sim = {
         use crate::nmf::job::{DataSource, Job};
-        let mut b = Job::builder()
-            .from_config(cfg, m.cols())
-            .data(DataSource::Full(&m));
-        if let (Some(p), AlgoFamily::Secure(_)) = (&shard_cols, &cfg.algorithm) {
-            b = b.secure_partition(p.clone());
+        if let Some(dir) = compressed {
+            // the simulated re-run reads the SAME sketched views, so
+            // bit-identity across backends holds on the compressed plane too
+            let cols = compress::read_compressed_manifest(dir)?.base.cols;
+            Job::builder()
+                .from_config(cfg, cols)
+                .data(DataSource::Compressed(dir.to_path_buf()))
+                .run()
+                .unwrap_or_else(|e| panic!("verify-sim run failed: {e}"))
+        } else {
+            let m = coordinator::load_dataset(cfg);
+            let mut b = Job::builder()
+                .from_config(cfg, m.cols())
+                .data(DataSource::Full(&m));
+            if let (Some(p), AlgoFamily::Secure(_)) = (&shard_cols, &cfg.algorithm) {
+                b = b.secure_partition(p.clone());
+            }
+            b.run()
+                .unwrap_or_else(|e| panic!("verify-sim run failed: {e}"))
         }
-        b.run()
-            .unwrap_or_else(|e| panic!("verify-sim run failed: {e}"))
     };
     let identical = sim.u.data() == tcp.u.data() && sim.v.data() == tcp.v.data();
     println!("factors bit-identical to simulated backend: {identical}");

@@ -2,8 +2,9 @@
 //!
 //! `serve` loads a [`FactorModel`] from a training checkpoint and fronts
 //! it with the [`crate::serve::server`] batcher on a TCP address; `query`
-//! is the matching smoke-test client (top-k, reconstruction, fold-in and
-//! stats against a running server). DEPLOYMENT.md walks through the pair
+//! is the matching smoke-test client (top-k, reconstruction, user and
+//! item fold-in, and stats against a running server). DEPLOYMENT.md walks
+//! through the pair
 //! end-to-end and `scripts/deploy_localhost.sh` executes the walkthrough
 //! in CI.
 
@@ -85,7 +86,9 @@ pub fn serve_main(args: &[String]) -> Result<()> {
 
 fn parse_users(args: &[String]) -> Result<Vec<u64>> {
     let list = flag_value(args, "--users")
-        .ok_or_else(|| crate::err!("query needs --users ID[,ID...] (or --fold-in / --stats)"))?;
+        .ok_or_else(|| {
+            crate::err!("query needs --users ID[,ID...] (or --fold-in / --fold-in-item / --stats)")
+        })?;
     list.split(',')
         .map(|s| {
             s.trim()
@@ -95,21 +98,24 @@ fn parse_users(args: &[String]) -> Result<Vec<u64>> {
         .collect()
 }
 
-fn parse_fold_row(spec: &str) -> Result<Vec<(u64, f32)>> {
+fn parse_fold_row(spec: &str, flag: &str, id_name: &str) -> Result<Vec<(u64, f32)>> {
     spec.split(',')
         .map(|pair| {
-            let (item, val) = pair
-                .split_once(':')
-                .ok_or_else(|| crate::err!("--fold-in expects ITEM:RATING pairs, got {pair:?}"))?;
-            let item = item
+            let (id, val) = pair.split_once(':').ok_or_else(|| {
+                crate::err!(
+                    "{flag} expects {}:RATING pairs, got {pair:?}",
+                    id_name.to_uppercase()
+                )
+            })?;
+            let id = id
                 .trim()
                 .parse::<u64>()
-                .map_err(|_| crate::err!("bad fold-in item id {item:?}"))?;
+                .map_err(|_| crate::err!("bad fold-in {id_name} id {id:?}"))?;
             let val = val
                 .trim()
                 .parse::<f32>()
                 .map_err(|_| crate::err!("bad fold-in rating {val:?}"))?;
-            Ok((item, val))
+            Ok((id, val))
         })
         .collect()
 }
@@ -129,7 +135,7 @@ pub fn query_main(args: &[String]) -> Result<()> {
     }
 
     if let Some(spec) = flag_value(args, "--fold-in") {
-        let row = parse_fold_row(spec)?;
+        let row = parse_fold_row(spec, "--fold-in", "item")?;
         let n = parse_num::<usize>(args, "--top-k")?.unwrap_or(0);
         let (w, top) = client.fold_in(&row, n)?;
         println!(
@@ -138,6 +144,20 @@ pub fn query_main(args: &[String]) -> Result<()> {
         );
         if !top.is_empty() {
             println!("fold-in top: {}", fmt_top(&top));
+        }
+        return Ok(());
+    }
+
+    if let Some(spec) = flag_value(args, "--fold-in-item") {
+        let col = parse_fold_row(spec, "--fold-in-item", "user")?;
+        let n = parse_num::<usize>(args, "--top-k")?.unwrap_or(0);
+        let (h, top) = client.fold_in_item(&col, n)?;
+        println!(
+            "fold-in-item h: {}",
+            h.iter().map(|v| format!("{v:.4}")).collect::<Vec<_>>().join(" ")
+        );
+        if !top.is_empty() {
+            println!("fold-in-item top users: {}", fmt_top(&top));
         }
         return Ok(());
     }
@@ -189,10 +209,12 @@ mod tests {
         assert_eq!(parse_users(&args).unwrap(), vec![1, 2, 3]);
         assert!(parse_users(&s(&["--users", "1,x"])).is_err());
         assert_eq!(
-            parse_fold_row("3:1.5, 7:2").unwrap(),
+            parse_fold_row("3:1.5, 7:2", "--fold-in", "item").unwrap(),
             vec![(3, 1.5), (7, 2.0)]
         );
-        assert!(parse_fold_row("3=1.5").is_err());
+        assert!(parse_fold_row("3=1.5", "--fold-in", "item").is_err());
+        let err = parse_fold_row("3=1.5", "--fold-in-item", "user").unwrap_err().to_string();
+        assert!(err.contains("--fold-in-item expects USER:RATING"), "{err}");
         assert_eq!(parse_num::<usize>(&s(&["--top-k", "5"]), "--top-k").unwrap(), Some(5));
         assert!(parse_num::<usize>(&s(&["--top-k", "five"]), "--top-k").is_err());
     }

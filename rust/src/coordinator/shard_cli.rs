@@ -2,6 +2,7 @@
 //!
 //! ```text
 //! dsanls shard --out DIR [--nodes N] [--input FILE] [--balance nnz]
+//!              [--compress [--sketch subgaussian|countsketch] [--ratio R]]
 //!              [--config FILE] [--key=value ...]
 //! ```
 //!
@@ -35,15 +36,38 @@
 //! nodes; workers and `launch` refuse a directory that does not match
 //! their config (preventing confusing bit-identity failures from stale
 //! shards).
+//!
+//! `--compress` writes a **compressed** shard directory instead
+//! ([`crate::data::compress`]): each rank gets one `rank-<r>.cblk` file
+//! holding two fixed sketched views of its blocks — `M_{I_r:}·S_c` and
+//! `(M_{:J_r})ᵀ·S_r` — at roughly `1/R` of the raw block footprint
+//! (`--ratio R`, default 4). The sketching operators are *derived* from
+//! the manifest's seed, never shipped; `--sketch` picks the family
+//! (dense sub-Gaussian, default, or the sparse CountSketch). Workers
+//! autodetect the v3 manifest and factorize the views directly — the raw
+//! matrix never exists outside this command. Incompatible with `--input`
+//! (streaming ingest never materialises the matrix to sketch) and with
+//! `--balance nnz` (views have no per-column nnz).
 
 use std::path::PathBuf;
 
 use crate::coordinator;
+use crate::data::compress;
 use crate::data::ingest::{self, ShardBalance};
 use crate::data::partition::{uniform_partition, weight_balanced_partition};
 use crate::data::shard::{self, col_nnz_counts, ShardManifest};
 use crate::error::{Context, Result};
 use crate::linalg::Matrix;
+use crate::sketch::SketchKind;
+
+/// What `--compress` asked for.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CompressSpec {
+    /// Sketch family for the fixed views.
+    pub kind: SketchKind,
+    /// Target compression ratio `R` (views are ~`1/R` of the raw blocks).
+    pub ratio: f64,
+}
 
 /// Options for one `dsanls shard` invocation.
 pub struct ShardCliOptions {
@@ -55,6 +79,21 @@ pub struct ShardCliOptions {
     pub input: Option<PathBuf>,
     /// Column-axis balance policy (`--balance nnz|uniform`).
     pub balance: ShardBalance,
+    /// Write fixed sketched views instead of raw blocks (`--compress`).
+    pub compress: Option<CompressSpec>,
+}
+
+/// Map the `--sketch` operand onto a [`SketchKind`]. The compressed data
+/// plane supports the families whose fixed views keep the recovery bound
+/// of the compressed-NMF analysis: dense sub-Gaussian and CountSketch.
+fn parse_compress_sketch(name: &str) -> Result<SketchKind> {
+    match name.to_ascii_lowercase().as_str() {
+        "subgaussian" | "gaussian" | "g" => Ok(SketchKind::Gaussian),
+        "countsketch" | "cs" => Ok(SketchKind::CountSketch),
+        other => crate::bail!(
+            "--sketch for compressed shards takes subgaussian or countsketch, got {other}"
+        ),
+    }
 }
 
 /// Parse `shard` CLI arguments.
@@ -63,10 +102,27 @@ pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
     let mut input: Option<PathBuf> = None;
     let mut nodes_override = None;
     let mut balance = ShardBalance::Uniform;
+    let mut compress = false;
+    let mut sketch: Option<SketchKind> = None;
+    let mut ratio: Option<f64> = None;
     let mut cfg_args: Vec<String> = Vec::new();
     let mut i = 0;
     while i < args.len() {
         match args[i].as_str() {
+            "--compress" => {
+                compress = true;
+                i += 1;
+            }
+            "--sketch" => {
+                let v = args.get(i + 1).context("--sketch needs subgaussian|countsketch")?;
+                sketch = Some(parse_compress_sketch(v)?);
+                i += 2;
+            }
+            "--ratio" => {
+                let v = args.get(i + 1).context("--ratio needs a number >= 1")?;
+                ratio = Some(v.parse::<f64>().map_err(|e| crate::err!("--ratio {v}: {e}"))?);
+                i += 2;
+            }
             "--out" => {
                 out = Some(PathBuf::from(args.get(i + 1).context("--out needs a DIR")?));
                 i += 2;
@@ -104,7 +160,30 @@ pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
         crate::bail!("shard needs at least one node");
     }
     let out = out.context("shard needs --out DIR")?;
-    Ok(ShardCliOptions { cfg, out, input, balance })
+    let compress = if compress {
+        if input.is_some() {
+            crate::bail!(
+                "--compress needs a generator-backed dataset — streaming ingest \
+                 (--input) never materialises the matrix to sketch"
+            );
+        }
+        if balance == ShardBalance::Nnz {
+            crate::bail!(
+                "--compress assumes uniform partitions — drop `--balance nnz` (the \
+                 sketched views have no per-column nnz to balance)"
+            );
+        }
+        Some(CompressSpec {
+            kind: sketch.unwrap_or(SketchKind::Gaussian),
+            ratio: ratio.unwrap_or(4.0),
+        })
+    } else {
+        if sketch.is_some() || ratio.is_some() {
+            crate::bail!("--sketch/--ratio apply to compressed shards — add --compress");
+        }
+        None
+    };
+    Ok(ShardCliOptions { cfg, out, input, balance, compress })
 }
 
 /// `dsanls shard` entry point: generate (or stream-ingest), slice, write,
@@ -112,6 +191,9 @@ pub fn parse_shard_args(args: &[String]) -> Result<ShardCliOptions> {
 pub fn shard_main(args: &[String]) -> Result<()> {
     let opts = parse_shard_args(args)?;
     let cfg = &opts.cfg;
+    if let Some(spec) = opts.compress {
+        return compress_main(&opts, spec);
+    }
     let (manifest, bytes) = match &opts.input {
         Some(path) => {
             // chunked single-pass bucketing: the full matrix is never built
@@ -175,6 +257,54 @@ pub fn shard_main(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// `dsanls shard --compress`: materialise once, sketch each rank's blocks
+/// into fixed views, write the v3 directory.
+fn compress_main(opts: &ShardCliOptions, spec: CompressSpec) -> Result<()> {
+    let cfg = &opts.cfg;
+    println!(
+        "compress-sharding {} (seed {}, scale {}) for {} node(s) into {} \
+         ({:?} sketch, ratio {})",
+        cfg.dataset,
+        cfg.seed,
+        cfg.scale,
+        cfg.nodes,
+        opts.out.display(),
+        spec.kind,
+        spec.ratio
+    );
+    let m = coordinator::load_dataset(cfg);
+    let (d_r, d_c) = compress::ratio_dims(m.rows(), m.cols(), spec.ratio)?;
+    let base = ShardManifest {
+        nodes: cfg.nodes,
+        rows: m.rows(),
+        cols: m.cols(),
+        fro_sq: m.fro_sq(),
+        seed: cfg.seed,
+        scale: cfg.scale,
+        dense: matches!(m, Matrix::Dense(_)),
+        dataset: cfg.dataset.clone(),
+        row_bounds: uniform_partition(m.rows(), cfg.nodes).bounds(),
+        col_bounds: uniform_partition(m.cols(), cfg.nodes).bounds(),
+    };
+    let (man, bytes) = compress::write_compressed_dir(&opts.out, &m, &base, spec.kind, d_r, d_c)?;
+    println!(
+        "wrote {}x{} as {} compressed view file(s) (d_r={}, d_c={}), {:.1} MiB total",
+        man.base.rows,
+        man.base.cols,
+        cfg.nodes,
+        man.d_r,
+        man.d_c,
+        bytes as f64 / (1024.0 * 1024.0)
+    );
+    println!(
+        "next: copy manifest.bin + rank-<r>.cblk to each host, start workers with \
+         `dsanls worker ... --shards {}` — workers autodetect the compressed format \
+         (see DEPLOYMENT.md \"Compressed shards\")",
+        opts.out.display()
+    );
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -202,6 +332,57 @@ mod tests {
             .map(|s| s.to_string())
             .collect();
         assert!(parse_shard_args(&args).is_err(), "unknown balance policy must error");
+    }
+
+    #[test]
+    fn compress_args_parse_and_validate() {
+        let mk = |args: &[&str]| {
+            parse_shard_args(&args.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+        };
+        let o = mk(&["--out", "/tmp/s", "--compress"]).unwrap();
+        assert_eq!(o.compress, Some(CompressSpec { kind: SketchKind::Gaussian, ratio: 4.0 }));
+        let o = mk(&[
+            "--out", "/tmp/s", "--compress", "--sketch", "countsketch", "--ratio", "8",
+        ])
+        .unwrap();
+        assert_eq!(o.compress, Some(CompressSpec { kind: SketchKind::CountSketch, ratio: 8.0 }));
+        // srht/subsample keep no recovery bound for fixed views — rejected
+        assert!(mk(&["--out", "/tmp/s", "--compress", "--sketch", "srht"]).is_err());
+        assert!(mk(&["--out", "/tmp/s", "--ratio", "4"]).is_err(), "--ratio needs --compress");
+        assert!(mk(&["--out", "/tmp/s", "--sketch", "g"]).is_err(), "--sketch needs --compress");
+        assert!(mk(&["--out", "/tmp/s", "--compress", "--balance", "nnz"]).is_err());
+        assert!(mk(&["--out", "/tmp/s", "--compress", "--input", "/x.coo"]).is_err());
+    }
+
+    #[test]
+    fn compress_main_writes_loadable_dir_raw_reader_refuses() {
+        let dir = std::env::temp_dir()
+            .join(format!("dsanls_shardcompress_{}", std::process::id()));
+        let args: Vec<String> = [
+            "--out",
+            dir.to_str().unwrap(),
+            "--nodes",
+            "2",
+            "--experiment.dataset=face",
+            "--experiment.scale=0.05",
+            "--compress",
+            "--ratio",
+            "4",
+        ]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+        shard_main(&args).unwrap();
+        let man = compress::read_compressed_manifest(&dir).unwrap();
+        assert_eq!(man.base.nodes, 2);
+        assert_eq!(man.kind, SketchKind::Gaussian);
+        let (block, _) = crate::data::CompressedBlock::load(&dir, 1).unwrap();
+        assert_eq!(block.d_c(), man.d_c);
+        assert_eq!(block.d_r(), man.d_r);
+        // the raw reader must refuse the v3 directory with a typed message
+        let err = shard::read_manifest(&dir).unwrap_err().to_string();
+        assert!(err.contains("compressed"), "raw reader should name the format: {err}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

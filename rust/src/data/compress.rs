@@ -1,0 +1,656 @@
+//! Compressed data plane: factorize directly from sketched shards.
+//!
+//! The paper sketches the NNLS *subproblem* each iteration (Sec. 4); every
+//! rank still holds its full raw block, so the deployable matrix size is
+//! capped by per-rank RAM and disk. Following Chaudhry & Rebrova (arXiv
+//! 2409.04994), this module stores only two **fixed** sketched views of
+//! each rank's data and runs the multiplicative updates against them:
+//!
+//! * `u_view = M_{I_r:} · S_c`  (`|I_r| × d_c`) — the U-updates' data side,
+//! * `v_view = (M_{:J_r})ᵀ · S_r` (`|J_r| × d_r`) — the V-updates' data side,
+//!
+//! with `S_c ∈ R^{cols×d_c}`, `S_r ∈ R^{rows×d_r}` drawn once from the
+//! manifest seed (sub-Gaussian or CountSketch, reused from
+//! [`crate::sketch`]). Disk, RAM residency, and bootstrap network all
+//! shrink by roughly the compression ratio `R` (`d ≈ n/R`); the raw matrix
+//! never exists on a worker.
+//!
+//! **Determinism.** The sketch pair is regenerated — never shipped — from
+//! `(kind, dims, seed)` recorded in the manifest, at the reserved stream
+//! cursor [`SKETCH_CURSOR`] of the same [`crate::rng::StreamRng`] that
+//! drives the per-iteration subproblem sketches. Every rank, backend, and
+//! re-joining replacement derives bit-identical sketches, so compressed
+//! runs stay bit-identical across Sim/Tcp exactly like raw runs.
+//!
+//! **Trace semantics.** Without raw data the exact relative error is not
+//! computable; runs on compressed input trace the compressed-domain proxy
+//! `‖M·S_c − U·(VᵀS_c)ᵀ‖_F / ‖M·S_c‖_F` instead, against the exact
+//! sketched norm recorded here at shard time (`sketched_fro_sq`).
+//!
+//! **On-disk format.** A compressed directory reuses the shard manifest
+//! magic with format **version 3**: the v2 manifest body
+//! ([`crate::data::shard::write_manifest_body`]) followed by the sketch
+//! extension (kind, `d_r`, `d_c`, seed, sketched norm), plus one
+//! `rank-{r}.cblk` view file per rank. The v2 reader rejects v3 with a
+//! "this is a compressed shard set" diagnostic and vice versa; every parse
+//! error names the offending file.
+
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::ops::Range;
+use std::path::{Path, PathBuf};
+
+use crate::data::shard::{self, ShardManifest};
+use crate::error::{Context, Result};
+use crate::linalg::{Mat, Matrix};
+use crate::rng::{Role, StreamRng};
+use crate::sketch::{SketchKind, SketchMatrix};
+
+/// On-disk format version of compressed shard sets. Version 3 extends the
+/// v2 raw-shard manifest with the sketch extension; the two readers reject
+/// each other's directories with typed diagnostics.
+pub const COMPRESSED_FORMAT_VERSION: u32 = 3;
+
+/// Reserved [`StreamRng`] iteration cursor for the *fixed* data sketches.
+/// Per-iteration subproblem sketches use cursors `0..iterations`, so the
+/// data sketches can never collide with them (and compressed runs replace
+/// the per-iteration sketches anyway).
+pub const SKETCH_CURSOR: u64 = u64::MAX;
+
+const CBLOCK_MAGIC: &[u8; 8] = b"DSCPBLK1";
+
+/// Error-message framing ("truncated compressed shard file …").
+const IO: crate::binio::BinFormat = crate::binio::COMPRESSED;
+
+/// Metadata of a compressed shard directory: the v2 base manifest (shape,
+/// nodes, generator identity, exact **raw** `‖M‖²_F`, partitions) plus the
+/// sketch extension every rank needs to regenerate `S_r`/`S_c` and to
+/// normalise the compressed-domain error trace.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedManifest {
+    /// The v2 manifest body (`fro_sq` is the exact *raw* norm, kept for
+    /// provenance; compressed runs never consume it).
+    pub base: ShardManifest,
+    /// Sketch family of both fixed sketches.
+    pub kind: SketchKind,
+    /// Row-sketch width: `S_r ∈ R^{rows×d_r}` (V-updates' data side).
+    pub d_r: usize,
+    /// Column-sketch width: `S_c ∈ R^{cols×d_c}` (U-updates' data side).
+    pub d_c: usize,
+    /// Seed the fixed sketch pair is derived from (the manifest seed at
+    /// shard time — recorded explicitly so the derivation is self-
+    /// contained).
+    pub sketch_seed: u64,
+    /// Exact `‖M·S_c‖²_F`, accumulated in rank order at shard time — the
+    /// denominator of the compressed-domain error trace and the factor-
+    /// initialisation norm.
+    pub sketched_fro_sq: f64,
+}
+
+/// One rank's compressed view: the two fixed sketched blocks plus the
+/// regenerated sketch pair, resident for the whole run (zero per-iteration
+/// sketch generation). This is what [`crate::data::NodeInput::Compressed`]
+/// hands the runners.
+#[derive(Debug, Clone)]
+pub struct CompressedBlock {
+    /// Global matrix rows.
+    pub rows: usize,
+    /// Global matrix columns.
+    pub cols: usize,
+    /// Global row indices `I_r` of `u_view`'s rows.
+    pub row_range: Range<usize>,
+    /// Global column indices `J_r` of `v_view`'s rows.
+    pub col_range: Range<usize>,
+    /// Sketch family.
+    pub kind: SketchKind,
+    /// Seed the sketch pair was derived from.
+    pub sketch_seed: u64,
+    /// Exact global `‖M·S_c‖²_F` (from the manifest).
+    pub sketched_fro_sq: f64,
+    u_view: Mat,
+    v_view: Mat,
+    s_c: SketchMatrix,
+    s_r: SketchMatrix,
+}
+
+impl CompressedBlock {
+    /// `M_{I_r:} · S_c` (`|I_r| × d_c`) — the U-updates' data operand.
+    pub fn u_view(&self) -> &Mat {
+        &self.u_view
+    }
+
+    /// `(M_{:J_r})ᵀ · S_r` (`|J_r| × d_r`) — the V-updates' data operand.
+    pub fn v_view(&self) -> &Mat {
+        &self.v_view
+    }
+
+    /// The fixed column sketch `S_c ∈ R^{cols×d_c}`.
+    pub fn s_c(&self) -> &SketchMatrix {
+        &self.s_c
+    }
+
+    /// The fixed row sketch `S_r ∈ R^{rows×d_r}`.
+    pub fn s_r(&self) -> &SketchMatrix {
+        &self.s_r
+    }
+
+    /// Column-sketch width `d_c` (the compressed run's effective `d_u`).
+    pub fn d_c(&self) -> usize {
+        self.s_c.d()
+    }
+
+    /// Row-sketch width `d_r` (the compressed run's effective `d_v`).
+    pub fn d_r(&self) -> usize {
+        self.s_r.d()
+    }
+
+    /// Resident bytes: both views plus the regenerated sketch pair (dense
+    /// Gaussian sketches materialise `n×d` floats; the structured families
+    /// are `O(n)`).
+    pub fn resident_bytes(&self) -> usize {
+        self.u_view.data().len() * 4
+            + self.v_view.data().len() * 4
+            + self.s_c.resident_bytes()
+            + self.s_r.resident_bytes()
+    }
+
+    /// Load one rank's compressed view from a `dsanls shard --compress`
+    /// directory, cross-checking the view file against the manifest and
+    /// regenerating the sketch pair from the recorded derivation.
+    pub fn load(dir: &Path, rank: usize) -> Result<(CompressedBlock, CompressedManifest)> {
+        let man = read_compressed_manifest(dir)?;
+        if rank >= man.base.nodes {
+            crate::bail!("rank {rank} outside compressed shard set of {} nodes", man.base.nodes);
+        }
+        let path = cblock_path(dir, rank);
+        let (row_range, col_range, u_view, v_view) = read_cblock_file(&path, rank, &man)
+            .with_context(|| format!("reading compressed shard block {}", path.display()))?;
+        let (s_r, s_c) =
+            fixed_sketch_pair(man.kind, man.base.rows, man.base.cols, man.d_r, man.d_c, man.sketch_seed);
+        Ok((
+            CompressedBlock {
+                rows: man.base.rows,
+                cols: man.base.cols,
+                row_range,
+                col_range,
+                kind: man.kind,
+                sketch_seed: man.sketch_seed,
+                sketched_fro_sq: man.sketched_fro_sq,
+                u_view,
+                v_view,
+                s_c,
+                s_r,
+            },
+            man,
+        ))
+    }
+}
+
+/// Derive the fixed sketch pair `(S_r, S_c)` from a seed. Deterministic in
+/// `(kind, rows, cols, d_r, d_c, seed)`: every rank and every re-join
+/// generates bit-identical sketches — they are recorded by derivation, not
+/// shipped.
+pub fn fixed_sketch_pair(
+    kind: SketchKind,
+    rows: usize,
+    cols: usize,
+    d_r: usize,
+    d_c: usize,
+    seed: u64,
+) -> (SketchMatrix, SketchMatrix) {
+    let stream = StreamRng::new(seed);
+    let s_c =
+        SketchMatrix::generate(kind, cols, d_c, &mut stream.for_iteration(SKETCH_CURSOR, Role::SketchU));
+    let s_r =
+        SketchMatrix::generate(kind, rows, d_r, &mut stream.for_iteration(SKETCH_CURSOR, Role::SketchV));
+    (s_r, s_c)
+}
+
+/// Map a compression ratio `R` to sketch widths `d_r ≈ rows/R`,
+/// `d_c ≈ cols/R`, clamped into the valid `1..=n` range.
+pub fn ratio_dims(rows: usize, cols: usize, ratio: f64) -> Result<(usize, usize)> {
+    if !(ratio >= 1.0 && ratio.is_finite()) {
+        crate::bail!("compression ratio must be a finite value >= 1, got {ratio}");
+    }
+    let d_r = ((rows as f64 / ratio).round() as usize).clamp(1, rows);
+    let d_c = ((cols as f64 / ratio).round() as usize).clamp(1, cols);
+    Ok((d_r, d_c))
+}
+
+/// Path of one rank's compressed view file.
+pub fn cblock_path(dir: &Path, rank: usize) -> PathBuf {
+    dir.join(format!("rank-{rank}.cblk"))
+}
+
+/// Sniff a shard directory's manifest format version (2 = raw, 3 =
+/// compressed) without parsing the body — how `launch`/`worker` autodetect
+/// which data plane a `--shards` directory belongs to.
+pub fn manifest_version(dir: &Path) -> Result<u32> {
+    let path = shard::manifest_path(dir);
+    let sniff = |path: &Path| -> Result<u32> {
+        let file = std::fs::File::open(path).context("opening file")?;
+        let mut r = BufReader::new(file);
+        let mut got = [0u8; 8];
+        IO.read_exact(&mut r, &mut got, "magic")?;
+        if &got != shard::MANIFEST_MAGIC {
+            crate::bail!("bad magic {got:02x?} — not a dsanls shard manifest");
+        }
+        IO.read_u32(&mut r, "format version")
+    };
+    sniff(&path).with_context(|| format!("reading shard manifest {}", path.display()))
+}
+
+/// Write a complete compressed shard directory: the v3 manifest plus one
+/// `rank-{r}.cblk` view file per rank, sketched from the materialised `m`
+/// along the manifest's (uniform) partitions. Shard preparation is the one
+/// place the full matrix may exist; workers then touch only their sketched
+/// views. Returns the manifest (with the exact sketched norm filled in)
+/// and the total bytes written.
+pub fn write_compressed_dir(
+    dir: &Path,
+    m: &Matrix,
+    base: &ShardManifest,
+    kind: SketchKind,
+    d_r: usize,
+    d_c: usize,
+) -> Result<(CompressedManifest, u64)> {
+    assert_eq!((base.rows, base.cols), (m.rows(), m.cols()), "manifest/matrix shape");
+    if base.is_balanced() {
+        crate::bail!(
+            "compressed shards assume uniform partitions — drop `--balance nnz` \
+             (the sketched views have no per-column nnz to balance)"
+        );
+    }
+    if !(1..=base.rows).contains(&d_r) || !(1..=base.cols).contains(&d_c) {
+        crate::bail!(
+            "sketch dims d_r={d_r}, d_c={d_c} outside 1..={} x 1..={} — pick a \
+             smaller --ratio",
+            base.rows,
+            base.cols
+        );
+    }
+    std::fs::create_dir_all(dir)
+        .with_context(|| format!("creating compressed shard directory {}", dir.display()))?;
+    let (s_r, s_c) = fixed_sketch_pair(kind, base.rows, base.cols, d_r, d_c, base.seed);
+    let row_part = base.row_partition();
+    let col_part = base.col_partition();
+    let mut sketched_fro_sq = 0.0f64;
+    let mut total = 0u64;
+    for rank in 0..base.nodes {
+        let rr = row_part.range(rank);
+        let cr = col_part.range(rank);
+        let u_view = s_c.mul_right(&m.row_block(rr.clone()));
+        let v_view = s_r.mul_right(&m.col_block(cr.clone()).transpose());
+        // rank-ordered accumulation: the same deterministic constant no
+        // matter how the directory is later consumed
+        sketched_fro_sq += u_view.fro_sq();
+        total += write_cblock(dir, rank, base.nodes, &rr, &cr, &u_view, &v_view)?;
+    }
+    let man = CompressedManifest {
+        base: base.clone(),
+        kind,
+        d_r,
+        d_c,
+        sketch_seed: base.seed,
+        sketched_fro_sq,
+    };
+    total += write_compressed_manifest(dir, &man)?;
+    Ok((man, total))
+}
+
+fn write_compressed_manifest(dir: &Path, man: &CompressedManifest) -> Result<u64> {
+    let path = shard::manifest_path(dir);
+    let file = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(shard::MANIFEST_MAGIC).context("writing compressed manifest magic")?;
+    IO.write_u32(&mut w, COMPRESSED_FORMAT_VERSION)?;
+    shard::write_manifest_body(&mut w, IO, &man.base)?;
+    w.write_all(&[man.kind.code()]).context("writing sketch kind")?;
+    IO.write_u64(&mut w, man.d_r as u64)?;
+    IO.write_u64(&mut w, man.d_c as u64)?;
+    IO.write_u64(&mut w, man.sketch_seed)?;
+    IO.write_f64(&mut w, man.sketched_fro_sq)?;
+    w.flush().context("flushing compressed manifest")?;
+    Ok(std::fs::metadata(&path).map(|md| md.len()).unwrap_or(0))
+}
+
+/// Read and validate a compressed shard directory's manifest, with typed
+/// rejection of raw (v1/v2) directories. Every parse error carries the
+/// offending file path.
+pub fn read_compressed_manifest(dir: &Path) -> Result<CompressedManifest> {
+    let path = shard::manifest_path(dir);
+    read_cmanifest_file(&path)
+        .with_context(|| format!("reading compressed shard manifest {}", path.display()))
+}
+
+fn read_cmanifest_file(path: &Path) -> Result<CompressedManifest> {
+    let file = std::fs::File::open(path).context("opening file")?;
+    let mut r = BufReader::new(file);
+    let mut got = [0u8; 8];
+    IO.read_exact(&mut r, &mut got, "magic")?;
+    if &got != shard::MANIFEST_MAGIC {
+        crate::bail!("bad magic {got:02x?} — not a dsanls shard manifest");
+    }
+    let version = IO.read_u32(&mut r, "format version")?;
+    if version != COMPRESSED_FORMAT_VERSION {
+        crate::bail!(
+            "format version {version} marks a *raw* shard set — this code path reads \
+             compressed shards (version {COMPRESSED_FORMAT_VERSION}); re-shard with \
+             `dsanls shard --compress` or point at a raw directory instead"
+        );
+    }
+    let base = shard::read_manifest_body(&mut r, IO)?;
+    let mut kind_b = [0u8; 1];
+    IO.read_exact(&mut r, &mut kind_b, "sketch kind")?;
+    let kind = SketchKind::from_code(kind_b[0])?;
+    let d_r = IO.read_u64(&mut r, "row sketch dim")? as usize;
+    let d_c = IO.read_u64(&mut r, "col sketch dim")? as usize;
+    let sketch_seed = IO.read_u64(&mut r, "sketch seed")?;
+    let sketched_fro_sq = IO.read_f64(&mut r, "sketched fro_sq")?;
+    if !(1..=base.rows).contains(&d_r) || !(1..=base.cols).contains(&d_c) {
+        crate::bail!(
+            "sketch dims d_r={d_r}, d_c={d_c} outside the {}x{} matrix (corrupt file?)",
+            base.rows,
+            base.cols
+        );
+    }
+    if !sketched_fro_sq.is_finite() || sketched_fro_sq < 0.0 {
+        crate::bail!("sketched fro_sq {sketched_fro_sq} is not a norm (corrupt file?)");
+    }
+    Ok(CompressedManifest { base, kind, d_r, d_c, sketch_seed, sketched_fro_sq })
+}
+
+fn write_cblock(
+    dir: &Path,
+    rank: usize,
+    nodes: usize,
+    rr: &Range<usize>,
+    cr: &Range<usize>,
+    u_view: &Mat,
+    v_view: &Mat,
+) -> Result<u64> {
+    let path = cblock_path(dir, rank);
+    let file = std::fs::File::create(&path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = BufWriter::new(file);
+    w.write_all(CBLOCK_MAGIC).context("writing compressed block magic")?;
+    IO.write_u32(&mut w, COMPRESSED_FORMAT_VERSION)?;
+    IO.write_u64(&mut w, rank as u64)?;
+    IO.write_u64(&mut w, nodes as u64)?;
+    IO.write_u64(&mut w, rr.start as u64)?;
+    IO.write_u64(&mut w, rr.end as u64)?;
+    IO.write_u64(&mut w, cr.start as u64)?;
+    IO.write_u64(&mut w, cr.end as u64)?;
+    for view in [u_view, v_view] {
+        IO.write_u64(&mut w, view.rows() as u64)?;
+        IO.write_u64(&mut w, view.cols() as u64)?;
+        IO.write_f32s(&mut w, view.data())?;
+    }
+    w.flush().context("flushing compressed block file")?;
+    Ok(std::fs::metadata(&path).map(|md| md.len()).unwrap_or(0))
+}
+
+type CblockFields = (Range<usize>, Range<usize>, Mat, Mat);
+
+fn read_cblock_file(path: &Path, rank: usize, man: &CompressedManifest) -> Result<CblockFields> {
+    let file = std::fs::File::open(path).context("opening file")?;
+    let mut r = BufReader::new(file);
+    let mut got = [0u8; 8];
+    IO.read_exact(&mut r, &mut got, "magic")?;
+    if &got != CBLOCK_MAGIC {
+        crate::bail!("bad magic {got:02x?} — not a dsanls compressed block file");
+    }
+    let version = IO.read_u32(&mut r, "format version")?;
+    if version != COMPRESSED_FORMAT_VERSION {
+        crate::bail!(
+            "compressed block format version {version}, this binary reads \
+             {COMPRESSED_FORMAT_VERSION} — regenerate with `dsanls shard --compress`"
+        );
+    }
+    let file_rank = IO.read_u64(&mut r, "rank")? as usize;
+    let nodes = IO.read_u64(&mut r, "nodes")? as usize;
+    if file_rank != rank {
+        crate::bail!("block file says rank {file_rank}, expected rank {rank}");
+    }
+    if nodes != man.base.nodes {
+        crate::bail!(
+            "block sharded for {nodes} nodes, manifest says {} (mixed shard sets?)",
+            man.base.nodes
+        );
+    }
+    let rs = IO.read_u64(&mut r, "row range start")? as usize;
+    let re = IO.read_u64(&mut r, "row range end")? as usize;
+    let cs = IO.read_u64(&mut r, "col range start")? as usize;
+    let ce = IO.read_u64(&mut r, "col range end")? as usize;
+    let rr = rs..re;
+    let cr = cs..ce;
+    if rr != man.base.row_partition().range(rank) || cr != man.base.col_partition().range(rank) {
+        crate::bail!(
+            "rank {rank} block spans rows {rr:?} cols {cr:?} but the manifest partitions \
+             it at rows {:?} cols {:?} (mixed shard sets?)",
+            man.base.row_partition().range(rank),
+            man.base.col_partition().range(rank)
+        );
+    }
+    let mut views = Vec::with_capacity(2);
+    for (name, expect_rows, expect_cols) in
+        [("u_view", rr.len(), man.d_c), ("v_view", cr.len(), man.d_r)]
+    {
+        let rows = IO.read_u64(&mut r, "view rows")? as usize;
+        let cols = IO.read_u64(&mut r, "view cols")? as usize;
+        if (rows, cols) != (expect_rows, expect_cols) {
+            crate::bail!(
+                "{name} is {rows}x{cols}, manifest implies {expect_rows}x{expect_cols} \
+                 (corrupt file?)"
+            );
+        }
+        // a corrupt length field must error, not attempt a huge allocation
+        const MAX_ELEMS: usize = 1 << 31;
+        let n = rows.saturating_mul(cols);
+        if n > MAX_ELEMS {
+            crate::bail!("{name} claims {n} values (corrupt length field?)");
+        }
+        let data = IO.read_f32s(&mut r, n, "view payload")?;
+        views.push(Mat::from_vec(rows, cols, data));
+    }
+    let v_view = views.pop().expect("two views read");
+    let u_view = views.pop().expect("two views read");
+    Ok((rr, cr, u_view, v_view))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::shard::matrix_bits_eq;
+
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("dsanls_compress_{tag}_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn base_for(m: &Matrix, nodes: usize) -> ShardManifest {
+        ShardManifest::uniform(
+            nodes,
+            m.rows(),
+            m.cols(),
+            m.fro_sq(),
+            7,
+            0.02,
+            matches!(m, Matrix::Dense(_)),
+            "FACE".into(),
+        )
+    }
+
+    #[test]
+    fn roundtrip_views_bit_identical_for_dense_and_sparse() {
+        for d in [crate::data::Dataset::Face, crate::data::Dataset::Mnist] {
+            let full = d.generate_scaled(7, 0.02);
+            let base = base_for(&full, 2);
+            let (d_r, d_c) = ratio_dims(full.rows(), full.cols(), 4.0).unwrap();
+            let dir = tmpdir(&format!("rt_{d:?}"));
+            let (man, bytes) = write_compressed_dir(
+                &dir,
+                &full,
+                &base,
+                SketchKind::CountSketch,
+                d_r,
+                d_c,
+            )
+            .unwrap();
+            assert!(bytes > 0);
+            assert_eq!(read_compressed_manifest(&dir).unwrap(), man);
+            assert_eq!(manifest_version(&dir).unwrap(), COMPRESSED_FORMAT_VERSION);
+
+            let (s_r, s_c) = fixed_sketch_pair(
+                man.kind,
+                full.rows(),
+                full.cols(),
+                d_r,
+                d_c,
+                man.sketch_seed,
+            );
+            for rank in 0..2 {
+                let (blk, _) = CompressedBlock::load(&dir, rank).unwrap();
+                let rr = base.row_partition().range(rank);
+                let cr = base.col_partition().range(rank);
+                assert_eq!((blk.row_range.clone(), blk.col_range.clone()), (rr.clone(), cr.clone()));
+                let u_expect = s_c.mul_right(&full.row_block(rr));
+                let v_expect = s_r.mul_right(&full.col_block(cr).transpose());
+                assert!(
+                    matrix_bits_eq(
+                        &Matrix::Dense(u_expect),
+                        &Matrix::Dense(blk.u_view().clone())
+                    ),
+                    "{d:?} rank {rank}: u_view mismatch"
+                );
+                assert!(
+                    matrix_bits_eq(
+                        &Matrix::Dense(v_expect),
+                        &Matrix::Dense(blk.v_view().clone())
+                    ),
+                    "{d:?} rank {rank}: v_view mismatch"
+                );
+                assert!(blk.resident_bytes() > 0);
+                assert_eq!(blk.sketched_fro_sq.to_bits(), man.sketched_fro_sq.to_bits());
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn sketch_regeneration_is_deterministic_across_loads() {
+        let full = crate::data::Dataset::Face.generate_scaled(7, 0.02);
+        let base = base_for(&full, 2);
+        let (d_r, d_c) = ratio_dims(full.rows(), full.cols(), 3.0).unwrap();
+        let dir = tmpdir("det");
+        write_compressed_dir(&dir, &full, &base, SketchKind::Gaussian, d_r, d_c).unwrap();
+        let (a, _) = CompressedBlock::load(&dir, 1).unwrap();
+        let (b, _) = CompressedBlock::load(&dir, 1).unwrap();
+        assert_eq!(a.u_view().data(), b.u_view().data());
+        // the regenerated sketches apply bit-identically too
+        let probe = Mat::from_vec(
+            full.cols(),
+            1,
+            (0..full.cols()).map(|i| (i as f32).sin()).collect(),
+        );
+        let pa = a.s_c().mul_rows_tn(&probe, 0);
+        let pb = b.s_c().mul_rows_tn(&probe, 0);
+        assert_eq!(pa.data(), pb.data());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn raw_and_compressed_readers_reject_each_other() {
+        let full = crate::data::Dataset::Face.generate_scaled(7, 0.02);
+        let base = base_for(&full, 2);
+
+        // raw dir: v3 reader refuses with a typed "raw shard set" message
+        let raw = tmpdir("raw");
+        shard::write_shard_dir(&raw, &full, &base).unwrap();
+        assert_eq!(manifest_version(&raw).unwrap(), shard::SHARD_FORMAT_VERSION);
+        let err = read_compressed_manifest(&raw).unwrap_err().to_string();
+        assert!(err.contains("raw"), "{err}");
+        assert!(err.contains("--compress"), "{err}");
+        assert!(err.contains(shard::manifest_path(&raw).to_str().unwrap()), "{err}");
+
+        // compressed dir: v2 reader refuses with a typed "compressed" message
+        let cdir = tmpdir("cmp");
+        let (d_r, d_c) = ratio_dims(full.rows(), full.cols(), 4.0).unwrap();
+        write_compressed_dir(&cdir, &full, &base, SketchKind::CountSketch, d_r, d_c).unwrap();
+        let err = shard::read_manifest(&cdir).unwrap_err().to_string();
+        assert!(err.contains("compressed"), "{err}");
+        assert!(err.contains(shard::manifest_path(&cdir).to_str().unwrap()), "{err}");
+
+        std::fs::remove_dir_all(&raw).ok();
+        std::fs::remove_dir_all(&cdir).ok();
+    }
+
+    #[test]
+    fn truncated_and_corrupt_files_error_with_path() {
+        let full = crate::data::Dataset::Face.generate_scaled(7, 0.02);
+        let base = base_for(&full, 2);
+        let dir = tmpdir("trunc");
+        let (d_r, d_c) = ratio_dims(full.rows(), full.cols(), 4.0).unwrap();
+        write_compressed_dir(&dir, &full, &base, SketchKind::CountSketch, d_r, d_c).unwrap();
+
+        let mpath = shard::manifest_path(&dir);
+        let bytes = std::fs::read(&mpath).unwrap();
+        for cut in [0usize, 4, 8, 11, 20, bytes.len() - 1] {
+            std::fs::write(&mpath, &bytes[..cut]).unwrap();
+            let err = read_compressed_manifest(&dir).expect_err(&format!("cut at {cut}"));
+            assert!(
+                err.to_string().contains(mpath.to_str().unwrap()),
+                "manifest error at cut {cut} lacks the file path: {err}"
+            );
+        }
+        std::fs::write(&mpath, &bytes).unwrap();
+
+        let bpath = cblock_path(&dir, 0);
+        let bbytes = std::fs::read(&bpath).unwrap();
+        for cut in [0usize, 7, 12, 30, bbytes.len() - 1] {
+            std::fs::write(&bpath, &bbytes[..cut]).unwrap();
+            let err = CompressedBlock::load(&dir, 0).expect_err(&format!("cut at {cut}"));
+            assert!(
+                err.to_string().contains(bpath.to_str().unwrap()),
+                "block error at cut {cut} lacks the file path: {err}"
+            );
+        }
+
+        // corrupt magic
+        let mut mb = bbytes.clone();
+        mb[0] ^= 0xFF;
+        std::fs::write(&bpath, &mb).unwrap();
+        assert!(CompressedBlock::load(&dir, 0).is_err());
+
+        // missing rank file
+        std::fs::write(&bpath, &bbytes).unwrap();
+        assert!(CompressedBlock::load(&dir, 5).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ratio_dims_bounds_and_rejections() {
+        assert_eq!(ratio_dims(100, 40, 4.0).unwrap(), (25, 10));
+        assert_eq!(ratio_dims(3, 3, 100.0).unwrap(), (1, 1));
+        assert_eq!(ratio_dims(10, 10, 1.0).unwrap(), (10, 10));
+        assert!(ratio_dims(10, 10, 0.5).is_err());
+        assert!(ratio_dims(10, 10, f64::NAN).is_err());
+    }
+
+    #[test]
+    fn balanced_base_is_rejected() {
+        let full = crate::data::Dataset::Face.generate_scaled(7, 0.02);
+        let mut base = base_for(&full, 2);
+        // skew the column cuts so is_balanced() fires
+        let cols = full.cols();
+        base.col_bounds = vec![0, cols - 1, cols];
+        assert!(base.is_balanced());
+        let dir = tmpdir("bal");
+        let err =
+            write_compressed_dir(&dir, &full, &base, SketchKind::CountSketch, 4, 4).unwrap_err();
+        assert!(err.to_string().contains("uniform"), "{err}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

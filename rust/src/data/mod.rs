@@ -13,13 +13,18 @@
 //!   reduction.
 //! * [`ingest`] — external matrix ingestion (COO text / MatrixMarket-style
 //!   files) for `dsanls shard --input FILE`.
+//! * [`compress`] — the compressed data plane: fixed sketched views of each
+//!   rank's block (`dsanls shard --compress`), factorized directly without
+//!   the raw matrix ever existing on a worker.
 
+pub mod compress;
 pub mod datasets;
 pub mod ingest;
 pub mod partition;
 pub mod shard;
 pub mod synth;
 
+pub use compress::{CompressedBlock, CompressedManifest};
 pub use datasets::{load, Dataset, DatasetSpec, ALL_DATASETS};
 pub use partition::{imbalanced_partition, uniform_partition, Partition};
 pub use shard::{Axis, LoadSource, LoadStats, NodeData, NodeInput, ShardManifest, ShardSpec};

@@ -112,6 +112,9 @@ pub enum LoadSource {
     SynthShard,
     /// Blocks read from a `dsanls shard` directory.
     FileShard,
+    /// Sketched views read from a `dsanls shard --compress` directory
+    /// ([`crate::data::compress`]).
+    CompressedShard,
 }
 
 impl LoadSource {
@@ -121,6 +124,7 @@ impl LoadSource {
             LoadSource::FullMatrix => 0,
             LoadSource::SynthShard => 1,
             LoadSource::FileShard => 2,
+            LoadSource::CompressedShard => 3,
         }
     }
 
@@ -130,6 +134,7 @@ impl LoadSource {
             0 => Ok(LoadSource::FullMatrix),
             1 => Ok(LoadSource::SynthShard),
             2 => Ok(LoadSource::FileShard),
+            3 => Ok(LoadSource::CompressedShard),
             other => crate::bail!("unknown load source code {other}"),
         }
     }
@@ -140,6 +145,7 @@ impl LoadSource {
             LoadSource::FullMatrix => "full matrix",
             LoadSource::SynthShard => "synthetic shard",
             LoadSource::FileShard => "file shard",
+            LoadSource::CompressedShard => "compressed shard",
         }
     }
 }
@@ -399,22 +405,39 @@ pub enum NodeInput<'a> {
     Full(&'a Matrix),
     /// The rank holds only its blocks.
     Shard(&'a NodeData),
+    /// The rank holds only fixed sketched views of its blocks
+    /// ([`crate::data::compress::CompressedBlock`]); no raw data exists
+    /// anywhere in the process.
+    Compressed(&'a crate::data::compress::CompressedBlock),
 }
 
-impl NodeInput<'_> {
+impl<'a> NodeInput<'a> {
     /// Global `(rows, cols)`.
     pub fn dims(&self) -> (usize, usize) {
         match self {
             NodeInput::Full(m) => (m.rows(), m.cols()),
             NodeInput::Shard(d) => (d.rows, d.cols),
+            NodeInput::Compressed(b) => (b.rows, b.cols),
         }
     }
 
-    /// Exact global `‖M‖²_F`.
+    /// Exact global `‖M‖²_F` — for compressed input, the sketched-domain
+    /// norm `‖M·S_c‖²_F` (the constant every trace/init quantity is
+    /// defined against when no raw data exists; recorded in the manifest).
     pub fn fro_sq(&self) -> f64 {
         match self {
             NodeInput::Full(m) => m.fro_sq(),
             NodeInput::Shard(d) => d.fro_sq(),
+            NodeInput::Compressed(b) => b.sketched_fro_sq,
+        }
+    }
+
+    /// The compressed view, when this input is one — runners branch on
+    /// this once at entry and never touch the raw-block accessors.
+    pub fn compressed(&self) -> Option<&'a crate::data::compress::CompressedBlock> {
+        match self {
+            NodeInput::Compressed(b) => Some(b),
+            _ => None,
         }
     }
 
@@ -427,6 +450,9 @@ impl NodeInput<'_> {
             NodeInput::Shard(d) => {
                 assert_eq!(d.row_range, expect, "shard row range != rank's partition");
                 std::borrow::Cow::Borrowed(d.require_rows())
+            }
+            NodeInput::Compressed(_) => {
+                panic!("compressed input holds only sketched views, no raw row block")
             }
         }
     }
@@ -441,6 +467,9 @@ impl NodeInput<'_> {
                 assert_eq!(d.col_range, expect, "shard col range != rank's partition");
                 std::borrow::Cow::Borrowed(d.require_cols())
             }
+            NodeInput::Compressed(_) => {
+                panic!("compressed input holds only sketched views, no raw col block")
+            }
         }
     }
 
@@ -452,6 +481,9 @@ impl NodeInput<'_> {
             NodeInput::Shard(d) => {
                 assert_eq!(d.col_range, expect, "shard col range != rank's partition");
                 d.require_cols().transpose()
+            }
+            NodeInput::Compressed(_) => {
+                panic!("compressed input holds only sketched views, no raw col block")
             }
         }
     }
@@ -644,7 +676,9 @@ pub fn is_file_dataset(name: &str) -> bool {
 /// nnz` shard sets).
 pub const SHARD_FORMAT_VERSION: u32 = 2;
 
-const MANIFEST_MAGIC: &[u8; 8] = b"DSSHMAN1";
+/// Shared by raw (v2) and compressed (v3, [`crate::data::compress`])
+/// manifests — the version field after the magic disambiguates.
+pub(crate) const MANIFEST_MAGIC: &[u8; 8] = b"DSSHMAN1";
 const BLOCK_MAGIC: &[u8; 8] = b"DSSHBLK1";
 
 /// Path of the manifest inside a shard directory.
@@ -670,10 +704,6 @@ fn write_u32<W: Write>(w: &mut W, v: u32) -> Result<()> {
     IO.write_u32(w, v)
 }
 
-fn write_f64<W: Write>(w: &mut W, v: f64) -> Result<()> {
-    IO.write_f64(w, v)
-}
-
 fn write_f32s<W: Write>(w: &mut W, vs: &[f32]) -> Result<()> {
     IO.write_f32s(w, vs)
 }
@@ -694,10 +724,6 @@ fn read_u32<R: Read>(r: &mut R, what: &str) -> Result<u32> {
     IO.read_u32(r, what)
 }
 
-fn read_f64<R: Read>(r: &mut R, what: &str) -> Result<f64> {
-    IO.read_f64(r, what)
-}
-
 fn read_f32s<R: Read>(r: &mut R, n: usize, what: &str) -> Result<Vec<f32>> {
     IO.read_f32s(r, n, what)
 }
@@ -713,6 +739,13 @@ fn check_magic<R: Read>(r: &mut R, expect: &[u8; 8], what: &str) -> Result<()> {
         crate::bail!("{what}: bad magic {got:02x?} — not a dsanls shard file");
     }
     let version = read_u32(r, "format version")?;
+    if version == crate::data::compress::COMPRESSED_FORMAT_VERSION {
+        crate::bail!(
+            "{what}: format version {version} marks a *compressed* shard set \
+             (`dsanls shard --compress`) — this code path reads raw shards \
+             (launch/worker autodetect; in-process jobs use DataSource::Compressed)"
+        );
+    }
     if version != SHARD_FORMAT_VERSION {
         crate::bail!(
             "{what}: shard format version {version}, this binary reads \
@@ -759,45 +792,73 @@ pub(crate) fn write_manifest(dir: &Path, manifest: &ShardManifest) -> Result<u64
     let mut w = BufWriter::new(file);
     w.write_all(MANIFEST_MAGIC).context("writing manifest magic")?;
     write_u32(&mut w, SHARD_FORMAT_VERSION)?;
-    write_u64(&mut w, manifest.nodes as u64)?;
-    write_u64(&mut w, manifest.rows as u64)?;
-    write_u64(&mut w, manifest.cols as u64)?;
-    write_f64(&mut w, manifest.fro_sq)?;
-    write_u64(&mut w, manifest.seed)?;
-    write_f64(&mut w, manifest.scale)?;
-    w.write_all(&[manifest.dense as u8]).context("writing manifest storage kind")?;
-    let name = manifest.dataset.as_bytes();
-    write_u32(&mut w, name.len() as u32)?;
-    w.write_all(name).context("writing manifest dataset name")?;
-    debug_assert_eq!(manifest.row_bounds.len(), manifest.nodes + 1, "row bounds shape");
-    debug_assert_eq!(manifest.col_bounds.len(), manifest.nodes + 1, "col bounds shape");
-    write_u64s(&mut w, &manifest.row_bounds)?;
-    write_u64s(&mut w, &manifest.col_bounds)?;
+    write_manifest_body(&mut w, IO, manifest)?;
     w.flush().context("flushing manifest")?;
     Ok(std::fs::metadata(&path).map(|md| md.len()).unwrap_or(0))
 }
 
-/// Read and validate a shard directory's manifest.
+/// Write the manifest fields that follow the magic + version header — the
+/// single source of the v2 field order, shared with the compressed (v3)
+/// manifest writer in [`crate::data::compress`], which appends its
+/// extension fields after this body.
+pub(crate) fn write_manifest_body<W: Write>(
+    w: &mut W,
+    io: crate::binio::BinFormat,
+    manifest: &ShardManifest,
+) -> Result<()> {
+    io.write_u64(w, manifest.nodes as u64)?;
+    io.write_u64(w, manifest.rows as u64)?;
+    io.write_u64(w, manifest.cols as u64)?;
+    io.write_f64(w, manifest.fro_sq)?;
+    io.write_u64(w, manifest.seed)?;
+    io.write_f64(w, manifest.scale)?;
+    w.write_all(&[manifest.dense as u8]).context("writing manifest storage kind")?;
+    let name = manifest.dataset.as_bytes();
+    io.write_u32(w, name.len() as u32)?;
+    w.write_all(name).context("writing manifest dataset name")?;
+    debug_assert_eq!(manifest.row_bounds.len(), manifest.nodes + 1, "row bounds shape");
+    debug_assert_eq!(manifest.col_bounds.len(), manifest.nodes + 1, "col bounds shape");
+    io.write_u64s(w, &manifest.row_bounds)?;
+    io.write_u64s(w, &manifest.col_bounds)?;
+    Ok(())
+}
+
+/// Read and validate a shard directory's manifest. Every parse error —
+/// including truncation/corruption deep inside the fields — carries the
+/// offending file path.
 pub fn read_manifest(dir: &Path) -> Result<ShardManifest> {
     let path = manifest_path(dir);
-    let file = std::fs::File::open(&path)
-        .with_context(|| format!("opening shard manifest {}", path.display()))?;
+    read_manifest_file(&path)
+        .with_context(|| format!("reading shard manifest {}", path.display()))
+}
+
+fn read_manifest_file(path: &Path) -> Result<ShardManifest> {
+    let file = std::fs::File::open(path).context("opening file")?;
     let mut r = BufReader::new(file);
     check_magic(&mut r, MANIFEST_MAGIC, "manifest")?;
-    let nodes = read_u64(&mut r, "nodes")? as usize;
-    let rows = read_u64(&mut r, "rows")? as usize;
-    let cols = read_u64(&mut r, "cols")? as usize;
-    let fro_sq = read_f64(&mut r, "fro_sq")?;
-    let seed = read_u64(&mut r, "seed")?;
-    let scale = read_f64(&mut r, "scale")?;
+    read_manifest_body(&mut r, IO)
+}
+
+/// Read the manifest fields that follow the magic + version header (the
+/// inverse of [`write_manifest_body`]; shared with the v3 reader).
+pub(crate) fn read_manifest_body<R: Read>(
+    r: &mut R,
+    io: crate::binio::BinFormat,
+) -> Result<ShardManifest> {
+    let nodes = io.read_u64(r, "nodes")? as usize;
+    let rows = io.read_u64(r, "rows")? as usize;
+    let cols = io.read_u64(r, "cols")? as usize;
+    let fro_sq = io.read_f64(r, "fro_sq")?;
+    let seed = io.read_u64(r, "seed")?;
+    let scale = io.read_f64(r, "scale")?;
     let mut dense = [0u8; 1];
-    read_exact_ctx(&mut r, &mut dense, "storage kind")?;
-    let name_len = read_u32(&mut r, "dataset name length")? as usize;
+    io.read_exact(r, &mut dense, "storage kind")?;
+    let name_len = io.read_u32(r, "dataset name length")? as usize;
     if name_len > 256 {
         crate::bail!("manifest dataset name length {name_len} is implausible (corrupt file?)");
     }
     let mut name = vec![0u8; name_len];
-    read_exact_ctx(&mut r, &mut name, "dataset name")?;
+    io.read_exact(r, &mut name, "dataset name")?;
     let dataset = String::from_utf8(name).map_err(|_| crate::err!("manifest name not UTF-8"))?;
     if nodes == 0 || rows == 0 || cols == 0 {
         crate::bail!("manifest with zero nodes/rows/cols (corrupt file?)");
@@ -805,8 +866,8 @@ pub fn read_manifest(dir: &Path) -> Result<ShardManifest> {
     if nodes > 1 << 20 {
         crate::bail!("manifest claims {nodes} nodes (corrupt file?)");
     }
-    let row_bounds = read_u64s(&mut r, nodes + 1, "row partition bounds")?;
-    let col_bounds = read_u64s(&mut r, nodes + 1, "col partition bounds")?;
+    let row_bounds = io.read_u64s(r, nodes + 1, "row partition bounds")?;
+    let col_bounds = io.read_u64s(r, nodes + 1, "col partition bounds")?;
     for (bounds, extent, what) in [(&row_bounds, rows, "row"), (&col_bounds, cols, "col")] {
         let p = Partition::from_bounds(bounds)
             .with_context(|| format!("manifest {what} partition bounds"))?;
@@ -862,11 +923,16 @@ pub(crate) fn write_block(dir: &Path, spec: &ShardSpec, block: &Matrix) -> Resul
 }
 
 /// Read one rank's block along `axis` from a shard directory, validating
-/// magic, format version, and that the file is the requested shard.
+/// magic, format version, and that the file is the requested shard. Every
+/// parse error carries the offending file path.
 pub fn read_block(dir: &Path, rank: usize, axis: Axis) -> Result<(ShardSpec, Matrix)> {
     let path = block_path(dir, rank, axis);
-    let file = std::fs::File::open(&path)
-        .with_context(|| format!("opening shard block {}", path.display()))?;
+    read_block_file(&path, rank, axis)
+        .with_context(|| format!("reading shard block {}", path.display()))
+}
+
+fn read_block_file(path: &Path, rank: usize, axis: Axis) -> Result<(ShardSpec, Matrix)> {
+    let file = std::fs::File::open(path).context("opening file")?;
     let mut r = BufReader::new(file);
     check_magic(&mut r, BLOCK_MAGIC, "block")?;
     let mut axis_b = [0u8; 1];
@@ -878,9 +944,7 @@ pub fn read_block(dir: &Path, rank: usize, axis: Axis) -> Result<(ShardSpec, Mat
     let end = read_u64(&mut r, "range end")? as usize;
     if file_axis != axis || file_rank != rank {
         crate::bail!(
-            "block file {} says rank {file_rank}/{:?}, expected rank {rank}/{axis:?}",
-            path.display(),
-            file_axis
+            "block file says rank {file_rank}/{file_axis:?}, expected rank {rank}/{axis:?}"
         );
     }
     if end < start {
@@ -1045,20 +1109,30 @@ mod tests {
         let dir = tmpdir("trunc");
         write_shard_dir(&dir, &full, &manifest_for(&full, 2, "FACE")).unwrap();
 
-        // truncate the manifest at several prefixes: all must error, never panic
-        let bytes = std::fs::read(manifest_path(&dir)).unwrap();
+        // truncate the manifest at several prefixes: all must error (never
+        // panic) and every error must name the offending file
+        let mpath = manifest_path(&dir);
+        let bytes = std::fs::read(&mpath).unwrap();
         for cut in [0usize, 4, 8, 11, 20, bytes.len() - 1] {
-            std::fs::write(manifest_path(&dir), &bytes[..cut]).unwrap();
-            assert!(read_manifest(&dir).is_err(), "manifest cut at {cut} did not error");
+            std::fs::write(&mpath, &bytes[..cut]).unwrap();
+            let err = read_manifest(&dir).expect_err(&format!("manifest cut at {cut}"));
+            assert!(
+                err.to_string().contains(mpath.to_str().unwrap()),
+                "manifest error at cut {cut} lacks the file path: {err}"
+            );
         }
-        std::fs::write(manifest_path(&dir), &bytes).unwrap();
+        std::fs::write(&mpath, &bytes).unwrap();
 
-        // truncated block header and payload
+        // truncated block header and payload: error, and name the file
         let bpath = block_path(&dir, 0, Axis::Row);
         let bbytes = std::fs::read(&bpath).unwrap();
         for cut in [0usize, 7, 12, 13, 40, bbytes.len() - 1] {
             std::fs::write(&bpath, &bbytes[..cut]).unwrap();
-            assert!(read_block(&dir, 0, Axis::Row).is_err(), "block cut at {cut}");
+            let err = read_block(&dir, 0, Axis::Row).expect_err(&format!("block cut at {cut}"));
+            assert!(
+                err.to_string().contains(bpath.to_str().unwrap()),
+                "block error at cut {cut} lacks the file path: {err}"
+            );
         }
 
         // wrong format version
@@ -1067,6 +1141,7 @@ mod tests {
         std::fs::write(&bpath, &vbytes).unwrap();
         let err = read_block(&dir, 0, Axis::Row).unwrap_err();
         assert!(err.to_string().contains("version"), "{err}");
+        assert!(err.to_string().contains(bpath.to_str().unwrap()), "{err}");
 
         // bad magic
         let mut mbytes = bbytes.clone();
@@ -1143,7 +1218,12 @@ mod tests {
             assert_eq!(Axis::from_code(a.code()).unwrap(), a);
         }
         assert!(Axis::from_code(9).is_err());
-        for s in [LoadSource::FullMatrix, LoadSource::SynthShard, LoadSource::FileShard] {
+        for s in [
+            LoadSource::FullMatrix,
+            LoadSource::SynthShard,
+            LoadSource::FileShard,
+            LoadSource::CompressedShard,
+        ] {
             assert_eq!(LoadSource::from_code(s.code()).unwrap(), s);
         }
         assert!(LoadSource::from_code(9).is_err());

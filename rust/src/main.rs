@@ -13,16 +13,17 @@
 //!   [--shards DIR] ...` — one rank of a `launch` cluster. Builds only
 //!   its own row/column blocks of the dataset (shard-local synthesis, or
 //!   pre-sliced files via `--shards`) — never the full matrix.
-//! * `shard --out DIR [--nodes N] [--input FILE] ...` — pre-slice the
-//!   configured dataset (or an external COO/`.mtx` matrix file) into
-//!   per-rank block files + manifest for multi-host deployment
-//!   (see DEPLOYMENT.md).
+//! * `shard --out DIR [--nodes N] [--input FILE] [--compress] ...` —
+//!   pre-slice the configured dataset (or an external COO/`.mtx` matrix
+//!   file) into per-rank block files + manifest for multi-host deployment;
+//!   `--compress` writes fixed sketched views (~1/R the footprint) that
+//!   workers factorize directly (see DEPLOYMENT.md).
 //! * `serve --checkpoint FILE [--bind ADDR] ...` — load trained factors
 //!   from a checkpoint and answer batched top-k / reconstruction /
 //!   fold-in queries over TCP (see DEPLOYMENT.md §Serving).
 //! * `query --addr ADDR <--users IDS [--top-k N|--reconstruct] |
-//!   --fold-in ITEM:RATING,... | --stats>` — smoke-test client for a
-//!   running `serve` instance.
+//!   --fold-in ITEM:RATING,... | --fold-in-item USER:RATING,... |
+//!   --stats>` — smoke-test client for a running `serve` instance.
 //! * `compare [--config FILE] [--key=value ...]` — run DSANLS against all
 //!   three MPI-FAUN baselines on the configured dataset (a Fig. 2 panel).
 //! * `secure [--config FILE] ...` — run all six secure protocols on the
@@ -93,11 +94,14 @@ fn usage() {
                   --join re-enters a running --elastic cluster as the replacement\n\
                   for a dead rank (operator-driven on multi-host fleets)\n\
          shard:   dsanls shard --out DIR [--nodes N] [--input FILE] [--balance nnz]\n\
+                  [--compress [--sketch subgaussian|countsketch] [--ratio R]]\n\
                   [--config FILE] [--key=value ...]\n\
                   pre-slice the dataset — or an external COO/.mtx matrix file (--input,\n\
                   streamed; the full matrix is never materialised) — into per-rank block\n\
                   files for multi-host runs; --balance nnz cuts columns by stored-value\n\
-                  count for the secure protocols on skewed data\n\
+                  count for the secure protocols on skewed data; --compress writes fixed\n\
+                  sketched views at ~1/R the raw footprint (DSANLS/baselines factorize\n\
+                  them directly; launch/worker autodetect the format)\n\
          serve:   dsanls serve --checkpoint FILE [--bind HOST:PORT] [--batch-max N]\n\
                   [--batch-wait-us U] [--cache N] [--solver hals|cd|pgd] [--sweeps N]\n\
                   [--threads T] [--expect-algo NAME] [--expect-params HASH]\n\
@@ -106,8 +110,10 @@ fn usage() {
          query:   dsanls query [--addr HOST:PORT] --users ID[,ID...] [--top-k N]\n\
                   dsanls query [--addr HOST:PORT] --users ID[,ID...] --reconstruct\n\
                   dsanls query [--addr HOST:PORT] --fold-in ITEM:RATING[,...] [--top-k N]\n\
+                  dsanls query [--addr HOST:PORT] --fold-in-item USER:RATING[,...] [--top-k N]\n\
                   dsanls query [--addr HOST:PORT] --stats\n\
-                  smoke-test client for a running serve instance\n\n\
+                  smoke-test client for a running serve instance; --fold-in embeds a new\n\
+                  user against fixed V, --fold-in-item a new item against fixed U\n\n\
          Config keys (TOML sections flattened as --section.key=value):\n\
            experiment: name algorithm dataset scale nodes rank iterations seed eval_every backend\n\
            sketch:     kind d_u d_v\n\

@@ -293,6 +293,12 @@ pub enum DataSource<'a> {
     /// the manifest carries the exact global norm. The directory's rank
     /// count must match the algorithm's `nodes`.
     ShardDir(PathBuf),
+    /// A `dsanls shard --compress` directory: each rank reads only its two
+    /// fixed sketched views ([`crate::data::CompressedBlock`]) — the raw
+    /// matrix never exists on any rank. DSANLS and the MPI-FAUN baselines
+    /// factorize the views directly; the trace reports the sketched
+    /// residual proxy against the manifest's `‖M·S_c‖²` constant.
+    Compressed(PathBuf),
 }
 
 /// Which transport the cluster runs on.
@@ -946,6 +952,18 @@ impl<'a> Job<'a> {
                 )?;
                 (man.rows, man.cols, Some(man.col_partition()))
             }
+            DataSource::Compressed(dir) => {
+                let man = crate::data::compress::read_compressed_manifest(dir)?;
+                if man.base.nodes != nodes {
+                    crate::bail!(
+                        "compressed shard directory {} was built for {} nodes, this job \
+                         runs {nodes} — re-run `dsanls shard --compress`",
+                        dir.display(),
+                        man.base.nodes
+                    );
+                }
+                (man.base.rows, man.base.cols, None)
+            }
         };
 
         // resolve + validate the secure column partition
@@ -1130,6 +1148,7 @@ enum OwnedData {
     Full(Matrix),
     Synthetic { dataset: Dataset, seed: u64, scale: f64 },
     ShardDir(PathBuf),
+    Compressed(PathBuf),
 }
 
 impl OwnedData {
@@ -1140,6 +1159,7 @@ impl OwnedData {
                 OwnedData::Synthetic { dataset: *dataset, seed: *seed, scale: *scale }
             }
             DataSource::ShardDir(p) => OwnedData::ShardDir(p.clone()),
+            DataSource::Compressed(p) => OwnedData::Compressed(p.clone()),
         }
     }
 
@@ -1150,6 +1170,7 @@ impl OwnedData {
                 DataSource::SyntheticWindow { dataset: *dataset, seed: *seed, scale: *scale }
             }
             OwnedData::ShardDir(p) => DataSource::ShardDir(p.clone()),
+            OwnedData::Compressed(p) => DataSource::Compressed(p.clone()),
         }
     }
 }
@@ -1406,6 +1427,38 @@ impl<'a> JobBuilder<'a> {
                 ),
             }
         }
+        if matches!(data, DataSource::Compressed(_)) {
+            match &algo {
+                Algo::Syn(..) | Algo::Asyn(..) => crate::bail!(
+                    "compressed shards are supported by DSANLS and the MPI-FAUN baselines \
+                     only — the secure protocols' correctness proofs are stated on the raw \
+                     column partition, not on sketched views"
+                ),
+                Algo::Dsanls(o) if o.overlap => crate::bail!(
+                    "overlap_comm needs the raw row block to prefetch the next sketch \
+                     against — compressed input holds only the fixed views; drop \
+                     .overlap_comm(true)"
+                ),
+                Algo::DistAnls(o) if o.overlap => crate::bail!(
+                    "overlap_comm needs the raw blocks — compressed input holds only the \
+                     fixed views; drop .overlap_comm(true)"
+                ),
+                _ => {}
+            }
+            if self.elastic {
+                crate::bail!(
+                    "elastic membership is not supported on compressed input yet — a \
+                     joiner would need the dead rank's sketched views re-served"
+                );
+            }
+            if self.checkpoint.is_some() || self.resume.is_some() {
+                crate::bail!(
+                    "checkpoint/resume is not supported on compressed input — the \
+                     checkpoint fingerprint cannot attest which sketched views produced \
+                     the factors; run to completion and save the output instead"
+                );
+            }
+        }
         let elastic = if self.elastic {
             match &algo {
                 Algo::Asyn(..) => crate::bail!(
@@ -1509,6 +1562,7 @@ struct RankResult {
 enum RankData<'a> {
     Full(&'a Matrix),
     Owned(Box<NodeData>),
+    Compressed(Box<crate::data::CompressedBlock>),
 }
 
 impl RankData<'_> {
@@ -1516,6 +1570,7 @@ impl RankData<'_> {
         match self {
             RankData::Full(m) => NodeInput::Full(m),
             RankData::Owned(d) => NodeInput::Shard(d.as_ref()),
+            RankData::Compressed(b) => NodeInput::Compressed(b.as_ref()),
         }
     }
 }
@@ -1568,30 +1623,47 @@ fn rank_main<C: Communicator>(
                 (RankData::Owned(Box::new(data)), Some(LoadSource::FileShard))
             }
         }
+        DataSource::Compressed(dir) => {
+            // build() restricts compressed input to the synchronous data
+            // ranks, so every rank here holds a block
+            let (block, _manifest) = crate::data::CompressedBlock::load(dir, rank)?;
+            (RankData::Compressed(Box::new(block)), Some(LoadSource::CompressedShard))
+        }
     };
     let load_secs = tick.elapsed().as_secs_f64();
 
-    let load = if let RankData::Owned(data) = &mut holder {
-        if data.fro_sq.is_none() {
-            if joining {
-                // the survivors are mid-run and will not re-enter the
-                // bootstrap chain; the real value arrives with the
-                // recovered commit ([`crate::dist::elastic`])
-                data.fro_sq = Some(f64::NAN);
-            } else {
-                // synth mode: resolve the exact global ‖M‖² with the
-                // ordered chain (bit-identical to the full-matrix value)
-                let fro = shard::exact_fro_sq(&mut comm, nodes, data.m_rows.as_ref())
-                    .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
-                data.fro_sq = Some(fro);
+    let load = match &mut holder {
+        RankData::Owned(data) => {
+            if data.fro_sq.is_none() {
+                if joining {
+                    // the survivors are mid-run and will not re-enter the
+                    // bootstrap chain; the real value arrives with the
+                    // recovered commit ([`crate::dist::elastic`])
+                    data.fro_sq = Some(f64::NAN);
+                } else {
+                    // synth mode: resolve the exact global ‖M‖² with the
+                    // ordered chain (bit-identical to the full-matrix value)
+                    let fro = shard::exact_fro_sq(&mut comm, nodes, data.m_rows.as_ref())
+                        .with_context(|| format!("rank {rank} resolving global ‖M‖²"))?;
+                    data.fro_sq = Some(fro);
+                }
             }
+            if !need_rows {
+                data.drop_rows(); // the chain was its only consumer
+            }
+            source.map(|src| data.load_stats(rank, load_secs, src))
         }
-        if !need_rows {
-            data.drop_rows(); // the chain was its only consumer
-        }
-        source.map(|src| data.load_stats(rank, load_secs, src))
-    } else {
-        None
+        RankData::Compressed(cb) => source.map(|src| LoadStats {
+            rank,
+            block_rows: cb.row_range.len(),
+            block_cols: cb.col_range.len(),
+            // the views are dense: every held value is an explicit one
+            nnz: cb.u_view().data().len() + cb.v_view().data().len(),
+            bytes: cb.resident_bytes(),
+            load_secs,
+            source: src,
+        }),
+        RankData::Full(_) => None,
     };
 
     // ---- run the rank ----

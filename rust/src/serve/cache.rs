@@ -15,10 +15,23 @@ use std::collections::HashMap;
 /// bits preserved exactly (`f32` is not `Hash`; its bit pattern is).
 pub type RowKey = Vec<(u64, u32)>;
 
-/// Build the canonical [`RowKey`] for a query row.
+/// Build the canonical [`RowKey`] for a user-side query row.
 pub fn row_key(entries: &[(u64, f32)]) -> RowKey {
     let mut key: RowKey = entries.iter().map(|&(i, v)| (i, v.to_bits())).collect();
     key.sort_unstable();
+    key
+}
+
+/// Build the canonical [`RowKey`] for an **item-side** fold-in column.
+/// The key carries a trailing sentinel pair so an item column can never
+/// collide with a user row of the same `(id, rating)` entries — the two
+/// sides solve against different factors, and a cross-side cache hit
+/// would return the wrong embedding. The sentinel id is `u64::MAX`,
+/// unreachable for a validated id (ids are checked against the model's
+/// axis length before any cache lookup).
+pub fn item_row_key(entries: &[(u64, f32)]) -> RowKey {
+    let mut key = row_key(entries);
+    key.push((u64::MAX, u32::MAX));
     key
 }
 
@@ -190,6 +203,20 @@ mod tests {
         let mut c = FoldCache::new(4);
         c.insert(row_key(&[(5, 1.5), (2, 0.5)]), vec![9.0]);
         assert_eq!(c.get(&row_key(&[(2, 0.5), (5, 1.5)])), Some(&[9.0f32][..]));
+    }
+
+    #[test]
+    fn item_keys_never_collide_with_user_keys() {
+        // same (id, rating) entries, different sides → distinct keys
+        let entries = [(2u64, 0.5f32), (5, 1.5)];
+        assert_ne!(row_key(&entries), item_row_key(&entries));
+        // item keys stay order-insensitive like user keys
+        assert_eq!(item_row_key(&[(5, 1.5), (2, 0.5)]), item_row_key(&entries));
+        let mut c = FoldCache::new(4);
+        c.insert(row_key(&entries), vec![1.0]);
+        c.insert(item_row_key(&entries), vec![2.0]);
+        assert_eq!(c.get(&row_key(&entries)), Some(&[1.0f32][..]));
+        assert_eq!(c.get(&item_row_key(&entries)), Some(&[2.0f32][..]));
     }
 
     #[test]

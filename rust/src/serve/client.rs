@@ -84,6 +84,19 @@ impl ServeClient {
         }
     }
 
+    /// Fold a new **item** in from a sparse `(user, rating)` column;
+    /// returns the embedding and (when `n > 0`) its top-`n` users.
+    pub fn fold_in_item(
+        &mut self,
+        entries: &[(u64, f32)],
+        n: usize,
+    ) -> Result<(Vec<f32>, Vec<(u64, f32)>)> {
+        match self.query(&Query::FoldInItem { entries: entries.to_vec(), n })? {
+            Reply::FoldInItem { h, top } => Ok((h, top)),
+            other => Err(crate::err!("unexpected reply {other:?} to an item fold-in query")),
+        }
+    }
+
     /// Server metrics snapshot (JSON text).
     pub fn stats(&mut self) -> Result<String> {
         match self.query(&Query::Stats)? {

@@ -13,7 +13,10 @@
 //! * **fold-in** — embed a *new* user from a sparse rating row by solving a
 //!   single NNLS row against the fixed item factor `V` (sklearn's
 //!   `non_negative_factorization(update_H=False)` shape), reusing the
-//!   [`crate::solvers`] machinery with a zero-allocation steady state.
+//!   [`crate::solvers`] machinery with a zero-allocation steady state. The
+//!   mirrored **item fold-in** embeds a new *item* from a sparse user
+//!   column against the fixed `U` (cached under a side-disambiguated key),
+//!   and optionally returns the top users for the new item.
 //!
 //! The [`server`] module fronts a model with a request/response server on
 //! the [`crate::transport::wire`] length-prefixed framing (frame kinds

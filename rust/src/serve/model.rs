@@ -7,7 +7,10 @@
 //! server batches concurrent queries before touching the kernels.
 //! Fold-in solves `min_{w≥0} ‖a − w·Vᵀ‖²` for one sparse row `a` with the
 //! same [`crate::solvers`] update the training loop uses, against the
-//! cached gram, with zero steady-state allocations ([`FoldIn`]).
+//! cached gram, with zero steady-state allocations ([`FoldIn`]). The
+//! mirrored item-side fold-in (`min_{h≥0} ‖a − h·Uᵀ‖²` for a sparse
+//! *column* of user ratings — a brand-new item) runs against the cached
+//! `UᵀU` through the same workspace.
 
 use std::path::Path;
 
@@ -36,6 +39,8 @@ pub struct FactorModel {
     /// solve shares, byte-identical to what
     /// [`crate::solvers::Workspace::normal_unsketched`] would recompute.
     gram: Mat,
+    /// `UᵀU` (k×k), the mirrored gram item-side fold-ins solve against.
+    gram_u: Mat,
 }
 
 impl FactorModel {
@@ -53,12 +58,15 @@ impl FactorModel {
     pub fn from_checkpoint(ck: Checkpoint) -> FactorModel {
         let mut gram = Mat::zeros(ck.meta.k, ck.meta.k);
         gemm_tn(&ck.state.v, &ck.state.v, &mut gram);
+        let mut gram_u = Mat::zeros(ck.meta.k, ck.meta.k);
+        gemm_tn(&ck.state.u, &ck.state.u, &mut gram_u);
         FactorModel {
             meta: ck.meta,
             iteration: ck.state.iteration,
             u: ck.state.u,
             v: ck.state.v,
             gram,
+            gram_u,
         }
     }
 
@@ -131,6 +139,11 @@ impl FactorModel {
         &self.gram
     }
 
+    /// The precomputed item-side fold-in gram `UᵀU` (k×k).
+    pub fn gram_u(&self) -> &Mat {
+        &self.gram_u
+    }
+
     /// Gather the factor rows of `users` into `w` (`len×k`), validating
     /// every id. Unknown ids are a typed error (they would otherwise index
     /// another user's factors).
@@ -164,6 +177,15 @@ impl FactorModel {
         assert_eq!(w.cols(), self.k(), "embedding width != model rank");
         scores.resize_to(w.rows(), self.v.rows());
         gemm_nt(w, &self.v, scores);
+    }
+
+    /// Score arbitrary item-side embedding rows (`h: n×k`, e.g. item
+    /// fold-in results) against every *user*: `scores = h·Uᵀ` — who would
+    /// rate the new item highest.
+    pub fn scores_for_h(&self, h: &Mat, scores: &mut Mat) {
+        assert_eq!(h.cols(), self.k(), "embedding width != model rank");
+        scores.resize_to(h.rows(), self.u.rows());
+        gemm_nt(h, &self.u, scores);
     }
 }
 
@@ -230,13 +252,49 @@ impl FoldIn {
         sweeps: usize,
         t: usize,
     ) -> Result<&[f32]> {
-        let k = model.k();
-        let items = model.items();
+        self.solve_against(&model.v, &model.gram, "item", row, solver, sweeps, t)
+    }
+
+    /// Embed a new **item** from a sparse `(user, rating)` column: solve
+    /// `min_{h≥0} ‖a − h·Uᵀ‖²` against the fixed user factor and the
+    /// cached `UᵀU` gram — the exact mirror of [`FoldIn::solve`] with the
+    /// sides swapped. Returns the `k`-length embedding, borrowed from
+    /// this workspace.
+    pub fn solve_item(
+        &mut self,
+        model: &FactorModel,
+        col: &[(usize, f32)],
+        solver: SolverKind,
+        sweeps: usize,
+        t: usize,
+    ) -> Result<&[f32]> {
+        self.solve_against(&model.u, &model.gram_u, "user", col, solver, sweeps, t)
+    }
+
+    /// Shared fold-in core: solve one sparse row against `factor` (n×k)
+    /// with its cached `gram = factorᵀ·factor`. `id_name` names the id
+    /// space in range errors ("item" for user-side fold-ins, "user" for
+    /// item-side ones).
+    #[allow(clippy::too_many_arguments)]
+    fn solve_against(
+        &mut self,
+        factor: &Mat,
+        gram: &Mat,
+        id_name: &str,
+        row: &[(usize, f32)],
+        solver: SolverKind,
+        sweeps: usize,
+        t: usize,
+    ) -> Result<&[f32]> {
+        let k = gram.rows();
+        let bound = factor.rows();
         self.entries.clear();
         self.entries.extend_from_slice(row);
         for &(j, _) in &self.entries {
-            if j >= items {
-                crate::bail!("fold-in item id {j} out of range (model has {items} items)");
+            if j >= bound {
+                crate::bail!(
+                    "fold-in {id_name} id {j} out of range (model has {bound} {id_name}s)"
+                );
             }
         }
         // canonicalise like Csr::from_triplets: sorted by item, duplicates
@@ -257,12 +315,12 @@ impl FoldIn {
         let crow = self.cross.row_mut(0);
         crow.fill(0.0);
         for &(j, val) in &self.entries {
-            saxpy(val, model.v.row(j), crow);
+            saxpy(val, factor.row(j), crow);
         }
 
         self.x.resize_to(1, k);
         self.x.data_mut().fill(FOLD_IN_INIT);
-        let nrm = Normal::new(&model.gram, &self.cross);
+        let nrm = Normal::new(gram, &self.cross);
         for _ in 0..sweeps.max(1) {
             solvers::update_auto(solver, &mut self.x, &nrm, &MuSchedule::default(), t);
         }
@@ -335,6 +393,30 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(err.contains("out of range"), "{err}");
+    }
+
+    #[test]
+    fn item_fold_in_is_the_transposed_user_fold_in() {
+        // folding an item into (U, V) must be bit-identical to folding a
+        // user into the transposed model (U↔V, users↔items)
+        let m = toy_model(6, 9, 3, 0xBEEF);
+        let mut swapped = toy_model(9, 6, 3, 0xBEEF);
+        swapped.u = m.v.clone();
+        swapped.v = m.u.clone();
+        let mut g = Mat::zeros(3, 3);
+        gemm_tn(&swapped.v, &swapped.v, &mut g);
+        swapped.gram = g.clone();
+        gemm_tn(&swapped.u, &swapped.u, &mut g);
+        swapped.gram_u = g;
+        let col = [(1usize, 0.75f32), (4, 2.0)];
+        let mut fold = FoldIn::new();
+        let h = fold.solve_item(&m, &col, SolverKind::Hals, 3, 0).unwrap().to_vec();
+        let w = fold.solve(&swapped, &col, SolverKind::Hals, 3, 0).unwrap();
+        assert_eq!(h, w);
+        // and user ids are validated against the user axis
+        let err =
+            fold.solve_item(&m, &[(6, 1.0)], SolverKind::Hals, 1, 0).unwrap_err().to_string();
+        assert!(err.contains("fold-in user id 6"), "{err}");
     }
 
     #[test]

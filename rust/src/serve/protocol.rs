@@ -24,6 +24,8 @@ pub const OP_RECONSTRUCT: f32 = 2.0;
 pub const OP_FOLD_IN: f32 = 3.0;
 /// Op code for a server-statistics query.
 pub const OP_STATS: f32 = 4.0;
+/// Op code for an item-side fold-in query (embed a new item).
+pub const OP_FOLD_IN_ITEM: f32 = 5.0;
 /// Reply status lane for a failed query.
 pub const STATUS_ERROR: f32 = 0.0;
 
@@ -50,6 +52,14 @@ pub enum Query {
         /// Items to recommend for the folded-in user (0 = embedding only).
         n: usize,
     },
+    /// Embed a new **item** from a sparse `(user, rating)` column; when
+    /// `n > 0` the reply also carries the top-`n` *users* for the item.
+    FoldInItem {
+        /// Sparse rating column (user ids).
+        entries: Vec<(u64, f32)>,
+        /// Users to suggest for the folded-in item (0 = embedding only).
+        n: usize,
+    },
     /// Server metrics snapshot (JSON text reply).
     Stats,
 }
@@ -74,6 +84,14 @@ pub enum Reply {
         /// The `k`-length nonnegative embedding.
         w: Vec<f32>,
         /// Top items for the embedding (empty when `n = 0` was asked).
+        top: Vec<(u64, f32)>,
+    },
+    /// Item-side fold-in embedding plus optional top users
+    /// (answers [`Query::FoldInItem`]).
+    FoldInItem {
+        /// The `k`-length nonnegative item embedding.
+        h: Vec<f32>,
+        /// Top users for the embedding (empty when `n = 0` was asked).
         top: Vec<(u64, f32)>,
     },
     /// Metrics snapshot as JSON text (answers [`Query::Stats`]).
@@ -127,6 +145,15 @@ pub fn encode_query(q: &Query) -> Vec<f32> {
                 p.push(val);
             }
         }
+        Query::FoldInItem { entries, n } => {
+            p.push(OP_FOLD_IN_ITEM);
+            wire::push_u64_bits(&mut p, *n as u64);
+            wire::push_u64_bits(&mut p, entries.len() as u64);
+            for &(user, val) in entries {
+                wire::push_u64_bits(&mut p, user);
+                p.push(val);
+            }
+        }
         Query::Stats => p.push(OP_STATS),
     }
     p
@@ -161,6 +188,16 @@ pub fn decode_query(payload: &[f32]) -> Result<Query> {
             entries.push((item, val));
         }
         Ok(Query::FoldIn { entries, n })
+    } else if op == OP_FOLD_IN_ITEM {
+        let n = take_len(payload, &mut pos, "top-user")?;
+        let nnz = take_len(payload, &mut pos, "entry")?;
+        let mut entries = Vec::with_capacity(nnz);
+        for _ in 0..nnz {
+            let user = wire::take_u64_bits(payload, &mut pos)?;
+            let val = take_f32(payload, &mut pos)?;
+            entries.push((user, val));
+        }
+        Ok(Query::FoldInItem { entries, n })
     } else if op == OP_STATS {
         Ok(Query::Stats)
     } else {
@@ -196,6 +233,16 @@ pub fn encode_reply(r: &Reply) -> Vec<f32> {
             wire::push_u64_bits(&mut p, top.len() as u64);
             for &(item, score) in top {
                 wire::push_u64_bits(&mut p, item);
+                p.push(score);
+            }
+        }
+        Reply::FoldInItem { h, top } => {
+            p.push(OP_FOLD_IN_ITEM);
+            wire::push_u64_bits(&mut p, h.len() as u64);
+            p.extend_from_slice(h);
+            wire::push_u64_bits(&mut p, top.len() as u64);
+            for &(user, score) in top {
+                wire::push_u64_bits(&mut p, user);
                 p.push(score);
             }
         }
@@ -255,6 +302,21 @@ pub fn decode_reply(payload: &[f32]) -> Result<Reply> {
             top.push((item, score));
         }
         Ok(Reply::FoldIn { w, top })
+    } else if op == OP_FOLD_IN_ITEM {
+        let k = take_len(payload, &mut pos, "embedding lane")?;
+        if pos + k > payload.len() {
+            crate::bail!("item fold-in reply shorter than its k={k} header");
+        }
+        let h = payload[pos..pos + k].to_vec();
+        pos += k;
+        let len = take_len(payload, &mut pos, "reply user")?;
+        let mut top = Vec::with_capacity(len);
+        for _ in 0..len {
+            let user = wire::take_u64_bits(payload, &mut pos)?;
+            let score = take_f32(payload, &mut pos)?;
+            top.push((user, score));
+        }
+        Ok(Reply::FoldInItem { h, top })
     } else if op == OP_STATS {
         Ok(Reply::Stats(wire::decode_text(&payload[pos..])))
     } else {
@@ -280,6 +342,7 @@ mod tests {
             Query::TopK { users: vec![0, big, 7], n: 10 },
             Query::Reconstruct { users: vec![big] },
             Query::FoldIn { entries: vec![(3, 0.5), (big, -1.25)], n: 5 },
+            Query::FoldInItem { entries: vec![(big, 4.5), (0, 1.0)], n: 3 },
             Query::Stats,
         ] {
             assert_eq!(decode_query(&encode_query(&q)).unwrap(), q);
@@ -293,6 +356,7 @@ mod tests {
             Reply::TopK(vec![vec![(big, 0.75), (2, 0.5)], vec![]]),
             Reply::Scores { rows: 2, cols: 3, data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] },
             Reply::FoldIn { w: vec![0.1, 0.2], top: vec![(1, 0.9)] },
+            Reply::FoldInItem { h: vec![0.3, 0.4], top: vec![(big, 0.8), (0, 0.1)] },
             Reply::Stats("{\"queries\":3}".into()),
             Reply::Error("unknown user id 9".into()),
         ] {

@@ -29,7 +29,7 @@ use std::time::{Duration, Instant};
 use crate::error::{Context, Result};
 use crate::linalg::Mat;
 use crate::metrics::JsonValue;
-use crate::serve::cache::{row_key, FoldCache};
+use crate::serve::cache::{item_row_key, row_key, FoldCache};
 use crate::serve::model::{top_n, FactorModel, FoldIn};
 use crate::serve::protocol::{self, Query, Reply};
 use crate::solvers::SolverKind;
@@ -282,6 +282,57 @@ fn fold_in_reply(shared: &Shared, s: &mut Scratch, entries: &[(u64, f32)], n: us
     Reply::FoldIn { w, top }
 }
 
+/// Item-side mirror of [`fold_in_reply`]: embed a new item from a sparse
+/// user-rating column, cached under a side-disambiguated key, optionally
+/// scoring every *user* for the new item.
+fn fold_in_item_reply(
+    shared: &Shared,
+    s: &mut Scratch,
+    entries: &[(u64, f32)],
+    n: usize,
+) -> Reply {
+    let users = shared.model.users() as u64;
+    if let Some(&(bad, _)) = entries.iter().find(|&&(i, _)| i >= users) {
+        return Reply::Error(format!(
+            "fold-in user id {bad} out of range (model has {users} users)"
+        ));
+    }
+    let key = item_row_key(entries);
+    let cached = lock(&shared.cache).get(&key).map(<[f32]>::to_vec);
+    let h = match cached {
+        Some(h) => h,
+        None => {
+            s.fold_row.clear();
+            s.fold_row.extend(entries.iter().map(|&(i, v)| (i as usize, v)));
+            match s.fold.solve_item(
+                &shared.model,
+                &s.fold_row,
+                shared.opts.solver,
+                shared.opts.sweeps,
+                0,
+            ) {
+                Ok(h) => {
+                    let h = h.to_vec();
+                    shared.metrics.fold_solves.fetch_add(1, Ordering::Relaxed);
+                    lock(&shared.cache).insert(key, h.clone());
+                    h
+                }
+                Err(e) => return Reply::Error(e.to_string()),
+            }
+        }
+    };
+    let top = if n > 0 {
+        s.fw.resize_to(1, h.len());
+        s.fw.data_mut().copy_from_slice(&h);
+        shared.model.scores_for_h(&s.fw, &mut s.fscores);
+        top_n(s.fscores.row(0), n, &mut s.topk);
+        s.topk.iter().map(|&(i, v)| (i as u64, v)).collect()
+    } else {
+        Vec::new()
+    };
+    Reply::FoldInItem { h, top }
+}
+
 fn process_batch(shared: &Shared, s: &mut Scratch, batch: Vec<Pending>) {
     shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
     shared.metrics.queries.fetch_add(batch.len() as u64, Ordering::Relaxed);
@@ -347,6 +398,10 @@ fn process_batch(shared: &Shared, s: &mut Scratch, batch: Vec<Pending>) {
         match &p.query {
             Query::FoldIn { entries, n } => {
                 let reply = fold_in_reply(shared, s, entries, *n);
+                finish(shared, p, &reply);
+            }
+            Query::FoldInItem { entries, n } => {
+                let reply = fold_in_item_reply(shared, s, entries, *n);
                 finish(shared, p, &reply);
             }
             Query::Stats => finish(shared, p, &Reply::Stats(shared.metrics_json().to_string())),

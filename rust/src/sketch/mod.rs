@@ -39,6 +39,27 @@ impl SketchKind {
             SketchKind::Srht => "srht",
         }
     }
+
+    /// Stable on-disk code (compressed shard manifests, `data::compress`).
+    pub fn code(self) -> u8 {
+        match self {
+            SketchKind::Gaussian => 0,
+            SketchKind::Subsample => 1,
+            SketchKind::CountSketch => 2,
+            SketchKind::Srht => 3,
+        }
+    }
+
+    /// Inverse of [`SketchKind::code`].
+    pub fn from_code(c: u8) -> crate::error::Result<SketchKind> {
+        match c {
+            0 => Ok(SketchKind::Gaussian),
+            1 => Ok(SketchKind::Subsample),
+            2 => Ok(SketchKind::CountSketch),
+            3 => Ok(SketchKind::Srht),
+            other => crate::bail!("unknown sketch kind code {other}"),
+        }
+    }
 }
 
 impl std::str::FromStr for SketchKind {
@@ -126,6 +147,19 @@ impl SketchMatrix {
 
     pub fn d(&self) -> usize {
         self.d
+    }
+
+    /// Resident bytes of the realised representation — what a rank pays to
+    /// keep this sketch in RAM (Gaussian materialises `n×d` floats; the
+    /// structured families are `O(n)` or `O(d)`). Feeds the compressed
+    /// data plane's residency accounting ([`crate::data::compress`]).
+    pub fn resident_bytes(&self) -> usize {
+        match &self.repr {
+            Repr::Dense(m) => m.data().len() * 4,
+            Repr::Subsample { idx, .. } => idx.len() * 8,
+            Repr::CountSketch { bucket, sign } => bucket.len() * 8 + sign.len() * 4,
+            Repr::Srht { sign, sel, .. } => sign.len() * 4 + sel.len() * 8,
+        }
     }
 
     /// `A · S` for dense `A (m×n)` → `m×d`.

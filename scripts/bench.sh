@@ -2,7 +2,8 @@
 # Perf evidence runner: the GEMM microbench (emits BENCH_gemm.json in the
 # repo root), the comm-overlap/quantized-wire throughput grid (emits
 # BENCH_overlap.json), the serving-plane latency grid (emits
-# BENCH_serve.json), plus the Fig. 3 scalability sweep.
+# BENCH_serve.json), the compressed-shard ratio/accuracy sweep (emits
+# BENCH_compress.json), plus the Fig. 3 scalability sweep.
 #
 # Usage: scripts/bench.sh [--full]
 #   --full          paper-sized shapes (DSANLS_BENCH_FULL=1)
@@ -26,8 +27,12 @@ echo "== serve_latency (writes BENCH_serve.json) =="
 cargo bench --bench serve_latency
 
 echo
+echo "== compress_ratio (writes BENCH_compress.json) =="
+cargo bench --bench compress_ratio
+
+echo
 echo "== fig3_scalability =="
 cargo bench --bench fig3_scalability
 
 echo
-echo "done. evidence: ./BENCH_gemm.json, ./BENCH_overlap.json, ./BENCH_serve.json, per-figure CSVs under ./results/"
+echo "done. evidence: ./BENCH_gemm.json, ./BENCH_overlap.json, ./BENCH_serve.json, ./BENCH_compress.json, per-figure CSVs under ./results/"

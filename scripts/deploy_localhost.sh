@@ -1,7 +1,8 @@
 #!/usr/bin/env bash
 # DEPLOYMENT.md localhost walkthrough, executable (CI runs this verbatim):
 # shard the dataset, start one worker per "host" on 127.0.0.1, launch with
-# a hosts file, and assert the factors are bit-identical to the simulator.
+# a hosts file, and assert the factors are bit-identical to the simulator;
+# then the kill/retry, serving, elastic and compressed-shard walkthroughs.
 #
 # Usage: scripts/deploy_localhost.sh
 # Env:   DSANLS_BIN  — dsanls binary (default target/release/dsanls)
@@ -98,6 +99,13 @@ cmp "$WORK/topk.log" "$WORK/topk2.log"
 test "$(sed -n 's/^fold-in w: //p' "$WORK/fold.log" | wc -w)" -eq 4
 grep -q "fold-in top:" "$WORK/fold.log"
 
+# the mirrored item fold-in embeds a new item from user ratings, and
+# suggests the users who would score it highest
+"$BIN" query --addr "127.0.0.1:$SERVE_PORT" --fold-in-item "0:2.0,1:1.0" --top-k 3 \
+  | tee "$WORK/folditem.log"
+test "$(sed -n 's/^fold-in-item h: //p' "$WORK/folditem.log" | wc -w)" -eq 4
+grep -q "fold-in-item top users:" "$WORK/folditem.log"
+
 # the metrics snapshot reflects the traffic
 "$BIN" query --addr "127.0.0.1:$SERVE_PORT" --stats | grep -q '"queries":'
 
@@ -123,3 +131,30 @@ grep -q "retries: 0" "$WORK/elastic.log"
 grep -q "epochs: 2" "$WORK/elastic.log"
 grep -q "bit-identical to simulated backend: true" "$WORK/elastic.log"
 echo "elastic walkthrough OK (rank died mid-run, replacement re-joined, survivors never restarted, bit-identical)"
+
+echo "== step 8: compressed shards — factorize sketched views directly =="
+# --compress writes the fixed sketched views (~1/4 the raw footprint at
+# --ratio 4); launch autodetects the v3 format, every worker loads only
+# its views, and --verify-sim asserts the compressed run is bit-identical
+# to the compressed simulator run (DEPLOYMENT.md §Compressed shards).
+"$BIN" shard --out "$WORK/cshards" --nodes 2 --compress --sketch countsketch \
+  --ratio 4 "${CFG[@]}" | tee "$WORK/cshard.log"
+grep -q "compressed view file" "$WORK/cshard.log"
+
+"$BIN" launch --nodes 2 --shards "$WORK/cshards" --verify-sim "${CFG[@]}" \
+  | tee "$WORK/compressed.log"
+grep -q "compressed shard" "$WORK/compressed.log"
+grep -q "bit-identical to simulated backend: true" "$WORK/compressed.log"
+
+# a secure protocol must refuse the compressed directory with a typed error
+CFG_SECURE=()
+for a in "${CFG[@]}"; do
+  [[ "$a" == --experiment.algorithm=* ]] || CFG_SECURE+=("$a")
+done
+if "$BIN" launch --nodes 2 --shards "$WORK/cshards" \
+    --experiment.algorithm=syn-sd "${CFG_SECURE[@]}" \
+    >"$WORK/cerr.out" 2>"$WORK/cerr.log"; then
+  echo "secure launch on compressed shards should have failed"; exit 1
+fi
+grep -qi "secure" "$WORK/cerr.log"
+echo "compressed walkthrough OK (sketched views factorized, bit-identical, secure refused)"
