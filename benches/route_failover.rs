@@ -1,0 +1,135 @@
+//! Replicated-serving router bench: a consistent-hash `dsanls route`
+//! front-end over in-process serve replicas, all on real TCP loopback.
+//! Measures (1) the routing overhead — direct-to-replica vs
+//! through-the-router p50/p99 top-k latency, (2) degraded-fleet
+//! throughput after one replica is killed (the ring fails its keys over
+//! to the survivors), and (3) the failover hiccup: how long the first
+//! query routed at a just-killed replica takes to come back from the
+//! next ring node. Emits a machine-readable `BENCH_route.json` report.
+//!
+//! Env knobs: `DSANLS_THREADS`, `DSANLS_BENCH_FULL=1`,
+//! `DSANLS_BENCH_JSON_DIR`.
+
+mod bench_util;
+
+use std::time::{Duration, Instant};
+
+use dsanls::linalg::Mat;
+use dsanls::metrics::JsonValue;
+use dsanls::nmf::control::{Checkpoint, CheckpointMeta, ResumeState};
+use dsanls::rng::Pcg64;
+use dsanls::router::{route, RouteOptions};
+use dsanls::serve::{serve, FactorModel, ServeClient, ServeOptions, ServerHandle};
+
+fn model(users: usize, items: usize, k: usize) -> FactorModel {
+    let mut rng = Pcg64::new(0x40F7E, k as u128);
+    let u = Mat::rand_uniform(users, k, 1.0, &mut rng);
+    let v = Mat::rand_uniform(items, k, 1.0, &mut rng);
+    FactorModel::from_checkpoint(Checkpoint {
+        meta: CheckpointMeta { algo: "dsanls".into(), seed: 1, k, rows: users, cols: items, params: 0 },
+        state: ResumeState { iteration: 1, u, v },
+    })
+}
+
+fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+fn replica(users: usize, items: usize, k: usize) -> ServerHandle {
+    let opts = ServeOptions { batch_wait_us: 0, ..ServeOptions::default() };
+    serve("127.0.0.1:0", model(users, items, k), opts).expect("bind replica")
+}
+
+/// p50/p99 top-k latency and queries/s of `queries` sequential queries
+/// against `addr`.
+fn measure(addr: &str, users: usize, queries: usize, top: usize) -> (f64, f64, f64) {
+    let mut client = ServeClient::connect(addr).expect("connect");
+    for q in 0..5u64 {
+        client.top_k(&[q % users as u64], top).expect("warmup query");
+    }
+    let mut lat = Vec::with_capacity(queries);
+    let t0 = Instant::now();
+    for q in 0..queries {
+        let user = (q as u64 * 7919) % users as u64;
+        let t = Instant::now();
+        client.top_k(&[user], top).expect("bench query");
+        lat.push(t.elapsed().as_secs_f64());
+    }
+    let total = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    (percentile(&lat, 0.50) * 1e3, percentile(&lat, 0.99) * 1e3, queries as f64 / total)
+}
+
+fn main() {
+    bench_util::banner("route_failover", "consistent-hash router overhead and failover");
+    let full = bench_util::full();
+    let (users, items, k) = if full { (20_000usize, 8_000usize, 64) } else { (4_000, 2_000, 32) };
+    let queries = if full { 600usize } else { 200 };
+    let top = 10;
+
+    // --- routing overhead: direct replica vs router-in-the-middle -------
+    let mut solo = replica(users, items, k);
+    let (direct_p50, direct_p99, direct_qps) =
+        measure(&solo.addr().to_string(), users, queries, top);
+    println!("direct:  p50 {direct_p50:.3} ms  p99 {direct_p99:.3} ms  {direct_qps:.0} q/s");
+
+    let mut r2 = replica(users, items, k);
+    let replicas = vec![solo.addr().to_string(), r2.addr().to_string()];
+    let opts = RouteOptions { cooldown: Duration::from_millis(200), ..RouteOptions::default() };
+    let mut router = route("127.0.0.1:0", &replicas, opts).expect("bind router");
+    let (routed_p50, routed_p99, routed_qps) =
+        measure(&router.addr().to_string(), users, queries, top);
+    println!("routed:  p50 {routed_p50:.3} ms  p99 {routed_p99:.3} ms  {routed_qps:.0} q/s");
+
+    // --- failover hiccup + degraded throughput --------------------------
+    // kill one replica, then probe 16 distinct user keys: the slowest of
+    // them almost surely hashed to the dead replica, so its latency is
+    // the failover-detection cost (dead pooled socket + refused redial)
+    let mut probe = ServeClient::connect(&router.addr().to_string()).expect("connect probe");
+    r2.shutdown();
+    let mut first_after_kill_ms = 0.0f64;
+    for user in 0..16u64 {
+        let t = Instant::now();
+        probe.top_k(&[user], top).expect("failover query");
+        first_after_kill_ms = first_after_kill_ms.max(t.elapsed().as_secs_f64() * 1e3);
+    }
+    drop(probe);
+    let (degraded_p50, degraded_p99, degraded_qps) =
+        measure(&router.addr().to_string(), users, queries, top);
+    println!(
+        "killed one replica: first query {first_after_kill_ms:.3} ms, degraded p50 \
+         {degraded_p50:.3} ms  p99 {degraded_p99:.3} ms  {degraded_qps:.0} q/s"
+    );
+    let m = router.metrics_json();
+    let failovers = m.get("failovers").and_then(JsonValue::as_f64).unwrap_or(0.0);
+    router.shutdown();
+    solo.shutdown();
+
+    let json = JsonValue::Object(vec![
+        ("bench".into(), JsonValue::String("route_failover".into())),
+        ("threads".into(), JsonValue::Number(dsanls::parallel::num_threads() as f64)),
+        ("users".into(), JsonValue::Number(users as f64)),
+        ("items".into(), JsonValue::Number(items as f64)),
+        ("k".into(), JsonValue::Number(k as f64)),
+        ("queries".into(), JsonValue::Number(queries as f64)),
+        ("top_k".into(), JsonValue::Number(top as f64)),
+        ("full".into(), JsonValue::Bool(full)),
+        ("direct_p50_ms".into(), JsonValue::Number(direct_p50)),
+        ("direct_p99_ms".into(), JsonValue::Number(direct_p99)),
+        ("direct_qps".into(), JsonValue::Number(direct_qps)),
+        ("routed_p50_ms".into(), JsonValue::Number(routed_p50)),
+        ("routed_p99_ms".into(), JsonValue::Number(routed_p99)),
+        ("routed_qps".into(), JsonValue::Number(routed_qps)),
+        ("first_query_after_kill_ms".into(), JsonValue::Number(first_after_kill_ms)),
+        ("degraded_p50_ms".into(), JsonValue::Number(degraded_p50)),
+        ("degraded_p99_ms".into(), JsonValue::Number(degraded_p99)),
+        ("degraded_qps".into(), JsonValue::Number(degraded_qps)),
+        ("failovers".into(), JsonValue::Number(failovers)),
+        ("estimated".into(), JsonValue::Bool(false)),
+    ]);
+    let path = bench_util::write_bench_json("BENCH_route.json", &json);
+    println!("report written to {path:?}");
+}

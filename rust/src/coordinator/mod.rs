@@ -8,7 +8,9 @@
 //! [`shard_cli`] pre-slices datasets into on-disk shard directories
 //! (`dsanls shard`) for multi-host deployments. After training,
 //! [`serve_cli`] puts the checkpointed factors behind a TCP inference
-//! server (`dsanls serve` / `dsanls query` — see [`crate::serve`]).
+//! server (`dsanls serve` / `dsanls query` — see [`crate::serve`]), and
+//! [`route_cli`] fronts several such replicas with a consistent-hash
+//! router (`dsanls route` — see [`crate::router`]).
 //!
 //! ## Launch lifecycle (multi-process path)
 //!
@@ -37,6 +39,7 @@
 #![warn(missing_docs)]
 
 pub mod launch;
+pub mod route_cli;
 pub mod serve_cli;
 pub mod shard_cli;
 

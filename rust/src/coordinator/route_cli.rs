@@ -1,0 +1,98 @@
+//! `dsanls route` — the replicated-serving router CLI.
+//!
+//! Fronts a set of `dsanls serve` replicas with a consistent-hash
+//! router ([`crate::router`]) on one address. Clients keep using plain
+//! `dsanls query --addr ROUTER`; replicas come from `--replicas
+//! host:port,...` or `--hosts FILE` (one address per line, `#`
+//! comments — the same file format `dsanls launch` uses, so a serving
+//! fleet can reuse the training address book).
+
+use std::time::Duration;
+
+use crate::error::{Context, Result};
+use crate::router::{route, RouteOptions};
+
+fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
+    args.iter().position(|a| a == flag).and_then(|i| args.get(i + 1)).map(|s| s.as_str())
+}
+
+fn parse_num<T: std::str::FromStr>(args: &[String], flag: &str) -> Result<Option<T>> {
+    match flag_value(args, flag) {
+        None => Ok(None),
+        Some(v) => v
+            .parse::<T>()
+            .map(Some)
+            .map_err(|_| crate::err!("{flag} expects a number, got {v:?}")),
+    }
+}
+
+/// Parse the replica list from `--replicas` (comma-separated) or
+/// `--hosts FILE` (one per line, blank lines and `#` comments skipped).
+fn parse_replicas(args: &[String]) -> Result<Vec<String>> {
+    let replicas: Vec<String> = if let Some(list) = flag_value(args, "--replicas") {
+        list.split(',').map(str::trim).filter(|s| !s.is_empty()).map(String::from).collect()
+    } else if let Some(path) = flag_value(args, "--hosts") {
+        std::fs::read_to_string(path)
+            .with_context(|| format!("reading replica hosts file {path}"))?
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'))
+            .map(String::from)
+            .collect()
+    } else {
+        crate::bail!("route needs --replicas host:port,... or --hosts FILE");
+    };
+    if replicas.is_empty() {
+        crate::bail!("route: replica list is empty");
+    }
+    Ok(replicas)
+}
+
+/// Entry point for `dsanls route --replicas host:port,... --bind ADDR`.
+pub fn route_main(args: &[String]) -> Result<()> {
+    let replicas = parse_replicas(args)?;
+    let bind = flag_value(args, "--bind").unwrap_or("127.0.0.1:7979");
+
+    let mut opts = RouteOptions::default();
+    if let Some(v) = parse_num::<usize>(args, "--vnodes")? {
+        opts.vnodes = v.max(1);
+    }
+    if let Some(ms) = parse_num::<u64>(args, "--timeout-ms")? {
+        opts.io_timeout = Duration::from_millis(ms.max(1));
+    }
+    if let Some(ms) = parse_num::<u64>(args, "--cooldown-ms")? {
+        opts.cooldown = Duration::from_millis(ms);
+    }
+
+    let handle = route(bind, &replicas, opts)?;
+    // the line the deploy walkthrough (and any operator script) waits for
+    println!("routing on {} across {} replicas", handle.addr(), replicas.len());
+    // route until killed (SIGINT/SIGTERM); the threads own all the work
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn replica_list_parsing() {
+        assert_eq!(
+            parse_replicas(&s(&["--replicas", "a:1, b:2,c:3"])).unwrap(),
+            vec!["a:1", "b:2", "c:3"]
+        );
+        assert!(parse_replicas(&s(&["--replicas", " , "])).is_err());
+        assert!(parse_replicas(&s(&[])).is_err());
+        let path = std::env::temp_dir().join(format!("dsanls_hosts_{}", std::process::id()));
+        std::fs::write(&path, "# serving fleet\nhost-a:7878\n\n  host-b:7878\n").unwrap();
+        let args = s(&["--hosts", path.to_str().unwrap()]);
+        assert_eq!(parse_replicas(&args).unwrap(), vec!["host-a:7878", "host-b:7878"]);
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -3,15 +3,17 @@
 //! `serve` loads a [`FactorModel`] from a training checkpoint and fronts
 //! it with the [`crate::serve::server`] batcher on a TCP address; `query`
 //! is the matching smoke-test client (top-k, reconstruction, user and
-//! item fold-in, and stats against a running server). DEPLOYMENT.md walks
-//! through the pair
-//! end-to-end and `scripts/deploy_localhost.sh` executes the walkthrough
-//! in CI.
+//! item fold-in, stats, and `--reload` hot-swap against a running
+//! server). With `--watch-checkpoint` the serve loop polls the checkpoint
+//! file and hot-swaps each rewrite into the live server — checkpoints are
+//! written atomically (tmp + rename), so a poll never observes a torn
+//! file. DEPLOYMENT.md walks through the pair end-to-end and
+//! `scripts/deploy_localhost.sh` executes the walkthrough in CI.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use crate::error::Result;
-use crate::serve::{serve, FactorModel, ServeClient, ServeOptions};
+use crate::serve::{serve, CheckpointSource, FactorModel, ServeClient, ServeOptions};
 use crate::solvers::SolverKind;
 
 fn flag_value<'a>(args: &'a [String], flag: &str) -> Option<&'a str> {
@@ -59,12 +61,18 @@ pub fn serve_main(args: &[String]) -> Result<()> {
     if let Some(s) = flag_value(args, "--solver") {
         opts.solver = s.parse::<SolverKind>().map_err(crate::error::Error::msg)?;
     }
+    let expect_algo = flag_value(args, "--expect-algo").map(String::from);
+    let expect_params = parse_num::<u64>(args, "--expect-params")?;
+    // remember where the model came from so OP_RELOAD (and the watcher
+    // below) can re-read it with the same identity gate
+    opts.source = Some(CheckpointSource {
+        path: ckpt.clone(),
+        expect_algo: expect_algo.clone(),
+        expect_params,
+    });
 
     let model = FactorModel::load(&ckpt)?;
-    model.check_identity(
-        flag_value(args, "--expect-algo"),
-        parse_num::<u64>(args, "--expect-params")?,
-    )?;
+    model.check_identity(expect_algo.as_deref(), expect_params)?;
     println!(
         "loaded {} checkpoint {} (iteration {}): {} users × {} items, k={}",
         model.meta().algo,
@@ -78,16 +86,47 @@ pub fn serve_main(args: &[String]) -> Result<()> {
     let handle = serve(bind, model, opts)?;
     // the line the deploy walkthrough (and any operator script) waits for
     println!("serving on {}", handle.addr());
+
+    if has_flag(args, "--watch-checkpoint") {
+        let interval = parse_num::<u64>(args, "--watch-interval-ms")?.unwrap_or(500).max(1);
+        let mut stamp = file_stamp(&ckpt);
+        loop {
+            std::thread::sleep(std::time::Duration::from_millis(interval));
+            let now = file_stamp(&ckpt);
+            if now == stamp {
+                continue;
+            }
+            stamp = now;
+            // checkpoints land by atomic rename, so a changed stamp means a
+            // complete new file — never a half-written one
+            match handle.reload() {
+                Ok((gen, it)) => {
+                    println!("swapped to generation {gen} (checkpoint iteration {it})")
+                }
+                // a bad rewrite (wrong algo, truncated copy) keeps the old
+                // generation serving; the operator sees why on stderr
+                Err(e) => eprintln!("checkpoint watch: reload failed, still serving: {e}"),
+            }
+        }
+    }
     // serve until killed (SIGINT/SIGTERM); the threads own all the work
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
 }
 
+/// Cheap change detector for `--watch-checkpoint`: (mtime, len) of the
+/// checkpoint file, `None` while it is missing (mid-rename or deleted).
+fn file_stamp(path: &Path) -> Option<(std::time::SystemTime, u64)> {
+    std::fs::metadata(path).ok().and_then(|m| m.modified().ok().map(|t| (t, m.len())))
+}
+
 fn parse_users(args: &[String]) -> Result<Vec<u64>> {
     let list = flag_value(args, "--users")
         .ok_or_else(|| {
-            crate::err!("query needs --users ID[,ID...] (or --fold-in / --fold-in-item / --stats)")
+            crate::err!(
+                "query needs --users ID[,ID...] (or --fold-in / --fold-in-item / --stats / --reload)"
+            )
         })?;
     list.split(',')
         .map(|s| {
@@ -131,6 +170,12 @@ pub fn query_main(args: &[String]) -> Result<()> {
 
     if has_flag(args, "--stats") {
         println!("{}", client.stats()?);
+        return Ok(());
+    }
+
+    if has_flag(args, "--reload") {
+        let (gen, it) = client.reload()?;
+        println!("reloaded: generation {gen} (checkpoint iteration {it})");
         return Ok(());
     }
 

@@ -18,7 +18,9 @@
 //!   a production consumer in the [`serve`] subsystem (`dsanls serve` /
 //!   `dsanls query`): checkpoint-loaded [`serve::FactorModel`]s answering
 //!   batched top-k / reconstruction / fold-in queries over the same wire
-//!   framing.
+//!   framing, hot-swappable to newer checkpoints with zero downtime, and
+//!   scaled out behind the [`router`] consistent-hash tier
+//!   (`dsanls route`).
 //! * **L2 — JAX model** (`python/compile/model.py`) — the sketched update
 //!   step as a JAX graph, AOT-lowered to HLO text under `artifacts/`.
 //! * **L1 — Pallas kernels** (`python/compile/kernels/`) — proximal
@@ -44,6 +46,7 @@ pub mod metrics;
 pub mod nmf;
 pub mod parallel;
 pub mod rng;
+pub mod router;
 pub mod runtime;
 pub mod secure;
 pub mod serve;

@@ -18,12 +18,19 @@
 //!   file) into per-rank block files + manifest for multi-host deployment;
 //!   `--compress` writes fixed sketched views (~1/R the footprint) that
 //!   workers factorize directly (see DEPLOYMENT.md).
-//! * `serve --checkpoint FILE [--bind ADDR] ...` — load trained factors
-//!   from a checkpoint and answer batched top-k / reconstruction /
-//!   fold-in queries over TCP (see DEPLOYMENT.md §Serving).
+//! * `serve --checkpoint FILE [--bind ADDR] [--watch-checkpoint] ...` —
+//!   load trained factors from a checkpoint and answer batched top-k /
+//!   reconstruction / fold-in queries over TCP; `--watch-checkpoint`
+//!   hot-swaps each checkpoint rewrite into the live server with zero
+//!   downtime (see DEPLOYMENT.md §Serving).
+//! * `route --replicas HOST:PORT,... --bind ADDR` — consistent-hash
+//!   router fronting several `serve` replicas behind one address, with
+//!   health-checked failover and aggregated stats (see DEPLOYMENT.md
+//!   §Replicated serving).
 //! * `query --addr ADDR <--users IDS [--top-k N|--reconstruct] |
 //!   --fold-in ITEM:RATING,... | --fold-in-item USER:RATING,... |
-//!   --stats>` — smoke-test client for a running `serve` instance.
+//!   --stats | --reload>` — smoke-test client for a running `serve`
+//!   instance (or a `route` front-end — same protocol).
 //! * `compare [--config FILE] [--key=value ...]` — run DSANLS against all
 //!   three MPI-FAUN baselines on the configured dataset (a Fig. 2 panel).
 //! * `secure [--config FILE] ...` — run all six secure protocols on the
@@ -52,6 +59,7 @@ fn main() {
         Some("shard") => cmd_result(coordinator::shard_cli::shard_main(&args[1..])),
         Some("serve") => cmd_result(coordinator::serve_cli::serve_main(&args[1..])),
         Some("query") => cmd_result(coordinator::serve_cli::query_main(&args[1..])),
+        Some("route") => cmd_result(coordinator::route_cli::route_main(&args[1..])),
         Some("compare") => cmd_compare(&args[1..]),
         Some("secure") => cmd_secure(&args[1..]),
         Some("attack") => cmd_attack(),
@@ -73,7 +81,7 @@ fn main() {
 fn usage() {
     println!(
         "dsanls {} — Fast and Secure Distributed NMF (TKDE 2020 reproduction)\n\n\
-         USAGE: dsanls <run|launch|worker|shard|serve|query|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
+         USAGE: dsanls <run|launch|worker|shard|serve|route|query|compare|secure|attack|artifacts|datasets> [--config FILE] [--sec.key=value ...]\n\n\
          launch:  dsanls launch --nodes N [--port P] [--bind HOST] [--hosts FILE] [--shards DIR]\n\
                   [--max-seconds S] [--target-error E] [--checkpoint PATH [--checkpoint-every K]]\n\
                   [--resume PATH] [--retries N] [--elastic [--max-joins N]] [--verify-sim]\n\
@@ -105,15 +113,26 @@ fn usage() {
          serve:   dsanls serve --checkpoint FILE [--bind HOST:PORT] [--batch-max N]\n\
                   [--batch-wait-us U] [--cache N] [--solver hals|cd|pgd] [--sweeps N]\n\
                   [--threads T] [--expect-algo NAME] [--expect-params HASH]\n\
+                  [--watch-checkpoint [--watch-interval-ms MS]]\n\
                   load trained factors from a checkpoint and answer batched top-k /\n\
-                  reconstruction / fold-in queries over TCP (see DEPLOYMENT.md)\n\
+                  reconstruction / fold-in queries over TCP; --watch-checkpoint hot-swaps\n\
+                  each checkpoint rewrite into the live server with zero downtime and no\n\
+                  mixed-generation batches (see DEPLOYMENT.md)\n\
+         route:   dsanls route <--replicas HOST:PORT,... | --hosts FILE> [--bind HOST:PORT]\n\
+                  [--vnodes N] [--timeout-ms MS] [--cooldown-ms MS]\n\
+                  consistent-hash router fronting several serve replicas behind one\n\
+                  address: keyed queries stick to a stable owner and fail over along the\n\
+                  ring, --stats aggregates the fleet, --reload hot-swaps every replica\n\
+                  (see DEPLOYMENT.md §Replicated serving)\n\
          query:   dsanls query [--addr HOST:PORT] --users ID[,ID...] [--top-k N]\n\
                   dsanls query [--addr HOST:PORT] --users ID[,ID...] --reconstruct\n\
                   dsanls query [--addr HOST:PORT] --fold-in ITEM:RATING[,...] [--top-k N]\n\
                   dsanls query [--addr HOST:PORT] --fold-in-item USER:RATING[,...] [--top-k N]\n\
                   dsanls query [--addr HOST:PORT] --stats\n\
-                  smoke-test client for a running serve instance; --fold-in embeds a new\n\
-                  user against fixed V, --fold-in-item a new item against fixed U\n\n\
+                  dsanls query [--addr HOST:PORT] --reload\n\
+                  smoke-test client for a running serve instance or route front-end;\n\
+                  --fold-in embeds a new user against fixed V, --fold-in-item a new item\n\
+                  against fixed U; --reload triggers the checkpoint hot-swap\n\n\
          Config keys (TOML sections flattened as --section.key=value):\n\
            experiment: name algorithm dataset scale nodes rank iterations seed eval_every backend\n\
            sketch:     kind d_u d_v\n\

@@ -1,0 +1,90 @@
+//! Per-replica health bookkeeping for the router.
+//!
+//! The router learns health passively, from the requests it already
+//! sends: a transport failure marks the replica *down* for a cooldown
+//! window and routes around it; the next request after the window
+//! retries it (and one success marks it fully up again). No separate
+//! ping thread — a replica that answers queries is healthy by
+//! definition, and one that doesn't gets probed at most once per
+//! cooldown instead of hammered.
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Default)]
+struct State {
+    consecutive_failures: u32,
+    down_until: Option<Instant>,
+}
+
+/// Passive health state for one replica.
+#[derive(Debug, Default)]
+pub struct ReplicaHealth {
+    state: Mutex<State>,
+}
+
+impl ReplicaHealth {
+    /// A fresh, presumed-healthy replica.
+    pub fn new() -> ReplicaHealth {
+        ReplicaHealth::default()
+    }
+
+    /// Should the router send this replica traffic right now? `true`
+    /// when never failed, recovered, or the cooldown has elapsed (the
+    /// elapsed case is the single retry probe).
+    pub fn available(&self) -> bool {
+        let s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        match s.down_until {
+            Some(t) => Instant::now() >= t,
+            None => true,
+        }
+    }
+
+    /// A request to this replica succeeded: clear the failure streak.
+    pub fn record_success(&self) {
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        s.consecutive_failures = 0;
+        s.down_until = None;
+    }
+
+    /// A request failed at the transport level: extend the down window.
+    pub fn record_failure(&self, cooldown: Duration) {
+        let mut s = self.state.lock().unwrap_or_else(|p| p.into_inner());
+        s.consecutive_failures = s.consecutive_failures.saturating_add(1);
+        s.down_until = Some(Instant::now() + cooldown);
+    }
+
+    /// Consecutive transport failures since the last success.
+    pub fn failures(&self) -> u32 {
+        self.state.lock().unwrap_or_else(|p| p.into_inner()).consecutive_failures
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn failure_marks_down_until_cooldown_elapses() {
+        let h = ReplicaHealth::new();
+        assert!(h.available());
+        h.record_failure(Duration::from_millis(40));
+        assert!(!h.available());
+        assert_eq!(h.failures(), 1);
+        h.record_failure(Duration::from_millis(40));
+        assert_eq!(h.failures(), 2);
+        std::thread::sleep(Duration::from_millis(60));
+        // cooldown elapsed → eligible for one retry probe
+        assert!(h.available());
+    }
+
+    #[test]
+    fn success_resets_the_streak() {
+        let h = ReplicaHealth::new();
+        h.record_failure(Duration::from_secs(3600));
+        assert!(!h.available());
+        h.record_success();
+        assert!(h.available());
+        assert_eq!(h.failures(), 0);
+    }
+}

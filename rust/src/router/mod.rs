@@ -1,0 +1,37 @@
+//! Replicated serving tier: a consistent-hash router over `dsanls
+//! serve` replicas.
+//!
+//! Training scales writes across ranks; this subsystem scales the
+//! **read** path the same way. `dsanls route --replicas host:port,...
+//! --bind ADDR` fronts any number of serving replicas behind one
+//! address speaking the unchanged wire protocol — clients keep using
+//! plain `dsanls query` / [`crate::serve::ServeClient`] and cannot tell
+//! a router from a single server.
+//!
+//! * [`ring`] — the consistent-hash ring (FNV-1a, virtual nodes):
+//!   keyed queries land on a stable owner, and removing a replica only
+//!   moves that replica's keys, so surviving fold-in caches stay hot
+//!   through a failover.
+//! * [`pool`] — per-replica connection pools reusing
+//!   [`crate::serve::ServeClient`] with I/O deadlines, retrying once on
+//!   a fresh socket before declaring a replica down.
+//! * [`health`] — passive cooldown-based health: a transport failure
+//!   routes the replica around for a window; the next request after the
+//!   window probes it, and one success restores it.
+//! * [`server`] — the router itself: keyed forwarding with ring-order
+//!   failover, aggregated `Stats` fan-out, all-or-error `Reload`
+//!   broadcast for rolling hot-swaps across the fleet.
+//!
+//! CLI surface: `dsanls route`
+//! ([`crate::coordinator::route_cli`]; walkthrough in DEPLOYMENT.md
+//! §Replicated serving).
+
+#![warn(missing_docs)]
+
+pub mod health;
+pub mod pool;
+pub mod ring;
+pub mod server;
+
+pub use ring::HashRing;
+pub use server::{route, RouteOptions, RouterHandle};

@@ -1,0 +1,91 @@
+//! Per-replica connection pool.
+//!
+//! Each replica gets a small stack of idle [`ServeClient`] connections;
+//! a forwarded query checks one out (or dials fresh), runs, and checks
+//! it back in on success. A pooled connection that fails gets ONE fresh
+//! redial before the replica is declared down — a stale socket from an
+//! earlier replica restart must not read as an outage.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::router::health::ReplicaHealth;
+use crate::serve::protocol::{Query, Reply};
+use crate::serve::ServeClient;
+
+/// Idle connections kept per replica (beyond this, finished connections
+/// are dropped instead of pooled).
+const POOL_CAP: usize = 8;
+
+/// Connection pool + health state for one replica address.
+#[derive(Debug)]
+pub struct ReplicaPool {
+    addr: String,
+    idle: Mutex<Vec<ServeClient>>,
+    /// Passive health (the router consults this before routing here).
+    pub health: ReplicaHealth,
+}
+
+impl ReplicaPool {
+    /// An empty pool for `addr`; connections are dialed lazily.
+    pub fn new(addr: String) -> ReplicaPool {
+        ReplicaPool { addr, idle: Mutex::new(Vec::new()), health: ReplicaHealth::new() }
+    }
+
+    /// The replica address this pool fronts.
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    fn check_out(&self) -> Option<ServeClient> {
+        self.idle.lock().unwrap_or_else(|p| p.into_inner()).pop()
+    }
+
+    fn check_in(&self, client: ServeClient) {
+        let mut idle = self.idle.lock().unwrap_or_else(|p| p.into_inner());
+        if idle.len() < POOL_CAP {
+            idle.push(client);
+        }
+    }
+
+    /// Forward `q` to this replica. `Ok((reply, generation))` carries the
+    /// replica's reply — **including** [`Reply::Error`], which means the
+    /// replica answered and the router must NOT fail over — plus the
+    /// model generation it advertised. `Err` means the replica is
+    /// unreachable after a pooled attempt and a fresh redial; the health
+    /// state is already marked down for `cooldown`.
+    pub fn request(
+        &self,
+        q: &Query,
+        timeout: Duration,
+        cooldown: Duration,
+    ) -> Result<(Reply, u64)> {
+        // attempt 1: a pooled connection, if any survives from earlier
+        if let Some(mut client) = self.check_out() {
+            if let Ok(reply) = client.query_reply(q) {
+                let generation = client.generation();
+                self.check_in(client);
+                self.health.record_success();
+                return Ok((reply, generation));
+            }
+            // stale socket (replica restarted, idle timeout, …): fall
+            // through to a fresh dial before judging the replica down
+        }
+        // attempt 2: dial fresh with the router's I/O deadline
+        match ServeClient::connect_with(&self.addr, Some(timeout))
+            .and_then(|mut client| client.query_reply(q).map(|reply| (client, reply)))
+        {
+            Ok((client, reply)) => {
+                let generation = client.generation();
+                self.check_in(client);
+                self.health.record_success();
+                Ok((reply, generation))
+            }
+            Err(e) => {
+                self.health.record_failure(cooldown);
+                Err(e)
+            }
+        }
+    }
+}

@@ -1,0 +1,150 @@
+//! Consistent-hash ring over replica addresses.
+//!
+//! Each replica contributes [`HashRing::vnodes`]-many virtual points
+//! hashed from `"{addr}#{v}"`; a query key routes to the owner of the
+//! first point clockwise from its hash. The classic consistent-hashing
+//! property follows: removing one replica reassigns only the keys that
+//! replica owned (its points vanish; every other point keeps its
+//! position), so a failover never reshuffles traffic that was already
+//! landing on healthy replicas — their fold-in caches stay hot.
+//!
+//! The hash is FNV-1a (64-bit): tiny, dependency-free, and plenty
+//! uniform for spreading vnode points — this is load balancing, not
+//! cryptography.
+
+use crate::error::Result;
+
+/// 64-bit FNV-1a over `bytes` — the ring's point and key hash.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// A consistent-hash ring mapping `u64` keys to replica indices.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(point, replica index)` sorted by point.
+    points: Vec<(u64, usize)>,
+    replicas: usize,
+}
+
+impl HashRing {
+    /// Build a ring over `replicas` (addresses or any distinct labels)
+    /// with `vnodes` virtual points each. Errors on an empty replica set.
+    pub fn new(replicas: &[String], vnodes: usize) -> Result<HashRing> {
+        if replicas.is_empty() {
+            crate::bail!("consistent-hash ring needs at least one replica");
+        }
+        let vnodes = vnodes.max(1);
+        let mut points = Vec::with_capacity(replicas.len() * vnodes);
+        for (idx, addr) in replicas.iter().enumerate() {
+            for v in 0..vnodes {
+                points.push((fnv1a(format!("{addr}#{v}").as_bytes()), idx));
+            }
+        }
+        // ties (astronomically unlikely) break by replica index so the
+        // layout is deterministic for a given replica list
+        points.sort_unstable();
+        Ok(HashRing { points, replicas: replicas.len() })
+    }
+
+    /// Number of replicas the ring was built over.
+    pub fn replicas(&self) -> usize {
+        self.replicas
+    }
+
+    /// The replica index owning `key`: the first vnode point clockwise
+    /// from `key`'s position (wrapping past the top of the ring).
+    pub fn route(&self, key: u64) -> usize {
+        let i = self.points.partition_point(|&(p, _)| p < key);
+        self.points[if i == self.points.len() { 0 } else { i }].1
+    }
+
+    /// Fill `out` with every replica index in ring order starting at
+    /// `key`'s owner — the failover sequence: try `out[0]`, then `out[1]`,
+    /// … Each replica appears exactly once.
+    pub fn order(&self, key: u64, out: &mut Vec<usize>) {
+        out.clear();
+        let start = self.points.partition_point(|&(p, _)| p < key);
+        for step in 0..self.points.len() {
+            let idx = self.points[(start + step) % self.points.len()].1;
+            if !out.contains(&idx) {
+                out.push(idx);
+                if out.len() == self.replicas {
+                    return;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn addrs(list: &[&str]) -> Vec<String> {
+        list.iter().map(|a| a.to_string()).collect()
+    }
+
+    #[test]
+    fn empty_ring_is_refused() {
+        assert!(HashRing::new(&[], 64).is_err());
+    }
+
+    #[test]
+    fn distribution_is_roughly_uniform() {
+        let ring =
+            HashRing::new(&addrs(&["10.0.0.1:7878", "10.0.0.2:7878", "10.0.0.3:7878"]), 64)
+                .unwrap();
+        let mut counts = [0usize; 3];
+        for key in 0..10_000u64 {
+            counts[ring.route(fnv1a(&key.to_le_bytes()))] += 1;
+        }
+        for &c in &counts {
+            // with 64 vnodes each of 3 replicas owns ≥ 10% of keys
+            assert!(c >= 1000, "unbalanced ring: {counts:?}");
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 10_000);
+    }
+
+    #[test]
+    fn removing_a_replica_only_moves_its_keys() {
+        let full = addrs(&["a:1", "b:1", "c:1"]);
+        let ring = HashRing::new(&full, 64).unwrap();
+        // drop "b:1"; survivors keep their indices in the reduced list
+        let reduced = addrs(&["a:1", "c:1"]);
+        let ring2 = HashRing::new(&reduced, 64).unwrap();
+        let mut moved_foreign = 0;
+        for key in 0..5_000u64 {
+            let h = fnv1a(&key.to_le_bytes());
+            let owner = &full[ring.route(h)];
+            if owner != "b:1" {
+                // a key NOT owned by the removed replica must keep its owner
+                assert_eq!(owner, &reduced[ring2.route(h)], "key {key} reshuffled");
+            } else {
+                moved_foreign += 1;
+            }
+        }
+        assert!(moved_foreign > 0, "test never exercised the removed replica");
+    }
+
+    #[test]
+    fn order_walks_every_replica_from_the_owner() {
+        let list = addrs(&["a:1", "b:1", "c:1", "d:1"]);
+        let ring = HashRing::new(&list, 16).unwrap();
+        let mut out = Vec::new();
+        for key in 0..200u64 {
+            let h = fnv1a(&key.to_le_bytes());
+            ring.order(h, &mut out);
+            assert_eq!(out.len(), 4);
+            assert_eq!(out[0], ring.route(h));
+            let mut sorted = out.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, vec![0, 1, 2, 3]);
+        }
+    }
+}

@@ -1,0 +1,454 @@
+//! The `dsanls route` front-end server.
+//!
+//! Speaks the exact serving wire protocol on both sides: clients connect
+//! with plain [`ServeClient`] / `dsanls query` as if the router were a
+//! single server, and the router forwards each query to a replica chosen
+//! by the consistent-hash [`HashRing`] through that replica's
+//! [`ReplicaPool`]. Keyed queries (top-k, reconstruct, fold-ins) hash to
+//! one owner and fail over along the ring when it is down; `Stats` fans
+//! out to every replica and returns an aggregated snapshot; `Reload`
+//! broadcasts the hot-swap and fails loudly if ANY replica refuses — a
+//! rolling update that only half-took is an incident, not a success.
+//!
+//! Topology mirrors [`crate::serve::server`] minus the batcher: one
+//! acceptor thread plus one thread per client connection, each
+//! forwarding synchronously (the replicas own the batching).
+
+use std::io::BufWriter;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::error::{Context, Result};
+use crate::metrics::JsonValue;
+use crate::router::pool::ReplicaPool;
+use crate::router::ring::{fnv1a, HashRing};
+use crate::serve::protocol::{self, Query, Reply};
+use crate::transport::wire;
+
+/// Tuning knobs for [`route`].
+#[derive(Debug, Clone)]
+pub struct RouteOptions {
+    /// Virtual points per replica on the hash ring.
+    pub vnodes: usize,
+    /// Read/write deadline on router→replica sockets.
+    pub io_timeout: Duration,
+    /// How long a transport-failed replica stays routed-around before
+    /// the next request probes it again.
+    pub cooldown: Duration,
+}
+
+impl Default for RouteOptions {
+    fn default() -> Self {
+        RouteOptions {
+            vnodes: 64,
+            io_timeout: Duration::from_secs(2),
+            cooldown: Duration::from_secs(1),
+        }
+    }
+}
+
+/// Router-side counters (per-replica health lives in the pools).
+#[derive(Debug)]
+struct RouterMetrics {
+    /// Queries forwarded (including broadcasts, counted once each).
+    routed: AtomicU64,
+    /// Keyed queries that had to skip at least one replica.
+    failovers: AtomicU64,
+    /// Queries the router itself failed (no replica reachable, decode
+    /// errors) — replica-side `Reply::Error`s are the replicas' stats.
+    errors: AtomicU64,
+    started: Instant,
+}
+
+struct RouterShared {
+    ring: HashRing,
+    pools: Vec<ReplicaPool>,
+    opts: RouteOptions,
+    metrics: RouterMetrics,
+    stop: AtomicBool,
+}
+
+impl std::fmt::Debug for RouterShared {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RouterShared({} replicas)", self.pools.len())
+    }
+}
+
+/// The ring key for a query, `None` for broadcasts (`Stats`, `Reload`).
+///
+/// Score queries key on their **first user id** so one client batch
+/// stays on one replica (one coalesced GEMM there, and repeat queries
+/// for a user hit the same replica's warm path). Fold-ins key on the
+/// canonical sorted row — the identical row always routes to the same
+/// replica, which is what makes the per-replica fold-in caches
+/// effective behind a router; a side byte keeps a user row and an item
+/// column with equal entries from colliding.
+fn query_key(q: &Query) -> Option<u64> {
+    fn fold_key(side: u8, entries: &[(u64, f32)]) -> u64 {
+        let mut canon: Vec<(u64, u32)> =
+            entries.iter().map(|&(i, v)| (i, v.to_bits())).collect();
+        canon.sort_unstable();
+        let mut bytes = Vec::with_capacity(1 + canon.len() * 12);
+        bytes.push(side);
+        for (i, v) in canon {
+            bytes.extend_from_slice(&i.to_le_bytes());
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        fnv1a(&bytes)
+    }
+    match q {
+        Query::TopK { users, .. } | Query::Reconstruct { users } => {
+            Some(fnv1a(&users.first().copied().unwrap_or(0).to_le_bytes()))
+        }
+        Query::FoldIn { entries, .. } => Some(fold_key(0, entries)),
+        Query::FoldInItem { entries, .. } => Some(fold_key(1, entries)),
+        Query::Stats | Query::Reload => None,
+    }
+}
+
+/// Forward a keyed query to its ring owner, failing over clockwise.
+/// Returns the reply plus the backing replica's generation.
+fn forward_keyed(shared: &RouterShared, key: u64, q: &Query, order: &mut Vec<usize>) -> (Reply, u64) {
+    shared.ring.order(key, order);
+    // prefer replicas not in a cooldown window; if every one is marked
+    // down, probe them all anyway — routing into a possibly-dead replica
+    // beats refusing a query that might have succeeded
+    let any_up = order.iter().any(|&i| shared.pools[i].health.available());
+    let mut skipped = 0u64;
+    for &idx in order.iter() {
+        let pool = &shared.pools[idx];
+        if any_up && !pool.health.available() {
+            continue;
+        }
+        match pool.request(q, shared.opts.io_timeout, shared.opts.cooldown) {
+            Ok((reply, generation)) => {
+                if skipped > 0 {
+                    shared.metrics.failovers.fetch_add(1, Ordering::Relaxed);
+                }
+                return (reply, generation);
+            }
+            Err(_) => skipped += 1, // pool already marked the replica down
+        }
+    }
+    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+    (
+        Reply::Error(format!(
+            "no replica reachable for this query ({} tried)",
+            shared.pools.len()
+        )),
+        0,
+    )
+}
+
+/// Sum these per-replica counters into the aggregated stats object.
+const SUMMED: &[&str] = &[
+    "queries",
+    "errors",
+    "batches",
+    "rows_scored",
+    "fold_in_solves",
+    "swaps",
+    "cache_hits",
+    "cache_misses",
+    "cache_len",
+];
+
+/// Fan `Stats` out to every replica and aggregate: summed throughput
+/// counters, the **minimum** generation (the fleet has converged on a
+/// rolling update exactly when min == max, and min is the conservative
+/// answer to "what is everyone serving at least?"), a per-replica
+/// breakdown, and the router's own counters.
+fn stats_reply(shared: &RouterShared) -> (Reply, u64) {
+    let mut sums = vec![0.0f64; SUMMED.len()];
+    let mut min_generation: Option<f64> = None;
+    let mut per_replica = Vec::with_capacity(shared.pools.len());
+    let mut reachable = 0usize;
+    for pool in &shared.pools {
+        let entry = match pool.request(&Query::Stats, shared.opts.io_timeout, shared.opts.cooldown)
+        {
+            Ok((Reply::Stats(text), _)) => match JsonValue::parse(&text) {
+                Ok(stats) => {
+                    reachable += 1;
+                    for (slot, key) in sums.iter_mut().zip(SUMMED) {
+                        if let Some(v) = stats.get(key).and_then(JsonValue::as_f64) {
+                            *slot += v;
+                        }
+                    }
+                    if let Some(g) = stats.get("generation").and_then(JsonValue::as_f64) {
+                        min_generation =
+                            Some(min_generation.map_or(g, |m: f64| m.min(g)));
+                    }
+                    stats
+                }
+                Err(e) => JsonValue::String(format!("unparseable stats: {e}")),
+            },
+            Ok((other, _)) => JsonValue::String(format!("unexpected stats reply {other:?}")),
+            Err(e) => JsonValue::String(format!("unreachable: {e}")),
+        };
+        per_replica.push(JsonValue::Object(vec![
+            ("addr".into(), JsonValue::String(pool.addr().to_string())),
+            ("stats".into(), entry),
+        ]));
+    }
+    if reachable == 0 {
+        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+        return (Reply::Error("stats: no replica reachable".into()), 0);
+    }
+    let generation = min_generation.unwrap_or(0.0);
+    let up = shared.pools.iter().filter(|p| p.health.available()).count();
+    let mut obj: Vec<(String, JsonValue)> = sums
+        .iter()
+        .zip(SUMMED)
+        .map(|(&v, &k)| (k.to_string(), JsonValue::Number(v)))
+        .collect();
+    obj.push(("generation".into(), JsonValue::Number(generation)));
+    obj.push(("replicas".into(), JsonValue::Array(per_replica)));
+    obj.push((
+        "router".into(),
+        JsonValue::Object(vec![
+            ("replicas".into(), JsonValue::Number(shared.pools.len() as f64)),
+            ("up".into(), JsonValue::Number(up as f64)),
+            (
+                "routed".into(),
+                JsonValue::Number(shared.metrics.routed.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "failovers".into(),
+                JsonValue::Number(shared.metrics.failovers.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "errors".into(),
+                JsonValue::Number(shared.metrics.errors.load(Ordering::Relaxed) as f64),
+            ),
+            (
+                "uptime_s".into(),
+                JsonValue::Number(shared.metrics.started.elapsed().as_secs_f64()),
+            ),
+        ]),
+    ));
+    (Reply::Stats(JsonValue::Object(obj).to_string()), generation as u64)
+}
+
+/// Broadcast `Reload` to every replica. All-or-error: a rolling update
+/// that reached only part of the fleet must surface as a failure so the
+/// operator re-runs it, not as a silent split-generation fleet.
+fn reload_reply(shared: &RouterShared) -> (Reply, u64) {
+    let mut min_generation = u64::MAX;
+    let mut min_iteration = u64::MAX;
+    for pool in &shared.pools {
+        match pool.request(&Query::Reload, shared.opts.io_timeout, shared.opts.cooldown) {
+            Ok((Reply::Reload { generation, iteration }, _)) => {
+                min_generation = min_generation.min(generation);
+                min_iteration = min_iteration.min(iteration);
+            }
+            Ok((Reply::Error(msg), _)) => {
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                return (
+                    Reply::Error(format!("reload refused by replica {}: {msg}", pool.addr())),
+                    0,
+                );
+            }
+            Ok((other, _)) => {
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                return (
+                    Reply::Error(format!(
+                        "unexpected reload reply {other:?} from replica {}",
+                        pool.addr()
+                    )),
+                    0,
+                );
+            }
+            Err(e) => {
+                shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                return (
+                    Reply::Error(format!("reload failed: replica {} unreachable: {e}", pool.addr())),
+                    0,
+                );
+            }
+        }
+    }
+    (Reply::Reload { generation: min_generation, iteration: min_iteration }, min_generation)
+}
+
+fn connection_loop(shared: Arc<RouterShared>, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let mut reader = match stream.try_clone() {
+        Ok(s) => std::io::BufReader::new(s),
+        Err(_) => return,
+    };
+    if wire::read_preamble(&mut reader).is_err() {
+        return;
+    }
+    let mut writer = BufWriter::new(stream);
+    if wire::write_preamble(&mut writer, 0).is_err() {
+        return;
+    }
+    let mut order = Vec::new();
+    loop {
+        let frame = match wire::read_frame(&mut reader) {
+            Ok(f) => f,
+            Err(_) => return, // client hung up
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            return;
+        }
+        let (reply, generation) = if frame.kind != wire::FrameKind::Request {
+            shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+            (
+                Reply::Error(format!("unexpected {:?} frame on a router connection", frame.kind)),
+                0,
+            )
+        } else {
+            match protocol::decode_query(&frame.payload) {
+                Ok(q) => {
+                    shared.metrics.routed.fetch_add(1, Ordering::Relaxed);
+                    match query_key(&q) {
+                        Some(key) => forward_keyed(&shared, key, &q, &mut order),
+                        None => match q {
+                            Query::Stats => stats_reply(&shared),
+                            Query::Reload => reload_reply(&shared),
+                            _ => unreachable!("only broadcasts key to None"),
+                        },
+                    }
+                }
+                Err(e) => {
+                    shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                    (Reply::Error(format!("router: {e}")), 0)
+                }
+            }
+        };
+        let payload = protocol::encode_reply(&reply);
+        if wire::write_frame_parts(
+            &mut writer,
+            protocol::RESPONSE,
+            frame.tag,
+            generation as f64,
+            &payload,
+        )
+        .is_err()
+        {
+            return;
+        }
+    }
+}
+
+/// A running router. Dropping the handle shuts it down.
+#[derive(Debug)]
+pub struct RouterHandle {
+    addr: SocketAddr,
+    shared: Arc<RouterShared>,
+    accept: Option<JoinHandle<()>>,
+}
+
+impl RouterHandle {
+    /// The address the router actually bound (port resolved for `:0`).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot of the router-side counters (not the replicas' stats —
+    /// those aggregate through a `Stats` query).
+    pub fn metrics_json(&self) -> JsonValue {
+        let m = &self.shared.metrics;
+        let up = self.shared.pools.iter().filter(|p| p.health.available()).count();
+        JsonValue::Object(vec![
+            ("replicas".into(), JsonValue::Number(self.shared.pools.len() as f64)),
+            ("up".into(), JsonValue::Number(up as f64)),
+            ("routed".into(), JsonValue::Number(m.routed.load(Ordering::Relaxed) as f64)),
+            (
+                "failovers".into(),
+                JsonValue::Number(m.failovers.load(Ordering::Relaxed) as f64),
+            ),
+            ("errors".into(), JsonValue::Number(m.errors.load(Ordering::Relaxed) as f64)),
+            ("uptime_s".into(), JsonValue::Number(m.started.elapsed().as_secs_f64())),
+        ])
+    }
+
+    /// Stop accepting and join the acceptor. Idempotent; also runs on
+    /// drop. Live client connections exit on their next frame.
+    pub fn shutdown(&mut self) {
+        self.shared.stop.store(true, Ordering::SeqCst);
+        let poke = if self.addr.ip().is_unspecified() {
+            SocketAddr::from(([127, 0, 0, 1], self.addr.port()))
+        } else {
+            self.addr
+        };
+        let _ = TcpStream::connect_timeout(&poke, Duration::from_millis(250));
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RouterHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Bind `addr` and route serving queries across `replicas` until the
+/// returned handle is shut down or dropped. Replicas are dialed lazily —
+/// one may be down at startup and pick traffic up when it returns.
+pub fn route(addr: &str, replicas: &[String], opts: RouteOptions) -> Result<RouterHandle> {
+    let ring = HashRing::new(replicas, opts.vnodes)?;
+    let pools = replicas.iter().map(|a| ReplicaPool::new(a.clone())).collect();
+    let listener =
+        TcpListener::bind(addr).with_context(|| format!("binding router listener on {addr}"))?;
+    let bound = listener.local_addr().context("resolving router listener address")?;
+    let shared = Arc::new(RouterShared {
+        ring,
+        pools,
+        opts,
+        metrics: RouterMetrics {
+            routed: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            started: Instant::now(),
+        },
+        stop: AtomicBool::new(false),
+    });
+
+    let accept_shared = shared.clone();
+    let accept = std::thread::Builder::new()
+        .name("dsanls-route-accept".into())
+        .spawn(move || {
+            for conn in listener.incoming() {
+                if accept_shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                if let Ok(stream) = conn {
+                    let conn_shared = accept_shared.clone();
+                    let _ = std::thread::Builder::new()
+                        .name("dsanls-route-conn".into())
+                        .spawn(move || connection_loop(conn_shared, stream));
+                }
+            }
+        })
+        .context("spawning router accept thread")?;
+
+    Ok(RouterHandle { addr: bound, shared, accept: Some(accept) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn keyed_queries_are_stable_and_broadcasts_are_not_keyed() {
+        let topk = Query::TopK { users: vec![42, 7], n: 5 };
+        // same leading user → same key, whatever trails it
+        assert_eq!(query_key(&topk), query_key(&Query::Reconstruct { users: vec![42] }));
+        // fold-in keys are order-insensitive …
+        let a = Query::FoldIn { entries: vec![(3, 1.0), (9, 2.0)], n: 0 };
+        let b = Query::FoldIn { entries: vec![(9, 2.0), (3, 1.0)], n: 4 };
+        assert_eq!(query_key(&a), query_key(&b));
+        // … and side-disambiguated from item fold-ins of the same entries
+        let item = Query::FoldInItem { entries: vec![(3, 1.0), (9, 2.0)], n: 0 };
+        assert_ne!(query_key(&a), query_key(&item));
+        assert_eq!(query_key(&Query::Stats), None);
+        assert_eq!(query_key(&Query::Reload), None);
+    }
+}

@@ -4,21 +4,34 @@
 //! landing-page sessions, retried requests) recur far more often than a
 //! uniform draw, so the server keeps the most recent embeddings and
 //! evicts least-recently-used ones. Keys are the **exact** canonical row
-//! — `(item, rating.to_bits())` pairs sorted by item — not a hash, so a
-//! hit can never return another row's embedding. Hand-rolled on
-//! `HashMap` + an index-linked list (no external crates), O(1) per
-//! operation.
+//! — the serving **model generation** followed by `(item,
+//! rating.to_bits())` pairs sorted by item — not a hash, so a hit can
+//! never return another row's embedding, and a checkpoint hot-swap can
+//! never serve an embedding solved against retired factors (the swapped
+//! generation changes every key; stale entries age out through the LRU).
+//! Hand-rolled on `HashMap` + an index-linked list (no external crates),
+//! O(1) per operation.
 
 use std::collections::HashMap;
 
-/// Canonical cache key for a sparse rating row: sorted by item id, rating
-/// bits preserved exactly (`f32` is not `Hash`; its bit pattern is).
+/// Canonical cache key for a sparse rating row: the model generation the
+/// embedding was solved against, then the entries sorted by item id with
+/// rating bits preserved exactly (`f32` is not `Hash`; its bit pattern
+/// is).
 pub type RowKey = Vec<(u64, u32)>;
 
-/// Build the canonical [`RowKey`] for a user-side query row.
-pub fn row_key(entries: &[(u64, f32)]) -> RowKey {
-    let mut key: RowKey = entries.iter().map(|&(i, v)| (i, v.to_bits())).collect();
-    key.sort_unstable();
+/// Tag pairing the leading generation lane of a [`RowKey`] — distinct
+/// from any `rating.to_bits()` the sort could place first, because the
+/// generation pair is *prepended*, never sorted with the entries.
+const GEN_TAG: u32 = 0x4745_4E00; // "GEN\0"
+
+/// Build the canonical [`RowKey`] for a user-side query row solved
+/// against model generation `generation`.
+pub fn row_key(generation: u64, entries: &[(u64, f32)]) -> RowKey {
+    let mut key: RowKey = Vec::with_capacity(entries.len() + 1);
+    key.push((generation, GEN_TAG));
+    key.extend(entries.iter().map(|&(i, v)| (i, v.to_bits())));
+    key[1..].sort_unstable();
     key
 }
 
@@ -29,8 +42,8 @@ pub fn row_key(entries: &[(u64, f32)]) -> RowKey {
 /// would return the wrong embedding. The sentinel id is `u64::MAX`,
 /// unreachable for a validated id (ids are checked against the model's
 /// axis length before any cache lookup).
-pub fn item_row_key(entries: &[(u64, f32)]) -> RowKey {
-    let mut key = row_key(entries);
+pub fn item_row_key(generation: u64, entries: &[(u64, f32)]) -> RowKey {
+    let mut key = row_key(generation, entries);
     key.push((u64::MAX, u32::MAX));
     key
 }
@@ -182,7 +195,7 @@ mod tests {
     fn evicts_least_recently_used() {
         let mut c = FoldCache::new(2);
         let (ka, kb, kc) =
-            (row_key(&[(1, 1.0)]), row_key(&[(2, 1.0)]), row_key(&[(3, 1.0)]));
+            (row_key(1, &[(1, 1.0)]), row_key(1, &[(2, 1.0)]), row_key(1, &[(3, 1.0)]));
         c.insert(ka.clone(), vec![1.0]);
         c.insert(kb.clone(), vec![2.0]);
         assert_eq!(c.get(&ka), Some(&[1.0f32][..])); // promotes A over B
@@ -197,32 +210,54 @@ mod tests {
     #[test]
     fn key_is_order_insensitive_but_value_exact() {
         // same row in a different order must hit …
-        assert_eq!(row_key(&[(5, 1.5), (2, 0.5)]), row_key(&[(2, 0.5), (5, 1.5)]));
+        assert_eq!(row_key(1, &[(5, 1.5), (2, 0.5)]), row_key(1, &[(2, 0.5), (5, 1.5)]));
         // … but a different rating (even by one ulp) must miss
-        assert_ne!(row_key(&[(2, 0.5)]), row_key(&[(2, 0.5000001)]));
+        assert_ne!(row_key(1, &[(2, 0.5)]), row_key(1, &[(2, 0.5000001)]));
         let mut c = FoldCache::new(4);
-        c.insert(row_key(&[(5, 1.5), (2, 0.5)]), vec![9.0]);
-        assert_eq!(c.get(&row_key(&[(2, 0.5), (5, 1.5)])), Some(&[9.0f32][..]));
+        c.insert(row_key(1, &[(5, 1.5), (2, 0.5)]), vec![9.0]);
+        assert_eq!(c.get(&row_key(1, &[(2, 0.5), (5, 1.5)])), Some(&[9.0f32][..]));
     }
 
     #[test]
     fn item_keys_never_collide_with_user_keys() {
         // same (id, rating) entries, different sides → distinct keys
         let entries = [(2u64, 0.5f32), (5, 1.5)];
-        assert_ne!(row_key(&entries), item_row_key(&entries));
+        assert_ne!(row_key(1, &entries), item_row_key(1, &entries));
         // item keys stay order-insensitive like user keys
-        assert_eq!(item_row_key(&[(5, 1.5), (2, 0.5)]), item_row_key(&entries));
+        assert_eq!(item_row_key(1, &[(5, 1.5), (2, 0.5)]), item_row_key(1, &entries));
         let mut c = FoldCache::new(4);
-        c.insert(row_key(&entries), vec![1.0]);
-        c.insert(item_row_key(&entries), vec![2.0]);
-        assert_eq!(c.get(&row_key(&entries)), Some(&[1.0f32][..]));
-        assert_eq!(c.get(&item_row_key(&entries)), Some(&[2.0f32][..]));
+        c.insert(row_key(1, &entries), vec![1.0]);
+        c.insert(item_row_key(1, &entries), vec![2.0]);
+        assert_eq!(c.get(&row_key(1, &entries)), Some(&[1.0f32][..]));
+        assert_eq!(c.get(&item_row_key(1, &entries)), Some(&[2.0f32][..]));
+    }
+
+    #[test]
+    fn generation_invalidates_without_cross_talk() {
+        // a hot-swap bumps the generation: the identical row must MISS
+        // (the cached embedding was solved against retired factors) …
+        let entries = [(2u64, 0.5f32), (5, 1.5)];
+        assert_ne!(row_key(1, &entries), row_key(2, &entries));
+        assert_ne!(item_row_key(1, &entries), item_row_key(2, &entries));
+        let mut c = FoldCache::new(8);
+        c.insert(row_key(1, &entries), vec![1.0]);
+        assert_eq!(c.get(&row_key(2, &entries)), None);
+        // … and a generation pair can never alias an entry pair: a row
+        // whose first sorted entry happens to equal (gen, GEN_TAG-as-bits)
+        // still keys distinctly, because the generation lane is prepended
+        // ahead of the sorted region rather than mixed into it
+        let tricky = [(2u64, f32::from_bits(GEN_TAG))];
+        assert_ne!(row_key(2, &tricky), row_key(2, &[]));
+        // both generations coexist until the LRU ages the old one out
+        c.insert(row_key(2, &entries), vec![2.0]);
+        assert_eq!(c.get(&row_key(1, &entries)), Some(&[1.0f32][..]));
+        assert_eq!(c.get(&row_key(2, &entries)), Some(&[2.0f32][..]));
     }
 
     #[test]
     fn zero_capacity_disables() {
         let mut c = FoldCache::new(0);
-        let k = row_key(&[(1, 1.0)]);
+        let k = row_key(1, &[(1, 1.0)]);
         c.insert(k.clone(), vec![1.0]);
         assert_eq!(c.get(&k), None);
         assert!(c.is_empty());

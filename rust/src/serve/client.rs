@@ -4,41 +4,66 @@
 
 use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
+use std::time::Duration;
 
 use crate::error::{Context, Result};
 use crate::linalg::Mat;
 use crate::serve::protocol::{self, Query, Reply};
 use crate::transport::wire;
 
-/// One connection to a `dsanls serve` server.
+/// One connection to a `dsanls serve` server (or a `dsanls route` router
+/// — the two speak the identical protocol, which is the point).
 #[derive(Debug)]
 pub struct ServeClient {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
     next_tag: u64,
+    /// Generation advertised by the most recent reply's clock lane
+    /// (0 until the first reply arrives).
+    generation: u64,
 }
 
 impl ServeClient {
     /// Connect and handshake (magic/version preamble both ways — a
     /// mixed-version binary pair fails here, not mid-query).
     pub fn connect(addr: &str) -> Result<ServeClient> {
+        ServeClient::connect_with(addr, None)
+    }
+
+    /// [`ServeClient::connect`] with an I/O deadline on every read and
+    /// write — what the router's connection pool uses so one dead replica
+    /// stalls a forwarded query for at most `timeout`, not forever.
+    pub fn connect_with(addr: &str, timeout: Option<Duration>) -> Result<ServeClient> {
         let stream = TcpStream::connect(addr)
             .with_context(|| format!("connecting to serve endpoint {addr}"))?;
         let _ = stream.set_nodelay(true);
+        if timeout.is_some() {
+            let _ = stream.set_read_timeout(timeout);
+            let _ = stream.set_write_timeout(timeout);
+        }
         let reader =
             BufReader::new(stream.try_clone().context("cloning serve connection")?);
         let mut writer = BufWriter::new(stream);
         wire::write_preamble(&mut writer, 0)?;
-        let mut client = ServeClient { reader, writer, next_tag: 1 };
+        let mut client = ServeClient { reader, writer, next_tag: 1, generation: 0 };
         wire::read_preamble(&mut client.reader)
             .context("serve handshake (is the endpoint a dsanls serve server?)")?;
         Ok(client)
     }
 
-    /// Send one query and block for its reply. [`Reply::Error`] from the
-    /// server is surfaced as a typed error here, so the convenience
-    /// wrappers below only ever see successful payloads.
-    pub fn query(&mut self, q: &Query) -> Result<Reply> {
+    /// The model generation the most recent reply was answered against
+    /// (0 before the first reply). Operators compare this across queries
+    /// to confirm a rolling update actually took.
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Send one query and block for its reply, **including**
+    /// [`Reply::Error`] — the router needs to distinguish a semantic
+    /// error (the replica answered: do NOT fail over) from a transport
+    /// failure (`Err`: the replica is unreachable, try the next ring
+    /// node).
+    pub fn query_reply(&mut self, q: &Query) -> Result<Reply> {
         let tag = self.next_tag;
         self.next_tag += 1;
         let payload = protocol::encode_query(q);
@@ -48,10 +73,18 @@ impl ServeClient {
             if frame.kind != wire::FrameKind::Response || frame.tag != tag {
                 continue; // a pipelined sibling's reply; not ours
             }
-            return match protocol::decode_reply(&frame.payload)? {
-                Reply::Error(msg) => Err(crate::err!("serve error: {msg}")),
-                reply => Ok(reply),
-            };
+            self.generation = frame.clock as u64;
+            return protocol::decode_reply(&frame.payload);
+        }
+    }
+
+    /// Send one query and block for its reply. [`Reply::Error`] from the
+    /// server is surfaced as a typed error here, so the convenience
+    /// wrappers below only ever see successful payloads.
+    pub fn query(&mut self, q: &Query) -> Result<Reply> {
+        match self.query_reply(q)? {
+            Reply::Error(msg) => Err(crate::err!("serve error: {msg}")),
+            reply => Ok(reply),
         }
     }
 
@@ -102,6 +135,17 @@ impl ServeClient {
         match self.query(&Query::Stats)? {
             Reply::Stats(text) => Ok(text),
             other => Err(crate::err!("unexpected reply {other:?} to a stats query")),
+        }
+    }
+
+    /// Ask the server to re-read its checkpoint and hot-swap the model.
+    /// Returns `(generation, checkpoint iteration)` now serving. Errors
+    /// if the server was started from an in-memory model (nothing to
+    /// re-read) or the re-read checkpoint fails its identity gate.
+    pub fn reload(&mut self) -> Result<(u64, u64)> {
+        match self.query(&Query::Reload)? {
+            Reply::Reload { generation, iteration } => Ok((generation, iteration)),
+            other => Err(crate::err!("unexpected reply {other:?} to a reload query")),
         }
     }
 }

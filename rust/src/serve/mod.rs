@@ -28,8 +28,18 @@
 //! reports. [`client::ServeClient`] is the matching client used by
 //! `dsanls query`, the end-to-end tests and `benches/serve_latency.rs`.
 //!
-//! CLI surface: `dsanls serve --checkpoint <file> --bind <addr>` and
-//! `dsanls query --addr <host:port>`
+//! The server holds its model behind an atomic **generation pointer**:
+//! a checkpoint hot-swap ([`ServerHandle::swap_model`], the `OP_RELOAD`
+//! wire op, or `dsanls serve --watch-checkpoint`) publishes new factors
+//! between batches with zero dropped queries and no batch ever mixing
+//! generations — in-flight batches drain against the `Arc` they
+//! snapshotted. Every reply advertises its generation on the wire, and
+//! the fold-in cache keys on it so retired factors can never serve. A
+//! replicated tier fronts several such servers through
+//! [`crate::router`] (`dsanls route`) without clients changing at all.
+//!
+//! CLI surface: `dsanls serve --checkpoint <file> --bind <addr>
+//! [--watch-checkpoint]` and `dsanls query --addr <host:port>`
 //! ([`crate::coordinator::serve_cli`]; walkthrough in DEPLOYMENT.md).
 
 #![warn(missing_docs)]
@@ -44,4 +54,4 @@ pub use cache::FoldCache;
 pub use client::ServeClient;
 pub use model::{top_n, FactorModel, FoldIn, FOLD_IN_INIT};
 pub use protocol::{Query, Reply};
-pub use server::{serve, ServeOptions, ServerHandle};
+pub use server::{serve, CheckpointSource, ServeOptions, ServerHandle, FIRST_GENERATION};

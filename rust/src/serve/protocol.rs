@@ -26,6 +26,9 @@ pub const OP_FOLD_IN: f32 = 3.0;
 pub const OP_STATS: f32 = 4.0;
 /// Op code for an item-side fold-in query (embed a new item).
 pub const OP_FOLD_IN_ITEM: f32 = 5.0;
+/// Op code for the admin hot-swap request: re-read the server's
+/// checkpoint file and atomically swap the model generation.
+pub const OP_RELOAD: f32 = 6.0;
 /// Reply status lane for a failed query.
 pub const STATUS_ERROR: f32 = 0.0;
 
@@ -62,6 +65,9 @@ pub enum Query {
     },
     /// Server metrics snapshot (JSON text reply).
     Stats,
+    /// Admin hot-swap: reload the checkpoint the server was started from
+    /// and swap the next model generation in without dropping queries.
+    Reload,
 }
 
 /// One serving-plane reply.
@@ -96,6 +102,13 @@ pub enum Reply {
     },
     /// Metrics snapshot as JSON text (answers [`Query::Stats`]).
     Stats(String),
+    /// Hot-swap confirmation (answers [`Query::Reload`]).
+    Reload {
+        /// The model generation now serving.
+        generation: u64,
+        /// Training iteration recorded in the reloaded checkpoint.
+        iteration: u64,
+    },
     /// The query failed server-side; the message names the cause.
     Error(String),
 }
@@ -155,6 +168,7 @@ pub fn encode_query(q: &Query) -> Vec<f32> {
             }
         }
         Query::Stats => p.push(OP_STATS),
+        Query::Reload => p.push(OP_RELOAD),
     }
     p
 }
@@ -200,6 +214,8 @@ pub fn decode_query(payload: &[f32]) -> Result<Query> {
         Ok(Query::FoldInItem { entries, n })
     } else if op == OP_STATS {
         Ok(Query::Stats)
+    } else if op == OP_RELOAD {
+        Ok(Query::Reload)
     } else {
         crate::bail!("unknown serving op code {op}")
     }
@@ -249,6 +265,11 @@ pub fn encode_reply(r: &Reply) -> Vec<f32> {
         Reply::Stats(text) => {
             p.push(OP_STATS);
             p.extend(wire::encode_text(text));
+        }
+        Reply::Reload { generation, iteration } => {
+            p.push(OP_RELOAD);
+            wire::push_u64_bits(&mut p, *generation);
+            wire::push_u64_bits(&mut p, *iteration);
         }
         Reply::Error(msg) => {
             p.push(STATUS_ERROR);
@@ -319,6 +340,10 @@ pub fn decode_reply(payload: &[f32]) -> Result<Reply> {
         Ok(Reply::FoldInItem { h, top })
     } else if op == OP_STATS {
         Ok(Reply::Stats(wire::decode_text(&payload[pos..])))
+    } else if op == OP_RELOAD {
+        let generation = wire::take_u64_bits(payload, &mut pos)?;
+        let iteration = wire::take_u64_bits(payload, &mut pos)?;
+        Ok(Reply::Reload { generation, iteration })
     } else {
         crate::bail!("unknown serving reply op {op}")
     }
@@ -344,6 +369,7 @@ mod tests {
             Query::FoldIn { entries: vec![(3, 0.5), (big, -1.25)], n: 5 },
             Query::FoldInItem { entries: vec![(big, 4.5), (0, 1.0)], n: 3 },
             Query::Stats,
+            Query::Reload,
         ] {
             assert_eq!(decode_query(&encode_query(&q)).unwrap(), q);
         }
@@ -358,6 +384,7 @@ mod tests {
             Reply::FoldIn { w: vec![0.1, 0.2], top: vec![(1, 0.9)] },
             Reply::FoldInItem { h: vec![0.3, 0.4], top: vec![(big, 0.8), (0, 0.1)] },
             Reply::Stats("{\"queries\":3}".into()),
+            Reply::Reload { generation: (1u64 << 34) + 2, iteration: 450 },
             Reply::Error("unknown user id 9".into()),
         ] {
             assert_eq!(decode_reply(&encode_reply(&r)).unwrap(), r);

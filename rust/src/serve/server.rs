@@ -16,11 +16,30 @@
 //! Every reply is timed from enqueue to write; the counters surface as a
 //! [`crate::metrics::JsonValue`] snapshot via [`ServerHandle::metrics_json`]
 //! and the `Stats` query (what `dsanls query --stats` prints).
+//!
+//! ## Zero-downtime hot-swap
+//!
+//! The model lives behind an atomic **generation pointer**
+//! ([`ModelGen`] in an `Arc` swapped under a mutex): the batcher
+//! snapshots the pointer **once per batch**, so every query in a batch —
+//! scores, fold-ins, stats — is answered against exactly one generation,
+//! and a swap never blocks on in-flight work (draining falls out of the
+//! `Arc`: the old generation is freed when its last batch finishes). New
+//! queries land on the next generation at the following batch boundary;
+//! nothing is dropped. Swaps come from [`ServerHandle::swap_model`], the
+//! `OP_RELOAD` admin wire op (re-reads the checkpoint recorded in
+//! [`ServeOptions::source`], regenerating both fold-in grams), or
+//! `dsanls serve --watch-checkpoint`. Reloads run on the requesting
+//! connection's reader thread — the checkpoint read plus two gram GEMMs
+//! never stall the batcher. The fold-in cache keys carry the generation
+//! ([`crate::serve::cache::row_key`]), so a swap invalidates every
+//! cached embedding without a flush.
 
 use std::collections::VecDeque;
 use std::io::BufWriter;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::ops::Range;
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
@@ -34,6 +53,20 @@ use crate::serve::model::{top_n, FactorModel, FoldIn};
 use crate::serve::protocol::{self, Query, Reply};
 use crate::solvers::SolverKind;
 use crate::transport::wire;
+
+/// Where a live server can re-read its model from on an `OP_RELOAD` /
+/// [`ServerHandle::reload`] — the checkpoint path plus the identity gate
+/// the operator started the server with (a rolling update must never
+/// swap in a checkpoint the startup gate would have refused).
+#[derive(Debug, Clone)]
+pub struct CheckpointSource {
+    /// The versioned checkpoint file to re-read.
+    pub path: PathBuf,
+    /// `--expect-algo` carried over from startup.
+    pub expect_algo: Option<String>,
+    /// `--expect-params` carried over from startup.
+    pub expect_params: Option<u64>,
+}
 
 /// Tuning knobs for [`serve`].
 #[derive(Debug, Clone)]
@@ -55,6 +88,9 @@ pub struct ServeOptions {
     pub sweeps: usize,
     /// Pool width for the batcher's GEMMs (None = crate default).
     pub threads: Option<usize>,
+    /// Checkpoint the model can be hot-reloaded from (None = in-memory
+    /// model only; `OP_RELOAD` is refused with a typed error).
+    pub source: Option<CheckpointSource>,
 }
 
 impl Default for ServeOptions {
@@ -66,6 +102,7 @@ impl Default for ServeOptions {
             solver: SolverKind::Hals,
             sweeps: 5,
             threads: None,
+            source: None,
         }
     }
 }
@@ -88,6 +125,11 @@ pub struct ServeMetrics {
     batches: AtomicU64,
     rows_scored: AtomicU64,
     fold_solves: AtomicU64,
+    /// Mirror of the serving generation (the authoritative value lives in
+    /// the [`ModelGen`] pointer; this lets stats read it lock-free).
+    generation: AtomicU64,
+    /// Completed hot-swaps since startup.
+    swaps: AtomicU64,
     latency: Mutex<LatencyRing>,
     started: Instant,
 }
@@ -108,6 +150,8 @@ impl ServeMetrics {
             batches: AtomicU64::new(0),
             rows_scored: AtomicU64::new(0),
             fold_solves: AtomicU64::new(0),
+            generation: AtomicU64::new(FIRST_GENERATION),
+            swaps: AtomicU64::new(0),
             latency: Mutex::new(LatencyRing {
                 ring: Vec::with_capacity(LATENCY_WINDOW),
                 next: 0,
@@ -166,6 +210,11 @@ impl ServeMetrics {
                 "fold_in_solves".into(),
                 JsonValue::Number(self.fold_solves.load(Ordering::Relaxed) as f64),
             ),
+            (
+                "generation".into(),
+                JsonValue::Number(self.generation.load(Ordering::Relaxed) as f64),
+            ),
+            ("swaps".into(), JsonValue::Number(self.swaps.load(Ordering::Relaxed) as f64)),
             ("cache_hits".into(), JsonValue::Number(cache.hits() as f64)),
             ("cache_misses".into(), JsonValue::Number(cache.misses() as f64)),
             ("cache_len".into(), JsonValue::Number(cache.len() as f64)),
@@ -194,8 +243,24 @@ struct Pending {
     enq: Instant,
 }
 
-struct Shared {
+/// The first generation a server boots at (0 is "no reply seen yet" on
+/// the client side).
+pub const FIRST_GENERATION: u64 = 1;
+
+/// One immutable model generation: the factors plus the counter a reply
+/// advertises in its frame clock lane. Swaps replace the whole `Arc`, so
+/// an in-flight batch keeps its snapshot alive until it finishes.
+struct ModelGen {
+    generation: u64,
     model: FactorModel,
+}
+
+struct Shared {
+    /// The atomic model-generation pointer. `Mutex<Arc<..>>` rather than
+    /// a lone `Arc` because swap must read-modify-write the generation
+    /// counter; readers only ever clone the `Arc` (one brief lock, no
+    /// contention with compute).
+    model: Mutex<Arc<ModelGen>>,
     opts: ServeOptions,
     queue: Mutex<VecDeque<Pending>>,
     cv: Condvar,
@@ -209,20 +274,60 @@ impl Shared {
         let cache = lock(&self.cache);
         self.metrics.json(&cache)
     }
+
+    /// Snapshot the serving generation (what every query in the caller's
+    /// batch is answered against).
+    fn current(&self) -> Arc<ModelGen> {
+        lock(&self.model).clone()
+    }
+
+    fn generation(&self) -> u64 {
+        self.metrics.generation.load(Ordering::Relaxed)
+    }
+
+    /// Swap `model` in as the next generation. In-flight batches keep
+    /// their `Arc` snapshot; new batches pick the swapped pointer up at
+    /// their next snapshot — zero queries dropped, none mixed.
+    fn swap_model(&self, model: FactorModel) -> u64 {
+        let mut cur = lock(&self.model);
+        let generation = cur.generation + 1;
+        *cur = Arc::new(ModelGen { generation, model });
+        self.metrics.generation.store(generation, Ordering::Relaxed);
+        self.metrics.swaps.fetch_add(1, Ordering::Relaxed);
+        generation
+    }
+
+    /// Re-read the configured checkpoint source and swap it in. The
+    /// identity gate from startup re-applies: a checkpoint from another
+    /// run/algorithm is refused and the old generation keeps serving.
+    fn reload(&self) -> Result<(u64, usize)> {
+        let src = self.opts.source.as_ref().ok_or_else(|| {
+            crate::err!(
+                "reload refused: this server was started from an in-memory model, \
+                 not a checkpoint file (no --checkpoint source to re-read)"
+            )
+        })?;
+        let model = FactorModel::load(&src.path)?;
+        model.check_identity(src.expect_algo.as_deref(), src.expect_params)?;
+        let iteration = model.iteration();
+        Ok((self.swap_model(model), iteration))
+    }
 }
 
-fn send_reply(out: &Out, tag: u64, reply: &Reply) {
+fn send_reply(out: &Out, tag: u64, generation: u64, reply: &Reply) {
     let payload = protocol::encode_reply(reply);
     let mut w = lock(out);
-    // a vanished client is the client's problem, not the server's
-    let _ = wire::write_frame_parts(&mut *w, protocol::RESPONSE, tag, 0.0, &payload);
+    // a vanished client is the client's problem, not the server's; the
+    // clock lane carries the generation the reply was answered against
+    let _ =
+        wire::write_frame_parts(&mut *w, protocol::RESPONSE, tag, generation as f64, &payload);
 }
 
-fn finish(shared: &Shared, p: &Pending, reply: &Reply) {
+fn finish(shared: &Shared, generation: u64, p: &Pending, reply: &Reply) {
     if matches!(reply, Reply::Error(_)) {
         shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
     }
-    send_reply(&p.out, p.tag, reply);
+    send_reply(&p.out, p.tag, generation, reply);
     shared.metrics.record_latency(p.enq.elapsed().as_secs_f64());
 }
 
@@ -239,14 +344,20 @@ struct Scratch {
     topk: Vec<(usize, f32)>,
 }
 
-fn fold_in_reply(shared: &Shared, s: &mut Scratch, entries: &[(u64, f32)], n: usize) -> Reply {
-    let items = shared.model.items() as u64;
+fn fold_in_reply(
+    shared: &Shared,
+    gen: &ModelGen,
+    s: &mut Scratch,
+    entries: &[(u64, f32)],
+    n: usize,
+) -> Reply {
+    let items = gen.model.items() as u64;
     if let Some(&(bad, _)) = entries.iter().find(|&&(i, _)| i >= items) {
         return Reply::Error(format!(
             "fold-in item id {bad} out of range (model has {items} items)"
         ));
     }
-    let key = row_key(entries);
+    let key = row_key(gen.generation, entries);
     let cached = lock(&shared.cache).get(&key).map(<[f32]>::to_vec);
     let w = match cached {
         Some(w) => w,
@@ -254,7 +365,7 @@ fn fold_in_reply(shared: &Shared, s: &mut Scratch, entries: &[(u64, f32)], n: us
             s.fold_row.clear();
             s.fold_row.extend(entries.iter().map(|&(i, v)| (i as usize, v)));
             match s.fold.solve(
-                &shared.model,
+                &gen.model,
                 &s.fold_row,
                 shared.opts.solver,
                 shared.opts.sweeps,
@@ -273,7 +384,7 @@ fn fold_in_reply(shared: &Shared, s: &mut Scratch, entries: &[(u64, f32)], n: us
     let top = if n > 0 {
         s.fw.resize_to(1, w.len());
         s.fw.data_mut().copy_from_slice(&w);
-        shared.model.scores_for_w(&s.fw, &mut s.fscores);
+        gen.model.scores_for_w(&s.fw, &mut s.fscores);
         top_n(s.fscores.row(0), n, &mut s.topk);
         s.topk.iter().map(|&(i, v)| (i as u64, v)).collect()
     } else {
@@ -287,17 +398,18 @@ fn fold_in_reply(shared: &Shared, s: &mut Scratch, entries: &[(u64, f32)], n: us
 /// scoring every *user* for the new item.
 fn fold_in_item_reply(
     shared: &Shared,
+    gen: &ModelGen,
     s: &mut Scratch,
     entries: &[(u64, f32)],
     n: usize,
 ) -> Reply {
-    let users = shared.model.users() as u64;
+    let users = gen.model.users() as u64;
     if let Some(&(bad, _)) = entries.iter().find(|&&(i, _)| i >= users) {
         return Reply::Error(format!(
             "fold-in user id {bad} out of range (model has {users} users)"
         ));
     }
-    let key = item_row_key(entries);
+    let key = item_row_key(gen.generation, entries);
     let cached = lock(&shared.cache).get(&key).map(<[f32]>::to_vec);
     let h = match cached {
         Some(h) => h,
@@ -305,7 +417,7 @@ fn fold_in_item_reply(
             s.fold_row.clear();
             s.fold_row.extend(entries.iter().map(|&(i, v)| (i as usize, v)));
             match s.fold.solve_item(
-                &shared.model,
+                &gen.model,
                 &s.fold_row,
                 shared.opts.solver,
                 shared.opts.sweeps,
@@ -324,7 +436,7 @@ fn fold_in_item_reply(
     let top = if n > 0 {
         s.fw.resize_to(1, h.len());
         s.fw.data_mut().copy_from_slice(&h);
-        shared.model.scores_for_h(&s.fw, &mut s.fscores);
+        gen.model.scores_for_h(&s.fw, &mut s.fscores);
         top_n(s.fscores.row(0), n, &mut s.topk);
         s.topk.iter().map(|&(i, v)| (i as u64, v)).collect()
     } else {
@@ -336,6 +448,12 @@ fn fold_in_item_reply(
 fn process_batch(shared: &Shared, s: &mut Scratch, batch: Vec<Pending>) {
     shared.metrics.batches.fetch_add(1, Ordering::Relaxed);
     shared.metrics.queries.fetch_add(batch.len() as u64, Ordering::Relaxed);
+
+    // ONE generation snapshot for the whole batch: every query below —
+    // scores, fold-ins, stats — answers against exactly this model, no
+    // matter when a concurrent swap lands. The `Arc` keeps the snapshot
+    // alive until the batch finishes (the draining protocol).
+    let gen = shared.current();
 
     // phase 1 — coalesce every score query in the batch into ONE GEMM:
     // each query's users become a row range of the shared score block
@@ -349,10 +467,10 @@ fn process_batch(shared: &Shared, s: &mut Scratch, batch: Vec<Pending>) {
             Query::Reconstruct { users } => (users, None),
             _ => continue,
         };
-        if let Some(&bad) = users.iter().find(|&&id| id >= shared.model.users() as u64) {
+        if let Some(&bad) = users.iter().find(|&&id| id >= gen.model.users() as u64) {
             failed[bi] = Some(format!(
                 "unknown user id {bad} (model has {} users; fold-in embeds new ones)",
-                shared.model.users()
+                gen.model.users()
             ));
             continue;
         }
@@ -362,8 +480,7 @@ fn process_batch(shared: &Shared, s: &mut Scratch, batch: Vec<Pending>) {
     }
     if !s.users.is_empty() {
         // ids were validated above, so the gather cannot fail
-        shared
-            .model
+        gen.model
             .scores_into(&s.users, &mut s.w, &mut s.scores)
             .expect("validated user batch failed to score");
         shared.metrics.rows_scored.fetch_add(s.users.len() as u64, Ordering::Relaxed);
@@ -379,32 +496,37 @@ fn process_batch(shared: &Shared, s: &mut Scratch, batch: Vec<Pending>) {
                 Reply::TopK(rows)
             }
             None => {
-                let mut data = Vec::with_capacity(range.len() * shared.model.items());
+                let mut data = Vec::with_capacity(range.len() * gen.model.items());
                 for r in range.clone() {
                     data.extend_from_slice(s.scores.row(r));
                 }
-                Reply::Scores { rows: range.len(), cols: shared.model.items(), data }
+                Reply::Scores { rows: range.len(), cols: gen.model.items(), data }
             }
         };
-        finish(shared, &batch[bi], &reply);
+        finish(shared, gen.generation, &batch[bi], &reply);
     }
 
     // phase 2 — fold-ins (through the cache), stats, and the failures
     for (bi, p) in batch.iter().enumerate() {
         if let Some(msg) = failed[bi].take() {
-            finish(shared, p, &Reply::Error(msg));
+            finish(shared, gen.generation, p, &Reply::Error(msg));
             continue;
         }
         match &p.query {
             Query::FoldIn { entries, n } => {
-                let reply = fold_in_reply(shared, s, entries, *n);
-                finish(shared, p, &reply);
+                let reply = fold_in_reply(shared, &gen, s, entries, *n);
+                finish(shared, gen.generation, p, &reply);
             }
             Query::FoldInItem { entries, n } => {
-                let reply = fold_in_item_reply(shared, s, entries, *n);
-                finish(shared, p, &reply);
+                let reply = fold_in_item_reply(shared, &gen, s, entries, *n);
+                finish(shared, gen.generation, p, &reply);
             }
-            Query::Stats => finish(shared, p, &Reply::Stats(shared.metrics_json().to_string())),
+            Query::Stats => finish(
+                shared,
+                gen.generation,
+                p,
+                &Reply::Stats(shared.metrics_json().to_string()),
+            ),
             _ => {} // score queries were answered in phase 1
         }
     }
@@ -471,6 +593,7 @@ fn connection_loop(shared: Arc<Shared>, stream: TcpStream) {
             send_reply(
                 &out,
                 frame.tag,
+                shared.generation(),
                 &Reply::Error(format!(
                     "unexpected {:?} frame on a serving connection",
                     frame.kind
@@ -479,6 +602,26 @@ fn connection_loop(shared: Arc<Shared>, stream: TcpStream) {
             continue;
         }
         match protocol::decode_query(&frame.payload) {
+            // the admin hot-swap runs HERE, on the requesting connection's
+            // reader thread: the checkpoint read + two gram GEMMs must
+            // never stall the batcher, and the swap itself is one pointer
+            // store — in-flight batches drain against their snapshot
+            Ok(Query::Reload) => {
+                let enq = Instant::now();
+                shared.metrics.queries.fetch_add(1, Ordering::Relaxed);
+                let (generation, reply) = match shared.reload() {
+                    Ok((generation, iteration)) => (
+                        generation,
+                        Reply::Reload { generation, iteration: iteration as u64 },
+                    ),
+                    Err(e) => {
+                        shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
+                        (shared.generation(), Reply::Error(e.to_string()))
+                    }
+                };
+                send_reply(&out, frame.tag, generation, &reply);
+                shared.metrics.record_latency(enq.elapsed().as_secs_f64());
+            }
             Ok(query) => {
                 lock(&shared.queue).push_back(Pending {
                     query,
@@ -490,7 +633,7 @@ fn connection_loop(shared: Arc<Shared>, stream: TcpStream) {
             }
             Err(e) => {
                 shared.metrics.errors.fetch_add(1, Ordering::Relaxed);
-                send_reply(&out, frame.tag, &Reply::Error(e.to_string()));
+                send_reply(&out, frame.tag, shared.generation(), &Reply::Error(e.to_string()));
             }
         }
     }
@@ -507,7 +650,15 @@ pub struct ServerHandle {
 
 impl std::fmt::Debug for Shared {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "Shared(model {}x{} k={})", self.model.users(), self.model.items(), self.model.k())
+        let gen = self.current();
+        write!(
+            f,
+            "Shared(gen {} model {}x{} k={})",
+            gen.generation,
+            gen.model.users(),
+            gen.model.items(),
+            gen.model.k()
+        )
     }
 }
 
@@ -520,6 +671,29 @@ impl ServerHandle {
     /// Snapshot of the per-query latency/throughput counters.
     pub fn metrics_json(&self) -> JsonValue {
         self.shared.metrics_json()
+    }
+
+    /// The model generation currently serving (starts at
+    /// [`FIRST_GENERATION`], bumps on every swap).
+    pub fn generation(&self) -> u64 {
+        self.shared.generation()
+    }
+
+    /// Atomically swap `model` in as the next generation. In-flight
+    /// batches finish against the generation they snapshotted; queries
+    /// enqueued after the swap answer from `model`. Returns the new
+    /// generation.
+    pub fn swap_model(&self, model: FactorModel) -> u64 {
+        self.shared.swap_model(model)
+    }
+
+    /// Re-read the checkpoint this server was started from
+    /// ([`ServeOptions::source`]) and swap it in — what `dsanls serve
+    /// --watch-checkpoint` calls when the file changes, and what the
+    /// `OP_RELOAD` wire op runs server-side. Returns `(generation,
+    /// checkpoint iteration)`; on error the old generation keeps serving.
+    pub fn reload(&self) -> Result<(u64, usize)> {
+        self.shared.reload()
     }
 
     /// Stop accepting, drain the queue, and join the worker threads.
@@ -557,7 +731,7 @@ pub fn serve(addr: &str, model: FactorModel, opts: ServeOptions) -> Result<Serve
     let bound = listener.local_addr().context("resolving serve listener address")?;
     let cache_cap = opts.cache_cap;
     let shared = Arc::new(Shared {
-        model,
+        model: Mutex::new(Arc::new(ModelGen { generation: FIRST_GENERATION, model })),
         opts,
         queue: Mutex::new(VecDeque::new()),
         cv: Condvar::new(),

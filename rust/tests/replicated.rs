@@ -1,0 +1,322 @@
+//! Replicated-serving integration tests: zero-downtime checkpoint
+//! hot-swap under concurrent load (no dropped queries, no
+//! mixed-generation replies), generation-keyed fold-in cache
+//! invalidation, the `OP_RELOAD` wire op, and consistent-hash router
+//! failover across two live replicas.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use dsanls::linalg::Mat;
+use dsanls::metrics::JsonValue;
+use dsanls::nmf::control::{write_checkpoint, Checkpoint, CheckpointMeta, ResumeState};
+use dsanls::rng::Pcg64;
+use dsanls::router::{route, RouteOptions};
+use dsanls::serve::{
+    serve, CheckpointSource, FactorModel, ServeClient, ServeOptions, FIRST_GENERATION,
+};
+
+fn tmpfile(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("dsanls_repl_{tag}_{}.ckpt", std::process::id()))
+}
+
+fn meta(users: usize, items: usize, k: usize) -> CheckpointMeta {
+    CheckpointMeta {
+        algo: "dsanls".into(),
+        seed: 7,
+        k,
+        rows: users,
+        cols: items,
+        params: 0xFEED,
+    }
+}
+
+fn toy_checkpoint(users: usize, items: usize, k: usize, seed: u128) -> Checkpoint {
+    let mut rng = Pcg64::new(seed, 0);
+    let u = Mat::rand_uniform(users, k, 1.0, &mut rng);
+    let v = Mat::rand_uniform(items, k, 1.0, &mut rng);
+    Checkpoint { meta: meta(users, items, k), state: ResumeState { iteration: 9, u, v } }
+}
+
+fn toy_model(users: usize, items: usize, k: usize, seed: u128) -> FactorModel {
+    FactorModel::from_checkpoint(toy_checkpoint(users, items, k, seed))
+}
+
+/// All score rows of `model` as one dense block (row r = user r).
+fn all_rows(model: &FactorModel) -> Mat {
+    let users: Vec<u64> = (0..model.users() as u64).collect();
+    let (mut w, mut scores) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+    model.scores_into(&users, &mut w, &mut scores).unwrap();
+    scores
+}
+
+fn local_top_k(model: &FactorModel, user: u64, n: usize) -> Vec<(u64, f32)> {
+    let (mut w, mut scores) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+    model.scores_into(&[user], &mut w, &mut scores).unwrap();
+    let mut out = Vec::new();
+    dsanls::serve::top_n(scores.row(0), n, &mut out);
+    out.into_iter().map(|(i, s)| (i as u64, s)).collect()
+}
+
+// ---------------------------------------------------------------------------
+// Hot-swap under concurrent load
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hot_swap_under_load_drops_nothing_and_never_mixes_generations() {
+    let model_a = toy_model(24, 12, 3, 0xA111);
+    let model_b = toy_model(24, 12, 3, 0xB222);
+    let rows_a = std::sync::Arc::new(all_rows(&model_a));
+    let rows_b = std::sync::Arc::new(all_rows(&model_b));
+
+    // linger long enough that batches regularly straddle the swap moment
+    let opts = ServeOptions { batch_wait_us: 500, ..ServeOptions::default() };
+    let mut handle = serve("127.0.0.1:0", model_a, opts).unwrap();
+    let addr = handle.addr().to_string();
+
+    const THREADS: u64 = 4;
+    const PER_THREAD: u64 = 40;
+    let mut workers = Vec::new();
+    for c in 0..THREADS {
+        let addr = addr.clone();
+        let (rows_a, rows_b) = (rows_a.clone(), rows_b.clone());
+        workers.push(std::thread::spawn(move || {
+            let mut client = ServeClient::connect(&addr).unwrap();
+            let mut seen = [0u64; 2]; // replies answered by gen 1 / gen 2
+            for round in 0..PER_THREAD {
+                let u1 = (c * 5 + round) % 24;
+                let u2 = (u1 + 7) % 24;
+                let scores = client.reconstruct(&[u1, u2]).unwrap();
+                let gen = client.generation();
+                // the whole reply must come from exactly ONE generation —
+                // and the one the reply frame advertised
+                let from = |rows: &Mat| {
+                    scores.row(0) == rows.row(u1 as usize)
+                        && scores.row(1) == rows.row(u2 as usize)
+                };
+                match gen {
+                    1 => assert!(from(&rows_a), "gen-1 reply not pure model A"),
+                    2 => assert!(from(&rows_b), "gen-2 reply not pure model B"),
+                    g => panic!("impossible generation {g}"),
+                }
+                seen[(gen - 1) as usize] += 1;
+            }
+            seen
+        }));
+    }
+
+    // swap mid-stream, while every client is in flight
+    std::thread::sleep(Duration::from_millis(30));
+    assert_eq!(handle.generation(), FIRST_GENERATION);
+    let swapped_to = handle.swap_model(model_b);
+    assert_eq!(swapped_to, 2);
+
+    let mut totals = [0u64; 2];
+    for w in workers {
+        let seen = w.join().unwrap();
+        totals[0] += seen[0];
+        totals[1] += seen[1];
+    }
+    // zero dropped: every query got a (pure) answer
+    assert_eq!(totals[0] + totals[1], THREADS * PER_THREAD);
+
+    let json = handle.metrics_json();
+    let num = |k: &str| json.get(k).and_then(JsonValue::as_f64).unwrap_or(f64::NAN);
+    assert_eq!(num("queries"), (THREADS * PER_THREAD) as f64);
+    assert_eq!(num("errors"), 0.0);
+    assert_eq!(num("generation"), 2.0);
+    assert_eq!(num("swaps"), 1.0);
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Generation-keyed fold-in cache
+// ---------------------------------------------------------------------------
+
+#[test]
+fn swap_invalidates_fold_in_cache_without_a_flush() {
+    let model_a = toy_model(10, 16, 4, 0xCA11);
+    let model_b = toy_model(10, 16, 4, 0xCB22);
+    let opts = ServeOptions { batch_wait_us: 0, ..ServeOptions::default() };
+    let mut handle = serve("127.0.0.1:0", model_a, opts).unwrap();
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+
+    let entries: Vec<(u64, f32)> = vec![(1, 2.0), (8, 0.5), (15, 1.25)];
+    let (emb_a, _) = client.fold_in(&entries, 0).unwrap(); // solve #1
+    let (emb_a2, _) = client.fold_in(&entries, 0).unwrap(); // cache hit
+    assert_eq!(emb_a2, emb_a);
+
+    handle.swap_model(model_b);
+
+    // the identical row after the swap must RE-SOLVE against model B —
+    // a stale gen-1 embedding must never serve from the cache
+    let (emb_b, _) = client.fold_in(&entries, 0).unwrap(); // solve #2
+    assert_eq!(client.generation(), 2);
+    assert_ne!(emb_b, emb_a, "swap served a stale cached embedding");
+    let (emb_b2, _) = client.fold_in(&entries, 0).unwrap(); // cache hit
+    assert_eq!(emb_b2, emb_b);
+
+    let json = handle.metrics_json();
+    let num = |k: &str| json.get(k).and_then(JsonValue::as_f64).unwrap_or(f64::NAN);
+    assert_eq!(num("fold_in_solves"), 2.0, "{}", json.to_string());
+    assert_eq!(num("cache_hits"), 2.0, "{}", json.to_string());
+    assert_eq!(num("errors"), 0.0);
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// OP_RELOAD: re-read the checkpoint over the wire
+// ---------------------------------------------------------------------------
+
+#[test]
+fn reload_wire_op_swaps_in_the_rewritten_checkpoint() {
+    let path = tmpfile("reload");
+    let ck_a = toy_checkpoint(10, 16, 4, 0xDA11);
+    write_checkpoint(&path, &ck_a.meta, ck_a.state.iteration, &ck_a.state.u, &ck_a.state.v)
+        .unwrap();
+    let model = FactorModel::load(&path).unwrap();
+    let rows_a = all_rows(&model);
+
+    let opts = ServeOptions {
+        batch_wait_us: 0,
+        source: Some(CheckpointSource {
+            path: path.clone(),
+            expect_algo: Some("dsanls".into()),
+            expect_params: Some(0xFEED),
+        }),
+        ..ServeOptions::default()
+    };
+    let mut handle = serve("127.0.0.1:0", model, opts).unwrap();
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+
+    let scores = client.reconstruct(&[3]).unwrap();
+    assert_eq!(scores.row(0), rows_a.row(3));
+    assert_eq!(client.generation(), FIRST_GENERATION);
+
+    // a newer training snapshot lands (atomic rename, same path) …
+    let mut ck_b = toy_checkpoint(10, 16, 4, 0xDB22);
+    ck_b.state.iteration = 21;
+    write_checkpoint(&path, &ck_b.meta, ck_b.state.iteration, &ck_b.state.u, &ck_b.state.v)
+        .unwrap();
+    let rows_b = all_rows(&FactorModel::from_checkpoint(ck_b));
+
+    // … and the wire op swaps it in
+    let (generation, iteration) = client.reload().unwrap();
+    assert_eq!((generation, iteration), (2, 21));
+    let scores = client.reconstruct(&[3]).unwrap();
+    assert_eq!(scores.row(0), rows_b.row(3));
+    assert_eq!(client.generation(), 2);
+    assert_eq!(handle.generation(), 2);
+    handle.shutdown();
+    std::fs::remove_file(&path).ok();
+
+    // a server started from an in-memory model has nothing to re-read
+    let mut handle = serve(
+        "127.0.0.1:0",
+        toy_model(6, 8, 2, 0xF00),
+        ServeOptions { batch_wait_us: 0, ..ServeOptions::default() },
+    )
+    .unwrap();
+    let mut client = ServeClient::connect(&handle.addr().to_string()).unwrap();
+    let err = client.reload().unwrap_err().to_string();
+    assert!(err.contains("reload refused"), "{err}");
+    handle.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Router: consistent-hash fan-out, rolling reload, failover
+// ---------------------------------------------------------------------------
+
+#[test]
+fn router_answers_through_failover_and_rolls_reloads_across_the_fleet() {
+    let path = tmpfile("router");
+    let ck_a = toy_checkpoint(64, 12, 3, 0xEA11);
+    write_checkpoint(&path, &ck_a.meta, ck_a.state.iteration, &ck_a.state.u, &ck_a.state.v)
+        .unwrap();
+    let reference_a = FactorModel::load(&path).unwrap();
+
+    let replica_opts = || ServeOptions {
+        batch_wait_us: 0,
+        source: Some(CheckpointSource {
+            path: path.clone(),
+            expect_algo: Some("dsanls".into()),
+            expect_params: Some(0xFEED),
+        }),
+        ..ServeOptions::default()
+    };
+    let mut r1 = serve("127.0.0.1:0", FactorModel::load(&path).unwrap(), replica_opts()).unwrap();
+    let mut r2 = serve("127.0.0.1:0", FactorModel::load(&path).unwrap(), replica_opts()).unwrap();
+    let replicas = vec![r1.addr().to_string(), r2.addr().to_string()];
+
+    // long cooldown: once a replica is seen dead it stays routed-around
+    // for the rest of the test (keeps the `up` assertion deterministic)
+    let opts = RouteOptions { cooldown: Duration::from_secs(60), ..RouteOptions::default() };
+    let mut router = route("127.0.0.1:0", &replicas, opts).unwrap();
+    let mut client = ServeClient::connect(&router.addr().to_string()).unwrap();
+
+    // 64 distinct user keys spread across both replicas; every answer is
+    // exact regardless of which replica served it
+    for user in 0..64u64 {
+        assert_eq!(client.top_k(&[user], 3).unwrap()[0], local_top_k(&reference_a, user, 3));
+        assert_eq!(client.generation(), FIRST_GENERATION, "user {user}");
+    }
+
+    // aggregated stats: both replicas took traffic, fleet is converged
+    let stats = client.stats().unwrap();
+    let json = JsonValue::parse(&stats).unwrap();
+    let num = |k: &str| json.get(k).and_then(JsonValue::as_f64).unwrap_or(f64::NAN);
+    assert!(num("queries") >= 64.0, "{stats}");
+    assert_eq!(num("generation"), 1.0, "{stats}");
+    let replica_list = match json.get("replicas") {
+        Some(JsonValue::Array(list)) => list,
+        other => panic!("missing per-replica breakdown: {other:?}"),
+    };
+    assert_eq!(replica_list.len(), 2);
+    for entry in replica_list {
+        let served = entry
+            .get("stats")
+            .and_then(|s| s.get("queries"))
+            .and_then(JsonValue::as_f64)
+            .unwrap_or(f64::NAN);
+        assert!(served >= 1.0, "a replica took no traffic: {stats}");
+    }
+    let router_num = |k: &str| {
+        json.get("router").and_then(|r| r.get(k)).and_then(JsonValue::as_f64).unwrap_or(f64::NAN)
+    };
+    assert_eq!(router_num("replicas"), 2.0, "{stats}");
+    assert_eq!(router_num("up"), 2.0, "{stats}");
+    assert_eq!(router_num("routed"), 65.0, "{stats}"); // 64 keyed + this stats
+    assert_eq!(router_num("failovers"), 0.0, "{stats}");
+
+    // rolling update: rewrite the checkpoint, reload THROUGH the router —
+    // the broadcast must land on every replica
+    let mut ck_b = toy_checkpoint(64, 12, 3, 0xEB22);
+    ck_b.state.iteration = 21;
+    write_checkpoint(&path, &ck_b.meta, ck_b.state.iteration, &ck_b.state.u, &ck_b.state.v)
+        .unwrap();
+    let reference_b = FactorModel::from_checkpoint(ck_b);
+    assert_eq!(client.reload().unwrap(), (2, 21));
+    assert_eq!(r1.generation(), 2);
+    assert_eq!(r2.generation(), 2);
+    assert_eq!(client.top_k(&[5], 3).unwrap()[0], local_top_k(&reference_b, 5, 3));
+
+    // kill one replica: the ring fails its keys over and keeps answering
+    r2.shutdown();
+    for user in 0..64u64 {
+        assert_eq!(
+            client.top_k(&[user], 3).unwrap()[0],
+            local_top_k(&reference_b, user, 3),
+            "user {user} after failover"
+        );
+        assert_eq!(client.generation(), 2, "user {user} after failover");
+    }
+    let m = router.metrics_json();
+    let rnum = |k: &str| m.get(k).and_then(JsonValue::as_f64).unwrap_or(f64::NAN);
+    assert!(rnum("failovers") >= 1.0, "{}", m.to_string());
+    assert_eq!(rnum("up"), 1.0, "{}", m.to_string());
+    assert_eq!(rnum("errors"), 0.0, "{}", m.to_string());
+
+    router.shutdown();
+    r1.shutdown();
+    std::fs::remove_file(&path).ok();
+}

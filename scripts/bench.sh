@@ -3,7 +3,8 @@
 # repo root), the comm-overlap/quantized-wire throughput grid (emits
 # BENCH_overlap.json), the serving-plane latency grid (emits
 # BENCH_serve.json), the compressed-shard ratio/accuracy sweep (emits
-# BENCH_compress.json), plus the Fig. 3 scalability sweep.
+# BENCH_compress.json), the replicated-serving router overhead/failover
+# bench (emits BENCH_route.json), plus the Fig. 3 scalability sweep.
 #
 # Usage: scripts/bench.sh [--full]
 #   --full          paper-sized shapes (DSANLS_BENCH_FULL=1)
@@ -31,8 +32,12 @@ echo "== compress_ratio (writes BENCH_compress.json) =="
 cargo bench --bench compress_ratio
 
 echo
+echo "== route_failover (writes BENCH_route.json) =="
+cargo bench --bench route_failover
+
+echo
 echo "== fig3_scalability =="
 cargo bench --bench fig3_scalability
 
 echo
-echo "done. evidence: ./BENCH_gemm.json, ./BENCH_overlap.json, ./BENCH_serve.json, ./BENCH_compress.json, per-figure CSVs under ./results/"
+echo "done. evidence: ./BENCH_gemm.json, ./BENCH_overlap.json, ./BENCH_serve.json, ./BENCH_compress.json, ./BENCH_route.json, per-figure CSVs under ./results/"

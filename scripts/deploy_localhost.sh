@@ -2,7 +2,8 @@
 # DEPLOYMENT.md localhost walkthrough, executable (CI runs this verbatim):
 # shard the dataset, start one worker per "host" on 127.0.0.1, launch with
 # a hosts file, and assert the factors are bit-identical to the simulator;
-# then the kill/retry, serving, elastic and compressed-shard walkthroughs.
+# then the kill/retry, serving, elastic, compressed-shard and replicated-
+# serving (router + hot-swap + failover) walkthroughs.
 #
 # Usage: scripts/deploy_localhost.sh
 # Env:   DSANLS_BIN  — dsanls binary (default target/release/dsanls)
@@ -158,3 +159,71 @@ if "$BIN" launch --nodes 2 --shards "$WORK/cshards" \
 fi
 grep -qi "secure" "$WORK/cerr.log"
 echo "compressed walkthrough OK (sketched views factorized, bit-identical, secure refused)"
+
+echo "== step 9: replicated serving — two replicas, router, hot-swap, failover =="
+# Two serve replicas on the step-5 checkpoint behind a consistent-hash
+# router; clients keep using plain `dsanls query` against the router
+# (DEPLOYMENT.md §Replicated serving). Replica 1 also watches the
+# checkpoint file so a rewrite hot-swaps without any admin call.
+R1_PORT=$((PORT + 2)); R2_PORT=$((PORT + 3)); ROUTE_PORT=$((PORT + 4))
+"$BIN" serve --checkpoint "$WORK/run.ckpt" --bind "127.0.0.1:$R1_PORT" \
+  --expect-algo dsanls --watch-checkpoint --watch-interval-ms 200 \
+  > "$WORK/replica1.log" 2>&1 &
+R1_PID=$!
+"$BIN" serve --checkpoint "$WORK/run.ckpt" --bind "127.0.0.1:$R2_PORT" \
+  --expect-algo dsanls > "$WORK/replica2.log" 2>&1 &
+R2_PID=$!
+for _ in $(seq 1 100); do
+  grep -q "serving on" "$WORK/replica1.log" 2>/dev/null \
+    && grep -q "serving on" "$WORK/replica2.log" 2>/dev/null && break
+  sleep 0.1
+done
+grep -q "serving on" "$WORK/replica2.log" || { cat "$WORK/replica1.log" "$WORK/replica2.log"; exit 1; }
+
+"$BIN" route --replicas "127.0.0.1:$R1_PORT,127.0.0.1:$R2_PORT" \
+  --bind "127.0.0.1:$ROUTE_PORT" > "$WORK/route.log" 2>&1 &
+ROUTE_PID=$!
+for _ in $(seq 1 100); do
+  grep -q "routing on" "$WORK/route.log" 2>/dev/null && break
+  sleep 0.1
+done
+grep -q "routing on" "$WORK/route.log" || { cat "$WORK/route.log"; exit 1; }
+
+# the router is transparent: the same query answers exactly as the
+# single-server walkthrough in step 6 did (same checkpoint, same factors)
+"$BIN" query --addr "127.0.0.1:$ROUTE_PORT" --users 0 --top-k 3 > "$WORK/route_topk1.log"
+cmp "$WORK/topk.log" "$WORK/route_topk1.log"
+
+# aggregated stats carry the per-replica breakdown and the fleet generation
+"$BIN" query --addr "127.0.0.1:$ROUTE_PORT" --stats | tee "$WORK/route_stats.log" \
+  | grep -q '"replicas":'
+grep -q '"generation":' "$WORK/route_stats.log"
+
+# rolling hot-swap through the router: every replica re-reads the
+# checkpoint and bumps to generation 2 — with identical factors on disk
+# the answers must stay bit-identical across the swap
+"$BIN" query --addr "127.0.0.1:$ROUTE_PORT" --reload | tee "$WORK/route_reload.log"
+grep -q "reloaded: generation 2" "$WORK/route_reload.log"
+"$BIN" query --addr "127.0.0.1:$ROUTE_PORT" --users 0 --top-k 3 > "$WORK/route_topk2.log"
+cmp "$WORK/route_topk1.log" "$WORK/route_topk2.log"
+
+# replica 1 also watches the file: a rewrite (touch = new mtime) swaps in
+# a fresh generation with no admin call at all
+sleep 1.1
+touch "$WORK/run.ckpt"
+for _ in $(seq 1 100); do
+  grep -q "swapped to generation" "$WORK/replica1.log" 2>/dev/null && break
+  sleep 0.1
+done
+grep -q "swapped to generation" "$WORK/replica1.log" || { cat "$WORK/replica1.log"; exit 1; }
+
+# kill one replica: the ring fails its keys over and answers stay exact
+kill "$R2_PID" 2>/dev/null
+wait "$R2_PID" 2>/dev/null || true
+"$BIN" query --addr "127.0.0.1:$ROUTE_PORT" --users 0 --top-k 3 > "$WORK/route_topk3.log"
+cmp "$WORK/route_topk1.log" "$WORK/route_topk3.log"
+"$BIN" query --addr "127.0.0.1:$ROUTE_PORT" --stats | grep -q '"failovers":'
+
+kill "$ROUTE_PID" "$R1_PID" 2>/dev/null
+wait "$ROUTE_PID" "$R1_PID" 2>/dev/null || true
+echo "replicated serving walkthrough OK (router transparent, rolling reload, watcher swap, kill-one failover)"
